@@ -1,0 +1,140 @@
+//! Co-design study (the paper's motivating use case, §VI-A): run the same
+//! workflow under several configurations, keep each run's prescriptive
+//! provenance, and *mine provenance across runs* — which anomaly patterns
+//! depend on which workflow configuration.
+//!
+//! ```text
+//! cargo run --release --example codesign_study
+//! ```
+
+use chimbuko::config::Config;
+use chimbuko::coordinator::{run, Mode, Workflow};
+use chimbuko::provenance::{ProvDb, ProvQuery};
+use chimbuko::trace::nwchem::InjectionConfig;
+use std::collections::BTreeMap;
+
+struct RunSummary {
+    label: String,
+    anomalies: u64,
+    execs: u64,
+    by_func: BTreeMap<String, u64>,
+}
+
+fn run_config(label: &str, ranks: usize, inj: InjectionConfig, seed: u64) -> anyhow::Result<RunSummary> {
+    let dir = std::env::temp_dir().join(format!("chimbuko-codesign-{}-{}", std::process::id(), label));
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = Config {
+        ranks,
+        apps: 2,
+        steps: 40,
+        calls_per_step: 130,
+        seed,
+        out_dir: dir.to_str().unwrap().to_string(),
+        ..Config::default()
+    };
+    let workflow = Workflow::nwchem_with_injection(&cfg, inj);
+    let report = run(&cfg, &workflow, Mode::TauChimbuko)?;
+    let db = ProvDb::load(&dir)?;
+    let mut by_func = BTreeMap::new();
+    for r in db.query(&ProvQuery { anomalies_only: true, ..Default::default() }) {
+        *by_func.entry(r.func.clone()).or_insert(0u64) += 1;
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(RunSummary {
+        label: label.to_string(),
+        anomalies: report.total_anomalies,
+        execs: report.total_execs,
+        by_func,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== Co-design study: anomaly patterns vs workflow configuration ==\n");
+
+    // Three configurations of the same science workload.
+    let configs = vec![
+        (
+            "baseline",
+            16,
+            InjectionConfig::default(),
+        ),
+        (
+            "bad-io", // e.g. a misconfigured burst buffer: remote gets stall
+            16,
+            InjectionConfig {
+                getxbl_tail_prob: 0.03,
+                ..InjectionConfig::default()
+            },
+        ),
+        (
+            "imbalanced", // stronger rank-0 serialization in global sums
+            16,
+            InjectionConfig {
+                rank0_straggle_prob: 0.08,
+                ..InjectionConfig::default()
+            },
+        ),
+    ];
+
+    let mut summaries = Vec::new();
+    for (label, ranks, inj) in configs {
+        let s = run_config(label, ranks, inj, 99)?;
+        println!(
+            "run '{}': {} anomalies / {} executions ({:.3}%)",
+            s.label,
+            s.anomalies,
+            s.execs,
+            100.0 * s.anomalies as f64 / s.execs.max(1) as f64
+        );
+        summaries.push(s);
+    }
+
+    // Cross-run comparison: per-function anomaly profile.
+    let mut funcs: Vec<String> = summaries
+        .iter()
+        .flat_map(|s| s.by_func.keys().cloned())
+        .collect();
+    funcs.sort();
+    funcs.dedup();
+    println!("\nper-function anomaly counts across runs:");
+    print!("{:<16}", "function");
+    for s in &summaries {
+        print!("{:>12}", s.label);
+    }
+    println!();
+    for f in &funcs {
+        print!("{f:<16}");
+        for s in &summaries {
+            print!("{:>12}", s.by_func.get(f).copied().unwrap_or(0));
+        }
+        println!();
+    }
+
+    // The co-design conclusions the provenance supports.
+    let count = |s: &RunSummary, f: &str| s.by_func.get(f).copied().unwrap_or(0);
+    let base = &summaries[0];
+    let bad_io = &summaries[1];
+    let imbal = &summaries[2];
+    println!("\nfindings:");
+    println!(
+        "  bad-io vs baseline: SP_GTXPBL anomalies {} → {} (remote-get sensitivity)",
+        count(base, "SP_GTXPBL"),
+        count(bad_io, "SP_GTXPBL")
+    );
+    println!(
+        "  imbalanced vs baseline: MD_FINIT+CF_CMS anomalies {} → {} (rank-0 global sums)",
+        count(base, "MD_FINIT") + count(base, "CF_CMS"),
+        count(imbal, "MD_FINIT") + count(imbal, "CF_CMS")
+    );
+    anyhow::ensure!(
+        count(bad_io, "SP_GTXPBL") > count(base, "SP_GTXPBL"),
+        "bad-io run should show more remote-get anomalies"
+    );
+    anyhow::ensure!(
+        count(imbal, "MD_FINIT") + count(imbal, "CF_CMS")
+            > count(base, "MD_FINIT") + count(base, "CF_CMS"),
+        "imbalanced run should show more rank-0 anomalies"
+    );
+    println!("\nOK — provenance comparison separates the two degradation modes.");
+    Ok(())
+}

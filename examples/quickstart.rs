@@ -1,0 +1,79 @@
+//! Quickstart: run a small two-app workflow through the full Chimbuko
+//! pipeline and print what it found.
+//!
+//! ```text
+//! cargo run --release --example quickstart [-- --ranks 8 --steps 20 --backend xla]
+//! ```
+
+use chimbuko::cli::Args;
+use chimbuko::config::Config;
+use chimbuko::coordinator::{run, Mode, RunReport, Workflow};
+use chimbuko::provenance::{ProvDb, ProvQuery};
+use chimbuko::util::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(false);
+    let dir = std::env::temp_dir().join(format!("chimbuko-quickstart-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mut cfg = Config {
+        ranks: args.usize_opt("ranks", 8),
+        apps: 2,
+        steps: args.usize_opt("steps", 20),
+        calls_per_step: 130,
+        out_dir: dir.to_str().unwrap().to_string(),
+        ..Config::default()
+    };
+    if let Some(b) = args.get("backend") {
+        cfg.apply("backend", b)?;
+    }
+
+    println!("== Chimbuko quickstart ==");
+    println!(
+        "workflow: {} ranks, {} steps, α = {}, k = {}, backend = {}",
+        cfg.ranks,
+        cfg.steps,
+        cfg.alpha,
+        cfg.k_neighbors,
+        cfg.backend.name()
+    );
+
+    // 1. Baseline: what would TAU alone have written to disk?
+    let workflow = Workflow::nwchem(&cfg);
+    let tau: RunReport = run(&cfg, &workflow, Mode::Tau)?;
+
+    // 2. The Chimbuko pipeline: stream → detect → reduce → provenance.
+    let chi: RunReport = run(&cfg, &workflow, Mode::TauChimbuko)?;
+
+    println!("\nresults:");
+    println!("  events generated : {}", chi.total_events);
+    println!("  executions       : {}", chi.total_execs);
+    println!("  anomalies        : {}", chi.total_anomalies);
+    println!("  kept for prov    : {} (anomalies + {}-neighbour context)", chi.total_kept, cfg.k_neighbors);
+    println!("  raw trace (BP)   : {}", fmt_bytes(tau.bp_bytes));
+    println!("  reduced output   : {}", fmt_bytes(chi.reduced_bytes));
+    println!(
+        "  data reduction   : ×{:.0}",
+        RunReport::reduction_factor(tau.bp_bytes, chi.reduced_bytes)
+    );
+    println!("  wall time        : {:.2}s", chi.wall_seconds);
+
+    // 3. Inspect the top anomalies from the provenance store.
+    let db = ProvDb::load(&dir)?;
+    let top = db.query(&ProvQuery {
+        anomalies_only: true,
+        order_by_score: true,
+        limit: Some(5),
+        ..Default::default()
+    });
+    println!("\ntop anomalies:");
+    for r in top {
+        println!(
+            "  {:>7.1}σ  {:<14} app {} rank {:>3} step {:>3}  {:>9}µs ({} msgs)",
+            r.score, r.func, r.app, r.rank, r.step, r.inclusive_us, r.n_messages
+        );
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Visualization exploration: run a workflow, then walk the same
+//! drill-down path the paper's §IV describes — dashboard → rank timeline →
+//! function view → call stack — both as terminal renderings and through
+//! the HTTP API. Pass `--serve` to keep the server up for a browser.
+//!
+//! ```text
+//! cargo run --release --example viz_explore [-- --ranks 32 --serve]
+//! ```
+
+use chimbuko::cli::Args;
+use chimbuko::config::Config;
+use chimbuko::coordinator::{run, Mode, Workflow};
+use chimbuko::provenance::{ProvDb, ProvQuery};
+use chimbuko::viz::{ascii, http, RankStat, VizState};
+use std::sync::{Arc, RwLock};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(false);
+    let dir = std::env::temp_dir().join(format!("chimbuko-vizex-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = Config {
+        ranks: args.usize_opt("ranks", 32),
+        apps: 2,
+        steps: args.usize_opt("steps", 40),
+        calls_per_step: 130,
+        seed: args.u64_opt("seed", 31337),
+        out_dir: dir.to_str().unwrap().to_string(),
+        ..Config::default()
+    };
+    let workflow = Workflow::nwchem(&cfg);
+    let report = run(&cfg, &workflow, Mode::TauChimbuko)?;
+    let db = ProvDb::load(&dir)?;
+    let state = VizState::from_run(
+        &report.snapshots,
+        report.snapshot.clone(),
+        db,
+        workflow.registries.clone(),
+    );
+
+    // "Overview first": Fig 3 dashboard.
+    println!("{}", ascii::dashboard(&state, RankStat::Stddev, 5));
+
+    // "Zoom and filter": Fig 4 timeline of the most problematic ranks.
+    let (top, _) = state.ranking(RankStat::Total, 3);
+    let focus_ranks: Vec<(u32, u32)> = top.iter().map(|r| (r.app, r.rank)).collect();
+    println!("{}", ascii::timeline(&state, &focus_ranks, 60));
+
+    // "Details on demand": Figs 5 + 6 for the hottest anomaly's frame.
+    let focus = state
+        .db
+        .query(&ProvQuery {
+            anomalies_only: true,
+            order_by_score: true,
+            limit: Some(1),
+            ..Default::default()
+        })
+        .first()
+        .map(|r| (r.app, r.rank, r.step))
+        .unwrap_or((0, 0, 0));
+    println!("{}", ascii::function_view(&state, focus.0, focus.1, focus.2));
+    println!("{}", ascii::call_stack(&state, focus.0, focus.1, focus.2));
+
+    // The same path over HTTP.
+    let state = Arc::new(RwLock::new(state));
+    let mut server = http::VizServer::start("127.0.0.1:0", state)?;
+    println!("HTTP drill-down against http://{}:", server.addr());
+    for path in [
+        "/api/stats".to_string(),
+        "/api/dashboard?stat=std&n=5".to_string(),
+        format!("/api/timeline?app={}&rank={}", focus.0, focus.1),
+        format!("/api/callstack?app={}&rank={}&step={}", focus.0, focus.1, focus.2),
+    ] {
+        let (code, body) = http::http_get(server.addr(), &path)?;
+        println!("  GET {path} → {code} ({} bytes)", body.len());
+        anyhow::ensure!(code == 200, "endpoint failed");
+    }
+
+    if args.flag("serve") {
+        println!("\nserving — open http://{} (Ctrl-C to stop)", server.addr());
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    server.stop();
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

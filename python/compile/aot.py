@@ -1,0 +1,120 @@
+"""AOT emitter: lower the L2 graphs to HLO **text** artifacts.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under ``--out-dir``):
+
+* ``ad_batch.hlo.txt``  — 8 inputs, 5-tuple output (see model.ad_batch)
+* ``ps_merge.hlo.txt``  — 6 inputs, 3-tuple output
+* ``manifest.json``     — baked shapes + input/output orders, read by
+  ``rust/src/runtime`` at load time so shape drift fails loudly.
+
+Run: ``cd python && python -m compile.aot --out-dir ../artifacts``
+(idempotent; `make artifacts` wires it up).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Baked shapes. B must be a multiple of kernels.anomaly.BLOCK_B.
+DEFAULT_BATCH = 256
+DEFAULT_FUNCS = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_ad_batch(batch: int, funcs: int) -> str:
+    f32 = jnp.float32
+    i32 = jnp.int32
+    spec = jax.ShapeDtypeStruct
+    lowered = jax.jit(model.ad_batch).lower(
+        spec((batch,), f32),  # exec_us
+        spec((batch,), i32),  # fid
+        spec((batch,), f32),  # valid
+        spec((funcs,), f32),  # n_old
+        spec((funcs,), f32),  # mu_old
+        spec((funcs,), f32),  # m2_old
+        spec((), f32),        # alpha
+        spec((), f32),        # min_samples
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_ps_merge(funcs: int) -> str:
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    args = [spec((funcs,), f32)] * 6
+    lowered = jax.jit(model.ps_merge).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def manifest(batch: int, funcs: int) -> dict:
+    return {
+        "version": 1,
+        "batch": batch,
+        "funcs": funcs,
+        "ad_batch": {
+            "file": "ad_batch.hlo.txt",
+            "inputs": [
+                "exec_us[B]f32",
+                "fid[B]i32",
+                "valid[B]f32",
+                "n_old[F]f32",
+                "mu_old[F]f32",
+                "m2_old[F]f32",
+                "alpha[]f32",
+                "min_samples[]f32",
+            ],
+            "outputs": ["labels[B]i32", "scores[B]f32", "n[F]f32", "mu[F]f32", "m2[F]f32"],
+        },
+        "ps_merge": {
+            "file": "ps_merge.hlo.txt",
+            "inputs": ["n_a[F]f32", "mu_a[F]f32", "m2_a[F]f32", "n_b[F]f32", "mu_b[F]f32", "m2_b[F]f32"],
+            "outputs": ["n[F]f32", "mu[F]f32", "m2[F]f32"],
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument("--funcs", type=int, default=DEFAULT_FUNCS)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    ad_text = lower_ad_batch(args.batch, args.funcs)
+    with open(os.path.join(args.out_dir, "ad_batch.hlo.txt"), "w") as f:
+        f.write(ad_text)
+    print(f"ad_batch.hlo.txt: {len(ad_text)} chars (B={args.batch}, F={args.funcs})")
+
+    ps_text = lower_ps_merge(args.funcs)
+    with open(os.path.join(args.out_dir, "ps_merge.hlo.txt"), "w") as f:
+        f.write(ps_text)
+    print(f"ps_merge.hlo.txt: {len(ps_text)} chars (F={args.funcs})")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest(args.batch, args.funcs), f, indent=2)
+    print("manifest.json written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""L1 Pallas kernels: segment statistics + anomaly labelling.
+
+The hot spot of Chimbuko's on-node AD is per-function streaming statistics
+over event batches — on GPUs this is a scatter-add; on TPU we recast it as
+**one-hot matmuls on the MXU** (DESIGN.md §4):
+
+    onehot[B, F] = (fid[b] == iota[F]) & valid[b]
+    packed[3, B] = stack(valid, d, d*d)        # d = x - mu_old[fid]
+    sums[3, F]   = packed @ onehot             # one MXU matmul, M=3 packing
+
+Shifting by the running mean ``mu_old`` keeps the summands small, so the
+f32 matmul path is numerically stable even for microsecond timestamps in
+the 1e6+ range (classic sum-of-squares cancellation is avoided).
+
+Both kernels tile the batch dimension with a grid; the [3, F] accumulator
+(and the [B_t, F] onehot tile) live in VMEM. ``interpret=True`` everywhere:
+the CPU PJRT plugin cannot execute Mosaic custom-calls; on a real TPU the
+same BlockSpecs compile natively (VMEM estimate in DESIGN.md).
+
+Label codes match ``ref.py``: 0 normal, 1 high, -1 low.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch-tile size for the grid walk. 128 rows x F columns of f32 onehot is
+# 32 KiB at F=64 — comfortably inside VMEM next to the [3, F] accumulator.
+BLOCK_B = 128
+
+
+def _segment_stats_kernel(exec_ref, fid_ref, valid_ref, mu_ref, out_ref):
+    """One grid step: accumulate [3, F] shifted sums for a batch tile."""
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = exec_ref[...]  # [Bt]
+    fid = fid_ref[...]  # [Bt] int32
+    valid = valid_ref[...]  # [Bt] f32
+    num_funcs = mu_ref.shape[0]
+
+    onehot = (
+        fid[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, num_funcs), 1)
+    ).astype(x.dtype) * valid[:, None]  # [Bt, F]
+
+    mu_g = onehot @ mu_ref[...]  # [Bt] gather of running means
+    d = (x - mu_g) * valid
+    packed = jnp.stack([valid, d, d * d])  # [3, Bt]
+    out_ref[...] += packed @ onehot  # [3, F] on the MXU
+
+
+def segment_stats(exec_us, fid, valid, mu_old, *, block_b: int = BLOCK_B):
+    """Pallas segment statistics: returns ``(cnt[F], s1[F], s2[F])``.
+
+    ``B`` must be a multiple of ``block_b`` (the coordinator pads batches).
+    """
+    batch, = exec_us.shape
+    num_funcs, = mu_old.shape
+    assert batch % block_b == 0, f"batch {batch} not a multiple of {block_b}"
+    grid = (batch // block_b,)
+    out = pl.pallas_call(
+        _segment_stats_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((num_funcs,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((3, num_funcs), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((3, num_funcs), exec_us.dtype),
+        interpret=True,
+    )(exec_us, fid, valid, mu_old)
+    return out[0], out[1], out[2]
+
+
+def _label_kernel(exec_ref, fid_ref, valid_ref, thr_ref, labels_ref, scores_ref):
+    """One grid step: label a batch tile against per-function thresholds.
+
+    ``thr_ref`` packs [4, F]: lo, hi, mu, sd_eff where sd_eff = sd when the
+    function is eligible else 0 (ineligible functions never label).
+    """
+    x = exec_ref[...]
+    fid = fid_ref[...]
+    valid = valid_ref[...]
+    num_funcs = thr_ref.shape[1]
+
+    onehot = (
+        fid[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, num_funcs), 1)
+    ).astype(x.dtype) * valid[:, None]
+
+    gathered = onehot @ thr_ref[...].T  # [Bt, 4] — one MXU matmul
+    lo_g = gathered[:, 0]
+    hi_g = gathered[:, 1]
+    mu_g = gathered[:, 2]
+    sd_g = gathered[:, 3]
+
+    ok = (valid > 0.5) & (sd_g > 0.0)
+    scores_ref[...] = jnp.where(
+        ok, jnp.abs(x - mu_g) / jnp.maximum(sd_g, 1e-30), 0.0
+    )
+    high = ok & (x > hi_g)
+    low = ok & (x < lo_g)
+    labels_ref[...] = jnp.where(high, 1, jnp.where(low, -1, 0)).astype(jnp.int32)
+
+
+def label(exec_us, fid, valid, lo, hi, mu, sd_eff, *, block_b: int = BLOCK_B):
+    """Pallas labelling: ``(labels[B] int32, scores[B] f32)``.
+
+    ``sd_eff`` must already be zeroed for ineligible functions (warm-up /
+    zero variance) — done by the L2 graph from the merged stats.
+    """
+    batch, = exec_us.shape
+    num_funcs, = lo.shape
+    assert batch % block_b == 0, f"batch {batch} not a multiple of {block_b}"
+    thr = jnp.stack([lo, hi, mu, sd_eff])  # [4, F]
+    grid = (batch // block_b,)
+    return pl.pallas_call(
+        _label_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((4, num_funcs), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+            jax.ShapeDtypeStruct((batch,), exec_us.dtype),
+        ],
+        interpret=True,
+    )(exec_us, fid, valid, thr)
+
+
+@functools.partial(jax.jit, static_argnames=("num_funcs",))
+def segment_stats_jit(exec_us, fid, valid, mu_old, num_funcs: int):
+    """Jitted wrapper (tests)."""
+    del num_funcs
+    return segment_stats(exec_us, fid, valid, mu_old)

@@ -1,0 +1,118 @@
+"""Pure-jnp oracle for the L1 kernels.
+
+Everything here is straight-line numpy-style code — no pallas — and is the
+single source of truth the kernels and the Rust detector are tested
+against. Semantics (matching ``rust/src/ad/detector.rs``):
+
+1. merge the batch's per-function statistics into the running
+   ``(n, mean, M2)`` via Pébay's pairwise formulas;
+2. label every event against the *merged* statistics with the paper's
+   ``mu ± alpha * sigma`` thresholds (sample std-dev, ``n-1``);
+3. warm-up: a function with fewer than ``min_samples`` merged observations
+   (or zero variance) is never anomalous.
+
+Labels: 0 = normal, 1 = anomaly-high, -1 = anomaly-low.
+"""
+
+import jax.numpy as jnp
+
+
+def segment_stats_ref(exec_us, fid, valid, mu_old, num_funcs):
+    """Per-function batch statistics, shifted by the running mean.
+
+    Returns ``(cnt[F], s1[F], s2[F])`` where, per function f over the valid
+    events with ``fid == f``::
+
+        cnt = #events
+        s1  = sum(x - mu_old[f])
+        s2  = sum((x - mu_old[f])**2)
+
+    The shift keeps the sums small relative to the raw magnitudes, which is
+    what makes the f32 matmul path numerically safe (see DESIGN.md §4).
+    """
+    onehot = (fid[:, None] == jnp.arange(num_funcs, dtype=fid.dtype)[None, :]).astype(
+        exec_us.dtype
+    ) * valid[:, None]
+    mu_g = onehot @ mu_old  # per-event gather of the running mean
+    d = (exec_us - mu_g) * valid
+    cnt = valid @ onehot
+    s1 = d @ onehot
+    s2 = (d * d) @ onehot
+    return cnt, s1, s2
+
+
+def pebay_merge_ref(n_old, mu_old, m2_old, cnt, s1, s2):
+    """Merge shifted batch sums into running stats (Pébay pairwise).
+
+    Batch stats recovered from the shifted sums:
+        mean_b = mu_old + s1 / cnt
+        M2_b   = s2 - s1**2 / cnt
+    """
+    safe_cnt = jnp.maximum(cnt, 1.0)
+    mean_b = mu_old + s1 / safe_cnt
+    m2_b = jnp.maximum(s2 - (s1 * s1) / safe_cnt, 0.0)
+
+    n_new = n_old + cnt
+    safe_n = jnp.maximum(n_new, 1.0)
+    delta = mean_b - mu_old
+    mu_new = jnp.where(cnt > 0, mu_old + delta * cnt / safe_n, mu_old)
+    m2_new = jnp.where(
+        cnt > 0, m2_old + m2_b + delta * delta * n_old * cnt / safe_n, m2_old
+    )
+    return n_new, mu_new, m2_new
+
+
+def thresholds_ref(n, mu, m2, alpha, min_samples):
+    """Per-function ``(lo, hi, sd, eligible)`` from merged stats."""
+    sd = jnp.sqrt(m2 / jnp.maximum(n - 1.0, 1.0))
+    eligible = (n >= min_samples) & (sd > 0.0)
+    lo = mu - alpha * sd
+    hi = mu + alpha * sd
+    return lo, hi, sd, eligible
+
+
+def label_ref(exec_us, fid, valid, lo, hi, mu, sd, eligible, num_funcs):
+    """Label events against per-function thresholds.
+
+    Returns ``(labels[B] int32, scores[B] f32)``; scores are sigma-distance
+    ``|x - mu| / sd`` (0 where sd == 0 or the event is invalid/ineligible).
+    """
+    onehot = (fid[:, None] == jnp.arange(num_funcs, dtype=fid.dtype)[None, :]).astype(
+        exec_us.dtype
+    ) * valid[:, None]
+    lo_g = onehot @ lo
+    hi_g = onehot @ hi
+    mu_g = onehot @ mu
+    sd_g = onehot @ sd
+    el_g = (onehot @ eligible.astype(exec_us.dtype)) > 0.5
+    ok = (valid > 0.5) & el_g
+    score = jnp.where(
+        ok & (sd_g > 0), jnp.abs(exec_us - mu_g) / jnp.maximum(sd_g, 1e-30), 0.0
+    )
+    high = ok & (exec_us > hi_g)
+    low = ok & (exec_us < lo_g)
+    labels = jnp.where(high, 1, jnp.where(low, -1, 0)).astype(jnp.int32)
+    return labels, score
+
+
+def ad_batch_ref(exec_us, fid, valid, n_old, mu_old, m2_old, alpha, min_samples):
+    """Full reference pipeline: stats -> merge -> thresholds -> labels."""
+    num_funcs = mu_old.shape[0]
+    cnt, s1, s2 = segment_stats_ref(exec_us, fid, valid, mu_old, num_funcs)
+    n_new, mu_new, m2_new = pebay_merge_ref(n_old, mu_old, m2_old, cnt, s1, s2)
+    lo, hi, sd, eligible = thresholds_ref(n_new, mu_new, m2_new, alpha, min_samples)
+    labels, scores = label_ref(
+        exec_us, fid, valid, lo, hi, mu_new, sd, eligible, num_funcs
+    )
+    return labels, scores, n_new, mu_new, m2_new
+
+
+def ps_merge_ref(n_a, mu_a, m2_a, n_b, mu_b, m2_b):
+    """Elementwise Pébay merge of two stats tables (parameter server)."""
+    n = n_a + n_b
+    safe_n = jnp.maximum(n, 1.0)
+    delta = mu_b - mu_a
+    both = (n_a > 0) & (n_b > 0)
+    mu = jnp.where(both, mu_a + delta * n_b / safe_n, jnp.where(n_a > 0, mu_a, mu_b))
+    m2 = jnp.where(both, m2_a + m2_b + delta * delta * n_a * n_b / safe_n, m2_a + m2_b)
+    return n, mu, m2

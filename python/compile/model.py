@@ -1,0 +1,62 @@
+"""L2 compute graphs (build-time JAX, AOT-lowered to HLO text).
+
+Two graphs, both loaded and executed from the Rust coordinator via PJRT:
+
+* ``ad_batch`` — the on-node AD hot path: one padded event batch
+  ``(exec[B], fid[B], valid[B])`` plus running per-function stats
+  ``(n[F], mu[F], m2[F])`` and scalars ``(alpha, min_samples)`` →
+  ``(labels[B], scores[B], n'[F], mu'[F], m2'[F])``. Segment statistics
+  and labelling run in the L1 Pallas kernels; the Pébay merge and the
+  threshold computation are fused jnp between them.
+
+* ``ps_merge`` — elementwise Pébay merge of two stats tables (the
+  parameter server folds rank deltas with it).
+
+Shapes are baked at AOT time (defaults ``B=256, F=64``); scalars stay
+runtime inputs so α and the warm-up count are configurable without
+re-compiling artifacts.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import anomaly
+from .kernels.ref import thresholds_ref
+
+
+def ad_batch(exec_us, fid, valid, n_old, mu_old, m2_old, alpha, min_samples):
+    """On-node AD step. See module docstring; semantics match
+    ``kernels.ref.ad_batch_ref`` exactly (tested)."""
+    # L1 kernel: per-function shifted batch sums on the MXU.
+    cnt, s1, s2 = anomaly.segment_stats(exec_us, fid, valid, mu_old)
+
+    # Pébay merge of the batch into the running stats (O(F) elementwise,
+    # fused by XLA around the kernel calls).
+    safe_cnt = jnp.maximum(cnt, 1.0)
+    mean_b = mu_old + s1 / safe_cnt
+    m2_b = jnp.maximum(s2 - (s1 * s1) / safe_cnt, 0.0)
+    n_new = n_old + cnt
+    safe_n = jnp.maximum(n_new, 1.0)
+    delta = mean_b - mu_old
+    mu_new = jnp.where(cnt > 0, mu_old + delta * cnt / safe_n, mu_old)
+    m2_new = jnp.where(
+        cnt > 0, m2_old + m2_b + delta * delta * n_old * cnt / safe_n, m2_old
+    )
+
+    # Thresholds with warm-up gating baked into sd_eff.
+    lo, hi, sd, eligible = thresholds_ref(n_new, mu_new, m2_new, alpha, min_samples)
+    sd_eff = jnp.where(eligible, sd, 0.0)
+
+    # L1 kernel: threshold lookup + labels, reusing the onehot tiling.
+    labels, scores = anomaly.label(exec_us, fid, valid, lo, hi, mu_new, sd_eff)
+    return labels, scores, n_new, mu_new, m2_new
+
+
+def ps_merge(n_a, mu_a, m2_a, n_b, mu_b, m2_b):
+    """Parameter-server pairwise merge (a ⊕ b), elementwise over [F]."""
+    n = n_a + n_b
+    safe_n = jnp.maximum(n, 1.0)
+    delta = mu_b - mu_a
+    both = (n_a > 0) & (n_b > 0)
+    mu = jnp.where(both, mu_a + delta * n_b / safe_n, jnp.where(n_a > 0, mu_a, mu_b))
+    m2 = jnp.where(both, m2_a + m2_b + delta * delta * n_a * n_b / safe_n, m2_a + m2_b)
+    return n, mu, m2

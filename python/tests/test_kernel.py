@@ -1,0 +1,216 @@
+"""L1 kernel correctness: Pallas vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, dt-scales and occupancy patterns; every case
+asserts allclose between ``kernels.anomaly`` and ``kernels.ref``. This is
+the CORE correctness signal for the AOT artifact the Rust hot path runs.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import anomaly
+from compile.kernels.ref import (
+    ad_batch_ref,
+    label_ref,
+    segment_stats_ref,
+    thresholds_ref,
+)
+
+
+def make_batch(rng, batch, funcs, scale=1e3, occupancy=0.9, active_funcs=None):
+    active = active_funcs or funcs
+    ex = rng.lognormal(np.log(scale), 0.5, batch).astype(np.float32)
+    fid = rng.integers(0, active, batch).astype(np.int32)
+    valid = (rng.random(batch) < occupancy).astype(np.float32)
+    return jnp.array(ex), jnp.array(fid), jnp.array(valid)
+
+
+def make_stats(rng, funcs, scale=1e3, warm=True):
+    n = (rng.integers(20, 200, funcs) if warm else rng.integers(0, 3, funcs)).astype(
+        np.float32
+    )
+    mu = rng.lognormal(np.log(scale), 0.5, funcs).astype(np.float32)
+    m2 = (n * (0.05 * mu) ** 2).astype(np.float32)
+    return jnp.array(n), jnp.array(mu), jnp.array(m2)
+
+
+class TestSegmentStats:
+    @pytest.mark.parametrize("batch", [128, 256, 512, 1024])
+    @pytest.mark.parametrize("funcs", [8, 64])
+    def test_matches_ref_across_shapes(self, batch, funcs):
+        rng = np.random.default_rng(batch * 1000 + funcs)
+        ex, fid, valid = make_batch(rng, batch, funcs)
+        _, mu, _ = make_stats(rng, funcs)
+        got = anomaly.segment_stats(ex, fid, valid, mu)
+        want = segment_stats_ref(ex, fid, valid, mu, funcs)
+        for g, w, name in zip(got, want, ["cnt", "s1", "s2"]):
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-4, err_msg=name
+            )
+
+    def test_counts_are_exact_integers(self):
+        rng = np.random.default_rng(7)
+        ex, fid, valid = make_batch(rng, 256, 16)
+        _, mu, _ = make_stats(rng, 16)
+        cnt, _, _ = anomaly.segment_stats(ex, fid, valid, mu)
+        manual = np.zeros(16, dtype=np.float32)
+        for f, v in zip(np.asarray(fid), np.asarray(valid)):
+            manual[f] += v
+        np.testing.assert_array_equal(np.asarray(cnt), manual)
+
+    def test_all_invalid_gives_zeros(self):
+        rng = np.random.default_rng(8)
+        ex, fid, _ = make_batch(rng, 128, 8)
+        valid = jnp.zeros(128, dtype=jnp.float32)
+        _, mu, _ = make_stats(rng, 8)
+        cnt, s1, s2 = anomaly.segment_stats(ex, fid, valid, mu)
+        assert float(jnp.abs(cnt).sum()) == 0.0
+        assert float(jnp.abs(s1).sum()) == 0.0
+        assert float(jnp.abs(s2).sum()) == 0.0
+
+    def test_single_function_concentration(self):
+        # All events on one fid: s1/s2 match direct computation.
+        rng = np.random.default_rng(9)
+        batch, funcs = 256, 32
+        ex = rng.normal(5000.0, 40.0, batch).astype(np.float32)
+        fid = np.full(batch, 13, dtype=np.int32)
+        valid = np.ones(batch, dtype=np.float32)
+        mu = np.full(funcs, 5000.0, dtype=np.float32)
+        cnt, s1, s2 = anomaly.segment_stats(
+            jnp.array(ex), jnp.array(fid), jnp.array(valid), jnp.array(mu)
+        )
+        assert float(cnt[13]) == batch
+        d = ex - 5000.0
+        np.testing.assert_allclose(float(s1[13]), d.sum(), rtol=1e-4)
+        np.testing.assert_allclose(float(s2[13]), (d * d).sum(), rtol=1e-4)
+
+    def test_large_magnitude_stability(self):
+        # Values near 1e6 with sigma 100: naive f32 sum-of-squares loses the
+        # variance entirely; the mean-shifted kernel keeps ~1e-3 accuracy.
+        rng = np.random.default_rng(10)
+        batch, funcs = 512, 8
+        ex = rng.normal(1.0e6, 100.0, batch).astype(np.float32)
+        fid = rng.integers(0, funcs, batch).astype(np.int32)
+        valid = np.ones(batch, dtype=np.float32)
+        mu = np.full(funcs, 1.0e6, dtype=np.float32)
+        cnt, s1, s2 = anomaly.segment_stats(
+            jnp.array(ex), jnp.array(fid), jnp.array(valid), jnp.array(mu)
+        )
+        # Recovered per-function variance should be ~100^2.
+        c = np.asarray(cnt)
+        var = (np.asarray(s2) - np.asarray(s1) ** 2 / np.maximum(c, 1)) / np.maximum(
+            c - 1, 1
+        )
+        assert np.all(var[c > 10] > 100.0**2 * 0.5)
+        assert np.all(var[c > 10] < 100.0**2 * 2.0)
+
+
+class TestLabel:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(21)
+        batch, funcs = 256, 64
+        ex, fid, valid = make_batch(rng, batch, funcs)
+        n, mu, m2 = make_stats(rng, funcs)
+        lo, hi, sd, eligible = thresholds_ref(n, mu, m2, 6.0, 10.0)
+        sd_eff = jnp.where(eligible, sd, 0.0)
+        labels, scores = anomaly.label(ex, fid, valid, lo, hi, mu, sd_eff)
+        want_labels, want_scores = label_ref(
+            ex, fid, valid, lo, hi, mu, sd, eligible, funcs
+        )
+        np.testing.assert_array_equal(np.asarray(labels), np.asarray(want_labels))
+        np.testing.assert_allclose(
+            np.asarray(scores), np.asarray(want_scores), rtol=1e-5, atol=1e-5
+        )
+
+    def test_extremes_label_high_and_low(self):
+        funcs = 8
+        n = jnp.full(funcs, 100.0)
+        mu = jnp.full(funcs, 1000.0)
+        m2 = jnp.full(funcs, 100.0 * 10.0**2)  # sd ~ 10
+        lo, hi, sd, eligible = thresholds_ref(n, mu, m2, 6.0, 10.0)
+        sd_eff = jnp.where(eligible, sd, 0.0)
+        ex = jnp.array([1000.0, 2000.0, 10.0, 1030.0] * 32, dtype=jnp.float32)
+        fid = jnp.zeros(128, dtype=jnp.int32)
+        valid = jnp.ones(128, dtype=jnp.float32)
+        labels, scores = anomaly.label(ex, fid, valid, lo, hi, mu, sd_eff)
+        lab = np.asarray(labels).reshape(-1, 4)
+        assert (lab[:, 0] == 0).all()
+        assert (lab[:, 1] == 1).all()
+        assert (lab[:, 2] == -1).all()
+        assert (lab[:, 3] == 0).all()  # 3 sigma < 6 sigma threshold
+        sc = np.asarray(scores).reshape(-1, 4)
+        assert np.allclose(sc[:, 0], 0.0, atol=1e-5)
+        assert (sc[:, 1] > 6.0).all()
+
+
+class TestAdBatchPipeline:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        batch_blocks=st.integers(1, 4),
+        funcs=st.sampled_from([8, 16, 64, 128]),
+        scale=st.sampled_from([10.0, 1e3, 1e6]),
+        occupancy=st.floats(0.0, 1.0),
+        warm=st.booleans(),
+        alpha=st.sampled_from([3.0, 6.0, 12.0]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_pipeline_matches_ref_hypothesis(
+        self, batch_blocks, funcs, scale, occupancy, warm, alpha, seed
+    ):
+        batch = batch_blocks * anomaly.BLOCK_B
+        rng = np.random.default_rng(seed)
+        ex, fid, valid = make_batch(
+            rng, batch, funcs, scale=scale, occupancy=occupancy
+        )
+        n, mu, m2 = make_stats(rng, funcs, scale=scale, warm=warm)
+
+        def pipeline(ex, fid, valid, n, mu, m2):
+            from compile import model
+
+            return model.ad_batch(ex, fid, valid, n, mu, m2, alpha, 10.0)
+
+        got = pipeline(ex, fid, valid, n, mu, m2)
+        want = ad_batch_ref(ex, fid, valid, n, mu, m2, alpha, 10.0)
+        np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+        for i in (1, 2, 3):
+            np.testing.assert_allclose(
+                np.asarray(got[i]),
+                np.asarray(want[i]),
+                rtol=2e-5,
+                atol=2e-4,
+                err_msg=f"output {i}",
+            )
+        # M2 accumulates across grid blocks in a different order than the
+        # single-shot oracle — allow a slightly wider f32 tolerance.
+        np.testing.assert_allclose(
+            np.asarray(got[4]), np.asarray(want[4]), rtol=2e-4, atol=1e-3,
+            err_msg="output 4 (m2)",
+        )
+
+    def test_repeated_batches_converge_to_stream_stats(self):
+        # Feeding k batches through ad_batch equals one big Welford stream.
+        rng = np.random.default_rng(33)
+        funcs = 16
+        n = jnp.zeros(funcs)
+        mu = jnp.zeros(funcs)
+        m2 = jnp.zeros(funcs)
+        all_values = {f: [] for f in range(funcs)}
+        from compile import model
+
+        for _ in range(5):
+            ex, fid, valid = make_batch(rng, 256, funcs, scale=500.0)
+            for x, f, v in zip(np.asarray(ex), np.asarray(fid), np.asarray(valid)):
+                if v > 0.5:
+                    all_values[int(f)].append(float(x))
+            _, _, n, mu, m2 = model.ad_batch(ex, fid, valid, n, mu, m2, 6.0, 10.0)
+        for f in range(funcs):
+            vals = np.array(all_values[f])
+            if len(vals) < 2:
+                continue
+            assert abs(float(n[f]) - len(vals)) < 1e-3
+            np.testing.assert_allclose(float(mu[f]), vals.mean(), rtol=1e-4)
+            np.testing.assert_allclose(
+                float(m2[f]) / (len(vals) - 1), vals.var(ddof=1), rtol=1e-2
+            )

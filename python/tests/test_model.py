@@ -1,0 +1,133 @@
+"""L2 graph tests: ps_merge semantics + ad_batch behavioural contracts."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import ps_merge_ref
+
+
+def stats_of(values):
+    values = np.asarray(values, dtype=np.float64)
+    n = float(len(values))
+    if n == 0:
+        return 0.0, 0.0, 0.0
+    mean = values.mean()
+    m2 = ((values - mean) ** 2).sum()
+    return n, mean, m2
+
+
+class TestPsMerge:
+    @settings(max_examples=50, deadline=None)
+    @given(
+        na=st.integers(0, 50),
+        nb=st.integers(0, 50),
+        loc=st.sampled_from([5.0, 1e3, 1e6]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_merge_equals_concat(self, na, nb, loc, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.normal(loc, loc * 0.05, na)
+        b = rng.normal(loc * 1.1, loc * 0.02, nb)
+        sa, sb = stats_of(a), stats_of(b)
+        sw = stats_of(np.concatenate([a, b]))
+        funcs = 4
+        mk = lambda s: tuple(jnp.full(funcs, np.float32(x)) for x in s)
+        n, mu, m2 = model.ps_merge(*mk(sa), *mk(sb))
+        assert abs(float(n[0]) - sw[0]) < 1e-3
+        if sw[0] > 0:
+            np.testing.assert_allclose(float(mu[0]), sw[1], rtol=1e-4)
+            np.testing.assert_allclose(float(m2[0]), sw[2], rtol=2e-3, atol=1e-2)
+
+    def test_empty_sides(self):
+        funcs = 3
+        z = jnp.zeros(funcs)
+        st_b = (jnp.full(funcs, 5.0), jnp.full(funcs, 100.0), jnp.full(funcs, 80.0))
+        n, mu, m2 = model.ps_merge(z, z, z, *st_b)
+        np.testing.assert_allclose(np.asarray(n), 5.0)
+        np.testing.assert_allclose(np.asarray(mu), 100.0)
+        np.testing.assert_allclose(np.asarray(m2), 80.0)
+        # Symmetric case.
+        n, mu, m2 = model.ps_merge(*st_b, z, z, z)
+        np.testing.assert_allclose(np.asarray(mu), 100.0)
+
+    def test_matches_ref(self):
+        rng = np.random.default_rng(3)
+        funcs = 64
+        args = [jnp.array(rng.random(funcs).astype(np.float32) * s) for s in (10, 1e3, 1e4, 10, 1e3, 1e4)]
+        got = model.ps_merge(*args)
+        want = ps_merge_ref(*args)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-6)
+
+    def test_commutative(self):
+        rng = np.random.default_rng(4)
+        funcs = 16
+        a = [jnp.array((rng.random(funcs) * s).astype(np.float32)) for s in (20, 500, 1e3)]
+        b = [jnp.array((rng.random(funcs) * s).astype(np.float32)) for s in (30, 700, 2e3)]
+        ab = model.ps_merge(*a, *b)
+        ba = model.ps_merge(*b, *a)
+        for x, y in zip(ab, ba):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-5)
+
+
+class TestAdBatchContracts:
+    def test_six_sigma_on_clean_data_flags_nothing(self):
+        rng = np.random.default_rng(11)
+        funcs = 8
+        n = jnp.full(funcs, 1000.0)
+        mu = jnp.full(funcs, 2000.0)
+        m2 = jnp.full(funcs, 1000.0 * 25.0**2)
+        ex = jnp.array(rng.normal(2000.0, 25.0, 256).astype(np.float32))
+        fid = jnp.array(rng.integers(0, funcs, 256).astype(np.int32))
+        valid = jnp.ones(256, dtype=jnp.float32)
+        labels, *_ = model.ad_batch(ex, fid, valid, n, mu, m2, 6.0, 10.0)
+        assert int(np.abs(np.asarray(labels)).sum()) == 0
+
+    def test_injected_outlier_is_flagged(self):
+        funcs = 8
+        n = jnp.full(funcs, 1000.0)
+        mu = jnp.full(funcs, 2000.0)
+        m2 = jnp.full(funcs, 1000.0 * 25.0**2)
+        ex = np.full(256, 2000.0, dtype=np.float32)
+        ex[17] = 50_000.0
+        fid = np.zeros(256, dtype=np.int32)
+        valid = np.ones(256, dtype=np.float32)
+        labels, scores, *_ = model.ad_batch(
+            jnp.array(ex), jnp.array(fid), jnp.array(valid), n, mu, m2, 6.0, 10.0
+        )
+        lab = np.asarray(labels)
+        assert lab[17] == 1
+        assert lab.sum() == 1
+        assert float(np.asarray(scores)[17]) > 6.0
+
+    def test_warmup_gates_labels(self):
+        funcs = 4
+        n = jnp.zeros(funcs)
+        mu = jnp.zeros(funcs)
+        m2 = jnp.zeros(funcs)
+        rng = np.random.default_rng(5)
+        ex = jnp.array(rng.normal(100.0, 5.0, 128).astype(np.float32))
+        fid = jnp.zeros(128, dtype=jnp.int32)
+        valid = jnp.ones(128, dtype=jnp.float32)
+        # min_samples larger than the batch: nothing can be labelled.
+        labels, *_ = model.ad_batch(ex, fid, valid, n, mu, m2, 6.0, 1000.0)
+        assert int(np.abs(np.asarray(labels)).sum()) == 0
+
+    def test_alpha_monotonicity(self):
+        # Lower alpha can only flag more (or equal) events.
+        rng = np.random.default_rng(6)
+        funcs = 8
+        n = jnp.full(funcs, 500.0)
+        mu = jnp.full(funcs, 1000.0)
+        m2 = jnp.full(funcs, 500.0 * 30.0**2)
+        ex = jnp.array(rng.normal(1000.0, 90.0, 256).astype(np.float32))
+        fid = jnp.array(rng.integers(0, funcs, 256).astype(np.int32))
+        valid = jnp.ones(256, dtype=jnp.float32)
+        counts = []
+        for alpha in (2.0, 4.0, 8.0):
+            labels, *_ = model.ad_batch(ex, fid, valid, n, mu, m2, alpha, 10.0)
+            counts.append(int(np.abs(np.asarray(labels)).sum()))
+        assert counts[0] >= counts[1] >= counts[2]
+        assert counts[0] > 0  # 2 sigma on sigma-3x data must flag something

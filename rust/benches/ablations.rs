@@ -1,0 +1,131 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! * `k` (context-window size) — reduction factor vs diagnostic context;
+//! * `α` (threshold multiplier) — anomaly rate / reduction tradeoff;
+//! * PS sync period — accuracy of the global view vs sync traffic;
+//! * SST queue depth — backpressure events vs buffering.
+//!
+//! `cargo bench --bench ablations`
+
+use chimbuko::bench::Table;
+use chimbuko::config::Config;
+use chimbuko::coordinator::{run, Mode, RunReport, Workflow};
+
+fn base_cfg(fast: bool) -> Config {
+    Config {
+        ranks: if fast { 8 } else { 16 },
+        apps: 2,
+        steps: if fast { 15 } else { 40 },
+        calls_per_step: 130,
+        out_dir: String::new(),
+        viz_enabled: false,
+        ..Config::default()
+    }
+}
+
+fn main() {
+    let fast = std::env::var("CHIMBUKO_BENCH_FAST").as_deref() == Ok("1");
+
+    // Baseline BP size for reduction factors.
+    let cfg0 = base_cfg(fast);
+    let w0 = Workflow::nwchem(&cfg0);
+    let tau = run(&cfg0, &w0, Mode::Tau).expect("tau baseline");
+
+    // --- k sweep -----------------------------------------------------------
+    let mut t = Table::new(
+        "Ablation — context window k (paper uses k = 5)",
+        &["k", "kept", "reduced bytes", "×reduction", "kept/anomaly"],
+    );
+    for k in [0usize, 1, 3, 5, 10, 20] {
+        let mut cfg = base_cfg(fast);
+        cfg.k_neighbors = k;
+        let w = Workflow::nwchem(&cfg);
+        let r = run(&cfg, &w, Mode::TauChimbuko).expect("run");
+        t.row(vec![
+            k.to_string(),
+            r.total_kept.to_string(),
+            r.reduced_bytes.to_string(),
+            format!("{:.0}", RunReport::reduction_factor(tau.bp_bytes, r.reduced_bytes)),
+            format!("{:.1}", r.total_kept as f64 / r.total_anomalies.max(1) as f64),
+        ]);
+    }
+    t.print();
+    println!();
+
+    // --- alpha sweep ---------------------------------------------------------
+    let mut t = Table::new(
+        "Ablation — threshold α (paper uses α = 6)",
+        &["alpha", "anomalies", "rate %", "×reduction"],
+    );
+    for alpha in [2.0, 3.0, 4.5, 6.0, 9.0, 12.0] {
+        let mut cfg = base_cfg(fast);
+        cfg.alpha = alpha;
+        let w = Workflow::nwchem(&cfg);
+        let r = run(&cfg, &w, Mode::TauChimbuko).expect("run");
+        t.row(vec![
+            format!("{alpha}"),
+            r.total_anomalies.to_string(),
+            format!("{:.3}", 100.0 * r.total_anomalies as f64 / r.total_execs.max(1) as f64),
+            format!("{:.0}", RunReport::reduction_factor(tau.bp_bytes, r.reduced_bytes)),
+        ]);
+    }
+    t.print();
+    println!();
+
+    // --- detection algorithm (paper threshold vs §VIII HBOS extension) -------
+    let mut t = Table::new(
+        "Ablation — AD algorithm (threshold = paper, hbos = §VIII extension)",
+        &["algorithm", "anomalies", "rate %", "×reduction"],
+    );
+    for algo in ["threshold", "hbos"] {
+        let mut cfg = base_cfg(fast);
+        cfg.apply("ad.algorithm", algo).unwrap();
+        let w = Workflow::nwchem(&cfg);
+        let r = run(&cfg, &w, Mode::TauChimbuko).expect("run");
+        t.row(vec![
+            algo.to_string(),
+            r.total_anomalies.to_string(),
+            format!("{:.3}", 100.0 * r.total_anomalies as f64 / r.total_execs.max(1) as f64),
+            format!("{:.0}", RunReport::reduction_factor(tau.bp_bytes, r.reduced_bytes)),
+        ]);
+    }
+    t.print();
+    println!();
+
+    // --- PS sync period ------------------------------------------------------
+    let mut t = Table::new(
+        "Ablation — PS sync period (steps between stat exchanges)",
+        &["period", "anomalies", "wall s"],
+    );
+    for period in [1usize, 2, 5, 10] {
+        let mut cfg = base_cfg(fast);
+        cfg.ps_period_steps = period;
+        let w = Workflow::nwchem(&cfg);
+        let r = run(&cfg, &w, Mode::TauChimbuko).expect("run");
+        t.row(vec![
+            period.to_string(),
+            r.total_anomalies.to_string(),
+            format!("{:.3}", r.wall_seconds),
+        ]);
+    }
+    t.print();
+    println!();
+
+    // --- SST queue depth -------------------------------------------------------
+    let mut t = Table::new(
+        "Ablation — SST queue depth (bounded staging buffer)",
+        &["depth", "writer waits", "wall s"],
+    );
+    for depth in [1usize, 2, 4, 16, 64] {
+        let mut cfg = base_cfg(fast);
+        cfg.sst_queue_depth = depth;
+        let w = Workflow::nwchem(&cfg);
+        let r = run(&cfg, &w, Mode::TauChimbuko).expect("run");
+        t.row(vec![
+            depth.to_string(),
+            r.writer_waits.to_string(),
+            format!("{:.3}", r.wall_seconds),
+        ]);
+    }
+    t.print();
+}

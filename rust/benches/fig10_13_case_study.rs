@@ -1,0 +1,36 @@
+//! Bench: regenerate the **Figs 10–13** case study — the `MD_FORCES`
+//! launch delay (Fig 10), rank-0 `MD_FINIT`/`CF_CMS` concentration
+//! (Figs 11–12) and the `SP_GTXPBL`/`SP_GETXBL` domain-decomposition
+//! pattern on ranks ≠ 0 (Fig 13).
+//!
+//! `cargo bench --bench fig10_13_case_study`
+
+use chimbuko::trace::nwchem::names;
+
+fn main() {
+    let fast = std::env::var("CHIMBUKO_BENCH_FAST").as_deref() == Ok("1");
+    let (ranks, steps) = if fast { (8, 50) } else { (16, 120) };
+    println!("case-study run: {ranks} ranks, {steps} steps\n");
+    let res = chimbuko::exp::run_case_study(ranks, steps, 777).expect("case study");
+    print!("{}", res.render());
+
+    println!("\nfindings vs paper:");
+    println!(
+        "  Fig 10: anomalous MD_NEWTON {:.1}× normal (paper ~3×); MD_FORCES ratio {:.2} (≈1)",
+        res.newton_anomalous_us as f64 / res.newton_normal_us.max(1) as f64,
+        res.children_ratio
+    );
+    let share = |shares: &[chimbuko::exp::case_study::FuncShare], f: &str| {
+        shares.iter().find(|s| s.func == f).map(|s| s.share).unwrap_or(0.0)
+    };
+    println!(
+        "  Figs 11–12: rank-0 anomalies in MD_FINIT {:.0}% + CF_CMS {:.0}% (paper: dominant)",
+        100.0 * share(&res.rank0_shares, names::MD_FINIT),
+        100.0 * share(&res.rank0_shares, names::CF_CMS),
+    );
+    println!(
+        "  Fig 13: ranks≠0 anomalies in SP_GTXPBL {:.0}% + SP_GETXBL {:.0}% (paper: dominant)",
+        100.0 * share(&res.other_shares, names::SP_GTXPBL),
+        100.0 * share(&res.other_shares, names::SP_GETXBL),
+    );
+}

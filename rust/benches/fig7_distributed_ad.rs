@@ -1,0 +1,41 @@
+//! Bench: regenerate **Fig 7** — distributed vs non-distributed AD
+//! accuracy and execution time over 10–100 ranks.
+//!
+//! `cargo bench --bench fig7_distributed_ad`
+//! (`CHIMBUKO_BENCH_FAST=1` shrinks the sweep for CI.)
+
+fn main() {
+    let fast = std::env::var("CHIMBUKO_BENCH_FAST").as_deref() == Ok("1");
+    let scales: Vec<usize> = if fast {
+        vec![10, 20]
+    } else {
+        vec![10, 20, 30, 40, 50, 60, 70, 80, 90, 100]
+    };
+    let steps = if fast { 8 } else { 120 };
+    println!(
+        "Fig 7 sweep: ranks {:?}, {} steps x 4 MD iterations/rank\n",
+        scales, steps
+    );
+    let res = chimbuko::exp::run_fig7(&scales, steps, 4, 7);
+    print!("{}", res.render());
+
+    // Paper-shape checks (reported, not asserted, in bench mode).
+    let first = res.rows.first().unwrap();
+    let last = res.rows.last().unwrap();
+    println!("\nshape checks vs paper:");
+    println!(
+        "  single-instance time grows {:.1}x from {} to {} ranks (paper: grows with ranks)",
+        last.t_single / first.t_single.max(1e-12),
+        first.ranks,
+        last.ranks
+    );
+    println!(
+        "  distributed per-instance mean: {:.2}ms → {:.2}ms (paper: ~flat, ~0.05s on Summit)",
+        first.t_distributed_mean * 1e3,
+        last.t_distributed_mean * 1e3
+    );
+    println!(
+        "  mean accuracy {:.1}% (paper: 97.6%)",
+        res.mean_accuracy() * 100.0
+    );
+}

@@ -1,0 +1,31 @@
+//! Bench: regenerate **Fig 9** — trace data size over MPI processes for
+//! raw/filtered BP dumps vs Chimbuko-reduced JSON, plus the §VI-B headline
+//! reduction factors.
+//!
+//! `cargo bench --bench fig9_data_reduction`
+
+fn main() {
+    let fast = std::env::var("CHIMBUKO_BENCH_FAST").as_deref() == Ok("1");
+    let scales: Vec<usize> = if fast {
+        vec![8, 16]
+    } else {
+        vec![80, 160, 320, 640, 1280, 2560]
+    };
+    let steps = if fast { 6 } else { 12 };
+    println!("Fig 9 sweep: ranks {:?}, {} steps\n", scales, steps);
+    let res = chimbuko::exp::run_fig9(&scales, steps, 130).expect("fig9 sweep");
+    print!("{}", res.render());
+
+    if let Some(last) = res.rows.last() {
+        println!("shape checks vs paper (at max scale):");
+        println!(
+            "  instrumentation filtering shrinks raw {:.1}x (paper 2300/117.5 ≈ 19.6x)",
+            last.raw_bytes as f64 / last.filtered_bytes.max(1) as f64
+        );
+        println!(
+            "  reduction ×{:.0} unfiltered (paper ×148), ×{:.0} filtered (paper ×21)",
+            last.factor_unfiltered(),
+            last.factor_filtered()
+        );
+    }
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerate **Figs 3–6** — the visualization data products
+//! (ranking dashboard, streaming anomaly scatter, function view, call
+//! stack view) from a real run, and time the viz query path.
+//!
+//! `cargo bench --bench figs3_6_visualization`
+
+use chimbuko::bench::Bench;
+use chimbuko::viz::RankStat;
+
+fn main() {
+    let fast = std::env::var("CHIMBUKO_BENCH_FAST").as_deref() == Ok("1");
+    let (ranks, steps) = if fast { (16, 20) } else { (64, 40) };
+    println!("Figs 3–6 source run: {ranks} ranks, {steps} steps\n");
+    let res = chimbuko::exp::run_figs3_6(ranks, steps, 4242).expect("viz figures");
+    print!("{}", res.render());
+
+    // Query-path timings (the long-running-task side of §IV).
+    let run2 = chimbuko::exp::run_figs3_6(ranks, steps, 4243).expect("viz run");
+    let _ = run2; // the exp regenerates state internally; time the public path:
+    let mut b = Bench::from_env(20);
+    let json3 = res.fig3_json.to_string();
+    b.run("fig3 dashboard json serialize", || {
+        let _ = res.fig3_json.to_string();
+    });
+    b.run("fig3 dashboard json parse", || {
+        let _ = chimbuko::util::json::parse(&json3).unwrap();
+    });
+    println!("\n(figures rendered above; payload sizes: fig3 {}B fig4 {}B fig5 {}B)",
+        json3.len(),
+        res.fig4_json.to_string().len(),
+        res.fig5_json.to_string().len());
+}

@@ -1,0 +1,117 @@
+//! Microbenchmarks of the analysis hot path — the §Perf working set:
+//! call-stack building, rust-detector batches, XLA-artifact batches,
+//! PS sync round-trips, provenance serialization, BP encoding.
+//!
+//! `cargo bench --bench hotpath_micro`
+
+use chimbuko::ad::{DetectEngine, DetectorConfig, RustDetector, StackBuilder};
+use chimbuko::bench::Bench;
+use chimbuko::ps;
+use chimbuko::stats::StatsTable;
+use chimbuko::trace::binfmt;
+use chimbuko::trace::nwchem::{self, InjectionConfig};
+use chimbuko::trace::RankTracer;
+use chimbuko::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::from_env(30);
+
+    // Workload: one rank's step frames.
+    let (grammar, reg) = nwchem::md_grammar(5, &InjectionConfig::default());
+    let mut tracer = RankTracer::new(grammar.clone(), 0, 1, 8, false, Rng::new(1));
+    let frames: Vec<_> = (0..50).map(|_| tracer.step()).collect();
+    let events_per_frame = frames[0].events.len() as u64;
+
+    // --- trace generation ---
+    let mut t2 = RankTracer::new(grammar.clone(), 0, 1, 8, false, Rng::new(2));
+    b.run_throughput("gen: rank-step (filtered)", || {
+        let f = t2.step();
+        f.events.len() as u64
+    });
+    let mut t3 = RankTracer::new(grammar.clone(), 0, 1, 8, true, Rng::new(2));
+    b.run_throughput("gen: rank-step (unfiltered)", || {
+        let f = t3.step();
+        f.events.len() as u64
+    });
+
+    // --- call-stack building ---
+    b.run_throughput("stack: process frame", || {
+        let mut sb = StackBuilder::new(0, 1);
+        let mut n = 0u64;
+        for f in &frames {
+            n += sb.process(f).len() as u64;
+        }
+        n
+    });
+
+    // --- detection (rust backend) ---
+    let mut sb = StackBuilder::new(0, 1);
+    let batches: Vec<_> = frames.iter().map(|f| sb.process(f)).collect();
+    let execs_total: u64 = batches.iter().map(|b| b.len() as u64).sum();
+    b.run_throughput("detect[rust]: 50 frames", || {
+        let mut d = RustDetector::new(DetectorConfig::default());
+        for batch in &batches {
+            let _ = DetectEngine::detect(&mut d, batch.clone());
+        }
+        execs_total
+    });
+
+    // --- detection (xla backend, if artifacts exist) ---
+    let art = std::path::Path::new("artifacts");
+    if art.join("manifest.json").exists() {
+        let svc = chimbuko::runtime::RuntimeService::spawn(art).expect("runtime");
+        b.run_throughput("detect[xla]: 50 frames", || {
+            let mut d = chimbuko::runtime::XlaDetector::new(svc.handle(), 6.0, 10);
+            for batch in &batches {
+                let _ = DetectEngine::detect(&mut d, batch.clone());
+            }
+            execs_total
+        });
+        // Single padded batch through PJRT (per-call latency).
+        let one = batches.iter().find(|b| !b.is_empty()).unwrap().clone();
+        let per = one.len() as u64;
+        b.run_throughput("detect[xla]: single batch", || {
+            let mut d = chimbuko::runtime::XlaDetector::new(svc.handle(), 6.0, 10);
+            let _ = DetectEngine::detect(&mut d, one.clone());
+            per
+        });
+    } else {
+        println!("(artifacts/ missing — skipping XLA benches; run `make artifacts`)");
+    }
+
+    // --- parameter-server sync ---
+    let (client, handle) = ps::spawn(None, usize::MAX >> 1);
+    let mut delta = StatsTable::new();
+    let mut rng = Rng::new(3);
+    for _ in 0..200 {
+        delta.push(rng.usize(13) as u32, rng.lognormal(6.0, 0.4));
+    }
+    b.run("ps: sync round-trip (13 funcs)", || {
+        let _ = client.sync(0, 0, &delta);
+    });
+    client.shutdown();
+    handle.join().unwrap();
+
+    // --- provenance serialization ---
+    let mut d = RustDetector::new(DetectorConfig::default());
+    let labeled: Vec<_> = batches
+        .iter()
+        .flat_map(|batch| DetectEngine::detect(&mut d, batch.clone()))
+        .collect();
+    b.run_throughput("prov: serialize records to JSONL", || {
+        let mut db = chimbuko::provenance::ProvDb::in_memory();
+        db.append_step(&labeled, &reg).unwrap();
+        labeled.len() as u64
+    });
+
+    // --- BP encode ---
+    b.run_throughput("bp: encode 50 frames", || {
+        let mut w = chimbuko::adios::BpWriter::counting();
+        for f in &frames {
+            w.put_step(f).unwrap();
+        }
+        50 * events_per_frame
+    });
+
+    println!("\n({} events/frame, {} execs over 50 frames)", events_per_frame, execs_total);
+}

@@ -1,0 +1,242 @@
+//! HBOS detector — the paper's §VIII future work ("a more advanced AD
+//! algorithm to extend the AD module"; the post-publication Chimbuko
+//! releases shipped exactly this: Histogram-Based Outlier Score).
+//!
+//! Per function we keep a log-scale runtime histogram; an execution's
+//! score is the negative log of its bin's probability mass,
+//! `score = log(p_max / p(bin))`, and it is anomalous when the score
+//! exceeds a threshold (default ln(1000) ≈ 6.9 — the bin is ≥ 1000× rarer
+//! than the mode). Compared to μ±ασ this handles multi-modal runtimes
+//! (e.g. cache-hit vs cache-miss populations) without flagging the minor
+//! mode, while still catching far-tail events.
+//!
+//! Implements [`DetectEngine`], so it is config-selectable
+//! (`ad.algorithm = hbos`) and composes with the same on-node module,
+//! parameter server and provenance machinery. Statistics (`n, μ, M2`)
+//! are still maintained for the PS dashboard; only *labelling* differs.
+
+use super::detector::{Label, Labeled};
+use super::module::DetectEngine;
+use super::stack::ExecRecord;
+use crate::stats::{Histogram, StatsTable};
+use std::collections::HashMap;
+
+/// HBOS configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct HbosConfig {
+    /// Score threshold: anomalous when `log(p_max/p) > threshold`.
+    pub threshold: f64,
+    /// Executions of a function required before labelling starts.
+    pub min_samples: u64,
+    /// Histogram resolution (log-scale buckets per decade).
+    pub buckets_per_decade: usize,
+}
+
+impl Default for HbosConfig {
+    fn default() -> Self {
+        HbosConfig {
+            threshold: (30.0f64).ln(),
+            min_samples: 10,
+            buckets_per_decade: 10,
+        }
+    }
+}
+
+/// Histogram-based outlier detector.
+pub struct HbosDetector {
+    cfg: HbosConfig,
+    hists: HashMap<u32, FuncHist>,
+    /// Moments mirror for the PS/dashboard contract.
+    view: StatsTable,
+    pending: StatsTable,
+}
+
+struct FuncHist {
+    hist: Histogram,
+    /// Largest single-bin count (mode mass), tracked incrementally.
+    max_bin: u64,
+}
+
+impl HbosDetector {
+    pub fn new(cfg: HbosConfig) -> Self {
+        HbosDetector {
+            cfg,
+            hists: HashMap::new(),
+            view: StatsTable::new(),
+            pending: StatsTable::new(),
+        }
+    }
+
+    /// Score a runtime against a function's histogram: `ln(max_bin/bin)`.
+    fn score_of(&self, fid: u32, value: f64) -> Option<f64> {
+        let fh = self.hists.get(&fid)?;
+        if fh.hist.count() < self.cfg.min_samples {
+            return None;
+        }
+        let bin = fh.hist.bucket_count(value);
+        // Unseen bins get pseudo-count 0.5 (≈ one-sided Laplace smoothing).
+        let p = (bin as f64).max(0.5);
+        Some((fh.max_bin as f64 / p).ln())
+    }
+}
+
+impl DetectEngine for HbosDetector {
+    fn detect(&mut self, records: Vec<ExecRecord>) -> Vec<Labeled> {
+        // Phase 1 — merge the batch (same post-merge semantics as the
+        // threshold detector, so backends stay comparable).
+        for r in &records {
+            let v = r.inclusive_us() as f64;
+            let fh = self
+                .hists
+                .entry(r.fid)
+                .or_insert_with(|| FuncHist {
+                    hist: Histogram::new(self.cfg.buckets_per_decade),
+                    max_bin: 0,
+                });
+            fh.hist.record(v);
+            fh.max_bin = fh.max_bin.max(fh.hist.bucket_count(v));
+            self.view.push(r.fid, v);
+            self.pending.push(r.fid, v);
+        }
+        // Phase 2 — label.
+        records
+            .into_iter()
+            .map(|rec| {
+                let v = rec.inclusive_us() as f64;
+                let (label, score) = match self.score_of(rec.fid, v) {
+                    None => (Label::Normal, 0.0),
+                    Some(s) if s > self.cfg.threshold => {
+                        // Direction from the moments mirror.
+                        let dir = self
+                            .view
+                            .get(rec.fid)
+                            .map(|st| v >= st.mean())
+                            .unwrap_or(true);
+                        (
+                            if dir { Label::AnomalyHigh } else { Label::AnomalyLow },
+                            s,
+                        )
+                    }
+                    Some(s) => (Label::Normal, s),
+                };
+                Labeled { rec, label, score }
+            })
+            .collect()
+    }
+
+    fn take_pending(&mut self) -> StatsTable {
+        std::mem::take(&mut self.pending)
+    }
+
+    fn adopt_global(&mut self, global: &StatsTable) {
+        // Histograms stay local (the paper's PS exchanges moments only);
+        // adopt the global moments for the dashboard mirror.
+        for (fid, st) in global.iter() {
+            self.view.replace(fid, *st);
+        }
+    }
+
+    fn view(&self) -> &StatsTable {
+        &self.view
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rec(fid: u32, dur: u64, id: u64) -> ExecRecord {
+        ExecRecord {
+            call_id: id,
+            app: 0,
+            rank: 0,
+            thread: 0,
+            fid,
+            step: 0,
+            entry_ts: id * 1000,
+            exit_ts: id * 1000 + dur,
+            depth: 0,
+            parent: None,
+            n_children: 0,
+            n_messages: 0,
+            msg_bytes: 0,
+            exclusive_us: dur,
+        }
+    }
+
+    #[test]
+    fn far_outlier_is_flagged() {
+        let mut d = HbosDetector::new(HbosConfig::default());
+        let mut rng = Rng::new(1);
+        let recs: Vec<ExecRecord> = (0..2000)
+            .map(|i| rec(1, rng.normal_ms(1000.0, 30.0).max(1.0) as u64, i))
+            .collect();
+        DetectEngine::detect(&mut d, recs);
+        let out = DetectEngine::detect(&mut d, vec![rec(1, 500_000, 9999)]);
+        assert_eq!(out[0].label, Label::AnomalyHigh);
+        assert!(out[0].score > HbosConfig::default().threshold);
+    }
+
+    #[test]
+    fn bimodal_runtimes_do_not_flag_minor_mode() {
+        // 80% fast path (~100µs), 20% slow path (~10ms): a 6σ threshold
+        // detector flags nothing OR the whole slow mode depending on σ;
+        // HBOS keeps both modes normal because both bins are populated.
+        let mut d = HbosDetector::new(HbosConfig::default());
+        let mut rng = Rng::new(2);
+        let recs: Vec<ExecRecord> = (0..5000)
+            .map(|i| {
+                let dur = if rng.chance(0.2) {
+                    rng.normal_ms(10_000.0, 300.0)
+                } else {
+                    rng.normal_ms(100.0, 5.0)
+                };
+                rec(3, dur.max(1.0) as u64, i)
+            })
+            .collect();
+        let labeled = DetectEngine::detect(&mut d, recs);
+        let anoms = labeled.iter().filter(|l| l.label.is_anomaly()).count();
+        assert!(
+            anoms < 10,
+            "HBOS flagged {anoms} of a healthy bimodal distribution"
+        );
+        // …but a value far outside both modes still flags.
+        let out = DetectEngine::detect(&mut d, vec![rec(3, 5_000_000, 99999)]);
+        assert_eq!(out[0].label, Label::AnomalyHigh);
+    }
+
+    #[test]
+    fn warmup_suppresses_labels() {
+        let mut d = HbosDetector::new(HbosConfig::default());
+        let out = DetectEngine::detect(
+            &mut d,
+            vec![rec(1, 100, 0), rec(1, 100, 1), rec(1, 1_000_000, 2)],
+        );
+        assert!(out.iter().all(|l| l.label == Label::Normal));
+    }
+
+    #[test]
+    fn low_outlier_labels_low() {
+        let mut d = HbosDetector::new(HbosConfig::default());
+        let mut rng = Rng::new(3);
+        let recs: Vec<ExecRecord> = (0..3000)
+            .map(|i| rec(1, rng.normal_ms(100_000.0, 2_000.0).max(1.0) as u64, i))
+            .collect();
+        DetectEngine::detect(&mut d, recs);
+        let out = DetectEngine::detect(&mut d, vec![rec(1, 10, 99999)]);
+        assert_eq!(out[0].label, Label::AnomalyLow);
+    }
+
+    #[test]
+    fn stats_mirror_matches_threshold_detector_contract() {
+        let mut d = HbosDetector::new(HbosConfig::default());
+        let recs: Vec<ExecRecord> = (0..100).map(|i| rec(2, 50 + i % 5, i)).collect();
+        DetectEngine::detect(&mut d, recs);
+        let st = d.view().get(2).unwrap();
+        assert_eq!(st.count(), 100);
+        let pending = d.take_pending();
+        assert_eq!(pending.total_count(), 100);
+        assert_eq!(d.take_pending().total_count(), 0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Anomaly detection core (paper §III): online call-stack reconstruction,
+//! μ±α·σ threshold detection with streaming statistics, and the on-node AD
+//! module that performs the anomaly-centred data reduction.
+
+pub mod detector;
+pub mod hbos;
+pub mod module;
+pub mod stack;
+
+pub use detector::{DetectorConfig, Label, Labeled, RustDetector};
+pub use hbos::{HbosConfig, HbosDetector};
+pub use module::{DetectEngine, OnNodeAd, StepResult};
+pub use stack::{ExecRecord, StackBuilder, StackErrors};

@@ -1,0 +1,348 @@
+//! The **on-node AD module** (paper §III-B1): consumes a rank's step
+//! stream, reconstructs executions, labels anomalies, extracts the
+//! anomaly-centred k-neighbour context window (the data-reduction step),
+//! and exchanges statistics with the parameter server.
+
+use super::detector::{Labeled, RustDetector};
+use super::stack::{StackBuilder, StackErrors};
+use crate::stats::StatsTable;
+use crate::trace::StepFrame;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Detection engine abstraction: the pure-Rust path and the AOT-compiled
+/// XLA path (`runtime::XlaDetector`) implement the same batch semantics.
+pub trait DetectEngine: Send {
+    /// Merge a batch into the statistics, then label it (post-merge stats).
+    fn detect(&mut self, records: Vec<super::stack::ExecRecord>) -> Vec<Labeled>;
+    /// Drain local statistics accumulated since the last call.
+    fn take_pending(&mut self) -> StatsTable;
+    /// Replace the detection view with the parameter server's global.
+    fn adopt_global(&mut self, global: &StatsTable);
+    /// Current detection statistics (for tests/diagnostics).
+    fn view(&self) -> &StatsTable;
+}
+
+impl DetectEngine for RustDetector {
+    fn detect(&mut self, records: Vec<super::stack::ExecRecord>) -> Vec<Labeled> {
+        RustDetector::detect(self, records)
+    }
+
+    fn take_pending(&mut self) -> StatsTable {
+        RustDetector::take_pending(self)
+    }
+
+    fn adopt_global(&mut self, global: &StatsTable) {
+        RustDetector::adopt_global(self, global)
+    }
+
+    fn view(&self) -> &StatsTable {
+        RustDetector::view(self)
+    }
+}
+
+/// Outcome of processing one step frame.
+#[derive(Clone, Debug)]
+pub struct StepResult {
+    pub app: u32,
+    pub rank: u32,
+    pub step: u64,
+    /// Executions completed this step.
+    pub n_executions: u64,
+    /// Anomalies among them.
+    pub n_anomalies: u64,
+    /// Records selected for provenance: anomalies plus ≤ k normal
+    /// neighbours each side (exit order). This is what gets persisted —
+    /// everything else is reduced to statistics and discarded.
+    pub kept: Vec<Labeled>,
+    /// Analysis wall time for this step (seconds).
+    pub proc_seconds: f64,
+}
+
+/// The on-node AD module for one (app, rank) stream.
+pub struct OnNodeAd {
+    app: u32,
+    rank: u32,
+    stack: StackBuilder,
+    engine: Box<dyn DetectEngine>,
+    k: usize,
+    /// Sliding window of the most recent ≤ k+1 labelled records and
+    /// whether each was already emitted to `kept`.
+    window: VecDeque<(Labeled, bool)>,
+    /// Normal records still owed as "after" context.
+    after_quota: usize,
+    /// Cumulative counters.
+    total_execs: u64,
+    total_anomalies: u64,
+    total_kept: u64,
+}
+
+impl OnNodeAd {
+    pub fn new(app: u32, rank: u32, k: usize, engine: Box<dyn DetectEngine>) -> Self {
+        OnNodeAd {
+            app,
+            rank,
+            stack: StackBuilder::new(app, rank),
+            engine,
+            k,
+            window: VecDeque::with_capacity(k + 1),
+            after_quota: 0,
+            total_execs: 0,
+            total_anomalies: 0,
+            total_kept: 0,
+        }
+    }
+
+    /// Process one step frame end-to-end.
+    pub fn process_step(&mut self, frame: &StepFrame) -> StepResult {
+        let t0 = Instant::now();
+        let completed = self.stack.process(frame);
+        let labeled = self.engine.detect(completed);
+        let mut kept: Vec<Labeled> = Vec::new();
+        let mut n_anomalies = 0u64;
+        for l in &labeled {
+            self.push_windowed(l.clone(), &mut kept);
+            if l.label.is_anomaly() {
+                n_anomalies += 1;
+            }
+        }
+        self.total_execs += labeled.len() as u64;
+        self.total_anomalies += n_anomalies;
+        self.total_kept += kept.len() as u64;
+        StepResult {
+            app: self.app,
+            rank: self.rank,
+            step: frame.step,
+            n_executions: labeled.len() as u64,
+            n_anomalies,
+            kept,
+            proc_seconds: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// k-window selection in exit order (see [`StepResult::kept`]).
+    fn push_windowed(&mut self, l: Labeled, kept: &mut Vec<Labeled>) {
+        let is_anomaly = l.label.is_anomaly();
+        // Keep at most k history entries before pushing, so an anomaly
+        // emits exactly ≤ k predecessors.
+        while self.window.len() > self.k {
+            self.window.pop_front();
+        }
+        self.window.push_back((l, false));
+        if is_anomaly {
+            // Emit every not-yet-emitted record in the window: the ≤ k
+            // records before the anomaly, plus the anomaly itself.
+            for (rec, emitted) in self.window.iter_mut() {
+                if !*emitted {
+                    kept.push(rec.clone());
+                    *emitted = true;
+                }
+            }
+            self.after_quota = self.k;
+        } else if self.after_quota > 0 {
+            let (rec, emitted) = self.window.back_mut().unwrap();
+            kept.push(rec.clone());
+            *emitted = true;
+            self.after_quota -= 1;
+        }
+    }
+
+    /// Dump the not-yet-emitted part of the current context window — the
+    /// §V global-event trigger: when the parameter server flags a
+    /// globally detected event, *every* rank contributes its recent
+    /// executions to provenance, anomalous or not.
+    pub fn dump_window(&mut self) -> Vec<Labeled> {
+        let mut out = Vec::new();
+        for (l, emitted) in self.window.iter_mut() {
+            if !*emitted {
+                out.push(l.clone());
+                *emitted = true;
+            }
+        }
+        self.total_kept += out.len() as u64;
+        out
+    }
+
+    /// Local statistics delta for the parameter server.
+    pub fn take_pending(&mut self) -> StatsTable {
+        self.engine.take_pending()
+    }
+
+    /// Adopt the global statistics snapshot from the parameter server.
+    pub fn adopt_global(&mut self, global: &StatsTable) {
+        self.engine.adopt_global(global)
+    }
+
+    pub fn view(&self) -> &StatsTable {
+        self.engine.view()
+    }
+
+    pub fn stack_errors(&self) -> StackErrors {
+        self.stack.errors()
+    }
+
+    pub fn totals(&self) -> (u64, u64, u64) {
+        (self.total_execs, self.total_anomalies, self.total_kept)
+    }
+
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    pub fn app(&self) -> u32 {
+        self.app
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ad::detector::DetectorConfig;
+    use crate::trace::event::{Event, EventCtx, FuncEvent, FuncKind};
+    use crate::trace::gen::{toy_grammar, RankTracer};
+    use crate::util::rng::Rng;
+
+    fn module(k: usize) -> OnNodeAd {
+        OnNodeAd::new(
+            0,
+            0,
+            k,
+            Box::new(RustDetector::new(DetectorConfig { alpha: 6.0, min_samples: 10 })),
+        )
+    }
+
+    /// Frame with `durs[i]` as consecutive non-overlapping calls of fid 1.
+    fn flat_frame(step: u64, durs: &[u64]) -> StepFrame {
+        let ctx = EventCtx { app: 0, rank: 0, thread: 0 };
+        let mut events = Vec::new();
+        let mut t = step * 1_000_000;
+        for &d in durs {
+            events.push(Event::Func(FuncEvent { ctx, fid: 1, kind: FuncKind::Entry, ts: t }));
+            t += d;
+            events.push(Event::Func(FuncEvent { ctx, fid: 1, kind: FuncKind::Exit, ts: t }));
+            t += 10;
+        }
+        StepFrame { app: 0, rank: 0, step, events }
+    }
+
+    #[test]
+    fn clean_stream_keeps_nothing() {
+        let mut m = module(5);
+        let durs: Vec<u64> = (0..100).map(|i| 1000 + (i % 13)).collect();
+        let r = m.process_step(&flat_frame(0, &durs));
+        assert_eq!(r.n_executions, 100);
+        assert_eq!(r.n_anomalies, 0);
+        assert!(r.kept.is_empty(), "kept {} of clean stream", r.kept.len());
+    }
+
+    #[test]
+    fn anomaly_keeps_k_before_and_after() {
+        let mut m = module(5);
+        // Warm up.
+        let warm: Vec<u64> = (0..200).map(|i| 1000 + (i % 17)).collect();
+        m.process_step(&flat_frame(0, &warm));
+        // 20 normals, 1 huge, 20 normals.
+        let mut durs: Vec<u64> = (0..20).map(|i| 1000 + i).collect();
+        durs.push(500_000);
+        durs.extend((0..20).map(|i| 1000 + i));
+        let r = m.process_step(&flat_frame(1, &durs));
+        assert_eq!(r.n_anomalies, 1);
+        // 1 anomaly + 5 before + 5 after.
+        assert_eq!(r.kept.len(), 11, "kept {:?}", r.kept.len());
+        let anom_pos = r.kept.iter().position(|l| l.label.is_anomaly()).unwrap();
+        assert_eq!(anom_pos, 5);
+        // Context records are the immediate neighbours in exit order.
+        let anom_id = r.kept[anom_pos].rec.call_id;
+        for (i, l) in r.kept.iter().enumerate() {
+            let off = i as i64 - anom_pos as i64;
+            assert_eq!(l.rec.call_id as i64, anom_id as i64 + off);
+        }
+    }
+
+    #[test]
+    fn adjacent_anomalies_share_context_without_duplicates() {
+        let mut m = module(3);
+        let warm: Vec<u64> = (0..200).map(|i| 1000 + (i % 11)).collect();
+        m.process_step(&flat_frame(0, &warm));
+        // Two anomalies 2 apart: windows overlap.
+        let mut durs: Vec<u64> = (0..10).map(|i| 1000 + i).collect();
+        durs.push(400_000);
+        durs.extend([1001, 1002]);
+        durs.push(400_000);
+        durs.extend((0..10).map(|i| 1000 + i));
+        let r = m.process_step(&flat_frame(1, &durs));
+        assert_eq!(r.n_anomalies, 2);
+        // No duplicate call_ids in kept.
+        let mut ids: Vec<u64> = r.kept.iter().map(|l| l.rec.call_id).collect();
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "duplicates in kept");
+        // 3 before + A + 2 between + A + 3 after = 10.
+        assert_eq!(r.kept.len(), 10);
+    }
+
+    #[test]
+    fn window_spans_step_boundaries() {
+        let mut m = module(4);
+        let warm: Vec<u64> = (0..200).map(|i| 1000 + (i % 7)).collect();
+        m.process_step(&flat_frame(0, &warm));
+        // Anomaly as the last call of step 1 → after-context arrives in step 2.
+        let mut durs: Vec<u64> = (0..6).map(|i| 1000 + i).collect();
+        durs.push(300_000);
+        let r1 = m.process_step(&flat_frame(1, &durs));
+        assert_eq!(r1.n_anomalies, 1);
+        assert_eq!(r1.kept.len(), 5); // 4 before + anomaly
+        let r2 = m.process_step(&flat_frame(2, &[1000, 1001, 1002, 1003, 1004, 1005]));
+        assert_eq!(r2.n_anomalies, 0);
+        assert_eq!(r2.kept.len(), 4, "after-context must carry into next step");
+    }
+
+    #[test]
+    fn data_reduction_on_generated_workload() {
+        let (g, _) = toy_grammar();
+        let mut tracer = RankTracer::new(g, 0, 0, 4, false, Rng::new(8));
+        let mut m = module(5);
+        let mut execs = 0u64;
+        let mut kept = 0u64;
+        for _ in 0..100 {
+            let r = m.process_step(&tracer.step());
+            execs += r.n_executions;
+            kept += r.kept.len() as u64;
+        }
+        assert!(execs > 500);
+        // Clean toy workload at 6σ: reduction is extreme.
+        assert!(
+            (kept as f64) < 0.05 * execs as f64,
+            "kept {kept} of {execs} executions"
+        );
+    }
+
+    #[test]
+    fn dump_window_emits_recent_context_once() {
+        let mut m = module(4);
+        let warm: Vec<u64> = (0..50).map(|i| 1000 + (i % 9)).collect();
+        m.process_step(&flat_frame(0, &warm));
+        // Global-event trigger: dump the current window (all normal).
+        let dump1 = m.dump_window();
+        assert!(!dump1.is_empty());
+        assert!(dump1.len() <= 5); // ≤ k+1
+        assert!(dump1.iter().all(|l| !l.label.is_anomaly()));
+        // Idempotent until new records arrive.
+        assert!(m.dump_window().is_empty());
+        m.process_step(&flat_frame(1, &[1001, 1002]));
+        assert_eq!(m.dump_window().len(), 2);
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let mut m = module(2);
+        let warm: Vec<u64> = (0..50).map(|_| 1000).collect();
+        m.process_step(&flat_frame(0, &warm));
+        m.process_step(&flat_frame(1, &warm));
+        let (execs, anoms, kept) = m.totals();
+        assert_eq!(execs, 100);
+        assert_eq!(anoms, 0);
+        assert_eq!(kept, 0);
+    }
+}

@@ -1,0 +1,394 @@
+//! Online call-stack reconstruction (paper §III-B1).
+//!
+//! Events in a rank's stream arrive time-sorted; the builder maintains one
+//! stack per thread, pairs ENTRY/EXIT into completed *executions*, maps
+//! communication events to the function on top of the stack, and tracks
+//! per-execution child counts and inclusive/exclusive runtimes. Executions
+//! complete in EXIT order — that order is also the order the k-neighbour
+//! provenance window is defined over.
+//!
+//! The stack persists across step frames: a function spanning several
+//! streamed steps (common for outer loops) completes in whichever step its
+//! EXIT arrives.
+
+use crate::trace::event::{CommKind, Event, FuncKind, StepFrame};
+
+/// A completed function execution — the unit anomaly detection scores.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecRecord {
+    /// Unique, monotonically increasing id within one builder (per rank).
+    pub call_id: u64,
+    pub app: u32,
+    pub rank: u32,
+    pub thread: u32,
+    pub fid: u32,
+    /// Step frame in which the execution *completed*.
+    pub step: u64,
+    pub entry_ts: u64,
+    pub exit_ts: u64,
+    /// Stack depth at entry (root = 0).
+    pub depth: u32,
+    /// `call_id` of the enclosing execution, if any.
+    pub parent: Option<u64>,
+    /// Direct children count.
+    pub n_children: u32,
+    /// Communication events attributed to this execution (not children).
+    pub n_messages: u32,
+    /// Bytes moved by those messages.
+    pub msg_bytes: u64,
+    /// Exclusive runtime (µs): inclusive minus children inclusive.
+    pub exclusive_us: u64,
+}
+
+impl ExecRecord {
+    /// Inclusive runtime in µs.
+    pub fn inclusive_us(&self) -> u64 {
+        self.exit_ts - self.entry_ts
+    }
+}
+
+/// Malformed-stream counters (instrumentation glitches must not kill the
+/// analysis — the paper's tool keeps running through bad data).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StackErrors {
+    /// EXIT with empty stack or mismatched fid.
+    pub unmatched_exit: u64,
+    /// Timestamp went backwards within a stream.
+    pub time_regression: u64,
+    /// Comm event with no enclosing function.
+    pub orphan_comm: u64,
+}
+
+struct OpenFrame {
+    call_id: u64,
+    fid: u32,
+    entry_ts: u64,
+    n_children: u32,
+    n_messages: u32,
+    msg_bytes: u64,
+    children_inclusive: u64,
+}
+
+/// Per-(app, rank) call-stack builder; handles all threads of the rank.
+///
+/// Thread stacks are a small linear-scanned vec, not a HashMap: ranks have
+/// a handful of threads and the lookup sits on the per-event hot path.
+pub struct StackBuilder {
+    app: u32,
+    rank: u32,
+    stacks: Vec<(u32, Vec<OpenFrame>)>,
+    next_call_id: u64,
+    last_ts: u64,
+    errors: StackErrors,
+}
+
+impl StackBuilder {
+    pub fn new(app: u32, rank: u32) -> Self {
+        StackBuilder {
+            app,
+            rank,
+            stacks: Vec::new(),
+            next_call_id: 0,
+            last_ts: 0,
+            errors: StackErrors::default(),
+        }
+    }
+
+    #[inline]
+    fn stack_of(
+        stacks: &mut Vec<(u32, Vec<OpenFrame>)>,
+        thread: u32,
+    ) -> &mut Vec<OpenFrame> {
+        // Fast path: most streams are single-threaded → index 0 hit.
+        let pos = match stacks.iter().position(|(t, _)| *t == thread) {
+            Some(p) => p,
+            None => {
+                stacks.push((thread, Vec::with_capacity(16)));
+                stacks.len() - 1
+            }
+        };
+        &mut stacks[pos].1
+    }
+
+    /// Feed one step frame; returns executions completed during it, in
+    /// EXIT order.
+    pub fn process(&mut self, frame: &StepFrame) -> Vec<ExecRecord> {
+        let mut done = Vec::new();
+        for ev in &frame.events {
+            if ev.ts() < self.last_ts {
+                self.errors.time_regression += 1;
+            }
+            self.last_ts = self.last_ts.max(ev.ts());
+            match ev {
+                Event::Func(f) => {
+                    let next_id = self.next_call_id;
+                    let stack = Self::stack_of(&mut self.stacks, f.ctx.thread);
+                    match f.kind {
+                        FuncKind::Entry => {
+                            if let Some(top) = stack.last_mut() {
+                                top.n_children += 1;
+                            }
+                            stack.push(OpenFrame {
+                                call_id: next_id,
+                                fid: f.fid,
+                                entry_ts: f.ts,
+                                n_children: 0,
+                                n_messages: 0,
+                                msg_bytes: 0,
+                                children_inclusive: 0,
+                            });
+                            self.next_call_id += 1;
+                        }
+                        FuncKind::Exit => {
+                            // Pop through mismatches (lost EXITs) up to the
+                            // matching fid; count each as an error.
+                            let matching =
+                                stack.iter().rposition(|of| of.fid == f.fid);
+                            match matching {
+                                None => self.errors.unmatched_exit += 1,
+                                Some(pos) => {
+                                    let extra = stack.len() - 1 - pos;
+                                    self.errors.unmatched_exit += extra as u64;
+                                    // Discard frames opened above the match
+                                    // (their EXIT never arrived).
+                                    stack.truncate(pos + 1);
+                                    let of = stack.pop().unwrap();
+                                    let inclusive = f.ts.saturating_sub(of.entry_ts);
+                                    let parent = stack.last().map(|p| p.call_id);
+                                    if let Some(p) = stack.last_mut() {
+                                        p.children_inclusive += inclusive;
+                                    }
+                                    done.push(ExecRecord {
+                                        call_id: of.call_id,
+                                        app: self.app,
+                                        rank: self.rank,
+                                        thread: f.ctx.thread,
+                                        fid: of.fid,
+                                        step: frame.step,
+                                        entry_ts: of.entry_ts,
+                                        exit_ts: f.ts,
+                                        depth: stack.len() as u32,
+                                        parent,
+                                        n_children: of.n_children,
+                                        n_messages: of.n_messages,
+                                        msg_bytes: of.msg_bytes,
+                                        exclusive_us: inclusive
+                                            .saturating_sub(of.children_inclusive),
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+                Event::Comm(c) => {
+                    let stack = Self::stack_of(&mut self.stacks, c.ctx.thread);
+                    match stack.last_mut() {
+                        Some(top) => {
+                            top.n_messages += 1;
+                            top.msg_bytes += c.bytes;
+                            let _ = matches!(c.kind, CommKind::Send);
+                        }
+                        None => self.errors.orphan_comm += 1,
+                    }
+                }
+            }
+        }
+        done
+    }
+
+    /// Functions currently open (spanning into the next step).
+    pub fn open_depth(&self, thread: u32) -> usize {
+        self.stacks
+            .iter()
+            .find(|(t, _)| *t == thread)
+            .map(|(_, s)| s.len())
+            .unwrap_or(0)
+    }
+
+    pub fn errors(&self) -> StackErrors {
+        self.errors
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::event::{CommEvent, EventCtx, FuncEvent};
+    use crate::trace::gen::{toy_grammar, RankTracer};
+    use crate::trace::nwchem::{self, InjectionConfig};
+    use crate::util::rng::Rng;
+
+    fn fe(fid: u32, kind: FuncKind, ts: u64) -> Event {
+        Event::Func(FuncEvent {
+            ctx: EventCtx { app: 0, rank: 0, thread: 0 },
+            fid,
+            kind,
+            ts,
+        })
+    }
+
+    fn ce(bytes: u64, ts: u64) -> Event {
+        Event::Comm(CommEvent {
+            ctx: EventCtx { app: 0, rank: 0, thread: 0 },
+            kind: CommKind::Send,
+            partner: 1,
+            tag: 0,
+            bytes,
+            ts,
+        })
+    }
+
+    fn frame(events: Vec<Event>) -> StepFrame {
+        StepFrame { app: 0, rank: 0, step: 0, events }
+    }
+
+    #[test]
+    fn simple_nesting_inclusive_exclusive() {
+        let mut b = StackBuilder::new(0, 0);
+        // A[0..100] contains B[20..50] and C[60..70].
+        let recs = b.process(&frame(vec![
+            fe(0, FuncKind::Entry, 0),
+            fe(1, FuncKind::Entry, 20),
+            fe(1, FuncKind::Exit, 50),
+            fe(2, FuncKind::Entry, 60),
+            fe(2, FuncKind::Exit, 70),
+            fe(0, FuncKind::Exit, 100),
+        ]));
+        assert_eq!(recs.len(), 3);
+        // EXIT order: B, C, A.
+        assert_eq!(recs[0].fid, 1);
+        assert_eq!(recs[0].inclusive_us(), 30);
+        assert_eq!(recs[0].exclusive_us, 30);
+        assert_eq!(recs[0].depth, 1);
+        assert_eq!(recs[2].fid, 0);
+        assert_eq!(recs[2].inclusive_us(), 100);
+        assert_eq!(recs[2].exclusive_us, 100 - 30 - 10);
+        assert_eq!(recs[2].n_children, 2);
+        assert_eq!(recs[2].depth, 0);
+        assert_eq!(recs[0].parent, Some(recs[2].call_id));
+        assert_eq!(recs[2].parent, None);
+        assert_eq!(b.errors(), StackErrors::default());
+    }
+
+    #[test]
+    fn comm_attributed_to_top_of_stack() {
+        let mut b = StackBuilder::new(0, 0);
+        let recs = b.process(&frame(vec![
+            fe(0, FuncKind::Entry, 0),
+            fe(1, FuncKind::Entry, 10),
+            ce(4096, 15),
+            fe(1, FuncKind::Exit, 20),
+            ce(128, 25),
+            fe(0, FuncKind::Exit, 30),
+        ]));
+        let b_rec = &recs[0];
+        let a_rec = &recs[1];
+        assert_eq!(b_rec.n_messages, 1);
+        assert_eq!(b_rec.msg_bytes, 4096);
+        assert_eq!(a_rec.n_messages, 1);
+        assert_eq!(a_rec.msg_bytes, 128);
+    }
+
+    #[test]
+    fn executions_span_frames() {
+        let mut b = StackBuilder::new(0, 0);
+        let r1 = b.process(&frame(vec![fe(0, FuncKind::Entry, 0)]));
+        assert!(r1.is_empty());
+        assert_eq!(b.open_depth(0), 1);
+        let mut f2 = frame(vec![fe(0, FuncKind::Exit, 500)]);
+        f2.step = 1;
+        let r2 = b.process(&f2);
+        assert_eq!(r2.len(), 1);
+        assert_eq!(r2[0].step, 1);
+        assert_eq!(r2[0].inclusive_us(), 500);
+        assert_eq!(b.open_depth(0), 0);
+    }
+
+    #[test]
+    fn unmatched_exit_counted_not_fatal() {
+        let mut b = StackBuilder::new(0, 0);
+        let recs = b.process(&frame(vec![
+            fe(5, FuncKind::Exit, 10), // nothing open
+            fe(0, FuncKind::Entry, 20),
+            fe(0, FuncKind::Exit, 30),
+        ]));
+        assert_eq!(recs.len(), 1);
+        assert_eq!(b.errors().unmatched_exit, 1);
+    }
+
+    #[test]
+    fn lost_exit_recovered_by_fid_match() {
+        let mut b = StackBuilder::new(0, 0);
+        // A { B { (B's exit lost) } A-exit } — A must still complete.
+        let recs = b.process(&frame(vec![
+            fe(0, FuncKind::Entry, 0),
+            fe(1, FuncKind::Entry, 10),
+            fe(0, FuncKind::Exit, 50),
+        ]));
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].fid, 0);
+        assert_eq!(b.errors().unmatched_exit, 1);
+    }
+
+    #[test]
+    fn threads_have_independent_stacks() {
+        let mut b = StackBuilder::new(0, 0);
+        let mk = |thread: u32, fid: u32, kind, ts| {
+            Event::Func(FuncEvent {
+                ctx: EventCtx { app: 0, rank: 0, thread },
+                fid,
+                kind,
+                ts,
+            })
+        };
+        let recs = b.process(&frame(vec![
+            mk(0, 0, FuncKind::Entry, 0),
+            mk(1, 0, FuncKind::Entry, 5),
+            mk(0, 0, FuncKind::Exit, 10),
+            mk(1, 0, FuncKind::Exit, 20),
+        ]));
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].thread, 0);
+        assert_eq!(recs[0].inclusive_us(), 10);
+        assert_eq!(recs[1].thread, 1);
+        assert_eq!(recs[1].inclusive_us(), 15);
+    }
+
+    #[test]
+    fn generated_stream_is_clean_and_balanced() {
+        let (g, _) = toy_grammar();
+        let mut t = RankTracer::new(g, 0, 3, 8, true, Rng::new(2));
+        let mut b = StackBuilder::new(0, 3);
+        let mut total = 0usize;
+        for _ in 0..10 {
+            let f = t.step();
+            let expected = f.func_event_count() / 2;
+            let recs = b.process(&f);
+            assert_eq!(recs.len(), expected);
+            total += recs.len();
+        }
+        assert!(total > 0);
+        assert_eq!(b.errors(), StackErrors::default());
+        assert_eq!(b.open_depth(0), 0);
+    }
+
+    #[test]
+    fn nwchem_md_depths_and_exclusive_sums() {
+        let (g, reg) = nwchem::md_grammar(2, &InjectionConfig::none());
+        let mut t = RankTracer::new(g, 0, 1, 8, false, Rng::new(4));
+        let mut b = StackBuilder::new(0, 1);
+        let recs = b.process(&t.step());
+        // Exclusive sums to inclusive for each root MD_NEWTON.
+        let newton = reg.lookup("MD_NEWTON").unwrap();
+        for root in recs.iter().filter(|r| r.fid == newton) {
+            let descendants: u64 = recs
+                .iter()
+                .filter(|r| {
+                    r.entry_ts >= root.entry_ts && r.exit_ts <= root.exit_ts && r.call_id != root.call_id
+                })
+                .map(|r| r.exclusive_us)
+                .sum();
+            assert_eq!(root.exclusive_us + descendants, root.inclusive_us());
+        }
+    }
+}

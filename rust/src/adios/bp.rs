@@ -1,0 +1,124 @@
+//! BP file engine — dump-to-disk trace output (the "NWChem + TAU" baseline
+//! in Figs 8–9). Wraps the [`binfmt`](crate::trace::binfmt) codec with a
+//! buffered file writer and byte accounting; also supports a counting-only
+//! mode so the Fig 9 size sweep can model multi-TB runs without writing
+//! them.
+
+use crate::trace::binfmt;
+use crate::trace::StepFrame;
+use anyhow::{Context, Result};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+enum Sink {
+    File(BufWriter<File>),
+    /// Count bytes only — used for large-scale size sweeps.
+    Counting,
+}
+
+/// BP-like trace file writer with byte accounting.
+pub struct BpWriter {
+    sink: Sink,
+    bytes: u64,
+    frames: u64,
+    events: u64,
+}
+
+impl BpWriter {
+    /// Create a real file-backed writer.
+    pub fn create(path: &Path) -> Result<BpWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let f = File::create(path)
+            .with_context(|| format!("creating bp file {}", path.display()))?;
+        Ok(BpWriter { sink: Sink::File(BufWriter::new(f)), bytes: 0, frames: 0, events: 0 })
+    }
+
+    /// Create a byte-counting writer (no I/O).
+    pub fn counting() -> BpWriter {
+        BpWriter { sink: Sink::Counting, bytes: 0, frames: 0, events: 0 }
+    }
+
+    /// Append one step frame.
+    pub fn put_step(&mut self, frame: &StepFrame) -> Result<()> {
+        let n = match &mut self.sink {
+            Sink::File(w) => binfmt::write_frame(w, frame)?,
+            Sink::Counting => binfmt::frame_encoded_size(frame),
+        };
+        self.bytes += n;
+        self.frames += 1;
+        self.events += frame.events.len() as u64;
+        Ok(())
+    }
+
+    /// Flush file buffers (no-op when counting).
+    pub fn flush(&mut self) -> Result<()> {
+        if let Sink::File(w) = &mut self.sink {
+            w.flush().context("flushing bp file")?;
+        }
+        Ok(())
+    }
+
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn frames_written(&self) -> u64 {
+        self.frames
+    }
+
+    pub fn events_written(&self) -> u64 {
+        self.events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::binfmt::read_all;
+    use crate::trace::gen::{toy_grammar, RankTracer};
+    use crate::util::rng::Rng;
+
+    fn frames(n: usize) -> Vec<StepFrame> {
+        let (g, _) = toy_grammar();
+        let mut t = RankTracer::new(g, 0, 0, 2, false, Rng::new(1));
+        (0..n).map(|_| t.step()).collect()
+    }
+
+    #[test]
+    fn file_writer_roundtrips() {
+        let dir = std::env::temp_dir().join(format!("chimbuko-bp-{}", std::process::id()));
+        let path = dir.join("trace.bp");
+        let fs = frames(5);
+        let mut w = BpWriter::create(&path).unwrap();
+        for f in &fs {
+            w.put_step(f).unwrap();
+        }
+        w.flush().unwrap();
+        assert_eq!(w.frames_written(), 5);
+        let on_disk = std::fs::metadata(&path).unwrap().len();
+        assert_eq!(on_disk, w.bytes_written());
+        let back = read_all(&mut std::fs::File::open(&path).unwrap()).unwrap();
+        assert_eq!(back.len(), 5);
+        assert_eq!(back[2].events, fs[2].events);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn counting_writer_matches_file_writer() {
+        let fs = frames(4);
+        let dir = std::env::temp_dir().join(format!("chimbuko-bpc-{}", std::process::id()));
+        let mut fw = BpWriter::create(&dir.join("t.bp")).unwrap();
+        let mut cw = BpWriter::counting();
+        for f in &fs {
+            fw.put_step(f).unwrap();
+            cw.put_step(f).unwrap();
+        }
+        fw.flush().unwrap();
+        assert_eq!(fw.bytes_written(), cw.bytes_written());
+        assert_eq!(fw.events_written(), cw.events_written());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,17 @@
+//! Step-based streaming substrate — the ADIOS2 analogue.
+//!
+//! The paper moves TAU trace data through ADIOS2 with two engines:
+//! **SST** (in-situ, step-based stream read concurrently by Chimbuko) and
+//! **BP** (dump to disk — the "TAU only" baseline). We implement both
+//! contracts:
+//!
+//! * [`sst`] — bounded, backpressured in-process step streams (one writer,
+//!   one reader per rank stream), with begin/end step framing;
+//! * [`bp`] — a file engine writing the [`binfmt`](crate::trace::binfmt)
+//!   codec and counting bytes for the Fig 9 size axes.
+
+pub mod bp;
+pub mod sst;
+
+pub use bp::BpWriter;
+pub use sst::{sst_channel, SstReader, SstWriter, StepStatus};

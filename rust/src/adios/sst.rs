@@ -1,0 +1,248 @@
+//! SST-like in-process step stream.
+//!
+//! Semantics copied from ADIOS2's Sustainable Staging Transport as Chimbuko
+//! uses it (§II-C): the producer (TAU plugin ≙ [`RankTracer`]) publishes
+//! one *step* at a time; the consumer (on-node AD) blocks on `begin_step`
+//! until a step is available; a bounded queue applies backpressure to the
+//! producer so a slow analysis cannot buffer unbounded trace data (the
+//! paper's "minimal memory overhead on the senders' side").
+//!
+//! Implementation: `Mutex<VecDeque>` + two `Condvar`s; `close()` lets the
+//! reader drain remaining steps then observe EndOfStream.
+
+use crate::trace::StepFrame;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Result of `begin_step` — mirrors adios2::StepStatus.
+#[derive(Debug, PartialEq)]
+pub enum StepStatus {
+    /// A step is available (payload attached).
+    Ok(Box<StepFrame>),
+    /// Producer closed and the queue is drained.
+    EndOfStream,
+    /// `try_begin_step` found nothing within the timeout.
+    NotReady,
+}
+
+struct Shared {
+    queue: Mutex<State>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct State {
+    frames: VecDeque<StepFrame>,
+    closed: bool,
+    /// Steps the writer had to wait on (backpressure events) — a metric
+    /// the overhead experiments report.
+    writer_waits: u64,
+}
+
+/// Producer handle.
+pub struct SstWriter {
+    shared: Arc<Shared>,
+}
+
+/// Consumer handle.
+pub struct SstReader {
+    shared: Arc<Shared>,
+}
+
+/// Create a bounded step stream of depth `capacity`.
+pub fn sst_channel(capacity: usize) -> (SstWriter, SstReader) {
+    assert!(capacity > 0, "sst capacity must be > 0");
+    let shared = Arc::new(Shared {
+        queue: Mutex::new(State { frames: VecDeque::new(), closed: false, writer_waits: 0 }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+        capacity,
+    });
+    (SstWriter { shared: shared.clone() }, SstReader { shared })
+}
+
+impl SstWriter {
+    /// Publish one step; blocks while the queue is full (backpressure).
+    pub fn put_step(&self, frame: StepFrame) {
+        let mut st = self.shared.queue.lock().unwrap();
+        if st.frames.len() >= self.shared.capacity {
+            st.writer_waits += 1;
+            while st.frames.len() >= self.shared.capacity && !st.closed {
+                st = self.shared.not_full.wait(st).unwrap();
+            }
+        }
+        if st.closed {
+            return; // reader went away; drop silently like SST on close
+        }
+        st.frames.push_back(frame);
+        drop(st);
+        self.shared.not_empty.notify_one();
+    }
+
+    /// Number of times the writer blocked on a full queue.
+    pub fn writer_waits(&self) -> u64 {
+        self.shared.queue.lock().unwrap().writer_waits
+    }
+
+    /// Close the stream; the reader drains then sees EndOfStream.
+    pub fn close(&self) {
+        let mut st = self.shared.queue.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+    }
+}
+
+impl Drop for SstWriter {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+impl SstReader {
+    /// Block until a step is available or the stream ends.
+    pub fn begin_step(&self) -> StepStatus {
+        let mut st = self.shared.queue.lock().unwrap();
+        loop {
+            if let Some(f) = st.frames.pop_front() {
+                drop(st);
+                self.shared.not_full.notify_one();
+                return StepStatus::Ok(Box::new(f));
+            }
+            if st.closed {
+                return StepStatus::EndOfStream;
+            }
+            st = self.shared.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking-ish variant with a timeout.
+    pub fn try_begin_step(&self, timeout: Duration) -> StepStatus {
+        let mut st = self.shared.queue.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(f) = st.frames.pop_front() {
+                drop(st);
+                self.shared.not_full.notify_one();
+                return StepStatus::Ok(Box::new(f));
+            }
+            if st.closed {
+                return StepStatus::EndOfStream;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return StepStatus::NotReady;
+            }
+            let (guard, _timeout_res) =
+                self.shared.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Steps currently buffered (observability).
+    pub fn depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().frames.len()
+    }
+}
+
+impl Drop for SstReader {
+    fn drop(&mut self) {
+        // Unblock a writer stuck in put_step.
+        let mut st = self.shared.queue.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.shared.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn frame(step: u64) -> StepFrame {
+        StepFrame::new(0, 0, step)
+    }
+
+    #[test]
+    fn fifo_order_and_eos() {
+        let (w, r) = sst_channel(4);
+        for s in 0..3 {
+            w.put_step(frame(s));
+        }
+        w.close();
+        for s in 0..3 {
+            match r.begin_step() {
+                StepStatus::Ok(f) => assert_eq!(f.step, s),
+                other => panic!("expected step, got {other:?}"),
+            }
+        }
+        assert_eq!(r.begin_step(), StepStatus::EndOfStream);
+    }
+
+    #[test]
+    fn backpressure_blocks_writer() {
+        let (w, r) = sst_channel(2);
+        w.put_step(frame(0));
+        w.put_step(frame(1));
+        let handle = thread::spawn(move || {
+            w.put_step(frame(2)); // blocks until reader drains
+            w.writer_waits()
+        });
+        thread::sleep(Duration::from_millis(50));
+        assert_eq!(r.depth(), 2);
+        match r.begin_step() {
+            StepStatus::Ok(f) => assert_eq!(f.step, 0),
+            other => panic!("{other:?}"),
+        }
+        let waits = handle.join().unwrap();
+        assert!(waits >= 1, "writer should have waited");
+    }
+
+    #[test]
+    fn try_begin_step_times_out() {
+        let (_w, r) = sst_channel(1);
+        assert_eq!(
+            r.try_begin_step(Duration::from_millis(10)),
+            StepStatus::NotReady
+        );
+    }
+
+    #[test]
+    fn reader_drop_unblocks_writer() {
+        let (w, r) = sst_channel(1);
+        w.put_step(frame(0));
+        let handle = thread::spawn(move || {
+            w.put_step(frame(1)); // would block forever without drop handling
+        });
+        thread::sleep(Duration::from_millis(30));
+        drop(r);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn cross_thread_stream() {
+        let (w, r) = sst_channel(3);
+        let producer = thread::spawn(move || {
+            for s in 0..100 {
+                w.put_step(frame(s));
+            }
+        });
+        let mut seen = 0u64;
+        loop {
+            match r.begin_step() {
+                StepStatus::Ok(f) => {
+                    assert_eq!(f.step, seen);
+                    seen += 1;
+                }
+                StepStatus::EndOfStream => break,
+                StepStatus::NotReady => unreachable!(),
+            }
+        }
+        assert_eq!(seen, 100);
+        producer.join().unwrap();
+    }
+}

@@ -1,0 +1,257 @@
+//! Criterion-lite: a measurement harness for `cargo bench` targets
+//! (`harness = false`; the offline registry has no criterion).
+//!
+//! Provides warmup + calibrated iteration timing with mean/σ/p50/p99,
+//! throughput reporting, and paper-style table printing used by the
+//! per-figure experiment benches.
+
+use std::time::{Duration, Instant};
+
+/// One timing measurement series.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Bench label.
+    pub name: String,
+    /// Per-iteration wall times, seconds.
+    pub samples: Vec<f64>,
+    /// Optional items-per-iteration for throughput.
+    pub items_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        crate::util::mean(&self.samples)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        crate::util::stddev(&self.samples)
+    }
+
+    pub fn p50(&self) -> f64 {
+        crate::util::percentile(&self.samples, 50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        crate::util::percentile(&self.samples, 99.0)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// items/s at mean time, if items_per_iter was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.mean())
+    }
+
+    /// One human line, criterion-style.
+    pub fn report_line(&self) -> String {
+        let mut s = format!(
+            "{:<44} mean {:>10}  p50 {:>10}  p99 {:>10}  σ {:>9}",
+            self.name,
+            fmt_secs(self.mean()),
+            fmt_secs(self.p50()),
+            fmt_secs(self.p99()),
+            fmt_secs(self.stddev()),
+        );
+        if let Some(tp) = self.throughput() {
+            s.push_str(&format!("  {:>12.0} items/s", tp));
+        }
+        s
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Bench runner with warmup and a sample budget.
+pub struct Bench {
+    /// Warmup duration before sampling.
+    pub warmup: Duration,
+    /// Number of samples to record.
+    pub samples: usize,
+    /// Measured results, in run order.
+    pub results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: Duration::from_millis(200), samples: 20, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_ms: u64, samples: usize) -> Self {
+        Bench {
+            warmup: Duration::from_millis(warmup_ms),
+            samples,
+            results: Vec::new(),
+        }
+    }
+
+    /// Honour `CHIMBUKO_BENCH_FAST=1` (CI smoke mode): 1 warmup ms, 3 samples.
+    pub fn from_env(default_samples: usize) -> Self {
+        if std::env::var("CHIMBUKO_BENCH_FAST").as_deref() == Ok("1") {
+            Bench::new(1, 3)
+        } else {
+            Bench::new(200, default_samples)
+        }
+    }
+
+    /// Time `f` (which should perform one full iteration per call).
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Measurement {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        self.results.push(Measurement {
+            name: name.to_string(),
+            samples,
+            items_per_iter: None,
+        });
+        let m = self.results.last().unwrap();
+        println!("{}", m.report_line());
+        m
+    }
+
+    /// Time `f` and report items/second throughput.
+    pub fn run_throughput<F: FnMut() -> u64>(&mut self, name: &str, mut f: F) -> &Measurement {
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        let mut items = 0u64;
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            items = f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        self.results.push(Measurement {
+            name: name.to_string(),
+            samples,
+            items_per_iter: Some(items as f64),
+        });
+        let m = self.results.last().unwrap();
+        println!("{}", m.report_line());
+        m
+    }
+}
+
+/// Paper-style table printer: fixed-width columns, Markdown-ish separators.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render to a string (also used in EXPERIMENTS.md).
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let hdr: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!("{:>w$}", h, w = widths[i]))
+            .collect();
+        out.push_str(&format!("| {} |\n", hdr.join(" | ")));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&format!("|-{}-|\n", sep.join("-|-")));
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            out.push_str(&format!("| {} |\n", cells.join(" | ")));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_stats() {
+        let m = Measurement {
+            name: "x".into(),
+            samples: vec![1.0, 2.0, 3.0],
+            items_per_iter: Some(6.0),
+        };
+        assert!((m.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(m.p50(), 2.0);
+        assert_eq!(m.min(), 1.0);
+        assert!((m.throughput().unwrap() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bench::new(0, 3);
+        b.run("noop", || {});
+        assert_eq!(b.results.len(), 1);
+        assert_eq!(b.results[0].samples.len(), 3);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Table I", &["# MPI", "overhead"]);
+        t.row(vec!["80".into(), "1.85".into()]);
+        t.row(vec!["2560".into(), "18.27".into()]);
+        let r = t.render();
+        assert!(r.contains("== Table I =="));
+        assert!(r.contains(" 2560 |"));
+        assert!(r.contains("18.27"));
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert_eq!(fmt_secs(2.0), "2.000s");
+        assert_eq!(fmt_secs(0.0025), "2.50ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.50µs");
+        assert_eq!(fmt_secs(5e-9), "5.0ns");
+    }
+}

@@ -1,0 +1,171 @@
+//! Command-line argument parsing (no `clap` offline).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, positional
+//! arguments, typed getters with defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: one optional subcommand, flags, options, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First non-flag token, if declared as a subcommand position.
+    pub subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    /// `expect_subcommand` consumes the first positional as a subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, expect_subcommand: bool) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    out.options.insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let val = it.next().unwrap();
+                    out.options.insert(rest.to_string(), val);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if expect_subcommand && out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env(expect_subcommand: bool) -> Args {
+        Args::parse(std::env::args().skip(1), expect_subcommand)
+    }
+
+    /// Boolean flag: `--verbose` (bare) or `--verbose=true`.
+    ///
+    /// Note a bare `--verbose` followed by a non-`--` token consumes that
+    /// token as a value (`--verbose true`); place bare flags after
+    /// positionals or use the `=` form to disambiguate.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || matches!(
+                self.options.get(name).map(|s| s.as_str()),
+                Some("true" | "1" | "yes")
+            )
+    }
+
+    /// String option with default.
+    pub fn str_opt(&self, name: &str, default: &str) -> String {
+        self.options.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// u64 option with default; panics with a friendly message on junk.
+    pub fn u64_opt(&self, name: &str, default: u64) -> u64 {
+        match self.options.get(name) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| die(&format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    /// usize option with default.
+    pub fn usize_opt(&self, name: &str, default: usize) -> usize {
+        self.u64_opt(name, default as u64) as usize
+    }
+
+    /// f64 option with default.
+    pub fn f64_opt(&self, name: &str, default: f64) -> f64 {
+        match self.options.get(name) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| die(&format!("--{name} expects a number, got '{v}'"))),
+        }
+    }
+
+    /// Comma-separated list of u64, e.g. `--ranks 10,20,40`.
+    pub fn u64_list(&self, name: &str, default: &[u64]) -> Vec<u64> {
+        match self.options.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim().parse().unwrap_or_else(|_| {
+                        die(&format!("--{name} expects comma-separated integers, got '{v}'"))
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Positional arguments (after the subcommand).
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str], sub: bool) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string()), sub)
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["run", "pos1", "--ranks", "64", "--out=/tmp/x", "--verbose"], true);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.u64_opt("ranks", 1), 64);
+        assert_eq!(a.str_opt("out", ""), "/tmp/x");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals(), &["pos1".to_string()]);
+        // `=` form also works as a flag.
+        let b = parse(&["--quiet=true", "tail"], false);
+        assert!(b.flag("quiet"));
+        assert!(!b.flag("loud"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[], false);
+        assert_eq!(a.u64_opt("ranks", 8), 8);
+        assert_eq!(a.f64_opt("alpha", 6.0), 6.0);
+        assert!(!a.flag("verbose"));
+        assert!(a.subcommand.is_none());
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_next_flag() {
+        let a = parse(&["--fast", "--ranks", "4"], false);
+        assert!(a.flag("fast"));
+        assert_eq!(a.u64_opt("ranks", 0), 4);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["--scales", "10,20,40"], false);
+        assert_eq!(a.u64_list("scales", &[]), vec![10, 20, 40]);
+        assert_eq!(a.u64_list("missing", &[1, 2]), vec![1, 2]);
+    }
+}

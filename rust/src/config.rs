@@ -1,0 +1,379 @@
+//! Run configuration: a typed struct covering every knob of the pipeline,
+//! loadable from a simple `key = value` file (TOML-subset; the offline
+//! registry has no toml/serde) with `#` comments and section headers that
+//! become key prefixes (`[ad]` + `alpha = 6` → `ad.alpha`).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Which labelling algorithm the detector uses.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum AdAlgorithm {
+    /// μ ± α·σ thresholding (the paper's method).
+    Threshold,
+    /// Histogram-based outlier score (the paper's §VIII extension).
+    Hbos,
+}
+
+impl AdAlgorithm {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "threshold" | "sstd" => Ok(AdAlgorithm::Threshold),
+            "hbos" => Ok(AdAlgorithm::Hbos),
+            other => bail!("unknown AD algorithm '{other}' (threshold|hbos)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AdAlgorithm::Threshold => "threshold",
+            AdAlgorithm::Hbos => "hbos",
+        }
+    }
+}
+
+/// Which detector backend executes the AD math.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum DetectorBackend {
+    /// Pure-Rust streaming statistics (baseline / fallback).
+    Rust,
+    /// AOT-compiled JAX+Pallas artifact via PJRT (the paper's hot path here).
+    Xla,
+}
+
+impl DetectorBackend {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "rust" => Ok(DetectorBackend::Rust),
+            "xla" => Ok(DetectorBackend::Xla),
+            other => bail!("unknown detector backend '{other}' (rust|xla)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DetectorBackend::Rust => "rust",
+            DetectorBackend::Xla => "xla",
+        }
+    }
+}
+
+/// Trace output engine for the instrumented app (paper: ADIOS2 SST vs BP).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum TraceEngine {
+    /// In-situ step stream consumed by on-node AD (ADIOS2 SST analogue).
+    Sst,
+    /// Dump-to-disk engine (ADIOS2 BP analogue) — the "TAU only" baseline.
+    Bp,
+}
+
+impl TraceEngine {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "sst" => Ok(TraceEngine::Sst),
+            "bp" => Ok(TraceEngine::Bp),
+            other => bail!("unknown trace engine '{other}' (sst|bp)"),
+        }
+    }
+}
+
+/// Full pipeline configuration. Field names mirror the paper's terms.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Simulated MPI ranks across the workflow.
+    pub ranks: usize,
+    /// Applications in the workflow (the paper demos 2: sim + analysis).
+    pub apps: usize,
+    /// Trace steps ("frames"; paper streams once per second).
+    pub steps: usize,
+    /// Function events per rank per step (ENTRY/EXIT pairs), before nesting.
+    pub calls_per_step: usize,
+    /// AD threshold multiplier α in μ ± α·σ (paper: 6).
+    pub alpha: f64,
+    /// Normal calls kept before/after each anomaly (paper: k = 5).
+    pub k_neighbors: usize,
+    /// Parameter-server sync-and-broadcast cadence in steps (paper: 1 s).
+    pub ps_period_steps: usize,
+    /// Detector backend.
+    pub backend: DetectorBackend,
+    /// Labelling algorithm (threshold = the paper's; hbos = extension).
+    pub algorithm: AdAlgorithm,
+    /// Trace engine for the generated trace.
+    pub engine: TraceEngine,
+    /// Apply the paper's "filtered" function list (drop high-frequency,
+    /// short-duration functions at instrumentation time).
+    pub filtered: bool,
+    /// Seed for workload generation + anomaly injection.
+    pub seed: u64,
+    /// Output directory (provenance, reduced JSON, viz dumps).
+    pub out_dir: String,
+    /// Directory holding `*.hlo.txt` AOT artifacts.
+    pub artifacts_dir: String,
+    /// AD batch capacity (events per XLA invocation; AOT-baked).
+    pub batch_capacity: usize,
+    /// Function-table capacity (AOT-baked slot count).
+    pub func_capacity: usize,
+    /// Bounded step-queue depth between app and AD (SST buffering).
+    pub sst_queue_depth: usize,
+    /// Total CPU milliseconds of *application compute* simulated across
+    /// the whole run (strong scaling: split over ranks × steps, so
+    /// per-rank work shrinks as ranks grow — like a fixed problem size on
+    /// Summit). 0 disables app compute (pure analysis benchmarks).
+    pub app_work_ms_total: u64,
+    /// Viz server bind address, e.g. "127.0.0.1:0" (0 = ephemeral port).
+    pub viz_addr: String,
+    /// Emit per-step anomaly statistics to the viz ingest path.
+    pub viz_enabled: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            ranks: 8,
+            apps: 2,
+            steps: 20,
+            calls_per_step: 200,
+            alpha: 6.0,
+            k_neighbors: 5,
+            ps_period_steps: 1,
+            backend: DetectorBackend::Rust,
+            algorithm: AdAlgorithm::Threshold,
+            engine: TraceEngine::Sst,
+            filtered: true,
+            seed: 1234,
+            out_dir: "chimbuko_out".into(),
+            artifacts_dir: "artifacts".into(),
+            batch_capacity: 256,
+            func_capacity: 64,
+            sst_queue_depth: 4,
+            app_work_ms_total: 0,
+            viz_addr: "127.0.0.1:0".into(),
+            viz_enabled: true,
+        }
+    }
+}
+
+impl Config {
+    /// Parse a `key = value` config file (TOML subset, see module docs).
+    pub fn from_file(path: &Path) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_str(&text)
+    }
+
+    /// Parse config text.
+    pub fn from_str(text: &str) -> anyhow::Result<Config> {
+        let kv = parse_kv(text)?;
+        let mut cfg = Config::default();
+        for (key, value) in &kv {
+            cfg.apply(key, value)
+                .with_context(|| format!("config key '{key}'"))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply one key (dotted form) — also used for CLI overrides.
+    pub fn apply(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        let v = value.trim().trim_matches('"');
+        match key {
+            "ranks" => self.ranks = v.parse()?,
+            "apps" => self.apps = v.parse()?,
+            "steps" => self.steps = v.parse()?,
+            "calls_per_step" => self.calls_per_step = v.parse()?,
+            "seed" => self.seed = v.parse()?,
+            "out_dir" => self.out_dir = v.to_string(),
+            "artifacts_dir" => self.artifacts_dir = v.to_string(),
+            "filtered" => self.filtered = parse_bool(v)?,
+            "engine" => self.engine = TraceEngine::parse(v)?,
+            "ad.alpha" | "alpha" => self.alpha = v.parse()?,
+            "ad.k_neighbors" | "k" => self.k_neighbors = v.parse()?,
+            "ad.backend" | "backend" => self.backend = DetectorBackend::parse(v)?,
+            "ad.algorithm" | "algorithm" => self.algorithm = AdAlgorithm::parse(v)?,
+            "ad.batch_capacity" => self.batch_capacity = v.parse()?,
+            "ad.func_capacity" => self.func_capacity = v.parse()?,
+            "ps.period_steps" => self.ps_period_steps = v.parse()?,
+            "sst.queue_depth" => self.sst_queue_depth = v.parse()?,
+            "app_work_ms_total" => self.app_work_ms_total = v.parse()?,
+            "viz.addr" => self.viz_addr = v.to_string(),
+            "viz.enabled" => self.viz_enabled = parse_bool(v)?,
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Reject configurations the pipeline cannot run.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.ranks == 0 {
+            bail!("ranks must be > 0");
+        }
+        if self.apps == 0 || self.apps > self.ranks {
+            bail!("apps must be in 1..=ranks (got {} apps, {} ranks)", self.apps, self.ranks);
+        }
+        if self.steps == 0 {
+            bail!("steps must be > 0");
+        }
+        if self.alpha <= 0.0 {
+            bail!("ad.alpha must be positive");
+        }
+        if self.batch_capacity == 0 || self.func_capacity == 0 {
+            bail!("batch/function capacities must be > 0");
+        }
+        if self.ps_period_steps == 0 {
+            bail!("ps.period_steps must be > 0");
+        }
+        if self.sst_queue_depth == 0 {
+            bail!("sst.queue_depth must be > 0");
+        }
+        Ok(())
+    }
+
+    /// JSON dump (run metadata in provenance, `--print-config`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ranks", Json::num(self.ranks as f64)),
+            ("apps", Json::num(self.apps as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("calls_per_step", Json::num(self.calls_per_step as f64)),
+            ("alpha", Json::num(self.alpha)),
+            ("k_neighbors", Json::num(self.k_neighbors as f64)),
+            ("ps_period_steps", Json::num(self.ps_period_steps as f64)),
+            ("backend", Json::str(self.backend.name())),
+            ("algorithm", Json::str(self.algorithm.name())),
+            (
+                "engine",
+                Json::str(match self.engine {
+                    TraceEngine::Sst => "sst",
+                    TraceEngine::Bp => "bp",
+                }),
+            ),
+            ("filtered", Json::Bool(self.filtered)),
+            ("seed", Json::num(self.seed as f64)),
+            ("out_dir", Json::str(&self.out_dir)),
+            ("batch_capacity", Json::num(self.batch_capacity as f64)),
+            ("func_capacity", Json::num(self.func_capacity as f64)),
+        ])
+    }
+}
+
+fn parse_bool(v: &str) -> anyhow::Result<bool> {
+    match v {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        other => bail!("expected boolean, got '{other}'"),
+    }
+}
+
+/// Parse `key = value` lines with `[section]` prefixes and `#` comments.
+fn parse_kv(text: &str) -> anyhow::Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(sec) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = sec.trim().to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("config line {} is not 'key = value': '{raw}'", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        let value = line[eq + 1..].trim();
+        if key.is_empty() {
+            bail!("empty key at config line {}", lineno + 1);
+        }
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.insert(full, value.to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_full_file() {
+        let text = r#"
+# chimbuko run config
+ranks = 64
+steps = 30
+engine = bp
+filtered = false
+
+[ad]
+alpha = 5.5        # threshold
+backend = rust
+k_neighbors = 3
+
+[ps]
+period_steps = 2
+
+[viz]
+enabled = false
+"#;
+        let c = Config::from_str(text).unwrap();
+        assert_eq!(c.ranks, 64);
+        assert_eq!(c.steps, 30);
+        assert_eq!(c.engine, TraceEngine::Bp);
+        assert!(!c.filtered);
+        assert_eq!(c.alpha, 5.5);
+        assert_eq!(c.k_neighbors, 3);
+        assert_eq!(c.ps_period_steps, 2);
+        assert!(!c.viz_enabled);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(Config::from_str("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(Config::from_str("ranks = 0").is_err());
+        assert!(Config::from_str("alpha = -1").is_err());
+        assert!(Config::from_str("engine = adios").is_err());
+        assert!(Config::from_str("ranks = abc").is_err());
+    }
+
+    #[test]
+    fn config_json_roundtrips_fields() {
+        let j = Config::default().to_json();
+        assert_eq!(j.get("alpha").unwrap().as_f64(), Some(6.0));
+        assert_eq!(j.get("backend").unwrap().as_str(), Some("rust"));
+        crate::util::json::parse(&j.to_string()).unwrap();
+    }
+
+    #[test]
+    fn shipped_example_config_parses() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("configs/example.conf");
+        let c = Config::from_file(&path).unwrap();
+        assert_eq!(c.ranks, 32);
+        assert_eq!(c.k_neighbors, 5);
+        assert_eq!(c.algorithm, AdAlgorithm::Threshold);
+        assert_eq!(c.viz_addr, "127.0.0.1:8787");
+    }
+
+    #[test]
+    fn cli_override_via_apply() {
+        let mut c = Config::default();
+        c.apply("backend", "xla").unwrap();
+        assert_eq!(c.backend, DetectorBackend::Xla);
+        assert!(c.apply("backend", "gpu").is_err());
+    }
+}

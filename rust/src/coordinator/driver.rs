@@ -1,0 +1,563 @@
+//! Online pipeline driver: wires generators → SST streams → on-node AD →
+//! parameter server → provenance/viz, on a bounded worker pool (simulated
+//! ranks are virtual, workers are physical).
+//!
+//! Three run modes mirror the paper's Fig 8 measurement matrix:
+//!
+//! * [`Mode::AppOnly`] — the applications alone ("NWChem");
+//! * [`Mode::Tau`] — applications + trace capture to BP files
+//!   ("NWChem + TAU");
+//! * [`Mode::TauChimbuko`] — applications + SST streaming + the full
+//!   Chimbuko analysis ("NWChem + TAU + Chimbuko").
+
+use super::workflow::Workflow;
+use crate::ad::{DetectorConfig, HbosConfig, HbosDetector, OnNodeAd, RustDetector, StackErrors};
+use crate::adios::{sst_channel, BpWriter, SstReader, SstWriter, StepStatus};
+use crate::config::{AdAlgorithm, Config, DetectorBackend};
+use crate::provenance::{ProvDb, RunMetadata};
+use crate::ps::{self, PsClient, VizSnapshot};
+use crate::runtime::{RuntimeService, XlaDetector};
+use crate::stats::RunStats;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// What runs on top of the applications.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// Applications only (baseline "NWChem").
+    AppOnly,
+    /// Applications + BP trace dump ("NWChem + TAU").
+    Tau,
+    /// Applications + streaming + full analysis ("NWChem + TAU + Chimbuko").
+    TauChimbuko,
+}
+
+impl Mode {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::AppOnly => "app",
+            Mode::Tau => "app+tau",
+            Mode::TauChimbuko => "app+tau+chimbuko",
+        }
+    }
+}
+
+/// Everything a run produces (inputs to every experiment table/figure).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub mode: &'static str,
+    pub ranks: usize,
+    pub steps: usize,
+    /// End-to-end wall time of the run.
+    pub wall_seconds: f64,
+    /// Total events generated (func + comm) across all ranks.
+    pub total_events: u64,
+    /// Completed executions analysed (Chimbuko mode only).
+    pub total_execs: u64,
+    pub total_anomalies: u64,
+    /// Records kept for provenance (anomalies + context).
+    pub total_kept: u64,
+    /// Bytes the BP engine wrote/would write (Tau mode).
+    pub bp_bytes: u64,
+    /// Bytes of reduced JSON output (Chimbuko mode).
+    pub reduced_bytes: u64,
+    /// Sum of per-step AD processing time across ranks (seconds).
+    pub ad_seconds: f64,
+    /// Mean/σ of per-(rank,step) AD latency.
+    pub ad_step_latency: RunStats,
+    pub stack_errors: StackErrors,
+    /// SST writer backpressure events.
+    pub writer_waits: u64,
+    /// Final viz snapshot (empty outside Chimbuko mode).
+    pub snapshot: VizSnapshot,
+    /// All snapshots published during the run (timeline history).
+    pub snapshots: Vec<VizSnapshot>,
+    /// Where provenance was written, if on disk.
+    pub out_dir: Option<PathBuf>,
+}
+
+impl RunReport {
+    /// Data-reduction factor (BP baseline ÷ reduced); needs both sides —
+    /// experiments compute it across paired runs.
+    pub fn reduction_factor(bp_bytes: u64, reduced_bytes: u64) -> f64 {
+        if reduced_bytes == 0 {
+            f64::INFINITY
+        } else {
+            bp_bytes as f64 / reduced_bytes as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mode", Json::str(self.mode)),
+            ("ranks", Json::num(self.ranks as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("wall_seconds", Json::num(self.wall_seconds)),
+            ("total_events", Json::num(self.total_events as f64)),
+            ("total_execs", Json::num(self.total_execs as f64)),
+            ("total_anomalies", Json::num(self.total_anomalies as f64)),
+            ("total_kept", Json::num(self.total_kept as f64)),
+            ("bp_bytes", Json::num(self.bp_bytes as f64)),
+            ("reduced_bytes", Json::num(self.reduced_bytes as f64)),
+            ("ad_seconds", Json::num(self.ad_seconds)),
+            ("writer_waits", Json::num(self.writer_waits as f64)),
+        ])
+    }
+}
+
+/// Per-rank state owned by the generator side.
+struct GenRank {
+    tracer: crate::trace::RankTracer,
+    writer: Option<SstWriter>,
+}
+
+/// Simulated application compute: spin for ~`us` microseconds of CPU.
+///
+/// The paper's application (NWChem) is compute-bound; a sleep would not
+/// contend for cores with the analysis, so the overhead measurements of
+/// Fig 8 / Table I require real work here. Calibrated once per process.
+fn app_compute(us: u64) {
+    use std::sync::OnceLock;
+    static ITERS_PER_US: OnceLock<u64> = OnceLock::new();
+    let per_us = *ITERS_PER_US.get_or_init(|| {
+        let t = Instant::now();
+        let mut acc = 0u64;
+        let n = 4_000_000u64;
+        for i in 0..n {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+        }
+        std::hint::black_box(acc);
+        let elapsed = t.elapsed().as_secs_f64().max(1e-9);
+        ((n as f64 / elapsed) / 1e6).max(1.0) as u64
+    });
+    let mut acc = 0u64;
+    for i in 0..us.saturating_mul(per_us) {
+        acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+    }
+    std::hint::black_box(acc);
+}
+
+/// Per-rank state owned by the analysis side.
+struct AdRank {
+    app: u32,
+    rank: u32,
+    reader: SstReader,
+    ad: OnNodeAd,
+}
+
+/// Run the workflow per `cfg` in the given mode.
+pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
+    cfg.validate()?;
+    let unfiltered = !cfg.filtered;
+    let mut root_rng = crate::util::rng::Rng::new(cfg.seed);
+
+    // Optional XLA runtime (shared service thread).
+    let runtime: Option<Arc<RuntimeService>> =
+        if mode == Mode::TauChimbuko && cfg.backend == DetectorBackend::Xla {
+            let svc = RuntimeService::spawn(std::path::Path::new(&cfg.artifacts_dir))?;
+            anyhow::ensure!(
+                workflow.max_funcs() <= svc.meta().funcs,
+                "workflow has {} functions, artifact capacity is {}",
+                workflow.max_funcs(),
+                svc.meta().funcs
+            );
+            Some(Arc::new(svc))
+        } else {
+            None
+        };
+
+    // Parameter server + viz collector (Chimbuko mode only).
+    let (viz_tx, viz_rx) = channel::<VizSnapshot>();
+    let (ps_client, ps_handle) = if mode == Mode::TauChimbuko {
+        let (c, h) = ps::spawn(Some(viz_tx), cfg.ranks.max(1));
+        (Some(c), Some(h))
+    } else {
+        drop(viz_tx);
+        (None, None)
+    };
+    let viz_collector = std::thread::spawn(move || {
+        let mut all = Vec::new();
+        while let Ok(s) = viz_rx.recv() {
+            all.push(s);
+        }
+        all
+    });
+
+    // Provenance sink (one per AD worker, same directory).
+    let out_dir: Option<PathBuf> = if mode == Mode::TauChimbuko && !cfg.out_dir.is_empty() {
+        let d = PathBuf::from(&cfg.out_dir);
+        std::fs::create_dir_all(&d).ok();
+        Some(d)
+    } else {
+        None
+    };
+
+    let pool = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(cfg.ranks)
+        .max(1);
+
+    // Partition ranks into `pool` slices; build per-rank state.
+    let mut gen_slices: Vec<Vec<GenRank>> = (0..pool).map(|_| Vec::new()).collect();
+    let mut ad_slices: Vec<Vec<AdRank>> = (0..pool).map(|_| Vec::new()).collect();
+    for a in &workflow.assignments {
+        let slice = (a.rank as usize) % pool;
+        let rng = root_rng.fork(a.rank as u64);
+        let tracer = crate::trace::RankTracer::new(
+            workflow.grammars[a.app as usize].clone(),
+            a.app,
+            a.app_rank,
+            workflow.app_world(a.app),
+            unfiltered,
+            rng,
+        );
+        if mode == Mode::TauChimbuko {
+            let (w, r) = sst_channel(cfg.sst_queue_depth);
+            gen_slices[slice].push(GenRank { tracer, writer: Some(w) });
+            let engine: Box<dyn crate::ad::DetectEngine> = match (&runtime, cfg.algorithm) {
+                (Some(svc), _) => Box::new(XlaDetector::new(
+                    svc.handle(),
+                    cfg.alpha,
+                    DetectorConfig::default().min_samples,
+                )),
+                (None, AdAlgorithm::Threshold) => Box::new(RustDetector::new(DetectorConfig {
+                    alpha: cfg.alpha,
+                    min_samples: DetectorConfig::default().min_samples,
+                })),
+                (None, AdAlgorithm::Hbos) => {
+                    Box::new(HbosDetector::new(HbosConfig::default()))
+                }
+            };
+            ad_slices[slice].push(AdRank {
+                app: a.app,
+                rank: a.rank,
+                reader: r,
+                ad: OnNodeAd::new(a.app, a.rank, cfg.k_neighbors, engine),
+            });
+        } else {
+            gen_slices[slice].push(GenRank { tracer, writer: None });
+        }
+    }
+
+    // Run metadata (written once).
+    if let Some(dir) = &out_dir {
+        let mut db = ProvDb::create(dir)?;
+        db.write_metadata(&RunMetadata::new(
+            &format!("run-seed{}-r{}", cfg.seed, cfg.ranks),
+            cfg.to_json(),
+            &workflow.registries,
+        ))?;
+        db.flush()?;
+    }
+
+    let steps = cfg.steps;
+    let t0 = Instant::now();
+
+    // ---- Generator workers ------------------------------------------------
+    let engine_is_bp = mode == Mode::Tau;
+    // Strong scaling: fixed total app work split across rank-steps.
+    let app_us_per_rank_step = if cfg.app_work_ms_total == 0 {
+        0
+    } else {
+        (cfg.app_work_ms_total * 1000) / (cfg.ranks as u64 * steps as u64).max(1)
+    };
+    let mut gen_joins = Vec::new();
+    for (wi, mut slice) in gen_slices.into_iter().enumerate() {
+        let join = std::thread::Builder::new()
+            .name(format!("chimbuko-gen-{wi}"))
+            .spawn(move || {
+                let mut bp = BpWriter::counting();
+                let mut events = 0u64;
+                let mut waits = 0u64;
+                for _step in 0..steps {
+                    for g in slice.iter_mut() {
+                        if app_us_per_rank_step > 0 {
+                            app_compute(app_us_per_rank_step);
+                        }
+                        let frame = g.tracer.step();
+                        events += frame.events.len() as u64;
+                        if engine_is_bp {
+                            bp.put_step(&frame).expect("bp write");
+                        }
+                        if let Some(w) = &g.writer {
+                            w.put_step(frame);
+                        }
+                    }
+                }
+                for g in &slice {
+                    if let Some(w) = &g.writer {
+                        waits += w.writer_waits();
+                        w.close();
+                    }
+                }
+                (events, bp.bytes_written(), waits)
+            })
+            .context("spawning generator worker")?;
+        gen_joins.push(join);
+    }
+
+    // ---- AD workers (Chimbuko mode) ---------------------------------------
+    struct AdWorkerOut {
+        execs: u64,
+        anomalies: u64,
+        kept: u64,
+        ad_seconds: f64,
+        latency: RunStats,
+        reduced_bytes: u64,
+        errors: StackErrors,
+    }
+    let mut ad_joins = Vec::new();
+    if mode == Mode::TauChimbuko {
+        for (wi, mut slice) in ad_slices.into_iter().enumerate() {
+            let client: PsClient = ps_client.clone().unwrap();
+            let dir = out_dir.clone();
+            let regs = workflow.registries.clone();
+            let ps_period = cfg.ps_period_steps;
+            let join = std::thread::Builder::new()
+                .name(format!("chimbuko-ad-{wi}"))
+                .spawn(move || {
+                    let mut db = match &dir {
+                        Some(d) => ProvDb::create(d).expect("prov dir"),
+                        None => ProvDb::in_memory(),
+                    };
+                    let mut out = AdWorkerOut {
+                        execs: 0,
+                        anomalies: 0,
+                        kept: 0,
+                        ad_seconds: 0.0,
+                        latency: RunStats::new(),
+                        reduced_bytes: 0,
+                        errors: StackErrors::default(),
+                    };
+                    for step in 0..steps as u64 {
+                        for r in slice.iter_mut() {
+                            let frame = match r.reader.begin_step() {
+                                StepStatus::Ok(f) => f,
+                                StepStatus::EndOfStream => continue,
+                                StepStatus::NotReady => unreachable!(),
+                            };
+                            let span = frame.span().unwrap_or((0, 0));
+                            let res = r.ad.process_step(&frame);
+                            out.execs += res.n_executions;
+                            out.anomalies += res.n_anomalies;
+                            out.kept += res.kept.len() as u64;
+                            out.ad_seconds += res.proc_seconds;
+                            out.latency.push(res.proc_seconds);
+                            if !res.kept.is_empty() {
+                                db.append_step(&res.kept, &regs[r.app as usize])
+                                    .expect("prov append");
+                            }
+                            client.report(ps::step_stat_of(&res, span));
+                            if step % ps_period as u64 == ps_period as u64 - 1 {
+                                let delta = r.ad.take_pending();
+                                let (global, events) = client.sync(r.app, r.rank, &delta);
+                                r.ad.adopt_global(&global);
+                                if !events.is_empty() {
+                                    // §V: globally detected event — dump
+                                    // this rank's context window too.
+                                    let dump = r.ad.dump_window();
+                                    out.kept += dump.len() as u64;
+                                    if !dump.is_empty() {
+                                        db.append_step(&dump, &regs[r.app as usize])
+                                            .expect("prov append");
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    // Drain any remaining steps (generator may be ahead on
+                    // ranks this worker saw EndOfStream for early).
+                    for r in slice.iter_mut() {
+                        while let StepStatus::Ok(frame) = r.reader.begin_step() {
+                            let span = frame.span().unwrap_or((0, 0));
+                            let res = r.ad.process_step(&frame);
+                            out.execs += res.n_executions;
+                            out.anomalies += res.n_anomalies;
+                            out.kept += res.kept.len() as u64;
+                            out.ad_seconds += res.proc_seconds;
+                            if !res.kept.is_empty() {
+                                db.append_step(&res.kept, &regs[r.app as usize])
+                                    .expect("prov append");
+                            }
+                            client.report(ps::step_stat_of(&res, span));
+                        }
+                        out.errors.unmatched_exit += r.ad.stack_errors().unmatched_exit;
+                        out.errors.time_regression += r.ad.stack_errors().time_regression;
+                        out.errors.orphan_comm += r.ad.stack_errors().orphan_comm;
+                    }
+                    db.flush().expect("prov flush");
+                    out.reduced_bytes = db.bytes_written();
+                    out
+                })
+                .context("spawning AD worker")?;
+            ad_joins.push(join);
+        }
+    }
+
+    // ---- Join -------------------------------------------------------------
+    let mut total_events = 0u64;
+    let mut bp_bytes = 0u64;
+    let mut writer_waits = 0u64;
+    for j in gen_joins {
+        let (ev, bp, waits) = j.join().expect("generator worker panicked");
+        total_events += ev;
+        bp_bytes += bp;
+        writer_waits += waits;
+    }
+    let mut execs = 0u64;
+    let mut anomalies = 0u64;
+    let mut kept = 0u64;
+    let mut ad_seconds = 0.0f64;
+    let mut latency = RunStats::new();
+    let mut reduced_bytes = 0u64;
+    let mut errors = StackErrors::default();
+    for j in ad_joins {
+        let o = j.join().expect("AD worker panicked");
+        execs += o.execs;
+        anomalies += o.anomalies;
+        kept += o.kept;
+        ad_seconds += o.ad_seconds;
+        latency.merge(&o.latency);
+        reduced_bytes += o.reduced_bytes;
+        errors.unmatched_exit += o.errors.unmatched_exit;
+        errors.time_regression += o.errors.time_regression;
+        errors.orphan_comm += o.errors.orphan_comm;
+    }
+
+    // Shut the PS down and collect snapshots.
+    let (snapshot, snapshots) = match (ps_client, ps_handle) {
+        (Some(c), Some(h)) => {
+            c.shutdown();
+            let ps = h.join().expect("ps thread panicked");
+            let snap = ps.snapshot();
+            drop(c);
+            (snap, ())
+        }
+        _ => (VizSnapshot::default(), ()),
+    };
+    let _ = snapshots;
+    let snapshots = viz_collector.join().expect("viz collector panicked");
+
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(RunReport {
+        mode: mode.name(),
+        ranks: cfg.ranks,
+        steps,
+        wall_seconds: wall,
+        total_events,
+        total_execs: execs,
+        total_anomalies: anomalies,
+        total_kept: kept,
+        bp_bytes,
+        reduced_bytes,
+        ad_seconds,
+        ad_step_latency: latency,
+        stack_errors: errors,
+        writer_waits,
+        snapshot,
+        snapshots,
+        out_dir,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> Config {
+        Config {
+            ranks: 8,
+            apps: 2,
+            steps: 12,
+            calls_per_step: 130,
+            out_dir: String::new(), // in-memory provenance
+            viz_enabled: true,
+            ..Config::default()
+        }
+    }
+
+    #[test]
+    fn app_only_generates_events() {
+        let cfg = small_cfg();
+        let w = Workflow::nwchem(&cfg);
+        let r = run(&cfg, &w, Mode::AppOnly).unwrap();
+        assert!(r.total_events > 1000);
+        assert_eq!(r.total_execs, 0);
+        assert_eq!(r.bp_bytes, 0);
+        assert_eq!(r.reduced_bytes, 0);
+    }
+
+    #[test]
+    fn tau_mode_counts_bp_bytes() {
+        let cfg = small_cfg();
+        let w = Workflow::nwchem(&cfg);
+        let r = run(&cfg, &w, Mode::Tau).unwrap();
+        assert!(r.bp_bytes > 10_000);
+        // ~14–26 B/event.
+        let per_event = r.bp_bytes as f64 / r.total_events as f64;
+        assert!(per_event > 10.0 && per_event < 30.0);
+    }
+
+    #[test]
+    fn chimbuko_mode_full_pipeline() {
+        let cfg = small_cfg();
+        let w = Workflow::nwchem(&cfg);
+        let r = run(&cfg, &w, Mode::TauChimbuko).unwrap();
+        assert!(r.total_execs > 1000, "execs {}", r.total_execs);
+        assert!(r.total_anomalies > 0, "no anomalies detected");
+        assert!(r.total_kept >= r.total_anomalies);
+        assert!(r.reduced_bytes > 0);
+        assert_eq!(r.stack_errors, StackErrors::default());
+        // The dashboard saw every rank.
+        assert_eq!(r.snapshot.ranks.len(), cfg.ranks);
+        assert_eq!(r.snapshot.total_executions, r.total_execs);
+        assert_eq!(r.snapshot.total_anomalies, r.total_anomalies);
+        assert!(!r.snapshots.is_empty());
+    }
+
+    #[test]
+    fn chimbuko_reduction_vs_tau_baseline() {
+        let cfg = small_cfg();
+        let w = Workflow::nwchem(&cfg);
+        let tau = run(&cfg, &w, Mode::Tau).unwrap();
+        let chi = run(&cfg, &w, Mode::TauChimbuko).unwrap();
+        let factor = RunReport::reduction_factor(tau.bp_bytes, chi.reduced_bytes);
+        assert!(factor > 2.0, "reduction factor {factor}");
+        // Same workload generated in both modes (same seed).
+        assert_eq!(tau.total_events, chi.total_events);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = small_cfg();
+        let w = Workflow::nwchem(&cfg);
+        let a = run(&cfg, &w, Mode::TauChimbuko).unwrap();
+        let b = run(&cfg, &w, Mode::TauChimbuko).unwrap();
+        assert_eq!(a.total_events, b.total_events);
+        assert_eq!(a.total_execs, b.total_execs);
+        assert_eq!(a.total_anomalies, b.total_anomalies);
+        assert_eq!(a.total_kept, b.total_kept);
+    }
+
+    #[test]
+    fn disk_provenance_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("chimbuko-run-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cfg = small_cfg();
+        cfg.out_dir = dir.to_str().unwrap().to_string();
+        let w = Workflow::nwchem(&cfg);
+        let r = run(&cfg, &w, Mode::TauChimbuko).unwrap();
+        assert!(dir.join("metadata.json").exists());
+        let db = ProvDb::load(&dir).unwrap();
+        assert_eq!(db.len() as u64, r.total_kept);
+        assert_eq!(db.anomaly_count(), r.total_anomalies);
+        let meta = ProvDb::load_metadata(&dir).unwrap();
+        assert!(meta.get("config").is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

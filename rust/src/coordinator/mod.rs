@@ -1,0 +1,12 @@
+//! The Chimbuko coordinator (paper §II): workflow topology, the online
+//! pipeline driver and the overhead-measurement harness.
+
+pub mod driver;
+pub mod offline;
+pub mod overhead;
+pub mod workflow;
+
+pub use driver::{run, Mode, RunReport};
+pub use offline::{analyze_bp, OfflineReport};
+pub use overhead::{measure_scale, overhead_pct, sweep, OverheadRow};
+pub use workflow::{RankAssignment, Workflow};

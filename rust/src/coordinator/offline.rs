@@ -1,0 +1,241 @@
+//! Offline mode (paper §II-B: "all Chimbuko components can be run both in
+//! on- and off-line modes, allowing users to reinvestigate and compare
+//! performance data across a number of runs").
+//!
+//! Re-analyzes a stored BP trace file post-hoc: frames are streamed off
+//! disk in file order through the same on-node AD modules, statistics,
+//! provenance and summary machinery as the online pipeline — so an
+//! offline pass over a dumped trace produces byte-compatible provenance.
+
+use crate::ad::{DetectorConfig, HbosConfig, HbosDetector, OnNodeAd, RustDetector};
+use crate::config::{AdAlgorithm, Config};
+use crate::provenance::ProvDb;
+use crate::stats::RunStats;
+use crate::trace::binfmt;
+use crate::trace::nwchem::workflow_registries;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::BufReader;
+use std::path::Path;
+
+/// Result of an offline analysis pass.
+#[derive(Clone, Debug)]
+pub struct OfflineReport {
+    pub frames: u64,
+    pub events: u64,
+    pub execs: u64,
+    pub anomalies: u64,
+    pub kept: u64,
+    pub reduced_bytes: u64,
+    /// Per-(app, rank) anomaly totals.
+    pub per_rank: Vec<((u32, u32), u64)>,
+    /// Wall time of the analysis itself.
+    pub wall_seconds: f64,
+    /// Per-function anomaly runtime stats (top offenders view).
+    pub per_func_anoms: Vec<(String, u64, RunStats)>,
+}
+
+impl OfflineReport {
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "== Offline analysis ==\n\
+             frames {}  events {}  executions {}\n\
+             anomalies {} ({:.3}%)  kept {}  reduced {}\n\
+             analysis wall time {:.3}s ({:.0} events/s)\n",
+            self.frames,
+            self.events,
+            self.execs,
+            self.anomalies,
+            100.0 * self.anomalies as f64 / self.execs.max(1) as f64,
+            self.kept,
+            crate::util::fmt_bytes(self.reduced_bytes),
+            self.wall_seconds,
+            self.events as f64 / self.wall_seconds.max(1e-9),
+        );
+        out.push_str("top anomalous functions:\n");
+        for (func, n, st) in self.per_func_anoms.iter().take(8) {
+            out.push_str(&format!(
+                "   {:<16} {:>6} anomalies, mean {:.0}µs max {:.0}µs\n",
+                func,
+                n,
+                st.mean(),
+                st.max()
+            ));
+        }
+        out
+    }
+}
+
+/// Analyze a BP trace file with the configured detector; optionally write
+/// provenance to `cfg.out_dir`.
+pub fn analyze_bp(path: &Path, cfg: &Config) -> Result<OfflineReport> {
+    let t0 = std::time::Instant::now();
+    let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut reader = BufReader::new(file);
+
+    let registries = workflow_registries();
+    let mut db = if cfg.out_dir.is_empty() {
+        ProvDb::in_memory()
+    } else {
+        ProvDb::create(Path::new(&cfg.out_dir))?
+    };
+
+    let mut modules: HashMap<(u32, u32), OnNodeAd> = HashMap::new();
+    let mut frames = 0u64;
+    let mut events = 0u64;
+    let mut execs = 0u64;
+    let mut anomalies = 0u64;
+    let mut kept = 0u64;
+    let mut per_func: HashMap<String, (u64, RunStats)> = HashMap::new();
+
+    while let Some(frame) = binfmt::read_frame(&mut reader)? {
+        frames += 1;
+        events += frame.events.len() as u64;
+        let key = (frame.app, frame.rank);
+        let ad = modules.entry(key).or_insert_with(|| {
+            let engine: Box<dyn crate::ad::DetectEngine> = match cfg.algorithm {
+                AdAlgorithm::Threshold => Box::new(RustDetector::new(DetectorConfig {
+                    alpha: cfg.alpha,
+                    min_samples: DetectorConfig::default().min_samples,
+                })),
+                AdAlgorithm::Hbos => Box::new(HbosDetector::new(HbosConfig::default())),
+            };
+            OnNodeAd::new(frame.app, frame.rank, cfg.k_neighbors, engine)
+        });
+        let res = ad.process_step(&frame);
+        execs += res.n_executions;
+        anomalies += res.n_anomalies;
+        kept += res.kept.len() as u64;
+        if !res.kept.is_empty() {
+            let reg = &registries[frame.app.min(registries.len() as u32 - 1) as usize];
+            for l in &res.kept {
+                if l.label.is_anomaly() {
+                    let e = per_func
+                        .entry(reg.name(l.rec.fid).to_string())
+                        .or_insert_with(|| (0, RunStats::new()));
+                    e.0 += 1;
+                    e.1.push(l.rec.inclusive_us() as f64);
+                }
+            }
+            db.append_step(&res.kept, reg)?;
+        }
+    }
+    db.flush()?;
+
+    let mut per_rank: Vec<((u32, u32), u64)> = modules
+        .iter()
+        .map(|(k, m)| (*k, m.totals().1))
+        .collect();
+    per_rank.sort();
+    let mut per_func_anoms: Vec<(String, u64, RunStats)> = per_func
+        .into_iter()
+        .map(|(f, (n, st))| (f, n, st))
+        .collect();
+    per_func_anoms.sort_by(|a, b| b.1.cmp(&a.1));
+
+    Ok(OfflineReport {
+        frames,
+        events,
+        execs,
+        anomalies,
+        kept,
+        reduced_bytes: db.bytes_written(),
+        per_rank,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        per_func_anoms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adios::BpWriter;
+    use crate::coordinator::Workflow;
+    use crate::trace::RankTracer;
+    use crate::util::rng::Rng;
+
+    fn write_trace(path: &Path, ranks: usize, steps: usize, seed: u64) {
+        let cfg = Config { ranks, apps: 1, steps, calls_per_step: 130, ..Config::default() };
+        let workflow = Workflow::nwchem(&cfg);
+        let mut writer = BpWriter::create(path).unwrap();
+        let mut rng = Rng::new(seed);
+        for a in &workflow.assignments {
+            let mut tracer = RankTracer::new(
+                workflow.grammars[a.app as usize].clone(),
+                a.app,
+                a.app_rank,
+                workflow.app_world(a.app),
+                false,
+                rng.fork(a.rank as u64),
+            );
+            for _ in 0..steps {
+                writer.put_step(&tracer.step()).unwrap();
+            }
+        }
+        writer.flush().unwrap();
+    }
+
+    #[test]
+    fn offline_analysis_of_dumped_trace() {
+        let dir = std::env::temp_dir().join(format!("chimbuko-off-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let bp = dir.join("trace.bp");
+        write_trace(&bp, 6, 30, 42);
+
+        let cfg = Config { out_dir: String::new(), ..Config::default() };
+        let rep = analyze_bp(&bp, &cfg).unwrap();
+        assert_eq!(rep.frames, 6 * 30);
+        assert!(rep.execs > 2000);
+        assert!(rep.anomalies > 0, "stored trace must contain anomalies");
+        assert!(rep.kept >= rep.anomalies);
+        assert!(!rep.per_func_anoms.is_empty());
+        let text = rep.render();
+        assert!(text.contains("Offline analysis"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn offline_deterministic_and_writes_provenance() {
+        let dir = std::env::temp_dir().join(format!("chimbuko-off2-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let bp = dir.join("trace.bp");
+        write_trace(&bp, 4, 20, 7);
+
+        let out = dir.join("prov");
+        let cfg = Config {
+            out_dir: out.to_str().unwrap().to_string(),
+            ..Config::default()
+        };
+        let a = analyze_bp(&bp, &cfg).unwrap();
+        let loaded = ProvDb::load(&out).unwrap();
+        assert_eq!(loaded.len() as u64, a.kept);
+        assert_eq!(loaded.anomaly_count(), a.anomalies);
+
+        // Second pass over the same file gives identical results.
+        let cfg2 = Config { out_dir: String::new(), ..Config::default() };
+        let b = analyze_bp(&bp, &cfg2).unwrap();
+        assert_eq!(a.anomalies, b.anomalies);
+        assert_eq!(a.kept, b.kept);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn offline_with_hbos_algorithm() {
+        let dir = std::env::temp_dir().join(format!("chimbuko-off3-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let bp = dir.join("trace.bp");
+        write_trace(&bp, 4, 40, 9);
+        let cfg = Config {
+            algorithm: AdAlgorithm::Hbos,
+            out_dir: String::new(),
+            ..Config::default()
+        };
+        let rep = analyze_bp(&bp, &cfg).unwrap();
+        assert!(rep.execs > 1000);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

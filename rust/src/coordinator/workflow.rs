@@ -1,0 +1,155 @@
+//! Workflow topology: which application and grammar each simulated MPI
+//! rank runs. The paper's case study is a two-app workflow (NWChem MD
+//! simulation + in-situ analysis); we split the global rank space the same
+//! way — the bulk on the simulation, the rest on analysis.
+
+use crate::config::Config;
+use crate::trace::event::FuncRegistry;
+use crate::trace::gen::CallGrammar;
+use crate::trace::nwchem::{self, InjectionConfig};
+
+/// One rank's assignment.
+#[derive(Clone, Debug)]
+pub struct RankAssignment {
+    /// Global rank id (0-based over the whole workflow).
+    pub rank: u32,
+    /// Application index.
+    pub app: u32,
+    /// Rank within the application (used for anomaly-rank predicates).
+    pub app_rank: u32,
+}
+
+/// The resolved workflow: grammars + registries per app, rank assignments.
+pub struct Workflow {
+    pub grammars: Vec<CallGrammar>,
+    pub registries: Vec<FuncRegistry>,
+    pub assignments: Vec<RankAssignment>,
+    /// Injection configuration used (recorded in provenance metadata).
+    pub injection: InjectionConfig,
+}
+
+impl Workflow {
+    /// Build the NWChem-MD workflow from a config.
+    ///
+    /// App 0 (simulation) gets ⌈7/8⌉ of the ranks, app 1 (analysis) the
+    /// rest (≥ 1 when `apps == 2`). `calls_per_step` maps to root
+    /// iterations per step (one MD_NEWTON ≈ 26 function events filtered).
+    pub fn nwchem(cfg: &Config) -> Workflow {
+        Self::nwchem_with_injection(cfg, InjectionConfig::default())
+    }
+
+    /// Same, with explicit anomaly-injection rates (experiments use this).
+    pub fn nwchem_with_injection(cfg: &Config, injection: InjectionConfig) -> Workflow {
+        // ~26 filtered function events per MD_NEWTON iteration.
+        let iters = (cfg.calls_per_step / 26).max(1) as u32;
+        let (g_md, r_md) = nwchem::md_grammar(iters, &injection);
+        let (g_an, r_an) = nwchem::analysis_grammar(iters);
+
+        let mut assignments = Vec::with_capacity(cfg.ranks);
+        if cfg.apps <= 1 {
+            for rank in 0..cfg.ranks as u32 {
+                assignments.push(RankAssignment { rank, app: 0, app_rank: rank });
+            }
+        } else {
+            // App 1 gets every 8th rank (at least one).
+            let analysis_every = 8;
+            let mut app_rank = [0u32; 2];
+            for rank in 0..cfg.ranks as u32 {
+                let app = if cfg.ranks >= 2 && rank % analysis_every == analysis_every - 1 {
+                    1
+                } else {
+                    0
+                };
+                assignments.push(RankAssignment { rank, app, app_rank: app_rank[app as usize] });
+                app_rank[app as usize] += 1;
+            }
+            // Guarantee at least one analysis rank.
+            if app_rank[1] == 0 {
+                let last = assignments.last_mut().unwrap();
+                last.app = 1;
+                last.app_rank = 0;
+            }
+        }
+
+        Workflow {
+            grammars: vec![g_md, g_an],
+            registries: vec![r_md, r_an],
+            assignments,
+            injection,
+        }
+    }
+
+    /// Number of ranks assigned to `app`.
+    pub fn ranks_of_app(&self, app: u32) -> usize {
+        self.assignments.iter().filter(|a| a.app == app).count()
+    }
+
+    /// World size (ranks within the app — comm partners are app-local).
+    pub fn app_world(&self, app: u32) -> u32 {
+        self.ranks_of_app(app) as u32
+    }
+
+    /// Largest function table across apps (must fit artifact capacity).
+    pub fn max_funcs(&self) -> usize {
+        self.registries.iter().map(|r| r.len()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(ranks: usize, apps: usize) -> Config {
+        Config { ranks, apps, ..Config::default() }
+    }
+
+    #[test]
+    fn two_app_split_covers_all_ranks() {
+        let w = Workflow::nwchem(&cfg(64, 2));
+        assert_eq!(w.assignments.len(), 64);
+        assert_eq!(w.ranks_of_app(0) + w.ranks_of_app(1), 64);
+        assert!(w.ranks_of_app(1) >= 1);
+        assert!(w.ranks_of_app(0) > w.ranks_of_app(1));
+        // app_rank is dense per app.
+        for app in 0..2u32 {
+            let mut ids: Vec<u32> = w
+                .assignments
+                .iter()
+                .filter(|a| a.app == app)
+                .map(|a| a.app_rank)
+                .collect();
+            ids.sort();
+            assert_eq!(ids, (0..ids.len() as u32).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn single_app_gets_everything() {
+        let w = Workflow::nwchem(&cfg(8, 1));
+        assert_eq!(w.ranks_of_app(0), 8);
+        assert_eq!(w.ranks_of_app(1), 0);
+    }
+
+    #[test]
+    fn tiny_workflow_still_has_analysis_rank() {
+        let w = Workflow::nwchem(&cfg(2, 2));
+        assert_eq!(w.ranks_of_app(1), 1);
+    }
+
+    #[test]
+    fn function_capacity_fits_default_artifact() {
+        let w = Workflow::nwchem(&cfg(16, 2));
+        assert!(w.max_funcs() <= 64, "max funcs {}", w.max_funcs());
+    }
+
+    #[test]
+    fn iterations_scale_with_calls_per_step() {
+        let mut c = cfg(4, 1);
+        c.calls_per_step = 520;
+        let w = Workflow::nwchem(&c);
+        assert_eq!(w.grammars[0].iters_per_step, 20);
+        c.calls_per_step = 5;
+        let w = Workflow::nwchem(&c);
+        assert_eq!(w.grammars[0].iters_per_step, 1);
+    }
+}

@@ -1,0 +1,219 @@
+//! **Fig 7** — distributed vs. non-distributed AD modules.
+//!
+//! The paper compares (a) one AD instance ingesting *all* ranks' trace
+//! data (exact global statistics, runtime grows with ranks) against (b)
+//! per-rank AD instances syncing local statistics through the parameter
+//! server (runtime flat, accuracy within a few % of exact). We reproduce
+//! both over a rank sweep and report anomaly-set agreement + wall times.
+//!
+//! Agreement metric: Jaccard overlap of the anomalous `call_id` sets
+//! (the paper quotes "97.6% accuracy on average" without a formula;
+//! Jaccard is the strictest symmetric choice, so it under- rather than
+//! over-states reproduction quality).
+
+use crate::ad::{DetectEngine, DetectorConfig, ExecRecord, RustDetector, StackBuilder};
+use crate::bench::Table;
+use crate::ps;
+use crate::stats::RunStats;
+use crate::trace::nwchem::{self, InjectionConfig};
+use crate::trace::RankTracer;
+use crate::util::rng::Rng;
+use std::collections::HashSet;
+use std::time::Instant;
+
+/// One scale point of the sweep.
+#[derive(Clone, Debug)]
+pub struct Fig7Row {
+    pub ranks: usize,
+    /// Anomaly-set Jaccard overlap (distributed vs single), in [0, 1].
+    pub accuracy: f64,
+    /// Wall seconds: the single instance processing all ranks' data.
+    pub t_single: f64,
+    /// Wall seconds: slowest per-rank distributed instance (they run in
+    /// parallel, so the max is the critical path).
+    pub t_distributed_max: f64,
+    /// Mean per-rank distributed time.
+    pub t_distributed_mean: f64,
+    pub anomalies_single: u64,
+    pub anomalies_distributed: u64,
+}
+
+/// Full experiment result.
+#[derive(Clone, Debug)]
+pub struct Fig7Result {
+    pub rows: Vec<Fig7Row>,
+}
+
+impl Fig7Result {
+    pub fn mean_accuracy(&self) -> f64 {
+        crate::util::mean(&self.rows.iter().map(|r| r.accuracy).collect::<Vec<_>>())
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "Fig 7 — distributed vs non-distributed AD",
+            &[
+                "# ranks",
+                "accuracy",
+                "t_single(s)",
+                "t_dist_max(s)",
+                "t_dist_mean(s)",
+                "anoms(single)",
+                "anoms(dist)",
+            ],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                r.ranks.to_string(),
+                format!("{:.1}%", r.accuracy * 100.0),
+                format!("{:.4}", r.t_single),
+                format!("{:.4}", r.t_distributed_max),
+                format!("{:.4}", r.t_distributed_mean),
+                r.anomalies_single.to_string(),
+                r.anomalies_distributed.to_string(),
+            ]);
+        }
+        format!(
+            "{}\nmean accuracy over scales: {:.1}% (paper: 97.6%)\n",
+            t.render(),
+            self.mean_accuracy() * 100.0
+        )
+    }
+}
+
+/// Per-rank record streams for one synthetic run.
+fn generate_streams(
+    ranks: usize,
+    steps: usize,
+    iters_per_step: u32,
+    seed: u64,
+) -> Vec<Vec<Vec<ExecRecord>>> {
+    // streams[rank][step] = completed executions.
+    let inj = InjectionConfig {
+        forces_delay_prob: 0.01,
+        rank0_straggle_prob: 0.05,
+        getxbl_tail_prob: 0.02,
+    };
+    let (grammar, _) = nwchem::md_grammar(iters_per_step, &inj);
+    let mut root = Rng::new(seed);
+    (0..ranks)
+        .map(|rank| {
+            let mut tracer = RankTracer::new(
+                grammar.clone(),
+                0,
+                rank as u32,
+                ranks as u32,
+                false,
+                root.fork(rank as u64),
+            );
+            let mut sb = StackBuilder::new(0, rank as u32);
+            (0..steps).map(|_| sb.process(&tracer.step())).collect()
+        })
+        .collect()
+}
+
+fn anomaly_ids(labels: &[crate::ad::Labeled], rank: u32) -> HashSet<(u32, u64)> {
+    labels
+        .iter()
+        .filter(|l| l.label.is_anomaly())
+        .map(|l| (rank, l.rec.call_id))
+        .collect()
+}
+
+/// Run the sweep. `steps`/`iters_per_step` size the per-rank event volume.
+pub fn run_fig7(scales: &[usize], steps: usize, iters_per_step: u32, seed: u64) -> Fig7Result {
+    let cfg = DetectorConfig { alpha: 6.0, min_samples: 10 };
+    let mut rows = Vec::new();
+    for &ranks in scales {
+        let streams = generate_streams(ranks, steps, iters_per_step, seed);
+
+        // --- Non-distributed: one detector sees everything, step-major
+        // (exactly what a single AD instance receiving all streams does).
+        let t0 = Instant::now();
+        let mut single = RustDetector::new(cfg);
+        let mut single_anoms: HashSet<(u32, u64)> = HashSet::new();
+        for step in 0..steps {
+            for (rank, stream) in streams.iter().enumerate() {
+                let labeled = DetectEngine::detect(&mut single, stream[step].clone());
+                single_anoms.extend(anomaly_ids(&labeled, rank as u32));
+            }
+        }
+        let t_single = t0.elapsed().as_secs_f64();
+
+        // --- Distributed: per-rank detectors + parameter server sync.
+        let (client, ps_handle) = ps::spawn(None, usize::MAX >> 1);
+        let mut detectors: Vec<RustDetector> =
+            (0..ranks).map(|_| RustDetector::new(cfg)).collect();
+        let mut dist_anoms: HashSet<(u32, u64)> = HashSet::new();
+        let mut per_rank_secs = vec![0.0f64; ranks];
+        for step in 0..steps {
+            for (rank, stream) in streams.iter().enumerate() {
+                let t = Instant::now();
+                let labeled =
+                    DetectEngine::detect(&mut detectors[rank], stream[step].clone());
+                dist_anoms.extend(anomaly_ids(&labeled, rank as u32));
+                let delta = detectors[rank].take_pending();
+                let (global, _events) = client.sync(0, rank as u32, &delta);
+                detectors[rank].adopt_global(&global);
+                per_rank_secs[rank] += t.elapsed().as_secs_f64();
+            }
+        }
+        client.shutdown();
+        ps_handle.join().expect("ps thread");
+
+        let inter = single_anoms.intersection(&dist_anoms).count() as f64;
+        let union = single_anoms.union(&dist_anoms).count() as f64;
+        let accuracy = if union == 0.0 { 1.0 } else { inter / union };
+        let t_max = per_rank_secs.iter().cloned().fold(0.0, f64::max);
+        let mut dist_stats = RunStats::new();
+        for &s in &per_rank_secs {
+            dist_stats.push(s);
+        }
+        rows.push(Fig7Row {
+            ranks,
+            accuracy,
+            t_single,
+            t_distributed_max: t_max,
+            t_distributed_mean: dist_stats.mean(),
+            anomalies_single: single_anoms.len() as u64,
+            anomalies_distributed: dist_anoms.len() as u64,
+        });
+    }
+    Fig7Result { rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distributed_matches_single_closely_and_is_faster_per_instance() {
+        let res = run_fig7(&[10, 20], 12, 3, 99);
+        assert_eq!(res.rows.len(), 2);
+        for row in &res.rows {
+            assert!(row.anomalies_single > 0, "no anomalies at {} ranks", row.ranks);
+            assert!(
+                row.accuracy > 0.8,
+                "accuracy {} at {} ranks",
+                row.accuracy,
+                row.ranks
+            );
+            // The per-instance distributed cost must be well under the
+            // single-instance cost (which scales with total data).
+            assert!(
+                row.t_distributed_max < row.t_single,
+                "dist max {} vs single {}",
+                row.t_distributed_max,
+                row.t_single
+            );
+        }
+        // Single-instance time grows with rank count…
+        assert!(res.rows[1].t_single > res.rows[0].t_single * 1.3);
+        // …distributed per-instance time stays roughly flat (≤ 2.5×).
+        let flat = res.rows[1].t_distributed_mean / res.rows[0].t_distributed_mean.max(1e-9);
+        assert!(flat < 2.5, "distributed time grew {flat}x");
+        let text = res.render();
+        assert!(text.contains("Fig 7"));
+        assert!(text.contains("97.6%"));
+    }
+}

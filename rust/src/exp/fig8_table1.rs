@@ -1,0 +1,94 @@
+//! **Fig 8 + Table I** — workflow execution time and tracing/analysis
+//! overhead over MPI-process scales.
+//!
+//! Wraps [`coordinator::overhead::sweep`]: for each scale we run the same
+//! virtual workload in the three modes and apply the paper's Eq. (1).
+//! Absolute seconds are testbed-local; the *shape* targets are (a) small
+//! overhead at low rank counts, (b) growth once simulated ranks exceed
+//! physical cores (the paper's knee near 1000 ranks on Summit nodes),
+//! (c) "with Chimbuko" ≥ "without Chimbuko" by a few points.
+
+use crate::bench::Table;
+use crate::config::Config;
+use crate::coordinator::{sweep, OverheadRow};
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct Fig8Result {
+    pub rows: Vec<OverheadRow>,
+}
+
+impl Fig8Result {
+    pub fn render(&self) -> String {
+        let mut fig8 = Table::new(
+            "Fig 8 — workflow execution time (seconds, this testbed)",
+            &["# MPI", "app only", "app+TAU", "app+TAU+Chimbuko"],
+        );
+        for r in &self.rows {
+            fig8.row(vec![
+                r.ranks.to_string(),
+                format!("{:.3}", r.t_app),
+                format!("{:.3}", r.t_tau),
+                format!("{:.3}", r.t_chimbuko),
+            ]);
+        }
+        let mut t1 = Table::new(
+            "Table I — overhead over app execution time (%)",
+            &["# MPI", "without Chimbuko", "with Chimbuko"],
+        );
+        for r in &self.rows {
+            t1.row(vec![
+                r.ranks.to_string(),
+                format!("{:.2}", r.overhead_tau_pct),
+                format!("{:.2}", r.overhead_chimbuko_pct),
+            ]);
+        }
+        format!(
+            "{}\n{}\npaper Table I: without 1.85→18.27%, with 1.31→24.56% over 80→2560 ranks\n",
+            fig8.render(),
+            t1.render()
+        )
+    }
+}
+
+/// Run the sweep with a workload sized for the experiment budget.
+///
+/// `app_work_ms_total` simulates the strong-scaled application compute
+/// (fixed problem size): per-rank work shrinks as ranks grow while the
+/// per-rank trace rate stays constant — the mechanism behind the paper's
+/// overhead growth toward 2560 ranks.
+pub fn run_fig8(
+    scales: &[usize],
+    steps: usize,
+    calls_per_step: usize,
+    repeats: usize,
+    app_work_ms_total: u64,
+) -> Result<Fig8Result> {
+    let base = Config {
+        steps,
+        calls_per_step,
+        out_dir: String::new(), // in-memory reduced output
+        viz_enabled: false,
+        app_work_ms_total,
+        ..Config::default()
+    };
+    Ok(Fig8Result { rows: sweep(&base, scales, repeats)? })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_sweep_has_sane_shape() {
+        let res = run_fig8(&[2, 8], 5, 60, 1, 200).unwrap();
+        assert_eq!(res.rows.len(), 2);
+        for r in &res.rows {
+            assert!(r.t_app > 0.0);
+            assert!(r.t_chimbuko > 0.0);
+        }
+        let text = res.render();
+        assert!(text.contains("Table I"));
+        assert!(text.contains("Fig 8"));
+    }
+}

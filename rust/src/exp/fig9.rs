@@ -1,0 +1,151 @@
+//! **Fig 9** — trace data size over MPI processes, and the §VI-B headline
+//! reduction factors.
+//!
+//! Four byte counts per scale, exactly the paper's four series:
+//!
+//! * raw/unfiltered BP dump (all functions incl. high-frequency helpers);
+//! * filtered BP dump (paper's instrumentation filtering);
+//! * Chimbuko-reduced JSON from the unfiltered stream;
+//! * Chimbuko-reduced JSON from the filtered stream.
+//!
+//! Paper anchors: 2300 GB → 15.5 GB (×148 unfiltered) and 117.5 GB →
+//! 5.5 GB (×21 filtered) at 2560 ranks; ×95/×14 averages. We reproduce the
+//! *ratios* (absolute GB scale with steps × calls_per_step).
+
+use crate::bench::Table;
+use crate::config::{Config, TraceEngine};
+use crate::coordinator::{run, Mode, RunReport, Workflow};
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct Fig9Row {
+    pub ranks: usize,
+    pub raw_bytes: u64,
+    pub filtered_bytes: u64,
+    pub reduced_from_raw_bytes: u64,
+    pub reduced_from_filtered_bytes: u64,
+}
+
+impl Fig9Row {
+    pub fn factor_unfiltered(&self) -> f64 {
+        RunReport::reduction_factor(self.raw_bytes, self.reduced_from_raw_bytes)
+    }
+
+    pub fn factor_filtered(&self) -> f64 {
+        RunReport::reduction_factor(self.filtered_bytes, self.reduced_from_filtered_bytes)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Fig9Result {
+    pub rows: Vec<Fig9Row>,
+}
+
+impl Fig9Result {
+    pub fn mean_factor_unfiltered(&self) -> f64 {
+        crate::util::mean(&self.rows.iter().map(|r| r.factor_unfiltered()).collect::<Vec<_>>())
+    }
+
+    pub fn mean_factor_filtered(&self) -> f64 {
+        crate::util::mean(&self.rows.iter().map(|r| r.factor_filtered()).collect::<Vec<_>>())
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "Fig 9 — trace data size over MPI processes",
+            &[
+                "# MPI",
+                "raw (BP)",
+                "filtered (BP)",
+                "reduced(raw)",
+                "reduced(filt)",
+                "×raw",
+                "×filt",
+            ],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                r.ranks.to_string(),
+                crate::util::fmt_bytes(r.raw_bytes),
+                crate::util::fmt_bytes(r.filtered_bytes),
+                crate::util::fmt_bytes(r.reduced_from_raw_bytes),
+                crate::util::fmt_bytes(r.reduced_from_filtered_bytes),
+                format!("{:.0}", r.factor_unfiltered()),
+                format!("{:.0}", r.factor_filtered()),
+            ]);
+        }
+        format!(
+            "{}\nmean reduction: ×{:.0} unfiltered / ×{:.0} filtered \
+             (paper: ×95 avg, ×148 peak unfiltered; ×14 avg, ×21 peak filtered)\n",
+            t.render(),
+            self.mean_factor_unfiltered(),
+            self.mean_factor_filtered()
+        )
+    }
+}
+
+/// Measure one scale point (two BP runs + two Chimbuko runs).
+pub fn measure_scale(base: &Config, ranks: usize) -> Result<Fig9Row> {
+    let mut cfg = base.clone();
+    cfg.ranks = ranks;
+    cfg.engine = TraceEngine::Bp;
+    cfg.out_dir = String::new(); // byte counting, no disk
+
+    // Unfiltered (raw) BP + reduced.
+    cfg.filtered = false;
+    let w = Workflow::nwchem(&cfg);
+    let raw = run(&cfg, &w, Mode::Tau)?;
+    let reduced_raw = run(&cfg, &w, Mode::TauChimbuko)?;
+
+    // Filtered BP + reduced.
+    cfg.filtered = true;
+    let w = Workflow::nwchem(&cfg);
+    let filtered = run(&cfg, &w, Mode::Tau)?;
+    let reduced_filtered = run(&cfg, &w, Mode::TauChimbuko)?;
+
+    Ok(Fig9Row {
+        ranks,
+        raw_bytes: raw.bp_bytes,
+        filtered_bytes: filtered.bp_bytes,
+        reduced_from_raw_bytes: reduced_raw.reduced_bytes,
+        reduced_from_filtered_bytes: reduced_filtered.reduced_bytes,
+    })
+}
+
+pub fn run_fig9(scales: &[usize], steps: usize, calls_per_step: usize) -> Result<Fig9Result> {
+    let base = Config {
+        steps,
+        calls_per_step,
+        viz_enabled: false,
+        ..Config::default()
+    };
+    let mut rows = Vec::new();
+    for &ranks in scales {
+        rows.push(measure_scale(&base, ranks)?);
+    }
+    Ok(Fig9Result { rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduction_factors_have_paper_shape() {
+        let res = run_fig9(&[8], 15, 130).unwrap();
+        let row = &res.rows[0];
+        // Raw ≫ filtered (instrumentation filtering ~10–25×).
+        let filter_ratio = row.raw_bytes as f64 / row.filtered_bytes as f64;
+        assert!(filter_ratio > 4.0, "filter ratio {filter_ratio}");
+        // Chimbuko reduces both streams heavily.
+        assert!(row.factor_filtered() > 3.0, "filtered factor {}", row.factor_filtered());
+        assert!(
+            row.factor_unfiltered() > row.factor_filtered(),
+            "unfiltered {} vs filtered {}",
+            row.factor_unfiltered(),
+            row.factor_filtered()
+        );
+        let text = res.render();
+        assert!(text.contains("Fig 9"));
+    }
+}

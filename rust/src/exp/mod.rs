@@ -1,0 +1,17 @@
+//! Paper experiments: one module per table/figure of the evaluation
+//! (§VI), each exposing a `run_*` function returning a structured result
+//! with a `render()` for the paper-style table/series. The `cargo bench`
+//! targets and the `chimbuko exp` CLI both call into here, so benches,
+//! CLI and tests exercise identical code.
+
+pub mod case_study;
+pub mod fig7;
+pub mod fig8_table1;
+pub mod fig9;
+pub mod figs3_6;
+
+pub use case_study::{run_case_study, CaseStudyResult};
+pub use fig7::{run_fig7, Fig7Result};
+pub use fig8_table1::{run_fig8, Fig8Result};
+pub use fig9::{run_fig9, Fig9Result};
+pub use figs3_6::{run_figs3_6, VizFiguresResult};

@@ -1,0 +1,54 @@
+//! # Chimbuko — workflow-level scalable performance trace analysis
+//!
+//! Reproduction of *"Chimbuko: A Workflow-Level Scalable Performance Trace
+//! Analysis Tool"* (2020) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the Chimbuko coordination architecture:
+//!   per-rank trace streams (an ADIOS2-SST-like step engine), on-node
+//!   anomaly-detection modules, a barrier-free parameter server, a
+//!   prescriptive-provenance store, and a visualization backend.
+//! * **Layer 2 (JAX, build time)** — the anomaly-detection compute graph
+//!   (`python/compile/model.py`), AOT-lowered to HLO text.
+//! * **Layer 1 (Pallas, build time)** — the segment-statistics hot-spot
+//!   kernel (`python/compile/kernels/anomaly.py`), lowered inside the L2
+//!   graph; loaded and executed from Rust via PJRT (`runtime`).
+//!
+//! Python never runs on the analysis path; `make artifacts` produces
+//! `artifacts/*.hlo.txt` once and the Rust binary is self-contained.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`trace`] | event model + synthetic NWChem-MD workload generator |
+//! | [`adios`] | step-based streaming substrate (SST-like + BP file engine) |
+//! | [`stats`] | streaming moments with Pébay pairwise merging |
+//! | [`ad`] | call-stack building + anomaly detection (Rust and XLA paths) |
+//! | [`ps`] | the online AD parameter server |
+//! | [`provenance`] | prescriptive provenance records, store and queries |
+//! | [`viz`] | visualization backend (HTTP API + terminal renderings) |
+//! | [`runtime`] | PJRT artifact loading and the XLA service thread |
+//! | [`coordinator`] | workflow topology + online/offline drivers |
+//! | [`bench`] | criterion-lite measurement harness used by `cargo bench` |
+//! | [`util`] | json / rng / logging / property-test substrates |
+
+pub mod adios;
+pub mod ad;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod exp;
+pub mod provenance;
+pub mod ps;
+pub mod runtime;
+pub mod stats;
+pub mod trace;
+pub mod util;
+pub mod viz;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Version string reported by the CLI and the viz server.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,343 @@
+//! `chimbuko` — CLI for the workflow-level trace-analysis pipeline.
+//!
+//! ```text
+//! chimbuko run      [--config f] [--ranks N] [--steps N] [--backend rust|xla]
+//!                   [--out dir] [--unfiltered] [--serve]
+//! chimbuko gen      [--ranks N] [--steps N] [--out trace.bp] [--unfiltered]
+//! chimbuko replay   --dir <out_dir>        re-index a stored run, print stats
+//! chimbuko serve    --dir <out_dir> [--addr host:port]   viz server over a run
+//! chimbuko exp      <fig7|fig8|fig9|viz|case> [--fast]    paper experiments
+//! chimbuko compare  --a <dir> --b <dir>    cross-run provenance mining
+//! chimbuko ps-server [--addr host:port]    standalone TCP parameter server
+//! chimbuko analyze  --bp trace.bp [--out dir] [--algorithm hbos]  offline re-analysis
+//! chimbuko version
+//! ```
+
+use chimbuko::cli::Args;
+use chimbuko::config::{Config, DetectorBackend};
+use chimbuko::coordinator::{run, Mode, Workflow};
+use chimbuko::provenance::ProvDb;
+use chimbuko::trace::RankTracer;
+use chimbuko::util::fmt_bytes;
+use chimbuko::viz::{http::VizServer, VizState};
+use std::path::Path;
+use std::sync::{Arc, RwLock};
+
+fn main() {
+    let args = Args::from_env(true);
+    let code = match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("gen") => cmd_gen(&args),
+        Some("replay") => cmd_replay(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("ps-server") => cmd_ps_server(&args),
+        Some("analyze") => cmd_analyze(&args),
+        Some("version") => {
+            println!("chimbuko {}", chimbuko::VERSION);
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "usage: chimbuko <run|gen|replay|serve|exp|version> [options]\n\
+                 see `rust/src/main.rs` header or README for options"
+            );
+            std::process::exit(2);
+        }
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e:#}");
+        1
+    });
+    std::process::exit(code);
+}
+
+/// Build a Config from `--config` + CLI overrides.
+fn config_of(args: &Args) -> anyhow::Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(Path::new(path))?,
+        None => Config::default(),
+    };
+    if let Some(v) = args.get("ranks") {
+        cfg.apply("ranks", v)?;
+    }
+    if let Some(v) = args.get("steps") {
+        cfg.apply("steps", v)?;
+    }
+    if let Some(v) = args.get("backend") {
+        cfg.apply("backend", v)?;
+    }
+    if let Some(v) = args.get("alpha") {
+        cfg.apply("alpha", v)?;
+    }
+    if let Some(v) = args.get("seed") {
+        cfg.apply("seed", v)?;
+    }
+    if let Some(v) = args.get("out") {
+        cfg.out_dir = v.to_string();
+    }
+    if let Some(v) = args.get("calls-per-step") {
+        cfg.apply("calls_per_step", v)?;
+    }
+    if args.flag("unfiltered") {
+        cfg.filtered = false;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_of(args)?;
+    let workflow = Workflow::nwchem(&cfg);
+    println!(
+        "chimbuko run: {} ranks ({} MD / {} analysis), {} steps, backend={}, {}",
+        cfg.ranks,
+        workflow.ranks_of_app(0),
+        workflow.ranks_of_app(1),
+        cfg.steps,
+        cfg.backend.name(),
+        if cfg.filtered { "filtered" } else { "unfiltered" },
+    );
+    if cfg.backend == DetectorBackend::Xla {
+        println!("  (AOT artifacts from {}/)", cfg.artifacts_dir);
+    }
+    let report = run(&cfg, &workflow, Mode::TauChimbuko)?;
+    println!("{}", report.to_json().to_pretty());
+    println!(
+        "\nsummary: {} events → {} executions, {} anomalies, {} kept ({} reduced output) in {:.2}s",
+        report.total_events,
+        report.total_execs,
+        report.total_anomalies,
+        report.total_kept,
+        fmt_bytes(report.reduced_bytes),
+        report.wall_seconds
+    );
+
+    if args.flag("serve") {
+        let dir = report
+            .out_dir
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("--serve needs --out <dir>"))?;
+        let db = ProvDb::load(&dir)?;
+        let state = VizState::from_run(
+            &report.snapshots,
+            report.snapshot.clone(),
+            db,
+            workflow.registries.clone(),
+        );
+        let server = VizServer::start(
+            &args.str_opt("addr", "127.0.0.1:8787"),
+            Arc::new(RwLock::new(state)),
+        )?;
+        println!("viz server on http://{} — Ctrl-C to stop", server.addr());
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_of(args)?;
+    let out = args.str_opt("out", "trace.bp");
+    let workflow = Workflow::nwchem(&cfg);
+    let mut writer = chimbuko::adios::BpWriter::create(Path::new(&out))?;
+    let mut rng = chimbuko::util::rng::Rng::new(cfg.seed);
+    for a in &workflow.assignments {
+        let mut tracer = RankTracer::new(
+            workflow.grammars[a.app as usize].clone(),
+            a.app,
+            a.app_rank,
+            workflow.app_world(a.app),
+            !cfg.filtered,
+            rng.fork(a.rank as u64),
+        );
+        for _ in 0..cfg.steps {
+            writer.put_step(&tracer.step())?;
+        }
+    }
+    writer.flush()?;
+    println!(
+        "wrote {} frames / {} events / {} to {}",
+        writer.frames_written(),
+        writer.events_written(),
+        fmt_bytes(writer.bytes_written()),
+        out
+    );
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> anyhow::Result<()> {
+    let dir = args
+        .get("dir")
+        .ok_or_else(|| anyhow::anyhow!("replay needs --dir <out_dir>"))?;
+    let db = ProvDb::load(Path::new(dir))?;
+    let meta = ProvDb::load_metadata(Path::new(dir)).ok();
+    println!(
+        "replayed {}: {} provenance records, {} anomalies, {}",
+        dir,
+        db.len(),
+        db.anomaly_count(),
+        fmt_bytes(db.bytes_written())
+    );
+    if let Some(m) = meta {
+        if let Some(run_id) = m.get("run_id").and_then(|v| v.as_str()) {
+            println!("run_id: {run_id}");
+        }
+    }
+    // Top anomalies.
+    let top = db.query(&chimbuko::provenance::ProvQuery {
+        anomalies_only: true,
+        order_by_score: true,
+        limit: Some(10),
+        ..Default::default()
+    });
+    println!("top anomalies:");
+    for r in top {
+        println!(
+            "  {:>8.1}σ  {:<16} rank {:>4} step {:>4}  {:>10}µs",
+            r.score, r.func, r.rank, r.step, r.inclusive_us
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let dir = args
+        .get("dir")
+        .ok_or_else(|| anyhow::anyhow!("serve needs --dir <out_dir>"))?;
+    let db = ProvDb::load(Path::new(dir))?;
+    // Registries from metadata are display-only; rebuild defaults.
+    let regs = chimbuko::trace::nwchem::workflow_registries();
+    let mut state = VizState::new(regs);
+    state.db = db;
+    let server = VizServer::start(
+        &args.str_opt("addr", "127.0.0.1:8787"),
+        Arc::new(RwLock::new(state)),
+    )?;
+    println!("viz server on http://{} — Ctrl-C to stop", server.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// Offline mode: re-analyze a stored BP trace (paper §II-B).
+fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
+    let bp = args.get("bp").ok_or_else(|| anyhow::anyhow!("analyze needs --bp <trace.bp>"))?;
+    let mut cfg = config_of(args)?;
+    if args.get("out").is_none() {
+        cfg.out_dir = String::new(); // in-memory unless asked
+    }
+    if let Some(a) = args.get("algorithm") {
+        cfg.apply("algorithm", a)?;
+    }
+    let rep = chimbuko::coordinator::analyze_bp(Path::new(bp), &cfg)?;
+    print!("{}", rep.render());
+    Ok(())
+}
+
+/// Standalone parameter server reachable over TCP (`ps::net` protocol) —
+/// the cross-process deployment shape of the paper's architecture.
+fn cmd_ps_server(args: &Args) -> anyhow::Result<()> {
+    let addr = args.str_opt("addr", "127.0.0.1:5559");
+    let (client, _handle) = chimbuko::ps::spawn(None, args.usize_opt("publish-every", 64));
+    let server = chimbuko::ps::net::PsTcpServer::start(&addr, client)?;
+    println!("parameter server on {} — Ctrl-C to stop", server.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_compare(args: &Args) -> anyhow::Result<()> {
+    let a = args.get("a").ok_or_else(|| anyhow::anyhow!("compare needs --a <dir>"))?;
+    let b = args.get("b").ok_or_else(|| anyhow::anyhow!("compare needs --b <dir>"))?;
+    let db_a = ProvDb::load(Path::new(a))?;
+    let db_b = ProvDb::load(Path::new(b))?;
+    let cmp = chimbuko::provenance::compare(a, &db_a, b, &db_b);
+    print!("{}", cmp.render());
+    if args.flag("json") {
+        println!("{}", cmp.to_json().to_pretty());
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    let which = args
+        .positionals()
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let fast = args.flag("fast");
+    let run_fig7 = || {
+        let scales: Vec<usize> = args
+            .u64_list("scales", &[10, 20, 40, 60, 80, 100])
+            .iter()
+            .map(|&x| x as usize)
+            .collect();
+        let steps = if fast { 10 } else { 20 };
+        let res = chimbuko::exp::run_fig7(&scales, steps, 4, args.u64_opt("seed", 7));
+        print!("{}", res.render());
+    };
+    let run_fig8 = || -> anyhow::Result<()> {
+        let scales: Vec<usize> = args
+            .u64_list("scales", if fast { &[8, 32] } else { &[80, 160, 320, 640, 1280, 2560] })
+            .iter()
+            .map(|&x| x as usize)
+            .collect();
+        let res = chimbuko::exp::run_fig8(
+            &scales,
+            if fast { 4 } else { 8 },
+            130,
+            if fast { 1 } else { 3 },
+            if fast { 500 } else { 2_000 },
+        )?;
+        print!("{}", res.render());
+        Ok(())
+    };
+    let run_fig9 = || -> anyhow::Result<()> {
+        let scales: Vec<usize> = args
+            .u64_list("scales", if fast { &[8, 16] } else { &[80, 160, 320, 640, 1280, 2560] })
+            .iter()
+            .map(|&x| x as usize)
+            .collect();
+        let res = chimbuko::exp::run_fig9(&scales, if fast { 8 } else { 15 }, 130)?;
+        print!("{}", res.render());
+        Ok(())
+    };
+    let run_viz = || -> anyhow::Result<()> {
+        let res = chimbuko::exp::run_figs3_6(
+            if fast { 16 } else { 64 },
+            if fast { 20 } else { 40 },
+            args.u64_opt("seed", 4242),
+        )?;
+        print!("{}", res.render());
+        Ok(())
+    };
+    let run_case = || -> anyhow::Result<()> {
+        let res = chimbuko::exp::run_case_study(
+            if fast { 8 } else { 16 },
+            if fast { 50 } else { 100 },
+            args.u64_opt("seed", 777),
+        )?;
+        print!("{}", res.render());
+        Ok(())
+    };
+    match which {
+        "fig7" => run_fig7(),
+        "fig8" | "table1" => run_fig8()?,
+        "fig9" => run_fig9()?,
+        "viz" | "figs3-6" => run_viz()?,
+        "case" | "figs10-13" => run_case()?,
+        "all" => {
+            run_fig7();
+            run_fig8()?;
+            run_fig9()?;
+            run_viz()?;
+            run_case()?;
+        }
+        other => anyhow::bail!("unknown experiment '{other}' (fig7|fig8|fig9|viz|case|all)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,250 @@
+//! Cross-run provenance comparison (paper §VI-A: "this information can be
+//! mined to discover how anomalous patterns depend on the workflow
+//! configuration" — the co-design use case).
+//!
+//! Compares two stored runs' prescriptive provenance: per-function anomaly
+//! profiles, per-rank-class distributions, and runtime-distribution shifts
+//! for functions present in both runs.
+
+use super::store::ProvDb;
+use super::ProvQuery;
+use crate::stats::RunStats;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One function's anomaly profile within a run.
+#[derive(Clone, Debug, Default)]
+pub struct FuncProfile {
+    pub anomalies: u64,
+    pub rank0_anomalies: u64,
+    /// Runtime stats over the *anomalous* executions.
+    pub anom_runtime: RunStats,
+    /// Runtime stats over kept normal executions (context records).
+    pub normal_runtime: RunStats,
+}
+
+/// A side-by-side comparison of two runs.
+#[derive(Clone, Debug)]
+pub struct RunComparison {
+    pub label_a: String,
+    pub label_b: String,
+    pub total_anomalies: (u64, u64),
+    pub per_func: BTreeMap<String, (FuncProfile, FuncProfile)>,
+}
+
+fn profile_of(db: &ProvDb) -> BTreeMap<String, FuncProfile> {
+    let mut out: BTreeMap<String, FuncProfile> = BTreeMap::new();
+    for rec in db.query(&ProvQuery::default()) {
+        let p = out.entry(rec.func.clone()).or_default();
+        if rec.is_anomaly() {
+            p.anomalies += 1;
+            if rec.rank == 0 {
+                p.rank0_anomalies += 1;
+            }
+            p.anom_runtime.push(rec.inclusive_us as f64);
+        } else {
+            p.normal_runtime.push(rec.inclusive_us as f64);
+        }
+    }
+    out
+}
+
+/// Compare two provenance stores.
+pub fn compare(label_a: &str, db_a: &ProvDb, label_b: &str, db_b: &ProvDb) -> RunComparison {
+    let pa = profile_of(db_a);
+    let pb = profile_of(db_b);
+    let mut funcs: Vec<String> = pa.keys().chain(pb.keys()).cloned().collect();
+    funcs.sort();
+    funcs.dedup();
+    let mut per_func = BTreeMap::new();
+    for f in funcs {
+        per_func.insert(
+            f.clone(),
+            (
+                pa.get(&f).cloned().unwrap_or_default(),
+                pb.get(&f).cloned().unwrap_or_default(),
+            ),
+        );
+    }
+    RunComparison {
+        label_a: label_a.to_string(),
+        label_b: label_b.to_string(),
+        total_anomalies: (db_a.anomaly_count(), db_b.anomaly_count()),
+        per_func,
+    }
+}
+
+impl RunComparison {
+    /// Functions whose anomaly count changed by ≥ `factor`× (either way),
+    /// most-changed first — the "what regressed between configs" list.
+    pub fn regressions(&self, factor: f64) -> Vec<(String, u64, u64)> {
+        let mut v: Vec<(String, u64, u64, f64)> = self
+            .per_func
+            .iter()
+            .filter_map(|(f, (a, b))| {
+                let (ca, cb) = (a.anomalies, b.anomalies);
+                let lo = ca.min(cb).max(1) as f64;
+                let hi = ca.max(cb) as f64;
+                if hi / lo >= factor && hi > 2.0 {
+                    Some((f.clone(), ca, cb, hi / lo))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        v.sort_by(|x, y| y.3.partial_cmp(&x.3).unwrap());
+        v.into_iter().map(|(f, a, b, _)| (f, a, b)).collect()
+    }
+
+    /// Human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "== Provenance comparison: '{}' vs '{}' ==\n   total anomalies: {} vs {}\n",
+            self.label_a, self.label_b, self.total_anomalies.0, self.total_anomalies.1
+        );
+        out.push_str(&format!(
+            "{:<16} {:>10} {:>10}   {:>12} {:>12}\n",
+            "function", self.label_a, self.label_b, "anom µs (a)", "anom µs (b)"
+        ));
+        for (f, (a, b)) in &self.per_func {
+            if a.anomalies == 0 && b.anomalies == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "{:<16} {:>10} {:>10}   {:>12.0} {:>12.0}\n",
+                f,
+                a.anomalies,
+                b.anomalies,
+                a.anom_runtime.mean(),
+                b.anom_runtime.mean()
+            ));
+        }
+        let regs = self.regressions(2.0);
+        if !regs.is_empty() {
+            out.push_str("regressions (≥2× change):\n");
+            for (f, a, b) in regs {
+                out.push_str(&format!("   {f}: {a} → {b}\n"));
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("a", Json::str(self.label_a.as_str())),
+            ("b", Json::str(self.label_b.as_str())),
+            (
+                "total_anomalies",
+                Json::arr(vec![
+                    Json::num(self.total_anomalies.0 as f64),
+                    Json::num(self.total_anomalies.1 as f64),
+                ]),
+            ),
+            (
+                "functions",
+                Json::Arr(
+                    self.per_func
+                        .iter()
+                        .filter(|(_, (a, b))| a.anomalies + b.anomalies > 0)
+                        .map(|(f, (a, b))| {
+                            Json::obj(vec![
+                                ("func", Json::str(f.as_str())),
+                                ("anomalies_a", Json::num(a.anomalies as f64)),
+                                ("anomalies_b", Json::num(b.anomalies as f64)),
+                                ("rank0_a", Json::num(a.rank0_anomalies as f64)),
+                                ("rank0_b", Json::num(b.rank0_anomalies as f64)),
+                                ("anom_mean_us_a", Json::num(a.anom_runtime.mean())),
+                                ("anom_mean_us_b", Json::num(b.anom_runtime.mean())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ad::{ExecRecord, Label, Labeled};
+    use crate::provenance::ProvRecord;
+
+    fn mk(fid: u32, func: &str, rank: u32, dur: u64, label: Label, id: u64) -> ProvRecord {
+        ProvRecord::from_labeled(
+            &Labeled {
+                rec: ExecRecord {
+                    call_id: id,
+                    app: 0,
+                    rank,
+                    thread: 0,
+                    fid,
+                    step: 0,
+                    entry_ts: id * 100,
+                    exit_ts: id * 100 + dur,
+                    depth: 0,
+                    parent: None,
+                    n_children: 0,
+                    n_messages: 0,
+                    msg_bytes: 0,
+                    exclusive_us: dur,
+                },
+                label,
+                score: 7.0,
+            },
+            func,
+        )
+    }
+
+    fn db(anoms_f1: u64, anoms_f2: u64) -> ProvDb {
+        let mut db = ProvDb::in_memory();
+        let mut id = 0;
+        for _ in 0..anoms_f1 {
+            id += 1;
+            db.append_record(mk(1, "SP_GTXPBL", 1, 9000, Label::AnomalyHigh, id)).unwrap();
+        }
+        for _ in 0..anoms_f2 {
+            id += 1;
+            db.append_record(mk(2, "CF_CMS", 0, 2000, Label::AnomalyHigh, id)).unwrap();
+        }
+        id += 1;
+        db.append_record(mk(1, "SP_GTXPBL", 1, 200, Label::Normal, id)).unwrap();
+        db
+    }
+
+    #[test]
+    fn comparison_counts_and_regressions() {
+        let a = db(3, 2);
+        let b = db(12, 2);
+        let cmp = compare("baseline", &a, "bad-io", &b);
+        assert_eq!(cmp.total_anomalies, (5, 14));
+        let (pa, pb) = &cmp.per_func["SP_GTXPBL"];
+        assert_eq!(pa.anomalies, 3);
+        assert_eq!(pb.anomalies, 12);
+        assert!(pa.anom_runtime.mean() > 1000.0);
+        let regs = cmp.regressions(2.0);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].0, "SP_GTXPBL");
+        let text = cmp.render();
+        assert!(text.contains("SP_GTXPBL"));
+        assert!(text.contains("regressions"));
+        crate::util::json::parse(&cmp.to_json().to_string()).unwrap();
+    }
+
+    #[test]
+    fn rank0_attribution() {
+        let a = db(1, 5);
+        let cmp = compare("x", &a, "y", &a);
+        let (pa, _) = &cmp.per_func["CF_CMS"];
+        assert_eq!(pa.rank0_anomalies, 5);
+    }
+
+    #[test]
+    fn empty_runs_compare_cleanly() {
+        let a = ProvDb::in_memory();
+        let b = ProvDb::in_memory();
+        let cmp = compare("a", &a, "b", &b);
+        assert_eq!(cmp.total_anomalies, (0, 0));
+        assert!(cmp.regressions(2.0).is_empty());
+    }
+}

@@ -1,0 +1,23 @@
+//! **Prescriptive provenance** (paper §V): the AD prescribes which events
+//! get provenance — anomalies plus their k-neighbour context — and this
+//! module turns them into durable, queryable records.
+//!
+//! Layout on disk (all JSON, matching the paper's reduced output format):
+//!
+//! ```text
+//! <out_dir>/metadata.json          run-level static provenance
+//! <out_dir>/prov_app<A>_rank<R>.jsonl   one record per kept execution
+//! ```
+//!
+//! The byte count of everything written here is the *reduced* data size in
+//! Fig 9. An in-memory index supports the visualization queries (call
+//! stack by (app, rank, step), per-function views, top anomalies) and the
+//! offline `replay` mode reloads the JSONL files into the same index.
+
+pub mod compare;
+mod record;
+mod store;
+
+pub use compare::{compare, RunComparison};
+pub use record::ProvRecord;
+pub use store::{ProvDb, ProvQuery, RunMetadata};

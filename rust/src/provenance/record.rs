@@ -1,0 +1,279 @@
+//! One provenance record: a kept execution with everything the paper lists
+//! (§V) — rank, thread, entry/exit, runtime, children and message counts,
+//! label — plus the anomaly score and the function name resolved from the
+//! registry.
+
+use crate::ad::{Label, Labeled};
+use crate::util::json::{parse, Json};
+
+/// JSON-serializable provenance record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProvRecord {
+    pub call_id: u64,
+    pub app: u32,
+    pub rank: u32,
+    pub thread: u32,
+    pub fid: u32,
+    pub func: String,
+    pub step: u64,
+    pub entry_us: u64,
+    pub exit_us: u64,
+    pub inclusive_us: u64,
+    pub exclusive_us: u64,
+    pub depth: u32,
+    pub parent: Option<u64>,
+    pub n_children: u32,
+    pub n_messages: u32,
+    pub msg_bytes: u64,
+    /// "normal" | "anomaly_high" | "anomaly_low".
+    pub label: String,
+    /// σ-distance from the mean at labelling time.
+    pub score: f64,
+}
+
+impl ProvRecord {
+    /// Build from a labelled execution, resolving the function name.
+    pub fn from_labeled(l: &Labeled, func_name: &str) -> ProvRecord {
+        ProvRecord {
+            call_id: l.rec.call_id,
+            app: l.rec.app,
+            rank: l.rec.rank,
+            thread: l.rec.thread,
+            fid: l.rec.fid,
+            func: func_name.to_string(),
+            step: l.rec.step,
+            entry_us: l.rec.entry_ts,
+            exit_us: l.rec.exit_ts,
+            inclusive_us: l.rec.inclusive_us(),
+            exclusive_us: l.rec.exclusive_us,
+            depth: l.rec.depth,
+            parent: l.rec.parent,
+            n_children: l.rec.n_children,
+            n_messages: l.rec.n_messages,
+            msg_bytes: l.rec.msg_bytes,
+            label: l.label.as_str().to_string(),
+            score: l.score,
+        }
+    }
+
+    pub fn is_anomaly(&self) -> bool {
+        self.label != Label::Normal.as_str()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("call_id", Json::num(self.call_id as f64)),
+            ("app", Json::num(self.app as f64)),
+            ("rank", Json::num(self.rank as f64)),
+            ("thread", Json::num(self.thread as f64)),
+            ("fid", Json::num(self.fid as f64)),
+            ("func", Json::str(self.func.as_str())),
+            ("step", Json::num(self.step as f64)),
+            ("entry_us", Json::num(self.entry_us as f64)),
+            ("exit_us", Json::num(self.exit_us as f64)),
+            ("inclusive_us", Json::num(self.inclusive_us as f64)),
+            ("exclusive_us", Json::num(self.exclusive_us as f64)),
+            ("depth", Json::num(self.depth as f64)),
+            (
+                "parent",
+                match self.parent {
+                    Some(p) => Json::num(p as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("n_children", Json::num(self.n_children as f64)),
+            ("n_messages", Json::num(self.n_messages as f64)),
+            ("msg_bytes", Json::num(self.msg_bytes as f64)),
+            ("label", Json::str(self.label.as_str())),
+            ("score", Json::num(self.score)),
+        ])
+    }
+
+    /// Parse back from JSON (offline replay).
+    pub fn from_json(j: &Json) -> anyhow::Result<ProvRecord> {
+        let get_u64 = |k: &str| -> anyhow::Result<u64> {
+            j.get(k)
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow::anyhow!("missing field {k}"))
+        };
+        let get_str = |k: &str| -> anyhow::Result<String> {
+            Ok(j.get(k)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("missing field {k}"))?
+                .to_string())
+        };
+        Ok(ProvRecord {
+            call_id: get_u64("call_id")?,
+            app: get_u64("app")? as u32,
+            rank: get_u64("rank")? as u32,
+            thread: get_u64("thread")? as u32,
+            fid: get_u64("fid")? as u32,
+            func: get_str("func")?,
+            step: get_u64("step")?,
+            entry_us: get_u64("entry_us")?,
+            exit_us: get_u64("exit_us")?,
+            inclusive_us: get_u64("inclusive_us")?,
+            exclusive_us: get_u64("exclusive_us")?,
+            depth: get_u64("depth")? as u32,
+            parent: match j.get("parent") {
+                Some(Json::Null) | None => None,
+                Some(v) => v.as_u64(),
+            },
+            n_children: get_u64("n_children")? as u32,
+            n_messages: get_u64("n_messages")? as u32,
+            msg_bytes: get_u64("msg_bytes")?,
+            label: get_str("label")?,
+            score: j.get("score").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        })
+    }
+
+    /// Parse one JSONL line.
+    pub fn from_jsonl_line(line: &str) -> anyhow::Result<ProvRecord> {
+        Self::from_json(&parse(line)?)
+    }
+
+    /// Append the compact JSON form to `buf` — byte-identical to
+    /// `to_json().to_string()` but without building the value tree
+    /// (provenance writing is on the per-step hot path; see §Perf).
+    pub fn write_jsonl(&self, buf: &mut String) {
+        use std::fmt::Write;
+        buf.push_str("{\"call_id\":");
+        let _ = write!(buf, "{}", self.call_id);
+        let _ = write!(buf, ",\"app\":{}", self.app);
+        let _ = write!(buf, ",\"rank\":{}", self.rank);
+        let _ = write!(buf, ",\"thread\":{}", self.thread);
+        let _ = write!(buf, ",\"fid\":{}", self.fid);
+        // Function names are from the registry (no JSON escapes needed),
+        // but escape defensively to keep byte-parity with to_json().
+        buf.push_str(",\"func\":");
+        escape_str(&self.func, buf);
+        let _ = write!(buf, ",\"step\":{}", self.step);
+        let _ = write!(buf, ",\"entry_us\":{}", self.entry_us);
+        let _ = write!(buf, ",\"exit_us\":{}", self.exit_us);
+        let _ = write!(buf, ",\"inclusive_us\":{}", self.inclusive_us);
+        let _ = write!(buf, ",\"exclusive_us\":{}", self.exclusive_us);
+        let _ = write!(buf, ",\"depth\":{}", self.depth);
+        match self.parent {
+            Some(p) => {
+                let _ = write!(buf, ",\"parent\":{p}");
+            }
+            None => buf.push_str(",\"parent\":null"),
+        }
+        let _ = write!(buf, ",\"n_children\":{}", self.n_children);
+        let _ = write!(buf, ",\"n_messages\":{}", self.n_messages);
+        let _ = write!(buf, ",\"msg_bytes\":{}", self.msg_bytes);
+        buf.push_str(",\"label\":");
+        escape_str(&self.label, buf);
+        buf.push_str(",\"score\":");
+        // Match util::json's number formatting (integers without fraction).
+        if self.score.is_finite() {
+            if self.score == self.score.trunc() && self.score.abs() < 9.0e15 {
+                let _ = write!(buf, "{}", self.score as i64);
+            } else {
+                let _ = write!(buf, "{}", self.score);
+            }
+        } else {
+            buf.push_str("null");
+        }
+        buf.push('}');
+    }
+}
+
+fn escape_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{08}' => out.push_str("\\b"),
+            '\u{0C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                use std::fmt::Write;
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ad::{ExecRecord, Labeled};
+
+    fn labeled(label: Label) -> Labeled {
+        Labeled {
+            rec: ExecRecord {
+                call_id: 42,
+                app: 0,
+                rank: 3,
+                thread: 0,
+                fid: 7,
+                step: 9,
+                entry_ts: 1000,
+                exit_ts: 1500,
+                depth: 2,
+                parent: Some(41),
+                n_children: 1,
+                n_messages: 2,
+                msg_bytes: 4096,
+                exclusive_us: 300,
+            },
+            label,
+            score: 7.5,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = ProvRecord::from_labeled(&labeled(Label::AnomalyHigh), "MD_NEWTON");
+        let line = r.to_json().to_string();
+        let back = ProvRecord::from_jsonl_line(&line).unwrap();
+        assert_eq!(back, r);
+        assert!(back.is_anomaly());
+        assert_eq!(back.inclusive_us, 500);
+        assert_eq!(back.func, "MD_NEWTON");
+    }
+
+    #[test]
+    fn normal_label_roundtrip_and_null_parent() {
+        let mut l = labeled(Label::Normal);
+        l.rec.parent = None;
+        let r = ProvRecord::from_labeled(&l, "F");
+        let back = ProvRecord::from_jsonl_line(&r.to_json().to_string()).unwrap();
+        assert!(!back.is_anomaly());
+        assert_eq!(back.parent, None);
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        assert!(ProvRecord::from_jsonl_line("{}").is_err());
+        assert!(ProvRecord::from_jsonl_line("not json").is_err());
+    }
+
+    #[test]
+    fn fast_jsonl_is_byte_identical_to_json_tree() {
+        for (label, score) in [
+            (Label::AnomalyHigh, 7.5),
+            (Label::Normal, 0.0),
+            (Label::AnomalyLow, 12.0),
+            (Label::AnomalyHigh, 6.25),
+        ] {
+            let mut l = labeled(label);
+            l.score = score;
+            if score > 10.0 {
+                l.rec.parent = None;
+            }
+            let r = ProvRecord::from_labeled(&l, "MD_NEWTON \"x\"\n");
+            let mut fast = String::new();
+            r.write_jsonl(&mut fast);
+            assert_eq!(fast, r.to_json().to_string());
+            // And it parses back.
+            assert_eq!(ProvRecord::from_jsonl_line(&fast).unwrap(), r);
+        }
+    }
+}

@@ -1,0 +1,409 @@
+//! Provenance store: per-rank JSONL writers + run metadata + an in-memory
+//! index serving the visualization queries. Byte accounting here is the
+//! *reduced* size axis of Fig 9.
+//!
+//! The paper stores on-node AD output "in predefined file paths directly"
+//! and has the viz server fetch them on demand — same shape here: each
+//! (app, rank) appends to its own JSONL file; queries run off the index.
+
+use super::record::ProvRecord;
+use crate::ad::Labeled;
+use crate::trace::FuncRegistry;
+use crate::util::json::{parse, Json};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+/// Run-level static provenance (paper: architecture, instrumentation
+/// configuration, filtering, …).
+#[derive(Clone, Debug)]
+pub struct RunMetadata {
+    /// Free-form run name.
+    pub run_id: String,
+    /// The full pipeline config as JSON.
+    pub config: Json,
+    /// Host/platform description.
+    pub platform: String,
+    /// Per-app function tables.
+    pub registries: Vec<Json>,
+}
+
+impl RunMetadata {
+    pub fn new(run_id: &str, config: Json, registries: &[FuncRegistry]) -> Self {
+        RunMetadata {
+            run_id: run_id.to_string(),
+            config,
+            platform: format!(
+                "{} {} (simulated workflow substrate)",
+                std::env::consts::OS,
+                std::env::consts::ARCH
+            ),
+            registries: registries.iter().map(|r| r.to_json()).collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("run_id", Json::str(self.run_id.as_str())),
+            ("platform", Json::str(self.platform.as_str())),
+            ("config", self.config.clone()),
+            ("registries", Json::Arr(self.registries.clone())),
+        ])
+    }
+}
+
+/// Disk-backed (optional) provenance database with in-memory indexes.
+pub struct ProvDb {
+    dir: Option<PathBuf>,
+    writers: HashMap<(u32, u32), BufWriter<File>>,
+    bytes_written: u64,
+    /// All records, append order.
+    records: Vec<ProvRecord>,
+    /// Index: (app, rank) → record positions.
+    by_rank: HashMap<(u32, u32), Vec<usize>>,
+    /// Index: (app, fid) → record positions.
+    by_func: HashMap<(u32, u32), Vec<usize>>,
+    n_anomalies: u64,
+}
+
+impl ProvDb {
+    /// On-disk store rooted at `dir`.
+    pub fn create(dir: &Path) -> Result<ProvDb> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating provenance dir {}", dir.display()))?;
+        Ok(ProvDb {
+            dir: Some(dir.to_path_buf()),
+            writers: HashMap::new(),
+            bytes_written: 0,
+            records: Vec::new(),
+            by_rank: HashMap::new(),
+            by_func: HashMap::new(),
+            n_anomalies: 0,
+        })
+    }
+
+    /// In-memory only (benchmarks, size modelling).
+    pub fn in_memory() -> ProvDb {
+        ProvDb {
+            dir: None,
+            writers: HashMap::new(),
+            bytes_written: 0,
+            records: Vec::new(),
+            by_rank: HashMap::new(),
+            by_func: HashMap::new(),
+            n_anomalies: 0,
+        }
+    }
+
+    /// Write run metadata (once, at run start).
+    pub fn write_metadata(&mut self, meta: &RunMetadata) -> Result<()> {
+        let text = meta.to_json().to_pretty();
+        self.bytes_written += text.len() as u64;
+        if let Some(dir) = &self.dir {
+            std::fs::write(dir.join("metadata.json"), &text).context("writing metadata")?;
+        }
+        Ok(())
+    }
+
+    /// Append kept records from one AD step, resolving names via `reg`.
+    pub fn append_step(&mut self, kept: &[Labeled], reg: &FuncRegistry) -> Result<()> {
+        for l in kept {
+            let rec = ProvRecord::from_labeled(l, reg.name(l.rec.fid));
+            self.append_record(rec)?;
+        }
+        Ok(())
+    }
+
+    /// Append one record.
+    pub fn append_record(&mut self, rec: ProvRecord) -> Result<()> {
+        // Direct serialization (no Json tree) — hot path, see §Perf.
+        let mut line = String::with_capacity(360);
+        rec.write_jsonl(&mut line);
+        self.bytes_written += line.len() as u64 + 1;
+        if let Some(dir) = &self.dir {
+            let key = (rec.app, rec.rank);
+            let w = match self.writers.get_mut(&key) {
+                Some(w) => w,
+                None => {
+                    let path = dir.join(format!("prov_app{}_rank{}.jsonl", rec.app, rec.rank));
+                    let f = File::options()
+                        .create(true)
+                        .append(true)
+                        .open(&path)
+                        .with_context(|| format!("opening {}", path.display()))?;
+                    self.writers.entry(key).or_insert_with(|| BufWriter::new(f))
+                }
+            };
+            w.write_all(line.as_bytes())?;
+            w.write_all(b"\n")?;
+        }
+        self.index(rec);
+        Ok(())
+    }
+
+    fn index(&mut self, rec: ProvRecord) {
+        let pos = self.records.len();
+        self.by_rank.entry((rec.app, rec.rank)).or_default().push(pos);
+        self.by_func.entry((rec.app, rec.fid)).or_default().push(pos);
+        if rec.is_anomaly() {
+            self.n_anomalies += 1;
+        }
+        self.records.push(rec);
+    }
+
+    /// Flush all writers.
+    pub fn flush(&mut self) -> Result<()> {
+        for w in self.writers.values_mut() {
+            w.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Total JSON bytes produced (the Fig 9 "reduced" size).
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes_written
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn anomaly_count(&self) -> u64 {
+        self.n_anomalies
+    }
+
+    /// Load a store back from disk (offline replay / `serve`).
+    pub fn load(dir: &Path) -> Result<ProvDb> {
+        let mut db = ProvDb::in_memory();
+        db.dir = None;
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("reading provenance dir {}", dir.display()))?;
+        let mut paths: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.starts_with("prov_") && n.ends_with(".jsonl"))
+                    .unwrap_or(false)
+            })
+            .collect();
+        paths.sort();
+        for path in paths {
+            let f = File::open(&path).with_context(|| format!("opening {}", path.display()))?;
+            for line in BufReader::new(f).lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let rec = ProvRecord::from_jsonl_line(&line)
+                    .with_context(|| format!("parsing record in {}", path.display()))?;
+                db.bytes_written += line.len() as u64 + 1;
+                db.index(rec);
+            }
+        }
+        Ok(db)
+    }
+
+    /// Load run metadata JSON if present.
+    pub fn load_metadata(dir: &Path) -> Result<Json> {
+        let text = std::fs::read_to_string(dir.join("metadata.json"))?;
+        Ok(parse(&text)?)
+    }
+
+    /// Run a query against the index.
+    pub fn query(&self, q: &ProvQuery) -> Vec<&ProvRecord> {
+        // Start from the most selective available index.
+        let candidates: Box<dyn Iterator<Item = &ProvRecord>> = match (q.rank, q.fid) {
+            (Some((app, rank)), _) => match self.by_rank.get(&(app, rank)) {
+                Some(ix) => Box::new(ix.iter().map(|&i| &self.records[i])),
+                None => Box::new(std::iter::empty()),
+            },
+            (None, Some((app, fid))) => match self.by_func.get(&(app, fid)) {
+                Some(ix) => Box::new(ix.iter().map(|&i| &self.records[i])),
+                None => Box::new(std::iter::empty()),
+            },
+            (None, None) => Box::new(self.records.iter()),
+        };
+        let mut out: Vec<&ProvRecord> = candidates
+            .filter(|r| q.fid.map(|(a, f)| r.app == a && r.fid == f).unwrap_or(true))
+            .filter(|r| q.step.map(|s| r.step == s).unwrap_or(true))
+            .filter(|r| !q.anomalies_only || r.is_anomaly())
+            .filter(|r| {
+                q.ts_range
+                    .map(|(lo, hi)| r.exit_us >= lo && r.entry_us <= hi)
+                    .unwrap_or(true)
+            })
+            .collect();
+        if q.order_by_score {
+            out.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        } else {
+            out.sort_by_key(|r| r.entry_us);
+        }
+        if let Some(n) = q.limit {
+            out.truncate(n);
+        }
+        out
+    }
+
+    /// All records of a rank for a step, entry-ordered — the call-stack
+    /// view's input (Fig 6).
+    pub fn call_stack(&self, app: u32, rank: u32, step: u64) -> Vec<&ProvRecord> {
+        self.query(&ProvQuery {
+            rank: Some((app, rank)),
+            step: Some(step),
+            ..ProvQuery::default()
+        })
+    }
+}
+
+/// Declarative query over the provenance index.
+#[derive(Clone, Debug, Default)]
+pub struct ProvQuery {
+    /// Filter by (app, rank).
+    pub rank: Option<(u32, u32)>,
+    /// Filter by (app, fid).
+    pub fid: Option<(u32, u32)>,
+    /// Filter by step.
+    pub step: Option<u64>,
+    /// Overlap with a virtual-time range (µs).
+    pub ts_range: Option<(u64, u64)>,
+    /// Anomalies only.
+    pub anomalies_only: bool,
+    /// Sort by score descending instead of entry time.
+    pub order_by_score: bool,
+    /// Truncate results.
+    pub limit: Option<usize>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ad::{ExecRecord, Label, Labeled};
+
+    fn labeled(fid: u32, rank: u32, step: u64, dur: u64, label: Label, id: u64) -> Labeled {
+        Labeled {
+            rec: ExecRecord {
+                call_id: id,
+                app: 0,
+                rank,
+                thread: 0,
+                fid,
+                step,
+                entry_ts: id * 100,
+                exit_ts: id * 100 + dur,
+                depth: 0,
+                parent: None,
+                n_children: 0,
+                n_messages: 0,
+                msg_bytes: 0,
+                exclusive_us: dur,
+            },
+            label,
+            score: dur as f64 / 100.0,
+        }
+    }
+
+    fn reg() -> FuncRegistry {
+        let mut r = FuncRegistry::new();
+        r.register("F0", false);
+        r.register("F1", false);
+        r
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("chimbuko-prov-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn write_load_roundtrip() {
+        let dir = tmpdir("rt");
+        let mut db = ProvDb::create(&dir).unwrap();
+        let reg = reg();
+        db.write_metadata(&RunMetadata::new(
+            "test-run",
+            Json::obj(vec![("alpha", Json::num(6.0))]),
+            &[reg.clone()],
+        ))
+        .unwrap();
+        let kept = vec![
+            labeled(0, 1, 5, 100, Label::Normal, 1),
+            labeled(1, 1, 5, 900, Label::AnomalyHigh, 2),
+            labeled(0, 2, 6, 100, Label::Normal, 3),
+        ];
+        db.append_step(&kept, &reg).unwrap();
+        db.flush().unwrap();
+        assert_eq!(db.len(), 3);
+        assert_eq!(db.anomaly_count(), 1);
+        assert!(db.bytes_written() > 0);
+
+        let loaded = ProvDb::load(&dir).unwrap();
+        assert_eq!(loaded.len(), 3);
+        assert_eq!(loaded.anomaly_count(), 1);
+        let meta = ProvDb::load_metadata(&dir).unwrap();
+        assert_eq!(meta.get("run_id").unwrap().as_str(), Some("test-run"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn queries_filter_and_order() {
+        let mut db = ProvDb::in_memory();
+        let reg = reg();
+        let kept = vec![
+            labeled(0, 1, 5, 100, Label::Normal, 1),
+            labeled(1, 1, 5, 900, Label::AnomalyHigh, 2),
+            labeled(1, 1, 6, 950, Label::AnomalyHigh, 3),
+            labeled(0, 2, 5, 120, Label::Normal, 4),
+        ];
+        db.append_step(&kept, &reg).unwrap();
+
+        let r15 = db.call_stack(0, 1, 5);
+        assert_eq!(r15.len(), 2);
+        assert!(r15[0].entry_us <= r15[1].entry_us);
+
+        let anoms = db.query(&ProvQuery { anomalies_only: true, ..Default::default() });
+        assert_eq!(anoms.len(), 2);
+
+        let top = db.query(&ProvQuery {
+            order_by_score: true,
+            limit: Some(1),
+            ..Default::default()
+        });
+        assert_eq!(top[0].call_id, 3);
+
+        let by_func = db.query(&ProvQuery { fid: Some((0, 1)), ..Default::default() });
+        assert_eq!(by_func.len(), 2);
+        assert!(by_func.iter().all(|r| r.func == "F1"));
+
+        let windowed = db.query(&ProvQuery {
+            ts_range: Some((0, 150)),
+            ..Default::default()
+        });
+        assert_eq!(windowed.len(), 1);
+        assert_eq!(windowed[0].call_id, 1);
+    }
+
+    #[test]
+    fn missing_indexes_return_empty() {
+        let db = ProvDb::in_memory();
+        assert!(db.call_stack(0, 99, 0).is_empty());
+        assert!(db
+            .query(&ProvQuery { fid: Some((0, 99)), ..Default::default() })
+            .is_empty());
+    }
+
+    #[test]
+    fn in_memory_counts_bytes() {
+        let mut db = ProvDb::in_memory();
+        db.append_step(&[labeled(0, 0, 0, 50, Label::Normal, 1)], &reg()).unwrap();
+        assert!(db.bytes_written() > 100);
+    }
+}

@@ -1,0 +1,543 @@
+//! The **online AD parameter server** (paper §III-B2).
+//!
+//! Maintains the global view of the workflow: per-function execution-time
+//! statistics (merged from the on-node AD modules with Pébay's formulas —
+//! commutative, so **no synchronization barriers**) and the per-rank,
+//! per-step anomaly timeline. Periodically publishes a snapshot to the
+//! visualization ingest channel.
+//!
+//! Runs as a dedicated thread consuming [`PsRequest`]s from an mpsc
+//! channel; on-node AD modules talk to it through [`PsClient`] handles
+//! (cloneable senders + per-request reply channels), which is the in-proc
+//! analogue of the reference implementation's ZeroMQ sockets.
+
+pub mod net;
+
+use crate::ad::Label;
+use crate::stats::{RunStats, StatsTable};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// Function statistics key: apps have independent fid spaces.
+pub type FuncKey = (u32, u32); // (app, fid)
+
+/// One rank's per-step anomaly report.
+#[derive(Clone, Debug)]
+pub struct StepStat {
+    pub app: u32,
+    pub rank: u32,
+    pub step: u64,
+    pub n_executions: u64,
+    pub n_anomalies: u64,
+    /// Analysed virtual-time range of the step, µs.
+    pub ts_range: (u64, u64),
+}
+
+/// Message from an AD module to the server.
+pub enum PsRequest {
+    /// Statistics sync: fold `delta` into the global view, reply with the
+    /// global snapshot for the touched functions.
+    Sync {
+        app: u32,
+        rank: u32,
+        delta: Vec<(u32, RunStats)>,
+        reply: Sender<PsReply>,
+    },
+    /// Anomaly accounting for the viz timeline (fire-and-forget).
+    Report(StepStat),
+    /// Flush a viz snapshot now (tests; the loop also does it on a cadence).
+    Publish,
+    /// Drain and stop.
+    Shutdown,
+}
+
+/// Reply to a `Sync`: global statistics for the functions in the delta,
+/// plus any globally detected events this rank has not seen yet (the
+/// rank reacts by dumping its current context window to provenance).
+pub struct PsReply {
+    pub global: Vec<(u32, RunStats)>,
+    pub global_events: Vec<GlobalEvent>,
+}
+
+/// Snapshot published to the visualization ingest channel.
+#[derive(Clone, Debug, Default)]
+pub struct VizSnapshot {
+    /// Per-rank summaries (Fig 3's ranking dashboard feeds from this).
+    pub ranks: Vec<RankSummary>,
+    /// Newly reported step stats since the previous snapshot (Fig 4's
+    /// streaming scatter feeds from this).
+    pub fresh_steps: Vec<StepStat>,
+    /// Total anomalies so far, workflow-wide.
+    pub total_anomalies: u64,
+    /// Total executions so far, workflow-wide.
+    pub total_executions: u64,
+    /// Globally detected events so far (§V future work).
+    pub global_events: Vec<GlobalEvent>,
+}
+
+/// Per-rank anomaly summary: statistics over its per-step anomaly counts
+/// (average/σ/max/min/total — exactly the dashboard's selectable metrics).
+#[derive(Clone, Debug)]
+pub struct RankSummary {
+    pub app: u32,
+    pub rank: u32,
+    pub step_counts: RunStats,
+    pub total_anomalies: u64,
+}
+
+/// A **globally detected event** (paper §V future work): a trace step
+/// whose workflow-wide anomaly count is itself an outlier relative to the
+/// recent per-step totals. The PS flags it and the coordinator triggers
+/// context-provenance output on *all* ranks, not just the anomalous ones.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GlobalEvent {
+    pub step: u64,
+    /// Workflow-wide anomalies in that step.
+    pub total_anomalies: u64,
+    /// σ-distance of the step total from the per-step mean.
+    pub score: f64,
+}
+
+/// The server state (usable directly in-thread for tests, or spawned).
+pub struct ParameterServer {
+    global: HashMap<FuncKey, RunStats>,
+    per_rank: HashMap<(u32, u32), RankAccum>,
+    fresh: Vec<StepStat>,
+    total_anomalies: u64,
+    total_executions: u64,
+    viz_tx: Option<Sender<VizSnapshot>>,
+    /// Publish cadence, in number of Report messages (≈ steps) — the
+    /// paper's 1-second periodicity maps to once per step-round.
+    publish_every: usize,
+    reports_since_publish: usize,
+    pub sync_count: u64,
+    /// Per-step workflow-wide accumulation toward global-event detection:
+    /// step → (reports received, anomaly total).
+    step_acc: HashMap<u64, (usize, u64)>,
+    /// Reports expected per step (= ranks); completes a step's total.
+    reports_per_step: usize,
+    /// Statistics over completed steps' anomaly totals.
+    step_totals: RunStats,
+    /// Flagged global events (chronological).
+    global_events: Vec<GlobalEvent>,
+    /// Global events not yet delivered to each rank (per-rank cursor).
+    event_cursor: HashMap<(u32, u32), usize>,
+}
+
+/// Global-event trigger: step total > μ + GLOBAL_BETA·σ over ≥ MIN_HISTORY
+/// completed steps and at least GLOBAL_MIN_ANOMS anomalies.
+const GLOBAL_BETA: f64 = 3.0;
+const GLOBAL_MIN_HISTORY: u64 = 5;
+const GLOBAL_MIN_ANOMS: u64 = 3;
+
+struct RankAccum {
+    step_counts: RunStats,
+    total: u64,
+}
+
+impl ParameterServer {
+    pub fn new(viz_tx: Option<Sender<VizSnapshot>>, publish_every: usize) -> Self {
+        ParameterServer {
+            global: HashMap::new(),
+            per_rank: HashMap::new(),
+            fresh: Vec::new(),
+            total_anomalies: 0,
+            total_executions: 0,
+            viz_tx,
+            publish_every: publish_every.max(1),
+            reports_since_publish: 0,
+            sync_count: 0,
+            step_acc: HashMap::new(),
+            reports_per_step: publish_every.max(1),
+            step_totals: RunStats::new(),
+            global_events: Vec::new(),
+            event_cursor: HashMap::new(),
+        }
+    }
+
+    /// Handle one request inline.
+    pub fn handle(&mut self, req: PsRequest) -> bool {
+        match req {
+            PsRequest::Sync { app, rank, delta, reply } => {
+                self.sync_count += 1;
+                let mut global = Vec::with_capacity(delta.len());
+                for (fid, st) in delta {
+                    let g = self.global.entry((app, fid)).or_default();
+                    g.merge(&st);
+                    global.push((fid, *g));
+                }
+                // Deliver global events this rank has not seen yet.
+                let cursor = self.event_cursor.entry((app, rank)).or_insert(0);
+                let fresh_events = self.global_events[*cursor..].to_vec();
+                *cursor = self.global_events.len();
+                let _ = reply.send(PsReply { global, global_events: fresh_events });
+            }
+            PsRequest::Report(stat) => {
+                let acc = self
+                    .per_rank
+                    .entry((stat.app, stat.rank))
+                    .or_insert_with(|| RankAccum { step_counts: RunStats::new(), total: 0 });
+                acc.step_counts.push(stat.n_anomalies as f64);
+                acc.total += stat.n_anomalies;
+                self.total_anomalies += stat.n_anomalies;
+                self.total_executions += stat.n_executions;
+                // Global-event detection on completed step totals (§V).
+                let entry = self.step_acc.entry(stat.step).or_insert((0, 0));
+                entry.0 += 1;
+                entry.1 += stat.n_anomalies;
+                if entry.0 >= self.reports_per_step {
+                    let (_, total) = self.step_acc.remove(&stat.step).unwrap();
+                    if self.step_totals.count() >= GLOBAL_MIN_HISTORY
+                        && total >= GLOBAL_MIN_ANOMS
+                    {
+                        let sd = self.step_totals.stddev();
+                        let mean = self.step_totals.mean();
+                        let score = if sd > 0.0 { (total as f64 - mean) / sd } else { 0.0 };
+                        if sd > 0.0 && total as f64 > mean + GLOBAL_BETA * sd {
+                            self.global_events.push(GlobalEvent {
+                                step: stat.step,
+                                total_anomalies: total,
+                                score,
+                            });
+                        }
+                    }
+                    self.step_totals.push(total as f64);
+                }
+                self.fresh.push(stat);
+                self.reports_since_publish += 1;
+                if self.reports_since_publish >= self.publish_every {
+                    self.publish();
+                }
+            }
+            PsRequest::Publish => self.publish(),
+            PsRequest::Shutdown => {
+                self.publish();
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Build and send a viz snapshot; drains `fresh`.
+    pub fn publish(&mut self) {
+        self.reports_since_publish = 0;
+        let snap = self.snapshot();
+        self.fresh.clear();
+        if let Some(tx) = &self.viz_tx {
+            let _ = tx.send(snap);
+        }
+    }
+
+    /// Current snapshot (without draining when called directly in tests).
+    pub fn snapshot(&self) -> VizSnapshot {
+        let mut ranks: Vec<RankSummary> = self
+            .per_rank
+            .iter()
+            .map(|(&(app, rank), acc)| RankSummary {
+                app,
+                rank,
+                step_counts: acc.step_counts,
+                total_anomalies: acc.total,
+            })
+            .collect();
+        ranks.sort_by_key(|r| (r.app, r.rank));
+        VizSnapshot {
+            ranks,
+            fresh_steps: self.fresh.clone(),
+            total_anomalies: self.total_anomalies,
+            total_executions: self.total_executions,
+            global_events: self.global_events.clone(),
+        }
+    }
+
+    /// All globally detected events so far.
+    pub fn global_events(&self) -> &[GlobalEvent] {
+        &self.global_events
+    }
+
+    /// Global statistics for one function.
+    pub fn global_stats(&self, app: u32, fid: u32) -> Option<&RunStats> {
+        self.global.get(&(app, fid))
+    }
+
+    /// Number of functions tracked globally.
+    pub fn global_len(&self) -> usize {
+        self.global.len()
+    }
+}
+
+/// Spawn the server on its own thread.
+pub fn spawn(
+    viz_tx: Option<Sender<VizSnapshot>>,
+    publish_every: usize,
+) -> (PsClient, JoinHandle<ParameterServer>) {
+    let (tx, rx): (Sender<PsRequest>, Receiver<PsRequest>) = channel();
+    let handle = std::thread::Builder::new()
+        .name("chimbuko-ps".into())
+        .spawn(move || {
+            let mut ps = ParameterServer::new(viz_tx, publish_every);
+            while let Ok(req) = rx.recv() {
+                if !ps.handle(req) {
+                    break;
+                }
+            }
+            ps
+        })
+        .expect("spawning parameter server");
+    (PsClient { tx }, handle)
+}
+
+/// Cloneable client handle used by on-node AD modules.
+#[derive(Clone)]
+pub struct PsClient {
+    tx: Sender<PsRequest>,
+}
+
+impl PsClient {
+    /// Synchronous stats exchange: send local delta, adopt global reply.
+    /// Returns the global snapshot for the touched functions plus any
+    /// fresh globally detected events (§V trigger).
+    pub fn sync(&self, app: u32, rank: u32, delta: &StatsTable) -> (StatsTable, Vec<GlobalEvent>) {
+        if delta.is_empty() {
+            return (StatsTable::new(), Vec::new());
+        }
+        let (rtx, rrx) = channel();
+        let msg = PsRequest::Sync {
+            app,
+            rank,
+            delta: delta.iter().map(|(f, s)| (f, *s)).collect(),
+            reply: rtx,
+        };
+        if self.tx.send(msg).is_err() {
+            return (StatsTable::new(), Vec::new());
+        }
+        match rrx.recv() {
+            Ok(reply) => {
+                let mut t = StatsTable::new();
+                for (fid, st) in reply.global {
+                    t.replace(fid, st);
+                }
+                (t, reply.global_events)
+            }
+            Err(_) => (StatsTable::new(), Vec::new()),
+        }
+    }
+
+    /// Fire-and-forget anomaly accounting.
+    pub fn report(&self, stat: StepStat) {
+        let _ = self.tx.send(PsRequest::Report(stat));
+    }
+
+    /// Force a viz publish.
+    pub fn publish(&self) {
+        let _ = self.tx.send(PsRequest::Publish);
+    }
+
+    /// Stop the server (it publishes a final snapshot first).
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(PsRequest::Shutdown);
+    }
+}
+
+/// Helper building a [`StepStat`] from an AD step result.
+pub fn step_stat_of(res: &crate::ad::StepResult, frame_span: (u64, u64)) -> StepStat {
+    StepStat {
+        app: res.app,
+        rank: res.rank,
+        step: res.step,
+        n_executions: res.n_executions,
+        n_anomalies: res.n_anomalies,
+        ts_range: frame_span,
+    }
+}
+
+/// Convenience for tests: count anomalies in a labelled batch.
+pub fn count_anomalies(labels: &[crate::ad::Labeled]) -> u64 {
+    labels.iter().filter(|l| matches!(l.label, Label::AnomalyHigh | Label::AnomalyLow)).count()
+        as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn stats_of(values: &[f64]) -> RunStats {
+        let mut s = RunStats::new();
+        for &v in values {
+            s.push(v);
+        }
+        s
+    }
+
+    #[test]
+    fn sync_merges_and_replies_global() {
+        let mut ps = ParameterServer::new(None, 1000);
+        let (rtx, rrx) = channel();
+        ps.handle(PsRequest::Sync {
+            app: 0,
+            rank: 1,
+            delta: vec![(7, stats_of(&[10.0, 20.0]))],
+            reply: rtx,
+        });
+        let (rtx2, rrx2) = channel();
+        ps.handle(PsRequest::Sync {
+            app: 0,
+            rank: 2,
+            delta: vec![(7, stats_of(&[30.0, 40.0]))],
+            reply: rtx2,
+        });
+        let r1 = rrx.recv().unwrap();
+        assert_eq!(r1.global[0].1.count(), 2);
+        let r2 = rrx2.recv().unwrap();
+        let g = r2.global[0].1;
+        assert_eq!(g.count(), 4);
+        assert!((g.mean() - 25.0).abs() < 1e-9);
+        // Same fid in a different app is independent.
+        assert!(ps.global_stats(1, 7).is_none());
+        assert_eq!(ps.global_len(), 1);
+    }
+
+    #[test]
+    fn reports_build_rank_summaries() {
+        let mut ps = ParameterServer::new(None, 1000);
+        for step in 0..4 {
+            ps.handle(PsRequest::Report(StepStat {
+                app: 0,
+                rank: 3,
+                step,
+                n_executions: 100,
+                n_anomalies: step, // 0,1,2,3
+                ts_range: (0, 1),
+            }));
+        }
+        let snap = ps.snapshot();
+        assert_eq!(snap.ranks.len(), 1);
+        let r = &snap.ranks[0];
+        assert_eq!(r.total_anomalies, 6);
+        assert!((r.step_counts.mean() - 1.5).abs() < 1e-12);
+        assert_eq!(snap.total_executions, 400);
+        assert_eq!(snap.fresh_steps.len(), 4);
+    }
+
+    #[test]
+    fn publish_cadence_and_drain() {
+        let (vtx, vrx) = channel();
+        let mut ps = ParameterServer::new(Some(vtx), 2);
+        for step in 0..4 {
+            ps.handle(PsRequest::Report(StepStat {
+                app: 0,
+                rank: 0,
+                step,
+                n_executions: 1,
+                n_anomalies: 0,
+                ts_range: (0, 1),
+            }));
+        }
+        let s1 = vrx.recv().unwrap();
+        let s2 = vrx.recv().unwrap();
+        assert_eq!(s1.fresh_steps.len(), 2);
+        assert_eq!(s2.fresh_steps.len(), 2);
+        assert!(vrx.try_recv().is_err());
+    }
+
+    #[test]
+    fn threaded_server_round_trip() {
+        let (client, handle) = spawn(None, 10);
+        let mut delta = StatsTable::new();
+        for v in [1.0, 2.0, 3.0] {
+            delta.push(5, v);
+        }
+        let (g1, ev1) = client.sync(0, 0, &delta);
+        assert_eq!(g1.get(5).unwrap().count(), 3);
+        assert!(ev1.is_empty());
+        let (g2, _) = client.sync(0, 1, &delta);
+        assert_eq!(g2.get(5).unwrap().count(), 6);
+        client.shutdown();
+        let ps = handle.join().unwrap();
+        assert_eq!(ps.sync_count, 2);
+    }
+
+    #[test]
+    fn concurrent_syncs_converge() {
+        let (client, handle) = spawn(None, 1000);
+        let mut joins = Vec::new();
+        for rank in 0..8u32 {
+            let c = client.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..50u64 {
+                    let mut d = StatsTable::new();
+                    d.push(1, (rank as f64) + i as f64);
+                    c.sync(0, rank, &d);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        client.shutdown();
+        let ps = handle.join().unwrap();
+        assert_eq!(ps.global_stats(0, 1).unwrap().count(), 400);
+    }
+
+    #[test]
+    fn global_event_detection_and_delivery() {
+        // 4 ranks; 10 quiet steps then one step with a workflow-wide burst.
+        let mut ps = ParameterServer::new(None, 4);
+        let report = |ps: &mut ParameterServer, step: u64, rank: u32, anoms: u64| {
+            ps.handle(PsRequest::Report(StepStat {
+                app: 0,
+                rank,
+                step,
+                n_executions: 100,
+                n_anomalies: anoms,
+                ts_range: (0, 1),
+            }));
+        };
+        for step in 0..10 {
+            for rank in 0..4 {
+                report(&mut ps, step, rank, u64::from(step % 3 == 0 && rank == 0));
+            }
+        }
+        assert!(ps.global_events().is_empty(), "quiet phase must not trigger");
+        // Burst: every rank anomalous in step 10.
+        for rank in 0..4 {
+            report(&mut ps, 10, rank, 5);
+        }
+        assert_eq!(ps.global_events().len(), 1);
+        let ev = ps.global_events()[0];
+        assert_eq!(ev.step, 10);
+        assert_eq!(ev.total_anomalies, 20);
+        assert!(ev.score > 3.0);
+        // Delivery: first sync sees the event, second does not (cursor).
+        let (rtx, rrx) = channel();
+        ps.handle(PsRequest::Sync {
+            app: 0,
+            rank: 2,
+            delta: vec![(0, stats_of(&[1.0]))],
+            reply: rtx,
+        });
+        assert_eq!(rrx.recv().unwrap().global_events.len(), 1);
+        let (rtx, rrx) = channel();
+        ps.handle(PsRequest::Sync {
+            app: 0,
+            rank: 2,
+            delta: vec![(0, stats_of(&[1.0]))],
+            reply: rtx,
+        });
+        assert!(rrx.recv().unwrap().global_events.is_empty());
+        // Snapshot carries the event for the viz layer.
+        assert_eq!(ps.snapshot().global_events.len(), 1);
+    }
+
+    #[test]
+    fn empty_delta_skips_roundtrip() {
+        let (client, handle) = spawn(None, 10);
+        let (g, ev) = client.sync(0, 0, &StatsTable::new());
+        assert!(g.is_empty());
+        assert!(ev.is_empty());
+        client.shutdown();
+        assert_eq!(handle.join().unwrap().sync_count, 0);
+    }
+}

@@ -1,0 +1,180 @@
+//! Artifact loading + typed executable wrappers (single-threaded; the
+//! [`service`](super::service) thread owns everything here).
+
+use crate::util::json::{parse, Json};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Artifact manifest: baked shapes + file names (written by `aot.py`).
+#[derive(Clone, Debug)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    /// Event-batch capacity of `ad_batch`.
+    pub batch: usize,
+    /// Function-table capacity.
+    pub funcs: usize,
+    pub ad_batch_file: PathBuf,
+    pub ps_merge_file: PathBuf,
+}
+
+impl Artifacts {
+    /// Read and validate `manifest.json` from an artifacts directory.
+    pub fn discover(dir: &Path) -> Result<Artifacts> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let j = parse(&text).context("parsing manifest.json")?;
+        let batch = j
+            .get("batch")
+            .and_then(Json::as_u64)
+            .context("manifest missing 'batch'")? as usize;
+        let funcs = j
+            .get("funcs")
+            .and_then(Json::as_u64)
+            .context("manifest missing 'funcs'")? as usize;
+        let file_of = |key: &str| -> Result<PathBuf> {
+            let name = j
+                .get(key)
+                .and_then(|o| o.get("file"))
+                .and_then(Json::as_str)
+                .with_context(|| format!("manifest missing {key}.file"))?;
+            let p = dir.join(name);
+            if !p.exists() {
+                bail!("artifact {} missing — run `make artifacts`", p.display());
+            }
+            Ok(p)
+        };
+        Ok(Artifacts {
+            dir: dir.to_path_buf(),
+            batch,
+            funcs,
+            ad_batch_file: file_of("ad_batch")?,
+            ps_merge_file: file_of("ps_merge")?,
+        })
+    }
+}
+
+/// One AD batch invocation (padded to the baked capacity by the caller's
+/// side of the channel; see [`super::RuntimeHandle::ad_batch`]).
+#[derive(Clone, Debug)]
+pub struct AdBatchRequest {
+    pub exec_us: Vec<f32>,
+    pub fid: Vec<i32>,
+    pub valid: Vec<f32>,
+    pub n: Vec<f32>,
+    pub mu: Vec<f32>,
+    pub m2: Vec<f32>,
+    pub alpha: f32,
+    pub min_samples: f32,
+}
+
+/// AD batch result: labels/scores per event + merged stats tables.
+#[derive(Clone, Debug)]
+pub struct AdBatchResponse {
+    /// 0 normal, 1 high, -1 low (padding slots are 0).
+    pub labels: Vec<i32>,
+    pub scores: Vec<f32>,
+    pub n: Vec<f32>,
+    pub mu: Vec<f32>,
+    pub m2: Vec<f32>,
+}
+
+/// Compiled executables, living on the service thread (not `Send`).
+pub struct LoadedArtifacts {
+    pub meta: Artifacts,
+    client: xla::PjRtClient,
+    ad_batch: xla::PjRtLoadedExecutable,
+    ps_merge: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifacts {
+    /// Create the CPU PJRT client and compile both artifacts.
+    pub fn load(meta: Artifacts) -> Result<LoadedArtifacts> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let ad_batch = compile(&client, &meta.ad_batch_file)?;
+        let ps_merge = compile(&client, &meta.ps_merge_file)?;
+        Ok(LoadedArtifacts { meta, client, ad_batch, ps_merge })
+    }
+
+    /// Execute one AD batch (shapes must match the manifest).
+    pub fn run_ad_batch(&self, req: &AdBatchRequest) -> Result<AdBatchResponse> {
+        let b = self.meta.batch;
+        let f = self.meta.funcs;
+        if req.exec_us.len() != b || req.fid.len() != b || req.valid.len() != b {
+            bail!("batch inputs must have length {b}");
+        }
+        if req.n.len() != f || req.mu.len() != f || req.m2.len() != f {
+            bail!("stats inputs must have length {f}");
+        }
+        let args = [
+            xla::Literal::vec1(&req.exec_us),
+            xla::Literal::vec1(&req.fid),
+            xla::Literal::vec1(&req.valid),
+            xla::Literal::vec1(&req.n),
+            xla::Literal::vec1(&req.mu),
+            xla::Literal::vec1(&req.m2),
+            xla::Literal::scalar(req.alpha),
+            xla::Literal::scalar(req.min_samples),
+        ];
+        let result = self.ad_batch.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()
+            .context("fetching ad_batch result")?;
+        let outs = result.to_tuple().context("ad_batch output tuple")?;
+        if outs.len() != 5 {
+            bail!("ad_batch returned {} outputs, expected 5", outs.len());
+        }
+        Ok(AdBatchResponse {
+            labels: outs[0].to_vec::<i32>()?,
+            scores: outs[1].to_vec::<f32>()?,
+            n: outs[2].to_vec::<f32>()?,
+            mu: outs[3].to_vec::<f32>()?,
+            m2: outs[4].to_vec::<f32>()?,
+        })
+    }
+
+    /// Execute the parameter-server pairwise merge.
+    pub fn run_ps_merge(
+        &self,
+        a: (&[f32], &[f32], &[f32]),
+        b: (&[f32], &[f32], &[f32]),
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let f = self.meta.funcs;
+        for s in [a.0, a.1, a.2, b.0, b.1, b.2] {
+            if s.len() != f {
+                bail!("ps_merge inputs must have length {f}");
+            }
+        }
+        let args = [
+            xla::Literal::vec1(a.0),
+            xla::Literal::vec1(a.1),
+            xla::Literal::vec1(a.2),
+            xla::Literal::vec1(b.0),
+            xla::Literal::vec1(b.1),
+            xla::Literal::vec1(b.2),
+        ];
+        let result = self.ps_merge.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()
+            .context("fetching ps_merge result")?;
+        let (n, mu, m2) = result.to_tuple3().context("ps_merge output tuple")?;
+        Ok((n.to_vec::<f32>()?, mu.to_vec::<f32>()?, m2.to_vec::<f32>()?))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("artifact path not utf-8")?,
+    )
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}

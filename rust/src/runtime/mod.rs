@@ -1,0 +1,17 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and runs
+//! them from the L3 hot path.
+//!
+//! `xla::PjRtClient` is `Rc`-based (not `Send`), so the runtime is a
+//! **dedicated service thread** that owns the client and the compiled
+//! executables; AD modules on other threads submit batches over an mpsc
+//! channel and block on a reply channel. This mirrors the deployment
+//! shape of on-node AD modules sharing one node-local accelerator.
+//!
+//! Interchange is HLO *text* — see `python/compile/aot.py` for why the
+//! serialized-proto path is rejected by xla_extension 0.5.1.
+
+mod exec;
+mod service;
+
+pub use exec::{AdBatchRequest, AdBatchResponse, Artifacts, LoadedArtifacts};
+pub use service::{fold_tables_xla, RuntimeHandle, RuntimeService, XlaDetector};

@@ -1,0 +1,324 @@
+//! The runtime service thread + the XLA-backed detection engine.
+//!
+//! [`RuntimeService::spawn`] compiles the artifacts on a dedicated thread
+//! and serves requests from any number of [`RuntimeHandle`] clones.
+//! [`XlaDetector`] implements [`DetectEngine`](crate::ad::DetectEngine) on
+//! top of a handle, so the on-node AD modules can swap between the Rust
+//! and XLA backends via config (`ad.backend = rust|xla`).
+
+use super::exec::{AdBatchRequest, AdBatchResponse, Artifacts, LoadedArtifacts};
+use crate::ad::{DetectEngine, ExecRecord, Label, Labeled};
+use crate::stats::{RunStats, StatsTable};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+enum Request {
+    AdBatch(AdBatchRequest, Sender<Result<AdBatchResponse>>),
+    PsMerge {
+        a: (Vec<f32>, Vec<f32>, Vec<f32>),
+        b: (Vec<f32>, Vec<f32>, Vec<f32>),
+        reply: Sender<Result<(Vec<f32>, Vec<f32>, Vec<f32>)>>,
+    },
+    Shutdown,
+}
+
+/// Owner of the service thread; keep it alive for the run's duration.
+pub struct RuntimeService {
+    tx: Sender<Request>,
+    join: Option<JoinHandle<()>>,
+    meta: Artifacts,
+}
+
+impl RuntimeService {
+    /// Compile artifacts from `dir` on a fresh service thread.
+    ///
+    /// Blocks until compilation finished (so failures surface here, not on
+    /// the first batch).
+    pub fn spawn(dir: &std::path::Path) -> Result<RuntimeService> {
+        let meta = Artifacts::discover(dir)?;
+        let meta2 = meta.clone();
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("chimbuko-xla".into())
+            .spawn(move || {
+                let loaded = match LoadedArtifacts::load(meta2) {
+                    Ok(l) => {
+                        let _ = ready_tx.send(Ok(()));
+                        l
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::AdBatch(batch, reply) => {
+                            let _ = reply.send(loaded.run_ad_batch(&batch));
+                        }
+                        Request::PsMerge { a, b, reply } => {
+                            let _ = reply.send(loaded.run_ps_merge(
+                                (&a.0, &a.1, &a.2),
+                                (&b.0, &b.1, &b.2),
+                            ));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .context("spawning runtime service thread")?;
+        ready_rx
+            .recv()
+            .context("runtime service thread died during compile")??;
+        Ok(RuntimeService { tx, join: Some(join), meta })
+    }
+
+    /// A cloneable client handle.
+    pub fn handle(&self) -> RuntimeHandle {
+        RuntimeHandle { tx: self.tx.clone(), batch: self.meta.batch, funcs: self.meta.funcs }
+    }
+
+    pub fn meta(&self) -> &Artifacts {
+        &self.meta
+    }
+}
+
+impl Drop for RuntimeService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Cheap, cloneable, `Send` handle to the service thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Sender<Request>,
+    /// Baked batch capacity.
+    pub batch: usize,
+    /// Baked function capacity.
+    pub funcs: usize,
+}
+
+impl RuntimeHandle {
+    /// Execute one AD batch (inputs must already be padded to capacity).
+    pub fn ad_batch(&self, req: AdBatchRequest) -> Result<AdBatchResponse> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::AdBatch(req, rtx))
+            .map_err(|_| anyhow::anyhow!("runtime service is gone"))?;
+        rrx.recv().context("runtime service dropped reply")?
+    }
+
+    /// Execute the PS pairwise merge.
+    pub fn ps_merge(
+        &self,
+        a: (Vec<f32>, Vec<f32>, Vec<f32>),
+        b: (Vec<f32>, Vec<f32>, Vec<f32>),
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request::PsMerge { a, b, reply: rtx })
+            .map_err(|_| anyhow::anyhow!("runtime service is gone"))?;
+        rrx.recv().context("runtime service dropped reply")?
+    }
+}
+
+/// XLA-backed [`DetectEngine`]: per-function running stats live as dense
+/// `[F]` arrays mirroring the artifact's inputs/outputs; min/max (needed
+/// for the dashboard but not the detection math) are tracked Rust-side.
+pub struct XlaDetector {
+    handle: RuntimeHandle,
+    alpha: f32,
+    min_samples: f32,
+    n: Vec<f32>,
+    mu: Vec<f32>,
+    m2: Vec<f32>,
+    minmax: Vec<(f64, f64)>,
+    /// Mirror of (n, mu, m2, min, max) as a [`StatsTable`] for `view()`.
+    mirror: StatsTable,
+    pending: StatsTable,
+}
+
+impl XlaDetector {
+    pub fn new(handle: RuntimeHandle, alpha: f64, min_samples: u64) -> XlaDetector {
+        let f = handle.funcs;
+        XlaDetector {
+            handle,
+            alpha: alpha as f32,
+            min_samples: min_samples as f32,
+            n: vec![0.0; f],
+            mu: vec![0.0; f],
+            m2: vec![0.0; f],
+            minmax: vec![(f64::INFINITY, f64::NEG_INFINITY); f],
+            mirror: StatsTable::new(),
+            pending: StatsTable::new(),
+        }
+    }
+
+    fn refresh_mirror(&mut self, touched: impl Iterator<Item = u32>) {
+        for fid in touched {
+            let i = fid as usize;
+            let (mn, mx) = self.minmax[i];
+            self.mirror.replace(
+                fid,
+                RunStats::from_raw(
+                    self.n[i] as u64,
+                    self.mu[i] as f64,
+                    self.m2[i] as f64,
+                    mn,
+                    mx,
+                ),
+            );
+        }
+    }
+}
+
+impl DetectEngine for XlaDetector {
+    fn detect(&mut self, records: Vec<ExecRecord>) -> Vec<Labeled> {
+        let cap = self.handle.batch;
+        let f = self.handle.funcs;
+        let mut out = Vec::with_capacity(records.len());
+        for chunk in records.chunks(cap) {
+            let mut exec_us = vec![0.0f32; cap];
+            let mut fid = vec![0i32; cap];
+            let mut valid = vec![0.0f32; cap];
+            for (i, r) in chunk.iter().enumerate() {
+                let v = r.inclusive_us() as f64;
+                debug_assert!(
+                    (r.fid as usize) < f,
+                    "fid {} exceeds artifact capacity {f}",
+                    r.fid
+                );
+                exec_us[i] = v as f32;
+                fid[i] = (r.fid as usize).min(f - 1) as i32;
+                valid[i] = 1.0;
+                let mm = &mut self.minmax[fid[i] as usize];
+                mm.0 = mm.0.min(v);
+                mm.1 = mm.1.max(v);
+                self.pending.push(r.fid, v);
+            }
+            let resp = self
+                .handle
+                .ad_batch(AdBatchRequest {
+                    exec_us,
+                    fid,
+                    valid,
+                    n: self.n.clone(),
+                    mu: self.mu.clone(),
+                    m2: self.m2.clone(),
+                    alpha: self.alpha,
+                    min_samples: self.min_samples,
+                })
+                .expect("xla ad_batch failed");
+            self.n = resp.n;
+            self.mu = resp.mu;
+            self.m2 = resp.m2;
+            self.refresh_mirror(chunk.iter().map(|r| r.fid));
+            for (i, r) in chunk.iter().enumerate() {
+                let label = match resp.labels[i] {
+                    1 => Label::AnomalyHigh,
+                    -1 => Label::AnomalyLow,
+                    _ => Label::Normal,
+                };
+                out.push(Labeled {
+                    rec: r.clone(),
+                    label,
+                    score: resp.scores[i] as f64,
+                });
+            }
+        }
+        out
+    }
+
+    fn take_pending(&mut self) -> StatsTable {
+        std::mem::take(&mut self.pending)
+    }
+
+    fn adopt_global(&mut self, global: &StatsTable) {
+        for (fid, st) in global.iter() {
+            let i = fid as usize;
+            if i >= self.n.len() {
+                continue;
+            }
+            self.n[i] = st.count() as f32;
+            self.mu[i] = st.mean() as f32;
+            self.m2[i] = st.m2() as f32;
+            self.minmax[i].0 = self.minmax[i].0.min(st.min());
+            self.minmax[i].1 = self.minmax[i].1.max(st.max());
+            self.mirror.replace(fid, *st);
+        }
+    }
+
+    fn view(&self) -> &StatsTable {
+        &self.mirror
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Integration tests that need compiled artifacts live in
+    // rust/tests/xla_runtime.rs (they require `make artifacts` to have
+    // run). Unit-testable parts:
+    use super::*;
+
+    #[test]
+    fn artifacts_discover_rejects_missing_dir() {
+        let err = Artifacts::discover(std::path::Path::new("/nonexistent-dir-xyz"));
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("make artifacts"), "msg: {msg}");
+    }
+
+    #[test]
+    fn xla_detector_label_mapping() {
+        // Label codes used by the artifact.
+        assert_eq!(Label::Normal.as_str(), "normal");
+        let codes = [(1, Label::AnomalyHigh), (-1, Label::AnomalyLow), (0, Label::Normal)];
+        for (code, want) in codes {
+            let got = match code {
+                1 => Label::AnomalyHigh,
+                -1 => Label::AnomalyLow,
+                _ => Label::Normal,
+            };
+            assert_eq!(got, want);
+        }
+    }
+}
+
+/// Fold many rank deltas into one table with the ps_merge artifact —
+/// used by experiment benches to exercise the L2 merge path end-to-end.
+pub fn fold_tables_xla(
+    handle: &RuntimeHandle,
+    tables: &[HashMap<u32, RunStats>],
+) -> Result<HashMap<u32, RunStats>> {
+    let f = handle.funcs;
+    let mut acc = (vec![0.0f32; f], vec![0.0f32; f], vec![0.0f32; f]);
+    for t in tables {
+        let mut b = (vec![0.0f32; f], vec![0.0f32; f], vec![0.0f32; f]);
+        for (fid, st) in t {
+            let i = *fid as usize;
+            if i < f {
+                b.0[i] = st.count() as f32;
+                b.1[i] = st.mean() as f32;
+                b.2[i] = st.m2() as f32;
+            }
+        }
+        acc = handle.ps_merge(acc, b)?;
+    }
+    let mut out = HashMap::new();
+    for i in 0..f {
+        if acc.0[i] > 0.0 {
+            out.insert(
+                i as u32,
+                RunStats::from_raw(acc.0[i] as u64, acc.1[i] as f64, acc.2[i] as f64, 0.0, 0.0),
+            );
+        }
+    }
+    Ok(out)
+}

@@ -1,0 +1,147 @@
+//! Log-scale latency histogram — used by the viz dashboard for runtime
+//! distributions and by the perf harness for percentile reporting without
+//! retaining raw samples.
+
+/// Histogram over `[1µs, ~1e6s)` with `buckets_per_decade` log buckets.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    buckets_per_decade: usize,
+    total: u64,
+    underflow: u64,
+}
+
+const DECADES: usize = 12;
+
+impl Histogram {
+    pub fn new(buckets_per_decade: usize) -> Self {
+        assert!(buckets_per_decade > 0);
+        Histogram {
+            counts: vec![0; DECADES * buckets_per_decade],
+            buckets_per_decade,
+            total: 0,
+            underflow: 0,
+        }
+    }
+
+    fn bucket_of(&self, v: f64) -> Option<usize> {
+        if !(v >= 1.0) {
+            return None; // underflow or NaN
+        }
+        let idx = (v.log10() * self.buckets_per_decade as f64) as usize;
+        Some(idx.min(self.counts.len() - 1))
+    }
+
+    /// Record one value (µs).
+    pub fn record(&mut self, v: f64) {
+        self.total += 1;
+        match self.bucket_of(v) {
+            Some(i) => self.counts[i] += 1,
+            None => self.underflow += 1,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Approximate quantile (bucket upper edge), `q ∈ [0,1]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut seen = self.underflow;
+        if seen >= target {
+            return 1.0;
+        }
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 10f64.powf((i as f64 + 1.0) / self.buckets_per_decade as f64);
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// Observations currently in the bucket `v` falls into (0 for
+    /// underflow/NaN values) — the HBOS detector's probability lookup.
+    pub fn bucket_count(&self, v: f64) -> u64 {
+        match self.bucket_of(v) {
+            Some(i) => self.counts[i],
+            None => self.underflow,
+        }
+    }
+
+    /// Merge another histogram (same shape).
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.buckets_per_decade, other.buckets_per_decade);
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.underflow += other.underflow;
+    }
+
+    /// Non-empty buckets as `(lower_edge, count)` for rendering.
+    pub fn nonzero_buckets(&self) -> Vec<(f64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (10f64.powf(i as f64 / self.buckets_per_decade as f64), c))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn quantiles_bracket_distribution() {
+        let mut h = Histogram::new(10);
+        let mut rng = Rng::new(2);
+        for _ in 0..50_000 {
+            h.record(rng.lognormal(6.0, 0.5)); // ~ e^6 ≈ 400µs center
+        }
+        let p50 = h.quantile(0.5);
+        // Median of lognormal(6, .5) = e^6 ≈ 403; log-bucket edges are
+        // within one bucket (10^.1 ≈ 1.26×).
+        assert!(p50 > 300.0 && p50 < 550.0, "p50 {p50}");
+        assert!(h.quantile(0.99) > p50);
+        assert!(h.quantile(0.0) <= p50);
+    }
+
+    #[test]
+    fn underflow_and_empty() {
+        let mut h = Histogram::new(4);
+        assert_eq!(h.quantile(0.5), 0.0);
+        h.record(0.5);
+        h.record(f64::NAN);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.quantile(1.0), 1.0);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = Histogram::new(8);
+        let mut b = Histogram::new(8);
+        for v in [10.0, 100.0, 1000.0] {
+            a.record(v);
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 6);
+        assert_eq!(a.nonzero_buckets().iter().map(|(_, c)| c).sum::<u64>(), 6);
+    }
+
+    #[test]
+    fn huge_values_clamp_to_last_bucket() {
+        let mut h = Histogram::new(4);
+        h.record(1e30);
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile(1.0).is_finite());
+    }
+}

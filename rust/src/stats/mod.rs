@@ -1,0 +1,188 @@
+//! Streaming statistics with one-pass parallel merging.
+//!
+//! The parameter server and the on-node AD modules exchange per-function
+//! `(n, μ, M2, min, max)` summaries and combine them with Pébay's update
+//! formulas (the paper's ref. [14]) — commutative and barrier-free, which
+//! is what makes the distributed AD architecture work.
+
+mod histogram;
+mod pebay;
+
+pub use histogram::Histogram;
+pub use pebay::RunStats;
+
+use std::collections::HashMap;
+
+/// Function-id range served by the dense fast path. Real workflows have a
+/// few dozen instrumented functions (the AOT artifact bakes 64 slots), so
+/// the hot detect loop runs on direct indexing; exotic fids spill to a map.
+const DENSE_FUNCS: usize = 256;
+
+/// Per-function statistics table keyed by a dense function id.
+///
+/// This is the object both the on-node AD module (local view) and the
+/// parameter server (global view) maintain; merging tables is elementwise
+/// [`RunStats::merge`]. Storage is a dense array for `fid < 256` (the AD
+/// hot path — no hashing) with a HashMap spill for larger ids.
+#[derive(Clone, Debug, Default)]
+pub struct StatsTable {
+    dense: Vec<RunStats>,
+    spill: HashMap<u32, RunStats>,
+}
+
+impl StatsTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn slot_mut(&mut self, fid: u32) -> &mut RunStats {
+        if (fid as usize) < DENSE_FUNCS {
+            let i = fid as usize;
+            if i >= self.dense.len() {
+                self.dense.resize(i + 1, RunStats::new());
+            }
+            &mut self.dense[i]
+        } else {
+            self.spill.entry(fid).or_default()
+        }
+    }
+
+    /// Observe one execution time for function `fid`.
+    #[inline]
+    pub fn push(&mut self, fid: u32, value: f64) {
+        self.slot_mut(fid).push(value);
+    }
+
+    /// Stats for a function, if any observation exists.
+    #[inline]
+    pub fn get(&self, fid: u32) -> Option<&RunStats> {
+        if (fid as usize) < DENSE_FUNCS {
+            self.dense.get(fid as usize).filter(|s| s.count() > 0)
+        } else {
+            self.spill.get(&fid)
+        }
+    }
+
+    /// Merge another table into this one (Pébay elementwise).
+    pub fn merge(&mut self, other: &StatsTable) {
+        for (fid, st) in other.iter() {
+            self.slot_mut(fid).merge(st);
+        }
+    }
+
+    /// Merge a single function summary (what PS receives from AD modules).
+    pub fn merge_one(&mut self, fid: u32, st: &RunStats) {
+        self.slot_mut(fid).merge(st);
+    }
+
+    /// Replace a function summary (what AD receives back from PS).
+    pub fn replace(&mut self, fid: u32, st: RunStats) {
+        *self.slot_mut(fid) = st;
+    }
+
+    /// Number of functions tracked (with ≥ 1 observation).
+    pub fn len(&self) -> usize {
+        self.dense.iter().filter(|s| s.count() > 0).count() + self.spill.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Iterate (fid, stats) over observed functions, dense ids first.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, &RunStats)> {
+        self.dense
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.count() > 0)
+            .map(|(i, s)| (i as u32, s))
+            .chain(self.spill.iter().map(|(f, s)| (*f, s)))
+    }
+
+    /// Total observation count across all functions.
+    pub fn total_count(&self) -> u64 {
+        self.iter().map(|(_, s)| s.count()).sum()
+    }
+
+    /// Anomaly thresholds `(lo, hi) = μ ∓ α·σ` for `fid` (paper §III-B1).
+    /// `None` until the function has ≥ 2 observations.
+    pub fn thresholds(&self, fid: u32, alpha: f64) -> Option<(f64, f64)> {
+        let st = self.get(fid)?;
+        if st.count() < 2 {
+            return None;
+        }
+        let sd = st.stddev();
+        Some((st.mean() - alpha * sd, st.mean() + alpha * sd))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check_default, vec_of};
+
+    #[test]
+    fn table_push_and_thresholds() {
+        let mut t = StatsTable::new();
+        for v in [10.0, 12.0, 11.0, 9.0, 10.0, 11.0, 200.0_f64.sqrt()] {
+            t.push(7, v);
+        }
+        let (lo, hi) = t.thresholds(7, 6.0).unwrap();
+        let st = t.get(7).unwrap();
+        assert!(lo < st.mean() && st.mean() < hi);
+        assert!(t.thresholds(99, 6.0).is_none());
+    }
+
+    #[test]
+    fn threshold_needs_two_samples() {
+        let mut t = StatsTable::new();
+        t.push(1, 5.0);
+        assert!(t.thresholds(1, 6.0).is_none());
+        t.push(1, 6.0);
+        assert!(t.thresholds(1, 6.0).is_some());
+    }
+
+    #[test]
+    fn merge_tables_equals_union_stream() {
+        check_default("table-merge", |rng, size| {
+            let xs = vec_of(rng, size, |r| (r.usize(5) as u32, r.range_f64(0.0, 100.0)));
+            let ys = vec_of(rng, size, |r| (r.usize(5) as u32, r.range_f64(0.0, 100.0)));
+            let mut a = StatsTable::new();
+            let mut b = StatsTable::new();
+            let mut union = StatsTable::new();
+            for &(f, v) in &xs {
+                a.push(f, v);
+                union.push(f, v);
+            }
+            for &(f, v) in &ys {
+                b.push(f, v);
+                union.push(f, v);
+            }
+            a.merge(&b);
+            for (fid, st) in union.iter() {
+                let got = a.get(fid).ok_or("missing fid after merge")?;
+                if got.count() != st.count() {
+                    return Err(format!("count mismatch fid {fid}"));
+                }
+                if (got.mean() - st.mean()).abs() > 1e-9 {
+                    return Err(format!("mean mismatch fid {fid}"));
+                }
+                if (got.variance() - st.variance()).abs() > 1e-6 {
+                    return Err(format!("variance mismatch fid {fid}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn total_count_sums() {
+        let mut t = StatsTable::new();
+        t.push(0, 1.0);
+        t.push(0, 2.0);
+        t.push(3, 1.0);
+        assert_eq!(t.total_count(), 3);
+        assert_eq!(t.len(), 2);
+    }
+}

@@ -1,0 +1,245 @@
+//! One-pass streaming moments with Pébay pairwise merging.
+//!
+//! `RunStats` carries `(n, μ, M2, min, max)`. `push` is Welford's update;
+//! `merge` is Pébay's parallel combination (Sandia report SAND2008-6212,
+//! the paper's ref. [14]):
+//!
+//! ```text
+//! δ   = μ_b − μ_a
+//! n   = n_a + n_b
+//! μ   = μ_a + δ·n_b/n
+//! M2  = M2_a + M2_b + δ²·n_a·n_b/n
+//! ```
+//!
+//! Both paths are numerically stable for the μs-scale runtimes we feed in.
+
+/// Streaming summary of a scalar population.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RunStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for RunStats {
+    fn default() -> Self {
+        RunStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+}
+
+impl RunStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build directly from raw moments (used when deserializing PS messages
+    /// and when importing results computed by the XLA artifact).
+    pub fn from_raw(n: u64, mean: f64, m2: f64, min: f64, max: f64) -> Self {
+        RunStats { n, mean, m2, min, max }
+    }
+
+    /// Welford single-observation update.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Pébay pairwise merge: `self ← self ⊕ other`.
+    pub fn merge(&mut self, other: &RunStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *other;
+            return;
+        }
+        let na = self.n as f64;
+        let nb = other.n as f64;
+        let n = na + nb;
+        let delta = other.mean - self.mean;
+        self.mean += delta * nb / n;
+        self.m2 += other.m2 + delta * delta * na * nb / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Merged copy without mutating inputs.
+    pub fn merged(mut self, other: &RunStats) -> RunStats {
+        self.merge(other);
+        self
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sum of squared deviations from the mean (aka M2).
+    pub fn m2(&self) -> f64 {
+        self.m2
+    }
+
+    /// Sample variance (n−1 denominator); 0 for n < 2.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check_default, vec_of};
+    use crate::util::rng::Rng;
+
+    fn naive(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = if xs.len() < 2 {
+            0.0
+        } else {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0)
+        };
+        (mean, var)
+    }
+
+    fn from_slice(xs: &[f64]) -> RunStats {
+        let mut s = RunStats::new();
+        for &x in xs {
+            s.push(x);
+        }
+        s
+    }
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let s = from_slice(&xs);
+        let (m, v) = naive(&xs);
+        assert!((s.mean() - m).abs() < 1e-12);
+        assert!((s.variance() - v).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 9.0);
+        assert_eq!(s.count(), 8);
+    }
+
+    #[test]
+    fn empty_stats_are_inert() {
+        let mut a = from_slice(&[1.0, 2.0]);
+        let empty = RunStats::new();
+        let before = a;
+        a.merge(&empty);
+        assert_eq!(a, before);
+        let mut b = RunStats::new();
+        b.merge(&before);
+        assert_eq!(b, before);
+        assert_eq!(RunStats::new().variance(), 0.0);
+        assert_eq!(RunStats::new().min(), 0.0);
+    }
+
+    #[test]
+    fn merge_equals_concatenation_property() {
+        check_default("pebay-merge-eq-concat", |rng, size| {
+            let xs = vec_of(rng, size, |r| r.range_f64(-50.0, 50.0));
+            let ys = vec_of(rng, 1 + size / 2, |r| r.lognormal(2.0, 1.0));
+            let merged = from_slice(&xs).merged(&from_slice(&ys));
+            let mut all = xs.clone();
+            all.extend_from_slice(&ys);
+            let whole = from_slice(&all);
+            if merged.count() != whole.count() {
+                return Err("count".into());
+            }
+            if (merged.mean() - whole.mean()).abs() > 1e-9 * (1.0 + whole.mean().abs()) {
+                return Err(format!("mean {} vs {}", merged.mean(), whole.mean()));
+            }
+            if (merged.variance() - whole.variance()).abs()
+                > 1e-8 * (1.0 + whole.variance().abs())
+            {
+                return Err(format!("var {} vs {}", merged.variance(), whole.variance()));
+            }
+            if merged.min() != whole.min() || merged.max() != whole.max() {
+                return Err("minmax".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_is_commutative_property() {
+        check_default("pebay-commutative", |rng, size| {
+            let xs = vec_of(rng, size, |r| r.range_f64(0.0, 1e6));
+            let ys = vec_of(rng, size.max(1), |r| r.range_f64(0.0, 1e6));
+            let ab = from_slice(&xs).merged(&from_slice(&ys));
+            let ba = from_slice(&ys).merged(&from_slice(&xs));
+            if (ab.mean() - ba.mean()).abs() > 1e-9 * (1.0 + ab.mean().abs()) {
+                return Err("mean not commutative".into());
+            }
+            if (ab.m2() - ba.m2()).abs() > 1e-6 * (1.0 + ab.m2().abs()) {
+                return Err("m2 not commutative".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_is_associative_property() {
+        check_default("pebay-associative", |rng, size| {
+            let a = from_slice(&vec_of(rng, size, |r| r.normal_ms(100.0, 15.0)));
+            let b = from_slice(&vec_of(rng, size.max(1), |r| r.normal_ms(-3.0, 2.0)));
+            let c = from_slice(&vec_of(rng, 1 + size / 3, |r| r.pareto(1.0, 3.0)));
+            let left = a.merged(&b).merged(&c);
+            let right = a.merged(&b.merged(&c));
+            if (left.mean() - right.mean()).abs() > 1e-9 * (1.0 + left.mean().abs()) {
+                return Err("mean not associative".into());
+            }
+            if (left.m2() - right.m2()).abs() > 1e-6 * (1.0 + left.m2().abs()) {
+                return Err("m2 not associative".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stable_for_large_offsets() {
+        // Runtimes near 1e9 µs with tiny variance — catastrophic for the
+        // naive sum-of-squares formula, fine for Welford/Pébay.
+        let mut rng = Rng::new(5);
+        let xs: Vec<f64> = (0..10_000).map(|_| 1e9 + rng.normal()).collect();
+        let half = xs.len() / 2;
+        let merged = from_slice(&xs[..half]).merged(&from_slice(&xs[half..]));
+        assert!((merged.variance() - 1.0).abs() < 0.1, "var {}", merged.variance());
+    }
+
+    #[test]
+    fn from_raw_roundtrip() {
+        let s = from_slice(&[1.0, 2.0, 3.0]);
+        let r = RunStats::from_raw(s.count(), s.mean(), s.m2(), s.min(), s.max());
+        assert_eq!(s, r);
+    }
+}

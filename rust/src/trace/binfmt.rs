@@ -1,0 +1,229 @@
+//! BP-like binary trace codec.
+//!
+//! Stand-in for TAU's ADIOS2-BP trace dumps: the "NWChem + TAU" baseline of
+//! Fig 9 writes every event to disk in this format, and its byte count is
+//! the numerator of the paper's data-reduction factors. Layout per frame:
+//!
+//! ```text
+//! [magic u32][version u16][app u32][rank u32][step u64][n_events u32]
+//! n_events × records, each tagged:
+//!   0x01 func: fid u32, kind u8, ts u64                    ([+ctx], 14 B)
+//!   0x02 comm: kind u8, partner u32, tag u32, bytes u64, ts u64   (26 B)
+//! ```
+//!
+//! TAU's binary trace record is ~24 B/event; ours is comparable, so raw
+//! byte counts are a fair proxy for the paper's GB axes.
+
+use super::event::{CommEvent, CommKind, Event, EventCtx, FuncEvent, FuncKind, StepFrame};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+const MAGIC: u32 = 0x43484D42; // "CHMB"
+const VERSION: u16 = 1;
+const TAG_FUNC: u8 = 0x01;
+const TAG_COMM: u8 = 0x02;
+
+/// Serialize one frame to a writer; returns bytes written.
+pub fn write_frame<W: Write>(w: &mut W, frame: &StepFrame) -> Result<u64> {
+    let mut buf = Vec::with_capacity(32 + frame.events.len() * 24);
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&frame.app.to_le_bytes());
+    buf.extend_from_slice(&frame.rank.to_le_bytes());
+    buf.extend_from_slice(&frame.step.to_le_bytes());
+    buf.extend_from_slice(&(frame.events.len() as u32).to_le_bytes());
+    for ev in &frame.events {
+        match ev {
+            Event::Func(f) => {
+                buf.push(TAG_FUNC);
+                buf.extend_from_slice(&f.fid.to_le_bytes());
+                buf.push(match f.kind {
+                    FuncKind::Entry => 0,
+                    FuncKind::Exit => 1,
+                });
+                buf.extend_from_slice(&f.ts.to_le_bytes());
+            }
+            Event::Comm(c) => {
+                buf.push(TAG_COMM);
+                buf.push(match c.kind {
+                    CommKind::Send => 0,
+                    CommKind::Recv => 1,
+                });
+                buf.extend_from_slice(&c.partner.to_le_bytes());
+                buf.extend_from_slice(&c.tag.to_le_bytes());
+                buf.extend_from_slice(&c.bytes.to_le_bytes());
+                buf.extend_from_slice(&c.ts.to_le_bytes());
+            }
+        }
+    }
+    w.write_all(&buf).context("writing frame")?;
+    Ok(buf.len() as u64)
+}
+
+/// Size in bytes `write_frame` would produce, without allocating.
+pub fn frame_encoded_size(frame: &StepFrame) -> u64 {
+    let mut size = 4 + 2 + 4 + 4 + 8 + 4;
+    for ev in &frame.events {
+        size += match ev {
+            Event::Func(_) => 1 + 4 + 1 + 8,
+            Event::Comm(_) => 1 + 1 + 4 + 4 + 8 + 8,
+        };
+    }
+    size as u64
+}
+
+fn read_exact<R: Read, const N: usize>(r: &mut R) -> Result<[u8; N]> {
+    let mut b = [0u8; N];
+    r.read_exact(&mut b).context("short read")?;
+    Ok(b)
+}
+
+/// Deserialize one frame; `Ok(None)` at clean EOF.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<StepFrame>> {
+    let mut magic = [0u8; 4];
+    match r.read_exact(&mut magic) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    if u32::from_le_bytes(magic) != MAGIC {
+        bail!("bad frame magic");
+    }
+    let version = u16::from_le_bytes(read_exact::<_, 2>(r)?);
+    if version != VERSION {
+        bail!("unsupported frame version {version}");
+    }
+    let app = u32::from_le_bytes(read_exact::<_, 4>(r)?);
+    let rank = u32::from_le_bytes(read_exact::<_, 4>(r)?);
+    let step = u64::from_le_bytes(read_exact::<_, 8>(r)?);
+    let n = u32::from_le_bytes(read_exact::<_, 4>(r)?) as usize;
+    if n > 100_000_000 {
+        bail!("implausible event count {n}");
+    }
+    let ctx = EventCtx { app, rank, thread: 0 };
+    let mut frame = StepFrame { app, rank, step, events: Vec::with_capacity(n) };
+    for _ in 0..n {
+        let tag = read_exact::<_, 1>(r)?[0];
+        match tag {
+            TAG_FUNC => {
+                let fid = u32::from_le_bytes(read_exact::<_, 4>(r)?);
+                let kind = match read_exact::<_, 1>(r)?[0] {
+                    0 => FuncKind::Entry,
+                    1 => FuncKind::Exit,
+                    k => bail!("bad func kind {k}"),
+                };
+                let ts = u64::from_le_bytes(read_exact::<_, 8>(r)?);
+                frame.events.push(Event::Func(FuncEvent { ctx, fid, kind, ts }));
+            }
+            TAG_COMM => {
+                let kind = match read_exact::<_, 1>(r)?[0] {
+                    0 => CommKind::Send,
+                    1 => CommKind::Recv,
+                    k => bail!("bad comm kind {k}"),
+                };
+                let partner = u32::from_le_bytes(read_exact::<_, 4>(r)?);
+                let tag_ = u32::from_le_bytes(read_exact::<_, 4>(r)?);
+                let bytes = u64::from_le_bytes(read_exact::<_, 8>(r)?);
+                let ts = u64::from_le_bytes(read_exact::<_, 8>(r)?);
+                frame
+                    .events
+                    .push(Event::Comm(CommEvent { ctx, kind, partner, tag: tag_, bytes, ts }));
+            }
+            t => bail!("bad event tag {t:#x}"),
+        }
+    }
+    Ok(Some(frame))
+}
+
+/// Read all frames from a reader.
+pub fn read_all<R: Read>(r: &mut R) -> Result<Vec<StepFrame>> {
+    let mut frames = Vec::new();
+    while let Some(f) = read_frame(r)? {
+        frames.push(f);
+    }
+    Ok(frames)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::gen::{toy_grammar, RankTracer};
+    use crate::util::prop::check_default;
+    use crate::util::rng::Rng;
+
+    fn sample_frames(n: usize, unfiltered: bool) -> Vec<StepFrame> {
+        let (g, _) = toy_grammar();
+        let mut t = RankTracer::new(g, 0, 2, 8, unfiltered, Rng::new(21));
+        (0..n).map(|_| t.step()).collect()
+    }
+
+    #[test]
+    fn roundtrip_single_frame() {
+        let frames = sample_frames(1, true);
+        let mut buf = Vec::new();
+        let n = write_frame(&mut buf, &frames[0]).unwrap();
+        assert_eq!(n as usize, buf.len());
+        assert_eq!(n, frame_encoded_size(&frames[0]));
+        let back = read_frame(&mut buf.as_slice()).unwrap().unwrap();
+        assert_eq!(back.events, frames[0].events);
+        assert_eq!(back.step, frames[0].step);
+    }
+
+    #[test]
+    fn roundtrip_stream_of_frames() {
+        let frames = sample_frames(7, false);
+        let mut buf = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let back = read_all(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.len(), frames.len());
+        for (a, b) in back.iter().zip(&frames) {
+            assert_eq!(a.events, b.events);
+        }
+    }
+
+    #[test]
+    fn empty_input_is_clean_eof() {
+        assert!(read_frame(&mut (&[] as &[u8])).unwrap().is_none());
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &sample_frames(1, false)[0]).unwrap();
+        buf[0] ^= 0xFF;
+        assert!(read_frame(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn truncated_frame_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &sample_frames(1, false)[0]).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(read_frame(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn encoded_size_matches_property() {
+        check_default("binfmt-size", |rng, size| {
+            let (g, _) = toy_grammar();
+            let mut t = RankTracer::new(g, 0, 1, 4, size % 2 == 0, Rng::new(rng.next_u64()));
+            let f = t.step();
+            let mut buf = Vec::new();
+            let n = write_frame(&mut buf, &f).map_err(|e| e.to_string())?;
+            if n != frame_encoded_size(&f) || n as usize != buf.len() {
+                return Err("size mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bytes_per_event_is_tau_like() {
+        // Sanity: ~14–26 B/event, comparable to TAU binary trace records.
+        let f = &sample_frames(1, true)[0];
+        let per_event = frame_encoded_size(f) as f64 / f.events.len() as f64;
+        assert!(per_event > 10.0 && per_event < 30.0, "B/event {per_event}");
+    }
+}

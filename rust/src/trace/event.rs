@@ -1,0 +1,258 @@
+//! Trace event model (paper §III-A).
+//!
+//! Two event families arrive from the instrumentation layer, both carrying
+//! the common identifiers (application, MPI rank, thread) and a microsecond
+//! timestamp:
+//!
+//! * **function events** — function id + ENTRY/EXIT;
+//! * **communication events** — SEND/RECV with partner rank, tag and bytes.
+//!
+//! Events within one rank's stream are sorted by timestamp, which is what
+//! lets the AD module reconstruct the call stack online.
+
+use crate::util::json::Json;
+
+/// Function event type.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum FuncKind {
+    Entry,
+    Exit,
+}
+
+/// Communication event type.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum CommKind {
+    Send,
+    Recv,
+}
+
+/// Common identifiers every event carries.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub struct EventCtx {
+    /// Application index within the workflow (paper: two apps).
+    pub app: u32,
+    /// Global MPI rank.
+    pub rank: u32,
+    /// OS thread within the rank.
+    pub thread: u32,
+}
+
+/// A function ENTRY/EXIT record.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct FuncEvent {
+    pub ctx: EventCtx,
+    /// Dense function identifier (see [`FuncRegistry`]).
+    pub fid: u32,
+    pub kind: FuncKind,
+    /// Timestamp, microseconds on the rank's clock.
+    pub ts: u64,
+}
+
+/// A communication SEND/RECV record.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct CommEvent {
+    pub ctx: EventCtx,
+    pub kind: CommKind,
+    /// Peer rank.
+    pub partner: u32,
+    /// Message tag.
+    pub tag: u32,
+    /// Payload size in bytes.
+    pub bytes: u64,
+    pub ts: u64,
+}
+
+/// One record in a rank's time-sorted stream.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub enum Event {
+    Func(FuncEvent),
+    Comm(CommEvent),
+}
+
+impl Event {
+    pub fn ts(&self) -> u64 {
+        match self {
+            Event::Func(f) => f.ts,
+            Event::Comm(c) => c.ts,
+        }
+    }
+
+    pub fn ctx(&self) -> EventCtx {
+        match self {
+            Event::Func(f) => f.ctx,
+            Event::Comm(c) => c.ctx,
+        }
+    }
+}
+
+/// Maps function ids to names and instrumentation attributes.
+///
+/// `hot` marks high-frequency/short-duration functions that the paper's
+/// *filtered* instrumentation drops at compile/run time (§VI-B2).
+#[derive(Clone, Debug, Default)]
+pub struct FuncRegistry {
+    names: Vec<String>,
+    hot: Vec<bool>,
+}
+
+impl FuncRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a function; returns its dense id. Idempotent on names.
+    pub fn register(&mut self, name: &str, hot: bool) -> u32 {
+        if let Some(fid) = self.lookup(name) {
+            return fid;
+        }
+        self.names.push(name.to_string());
+        self.hot.push(hot);
+        (self.names.len() - 1) as u32
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<u32> {
+        self.names.iter().position(|n| n == name).map(|i| i as u32)
+    }
+
+    pub fn name(&self, fid: u32) -> &str {
+        self.names.get(fid as usize).map(|s| s.as_str()).unwrap_or("<unknown>")
+    }
+
+    pub fn is_hot(&self, fid: u32) -> bool {
+        self.hot.get(fid as usize).copied().unwrap_or(false)
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// JSON table for provenance metadata.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.names
+                .iter()
+                .enumerate()
+                .map(|(i, n)| {
+                    Json::obj(vec![
+                        ("fid", Json::num(i as f64)),
+                        ("name", Json::str(n.as_str())),
+                        ("hot", Json::Bool(self.hot[i])),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// One streamed frame: all events of `(app, rank)` for one trace step,
+/// time-sorted. This is the unit the SST engine moves and the on-node AD
+/// module consumes (paper: once-per-second flush).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StepFrame {
+    pub app: u32,
+    pub rank: u32,
+    /// Step ("frame") index; the viz timeline's x-axis.
+    pub step: u64,
+    pub events: Vec<Event>,
+}
+
+impl StepFrame {
+    pub fn new(app: u32, rank: u32, step: u64) -> Self {
+        StepFrame { app, rank, step, events: Vec::new() }
+    }
+
+    /// True if events are sorted by timestamp (AD module precondition).
+    pub fn is_sorted(&self) -> bool {
+        self.events.windows(2).all(|w| w[0].ts() <= w[1].ts())
+    }
+
+    /// Count of function events.
+    pub fn func_event_count(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e, Event::Func(_))).count()
+    }
+
+    /// Count of communication events.
+    pub fn comm_event_count(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e, Event::Comm(_))).count()
+    }
+
+    /// Time span `(first_ts, last_ts)` or None when empty.
+    pub fn span(&self) -> Option<(u64, u64)> {
+        match (self.events.first(), self.events.last()) {
+            (Some(a), Some(b)) => Some((a.ts(), b.ts())),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> EventCtx {
+        EventCtx { app: 0, rank: 3, thread: 0 }
+    }
+
+    #[test]
+    fn registry_register_lookup() {
+        let mut r = FuncRegistry::new();
+        let a = r.register("MD_NEWTON", false);
+        let b = r.register("VEC_AXPY", true);
+        assert_eq!(r.register("MD_NEWTON", false), a);
+        assert_eq!(r.lookup("VEC_AXPY"), Some(b));
+        assert_eq!(r.name(a), "MD_NEWTON");
+        assert!(r.is_hot(b));
+        assert!(!r.is_hot(a));
+        assert_eq!(r.name(999), "<unknown>");
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn registry_json_is_valid() {
+        let mut r = FuncRegistry::new();
+        r.register("A", false);
+        r.register("B", true);
+        let j = r.to_json().to_string();
+        crate::util::json::parse(&j).unwrap();
+    }
+
+    #[test]
+    fn frame_sorted_and_counts() {
+        let mut f = StepFrame::new(0, 3, 7);
+        f.events.push(Event::Func(FuncEvent {
+            ctx: ctx(),
+            fid: 0,
+            kind: FuncKind::Entry,
+            ts: 10,
+        }));
+        f.events.push(Event::Comm(CommEvent {
+            ctx: ctx(),
+            kind: CommKind::Send,
+            partner: 1,
+            tag: 9,
+            bytes: 128,
+            ts: 12,
+        }));
+        f.events.push(Event::Func(FuncEvent {
+            ctx: ctx(),
+            fid: 0,
+            kind: FuncKind::Exit,
+            ts: 20,
+        }));
+        assert!(f.is_sorted());
+        assert_eq!(f.func_event_count(), 2);
+        assert_eq!(f.comm_event_count(), 1);
+        assert_eq!(f.span(), Some((10, 20)));
+        f.events.swap(0, 2);
+        assert!(!f.is_sorted());
+    }
+
+    #[test]
+    fn empty_frame_span() {
+        assert_eq!(StepFrame::new(0, 0, 0).span(), None);
+    }
+}

@@ -1,0 +1,75 @@
+//! Post-hoc event filtering.
+//!
+//! The paper's *filtered* runs drop high-frequency, short-duration
+//! functions at instrumentation time (chosen with NWChem domain
+//! scientists). Our generator can already skip them (`unfiltered=false`);
+//! this module additionally filters *existing* streams — used by offline
+//! replay and by tests that need both views of one trace.
+
+use super::event::{Event, FuncRegistry, StepFrame};
+
+/// Remove function events whose fid is marked hot in `reg`.
+/// Comm events are kept (TAU's MPI interposition is always on).
+pub fn filter_frame(frame: &StepFrame, reg: &FuncRegistry) -> StepFrame {
+    StepFrame {
+        app: frame.app,
+        rank: frame.rank,
+        step: frame.step,
+        events: frame
+            .events
+            .iter()
+            .filter(|e| match e {
+                Event::Func(f) => !reg.is_hot(f.fid),
+                Event::Comm(_) => true,
+            })
+            .copied()
+            .collect(),
+    }
+}
+
+/// Filter a whole stream.
+pub fn filter_frames(frames: &[StepFrame], reg: &FuncRegistry) -> Vec<StepFrame> {
+    frames.iter().map(|f| filter_frame(f, reg)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::event::FuncKind;
+    use crate::trace::gen::{toy_grammar, RankTracer};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn filtering_removes_only_hot_functions() {
+        let (g, reg) = toy_grammar();
+        let mut t = RankTracer::new(g, 0, 1, 4, true, Rng::new(5));
+        let raw = t.step();
+        let filtered = filter_frame(&raw, &reg);
+        assert!(filtered.func_event_count() < raw.func_event_count());
+        assert_eq!(filtered.comm_event_count(), raw.comm_event_count());
+        for e in &filtered.events {
+            if let Event::Func(f) = e {
+                assert!(!reg.is_hot(f.fid));
+            }
+        }
+        // Still balanced and sorted.
+        assert!(filtered.is_sorted());
+        let mut depth = 0i64;
+        for e in &filtered.events {
+            if let Event::Func(f) = e {
+                depth += if f.kind == FuncKind::Entry { 1 } else { -1 };
+                assert!(depth >= 0);
+            }
+        }
+        assert_eq!(depth, 0);
+    }
+
+    #[test]
+    fn filtering_filtered_stream_is_identity() {
+        let (g, reg) = toy_grammar();
+        let mut t = RankTracer::new(g, 0, 1, 4, false, Rng::new(5));
+        let f = t.step();
+        let ff = filter_frame(&f, &reg);
+        assert_eq!(f.events, ff.events);
+    }
+}

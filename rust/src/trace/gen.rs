@@ -1,0 +1,538 @@
+//! Generic call-grammar trace generator.
+//!
+//! Substitutes for TAU-instrumented applications (we have no Summit, no
+//! NWChem): a [`CallGrammar`] describes functions with duration models,
+//! child calls, communication ops and *anomaly processes*; the
+//! [`RankTracer`] walks the grammar once per step and emits a time-sorted
+//! [`StepFrame`] exactly like a TAU/ADIOS2 stream would deliver. The AD
+//! pipeline only ever sees the event stream, so behavioural fidelity to
+//! the paper reduces to: sorted timestamps, properly nested ENTRY/EXIT,
+//! comm events attributed to enclosing functions, and heavy-tailed /
+//! injected anomalies on the right (rank, function) combinations.
+
+use super::event::{
+    CommEvent, CommKind, Event, EventCtx, FuncEvent, FuncKind, FuncRegistry, StepFrame,
+};
+use crate::util::rng::Rng;
+
+/// Communication op performed inside a function body.
+#[derive(Clone, Debug)]
+pub struct CommSpec {
+    pub kind: CommKind,
+    /// Partner selection.
+    pub partner: PartnerSel,
+    /// Message tag.
+    pub tag: u32,
+    /// Mean payload bytes (exponential draw around it).
+    pub mean_bytes: f64,
+}
+
+/// How a comm partner rank is chosen.
+#[derive(Clone, Debug)]
+pub enum PartnerSel {
+    /// Fixed rank (e.g. reduction root 0).
+    Fixed(u32),
+    /// Ring neighbour at offset (rank ± off mod world).
+    Neighbor(i32),
+    /// Uniformly random other rank.
+    Random,
+}
+
+/// One function's generative model.
+#[derive(Clone, Debug)]
+pub struct FuncSpec {
+    pub fid: u32,
+    /// Lognormal body-time parameters (µs): `exp(N(mu, sigma))`.
+    pub mu: f64,
+    pub sigma: f64,
+    /// Child calls, in program order: `(fid, repeat_count)`.
+    pub children: Vec<(u32, u32)>,
+    /// Comm ops executed in the body.
+    pub comms: Vec<CommSpec>,
+    /// High-frequency helper called `hot_fanout` times from this body when
+    /// the run is *unfiltered* (paper's dropped functions).
+    pub hot_child: Option<(u32, u32)>,
+}
+
+impl FuncSpec {
+    pub fn leaf(fid: u32, mu: f64, sigma: f64) -> Self {
+        FuncSpec { fid, mu, sigma, children: Vec::new(), comms: Vec::new(), hot_child: None }
+    }
+}
+
+/// A multiplicative or additive runtime perturbation, targeted at one
+/// function and a rank predicate — this is how the case-study anomalies
+/// (Figs 10–13) are injected.
+#[derive(Clone, Debug)]
+pub struct AnomalyProcess {
+    /// Human-readable label (shows up in run metadata).
+    pub name: String,
+    /// Target function.
+    pub fid: u32,
+    /// Applies only when this predicate holds for the rank.
+    pub ranks: RankPred,
+    /// Per-invocation probability.
+    pub prob: f64,
+    /// Effect on the targeted invocation.
+    pub effect: AnomalyEffect,
+}
+
+/// Rank predicate for anomaly targeting.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RankPred {
+    All,
+    Only(u32),
+    Except(u32),
+}
+
+impl RankPred {
+    pub fn matches(&self, rank: u32) -> bool {
+        match self {
+            RankPred::All => true,
+            RankPred::Only(r) => rank == *r,
+            RankPred::Except(r) => rank != *r,
+        }
+    }
+}
+
+/// What an anomaly does to the targeted call.
+#[derive(Clone, Debug)]
+pub enum AnomalyEffect {
+    /// Multiply body time by a factor drawn uniformly from the range.
+    SlowBody { factor_lo: f64, factor_hi: f64 },
+    /// Insert a delay (µs) *before* the call (launch delay — Fig 10's
+    /// `MD_FORCES` pattern: the gap stretches the parent, not the child).
+    LaunchDelay { us_lo: f64, us_hi: f64 },
+    /// Replace body time with a Pareto draw (heavy tail — `SP_GETXBL`).
+    HeavyTail { xm: f64, alpha: f64 },
+}
+
+/// A full application grammar: specs + roots + anomaly processes.
+#[derive(Clone, Debug)]
+pub struct CallGrammar {
+    pub specs: Vec<FuncSpec>,
+    /// Root function invoked once per iteration.
+    pub root: u32,
+    /// Root iterations per trace step.
+    pub iters_per_step: u32,
+    pub anomalies: Vec<AnomalyProcess>,
+}
+
+impl CallGrammar {
+    fn spec(&self, fid: u32) -> &FuncSpec {
+        &self.specs[fid as usize]
+    }
+
+    /// Validate: specs dense by fid, children/hot/anomaly fids in range,
+    /// and the call graph is acyclic (generation would not terminate).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (i, s) in self.specs.iter().enumerate() {
+            anyhow::ensure!(s.fid as usize == i, "spec {i} has fid {}", s.fid);
+            for (c, n) in &s.children {
+                anyhow::ensure!((*c as usize) < self.specs.len(), "child fid {c} out of range");
+                anyhow::ensure!(*n > 0, "child repeat 0 in spec {i}");
+            }
+            if let Some((c, _)) = s.hot_child {
+                anyhow::ensure!((c as usize) < self.specs.len(), "hot fid {c} out of range");
+            }
+        }
+        anyhow::ensure!((self.root as usize) < self.specs.len(), "root out of range");
+        for a in &self.anomalies {
+            anyhow::ensure!((a.fid as usize) < self.specs.len(), "anomaly fid out of range");
+            anyhow::ensure!((0.0..=1.0).contains(&a.prob), "anomaly prob out of range");
+        }
+        // Cycle check: DFS from every node.
+        let n = self.specs.len();
+        let mut state = vec![0u8; n]; // 0 unvisited, 1 in-stack, 2 done
+        fn dfs(g: &CallGrammar, f: usize, state: &mut [u8]) -> bool {
+            if state[f] == 1 {
+                return false;
+            }
+            if state[f] == 2 {
+                return true;
+            }
+            state[f] = 1;
+            for (c, _) in &g.specs[f].children {
+                if !dfs(g, *c as usize, state) {
+                    return false;
+                }
+            }
+            state[f] = 2;
+            true
+        }
+        for f in 0..n {
+            anyhow::ensure!(dfs(self, f, &mut state), "call graph has a cycle at fid {f}");
+        }
+        Ok(())
+    }
+}
+
+/// Per-rank trace generator: owns a virtual clock and an RNG stream and
+/// produces one [`StepFrame`] per call to [`RankTracer::step`].
+///
+/// The grammar is held separately from the mutable walk state so the
+/// recursive emitter borrows specs by reference — no per-call clones on
+/// the hot path (§Perf).
+pub struct RankTracer {
+    grammar: CallGrammar,
+    st: TracerState,
+    next_step: u64,
+}
+
+/// Mutable walk state (clock + rng + identity).
+struct TracerState {
+    ctx: EventCtx,
+    world: u32,
+    /// Include hot (high-frequency) helpers — the *unfiltered* run.
+    unfiltered: bool,
+    clock_us: u64,
+    rng: Rng,
+}
+
+impl RankTracer {
+    pub fn new(
+        grammar: CallGrammar,
+        app: u32,
+        rank: u32,
+        world: u32,
+        unfiltered: bool,
+        rng: Rng,
+    ) -> Self {
+        RankTracer {
+            grammar,
+            st: TracerState {
+                ctx: EventCtx { app, rank, thread: 0 },
+                world,
+                unfiltered,
+                // Stagger clocks so ranks are not phase-locked.
+                clock_us: 1_000_000 + (rank as u64) * 137,
+                rng,
+            },
+            next_step: 0,
+        }
+    }
+
+    /// Current virtual time (µs).
+    pub fn now(&self) -> u64 {
+        self.st.clock_us
+    }
+
+    /// Generate the next step frame.
+    pub fn step(&mut self) -> StepFrame {
+        let mut frame = StepFrame::new(self.st.ctx.app, self.st.ctx.rank, self.next_step);
+        self.next_step += 1;
+        for _ in 0..self.grammar.iters_per_step {
+            self.st.emit_call(&self.grammar, self.grammar.root, &mut frame.events);
+            // Inter-iteration idle time.
+            self.st.clock_us += self.st.rng.range_u64(5, 50);
+        }
+        debug_assert!(frame.is_sorted());
+        frame
+    }
+}
+
+impl TracerState {
+    /// Recursively emit one function invocation.
+    fn emit_call(&mut self, g: &CallGrammar, fid: u32, out: &mut Vec<Event>) {
+        // Launch-delay anomalies stretch the *gap* before ENTRY.
+        let mut body_scale = 1.0f64;
+        let mut heavy: Option<f64> = None;
+        for a in &g.anomalies {
+            if a.fid != fid || !a.ranks.matches(self.ctx.rank) {
+                continue;
+            }
+            if !self.rng.chance(a.prob) {
+                continue;
+            }
+            match a.effect {
+                AnomalyEffect::LaunchDelay { us_lo, us_hi } => {
+                    self.clock_us += self.rng.range_f64(us_lo, us_hi) as u64;
+                }
+                AnomalyEffect::SlowBody { factor_lo, factor_hi } => {
+                    body_scale *= self.rng.range_f64(factor_lo, factor_hi);
+                }
+                AnomalyEffect::HeavyTail { xm, alpha } => {
+                    heavy = Some(self.rng.pareto(xm, alpha));
+                }
+            }
+        }
+
+        let spec = g.spec(fid);
+        out.push(Event::Func(FuncEvent {
+            ctx: self.ctx,
+            fid,
+            kind: FuncKind::Entry,
+            ts: self.clock_us,
+        }));
+
+        // Body time: lognormal (or heavy-tail override), split across the
+        // segments between child calls.
+        let body_us = match heavy {
+            Some(h) => h,
+            None => self.rng.lognormal(spec.mu, spec.sigma) * body_scale,
+        };
+        let segments = (spec.children.iter().map(|(_, n)| *n as usize).sum::<usize>()
+            + spec.comms.len()
+            + 1)
+            .max(1);
+        let seg_us = (body_us / segments as f64).max(1.0) as u64;
+
+        // Comm ops first (paper: comm events map to the enclosing function).
+        for comm in &spec.comms {
+            self.clock_us += seg_us.max(1);
+            let partner = match comm.partner {
+                PartnerSel::Fixed(r) => r.min(self.world.saturating_sub(1)),
+                PartnerSel::Neighbor(off) => {
+                    let w = self.world.max(1) as i64;
+                    (((self.ctx.rank as i64 + off as i64) % w + w) % w) as u32
+                }
+                PartnerSel::Random => {
+                    if self.world <= 1 {
+                        self.ctx.rank
+                    } else {
+                        let mut p = self.rng.usize(self.world as usize - 1) as u32;
+                        if p >= self.ctx.rank {
+                            p += 1;
+                        }
+                        p
+                    }
+                }
+            };
+            let bytes = self.rng.exponential(1.0 / comm.mean_bytes.max(1.0)).max(1.0) as u64;
+            out.push(Event::Comm(CommEvent {
+                ctx: self.ctx,
+                kind: comm.kind,
+                partner,
+                tag: comm.tag,
+                bytes,
+                ts: self.clock_us,
+            }));
+        }
+
+        // Children in program order.
+        for &(child, reps) in &spec.children {
+            for _ in 0..reps {
+                self.clock_us += seg_us;
+                self.emit_call(g, child, out);
+            }
+        }
+
+        // Hot helpers (unfiltered runs only).
+        if self.unfiltered {
+            if let Some((hot, reps)) = spec.hot_child {
+                let hs = g.spec(hot);
+                for _ in 0..reps {
+                    // Hot helpers are sub-µs..few-µs each.
+                    self.clock_us += 1;
+                    out.push(Event::Func(FuncEvent {
+                        ctx: self.ctx,
+                        fid: hot,
+                        kind: FuncKind::Entry,
+                        ts: self.clock_us,
+                    }));
+                    self.clock_us += self.rng.lognormal(hs.mu, hs.sigma).max(1.0) as u64;
+                    out.push(Event::Func(FuncEvent {
+                        ctx: self.ctx,
+                        fid: hot,
+                        kind: FuncKind::Exit,
+                        ts: self.clock_us,
+                    }));
+                }
+            }
+        }
+
+        self.clock_us += seg_us.max(1);
+        out.push(Event::Func(FuncEvent {
+            ctx: self.ctx,
+            fid,
+            kind: FuncKind::Exit,
+            ts: self.clock_us,
+        }));
+    }
+}
+
+/// Build a tiny two-function grammar for unit tests and micro-benches.
+pub fn toy_grammar() -> (CallGrammar, FuncRegistry) {
+    let mut reg = FuncRegistry::new();
+    let root = reg.register("ROOT", false);
+    let work = reg.register("WORK", false);
+    let hot = reg.register("HOT_HELPER", true);
+    let specs = vec![
+        FuncSpec {
+            fid: root,
+            mu: 3.0,
+            sigma: 0.2,
+            children: vec![(work, 2)],
+            comms: vec![CommSpec {
+                kind: CommKind::Send,
+                partner: PartnerSel::Neighbor(1),
+                tag: 1,
+                mean_bytes: 1024.0,
+            }],
+            hot_child: None,
+        },
+        FuncSpec {
+            fid: work,
+            mu: 4.0,
+            sigma: 0.3,
+            children: vec![],
+            comms: vec![],
+            hot_child: Some((hot, 10)),
+        },
+        FuncSpec::leaf(hot, 0.5, 0.2),
+    ];
+    (
+        CallGrammar { specs, root, iters_per_step: 3, anomalies: vec![] },
+        reg,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::event::FuncKind;
+
+    fn tracer(unfiltered: bool) -> RankTracer {
+        let (g, _) = toy_grammar();
+        RankTracer::new(g, 0, 2, 8, unfiltered, Rng::new(7))
+    }
+
+    #[test]
+    fn frames_are_sorted_and_nested() {
+        let mut t = tracer(false);
+        for _ in 0..5 {
+            let f = t.step();
+            assert!(f.is_sorted());
+            // Balanced ENTRY/EXIT per fid.
+            let mut depth = std::collections::HashMap::new();
+            for e in &f.events {
+                if let Event::Func(fe) = e {
+                    let d = depth.entry(fe.fid).or_insert(0i64);
+                    *d += if fe.kind == FuncKind::Entry { 1 } else { -1 };
+                    assert!(*d >= 0, "EXIT before ENTRY");
+                }
+            }
+            assert!(depth.values().all(|&d| d == 0), "unbalanced frame");
+        }
+    }
+
+    #[test]
+    fn step_indices_increment() {
+        let mut t = tracer(false);
+        assert_eq!(t.step().step, 0);
+        assert_eq!(t.step().step, 1);
+        assert_eq!(t.step().step, 2);
+    }
+
+    #[test]
+    fn unfiltered_has_many_more_events() {
+        let filtered = tracer(false).step().func_event_count();
+        let unfiltered = tracer(true).step().func_event_count();
+        assert!(
+            unfiltered as f64 > 3.0 * filtered as f64,
+            "unfiltered {unfiltered} vs filtered {filtered}"
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (g, _) = toy_grammar();
+        let mut a = RankTracer::new(g.clone(), 0, 1, 4, true, Rng::new(9));
+        let mut b = RankTracer::new(g, 0, 1, 4, true, Rng::new(9));
+        assert_eq!(a.step().events, b.step().events);
+    }
+
+    #[test]
+    fn comm_partner_in_world() {
+        let (g, _) = toy_grammar();
+        let mut t = RankTracer::new(g, 0, 0, 4, false, Rng::new(3));
+        for _ in 0..10 {
+            for e in t.step().events {
+                if let Event::Comm(c) = e {
+                    assert!(c.partner < 4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn launch_delay_stretches_parent_not_child() {
+        let (mut g, _) = toy_grammar();
+        g.anomalies.push(AnomalyProcess {
+            name: "delay".into(),
+            fid: 1,
+            ranks: RankPred::All,
+            prob: 1.0,
+            effect: AnomalyEffect::LaunchDelay { us_lo: 100_000.0, us_hi: 100_000.0 },
+        });
+        let mut t = RankTracer::new(g, 0, 0, 4, false, Rng::new(5));
+        let f = t.step();
+        // Parent (ROOT) spans must now include the forced 100ms gaps.
+        let (first, last) = f.span().unwrap();
+        assert!(last - first > 100_000, "span {}", last - first);
+        // Child (WORK) own durations stay small.
+        let mut entry = None;
+        for e in &f.events {
+            if let Event::Func(fe) = e {
+                if fe.fid == 1 {
+                    match fe.kind {
+                        FuncKind::Entry => entry = Some(fe.ts),
+                        FuncKind::Exit => {
+                            let d = fe.ts - entry.take().unwrap();
+                            assert!(d < 50_000, "child inflated: {d}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_tail_inflates_target() {
+        let (mut g, _) = toy_grammar();
+        g.anomalies.push(AnomalyProcess {
+            name: "tail".into(),
+            fid: 1,
+            ranks: RankPred::Except(0),
+            prob: 1.0,
+            effect: AnomalyEffect::HeavyTail { xm: 1e6, alpha: 2.0 },
+        });
+        // Rank 0 excluded → small durations.
+        let mut t0 = RankTracer::new(g.clone(), 0, 0, 4, false, Rng::new(5));
+        let f0 = t0.step();
+        // Rank 2 targeted → ≥ 1e6 µs bodies.
+        let mut t2 = RankTracer::new(g, 0, 2, 4, false, Rng::new(5));
+        let f2 = t2.step();
+        let dur_of = |frame: &StepFrame| {
+            let mut total = 0u64;
+            let mut entry = None;
+            for e in &frame.events {
+                if let Event::Func(fe) = e {
+                    if fe.fid == 1 {
+                        match fe.kind {
+                            FuncKind::Entry => entry = Some(fe.ts),
+                            FuncKind::Exit => total += fe.ts - entry.take().unwrap(),
+                        }
+                    }
+                }
+            }
+            total
+        };
+        assert!(dur_of(&f2) > 10 * dur_of(&f0).max(1));
+    }
+
+    #[test]
+    fn grammar_validation_catches_cycles() {
+        let (mut g, _) = toy_grammar();
+        g.validate().unwrap();
+        g.specs[1].children.push((0, 1)); // WORK → ROOT → WORK cycle
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn grammar_validation_catches_bad_fids() {
+        let (mut g, _) = toy_grammar();
+        g.specs[0].children.push((99, 1));
+        assert!(g.validate().is_err());
+    }
+}

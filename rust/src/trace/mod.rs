@@ -1,0 +1,15 @@
+//! Trace substrate: the event model (§III-A of the paper), the synthetic
+//! NWChem-MD workload that substitutes for TAU-instrumented applications
+//! on Summit, stream filtering, and the BP-like on-disk codec used by the
+//! "TAU only" baseline of Fig 9.
+
+pub mod binfmt;
+pub mod event;
+pub mod filter;
+pub mod gen;
+pub mod nwchem;
+
+pub use event::{
+    CommEvent, CommKind, Event, EventCtx, FuncEvent, FuncKind, FuncRegistry, StepFrame,
+};
+pub use gen::{CallGrammar, RankTracer};

@@ -1,0 +1,470 @@
+//! The NWChem-MD workflow grammar — our stand-in for the paper's Summit
+//! case study (§VI). Two applications:
+//!
+//! * **app 0 — MD simulation** (a modified NWChem molecular dynamics run):
+//!   each trace step runs several `MD_NEWTON` iterations whose call tree
+//!   matches the functions the case study names —
+//!   `MD_NEWTON → MD_FINIT → CF_CMS → GLOBAL_SUM×2`,
+//!   `MD_NEWTON → MD_FORCES → {SP_GETXBL → SP_GTXPBL, CF_FORCES}`,
+//!   `MD_NEWTON → MD_UPDATE`, plus a trajectory write streamed to app 1.
+//! * **app 1 — in-situ analysis**: `ANALYZE_STEP → {TRAJ_READ, COMPUTE_RDF,
+//!   IO_WRITE}` consuming the trajectory.
+//!
+//! Injected anomaly processes reproduce the three case-study findings:
+//!
+//! 1. sporadic **launch delay** before `MD_FORCES` that roughly triples the
+//!    enclosing `MD_NEWTON` (Fig 10);
+//! 2. **rank 0** straggling in `MD_FINIT`/`CF_CMS` (global sums + rank-0's
+//!    special role, Figs 11–12);
+//! 3. **heavy-tailed** `SP_GTXPBL`/`SP_GETXBL` on ranks ≠ 0 (domain-
+//!    decomposition remote gets, Fig 13).
+//!
+//! The *hot* helpers (`VEC_AXPY`, `PAIRLIST_SCAN`, `TIMER_TICK`, `HIST_BIN`)
+//! model the high-frequency short functions the real study filtered out of
+//! instrumentation; including them is the paper's "unfiltered" mode and
+//! drives the ~20× raw-size gap of Fig 9.
+
+use super::event::FuncRegistry;
+use super::gen::{
+    AnomalyEffect, AnomalyProcess, CallGrammar, CommSpec, FuncSpec, PartnerSel, RankPred,
+};
+use crate::trace::event::CommKind;
+
+/// Well-known function names (kept identical to the paper's figures so the
+/// viz views and case-study benches can assert on them).
+pub mod names {
+    pub const MD_NEWTON: &str = "MD_NEWTON";
+    pub const MD_FINIT: &str = "MD_FINIT";
+    pub const CF_CMS: &str = "CF_CMS";
+    pub const GLOBAL_SUM: &str = "GLOBAL_SUM";
+    pub const MD_FORCES: &str = "MD_FORCES";
+    pub const SP_GETXBL: &str = "SP_GETXBL";
+    pub const SP_GTXPBL: &str = "SP_GTXPBL";
+    pub const CF_FORCES: &str = "CF_FORCES";
+    pub const MD_UPDATE: &str = "MD_UPDATE";
+    pub const TRAJ_WRITE: &str = "TRAJ_WRITE";
+    pub const ANALYZE_STEP: &str = "ANALYZE_STEP";
+    pub const TRAJ_READ: &str = "TRAJ_READ";
+    pub const COMPUTE_RDF: &str = "COMPUTE_RDF";
+    pub const IO_WRITE: &str = "IO_WRITE";
+    pub const VEC_AXPY: &str = "VEC_AXPY";
+    pub const PAIRLIST_SCAN: &str = "PAIRLIST_SCAN";
+    pub const TIMER_TICK: &str = "TIMER_TICK";
+    pub const HIST_BIN: &str = "HIST_BIN";
+}
+
+/// Tunable anomaly-injection rates (defaults reproduce the case study at
+/// an AD-friendly anomaly fraction well under 1%).
+#[derive(Clone, Debug)]
+pub struct InjectionConfig {
+    /// P(launch delay before `MD_FORCES`) per invocation, any rank.
+    pub forces_delay_prob: f64,
+    /// P(rank-0 straggle) per `CF_CMS`/`MD_FINIT` invocation.
+    pub rank0_straggle_prob: f64,
+    /// P(heavy-tail `SP_GTXPBL`) per invocation on ranks ≠ 0.
+    pub getxbl_tail_prob: f64,
+}
+
+impl Default for InjectionConfig {
+    fn default() -> Self {
+        InjectionConfig {
+            forces_delay_prob: 0.004,
+            rank0_straggle_prob: 0.02,
+            getxbl_tail_prob: 0.006,
+        }
+    }
+}
+
+/// Disable all injection (clean baseline for accuracy tests).
+impl InjectionConfig {
+    pub fn none() -> Self {
+        InjectionConfig {
+            forces_delay_prob: 0.0,
+            rank0_straggle_prob: 0.0,
+            getxbl_tail_prob: 0.0,
+        }
+    }
+}
+
+/// Build the MD-simulation grammar (app 0) and its function registry.
+///
+/// `iters_per_step` controls event volume per frame; typical filtered
+/// volume is ~26 function events + 4 comm events per iteration.
+pub fn md_grammar(iters_per_step: u32, inj: &InjectionConfig) -> (CallGrammar, FuncRegistry) {
+    let mut reg = FuncRegistry::new();
+    let md_newton = reg.register(names::MD_NEWTON, false);
+    let md_finit = reg.register(names::MD_FINIT, false);
+    let cf_cms = reg.register(names::CF_CMS, false);
+    let global_sum = reg.register(names::GLOBAL_SUM, false);
+    let md_forces = reg.register(names::MD_FORCES, false);
+    let sp_getxbl = reg.register(names::SP_GETXBL, false);
+    let sp_gtxpbl = reg.register(names::SP_GTXPBL, false);
+    let cf_forces = reg.register(names::CF_FORCES, false);
+    let md_update = reg.register(names::MD_UPDATE, false);
+    let traj_write = reg.register(names::TRAJ_WRITE, false);
+    let vec_axpy = reg.register(names::VEC_AXPY, true);
+    let pairlist = reg.register(names::PAIRLIST_SCAN, true);
+    let timer = reg.register(names::TIMER_TICK, true);
+
+    // Duration scales (µs, lognormal): medians chosen so one MD_NEWTON
+    // iteration lands near 3–5 ms of virtual time, matching the case
+    // study's ~ms-scale function views.
+    let specs = vec![
+        FuncSpec {
+            fid: md_newton,
+            mu: 4.5, // ~90µs own time
+            sigma: 0.25,
+            children: vec![(md_finit, 1), (md_forces, 1), (md_update, 1), (traj_write, 1)],
+            comms: vec![],
+            hot_child: Some((timer, 16)),
+        },
+        FuncSpec {
+            fid: md_finit,
+            mu: 4.8,
+            sigma: 0.25,
+            children: vec![(cf_cms, 1)],
+            comms: vec![],
+            hot_child: Some((vec_axpy, 48)),
+        },
+        FuncSpec {
+            fid: cf_cms,
+            // Center-of-mass: two global sums dominate.
+            mu: 5.2,
+            sigma: 0.3,
+            children: vec![(global_sum, 2)],
+            comms: vec![],
+            hot_child: Some((vec_axpy, 32)),
+        },
+        FuncSpec {
+            fid: global_sum,
+            mu: 5.0,
+            sigma: 0.35,
+            children: vec![],
+            comms: vec![
+                CommSpec {
+                    kind: CommKind::Send,
+                    partner: PartnerSel::Fixed(0),
+                    tag: 17,
+                    mean_bytes: 64.0,
+                },
+                CommSpec {
+                    kind: CommKind::Recv,
+                    partner: PartnerSel::Fixed(0),
+                    tag: 18,
+                    mean_bytes: 64.0,
+                },
+            ],
+            hot_child: None,
+        },
+        FuncSpec {
+            fid: md_forces,
+            mu: 6.6, // ~700µs — the dominant compute
+            sigma: 0.25,
+            children: vec![(sp_getxbl, 1), (cf_forces, 1)],
+            comms: vec![],
+            hot_child: Some((pairlist, 64)),
+        },
+        FuncSpec {
+            fid: sp_getxbl,
+            mu: 4.6,
+            sigma: 0.3,
+            children: vec![(sp_gtxpbl, 1)],
+            comms: vec![],
+            hot_child: None,
+        },
+        FuncSpec {
+            fid: sp_gtxpbl,
+            // Remote gets: solvent + solute fetches from neighbours.
+            mu: 5.4,
+            sigma: 0.4,
+            children: vec![],
+            comms: vec![
+                CommSpec {
+                    kind: CommKind::Recv,
+                    partner: PartnerSel::Neighbor(1),
+                    tag: 31,
+                    mean_bytes: 32.0 * 1024.0,
+                },
+                CommSpec {
+                    kind: CommKind::Recv,
+                    partner: PartnerSel::Neighbor(-1),
+                    tag: 32,
+                    mean_bytes: 32.0 * 1024.0,
+                },
+            ],
+            hot_child: None,
+        },
+        FuncSpec {
+            fid: cf_forces,
+            mu: 6.2,
+            sigma: 0.25,
+            children: vec![],
+            comms: vec![],
+            hot_child: Some((vec_axpy, 96)),
+        },
+        FuncSpec {
+            fid: md_update,
+            mu: 5.0,
+            sigma: 0.25,
+            children: vec![],
+            comms: vec![],
+            hot_child: Some((vec_axpy, 40)),
+        },
+        FuncSpec {
+            fid: traj_write,
+            mu: 4.2,
+            sigma: 0.5,
+            children: vec![],
+            comms: vec![CommSpec {
+                kind: CommKind::Send,
+                partner: PartnerSel::Random,
+                tag: 99, // trajectory stream to the analysis app
+                mean_bytes: 256.0 * 1024.0,
+            }],
+            hot_child: None,
+        },
+        FuncSpec::leaf(vec_axpy, 2.2, 0.3),
+        FuncSpec::leaf(pairlist, 2.5, 0.3),
+        FuncSpec::leaf(timer, 1.6, 0.25),
+    ];
+
+    let anomalies = vec![
+        AnomalyProcess {
+            name: "md_forces_launch_delay".into(),
+            fid: md_forces,
+            ranks: RankPred::All,
+            prob: inj.forces_delay_prob,
+            // One MD_NEWTON ≈ 3.2ms virtual; a 7–10ms gap ≈ ~3× parent
+            // (and safely past 6σ of the contaminated runtime mixture).
+            effect: AnomalyEffect::LaunchDelay { us_lo: 7_000.0, us_hi: 10_000.0 },
+        },
+        AnomalyProcess {
+            name: "rank0_md_finit_straggle".into(),
+            fid: md_finit,
+            ranks: RankPred::Only(0),
+            prob: inj.rank0_straggle_prob,
+            effect: AnomalyEffect::SlowBody { factor_lo: 8.0, factor_hi: 20.0 },
+        },
+        AnomalyProcess {
+            name: "rank0_cf_cms_straggle".into(),
+            fid: cf_cms,
+            ranks: RankPred::Only(0),
+            prob: inj.rank0_straggle_prob,
+            effect: AnomalyEffect::SlowBody { factor_lo: 8.0, factor_hi: 20.0 },
+        },
+        AnomalyProcess {
+            name: "sp_gtxpbl_heavy_tail".into(),
+            fid: sp_gtxpbl,
+            ranks: RankPred::Except(0),
+            prob: inj.getxbl_tail_prob,
+            // Short-ish tail: large vs SP_GTXPBL's own σ (Fig 13 flags)
+            // without drowning MD_NEWTON's variance (Fig 10 still flags).
+            effect: AnomalyEffect::HeavyTail { xm: 4_000.0, alpha: 2.5 },
+        },
+    ];
+
+    let g = CallGrammar { specs, root: md_newton, iters_per_step, anomalies };
+    g.validate().expect("md grammar must validate");
+    (g, reg)
+}
+
+/// Build the in-situ analysis grammar (app 1).
+pub fn analysis_grammar(iters_per_step: u32) -> (CallGrammar, FuncRegistry) {
+    let mut reg = FuncRegistry::new();
+    let analyze = reg.register(names::ANALYZE_STEP, false);
+    let traj_read = reg.register(names::TRAJ_READ, false);
+    let rdf = reg.register(names::COMPUTE_RDF, false);
+    let io_write = reg.register(names::IO_WRITE, false);
+    let hist = reg.register(names::HIST_BIN, true);
+
+    let specs = vec![
+        FuncSpec {
+            fid: analyze,
+            mu: 4.8,
+            sigma: 0.3,
+            children: vec![(traj_read, 1), (rdf, 1), (io_write, 1)],
+            comms: vec![],
+            hot_child: None,
+        },
+        FuncSpec {
+            fid: traj_read,
+            mu: 5.6,
+            sigma: 0.45,
+            children: vec![],
+            comms: vec![CommSpec {
+                kind: CommKind::Recv,
+                partner: PartnerSel::Random,
+                tag: 99,
+                mean_bytes: 256.0 * 1024.0,
+            }],
+            hot_child: None,
+        },
+        FuncSpec {
+            fid: rdf,
+            mu: 6.4,
+            sigma: 0.3,
+            children: vec![],
+            comms: vec![],
+            hot_child: Some((hist, 96)),
+        },
+        FuncSpec {
+            fid: io_write,
+            mu: 5.2,
+            sigma: 0.6, // I/O is naturally noisy
+            children: vec![],
+            comms: vec![],
+            hot_child: None,
+        },
+        FuncSpec::leaf(hist, 2.0, 0.25),
+    ];
+
+    let anomalies = vec![AnomalyProcess {
+        name: "io_write_stall".into(),
+        fid: io_write,
+        ranks: RankPred::All,
+        prob: 0.003,
+        effect: AnomalyEffect::HeavyTail { xm: 20_000.0, alpha: 2.0 },
+    }];
+
+    let g = CallGrammar { specs, root: analyze, iters_per_step, anomalies };
+    g.validate().expect("analysis grammar must validate");
+    (g, reg)
+}
+
+/// Workflow-level registry: app grammars use disjoint fid spaces per app,
+/// so the global function key is `(app, fid)`. Helper joining both
+/// registries for display.
+pub fn workflow_registries() -> Vec<FuncRegistry> {
+    let (_, r0) = md_grammar(1, &InjectionConfig::default());
+    let (_, r1) = analysis_grammar(1);
+    vec![r0, r1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::event::{Event, FuncKind};
+    use crate::trace::gen::RankTracer;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn grammars_validate() {
+        md_grammar(5, &InjectionConfig::default()).0.validate().unwrap();
+        analysis_grammar(5).0.validate().unwrap();
+    }
+
+    #[test]
+    fn md_step_contains_expected_call_tree() {
+        let (g, reg) = md_grammar(1, &InjectionConfig::none());
+        let mut t = RankTracer::new(g, 0, 1, 8, false, Rng::new(11));
+        let f = t.step();
+        let mut seen = std::collections::HashSet::new();
+        for e in &f.events {
+            if let Event::Func(fe) = e {
+                seen.insert(reg.name(fe.fid).to_string());
+            }
+        }
+        for n in [
+            names::MD_NEWTON,
+            names::MD_FINIT,
+            names::CF_CMS,
+            names::GLOBAL_SUM,
+            names::MD_FORCES,
+            names::SP_GETXBL,
+            names::SP_GTXPBL,
+            names::CF_FORCES,
+            names::MD_UPDATE,
+            names::TRAJ_WRITE,
+        ] {
+            assert!(seen.contains(n), "missing {n} in {seen:?}");
+        }
+        // Filtered run → no hot helpers.
+        assert!(!seen.contains(names::VEC_AXPY));
+    }
+
+    #[test]
+    fn unfiltered_md_step_includes_hot_helpers() {
+        let (g, reg) = md_grammar(1, &InjectionConfig::none());
+        let mut t = RankTracer::new(g, 0, 1, 8, true, Rng::new(11));
+        let f = t.step();
+        let names_seen: std::collections::HashSet<String> = f
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                Event::Func(fe) => Some(reg.name(fe.fid).to_string()),
+                _ => None,
+            })
+            .collect();
+        assert!(names_seen.contains(names::VEC_AXPY));
+        assert!(names_seen.contains(names::PAIRLIST_SCAN));
+    }
+
+    #[test]
+    fn unfiltered_volume_ratio_is_order_20x() {
+        let inj = InjectionConfig::none();
+        let (g, _) = md_grammar(4, &inj);
+        let filt = RankTracer::new(g.clone(), 0, 1, 8, false, Rng::new(3))
+            .step()
+            .func_event_count();
+        let unf = RankTracer::new(g, 0, 1, 8, true, Rng::new(3))
+            .step()
+            .func_event_count();
+        let ratio = unf as f64 / filt as f64;
+        assert!(ratio > 4.0 && ratio < 60.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn nesting_depth_matches_grammar() {
+        // MD_NEWTON > MD_FORCES > SP_GETXBL > SP_GTXPBL = depth 4.
+        let (g, reg) = md_grammar(1, &InjectionConfig::none());
+        let mut t = RankTracer::new(g, 0, 0, 4, false, Rng::new(1));
+        let f = t.step();
+        let gtx = reg.lookup(names::SP_GTXPBL).unwrap();
+        let mut depth = 0usize;
+        let mut max_at_gtx = 0usize;
+        for e in &f.events {
+            if let Event::Func(fe) = e {
+                match fe.kind {
+                    FuncKind::Entry => {
+                        depth += 1;
+                        if fe.fid == gtx {
+                            max_at_gtx = depth;
+                        }
+                    }
+                    FuncKind::Exit => depth -= 1,
+                }
+            }
+        }
+        assert_eq!(max_at_gtx, 4, "SP_GTXPBL depth");
+    }
+
+    #[test]
+    fn injection_targets_right_ranks() {
+        let inj = InjectionConfig {
+            forces_delay_prob: 0.0,
+            rank0_straggle_prob: 1.0,
+            getxbl_tail_prob: 0.0,
+        };
+        let (g, reg) = md_grammar(1, &inj);
+        let finit = reg.lookup(names::MD_FINIT).unwrap();
+        let dur = |rank: u32| {
+            let (g2, _) = (g.clone(), ());
+            let mut t = RankTracer::new(g2, 0, rank, 4, false, Rng::new(2));
+            let f = t.step();
+            let mut entry = 0u64;
+            let mut d = 0u64;
+            for e in &f.events {
+                if let Event::Func(fe) = e {
+                    if fe.fid == finit {
+                        match fe.kind {
+                            FuncKind::Entry => entry = fe.ts,
+                            FuncKind::Exit => d += fe.ts - entry,
+                        }
+                    }
+                }
+            }
+            d
+        };
+        assert!(dur(0) > 2 * dur(1), "rank0 {} rank1 {}", dur(0), dur(1));
+    }
+}

@@ -1,0 +1,127 @@
+//! Mini property-testing harness (no `proptest` offline).
+//!
+//! A property is a closure from a seeded [`Rng`](super::rng::Rng) to a
+//! `Result<(), String>`; the harness runs it for `cases` seeds and, on
+//! failure, retries the failing seed with progressively smaller `size`
+//! hints to report the smallest reproduction it can find. Generators take
+//! `(rng, size)` so shrinking works for free on sized inputs.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: u32,
+    /// Base seed; each case uses `seed + case_index`.
+    pub seed: u64,
+    /// Maximum size hint passed to the property.
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0xC41B_0001, max_size: 256 }
+    }
+}
+
+/// Run `prop(rng, size)` for `cfg.cases` seeds; panic with the seed and the
+/// smallest failing size on failure.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64);
+        // Sizes sweep small → large so early cases are trivially debuggable.
+        let size = 1 + (case as usize * cfg.max_size) / cfg.cases.max(1) as usize;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Shrink: re-run the same seed at smaller sizes.
+            let mut smallest = (size, msg.clone());
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Rng::new(seed);
+                match prop(&mut rng, s) {
+                    Err(m) => {
+                        smallest = (s, m);
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed: seed={seed} size={} (first failing size {size}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Convenience: run with default config.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    check(name, Config::default(), prop)
+}
+
+/// Generate a vector of `len` items using `gen`.
+pub fn vec_of<T>(rng: &mut Rng, len: usize, mut gen: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+    (0..len).map(|_| gen(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_default("reverse-involution", |rng, size| {
+            let v = vec_of(rng, size, |r| r.next_u64());
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            if v == w {
+                Ok(())
+            } else {
+                Err("reverse twice changed vector".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check(
+            "always-fails",
+            Config { cases: 3, ..Config::default() },
+            |_rng, _size| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_small_size() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                "fails-above-4",
+                Config { cases: 64, seed: 9, max_size: 100 },
+                |_rng, size| {
+                    if size > 4 {
+                        Err(format!("size {size} too big"))
+                    } else {
+                        Ok(())
+                    }
+                },
+            )
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // The shrink loop halves until the property passes; the reported
+        // failing size must be ≤ 2× the true threshold.
+        assert!(msg.contains("size=5") || msg.contains("size=6") || msg.contains("size=7") || msg.contains("size=8"),
+            "unexpected shrink result: {msg}");
+    }
+}

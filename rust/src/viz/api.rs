@@ -1,0 +1,180 @@
+//! JSON API over [`VizState`] — the payloads the HTTP server returns and
+//! the experiments dump. Mirrors the reference implementation's endpoints
+//! (dashboard / per-rank streaming series / function view / call stack).
+
+use super::{RankStat, VizState};
+use crate::provenance::{ProvQuery, ProvRecord};
+use crate::util::json::Json;
+
+fn record_json(r: &ProvRecord) -> Json {
+    r.to_json()
+}
+
+/// `/api/dashboard?stat=<s>&n=<n>` — Fig 3 payload.
+pub fn dashboard(state: &VizState, stat: RankStat, n: usize) -> Json {
+    let (top, bottom) = state.ranking(stat, n);
+    let entry = |r: &crate::ps::RankSummary| {
+        Json::obj(vec![
+            ("app", Json::num(r.app as f64)),
+            ("rank", Json::num(r.rank as f64)),
+            ("value", Json::num(stat.of(r))),
+            ("average", Json::num(r.step_counts.mean())),
+            ("stddev", Json::num(r.step_counts.stddev())),
+            ("maximum", Json::num(r.step_counts.max())),
+            ("minimum", Json::num(r.step_counts.min())),
+            ("total", Json::num(r.total_anomalies as f64)),
+        ])
+    };
+    Json::obj(vec![
+        ("stat", Json::str(stat.name())),
+        ("total_anomalies", Json::num(state.latest.total_anomalies as f64)),
+        ("total_executions", Json::num(state.latest.total_executions as f64)),
+        ("top", Json::Arr(top.iter().map(|r| entry(r)).collect())),
+        ("bottom", Json::Arr(bottom.iter().map(|r| entry(r)).collect())),
+    ])
+}
+
+/// `/api/timeline?app=&rank=` — Fig 4 payload (one rank's series).
+pub fn timeline(state: &VizState, app: u32, rank: u32) -> Json {
+    Json::obj(vec![
+        ("app", Json::num(app as f64)),
+        ("rank", Json::num(rank as f64)),
+        (
+            "series",
+            Json::Arr(
+                state
+                    .rank_series(app, rank)
+                    .into_iter()
+                    .map(|(step, n)| {
+                        Json::obj(vec![
+                            ("step", Json::num(step as f64)),
+                            ("n_anomalies", Json::num(n as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// `/api/function?app=&rank=&step=` — Fig 5 payload.
+pub fn function_view(state: &VizState, app: u32, rank: u32, step: u64) -> Json {
+    let recs = state.db.call_stack(app, rank, step);
+    Json::obj(vec![
+        ("app", Json::num(app as f64)),
+        ("rank", Json::num(rank as f64)),
+        ("step", Json::num(step as f64)),
+        ("executions", Json::Arr(recs.iter().map(|r| record_json(r)).collect())),
+    ])
+}
+
+/// `/api/callstack?app=&rank=&step=` — Fig 6 payload (same records,
+/// entry-ordered; the client renders nesting from depth/parent).
+pub fn call_stack(state: &VizState, app: u32, rank: u32, step: u64) -> Json {
+    function_view(state, app, rank, step)
+}
+
+/// `/api/anomalies?limit=` — top anomalies by score, workflow-wide.
+pub fn top_anomalies(state: &VizState, limit: usize) -> Json {
+    let recs = state.db.query(&ProvQuery {
+        anomalies_only: true,
+        order_by_score: true,
+        limit: Some(limit),
+        ..Default::default()
+    });
+    Json::obj(vec![
+        ("count", Json::num(recs.len() as f64)),
+        ("anomalies", Json::Arr(recs.iter().map(|r| record_json(r)).collect())),
+    ])
+}
+
+/// `/api/globalevents` — globally detected events (§V trigger).
+pub fn global_events(state: &VizState) -> Json {
+    Json::obj(vec![(
+        "events",
+        Json::Arr(
+            state
+                .latest
+                .global_events
+                .iter()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("step", Json::num(e.step as f64)),
+                        ("total_anomalies", Json::num(e.total_anomalies as f64)),
+                        ("score", Json::num(e.score)),
+                    ])
+                })
+                .collect(),
+        ),
+    )])
+}
+
+/// `/api/stats` — run-level counters.
+pub fn stats(state: &VizState) -> Json {
+    Json::obj(vec![
+        ("version", Json::str(crate::VERSION)),
+        ("total_anomalies", Json::num(state.latest.total_anomalies as f64)),
+        ("total_executions", Json::num(state.latest.total_executions as f64)),
+        ("ranks", Json::num(state.latest.ranks.len() as f64)),
+        ("timeline_points", Json::num(state.timeline.len() as f64)),
+        ("prov_records", Json::num(state.db.len() as f64)),
+        ("prov_bytes", Json::num(state.db.bytes_written() as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::{RankSummary, VizSnapshot};
+    use crate::stats::RunStats;
+    use crate::util::json::parse;
+
+    fn state() -> VizState {
+        let mut st = VizState::new(vec![]);
+        let mut c = RunStats::new();
+        c.push(2.0);
+        st.latest = VizSnapshot {
+            ranks: vec![RankSummary { app: 0, rank: 1, step_counts: c, total_anomalies: 2 }],
+            fresh_steps: vec![],
+            total_anomalies: 2,
+            total_executions: 50,
+            global_events: vec![],
+        };
+        st.timeline = vec![(0, 1, 0, 2)];
+        st
+    }
+
+    #[test]
+    fn payloads_are_valid_json() {
+        let st = state();
+        for j in [
+            dashboard(&st, RankStat::Total, 5),
+            timeline(&st, 0, 1),
+            function_view(&st, 0, 1, 0),
+            call_stack(&st, 0, 1, 0),
+            top_anomalies(&st, 10),
+            stats(&st),
+        ] {
+            parse(&j.to_string()).unwrap();
+        }
+    }
+
+    #[test]
+    fn dashboard_fields() {
+        let st = state();
+        let j = dashboard(&st, RankStat::Total, 5);
+        assert_eq!(j.get("total_anomalies").unwrap().as_u64(), Some(2));
+        let top = j.get("top").unwrap().as_arr().unwrap();
+        assert_eq!(top.len(), 1);
+        assert_eq!(top[0].get("rank").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn timeline_series_shape() {
+        let st = state();
+        let j = timeline(&st, 0, 1);
+        let series = j.get("series").unwrap().as_arr().unwrap();
+        assert_eq!(series.len(), 1);
+        assert_eq!(series[0].get("n_anomalies").unwrap().as_u64(), Some(2));
+    }
+}

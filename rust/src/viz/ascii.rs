@@ -1,0 +1,315 @@
+//! Terminal renderings of the paper's visualization views. Each function
+//! returns a `String`, so experiments embed them in reports and tests
+//! assert on their structure.
+
+use super::{RankStat, VizState};
+use crate::provenance::ProvRecord;
+
+/// Fig 3 — ranking dashboard: top-N and bottom-N ranks by `stat`,
+/// horizontal bars scaled to the max value.
+pub fn dashboard(state: &VizState, stat: RankStat, n: usize) -> String {
+    let (top, bottom) = state.ranking(stat, n);
+    let max_v = top
+        .first()
+        .map(|r| stat.of(r))
+        .unwrap_or(0.0)
+        .max(1e-9);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "== Ranking dashboard — {} anomalies/step, top & bottom {} ranks ==\n",
+        stat.name(),
+        n
+    ));
+    out.push_str(&format!(
+        "   workflow totals: {} anomalies / {} executions\n",
+        state.latest.total_anomalies, state.latest.total_executions
+    ));
+    let bar = |v: f64| -> String {
+        let w = ((v / max_v) * 40.0).round() as usize;
+        "█".repeat(w.min(40))
+    };
+    out.push_str("-- most problematic --\n");
+    for r in &top {
+        out.push_str(&format!(
+            "  app{} rank {:>5} | {:<40} {:.2}\n",
+            r.app,
+            r.rank,
+            bar(stat.of(r)),
+            stat.of(r)
+        ));
+    }
+    out.push_str("-- least problematic --\n");
+    for r in &bottom {
+        out.push_str(&format!(
+            "  app{} rank {:>5} | {:<40} {:.2}\n",
+            r.app,
+            r.rank,
+            bar(stat.of(r)),
+            stat.of(r)
+        ));
+    }
+    out
+}
+
+/// Fig 4 — streaming per-step anomaly scatter for selected ranks. One
+/// column per step bucket, one glyph per rank.
+pub fn timeline(state: &VizState, ranks: &[(u32, u32)], width: usize) -> String {
+    const GLYPHS: [char; 8] = ['o', 'x', '+', '*', '#', '@', '%', '&'];
+    let mut out = String::new();
+    out.push_str("== Streaming anomaly counts per step ==\n");
+    let mut max_step = 0u64;
+    let mut max_count = 0u64;
+    let series: Vec<(u32, u32, Vec<(u64, u64)>)> = ranks
+        .iter()
+        .map(|&(app, rank)| {
+            let s = state.rank_series(app, rank);
+            for (st, c) in &s {
+                max_step = max_step.max(*st);
+                max_count = max_count.max(*c);
+            }
+            (app, rank, s)
+        })
+        .collect();
+    let rows = 10usize;
+    let cols = width.max(10);
+    let mut grid = vec![vec![' '; cols]; rows + 1];
+    for (i, (_, _, s)) in series.iter().enumerate() {
+        let g = GLYPHS[i % GLYPHS.len()];
+        for (step, count) in s {
+            let col = if max_step == 0 {
+                0
+            } else {
+                ((*step as f64 / max_step as f64) * (cols - 1) as f64) as usize
+            };
+            let row = if max_count == 0 {
+                rows
+            } else {
+                rows - ((*count as f64 / max_count as f64) * rows as f64) as usize
+            };
+            grid[row.min(rows)][col.min(cols - 1)] = g;
+        }
+    }
+    for (ri, row) in grid.iter().enumerate() {
+        let y = if max_count == 0 {
+            0.0
+        } else {
+            max_count as f64 * (rows - ri) as f64 / rows as f64
+        };
+        out.push_str(&format!("{:>6.1} |{}\n", y, row.iter().collect::<String>()));
+    }
+    out.push_str(&format!("        0 .. step {} →\n", max_step));
+    for (i, (app, rank, _)) in series.iter().enumerate() {
+        out.push_str(&format!(
+            "        '{}' = app{} rank {}\n",
+            GLYPHS[i % GLYPHS.len()],
+            app,
+            rank
+        ));
+    }
+    out
+}
+
+/// Fig 5 — function-execution view for one (app, rank, step): entry time
+/// (x) vs fid (y); anomalies rendered `!`, normals `·`.
+pub fn function_view(state: &VizState, app: u32, rank: u32, step: u64) -> String {
+    let recs = state.db.call_stack(app, rank, step);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "== Function view — app {app}, rank {rank}, frame {step} ({} kept executions) ==\n",
+        recs.len()
+    ));
+    if recs.is_empty() {
+        out.push_str("  (no provenance records for this frame — nothing was anomalous)\n");
+        return out;
+    }
+    let t0 = recs.iter().map(|r| r.entry_us).min().unwrap();
+    let t1 = recs.iter().map(|r| r.exit_us).max().unwrap().max(t0 + 1);
+    let fids: Vec<u32> = {
+        let mut v: Vec<u32> = recs.iter().map(|r| r.fid).collect();
+        v.sort();
+        v.dedup();
+        v
+    };
+    let cols = 60usize;
+    for &fid in fids.iter().rev() {
+        let mut row = vec![' '; cols];
+        for r in recs.iter().filter(|r| r.fid == fid) {
+            let c = (((r.entry_us - t0) as f64 / (t1 - t0) as f64) * (cols - 1) as f64)
+                as usize;
+            row[c.min(cols - 1)] = if r.is_anomaly() { '!' } else { '·' };
+        }
+        out.push_str(&format!(
+            "  {:<14} fid {:>3} |{}|\n",
+            state.func_name(app, fid),
+            fid,
+            row.iter().collect::<String>()
+        ));
+    }
+    out.push_str(&format!(
+        "  entry {} .. {} µs ('!' = anomaly)\n",
+        t0, t1
+    ));
+    out
+}
+
+/// Fig 6 / Figs 10–13 — call-stack view: entry-ordered, depth-indented
+/// bars; anomalies marked; message counts shown as arrows.
+pub fn call_stack(state: &VizState, app: u32, rank: u32, step: u64) -> String {
+    let recs = state.db.call_stack(app, rank, step);
+    render_call_stack(state, &recs, &format!("app {app}, rank {rank}, frame {step}"))
+}
+
+/// Render a call-stack view from explicit records (case-study reports).
+pub fn render_call_stack(state: &VizState, recs: &[&ProvRecord], title: &str) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== Call stack view — {title} ==\n"));
+    if recs.is_empty() {
+        out.push_str("  (empty)\n");
+        return out;
+    }
+    let t0 = recs.iter().map(|r| r.entry_us).min().unwrap();
+    let t1 = recs.iter().map(|r| r.exit_us).max().unwrap().max(t0 + 1);
+    let cols = 48usize;
+    for r in recs {
+        let start =
+            (((r.entry_us - t0) as f64 / (t1 - t0) as f64) * cols as f64) as usize;
+        let len = (((r.exit_us - r.entry_us) as f64 / (t1 - t0) as f64) * cols as f64)
+            .ceil()
+            .max(1.0) as usize;
+        let mut bar = vec![' '; cols];
+        for c in bar.iter_mut().skip(start).take(len) {
+            *c = '▬';
+        }
+        let mark = if r.is_anomaly() { "!!" } else { "  " };
+        let arrows = if r.n_messages > 0 {
+            format!("  ⇄{}msg/{}B", r.n_messages, r.msg_bytes)
+        } else {
+            String::new()
+        };
+        out.push_str(&format!(
+            "{} {:indent$}{:<16} |{}| {:>8}µs{}\n",
+            mark,
+            "",
+            state.func_name(r.app, r.fid),
+            bar.iter().collect::<String>(),
+            r.inclusive_us,
+            arrows,
+            indent = (r.depth as usize) * 2,
+        ));
+    }
+    out.push_str(&format!("   span {} .. {} µs; '!!' = anomaly\n", t0, t1));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ad::{ExecRecord, Label, Labeled};
+    use crate::provenance::ProvDb;
+    use crate::ps::{RankSummary, StepStat, VizSnapshot};
+    use crate::stats::RunStats;
+    use crate::trace::FuncRegistry;
+
+    fn demo_state() -> VizState {
+        let mut reg = FuncRegistry::new();
+        reg.register("MD_NEWTON", false);
+        reg.register("MD_FORCES", false);
+        let mut db = ProvDb::in_memory();
+        let mk = |fid: u32, entry: u64, exit: u64, depth: u32, label: Label, id: u64| Labeled {
+            rec: ExecRecord {
+                call_id: id,
+                app: 0,
+                rank: 3,
+                thread: 0,
+                fid,
+                step: 9,
+                entry_ts: entry,
+                exit_ts: exit,
+                depth,
+                parent: None,
+                n_children: 1,
+                n_messages: if fid == 1 { 2 } else { 0 },
+                msg_bytes: 512,
+                exclusive_us: exit - entry,
+            },
+            label,
+            score: 8.0,
+        };
+        db.append_step(
+            &[
+                mk(0, 100, 900, 0, Label::AnomalyHigh, 1),
+                mk(1, 200, 700, 1, Label::Normal, 2),
+            ],
+            &reg,
+        )
+        .unwrap();
+
+        let mut st = VizState::new(vec![reg]);
+        let mut counts = RunStats::new();
+        counts.push(3.0);
+        counts.push(1.0);
+        st.latest = VizSnapshot {
+            ranks: vec![RankSummary { app: 0, rank: 3, step_counts: counts, total_anomalies: 4 }],
+            fresh_steps: vec![],
+            total_anomalies: 4,
+            total_executions: 200,
+            global_events: vec![],
+        };
+        st.timeline = vec![(0, 3, 0, 3), (0, 3, 1, 1)];
+        let _ = StepStat {
+            app: 0,
+            rank: 3,
+            step: 0,
+            n_executions: 0,
+            n_anomalies: 0,
+            ts_range: (0, 0),
+        };
+        st.db = db;
+        st
+    }
+
+    #[test]
+    fn dashboard_renders_bars() {
+        let s = demo_state();
+        let out = dashboard(&s, RankStat::Total, 3);
+        assert!(out.contains("Ranking dashboard"));
+        assert!(out.contains("rank     3"));
+        assert!(out.contains("█"));
+        assert!(out.contains("most problematic"));
+    }
+
+    #[test]
+    fn timeline_renders_series() {
+        let s = demo_state();
+        let out = timeline(&s, &[(0, 3)], 40);
+        assert!(out.contains("anomaly counts"));
+        assert!(out.contains("'o' = app0 rank 3"));
+        assert!(out.contains('o'));
+    }
+
+    #[test]
+    fn function_view_marks_anomalies() {
+        let s = demo_state();
+        let out = function_view(&s, 0, 3, 9);
+        assert!(out.contains("MD_NEWTON"));
+        assert!(out.contains('!'));
+        assert!(out.contains('·'));
+    }
+
+    #[test]
+    fn function_view_empty_frame() {
+        let s = demo_state();
+        let out = function_view(&s, 0, 3, 999);
+        assert!(out.contains("nothing was anomalous"));
+    }
+
+    #[test]
+    fn call_stack_indents_and_marks() {
+        let s = demo_state();
+        let out = call_stack(&s, 0, 3, 9);
+        assert!(out.contains("!! MD_NEWTON"), "{out}");
+        assert!(out.contains("  MD_FORCES") || out.contains("   MD_FORCES"));
+        assert!(out.contains("⇄2msg"));
+        assert!(out.contains("▬"));
+    }
+}

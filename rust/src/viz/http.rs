@@ -1,0 +1,337 @@
+//! Minimal threaded HTTP/1.1 server for the visualization API (no web
+//! framework offline; the paper's uWSGI/celery stack maps to: accept
+//! thread + handler threads = worker pool, shared [`VizState`] = the
+//! database, and the JSON endpoints in [`api`](super::api)).
+//!
+//! Endpoints:
+//!
+//! ```text
+//! GET /                      → HTML index with usage
+//! GET /api/stats             → run counters
+//! GET /api/dashboard?stat=total&n=5
+//! GET /api/timeline?app=0&rank=3
+//! GET /api/function?app=0&rank=3&step=9
+//! GET /api/callstack?app=0&rank=3&step=9
+//! GET /api/anomalies?limit=20
+//! GET /view/dashboard|timeline|callstack (ASCII renderings, text/plain)
+//! ```
+
+use super::{api, ascii, RankStat, VizState};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Running server handle; drop (or call [`VizServer::stop`]) to shut down.
+pub struct VizServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+    requests: Arc<AtomicU64>,
+}
+
+impl VizServer {
+    /// Bind `addr` (use port 0 for ephemeral) and serve `state`.
+    pub fn start(addr: &str, state: Arc<RwLock<VizState>>) -> Result<VizServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let requests = Arc::new(AtomicU64::new(0));
+        let stop2 = stop.clone();
+        let req2 = requests.clone();
+        let join = std::thread::Builder::new()
+            .name("chimbuko-viz".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let st = state.clone();
+                            let rq = req2.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(stream, st, rq);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .context("spawning viz server")?;
+        Ok(VizServer { addr: local, stop, join: Some(join), requests })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn request_count(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for VizServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    state: Arc<RwLock<VizState>>,
+    requests: Arc<AtomicU64>,
+) -> Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    // Drain headers.
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 || h == "\r\n" || h == "\n" {
+            break;
+        }
+    }
+    requests.fetch_add(1, Ordering::Relaxed);
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let target = parts.next().unwrap_or("/");
+    let (status, ctype, body) = if method != "GET" {
+        (405, "text/plain", "method not allowed\n".to_string())
+    } else {
+        route(target, &state)
+    };
+    respond(stream, status, ctype, &body)
+}
+
+fn respond(mut stream: TcpStream, status: u16, ctype: &str, body: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Internal Server Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Parse `?k=v&k2=v2`.
+fn query_of(target: &str) -> (&str, HashMap<String, String>) {
+    match target.split_once('?') {
+        None => (target, HashMap::new()),
+        Some((path, qs)) => {
+            let mut m = HashMap::new();
+            for pair in qs.split('&') {
+                if let Some((k, v)) = pair.split_once('=') {
+                    m.insert(k.to_string(), v.to_string());
+                }
+            }
+            (path, m)
+        }
+    }
+}
+
+fn route(target: &str, state: &Arc<RwLock<VizState>>) -> (u16, &'static str, String) {
+    let (path, q) = query_of(target);
+    let get_u32 = |k: &str, d: u32| q.get(k).and_then(|v| v.parse().ok()).unwrap_or(d);
+    let get_u64 = |k: &str, d: u64| q.get(k).and_then(|v| v.parse().ok()).unwrap_or(d);
+    let get_usize = |k: &str, d: usize| q.get(k).and_then(|v| v.parse().ok()).unwrap_or(d);
+    let st = state.read().expect("viz state poisoned");
+    let json = |j: Json| (200, "application/json", j.to_string());
+    match path {
+        "/" => (
+            200,
+            "text/html",
+            format!(
+                "<html><body><h1>Chimbuko viz v{}</h1><pre>\n\
+                 GET /api/stats\n\
+                 GET /api/dashboard?stat=total|avg|std|max|min&n=5\n\
+                 GET /api/timeline?app=0&rank=0\n\
+                 GET /api/function?app=0&rank=0&step=0\n\
+                 GET /api/callstack?app=0&rank=0&step=0\n\
+                 GET /api/anomalies?limit=20\n\
+                 GET /api/globalevents\n\
+                 GET /view/dashboard  /view/timeline?app=&rank=  /view/callstack?app=&rank=&step=\n\
+                 </pre></body></html>\n",
+                crate::VERSION
+            ),
+        ),
+        "/api/stats" => json(api::stats(&st)),
+        "/api/dashboard" => {
+            let stat = q
+                .get("stat")
+                .and_then(|s| RankStat::parse(s))
+                .unwrap_or(RankStat::Total);
+            json(api::dashboard(&st, stat, get_usize("n", 5)))
+        }
+        "/api/timeline" => json(api::timeline(&st, get_u32("app", 0), get_u32("rank", 0))),
+        "/api/function" => json(api::function_view(
+            &st,
+            get_u32("app", 0),
+            get_u32("rank", 0),
+            get_u64("step", 0),
+        )),
+        "/api/callstack" => json(api::call_stack(
+            &st,
+            get_u32("app", 0),
+            get_u32("rank", 0),
+            get_u64("step", 0),
+        )),
+        "/api/anomalies" => json(api::top_anomalies(&st, get_usize("limit", 20))),
+        "/api/globalevents" => json(api::global_events(&st)),
+        "/view/dashboard" => {
+            let stat = q
+                .get("stat")
+                .and_then(|s| RankStat::parse(s))
+                .unwrap_or(RankStat::Total);
+            (200, "text/plain", ascii::dashboard(&st, stat, get_usize("n", 5)))
+        }
+        "/view/timeline" => (
+            200,
+            "text/plain",
+            ascii::timeline(&st, &[(get_u32("app", 0), get_u32("rank", 0))], 60),
+        ),
+        "/view/callstack" => (
+            200,
+            "text/plain",
+            ascii::call_stack(&st, get_u32("app", 0), get_u32("rank", 0), get_u64("step", 0)),
+        ),
+        _ => (404, "text/plain", "not found\n".to_string()),
+    }
+}
+
+/// Tiny blocking HTTP GET against a local server (tests + examples).
+pub fn http_get(addr: std::net::SocketAddr, path: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let mut body_len = 0usize;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 || h == "\r\n" || h == "\n" {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            body_len = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; body_len];
+    std::io::Read::read_exact(&mut reader, &mut body)?;
+    Ok((status, String::from_utf8_lossy(&body).to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::{RankSummary, VizSnapshot};
+    use crate::stats::RunStats;
+
+    fn served_state() -> Arc<RwLock<VizState>> {
+        let mut st = VizState::new(vec![]);
+        let mut c = RunStats::new();
+        c.push(1.0);
+        st.latest = VizSnapshot {
+            ranks: vec![RankSummary { app: 0, rank: 0, step_counts: c, total_anomalies: 1 }],
+            fresh_steps: vec![],
+            total_anomalies: 1,
+            total_executions: 10,
+            global_events: vec![],
+        };
+        Arc::new(RwLock::new(st))
+    }
+
+    #[test]
+    fn serves_json_endpoints() {
+        let mut srv = VizServer::start("127.0.0.1:0", served_state()).unwrap();
+        let addr = srv.addr();
+        let (code, body) = http_get(addr, "/api/stats").unwrap();
+        assert_eq!(code, 200);
+        let j = crate::util::json::parse(&body).unwrap();
+        assert_eq!(j.get("total_anomalies").unwrap().as_u64(), Some(1));
+
+        let (code, body) = http_get(addr, "/api/dashboard?stat=total&n=3").unwrap();
+        assert_eq!(code, 200);
+        crate::util::json::parse(&body).unwrap();
+
+        let (code, _) = http_get(addr, "/api/timeline?app=0&rank=0").unwrap();
+        assert_eq!(code, 200);
+        let (code, _) = http_get(addr, "/nope").unwrap();
+        assert_eq!(code, 404);
+        assert!(srv.request_count() >= 4);
+        srv.stop();
+    }
+
+    #[test]
+    fn serves_ascii_views_and_index() {
+        let mut srv = VizServer::start("127.0.0.1:0", served_state()).unwrap();
+        let addr = srv.addr();
+        let (code, body) = http_get(addr, "/").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("Chimbuko viz"));
+        let (code, body) = http_get(addr, "/view/dashboard").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("Ranking dashboard"));
+        srv.stop();
+    }
+
+    #[test]
+    fn global_events_endpoint() {
+        let state = served_state();
+        state.write().unwrap().latest.global_events.push(chimbuko_global_event());
+        let mut srv = VizServer::start("127.0.0.1:0", state).unwrap();
+        let (code, body) = http_get(srv.addr(), "/api/globalevents").unwrap();
+        assert_eq!(code, 200);
+        let j = crate::util::json::parse(&body).unwrap();
+        let evs = j.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].get("step").unwrap().as_u64(), Some(12));
+        srv.stop();
+    }
+
+    fn chimbuko_global_event() -> crate::ps::GlobalEvent {
+        crate::ps::GlobalEvent { step: 12, total_anomalies: 40, score: 5.5 }
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let mut srv = VizServer::start("127.0.0.1:0", served_state()).unwrap();
+        let addr = srv.addr();
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            joins.push(std::thread::spawn(move || {
+                let (code, _) = http_get(addr, "/api/stats").unwrap();
+                assert_eq!(code, 200);
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        srv.stop();
+    }
+}

@@ -1,0 +1,249 @@
+//! Visualization backend (paper §IV).
+//!
+//! Two client classes, same as the paper: *data senders* (the parameter
+//! server's snapshots + the provenance store) feed [`VizState`]; *users*
+//! query it — through the JSON/HTTP API ([`http`]) or the terminal
+//! renderings ([`ascii`]) that reproduce the paper's views:
+//!
+//! * Fig 3 — ranking dashboard (top/bottom-N ranks by a selectable
+//!   statistic of per-step anomaly counts);
+//! * Fig 4 — streaming per-step anomaly scatter for selected ranks;
+//! * Fig 5 — function-execution view for one (app, rank, frame);
+//! * Fig 6 / 10–13 — call-stack view with anomaly highlighting.
+
+pub mod api;
+pub mod ascii;
+pub mod http;
+
+use crate::provenance::ProvDb;
+use crate::ps::{RankSummary, VizSnapshot};
+use crate::trace::FuncRegistry;
+
+/// Statistic selector for the ranking dashboard (paper Fig 3 offers
+/// average / stddev / maximum / minimum / total).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum RankStat {
+    Average,
+    Stddev,
+    Maximum,
+    Minimum,
+    Total,
+}
+
+impl RankStat {
+    pub fn parse(s: &str) -> Option<RankStat> {
+        Some(match s {
+            "average" | "avg" | "mean" => RankStat::Average,
+            "stddev" | "std" => RankStat::Stddev,
+            "maximum" | "max" => RankStat::Maximum,
+            "minimum" | "min" => RankStat::Minimum,
+            "total" => RankStat::Total,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RankStat::Average => "average",
+            RankStat::Stddev => "stddev",
+            RankStat::Maximum => "maximum",
+            RankStat::Minimum => "minimum",
+            RankStat::Total => "total",
+        }
+    }
+
+    /// Extract the statistic from a rank summary.
+    pub fn of(self, r: &RankSummary) -> f64 {
+        match self {
+            RankStat::Average => r.step_counts.mean(),
+            RankStat::Stddev => r.step_counts.stddev(),
+            RankStat::Maximum => r.step_counts.max(),
+            RankStat::Minimum => r.step_counts.min(),
+            RankStat::Total => r.total_anomalies as f64,
+        }
+    }
+}
+
+/// In-memory state the server queries; built from a finished run or fed
+/// incrementally by the PS snapshot stream.
+pub struct VizState {
+    /// Latest snapshot (dashboard source).
+    pub latest: VizSnapshot,
+    /// Per-rank timeline accumulated from `fresh_steps` of every snapshot:
+    /// (app, rank, step, n_anomalies).
+    pub timeline: Vec<(u32, u32, u64, u64)>,
+    /// Provenance database for detail queries.
+    pub db: ProvDb,
+    /// Per-app function tables.
+    pub registries: Vec<FuncRegistry>,
+}
+
+impl VizState {
+    pub fn new(registries: Vec<FuncRegistry>) -> VizState {
+        VizState {
+            latest: VizSnapshot::default(),
+            timeline: Vec::new(),
+            db: ProvDb::in_memory(),
+            registries,
+        }
+    }
+
+    /// Build from a finished run.
+    pub fn from_run(
+        snapshots: &[VizSnapshot],
+        final_snapshot: VizSnapshot,
+        db: ProvDb,
+        registries: Vec<FuncRegistry>,
+    ) -> VizState {
+        let mut s = VizState::new(registries);
+        for snap in snapshots {
+            s.ingest(snap.clone());
+        }
+        s.latest = final_snapshot;
+        s.db = db;
+        s
+    }
+
+    /// Ingest one PS snapshot (data-sender path).
+    pub fn ingest(&mut self, snap: VizSnapshot) {
+        for st in &snap.fresh_steps {
+            self.timeline.push((st.app, st.rank, st.step, st.n_anomalies));
+        }
+        self.latest = snap;
+    }
+
+    /// Top/bottom `n` ranks by `stat` (Fig 3's dashboard selection).
+    pub fn ranking(&self, stat: RankStat, n: usize) -> (Vec<&RankSummary>, Vec<&RankSummary>) {
+        let mut sorted: Vec<&RankSummary> = self.latest.ranks.iter().collect();
+        sorted.sort_by(|a, b| {
+            stat.of(b)
+                .partial_cmp(&stat.of(a))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.rank.cmp(&b.rank))
+        });
+        let top: Vec<&RankSummary> = sorted.iter().take(n).copied().collect();
+        let mut bottom: Vec<&RankSummary> =
+            sorted.iter().rev().take(n).copied().collect();
+        bottom.reverse();
+        (top, bottom)
+    }
+
+    /// Per-step anomaly series for one rank (Fig 4's scatter).
+    pub fn rank_series(&self, app: u32, rank: u32) -> Vec<(u64, u64)> {
+        let mut v: Vec<(u64, u64)> = self
+            .timeline
+            .iter()
+            .filter(|(a, r, _, _)| *a == app && *r == rank)
+            .map(|(_, _, s, n)| (*s, *n))
+            .collect();
+        v.sort_by_key(|(s, _)| *s);
+        v
+    }
+
+    /// Function name lookup.
+    pub fn func_name(&self, app: u32, fid: u32) -> &str {
+        self.registries
+            .get(app as usize)
+            .map(|r| r.name(fid))
+            .unwrap_or("<unknown>")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::StepStat;
+    use crate::stats::RunStats;
+
+    fn summary(rank: u32, counts: &[f64]) -> RankSummary {
+        let mut s = RunStats::new();
+        for &c in counts {
+            s.push(c);
+        }
+        RankSummary {
+            app: 0,
+            rank,
+            step_counts: s,
+            total_anomalies: counts.iter().sum::<f64>() as u64,
+        }
+    }
+
+    fn state_with_ranks() -> VizState {
+        let mut st = VizState::new(vec![]);
+        st.latest = VizSnapshot {
+            ranks: vec![
+                summary(0, &[1.0, 1.0]),
+                summary(1, &[9.0, 0.0]), // max total & stddev
+                summary(2, &[0.0, 0.0]),
+                summary(3, &[2.0, 2.0]),
+            ],
+            fresh_steps: vec![],
+            total_anomalies: 15,
+            total_executions: 1000,
+            global_events: vec![],
+        };
+        st
+    }
+
+    #[test]
+    fn ranking_by_each_stat() {
+        let st = state_with_ranks();
+        let (top, bottom) = st.ranking(RankStat::Total, 2);
+        assert_eq!(top[0].rank, 1);
+        assert_eq!(top[1].rank, 3);
+        assert_eq!(bottom.len(), 2);
+        assert_eq!(bottom[1].rank, 2);
+
+        let (top, _) = st.ranking(RankStat::Stddev, 1);
+        assert_eq!(top[0].rank, 1);
+        let (top, _) = st.ranking(RankStat::Average, 1);
+        assert_eq!(top[0].rank, 1);
+        let (top, _) = st.ranking(RankStat::Minimum, 1);
+        assert_eq!(top[0].rank, 3); // min per-step count = 2
+    }
+
+    #[test]
+    fn ranking_more_than_available() {
+        let st = state_with_ranks();
+        let (top, bottom) = st.ranking(RankStat::Total, 100);
+        assert_eq!(top.len(), 4);
+        assert_eq!(bottom.len(), 4);
+    }
+
+    #[test]
+    fn timeline_accumulates_across_snapshots() {
+        let mut st = VizState::new(vec![]);
+        for step in 0..3u64 {
+            st.ingest(VizSnapshot {
+                ranks: vec![],
+                fresh_steps: vec![StepStat {
+                    app: 0,
+                    rank: 7,
+                    step,
+                    n_executions: 10,
+                    n_anomalies: step,
+                    ts_range: (0, 1),
+                }],
+                total_anomalies: 0,
+                total_executions: 0,
+                global_events: vec![],
+            });
+        }
+        assert_eq!(st.rank_series(0, 7), vec![(0, 0), (1, 1), (2, 2)]);
+        assert!(st.rank_series(0, 8).is_empty());
+    }
+
+    #[test]
+    fn stat_parse_names() {
+        for (s, w) in [
+            ("avg", RankStat::Average),
+            ("stddev", RankStat::Stddev),
+            ("max", RankStat::Maximum),
+            ("min", RankStat::Minimum),
+            ("total", RankStat::Total),
+        ] {
+            assert_eq!(RankStat::parse(s), Some(w));
+        }
+        assert_eq!(RankStat::parse("bogus"), None);
+    }
+}

