@@ -38,4 +38,30 @@ fn main() {
         "  mean accuracy {:.1}% (paper: 97.6%)",
         res.mean_accuracy() * 100.0
     );
+
+    // --- PS shard sweep: sync throughput vs shard count -------------------
+    let shard_counts: Vec<usize> = if fast { vec![1, 2, 4] } else { vec![1, 2, 4, 8] };
+    let (clients, syncs, funcs) = if fast { (4, 200, 64) } else { (8, 2_000, 128) };
+    println!(
+        "\nPS shard sweep: shards {:?}, {} clients x {} syncs x {} funcs/delta\n",
+        shard_counts, clients, syncs, funcs
+    );
+    let sweep = chimbuko::exp::run_ps_shard_sweep(&shard_counts, clients, syncs, funcs, 7);
+    print!("{}", sweep.render());
+    let first = sweep.rows.first().unwrap();
+    let at4 = sweep
+        .rows
+        .iter()
+        .find(|r| r.shards == 4)
+        .unwrap_or_else(|| sweep.rows.last().unwrap());
+    println!(
+        "shape check: sync throughput 1 → {} shards: {:.0} → {:.0} syncs/s ({:.2}x)",
+        at4.shards,
+        first.syncs_per_sec,
+        at4.syncs_per_sec,
+        at4.syncs_per_sec / first.syncs_per_sec.max(1e-9)
+    );
+    let out = "BENCH_ps_shards.json";
+    std::fs::write(out, sweep.to_json().to_pretty()).expect("writing BENCH_ps_shards.json");
+    println!("wrote {out}");
 }

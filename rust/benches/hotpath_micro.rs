@@ -80,7 +80,7 @@ fn main() {
     }
 
     // --- parameter-server sync ---
-    let (client, handle) = ps::spawn(None, usize::MAX >> 1);
+    let (client, handle) = ps::spawn(1, None, usize::MAX >> 1, 1);
     let mut delta = StatsTable::new();
     let mut rng = Rng::new(3);
     for _ in 0..200 {
@@ -90,7 +90,15 @@ fn main() {
         let _ = client.sync(0, 0, &delta);
     });
     client.shutdown();
-    handle.join().unwrap();
+    handle.join();
+
+    // Routed across 4 shards (same delta, fan-out/fan-in path).
+    let (client, handle) = ps::spawn(4, None, usize::MAX >> 1, 1);
+    b.run("ps: sync round-trip (13 funcs, 4 shards)", || {
+        let _ = client.sync(0, 0, &delta);
+    });
+    client.shutdown();
+    handle.join();
 
     // --- provenance serialization ---
     let mut d = RustDetector::new(DetectorConfig::default());

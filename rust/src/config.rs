@@ -96,6 +96,9 @@ pub struct Config {
     pub k_neighbors: usize,
     /// Parameter-server sync-and-broadcast cadence in steps (paper: 1 s).
     pub ps_period_steps: usize,
+    /// Parameter-server stat shards (hash-routed threads; 1 = the
+    /// single-consumer layout, >1 scales sync throughput with cores).
+    pub ps_shards: usize,
     /// Detector backend.
     pub backend: DetectorBackend,
     /// Labelling algorithm (threshold = the paper's; hbos = extension).
@@ -138,6 +141,7 @@ impl Default for Config {
             alpha: 6.0,
             k_neighbors: 5,
             ps_period_steps: 1,
+            ps_shards: 4,
             backend: DetectorBackend::Rust,
             algorithm: AdAlgorithm::Threshold,
             engine: TraceEngine::Sst,
@@ -195,6 +199,7 @@ impl Config {
             "ad.batch_capacity" => self.batch_capacity = v.parse()?,
             "ad.func_capacity" => self.func_capacity = v.parse()?,
             "ps.period_steps" => self.ps_period_steps = v.parse()?,
+            "ps.shards" => self.ps_shards = v.parse()?,
             "sst.queue_depth" => self.sst_queue_depth = v.parse()?,
             "app_work_ms_total" => self.app_work_ms_total = v.parse()?,
             "viz.addr" => self.viz_addr = v.to_string(),
@@ -224,6 +229,9 @@ impl Config {
         if self.ps_period_steps == 0 {
             bail!("ps.period_steps must be > 0");
         }
+        if self.ps_shards == 0 {
+            bail!("ps.shards must be > 0");
+        }
         if self.sst_queue_depth == 0 {
             bail!("sst.queue_depth must be > 0");
         }
@@ -240,6 +248,7 @@ impl Config {
             ("alpha", Json::num(self.alpha)),
             ("k_neighbors", Json::num(self.k_neighbors as f64)),
             ("ps_period_steps", Json::num(self.ps_period_steps as f64)),
+            ("ps_shards", Json::num(self.ps_shards as f64)),
             ("backend", Json::str(self.backend.name())),
             ("algorithm", Json::str(self.algorithm.name())),
             (
@@ -322,6 +331,7 @@ k_neighbors = 3
 
 [ps]
 period_steps = 2
+shards = 3
 
 [viz]
 enabled = false
@@ -334,6 +344,7 @@ enabled = false
         assert_eq!(c.alpha, 5.5);
         assert_eq!(c.k_neighbors, 3);
         assert_eq!(c.ps_period_steps, 2);
+        assert_eq!(c.ps_shards, 3);
         assert!(!c.viz_enabled);
     }
 
@@ -346,6 +357,7 @@ enabled = false
     fn invalid_values_rejected() {
         assert!(Config::from_str("ranks = 0").is_err());
         assert!(Config::from_str("alpha = -1").is_err());
+        assert!(Config::from_str("[ps]\nshards = 0").is_err());
         assert!(Config::from_str("engine = adios").is_err());
         assert!(Config::from_str("ranks = abc").is_err());
     }

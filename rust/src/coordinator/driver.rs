@@ -170,10 +170,13 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
             None
         };
 
-    // Parameter server + viz collector (Chimbuko mode only).
+    // Parameter server + viz collector (Chimbuko mode only). Publish
+    // cadence is one snapshot per step-round; the per-step report quorum
+    // is the number of reporting ranks — independent knobs (conflating
+    // them completes global-event steps early/late).
     let (viz_tx, viz_rx) = channel::<VizSnapshot>();
     let (ps_client, ps_handle) = if mode == Mode::TauChimbuko {
-        let (c, h) = ps::spawn(Some(viz_tx), cfg.ranks.max(1));
+        let (c, h) = ps::spawn(cfg.ps_shards, Some(viz_tx), cfg.ranks.max(1), cfg.ranks);
         (Some(c), Some(h))
     } else {
         drop(viz_tx);
@@ -429,18 +432,16 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
         errors.orphan_comm += o.errors.orphan_comm;
     }
 
-    // Shut the PS down and collect snapshots.
-    let (snapshot, snapshots) = match (ps_client, ps_handle) {
+    // Shut the PS constellation down and collect snapshots.
+    let snapshot = match (ps_client, ps_handle) {
         (Some(c), Some(h)) => {
             c.shutdown();
-            let ps = h.join().expect("ps thread panicked");
-            let snap = ps.snapshot();
+            let fin = h.join();
             drop(c);
-            (snap, ())
+            fin.snapshot
         }
-        _ => (VizSnapshot::default(), ()),
+        _ => VizSnapshot::default(),
     };
-    let _ = snapshots;
     let snapshots = viz_collector.join().expect("viz collector panicked");
 
     let wall = t0.elapsed().as_secs_f64();
@@ -542,6 +543,32 @@ mod tests {
         assert_eq!(a.total_execs, b.total_execs);
         assert_eq!(a.total_anomalies, b.total_anomalies);
         assert_eq!(a.total_kept, b.total_kept);
+    }
+
+    #[test]
+    fn shard_count_does_not_change_results() {
+        // The quickstart-shaped workflow must produce the same report
+        // whether the PS runs as one shard (single-server layout) or many.
+        let mut totals = Vec::new();
+        for shards in [1usize, 2, 4] {
+            let mut cfg = small_cfg();
+            cfg.ps_shards = shards;
+            let w = Workflow::nwchem(&cfg);
+            let r = run(&cfg, &w, Mode::TauChimbuko).unwrap();
+            assert_eq!(r.snapshot.ranks.len(), cfg.ranks, "shards={shards}");
+            // Note: global-event counts are excluded — detection depends
+            // on step-completion order under concurrent AD workers, which
+            // is scheduling- (not shard-) dependent.
+            totals.push((
+                r.total_events,
+                r.total_execs,
+                r.total_anomalies,
+                r.total_kept,
+                r.snapshot.total_anomalies,
+            ));
+        }
+        assert_eq!(totals[0], totals[1], "1 vs 2 shards diverged");
+        assert_eq!(totals[1], totals[2], "2 vs 4 shards diverged");
     }
 
     #[test]

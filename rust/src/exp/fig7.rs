@@ -141,7 +141,7 @@ pub fn run_fig7(scales: &[usize], steps: usize, iters_per_step: u32, seed: u64) 
         let t_single = t0.elapsed().as_secs_f64();
 
         // --- Distributed: per-rank detectors + parameter server sync.
-        let (client, ps_handle) = ps::spawn(None, usize::MAX >> 1);
+        let (client, ps_handle) = ps::spawn(1, None, usize::MAX >> 1, ranks);
         let mut detectors: Vec<RustDetector> =
             (0..ranks).map(|_| RustDetector::new(cfg)).collect();
         let mut dist_anoms: HashSet<(u32, u64)> = HashSet::new();
@@ -159,7 +159,7 @@ pub fn run_fig7(scales: &[usize], steps: usize, iters_per_step: u32, seed: u64) 
             }
         }
         client.shutdown();
-        ps_handle.join().expect("ps thread");
+        ps_handle.join();
 
         let inter = single_anoms.intersection(&dist_anoms).count() as f64;
         let union = single_anoms.union(&dist_anoms).count() as f64;
@@ -180,6 +180,135 @@ pub fn run_fig7(scales: &[usize], steps: usize, iters_per_step: u32, seed: u64) 
         });
     }
     Fig7Result { rows }
+}
+
+/// One point of the PS shard sweep: sync throughput and latency at a
+/// given shard count.
+#[derive(Clone, Debug)]
+pub struct ShardSweepRow {
+    pub shards: usize,
+    /// Routed syncs completed per second across all clients.
+    pub syncs_per_sec: f64,
+    /// Per-sync round-trip latency percentiles, µs.
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub total_syncs: u64,
+    pub wall_seconds: f64,
+}
+
+/// Result of the shard sweep (the `BENCH_ps_shards.json` artifact).
+#[derive(Clone, Debug)]
+pub struct ShardSweepResult {
+    pub rows: Vec<ShardSweepRow>,
+    pub clients: usize,
+    pub funcs_per_sync: usize,
+}
+
+impl ShardSweepResult {
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "PS shard sweep — sync throughput vs shard count",
+            &["shards", "syncs/s", "p50(µs)", "p99(µs)", "total syncs", "wall(s)"],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                r.shards.to_string(),
+                format!("{:.0}", r.syncs_per_sec),
+                format!("{:.1}", r.p50_us),
+                format!("{:.1}", r.p99_us),
+                r.total_syncs.to_string(),
+                format!("{:.3}", r.wall_seconds),
+            ]);
+        }
+        format!(
+            "{}({} client threads, {} functions per sync delta)\n",
+            t.render(),
+            self.clients,
+            self.funcs_per_sync
+        )
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("bench", Json::str("ps_shards")),
+            ("clients", Json::num(self.clients as f64)),
+            ("funcs_per_sync", Json::num(self.funcs_per_sync as f64)),
+            (
+                "rows",
+                Json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("shards", Json::num(r.shards as f64)),
+                                ("syncs_per_sec", Json::num(r.syncs_per_sec)),
+                                ("p50_us", Json::num(r.p50_us)),
+                                ("p99_us", Json::num(r.p99_us)),
+                                ("total_syncs", Json::num(r.total_syncs as f64)),
+                                ("wall_seconds", Json::num(r.wall_seconds)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Sweep PS shard counts under a fixed concurrent sync load: `clients`
+/// threads each issue `syncs_per_client` routed syncs whose deltas touch
+/// `funcs_per_sync` functions. Reports throughput and round-trip latency
+/// per shard count — the sync-throughput scaling argument of the
+/// sharding refactor, measured.
+pub fn run_ps_shard_sweep(
+    shard_counts: &[usize],
+    clients: usize,
+    syncs_per_client: usize,
+    funcs_per_sync: usize,
+    seed: u64,
+) -> ShardSweepResult {
+    let mut rows = Vec::new();
+    for &shards in shard_counts {
+        let (client, handle) = ps::spawn(shards, None, usize::MAX >> 1, clients.max(1));
+        let t0 = Instant::now();
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let cl = client.clone();
+            let mut rng = Rng::new(seed ^ (c as u64).wrapping_mul(0x9E37_79B9));
+            joins.push(std::thread::spawn(move || {
+                let mut lat_us = Vec::with_capacity(syncs_per_client);
+                for _ in 0..syncs_per_client {
+                    let mut delta = crate::stats::StatsTable::new();
+                    for f in 0..funcs_per_sync {
+                        delta.push(f as u32, rng.lognormal(6.0, 0.5));
+                    }
+                    let t = Instant::now();
+                    let (global, _) = cl.sync(0, c as u32, &delta);
+                    lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+                    assert_eq!(global.len(), funcs_per_sync, "reply must cover the delta");
+                }
+                lat_us
+            }));
+        }
+        let mut lat_us: Vec<f64> = Vec::with_capacity(clients * syncs_per_client);
+        for j in joins {
+            lat_us.extend(j.join().expect("sweep client panicked"));
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        client.shutdown();
+        let fin = handle.join();
+        let total_syncs = fin.sync_count;
+        rows.push(ShardSweepRow {
+            shards,
+            syncs_per_sec: total_syncs as f64 / wall.max(1e-9),
+            p50_us: crate::util::percentile(&lat_us, 50.0),
+            p99_us: crate::util::percentile(&lat_us, 99.0),
+            total_syncs,
+            wall_seconds: wall,
+        });
+    }
+    ShardSweepResult { rows, clients, funcs_per_sync }
 }
 
 #[cfg(test)]
@@ -215,5 +344,23 @@ mod tests {
         let text = res.render();
         assert!(text.contains("Fig 7"));
         assert!(text.contains("97.6%"));
+    }
+
+    #[test]
+    fn shard_sweep_produces_rows_and_json() {
+        let res = run_ps_shard_sweep(&[1, 2], 4, 40, 32, 11);
+        assert_eq!(res.rows.len(), 2);
+        for row in &res.rows {
+            assert_eq!(row.total_syncs, 4 * 40);
+            assert!(row.syncs_per_sec > 0.0);
+            assert!(row.p50_us > 0.0);
+            assert!(row.p99_us >= row.p50_us);
+        }
+        let text = res.render();
+        assert!(text.contains("PS shard sweep"));
+        let json = res.to_json();
+        assert_eq!(json.get("bench").unwrap().as_str(), Some("ps_shards"));
+        assert_eq!(json.get("rows").unwrap().as_arr().unwrap().len(), 2);
+        crate::util::json::parse(&json.to_pretty()).unwrap();
     }
 }

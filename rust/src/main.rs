@@ -2,13 +2,13 @@
 //!
 //! ```text
 //! chimbuko run      [--config f] [--ranks N] [--steps N] [--backend rust|xla]
-//!                   [--out dir] [--unfiltered] [--serve]
+//!                   [--ps-shards N] [--out dir] [--unfiltered] [--serve]
 //! chimbuko gen      [--ranks N] [--steps N] [--out trace.bp] [--unfiltered]
 //! chimbuko replay   --dir <out_dir>        re-index a stored run, print stats
 //! chimbuko serve    --dir <out_dir> [--addr host:port]   viz server over a run
 //! chimbuko exp      <fig7|fig8|fig9|viz|case> [--fast]    paper experiments
 //! chimbuko compare  --a <dir> --b <dir>    cross-run provenance mining
-//! chimbuko ps-server [--addr host:port]    standalone TCP parameter server
+//! chimbuko ps-server [--addr host:port] [--shards N] [--ranks N]  standalone TCP parameter server
 //! chimbuko analyze  --bp trace.bp [--out dir] [--algorithm hbos]  offline re-analysis
 //! chimbuko version
 //! ```
@@ -80,6 +80,9 @@ fn config_of(args: &Args) -> anyhow::Result<Config> {
     }
     if let Some(v) = args.get("calls-per-step") {
         cfg.apply("calls_per_step", v)?;
+    }
+    if let Some(v) = args.get("ps-shards") {
+        cfg.apply("ps.shards", v)?;
     }
     if args.flag("unfiltered") {
         cfg.filtered = false;
@@ -240,11 +243,27 @@ fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
 
 /// Standalone parameter server reachable over TCP (`ps::net` protocol) —
 /// the cross-process deployment shape of the paper's architecture.
+///
+/// `--ranks` must equal the number of ranks that will send per-step
+/// reports: it is the quorum that completes a step's workflow-wide
+/// anomaly total. Too high and steps never complete (global-event
+/// detection stays silent and per-step accumulators linger); too low
+/// and steps complete early on partial totals.
 fn cmd_ps_server(args: &Args) -> anyhow::Result<()> {
     let addr = args.str_opt("addr", "127.0.0.1:5559");
-    let (client, _handle) = chimbuko::ps::spawn(None, args.usize_opt("publish-every", 64));
+    let shards = args.usize_opt("shards", 4);
+    let (client, _handle) = chimbuko::ps::spawn(
+        shards,
+        None,
+        args.usize_opt("publish-every", 64),
+        args.usize_opt("ranks", 64),
+    );
     let server = chimbuko::ps::net::PsTcpServer::start(&addr, client)?;
-    println!("parameter server on {} — Ctrl-C to stop", server.addr());
+    println!(
+        "parameter server on {} ({} shards) — Ctrl-C to stop",
+        server.addr(),
+        shards
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -279,6 +298,19 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
         let steps = if fast { 10 } else { 20 };
         let res = chimbuko::exp::run_fig7(&scales, steps, 4, args.u64_opt("seed", 7));
         print!("{}", res.render());
+        let shard_counts: Vec<usize> = args
+            .u64_list("ps-shards", if fast { &[1, 2] } else { &[1, 2, 4, 8] })
+            .iter()
+            .map(|&x| x as usize)
+            .collect();
+        let sweep = chimbuko::exp::run_ps_shard_sweep(
+            &shard_counts,
+            if fast { 4 } else { 8 },
+            if fast { 200 } else { 1_000 },
+            if fast { 64 } else { 128 },
+            args.u64_opt("seed", 7),
+        );
+        print!("{}", sweep.render());
     };
     let run_fig8 = || -> anyhow::Result<()> {
         let scales: Vec<usize> = args

@@ -1,4 +1,4 @@
-//! The **online AD parameter server** (paper §III-B2).
+//! The **online AD parameter server** (paper §III-B2) — sharded.
 //!
 //! Maintains the global view of the workflow: per-function execution-time
 //! statistics (merged from the on-node AD modules with Pébay's formulas —
@@ -6,18 +6,59 @@
 //! per-step anomaly timeline. Periodically publishes a snapshot to the
 //! visualization ingest channel.
 //!
-//! Runs as a dedicated thread consuming [`PsRequest`]s from an mpsc
-//! channel; on-node AD modules talk to it through [`PsClient`] handles
-//! (cloneable senders + per-request reply channels), which is the in-proc
-//! analogue of the reference implementation's ZeroMQ sockets.
+//! ## Architecture
+//!
+//! Since the sharding refactor the server is a small constellation of
+//! threads rather than one consumer (see [`shard`]):
+//!
+//! * **N stat shards** — each owns the partition of the per-function
+//!   statistics with `shard_of(app, fid, N) == i` and drains its own
+//!   channel. A `Sync` never touches more than the shards its delta maps
+//!   to, so sync throughput scales with cores instead of serializing
+//!   through one thread.
+//! * **One aggregator** — a [`ParameterServer`] (kept as the
+//!   single-threaded reference implementation) that owns everything
+//!   keyed by rank/step: the per-rank anomaly timeline, per-step totals,
+//!   global-event detection (§V), and the per-rank event-delivery
+//!   cursors. It receives `Report`s and empty-delta `Sync`s (the event
+//!   fetch leg of a routed sync).
+//! * **One merge stage** — folds the aggregator's partial snapshot with
+//!   one partial per stat shard using [`VizSnapshot::merge`] (Pébay
+//!   merges are commutative, so shard arrival order cannot change the
+//!   result) and forwards the folded snapshot to the viz ingest channel.
+//!   No shard ever blocks on another: snapshots are barrier-free.
+//!
+//! ## Routing protocol
+//!
+//! [`PsClient`](shard::PsClient) is a router: `sync` splits the rank's
+//! delta by `shard_of`, batches each shard's sub-delta into a single
+//! message, fans them out, fetches undelivered global events from the
+//! aggregator, and reassembles the reply (global stats for the touched
+//! functions + fresh global events) client-side. The TCP front-end
+//! ([`net`]) carries the same grouping on the wire: a client learns the
+//! server's shard count from a hello handshake and ships per-shard
+//! groups, which the server validates and forwards without
+//! re-partitioning.
+//!
+//! The event-fetch leg keeps one O(1) message per sync flowing through
+//! the aggregator — the price of exactly-once, next-sync event delivery.
+//! Stat merging (the heavy part) scales with shards; the aggregator's
+//! message rate is the eventual ceiling (see ROADMAP "Event-fetch
+//! gating").
+//!
+//! With one shard the constellation reproduces the single-server
+//! behaviour exactly (see `tests/ps_shard.rs` for the equivalence
+//! property over N ∈ {1, 2, 4, 7}).
 
 pub mod net;
+pub mod shard;
+
+pub use shard::{shard_of, spawn, PsClient, PsFinal, PsHandle};
 
 use crate::ad::Label;
-use crate::stats::{RunStats, StatsTable};
+use crate::stats::RunStats;
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::thread::JoinHandle;
+use std::sync::mpsc::Sender;
 
 /// Function statistics key: apps have independent fid spaces.
 pub type FuncKey = (u32, u32); // (app, fid)
@@ -37,7 +78,9 @@ pub struct StepStat {
 /// Message from an AD module to the server.
 pub enum PsRequest {
     /// Statistics sync: fold `delta` into the global view, reply with the
-    /// global snapshot for the touched functions.
+    /// global snapshot for the touched functions. An empty delta is the
+    /// event-fetch leg of a routed sync: it only advances the rank's
+    /// global-event cursor.
     Sync {
         app: u32,
         rank: u32,
@@ -61,6 +104,10 @@ pub struct PsReply {
 }
 
 /// Snapshot published to the visualization ingest channel.
+///
+/// In the sharded server each thread publishes a *partial* snapshot (the
+/// aggregator contributes ranks/timeline/events, each stat shard its
+/// function count) and the merge stage folds them with [`Self::merge`].
 #[derive(Clone, Debug, Default)]
 pub struct VizSnapshot {
     /// Per-rank summaries (Fig 3's ranking dashboard feeds from this).
@@ -72,8 +119,31 @@ pub struct VizSnapshot {
     pub total_anomalies: u64,
     /// Total executions so far, workflow-wide.
     pub total_executions: u64,
+    /// Distinct functions tracked in the global statistics view.
+    pub functions_tracked: u64,
     /// Globally detected events so far (§V future work).
     pub global_events: Vec<GlobalEvent>,
+}
+
+impl VizSnapshot {
+    /// Fold another (partial) snapshot into this one. Commutative and
+    /// associative up to the deterministic orderings applied here (ranks
+    /// sorted by `(app, rank)`, events deduplicated by step and sorted),
+    /// so the merge stage may fold shard partials in arrival order.
+    pub fn merge(&mut self, other: &VizSnapshot) {
+        self.ranks.extend(other.ranks.iter().cloned());
+        self.ranks.sort_by_key(|r| (r.app, r.rank));
+        self.fresh_steps.extend(other.fresh_steps.iter().cloned());
+        self.total_anomalies += other.total_anomalies;
+        self.total_executions += other.total_executions;
+        self.functions_tracked += other.functions_tracked;
+        for ev in &other.global_events {
+            if !self.global_events.iter().any(|e| e.step == ev.step) {
+                self.global_events.push(*ev);
+            }
+        }
+        self.global_events.sort_by_key(|e| e.step);
+    }
 }
 
 /// Per-rank anomaly summary: statistics over its per-step anomaly counts
@@ -99,7 +169,9 @@ pub struct GlobalEvent {
     pub score: f64,
 }
 
-/// The server state (usable directly in-thread for tests, or spawned).
+/// The single-threaded server (usable directly in-thread for tests, the
+/// semantic reference for the sharded constellation, and the aggregator
+/// shard inside [`shard::spawn`]).
 pub struct ParameterServer {
     global: HashMap<FuncKey, RunStats>,
     per_rank: HashMap<(u32, u32), RankAccum>,
@@ -115,7 +187,10 @@ pub struct ParameterServer {
     /// Per-step workflow-wide accumulation toward global-event detection:
     /// step → (reports received, anomaly total).
     step_acc: HashMap<u64, (usize, u64)>,
-    /// Reports expected per step (= ranks); completes a step's total.
+    /// Reports expected per step (= number of reporting ranks);
+    /// completes a step's total. An explicit constructor parameter: the
+    /// publish cadence and the per-step report quorum are independent
+    /// knobs, and conflating them completes steps early/late.
     reports_per_step: usize,
     /// Statistics over completed steps' anomaly totals.
     step_totals: RunStats,
@@ -137,7 +212,14 @@ struct RankAccum {
 }
 
 impl ParameterServer {
-    pub fn new(viz_tx: Option<Sender<VizSnapshot>>, publish_every: usize) -> Self {
+    /// `publish_every` is the viz publish cadence in Report messages;
+    /// `reports_per_step` is the number of ranks reporting each step
+    /// (the quorum that completes a step's workflow-wide anomaly total).
+    pub fn new(
+        viz_tx: Option<Sender<VizSnapshot>>,
+        publish_every: usize,
+        reports_per_step: usize,
+    ) -> Self {
         ParameterServer {
             global: HashMap::new(),
             per_rank: HashMap::new(),
@@ -149,7 +231,7 @@ impl ParameterServer {
             reports_since_publish: 0,
             sync_count: 0,
             step_acc: HashMap::new(),
-            reports_per_step: publish_every.max(1),
+            reports_per_step: reports_per_step.max(1),
             step_totals: RunStats::new(),
             global_events: Vec::new(),
             event_cursor: HashMap::new(),
@@ -247,8 +329,15 @@ impl ParameterServer {
             fresh_steps: self.fresh.clone(),
             total_anomalies: self.total_anomalies,
             total_executions: self.total_executions,
+            functions_tracked: self.global.len() as u64,
             global_events: self.global_events.clone(),
         }
+    }
+
+    /// Drop the viz sender (the sharded constellation uses this to close
+    /// the merge stage's job channel after the aggregator stops).
+    pub fn detach_viz(&mut self) {
+        self.viz_tx = None;
     }
 
     /// All globally detected events so far.
@@ -261,82 +350,14 @@ impl ParameterServer {
         self.global.get(&(app, fid))
     }
 
+    /// Iterate the full global statistics view.
+    pub fn global_iter(&self) -> impl Iterator<Item = (FuncKey, &RunStats)> {
+        self.global.iter().map(|(&k, s)| (k, s))
+    }
+
     /// Number of functions tracked globally.
     pub fn global_len(&self) -> usize {
         self.global.len()
-    }
-}
-
-/// Spawn the server on its own thread.
-pub fn spawn(
-    viz_tx: Option<Sender<VizSnapshot>>,
-    publish_every: usize,
-) -> (PsClient, JoinHandle<ParameterServer>) {
-    let (tx, rx): (Sender<PsRequest>, Receiver<PsRequest>) = channel();
-    let handle = std::thread::Builder::new()
-        .name("chimbuko-ps".into())
-        .spawn(move || {
-            let mut ps = ParameterServer::new(viz_tx, publish_every);
-            while let Ok(req) = rx.recv() {
-                if !ps.handle(req) {
-                    break;
-                }
-            }
-            ps
-        })
-        .expect("spawning parameter server");
-    (PsClient { tx }, handle)
-}
-
-/// Cloneable client handle used by on-node AD modules.
-#[derive(Clone)]
-pub struct PsClient {
-    tx: Sender<PsRequest>,
-}
-
-impl PsClient {
-    /// Synchronous stats exchange: send local delta, adopt global reply.
-    /// Returns the global snapshot for the touched functions plus any
-    /// fresh globally detected events (§V trigger).
-    pub fn sync(&self, app: u32, rank: u32, delta: &StatsTable) -> (StatsTable, Vec<GlobalEvent>) {
-        if delta.is_empty() {
-            return (StatsTable::new(), Vec::new());
-        }
-        let (rtx, rrx) = channel();
-        let msg = PsRequest::Sync {
-            app,
-            rank,
-            delta: delta.iter().map(|(f, s)| (f, *s)).collect(),
-            reply: rtx,
-        };
-        if self.tx.send(msg).is_err() {
-            return (StatsTable::new(), Vec::new());
-        }
-        match rrx.recv() {
-            Ok(reply) => {
-                let mut t = StatsTable::new();
-                for (fid, st) in reply.global {
-                    t.replace(fid, st);
-                }
-                (t, reply.global_events)
-            }
-            Err(_) => (StatsTable::new(), Vec::new()),
-        }
-    }
-
-    /// Fire-and-forget anomaly accounting.
-    pub fn report(&self, stat: StepStat) {
-        let _ = self.tx.send(PsRequest::Report(stat));
-    }
-
-    /// Force a viz publish.
-    pub fn publish(&self) {
-        let _ = self.tx.send(PsRequest::Publish);
-    }
-
-    /// Stop the server (it publishes a final snapshot first).
-    pub fn shutdown(&self) {
-        let _ = self.tx.send(PsRequest::Shutdown);
     }
 }
 
@@ -361,6 +382,7 @@ pub fn count_anomalies(labels: &[crate::ad::Labeled]) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::stats::StatsTable;
     use std::sync::mpsc::channel;
 
     fn stats_of(values: &[f64]) -> RunStats {
@@ -373,7 +395,7 @@ mod tests {
 
     #[test]
     fn sync_merges_and_replies_global() {
-        let mut ps = ParameterServer::new(None, 1000);
+        let mut ps = ParameterServer::new(None, 1000, 1);
         let (rtx, rrx) = channel();
         ps.handle(PsRequest::Sync {
             app: 0,
@@ -397,11 +419,12 @@ mod tests {
         // Same fid in a different app is independent.
         assert!(ps.global_stats(1, 7).is_none());
         assert_eq!(ps.global_len(), 1);
+        assert_eq!(ps.snapshot().functions_tracked, 1);
     }
 
     #[test]
     fn reports_build_rank_summaries() {
-        let mut ps = ParameterServer::new(None, 1000);
+        let mut ps = ParameterServer::new(None, 1000, 1);
         for step in 0..4 {
             ps.handle(PsRequest::Report(StepStat {
                 app: 0,
@@ -424,7 +447,7 @@ mod tests {
     #[test]
     fn publish_cadence_and_drain() {
         let (vtx, vrx) = channel();
-        let mut ps = ParameterServer::new(Some(vtx), 2);
+        let mut ps = ParameterServer::new(Some(vtx), 2, 1);
         for step in 0..4 {
             ps.handle(PsRequest::Report(StepStat {
                 app: 0,
@@ -444,7 +467,7 @@ mod tests {
 
     #[test]
     fn threaded_server_round_trip() {
-        let (client, handle) = spawn(None, 10);
+        let (client, handle) = spawn(2, None, 10, 1);
         let mut delta = StatsTable::new();
         for v in [1.0, 2.0, 3.0] {
             delta.push(5, v);
@@ -455,13 +478,13 @@ mod tests {
         let (g2, _) = client.sync(0, 1, &delta);
         assert_eq!(g2.get(5).unwrap().count(), 6);
         client.shutdown();
-        let ps = handle.join().unwrap();
-        assert_eq!(ps.sync_count, 2);
+        let fin = handle.join();
+        assert_eq!(fin.sync_count, 2);
     }
 
     #[test]
     fn concurrent_syncs_converge() {
-        let (client, handle) = spawn(None, 1000);
+        let (client, handle) = spawn(3, None, 1000, 1);
         let mut joins = Vec::new();
         for rank in 0..8u32 {
             let c = client.clone();
@@ -477,14 +500,14 @@ mod tests {
             j.join().unwrap();
         }
         client.shutdown();
-        let ps = handle.join().unwrap();
-        assert_eq!(ps.global_stats(0, 1).unwrap().count(), 400);
+        let fin = handle.join();
+        assert_eq!(fin.global_stats(0, 1).unwrap().count(), 400);
     }
 
     #[test]
     fn global_event_detection_and_delivery() {
         // 4 ranks; 10 quiet steps then one step with a workflow-wide burst.
-        let mut ps = ParameterServer::new(None, 4);
+        let mut ps = ParameterServer::new(None, 4, 4);
         let report = |ps: &mut ParameterServer, step: u64, rank: u32, anoms: u64| {
             ps.handle(PsRequest::Report(StepStat {
                 app: 0,
@@ -533,11 +556,45 @@ mod tests {
 
     #[test]
     fn empty_delta_skips_roundtrip() {
-        let (client, handle) = spawn(None, 10);
+        let (client, handle) = spawn(2, None, 10, 1);
         let (g, ev) = client.sync(0, 0, &StatsTable::new());
         assert!(g.is_empty());
         assert!(ev.is_empty());
         client.shutdown();
-        assert_eq!(handle.join().unwrap().sync_count, 0);
+        assert_eq!(handle.join().sync_count, 0);
+    }
+
+    #[test]
+    fn snapshot_merge_is_order_independent() {
+        let agg = {
+            let mut ps = ParameterServer::new(None, 1000, 1);
+            for step in 0..3 {
+                ps.handle(PsRequest::Report(StepStat {
+                    app: 0,
+                    rank: 1,
+                    step,
+                    n_executions: 10,
+                    n_anomalies: 1,
+                    ts_range: (0, 1),
+                }));
+            }
+            ps.snapshot()
+        };
+        let part_a = VizSnapshot { functions_tracked: 3, ..VizSnapshot::default() };
+        let part_b = VizSnapshot { functions_tracked: 5, ..VizSnapshot::default() };
+
+        let mut ab = agg.clone();
+        ab.merge(&part_a);
+        ab.merge(&part_b);
+        let mut ba = part_b.clone();
+        ba.merge(&part_a);
+        ba.merge(&agg);
+
+        assert_eq!(ab.functions_tracked, 8);
+        assert_eq!(ba.functions_tracked, 8);
+        assert_eq!(ab.total_anomalies, ba.total_anomalies);
+        assert_eq!(ab.total_executions, ba.total_executions);
+        assert_eq!(ab.ranks.len(), ba.ranks.len());
+        assert_eq!(ab.fresh_steps.len(), ba.fresh_steps.len());
     }
 }

@@ -3,25 +3,35 @@
 //! one PS instance reachable over the interconnect; the reference
 //! implementation used ZeroMQ).
 //!
-//! Wire protocol: length-prefixed binary messages, little-endian.
+//! Wire protocol (v2, shard-aware): length-prefixed binary messages,
+//! little-endian. A client first sends a `hello` to learn the server's
+//! shard count, then groups every sync delta by [`shard_of`](super::shard_of)
+//! so the server can forward each group to its shard without
+//! re-partitioning — the wire carries the same batched, hash-routed shape
+//! the in-proc router uses. The server re-checks each entry's hash (the
+//! wire is a trust boundary) and drops the connection on a misgrouped
+//! frame.
 //!
 //! ```text
 //! request  := u32 len, u8 kind, payload
-//!   kind 1 (sync):   app u32, rank u32, n_entries u32,
-//!                    n_entries × (fid u32, n u64, mean f64, m2 f64,
-//!                                 min f64, max f64)
+//!   kind 1 (sync):   app u32, rank u32, n_groups u32,
+//!                    n_groups × (shard u32, n_entries u32,
+//!                                n_entries × (fid u32, n u64, mean f64,
+//!                                             m2 f64, min f64, max f64))
 //!   kind 2 (report): app u32, rank u32, step u64, execs u64, anoms u64,
 //!                    ts_lo u64, ts_hi u64
-//! reply (sync only) := u32 len, n_entries u32, entries (as above),
-//!                      n_events u32, n_events × (step u64, total u64,
-//!                                                score f64)
+//!   kind 3 (hello):  (empty)
+//! reply (sync)  := u32 len, n_entries u32, entries (as above),
+//!                  n_events u32, n_events × (step u64, total u64,
+//!                                            score f64)
+//! reply (hello) := u32 len, n_shards u32
 //! ```
 //!
 //! The server thread wraps a [`PsClient`] (so in-proc and TCP clients
-//! share the same [`ParameterServer`] state); [`NetPsClient`] mirrors the
+//! share the same sharded server state); [`NetPsClient`] mirrors the
 //! [`PsClient`] API over a socket.
 
-use super::{GlobalEvent, PsClient, StepStat};
+use super::{shard_of, GlobalEvent, PsClient, StepStat};
 use crate::stats::{RunStats, StatsTable};
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
@@ -31,6 +41,7 @@ use std::sync::Arc;
 
 const KIND_SYNC: u8 = 1;
 const KIND_REPORT: u8 = 2;
+const KIND_HELLO: u8 = 3;
 
 fn write_msg<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
@@ -162,18 +173,41 @@ fn serve_conn(mut stream: TcpStream, client: PsClient) -> Result<()> {
         let mut c = Cursor(&msg, 0);
         let kind = c.take::<1>()?[0];
         match kind {
+            KIND_HELLO => {
+                let reply = (client.shard_count() as u32).to_le_bytes();
+                write_msg(&mut stream, &reply)?;
+            }
             KIND_SYNC => {
                 let app = c.u32()?;
                 let rank = c.u32()?;
-                let n = c.u32()? as usize;
-                let mut delta = StatsTable::new();
-                for _ in 0..n {
-                    let (fid, st) = c.stats()?;
-                    delta.merge_one(fid, &st);
+                let n_groups = c.u32()? as usize;
+                let mut parts: Vec<Vec<(u32, RunStats)>> =
+                    vec![Vec::new(); client.shard_count()];
+                for _ in 0..n_groups {
+                    let shard = c.u32()? as usize;
+                    let n = c.u32()? as usize;
+                    if shard >= parts.len() {
+                        bail!("shard id {shard} out of range (server has {})", parts.len());
+                    }
+                    for _ in 0..n {
+                        let entry = c.stats()?;
+                        // The wire is a trust boundary: a misgrouped entry
+                        // would silently fragment the global view across
+                        // shards, so re-check the hash (cheap) and bail.
+                        let want = shard_of(app, entry.0, parts.len());
+                        if want != shard {
+                            bail!(
+                                "entry (app {app}, fid {}) grouped to shard {shard}, \
+                                 shard_of says {want}",
+                                entry.0
+                            );
+                        }
+                        parts[shard].push(entry);
+                    }
                 }
-                let (global, events) = client.sync(app, rank, &delta);
-                let mut reply = Vec::with_capacity(8 + 44 * global.len());
+                let (global, events) = client.sync_parts(app, rank, parts);
                 let entries: Vec<(u32, &RunStats)> = global.iter().collect();
+                let mut reply = Vec::with_capacity(8 + 44 * entries.len());
                 reply.extend_from_slice(&(entries.len() as u32).to_le_bytes());
                 for (fid, st) in entries {
                     put_stats(&mut reply, fid, st);
@@ -211,30 +245,59 @@ fn serve_conn(mut stream: TcpStream, client: PsClient) -> Result<()> {
 /// TCP client used by a remote AD module; same API shape as [`PsClient`].
 pub struct NetPsClient {
     stream: TcpStream,
+    /// Server shard count, learned from the hello handshake; sync deltas
+    /// are grouped by `shard_of(app, fid, n_shards)` before hitting the
+    /// wire.
+    n_shards: usize,
 }
 
 impl NetPsClient {
     pub fn connect(addr: std::net::SocketAddr) -> Result<NetPsClient> {
-        let stream = TcpStream::connect(addr).context("connecting to PS")?;
+        let mut stream = TcpStream::connect(addr).context("connecting to PS")?;
         stream.set_nodelay(true).ok();
-        Ok(NetPsClient { stream })
+        // Hello handshake: learn the server's shard count.
+        write_msg(&mut stream, &[KIND_HELLO])?;
+        let reply = read_msg(&mut stream)?.context("PS closed during hello")?;
+        let mut c = Cursor(&reply, 0);
+        let n_shards = c.u32()? as usize;
+        if n_shards == 0 {
+            bail!("server reported zero shards");
+        }
+        Ok(NetPsClient { stream, n_shards })
     }
 
-    /// Stats exchange over the wire.
+    /// Server shard count from the handshake.
+    pub fn shard_count(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Stats exchange over the wire, grouped by destination shard.
     pub fn sync(
         &mut self,
         app: u32,
         rank: u32,
         delta: &StatsTable,
     ) -> Result<(StatsTable, Vec<GlobalEvent>)> {
-        let entries: Vec<(u32, &RunStats)> = delta.iter().collect();
-        let mut msg = Vec::with_capacity(16 + 44 * entries.len());
+        let mut parts: Vec<Vec<(u32, &RunStats)>> = vec![Vec::new(); self.n_shards];
+        for (fid, st) in delta.iter() {
+            parts[shard_of(app, fid, self.n_shards)].push((fid, st));
+        }
+        let n_entries: usize = parts.iter().map(|p| p.len()).sum();
+        let n_groups = parts.iter().filter(|p| !p.is_empty()).count();
+        let mut msg = Vec::with_capacity(16 + 8 * n_groups + 44 * n_entries);
         msg.push(KIND_SYNC);
         msg.extend_from_slice(&app.to_le_bytes());
         msg.extend_from_slice(&rank.to_le_bytes());
-        msg.extend_from_slice(&(entries.len() as u32).to_le_bytes());
-        for (fid, st) in entries {
-            put_stats(&mut msg, fid, st);
+        msg.extend_from_slice(&(n_groups as u32).to_le_bytes());
+        for (shard, part) in parts.iter().enumerate() {
+            if part.is_empty() {
+                continue;
+            }
+            msg.extend_from_slice(&(shard as u32).to_le_bytes());
+            msg.extend_from_slice(&(part.len() as u32).to_le_bytes());
+            for (fid, st) in part {
+                put_stats(&mut msg, *fid, st);
+            }
         }
         write_msg(&mut self.stream, &msg)?;
         let reply = read_msg(&mut self.stream)?.context("PS closed connection")?;
@@ -286,10 +349,11 @@ mod tests {
 
     #[test]
     fn tcp_sync_round_trip_matches_in_proc() {
-        let (client, handle) = super::super::spawn(None, usize::MAX >> 1);
+        let (client, handle) = super::super::spawn(1, None, usize::MAX >> 1, 1);
         let mut srv = PsTcpServer::start("127.0.0.1:0", client.clone()).unwrap();
 
         let mut net = NetPsClient::connect(srv.addr()).unwrap();
+        assert_eq!(net.shard_count(), 1);
         let (g1, ev1) = net.sync(0, 1, &stats_of(&[10.0, 20.0, 30.0])).unwrap();
         assert_eq!(g1.get(7).unwrap().count(), 3);
         assert!((g1.get(7).unwrap().mean() - 20.0).abs() < 1e-9);
@@ -315,14 +379,41 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(50));
         srv.stop();
         client.shutdown();
-        let ps = handle.join().unwrap();
-        assert_eq!(ps.snapshot().total_anomalies, 2);
-        assert_eq!(ps.snapshot().ranks.len(), 1);
+        let fin = handle.join();
+        assert_eq!(fin.snapshot.total_anomalies, 2);
+        assert_eq!(fin.snapshot.ranks.len(), 1);
+    }
+
+    #[test]
+    fn sharded_server_over_tcp_reunites_stats() {
+        // A 4-shard server behind TCP: the client groups by shard and the
+        // reassembled reply covers every function it sent.
+        let (client, handle) = super::super::spawn(4, None, usize::MAX >> 1, 1);
+        let srv = PsTcpServer::start("127.0.0.1:0", client.clone()).unwrap();
+        let mut net = NetPsClient::connect(srv.addr()).unwrap();
+        assert_eq!(net.shard_count(), 4);
+        let mut delta = StatsTable::new();
+        for fid in 0..40u32 {
+            delta.push(fid, fid as f64 + 1.0);
+        }
+        let (global, _) = net.sync(0, 0, &delta).unwrap();
+        assert_eq!(global.len(), 40);
+        for fid in 0..40u32 {
+            assert_eq!(global.get(fid).unwrap().count(), 1);
+        }
+        // Second sync from another rank merges across shards.
+        let mut net2 = NetPsClient::connect(srv.addr()).unwrap();
+        let (global2, _) = net2.sync(0, 1, &delta).unwrap();
+        assert_eq!(global2.get(3).unwrap().count(), 2);
+        drop(srv);
+        client.shutdown();
+        let fin = handle.join();
+        assert_eq!(fin.global_len(), 40);
     }
 
     #[test]
     fn many_concurrent_tcp_clients() {
-        let (client, handle) = super::super::spawn(None, usize::MAX >> 1);
+        let (client, handle) = super::super::spawn(2, None, usize::MAX >> 1, 1);
         let srv = PsTcpServer::start("127.0.0.1:0", client.clone()).unwrap();
         let addr = srv.addr();
         let mut joins = Vec::new();
@@ -341,13 +432,39 @@ mod tests {
         }
         drop(srv);
         client.shutdown();
-        let ps = handle.join().unwrap();
-        assert_eq!(ps.global_stats(0, 1).unwrap().count(), 160);
+        let fin = handle.join();
+        assert_eq!(fin.global_stats(0, 1).unwrap().count(), 160);
+    }
+
+    #[test]
+    fn misgrouped_sync_frame_is_rejected() {
+        // A frame whose shard id is in range but does not match
+        // shard_of must be refused, not silently fragment the view.
+        let (client, handle) = super::super::spawn(4, None, usize::MAX >> 1, 1);
+        let srv = PsTcpServer::start("127.0.0.1:0", client.clone()).unwrap();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        let fid = (0..64u32).find(|&f| shard_of(0, f, 4) != 0).unwrap();
+        let mut st = RunStats::new();
+        st.push(1.0);
+        let mut msg = vec![KIND_SYNC];
+        msg.extend_from_slice(&0u32.to_le_bytes()); // app
+        msg.extend_from_slice(&0u32.to_le_bytes()); // rank
+        msg.extend_from_slice(&1u32.to_le_bytes()); // n_groups
+        msg.extend_from_slice(&0u32.to_le_bytes()); // wrong shard id
+        msg.extend_from_slice(&1u32.to_le_bytes()); // n_entries
+        put_stats(&mut msg, fid, &st);
+        write_msg(&mut s, &msg).unwrap();
+        // Server bails on the entry: no reply, connection closed.
+        assert!(read_msg(&mut s).unwrap().is_none());
+        drop(srv);
+        client.shutdown();
+        let fin = handle.join();
+        assert_eq!(fin.global_len(), 0, "misgrouped entry must not be merged");
     }
 
     #[test]
     fn malformed_frame_drops_connection_not_server() {
-        let (client, handle) = super::super::spawn(None, usize::MAX >> 1);
+        let (client, handle) = super::super::spawn(2, None, usize::MAX >> 1, 1);
         let srv = PsTcpServer::start("127.0.0.1:0", client.clone()).unwrap();
         // Send junk.
         let mut s = TcpStream::connect(srv.addr()).unwrap();
@@ -361,6 +478,6 @@ mod tests {
         assert_eq!(g.get(7).unwrap().count(), 1);
         drop(srv);
         client.shutdown();
-        handle.join().unwrap();
+        handle.join();
     }
 }

@@ -1,0 +1,468 @@
+//! Hash-routed parameter-server shards (see the [`ps`](super) module
+//! docs for the architecture).
+//!
+//! [`spawn`] starts the constellation: N stat-shard threads, one
+//! aggregator thread (a [`ParameterServer`] that never sees function
+//! deltas), and one merge thread that folds partial snapshots into the
+//! viz ingest channel. [`PsClient`] is the hash router the on-node AD
+//! modules talk to; [`PsHandle::join`] tears the constellation down and
+//! returns the merged final state ([`PsFinal`]).
+
+use super::{
+    FuncKey, GlobalEvent, ParameterServer, PsReply, PsRequest, StepStat, VizSnapshot,
+};
+use crate::stats::{RunStats, StatsTable};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Stable shard routing: which of `n_shards` owns `(app, fid)`.
+///
+/// SplitMix64 finalizer over the packed key — cheap, well-mixed, and
+/// identical on both sides of the wire protocol (the TCP client groups
+/// deltas with this same function after the hello handshake).
+pub fn shard_of(app: u32, fid: u32, n_shards: usize) -> usize {
+    let mut x = ((app as u64) << 32) | fid as u64;
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    (x % n_shards.max(1) as u64) as usize
+}
+
+/// Message to one stat shard.
+enum ShardMsg {
+    /// Batched sub-delta for this shard; replies with the merged global
+    /// stats for exactly the functions in the sub-delta.
+    Sync {
+        app: u32,
+        delta: Vec<(u32, RunStats)>,
+        reply: Sender<Vec<(u32, RunStats)>>,
+    },
+    /// Partial snapshot for the merge stage.
+    Snapshot { reply: Sender<VizSnapshot> },
+    /// Stop and return the owned partition.
+    Shutdown,
+}
+
+/// Cloneable router handle used by on-node AD modules.
+///
+/// `sync` splits the delta by [`shard_of`], batches one message per
+/// touched shard, fetches undelivered global events from the aggregator,
+/// and reassembles the reply client-side.
+#[derive(Clone)]
+pub struct PsClient {
+    /// One sender per stat shard (cloned per client, the mpsc way).
+    shards: Vec<Sender<ShardMsg>>,
+    agg: Sender<PsRequest>,
+    sync_count: Arc<AtomicU64>,
+}
+
+impl PsClient {
+    /// Number of stat shards this client routes across.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Synchronous stats exchange: send local delta, adopt global reply.
+    /// Returns the global snapshot for the touched functions plus any
+    /// fresh globally detected events (§V trigger).
+    pub fn sync(&self, app: u32, rank: u32, delta: &StatsTable) -> (StatsTable, Vec<GlobalEvent>) {
+        if delta.is_empty() {
+            return (StatsTable::new(), Vec::new());
+        }
+        let n = self.shards.len();
+        let mut parts: Vec<Vec<(u32, RunStats)>> = vec![Vec::new(); n];
+        for (fid, st) in delta.iter() {
+            parts[shard_of(app, fid, n)].push((fid, *st));
+        }
+        self.sync_parts(app, rank, parts)
+    }
+
+    /// Routed sync from pre-partitioned sub-deltas (`parts[i]` goes to
+    /// shard `i`). The TCP front-end calls this directly so shard groups
+    /// carried on the wire are forwarded without re-hashing. Entries must
+    /// be grouped by [`shard_of`] or the global view fragments.
+    pub fn sync_parts(
+        &self,
+        app: u32,
+        rank: u32,
+        parts: Vec<Vec<(u32, RunStats)>>,
+    ) -> (StatsTable, Vec<GlobalEvent>) {
+        debug_assert_eq!(parts.len(), self.shards.len());
+        if parts.iter().all(|p| p.is_empty()) {
+            return (StatsTable::new(), Vec::new());
+        }
+        self.sync_count.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = channel();
+        let mut expected = 0usize;
+        for (i, part) in parts.into_iter().enumerate() {
+            if part.is_empty() || i >= self.shards.len() {
+                continue;
+            }
+            if self.shards[i]
+                .send(ShardMsg::Sync { app, delta: part, reply: rtx.clone() })
+                .is_ok()
+            {
+                expected += 1;
+            }
+        }
+        drop(rtx);
+        // Event fetch: an empty-delta Sync to the aggregator advances this
+        // rank's cursor and returns undelivered global events. Sent before
+        // collecting shard replies so the two legs overlap.
+        let (etx, erx) = channel();
+        let fetch_sent = self
+            .agg
+            .send(PsRequest::Sync { app, rank, delta: Vec::new(), reply: etx })
+            .is_ok();
+        let mut table = StatsTable::new();
+        for _ in 0..expected {
+            match rrx.recv() {
+                Ok(entries) => {
+                    for (fid, st) in entries {
+                        table.replace(fid, st);
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+        let events = if fetch_sent {
+            erx.recv().map(|r: PsReply| r.global_events).unwrap_or_default()
+        } else {
+            Vec::new()
+        };
+        (table, events)
+    }
+
+    /// Fire-and-forget anomaly accounting.
+    pub fn report(&self, stat: StepStat) {
+        let _ = self.agg.send(PsRequest::Report(stat));
+    }
+
+    /// Force a viz publish (the merge stage folds in shard partials).
+    pub fn publish(&self) {
+        let _ = self.agg.send(PsRequest::Publish);
+    }
+
+    /// Stop the aggregator (it publishes a final snapshot first). The
+    /// stat shards stay up until [`PsHandle::join`] so the final merge
+    /// can still gather their partials.
+    pub fn shutdown(&self) {
+        let _ = self.agg.send(PsRequest::Shutdown);
+    }
+}
+
+/// Joinable handle to a spawned constellation.
+pub struct PsHandle {
+    shard_txs: Vec<Sender<ShardMsg>>,
+    agg_join: JoinHandle<ParameterServer>,
+    merge_join: JoinHandle<()>,
+    shard_joins: Vec<JoinHandle<HashMap<FuncKey, RunStats>>>,
+    sync_count: Arc<AtomicU64>,
+}
+
+/// Merged final state of a sharded parameter server.
+pub struct PsFinal {
+    /// Final snapshot (ranks, totals, global events, function count).
+    pub snapshot: VizSnapshot,
+    /// The reunited global function-statistics view.
+    pub global: HashMap<FuncKey, RunStats>,
+    /// All globally detected events, chronological.
+    pub global_events: Vec<GlobalEvent>,
+    /// Routed (non-empty) syncs served.
+    pub sync_count: u64,
+}
+
+impl PsFinal {
+    /// Global statistics for one function.
+    pub fn global_stats(&self, app: u32, fid: u32) -> Option<&RunStats> {
+        self.global.get(&(app, fid))
+    }
+
+    /// Number of functions tracked globally.
+    pub fn global_len(&self) -> usize {
+        self.global.len()
+    }
+}
+
+impl PsHandle {
+    /// Tear down after [`PsClient::shutdown`] and merge the final state.
+    ///
+    /// Join order matters: the aggregator first (its final publish is
+    /// queued to the merge stage), then the merge stage (which still
+    /// queries the live shards for partials), then the shards.
+    /// Panics if any server thread panicked.
+    pub fn join(self) -> PsFinal {
+        let mut agg = self.agg_join.join().expect("ps aggregator panicked");
+        // Close the merge stage's job channel: the aggregator's viz
+        // sender is the only producer.
+        agg.detach_viz();
+        self.merge_join.join().expect("ps merge stage panicked");
+        for tx in &self.shard_txs {
+            let _ = tx.send(ShardMsg::Shutdown);
+        }
+        let mut global: HashMap<FuncKey, RunStats> = HashMap::new();
+        for j in self.shard_joins {
+            let part = j.join().expect("ps shard panicked");
+            global.extend(part);
+        }
+        let mut snapshot = agg.snapshot();
+        snapshot.functions_tracked = global.len() as u64;
+        let global_events = agg.global_events().to_vec();
+        PsFinal {
+            snapshot,
+            global,
+            global_events,
+            sync_count: self.sync_count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Spawn a sharded parameter server.
+///
+/// * `n_shards` — stat-shard threads (1 reproduces single-server
+///   behaviour exactly);
+/// * `viz_tx` — viz ingest channel for merged snapshots;
+/// * `publish_every` — snapshot cadence in Report messages;
+/// * `reports_per_step` — number of reporting ranks (the per-step quorum
+///   for global-event detection).
+pub fn spawn(
+    n_shards: usize,
+    viz_tx: Option<Sender<VizSnapshot>>,
+    publish_every: usize,
+    reports_per_step: usize,
+) -> (PsClient, PsHandle) {
+    let n = n_shards.max(1);
+    let mut shard_txs: Vec<Sender<ShardMsg>> = Vec::with_capacity(n);
+    let mut shard_joins = Vec::with_capacity(n);
+    for i in 0..n {
+        let (tx, rx): (Sender<ShardMsg>, Receiver<ShardMsg>) = channel();
+        let join = std::thread::Builder::new()
+            .name(format!("chimbuko-ps-shard-{i}"))
+            .spawn(move || run_shard(rx))
+            .expect("spawning ps shard");
+        shard_txs.push(tx);
+        shard_joins.push(join);
+    }
+
+    // Aggregator: a ParameterServer whose viz sender feeds the merge
+    // stage instead of the viz channel directly.
+    let (job_tx, job_rx) = channel::<VizSnapshot>();
+    let (agg_tx, agg_rx): (Sender<PsRequest>, Receiver<PsRequest>) = channel();
+    let agg_join = std::thread::Builder::new()
+        .name("chimbuko-ps-agg".into())
+        .spawn(move || {
+            let mut ps = ParameterServer::new(Some(job_tx), publish_every, reports_per_step);
+            while let Ok(req) = agg_rx.recv() {
+                if !ps.handle(req) {
+                    break;
+                }
+            }
+            ps
+        })
+        .expect("spawning ps aggregator");
+
+    // Merge stage: fold one partial per stat shard onto each aggregator
+    // partial, then forward downstream. Commutative merges make the
+    // arrival order irrelevant — no barrier anywhere.
+    let merge_shards = shard_txs.clone();
+    let merge_join = std::thread::Builder::new()
+        .name("chimbuko-ps-merge".into())
+        .spawn(move || {
+            while let Ok(mut partial) = job_rx.recv() {
+                let (ptx, prx) = channel();
+                let mut expected = 0usize;
+                for tx in &merge_shards {
+                    if tx.send(ShardMsg::Snapshot { reply: ptx.clone() }).is_ok() {
+                        expected += 1;
+                    }
+                }
+                drop(ptx);
+                for _ in 0..expected {
+                    match prx.recv() {
+                        Ok(p) => partial.merge(&p),
+                        Err(_) => break,
+                    }
+                }
+                if let Some(tx) = &viz_tx {
+                    let _ = tx.send(partial);
+                }
+            }
+        })
+        .expect("spawning ps merge stage");
+
+    let sync_count = Arc::new(AtomicU64::new(0));
+    let client = PsClient {
+        shards: shard_txs.clone(),
+        agg: agg_tx,
+        sync_count: sync_count.clone(),
+    };
+    let handle = PsHandle { shard_txs, agg_join, merge_join, shard_joins, sync_count };
+    (client, handle)
+}
+
+/// One stat shard's loop: own the `shard_of == i` partition of the
+/// global function statistics.
+fn run_shard(rx: Receiver<ShardMsg>) -> HashMap<FuncKey, RunStats> {
+    let mut table: HashMap<FuncKey, RunStats> = HashMap::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ShardMsg::Sync { app, delta, reply } => {
+                let mut out = Vec::with_capacity(delta.len());
+                for (fid, st) in delta {
+                    let g = table.entry((app, fid)).or_default();
+                    g.merge(&st);
+                    out.push((fid, *g));
+                }
+                let _ = reply.send(out);
+            }
+            ShardMsg::Snapshot { reply } => {
+                let _ = reply.send(VizSnapshot {
+                    functions_tracked: table.len() as u64,
+                    ..VizSnapshot::default()
+                });
+            }
+            ShardMsg::Shutdown => break,
+        }
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_of_is_stable_and_in_range() {
+        for n in [1usize, 2, 4, 7, 16] {
+            for app in 0..3u32 {
+                for fid in 0..300u32 {
+                    let s = shard_of(app, fid, n);
+                    assert!(s < n);
+                    assert_eq!(s, shard_of(app, fid, n), "must be deterministic");
+                }
+            }
+        }
+        // One shard owns everything.
+        assert_eq!(shard_of(9, 12345, 1), 0);
+    }
+
+    #[test]
+    fn shard_of_spreads_keys() {
+        let n = 4;
+        let mut counts = vec![0usize; n];
+        for fid in 0..256u32 {
+            counts[shard_of(0, fid, n)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 256 / n / 3, "shard {i} starved: {c} of 256 keys");
+        }
+    }
+
+    #[test]
+    fn routed_sync_reassembles_full_reply() {
+        let (client, handle) = spawn(4, None, usize::MAX >> 1, 1);
+        let mut delta = StatsTable::new();
+        for fid in 0..64u32 {
+            delta.push(fid, fid as f64 + 1.0);
+            delta.push(fid, fid as f64 + 3.0);
+        }
+        let (global, events) = client.sync(0, 0, &delta);
+        assert!(events.is_empty());
+        assert_eq!(global.len(), 64, "every touched function must come back");
+        for fid in 0..64u32 {
+            let st = global.get(fid).unwrap();
+            assert_eq!(st.count(), 2);
+            assert!((st.mean() - (fid as f64 + 2.0)).abs() < 1e-12);
+        }
+        client.shutdown();
+        let fin = handle.join();
+        assert_eq!(fin.global_len(), 64);
+        assert_eq!(fin.snapshot.functions_tracked, 64);
+        assert_eq!(fin.sync_count, 1);
+    }
+
+    #[test]
+    fn merged_snapshots_reach_viz_channel() {
+        let (vtx, vrx) = channel();
+        let (client, handle) = spawn(3, Some(vtx), usize::MAX >> 1, 1);
+        let mut delta = StatsTable::new();
+        for fid in 0..24u32 {
+            delta.push(fid, 10.0);
+        }
+        client.sync(0, 0, &delta);
+        client.report(StepStat {
+            app: 0,
+            rank: 0,
+            step: 0,
+            n_executions: 50,
+            n_anomalies: 2,
+            ts_range: (0, 9),
+        });
+        client.publish();
+        // The published snapshot folds the aggregator partial (report
+        // totals) with the stat-shard partials (function counts).
+        let snap = vrx.recv().unwrap();
+        assert_eq!(snap.total_anomalies, 2);
+        assert_eq!(snap.total_executions, 50);
+        assert_eq!(snap.functions_tracked, 24);
+        assert_eq!(snap.ranks.len(), 1);
+        client.shutdown();
+        let fin = handle.join();
+        assert_eq!(fin.snapshot.total_anomalies, 2);
+        // Final shutdown publish also reached the channel.
+        let last = vrx.recv().unwrap();
+        assert_eq!(last.total_anomalies, 2);
+        assert!(vrx.recv().is_err(), "viz channel must close after join");
+    }
+
+    #[test]
+    fn n1_matches_reference_inline() {
+        // The same op sequence through a 1-shard constellation and the
+        // single-threaded reference server must agree bit-for-bit.
+        let (client, handle) = spawn(1, None, usize::MAX >> 1, 2);
+        let mut reference = ParameterServer::new(None, usize::MAX >> 1, 2);
+        for step in 0..6u64 {
+            for rank in 0..2u32 {
+                let stat = StepStat {
+                    app: 0,
+                    rank,
+                    step,
+                    n_executions: 40,
+                    n_anomalies: (step % 2) * (rank as u64),
+                    ts_range: (step, step + 1),
+                };
+                client.report(stat.clone());
+                reference.handle(PsRequest::Report(stat));
+                let mut delta = StatsTable::new();
+                delta.push(rank, 100.0 + step as f64);
+                delta.push(7, 5.0 * (step + 1) as f64);
+                let (got, _) = client.sync(0, rank, &delta);
+                let (rtx, rrx) = channel();
+                reference.handle(PsRequest::Sync {
+                    app: 0,
+                    rank,
+                    delta: delta.iter().map(|(f, s)| (f, *s)).collect(),
+                    reply: rtx,
+                });
+                let want = rrx.recv().unwrap();
+                for (fid, st) in want.global {
+                    assert_eq!(got.get(fid), Some(&st), "fid {fid} diverged at step {step}");
+                }
+            }
+        }
+        client.shutdown();
+        let fin = handle.join();
+        assert_eq!(fin.global_len(), reference.global_len());
+        for (key, st) in reference.global_iter() {
+            assert_eq!(fin.global.get(&key), Some(st));
+        }
+        assert_eq!(fin.snapshot.total_anomalies, reference.snapshot().total_anomalies);
+        assert_eq!(fin.snapshot.total_executions, reference.snapshot().total_executions);
+    }
+}

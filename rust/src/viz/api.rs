@@ -115,6 +115,7 @@ pub fn stats(state: &VizState) -> Json {
         ("version", Json::str(crate::VERSION)),
         ("total_anomalies", Json::num(state.latest.total_anomalies as f64)),
         ("total_executions", Json::num(state.latest.total_executions as f64)),
+        ("functions_tracked", Json::num(state.latest.functions_tracked as f64)),
         ("ranks", Json::num(state.latest.ranks.len() as f64)),
         ("timeline_points", Json::num(state.timeline.len() as f64)),
         ("prov_records", Json::num(state.db.len() as f64)),
@@ -138,6 +139,7 @@ mod tests {
             fresh_steps: vec![],
             total_anomalies: 2,
             total_executions: 50,
+            functions_tracked: 1,
             global_events: vec![],
         };
         st.timeline = vec![(0, 1, 0, 2)];

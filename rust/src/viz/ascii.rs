@@ -253,6 +253,7 @@ mod tests {
             fresh_steps: vec![],
             total_anomalies: 4,
             total_executions: 200,
+            functions_tracked: 0,
             global_events: vec![],
         };
         st.timeline = vec![(0, 3, 0, 3), (0, 3, 1, 1)];

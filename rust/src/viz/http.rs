@@ -261,6 +261,7 @@ mod tests {
             fresh_steps: vec![],
             total_anomalies: 1,
             total_executions: 10,
+            functions_tracked: 0,
             global_events: vec![],
         };
         Arc::new(RwLock::new(st))

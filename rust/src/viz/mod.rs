@@ -180,6 +180,7 @@ mod tests {
             fresh_steps: vec![],
             total_anomalies: 15,
             total_executions: 1000,
+            functions_tracked: 0,
             global_events: vec![],
         };
         st
@@ -226,6 +227,7 @@ mod tests {
                 }],
                 total_anomalies: 0,
                 total_executions: 0,
+                functions_tracked: 0,
                 global_events: vec![],
             });
         }

@@ -1,0 +1,196 @@
+//! Sharded-vs-single parameter-server equivalence: for random delta/report
+//! streams, a [`ShardedPs`](chimbuko::ps::shard) constellation with
+//! N ∈ {1, 2, 4, 7} shards must produce bit-identical global `RunStats`,
+//! anomaly totals, and global-event sets as the single-threaded
+//! [`ParameterServer`] reference — Pébay merges are commutative, so the
+//! hash routing must be invisible in the results.
+
+use chimbuko::ps::{self, ParameterServer, PsRequest, StepStat};
+use chimbuko::stats::StatsTable;
+use chimbuko::util::prop::{check, Config as PropConfig};
+use chimbuko::util::rng::Rng;
+use std::sync::mpsc::channel;
+
+/// One step of the generated workload: every rank reports, then syncs.
+struct StepOps {
+    step: u64,
+    /// Per-rank (report, delta) pairs, rank-ordered.
+    per_rank: Vec<(StepStat, StatsTable)>,
+}
+
+/// Deterministic workload: `quiet` steps of mostly-zero anomaly counts
+/// followed by one bursty step (so global-event detection has history to
+/// trigger against), with random per-rank stat deltas that cover both the
+/// dense (fid < 256) and spill (fid ≥ 256) paths of the stats table.
+fn gen_workload(rng: &mut Rng, ranks: usize, quiet_steps: usize, delta_len: usize) -> Vec<StepOps> {
+    let mut steps = Vec::new();
+    for step in 0..=(quiet_steps as u64) {
+        let burst = step == quiet_steps as u64;
+        let mut per_rank = Vec::new();
+        for rank in 0..ranks as u32 {
+            let anoms = if burst {
+                4 + rng.usize(4) as u64
+            } else {
+                u64::from(rank == 0 && step % 3 == 0)
+            };
+            let report = StepStat {
+                app: 0,
+                rank,
+                step,
+                n_executions: 50 + rng.usize(50) as u64,
+                n_anomalies: anoms,
+                ts_range: (step * 1000, step * 1000 + 999),
+            };
+            let mut delta = StatsTable::new();
+            for _ in 0..delta_len.max(1) {
+                let fid = if rng.chance(0.1) {
+                    300 + rng.usize(8) as u32 // spill path
+                } else {
+                    rng.usize(24) as u32 // dense path
+                };
+                delta.push(fid, rng.lognormal(5.0, 1.0));
+            }
+            per_rank.push((report, delta));
+        }
+        steps.push(StepOps { step, per_rank });
+    }
+    steps
+}
+
+/// Drive the single-threaded reference; returns (server, per-sync replies).
+fn drive_reference(
+    workload: &[StepOps],
+    ranks: usize,
+) -> (ParameterServer, Vec<Vec<(u32, chimbuko::stats::RunStats)>>) {
+    let mut ps = ParameterServer::new(None, usize::MAX >> 1, ranks);
+    let mut replies = Vec::new();
+    for ops in workload {
+        for (report, delta) in &ops.per_rank {
+            ps.handle(PsRequest::Report(report.clone()));
+            let (rtx, rrx) = channel();
+            ps.handle(PsRequest::Sync {
+                app: report.app,
+                rank: report.rank,
+                delta: delta.iter().map(|(f, s)| (f, *s)).collect(),
+                reply: rtx,
+            });
+            replies.push(rrx.recv().unwrap().global);
+        }
+    }
+    (ps, replies)
+}
+
+#[test]
+fn sharded_equivalence_property() {
+    check(
+        "sharded-vs-single-ps",
+        PropConfig { cases: 12, seed: 0x5AAD, max_size: 24 },
+        |rng, size| {
+            let ranks = 2 + rng.usize(4);
+            let workload = gen_workload(rng, ranks, 8 + rng.usize(4), size);
+            let (reference, ref_replies) = drive_reference(&workload, ranks);
+
+            for n_shards in [1usize, 2, 4, 7] {
+                let (client, handle) = ps::spawn(n_shards, None, usize::MAX >> 1, ranks);
+                let mut reply_idx = 0usize;
+                let mut delivered_events = Vec::new();
+                for ops in &workload {
+                    for (report, delta) in &ops.per_rank {
+                        client.report(report.clone());
+                        let (global, events) = client.sync(report.app, report.rank, delta);
+                        delivered_events.extend(events);
+                        // Per-sync reply must match the reference
+                        // bit-for-bit (same merge sequence per function).
+                        let want = &ref_replies[reply_idx];
+                        reply_idx += 1;
+                        if global.len() != want.len() {
+                            return Err(format!(
+                                "{n_shards} shards: reply size {} vs {} at sync {}",
+                                global.len(),
+                                want.len(),
+                                reply_idx
+                            ));
+                        }
+                        for (fid, st) in want {
+                            if global.get(*fid) != Some(st) {
+                                return Err(format!(
+                                    "{n_shards} shards: fid {fid} reply diverged at sync {reply_idx} (step {})",
+                                    ops.step
+                                ));
+                            }
+                        }
+                    }
+                }
+                client.shutdown();
+                let fin = handle.join();
+                // Global stats: bit-identical, every key present.
+                if fin.global_len() != reference.global_len() {
+                    return Err(format!(
+                        "{n_shards} shards: {} global functions vs {}",
+                        fin.global_len(),
+                        reference.global_len()
+                    ));
+                }
+                for (key, st) in reference.global_iter() {
+                    if fin.global.get(&key) != Some(st) {
+                        return Err(format!("{n_shards} shards: global stats diverged for {key:?}"));
+                    }
+                }
+                // Anomaly totals and timeline.
+                let want_snap = reference.snapshot();
+                if fin.snapshot.total_anomalies != want_snap.total_anomalies
+                    || fin.snapshot.total_executions != want_snap.total_executions
+                {
+                    return Err(format!("{n_shards} shards: totals diverged"));
+                }
+                if fin.snapshot.ranks.len() != want_snap.ranks.len() {
+                    return Err(format!("{n_shards} shards: rank summaries diverged"));
+                }
+                if fin.snapshot.functions_tracked != want_snap.functions_tracked {
+                    return Err(format!("{n_shards} shards: functions_tracked diverged"));
+                }
+                // Global-event sets: same events flagged, all delivered.
+                if fin.global_events != reference.global_events().to_vec() {
+                    return Err(format!("{n_shards} shards: global-event set diverged"));
+                }
+                if delivered_events != reference.global_events().to_vec() {
+                    return Err(format!(
+                        "{n_shards} shards: delivered {} events, reference flagged {}",
+                        delivered_events.len(),
+                        reference.global_events().len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn burst_workload_actually_triggers_global_events() {
+    // Guard against the property above passing vacuously: the workload
+    // shape must flag at least one global event.
+    let mut rng = Rng::new(42);
+    let ranks = 4;
+    let workload = gen_workload(&mut rng, ranks, 10, 8);
+    let (reference, _) = drive_reference(&workload, ranks);
+    assert!(
+        !reference.global_events().is_empty(),
+        "burst step must flag a global event"
+    );
+
+    // And the sharded constellation delivers it to syncing ranks.
+    let (client, handle) = ps::spawn(4, None, usize::MAX >> 1, ranks);
+    let mut delivered = 0usize;
+    for ops in &workload {
+        for (report, delta) in &ops.per_rank {
+            client.report(report.clone());
+            let (_, events) = client.sync(report.app, report.rank, delta);
+            delivered += events.len();
+        }
+    }
+    client.shutdown();
+    let fin = handle.join();
+    assert_eq!(fin.global_events.len(), reference.global_events().len());
+    assert_eq!(delivered, reference.global_events().len());
+}
