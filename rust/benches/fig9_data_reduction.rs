@@ -1,6 +1,8 @@
 //! Bench: regenerate **Fig 9** — trace data size over MPI processes for
 //! raw/filtered BP dumps vs Chimbuko-reduced JSON, plus the §VI-B headline
-//! reduction factors.
+//! reduction factors — and the provDB service companion sweep (ingest
+//! throughput, query latency, resident vs log bytes under retention),
+//! written to `BENCH_provdb.json` alongside `BENCH_ps_shards.json`.
 //!
 //! `cargo bench --bench fig9_data_reduction`
 
@@ -28,4 +30,38 @@ fn main() {
             last.factor_filtered()
         );
     }
+
+    // --- provDB service sweep: the serving side of the reduction ----------
+    let shard_counts: Vec<usize> = if fast { vec![1, 2] } else { vec![1, 2, 4, 8] };
+    let (clients, records, queries, max_per_rank) =
+        if fast { (4, 2_000, 60, 500) } else { (8, 20_000, 300, 2_000) };
+    println!(
+        "\nprovDB sweep: shards {:?}, {} clients x {} records, retention {}/rank\n",
+        shard_counts, clients, records, max_per_rank
+    );
+    let pdb = chimbuko::exp::run_provdb_bench(
+        &shard_counts,
+        clients,
+        records,
+        queries,
+        max_per_rank,
+        7,
+    )
+    .expect("provdb sweep");
+    print!("{}", pdb.render());
+    if let (Some(first), Some(last)) = (pdb.rows.first(), pdb.rows.last()) {
+        println!(
+            "shape check: ingest 1 → {} shards: {:.0} → {:.0} rec/s ({:.2}x); \
+             resident {} of {} logged",
+            last.shards,
+            first.ingest_per_sec,
+            last.ingest_per_sec,
+            last.ingest_per_sec / first.ingest_per_sec.max(1e-9),
+            chimbuko::util::fmt_bytes(last.resident_bytes),
+            chimbuko::util::fmt_bytes(last.log_bytes),
+        );
+    }
+    let out = "BENCH_provdb.json";
+    std::fs::write(out, pdb.to_json().to_pretty()).expect("writing BENCH_provdb.json");
+    println!("wrote {out}");
 }

@@ -99,6 +99,17 @@ pub struct Config {
     /// Parameter-server stat shards (hash-routed threads; 1 = the
     /// single-consumer layout, >1 scales sync throughput with cores).
     pub ps_shards: usize,
+    /// Provenance database service address ("host:port"); when non-empty
+    /// the AD modules write records there over TCP instead of the local
+    /// per-worker store, and the viz layer queries it on demand.
+    pub provdb_addr: String,
+    /// Shards for a provDB service this process spawns
+    /// (`provdb-server` subcommand, driver tests).
+    pub provdb_shards: usize,
+    /// ProvClient write batch: records buffered per wire round-trip.
+    pub provdb_batch: usize,
+    /// ProvDB retention: retained records per (app, rank); 0 = unbounded.
+    pub provdb_max_per_rank: usize,
     /// Detector backend.
     pub backend: DetectorBackend,
     /// Labelling algorithm (threshold = the paper's; hbos = extension).
@@ -142,6 +153,10 @@ impl Default for Config {
             k_neighbors: 5,
             ps_period_steps: 1,
             ps_shards: 4,
+            provdb_addr: String::new(),
+            provdb_shards: 4,
+            provdb_batch: 64,
+            provdb_max_per_rank: 0,
             backend: DetectorBackend::Rust,
             algorithm: AdAlgorithm::Threshold,
             engine: TraceEngine::Sst,
@@ -200,6 +215,10 @@ impl Config {
             "ad.func_capacity" => self.func_capacity = v.parse()?,
             "ps.period_steps" => self.ps_period_steps = v.parse()?,
             "ps.shards" => self.ps_shards = v.parse()?,
+            "provdb.addr" => self.provdb_addr = v.to_string(),
+            "provdb.shards" => self.provdb_shards = v.parse()?,
+            "provdb.batch" => self.provdb_batch = v.parse()?,
+            "provdb.max_records_per_rank" => self.provdb_max_per_rank = v.parse()?,
             "sst.queue_depth" => self.sst_queue_depth = v.parse()?,
             "app_work_ms_total" => self.app_work_ms_total = v.parse()?,
             "viz.addr" => self.viz_addr = v.to_string(),
@@ -232,6 +251,12 @@ impl Config {
         if self.ps_shards == 0 {
             bail!("ps.shards must be > 0");
         }
+        if self.provdb_shards == 0 {
+            bail!("provdb.shards must be > 0");
+        }
+        if self.provdb_batch == 0 {
+            bail!("provdb.batch must be > 0");
+        }
         if self.sst_queue_depth == 0 {
             bail!("sst.queue_depth must be > 0");
         }
@@ -249,6 +274,9 @@ impl Config {
             ("k_neighbors", Json::num(self.k_neighbors as f64)),
             ("ps_period_steps", Json::num(self.ps_period_steps as f64)),
             ("ps_shards", Json::num(self.ps_shards as f64)),
+            ("provdb_addr", Json::str(&self.provdb_addr)),
+            ("provdb_shards", Json::num(self.provdb_shards as f64)),
+            ("provdb_max_records_per_rank", Json::num(self.provdb_max_per_rank as f64)),
             ("backend", Json::str(self.backend.name())),
             ("algorithm", Json::str(self.algorithm.name())),
             (
@@ -351,6 +379,26 @@ enabled = false
     #[test]
     fn unknown_key_rejected() {
         assert!(Config::from_str("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn provdb_keys_parse_and_validate() {
+        let text = r#"
+[provdb]
+addr = 127.0.0.1:5560
+shards = 3
+batch = 16
+max_records_per_rank = 500
+"#;
+        let c = Config::from_str(text).unwrap();
+        assert_eq!(c.provdb_addr, "127.0.0.1:5560");
+        assert_eq!(c.provdb_shards, 3);
+        assert_eq!(c.provdb_batch, 16);
+        assert_eq!(c.provdb_max_per_rank, 500);
+        assert!(Config::from_str("[provdb]\nshards = 0").is_err());
+        assert!(Config::from_str("[provdb]\nbatch = 0").is_err());
+        // Default: disabled.
+        assert!(Config::default().provdb_addr.is_empty());
     }
 
     #[test]

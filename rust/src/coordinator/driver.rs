@@ -14,6 +14,7 @@ use super::workflow::Workflow;
 use crate::ad::{DetectorConfig, HbosConfig, HbosDetector, OnNodeAd, RustDetector, StackErrors};
 use crate::adios::{sst_channel, BpWriter, SstReader, SstWriter, StepStatus};
 use crate::config::{AdAlgorithm, Config, DetectorBackend};
+use crate::provdb::ProvClient;
 use crate::provenance::{ProvDb, RunMetadata};
 use crate::ps::{self, PsClient, VizSnapshot};
 use crate::runtime::{RuntimeService, XlaDetector};
@@ -149,6 +150,53 @@ struct AdRank {
     ad: OnNodeAd,
 }
 
+/// Where an AD worker's kept records go: the networked provenance
+/// database service (when `provdb.addr` is configured) or a local
+/// [`ProvDb`] — the fallback single-process layout.
+enum ProvSink {
+    Local(ProvDb),
+    Remote(ProvClient),
+}
+
+impl ProvSink {
+    fn for_worker(provdb_addr: &str, provdb_batch: usize, dir: &Option<PathBuf>) -> ProvSink {
+        if !provdb_addr.is_empty() {
+            ProvSink::Remote(
+                ProvClient::connect_with_batch(provdb_addr, provdb_batch)
+                    .expect("connecting to provdb service"),
+            )
+        } else {
+            match dir {
+                Some(d) => ProvSink::Local(ProvDb::create(d).expect("prov dir")),
+                None => ProvSink::Local(ProvDb::in_memory()),
+            }
+        }
+    }
+
+    fn append_step(&mut self, kept: &[crate::ad::Labeled], reg: &crate::trace::FuncRegistry) {
+        match self {
+            ProvSink::Local(db) => db.append_step(kept, reg).expect("prov append"),
+            ProvSink::Remote(c) => c.append_step(kept, reg).expect("provdb append"),
+        }
+    }
+
+    fn flush(&mut self) {
+        match self {
+            ProvSink::Local(db) => db.flush().expect("prov flush"),
+            ProvSink::Remote(c) => c.flush().expect("provdb flush"),
+        }
+    }
+
+    /// Locally written reduced bytes (remote writers report 0 — the
+    /// service's log total is collected once, post-run).
+    fn local_bytes_written(&self) -> u64 {
+        match self {
+            ProvSink::Local(db) => db.bytes_written(),
+            ProvSink::Remote(_) => 0,
+        }
+    }
+}
+
 /// Run the workflow per `cfg` in the given mode.
 pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
     cfg.validate()?;
@@ -190,14 +238,19 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
         all
     });
 
-    // Provenance sink (one per AD worker, same directory).
-    let out_dir: Option<PathBuf> = if mode == Mode::TauChimbuko && !cfg.out_dir.is_empty() {
-        let d = PathBuf::from(&cfg.out_dir);
-        std::fs::create_dir_all(&d).ok();
-        Some(d)
-    } else {
-        None
-    };
+    // Provenance sink (one per AD worker: same directory locally, or one
+    // batching connection each to the provDB service). A configured
+    // `provdb.addr` takes precedence over `out_dir` — records then live
+    // in the service (which has its own data directory).
+    let use_provdb = mode == Mode::TauChimbuko && !cfg.provdb_addr.is_empty();
+    let out_dir: Option<PathBuf> =
+        if mode == Mode::TauChimbuko && !cfg.out_dir.is_empty() && !use_provdb {
+            let d = PathBuf::from(&cfg.out_dir);
+            std::fs::create_dir_all(&d).ok();
+            Some(d)
+        } else {
+            None
+        };
 
     let pool = std::thread::available_parallelism()
         .map(|n| n.get())
@@ -247,8 +300,23 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
         }
     }
 
-    // Run metadata (written once).
-    if let Some(dir) = &out_dir {
+    // Run metadata (written once — to the provDB service when
+    // configured, to the local store otherwise). The service may be
+    // long-lived and hold prior runs' records (restart recovery), so
+    // snapshot its log size here: this run's reduced_bytes is the
+    // delta, matching the local path (which also excludes metadata).
+    let mut provdb_baseline_bytes = 0u64;
+    if use_provdb {
+        let meta = RunMetadata::new(
+            &format!("run-seed{}-r{}", cfg.seed, cfg.ranks),
+            cfg.to_json(),
+            &workflow.registries,
+        );
+        let mut client = ProvClient::connect(&cfg.provdb_addr)
+            .context("connecting to provdb service for metadata")?;
+        client.set_metadata(&meta.to_json())?;
+        provdb_baseline_bytes = client.stats()?.log_bytes;
+    } else if let Some(dir) = &out_dir {
         let mut db = ProvDb::create(dir)?;
         db.write_metadata(&RunMetadata::new(
             &format!("run-seed{}-r{}", cfg.seed, cfg.ranks),
@@ -321,13 +389,12 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
             let dir = out_dir.clone();
             let regs = workflow.registries.clone();
             let ps_period = cfg.ps_period_steps;
+            let provdb_addr = cfg.provdb_addr.clone();
+            let provdb_batch = cfg.provdb_batch;
             let join = std::thread::Builder::new()
                 .name(format!("chimbuko-ad-{wi}"))
                 .spawn(move || {
-                    let mut db = match &dir {
-                        Some(d) => ProvDb::create(d).expect("prov dir"),
-                        None => ProvDb::in_memory(),
-                    };
+                    let mut db = ProvSink::for_worker(&provdb_addr, provdb_batch, &dir);
                     let mut out = AdWorkerOut {
                         execs: 0,
                         anomalies: 0,
@@ -352,8 +419,7 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
                             out.ad_seconds += res.proc_seconds;
                             out.latency.push(res.proc_seconds);
                             if !res.kept.is_empty() {
-                                db.append_step(&res.kept, &regs[r.app as usize])
-                                    .expect("prov append");
+                                db.append_step(&res.kept, &regs[r.app as usize]);
                             }
                             client.report(ps::step_stat_of(&res, span));
                             if step % ps_period as u64 == ps_period as u64 - 1 {
@@ -366,8 +432,7 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
                                     let dump = r.ad.dump_window();
                                     out.kept += dump.len() as u64;
                                     if !dump.is_empty() {
-                                        db.append_step(&dump, &regs[r.app as usize])
-                                            .expect("prov append");
+                                        db.append_step(&dump, &regs[r.app as usize]);
                                     }
                                 }
                             }
@@ -384,8 +449,7 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
                             out.kept += res.kept.len() as u64;
                             out.ad_seconds += res.proc_seconds;
                             if !res.kept.is_empty() {
-                                db.append_step(&res.kept, &regs[r.app as usize])
-                                    .expect("prov append");
+                                db.append_step(&res.kept, &regs[r.app as usize]);
                             }
                             client.report(ps::step_stat_of(&res, span));
                         }
@@ -393,8 +457,8 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
                         out.errors.time_regression += r.ad.stack_errors().time_regression;
                         out.errors.orphan_comm += r.ad.stack_errors().orphan_comm;
                     }
-                    db.flush().expect("prov flush");
-                    out.reduced_bytes = db.bytes_written();
+                    db.flush();
+                    out.reduced_bytes = db.local_bytes_written();
                     out
                 })
                 .context("spawning AD worker")?;
@@ -430,6 +494,16 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
         errors.unmatched_exit += o.errors.unmatched_exit;
         errors.time_regression += o.errors.time_regression;
         errors.orphan_comm += o.errors.orphan_comm;
+    }
+
+    // Remote provenance: the per-worker sinks reported 0; collect the
+    // service's log growth since the pre-run baseline (flush first — a
+    // barrier across every shard — so all worker batches are accounted).
+    if use_provdb {
+        let mut client = ProvClient::connect(&cfg.provdb_addr)
+            .context("connecting to provdb service for stats")?;
+        client.flush()?;
+        reduced_bytes = client.stats()?.log_bytes.saturating_sub(provdb_baseline_bytes);
     }
 
     // Shut the PS constellation down and collect snapshots.

@@ -145,7 +145,7 @@ pub fn run_case_study(ranks: usize, steps: usize, seed: u64) -> Result<CaseStudy
     // but show no gap — those are Figs 11–12's story).
     let forces_fid = reg.lookup(names::MD_FORCES).unwrap();
     let gap_of = |parent: &ProvRecord| -> u64 {
-        let children: Vec<&ProvRecord> = state
+        let children: Vec<ProvRecord> = state
             .db
             .call_stack(parent.app, parent.rank, parent.step)
             .into_iter()
@@ -207,7 +207,6 @@ pub fn run_case_study(ranks: usize, steps: usize, seed: u64) -> Result<CaseStudy
                     && r.exit_us <= parent.exit_us
                     && r.call_id != parent.call_id
             })
-            .cloned()
             .collect()
     };
     let anom_children = span_children(&anom);
@@ -241,7 +240,7 @@ pub fn run_case_study(ranks: usize, steps: usize, seed: u64) -> Result<CaseStudy
     // Renderings of both frames, restricted to the two spans.
     let stack_of = |parent: &ProvRecord, title: &str| {
         let recs = state.db.call_stack(parent.app, parent.rank, parent.step);
-        let filtered: Vec<&ProvRecord> = recs
+        let filtered: Vec<ProvRecord> = recs
             .into_iter()
             .filter(|r| r.entry_us >= parent.entry_us && r.exit_us <= parent.exit_us)
             .collect();
@@ -261,8 +260,8 @@ pub fn run_case_study(ranks: usize, steps: usize, seed: u64) -> Result<CaseStudy
         anomalies_only: true,
         ..Default::default()
     });
-    let rank0: Vec<&ProvRecord> = all_anoms.iter().filter(|r| r.rank == 0).copied().collect();
-    let others: Vec<&ProvRecord> = all_anoms.iter().filter(|r| r.rank != 0).copied().collect();
+    let rank0: Vec<&ProvRecord> = all_anoms.iter().filter(|r| r.rank == 0).collect();
+    let others: Vec<&ProvRecord> = all_anoms.iter().filter(|r| r.rank != 0).collect();
 
     std::fs::remove_dir_all(&dir).ok();
     Ok(CaseStudyResult {

@@ -15,7 +15,12 @@
 use crate::bench::Table;
 use crate::config::{Config, TraceEngine};
 use crate::coordinator::{run, Mode, RunReport, Workflow};
+use crate::provdb::{spawn_store, ProvClient, ProvDbTcpServer, Retention};
+use crate::provenance::{ProvQuery, ProvRecord};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
 use anyhow::Result;
+use std::time::Instant;
 
 #[derive(Clone, Debug)]
 pub struct Fig9Row {
@@ -126,6 +131,217 @@ pub fn run_fig9(scales: &[usize], steps: usize, calls_per_step: usize) -> Result
     Ok(Fig9Result { rows })
 }
 
+// ---- provDB service bench: the serving side of the reduction story -----
+//
+// Fig 9 measures how small the reduced output is; this companion bench
+// measures how fast the provDB service absorbs and serves it, and how
+// much of it stays resident under retention — the knobs that keep the
+// store at "human-level processing" size.
+
+/// One shard count's measurements.
+#[derive(Clone, Debug)]
+pub struct ProvDbBenchRow {
+    pub shards: usize,
+    /// Records ingested per second over TCP, all writer clients together.
+    pub ingest_per_sec: f64,
+    /// Query round-trip latency percentiles, µs.
+    pub query_p50_us: f64,
+    pub query_p99_us: f64,
+    /// Retained records after ingest (post-retention).
+    pub records: u64,
+    /// provDB-resident bytes (retained JSONL) vs total log bytes.
+    pub resident_bytes: u64,
+    pub log_bytes: u64,
+    pub evicted: u64,
+}
+
+/// Result of the provDB sweep (the `BENCH_provdb.json` artifact).
+#[derive(Clone, Debug)]
+pub struct ProvDbBenchResult {
+    pub rows: Vec<ProvDbBenchRow>,
+    pub clients: usize,
+    pub records_per_client: usize,
+    pub max_records_per_rank: usize,
+}
+
+impl ProvDbBenchResult {
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "provDB service — ingest/query vs shard count",
+            &[
+                "shards",
+                "ingest rec/s",
+                "q p50(µs)",
+                "q p99(µs)",
+                "resident",
+                "log",
+                "evicted",
+            ],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                r.shards.to_string(),
+                format!("{:.0}", r.ingest_per_sec),
+                format!("{:.1}", r.query_p50_us),
+                format!("{:.1}", r.query_p99_us),
+                crate::util::fmt_bytes(r.resident_bytes),
+                crate::util::fmt_bytes(r.log_bytes),
+                r.evicted.to_string(),
+            ]);
+        }
+        format!(
+            "{}({} writer clients x {} records, retention ≤{} records/rank)\n",
+            t.render(),
+            self.clients,
+            self.records_per_client,
+            self.max_records_per_rank
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str("provdb")),
+            ("clients", Json::num(self.clients as f64)),
+            ("records_per_client", Json::num(self.records_per_client as f64)),
+            ("max_records_per_rank", Json::num(self.max_records_per_rank as f64)),
+            (
+                "rows",
+                Json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("shards", Json::num(r.shards as f64)),
+                                ("ingest_per_sec", Json::num(r.ingest_per_sec)),
+                                ("query_p50_us", Json::num(r.query_p50_us)),
+                                ("query_p99_us", Json::num(r.query_p99_us)),
+                                ("records", Json::num(r.records as f64)),
+                                ("resident_bytes", Json::num(r.resident_bytes as f64)),
+                                ("log_bytes", Json::num(r.log_bytes as f64)),
+                                ("evicted", Json::num(r.evicted as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Synthetic provenance record shaped like the pipeline's output.
+fn synth_record(rng: &mut Rng, rank: u32, i: u64) -> ProvRecord {
+    let dur = rng.range_u64(50, 5_000);
+    let entry = i * 10_000 + rng.range_u64(0, 5_000);
+    let score = rng.range_f64(0.0, 12.0);
+    ProvRecord {
+        call_id: ((rank as u64) << 32) | i,
+        app: 0,
+        rank,
+        thread: 0,
+        fid: (i % 12) as u32,
+        func: format!("F{}", i % 12),
+        step: i / 16,
+        entry_us: entry,
+        exit_us: entry + dur,
+        inclusive_us: dur,
+        exclusive_us: dur / 2,
+        depth: (i % 4) as u32,
+        parent: None,
+        n_children: 0,
+        n_messages: 0,
+        msg_bytes: 0,
+        label: if score > 6.0 { "anomaly_high".to_string() } else { "normal".to_string() },
+        score,
+    }
+}
+
+/// Sweep provDB shard counts under a concurrent TCP write load, then
+/// measure query latency against the populated store. One writer client
+/// per simulated rank; `max_records_per_rank` = 0 disables retention.
+pub fn run_provdb_bench(
+    shard_counts: &[usize],
+    clients: usize,
+    records_per_client: usize,
+    queries: usize,
+    max_records_per_rank: usize,
+    seed: u64,
+) -> Result<ProvDbBenchResult> {
+    let mut rows = Vec::new();
+    for &shards in shard_counts {
+        let (store, handle) =
+            spawn_store(None, shards, Retention::from_knob(max_records_per_rank))?;
+        let srv = ProvDbTcpServer::start("127.0.0.1:0", store.clone())?;
+        let addr = srv.addr().to_string();
+
+        let t0 = Instant::now();
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let addr = addr.clone();
+            let client_seed = seed ^ (c as u64).wrapping_mul(0x9E37_79B9);
+            joins.push(std::thread::spawn(move || {
+                let mut cl = ProvClient::connect(&addr).expect("provdb bench connect");
+                let mut rng = Rng::new(client_seed);
+                for i in 0..records_per_client {
+                    let rec = synth_record(&mut rng, c as u32, i as u64);
+                    cl.append(&rec).expect("provdb bench append");
+                }
+                cl.flush().expect("provdb bench flush");
+            }));
+        }
+        for j in joins {
+            j.join().expect("provdb bench writer panicked");
+        }
+        let ingest_wall = t0.elapsed().as_secs_f64();
+
+        // Query mix: single-rank scans, top anomalies, step windows.
+        let mut cl = ProvClient::connect(&addr)?;
+        let mut lat_us = Vec::with_capacity(queries);
+        let mut rng = Rng::new(seed);
+        for qi in 0..queries {
+            let q = match qi % 3 {
+                0 => ProvQuery {
+                    rank: Some((0, rng.usize(clients.max(1)) as u32)),
+                    ..Default::default()
+                },
+                1 => ProvQuery {
+                    anomalies_only: true,
+                    order_by_score: true,
+                    limit: Some(20),
+                    ..Default::default()
+                },
+                _ => ProvQuery {
+                    rank: Some((0, rng.usize(clients.max(1)) as u32)),
+                    step_range: Some((0, 4)),
+                    ..Default::default()
+                },
+            };
+            let t = Instant::now();
+            cl.query(&q)?;
+            lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+        }
+
+        let stats = store.stats();
+        drop(srv);
+        handle.join();
+        rows.push(ProvDbBenchRow {
+            shards,
+            ingest_per_sec: (clients * records_per_client) as f64 / ingest_wall.max(1e-9),
+            query_p50_us: crate::util::percentile(&lat_us, 50.0),
+            query_p99_us: crate::util::percentile(&lat_us, 99.0),
+            records: stats.records,
+            resident_bytes: stats.resident_bytes,
+            log_bytes: stats.log_bytes,
+            evicted: stats.evicted,
+        });
+    }
+    Ok(ProvDbBenchResult {
+        rows,
+        clients,
+        records_per_client,
+        max_records_per_rank,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,5 +363,26 @@ mod tests {
         );
         let text = res.render();
         assert!(text.contains("Fig 9"));
+    }
+
+    #[test]
+    fn provdb_bench_measures_ingest_query_and_retention() {
+        let res = run_provdb_bench(&[1, 2], 3, 200, 30, 50, 11).unwrap();
+        assert_eq!(res.rows.len(), 2);
+        for row in &res.rows {
+            assert!(row.ingest_per_sec > 0.0);
+            assert!(row.query_p50_us > 0.0);
+            assert!(row.query_p99_us >= row.query_p50_us);
+            // Retention at 50/rank over 200 records/rank: 3 ranks × 50.
+            assert_eq!(row.records, 150);
+            assert_eq!(row.evicted, 450);
+            assert!(row.resident_bytes < row.log_bytes);
+        }
+        let text = res.render();
+        assert!(text.contains("provDB service"));
+        let json = res.to_json();
+        assert_eq!(json.get("bench").unwrap().as_str(), Some("provdb"));
+        assert_eq!(json.get("rows").unwrap().as_arr().unwrap().len(), 2);
+        crate::util::json::parse(&json.to_pretty()).unwrap();
     }
 }

@@ -26,6 +26,7 @@
 //! | [`ad`] | call-stack building + anomaly detection (Rust and XLA paths) |
 //! | [`ps`] | the online AD parameter server |
 //! | [`provenance`] | prescriptive provenance records, store and queries |
+//! | [`provdb`] | the sharded, networked provenance database service |
 //! | [`viz`] | visualization backend (HTTP API + terminal renderings) |
 //! | [`runtime`] | PJRT artifact loading and the XLA service thread |
 //! | [`coordinator`] | workflow topology + online/offline drivers |
@@ -39,6 +40,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod exp;
+pub mod provdb;
 pub mod provenance;
 pub mod ps;
 pub mod runtime;

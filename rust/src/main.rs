@@ -2,13 +2,17 @@
 //!
 //! ```text
 //! chimbuko run      [--config f] [--ranks N] [--steps N] [--backend rust|xla]
-//!                   [--ps-shards N] [--out dir] [--unfiltered] [--serve]
+//!                   [--ps-shards N] [--out dir] [--provdb host:port]
+//!                   [--unfiltered] [--serve]
 //! chimbuko gen      [--ranks N] [--steps N] [--out trace.bp] [--unfiltered]
 //! chimbuko replay   --dir <out_dir>        re-index a stored run, print stats
-//! chimbuko serve    --dir <out_dir> [--addr host:port]   viz server over a run
+//! chimbuko serve    --dir <out_dir> | --provdb host:port  [--addr host:port]
+//!                   viz server over a stored run or a live provDB service
 //! chimbuko exp      <fig7|fig8|fig9|viz|case> [--fast]    paper experiments
 //! chimbuko compare  --a <dir> --b <dir>    cross-run provenance mining
 //! chimbuko ps-server [--addr host:port] [--shards N] [--ranks N]  standalone TCP parameter server
+//! chimbuko provdb-server [--addr host:port] [--shards N] [--dir d]
+//!                   [--max-records-per-rank N]  standalone provenance database
 //! chimbuko analyze  --bp trace.bp [--out dir] [--algorithm hbos]  offline re-analysis
 //! chimbuko version
 //! ```
@@ -16,10 +20,11 @@
 use chimbuko::cli::Args;
 use chimbuko::config::{Config, DetectorBackend};
 use chimbuko::coordinator::{run, Mode, Workflow};
+use chimbuko::provdb::{ProvDbTcpServer, Retention};
 use chimbuko::provenance::ProvDb;
 use chimbuko::trace::RankTracer;
 use chimbuko::util::fmt_bytes;
-use chimbuko::viz::{http::VizServer, VizState};
+use chimbuko::viz::{http::VizServer, ProvSource, VizState};
 use std::path::Path;
 use std::sync::{Arc, RwLock};
 
@@ -33,6 +38,7 @@ fn main() {
         Some("exp") => cmd_exp(&args),
         Some("compare") => cmd_compare(&args),
         Some("ps-server") => cmd_ps_server(&args),
+        Some("provdb-server") => cmd_provdb_server(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("version") => {
             println!("chimbuko {}", chimbuko::VERSION);
@@ -40,7 +46,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: chimbuko <run|gen|replay|serve|exp|version> [options]\n\
+                "usage: chimbuko <run|gen|replay|serve|exp|compare|ps-server|provdb-server|analyze|version> [options]\n\
                  see `rust/src/main.rs` header or README for options"
             );
             std::process::exit(2);
@@ -84,6 +90,12 @@ fn config_of(args: &Args) -> anyhow::Result<Config> {
     if let Some(v) = args.get("ps-shards") {
         cfg.apply("ps.shards", v)?;
     }
+    if let Some(v) = args.get("provdb") {
+        cfg.apply("provdb.addr", v)?;
+    }
+    if let Some(v) = args.get("provdb-batch") {
+        cfg.apply("provdb.batch", v)?;
+    }
     if args.flag("unfiltered") {
         cfg.filtered = false;
     }
@@ -119,17 +131,30 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     );
 
     if args.flag("serve") {
-        let dir = report
-            .out_dir
-            .clone()
-            .ok_or_else(|| anyhow::anyhow!("--serve needs --out <dir>"))?;
-        let db = ProvDb::load(&dir)?;
-        let state = VizState::from_run(
-            &report.snapshots,
-            report.snapshot.clone(),
-            db,
-            workflow.registries.clone(),
-        );
+        let state = if !cfg.provdb_addr.is_empty() {
+            // The run's provenance lives in the provDB service — proxy
+            // detail queries there instead of loading local files.
+            let mut s = VizState::from_run(
+                &report.snapshots,
+                report.snapshot.clone(),
+                ProvDb::in_memory(),
+                workflow.registries.clone(),
+            );
+            s.db = ProvSource::remote(&cfg.provdb_addr)?;
+            s
+        } else {
+            let dir = report
+                .out_dir
+                .clone()
+                .ok_or_else(|| anyhow::anyhow!("--serve needs --out <dir> or --provdb"))?;
+            let db = ProvDb::load(&dir)?;
+            VizState::from_run(
+                &report.snapshots,
+                report.snapshot.clone(),
+                db,
+                workflow.registries.clone(),
+            )
+        };
         let server = VizServer::start(
             &args.str_opt("addr", "127.0.0.1:8787"),
             Arc::new(RwLock::new(state)),
@@ -208,14 +233,20 @@ fn cmd_replay(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    let dir = args
-        .get("dir")
-        .ok_or_else(|| anyhow::anyhow!("serve needs --dir <out_dir>"))?;
-    let db = ProvDb::load(Path::new(dir))?;
     // Registries from metadata are display-only; rebuild defaults.
     let regs = chimbuko::trace::nwchem::workflow_registries();
     let mut state = VizState::new(regs);
-    state.db = db;
+    if let Some(addr) = args.get("provdb") {
+        // Live mode: proxy detail queries to the provDB service.
+        state.db = ProvSource::remote(addr)?;
+    } else {
+        let dir = args
+            .get("dir")
+            .ok_or_else(|| anyhow::anyhow!("serve needs --dir <out_dir> or --provdb <addr>"))?;
+        let db = ProvDb::load(Path::new(dir))?;
+        let meta = ProvDb::load_metadata(Path::new(dir)).ok();
+        state.db = ProvSource::local_with_meta(db, meta);
+    }
     let server = VizServer::start(
         &args.str_opt("addr", "127.0.0.1:8787"),
         Arc::new(RwLock::new(state)),
@@ -246,9 +277,10 @@ fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
 ///
 /// `--ranks` must equal the number of ranks that will send per-step
 /// reports: it is the quorum that completes a step's workflow-wide
-/// anomaly total. Too high and steps never complete (global-event
-/// detection stays silent and per-step accumulators linger); too low
-/// and steps complete early on partial totals.
+/// anomaly total. Too high and steps never complete on time (their
+/// accumulators expire by step distance with partial totals, so
+/// global-event detection degrades rather than the server leaking); too
+/// low and steps complete early on partial totals.
 fn cmd_ps_server(args: &Args) -> anyhow::Result<()> {
     let addr = args.str_opt("addr", "127.0.0.1:5559");
     let shards = args.usize_opt("shards", 4);
@@ -263,6 +295,36 @@ fn cmd_ps_server(args: &Args) -> anyhow::Result<()> {
         "parameter server on {} ({} shards) — Ctrl-C to stop",
         server.addr(),
         shards
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// Standalone provenance database service (`provdb::net` protocol): AD
+/// ranks of a `chimbuko run --provdb <addr>` write to it, `chimbuko
+/// serve --provdb <addr>` queries it — the paper's dedicated provenance
+/// store, decoupled from the analysis ranks.
+fn cmd_provdb_server(args: &Args) -> anyhow::Result<()> {
+    let addr = args.str_opt("addr", "127.0.0.1:5560");
+    let shards = args.usize_opt("shards", 4);
+    let retention = Retention::from_knob(args.usize_opt("max-records-per-rank", 0));
+    let dir = args.get("dir").map(std::path::PathBuf::from);
+    let (store, _handle) = chimbuko::provdb::spawn_store(dir.as_deref(), shards, retention)?;
+    let server = ProvDbTcpServer::start(&addr, store)?;
+    println!(
+        "provenance database on {} ({} shards, {}, {}) — Ctrl-C to stop",
+        server.addr(),
+        shards,
+        match &dir {
+            Some(d) => format!("log dir {}", d.display()),
+            None => "memory only".to_string(),
+        },
+        if retention.max_records_per_rank == usize::MAX {
+            "unbounded".to_string()
+        } else {
+            format!("≤{} records/rank", retention.max_records_per_rank)
+        },
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -336,6 +398,15 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
             .collect();
         let res = chimbuko::exp::run_fig9(&scales, if fast { 8 } else { 15 }, 130)?;
         print!("{}", res.render());
+        let pdb = chimbuko::exp::run_provdb_bench(
+            if fast { &[1, 2] } else { &[1, 2, 4] },
+            if fast { 4 } else { 8 },
+            if fast { 1_000 } else { 10_000 },
+            if fast { 50 } else { 200 },
+            args.usize_opt("provdb-max-per-rank", 1_000),
+            args.u64_opt("seed", 7),
+        )?;
+        print!("{}", pdb.render());
         Ok(())
     };
     let run_viz = || -> anyhow::Result<()> {

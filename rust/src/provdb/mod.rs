@@ -1,0 +1,37 @@
+//! The **provenance database service** (paper §V) — a standalone,
+//! queryable store for prescriptive-provenance records, decoupling the
+//! provenance pillar from the analysis ranks the way the reference
+//! implementation backs it with a distributed Sonata/Mochi document
+//! database.
+//!
+//! ## Architecture
+//!
+//! ```text
+//!  AD rank ──ProvClient──┐                       ┌─ shard 0 ─ partitions
+//!  AD rank ──ProvClient──┤   ProvDbTcpServer     │            + log slice
+//!      …                 ├──▶ (conn threads) ──▶ ├─ shard 1 ─ …
+//!  viz server ─ProvClient┘        ProvStore      └─ shard N-1
+//! ```
+//!
+//! * [`store`] — the sharded document store: records are partitioned by
+//!   `(app, rank)` across per-shard worker threads; each shard owns its
+//!   partitions' in-memory index, its slice of the JSONL append log
+//!   (byte-compatible with [`ProvDb`](crate::provenance::ProvDb)'s
+//!   layout), and applies the [`Retention`] policy (score-based eviction
+//!   per partition — the paper's "reduction for human-level processing").
+//! * [`net`] — the TCP protocol: hello handshake reporting the shard
+//!   count, batched record writes (AD ranks never block per record),
+//!   server-side queries covering every
+//!   [`ProvQuery`](crate::provenance::ProvQuery) filter, call-stack
+//!   reconstruction, run-metadata storage/retrieval, stats, and a flush
+//!   barrier.
+//!
+//! With retention disabled, the service answers every query bit-identically
+//! to a local `ProvDb` fed the same record stream, for any shard count —
+//! `tests/provdb_service.rs` pins this down for N ∈ {1, 2, 4}.
+
+pub mod net;
+pub mod store;
+
+pub use net::{ProvClient, ProvDbTcpServer, DEFAULT_BATCH};
+pub use store::{prov_shard_of, spawn_store, ProvDbStats, ProvStore, ProvStoreHandle, Retention};

@@ -1,0 +1,504 @@
+//! TCP transport for the provenance database — AD ranks write to it,
+//! the visualization server queries it (the paper's Sonata/Mochi
+//! deployment shape: a dedicated provenance service decoupled from the
+//! analysis ranks).
+//!
+//! Wire protocol (length-prefixed messages, little-endian; shared framing
+//! in [`util::wire`](crate::util::wire)):
+//!
+//! ```text
+//! request  := u32 len, u8 kind, payload
+//!   kind 1 (hello):     (empty)
+//!   kind 2 (write):     n u32, n × (u32 len, JSONL record bytes)
+//!   kind 3 (query):     u32 len, ProvQuery JSON bytes
+//!   kind 4 (callstack): app u32, rank u32, step u64
+//!   kind 5 (meta set):  u32 len, metadata JSON bytes
+//!   kind 6 (meta get):  (empty)
+//!   kind 7 (stats):     (empty)
+//!   kind 8 (flush):     (empty)
+//! reply (hello)     := u32 n_shards
+//! reply (write)     := u32 n_accepted
+//! reply (query/cs)  := u32 n, n × (u32 len, JSONL record bytes)
+//! reply (meta set)  := u8 1
+//! reply (meta get)  := u8 present, [u32 len, JSON bytes]
+//! reply (stats)     := u64 records, u64 resident, u64 log, u64 anoms,
+//!                      u64 evicted
+//! reply (flush)     := u8 1
+//! ```
+//!
+//! Records travel as their JSONL text — byte-identical to the append-log
+//! format, so the wire shares one serializer (and its round-trip tests)
+//! with the disk layout. A malformed record drops the connection (the
+//! wire is a trust boundary), mirroring `ps::net`'s misgrouped-frame
+//! policy.
+//!
+//! [`ProvClient::append`] batches client-side: records buffer locally and
+//! ship `batch` at a time, so AD ranks never block per record. One
+//! connection reads its own writes (server-side, a connection's ingests
+//! and queries traverse each shard queue in order); cross-client
+//! visibility needs [`ProvClient::flush`], which is a shard-drain
+//! barrier.
+
+use super::store::{ProvDbStats, ProvStore};
+use crate::ad::Labeled;
+use crate::provenance::{ProvQuery, ProvRecord};
+use crate::trace::FuncRegistry;
+use crate::util::json::{parse, Json};
+use crate::util::wire::{put_str, read_msg, write_msg, Cursor};
+use anyhow::{bail, Context, Result};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+const KIND_HELLO: u8 = 1;
+const KIND_WRITE: u8 = 2;
+const KIND_QUERY: u8 = 3;
+const KIND_CALLSTACK: u8 = 4;
+const KIND_META_SET: u8 = 5;
+const KIND_META_GET: u8 = 6;
+const KIND_STATS: u8 = 7;
+const KIND_FLUSH: u8 = 8;
+
+/// Default client-side write batch (records per wire round-trip).
+pub const DEFAULT_BATCH: usize = 64;
+
+/// TCP front-end for a provenance database; forwards to a [`ProvStore`].
+pub struct ProvDbTcpServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ProvDbTcpServer {
+    /// Bind and serve; each connection is one writer or reader (thread
+    /// per conn, all sharing the store's shard constellation).
+    pub fn start(addr: &str, store: ProvStore) -> Result<ProvDbTcpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let join = std::thread::Builder::new()
+            .name("chimbuko-provdb-tcp".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let s = store.clone();
+                            std::thread::spawn(move || {
+                                let _ = serve_conn(stream, s);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(ProvDbTcpServer { addr: local, stop, join: Some(join) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ProvDbTcpServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn put_records(reply: &mut Vec<u8>, recs: &[ProvRecord]) {
+    reply.extend_from_slice(&(recs.len() as u32).to_le_bytes());
+    let mut line = String::with_capacity(360);
+    for r in recs {
+        line.clear();
+        r.write_jsonl(&mut line);
+        put_str(reply, &line);
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, store: ProvStore) -> Result<()> {
+    loop {
+        let Some(msg) = read_msg(&mut stream)? else {
+            return Ok(()); // clean disconnect
+        };
+        let mut c = Cursor::new(&msg);
+        let kind = c.u8()?;
+        match kind {
+            KIND_HELLO => {
+                let reply = (store.shard_count() as u32).to_le_bytes();
+                write_msg(&mut stream, &reply)?;
+            }
+            KIND_WRITE => {
+                let n = c.u32()? as usize;
+                // The count is wire-supplied (untrusted): cap the
+                // pre-allocation so a lying header cannot abort the
+                // process; pushes still validate against the payload.
+                let mut recs = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    let line = c.str()?;
+                    // Trust boundary: refuse the whole frame on a
+                    // malformed record instead of ingesting a prefix.
+                    recs.push(
+                        ProvRecord::from_jsonl_line(&line)
+                            .context("malformed provenance record on the wire")?,
+                    );
+                }
+                let accepted = store.ingest(recs);
+                write_msg(&mut stream, &(accepted as u32).to_le_bytes())?;
+            }
+            KIND_QUERY => {
+                let text = c.str()?;
+                let q = ProvQuery::from_json(&parse(&text)?)?;
+                let recs = store.query(&q);
+                let mut reply = Vec::with_capacity(8 + 280 * recs.len());
+                put_records(&mut reply, &recs);
+                write_msg(&mut stream, &reply)?;
+            }
+            KIND_CALLSTACK => {
+                let app = c.u32()?;
+                let rank = c.u32()?;
+                let step = c.u64()?;
+                let recs = store.call_stack(app, rank, step);
+                let mut reply = Vec::with_capacity(8 + 280 * recs.len());
+                put_records(&mut reply, &recs);
+                write_msg(&mut stream, &reply)?;
+            }
+            KIND_META_SET => {
+                let text = c.str()?;
+                store.set_metadata(parse(&text)?)?;
+                write_msg(&mut stream, &[1u8])?;
+            }
+            KIND_META_GET => {
+                let mut reply = Vec::new();
+                match store.metadata() {
+                    Some(m) => {
+                        reply.push(1u8);
+                        put_str(&mut reply, &m.to_string());
+                    }
+                    None => reply.push(0u8),
+                }
+                write_msg(&mut stream, &reply)?;
+            }
+            KIND_STATS => {
+                let s = store.stats();
+                let mut reply = Vec::with_capacity(40);
+                reply.extend_from_slice(&s.records.to_le_bytes());
+                reply.extend_from_slice(&s.resident_bytes.to_le_bytes());
+                reply.extend_from_slice(&s.log_bytes.to_le_bytes());
+                reply.extend_from_slice(&s.anomalies.to_le_bytes());
+                reply.extend_from_slice(&s.evicted.to_le_bytes());
+                write_msg(&mut stream, &reply)?;
+            }
+            KIND_FLUSH => {
+                store.flush();
+                write_msg(&mut stream, &[1u8])?;
+            }
+            k => bail!("unknown request kind {k}"),
+        }
+    }
+}
+
+/// TCP client for the provenance database; same query surface as the
+/// local [`ProvDb`](crate::provenance::ProvDb), plus batched writes.
+pub struct ProvClient {
+    stream: TcpStream,
+    /// Server shard count, learned from the hello handshake.
+    n_shards: usize,
+    /// Serialized records awaiting the next batch send.
+    pending: Vec<String>,
+    batch: usize,
+}
+
+impl ProvClient {
+    /// Connect with the default write batch size.
+    pub fn connect(addr: &str) -> Result<ProvClient> {
+        Self::connect_with_batch(addr, DEFAULT_BATCH)
+    }
+
+    /// Connect; `batch` records buffer client-side per write round-trip.
+    pub fn connect_with_batch(addr: &str, batch: usize) -> Result<ProvClient> {
+        let mut stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to provdb {addr}"))?;
+        stream.set_nodelay(true).ok();
+        write_msg(&mut stream, &[KIND_HELLO])?;
+        let reply = read_msg(&mut stream)?.context("provdb closed during hello")?;
+        let mut c = Cursor::new(&reply);
+        let n_shards = c.u32()? as usize;
+        if n_shards == 0 {
+            bail!("provdb server reported zero shards");
+        }
+        Ok(ProvClient { stream, n_shards, pending: Vec::new(), batch: batch.max(1) })
+    }
+
+    /// Server shard count from the handshake.
+    pub fn shard_count(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Buffer one record; ships a batch once `batch` records accumulate,
+    /// so the caller never blocks per record.
+    pub fn append(&mut self, rec: &ProvRecord) -> Result<()> {
+        let mut line = String::with_capacity(360);
+        rec.write_jsonl(&mut line);
+        self.pending.push(line);
+        if self.pending.len() >= self.batch {
+            self.send_batch()?;
+        }
+        Ok(())
+    }
+
+    /// Append kept records from one AD step, resolving names via `reg` —
+    /// the remote mirror of [`ProvDb::append_step`](crate::provenance::ProvDb::append_step).
+    pub fn append_step(&mut self, kept: &[Labeled], reg: &FuncRegistry) -> Result<()> {
+        for l in kept {
+            let rec = ProvRecord::from_labeled(l, reg.name(l.rec.fid));
+            self.append(&rec)?;
+        }
+        Ok(())
+    }
+
+    fn send_batch(&mut self) -> Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        let bytes: usize = self.pending.iter().map(|l| l.len() + 4).sum();
+        let mut msg = Vec::with_capacity(5 + bytes);
+        msg.push(KIND_WRITE);
+        msg.extend_from_slice(&(self.pending.len() as u32).to_le_bytes());
+        for line in &self.pending {
+            put_str(&mut msg, line);
+        }
+        write_msg(&mut self.stream, &msg)?;
+        let reply = read_msg(&mut self.stream)?.context("provdb closed on write")?;
+        let mut c = Cursor::new(&reply);
+        let acked = c.u32()? as usize;
+        if acked != self.pending.len() {
+            bail!("provdb acked {acked} of {} records", self.pending.len());
+        }
+        self.pending.clear();
+        Ok(())
+    }
+
+    /// Ship any buffered records, then barrier server-side: every shard
+    /// queue drains and the append log is flushed/compacted before this
+    /// returns, making the writes visible to every other client.
+    pub fn flush(&mut self) -> Result<()> {
+        self.send_batch()?;
+        write_msg(&mut self.stream, &[KIND_FLUSH])?;
+        read_msg(&mut self.stream)?.context("provdb closed on flush")?;
+        Ok(())
+    }
+
+    fn read_records(&mut self) -> Result<Vec<ProvRecord>> {
+        let reply = read_msg(&mut self.stream)?.context("provdb closed on query")?;
+        let mut c = Cursor::new(&reply);
+        let n = c.u32()? as usize;
+        // Count is peer-supplied: cap the pre-allocation (see serve_conn).
+        let mut out = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            let line = c.str()?;
+            out.push(ProvRecord::from_jsonl_line(&line)?);
+        }
+        Ok(out)
+    }
+
+    /// Run a query server-side (buffered writes ship first, so a client
+    /// always reads its own writes).
+    pub fn query(&mut self, q: &ProvQuery) -> Result<Vec<ProvRecord>> {
+        self.send_batch()?;
+        let mut msg = vec![KIND_QUERY];
+        put_str(&mut msg, &q.to_json().to_string());
+        write_msg(&mut self.stream, &msg)?;
+        self.read_records()
+    }
+
+    /// Call-stack reconstruction for `(app, rank, step)`, entry-ordered.
+    pub fn call_stack(&mut self, app: u32, rank: u32, step: u64) -> Result<Vec<ProvRecord>> {
+        self.send_batch()?;
+        let mut msg = vec![KIND_CALLSTACK];
+        msg.extend_from_slice(&app.to_le_bytes());
+        msg.extend_from_slice(&rank.to_le_bytes());
+        msg.extend_from_slice(&step.to_le_bytes());
+        write_msg(&mut self.stream, &msg)?;
+        self.read_records()
+    }
+
+    /// Store run metadata on the server.
+    pub fn set_metadata(&mut self, meta: &Json) -> Result<()> {
+        let mut msg = vec![KIND_META_SET];
+        put_str(&mut msg, &meta.to_string());
+        write_msg(&mut self.stream, &msg)?;
+        read_msg(&mut self.stream)?.context("provdb closed on metadata")?;
+        Ok(())
+    }
+
+    /// Retrieve run metadata, if the server holds any.
+    pub fn metadata(&mut self) -> Result<Option<Json>> {
+        write_msg(&mut self.stream, &[KIND_META_GET])?;
+        let reply = read_msg(&mut self.stream)?.context("provdb closed on metadata")?;
+        let mut c = Cursor::new(&reply);
+        if c.u8()? == 0 {
+            return Ok(None);
+        }
+        Ok(Some(parse(&c.str()?)?))
+    }
+
+    /// Aggregate store counters.
+    pub fn stats(&mut self) -> Result<ProvDbStats> {
+        self.send_batch()?;
+        write_msg(&mut self.stream, &[KIND_STATS])?;
+        let reply = read_msg(&mut self.stream)?.context("provdb closed on stats")?;
+        let mut c = Cursor::new(&reply);
+        Ok(ProvDbStats {
+            records: c.u64()?,
+            resident_bytes: c.u64()?,
+            log_bytes: c.u64()?,
+            anomalies: c.u64()?,
+            evicted: c.u64()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::store::{spawn_store, Retention};
+    use super::*;
+    use std::io::Write;
+
+    fn rec(rank: u32, step: u64, score: f64, id: u64) -> ProvRecord {
+        ProvRecord {
+            call_id: id,
+            app: 0,
+            rank,
+            thread: 0,
+            fid: 1,
+            func: "F1".to_string(),
+            step,
+            entry_us: id * 10,
+            exit_us: id * 10 + 5,
+            inclusive_us: 5,
+            exclusive_us: 5,
+            depth: 0,
+            parent: None,
+            n_children: 0,
+            n_messages: 0,
+            msg_bytes: 0,
+            label: if score >= 6.0 { "anomaly_high".into() } else { "normal".into() },
+            score,
+        }
+    }
+
+    #[test]
+    fn write_flush_query_roundtrip() {
+        let (store, handle) = spawn_store(None, 2, Retention::default()).unwrap();
+        let mut srv = ProvDbTcpServer::start("127.0.0.1:0", store.clone()).unwrap();
+        let addr = srv.addr().to_string();
+        let mut cl = ProvClient::connect_with_batch(&addr, 4).unwrap();
+        assert_eq!(cl.shard_count(), 2);
+        for i in 0..10u64 {
+            cl.append(&rec((i % 3) as u32, i / 2, i as f64, i)).unwrap();
+        }
+        // 10 records at batch 4: two batches shipped, two still pending.
+        let all = cl.query(&ProvQuery::default()).unwrap();
+        assert_eq!(all.len(), 10, "query must ship pending writes first");
+        let anoms = cl
+            .query(&ProvQuery { anomalies_only: true, ..Default::default() })
+            .unwrap();
+        assert_eq!(anoms.len(), 4); // scores 6..=9
+        let stack = cl.call_stack(0, 0, 0).unwrap();
+        assert!(stack.iter().all(|r| r.rank == 0 && r.step == 0));
+        cl.flush().unwrap();
+        // A second client sees the flushed records.
+        let mut cl2 = ProvClient::connect(&addr).unwrap();
+        assert_eq!(cl2.query(&ProvQuery::default()).unwrap().len(), 10);
+        let stats = cl2.stats().unwrap();
+        assert_eq!(stats.records, 10);
+        assert_eq!(stats.anomalies, 4);
+        srv.stop();
+        handle.join();
+    }
+
+    #[test]
+    fn metadata_over_the_wire() {
+        let (store, handle) = spawn_store(None, 1, Retention::default()).unwrap();
+        let srv = ProvDbTcpServer::start("127.0.0.1:0", store.clone()).unwrap();
+        let addr = srv.addr().to_string();
+        let mut cl = ProvClient::connect(&addr).unwrap();
+        assert!(cl.metadata().unwrap().is_none());
+        cl.set_metadata(&Json::obj(vec![("run_id", Json::str("wire"))])).unwrap();
+        let m = cl.metadata().unwrap().unwrap();
+        assert_eq!(m.get("run_id").unwrap().as_str(), Some("wire"));
+        drop(srv);
+        handle.join();
+    }
+
+    #[test]
+    fn malformed_record_drops_connection_not_server() {
+        let (store, handle) = spawn_store(None, 2, Retention::default()).unwrap();
+        let srv = ProvDbTcpServer::start("127.0.0.1:0", store.clone()).unwrap();
+        let addr = srv.addr().to_string();
+        // Hand-roll a write frame with junk instead of a record.
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut msg = vec![KIND_WRITE];
+        msg.extend_from_slice(&1u32.to_le_bytes());
+        put_str(&mut msg, "not json at all");
+        write_msg(&mut s, &msg).unwrap();
+        assert!(read_msg(&mut s).unwrap().is_none(), "conn must drop, no reply");
+        drop(s);
+        // Nothing was ingested; the server still serves good clients.
+        let mut cl = ProvClient::connect(&addr).unwrap();
+        assert!(cl.query(&ProvQuery::default()).unwrap().is_empty());
+        cl.append(&rec(0, 0, 1.0, 1)).unwrap();
+        assert_eq!(cl.query(&ProvQuery::default()).unwrap().len(), 1);
+        // Junk frame kind also drops cleanly.
+        let mut s2 = TcpStream::connect(&addr).unwrap();
+        s2.write_all(&3u32.to_le_bytes()).unwrap();
+        s2.write_all(&[0xFF, 0xFF, 0xFF]).unwrap();
+        s2.flush().unwrap();
+        assert!(read_msg(&mut s2).unwrap().is_none());
+        drop(srv);
+        handle.join();
+    }
+
+    #[test]
+    fn concurrent_writers_converge() {
+        let (store, handle) = spawn_store(None, 4, Retention::default()).unwrap();
+        let srv = ProvDbTcpServer::start("127.0.0.1:0", store.clone()).unwrap();
+        let addr = srv.addr().to_string();
+        let mut joins = Vec::new();
+        for rank in 0..6u32 {
+            let addr = addr.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut cl = ProvClient::connect_with_batch(&addr, 8).unwrap();
+                for i in 0..40u64 {
+                    cl.append(&rec(rank, i, 1.0, rank as u64 * 1000 + i)).unwrap();
+                }
+                cl.flush().unwrap();
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let mut cl = ProvClient::connect(&addr).unwrap();
+        assert_eq!(cl.stats().unwrap().records, 240);
+        for rank in 0..6u32 {
+            let mine = cl
+                .query(&ProvQuery { rank: Some((0, rank)), ..Default::default() })
+                .unwrap();
+            assert_eq!(mine.len(), 40, "rank {rank}");
+        }
+        drop(srv);
+        handle.join();
+    }
+}

@@ -231,16 +231,7 @@ impl ProvDb {
             },
             (None, None) => Box::new(self.records.iter()),
         };
-        let mut out: Vec<&ProvRecord> = candidates
-            .filter(|r| q.fid.map(|(a, f)| r.app == a && r.fid == f).unwrap_or(true))
-            .filter(|r| q.step.map(|s| r.step == s).unwrap_or(true))
-            .filter(|r| !q.anomalies_only || r.is_anomaly())
-            .filter(|r| {
-                q.ts_range
-                    .map(|(lo, hi)| r.exit_us >= lo && r.entry_us <= hi)
-                    .unwrap_or(true)
-            })
-            .collect();
+        let mut out: Vec<&ProvRecord> = candidates.filter(|r| q.matches(r)).collect();
         if q.order_by_score {
             out.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
         } else {
@@ -264,22 +255,135 @@ impl ProvDb {
 }
 
 /// Declarative query over the provenance index.
+///
+/// Every filter here is also understood by the networked provenance
+/// database ([`crate::provdb`]), whose shard-side query engine applies
+/// [`ProvQuery::matches`] — keeping local and remote semantics identical
+/// by construction.
 #[derive(Clone, Debug, Default)]
 pub struct ProvQuery {
+    /// Filter by app alone (use `rank`/`fid` for app-scoped keys).
+    pub app: Option<u32>,
     /// Filter by (app, rank).
     pub rank: Option<(u32, u32)>,
     /// Filter by (app, fid).
     pub fid: Option<(u32, u32)>,
     /// Filter by step.
     pub step: Option<u64>,
+    /// Filter by an inclusive step window `[lo, hi]`.
+    pub step_range: Option<(u64, u64)>,
     /// Overlap with a virtual-time range (µs).
     pub ts_range: Option<(u64, u64)>,
     /// Anomalies only.
     pub anomalies_only: bool,
+    /// Keep records with `score >= min_score` only.
+    pub min_score: Option<f64>,
+    /// Exact label match ("normal" | "anomaly_high" | "anomaly_low").
+    pub label: Option<String>,
     /// Sort by score descending instead of entry time.
     pub order_by_score: bool,
     /// Truncate results.
     pub limit: Option<usize>,
+}
+
+impl ProvQuery {
+    /// Does `r` satisfy every filter of this query? The single source of
+    /// truth for filter semantics — the local index and the provDB shard
+    /// workers both call this.
+    pub fn matches(&self, r: &ProvRecord) -> bool {
+        self.app.map(|a| r.app == a).unwrap_or(true)
+            && self.rank.map(|(a, k)| r.app == a && r.rank == k).unwrap_or(true)
+            && self.fid.map(|(a, f)| r.app == a && r.fid == f).unwrap_or(true)
+            && self.step.map(|s| r.step == s).unwrap_or(true)
+            && self
+                .step_range
+                .map(|(lo, hi)| r.step >= lo && r.step <= hi)
+                .unwrap_or(true)
+            && (!self.anomalies_only || r.is_anomaly())
+            && self.min_score.map(|m| r.score >= m).unwrap_or(true)
+            && self.label.as_deref().map(|l| r.label == l).unwrap_or(true)
+            && self
+                .ts_range
+                .map(|(lo, hi)| r.exit_us >= lo && r.entry_us <= hi)
+                .unwrap_or(true)
+    }
+
+    /// JSON form (the provDB wire protocol and `/api/provenance` carry
+    /// queries in this shape). Unset filters are omitted.
+    pub fn to_json(&self) -> Json {
+        let pair = |(a, b): (u32, u32)| {
+            Json::arr(vec![Json::num(a as f64), Json::num(b as f64)])
+        };
+        let range = |(lo, hi): (u64, u64)| {
+            Json::arr(vec![Json::num(lo as f64), Json::num(hi as f64)])
+        };
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        if let Some(a) = self.app {
+            fields.push(("app", Json::num(a as f64)));
+        }
+        if let Some(k) = self.rank {
+            fields.push(("rank", pair(k)));
+        }
+        if let Some(k) = self.fid {
+            fields.push(("fid", pair(k)));
+        }
+        if let Some(s) = self.step {
+            fields.push(("step", Json::num(s as f64)));
+        }
+        if let Some(r) = self.step_range {
+            fields.push(("step_range", range(r)));
+        }
+        if let Some(r) = self.ts_range {
+            fields.push(("ts_range", range(r)));
+        }
+        if self.anomalies_only {
+            fields.push(("anomalies_only", Json::Bool(true)));
+        }
+        if let Some(m) = self.min_score {
+            fields.push(("min_score", Json::num(m)));
+        }
+        if let Some(l) = &self.label {
+            fields.push(("label", Json::str(l.as_str())));
+        }
+        if self.order_by_score {
+            fields.push(("order_by_score", Json::Bool(true)));
+        }
+        if let Some(n) = self.limit {
+            fields.push(("limit", Json::num(n as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse back from the JSON form; missing keys mean "no filter".
+    pub fn from_json(j: &Json) -> Result<ProvQuery> {
+        let pair = |k: &str| -> Option<(u32, u32)> {
+            let a = j.get(k)?.as_arr()?;
+            Some((a.first()?.as_u64()? as u32, a.get(1)?.as_u64()? as u32))
+        };
+        let range = |k: &str| -> Option<(u64, u64)> {
+            let a = j.get(k)?.as_arr()?;
+            Some((a.first()?.as_u64()?, a.get(1)?.as_u64()?))
+        };
+        Ok(ProvQuery {
+            app: j.get("app").and_then(|v| v.as_u64()).map(|a| a as u32),
+            rank: pair("rank"),
+            fid: pair("fid"),
+            step: j.get("step").and_then(|v| v.as_u64()),
+            step_range: range("step_range"),
+            ts_range: range("ts_range"),
+            anomalies_only: j
+                .get("anomalies_only")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
+            min_score: j.get("min_score").and_then(|v| v.as_f64()),
+            label: j.get("label").and_then(|v| v.as_str()).map(|s| s.to_string()),
+            order_by_score: j
+                .get("order_by_score")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
+            limit: j.get("limit").and_then(|v| v.as_u64()).map(|n| n as usize),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -405,5 +509,71 @@ mod tests {
         let mut db = ProvDb::in_memory();
         db.append_step(&[labeled(0, 0, 0, 50, Label::Normal, 1)], &reg()).unwrap();
         assert!(db.bytes_written() > 100);
+    }
+
+    #[test]
+    fn extended_filters_score_label_step_window() {
+        let mut db = ProvDb::in_memory();
+        let reg = reg();
+        let kept = vec![
+            labeled(0, 1, 5, 100, Label::Normal, 1),       // score 1.0
+            labeled(1, 1, 6, 900, Label::AnomalyHigh, 2),  // score 9.0
+            labeled(1, 2, 7, 700, Label::AnomalyHigh, 3),  // score 7.0
+            labeled(0, 2, 9, 40, Label::AnomalyLow, 4),    // score 0.4
+        ];
+        db.append_step(&kept, &reg).unwrap();
+
+        let high = db.query(&ProvQuery { min_score: Some(5.0), ..Default::default() });
+        assert_eq!(high.len(), 2);
+        assert!(high.iter().all(|r| r.score >= 5.0));
+
+        let lows = db.query(&ProvQuery {
+            label: Some("anomaly_low".to_string()),
+            ..Default::default()
+        });
+        assert_eq!(lows.len(), 1);
+        assert_eq!(lows[0].call_id, 4);
+
+        let window = db.query(&ProvQuery { step_range: Some((6, 7)), ..Default::default() });
+        assert_eq!(window.len(), 2);
+        assert!(window.iter().all(|r| r.step >= 6 && r.step <= 7));
+
+        assert_eq!(db.query(&ProvQuery { app: Some(0), ..Default::default() }).len(), 4);
+        assert!(db.query(&ProvQuery { app: Some(1), ..Default::default() }).is_empty());
+    }
+
+    #[test]
+    fn query_json_roundtrip() {
+        let q = ProvQuery {
+            app: Some(1),
+            rank: Some((1, 7)),
+            fid: Some((0, 3)),
+            step: Some(9),
+            step_range: Some((2, 11)),
+            ts_range: Some((100, 900)),
+            anomalies_only: true,
+            min_score: Some(4.5),
+            label: Some("anomaly_high".to_string()),
+            order_by_score: true,
+            limit: Some(25),
+        };
+        let back = ProvQuery::from_json(&parse(&q.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.app, q.app);
+        assert_eq!(back.rank, q.rank);
+        assert_eq!(back.fid, q.fid);
+        assert_eq!(back.step, q.step);
+        assert_eq!(back.step_range, q.step_range);
+        assert_eq!(back.ts_range, q.ts_range);
+        assert_eq!(back.anomalies_only, q.anomalies_only);
+        assert_eq!(back.min_score, q.min_score);
+        assert_eq!(back.label, q.label);
+        assert_eq!(back.order_by_score, q.order_by_score);
+        assert_eq!(back.limit, q.limit);
+
+        // Default query serializes to an empty object and parses back.
+        let d = ProvQuery::default();
+        assert_eq!(d.to_json().to_string(), "{}");
+        let back = ProvQuery::from_json(&parse("{}").unwrap()).unwrap();
+        assert!(back.rank.is_none() && !back.anomalies_only && back.limit.is_none());
     }
 }

@@ -185,8 +185,14 @@ pub struct ParameterServer {
     reports_since_publish: usize,
     pub sync_count: u64,
     /// Per-step workflow-wide accumulation toward global-event detection:
-    /// step → (reports received, anomaly total).
+    /// step → (reports received, anomaly total). Entries that fall more
+    /// than [`STEP_ACC_MAX_LAG`] behind the newest reported step are
+    /// expired (their partial total folded into `step_totals`), so a
+    /// misconfigured `ps-server --ranks` no longer leaks one entry per
+    /// step.
     step_acc: HashMap<u64, (usize, u64)>,
+    /// Newest step seen in any report; drives step-distance expiry.
+    max_step_seen: u64,
     /// Reports expected per step (= number of reporting ranks);
     /// completes a step's total. An explicit constructor parameter: the
     /// publish cadence and the per-step report quorum are independent
@@ -205,6 +211,13 @@ pub struct ParameterServer {
 const GLOBAL_BETA: f64 = 3.0;
 const GLOBAL_MIN_HISTORY: u64 = 5;
 const GLOBAL_MIN_ANOMS: u64 = 3;
+
+/// A step accumulator this far behind the newest reported step can no
+/// longer meet its quorum in practice (ranks report steps roughly in
+/// lockstep); expire it with whatever partial total arrived. Quorum-met
+/// steps still complete exactly — expiry only catches the leak when
+/// `reports_per_step` overstates the reporting ranks.
+const STEP_ACC_MAX_LAG: u64 = 64;
 
 struct RankAccum {
     step_counts: RunStats,
@@ -231,6 +244,7 @@ impl ParameterServer {
             reports_since_publish: 0,
             sync_count: 0,
             step_acc: HashMap::new(),
+            max_step_seen: 0,
             reports_per_step: reports_per_step.max(1),
             step_totals: RunStats::new(),
             global_events: Vec::new(),
@@ -265,6 +279,20 @@ impl ParameterServer {
                 self.total_anomalies += stat.n_anomalies;
                 self.total_executions += stat.n_executions;
                 // Global-event detection on completed step totals (§V).
+                if stat.step > self.max_step_seen {
+                    self.max_step_seen = stat.step;
+                    self.expire_stale_steps();
+                }
+                if stat.step < self.max_step_seen.saturating_sub(STEP_ACC_MAX_LAG) {
+                    // Straggler for an already-expired step: don't
+                    // re-open the accumulator (it would leak again).
+                    self.fresh.push(stat);
+                    self.reports_since_publish += 1;
+                    if self.reports_since_publish >= self.publish_every {
+                        self.publish();
+                    }
+                    return true;
+                }
                 let entry = self.step_acc.entry(stat.step).or_insert((0, 0));
                 entry.0 += 1;
                 entry.1 += stat.n_anomalies;
@@ -299,6 +327,30 @@ impl ParameterServer {
             }
         }
         true
+    }
+
+    /// Drop per-step accumulators more than [`STEP_ACC_MAX_LAG`] behind
+    /// the newest reported step, folding their partial totals into the
+    /// step statistics (the best estimate available — no global event is
+    /// flagged off partial data).
+    fn expire_stale_steps(&mut self) {
+        let horizon = self.max_step_seen.saturating_sub(STEP_ACC_MAX_LAG);
+        if horizon == 0 {
+            return;
+        }
+        let stale: Vec<u64> =
+            self.step_acc.keys().filter(|&&s| s < horizon).copied().collect();
+        for s in stale {
+            if let Some((_, total)) = self.step_acc.remove(&s) {
+                self.step_totals.push(total as f64);
+            }
+        }
+    }
+
+    /// Steps whose workflow-wide totals are still accumulating (bounded
+    /// by [`STEP_ACC_MAX_LAG`] — see the expiry in `Report` handling).
+    pub fn pending_steps(&self) -> usize {
+        self.step_acc.len()
     }
 
     /// Build and send a viz snapshot; drains `fresh`.
@@ -552,6 +604,58 @@ mod tests {
         assert!(rrx.recv().unwrap().global_events.is_empty());
         // Snapshot carries the event for the viz layer.
         assert_eq!(ps.snapshot().global_events.len(), 1);
+    }
+
+    #[test]
+    fn stale_step_accumulators_expire() {
+        // Misconfigured quorum: the server expects 8 reports per step but
+        // only one rank ever reports — without expiry this leaks one
+        // accumulator per step forever.
+        let mut ps = ParameterServer::new(None, usize::MAX >> 1, 8);
+        for step in 0..500u64 {
+            ps.handle(PsRequest::Report(StepStat {
+                app: 0,
+                rank: 0,
+                step,
+                n_executions: 10,
+                n_anomalies: 1,
+                ts_range: (0, 1),
+            }));
+        }
+        assert!(
+            ps.pending_steps() <= (STEP_ACC_MAX_LAG + 1) as usize,
+            "step_acc leaked: {} entries after 500 steps",
+            ps.pending_steps()
+        );
+        // A straggler for a long-expired step must not re-open it…
+        ps.handle(PsRequest::Report(StepStat {
+            app: 0,
+            rank: 1,
+            step: 3,
+            n_executions: 10,
+            n_anomalies: 0,
+            ts_range: (0, 1),
+        }));
+        assert!(ps.pending_steps() <= (STEP_ACC_MAX_LAG + 1) as usize);
+        // …but its anomaly accounting still lands in the summaries.
+        assert_eq!(ps.snapshot().total_executions, 5010);
+
+        // Correctly configured quorum: steps complete exactly, nothing
+        // pends, and expiry never fires.
+        let mut ok = ParameterServer::new(None, usize::MAX >> 1, 2);
+        for step in 0..200u64 {
+            for rank in 0..2u32 {
+                ok.handle(PsRequest::Report(StepStat {
+                    app: 0,
+                    rank,
+                    step,
+                    n_executions: 10,
+                    n_anomalies: 0,
+                    ts_range: (0, 1),
+                }));
+            }
+        }
+        assert_eq!(ok.pending_steps(), 0);
     }
 
     #[test]

@@ -33,8 +33,8 @@
 
 use super::{shard_of, GlobalEvent, PsClient, StepStat};
 use crate::stats::{RunStats, StatsTable};
+use crate::util::wire::{read_msg, write_msg, Cursor};
 use anyhow::{bail, Context, Result};
-use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -42,29 +42,6 @@ use std::sync::Arc;
 const KIND_SYNC: u8 = 1;
 const KIND_REPORT: u8 = 2;
 const KIND_HELLO: u8 = 3;
-
-fn write_msg<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
-    w.write_all(&(payload.len() as u32).to_le_bytes())?;
-    w.write_all(payload)?;
-    w.flush()?;
-    Ok(())
-}
-
-fn read_msg<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
-    let mut len = [0u8; 4];
-    match r.read_exact(&mut len) {
-        Ok(()) => {}
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
-        Err(e) => return Err(e.into()),
-    }
-    let n = u32::from_le_bytes(len) as usize;
-    if n > 64 << 20 {
-        bail!("message too large: {n}");
-    }
-    let mut buf = vec![0u8; n];
-    r.read_exact(&mut buf).context("message body")?;
-    Ok(Some(buf))
-}
 
 fn put_stats(buf: &mut Vec<u8>, fid: u32, st: &RunStats) {
     buf.extend_from_slice(&fid.to_le_bytes());
@@ -75,40 +52,14 @@ fn put_stats(buf: &mut Vec<u8>, fid: u32, st: &RunStats) {
     buf.extend_from_slice(&st.max().to_le_bytes());
 }
 
-struct Cursor<'a>(&'a [u8], usize);
-
-impl<'a> Cursor<'a> {
-    fn take<const N: usize>(&mut self) -> Result<[u8; N]> {
-        if self.1 + N > self.0.len() {
-            bail!("truncated message");
-        }
-        let mut b = [0u8; N];
-        b.copy_from_slice(&self.0[self.1..self.1 + N]);
-        self.1 += N;
-        Ok(b)
-    }
-
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take()?))
-    }
-
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take()?))
-    }
-
-    fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take()?))
-    }
-
-    fn stats(&mut self) -> Result<(u32, RunStats)> {
-        let fid = self.u32()?;
-        let n = self.u64()?;
-        let mean = self.f64()?;
-        let m2 = self.f64()?;
-        let min = self.f64()?;
-        let max = self.f64()?;
-        Ok((fid, RunStats::from_raw(n, mean, m2, min, max)))
-    }
+fn read_stats(c: &mut Cursor) -> Result<(u32, RunStats)> {
+    let fid = c.u32()?;
+    let n = c.u64()?;
+    let mean = c.f64()?;
+    let m2 = c.f64()?;
+    let min = c.f64()?;
+    let max = c.f64()?;
+    Ok((fid, RunStats::from_raw(n, mean, m2, min, max)))
 }
 
 /// TCP front-end for a parameter server; forwards to a [`PsClient`].
@@ -170,8 +121,8 @@ fn serve_conn(mut stream: TcpStream, client: PsClient) -> Result<()> {
         let Some(msg) = read_msg(&mut stream)? else {
             return Ok(()); // clean disconnect
         };
-        let mut c = Cursor(&msg, 0);
-        let kind = c.take::<1>()?[0];
+        let mut c = Cursor::new(&msg);
+        let kind = c.u8()?;
         match kind {
             KIND_HELLO => {
                 let reply = (client.shard_count() as u32).to_le_bytes();
@@ -190,7 +141,7 @@ fn serve_conn(mut stream: TcpStream, client: PsClient) -> Result<()> {
                         bail!("shard id {shard} out of range (server has {})", parts.len());
                     }
                     for _ in 0..n {
-                        let entry = c.stats()?;
+                        let entry = read_stats(&mut c)?;
                         // The wire is a trust boundary: a misgrouped entry
                         // would silently fragment the global view across
                         // shards, so re-check the hash (cheap) and bail.
@@ -258,7 +209,7 @@ impl NetPsClient {
         // Hello handshake: learn the server's shard count.
         write_msg(&mut stream, &[KIND_HELLO])?;
         let reply = read_msg(&mut stream)?.context("PS closed during hello")?;
-        let mut c = Cursor(&reply, 0);
+        let mut c = Cursor::new(&reply);
         let n_shards = c.u32()? as usize;
         if n_shards == 0 {
             bail!("server reported zero shards");
@@ -301,11 +252,11 @@ impl NetPsClient {
         }
         write_msg(&mut self.stream, &msg)?;
         let reply = read_msg(&mut self.stream)?.context("PS closed connection")?;
-        let mut c = Cursor(&reply, 0);
+        let mut c = Cursor::new(&reply);
         let n = c.u32()? as usize;
         let mut global = StatsTable::new();
         for _ in 0..n {
-            let (fid, st) = c.stats()?;
+            let (fid, st) = read_stats(&mut c)?;
             global.replace(fid, st);
         }
         let n_events = c.u32()? as usize;
@@ -338,6 +289,7 @@ impl NetPsClient {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::Write;
 
     fn stats_of(values: &[f64]) -> StatsTable {
         let mut t = StatsTable::new();

@@ -20,18 +20,14 @@ use std::thread::JoinHandle;
 
 /// Stable shard routing: which of `n_shards` owns `(app, fid)`.
 ///
-/// SplitMix64 finalizer over the packed key — cheap, well-mixed, and
-/// identical on both sides of the wire protocol (the TCP client groups
-/// deltas with this same function after the hello handshake).
+/// One [`splitmix64`](crate::util::rng::splitmix64) step over the packed
+/// key — cheap, well-mixed, and identical on both sides of the wire
+/// protocol (the TCP client groups deltas with this same function after
+/// the hello handshake). The provDB's
+/// [`prov_shard_of`](crate::provdb::prov_shard_of) shares the mixer.
 pub fn shard_of(app: u32, fid: u32, n_shards: usize) -> usize {
-    let mut x = ((app as u64) << 32) | fid as u64;
-    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
-    x ^= x >> 30;
-    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    x ^= x >> 27;
-    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
-    x ^= x >> 31;
-    (x % n_shards.max(1) as u64) as usize
+    let mut key = ((app as u64) << 32) | fid as u64;
+    (crate::util::rng::splitmix64(&mut key) % n_shards.max(1) as u64) as usize
 }
 
 /// Message to one stat shard.

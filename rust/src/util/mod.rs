@@ -1,11 +1,13 @@
 //! Infrastructure substrates built in-repo (the offline registry carries no
-//! serde/clap/criterion/proptest): deterministic RNG, JSON, logging, and a
-//! small property-testing harness.
+//! serde/clap/criterion/proptest): deterministic RNG, JSON, logging, a
+//! small property-testing harness, and the length-prefixed wire framing
+//! shared by the TCP front-ends.
 
 pub mod json;
 pub mod log;
 pub mod prop;
 pub mod rng;
+pub mod wire;
 
 /// Format a byte count with binary units, e.g. `1.50 MiB`.
 pub fn fmt_bytes(bytes: u64) -> String {

@@ -1,0 +1,140 @@
+//! Length-prefixed binary framing shared by the TCP front-ends
+//! ([`ps::net`](crate::ps::net) and [`provdb::net`](crate::provdb::net)).
+//!
+//! Every message is `u32 len (LE), len bytes of payload`; payloads start
+//! with a one-byte request kind and are decoded with [`Cursor`]. Strings
+//! travel as `u32 len, len UTF-8 bytes` ([`put_str`] / [`Cursor::str`]).
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Upper bound on a single message; a peer announcing more is treated as
+/// malformed (the wire is a trust boundary).
+pub const MAX_MSG: usize = 64 << 20;
+
+/// Write one length-prefixed message and flush.
+pub fn write_msg<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed message; `None` on clean EOF before the
+/// length prefix.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    match r.read_exact(&mut len) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    if n > MAX_MSG {
+        bail!("message too large: {n}");
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf).context("message body")?;
+    Ok(Some(buf))
+}
+
+/// Append a length-prefixed UTF-8 string to a message under construction.
+pub fn put_str(buf: &mut Vec<u8>, s: &str) {
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked little-endian payload reader.
+pub struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    pub fn take<const N: usize>(&mut self) -> Result<[u8; N]> {
+        if self.pos + N > self.buf.len() {
+            bail!("truncated message");
+        }
+        let mut b = [0u8; N];
+        b.copy_from_slice(&self.buf[self.pos..self.pos + N]);
+        self.pos += N;
+        Ok(b)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take::<1>()?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take()?))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take()?))
+    }
+
+    /// Read a length-prefixed UTF-8 string (see [`put_str`]).
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        if self.pos + n > self.buf.len() {
+            bail!("truncated string");
+        }
+        let s = std::str::from_utf8(&self.buf[self.pos..self.pos + n])
+            .context("non-UTF-8 string on the wire")?
+            .to_string();
+        self.pos += n;
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_roundtrip_over_a_buffer() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, b"hello").unwrap();
+        write_msg(&mut buf, b"").unwrap();
+        let mut r = buf.as_slice();
+        assert_eq!(read_msg(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_msg(&mut r).unwrap().unwrap(), b"");
+        assert!(read_msg(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn cursor_reads_scalars_and_strings() {
+        let mut msg = vec![7u8];
+        msg.extend_from_slice(&42u32.to_le_bytes());
+        msg.extend_from_slice(&9u64.to_le_bytes());
+        msg.extend_from_slice(&1.5f64.to_le_bytes());
+        put_str(&mut msg, "chimbuko");
+        let mut c = Cursor::new(&msg);
+        assert_eq!(c.u8().unwrap(), 7);
+        assert_eq!(c.u32().unwrap(), 42);
+        assert_eq!(c.u64().unwrap(), 9);
+        assert_eq!(c.f64().unwrap(), 1.5);
+        assert_eq!(c.str().unwrap(), "chimbuko");
+        assert!(c.u8().is_err(), "exhausted cursor must refuse");
+    }
+
+    #[test]
+    fn truncated_inputs_rejected() {
+        let mut msg = Vec::new();
+        put_str(&mut msg, "abc");
+        msg.truncate(msg.len() - 1);
+        let mut c = Cursor::new(&msg);
+        assert!(c.str().is_err());
+        // Oversized length prefix refused before allocation.
+        let mut r: &[u8] = &(u32::MAX).to_le_bytes()[..];
+        assert!(read_msg(&mut r).is_err());
+    }
+}

@@ -88,6 +88,27 @@ pub fn top_anomalies(state: &VizState, limit: usize) -> Json {
     ])
 }
 
+/// `/api/provenance?...` — full declarative-query proxy over the
+/// provenance source (local index or the provDB service); the query
+/// echo makes the applied filters auditable client-side.
+pub fn provenance(state: &VizState, q: &ProvQuery) -> Json {
+    let recs = state.db.query(q);
+    Json::obj(vec![
+        ("query", q.to_json()),
+        ("count", Json::num(recs.len() as f64)),
+        ("records", Json::Arr(recs.iter().map(record_json).collect())),
+    ])
+}
+
+/// `/api/metadata` — run-level static provenance (architecture,
+/// configuration, function registries).
+pub fn metadata(state: &VizState) -> Json {
+    match state.db.metadata() {
+        Some(m) => m,
+        None => Json::obj(vec![("error", Json::str("no run metadata available"))]),
+    }
+}
+
 /// `/api/globalevents` — globally detected events (§V trigger).
 pub fn global_events(state: &VizState) -> Json {
     Json::obj(vec![(
@@ -111,6 +132,9 @@ pub fn global_events(state: &VizState) -> Json {
 
 /// `/api/stats` — run-level counters.
 pub fn stats(state: &VizState) -> Json {
+    // One backend round-trip for both provenance counters (a remote
+    // source would otherwise pay two shard fan-outs per request).
+    let (prov_records, prov_bytes) = state.db.counters();
     Json::obj(vec![
         ("version", Json::str(crate::VERSION)),
         ("total_anomalies", Json::num(state.latest.total_anomalies as f64)),
@@ -118,8 +142,8 @@ pub fn stats(state: &VizState) -> Json {
         ("functions_tracked", Json::num(state.latest.functions_tracked as f64)),
         ("ranks", Json::num(state.latest.ranks.len() as f64)),
         ("timeline_points", Json::num(state.timeline.len() as f64)),
-        ("prov_records", Json::num(state.db.len() as f64)),
-        ("prov_bytes", Json::num(state.db.bytes_written() as f64)),
+        ("prov_records", Json::num(prov_records as f64)),
+        ("prov_bytes", Json::num(prov_bytes as f64)),
     ])
 }
 
@@ -156,6 +180,8 @@ mod tests {
             call_stack(&st, 0, 1, 0),
             top_anomalies(&st, 10),
             stats(&st),
+            provenance(&st, &ProvQuery { anomalies_only: true, ..Default::default() }),
+            metadata(&st),
         ] {
             parse(&j.to_string()).unwrap();
         }

@@ -160,7 +160,7 @@ pub fn call_stack(state: &VizState, app: u32, rank: u32, step: u64) -> String {
 }
 
 /// Render a call-stack view from explicit records (case-study reports).
-pub fn render_call_stack(state: &VizState, recs: &[&ProvRecord], title: &str) -> String {
+pub fn render_call_stack(state: &VizState, recs: &[ProvRecord], title: &str) -> String {
     let mut out = String::new();
     out.push_str(&format!("== Call stack view — {title} ==\n"));
     if recs.is_empty() {
@@ -265,7 +265,7 @@ mod tests {
             n_anomalies: 0,
             ts_range: (0, 0),
         };
-        st.db = db;
+        st.db = crate::viz::ProvSource::local(db);
         st
     }
 

@@ -13,10 +13,16 @@
 //! GET /api/function?app=0&rank=3&step=9
 //! GET /api/callstack?app=0&rank=3&step=9
 //! GET /api/anomalies?limit=20
+//! GET /api/provenance?app=&rank=&fid=&step=&step_lo=&step_hi=&min_score=&label=&anomalies=1&order=score&limit=
+//! GET /api/metadata
 //! GET /view/dashboard|timeline|callstack (ASCII renderings, text/plain)
 //! ```
+//!
+//! Unknown `/api/*` paths return a JSON error object echoing the path;
+//! everything else 404s as plain text.
 
 use super::{api, ascii, RankStat, VizState};
+use crate::provenance::ProvQuery;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -169,6 +175,8 @@ fn route(target: &str, state: &Arc<RwLock<VizState>>) -> (u16, &'static str, Str
                  GET /api/function?app=0&rank=0&step=0\n\
                  GET /api/callstack?app=0&rank=0&step=0\n\
                  GET /api/anomalies?limit=20\n\
+                 GET /api/provenance?app=&rank=&fid=&step=&step_lo=&step_hi=&min_score=&label=&anomalies=1&order=score&limit=\n\
+                 GET /api/metadata\n\
                  GET /api/globalevents\n\
                  GET /view/dashboard  /view/timeline?app=&rank=  /view/callstack?app=&rank=&step=\n\
                  </pre></body></html>\n",
@@ -197,6 +205,40 @@ fn route(target: &str, state: &Arc<RwLock<VizState>>) -> (u16, &'static str, Str
             get_u64("step", 0),
         )),
         "/api/anomalies" => json(api::top_anomalies(&st, get_usize("limit", 20))),
+        "/api/provenance" => {
+            let app = get_u32("app", 0);
+            let pq = ProvQuery {
+                // `app` alone filters by app; with `rank`/`fid` it
+                // scopes those keys (and the standalone filter is then
+                // redundant but consistent).
+                app: q.get("app").and_then(|v| v.parse().ok()),
+                rank: q.get("rank").and_then(|v| v.parse().ok()).map(|r| (app, r)),
+                fid: q.get("fid").and_then(|v| v.parse().ok()).map(|f| (app, f)),
+                step: q.get("step").and_then(|v| v.parse().ok()),
+                step_range: if q.contains_key("step_lo") || q.contains_key("step_hi") {
+                    Some((get_u64("step_lo", 0), get_u64("step_hi", u64::MAX)))
+                } else {
+                    None
+                },
+                ts_range: None,
+                anomalies_only: q
+                    .get("anomalies")
+                    .map(|v| v == "1" || v == "true")
+                    .unwrap_or(false),
+                min_score: q.get("min_score").and_then(|v| v.parse().ok()),
+                label: q.get("label").cloned(),
+                order_by_score: q.get("order").map(|v| v == "score").unwrap_or(false),
+                // Default-bounded: a parameterless request must not
+                // serialize the whole store. `limit=0` asks for all.
+                limit: match q.get("limit").and_then(|v| v.parse().ok()) {
+                    Some(0) => None,
+                    Some(n) => Some(n),
+                    None => Some(100),
+                },
+            };
+            json(api::provenance(&st, &pq))
+        }
+        "/api/metadata" => json(api::metadata(&st)),
         "/api/globalevents" => json(api::global_events(&st)),
         "/view/dashboard" => {
             let stat = q
@@ -214,6 +256,15 @@ fn route(target: &str, state: &Arc<RwLock<VizState>>) -> (u16, &'static str, Str
             200,
             "text/plain",
             ascii::call_stack(&st, get_u32("app", 0), get_u32("rank", 0), get_u64("step", 0)),
+        ),
+        p if p.starts_with("/api/") => (
+            404,
+            "application/json",
+            Json::obj(vec![
+                ("error", Json::str("unknown API path")),
+                ("path", Json::str(p)),
+            ])
+            .to_string(),
         ),
         _ => (404, "text/plain", "not found\n".to_string()),
     }
@@ -285,6 +336,47 @@ mod tests {
         let (code, _) = http_get(addr, "/nope").unwrap();
         assert_eq!(code, 404);
         assert!(srv.request_count() >= 4);
+        srv.stop();
+    }
+
+    #[test]
+    fn unknown_api_path_returns_json_error_with_path() {
+        let mut srv = VizServer::start("127.0.0.1:0", served_state()).unwrap();
+        let (code, body) = http_get(srv.addr(), "/api/definitely-not-a-thing").unwrap();
+        assert_eq!(code, 404);
+        let j = crate::util::json::parse(&body).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("unknown API path"));
+        assert_eq!(
+            j.get("path").unwrap().as_str(),
+            Some("/api/definitely-not-a-thing")
+        );
+        // Non-API paths keep the plain-text 404.
+        let (code, body) = http_get(srv.addr(), "/definitely-not-a-thing").unwrap();
+        assert_eq!(code, 404);
+        assert!(crate::util::json::parse(&body).is_err());
+        srv.stop();
+    }
+
+    #[test]
+    fn provenance_and_metadata_endpoints() {
+        let mut srv = VizServer::start("127.0.0.1:0", served_state()).unwrap();
+        let (code, body) = http_get(
+            srv.addr(),
+            "/api/provenance?rank=0&anomalies=1&order=score&limit=5",
+        )
+        .unwrap();
+        assert_eq!(code, 200);
+        let j = crate::util::json::parse(&body).unwrap();
+        assert_eq!(j.get("count").unwrap().as_u64(), Some(0));
+        // The echoed query reflects the parsed filters.
+        let q = j.get("query").unwrap();
+        assert_eq!(q.get("anomalies_only").unwrap().as_bool(), Some(true));
+        assert_eq!(q.get("limit").unwrap().as_u64(), Some(5));
+        // Empty state: metadata degrades to a JSON error object.
+        let (code, body) = http_get(srv.addr(), "/api/metadata").unwrap();
+        assert_eq!(code, 200);
+        let j = crate::util::json::parse(&body).unwrap();
+        assert!(j.get("error").is_some());
         srv.stop();
     }
 

@@ -15,9 +15,157 @@ pub mod api;
 pub mod ascii;
 pub mod http;
 
-use crate::provenance::ProvDb;
+use crate::provdb::ProvClient;
+use crate::provenance::{ProvDb, ProvQuery, ProvRecord};
 use crate::ps::{RankSummary, VizSnapshot};
 use crate::trace::FuncRegistry;
+use crate::util::json::Json;
+use std::sync::Mutex;
+
+/// Where the viz layer's provenance detail queries go: a local in-process
+/// [`ProvDb`] index (post-mortem `serve`, finished runs) or the networked
+/// provenance database service ([`crate::provdb`]). Either way the query
+/// surface is the same — [`ProvQuery`] filters, call-stack
+/// reconstruction, run metadata — so every endpoint serves both.
+pub enum ProvSource {
+    Local {
+        db: ProvDb,
+        meta: Option<Json>,
+    },
+    /// A provDB service connection plus its address: a failed request
+    /// drops the connection and the next request reconnects, so one
+    /// backend restart never permanently degrades the viz server.
+    Remote {
+        addr: String,
+        client: Mutex<Option<ProvClient>>,
+    },
+}
+
+impl ProvSource {
+    /// Local index, no run metadata.
+    pub fn local(db: ProvDb) -> ProvSource {
+        ProvSource::Local { db, meta: None }
+    }
+
+    /// Local index plus run metadata (loaded from `metadata.json`).
+    pub fn local_with_meta(db: ProvDb, meta: Option<Json>) -> ProvSource {
+        ProvSource::Local { db, meta }
+    }
+
+    /// Proxy queries to the provDB service at `addr`; connects eagerly
+    /// (fail fast on a bad address) and reconnects after failures.
+    pub fn remote(addr: &str) -> anyhow::Result<ProvSource> {
+        let client = ProvClient::connect(addr)?;
+        Ok(ProvSource::Remote {
+            addr: addr.to_string(),
+            client: Mutex::new(Some(client)),
+        })
+    }
+
+    /// Run `op` against the remote connection, (re)connecting as needed.
+    /// On error the connection is dropped so the next call reconnects;
+    /// the caller degrades to an empty result meanwhile.
+    fn with_remote<T>(
+        addr: &str,
+        slot: &Mutex<Option<ProvClient>>,
+        op: impl FnOnce(&mut ProvClient) -> anyhow::Result<T>,
+    ) -> Option<T> {
+        let mut guard = slot.lock().expect("provdb client lock");
+        if guard.is_none() {
+            match ProvClient::connect(addr) {
+                Ok(c) => *guard = Some(c),
+                Err(e) => {
+                    crate::log_warn!("viz", "provdb reconnect to {addr} failed: {e:#}");
+                    return None;
+                }
+            }
+        }
+        let client = guard.as_mut().expect("connection just ensured");
+        match op(client) {
+            Ok(v) => Some(v),
+            Err(e) => {
+                crate::log_warn!("viz", "provdb request failed, dropping connection: {e:#}");
+                *guard = None;
+                None
+            }
+        }
+    }
+
+    /// Run a query; remote errors degrade to an empty result (the HTTP
+    /// layer must not die with a flaky backend).
+    pub fn query(&self, q: &ProvQuery) -> Vec<ProvRecord> {
+        match self {
+            ProvSource::Local { db, .. } => db.query(q).into_iter().cloned().collect(),
+            ProvSource::Remote { addr, client } => {
+                Self::with_remote(addr, client, |c| c.query(q)).unwrap_or_default()
+            }
+        }
+    }
+
+    /// All records of `(app, rank)` for `step`, entry-ordered.
+    pub fn call_stack(&self, app: u32, rank: u32, step: u64) -> Vec<ProvRecord> {
+        match self {
+            ProvSource::Local { db, .. } => {
+                db.call_stack(app, rank, step).into_iter().cloned().collect()
+            }
+            ProvSource::Remote { addr, client } => {
+                Self::with_remote(addr, client, |c| c.call_stack(app, rank, step))
+                    .unwrap_or_default()
+            }
+        }
+    }
+
+    /// Record count (remote: retained records).
+    pub fn len(&self) -> usize {
+        match self {
+            ProvSource::Local { db, .. } => db.len(),
+            ProvSource::Remote { addr, client } => {
+                Self::with_remote(addr, client, |c| c.stats())
+                    .map(|s| s.records as usize)
+                    .unwrap_or(0)
+            }
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `(record count, reduced-output bytes)` in a single backend
+    /// round-trip — `/api/stats` needs both on every request.
+    pub fn counters(&self) -> (usize, u64) {
+        match self {
+            ProvSource::Local { db, .. } => (db.len(), db.bytes_written()),
+            ProvSource::Remote { addr, client } => {
+                Self::with_remote(addr, client, |c| c.stats())
+                    .map(|s| (s.records as usize, s.log_bytes))
+                    .unwrap_or((0, 0))
+            }
+        }
+    }
+
+    /// Reduced-output bytes (remote: total log bytes).
+    pub fn bytes_written(&self) -> u64 {
+        match self {
+            ProvSource::Local { db, .. } => db.bytes_written(),
+            ProvSource::Remote { addr, client } => {
+                Self::with_remote(addr, client, |c| c.stats())
+                    .map(|s| s.log_bytes)
+                    .unwrap_or(0)
+            }
+        }
+    }
+
+    /// Run metadata, if available.
+    pub fn metadata(&self) -> Option<Json> {
+        match self {
+            ProvSource::Local { meta, .. } => meta.clone(),
+            ProvSource::Remote { addr, client } => {
+                Self::with_remote(addr, client, |c| c.metadata()).flatten()
+            }
+        }
+    }
+}
 
 /// Statistic selector for the ranking dashboard (paper Fig 3 offers
 /// average / stddev / maximum / minimum / total).
@@ -72,8 +220,9 @@ pub struct VizState {
     /// Per-rank timeline accumulated from `fresh_steps` of every snapshot:
     /// (app, rank, step, n_anomalies).
     pub timeline: Vec<(u32, u32, u64, u64)>,
-    /// Provenance database for detail queries.
-    pub db: ProvDb,
+    /// Provenance source for detail queries (local index or the
+    /// networked provDB service).
+    pub db: ProvSource,
     /// Per-app function tables.
     pub registries: Vec<FuncRegistry>,
 }
@@ -83,7 +232,7 @@ impl VizState {
         VizState {
             latest: VizSnapshot::default(),
             timeline: Vec::new(),
-            db: ProvDb::in_memory(),
+            db: ProvSource::local(ProvDb::in_memory()),
             registries,
         }
     }
@@ -100,7 +249,7 @@ impl VizState {
             s.ingest(snap.clone());
         }
         s.latest = final_snapshot;
-        s.db = db;
+        s.db = ProvSource::local(db);
         s
     }
 

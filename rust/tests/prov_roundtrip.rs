@@ -1,0 +1,132 @@
+//! Property: `ProvRecord` JSONL serialization and the `ProvDb::load`
+//! index are faithful — write N random records to disk, reload, and the
+//! store answers every query and call-stack request identically to the
+//! original in-memory index.
+
+use chimbuko::provenance::{ProvDb, ProvQuery, ProvRecord};
+use chimbuko::util::prop::{check, Config as PropConfig};
+use chimbuko::util::rng::Rng;
+use std::path::PathBuf;
+
+/// Random record; `entry_us`/`score` ranges are disjoint per `i` so that
+/// global orderings are unambiguous across the per-(app,rank) files
+/// `ProvDb::load` reads back in path order (within one file the relative
+/// order is preserved; across files only the sort keys order records).
+fn record(rng: &mut Rng, i: u64) -> ProvRecord {
+    let entry = i * 1_000 + rng.range_u64(0, 999);
+    let dur = rng.range_u64(1, 5_000);
+    let score = i as f64 * 0.5 + rng.range_f64(0.0, 0.4);
+    let label = ["normal", "anomaly_high", "anomaly_low"][rng.usize(3)];
+    ProvRecord {
+        call_id: i,
+        app: rng.usize(2) as u32,
+        rank: rng.usize(4) as u32,
+        thread: rng.usize(2) as u32,
+        fid: rng.usize(7) as u32,
+        // Exercise the JSON escaping path too.
+        func: format!("FN_{}_\"q\"\n", rng.usize(7)),
+        step: rng.usize(5) as u64,
+        entry_us: entry,
+        exit_us: entry + dur,
+        inclusive_us: dur,
+        exclusive_us: rng.range_u64(0, dur),
+        depth: rng.usize(4) as u32,
+        parent: if rng.chance(0.4) { Some(rng.range_u64(0, 1 << 40)) } else { None },
+        n_children: rng.usize(5) as u32,
+        n_messages: rng.usize(5) as u32,
+        msg_bytes: rng.range_u64(0, 1 << 20),
+        label: label.to_string(),
+        score,
+    }
+}
+
+fn queries() -> Vec<ProvQuery> {
+    let mut qs = vec![
+        ProvQuery::default(),
+        ProvQuery { anomalies_only: true, ..Default::default() },
+        ProvQuery { order_by_score: true, limit: Some(9), ..Default::default() },
+        ProvQuery { min_score: Some(3.0), order_by_score: true, ..Default::default() },
+        ProvQuery { label: Some("anomaly_low".to_string()), ..Default::default() },
+        ProvQuery { step_range: Some((1, 3)), ..Default::default() },
+        ProvQuery { ts_range: Some((5_000, 40_000)), ..Default::default() },
+    ];
+    for app in 0..2u32 {
+        for rank in 0..4u32 {
+            qs.push(ProvQuery { rank: Some((app, rank)), ..Default::default() });
+        }
+        for fid in 0..7u32 {
+            qs.push(ProvQuery { fid: Some((app, fid)), ..Default::default() });
+        }
+    }
+    qs
+}
+
+fn tmpdir(tag: u64) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "chimbuko-prov-rt-{}-{tag}",
+        std::process::id()
+    ))
+}
+
+#[test]
+fn prop_provdb_reload_answers_queries_identically() {
+    check(
+        "provdb-reload-equivalence",
+        PropConfig { cases: 12, seed: 0x90B0, max_size: 120 },
+        |rng, size| {
+            let n = (size as u64).max(4);
+            let dir = tmpdir(rng.range_u64(0, u64::MAX / 2));
+            std::fs::remove_dir_all(&dir).ok();
+            let mut db = ProvDb::create(&dir).map_err(|e| e.to_string())?;
+            for i in 0..n {
+                db.append_record(record(rng, i)).map_err(|e| e.to_string())?;
+            }
+            db.flush().map_err(|e| e.to_string())?;
+
+            let loaded = ProvDb::load(&dir).map_err(|e| e.to_string())?;
+            let result = (|| -> Result<(), String> {
+                if loaded.len() != db.len() {
+                    return Err(format!("len {} vs {}", loaded.len(), db.len()));
+                }
+                if loaded.anomaly_count() != db.anomaly_count() {
+                    return Err("anomaly count diverged".to_string());
+                }
+                if loaded.bytes_written() != db.bytes_written() {
+                    return Err("byte accounting diverged".to_string());
+                }
+                for q in queries() {
+                    let want = db.query(&q);
+                    let got = loaded.query(&q);
+                    if want.len() != got.len() {
+                        return Err(format!(
+                            "query {q:?}: {} vs {} results",
+                            got.len(),
+                            want.len()
+                        ));
+                    }
+                    for (g, w) in got.iter().zip(want.iter()) {
+                        if g != w {
+                            return Err(format!("query {q:?} diverged at call {}", w.call_id));
+                        }
+                    }
+                }
+                for app in 0..2u32 {
+                    for rank in 0..4u32 {
+                        for step in 0..5u64 {
+                            let want = db.call_stack(app, rank, step);
+                            let got = loaded.call_stack(app, rank, step);
+                            if want.len() != got.len()
+                                || got.iter().zip(want.iter()).any(|(g, w)| g != w)
+                            {
+                                return Err(format!("stack ({app},{rank},{step}) diverged"));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            })();
+            std::fs::remove_dir_all(&dir).ok();
+            result
+        },
+    );
+}

@@ -1,0 +1,260 @@
+//! The provDB service acceptance properties:
+//!
+//! 1. **Equivalence** — for any shard count in {1, 2, 4}, the networked
+//!    provenance database answers every `ProvQuery` and call-stack query
+//!    bit-identically to a local `ProvDb` fed the same record stream
+//!    (retention disabled). The stream deliberately contains entry-time
+//!    and score ties so the sequence tie-breaking is pinned, not just the
+//!    primary sort keys.
+//! 2. **End-to-end** — a full driver run with `provdb.addr` configured
+//!    lands every kept record in the service, and the viz HTTP server
+//!    serves `/api/provenance` and `/api/metadata` from it.
+
+use chimbuko::config::Config;
+use chimbuko::coordinator::{run, Mode, Workflow};
+use chimbuko::provdb::{spawn_store, ProvClient, ProvDbTcpServer, Retention};
+use chimbuko::provenance::{ProvDb, ProvQuery, ProvRecord};
+use chimbuko::util::rng::Rng;
+use chimbuko::viz::{http, ProvSource, VizState};
+use std::sync::{Arc, RwLock};
+
+fn record(rng: &mut Rng, i: u64) -> ProvRecord {
+    let app = (i % 2) as u32;
+    let rank = rng.usize(5) as u32;
+    let step = rng.usize(4) as u64;
+    // Deliberate ties: entry times on a coarse grid, scores from a small
+    // set — the sort tie-breaker must match the local index exactly.
+    let entry = rng.range_u64(0, 20) * 1_000;
+    let dur = rng.range_u64(10, 3_000);
+    let score = [0.0, 1.5, 1.5, 6.5, 6.5, 9.0][rng.usize(6)];
+    let label = if score >= 6.0 {
+        if rng.chance(0.5) { "anomaly_high" } else { "anomaly_low" }
+    } else {
+        "normal"
+    };
+    ProvRecord {
+        call_id: i,
+        app,
+        rank,
+        thread: rng.usize(2) as u32,
+        fid: rng.usize(6) as u32,
+        func: format!("FN_{}", rng.usize(6)),
+        step,
+        entry_us: entry,
+        exit_us: entry + dur,
+        inclusive_us: dur,
+        exclusive_us: dur / 2,
+        depth: rng.usize(3) as u32,
+        parent: if rng.chance(0.5) { Some(i.saturating_sub(1)) } else { None },
+        n_children: rng.usize(3) as u32,
+        n_messages: rng.usize(4) as u32,
+        msg_bytes: rng.range_u64(0, 4096),
+        label: label.to_string(),
+        score,
+    }
+}
+
+fn query_battery() -> Vec<ProvQuery> {
+    let mut qs = vec![
+        ProvQuery::default(),
+        ProvQuery { anomalies_only: true, ..Default::default() },
+        ProvQuery { order_by_score: true, ..Default::default() },
+        ProvQuery { order_by_score: true, limit: Some(7), ..Default::default() },
+        ProvQuery { limit: Some(13), ..Default::default() },
+        ProvQuery { min_score: Some(6.0), ..Default::default() },
+        ProvQuery { label: Some("anomaly_low".to_string()), ..Default::default() },
+        ProvQuery { step_range: Some((1, 2)), ..Default::default() },
+        ProvQuery { ts_range: Some((2_000, 9_000)), ..Default::default() },
+        ProvQuery { rank: Some((0, 99)), ..Default::default() }, // missing rank
+        ProvQuery { app: Some(0), ..Default::default() },
+        ProvQuery { app: Some(1), anomalies_only: true, ..Default::default() },
+        ProvQuery { fid: Some((1, 3)), order_by_score: true, ..Default::default() },
+        ProvQuery {
+            anomalies_only: true,
+            order_by_score: true,
+            min_score: Some(1.0),
+            limit: Some(5),
+            ..Default::default()
+        },
+    ];
+    for app in 0..2u32 {
+        for rank in 0..5u32 {
+            qs.push(ProvQuery { rank: Some((app, rank)), ..Default::default() });
+            qs.push(ProvQuery {
+                rank: Some((app, rank)),
+                step: Some(1),
+                ..Default::default()
+            });
+            qs.push(ProvQuery {
+                rank: Some((app, rank)),
+                anomalies_only: true,
+                order_by_score: true,
+                ..Default::default()
+            });
+        }
+        for fid in 0..6u32 {
+            qs.push(ProvQuery { fid: Some((app, fid)), ..Default::default() });
+        }
+    }
+    qs
+}
+
+#[test]
+fn networked_provdb_is_bit_identical_to_local_for_any_shard_count() {
+    let mut rng = Rng::new(0xD0C5);
+    let records: Vec<ProvRecord> = (0..400u64).map(|i| record(&mut rng, i)).collect();
+
+    for shards in [1usize, 2, 4] {
+        let (store, handle) = spawn_store(None, shards, Retention::default()).unwrap();
+        let srv = ProvDbTcpServer::start("127.0.0.1:0", store.clone()).unwrap();
+        let addr = srv.addr().to_string();
+        let mut client = ProvClient::connect_with_batch(&addr, 32).unwrap();
+        assert_eq!(client.shard_count(), shards);
+
+        let mut local = ProvDb::in_memory();
+        for r in &records {
+            local.append_record(r.clone()).unwrap();
+            client.append(r).unwrap();
+        }
+        client.flush().unwrap();
+
+        for (qi, q) in query_battery().iter().enumerate() {
+            let want: Vec<&ProvRecord> = local.query(q);
+            let got = client.query(q).unwrap();
+            assert_eq!(
+                got.len(),
+                want.len(),
+                "shards={shards} query #{qi} {q:?}: {} vs {}",
+                got.len(),
+                want.len()
+            );
+            for (g, w) in got.iter().zip(want.iter()) {
+                assert_eq!(g, *w, "shards={shards} query #{qi} {q:?} diverged");
+            }
+        }
+
+        // Call-stack reconstruction for every (app, rank, step) — plus
+        // holes that must come back empty.
+        for app in 0..2u32 {
+            for rank in 0..6u32 {
+                for step in 0..5u64 {
+                    let want: Vec<&ProvRecord> = local.call_stack(app, rank, step);
+                    let got = client.call_stack(app, rank, step).unwrap();
+                    assert_eq!(got.len(), want.len(), "stack ({app},{rank},{step})");
+                    for (g, w) in got.iter().zip(want.iter()) {
+                        assert_eq!(g, *w, "stack ({app},{rank},{step}) diverged");
+                    }
+                }
+            }
+        }
+
+        // Aggregate counters agree with the local index.
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.records, local.len() as u64, "shards={shards}");
+        assert_eq!(stats.anomalies, local.anomaly_count(), "shards={shards}");
+        assert_eq!(stats.log_bytes, local.bytes_written(), "shards={shards}");
+        assert_eq!(stats.evicted, 0);
+
+        drop(srv);
+        handle.join();
+    }
+}
+
+#[test]
+fn driver_run_with_provdb_serves_provenance_over_http() {
+    // Spin up the service the way `chimbuko provdb-server` would…
+    let (store, handle) = spawn_store(None, 2, Retention::default()).unwrap();
+    let srv = ProvDbTcpServer::start("127.0.0.1:0", store.clone()).unwrap();
+    let addr = srv.addr().to_string();
+
+    // …run a workflow writing to it…
+    let cfg = Config {
+        ranks: 8,
+        apps: 2,
+        steps: 12,
+        calls_per_step: 130,
+        out_dir: String::new(),
+        provdb_addr: addr.clone(),
+        provdb_batch: 16,
+        ..Config::default()
+    };
+    let w = Workflow::nwchem(&cfg);
+    let report = run(&cfg, &w, Mode::TauChimbuko).unwrap();
+    assert!(report.total_anomalies > 0);
+    assert!(report.total_kept > 0);
+    assert!(report.reduced_bytes > 0, "service log bytes must be collected");
+
+    // Every kept record landed in the service.
+    let stats = store.stats();
+    assert_eq!(stats.records, report.total_kept);
+    assert_eq!(stats.anomalies, report.total_anomalies);
+
+    // …and serve the viz API from the service (the `serve --provdb` path).
+    let mut state = VizState::new(w.registries.clone());
+    state.db = ProvSource::remote(&addr).unwrap();
+    let viz = http::VizServer::start("127.0.0.1:0", Arc::new(RwLock::new(state))).unwrap();
+
+    let (code, body) =
+        http::http_get(viz.addr(), "/api/provenance?anomalies=1&order=score&limit=10").unwrap();
+    assert_eq!(code, 200);
+    let j = chimbuko::util::json::parse(&body).unwrap();
+    let n = j.get("count").unwrap().as_u64().unwrap();
+    assert!(n > 0 && n <= 10, "count {n}");
+    let recs = j.get("records").unwrap().as_arr().unwrap();
+    assert_eq!(recs.len(), n as usize);
+    assert!(recs
+        .iter()
+        .all(|r| r.get("label").unwrap().as_str() != Some("normal")));
+
+    // Run metadata written by the driver comes back through the proxy.
+    let (code, body) = http::http_get(viz.addr(), "/api/metadata").unwrap();
+    assert_eq!(code, 200);
+    let meta = chimbuko::util::json::parse(&body).unwrap();
+    let run_id = meta.get("run_id").unwrap().as_str().unwrap();
+    assert!(run_id.starts_with("run-seed"), "run_id {run_id}");
+    assert!(meta.get("config").is_some());
+
+    // A rank drill-down matches the service directly.
+    let direct = store.call_stack(0, 0, 3);
+    let (code, body) =
+        http::http_get(viz.addr(), "/api/callstack?app=0&rank=0&step=3").unwrap();
+    assert_eq!(code, 200);
+    let j = chimbuko::util::json::parse(&body).unwrap();
+    assert_eq!(
+        j.get("executions").unwrap().as_arr().unwrap().len(),
+        direct.len()
+    );
+
+    drop(viz);
+    drop(srv);
+    handle.join();
+}
+
+#[test]
+fn retention_bounds_a_driver_run() {
+    // Tight retention: the service stays bounded while the run's full
+    // kept count keeps flowing through the log accounting.
+    let (store, handle) =
+        spawn_store(None, 2, Retention { max_records_per_rank: 10 }).unwrap();
+    let srv = ProvDbTcpServer::start("127.0.0.1:0", store.clone()).unwrap();
+    let cfg = Config {
+        ranks: 6,
+        apps: 2,
+        steps: 15,
+        calls_per_step: 130,
+        out_dir: String::new(),
+        provdb_addr: srv.addr().to_string(),
+        ..Config::default()
+    };
+    let w = Workflow::nwchem(&cfg);
+    let report = run(&cfg, &w, Mode::TauChimbuko).unwrap();
+    let stats = store.stats();
+    assert_eq!(stats.records + stats.evicted, report.total_kept);
+    assert!(stats.records <= 6 * 10, "retained {}", stats.records);
+    if report.total_kept > 60 {
+        assert!(stats.evicted > 0);
+        assert!(stats.resident_bytes < stats.log_bytes);
+    }
+    drop(srv);
+    handle.join();
+}
