@@ -61,7 +61,31 @@ fn main() {
         at4.syncs_per_sec,
         at4.syncs_per_sec / first.syncs_per_sec.max(1e-9)
     );
+
+    // --- PS endpoint sweep: per-shard TCP endpoints (multi-process shape) --
+    let endpoint_counts: Vec<usize> = if fast { vec![1, 2] } else { vec![1, 2, 4, 8] };
+    let (ep_clients, ep_syncs) = if fast { (4, 100) } else { (8, 500) };
+    println!(
+        "\nPS endpoint sweep: endpoints {:?}, {} routed TCP clients x {} syncs x {} funcs/delta\n",
+        endpoint_counts, ep_clients, ep_syncs, funcs
+    );
+    let eps = chimbuko::exp::run_ps_endpoint_sweep(&endpoint_counts, ep_clients, ep_syncs, funcs, 7)
+        .expect("endpoint sweep");
+    print!("{}", eps.render());
+    let ep_first = eps.rows.first().unwrap();
+    let ep_last = eps.rows.last().unwrap();
+    println!(
+        "shape check: sync throughput 1 → {} endpoints: {:.0} → {:.0} syncs/s ({:.2}x); \
+         aggregator messages per sync: {:.3} (gated; was 1.0 pre-gating)",
+        ep_last.endpoints,
+        ep_first.syncs_per_sec,
+        ep_last.syncs_per_sec,
+        ep_last.syncs_per_sec / ep_first.syncs_per_sec.max(1e-9),
+        ep_last.agg_msgs_per_sync,
+    );
+
     let out = "BENCH_ps_shards.json";
-    std::fs::write(out, sweep.to_json().to_pretty()).expect("writing BENCH_ps_shards.json");
+    std::fs::write(out, chimbuko::exp::ps_bench_json(&sweep, &eps).to_pretty())
+        .expect("writing BENCH_ps_shards.json");
     println!("wrote {out}");
 }

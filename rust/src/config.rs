@@ -99,6 +99,15 @@ pub struct Config {
     /// Parameter-server stat shards (hash-routed threads; 1 = the
     /// single-consumer layout, >1 scales sync throughput with cores).
     pub ps_shards: usize,
+    /// Remote PS shard endpoints (`ps-shard-server` addresses,
+    /// comma-separated in config; index == shard id). Non-empty switches
+    /// the PS to the multi-process topology: stat shards live in those
+    /// processes and this process keeps only the aggregator/front-end.
+    pub ps_endpoints: Vec<String>,
+    /// Wall-clock viz publish cadence in milliseconds (the paper's 1 s);
+    /// 0 disables. Runs alongside the report-count cadence so viz
+    /// freshness is decoupled from rank count.
+    pub publish_interval_ms: u64,
     /// Provenance database service address ("host:port"); when non-empty
     /// the AD modules write records there over TCP instead of the local
     /// per-worker store, and the viz layer queries it on demand.
@@ -153,6 +162,8 @@ impl Default for Config {
             k_neighbors: 5,
             ps_period_steps: 1,
             ps_shards: 4,
+            ps_endpoints: Vec::new(),
+            publish_interval_ms: 0,
             provdb_addr: String::new(),
             provdb_shards: 4,
             provdb_batch: 64,
@@ -215,6 +226,14 @@ impl Config {
             "ad.func_capacity" => self.func_capacity = v.parse()?,
             "ps.period_steps" => self.ps_period_steps = v.parse()?,
             "ps.shards" => self.ps_shards = v.parse()?,
+            "ps.endpoints" => {
+                self.ps_endpoints = v
+                    .split(',')
+                    .map(|s| s.trim().trim_matches('"').to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+            }
+            "ps.publish_interval_ms" => self.publish_interval_ms = v.parse()?,
             "provdb.addr" => self.provdb_addr = v.to_string(),
             "provdb.shards" => self.provdb_shards = v.parse()?,
             "provdb.batch" => self.provdb_batch = v.parse()?,
@@ -274,6 +293,8 @@ impl Config {
             ("k_neighbors", Json::num(self.k_neighbors as f64)),
             ("ps_period_steps", Json::num(self.ps_period_steps as f64)),
             ("ps_shards", Json::num(self.ps_shards as f64)),
+            ("ps_endpoints", Json::str(&self.ps_endpoints.join(","))),
+            ("ps_publish_interval_ms", Json::num(self.publish_interval_ms as f64)),
             ("provdb_addr", Json::str(&self.provdb_addr)),
             ("provdb_shards", Json::num(self.provdb_shards as f64)),
             ("provdb_max_records_per_rank", Json::num(self.provdb_max_per_rank as f64)),
@@ -379,6 +400,29 @@ enabled = false
     #[test]
     fn unknown_key_rejected() {
         assert!(Config::from_str("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn ps_topology_keys_parse() {
+        let text = r#"
+[ps]
+shards = 2
+endpoints = 127.0.0.1:5561, 127.0.0.1:5562
+publish_interval_ms = 1000
+"#;
+        let c = Config::from_str(text).unwrap();
+        assert_eq!(c.ps_shards, 2);
+        assert_eq!(c.ps_endpoints, vec!["127.0.0.1:5561", "127.0.0.1:5562"]);
+        assert_eq!(c.publish_interval_ms, 1000);
+        // Defaults: in-process shards, wall-clock cadence off.
+        assert!(Config::default().ps_endpoints.is_empty());
+        assert_eq!(Config::default().publish_interval_ms, 0);
+        // The endpoint list round-trips through the JSON dump.
+        let j = c.to_json();
+        assert_eq!(
+            j.get("ps_endpoints").unwrap().as_str(),
+            Some("127.0.0.1:5561,127.0.0.1:5562")
+        );
     }
 
     #[test]

@@ -219,12 +219,23 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
         };
 
     // Parameter server + viz collector (Chimbuko mode only). Publish
-    // cadence is one snapshot per step-round; the per-step report quorum
-    // is the number of reporting ranks — independent knobs (conflating
-    // them completes global-event steps early/late).
+    // cadence is one snapshot per step-round (plus the optional
+    // wall-clock cadence); the per-step report quorum is the number of
+    // reporting ranks — independent knobs (conflating them completes
+    // global-event steps early/late). With `ps.endpoints` configured the
+    // stat shards are remote `ps-shard-server` processes and only the
+    // aggregator/front-end runs here.
     let (viz_tx, viz_rx) = channel::<VizSnapshot>();
     let (ps_client, ps_handle) = if mode == Mode::TauChimbuko {
-        let (c, h) = ps::spawn(cfg.ps_shards, Some(viz_tx), cfg.ranks.max(1), cfg.ranks);
+        let (c, h) = ps::spawn_with(ps::PsOpts {
+            shards: cfg.ps_shards,
+            endpoints: cfg.ps_endpoints.clone(),
+            viz_tx: Some(viz_tx),
+            publish_every: cfg.ranks.max(1),
+            publish_interval_ms: cfg.publish_interval_ms,
+            reports_per_step: cfg.ranks,
+        })
+        .context("spawning parameter server")?;
         (Some(c), Some(h))
     } else {
         drop(viz_tx);

@@ -193,6 +193,10 @@ pub struct ShardSweepRow {
     pub p50_us: f64,
     pub p99_us: f64,
     pub total_syncs: u64,
+    /// Aggregator event-fetch messages per sync. Version gating holds
+    /// this at ~0 in the no-events steady state (it was 1.0 before the
+    /// gate — one fetch round-trip per routed sync).
+    pub agg_msgs_per_sync: f64,
     pub wall_seconds: f64,
 }
 
@@ -208,7 +212,7 @@ impl ShardSweepResult {
     pub fn render(&self) -> String {
         let mut t = Table::new(
             "PS shard sweep — sync throughput vs shard count",
-            &["shards", "syncs/s", "p50(µs)", "p99(µs)", "total syncs", "wall(s)"],
+            &["shards", "syncs/s", "p50(µs)", "p99(µs)", "total syncs", "agg msg/sync", "wall(s)"],
         );
         for r in &self.rows {
             t.row(vec![
@@ -217,6 +221,7 @@ impl ShardSweepResult {
                 format!("{:.1}", r.p50_us),
                 format!("{:.1}", r.p99_us),
                 r.total_syncs.to_string(),
+                format!("{:.3}", r.agg_msgs_per_sync),
                 format!("{:.3}", r.wall_seconds),
             ]);
         }
@@ -234,25 +239,30 @@ impl ShardSweepResult {
             ("bench", Json::str("ps_shards")),
             ("clients", Json::num(self.clients as f64)),
             ("funcs_per_sync", Json::num(self.funcs_per_sync as f64)),
-            (
-                "rows",
-                Json::arr(
-                    self.rows
-                        .iter()
-                        .map(|r| {
-                            Json::obj(vec![
-                                ("shards", Json::num(r.shards as f64)),
-                                ("syncs_per_sec", Json::num(r.syncs_per_sec)),
-                                ("p50_us", Json::num(r.p50_us)),
-                                ("p99_us", Json::num(r.p99_us)),
-                                ("total_syncs", Json::num(r.total_syncs as f64)),
-                                ("wall_seconds", Json::num(r.wall_seconds)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
+            ("rows", self.rows_json()),
         ])
+    }
+
+    /// Just the per-shard-count rows (used when composing the combined
+    /// `BENCH_ps_shards.json` artifact with the endpoint sweep).
+    pub fn rows_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::arr(
+            self.rows
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("shards", Json::num(r.shards as f64)),
+                        ("syncs_per_sec", Json::num(r.syncs_per_sec)),
+                        ("p50_us", Json::num(r.p50_us)),
+                        ("p99_us", Json::num(r.p99_us)),
+                        ("total_syncs", Json::num(r.total_syncs as f64)),
+                        ("agg_msgs_per_sync", Json::num(r.agg_msgs_per_sync)),
+                        ("wall_seconds", Json::num(r.wall_seconds)),
+                    ])
+                })
+                .collect(),
+        )
     }
 }
 
@@ -296,6 +306,7 @@ pub fn run_ps_shard_sweep(
             lat_us.extend(j.join().expect("sweep client panicked"));
         }
         let wall = t0.elapsed().as_secs_f64();
+        let agg_fetches = client.agg_fetch_count();
         client.shutdown();
         let fin = handle.join();
         let total_syncs = fin.sync_count;
@@ -305,10 +316,182 @@ pub fn run_ps_shard_sweep(
             p50_us: crate::util::percentile(&lat_us, 50.0),
             p99_us: crate::util::percentile(&lat_us, 99.0),
             total_syncs,
+            agg_msgs_per_sync: agg_fetches as f64 / (total_syncs as f64).max(1.0),
             wall_seconds: wall,
         });
     }
     ShardSweepResult { rows, clients, funcs_per_sync }
+}
+
+/// One point of the PS *endpoint* sweep: the same concurrent sync load,
+/// but every stat shard behind its own TCP endpoint (the multi-process
+/// topology, in-process for the bench) and routed clients connected
+/// through a front-end hello.
+#[derive(Clone, Debug)]
+pub struct EndpointSweepRow {
+    pub endpoints: usize,
+    pub syncs_per_sec: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub total_syncs: u64,
+    /// Aggregator messages per sync across all clients — the acceptance
+    /// number for event-fetch gating (~0 with no events flowing).
+    pub agg_msgs_per_sync: f64,
+    pub wall_seconds: f64,
+}
+
+/// Result of the endpoint sweep (appended to `BENCH_ps_shards.json`).
+#[derive(Clone, Debug)]
+pub struct EndpointSweepResult {
+    pub rows: Vec<EndpointSweepRow>,
+    pub clients: usize,
+    pub funcs_per_sync: usize,
+}
+
+impl EndpointSweepResult {
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "PS endpoint sweep — sync throughput vs TCP endpoint count",
+            &[
+                "endpoints",
+                "syncs/s",
+                "p50(µs)",
+                "p99(µs)",
+                "total syncs",
+                "agg msg/sync",
+                "wall(s)",
+            ],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                r.endpoints.to_string(),
+                format!("{:.0}", r.syncs_per_sec),
+                format!("{:.1}", r.p50_us),
+                format!("{:.1}", r.p99_us),
+                r.total_syncs.to_string(),
+                format!("{:.3}", r.agg_msgs_per_sync),
+                format!("{:.3}", r.wall_seconds),
+            ]);
+        }
+        format!(
+            "{}({} routed TCP clients, {} functions per sync delta)\n",
+            t.render(),
+            self.clients,
+            self.funcs_per_sync
+        )
+    }
+
+    pub fn rows_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::arr(
+            self.rows
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("endpoints", Json::num(r.endpoints as f64)),
+                        ("syncs_per_sec", Json::num(r.syncs_per_sec)),
+                        ("p50_us", Json::num(r.p50_us)),
+                        ("p99_us", Json::num(r.p99_us)),
+                        ("total_syncs", Json::num(r.total_syncs as f64)),
+                        ("agg_msgs_per_sync", Json::num(r.agg_msgs_per_sync)),
+                        ("wall_seconds", Json::num(r.wall_seconds)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// The combined `BENCH_ps_shards.json` payload: the in-process shard
+/// sweep plus the per-endpoint TCP sweep, so the perf trajectory of both
+/// layouts lives in one artifact across PRs.
+pub fn ps_bench_json(
+    shards: &ShardSweepResult,
+    endpoints: &EndpointSweepResult,
+) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        ("bench", Json::str("ps_shards")),
+        ("clients", Json::num(shards.clients as f64)),
+        ("funcs_per_sync", Json::num(shards.funcs_per_sync as f64)),
+        ("rows", shards.rows_json()),
+        ("endpoint_clients", Json::num(endpoints.clients as f64)),
+        ("endpoint_funcs_per_sync", Json::num(endpoints.funcs_per_sync as f64)),
+        ("endpoint_rows", endpoints.rows_json()),
+    ])
+}
+
+/// Sweep PS TCP *endpoint* counts under a fixed concurrent sync load:
+/// for each count E, every stat shard is served at its own TCP endpoint
+/// and a front-end announces the shard→addr map; `clients` routed
+/// clients each issue `syncs_per_client` syncs touching `funcs_per_sync`
+/// functions. Fig 7's deployment argument, measured end to end: sync
+/// throughput scales with endpoints while the aggregator sees ~0
+/// messages per sync (version-gated event fetch, no events flowing).
+pub fn run_ps_endpoint_sweep(
+    endpoint_counts: &[usize],
+    clients: usize,
+    syncs_per_client: usize,
+    funcs_per_sync: usize,
+    seed: u64,
+) -> anyhow::Result<EndpointSweepResult> {
+    let mut rows = Vec::new();
+    for &endpoints in endpoint_counts {
+        let (local_client, handle) = ps::spawn(endpoints, None, usize::MAX >> 1, clients.max(1));
+        let shard_srvs = handle.serve_shard_endpoints()?;
+        let addrs: Vec<String> = shard_srvs.iter().map(|s| s.addr().to_string()).collect();
+        let front = crate::ps::net::PsTcpServer::start_with_topology(
+            "127.0.0.1:0",
+            local_client.clone(),
+            addrs,
+        )?;
+        let front_addr = front.addr().to_string();
+        let t0 = Instant::now();
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let addr = front_addr.clone();
+            let mut rng = Rng::new(seed ^ (c as u64).wrapping_mul(0x9E37_79B9));
+            joins.push(std::thread::spawn(move || {
+                let cl = crate::ps::PsClient::connect(&addr).expect("routed client connect");
+                let mut lat_us = Vec::with_capacity(syncs_per_client);
+                for _ in 0..syncs_per_client {
+                    let mut delta = crate::stats::StatsTable::new();
+                    for f in 0..funcs_per_sync {
+                        delta.push(f as u32, rng.lognormal(6.0, 0.5));
+                    }
+                    let t = Instant::now();
+                    let (global, _) = cl.sync(0, c as u32, &delta);
+                    lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+                    assert_eq!(global.len(), funcs_per_sync, "reply must cover the delta");
+                }
+                (lat_us, cl.agg_fetch_count(), cl.sync_count_value())
+            }));
+        }
+        let mut lat_us: Vec<f64> = Vec::with_capacity(clients * syncs_per_client);
+        let mut agg_fetches = 0u64;
+        let mut total_syncs = 0u64;
+        for j in joins {
+            let (lat, fetches, syncs) = j.join().expect("endpoint sweep client panicked");
+            lat_us.extend(lat);
+            agg_fetches += fetches;
+            total_syncs += syncs;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        drop(front);
+        drop(shard_srvs);
+        local_client.shutdown();
+        handle.join();
+        rows.push(EndpointSweepRow {
+            endpoints,
+            syncs_per_sec: total_syncs as f64 / wall.max(1e-9),
+            p50_us: crate::util::percentile(&lat_us, 50.0),
+            p99_us: crate::util::percentile(&lat_us, 99.0),
+            total_syncs,
+            agg_msgs_per_sync: agg_fetches as f64 / (total_syncs as f64).max(1.0),
+            wall_seconds: wall,
+        });
+    }
+    Ok(EndpointSweepResult { rows, clients, funcs_per_sync })
 }
 
 #[cfg(test)]
@@ -355,6 +538,9 @@ mod tests {
             assert!(row.syncs_per_sec > 0.0);
             assert!(row.p50_us > 0.0);
             assert!(row.p99_us >= row.p50_us);
+            // Sync-only load: the version gate keeps the aggregator
+            // completely out of the sync path.
+            assert_eq!(row.agg_msgs_per_sync, 0.0, "gating must zero the fetch leg");
         }
         let text = res.render();
         assert!(text.contains("PS shard sweep"));
@@ -362,5 +548,28 @@ mod tests {
         assert_eq!(json.get("bench").unwrap().as_str(), Some("ps_shards"));
         assert_eq!(json.get("rows").unwrap().as_arr().unwrap().len(), 2);
         crate::util::json::parse(&json.to_pretty()).unwrap();
+    }
+
+    #[test]
+    fn endpoint_sweep_produces_rows_and_combined_json() {
+        let shards = run_ps_shard_sweep(&[1], 2, 10, 16, 11);
+        let eps = run_ps_endpoint_sweep(&[1, 2], 2, 10, 16, 11).unwrap();
+        assert_eq!(eps.rows.len(), 2);
+        for row in &eps.rows {
+            assert_eq!(row.total_syncs, 2 * 10);
+            assert!(row.syncs_per_sec > 0.0);
+            assert!(row.p99_us >= row.p50_us);
+            assert_eq!(
+                row.agg_msgs_per_sync, 0.0,
+                "no events → routed TCP clients never message the aggregator"
+            );
+        }
+        let text = eps.render();
+        assert!(text.contains("PS endpoint sweep"));
+        let combined = ps_bench_json(&shards, &eps);
+        assert_eq!(combined.get("bench").unwrap().as_str(), Some("ps_shards"));
+        assert_eq!(combined.get("rows").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(combined.get("endpoint_rows").unwrap().as_arr().unwrap().len(), 2);
+        crate::util::json::parse(&combined.to_pretty()).unwrap();
     }
 }

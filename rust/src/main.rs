@@ -2,15 +2,20 @@
 //!
 //! ```text
 //! chimbuko run      [--config f] [--ranks N] [--steps N] [--backend rust|xla]
-//!                   [--ps-shards N] [--out dir] [--provdb host:port]
-//!                   [--unfiltered] [--serve]
+//!                   [--ps-shards N] [--ps-endpoints a,b,…] [--out dir]
+//!                   [--provdb host:port] [--unfiltered] [--serve]
 //! chimbuko gen      [--ranks N] [--steps N] [--out trace.bp] [--unfiltered]
 //! chimbuko replay   --dir <out_dir>        re-index a stored run, print stats
 //! chimbuko serve    --dir <out_dir> | --provdb host:port  [--addr host:port]
 //!                   viz server over a stored run or a live provDB service
 //! chimbuko exp      <fig7|fig8|fig9|viz|case> [--fast]    paper experiments
 //! chimbuko compare  --a <dir> --b <dir>    cross-run provenance mining
-//! chimbuko ps-server [--addr host:port] [--shards N] [--ranks N]  standalone TCP parameter server
+//! chimbuko ps-server [--addr host:port] [--shards N] [--ranks N]
+//!                   [--endpoints a,b,…] [--publish-interval-ms N]
+//!                   standalone TCP parameter server (front-end when
+//!                   --endpoints lists ps-shard-server addresses)
+//! chimbuko ps-shard-server --shard-id I --shards N [--addr host:port]
+//!                   one stat shard of a multi-process parameter server
 //! chimbuko provdb-server [--addr host:port] [--shards N] [--dir d]
 //!                   [--max-records-per-rank N]  standalone provenance database
 //! chimbuko analyze  --bp trace.bp [--out dir] [--algorithm hbos]  offline re-analysis
@@ -38,6 +43,7 @@ fn main() {
         Some("exp") => cmd_exp(&args),
         Some("compare") => cmd_compare(&args),
         Some("ps-server") => cmd_ps_server(&args),
+        Some("ps-shard-server") => cmd_ps_shard_server(&args),
         Some("provdb-server") => cmd_provdb_server(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("version") => {
@@ -46,7 +52,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: chimbuko <run|gen|replay|serve|exp|compare|ps-server|provdb-server|analyze|version> [options]\n\
+                "usage: chimbuko <run|gen|replay|serve|exp|compare|ps-server|ps-shard-server|provdb-server|analyze|version> [options]\n\
                  see `rust/src/main.rs` header or README for options"
             );
             std::process::exit(2);
@@ -89,6 +95,12 @@ fn config_of(args: &Args) -> anyhow::Result<Config> {
     }
     if let Some(v) = args.get("ps-shards") {
         cfg.apply("ps.shards", v)?;
+    }
+    if let Some(v) = args.get("ps-endpoints") {
+        cfg.apply("ps.endpoints", v)?;
+    }
+    if let Some(v) = args.get("publish-interval-ms") {
+        cfg.apply("ps.publish_interval_ms", v)?;
     }
     if let Some(v) = args.get("provdb") {
         cfg.apply("provdb.addr", v)?;
@@ -282,20 +294,65 @@ fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
 /// global-event detection degrades rather than the server leaking); too
 /// low and steps complete early on partial totals.
 fn cmd_ps_server(args: &Args) -> anyhow::Result<()> {
+    use std::io::Write;
     let addr = args.str_opt("addr", "127.0.0.1:5559");
-    let shards = args.usize_opt("shards", 4);
-    let (client, _handle) = chimbuko::ps::spawn(
+    let endpoints: Vec<String> = args
+        .str_opt("endpoints", "")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let shards = if endpoints.is_empty() { args.usize_opt("shards", 4) } else { endpoints.len() };
+    let (client, _handle) = chimbuko::ps::spawn_with(chimbuko::ps::PsOpts {
         shards,
-        None,
-        args.usize_opt("publish-every", 64),
-        args.usize_opt("ranks", 64),
-    );
-    let server = chimbuko::ps::net::PsTcpServer::start(&addr, client)?;
+        endpoints: endpoints.clone(),
+        viz_tx: None,
+        publish_every: args.usize_opt("publish-every", 64),
+        publish_interval_ms: args.u64_opt("publish-interval-ms", 0),
+        reports_per_step: args.usize_opt("ranks", 64),
+    })?;
+    let server =
+        chimbuko::ps::net::PsTcpServer::start_with_topology(&addr, client, endpoints.clone())?;
     println!(
-        "parameter server on {} ({} shards) — Ctrl-C to stop",
+        "parameter server on {} ({} shards{}) — Ctrl-C to stop",
         server.addr(),
-        shards
+        shards,
+        if endpoints.is_empty() {
+            String::new()
+        } else {
+            format!(", endpoints {}", endpoints.join(","))
+        },
     );
+    // Line-buffered only on a terminal: flush so a parent process
+    // scraping the address (e2e smoke test) sees it immediately.
+    std::io::stdout().flush().ok();
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// One stat shard of a multi-process parameter server: owns the
+/// `shard_of(app, fid, N) == I` partition, serves shard-sync frames at
+/// its own endpoint, and mirrors the aggregator's event version (pushed
+/// by the front-end) into its sync replies. Pair with
+/// `ps-server --endpoints` listing every shard's address.
+fn cmd_ps_shard_server(args: &Args) -> anyhow::Result<()> {
+    use std::io::Write;
+    let addr = args.str_opt("addr", "127.0.0.1:5561");
+    let shard_id = args.usize_opt("shard-id", 0);
+    let shards = args.usize_opt("shards", 1);
+    let server = chimbuko::ps::net::PsShardTcpServer::spawn_standalone(
+        &addr,
+        shard_id as u32,
+        shards as u32,
+    )?;
+    println!(
+        "ps-shard-server shard {}/{} listening on {} — Ctrl-C to stop",
+        shard_id,
+        shards,
+        server.addr()
+    );
+    std::io::stdout().flush().ok();
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -351,7 +408,7 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
         .map(|s| s.as_str())
         .unwrap_or("all");
     let fast = args.flag("fast");
-    let run_fig7 = || {
+    let run_fig7 = || -> anyhow::Result<()> {
         let scales: Vec<usize> = args
             .u64_list("scales", &[10, 20, 40, 60, 80, 100])
             .iter()
@@ -373,6 +430,23 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
             args.u64_opt("seed", 7),
         );
         print!("{}", sweep.render());
+        // NB: named --endpoint-counts, not --ps-endpoints: the latter is
+        // a list of shard-server *addresses* on `run`/`ps-server`, while
+        // this sweep takes endpoint *counts*.
+        let endpoint_counts: Vec<usize> = args
+            .u64_list("endpoint-counts", if fast { &[1, 2] } else { &[1, 2, 4, 8] })
+            .iter()
+            .map(|&x| x as usize)
+            .collect();
+        let eps = chimbuko::exp::run_ps_endpoint_sweep(
+            &endpoint_counts,
+            if fast { 4 } else { 8 },
+            if fast { 100 } else { 500 },
+            if fast { 64 } else { 128 },
+            args.u64_opt("seed", 7),
+        )?;
+        print!("{}", eps.render());
+        Ok(())
     };
     let run_fig8 = || -> anyhow::Result<()> {
         let scales: Vec<usize> = args
@@ -428,13 +502,13 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
         Ok(())
     };
     match which {
-        "fig7" => run_fig7(),
+        "fig7" => run_fig7()?,
         "fig8" | "table1" => run_fig8()?,
         "fig9" => run_fig9()?,
         "viz" | "figs3-6" => run_viz()?,
         "case" | "figs10-13" => run_case()?,
         "all" => {
-            run_fig7();
+            run_fig7()?;
             run_fig8()?;
             run_fig9()?;
             run_viz()?;

@@ -44,11 +44,11 @@ use crate::ad::Labeled;
 use crate::provenance::{ProvQuery, ProvRecord};
 use crate::trace::FuncRegistry;
 use crate::util::json::{parse, Json};
+use crate::util::net::{serve_tcp, TcpServerHandle};
 use crate::util::wire::{put_str, read_msg, write_msg, Cursor};
 use anyhow::{bail, Context, Result};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::net::TcpStream;
+use std::sync::Mutex;
 
 const KIND_HELLO: u8 = 1;
 const KIND_WRITE: u8 = 2;
@@ -63,57 +63,32 @@ const KIND_FLUSH: u8 = 8;
 pub const DEFAULT_BATCH: usize = 64;
 
 /// TCP front-end for a provenance database; forwards to a [`ProvStore`].
+/// The accept loop is the shared [`serve_tcp`] substrate (one handler
+/// thread per connection, all sharing the store's shard constellation).
 pub struct ProvDbTcpServer {
-    addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    join: Option<std::thread::JoinHandle<()>>,
+    inner: TcpServerHandle,
 }
 
 impl ProvDbTcpServer {
-    /// Bind and serve; each connection is one writer or reader (thread
-    /// per conn, all sharing the store's shard constellation).
+    /// Bind and serve; each connection is one writer or reader.
     pub fn start(addr: &str, store: ProvStore) -> Result<ProvDbTcpServer> {
-        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-        listener.set_nonblocking(true)?;
-        let local = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let join = std::thread::Builder::new()
-            .name("chimbuko-provdb-tcp".into())
-            .spawn(move || {
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let s = store.clone();
-                            std::thread::spawn(move || {
-                                let _ = serve_conn(stream, s);
-                            });
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(5));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })?;
-        Ok(ProvDbTcpServer { addr: local, stop, join: Some(join) })
+        // The handler is shared across connection threads; clone the
+        // store out from under a mutex per connection (ProvStore is
+        // Send, and this keeps no Sync requirement on its internals).
+        let store = Mutex::new(store);
+        let inner = serve_tcp("chimbuko-provdb-tcp", addr, move |stream| {
+            let s = store.lock().expect("provdb store lock").clone();
+            let _ = serve_conn(stream, s);
+        })?;
+        Ok(ProvDbTcpServer { inner })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
-        self.addr
+        self.inner.addr()
     }
 
     pub fn stop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-    }
-}
-
-impl Drop for ProvDbTcpServer {
-    fn drop(&mut self) {
-        self.stop();
+        self.inner.stop();
     }
 }
 

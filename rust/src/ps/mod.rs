@@ -30,30 +30,34 @@
 //!
 //! ## Routing protocol
 //!
-//! [`PsClient`](shard::PsClient) is a router: `sync` splits the rank's
-//! delta by `shard_of`, batches each shard's sub-delta into a single
-//! message, fans them out, fetches undelivered global events from the
-//! aggregator, and reassembles the reply (global stats for the touched
-//! functions + fresh global events) client-side. The TCP front-end
-//! ([`net`]) carries the same grouping on the wire: a client learns the
-//! server's shard count from a hello handshake and ships per-shard
-//! groups, which the server validates and forwards without
-//! re-partitioning.
+//! [`PsClient`](shard::PsClient) is a router over *pluggable per-shard
+//! connections* (in-process channels or per-shard TCP endpoints — see
+//! [`net`] and `docs/ps.md`): `sync` splits the rank's delta by
+//! `shard_of`, batches each shard's sub-delta into a single message,
+//! fans them out, and reassembles the reply (global stats for the
+//! touched functions + fresh global events) client-side.
 //!
-//! The event-fetch leg keeps one O(1) message per sync flowing through
-//! the aggregator — the price of exactly-once, next-sync event delivery.
-//! Stat merging (the heavy part) scales with shards; the aggregator's
-//! message rate is the eventual ceiling (see ROADMAP "Event-fetch
-//! gating").
+//! The event-fetch leg is **version-gated**: the aggregator owns a
+//! monotonic event-version counter (events flagged so far), every shard
+//! sync reply piggybacks it, and a client only round-trips to the
+//! aggregator when (a) it has sent a report since its last aggregator
+//! contact — its own report may complete a step quorum and flag an
+//! event, and the fetch must serialize behind it to preserve the
+//! exactly-once, *next-sync* delivery order `tests/ps_shard.rs` pins
+//! down — or (b) a piggybacked version exceeds what it has seen. In the
+//! no-events steady state (e.g. sync-only load) the aggregator receives
+//! **zero** messages per sync, removing it as the throughput ceiling
+//! (ROADMAP "Event-fetch gating", now done).
 //!
 //! With one shard the constellation reproduces the single-server
 //! behaviour exactly (see `tests/ps_shard.rs` for the equivalence
-//! property over N ∈ {1, 2, 4, 7}).
+//! property over N ∈ {1, 2, 4, 7}, in-process and across per-shard TCP
+//! endpoints).
 
 pub mod net;
 pub mod shard;
 
-pub use shard::{shard_of, spawn, PsClient, PsFinal, PsHandle};
+pub use shard::{shard_of, spawn, spawn_with, PsClient, PsFinal, PsHandle, PsOpts, PsStats};
 
 use crate::ad::Label;
 use crate::stats::RunStats;
@@ -89,6 +93,9 @@ pub enum PsRequest {
     },
     /// Anomaly accounting for the viz timeline (fire-and-forget).
     Report(StepStat),
+    /// Read the aggregator's full current snapshot (the `/api/ps_stats`
+    /// and PS wire-stats paths; does not drain `fresh`).
+    Query { reply: Sender<VizSnapshot> },
     /// Flush a viz snapshot now (tests; the loop also does it on a cadence).
     Publish,
     /// Drain and stop.
@@ -97,32 +104,68 @@ pub enum PsRequest {
 
 /// Reply to a `Sync`: global statistics for the functions in the delta,
 /// plus any globally detected events this rank has not seen yet (the
-/// rank reacts by dumping its current context window to provenance).
+/// rank reacts by dumping its current context window to provenance), plus
+/// the aggregator's event-version counter (total events flagged so far —
+/// monotonic), which clients use to gate future event-fetch round-trips.
 pub struct PsReply {
     pub global: Vec<(u32, RunStats)>,
     pub global_events: Vec<GlobalEvent>,
+    /// Aggregator event version after this reply: `global_events` flagged
+    /// so far, workflow-wide. A client that has seen version `v` and
+    /// whose shard replies piggyback version `v` has no events waiting.
+    pub event_version: u64,
+}
+
+/// Per-shard load counters (merge/sync counts), the groundwork for the
+/// ROADMAP's shard-rebalancing item: a rebalancer needs to see skew
+/// before it can move keys. Published inside each stat shard's partial
+/// snapshot and surfaced on `/api/ps_stats`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardLoad {
+    pub shard: u32,
+    /// Sync messages this shard served.
+    pub syncs: u64,
+    /// Individual function-stat merges performed.
+    pub merges: u64,
+    /// Functions owned by this shard's partition.
+    pub functions: u64,
 }
 
 /// Snapshot published to the visualization ingest channel.
 ///
 /// In the sharded server each thread publishes a *partial* snapshot (the
 /// aggregator contributes ranks/timeline/events, each stat shard its
-/// function count) and the merge stage folds them with [`Self::merge`].
+/// function count and load counters) and the merge stage folds them with
+/// [`Self::merge`]. Published partials are *deltas* ([`Self::delta`] set):
+/// the aggregator includes only rank summaries that changed since the
+/// previous publish, so the `ranks` vector no longer dominates each
+/// publish at high rank counts; [`VizState::ingest`](crate::viz::VizState::ingest)
+/// folds deltas incrementally with [`Self::fold_delta`].
 #[derive(Clone, Debug, Default)]
 pub struct VizSnapshot {
     /// Per-rank summaries (Fig 3's ranking dashboard feeds from this).
+    /// In a delta snapshot: only the ranks that changed since the last
+    /// publish (each entry still carries its *cumulative* statistics, so
+    /// folding is replacement, not addition).
     pub ranks: Vec<RankSummary>,
     /// Newly reported step stats since the previous snapshot (Fig 4's
     /// streaming scatter feeds from this).
     pub fresh_steps: Vec<StepStat>,
-    /// Total anomalies so far, workflow-wide.
+    /// Total anomalies so far, workflow-wide (absolute, also in deltas).
     pub total_anomalies: u64,
-    /// Total executions so far, workflow-wide.
+    /// Total executions so far, workflow-wide (absolute, also in deltas).
     pub total_executions: u64,
     /// Distinct functions tracked in the global statistics view.
     pub functions_tracked: u64,
-    /// Globally detected events so far (§V future work).
+    /// Globally detected events (§V future work). In a delta snapshot:
+    /// only events flagged since the last publish.
     pub global_events: Vec<GlobalEvent>,
+    /// Per-shard load counters (absolute), from the stat shards' partials.
+    pub shard_loads: Vec<ShardLoad>,
+    /// True for incrementally-published snapshots: `ranks` and
+    /// `global_events` carry only changes since the previous publish and
+    /// must be folded with [`Self::fold_delta`], not adopted wholesale.
+    pub delta: bool,
 }
 
 impl VizSnapshot {
@@ -143,6 +186,37 @@ impl VizSnapshot {
             }
         }
         self.global_events.sort_by_key(|e| e.step);
+        self.shard_loads.extend(other.shard_loads.iter().copied());
+        self.shard_loads.sort_by_key(|l| l.shard);
+    }
+
+    /// Fold a *delta* snapshot into this (absolute) one: changed rank
+    /// summaries replace their previous entries by `(app, rank)` key,
+    /// cumulative totals and shard loads are adopted, and new global
+    /// events are appended (deduplicated by step). `self.ranks` must be
+    /// sorted by `(app, rank)` — every producer in this module keeps it
+    /// so.
+    pub fn fold_delta(&mut self, d: &VizSnapshot) {
+        for r in &d.ranks {
+            match self.ranks.binary_search_by_key(&(r.app, r.rank), |x| (x.app, x.rank)) {
+                Ok(i) => self.ranks[i] = r.clone(),
+                Err(i) => self.ranks.insert(i, r.clone()),
+            }
+        }
+        self.fresh_steps = d.fresh_steps.clone();
+        self.total_anomalies = d.total_anomalies;
+        self.total_executions = d.total_executions;
+        self.functions_tracked = d.functions_tracked;
+        for ev in &d.global_events {
+            if !self.global_events.iter().any(|e| e.step == ev.step) {
+                self.global_events.push(*ev);
+            }
+        }
+        self.global_events.sort_by_key(|e| e.step);
+        if !d.shard_loads.is_empty() {
+            self.shard_loads = d.shard_loads.clone();
+        }
+        self.delta = false;
     }
 }
 
@@ -204,6 +278,11 @@ pub struct ParameterServer {
     global_events: Vec<GlobalEvent>,
     /// Global events not yet delivered to each rank (per-rank cursor).
     event_cursor: HashMap<(u32, u32), usize>,
+    /// Ranks whose summaries changed since the last publish — the delta
+    /// snapshot carries exactly these (see [`Self::snapshot_delta`]).
+    dirty_ranks: std::collections::HashSet<(u32, u32)>,
+    /// Global events already carried by a published delta.
+    events_published: usize,
 }
 
 /// Global-event trigger: step total > μ + GLOBAL_BETA·σ over ≥ MIN_HISTORY
@@ -249,7 +328,16 @@ impl ParameterServer {
             step_totals: RunStats::new(),
             global_events: Vec::new(),
             event_cursor: HashMap::new(),
+            dirty_ranks: std::collections::HashSet::new(),
+            events_published: 0,
         }
+    }
+
+    /// Event-version counter: total global events flagged so far.
+    /// Monotonic; piggybacked on sync replies so clients can skip the
+    /// aggregator event-fetch round-trip when nothing new exists.
+    pub fn event_version(&self) -> u64 {
+        self.global_events.len() as u64
     }
 
     /// Handle one request inline.
@@ -267,9 +355,14 @@ impl ParameterServer {
                 let cursor = self.event_cursor.entry((app, rank)).or_insert(0);
                 let fresh_events = self.global_events[*cursor..].to_vec();
                 *cursor = self.global_events.len();
-                let _ = reply.send(PsReply { global, global_events: fresh_events });
+                let _ = reply.send(PsReply {
+                    global,
+                    global_events: fresh_events,
+                    event_version: self.global_events.len() as u64,
+                });
             }
             PsRequest::Report(stat) => {
+                self.dirty_ranks.insert((stat.app, stat.rank));
                 let acc = self
                     .per_rank
                     .entry((stat.app, stat.rank))
@@ -320,6 +413,9 @@ impl ParameterServer {
                     self.publish();
                 }
             }
+            PsRequest::Query { reply } => {
+                let _ = reply.send(self.snapshot());
+            }
             PsRequest::Publish => self.publish(),
             PsRequest::Shutdown => {
                 self.publish();
@@ -353,17 +449,60 @@ impl ParameterServer {
         self.step_acc.len()
     }
 
-    /// Build and send a viz snapshot; drains `fresh`.
+    /// Build and send a viz snapshot *delta* (changed ranks, fresh steps,
+    /// events flagged since the last publish, absolute totals); drains
+    /// `fresh` and the dirty-rank set.
     pub fn publish(&mut self) {
         self.reports_since_publish = 0;
-        let snap = self.snapshot();
+        let snap = self.snapshot_delta();
         self.fresh.clear();
+        self.dirty_ranks.clear();
+        self.events_published = self.global_events.len();
         if let Some(tx) = &self.viz_tx {
             let _ = tx.send(snap);
         }
     }
 
-    /// Current snapshot (without draining when called directly in tests).
+    /// True when reports arrived since the last publish (the wall-clock
+    /// cadence only publishes when there is something new to say).
+    pub fn pending_publish(&self) -> bool {
+        self.reports_since_publish > 0
+    }
+
+    /// Delta snapshot: only the rank summaries touched since the last
+    /// publish (cumulative values — folding is replacement), only the
+    /// global events not yet published, absolute totals. At high rank
+    /// counts this is what keeps the publish path O(changed) instead of
+    /// O(ranks).
+    pub fn snapshot_delta(&self) -> VizSnapshot {
+        let mut ranks: Vec<RankSummary> = self
+            .dirty_ranks
+            .iter()
+            .filter_map(|&(app, rank)| {
+                self.per_rank.get(&(app, rank)).map(|acc| RankSummary {
+                    app,
+                    rank,
+                    step_counts: acc.step_counts,
+                    total_anomalies: acc.total,
+                })
+            })
+            .collect();
+        ranks.sort_by_key(|r| (r.app, r.rank));
+        let published = self.events_published.min(self.global_events.len());
+        VizSnapshot {
+            ranks,
+            fresh_steps: self.fresh.clone(),
+            total_anomalies: self.total_anomalies,
+            total_executions: self.total_executions,
+            functions_tracked: self.global.len() as u64,
+            global_events: self.global_events[published..].to_vec(),
+            shard_loads: Vec::new(),
+            delta: true,
+        }
+    }
+
+    /// Current full snapshot (without draining when called directly in
+    /// tests; also the final-state snapshot gathered at join time).
     pub fn snapshot(&self) -> VizSnapshot {
         let mut ranks: Vec<RankSummary> = self
             .per_rank
@@ -383,6 +522,8 @@ impl ParameterServer {
             total_executions: self.total_executions,
             functions_tracked: self.global.len() as u64,
             global_events: self.global_events.clone(),
+            shard_loads: Vec::new(),
+            delta: false,
         }
     }
 

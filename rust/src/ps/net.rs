@@ -1,47 +1,83 @@
 //! TCP transport for the parameter server — the cross-process deployment
-//! shape of the paper's architecture (on-node AD modules on compute nodes,
-//! one PS instance reachable over the interconnect; the reference
+//! shape of the paper's architecture (on-node AD modules on compute
+//! nodes, PS instances spread across the machine; the reference
 //! implementation used ZeroMQ).
 //!
-//! Wire protocol (v2, shard-aware): length-prefixed binary messages,
-//! little-endian. A client first sends a `hello` to learn the server's
-//! shard count, then groups every sync delta by [`shard_of`](super::shard_of)
-//! so the server can forward each group to its shard without
-//! re-partitioning — the wire carries the same batched, hash-routed shape
-//! the in-proc router uses. The server re-checks each entry's hash (the
-//! wire is a trust boundary) and drops the connection on a misgrouped
-//! frame.
+//! Wire protocol (v3, topology-aware): length-prefixed binary messages,
+//! little-endian (shared framing in [`util::wire`](crate::util::wire),
+//! shared accept loop / reconnecting clients in
+//! [`util::net`](crate::util::net)). Two server roles:
+//!
+//! * **Front-end** ([`PsTcpServer`]) — owns hello/topology, the
+//!   rank/step timeline (reports), global events and their per-rank
+//!   delivery cursors, and the aggregate stats query. Its hello reply
+//!   carries a shard→address map; when every address is empty the
+//!   front-end itself routes grouped sync frames (the degenerate
+//!   single-endpoint deployment, wire-compatible with protocol v2).
+//! * **Shard endpoint** ([`PsShardTcpServer`], the `ps-shard-server`
+//!   subcommand) — serves exactly one stat shard: sync frames go
+//!   straight to the owning shard's endpoint, replies piggyback the
+//!   aggregator event version (kept fresh by version pushes from the
+//!   front-end), and the merge stage fetches partial snapshots from it.
 //!
 //! ```text
-//! request  := u32 len, u8 kind, payload
-//!   kind 1 (sync):   app u32, rank u32, n_groups u32,
-//!                    n_groups × (shard u32, n_entries u32,
-//!                                n_entries × (fid u32, n u64, mean f64,
-//!                                             m2 f64, min f64, max f64))
-//!   kind 2 (report): app u32, rank u32, step u64, execs u64, anoms u64,
-//!                    ts_lo u64, ts_hi u64
-//!   kind 3 (hello):  (empty)
-//! reply (sync)  := u32 len, n_entries u32, entries (as above),
-//!                  n_events u32, n_events × (step u64, total u64,
-//!                                            score f64)
-//! reply (hello) := u32 len, n_shards u32
+//! front-end request := u32 len, u8 kind, payload
+//!   kind 1 (sync):    app u32, rank u32, n_groups u32,
+//!                     n_groups × (shard u32, n_entries u32, n_entries ×
+//!                       (fid u32, n u64, mean f64, m2 f64, min f64, max f64))
+//!   kind 2 (report):  app u32, rank u32, step u64, execs u64, anoms u64,
+//!                     ts_lo u64, ts_hi u64                      (one-way)
+//!   kind 3 (hello):   (empty)
+//!   kind 4 (fetch):   app u32, rank u32
+//!   kind 5 (stats):   (empty)
+//! reply (sync)  := n_entries u32, entries, n_events u32, n_events ×
+//!                  (step u64, total u64, score f64)
+//! reply (hello) := n_shards u32, n_shards × str shard_addr ("" = here)
+//! reply (fetch) := version u64, n_events u32, events
+//! reply (stats) := anoms u64, execs u64, ranks u32, version u64,
+//!                  n_events u32, events
+//!
+//! shard request := u32 len, u8 kind, payload
+//!   kind 3 (hello):     (empty)
+//!   kind 6 (shard sync): app u32, n_entries u32, entries
+//!   kind 7 (version):    version u64                           (one-way)
+//!   kind 8 (snapshot):   (empty)
+//! reply (hello)      := shard_id u32, n_shards u32
+//! reply (shard sync) := n_entries u32, entries, version u64
+//! reply (snapshot)   := functions u64, syncs u64, merges u64, shard u32
 //! ```
 //!
-//! The server thread wraps a [`PsClient`] (so in-proc and TCP clients
-//! share the same sharded server state); [`NetPsClient`] mirrors the
-//! [`PsClient`] API over a socket.
+//! The wire is a trust boundary on both roles: the front-end re-checks
+//! every grouped entry's hash, a shard endpoint re-checks that every
+//! entry belongs to it, and either drops the connection on a misgrouped
+//! frame — a silent mis-merge would fragment the global view.
+//!
+//! [`NetPsClient`] is a thin compatibility wrapper: since the router
+//! refactor, [`PsClient`] itself speaks TCP (`PsClient::connect` learns
+//! the topology from hello and dials per-shard connections, each wrapped
+//! in a [`Reconnector`](crate::util::net::Reconnector) so dropped
+//! connections heal instead of stranding the client).
 
-use super::{shard_of, GlobalEvent, PsClient, StepStat};
+use super::shard::{run_shard, AggConn, Route, ShardConn, ShardMsg, ShardPart};
+use super::{shard_of, GlobalEvent, PsClient, PsStats, StepStat};
 use crate::stats::{RunStats, StatsTable};
-use crate::util::wire::{read_msg, write_msg, Cursor};
+use crate::util::net::{serve_tcp, Reconnector, TcpServerHandle};
+use crate::util::wire::{put_str, read_msg, write_msg, Cursor};
 use anyhow::{bail, Context, Result};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
 
 const KIND_SYNC: u8 = 1;
 const KIND_REPORT: u8 = 2;
 const KIND_HELLO: u8 = 3;
+const KIND_EVENT_FETCH: u8 = 4;
+const KIND_PS_STATS: u8 = 5;
+const KIND_SHARD_SYNC: u8 = 6;
+const KIND_VERSION_PUSH: u8 = 7;
+const KIND_SHARD_SNAPSHOT: u8 = 8;
 
 fn put_stats(buf: &mut Vec<u8>, fid: u32, st: &RunStats) {
     buf.extend_from_slice(&fid.to_le_bytes());
@@ -62,61 +98,91 @@ fn read_stats(c: &mut Cursor) -> Result<(u32, RunStats)> {
     Ok((fid, RunStats::from_raw(n, mean, m2, min, max)))
 }
 
-/// TCP front-end for a parameter server; forwards to a [`PsClient`].
+fn put_events(buf: &mut Vec<u8>, events: &[GlobalEvent]) {
+    buf.extend_from_slice(&(events.len() as u32).to_le_bytes());
+    for ev in events {
+        buf.extend_from_slice(&ev.step.to_le_bytes());
+        buf.extend_from_slice(&ev.total_anomalies.to_le_bytes());
+        buf.extend_from_slice(&ev.score.to_le_bytes());
+    }
+}
+
+fn read_events(c: &mut Cursor) -> Result<Vec<GlobalEvent>> {
+    let n = c.u32()? as usize;
+    // Count is peer-supplied: cap the pre-allocation.
+    let mut out = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        out.push(GlobalEvent {
+            step: c.u64()?,
+            total_anomalies: c.u64()?,
+            score: c.f64()?,
+        });
+    }
+    Ok(out)
+}
+
+/// TCP front-end for a parameter server; forwards to a [`PsClient`] and
+/// owns the topology announced to connecting clients.
 pub struct PsTcpServer {
-    addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    join: Option<std::thread::JoinHandle<()>>,
+    inner: TcpServerHandle,
 }
 
 impl PsTcpServer {
-    /// Bind and serve; each connection is one AD module (thread per conn).
+    /// Bind and serve with no per-shard endpoints: the degenerate
+    /// single-endpoint topology (hello announces every shard as served
+    /// here; clients ship grouped sync frames).
     pub fn start(addr: &str, client: PsClient) -> Result<PsTcpServer> {
-        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-        listener.set_nonblocking(true)?;
-        let local = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let join = std::thread::Builder::new()
-            .name("chimbuko-ps-tcp".into())
-            .spawn(move || {
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let c = client.clone();
-                            std::thread::spawn(move || {
-                                let _ = serve_conn(stream, c);
-                            });
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(5));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })?;
-        Ok(PsTcpServer { addr: local, stop, join: Some(join) })
+        Self::start_with_topology(addr, client, Vec::new())
+    }
+
+    /// Bind and serve, announcing `shard_addrs[i]` as the endpoint of
+    /// shard `i` (empty vec = all shards served here). Clients receiving
+    /// a fully-populated map dial the shard endpoints directly and use
+    /// this front-end only for reports, event fetches, and stats.
+    pub fn start_with_topology(
+        addr: &str,
+        client: PsClient,
+        shard_addrs: Vec<String>,
+    ) -> Result<PsTcpServer> {
+        let n = client.shard_count();
+        let addrs = if shard_addrs.is_empty() {
+            vec![String::new(); n]
+        } else {
+            anyhow::ensure!(
+                shard_addrs.len() == n,
+                "topology has {} endpoints but the server has {} shards",
+                shard_addrs.len(),
+                n
+            );
+            shard_addrs
+        };
+        let addrs = Arc::new(addrs);
+        // The handler is shared across connection threads; PsClient is
+        // Send (not Sync — it holds mpsc senders), so clone it out from
+        // under a mutex per connection.
+        let client = Mutex::new(client);
+        let inner = serve_tcp("chimbuko-ps-tcp", addr, move |stream| {
+            let c = client.lock().expect("ps tcp client lock").clone();
+            let a = addrs.clone();
+            let _ = serve_conn(stream, c, a);
+        })?;
+        Ok(PsTcpServer { inner })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
-        self.addr
+        self.inner.addr()
     }
 
     pub fn stop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
+        self.inner.stop();
     }
 }
 
-impl Drop for PsTcpServer {
-    fn drop(&mut self) {
-        self.stop();
-    }
-}
-
-fn serve_conn(mut stream: TcpStream, client: PsClient) -> Result<()> {
+fn serve_conn(
+    mut stream: TcpStream,
+    client: PsClient,
+    shard_addrs: Arc<Vec<String>>,
+) -> Result<()> {
     loop {
         let Some(msg) = read_msg(&mut stream)? else {
             return Ok(()); // clean disconnect
@@ -125,7 +191,11 @@ fn serve_conn(mut stream: TcpStream, client: PsClient) -> Result<()> {
         let kind = c.u8()?;
         match kind {
             KIND_HELLO => {
-                let reply = (client.shard_count() as u32).to_le_bytes();
+                let mut reply = Vec::with_capacity(8 + 24 * shard_addrs.len());
+                reply.extend_from_slice(&(client.shard_count() as u32).to_le_bytes());
+                for a in shard_addrs.iter() {
+                    put_str(&mut reply, a);
+                }
                 write_msg(&mut stream, &reply)?;
             }
             KIND_SYNC => {
@@ -163,12 +233,7 @@ fn serve_conn(mut stream: TcpStream, client: PsClient) -> Result<()> {
                 for (fid, st) in entries {
                     put_stats(&mut reply, fid, st);
                 }
-                reply.extend_from_slice(&(events.len() as u32).to_le_bytes());
-                for ev in events {
-                    reply.extend_from_slice(&ev.step.to_le_bytes());
-                    reply.extend_from_slice(&ev.total_anomalies.to_le_bytes());
-                    reply.extend_from_slice(&ev.score.to_le_bytes());
-                }
+                put_events(&mut reply, &events);
                 write_msg(&mut stream, &reply)?;
             }
             KIND_REPORT => {
@@ -188,25 +253,273 @@ fn serve_conn(mut stream: TcpStream, client: PsClient) -> Result<()> {
                     ts_range: (lo, hi),
                 });
             }
+            KIND_EVENT_FETCH => {
+                let app = c.u32()?;
+                let rank = c.u32()?;
+                let (version, events) = client.fetch_events(app, rank);
+                let mut reply = Vec::with_capacity(16 + 24 * events.len());
+                reply.extend_from_slice(&version.to_le_bytes());
+                put_events(&mut reply, &events);
+                write_msg(&mut stream, &reply)?;
+            }
+            KIND_PS_STATS => {
+                let stats = client.stats().unwrap_or_default();
+                let mut reply = Vec::with_capacity(40 + 24 * stats.global_events.len());
+                reply.extend_from_slice(&stats.total_anomalies.to_le_bytes());
+                reply.extend_from_slice(&stats.total_executions.to_le_bytes());
+                reply.extend_from_slice(&stats.ranks.to_le_bytes());
+                reply.extend_from_slice(&stats.event_version.to_le_bytes());
+                put_events(&mut reply, &stats.global_events);
+                write_msg(&mut stream, &reply)?;
+            }
             k => bail!("unknown request kind {k}"),
         }
     }
 }
 
-/// TCP client used by a remote AD module; same API shape as [`PsClient`].
-pub struct NetPsClient {
-    stream: TcpStream,
-    /// Server shard count, learned from the hello handshake; sync deltas
-    /// are grouped by `shard_of(app, fid, n_shards)` before hitting the
-    /// wire.
-    n_shards: usize,
+/// A standalone shard thread's handle: the channel to stop it plus the
+/// join handle returning its final partition.
+type OwnedShard = (Sender<ShardMsg>, std::thread::JoinHandle<HashMap<super::FuncKey, RunStats>>);
+
+/// TCP endpoint serving exactly one stat shard (the `ps-shard-server`
+/// process, or a wrapper around one in-process shard for tests/benches).
+pub struct PsShardTcpServer {
+    inner: TcpServerHandle,
+    shard_id: u32,
+    /// Present when this server owns its shard thread (standalone mode):
+    /// `stop` shuts the shard down too and returns nothing — the
+    /// partition dies with the process, like the paper's PS instances.
+    own_shard: Option<OwnedShard>,
 }
 
-impl NetPsClient {
-    pub fn connect(addr: std::net::SocketAddr) -> Result<NetPsClient> {
-        let mut stream = TcpStream::connect(addr).context("connecting to PS")?;
+impl PsShardTcpServer {
+    /// Spawn a standalone shard (its own thread + version mirror) and
+    /// serve it at `addr`. This is what `chimbuko ps-shard-server` runs.
+    pub fn spawn_standalone(addr: &str, shard_id: u32, n_shards: u32) -> Result<PsShardTcpServer> {
+        anyhow::ensure!(n_shards > 0, "ps-shard-server needs --shards > 0");
+        anyhow::ensure!(shard_id < n_shards, "shard id {shard_id} out of range (0..{n_shards})");
+        let (tx, rx) = channel();
+        let version = Arc::new(AtomicU64::new(0));
+        let ver = version.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("chimbuko-ps-shard-{shard_id}"))
+            .spawn(move || run_shard(rx, shard_id, ver))
+            .context("spawning standalone ps shard")?;
+        let mut srv = Self::start_wrapping(addr, tx.clone(), shard_id, n_shards, version)?;
+        srv.own_shard = Some((tx, join));
+        Ok(srv)
+    }
+
+    /// Serve an existing shard channel at `addr` (the shard's lifecycle
+    /// stays with its owner — `PsHandle` for in-process constellations).
+    pub(crate) fn start_wrapping(
+        addr: &str,
+        tx: Sender<ShardMsg>,
+        shard_id: u32,
+        n_shards: u32,
+        version: Arc<AtomicU64>,
+    ) -> Result<PsShardTcpServer> {
+        let tx = Mutex::new(tx);
+        let inner = serve_tcp(&format!("chimbuko-ps-shard-tcp-{shard_id}"), addr, move |stream| {
+            let t = tx.lock().expect("ps shard tx lock").clone();
+            let _ = serve_shard_conn(stream, t, shard_id, n_shards, version.clone());
+        })?;
+        Ok(PsShardTcpServer { inner, shard_id, own_shard: None })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.inner.addr()
+    }
+
+    pub fn shard_id(&self) -> u32 {
+        self.shard_id
+    }
+
+    /// Stop accepting; in standalone mode also stop the shard thread.
+    pub fn stop(&mut self) {
+        self.inner.stop();
+        if let Some((tx, join)) = self.own_shard.take() {
+            let _ = tx.send(ShardMsg::Shutdown);
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for PsShardTcpServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_shard_conn(
+    mut stream: TcpStream,
+    tx: Sender<ShardMsg>,
+    shard_id: u32,
+    n_shards: u32,
+    version: Arc<AtomicU64>,
+) -> Result<()> {
+    loop {
+        let Some(msg) = read_msg(&mut stream)? else {
+            return Ok(());
+        };
+        let mut c = Cursor::new(&msg);
+        let kind = c.u8()?;
+        match kind {
+            KIND_HELLO => {
+                let mut reply = Vec::with_capacity(8);
+                reply.extend_from_slice(&shard_id.to_le_bytes());
+                reply.extend_from_slice(&n_shards.to_le_bytes());
+                write_msg(&mut stream, &reply)?;
+            }
+            KIND_SHARD_SYNC => {
+                let app = c.u32()?;
+                let n = c.u32()? as usize;
+                let mut delta = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    let entry = read_stats(&mut c)?;
+                    // Trust boundary: an entry this shard does not own
+                    // would fragment the global view — refuse the frame.
+                    let want = shard_of(app, entry.0, n_shards as usize) as u32;
+                    if want != shard_id {
+                        bail!(
+                            "entry (app {app}, fid {}) sent to shard {shard_id}, \
+                             shard_of says {want}",
+                            entry.0
+                        );
+                    }
+                    delta.push(entry);
+                }
+                let (rtx, rrx) = channel();
+                tx.send(ShardMsg::Sync { app, delta, reply: rtx })
+                    .map_err(|_| anyhow::anyhow!("shard thread gone"))?;
+                let part: ShardPart = rrx.recv().context("shard thread dropped reply")?;
+                let mut reply = Vec::with_capacity(12 + 44 * part.entries.len());
+                reply.extend_from_slice(&(part.entries.len() as u32).to_le_bytes());
+                for (fid, st) in &part.entries {
+                    put_stats(&mut reply, *fid, st);
+                }
+                reply.extend_from_slice(&part.event_version.to_le_bytes());
+                write_msg(&mut stream, &reply)?;
+            }
+            KIND_VERSION_PUSH => {
+                let v = c.u64()?;
+                // Monotonic: a reordered stale push must not roll the
+                // mirror back.
+                version.fetch_max(v, Ordering::SeqCst);
+            }
+            KIND_SHARD_SNAPSHOT => {
+                let (rtx, rrx) = channel();
+                tx.send(ShardMsg::Snapshot { reply: rtx })
+                    .map_err(|_| anyhow::anyhow!("shard thread gone"))?;
+                let snap = rrx.recv().context("shard thread dropped snapshot")?;
+                let load = snap.shard_loads.first().copied().unwrap_or_default();
+                let mut reply = Vec::with_capacity(32);
+                reply.extend_from_slice(&snap.functions_tracked.to_le_bytes());
+                reply.extend_from_slice(&load.syncs.to_le_bytes());
+                reply.extend_from_slice(&load.merges.to_le_bytes());
+                reply.extend_from_slice(&load.shard.to_le_bytes());
+                write_msg(&mut stream, &reply)?;
+            }
+            k => bail!("unknown shard request kind {k}"),
+        }
+    }
+}
+
+/// Client side of one shard endpoint connection (used inside the
+/// router's `ShardConn::Tcp`; verified against the expected shard id at
+/// connect time so a mis-wired topology fails loudly).
+pub struct ShardWire {
+    stream: TcpStream,
+    shard_id: u32,
+}
+
+impl ShardWire {
+    pub(crate) fn connect(addr: &str, expect_id: u32, expect_n: u32) -> Result<ShardWire> {
+        let mut stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to ps shard {expect_id} at {addr}"))?;
         stream.set_nodelay(true).ok();
-        // Hello handshake: learn the server's shard count.
+        write_msg(&mut stream, &[KIND_HELLO])?;
+        let reply = read_msg(&mut stream)?.context("shard endpoint closed during hello")?;
+        let mut c = Cursor::new(&reply);
+        let shard_id = c.u32()?;
+        let n_shards = c.u32()?;
+        if shard_id != expect_id || n_shards != expect_n {
+            bail!(
+                "shard endpoint {addr} is shard {shard_id}/{n_shards}, expected {expect_id}/{expect_n}"
+            );
+        }
+        Ok(ShardWire { stream, shard_id })
+    }
+
+    /// Write a shard-sync request (the reply is read separately so the
+    /// router can pipeline writes across endpoints before reading).
+    pub(crate) fn send_sync(&mut self, app: u32, entries: &[(u32, RunStats)]) -> Result<()> {
+        let mut msg = Vec::with_capacity(12 + 44 * entries.len());
+        msg.push(KIND_SHARD_SYNC);
+        msg.extend_from_slice(&app.to_le_bytes());
+        msg.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+        for (fid, st) in entries {
+            put_stats(&mut msg, *fid, st);
+        }
+        write_msg(&mut self.stream, &msg)
+    }
+
+    /// Read the reply to the last [`send_sync`](Self::send_sync).
+    pub(crate) fn recv_sync(&mut self) -> Result<(Vec<(u32, RunStats)>, u64)> {
+        let reply = read_msg(&mut self.stream)?.context("shard endpoint closed on sync")?;
+        let mut c = Cursor::new(&reply);
+        let n = c.u32()? as usize;
+        let mut entries = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            entries.push(read_stats(&mut c)?);
+        }
+        let version = c.u64()?;
+        Ok((entries, version))
+    }
+
+    /// Fetch this shard's partial snapshot (function count + load).
+    pub(crate) fn snapshot(&mut self) -> Result<super::VizSnapshot> {
+        write_msg(&mut self.stream, &[KIND_SHARD_SNAPSHOT])?;
+        let reply = read_msg(&mut self.stream)?.context("shard endpoint closed on snapshot")?;
+        let mut c = Cursor::new(&reply);
+        let functions = c.u64()?;
+        let syncs = c.u64()?;
+        let merges = c.u64()?;
+        let shard = c.u32()?;
+        Ok(super::VizSnapshot {
+            functions_tracked: functions,
+            shard_loads: vec![super::ShardLoad { shard, syncs, merges, functions }],
+            ..super::VizSnapshot::default()
+        })
+    }
+
+    /// Push a new aggregator event version (one-way; the front-end calls
+    /// this when a global event is flagged).
+    pub(crate) fn push_version(&mut self, version: u64) -> Result<()> {
+        let mut msg = Vec::with_capacity(9);
+        msg.push(KIND_VERSION_PUSH);
+        msg.extend_from_slice(&version.to_le_bytes());
+        write_msg(&mut self.stream, &msg)
+    }
+
+    pub(crate) fn shard_id(&self) -> u32 {
+        self.shard_id
+    }
+}
+
+/// Client side of one front-end connection (hello/topology, reports,
+/// gated event fetches, grouped degenerate syncs, stats).
+pub struct AggWire {
+    stream: TcpStream,
+    n_shards: usize,
+    shard_addrs: Vec<String>,
+}
+
+impl AggWire {
+    pub(crate) fn connect(addr: &str) -> Result<AggWire> {
+        let mut stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to PS front-end {addr}"))?;
+        stream.set_nodelay(true).ok();
         write_msg(&mut stream, &[KIND_HELLO])?;
         let reply = read_msg(&mut stream)?.context("PS closed during hello")?;
         let mut c = Cursor::new(&reply);
@@ -214,25 +527,30 @@ impl NetPsClient {
         if n_shards == 0 {
             bail!("server reported zero shards");
         }
-        Ok(NetPsClient { stream, n_shards })
+        let mut shard_addrs = Vec::with_capacity(n_shards.min(4096));
+        for _ in 0..n_shards {
+            shard_addrs.push(c.str()?);
+        }
+        Ok(AggWire { stream, n_shards, shard_addrs })
     }
 
-    /// Server shard count from the handshake.
-    pub fn shard_count(&self) -> usize {
+    pub(crate) fn n_shards(&self) -> usize {
         self.n_shards
     }
 
-    /// Stats exchange over the wire, grouped by destination shard.
-    pub fn sync(
+    pub(crate) fn shard_addrs(&self) -> &[String] {
+        &self.shard_addrs
+    }
+
+    /// Grouped sync through the front-end (degenerate topology): the
+    /// server validates the grouping, routes, and gates the event fetch
+    /// with its own in-process client.
+    pub(crate) fn sync_grouped(
         &mut self,
         app: u32,
         rank: u32,
-        delta: &StatsTable,
-    ) -> Result<(StatsTable, Vec<GlobalEvent>)> {
-        let mut parts: Vec<Vec<(u32, &RunStats)>> = vec![Vec::new(); self.n_shards];
-        for (fid, st) in delta.iter() {
-            parts[shard_of(app, fid, self.n_shards)].push((fid, st));
-        }
+        parts: &[Vec<(u32, RunStats)>],
+    ) -> Result<(Vec<(u32, RunStats)>, Vec<GlobalEvent>)> {
         let n_entries: usize = parts.iter().map(|p| p.len()).sum();
         let n_groups = parts.iter().filter(|p| !p.is_empty()).count();
         let mut msg = Vec::with_capacity(16 + 8 * n_groups + 44 * n_entries);
@@ -254,25 +572,18 @@ impl NetPsClient {
         let reply = read_msg(&mut self.stream)?.context("PS closed connection")?;
         let mut c = Cursor::new(&reply);
         let n = c.u32()? as usize;
-        let mut global = StatsTable::new();
+        let mut entries = Vec::with_capacity(n.min(4096));
         for _ in 0..n {
-            let (fid, st) = read_stats(&mut c)?;
-            global.replace(fid, st);
+            entries.push(read_stats(&mut c)?);
         }
-        let n_events = c.u32()? as usize;
-        let mut events = Vec::with_capacity(n_events);
-        for _ in 0..n_events {
-            events.push(GlobalEvent {
-                step: c.u64()?,
-                total_anomalies: c.u64()?,
-                score: c.f64()?,
-            });
-        }
-        Ok((global, events))
+        let events = read_events(&mut c)?;
+        Ok((entries, events))
     }
 
-    /// Fire-and-forget anomaly accounting.
-    pub fn report(&mut self, stat: &StepStat) -> Result<()> {
+    /// Fire-and-forget anomaly accounting (serializes ahead of any later
+    /// event fetch on this connection — the ordering the gating protocol
+    /// relies on).
+    pub(crate) fn report(&mut self, stat: &StepStat) -> Result<()> {
         let mut msg = Vec::with_capacity(64);
         msg.push(KIND_REPORT);
         msg.extend_from_slice(&stat.app.to_le_bytes());
@@ -283,6 +594,118 @@ impl NetPsClient {
         msg.extend_from_slice(&stat.ts_range.0.to_le_bytes());
         msg.extend_from_slice(&stat.ts_range.1.to_le_bytes());
         write_msg(&mut self.stream, &msg)
+    }
+
+    /// Event-fetch round-trip: undelivered global events for this rank
+    /// plus the aggregator's current event version.
+    pub(crate) fn fetch_events(&mut self, app: u32, rank: u32) -> Result<(u64, Vec<GlobalEvent>)> {
+        let mut msg = Vec::with_capacity(9);
+        msg.push(KIND_EVENT_FETCH);
+        msg.extend_from_slice(&app.to_le_bytes());
+        msg.extend_from_slice(&rank.to_le_bytes());
+        write_msg(&mut self.stream, &msg)?;
+        let reply = read_msg(&mut self.stream)?.context("PS closed on event fetch")?;
+        let mut c = Cursor::new(&reply);
+        let version = c.u64()?;
+        let events = read_events(&mut c)?;
+        Ok((version, events))
+    }
+
+    /// Aggregate PS counters.
+    pub(crate) fn ps_stats(&mut self) -> Result<PsStats> {
+        write_msg(&mut self.stream, &[KIND_PS_STATS])?;
+        let reply = read_msg(&mut self.stream)?.context("PS closed on stats")?;
+        let mut c = Cursor::new(&reply);
+        Ok(PsStats {
+            total_anomalies: c.u64()?,
+            total_executions: c.u64()?,
+            ranks: c.u32()?,
+            event_version: c.u64()?,
+            global_events: read_events(&mut c)?,
+        })
+    }
+}
+
+impl PsClient {
+    /// Connect to a PS front-end and build the routed client its hello
+    /// topology describes: per-shard TCP connections when the map names
+    /// endpoints, a single grouped-frame route when it does not (the
+    /// degenerate deployment). Every connection auto-reconnects with
+    /// backoff after drops.
+    pub fn connect(addr: &str) -> Result<PsClient> {
+        let wire = AggWire::connect(addr)?;
+        let n = wire.n_shards();
+        let addrs = wire.shard_addrs().to_vec();
+        let route = if addrs.iter().all(|a| a.is_empty()) {
+            Route::Frontend { n_shards: n }
+        } else {
+            anyhow::ensure!(
+                addrs.iter().all(|a| !a.is_empty()),
+                "mixed PS topology unsupported: every shard needs its own endpoint"
+            );
+            let mut conns = Vec::with_capacity(n);
+            for (i, a) in addrs.iter().enumerate() {
+                let (id, total) = (i as u32, n as u32);
+                conns.push(ShardConn::Tcp(Mutex::new(Reconnector::connected(
+                    a,
+                    move |x: &str| ShardWire::connect(x, id, total),
+                )?)));
+            }
+            Route::Sharded(Arc::new(conns))
+        };
+        let agg = AggConn::Tcp(Mutex::new(Reconnector::seeded(addr, AggWire::connect, wire)));
+        Ok(PsClient {
+            route,
+            agg: Arc::new(agg),
+            sync_count: Arc::new(AtomicU64::new(0)),
+            agg_fetches: Arc::new(AtomicU64::new(0)),
+            gates: Arc::new(Mutex::new(HashMap::new())),
+        })
+    }
+}
+
+/// TCP client used by a remote AD module — a thin compatibility wrapper
+/// around the routed [`PsClient`] (kept for the `&mut self`/`Result` API
+/// the earlier protocol exposed; new code can use `PsClient::connect`).
+///
+/// Error contract change from the pre-router protocol: `connect` still
+/// fails fast, but `sync`/`report` no longer return `Err` on a dropped
+/// connection — the router degrades (empty slice of the reply for the
+/// unreachable peer, warning logged) and its [`Reconnector`] redials on
+/// the next call, so one PS restart no longer kills the AD module.
+pub struct NetPsClient {
+    inner: PsClient,
+}
+
+impl NetPsClient {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<NetPsClient> {
+        Ok(NetPsClient { inner: PsClient::connect(&addr.to_string())? })
+    }
+
+    /// Server shard count from the handshake.
+    pub fn shard_count(&self) -> usize {
+        self.inner.shard_count()
+    }
+
+    /// The underlying router (cloneable, shareable across threads).
+    pub fn client(&self) -> PsClient {
+        self.inner.clone()
+    }
+
+    /// Stats exchange over the wire, grouped by destination shard.
+    pub fn sync(
+        &mut self,
+        app: u32,
+        rank: u32,
+        delta: &StatsTable,
+    ) -> Result<(StatsTable, Vec<GlobalEvent>)> {
+        Ok(self.inner.sync(app, rank, delta))
+    }
+
+    /// Fire-and-forget anomaly accounting.
+    pub fn report(&mut self, stat: &StepStat) -> Result<()> {
+        self.inner.report(stat.clone());
+        Ok(())
     }
 }
 
@@ -431,5 +854,105 @@ mod tests {
         drop(srv);
         client.shutdown();
         handle.join();
+    }
+
+    #[test]
+    fn shard_endpoints_serve_routed_clients() {
+        // Full multi-endpoint topology in one process: 3 local shards,
+        // each behind its own TCP endpoint, plus a front-end announcing
+        // the map. The routed client dials the shards directly.
+        let (client, handle) = super::super::spawn(3, None, usize::MAX >> 1, 1);
+        let shard_srvs = handle.serve_shard_endpoints().unwrap();
+        let addrs: Vec<String> = shard_srvs.iter().map(|s| s.addr().to_string()).collect();
+        let front =
+            PsTcpServer::start_with_topology("127.0.0.1:0", client.clone(), addrs).unwrap();
+        let routed = PsClient::connect(&front.addr().to_string()).unwrap();
+        assert_eq!(routed.shard_count(), 3);
+        let mut delta = StatsTable::new();
+        for fid in 0..30u32 {
+            delta.push(fid, fid as f64 + 1.0);
+        }
+        let (global, events) = routed.sync(0, 0, &delta);
+        assert!(events.is_empty());
+        assert_eq!(global.len(), 30, "reply must cover the delta across endpoints");
+        for fid in 0..30u32 {
+            assert_eq!(global.get(fid).unwrap().count(), 1);
+        }
+        // Sync-only load: the gated client never messaged the aggregator.
+        assert_eq!(routed.agg_fetch_count(), 0);
+        // Reports go through the front-end and reach the aggregator.
+        routed.report(StepStat {
+            app: 0,
+            rank: 0,
+            step: 0,
+            n_executions: 9,
+            n_anomalies: 1,
+            ts_range: (0, 1),
+        });
+        let (global2, _) = routed.sync(0, 0, &delta);
+        assert_eq!(global2.get(3).unwrap().count(), 2);
+        assert_eq!(routed.agg_fetch_count(), 1, "report dirties the gate → one fetch");
+        let stats = routed.stats().expect("wire stats");
+        assert_eq!(stats.total_anomalies, 1);
+        assert_eq!(stats.ranks, 1);
+        drop(front);
+        drop(shard_srvs);
+        client.shutdown();
+        let fin = handle.join();
+        assert_eq!(fin.global_len(), 30);
+        assert_eq!(fin.snapshot.total_anomalies, 1);
+    }
+
+    #[test]
+    fn shard_endpoint_rejects_foreign_entries() {
+        let (client, handle) = super::super::spawn(4, None, usize::MAX >> 1, 1);
+        let shard_srvs = handle.serve_shard_endpoints().unwrap();
+        // Hand a shard an entry it does not own.
+        let fid = (0..64u32).find(|&f| shard_of(0, f, 4) != 0).unwrap();
+        let mut st = RunStats::new();
+        st.push(1.0);
+        let mut s = TcpStream::connect(shard_srvs[0].addr()).unwrap();
+        let mut msg = vec![KIND_SHARD_SYNC];
+        msg.extend_from_slice(&0u32.to_le_bytes()); // app
+        msg.extend_from_slice(&1u32.to_le_bytes()); // n_entries
+        put_stats(&mut msg, fid, &st);
+        write_msg(&mut s, &msg).unwrap();
+        assert!(read_msg(&mut s).unwrap().is_none(), "conn must drop, no reply");
+        drop(shard_srvs);
+        client.shutdown();
+        let fin = handle.join();
+        assert_eq!(fin.global_len(), 0, "foreign entry must not be merged");
+    }
+
+    #[test]
+    fn standalone_shard_server_round_trip() {
+        let srv = PsShardTcpServer::spawn_standalone("127.0.0.1:0", 0, 1).unwrap();
+        let addr = srv.addr().to_string();
+        let mut w = ShardWire::connect(&addr, 0, 1).unwrap();
+        assert_eq!(w.shard_id(), 0);
+        let mut st = RunStats::new();
+        st.push(5.0);
+        st.push(7.0);
+        w.send_sync(0, &[(1, st)]).unwrap();
+        let (entries, ver) = w.recv_sync().unwrap();
+        assert_eq!(ver, 0, "no version pushed yet");
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].1.count(), 2);
+        // Version push is reflected in the next sync reply.
+        w.push_version(3).unwrap();
+        let mut st2 = RunStats::new();
+        st2.push(1.0);
+        w.send_sync(0, &[(1, st2)]).unwrap();
+        let (entries2, ver2) = w.recv_sync().unwrap();
+        assert_eq!(entries2[0].1.count(), 3);
+        assert_eq!(ver2, 3);
+        // Snapshot carries the load counters.
+        let snap = w.snapshot().unwrap();
+        assert_eq!(snap.functions_tracked, 1);
+        assert_eq!(snap.shard_loads.len(), 1);
+        assert_eq!(snap.shard_loads[0].syncs, 2);
+        assert_eq!(snap.shard_loads[0].merges, 2);
+        // Mismatched hello expectations fail loudly.
+        assert!(ShardWire::connect(&addr, 1, 2).is_err());
     }
 }

@@ -1,22 +1,32 @@
 //! Hash-routed parameter-server shards (see the [`ps`](super) module
 //! docs for the architecture).
 //!
-//! [`spawn`] starts the constellation: N stat-shard threads, one
-//! aggregator thread (a [`ParameterServer`] that never sees function
-//! deltas), and one merge thread that folds partial snapshots into the
-//! viz ingest channel. [`PsClient`] is the hash router the on-node AD
-//! modules talk to; [`PsHandle::join`] tears the constellation down and
-//! returns the merged final state ([`PsFinal`]).
+//! [`spawn`] starts the in-process constellation: N stat-shard threads,
+//! one aggregator thread (a [`ParameterServer`] that never sees function
+//! deltas), and one merge thread that folds partial snapshot deltas into
+//! the viz ingest channel. [`spawn_with`] additionally accepts a list of
+//! remote shard *endpoints* (`ps-shard-server` processes), in which case
+//! the stat shards live in other processes and every shard connection is
+//! a TCP socket instead of a channel.
+//!
+//! [`PsClient`] is the one router the on-node AD modules talk to — over
+//! in-process channels, over per-shard TCP endpoints, or through a
+//! single front-end (the degenerate single-endpoint deployment). The
+//! connection kind is invisible above this module. [`PsHandle::join`]
+//! tears the constellation down and returns the merged final state
+//! ([`PsFinal`]).
 
 use super::{
     FuncKey, GlobalEvent, ParameterServer, PsReply, PsRequest, StepStat, VizSnapshot,
 };
 use crate::stats::{RunStats, StatsTable};
+use crate::util::net::Reconnector;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// Stable shard routing: which of `n_shards` owns `(app, fid)`.
 ///
@@ -31,37 +41,129 @@ pub fn shard_of(app: u32, fid: u32, n_shards: usize) -> usize {
 }
 
 /// Message to one stat shard.
-enum ShardMsg {
+pub(crate) enum ShardMsg {
     /// Batched sub-delta for this shard; replies with the merged global
-    /// stats for exactly the functions in the sub-delta.
+    /// stats for exactly the functions in the sub-delta, plus the
+    /// shard's view of the aggregator event version.
     Sync {
         app: u32,
         delta: Vec<(u32, RunStats)>,
-        reply: Sender<Vec<(u32, RunStats)>>,
+        reply: Sender<ShardPart>,
     },
-    /// Partial snapshot for the merge stage.
+    /// Partial snapshot (function count + load counters) for the merge
+    /// stage.
     Snapshot { reply: Sender<VizSnapshot> },
     /// Stop and return the owned partition.
     Shutdown,
 }
 
-/// Cloneable router handle used by on-node AD modules.
+/// A stat shard's sync reply: merged entries plus the piggybacked
+/// aggregator event version (see the gating protocol in the module docs).
+pub(crate) struct ShardPart {
+    pub entries: Vec<(u32, RunStats)>,
+    pub event_version: u64,
+}
+
+/// One pluggable shard connection: an in-process channel to a shard
+/// thread, or a reconnecting TCP connection to a `ps-shard-server`
+/// endpoint. The router treats both identically.
+pub(crate) enum ShardConn {
+    Local(Sender<ShardMsg>),
+    Tcp(Mutex<Reconnector<super::net::ShardWire>>),
+}
+
+/// Connection to the aggregator/front-end: the in-process request
+/// channel, or a reconnecting TCP connection to a `ps-server` front-end.
+pub(crate) enum AggConn {
+    Local(Sender<PsRequest>),
+    Tcp(Mutex<Reconnector<super::net::AggWire>>),
+}
+
+/// How a [`PsClient`] reaches the stat shards.
+pub(crate) enum Route {
+    /// Per-shard connections (channels or TCP endpoints); the client
+    /// gates the aggregator event fetch itself.
+    Sharded(Arc<Vec<ShardConn>>),
+    /// Everything behind one front-end endpoint: grouped sync frames,
+    /// server-side routing and gating (the degenerate deployment).
+    Frontend { n_shards: usize },
+}
+
+/// Per-(app, rank) event-gating state (see the module docs). Reports
+/// are counted, not flagged: a sync samples `reports` and, after a
+/// successful fetch, acknowledges exactly that many — so a report racing
+/// in from another thread between the sample and the acknowledgement
+/// still leaves `reports > acked_reports` and forces the next sync to
+/// fetch (a boolean here would clobber the racing report's bit).
+#[derive(Default)]
+pub(crate) struct Gate {
+    /// Reports this rank has sent (monotonic).
+    reports: u64,
+    /// Reports an aggregator event fetch has serialized behind.
+    acked_reports: u64,
+    /// Highest aggregator event version this rank has observed.
+    seen: u64,
+}
+
+/// Cloneable router handle used by on-node AD modules — in-process and
+/// remote clients are the *same type* over different connections.
 ///
 /// `sync` splits the delta by [`shard_of`], batches one message per
-/// touched shard, fetches undelivered global events from the aggregator,
-/// and reassembles the reply client-side.
+/// touched shard, fans them out (pipelining writes before reads on TCP
+/// connections), reassembles the reply client-side, and fetches
+/// undelivered global events from the aggregator only when the version
+/// gate says there may be any.
 #[derive(Clone)]
 pub struct PsClient {
-    /// One sender per stat shard (cloned per client, the mpsc way).
-    shards: Vec<Sender<ShardMsg>>,
-    agg: Sender<PsRequest>,
-    sync_count: Arc<AtomicU64>,
+    pub(crate) route: Route,
+    pub(crate) agg: Arc<AggConn>,
+    pub(crate) sync_count: Arc<AtomicU64>,
+    /// Event-fetch messages sent to the aggregator (the gated leg).
+    pub(crate) agg_fetches: Arc<AtomicU64>,
+    pub(crate) gates: Arc<Mutex<HashMap<(u32, u32), Gate>>>,
+}
+
+impl Clone for Route {
+    fn clone(&self) -> Route {
+        match self {
+            Route::Sharded(c) => Route::Sharded(c.clone()),
+            Route::Frontend { n_shards } => Route::Frontend { n_shards: *n_shards },
+        }
+    }
+}
+
+/// Aggregate PS counters readable through the router (local constellation
+/// or the front-end's wire stats) — the e2e tests compare these across
+/// deployments.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PsStats {
+    pub total_anomalies: u64,
+    pub total_executions: u64,
+    pub ranks: u32,
+    pub event_version: u64,
+    pub global_events: Vec<GlobalEvent>,
 }
 
 impl PsClient {
     /// Number of stat shards this client routes across.
     pub fn shard_count(&self) -> usize {
-        self.shards.len()
+        match &self.route {
+            Route::Sharded(c) => c.len(),
+            Route::Frontend { n_shards } => *n_shards,
+        }
+    }
+
+    /// Event-fetch messages this client has sent to the aggregator. In
+    /// the no-events steady state (no reports, no version bumps) this
+    /// stays at 0 while `sync` counts climb — the gating win the fig7
+    /// endpoint sweep measures.
+    pub fn agg_fetch_count(&self) -> u64 {
+        self.agg_fetches.load(Ordering::Relaxed)
+    }
+
+    /// Routed (non-empty) syncs this client has issued.
+    pub fn sync_count_value(&self) -> u64 {
+        self.sync_count.load(Ordering::Relaxed)
     }
 
     /// Synchronous stats exchange: send local delta, adopt global reply.
@@ -71,7 +173,7 @@ impl PsClient {
         if delta.is_empty() {
             return (StatsTable::new(), Vec::new());
         }
-        let n = self.shards.len();
+        let n = self.shard_count();
         let mut parts: Vec<Vec<(u32, RunStats)>> = vec![Vec::new(); n];
         for (fid, st) in delta.iter() {
             parts[shard_of(app, fid, n)].push((fid, *st));
@@ -89,84 +191,282 @@ impl PsClient {
         rank: u32,
         parts: Vec<Vec<(u32, RunStats)>>,
     ) -> (StatsTable, Vec<GlobalEvent>) {
-        debug_assert_eq!(parts.len(), self.shards.len());
         if parts.iter().all(|p| p.is_empty()) {
             return (StatsTable::new(), Vec::new());
         }
         self.sync_count.fetch_add(1, Ordering::Relaxed);
+        let conns = match &self.route {
+            Route::Sharded(c) => c.clone(),
+            Route::Frontend { .. } => return self.sync_grouped_frontend(app, rank, &parts),
+        };
+        debug_assert_eq!(parts.len(), conns.len());
+        let key = (app, rank);
+        let (reports_now, acked, seen) = {
+            let g = self.gates.lock().expect("ps gate lock");
+            g.get(&key).map(|x| (x.reports, x.acked_reports, x.seen)).unwrap_or((0, 0, 0))
+        };
+        let dirty = reports_now > acked;
+
+        // Event-fetch leg, sent *before* collecting shard replies when we
+        // already know a fetch must happen (this rank reported since its
+        // last aggregator contact), so the two legs overlap — and so the
+        // fetch serializes behind the report in the aggregator's queue,
+        // preserving exactly-once, next-sync delivery.
+        let mut early: Option<Receiver<PsReply>> = None;
+        if dirty {
+            if let AggConn::Local(tx) = self.agg.as_ref() {
+                let (etx, erx) = channel();
+                let req = PsRequest::Sync { app, rank, delta: Vec::new(), reply: etx };
+                if tx.send(req).is_ok() {
+                    self.agg_fetches.fetch_add(1, Ordering::Relaxed);
+                    early = Some(erx);
+                }
+            }
+        }
+
+        // Fan out: local shards get channel sends (their replies arrive
+        // on `rrx`); TCP shards get pipelined writes — every request goes
+        // out before any reply is read, with each connection's lock held
+        // across its write→read window (acquired in shard-index order,
+        // so concurrent clients cannot deadlock).
         let (rtx, rrx) = channel();
         let mut expected = 0usize;
+        let mut tcp: Vec<(std::sync::MutexGuard<'_, Reconnector<super::net::ShardWire>>, bool)> =
+            Vec::new();
         for (i, part) in parts.into_iter().enumerate() {
-            if part.is_empty() || i >= self.shards.len() {
+            if part.is_empty() || i >= conns.len() {
                 continue;
             }
-            if self.shards[i]
-                .send(ShardMsg::Sync { app, delta: part, reply: rtx.clone() })
-                .is_ok()
-            {
-                expected += 1;
+            match &conns[i] {
+                ShardConn::Local(tx) => {
+                    if tx.send(ShardMsg::Sync { app, delta: part, reply: rtx.clone() }).is_ok() {
+                        expected += 1;
+                    }
+                }
+                ShardConn::Tcp(m) => {
+                    let mut g = m.lock().expect("ps shard conn lock");
+                    let ok = match g.get() {
+                        Ok(w) => match w.send_sync(app, &part) {
+                            Ok(()) => true,
+                            Err(e) => {
+                                crate::log_warn!("ps", "shard sync send failed: {e:#}");
+                                g.fail();
+                                false
+                            }
+                        },
+                        Err(e) => {
+                            crate::log_warn!("ps", "shard unreachable: {e:#}");
+                            false
+                        }
+                    };
+                    tcp.push((g, ok));
+                }
             }
         }
         drop(rtx);
-        // Event fetch: an empty-delta Sync to the aggregator advances this
-        // rank's cursor and returns undelivered global events. Sent before
-        // collecting shard replies so the two legs overlap.
-        let (etx, erx) = channel();
-        let fetch_sent = self
-            .agg
-            .send(PsRequest::Sync { app, rank, delta: Vec::new(), reply: etx })
-            .is_ok();
+
         let mut table = StatsTable::new();
+        let mut vmax = 0u64;
+        for (mut g, ok) in tcp {
+            if !ok {
+                continue;
+            }
+            if let Ok(w) = g.get() {
+                match w.recv_sync() {
+                    Ok((entries, ver)) => {
+                        for (fid, st) in entries {
+                            table.replace(fid, st);
+                        }
+                        vmax = vmax.max(ver);
+                    }
+                    Err(e) => {
+                        crate::log_warn!("ps", "shard sync reply failed: {e:#}");
+                        g.fail();
+                    }
+                }
+            }
+        }
         for _ in 0..expected {
             match rrx.recv() {
-                Ok(entries) => {
-                    for (fid, st) in entries {
+                Ok(part) => {
+                    for (fid, st) in part.entries {
                         table.replace(fid, st);
                     }
+                    vmax = vmax.max(part.event_version);
                 }
                 Err(_) => break,
             }
         }
-        let events = if fetch_sent {
-            erx.recv().map(|r: PsReply| r.global_events).unwrap_or_default()
+
+        // Version-gated event fetch: only when this rank reported since
+        // its last aggregator contact, or a shard piggybacked a version
+        // newer than anything this rank has seen.
+        let fetched: Option<(u64, Vec<GlobalEvent>)> = if let Some(erx) = early {
+            erx.recv().ok().map(|r| (r.event_version, r.global_events))
+        } else if dirty || vmax > seen {
+            self.agg_fetches.fetch_add(1, Ordering::Relaxed);
+            self.fetch_events_inner(app, rank)
         } else {
-            Vec::new()
+            None
         };
+        let (events, did_fetch, fetched_ver) = match fetched {
+            Some((ver, evs)) => (evs, true, ver),
+            None => (Vec::new(), false, 0),
+        };
+        if did_fetch {
+            // Advance the gate only on a *successful* fetch: if the
+            // aggregator was unreachable, recording the piggybacked
+            // version now would make every later sync compare equal and
+            // silently skip the delivery forever; leaving the gate
+            // untouched makes the next sync retry. Acknowledge only the
+            // reports sampled above — one racing in since then keeps
+            // `reports > acked_reports` and forces the next fetch.
+            let mut g = self.gates.lock().expect("ps gate lock");
+            let e = g.entry(key).or_default();
+            e.acked_reports = e.acked_reports.max(reports_now);
+            e.seen = e.seen.max(vmax).max(fetched_ver);
+        }
         (table, events)
     }
 
-    /// Fire-and-forget anomaly accounting.
+    /// Degenerate single-endpoint route: one grouped frame to the
+    /// front-end, which routes server-side (and gates the event fetch
+    /// with *its* in-process client, so the reply still carries fresh
+    /// events exactly once).
+    fn sync_grouped_frontend(
+        &self,
+        app: u32,
+        rank: u32,
+        parts: &[Vec<(u32, RunStats)>],
+    ) -> (StatsTable, Vec<GlobalEvent>) {
+        let AggConn::Tcp(m) = self.agg.as_ref() else {
+            return (StatsTable::new(), Vec::new());
+        };
+        match m.lock().expect("ps agg conn lock").with(|w| w.sync_grouped(app, rank, parts)) {
+            Ok((entries, events)) => {
+                let mut table = StatsTable::new();
+                for (fid, st) in entries {
+                    table.replace(fid, st);
+                }
+                (table, events)
+            }
+            Err(e) => {
+                crate::log_warn!("ps", "front-end sync failed (will reconnect): {e:#}");
+                (StatsTable::new(), Vec::new())
+            }
+        }
+    }
+
+    /// One event-fetch round-trip to the aggregator (advances this
+    /// rank's delivery cursor). Returns the aggregator's event version
+    /// plus the events this rank had not yet seen.
+    fn fetch_events_inner(&self, app: u32, rank: u32) -> Option<(u64, Vec<GlobalEvent>)> {
+        match self.agg.as_ref() {
+            AggConn::Local(tx) => {
+                let (etx, erx) = channel();
+                tx.send(PsRequest::Sync { app, rank, delta: Vec::new(), reply: etx }).ok()?;
+                erx.recv().ok().map(|r| (r.event_version, r.global_events))
+            }
+            AggConn::Tcp(m) => {
+                match m.lock().expect("ps agg conn lock").with(|w| w.fetch_events(app, rank)) {
+                    Ok(v) => Some(v),
+                    Err(e) => {
+                        crate::log_warn!("ps", "event fetch failed (will reconnect): {e:#}");
+                        None
+                    }
+                }
+            }
+        }
+    }
+
+    /// Explicit event fetch for this rank (the TCP front-end serves
+    /// `KIND_EVENT_FETCH` through this). Does not touch the client-side
+    /// gate — the caller owns its own gating.
+    pub fn fetch_events(&self, app: u32, rank: u32) -> (u64, Vec<GlobalEvent>) {
+        self.fetch_events_inner(app, rank).unwrap_or((0, Vec::new()))
+    }
+
+    /// Fire-and-forget anomaly accounting. Marks this rank's gate dirty:
+    /// its next sync *must* round-trip to the aggregator (the report may
+    /// complete a step quorum and flag a global event, and next-sync
+    /// delivery order requires the fetch to serialize behind it).
     pub fn report(&self, stat: StepStat) {
-        let _ = self.agg.send(PsRequest::Report(stat));
+        {
+            let mut g = self.gates.lock().expect("ps gate lock");
+            g.entry((stat.app, stat.rank)).or_default().reports += 1;
+        }
+        match self.agg.as_ref() {
+            AggConn::Local(tx) => {
+                let _ = tx.send(PsRequest::Report(stat));
+            }
+            AggConn::Tcp(m) => {
+                if let Err(e) = m.lock().expect("ps agg conn lock").with(|w| w.report(&stat)) {
+                    crate::log_warn!("ps", "report failed (will reconnect): {e:#}");
+                }
+            }
+        }
+    }
+
+    /// Aggregate PS counters (totals, rank count, event set). `None`
+    /// when the aggregator is unreachable.
+    pub fn stats(&self) -> Option<PsStats> {
+        match self.agg.as_ref() {
+            AggConn::Local(tx) => {
+                let (qtx, qrx) = channel();
+                tx.send(PsRequest::Query { reply: qtx }).ok()?;
+                let snap = qrx.recv().ok()?;
+                Some(PsStats {
+                    total_anomalies: snap.total_anomalies,
+                    total_executions: snap.total_executions,
+                    ranks: snap.ranks.len() as u32,
+                    event_version: snap.global_events.len() as u64,
+                    global_events: snap.global_events,
+                })
+            }
+            AggConn::Tcp(m) => {
+                m.lock().expect("ps agg conn lock").with(|w| w.ps_stats()).ok()
+            }
+        }
     }
 
     /// Force a viz publish (the merge stage folds in shard partials).
+    /// No-op through a TCP front-end: remote clients do not drive the
+    /// server's publish cadence.
     pub fn publish(&self) {
-        let _ = self.agg.send(PsRequest::Publish);
+        if let AggConn::Local(tx) = self.agg.as_ref() {
+            let _ = tx.send(PsRequest::Publish);
+        }
     }
 
     /// Stop the aggregator (it publishes a final snapshot first). The
     /// stat shards stay up until [`PsHandle::join`] so the final merge
-    /// can still gather their partials.
+    /// can still gather their partials. No-op through a TCP front-end.
     pub fn shutdown(&self) {
-        let _ = self.agg.send(PsRequest::Shutdown);
+        if let AggConn::Local(tx) = self.agg.as_ref() {
+            let _ = tx.send(PsRequest::Shutdown);
+        }
     }
 }
 
 /// Joinable handle to a spawned constellation.
 pub struct PsHandle {
     shard_txs: Vec<Sender<ShardMsg>>,
+    conns: Arc<Vec<ShardConn>>,
     agg_join: JoinHandle<ParameterServer>,
     merge_join: JoinHandle<()>,
     shard_joins: Vec<JoinHandle<HashMap<FuncKey, RunStats>>>,
     sync_count: Arc<AtomicU64>,
+    version: Arc<AtomicU64>,
 }
 
 /// Merged final state of a sharded parameter server.
 pub struct PsFinal {
     /// Final snapshot (ranks, totals, global events, function count).
     pub snapshot: VizSnapshot,
-    /// The reunited global function-statistics view.
+    /// The reunited global function-statistics view. Covers the shards
+    /// this process hosts; remote shard endpoints contribute only their
+    /// function *count* (fetched at join time) to
+    /// `snapshot.functions_tracked`.
     pub global: HashMap<FuncKey, RunStats>,
     /// All globally detected events, chronological.
     pub global_events: Vec<GlobalEvent>,
@@ -187,6 +487,37 @@ impl PsFinal {
 }
 
 impl PsHandle {
+    /// Serve every *local* stat shard on its own TCP endpoint (ephemeral
+    /// ports); returns one server handle per shard, index-aligned. The
+    /// addresses feed `PsTcpServer::start_with_topology` so a front-end
+    /// can hand clients the shard→addr map.
+    pub fn serve_shard_endpoints(&self) -> anyhow::Result<Vec<super::net::PsShardTcpServer>> {
+        (0..self.shard_txs.len())
+            .map(|i| self.serve_shard_endpoint_at(i, "127.0.0.1:0"))
+            .collect()
+    }
+
+    /// Serve one local stat shard at `addr` (tests restart a killed
+    /// endpoint on its old port with this, keeping the shard state).
+    pub fn serve_shard_endpoint_at(
+        &self,
+        shard: usize,
+        addr: &str,
+    ) -> anyhow::Result<super::net::PsShardTcpServer> {
+        anyhow::ensure!(
+            shard < self.shard_txs.len(),
+            "shard {shard} out of range ({} local shards)",
+            self.shard_txs.len()
+        );
+        super::net::PsShardTcpServer::start_wrapping(
+            addr,
+            self.shard_txs[shard].clone(),
+            shard as u32,
+            self.shard_txs.len() as u32,
+            self.version.clone(),
+        )
+    }
+
     /// Tear down after [`PsClient::shutdown`] and merge the final state.
     ///
     /// Join order matters: the aggregator first (its final publish is
@@ -199,6 +530,37 @@ impl PsHandle {
         // sender is the only producer.
         agg.detach_viz();
         self.merge_join.join().expect("ps merge stage panicked");
+        // Gather each shard's final partial (function counts + load
+        // counters) while the shards are still alive, so the final
+        // snapshot carries per-shard loads like every published delta —
+        // `/api/ps_stats` serves these after a finished run too.
+        let mut shard_loads: Vec<super::ShardLoad> = Vec::new();
+        let mut remote_functions = 0u64;
+        let (ptx, prx) = channel();
+        let mut expected = 0usize;
+        for conn in self.conns.iter() {
+            match conn {
+                ShardConn::Local(tx) => {
+                    if tx.send(ShardMsg::Snapshot { reply: ptx.clone() }).is_ok() {
+                        expected += 1;
+                    }
+                }
+                ShardConn::Tcp(m) => {
+                    if let Ok(p) = m.lock().expect("ps shard conn lock").with(|w| w.snapshot()) {
+                        remote_functions += p.functions_tracked;
+                        shard_loads.extend(p.shard_loads.iter().copied());
+                    }
+                }
+            }
+        }
+        drop(ptx);
+        for _ in 0..expected {
+            match prx.recv() {
+                Ok(p) => shard_loads.extend(p.shard_loads.iter().copied()),
+                Err(_) => break,
+            }
+        }
+        shard_loads.sort_by_key(|l| l.shard);
         for tx in &self.shard_txs {
             let _ = tx.send(ShardMsg::Shutdown);
         }
@@ -208,7 +570,8 @@ impl PsHandle {
             global.extend(part);
         }
         let mut snapshot = agg.snapshot();
-        snapshot.functions_tracked = global.len() as u64;
+        snapshot.functions_tracked = global.len() as u64 + remote_functions;
+        snapshot.shard_loads = shard_loads;
         let global_events = agg.global_events().to_vec();
         PsFinal {
             snapshot,
@@ -219,7 +582,32 @@ impl PsHandle {
     }
 }
 
-/// Spawn a sharded parameter server.
+/// Options for [`spawn_with`]: the full topology/cadence knob set.
+#[derive(Default)]
+pub struct PsOpts {
+    /// Local stat-shard threads (ignored when `endpoints` is non-empty;
+    /// 0 behaves as 1).
+    pub shards: usize,
+    /// Remote shard endpoints (`ps-shard-server` addresses), index ==
+    /// shard id. Non-empty switches the constellation to routed TCP
+    /// shard connections.
+    pub endpoints: Vec<String>,
+    /// Viz ingest channel for merged snapshot deltas.
+    pub viz_tx: Option<Sender<VizSnapshot>>,
+    /// Snapshot cadence in Report messages (0 behaves as 1).
+    pub publish_every: usize,
+    /// Wall-clock snapshot cadence in milliseconds (the paper's 1 s);
+    /// 0 disables. Runs *alongside* `publish_every`: whichever fires
+    /// first publishes, so viz freshness no longer depends on rank count.
+    pub publish_interval_ms: u64,
+    /// Reports expected per step (the per-step quorum for global-event
+    /// detection).
+    pub reports_per_step: usize,
+}
+
+/// Spawn a sharded parameter server with in-process shards — see
+/// [`spawn_with`] for the full option set (remote shard endpoints,
+/// wall-clock publish cadence).
 ///
 /// * `n_shards` — stat-shard threads (1 reproduces single-server
 ///   behaviour exactly);
@@ -233,30 +621,133 @@ pub fn spawn(
     publish_every: usize,
     reports_per_step: usize,
 ) -> (PsClient, PsHandle) {
-    let n = n_shards.max(1);
-    let mut shard_txs: Vec<Sender<ShardMsg>> = Vec::with_capacity(n);
-    let mut shard_joins = Vec::with_capacity(n);
-    for i in 0..n {
-        let (tx, rx): (Sender<ShardMsg>, Receiver<ShardMsg>) = channel();
-        let join = std::thread::Builder::new()
-            .name(format!("chimbuko-ps-shard-{i}"))
-            .spawn(move || run_shard(rx))
-            .expect("spawning ps shard");
-        shard_txs.push(tx);
-        shard_joins.push(join);
+    spawn_with(PsOpts {
+        shards: n_shards,
+        viz_tx,
+        publish_every,
+        reports_per_step,
+        ..PsOpts::default()
+    })
+    .expect("spawning local parameter server cannot fail")
+}
+
+/// Spawn a parameter-server constellation per `opts`.
+///
+/// With `endpoints` empty this is the in-process layout ([`spawn`]).
+/// With endpoints, each stat shard is a `ps-shard-server` process
+/// reached over TCP: the aggregator, merge stage, and rank/step timeline
+/// stay here (the front-end), shard connections are dialed eagerly
+/// (fail fast on a bad address) and reconnect with backoff afterwards,
+/// and the aggregator pushes event-version bumps to every shard endpoint
+/// so piggybacked gating works across processes.
+pub fn spawn_with(opts: PsOpts) -> anyhow::Result<(PsClient, PsHandle)> {
+    let version = Arc::new(AtomicU64::new(0));
+    let mut conns: Vec<ShardConn> = Vec::new();
+    let mut shard_txs: Vec<Sender<ShardMsg>> = Vec::new();
+    let mut shard_joins = Vec::new();
+    if opts.endpoints.is_empty() {
+        let n = opts.shards.max(1);
+        for i in 0..n {
+            let (tx, rx): (Sender<ShardMsg>, Receiver<ShardMsg>) = channel();
+            let ver = version.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("chimbuko-ps-shard-{i}"))
+                .spawn(move || run_shard(rx, i as u32, ver))
+                .expect("spawning ps shard");
+            conns.push(ShardConn::Local(tx.clone()));
+            shard_txs.push(tx);
+            shard_joins.push(join);
+        }
+    } else {
+        let n = opts.endpoints.len();
+        for (i, ep) in opts.endpoints.iter().enumerate() {
+            let wire = super::net::ShardWire::connect(ep, i as u32, n as u32)?;
+            let (id, total) = (i as u32, n as u32);
+            conns.push(ShardConn::Tcp(Mutex::new(Reconnector::seeded(
+                ep,
+                move |a: &str| super::net::ShardWire::connect(a, id, total),
+                wire,
+            ))));
+        }
     }
+    let conns = Arc::new(conns);
 
     // Aggregator: a ParameterServer whose viz sender feeds the merge
-    // stage instead of the viz channel directly.
+    // stage instead of the viz channel directly. It also owns the
+    // event-version mirror: after every handled request the version is
+    // stored for local shards (shared atomic) and pushed to remote shard
+    // endpoints when it changed.
     let (job_tx, job_rx) = channel::<VizSnapshot>();
     let (agg_tx, agg_rx): (Sender<PsRequest>, Receiver<PsRequest>) = channel();
+    let publish_every = opts.publish_every;
+    let reports_per_step = opts.reports_per_step;
+    let interval_ms = opts.publish_interval_ms;
+    let push_conns = conns.clone();
+    let agg_version = version.clone();
     let agg_join = std::thread::Builder::new()
         .name("chimbuko-ps-agg".into())
         .spawn(move || {
             let mut ps = ParameterServer::new(Some(job_tx), publish_every, reports_per_step);
-            while let Ok(req) = agg_rx.recv() {
-                if !ps.handle(req) {
-                    break;
+            let mut running = true;
+            let mut last_interval_pub = Instant::now();
+            let mut last_ver = 0u64;
+            while running {
+                let req = if interval_ms == 0 {
+                    match agg_rx.recv() {
+                        Ok(r) => Some(r),
+                        Err(_) => break,
+                    }
+                } else {
+                    let budget = Duration::from_millis(interval_ms)
+                        .saturating_sub(last_interval_pub.elapsed());
+                    match agg_rx.recv_timeout(budget.max(Duration::from_millis(1))) {
+                        Ok(r) => Some(r),
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                };
+                match req {
+                    Some(r) => {
+                        if !ps.handle(r) {
+                            running = false;
+                        }
+                        // Wall-clock cadence must also fire under
+                        // sustained traffic (recv_timeout never times
+                        // out while messages keep arriving), so check
+                        // the interval after every handled message too.
+                        if interval_ms > 0
+                            && last_interval_pub.elapsed() >= Duration::from_millis(interval_ms)
+                        {
+                            if ps.pending_publish() {
+                                ps.publish();
+                            }
+                            last_interval_pub = Instant::now();
+                        }
+                    }
+                    None => {
+                        // Idle tick: publish only when something new
+                        // arrived since the last snapshot.
+                        if ps.pending_publish() {
+                            ps.publish();
+                        }
+                        last_interval_pub = Instant::now();
+                    }
+                }
+                let v = ps.event_version();
+                if v != last_ver {
+                    agg_version.store(v, Ordering::SeqCst);
+                    for conn in push_conns.iter() {
+                        if let ShardConn::Tcp(m) = conn {
+                            if let Err(e) = m
+                                .lock()
+                                .expect("ps shard conn lock")
+                                .with(|w| w.push_version(v))
+                            {
+                                crate::log_warn!("ps", "version push failed: {e:#}");
+                            }
+                        }
+                    }
+                    last_ver = v;
                 }
             }
             ps
@@ -264,18 +755,34 @@ pub fn spawn(
         .expect("spawning ps aggregator");
 
     // Merge stage: fold one partial per stat shard onto each aggregator
-    // partial, then forward downstream. Commutative merges make the
-    // arrival order irrelevant — no barrier anywhere.
-    let merge_shards = shard_txs.clone();
+    // snapshot delta, then forward downstream. Commutative merges make
+    // the arrival order irrelevant — no barrier anywhere.
+    let merge_conns = conns.clone();
+    let viz_tx = opts.viz_tx;
     let merge_join = std::thread::Builder::new()
         .name("chimbuko-ps-merge".into())
         .spawn(move || {
             while let Ok(mut partial) = job_rx.recv() {
                 let (ptx, prx) = channel();
                 let mut expected = 0usize;
-                for tx in &merge_shards {
-                    if tx.send(ShardMsg::Snapshot { reply: ptx.clone() }).is_ok() {
-                        expected += 1;
+                for conn in merge_conns.iter() {
+                    match conn {
+                        ShardConn::Local(tx) => {
+                            if tx.send(ShardMsg::Snapshot { reply: ptx.clone() }).is_ok() {
+                                expected += 1;
+                            }
+                        }
+                        ShardConn::Tcp(m) => {
+                            match m.lock().expect("ps shard conn lock").with(|w| w.snapshot()) {
+                                Ok(p) => {
+                                    let _ = ptx.send(p);
+                                    expected += 1;
+                                }
+                                Err(e) => {
+                                    crate::log_warn!("ps", "shard snapshot failed: {e:#}");
+                                }
+                            }
+                        }
                     }
                 }
                 drop(ptx);
@@ -294,32 +801,61 @@ pub fn spawn(
 
     let sync_count = Arc::new(AtomicU64::new(0));
     let client = PsClient {
-        shards: shard_txs.clone(),
-        agg: agg_tx,
+        route: Route::Sharded(conns.clone()),
+        agg: Arc::new(AggConn::Local(agg_tx)),
         sync_count: sync_count.clone(),
+        agg_fetches: Arc::new(AtomicU64::new(0)),
+        gates: Arc::new(Mutex::new(HashMap::new())),
     };
-    let handle = PsHandle { shard_txs, agg_join, merge_join, shard_joins, sync_count };
-    (client, handle)
+    let handle = PsHandle {
+        shard_txs,
+        conns,
+        agg_join,
+        merge_join,
+        shard_joins,
+        sync_count,
+        version,
+    };
+    Ok((client, handle))
 }
 
 /// One stat shard's loop: own the `shard_of == i` partition of the
-/// global function statistics.
-fn run_shard(rx: Receiver<ShardMsg>) -> HashMap<FuncKey, RunStats> {
+/// global function statistics, count its load, and piggyback the
+/// aggregator event version (shared atomic locally; updated by version
+/// pushes in a standalone `ps-shard-server`).
+pub(crate) fn run_shard(
+    rx: Receiver<ShardMsg>,
+    shard_id: u32,
+    version: Arc<AtomicU64>,
+) -> HashMap<FuncKey, RunStats> {
     let mut table: HashMap<FuncKey, RunStats> = HashMap::new();
+    let mut syncs = 0u64;
+    let mut merges = 0u64;
     while let Ok(msg) = rx.recv() {
         match msg {
             ShardMsg::Sync { app, delta, reply } => {
+                syncs += 1;
                 let mut out = Vec::with_capacity(delta.len());
                 for (fid, st) in delta {
                     let g = table.entry((app, fid)).or_default();
                     g.merge(&st);
+                    merges += 1;
                     out.push((fid, *g));
                 }
-                let _ = reply.send(out);
+                let _ = reply.send(ShardPart {
+                    entries: out,
+                    event_version: version.load(Ordering::SeqCst),
+                });
             }
             ShardMsg::Snapshot { reply } => {
                 let _ = reply.send(VizSnapshot {
                     functions_tracked: table.len() as u64,
+                    shard_loads: vec![super::ShardLoad {
+                        shard: shard_id,
+                        syncs,
+                        merges,
+                        functions: table.len() as u64,
+                    }],
                     ..VizSnapshot::default()
                 });
             }
@@ -385,7 +921,7 @@ mod tests {
 
     #[test]
     fn merged_snapshots_reach_viz_channel() {
-        let (vtx, vrx) = channel();
+        let (vtx, vrx) = std::sync::mpsc::channel();
         let (client, handle) = spawn(3, Some(vtx), usize::MAX >> 1, 1);
         let mut delta = StatsTable::new();
         for fid in 0..24u32 {
@@ -401,19 +937,31 @@ mod tests {
             ts_range: (0, 9),
         });
         client.publish();
-        // The published snapshot folds the aggregator partial (report
-        // totals) with the stat-shard partials (function counts).
+        // The published snapshot delta folds the aggregator partial
+        // (report totals, changed ranks) with the stat-shard partials
+        // (function counts + load counters).
         let snap = vrx.recv().unwrap();
+        assert!(snap.delta, "published snapshots are deltas");
         assert_eq!(snap.total_anomalies, 2);
         assert_eq!(snap.total_executions, 50);
         assert_eq!(snap.functions_tracked, 24);
         assert_eq!(snap.ranks.len(), 1);
+        assert_eq!(snap.shard_loads.len(), 3, "one load entry per shard");
+        let total_merges: u64 = snap.shard_loads.iter().map(|l| l.merges).sum();
+        assert_eq!(total_merges, 24);
+        let total_syncs: u64 = snap.shard_loads.iter().map(|l| l.syncs).sum();
+        assert_eq!(total_syncs, 3, "the routed sync touched every shard once");
         client.shutdown();
         let fin = handle.join();
         assert_eq!(fin.snapshot.total_anomalies, 2);
-        // Final shutdown publish also reached the channel.
+        // The final snapshot carries the load counters too (this is what
+        // /api/ps_stats serves after a finished run).
+        assert_eq!(fin.snapshot.shard_loads.len(), 3);
+        // Final shutdown publish also reached the channel; it is a delta
+        // with no new ranks (nothing changed since the explicit publish).
         let last = vrx.recv().unwrap();
         assert_eq!(last.total_anomalies, 2);
+        assert!(last.ranks.is_empty(), "unchanged ranks stay out of deltas");
         assert!(vrx.recv().is_err(), "viz channel must close after join");
     }
 
@@ -460,5 +1008,89 @@ mod tests {
         }
         assert_eq!(fin.snapshot.total_anomalies, reference.snapshot().total_anomalies);
         assert_eq!(fin.snapshot.total_executions, reference.snapshot().total_executions);
+    }
+
+    #[test]
+    fn event_fetch_is_gated_without_reports() {
+        // Sync-only load: no reports, no events — the gated client never
+        // round-trips to the aggregator (the steady state the endpoint
+        // sweep measures).
+        let (client, handle) = spawn(2, None, usize::MAX >> 1, 1);
+        for rank in 0..4u32 {
+            let mut delta = StatsTable::new();
+            delta.push(rank, 1.0);
+            delta.push(rank + 100, 2.0);
+            client.sync(0, rank, &delta);
+        }
+        assert_eq!(client.agg_fetch_count(), 0, "no reports → no event fetches");
+        // A report makes the next sync fetch (dirty gate), exactly once.
+        client.report(StepStat {
+            app: 0,
+            rank: 0,
+            step: 0,
+            n_executions: 1,
+            n_anomalies: 0,
+            ts_range: (0, 1),
+        });
+        let mut delta = StatsTable::new();
+        delta.push(1, 1.0);
+        client.sync(0, 0, &delta);
+        assert_eq!(client.agg_fetch_count(), 1, "dirty rank must fetch once");
+        client.sync(0, 0, &delta);
+        assert_eq!(client.agg_fetch_count(), 1, "clean rank must not fetch again");
+        client.shutdown();
+        handle.join();
+    }
+
+    #[test]
+    fn wall_clock_publish_cadence() {
+        // publish_every is effectively infinite; the 20 ms wall-clock
+        // cadence must still flush a snapshot after a report arrives.
+        let (vtx, vrx) = std::sync::mpsc::channel();
+        let (client, handle) = spawn_with(PsOpts {
+            shards: 1,
+            viz_tx: Some(vtx),
+            publish_every: usize::MAX >> 1,
+            publish_interval_ms: 20,
+            reports_per_step: 1,
+            ..PsOpts::default()
+        })
+        .unwrap();
+        client.report(StepStat {
+            app: 0,
+            rank: 3,
+            step: 0,
+            n_executions: 10,
+            n_anomalies: 1,
+            ts_range: (0, 1),
+        });
+        let snap = vrx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("interval publish must fire without an explicit Publish");
+        assert!(snap.delta);
+        assert_eq!(snap.total_anomalies, 1);
+        assert_eq!(snap.ranks.len(), 1);
+        client.shutdown();
+        handle.join();
+    }
+
+    #[test]
+    fn query_stats_through_router() {
+        let (client, handle) = spawn(2, None, usize::MAX >> 1, 1);
+        client.report(StepStat {
+            app: 0,
+            rank: 1,
+            step: 0,
+            n_executions: 30,
+            n_anomalies: 4,
+            ts_range: (0, 1),
+        });
+        let stats = client.stats().expect("local stats");
+        assert_eq!(stats.total_anomalies, 4);
+        assert_eq!(stats.total_executions, 30);
+        assert_eq!(stats.ranks, 1);
+        assert_eq!(stats.event_version, 0);
+        client.shutdown();
+        handle.join();
     }
 }

@@ -1,10 +1,12 @@
 //! Infrastructure substrates built in-repo (the offline registry carries no
 //! serde/clap/criterion/proptest): deterministic RNG, JSON, logging, a
-//! small property-testing harness, and the length-prefixed wire framing
-//! shared by the TCP front-ends.
+//! small property-testing harness, the length-prefixed wire framing
+//! shared by the TCP front-ends ([`wire`]), and the shared accept-loop /
+//! reconnecting-client transport layer ([`net`]).
 
 pub mod json;
 pub mod log;
+pub mod net;
 pub mod prop;
 pub mod rng;
 pub mod wire;

@@ -1,0 +1,287 @@
+//! Shared TCP transport substrate for the service front-ends
+//! ([`ps::net`](crate::ps::net), [`provdb::net`](crate::provdb::net), the
+//! viz HTTP server) — the accept loop every server used to hand-roll, and
+//! the auto-reconnect/backoff connection wrapper every long-lived client
+//! used to lack.
+//!
+//! * [`serve_tcp`] — bind, accept on a named thread, one handler thread
+//!   per connection, cooperative shutdown via [`TcpServerHandle`].
+//! * [`Reconnector`] — wraps a connection `C` plus the recipe to redial
+//!   it. A failed operation drops the connection; the next use redials
+//!   after a capped exponential cooldown, so one peer restart never
+//!   permanently strands a client (previously `NetPsClient` died on the
+//!   first dropped connection while the viz `ProvSource` hand-rolled the
+//!   same retry loop).
+//!
+//! Framing stays in [`wire`](crate::util::wire); this module is about
+//! connection lifecycle.
+
+use anyhow::{bail, Context, Result};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Handle to a running accept loop; [`stop`](Self::stop) (or drop) shuts
+/// the listener down **and severs every live connection** (so stopping a
+/// server actually looks like a killed process to its peers — the
+/// behaviour the reconnect tests rely on). Handler threads then see EOF
+/// and finish on their own.
+pub struct TcpServerHandle {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    conns: Arc<std::sync::Mutex<std::collections::HashMap<u64, TcpStream>>>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpServerHandle {
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, sever live connections, and join the accept
+    /// thread. The port is free for rebinding when this returns.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for (_, s) in self.conns.lock().expect("conn registry lock").iter() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for TcpServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Bind `addr` and serve connections: the accept loop runs on a thread
+/// named `name`, and each accepted stream is handed to `handler` on its
+/// own thread (thread-per-connection, matching every front-end here).
+pub fn serve_tcp(
+    name: &str,
+    addr: &str,
+    handler: impl Fn(TcpStream) + Send + Sync + 'static,
+) -> Result<TcpServerHandle> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    listener.set_nonblocking(true)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let conns: Arc<std::sync::Mutex<std::collections::HashMap<u64, TcpStream>>> =
+        Arc::new(std::sync::Mutex::new(std::collections::HashMap::new()));
+    let stop2 = stop.clone();
+    let conns2 = conns.clone();
+    let handler = Arc::new(handler);
+    let join = std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(move || {
+            let mut next_id = 0u64;
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let h = handler.clone();
+                        // Register a clone so stop() can sever the
+                        // connection; the handler wrapper deregisters on
+                        // completion, keeping the registry bounded by
+                        // *live* connections.
+                        let id = next_id;
+                        next_id += 1;
+                        if let Ok(clone) = stream.try_clone() {
+                            conns2.lock().expect("conn registry lock").insert(id, clone);
+                        }
+                        let reg = conns2.clone();
+                        std::thread::spawn(move || {
+                            h(stream);
+                            reg.lock().expect("conn registry lock").remove(&id);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        })?;
+    Ok(TcpServerHandle { addr: local, stop, conns, join: Some(join) })
+}
+
+/// Initial reconnect cooldown after a failure; doubles per consecutive
+/// failure up to [`MAX_BACKOFF`].
+const INITIAL_BACKOFF: Duration = Duration::from_millis(50);
+const MAX_BACKOFF: Duration = Duration::from_secs(2);
+
+/// A connection that knows how to re-establish itself.
+///
+/// Operations run through [`with`](Self::with) (or the split
+/// [`get`](Self::get)/[`fail`](Self::fail) pair when a caller pipelines
+/// across several connections): an error drops the connection and starts
+/// a capped exponential cooldown, and the next use redials. Callers
+/// decide what a failed operation means (the PS router degrades the
+/// affected shard's slice of a reply; the viz layer returns an empty
+/// result) — the wrapper only guarantees the *connection* recovers.
+pub struct Reconnector<C> {
+    addr: String,
+    connect: Box<dyn Fn(&str) -> Result<C> + Send>,
+    conn: Option<C>,
+    consecutive_failures: u32,
+    retry_after: Option<Instant>,
+}
+
+impl<C> Reconnector<C> {
+    /// Lazy: first use dials.
+    pub fn new(addr: &str, connect: impl Fn(&str) -> Result<C> + Send + 'static) -> Self {
+        Reconnector {
+            addr: addr.to_string(),
+            connect: Box::new(connect),
+            conn: None,
+            consecutive_failures: 0,
+            retry_after: None,
+        }
+    }
+
+    /// Eager: dial now, fail fast on a bad address.
+    pub fn connected(
+        addr: &str,
+        connect: impl Fn(&str) -> Result<C> + Send + 'static,
+    ) -> Result<Self> {
+        let conn = connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        Ok(Self::seeded(addr, connect, conn))
+    }
+
+    /// Adopt an already-established connection (e.g. one a handshake was
+    /// just read from) without redialing.
+    pub fn seeded(
+        addr: &str,
+        connect: impl Fn(&str) -> Result<C> + Send + 'static,
+        conn: C,
+    ) -> Self {
+        let mut r = Self::new(addr, connect);
+        r.conn = Some(conn);
+        r
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn is_connected(&self) -> bool {
+        self.conn.is_some()
+    }
+
+    /// Borrow the live connection, redialing if necessary. Within the
+    /// cooldown window after a failure this returns an error immediately
+    /// instead of hammering the peer.
+    pub fn get(&mut self) -> Result<&mut C> {
+        if self.conn.is_none() {
+            if let Some(t) = self.retry_after {
+                if Instant::now() < t {
+                    bail!("reconnect to {} backing off", self.addr);
+                }
+            }
+            match (self.connect)(&self.addr) {
+                Ok(c) => {
+                    self.conn = Some(c);
+                    self.consecutive_failures = 0;
+                    self.retry_after = None;
+                }
+                Err(e) => {
+                    self.note_failure();
+                    return Err(e.context(format!("reconnecting to {}", self.addr)));
+                }
+            }
+        }
+        Ok(self.conn.as_mut().expect("connection just ensured"))
+    }
+
+    /// Drop the connection after a failed operation; the next [`get`]
+    /// redials once the cooldown elapses.
+    pub fn fail(&mut self) {
+        self.conn = None;
+        self.note_failure();
+    }
+
+    fn note_failure(&mut self) {
+        let shift = self.consecutive_failures.min(8);
+        let delay = INITIAL_BACKOFF.saturating_mul(1u32 << shift).min(MAX_BACKOFF);
+        self.consecutive_failures = self.consecutive_failures.saturating_add(1);
+        self.retry_after = Some(Instant::now() + delay);
+    }
+
+    /// Run one operation against the (re)connected peer; on error the
+    /// connection is dropped so the next call redials.
+    pub fn with<T>(&mut self, op: impl FnOnce(&mut C) -> Result<T>) -> Result<T> {
+        let c = self.get()?;
+        match op(c) {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                self.fail();
+                Err(e)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn serve_tcp_round_trip_and_stop() {
+        let mut srv = serve_tcp("test-echo", "127.0.0.1:0", |mut s: TcpStream| {
+            let mut b = [0u8; 4];
+            if s.read_exact(&mut b).is_ok() {
+                let _ = s.write_all(&b);
+            }
+        })
+        .unwrap();
+        let mut c = TcpStream::connect(srv.addr()).unwrap();
+        c.write_all(b"ping").unwrap();
+        let mut b = [0u8; 4];
+        c.read_exact(&mut b).unwrap();
+        assert_eq!(&b, b"ping");
+        srv.stop();
+        // Stopped listener refuses new connections (eventually: the OS
+        // may accept one queued conn, so just assert stop() returned).
+    }
+
+    #[test]
+    fn reconnector_redials_after_failure() {
+        let dials = Arc::new(AtomicU32::new(0));
+        let d2 = dials.clone();
+        let mut r: Reconnector<u32> = Reconnector::new("nowhere", move |_| {
+            Ok(d2.fetch_add(1, Ordering::Relaxed) + 1)
+        });
+        assert!(!r.is_connected());
+        assert_eq!(r.with(|c| Ok(*c)).unwrap(), 1);
+        assert!(r.is_connected());
+        // Same connection reused while healthy.
+        assert_eq!(r.with(|c| Ok(*c)).unwrap(), 1);
+        // A failed op drops the connection and starts the cooldown…
+        assert!(r.with(|_| -> Result<()> { anyhow::bail!("boom") }).is_err());
+        assert!(!r.is_connected());
+        // …so an immediate retry is refused without dialing…
+        assert!(r.get().is_err());
+        assert_eq!(dials.load(Ordering::Relaxed), 1);
+        // …and after the cooldown the next use redials.
+        std::thread::sleep(INITIAL_BACKOFF * 3);
+        assert_eq!(r.with(|c| Ok(*c)).unwrap(), 2);
+        assert_eq!(dials.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn reconnector_connect_failures_back_off() {
+        let mut r: Reconnector<u32> =
+            Reconnector::new("nowhere", |_| anyhow::bail!("refused"));
+        assert!(r.get().is_err());
+        // Within the cooldown: fast-fail, no dial storm.
+        assert!(r.get().unwrap_err().to_string().contains("backing off"));
+        // `connected` is eager and fails fast.
+        assert!(Reconnector::<u32>::connected("nowhere", |_| anyhow::bail!("no")).is_err());
+    }
+}

@@ -130,6 +130,34 @@ pub fn global_events(state: &VizState) -> Json {
     )])
 }
 
+/// `/api/ps_stats` — parameter-server shard load counters (merge/sync
+/// counts per stat shard, from the latest published snapshot) plus the
+/// aggregator-side totals. The groundwork the ROADMAP's shard-rebalancing
+/// item needs: skew is visible here before any rebalancer exists.
+pub fn ps_stats(state: &VizState) -> Json {
+    let loads = state
+        .latest
+        .shard_loads
+        .iter()
+        .map(|l| {
+            Json::obj(vec![
+                ("shard", Json::num(l.shard as f64)),
+                ("syncs", Json::num(l.syncs as f64)),
+                ("merges", Json::num(l.merges as f64)),
+                ("functions", Json::num(l.functions as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("shards", Json::num(state.latest.shard_loads.len() as f64)),
+        ("shard_loads", Json::Arr(loads)),
+        ("functions_tracked", Json::num(state.latest.functions_tracked as f64)),
+        ("total_anomalies", Json::num(state.latest.total_anomalies as f64)),
+        ("total_executions", Json::num(state.latest.total_executions as f64)),
+        ("event_version", Json::num(state.latest.global_events.len() as f64)),
+    ])
+}
+
 /// `/api/stats` — run-level counters.
 pub fn stats(state: &VizState) -> Json {
     // One backend round-trip for both provenance counters (a remote
@@ -160,11 +188,16 @@ mod tests {
         c.push(2.0);
         st.latest = VizSnapshot {
             ranks: vec![RankSummary { app: 0, rank: 1, step_counts: c, total_anomalies: 2 }],
-            fresh_steps: vec![],
             total_anomalies: 2,
             total_executions: 50,
             functions_tracked: 1,
-            global_events: vec![],
+            shard_loads: vec![crate::ps::ShardLoad {
+                shard: 0,
+                syncs: 4,
+                merges: 9,
+                functions: 1,
+            }],
+            ..VizSnapshot::default()
         };
         st.timeline = vec![(0, 1, 0, 2)];
         st
@@ -180,11 +213,24 @@ mod tests {
             call_stack(&st, 0, 1, 0),
             top_anomalies(&st, 10),
             stats(&st),
+            ps_stats(&st),
             provenance(&st, &ProvQuery { anomalies_only: true, ..Default::default() }),
             metadata(&st),
         ] {
             parse(&j.to_string()).unwrap();
         }
+    }
+
+    #[test]
+    fn ps_stats_exposes_shard_loads() {
+        let st = state();
+        let j = ps_stats(&st);
+        assert_eq!(j.get("shards").unwrap().as_u64(), Some(1));
+        let loads = j.get("shard_loads").unwrap().as_arr().unwrap();
+        assert_eq!(loads.len(), 1);
+        assert_eq!(loads[0].get("syncs").unwrap().as_u64(), Some(4));
+        assert_eq!(loads[0].get("merges").unwrap().as_u64(), Some(9));
+        assert_eq!(j.get("total_anomalies").unwrap().as_u64(), Some(2));
     }
 
     #[test]

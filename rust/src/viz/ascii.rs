@@ -250,11 +250,9 @@ mod tests {
         counts.push(1.0);
         st.latest = VizSnapshot {
             ranks: vec![RankSummary { app: 0, rank: 3, step_counts: counts, total_anomalies: 4 }],
-            fresh_steps: vec![],
             total_anomalies: 4,
             total_executions: 200,
-            functions_tracked: 0,
-            global_events: vec![],
+            ..VizSnapshot::default()
         };
         st.timeline = vec![(0, 3, 0, 3), (0, 3, 1, 1)];
         let _ = StepStat {

@@ -8,6 +8,7 @@
 //! ```text
 //! GET /                      → HTML index with usage
 //! GET /api/stats             → run counters
+//! GET /api/ps_stats          → PS shard load counters (merge/sync per shard)
 //! GET /api/dashboard?stat=total&n=5
 //! GET /api/timeline?app=0&rank=3
 //! GET /api/function?app=0&rank=3&step=9
@@ -24,56 +25,34 @@
 use super::{api, ascii, RankStat, VizState};
 use crate::provenance::ProvQuery;
 use crate::util::json::Json;
-use anyhow::{Context, Result};
+use crate::util::net::{serve_tcp, TcpServerHandle};
+use anyhow::Result;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 /// Running server handle; drop (or call [`VizServer::stop`]) to shut down.
+/// The accept loop is the shared [`serve_tcp`] substrate.
 pub struct VizServer {
-    addr: std::net::SocketAddr,
-    stop: Arc<AtomicBool>,
-    join: Option<std::thread::JoinHandle<()>>,
+    inner: TcpServerHandle,
     requests: Arc<AtomicU64>,
 }
 
 impl VizServer {
     /// Bind `addr` (use port 0 for ephemeral) and serve `state`.
     pub fn start(addr: &str, state: Arc<RwLock<VizState>>) -> Result<VizServer> {
-        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-        listener.set_nonblocking(true).context("nonblocking listener")?;
-        let local = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
         let requests = Arc::new(AtomicU64::new(0));
-        let stop2 = stop.clone();
         let req2 = requests.clone();
-        let join = std::thread::Builder::new()
-            .name("chimbuko-viz".into())
-            .spawn(move || {
-                while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let st = state.clone();
-                            let rq = req2.clone();
-                            std::thread::spawn(move || {
-                                let _ = handle_conn(stream, st, rq);
-                            });
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(10));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })
-            .context("spawning viz server")?;
-        Ok(VizServer { addr: local, stop, join: Some(join), requests })
+        let inner = serve_tcp("chimbuko-viz", addr, move |stream| {
+            let _ = handle_conn(stream, state.clone(), req2.clone());
+        })?;
+        Ok(VizServer { inner, requests })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
-        self.addr
+        self.inner.addr()
     }
 
     pub fn request_count(&self) -> u64 {
@@ -81,16 +60,7 @@ impl VizServer {
     }
 
     pub fn stop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-    }
-}
-
-impl Drop for VizServer {
-    fn drop(&mut self) {
-        self.stop();
+        self.inner.stop();
     }
 }
 
@@ -170,6 +140,7 @@ fn route(target: &str, state: &Arc<RwLock<VizState>>) -> (u16, &'static str, Str
             format!(
                 "<html><body><h1>Chimbuko viz v{}</h1><pre>\n\
                  GET /api/stats\n\
+                 GET /api/ps_stats\n\
                  GET /api/dashboard?stat=total|avg|std|max|min&n=5\n\
                  GET /api/timeline?app=0&rank=0\n\
                  GET /api/function?app=0&rank=0&step=0\n\
@@ -184,6 +155,7 @@ fn route(target: &str, state: &Arc<RwLock<VizState>>) -> (u16, &'static str, Str
             ),
         ),
         "/api/stats" => json(api::stats(&st)),
+        "/api/ps_stats" => json(api::ps_stats(&st)),
         "/api/dashboard" => {
             let stat = q
                 .get("stat")
@@ -309,13 +281,29 @@ mod tests {
         c.push(1.0);
         st.latest = VizSnapshot {
             ranks: vec![RankSummary { app: 0, rank: 0, step_counts: c, total_anomalies: 1 }],
-            fresh_steps: vec![],
             total_anomalies: 1,
             total_executions: 10,
-            functions_tracked: 0,
-            global_events: vec![],
+            shard_loads: vec![crate::ps::ShardLoad {
+                shard: 0,
+                syncs: 2,
+                merges: 5,
+                functions: 3,
+            }],
+            ..VizSnapshot::default()
         };
         Arc::new(RwLock::new(st))
+    }
+
+    #[test]
+    fn ps_stats_endpoint() {
+        let mut srv = VizServer::start("127.0.0.1:0", served_state()).unwrap();
+        let (code, body) = http_get(srv.addr(), "/api/ps_stats").unwrap();
+        assert_eq!(code, 200);
+        let j = crate::util::json::parse(&body).unwrap();
+        assert_eq!(j.get("shards").unwrap().as_u64(), Some(1));
+        let loads = j.get("shard_loads").unwrap().as_arr().unwrap();
+        assert_eq!(loads[0].get("merges").unwrap().as_u64(), Some(5));
+        srv.stop();
     }
 
     #[test]

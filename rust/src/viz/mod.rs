@@ -20,6 +20,7 @@ use crate::provenance::{ProvDb, ProvQuery, ProvRecord};
 use crate::ps::{RankSummary, VizSnapshot};
 use crate::trace::FuncRegistry;
 use crate::util::json::Json;
+use crate::util::net::Reconnector;
 use std::sync::Mutex;
 
 /// Where the viz layer's provenance detail queries go: a local in-process
@@ -32,12 +33,12 @@ pub enum ProvSource {
         db: ProvDb,
         meta: Option<Json>,
     },
-    /// A provDB service connection plus its address: a failed request
-    /// drops the connection and the next request reconnects, so one
-    /// backend restart never permanently degrades the viz server.
+    /// A provDB service connection behind the shared
+    /// [`Reconnector`](crate::util::net::Reconnector): a failed request
+    /// drops the connection and the next request redials (with backoff),
+    /// so one backend restart never permanently degrades the viz server.
     Remote {
-        addr: String,
-        client: Mutex<Option<ProvClient>>,
+        client: Mutex<Reconnector<ProvClient>>,
     },
 }
 
@@ -53,39 +54,25 @@ impl ProvSource {
     }
 
     /// Proxy queries to the provDB service at `addr`; connects eagerly
-    /// (fail fast on a bad address) and reconnects after failures.
+    /// (fail fast on a bad address) and reconnects with backoff after
+    /// failures (the shared [`Reconnector`] — the same recovery loop the
+    /// PS router uses).
     pub fn remote(addr: &str) -> anyhow::Result<ProvSource> {
-        let client = ProvClient::connect(addr)?;
-        Ok(ProvSource::Remote {
-            addr: addr.to_string(),
-            client: Mutex::new(Some(client)),
-        })
+        let client = Reconnector::connected(addr, |a: &str| ProvClient::connect(a))?;
+        Ok(ProvSource::Remote { client: Mutex::new(client) })
     }
 
     /// Run `op` against the remote connection, (re)connecting as needed.
-    /// On error the connection is dropped so the next call reconnects;
-    /// the caller degrades to an empty result meanwhile.
+    /// On error the connection is dropped so the next call redials; the
+    /// caller degrades to an empty result meanwhile.
     fn with_remote<T>(
-        addr: &str,
-        slot: &Mutex<Option<ProvClient>>,
+        slot: &Mutex<Reconnector<ProvClient>>,
         op: impl FnOnce(&mut ProvClient) -> anyhow::Result<T>,
     ) -> Option<T> {
-        let mut guard = slot.lock().expect("provdb client lock");
-        if guard.is_none() {
-            match ProvClient::connect(addr) {
-                Ok(c) => *guard = Some(c),
-                Err(e) => {
-                    crate::log_warn!("viz", "provdb reconnect to {addr} failed: {e:#}");
-                    return None;
-                }
-            }
-        }
-        let client = guard.as_mut().expect("connection just ensured");
-        match op(client) {
+        match slot.lock().expect("provdb client lock").with(op) {
             Ok(v) => Some(v),
             Err(e) => {
-                crate::log_warn!("viz", "provdb request failed, dropping connection: {e:#}");
-                *guard = None;
+                crate::log_warn!("viz", "provdb request failed (will reconnect): {e:#}");
                 None
             }
         }
@@ -96,8 +83,8 @@ impl ProvSource {
     pub fn query(&self, q: &ProvQuery) -> Vec<ProvRecord> {
         match self {
             ProvSource::Local { db, .. } => db.query(q).into_iter().cloned().collect(),
-            ProvSource::Remote { addr, client } => {
-                Self::with_remote(addr, client, |c| c.query(q)).unwrap_or_default()
+            ProvSource::Remote { client } => {
+                Self::with_remote(client, |c| c.query(q)).unwrap_or_default()
             }
         }
     }
@@ -108,8 +95,8 @@ impl ProvSource {
             ProvSource::Local { db, .. } => {
                 db.call_stack(app, rank, step).into_iter().cloned().collect()
             }
-            ProvSource::Remote { addr, client } => {
-                Self::with_remote(addr, client, |c| c.call_stack(app, rank, step))
+            ProvSource::Remote { client } => {
+                Self::with_remote(client, |c| c.call_stack(app, rank, step))
                     .unwrap_or_default()
             }
         }
@@ -119,11 +106,9 @@ impl ProvSource {
     pub fn len(&self) -> usize {
         match self {
             ProvSource::Local { db, .. } => db.len(),
-            ProvSource::Remote { addr, client } => {
-                Self::with_remote(addr, client, |c| c.stats())
-                    .map(|s| s.records as usize)
-                    .unwrap_or(0)
-            }
+            ProvSource::Remote { client } => Self::with_remote(client, |c| c.stats())
+                .map(|s| s.records as usize)
+                .unwrap_or(0),
         }
     }
 
@@ -136,11 +121,9 @@ impl ProvSource {
     pub fn counters(&self) -> (usize, u64) {
         match self {
             ProvSource::Local { db, .. } => (db.len(), db.bytes_written()),
-            ProvSource::Remote { addr, client } => {
-                Self::with_remote(addr, client, |c| c.stats())
-                    .map(|s| (s.records as usize, s.log_bytes))
-                    .unwrap_or((0, 0))
-            }
+            ProvSource::Remote { client } => Self::with_remote(client, |c| c.stats())
+                .map(|s| (s.records as usize, s.log_bytes))
+                .unwrap_or((0, 0)),
         }
     }
 
@@ -148,11 +131,9 @@ impl ProvSource {
     pub fn bytes_written(&self) -> u64 {
         match self {
             ProvSource::Local { db, .. } => db.bytes_written(),
-            ProvSource::Remote { addr, client } => {
-                Self::with_remote(addr, client, |c| c.stats())
-                    .map(|s| s.log_bytes)
-                    .unwrap_or(0)
-            }
+            ProvSource::Remote { client } => Self::with_remote(client, |c| c.stats())
+                .map(|s| s.log_bytes)
+                .unwrap_or(0),
         }
     }
 
@@ -160,8 +141,8 @@ impl ProvSource {
     pub fn metadata(&self) -> Option<Json> {
         match self {
             ProvSource::Local { meta, .. } => meta.clone(),
-            ProvSource::Remote { addr, client } => {
-                Self::with_remote(addr, client, |c| c.metadata()).flatten()
+            ProvSource::Remote { client } => {
+                Self::with_remote(client, |c| c.metadata()).flatten()
             }
         }
     }
@@ -253,12 +234,20 @@ impl VizState {
         s
     }
 
-    /// Ingest one PS snapshot (data-sender path).
+    /// Ingest one PS snapshot (data-sender path). Since the delta
+    /// refactor the PS publishes *snapshot deltas* (changed ranks, new
+    /// events, absolute totals); these fold incrementally into `latest`
+    /// so ingest cost tracks what changed, not the rank count. Full
+    /// snapshots (final state, tests) still replace wholesale.
     pub fn ingest(&mut self, snap: VizSnapshot) {
         for st in &snap.fresh_steps {
             self.timeline.push((st.app, st.rank, st.step, st.n_anomalies));
         }
-        self.latest = snap;
+        if snap.delta {
+            self.latest.fold_delta(&snap);
+        } else {
+            self.latest = snap;
+        }
     }
 
     /// Top/bottom `n` ranks by `stat` (Fig 3's dashboard selection).
@@ -326,11 +315,9 @@ mod tests {
                 summary(2, &[0.0, 0.0]),
                 summary(3, &[2.0, 2.0]),
             ],
-            fresh_steps: vec![],
             total_anomalies: 15,
             total_executions: 1000,
-            functions_tracked: 0,
-            global_events: vec![],
+            ..VizSnapshot::default()
         };
         st
     }
@@ -365,7 +352,6 @@ mod tests {
         let mut st = VizState::new(vec![]);
         for step in 0..3u64 {
             st.ingest(VizSnapshot {
-                ranks: vec![],
                 fresh_steps: vec![StepStat {
                     app: 0,
                     rank: 7,
@@ -374,14 +360,55 @@ mod tests {
                     n_anomalies: step,
                     ts_range: (0, 1),
                 }],
-                total_anomalies: 0,
-                total_executions: 0,
-                functions_tracked: 0,
-                global_events: vec![],
+                ..VizSnapshot::default()
             });
         }
         assert_eq!(st.rank_series(0, 7), vec![(0, 0), (1, 1), (2, 2)]);
         assert!(st.rank_series(0, 8).is_empty());
+    }
+
+    #[test]
+    fn delta_snapshots_fold_incrementally() {
+        let mut st = VizState::new(vec![]);
+        // First delta: ranks 0 and 1 appear.
+        st.ingest(VizSnapshot {
+            ranks: vec![summary(0, &[1.0]), summary(1, &[2.0])],
+            total_anomalies: 3,
+            total_executions: 100,
+            delta: true,
+            ..VizSnapshot::default()
+        });
+        assert_eq!(st.latest.ranks.len(), 2);
+        assert_eq!(st.latest.total_anomalies, 3);
+        // Second delta: only rank 1 changed — rank 0 must survive, rank 1
+        // must be replaced (cumulative stats), totals adopted.
+        st.ingest(VizSnapshot {
+            ranks: vec![summary(1, &[2.0, 5.0])],
+            total_anomalies: 8,
+            total_executions: 200,
+            delta: true,
+            ..VizSnapshot::default()
+        });
+        assert_eq!(st.latest.ranks.len(), 2, "unchanged ranks must survive deltas");
+        assert_eq!(st.latest.total_anomalies, 8);
+        assert_eq!(st.latest.total_executions, 200);
+        let r1 = st.latest.ranks.iter().find(|r| r.rank == 1).unwrap();
+        assert_eq!(r1.total_anomalies, 7, "changed rank replaced, not summed");
+        assert_eq!(st.latest.ranks.iter().find(|r| r.rank == 0).unwrap().total_anomalies, 1);
+        // A new rank arriving later inserts in sorted position.
+        st.ingest(VizSnapshot {
+            ranks: vec![summary(2, &[4.0])],
+            total_anomalies: 12,
+            total_executions: 300,
+            delta: true,
+            ..VizSnapshot::default()
+        });
+        let order: Vec<u32> = st.latest.ranks.iter().map(|r| r.rank).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+        // A full (non-delta) snapshot replaces wholesale.
+        st.ingest(VizSnapshot { total_anomalies: 1, ..VizSnapshot::default() });
+        assert!(st.latest.ranks.is_empty());
+        assert_eq!(st.latest.total_anomalies, 1);
     }
 
     #[test]

@@ -4,8 +4,18 @@
 //! anomaly totals, and global-event sets as the single-threaded
 //! [`ParameterServer`] reference — Pébay merges are commutative, so the
 //! hash routing must be invisible in the results.
+//!
+//! The same property extends across the deployment axis: shards served
+//! from separate TCP endpoints (`tcp_endpoint_equivalence_matches_reference`)
+//! and from separate OS *processes* (`multi_process_ps_smoke`, which
+//! launches real `chimbuko ps-shard-server` / `ps-server` children) must
+//! be bit-identical too, with the same exactly-once, next-sync
+//! global-event delivery order. A killed-and-restarted shard endpoint
+//! must heal through the client's reconnect/backoff path
+//! (`killed_shard_endpoint_reconnects`).
 
-use chimbuko::ps::{self, ParameterServer, PsRequest, StepStat};
+use chimbuko::ps::net::PsTcpServer;
+use chimbuko::ps::{self, ParameterServer, PsClient, PsRequest, StepStat};
 use chimbuko::stats::StatsTable;
 use chimbuko::util::prop::{check, Config as PropConfig};
 use chimbuko::util::rng::Rng;
@@ -193,4 +203,230 @@ fn burst_workload_actually_triggers_global_events() {
     let fin = handle.join();
     assert_eq!(fin.global_events.len(), reference.global_events().len());
     assert_eq!(delivered, reference.global_events().len());
+}
+
+/// Drive one workload through a routed client and compare every sync
+/// reply, the delivered event sequence, the wire stats, and the final
+/// joined state against the single-threaded reference — bit for bit.
+fn assert_client_matches_reference(
+    client: &PsClient,
+    workload: &[StepOps],
+    reference: &ParameterServer,
+    ref_replies: &[Vec<(u32, chimbuko::stats::RunStats)>],
+    label: &str,
+) {
+    let mut reply_idx = 0usize;
+    let mut delivered = Vec::new();
+    for ops in workload {
+        for (report, delta) in &ops.per_rank {
+            client.report(report.clone());
+            let (global, events) = client.sync(report.app, report.rank, delta);
+            delivered.extend(events);
+            let want = &ref_replies[reply_idx];
+            reply_idx += 1;
+            assert_eq!(
+                global.len(),
+                want.len(),
+                "{label}: reply size diverged at sync {reply_idx} (step {})",
+                ops.step
+            );
+            for (fid, st) in want {
+                assert_eq!(
+                    global.get(*fid),
+                    Some(st),
+                    "{label}: fid {fid} reply diverged at sync {reply_idx}"
+                );
+            }
+        }
+    }
+    assert_eq!(
+        delivered,
+        reference.global_events().to_vec(),
+        "{label}: delivered event sequence diverged"
+    );
+    // Totals and event sets through the front-end's wire stats.
+    let stats = client.stats().unwrap_or_else(|| panic!("{label}: wire stats unavailable"));
+    let want_snap = reference.snapshot();
+    assert_eq!(stats.total_anomalies, want_snap.total_anomalies, "{label}: anomaly totals");
+    assert_eq!(stats.total_executions, want_snap.total_executions, "{label}: execution totals");
+    assert_eq!(stats.ranks as usize, want_snap.ranks.len(), "{label}: rank count");
+    assert_eq!(
+        stats.global_events,
+        reference.global_events().to_vec(),
+        "{label}: global-event set"
+    );
+    // Every sync followed this rank's report, so the gate forced exactly
+    // one aggregator fetch per sync — the order next-sync delivery needs.
+    assert_eq!(client.agg_fetch_count(), reply_idx as u64, "{label}: fetch per dirty sync");
+}
+
+#[test]
+fn tcp_endpoint_equivalence_matches_reference() {
+    // "N shards across N endpoints ≡ single-threaded reference": the
+    // same workload, but every stat shard behind its own TCP endpoint
+    // and the client routed through the front-end's hello topology.
+    let mut rng = Rng::new(0xE2E);
+    let ranks = 3;
+    let workload = gen_workload(&mut rng, ranks, 10, 8);
+    let (reference, ref_replies) = drive_reference(&workload, ranks);
+    assert!(
+        !reference.global_events().is_empty(),
+        "workload must flag a global event or the delivery check is vacuous"
+    );
+
+    for n_shards in [2usize, 4] {
+        let (local_client, handle) = ps::spawn(n_shards, None, usize::MAX >> 1, ranks);
+        let shard_srvs = handle.serve_shard_endpoints().unwrap();
+        let addrs: Vec<String> = shard_srvs.iter().map(|s| s.addr().to_string()).collect();
+        let front =
+            PsTcpServer::start_with_topology("127.0.0.1:0", local_client.clone(), addrs).unwrap();
+        let client = PsClient::connect(&front.addr().to_string()).unwrap();
+        assert_eq!(client.shard_count(), n_shards);
+        let label = format!("{n_shards} endpoints");
+        assert_client_matches_reference(&client, &workload, &reference, &ref_replies, &label);
+        drop(front);
+        drop(shard_srvs);
+        local_client.shutdown();
+        let fin = handle.join();
+        assert_eq!(fin.global_len(), reference.global_len(), "{label}: global size");
+        for (key, st) in reference.global_iter() {
+            assert_eq!(fin.global.get(&key), Some(st), "{label}: stats diverged for {key:?}");
+        }
+        assert_eq!(fin.global_events, reference.global_events().to_vec(), "{label}: events");
+        let want_snap = reference.snapshot();
+        assert_eq!(fin.snapshot.total_anomalies, want_snap.total_anomalies, "{label}");
+        assert_eq!(fin.snapshot.total_executions, want_snap.total_executions, "{label}");
+        assert_eq!(fin.snapshot.functions_tracked, want_snap.functions_tracked, "{label}");
+    }
+}
+
+#[test]
+fn killed_shard_endpoint_reconnects() {
+    let (local_client, handle) = ps::spawn(2, None, usize::MAX >> 1, 1);
+    let mut shard_srvs = handle.serve_shard_endpoints().unwrap();
+    let addrs: Vec<String> = shard_srvs.iter().map(|s| s.addr().to_string()).collect();
+    let front =
+        PsTcpServer::start_with_topology("127.0.0.1:0", local_client.clone(), addrs).unwrap();
+    let client = PsClient::connect(&front.addr().to_string()).unwrap();
+
+    let fid0 = (0..256u32).find(|&f| ps::shard_of(0, f, 2) == 0).unwrap();
+    let fid1 = (0..256u32).find(|&f| ps::shard_of(0, f, 2) == 1).unwrap();
+    let mut delta = StatsTable::new();
+    delta.push(fid0, 1.0);
+    delta.push(fid1, 1.0);
+
+    let (g1, _) = client.sync(0, 0, &delta);
+    assert_eq!(g1.get(fid0).unwrap().count(), 1);
+    assert_eq!(g1.get(fid1).unwrap().count(), 1);
+
+    // Kill shard endpoint 0: listener closed AND live connections
+    // severed — exactly what a crashed ps-shard-server looks like. The
+    // shard *state* survives in its thread (it outlives its transport).
+    let addr0 = shard_srvs[0].addr().to_string();
+    shard_srvs[0].stop();
+    let (g2, _) = client.sync(0, 0, &delta);
+    assert!(g2.get(fid0).is_none(), "killed shard's slice must degrade, not hang");
+    assert_eq!(g2.get(fid1).unwrap().count(), 2, "healthy shard unaffected");
+
+    // Restart the endpoint on the same port, same shard state; the
+    // client's reconnector redials after its backoff and the view heals.
+    let revived = handle.serve_shard_endpoint_at(0, &addr0).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(400));
+    let (g3, _) = client.sync(0, 0, &delta);
+    assert_eq!(
+        g3.get(fid0).map(|s| s.count()),
+        Some(2),
+        "reconnected: the sync during the outage was lost (at-most-once), later ones land"
+    );
+    assert_eq!(g3.get(fid1).unwrap().count(), 3);
+
+    drop(revived);
+    drop(front);
+    drop(shard_srvs);
+    local_client.shutdown();
+    let fin = handle.join();
+    assert_eq!(fin.global_stats(0, fid0).unwrap().count(), 2);
+    assert_eq!(fin.global_stats(0, fid1).unwrap().count(), 3);
+}
+
+#[test]
+fn multi_process_ps_smoke() {
+    // The real thing: two `chimbuko ps-shard-server` OS processes, one
+    // `chimbuko ps-server` front-end process wired to them, and a routed
+    // client in this process — bit-identical to the reference.
+    use std::io::{BufRead, BufReader};
+    use std::process::{Child, Command, Stdio};
+
+    struct ChildGuard(Child);
+    impl Drop for ChildGuard {
+        fn drop(&mut self) {
+            let _ = self.0.kill();
+            let _ = self.0.wait();
+        }
+    }
+
+    fn spawn_server(args: &[&str], marker: &str) -> (ChildGuard, String) {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_chimbuko"))
+            .args(args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning chimbuko server process");
+        let stdout = child.stdout.take().expect("child stdout");
+        let mut line = String::new();
+        BufReader::new(stdout)
+            .read_line(&mut line)
+            .expect("reading server banner");
+        let addr = line
+            .rsplit(marker)
+            .next()
+            .and_then(|s| s.split_whitespace().next())
+            .unwrap_or_default()
+            .to_string();
+        assert!(addr.contains(':'), "could not parse address from banner: {line:?}");
+        (ChildGuard(child), addr)
+    }
+
+    let (_s0, a0) = spawn_server(
+        &["ps-shard-server", "--addr", "127.0.0.1:0", "--shard-id", "0", "--shards", "2"],
+        "listening on ",
+    );
+    let (_s1, a1) = spawn_server(
+        &["ps-shard-server", "--addr", "127.0.0.1:0", "--shard-id", "1", "--shards", "2"],
+        "listening on ",
+    );
+    let ranks = 3usize;
+    let endpoints = format!("{a0},{a1}");
+    let (_fe, fa) = spawn_server(
+        &[
+            "ps-server",
+            "--addr",
+            "127.0.0.1:0",
+            "--endpoints",
+            &endpoints,
+            "--ranks",
+            &ranks.to_string(),
+            "--publish-every",
+            "1000000",
+        ],
+        "server on ",
+    );
+
+    let client = PsClient::connect(&fa).expect("connecting to front-end process");
+    assert_eq!(client.shard_count(), 2);
+
+    let mut rng = Rng::new(0xBEEF);
+    let workload = gen_workload(&mut rng, ranks, 8, 6);
+    let (reference, ref_replies) = drive_reference(&workload, ranks);
+    assert!(
+        !reference.global_events().is_empty(),
+        "workload must flag a global event or the delivery check is vacuous"
+    );
+    assert_client_matches_reference(
+        &client,
+        &workload,
+        &reference,
+        &ref_replies,
+        "multi-process",
+    );
 }
