@@ -84,8 +84,24 @@ fn main() {
         ep_last.agg_msgs_per_sync,
     );
 
+    // --- PS rebalance sweep: skewed workload, rebalancer off vs on --------
+    let (rb_shards, rb_clients, rb_syncs) = if fast { (4, 2, 400) } else { (4, 4, 2_000) };
+    println!(
+        "\nPS rebalance sweep: {} shards, {} clients x {} skewed syncs per phase\n",
+        rb_shards, rb_clients, rb_syncs
+    );
+    let reb = chimbuko::exp::run_ps_rebalance_sweep(rb_shards, rb_clients, rb_syncs, 7);
+    print!("{}", reb.render());
+    let off = &reb.rows[0];
+    let on = &reb.rows[1];
+    println!(
+        "shape check: max/mean per-shard merge load {:.2} → {:.2} (static stays {:.2}); \
+         acceptance: rebalanced ratio < 1.5",
+        on.max_mean_before, on.max_mean_after, off.max_mean_after,
+    );
+
     let out = "BENCH_ps_shards.json";
-    std::fs::write(out, chimbuko::exp::ps_bench_json(&sweep, &eps).to_pretty())
+    std::fs::write(out, chimbuko::exp::ps_bench_json(&sweep, &eps, &reb).to_pretty())
         .expect("writing BENCH_ps_shards.json");
     println!("wrote {out}");
 }

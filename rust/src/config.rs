@@ -104,6 +104,20 @@ pub struct Config {
     /// the PS to the multi-process topology: stat shards live in those
     /// processes and this process keeps only the aggregator/front-end.
     pub ps_endpoints: Vec<String>,
+    /// TCP connections per remote PS shard endpoint. The driver's AD
+    /// workers pick `rank % pool`, so they no longer serialize behind a
+    /// single write→read window per shard (the `rust/docs/ps.md`
+    /// limitation before the pool).
+    pub ps_conn_pool: usize,
+    /// Skew-check cadence of the PS rebalancer, milliseconds; 0 (default)
+    /// disables live rebalancing (placement stays at epoch 0).
+    pub ps_rebalance_interval_ms: u64,
+    /// Rebalance trigger: act when the windowed per-shard merge load has
+    /// max/mean above this ratio (must be ≥ 1).
+    pub ps_rebalance_max_ratio: f64,
+    /// Minimum windowed merge count before the rebalancer judges skew
+    /// (tiny windows are noise); 0 = judge every window.
+    pub ps_rebalance_min_merges: u64,
     /// Wall-clock viz publish cadence in milliseconds (the paper's 1 s);
     /// 0 disables. Runs alongside the report-count cadence so viz
     /// freshness is decoupled from rank count.
@@ -163,6 +177,10 @@ impl Default for Config {
             ps_period_steps: 1,
             ps_shards: 4,
             ps_endpoints: Vec::new(),
+            ps_conn_pool: 4,
+            ps_rebalance_interval_ms: 0,
+            ps_rebalance_max_ratio: 1.5,
+            ps_rebalance_min_merges: 256,
             publish_interval_ms: 0,
             provdb_addr: String::new(),
             provdb_shards: 4,
@@ -233,6 +251,10 @@ impl Config {
                     .filter(|s| !s.is_empty())
                     .collect();
             }
+            "ps.conn_pool" => self.ps_conn_pool = v.parse()?,
+            "ps.rebalance_interval_ms" => self.ps_rebalance_interval_ms = v.parse()?,
+            "ps.rebalance_max_ratio" => self.ps_rebalance_max_ratio = v.parse()?,
+            "ps.rebalance_min_merges" => self.ps_rebalance_min_merges = v.parse()?,
             "ps.publish_interval_ms" => self.publish_interval_ms = v.parse()?,
             "provdb.addr" => self.provdb_addr = v.to_string(),
             "provdb.shards" => self.provdb_shards = v.parse()?,
@@ -267,11 +289,19 @@ impl Config {
         if self.ps_period_steps == 0 {
             bail!("ps.period_steps must be > 0");
         }
-        if self.ps_shards == 0 {
-            bail!("ps.shards must be > 0");
+        if self.ps_shards == 0 || self.ps_shards > crate::placement::SLOTS {
+            bail!("ps.shards must be in 1..={}", crate::placement::SLOTS);
         }
-        if self.provdb_shards == 0 {
-            bail!("provdb.shards must be > 0");
+        if self.ps_conn_pool == 0 {
+            bail!("ps.conn_pool must be > 0");
+        }
+        if self.ps_rebalance_max_ratio < 1.0 {
+            bail!("ps.rebalance_max_ratio must be >= 1.0");
+        }
+        if self.provdb_shards == 0 || self.provdb_shards > crate::placement::SLOTS {
+            // Placement routes through SLOTS fixed slots; more shards
+            // than slots would leave the excess permanently empty.
+            bail!("provdb.shards must be in 1..={}", crate::placement::SLOTS);
         }
         if self.provdb_batch == 0 {
             bail!("provdb.batch must be > 0");
@@ -294,6 +324,10 @@ impl Config {
             ("ps_period_steps", Json::num(self.ps_period_steps as f64)),
             ("ps_shards", Json::num(self.ps_shards as f64)),
             ("ps_endpoints", Json::str(&self.ps_endpoints.join(","))),
+            ("ps_conn_pool", Json::num(self.ps_conn_pool as f64)),
+            ("ps_rebalance_interval_ms", Json::num(self.ps_rebalance_interval_ms as f64)),
+            ("ps_rebalance_max_ratio", Json::num(self.ps_rebalance_max_ratio)),
+            ("ps_rebalance_min_merges", Json::num(self.ps_rebalance_min_merges as f64)),
             ("ps_publish_interval_ms", Json::num(self.publish_interval_ms as f64)),
             ("provdb_addr", Json::str(&self.provdb_addr)),
             ("provdb_shards", Json::num(self.provdb_shards as f64)),
@@ -426,6 +460,27 @@ publish_interval_ms = 1000
     }
 
     #[test]
+    fn ps_rebalance_keys_parse_and_validate() {
+        let text = r#"
+[ps]
+conn_pool = 2
+rebalance_interval_ms = 500
+rebalance_max_ratio = 1.3
+rebalance_min_merges = 64
+"#;
+        let c = Config::from_str(text).unwrap();
+        assert_eq!(c.ps_conn_pool, 2);
+        assert_eq!(c.ps_rebalance_interval_ms, 500);
+        assert_eq!(c.ps_rebalance_max_ratio, 1.3);
+        assert_eq!(c.ps_rebalance_min_merges, 64);
+        // Defaults: pool of 4, live rebalancing off.
+        assert_eq!(Config::default().ps_conn_pool, 4);
+        assert_eq!(Config::default().ps_rebalance_interval_ms, 0);
+        assert!(Config::from_str("[ps]\nconn_pool = 0").is_err());
+        assert!(Config::from_str("[ps]\nrebalance_max_ratio = 0.5").is_err());
+    }
+
+    #[test]
     fn provdb_keys_parse_and_validate() {
         let text = r#"
 [provdb]
@@ -450,6 +505,10 @@ max_records_per_rank = 500
         assert!(Config::from_str("ranks = 0").is_err());
         assert!(Config::from_str("alpha = -1").is_err());
         assert!(Config::from_str("[ps]\nshards = 0").is_err());
+        // Placement routes through 256 fixed slots; more shards than
+        // slots would leave the excess permanently empty.
+        assert!(Config::from_str("[ps]\nshards = 500").is_err());
+        assert!(Config::from_str("[provdb]\nshards = 500").is_err());
         assert!(Config::from_str("engine = adios").is_err());
         assert!(Config::from_str("ranks = abc").is_err());
     }

@@ -230,10 +230,14 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
         let (c, h) = ps::spawn_with(ps::PsOpts {
             shards: cfg.ps_shards,
             endpoints: cfg.ps_endpoints.clone(),
+            conn_pool: cfg.ps_conn_pool,
             viz_tx: Some(viz_tx),
             publish_every: cfg.ranks.max(1),
             publish_interval_ms: cfg.publish_interval_ms,
             reports_per_step: cfg.ranks,
+            rebalance_interval_ms: cfg.ps_rebalance_interval_ms,
+            rebalance_max_ratio: cfg.ps_rebalance_max_ratio,
+            rebalance_min_merges: cfg.ps_rebalance_min_merges,
         })
         .context("spawning parameter server")?;
         (Some(c), Some(h))

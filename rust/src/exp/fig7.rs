@@ -403,11 +403,13 @@ impl EndpointSweepResult {
 }
 
 /// The combined `BENCH_ps_shards.json` payload: the in-process shard
-/// sweep plus the per-endpoint TCP sweep, so the perf trajectory of both
-/// layouts lives in one artifact across PRs.
+/// sweep, the per-endpoint TCP sweep, and the skewed-workload rebalance
+/// sweep, so the perf trajectory of all three lives in one artifact
+/// across PRs.
 pub fn ps_bench_json(
     shards: &ShardSweepResult,
     endpoints: &EndpointSweepResult,
+    rebalance: &RebalanceSweepResult,
 ) -> crate::util::json::Json {
     use crate::util::json::Json;
     Json::obj(vec![
@@ -418,7 +420,163 @@ pub fn ps_bench_json(
         ("endpoint_clients", Json::num(endpoints.clients as f64)),
         ("endpoint_funcs_per_sync", Json::num(endpoints.funcs_per_sync as f64)),
         ("endpoint_rows", endpoints.rows_json()),
+        ("rebalance_rows", rebalance.rows_json()),
     ])
+}
+
+/// One variant of the skewed-workload rebalance sweep: the same hot-slot
+/// load with the rebalancer off vs on.
+#[derive(Clone, Debug)]
+pub struct RebalanceSweepRow {
+    pub shards: usize,
+    /// Whether a rebalance was fired between the two phases.
+    pub rebalance: bool,
+    /// Windowed per-shard merge load max/mean over phase 1 (skewed,
+    /// pre-rebalance — the number that triggers the rebalancer).
+    pub max_mean_before: f64,
+    /// The same ratio over phase 2 (post-rebalance when `rebalance`).
+    pub max_mean_after: f64,
+    /// Placement epoch at the end of the run (0 = never rebalanced).
+    pub epoch: u64,
+    pub syncs_per_sec: f64,
+    pub wall_seconds: f64,
+}
+
+/// Result of the rebalance sweep (appended to `BENCH_ps_shards.json`).
+#[derive(Clone, Debug)]
+pub struct RebalanceSweepResult {
+    pub rows: Vec<RebalanceSweepRow>,
+    pub shards: usize,
+    pub clients: usize,
+}
+
+impl RebalanceSweepResult {
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "PS rebalance sweep — skewed load, rebalancer off vs on",
+            &["shards", "rebalance", "max/mean before", "max/mean after", "epoch", "syncs/s"],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                r.shards.to_string(),
+                if r.rebalance { "on" } else { "off" }.to_string(),
+                format!("{:.2}", r.max_mean_before),
+                format!("{:.2}", r.max_mean_after),
+                r.epoch.to_string(),
+                format!("{:.0}", r.syncs_per_sec),
+            ]);
+        }
+        format!(
+            "{}({} client threads; one hot fid in every delta + uniform tail)\n",
+            t.render(),
+            self.clients
+        )
+    }
+
+    pub fn rows_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::arr(
+            self.rows
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("shards", Json::num(r.shards as f64)),
+                        ("rebalance", Json::Bool(r.rebalance)),
+                        ("max_mean_before", Json::num(r.max_mean_before)),
+                        ("max_mean_after", Json::num(r.max_mean_after)),
+                        ("epoch", Json::num(r.epoch as f64)),
+                        ("syncs_per_sec", Json::num(r.syncs_per_sec)),
+                        ("wall_seconds", Json::num(r.wall_seconds)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Drive the skewed workload: every delta touches one hot function
+/// (~1/3 of all merges) plus two draws from a 200-function uniform tail.
+fn drive_skewed(client: &ps::PsClient, clients: usize, syncs_per_client: usize, seed: u64) {
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let cl = client.clone();
+        let mut rng = Rng::new(seed ^ (c as u64).wrapping_mul(0x9E37_79B9));
+        joins.push(std::thread::spawn(move || {
+            for _ in 0..syncs_per_client {
+                let mut delta = crate::stats::StatsTable::new();
+                delta.push(0, rng.lognormal(6.0, 0.5));
+                delta.push(8 + rng.usize(200) as u32, rng.lognormal(6.0, 0.5));
+                delta.push(8 + rng.usize(200) as u32, rng.lognormal(6.0, 0.5));
+                cl.sync(0, c as u32, &delta);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().expect("rebalance sweep client panicked");
+    }
+}
+
+/// Windowed per-shard merge loads between two cumulative per-slot
+/// counter readings (`PsHandle::slot_merge_counters`). Counters are per
+/// (shard, slot) and stay with the shard that did the merging, so this
+/// is exact across migrations.
+fn shard_window(
+    prev: &[(u32, u32, u64)],
+    now: &[(u32, u32, u64)],
+    n_shards: usize,
+) -> Vec<u64> {
+    let prev: std::collections::HashMap<(u32, u32), u64> =
+        prev.iter().map(|&(s, slot, m)| ((s, slot), m)).collect();
+    let mut per = vec![0u64; n_shards];
+    for &(shard, slot, m) in now {
+        per[shard as usize] += m.saturating_sub(prev.get(&(shard, slot)).copied().unwrap_or(0));
+    }
+    per
+}
+
+/// The rebalance acceptance sweep: run the skewed workload twice on a
+/// `shards`-shard constellation — phase 1 establishes the skew, then
+/// (in the `on` variant) one skew-driven rebalance fires, then phase 2
+/// measures the windowed per-shard load again. The `off` variant is the
+/// static-placement baseline. Under this workload with ≥ 4 shards, the
+/// rebalanced max/mean must land below 1.5 (asserted in the fig7 tests;
+/// the rows land in `BENCH_ps_shards.json`).
+pub fn run_ps_rebalance_sweep(
+    shards: usize,
+    clients: usize,
+    syncs_per_client: usize,
+    seed: u64,
+) -> RebalanceSweepResult {
+    let mut rows = Vec::new();
+    for rebalance in [false, true] {
+        let (client, handle) = ps::spawn(shards, None, usize::MAX >> 1, clients.max(1));
+        let t0 = Instant::now();
+        drive_skewed(&client, clients, syncs_per_client, seed);
+        let c1 = handle.slot_merge_counters();
+        let before = shard_window(&[], &c1, shards);
+        let mut epoch = 0u64;
+        if rebalance {
+            if let Some(r) = handle.rebalance_once().expect("rebalance") {
+                epoch = r.epoch;
+            }
+        }
+        drive_skewed(&client, clients, syncs_per_client, seed ^ 0xA5A5);
+        let c2 = handle.slot_merge_counters();
+        let after = shard_window(&c1, &c2, shards);
+        let wall = t0.elapsed().as_secs_f64();
+        client.shutdown();
+        let fin = handle.join();
+        rows.push(RebalanceSweepRow {
+            shards,
+            rebalance,
+            max_mean_before: crate::placement::load_ratio(&before),
+            max_mean_after: crate::placement::load_ratio(&after),
+            epoch,
+            syncs_per_sec: fin.sync_count as f64 / wall.max(1e-9),
+            wall_seconds: wall,
+        });
+    }
+    RebalanceSweepResult { rows, shards, clients }
 }
 
 /// Sweep PS TCP *endpoint* counts under a fixed concurrent sync load:
@@ -566,10 +724,44 @@ mod tests {
         }
         let text = eps.render();
         assert!(text.contains("PS endpoint sweep"));
-        let combined = ps_bench_json(&shards, &eps);
+        let reb = run_ps_rebalance_sweep(2, 2, 50, 11);
+        let combined = ps_bench_json(&shards, &eps, &reb);
         assert_eq!(combined.get("bench").unwrap().as_str(), Some("ps_shards"));
         assert_eq!(combined.get("rows").unwrap().as_arr().unwrap().len(), 1);
         assert_eq!(combined.get("endpoint_rows").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(combined.get("rebalance_rows").unwrap().as_arr().unwrap().len(), 2);
         crate::util::json::parse(&combined.to_pretty()).unwrap();
+    }
+
+    #[test]
+    fn rebalance_sweep_meets_acceptance_ratio() {
+        // The acceptance criterion: single-hot-function workload, 4
+        // shards — the rebalanced max/mean per-shard merge load lands
+        // below 1.5 while the static baseline stays skewed.
+        let res = run_ps_rebalance_sweep(4, 2, 400, 7);
+        assert_eq!(res.rows.len(), 2);
+        let off = &res.rows[0];
+        let on = &res.rows[1];
+        assert!(!off.rebalance && on.rebalance);
+        assert_eq!(off.epoch, 0, "static baseline must not rebalance");
+        assert!(
+            off.max_mean_before > 1.5 && on.max_mean_before > 1.5,
+            "workload must be skewed (off {:.2}, on {:.2})",
+            off.max_mean_before,
+            on.max_mean_before
+        );
+        assert!(
+            off.max_mean_after > 1.5,
+            "static placement must stay skewed ({:.2})",
+            off.max_mean_after
+        );
+        assert!(on.epoch > 0, "skew must trigger a rebalance");
+        assert!(
+            on.max_mean_after < 1.5,
+            "rebalanced max/mean {:.2} must be below 1.5",
+            on.max_mean_after
+        );
+        let text = res.render();
+        assert!(text.contains("PS rebalance sweep"));
     }
 }

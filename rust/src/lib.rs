@@ -24,6 +24,7 @@
 //! | [`adios`] | step-based streaming substrate (SST-like + BP file engine) |
 //! | [`stats`] | streaming moments with Pébay pairwise merging |
 //! | [`ad`] | call-stack building + anomaly detection (Rust and XLA paths) |
+//! | [`placement`] | epoch-versioned slot → shard routing tables |
 //! | [`ps`] | the online AD parameter server |
 //! | [`provenance`] | prescriptive provenance records, store and queries |
 //! | [`provdb`] | the sharded, networked provenance database service |
@@ -40,6 +41,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod exp;
+pub mod placement;
 pub mod provdb;
 pub mod provenance;
 pub mod ps;

@@ -2,7 +2,9 @@
 //!
 //! ```text
 //! chimbuko run      [--config f] [--ranks N] [--steps N] [--backend rust|xla]
-//!                   [--ps-shards N] [--ps-endpoints a,b,…] [--out dir]
+//!                   [--ps-shards N] [--ps-endpoints a,b,…] [--ps-conn-pool N]
+//!                   [--rebalance-interval-ms N] [--rebalance-max-ratio X]
+//!                   [--rebalance-min-merges N] [--out dir]
 //!                   [--provdb host:port] [--unfiltered] [--serve]
 //! chimbuko gen      [--ranks N] [--steps N] [--out trace.bp] [--unfiltered]
 //! chimbuko replay   --dir <out_dir>        re-index a stored run, print stats
@@ -11,7 +13,9 @@
 //! chimbuko exp      <fig7|fig8|fig9|viz|case> [--fast]    paper experiments
 //! chimbuko compare  --a <dir> --b <dir>    cross-run provenance mining
 //! chimbuko ps-server [--addr host:port] [--shards N] [--ranks N]
-//!                   [--endpoints a,b,…] [--publish-interval-ms N]
+//!                   [--endpoints a,b,…] [--conn-pool N]
+//!                   [--publish-interval-ms N] [--rebalance-interval-ms N]
+//!                   [--rebalance-max-ratio X] [--rebalance-min-merges N]
 //!                   standalone TCP parameter server (front-end when
 //!                   --endpoints lists ps-shard-server addresses)
 //! chimbuko ps-shard-server --shard-id I --shards N [--addr host:port]
@@ -98,6 +102,18 @@ fn config_of(args: &Args) -> anyhow::Result<Config> {
     }
     if let Some(v) = args.get("ps-endpoints") {
         cfg.apply("ps.endpoints", v)?;
+    }
+    if let Some(v) = args.get("ps-conn-pool") {
+        cfg.apply("ps.conn_pool", v)?;
+    }
+    if let Some(v) = args.get("rebalance-interval-ms") {
+        cfg.apply("ps.rebalance_interval_ms", v)?;
+    }
+    if let Some(v) = args.get("rebalance-max-ratio") {
+        cfg.apply("ps.rebalance_max_ratio", v)?;
+    }
+    if let Some(v) = args.get("rebalance-min-merges") {
+        cfg.apply("ps.rebalance_min_merges", v)?;
     }
     if let Some(v) = args.get("publish-interval-ms") {
         cfg.apply("ps.publish_interval_ms", v)?;
@@ -306,10 +322,14 @@ fn cmd_ps_server(args: &Args) -> anyhow::Result<()> {
     let (client, _handle) = chimbuko::ps::spawn_with(chimbuko::ps::PsOpts {
         shards,
         endpoints: endpoints.clone(),
+        conn_pool: args.usize_opt("conn-pool", 4),
         viz_tx: None,
         publish_every: args.usize_opt("publish-every", 64),
         publish_interval_ms: args.u64_opt("publish-interval-ms", 0),
         reports_per_step: args.usize_opt("ranks", 64),
+        rebalance_interval_ms: args.u64_opt("rebalance-interval-ms", 0),
+        rebalance_max_ratio: args.f64_opt("rebalance-max-ratio", 1.5),
+        rebalance_min_merges: args.u64_opt("rebalance-min-merges", 256),
     })?;
     let server =
         chimbuko::ps::net::PsTcpServer::start_with_topology(&addr, client, endpoints.clone())?;
@@ -446,6 +466,13 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
             args.u64_opt("seed", 7),
         )?;
         print!("{}", eps.render());
+        let reb = chimbuko::exp::run_ps_rebalance_sweep(
+            args.usize_opt("rebalance-shards", 4),
+            if fast { 2 } else { 4 },
+            if fast { 400 } else { 2_000 },
+            args.u64_opt("seed", 7),
+        );
+        print!("{}", reb.render());
         Ok(())
     };
     let run_fig8 = || -> anyhow::Result<()> {

@@ -1,0 +1,327 @@
+//! Epoch-versioned shard **placement**: the routing table that says which
+//! shard owns which key, for both the parameter server (keys are
+//! `(app, fid)` function statistics) and the provenance database (keys
+//! are `(app, rank)` partitions).
+//!
+//! Before this module, placement was a frozen hash (`ps::shard_of`,
+//! `provdb::prov_shard_of`): one `splitmix64` step modulo the shard
+//! count. That is cheap and uniform over *keys*, but load is not uniform
+//! over keys — a single hot function (`md_forces` in the paper's NWChem
+//! runs) pins one shard while its siblings idle, and a frozen hash gives
+//! the system no way to react.
+//!
+//! [`Placement`] makes the routing table first-class data:
+//!
+//! * keys hash to one of [`SLOTS`] fixed **slots**
+//!   ([`Placement::slot_of`] — the same `splitmix64` mixing as before);
+//! * a table maps every slot to its owning shard;
+//! * the table is versioned by a monotonic **epoch**. Epoch 0 is the
+//!   deterministic default (`slot % n_shards`), which is what the free
+//!   functions `shard_of`/`prov_shard_of` now compute — no behaviour
+//!   change for deployments that never rebalance.
+//!
+//! A rebalancer produces a successor table with [`Placement::with_moves`]
+//! (slot reassignments, epoch + 1). Every sync frame in the PS wire
+//! protocol carries the sender's epoch; a shard that sees a frame from a
+//! different epoch replies `Rerouted`, which makes the client refresh its
+//! table and retry — see `ps::shard` for the migration handshake that
+//! moves the affected state between shards before a new epoch commits.
+
+use crate::util::rng::splitmix64;
+use crate::util::wire::Cursor;
+use anyhow::{bail, Result};
+
+/// Number of routing slots. Keys hash uniformly onto slots; slots are the
+/// unit of reassignment. 256 gives a rebalancer fine-grained moves (at 8
+/// shards each owns 32 slots) while keeping the table one page.
+pub const SLOTS: usize = 256;
+
+/// Epoch-versioned slot → shard routing table.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Placement {
+    epoch: u64,
+    n_shards: u32,
+    /// `slots[s]` = shard owning slot `s`; length is always [`SLOTS`].
+    slots: Vec<u32>,
+}
+
+impl Placement {
+    /// The epoch-0 default: slot `s` belongs to shard `s % n_shards` —
+    /// even, deterministic, and identical on every node without any
+    /// coordination.
+    pub fn new(n_shards: usize) -> Placement {
+        let n = n_shards.max(1) as u32;
+        Placement {
+            epoch: 0,
+            n_shards: n,
+            slots: (0..SLOTS as u32).map(|s| s % n).collect(),
+        }
+    }
+
+    /// Monotonic table version. Two tables with the same epoch (from the
+    /// same lineage) are identical.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards as usize
+    }
+
+    /// Which slot a key hashes to — placement-independent (one
+    /// `splitmix64` step over the packed key, stable across epochs; only
+    /// slot *ownership* ever changes).
+    #[inline]
+    pub fn slot_of(app: u32, id: u32) -> usize {
+        let mut key = ((app as u64) << 32) | id as u64;
+        (splitmix64(&mut key) % SLOTS as u64) as usize
+    }
+
+    /// Which shard owns a key under this table.
+    #[inline]
+    pub fn shard_of(&self, app: u32, id: u32) -> usize {
+        self.slots[Self::slot_of(app, id)] as usize
+    }
+
+    /// Which shard owns a slot under this table.
+    #[inline]
+    pub fn shard_of_slot(&self, slot: usize) -> usize {
+        self.slots[slot] as usize
+    }
+
+    /// The epoch-0 routing for a key, without building a table — the
+    /// shared default behind the free `ps::shard_of` and
+    /// `provdb::prov_shard_of` helpers.
+    #[inline]
+    pub fn default_shard_of(app: u32, id: u32, n_shards: usize) -> usize {
+        Self::slot_of(app, id) % n_shards.max(1)
+    }
+
+    /// Successor table: apply `moves` (slot → new shard) and bump the
+    /// epoch. Rejects out-of-range slots/shards; no-op moves are allowed
+    /// (the plan may be conservative) but at least one real move is
+    /// required — an epoch bump must mean the table changed.
+    pub fn with_moves(&self, moves: &[(usize, u32)]) -> Result<Placement> {
+        let mut next = self.clone();
+        let mut changed = false;
+        for &(slot, shard) in moves {
+            if slot >= SLOTS {
+                bail!("slot {slot} out of range (0..{SLOTS})");
+            }
+            if shard >= self.n_shards {
+                bail!("shard {shard} out of range (0..{})", self.n_shards);
+            }
+            changed |= next.slots[slot] != shard;
+            next.slots[slot] = shard;
+        }
+        if !changed {
+            bail!("placement moves are all no-ops");
+        }
+        next.epoch = self.epoch + 1;
+        Ok(next)
+    }
+
+    /// Slots owned by `shard` under this table.
+    pub fn slots_of_shard(&self, shard: u32) -> Vec<usize> {
+        (0..SLOTS).filter(|&s| self.slots[s] == shard).collect()
+    }
+
+    /// Slots `shard` owns under `newer` but not under `self` — the slots
+    /// whose state must be installed at `shard` during the migration to
+    /// `newer`.
+    pub fn gains(&self, newer: &Placement, shard: u32) -> Vec<usize> {
+        (0..SLOTS)
+            .filter(|&s| newer.slots[s] == shard && self.slots[s] != shard)
+            .collect()
+    }
+
+    /// Wire encoding: `epoch u64, n_shards u32, n_slots u32, slots × u32`
+    /// (little-endian, appended to `buf`).
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        buf.extend_from_slice(&self.epoch.to_le_bytes());
+        buf.extend_from_slice(&self.n_shards.to_le_bytes());
+        buf.extend_from_slice(&(self.slots.len() as u32).to_le_bytes());
+        for &s in &self.slots {
+            buf.extend_from_slice(&s.to_le_bytes());
+        }
+    }
+
+    /// Wire decoding, validating the invariants (the wire is a trust
+    /// boundary: a malformed table would silently fragment the view).
+    pub fn decode(c: &mut Cursor) -> Result<Placement> {
+        let epoch = c.u64()?;
+        let n_shards = c.u32()?;
+        let n_slots = c.u32()? as usize;
+        if n_shards == 0 {
+            bail!("placement with zero shards");
+        }
+        if n_slots != SLOTS {
+            bail!("placement has {n_slots} slots, expected {SLOTS}");
+        }
+        let mut slots = Vec::with_capacity(SLOTS);
+        for _ in 0..n_slots {
+            let s = c.u32()?;
+            if s >= n_shards {
+                bail!("placement slot maps to shard {s} of {n_shards}");
+            }
+            slots.push(s);
+        }
+        Ok(Placement { epoch, n_shards, slots })
+    }
+}
+
+/// max/mean ratio of a per-shard load vector — the skew number the
+/// rebalancer triggers on and the fig7 rebalance sweep reports. 1.0 is
+/// perfectly balanced; an all-zero window reports 1.0 (nothing to fix).
+pub fn load_ratio(per_shard: &[u64]) -> f64 {
+    if per_shard.is_empty() {
+        return 1.0;
+    }
+    let total: u64 = per_shard.iter().sum();
+    if total == 0 {
+        return 1.0;
+    }
+    let mean = total as f64 / per_shard.len() as f64;
+    let max = *per_shard.iter().max().expect("non-empty") as f64;
+    max / mean
+}
+
+/// Plan slot moves that reduce `max/mean` per-shard load below
+/// `max_ratio`, greedily: repeatedly move the hottest movable slot from
+/// the most- to the least-loaded shard while that strictly lowers the
+/// pairwise imbalance. `slot_loads[s]` is the observed load of slot `s`
+/// over the measurement window. Returns an empty plan when the window is
+/// already balanced (or nothing can improve — e.g. one slot carries all
+/// the load).
+pub fn plan_moves(
+    placement: &Placement,
+    slot_loads: &[u64],
+    max_ratio: f64,
+) -> Vec<(usize, u32)> {
+    assert_eq!(slot_loads.len(), SLOTS, "one load per slot");
+    let n = placement.n_shards();
+    let mut owner: Vec<u32> = (0..SLOTS).map(|s| placement.shard_of_slot(s) as u32).collect();
+    let mut shard_load = vec![0u64; n];
+    for s in 0..SLOTS {
+        shard_load[owner[s] as usize] += slot_loads[s];
+    }
+    let mut moves: Vec<(usize, u32)> = Vec::new();
+    // Each iteration strictly reduces max-min imbalance, so SLOTS
+    // iterations is a generous bound.
+    for _ in 0..SLOTS {
+        if load_ratio(&shard_load) <= max_ratio {
+            break;
+        }
+        let (src, &src_load) =
+            shard_load.iter().enumerate().max_by_key(|&(_, &l)| l).expect("shards");
+        let (dst, &dst_load) =
+            shard_load.iter().enumerate().min_by_key(|&(_, &l)| l).expect("shards");
+        // Hottest slot on the source that still improves when moved:
+        // after the move the pair is (src-l, dst+l); require dst+l <
+        // src so the maximum of the pair strictly drops.
+        let candidate = (0..SLOTS)
+            .filter(|&s| owner[s] as usize == src && slot_loads[s] > 0)
+            .filter(|&s| dst_load + slot_loads[s] < src_load)
+            .max_by_key(|&s| slot_loads[s]);
+        let Some(slot) = candidate else { break };
+        owner[slot] = dst as u32;
+        shard_load[src] -= slot_loads[slot];
+        shard_load[dst] += slot_loads[slot];
+        moves.push((slot, dst as u32));
+    }
+    moves
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::wire::Cursor;
+
+    #[test]
+    fn epoch0_matches_default_shard_of() {
+        for n in [1usize, 2, 4, 7, 16] {
+            let p = Placement::new(n);
+            assert_eq!(p.epoch(), 0);
+            assert_eq!(p.n_shards(), n);
+            for app in 0..3u32 {
+                for id in 0..300u32 {
+                    assert_eq!(p.shard_of(app, id), Placement::default_shard_of(app, id, n));
+                    assert!(p.shard_of(app, id) < n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn moves_bump_epoch_and_reroute() {
+        let p = Placement::new(4);
+        let slot = Placement::slot_of(0, 7);
+        let new_shard = ((p.shard_of_slot(slot) + 1) % 4) as u32;
+        let q = p.with_moves(&[(slot, new_shard)]).unwrap();
+        assert_eq!(q.epoch(), 1);
+        assert_eq!(q.shard_of(0, 7), new_shard as usize);
+        // Other slots untouched.
+        for s in 0..SLOTS {
+            if s != slot {
+                assert_eq!(q.shard_of_slot(s), p.shard_of_slot(s));
+            }
+        }
+        // Gains are visible from the diff.
+        assert_eq!(p.gains(&q, new_shard), vec![slot]);
+        assert!(p.gains(&q, p.shard_of_slot(slot) as u32).is_empty());
+        // No-op and out-of-range plans are rejected.
+        assert!(p.with_moves(&[(slot, p.shard_of_slot(slot) as u32)]).is_err());
+        assert!(p.with_moves(&[(SLOTS, 0)]).is_err());
+        assert!(p.with_moves(&[(0, 4)]).is_err());
+    }
+
+    #[test]
+    fn wire_round_trip() {
+        let p = Placement::new(7).with_moves(&[(3, 5), (250, 1)]).unwrap();
+        let mut buf = Vec::new();
+        p.encode(&mut buf);
+        let q = Placement::decode(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(p, q);
+        // Truncated/corrupt tables are refused.
+        assert!(Placement::decode(&mut Cursor::new(&buf[..8])).is_err());
+        let mut bad = Vec::new();
+        Placement::new(2).encode(&mut bad);
+        bad[8] = 1; // n_shards = 1, but slots reference shard 1
+        assert!(Placement::decode(&mut Cursor::new(&bad)).is_err());
+    }
+
+    #[test]
+    fn planner_fixes_single_hot_slot_skew() {
+        let p = Placement::new(4);
+        let mut loads = vec![10u64; SLOTS];
+        // One slot carries ~30% of the total load.
+        let hot = 17usize;
+        loads[hot] = ((SLOTS as u64 - 1) * 10) * 3 / 7;
+        let mut shard_load = vec![0u64; 4];
+        for s in 0..SLOTS {
+            shard_load[p.shard_of_slot(s)] += loads[s];
+        }
+        assert!(load_ratio(&shard_load) > 1.5, "setup must be skewed");
+        let moves = plan_moves(&p, &loads, 1.2);
+        assert!(!moves.is_empty());
+        let q = p.with_moves(&moves).unwrap();
+        let mut after = vec![0u64; 4];
+        for s in 0..SLOTS {
+            after[q.shard_of_slot(s)] += loads[s];
+        }
+        assert!(
+            load_ratio(&after) < 1.5,
+            "planned ratio {} must be under 1.5 (loads {after:?})",
+            load_ratio(&after)
+        );
+    }
+
+    #[test]
+    fn planner_is_a_noop_when_balanced() {
+        let p = Placement::new(4);
+        let loads = vec![5u64; SLOTS];
+        assert!(plan_moves(&p, &loads, 1.5).is_empty());
+        // All-zero window: nothing to do.
+        assert!(plan_moves(&p, &vec![0u64; SLOTS], 1.5).is_empty());
+    }
+}

@@ -45,13 +45,15 @@ use std::thread::JoinHandle;
 
 /// Stable shard routing: which of `n_shards` owns `(app, rank)`.
 ///
-/// One [`splitmix64`](crate::util::rng::splitmix64) step over the packed
-/// key — the same mixer as [`ps::shard_of`](crate::ps::shard_of), but
-/// keyed by rank: provenance is partitioned by *who produced it*,
-/// statistics by *which function*.
+/// The epoch-0 default of the shared [`Placement`](crate::placement)
+/// abstraction — the same slot hashing as the PS's
+/// [`ps::shard_of`](crate::ps::shard_of), but keyed by rank: provenance
+/// is partitioned by *who produced it*, statistics by *which function*.
+/// The provDB stays at epoch 0 for now (no live rebalancing); its
+/// [`ProvStore`] routes through a `Placement` so the two subsystems
+/// share one placement type.
 pub fn prov_shard_of(app: u32, rank: u32, n_shards: usize) -> usize {
-    let mut key = ((app as u64) << 32) | rank as u64;
-    (crate::util::rng::splitmix64(&mut key) % n_shards.max(1) as u64) as usize
+    crate::placement::Placement::default_shard_of(app, rank, n_shards)
 }
 
 /// Retention policy applied per `(app, rank)` partition.
@@ -132,6 +134,9 @@ enum ShardReq {
 #[derive(Clone)]
 pub struct ProvStore {
     shards: Vec<Sender<ShardReq>>,
+    /// `(app, rank)` → shard routing table (epoch 0: the provDB has no
+    /// live rebalancing yet, but shares the PS's placement abstraction).
+    placement: crate::placement::Placement,
     seq: Arc<AtomicU64>,
     meta: Arc<RwLock<Option<Json>>>,
     meta_bytes: Arc<AtomicU64>,
@@ -158,7 +163,7 @@ impl ProvStore {
         let mut parts: Vec<Vec<(u64, ProvRecord)>> = vec![Vec::new(); self.shards.len()];
         for rec in records {
             let seq = self.seq.fetch_add(1, Ordering::Relaxed);
-            let shard = prov_shard_of(rec.app, rec.rank, self.shards.len());
+            let shard = self.placement.shard_of(rec.app, rec.rank);
             parts[shard].push((seq, rec));
         }
         for (i, part) in parts.into_iter().enumerate() {
@@ -173,7 +178,7 @@ impl ProvStore {
     /// otherwise; merge, order (sequence-stable), truncate.
     pub fn query(&self, q: &ProvQuery) -> Vec<ProvRecord> {
         let targets: Vec<usize> = match q.rank {
-            Some((app, rank)) => vec![prov_shard_of(app, rank, self.shards.len())],
+            Some((app, rank)) => vec![self.placement.shard_of(app, rank)],
             None => (0..self.shards.len()).collect(),
         };
         let (tx, rx) = channel();
@@ -325,6 +330,12 @@ pub fn spawn_store(
             .with_context(|| format!("creating provdb dir {}", d.display()))?;
     }
     let n = n_shards.max(1);
+    anyhow::ensure!(
+        n <= crate::placement::SLOTS,
+        "at most {} provdb shards supported ({n} requested): placement routes \
+         through that many fixed slots",
+        crate::placement::SLOTS
+    );
     let mut shard_txs: Vec<Sender<ShardReq>> = Vec::with_capacity(n);
     let mut joins = Vec::with_capacity(n);
     for i in 0..n {
@@ -339,6 +350,7 @@ pub fn spawn_store(
     }
     let store = ProvStore {
         shards: shard_txs.clone(),
+        placement: crate::placement::Placement::new(n),
         seq: Arc::new(AtomicU64::new(0)),
         meta: Arc::new(RwLock::new(None)),
         meta_bytes: Arc::new(AtomicU64::new(0)),

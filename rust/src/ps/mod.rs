@@ -32,10 +32,15 @@
 //!
 //! [`PsClient`](shard::PsClient) is a router over *pluggable per-shard
 //! connections* (in-process channels or per-shard TCP endpoints — see
-//! [`net`] and `docs/ps.md`): `sync` splits the rank's delta by
-//! `shard_of`, batches each shard's sub-delta into a single message,
-//! fans them out, and reassembles the reply (global stats for the
-//! touched functions + fresh global events) client-side.
+//! [`net`] and `docs/ps.md`): `sync` splits the rank's delta under the
+//! constellation's epoch-versioned [`Placement`](crate::placement)
+//! table, batches each shard's sub-delta into a single message stamped
+//! with the table's epoch, fans them out, and reassembles the reply
+//! (global stats for the touched functions + fresh global events)
+//! client-side. A shard that sees a frame from another epoch answers
+//! `Rerouted`; the client refreshes its table and resends only the
+//! bounced sub-frames — the healing step that makes live, skew-driven
+//! rebalancing ([`rebalance`]) invisible in the results.
 //!
 //! The event-fetch leg is **version-gated**: the aggregator owns a
 //! monotonic event-version counter (events flagged so far), every shard
@@ -55,8 +60,10 @@
 //! endpoints).
 
 pub mod net;
+pub mod rebalance;
 pub mod shard;
 
+pub use rebalance::RebalanceReport;
 pub use shard::{shard_of, spawn, spawn_with, PsClient, PsFinal, PsHandle, PsOpts, PsStats};
 
 use crate::ad::Label;
@@ -116,10 +123,10 @@ pub struct PsReply {
     pub event_version: u64,
 }
 
-/// Per-shard load counters (merge/sync counts), the groundwork for the
-/// ROADMAP's shard-rebalancing item: a rebalancer needs to see skew
-/// before it can move keys. Published inside each stat shard's partial
-/// snapshot and surfaced on `/api/ps_stats`.
+/// Per-shard load counters (merge/sync counts) — the skew signal the
+/// [`rebalance`] module acts on (per-slot counters drive the plan; these
+/// per-shard aggregates are what `/api/ps_stats` surfaces). Published
+/// inside each stat shard's partial snapshot.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ShardLoad {
     pub shard: u32,
@@ -129,6 +136,8 @@ pub struct ShardLoad {
     pub merges: u64,
     /// Functions owned by this shard's partition.
     pub functions: u64,
+    /// Placement slots this shard currently owns.
+    pub slots: u32,
 }
 
 /// Snapshot published to the visualization ingest channel.
@@ -162,6 +171,9 @@ pub struct VizSnapshot {
     pub global_events: Vec<GlobalEvent>,
     /// Per-shard load counters (absolute), from the stat shards' partials.
     pub shard_loads: Vec<ShardLoad>,
+    /// Epoch of the placement table the stat shards were serving when
+    /// this snapshot's partials were taken (0 until a rebalance commits).
+    pub placement_epoch: u64,
     /// True for incrementally-published snapshots: `ranks` and
     /// `global_events` carry only changes since the previous publish and
     /// must be folded with [`Self::fold_delta`], not adopted wholesale.
@@ -188,6 +200,7 @@ impl VizSnapshot {
         self.global_events.sort_by_key(|e| e.step);
         self.shard_loads.extend(other.shard_loads.iter().copied());
         self.shard_loads.sort_by_key(|l| l.shard);
+        self.placement_epoch = self.placement_epoch.max(other.placement_epoch);
     }
 
     /// Fold a *delta* snapshot into this (absolute) one: changed rank
@@ -216,6 +229,7 @@ impl VizSnapshot {
         if !d.shard_loads.is_empty() {
             self.shard_loads = d.shard_loads.clone();
         }
+        self.placement_epoch = self.placement_epoch.max(d.placement_epoch);
         self.delta = false;
     }
 }
@@ -497,6 +511,9 @@ impl ParameterServer {
             functions_tracked: self.global.len() as u64,
             global_events: self.global_events[published..].to_vec(),
             shard_loads: Vec::new(),
+            // The aggregator has no placement view; the stat shards'
+            // partials carry the epoch and the merge takes the max.
+            placement_epoch: 0,
             delta: true,
         }
     }
@@ -523,6 +540,7 @@ impl ParameterServer {
             functions_tracked: self.global.len() as u64,
             global_events: self.global_events.clone(),
             shard_loads: Vec::new(),
+            placement_epoch: 0,
             delta: false,
         }
     }

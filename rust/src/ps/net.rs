@@ -3,26 +3,30 @@
 //! nodes, PS instances spread across the machine; the reference
 //! implementation used ZeroMQ).
 //!
-//! Wire protocol (v3, topology-aware): length-prefixed binary messages,
+//! Wire protocol (v4, placement-aware): length-prefixed binary messages,
 //! little-endian (shared framing in [`util::wire`](crate::util::wire),
 //! shared accept loop / reconnecting clients in
 //! [`util::net`](crate::util::net)). Two server roles:
 //!
 //! * **Front-end** ([`PsTcpServer`]) — owns hello/topology, the
-//!   rank/step timeline (reports), global events and their per-rank
-//!   delivery cursors, and the aggregate stats query. Its hello reply
-//!   carries a shard→address map; when every address is empty the
-//!   front-end itself routes grouped sync frames (the degenerate
-//!   single-endpoint deployment, wire-compatible with protocol v2).
+//!   committed [`Placement`] table, the rank/step timeline (reports),
+//!   global events and their per-rank delivery cursors, and the
+//!   aggregate stats query. Its hello reply carries a shard→address map
+//!   *and* the placement; when every address is empty the front-end
+//!   itself routes grouped sync frames (the degenerate single-endpoint
+//!   deployment).
 //! * **Shard endpoint** ([`PsShardTcpServer`], the `ps-shard-server`
 //!   subcommand) — serves exactly one stat shard: sync frames go
 //!   straight to the owning shard's endpoint, replies piggyback the
 //!   aggregator event version (kept fresh by version pushes from the
-//!   front-end), and the merge stage fetches partial snapshots from it.
+//!   front-end), the rebalancer drives the migrate/install handshake
+//!   through it, and the merge stage fetches partial snapshots from it.
 //!
 //! ```text
+//! placement := epoch u64, n_shards u32, n_slots u32, n_slots × u32
+//!
 //! front-end request := u32 len, u8 kind, payload
-//!   kind 1 (sync):    app u32, rank u32, n_groups u32,
+//!   kind 1 (sync):    app u32, rank u32, epoch u64, n_groups u32,
 //!                     n_groups × (shard u32, n_entries u32, n_entries ×
 //!                       (fid u32, n u64, mean f64, m2 f64, min f64, max f64))
 //!   kind 2 (report):  app u32, rank u32, step u64, execs u64, anoms u64,
@@ -30,27 +34,42 @@
 //!   kind 3 (hello):   (empty)
 //!   kind 4 (fetch):   app u32, rank u32
 //!   kind 5 (stats):   (empty)
-//! reply (sync)  := n_entries u32, entries, n_events u32, n_events ×
-//!                  (step u64, total u64, score f64)
-//! reply (hello) := n_shards u32, n_shards × str shard_addr ("" = here)
+//!   kind 9 (placement): (empty)
+//! reply (sync)  := status u8: 0 → n_entries u32, entries, n_events u32,
+//!                  n_events × (step u64, total u64, score f64)
+//!                  1 → placement                 (stale epoch: rerouted)
+//! reply (hello) := n_shards u32, n_shards × str shard_addr ("" = here),
+//!                  placement
 //! reply (fetch) := version u64, n_events u32, events
 //! reply (stats) := anoms u64, execs u64, ranks u32, version u64,
 //!                  n_events u32, events
+//! reply (placement) := placement
 //!
 //! shard request := u32 len, u8 kind, payload
-//!   kind 3 (hello):     (empty)
-//!   kind 6 (shard sync): app u32, n_entries u32, entries
+//!   kind 3 (hello):      (empty)
+//!   kind 6 (shard sync): app u32, epoch u64, n_entries u32, entries
 //!   kind 7 (version):    version u64                           (one-way)
 //!   kind 8 (snapshot):   (empty)
+//!   kind 10 (migrate):   placement
+//!   kind 11 (install):   n u32, n × (app u32, entry)
+//!   kind 12 (slot loads): (empty)
 //! reply (hello)      := shard_id u32, n_shards u32
-//! reply (shard sync) := n_entries u32, entries, version u64
-//! reply (snapshot)   := functions u64, syncs u64, merges u64, shard u32
+//! reply (shard sync) := status u8: 0 → n_entries u32, entries, version u64
+//!                       1 → epoch u64             (stale epoch: rerouted)
+//! reply (snapshot)   := functions u64, syncs u64, merges u64, shard u32,
+//!                       epoch u64, slots u32
+//! reply (migrate)    := n u32, n × (app u32, entry)
+//! reply (install)    := ack u8 (= 1)
+//! reply (slot loads) := shard u32, epoch u64, n u32, n × (slot u32, merges u64)
 //! ```
 //!
 //! The wire is a trust boundary on both roles: the front-end re-checks
-//! every grouped entry's hash, a shard endpoint re-checks that every
-//! entry belongs to it, and either drops the connection on a misgrouped
-//! frame — a silent mis-merge would fragment the global view.
+//! every grouped entry against the placement at the claimed epoch, a
+//! shard endpoint's *shard thread* re-checks that every entry belongs to
+//! it at the same epoch, and either drops the connection on a misgrouped
+//! frame — a silent mis-merge would fragment the global view. A frame
+//! from a *different* epoch is not a violation: it gets a `Rerouted`
+//! reply and the client refreshes its table and resends.
 //!
 //! [`NetPsClient`] is a thin compatibility wrapper: since the router
 //! refactor, [`PsClient`] itself speaks TCP (`PsClient::connect` learns
@@ -58,8 +77,9 @@
 //! in a [`Reconnector`](crate::util::net::Reconnector) so dropped
 //! connections heal instead of stranding the client).
 
-use super::shard::{run_shard, AggConn, Route, ShardConn, ShardMsg, ShardPart};
-use super::{shard_of, GlobalEvent, PsClient, PsStats, StepStat};
+use super::shard::{run_shard, AggConn, Route, ShardConn, ShardMsg, ShardReply, ShardSlotLoads};
+use super::{FuncKey, GlobalEvent, PsClient, PsStats, StepStat};
+use crate::placement::Placement;
 use crate::stats::{RunStats, StatsTable};
 use crate::util::net::{serve_tcp, Reconnector, TcpServerHandle};
 use crate::util::wire::{put_str, read_msg, write_msg, Cursor};
@@ -68,7 +88,7 @@ use std::collections::HashMap;
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
 const KIND_SYNC: u8 = 1;
 const KIND_REPORT: u8 = 2;
@@ -78,6 +98,14 @@ const KIND_PS_STATS: u8 = 5;
 const KIND_SHARD_SYNC: u8 = 6;
 const KIND_VERSION_PUSH: u8 = 7;
 const KIND_SHARD_SNAPSHOT: u8 = 8;
+const KIND_PLACEMENT: u8 = 9;
+const KIND_MIGRATE: u8 = 10;
+const KIND_INSTALL: u8 = 11;
+const KIND_SLOT_LOADS: u8 = 12;
+
+/// Sync reply status bytes (both roles).
+const STATUS_OK: u8 = 0;
+const STATUS_REROUTED: u8 = 1;
 
 fn put_stats(buf: &mut Vec<u8>, fid: u32, st: &RunStats) {
     buf.extend_from_slice(&fid.to_le_bytes());
@@ -121,6 +149,26 @@ fn read_events(c: &mut Cursor) -> Result<Vec<GlobalEvent>> {
     Ok(out)
 }
 
+/// `(app, fid) → RunStats` entry list, the migrate/install payload.
+fn put_keyed_entries(buf: &mut Vec<u8>, entries: &[(FuncKey, RunStats)]) {
+    buf.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for ((app, fid), st) in entries {
+        buf.extend_from_slice(&app.to_le_bytes());
+        put_stats(buf, *fid, st);
+    }
+}
+
+fn read_keyed_entries(c: &mut Cursor) -> Result<Vec<(FuncKey, RunStats)>> {
+    let n = c.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        let app = c.u32()?;
+        let (fid, st) = read_stats(c)?;
+        out.push(((app, fid), st));
+    }
+    Ok(out)
+}
+
 /// TCP front-end for a parameter server; forwards to a [`PsClient`] and
 /// owns the topology announced to connecting clients.
 pub struct PsTcpServer {
@@ -138,7 +186,8 @@ impl PsTcpServer {
     /// Bind and serve, announcing `shard_addrs[i]` as the endpoint of
     /// shard `i` (empty vec = all shards served here). Clients receiving
     /// a fully-populated map dial the shard endpoints directly and use
-    /// this front-end only for reports, event fetches, and stats.
+    /// this front-end only for reports, event fetches, placement
+    /// refreshes, and stats.
     pub fn start_with_topology(
         addr: &str,
         client: PsClient,
@@ -191,44 +240,61 @@ fn serve_conn(
         let kind = c.u8()?;
         match kind {
             KIND_HELLO => {
-                let mut reply = Vec::with_capacity(8 + 24 * shard_addrs.len());
+                let placement = client.placement_snapshot();
+                let mut reply = Vec::with_capacity(1048 + 24 * shard_addrs.len());
                 reply.extend_from_slice(&(client.shard_count() as u32).to_le_bytes());
                 for a in shard_addrs.iter() {
                     put_str(&mut reply, a);
                 }
+                placement.encode(&mut reply);
                 write_msg(&mut stream, &reply)?;
             }
             KIND_SYNC => {
                 let app = c.u32()?;
                 let rank = c.u32()?;
+                let epoch = c.u64()?;
+                let placement = client.placement_snapshot();
+                if epoch != placement.epoch() {
+                    // Stale (or ahead-of-commit) client: hand it the
+                    // committed table; it re-groups and resends. Nothing
+                    // was merged.
+                    let mut reply = Vec::with_capacity(1040);
+                    reply.push(STATUS_REROUTED);
+                    placement.encode(&mut reply);
+                    write_msg(&mut stream, &reply)?;
+                    continue;
+                }
                 let n_groups = c.u32()? as usize;
-                let mut parts: Vec<Vec<(u32, RunStats)>> =
-                    vec![Vec::new(); client.shard_count()];
+                let mut entries: Vec<(u32, RunStats)> = Vec::new();
                 for _ in 0..n_groups {
                     let shard = c.u32()? as usize;
                     let n = c.u32()? as usize;
-                    if shard >= parts.len() {
-                        bail!("shard id {shard} out of range (server has {})", parts.len());
+                    if shard >= placement.n_shards() {
+                        bail!(
+                            "shard id {shard} out of range (server has {})",
+                            placement.n_shards()
+                        );
                     }
                     for _ in 0..n {
                         let entry = read_stats(&mut c)?;
                         // The wire is a trust boundary: a misgrouped entry
-                        // would silently fragment the global view across
-                        // shards, so re-check the hash (cheap) and bail.
-                        let want = shard_of(app, entry.0, parts.len());
+                        // at the *same* epoch would silently fragment the
+                        // global view, so re-check the placement and bail.
+                        let want = placement.shard_of(app, entry.0);
                         if want != shard {
                             bail!(
                                 "entry (app {app}, fid {}) grouped to shard {shard}, \
-                                 shard_of says {want}",
+                                 placement (epoch {epoch}) says {want}",
                                 entry.0
                             );
                         }
-                        parts[shard].push(entry);
+                        entries.push(entry);
                     }
                 }
-                let (global, events) = client.sync_parts(app, rank, parts);
+                let (global, events) = client.sync_entries(app, rank, entries);
                 let entries: Vec<(u32, &RunStats)> = global.iter().collect();
-                let mut reply = Vec::with_capacity(8 + 44 * entries.len());
+                let mut reply = Vec::with_capacity(9 + 44 * entries.len());
+                reply.push(STATUS_OK);
                 reply.extend_from_slice(&(entries.len() as u32).to_le_bytes());
                 for (fid, st) in entries {
                     put_stats(&mut reply, fid, st);
@@ -272,6 +338,11 @@ fn serve_conn(
                 put_events(&mut reply, &stats.global_events);
                 write_msg(&mut stream, &reply)?;
             }
+            KIND_PLACEMENT => {
+                let mut reply = Vec::with_capacity(1040);
+                client.placement_snapshot().encode(&mut reply);
+                write_msg(&mut stream, &reply)?;
+            }
             k => bail!("unknown request kind {k}"),
         }
     }
@@ -279,7 +350,7 @@ fn serve_conn(
 
 /// A standalone shard thread's handle: the channel to stop it plus the
 /// join handle returning its final partition.
-type OwnedShard = (Sender<ShardMsg>, std::thread::JoinHandle<HashMap<super::FuncKey, RunStats>>);
+type OwnedShard = (Sender<ShardMsg>, std::thread::JoinHandle<HashMap<FuncKey, RunStats>>);
 
 /// TCP endpoint serving exactly one stat shard (the `ps-shard-server`
 /// process, or a wrapper around one in-process shard for tests/benches).
@@ -303,7 +374,7 @@ impl PsShardTcpServer {
         let ver = version.clone();
         let join = std::thread::Builder::new()
             .name(format!("chimbuko-ps-shard-{shard_id}"))
-            .spawn(move || run_shard(rx, shard_id, ver))
+            .spawn(move || run_shard(rx, shard_id, n_shards as usize, ver))
             .context("spawning standalone ps shard")?;
         let mut srv = Self::start_wrapping(addr, tx.clone(), shard_id, n_shards, version)?;
         srv.own_shard = Some((tx, join));
@@ -373,33 +444,41 @@ fn serve_shard_conn(
             }
             KIND_SHARD_SYNC => {
                 let app = c.u32()?;
+                let epoch = c.u64()?;
                 let n = c.u32()? as usize;
                 let mut delta = Vec::with_capacity(n.min(4096));
                 for _ in 0..n {
-                    let entry = read_stats(&mut c)?;
-                    // Trust boundary: an entry this shard does not own
-                    // would fragment the global view — refuse the frame.
-                    let want = shard_of(app, entry.0, n_shards as usize) as u32;
-                    if want != shard_id {
-                        bail!(
-                            "entry (app {app}, fid {}) sent to shard {shard_id}, \
-                             shard_of says {want}",
-                            entry.0
-                        );
-                    }
-                    delta.push(entry);
+                    delta.push(read_stats(&mut c)?);
                 }
+                // Ownership/epoch validation happens in the shard thread
+                // (it owns the live placement): an entry this shard does
+                // not own at the same epoch comes back `Refused` and we
+                // drop the connection (trust boundary); a stale epoch
+                // comes back `Rerouted` for the client to heal.
                 let (rtx, rrx) = channel();
-                tx.send(ShardMsg::Sync { app, delta, reply: rtx })
+                tx.send(ShardMsg::Sync { app, epoch, delta, reply: rtx })
                     .map_err(|_| anyhow::anyhow!("shard thread gone"))?;
-                let part: ShardPart = rrx.recv().context("shard thread dropped reply")?;
-                let mut reply = Vec::with_capacity(12 + 44 * part.entries.len());
-                reply.extend_from_slice(&(part.entries.len() as u32).to_le_bytes());
-                for (fid, st) in &part.entries {
-                    put_stats(&mut reply, *fid, st);
+                match rrx.recv().context("shard thread dropped reply")? {
+                    ShardReply::Part(part) => {
+                        let mut reply = Vec::with_capacity(13 + 44 * part.entries.len());
+                        reply.push(STATUS_OK);
+                        reply.extend_from_slice(&(part.entries.len() as u32).to_le_bytes());
+                        for (fid, st) in &part.entries {
+                            put_stats(&mut reply, *fid, st);
+                        }
+                        reply.extend_from_slice(&part.event_version.to_le_bytes());
+                        write_msg(&mut stream, &reply)?;
+                    }
+                    ShardReply::Rerouted { epoch, .. } => {
+                        let mut reply = Vec::with_capacity(9);
+                        reply.push(STATUS_REROUTED);
+                        reply.extend_from_slice(&epoch.to_le_bytes());
+                        write_msg(&mut stream, &reply)?;
+                    }
+                    ShardReply::Refused => {
+                        bail!("entry not owned by shard {shard_id} at epoch {epoch}");
+                    }
                 }
-                reply.extend_from_slice(&part.event_version.to_le_bytes());
-                write_msg(&mut stream, &reply)?;
             }
             KIND_VERSION_PUSH => {
                 let v = c.u64()?;
@@ -413,11 +492,55 @@ fn serve_shard_conn(
                     .map_err(|_| anyhow::anyhow!("shard thread gone"))?;
                 let snap = rrx.recv().context("shard thread dropped snapshot")?;
                 let load = snap.shard_loads.first().copied().unwrap_or_default();
-                let mut reply = Vec::with_capacity(32);
+                let mut reply = Vec::with_capacity(44);
                 reply.extend_from_slice(&snap.functions_tracked.to_le_bytes());
                 reply.extend_from_slice(&load.syncs.to_le_bytes());
                 reply.extend_from_slice(&load.merges.to_le_bytes());
                 reply.extend_from_slice(&load.shard.to_le_bytes());
+                reply.extend_from_slice(&snap.placement_epoch.to_le_bytes());
+                reply.extend_from_slice(&load.slots.to_le_bytes());
+                write_msg(&mut stream, &reply)?;
+            }
+            KIND_MIGRATE => {
+                let placement = Placement::decode(&mut c)?;
+                // Trust boundary: a table for a different topology would
+                // silently reshape routing and hand this shard's state to
+                // whoever asked — refuse and drop the connection.
+                anyhow::ensure!(
+                    placement.n_shards() == n_shards as usize,
+                    "migrate placement covers {} shards, this endpoint serves shard \
+                     {shard_id} of {n_shards}",
+                    placement.n_shards()
+                );
+                let (rtx, rrx) = channel();
+                tx.send(ShardMsg::Migrate { placement, reply: rtx })
+                    .map_err(|_| anyhow::anyhow!("shard thread gone"))?;
+                let out = rrx.recv().context("shard thread dropped migrate reply")?;
+                let mut reply = Vec::with_capacity(4 + 48 * out.len());
+                put_keyed_entries(&mut reply, &out);
+                write_msg(&mut stream, &reply)?;
+            }
+            KIND_INSTALL => {
+                let entries = read_keyed_entries(&mut c)?;
+                let (rtx, rrx) = channel();
+                tx.send(ShardMsg::Install { entries, reply: rtx })
+                    .map_err(|_| anyhow::anyhow!("shard thread gone"))?;
+                rrx.recv().context("shard thread dropped install ack")?;
+                write_msg(&mut stream, &[1u8])?;
+            }
+            KIND_SLOT_LOADS => {
+                let (rtx, rrx) = channel();
+                tx.send(ShardMsg::SlotLoads { reply: rtx })
+                    .map_err(|_| anyhow::anyhow!("shard thread gone"))?;
+                let loads = rrx.recv().context("shard thread dropped slot loads")?;
+                let mut reply = Vec::with_capacity(16 + 12 * loads.loads.len());
+                reply.extend_from_slice(&loads.shard.to_le_bytes());
+                reply.extend_from_slice(&loads.epoch.to_le_bytes());
+                reply.extend_from_slice(&(loads.loads.len() as u32).to_le_bytes());
+                for (slot, m) in &loads.loads {
+                    reply.extend_from_slice(&slot.to_le_bytes());
+                    reply.extend_from_slice(&m.to_le_bytes());
+                }
                 write_msg(&mut stream, &reply)?;
             }
             k => bail!("unknown shard request kind {k}"),
@@ -425,9 +548,20 @@ fn serve_shard_conn(
     }
 }
 
+/// A shard endpoint's reply to a sync frame.
+pub(crate) enum ShardSyncResp {
+    Ok { entries: Vec<(u32, RunStats)>, version: u64 },
+    /// The frame's epoch does not match the shard's table; nothing was
+    /// merged. A shard *ahead* of the frame means a commit is landing:
+    /// refresh the placement (front-end `KIND_PLACEMENT`) and resend. A
+    /// shard *behind* the frame missed a migration: drop its sub-frame
+    /// (the rebalance cadence re-pushes the table).
+    Rerouted { epoch: u64 },
+}
+
 /// Client side of one shard endpoint connection (used inside the
-/// router's `ShardConn::Tcp`; verified against the expected shard id at
-/// connect time so a mis-wired topology fails loudly).
+/// router's `ShardConn::Tcp` pools; verified against the expected shard
+/// id at connect time so a mis-wired topology fails loudly).
 pub struct ShardWire {
     stream: TcpStream,
     shard_id: u32,
@@ -451,12 +585,19 @@ impl ShardWire {
         Ok(ShardWire { stream, shard_id })
     }
 
-    /// Write a shard-sync request (the reply is read separately so the
-    /// router can pipeline writes across endpoints before reading).
-    pub(crate) fn send_sync(&mut self, app: u32, entries: &[(u32, RunStats)]) -> Result<()> {
-        let mut msg = Vec::with_capacity(12 + 44 * entries.len());
+    /// Write a shard-sync request stamped with the sender's placement
+    /// epoch (the reply is read separately so the router can pipeline
+    /// writes across endpoints before reading).
+    pub(crate) fn send_sync(
+        &mut self,
+        app: u32,
+        epoch: u64,
+        entries: &[(u32, RunStats)],
+    ) -> Result<()> {
+        let mut msg = Vec::with_capacity(20 + 44 * entries.len());
         msg.push(KIND_SHARD_SYNC);
         msg.extend_from_slice(&app.to_le_bytes());
+        msg.extend_from_slice(&epoch.to_le_bytes());
         msg.extend_from_slice(&(entries.len() as u32).to_le_bytes());
         for (fid, st) in entries {
             put_stats(&mut msg, *fid, st);
@@ -465,16 +606,22 @@ impl ShardWire {
     }
 
     /// Read the reply to the last [`send_sync`](Self::send_sync).
-    pub(crate) fn recv_sync(&mut self) -> Result<(Vec<(u32, RunStats)>, u64)> {
+    pub(crate) fn recv_sync(&mut self) -> Result<ShardSyncResp> {
         let reply = read_msg(&mut self.stream)?.context("shard endpoint closed on sync")?;
         let mut c = Cursor::new(&reply);
-        let n = c.u32()? as usize;
-        let mut entries = Vec::with_capacity(n.min(4096));
-        for _ in 0..n {
-            entries.push(read_stats(&mut c)?);
+        match c.u8()? {
+            STATUS_OK => {
+                let n = c.u32()? as usize;
+                let mut entries = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    entries.push(read_stats(&mut c)?);
+                }
+                let version = c.u64()?;
+                Ok(ShardSyncResp::Ok { entries, version })
+            }
+            STATUS_REROUTED => Ok(ShardSyncResp::Rerouted { epoch: c.u64()? }),
+            s => bail!("unknown shard sync status {s}"),
         }
-        let version = c.u64()?;
-        Ok((entries, version))
     }
 
     /// Fetch this shard's partial snapshot (function count + load).
@@ -486,11 +633,53 @@ impl ShardWire {
         let syncs = c.u64()?;
         let merges = c.u64()?;
         let shard = c.u32()?;
+        let epoch = c.u64()?;
+        let slots = c.u32()?;
         Ok(super::VizSnapshot {
             functions_tracked: functions,
-            shard_loads: vec![super::ShardLoad { shard, syncs, merges, functions }],
+            placement_epoch: epoch,
+            shard_loads: vec![super::ShardLoad { shard, syncs, merges, functions, slots }],
             ..super::VizSnapshot::default()
         })
+    }
+
+    /// Migration phase 1: hand the shard the successor table; it adopts
+    /// it and returns the entries it no longer owns.
+    pub(crate) fn migrate(&mut self, placement: &Placement) -> Result<Vec<(FuncKey, RunStats)>> {
+        let mut msg = Vec::with_capacity(1040);
+        msg.push(KIND_MIGRATE);
+        placement.encode(&mut msg);
+        write_msg(&mut self.stream, &msg)?;
+        let reply = read_msg(&mut self.stream)?.context("shard endpoint closed on migrate")?;
+        read_keyed_entries(&mut Cursor::new(&reply))
+    }
+
+    /// Migration phase 2: install migrated entries (opens the shard's
+    /// pending slots; blocks until the shard acknowledges).
+    pub(crate) fn install(&mut self, entries: &[(FuncKey, RunStats)]) -> Result<()> {
+        let mut msg = Vec::with_capacity(5 + 48 * entries.len());
+        msg.push(KIND_INSTALL);
+        put_keyed_entries(&mut msg, entries);
+        write_msg(&mut self.stream, &msg)?;
+        let reply = read_msg(&mut self.stream)?.context("shard endpoint closed on install")?;
+        let mut c = Cursor::new(&reply);
+        anyhow::ensure!(c.u8()? == 1, "install not acknowledged");
+        Ok(())
+    }
+
+    /// Cumulative per-slot merge counters (the rebalancer's skew signal).
+    pub(crate) fn slot_loads(&mut self) -> Result<ShardSlotLoads> {
+        write_msg(&mut self.stream, &[KIND_SLOT_LOADS])?;
+        let reply = read_msg(&mut self.stream)?.context("shard endpoint closed on slot loads")?;
+        let mut c = Cursor::new(&reply);
+        let shard = c.u32()?;
+        let epoch = c.u64()?;
+        let n = c.u32()? as usize;
+        let mut loads = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            loads.push((c.u32()?, c.u64()?));
+        }
+        Ok(ShardSlotLoads { shard, epoch, loads })
     }
 
     /// Push a new aggregator event version (one-way; the front-end calls
@@ -507,12 +696,20 @@ impl ShardWire {
     }
 }
 
-/// Client side of one front-end connection (hello/topology, reports,
-/// gated event fetches, grouped degenerate syncs, stats).
+/// A front-end's reply to a grouped sync frame.
+pub(crate) enum GroupedResp {
+    Ok { entries: Vec<(u32, RunStats)>, events: Vec<GlobalEvent> },
+    /// Stale epoch: the committed table rides along; re-group and resend.
+    Rerouted(Placement),
+}
+
+/// Client side of one front-end connection (hello/topology + placement,
+/// reports, gated event fetches, grouped degenerate syncs, stats).
 pub struct AggWire {
     stream: TcpStream,
     n_shards: usize,
     shard_addrs: Vec<String>,
+    placement: Placement,
 }
 
 impl AggWire {
@@ -531,7 +728,14 @@ impl AggWire {
         for _ in 0..n_shards {
             shard_addrs.push(c.str()?);
         }
-        Ok(AggWire { stream, n_shards, shard_addrs })
+        let placement = Placement::decode(&mut c)?;
+        if placement.n_shards() != n_shards {
+            bail!(
+                "hello placement covers {} shards, topology has {n_shards}",
+                placement.n_shards()
+            );
+        }
+        Ok(AggWire { stream, n_shards, shard_addrs, placement })
     }
 
     pub(crate) fn n_shards(&self) -> usize {
@@ -542,21 +746,28 @@ impl AggWire {
         &self.shard_addrs
     }
 
+    /// The placement table announced in the hello.
+    pub(crate) fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
     /// Grouped sync through the front-end (degenerate topology): the
-    /// server validates the grouping, routes, and gates the event fetch
-    /// with its own in-process client.
+    /// server validates the grouping against the placement at `epoch`,
+    /// routes, and gates the event fetch with its own in-process client.
     pub(crate) fn sync_grouped(
         &mut self,
         app: u32,
         rank: u32,
+        epoch: u64,
         parts: &[Vec<(u32, RunStats)>],
-    ) -> Result<(Vec<(u32, RunStats)>, Vec<GlobalEvent>)> {
+    ) -> Result<GroupedResp> {
         let n_entries: usize = parts.iter().map(|p| p.len()).sum();
         let n_groups = parts.iter().filter(|p| !p.is_empty()).count();
-        let mut msg = Vec::with_capacity(16 + 8 * n_groups + 44 * n_entries);
+        let mut msg = Vec::with_capacity(24 + 8 * n_groups + 44 * n_entries);
         msg.push(KIND_SYNC);
         msg.extend_from_slice(&app.to_le_bytes());
         msg.extend_from_slice(&rank.to_le_bytes());
+        msg.extend_from_slice(&epoch.to_le_bytes());
         msg.extend_from_slice(&(n_groups as u32).to_le_bytes());
         for (shard, part) in parts.iter().enumerate() {
             if part.is_empty() {
@@ -571,13 +782,19 @@ impl AggWire {
         write_msg(&mut self.stream, &msg)?;
         let reply = read_msg(&mut self.stream)?.context("PS closed connection")?;
         let mut c = Cursor::new(&reply);
-        let n = c.u32()? as usize;
-        let mut entries = Vec::with_capacity(n.min(4096));
-        for _ in 0..n {
-            entries.push(read_stats(&mut c)?);
+        match c.u8()? {
+            STATUS_OK => {
+                let n = c.u32()? as usize;
+                let mut entries = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    entries.push(read_stats(&mut c)?);
+                }
+                let events = read_events(&mut c)?;
+                Ok(GroupedResp::Ok { entries, events })
+            }
+            STATUS_REROUTED => Ok(GroupedResp::Rerouted(Placement::decode(&mut c)?)),
+            s => bail!("unknown sync status {s}"),
         }
-        let events = read_events(&mut c)?;
-        Ok((entries, events))
     }
 
     /// Fire-and-forget anomaly accounting (serializes ahead of any later
@@ -611,6 +828,13 @@ impl AggWire {
         Ok((version, events))
     }
 
+    /// Fetch the committed placement table (the reroute-healing path).
+    pub(crate) fn fetch_placement(&mut self) -> Result<Placement> {
+        write_msg(&mut self.stream, &[KIND_PLACEMENT])?;
+        let reply = read_msg(&mut self.stream)?.context("PS closed on placement fetch")?;
+        Placement::decode(&mut Cursor::new(&reply))
+    }
+
     /// Aggregate PS counters.
     pub(crate) fn ps_stats(&mut self) -> Result<PsStats> {
         write_msg(&mut self.stream, &[KIND_PS_STATS])?;
@@ -631,11 +855,21 @@ impl PsClient {
     /// topology describes: per-shard TCP connections when the map names
     /// endpoints, a single grouped-frame route when it does not (the
     /// degenerate deployment). Every connection auto-reconnects with
-    /// backoff after drops.
+    /// backoff after drops. The hello's placement table seeds routing;
+    /// `Rerouted` replies keep it fresh across live rebalances.
     pub fn connect(addr: &str) -> Result<PsClient> {
+        Self::connect_with_pool(addr, 1)
+    }
+
+    /// [`Self::connect`] with `pool` TCP connections per shard endpoint
+    /// (syncs pick `rank % pool`, so ranks sharing one client do not
+    /// serialize behind a single write→read window per shard).
+    pub fn connect_with_pool(addr: &str, pool: usize) -> Result<PsClient> {
         let wire = AggWire::connect(addr)?;
         let n = wire.n_shards();
         let addrs = wire.shard_addrs().to_vec();
+        let placement = Arc::new(RwLock::new(Arc::new(wire.placement().clone())));
+        let pool = pool.max(1);
         let route = if addrs.iter().all(|a| a.is_empty()) {
             Route::Frontend { n_shards: n }
         } else {
@@ -646,10 +880,15 @@ impl PsClient {
             let mut conns = Vec::with_capacity(n);
             for (i, a) in addrs.iter().enumerate() {
                 let (id, total) = (i as u32, n as u32);
-                conns.push(ShardConn::Tcp(Mutex::new(Reconnector::connected(
-                    a,
-                    move |x: &str| ShardWire::connect(x, id, total),
-                )?)));
+                let mut slots = vec![Mutex::new(Reconnector::connected(a, move |x: &str| {
+                    ShardWire::connect(x, id, total)
+                })?)];
+                for _ in 1..pool {
+                    slots.push(Mutex::new(Reconnector::new(a, move |x: &str| {
+                        ShardWire::connect(x, id, total)
+                    })));
+                }
+                conns.push(ShardConn::Tcp(slots));
             }
             Route::Sharded(Arc::new(conns))
         };
@@ -657,8 +896,10 @@ impl PsClient {
         Ok(PsClient {
             route,
             agg: Arc::new(agg),
+            placement,
             sync_count: Arc::new(AtomicU64::new(0)),
             agg_fetches: Arc::new(AtomicU64::new(0)),
+            reroutes: Arc::new(AtomicU64::new(0)),
             gates: Arc::new(Mutex::new(HashMap::new())),
         })
     }
@@ -813,17 +1054,19 @@ mod tests {
 
     #[test]
     fn misgrouped_sync_frame_is_rejected() {
-        // A frame whose shard id is in range but does not match
-        // shard_of must be refused, not silently fragment the view.
+        // A frame whose shard id is in range but does not match the
+        // placement at the claimed (current) epoch must be refused, not
+        // silently fragment the view.
         let (client, handle) = super::super::spawn(4, None, usize::MAX >> 1, 1);
         let srv = PsTcpServer::start("127.0.0.1:0", client.clone()).unwrap();
         let mut s = TcpStream::connect(srv.addr()).unwrap();
-        let fid = (0..64u32).find(|&f| shard_of(0, f, 4) != 0).unwrap();
+        let fid = (0..64u32).find(|&f| super::super::shard_of(0, f, 4) != 0).unwrap();
         let mut st = RunStats::new();
         st.push(1.0);
         let mut msg = vec![KIND_SYNC];
         msg.extend_from_slice(&0u32.to_le_bytes()); // app
         msg.extend_from_slice(&0u32.to_le_bytes()); // rank
+        msg.extend_from_slice(&0u64.to_le_bytes()); // epoch (current)
         msg.extend_from_slice(&1u32.to_le_bytes()); // n_groups
         msg.extend_from_slice(&0u32.to_le_bytes()); // wrong shard id
         msg.extend_from_slice(&1u32.to_le_bytes()); // n_entries
@@ -835,6 +1078,30 @@ mod tests {
         client.shutdown();
         let fin = handle.join();
         assert_eq!(fin.global_len(), 0, "misgrouped entry must not be merged");
+    }
+
+    #[test]
+    fn stale_epoch_sync_is_rerouted_with_placement() {
+        // A frame from a stale epoch is *not* a violation: the reply is
+        // a Rerouted status carrying the committed table.
+        let (client, handle) = super::super::spawn(4, None, usize::MAX >> 1, 1);
+        let srv = PsTcpServer::start("127.0.0.1:0", client.clone()).unwrap();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        let mut msg = vec![KIND_SYNC];
+        msg.extend_from_slice(&0u32.to_le_bytes()); // app
+        msg.extend_from_slice(&0u32.to_le_bytes()); // rank
+        msg.extend_from_slice(&99u64.to_le_bytes()); // bogus epoch
+        msg.extend_from_slice(&0u32.to_le_bytes()); // n_groups
+        write_msg(&mut s, &msg).unwrap();
+        let reply = read_msg(&mut s).unwrap().expect("rerouted reply");
+        let mut c = Cursor::new(&reply);
+        assert_eq!(c.u8().unwrap(), STATUS_REROUTED);
+        let p = Placement::decode(&mut c).unwrap();
+        assert_eq!(p.epoch(), 0);
+        assert_eq!(p.n_shards(), 4);
+        drop(srv);
+        client.shutdown();
+        handle.join();
     }
 
     #[test]
@@ -868,6 +1135,7 @@ mod tests {
             PsTcpServer::start_with_topology("127.0.0.1:0", client.clone(), addrs).unwrap();
         let routed = PsClient::connect(&front.addr().to_string()).unwrap();
         assert_eq!(routed.shard_count(), 3);
+        assert_eq!(routed.placement_epoch(), 0);
         let mut delta = StatsTable::new();
         for fid in 0..30u32 {
             delta.push(fid, fid as f64 + 1.0);
@@ -907,13 +1175,14 @@ mod tests {
     fn shard_endpoint_rejects_foreign_entries() {
         let (client, handle) = super::super::spawn(4, None, usize::MAX >> 1, 1);
         let shard_srvs = handle.serve_shard_endpoints().unwrap();
-        // Hand a shard an entry it does not own.
-        let fid = (0..64u32).find(|&f| shard_of(0, f, 4) != 0).unwrap();
+        // Hand a shard an entry it does not own (at the current epoch).
+        let fid = (0..64u32).find(|&f| super::super::shard_of(0, f, 4) != 0).unwrap();
         let mut st = RunStats::new();
         st.push(1.0);
         let mut s = TcpStream::connect(shard_srvs[0].addr()).unwrap();
         let mut msg = vec![KIND_SHARD_SYNC];
         msg.extend_from_slice(&0u32.to_le_bytes()); // app
+        msg.extend_from_slice(&0u64.to_le_bytes()); // epoch (current)
         msg.extend_from_slice(&1u32.to_le_bytes()); // n_entries
         put_stats(&mut msg, fid, &st);
         write_msg(&mut s, &msg).unwrap();
@@ -925,6 +1194,67 @@ mod tests {
     }
 
     #[test]
+    fn wire_migration_moves_state_between_standalone_shards() {
+        // Two standalone shard processes' worth of servers, migration
+        // driven entirely over the wire: extract at the source, pending
+        // bounce at the destination, install, then serve the moved
+        // history at the new epoch.
+        let s0 = PsShardTcpServer::spawn_standalone("127.0.0.1:0", 0, 2).unwrap();
+        let s1 = PsShardTcpServer::spawn_standalone("127.0.0.1:0", 1, 2).unwrap();
+        let mut w0 = ShardWire::connect(&s0.addr().to_string(), 0, 2).unwrap();
+        let mut w1 = ShardWire::connect(&s1.addr().to_string(), 1, 2).unwrap();
+        let fid = (0..256u32).find(|&f| super::super::shard_of(0, f, 2) == 0).unwrap();
+        let mut st = RunStats::new();
+        st.push(5.0);
+        st.push(9.0);
+        w0.send_sync(0, 0, &[(fid, st)]).unwrap();
+        assert!(matches!(w0.recv_sync().unwrap(), ShardSyncResp::Ok { .. }));
+
+        // Phase 1: both shards adopt the successor table.
+        let slot = Placement::slot_of(0, fid);
+        let new = Placement::new(2).with_moves(&[(slot, 1)]).unwrap();
+        let out0 = w0.migrate(&new).unwrap();
+        assert_eq!(out0.len(), 1, "source must extract the moved entry");
+        assert_eq!(out0[0].0, (0, fid));
+        assert_eq!(out0[0].1.count(), 2);
+        assert!(w1.migrate(&new).unwrap().is_empty(), "destination extracts nothing");
+
+        // Between migrate and install the gained slot is pending: a sync
+        // at the new epoch bounces instead of merging out of order.
+        let mut probe = RunStats::new();
+        probe.push(1.0);
+        w1.send_sync(0, new.epoch(), &[(fid, probe)]).unwrap();
+        assert!(matches!(w1.recv_sync().unwrap(), ShardSyncResp::Rerouted { .. }));
+
+        // Phase 2: install opens the slot with the migrated history.
+        w1.install(&out0).unwrap();
+        let mut more = RunStats::new();
+        more.push(7.0);
+        w1.send_sync(0, new.epoch(), &[(fid, more)]).unwrap();
+        match w1.recv_sync().unwrap() {
+            ShardSyncResp::Ok { entries, .. } => {
+                assert_eq!(entries[0].1.count(), 3, "migrated history + new merge");
+            }
+            ShardSyncResp::Rerouted { .. } => panic!("installed slot must serve"),
+        }
+
+        // A stale-epoch frame at the source bounces (nothing merged)…
+        let mut stale = RunStats::new();
+        stale.push(2.0);
+        w0.send_sync(0, 0, &[(fid, stale)]).unwrap();
+        match w0.recv_sync().unwrap() {
+            ShardSyncResp::Rerouted { epoch } => assert_eq!(epoch, 1),
+            ShardSyncResp::Ok { .. } => panic!("stale epoch must bounce"),
+        }
+        // …and a same-epoch frame for a slot the source no longer owns is
+        // a protocol violation: the connection drops.
+        let mut foreign = RunStats::new();
+        foreign.push(2.0);
+        w0.send_sync(0, new.epoch(), &[(fid, foreign)]).unwrap();
+        assert!(w0.recv_sync().is_err(), "foreign entry at same epoch must drop the conn");
+    }
+
+    #[test]
     fn standalone_shard_server_round_trip() {
         let srv = PsShardTcpServer::spawn_standalone("127.0.0.1:0", 0, 1).unwrap();
         let addr = srv.addr().to_string();
@@ -933,8 +1263,11 @@ mod tests {
         let mut st = RunStats::new();
         st.push(5.0);
         st.push(7.0);
-        w.send_sync(0, &[(1, st)]).unwrap();
-        let (entries, ver) = w.recv_sync().unwrap();
+        w.send_sync(0, 0, &[(1, st)]).unwrap();
+        let (entries, ver) = match w.recv_sync().unwrap() {
+            ShardSyncResp::Ok { entries, version } => (entries, version),
+            ShardSyncResp::Rerouted { .. } => panic!("epoch 0 must be accepted"),
+        };
         assert_eq!(ver, 0, "no version pushed yet");
         assert_eq!(entries.len(), 1);
         assert_eq!(entries[0].1.count(), 2);
@@ -942,16 +1275,35 @@ mod tests {
         w.push_version(3).unwrap();
         let mut st2 = RunStats::new();
         st2.push(1.0);
-        w.send_sync(0, &[(1, st2)]).unwrap();
-        let (entries2, ver2) = w.recv_sync().unwrap();
+        w.send_sync(0, 0, &[(1, st2)]).unwrap();
+        let (entries2, ver2) = match w.recv_sync().unwrap() {
+            ShardSyncResp::Ok { entries, version } => (entries, version),
+            ShardSyncResp::Rerouted { .. } => panic!("epoch 0 must be accepted"),
+        };
         assert_eq!(entries2[0].1.count(), 3);
         assert_eq!(ver2, 3);
-        // Snapshot carries the load counters.
+        // A stale-epoch frame bounces with Rerouted, merging nothing.
+        let mut st3 = RunStats::new();
+        st3.push(9.0);
+        w.send_sync(0, 42, &[(1, st3)]).unwrap();
+        match w.recv_sync().unwrap() {
+            ShardSyncResp::Rerouted { epoch } => assert_eq!(epoch, 0),
+            ShardSyncResp::Ok { .. } => panic!("stale epoch must bounce"),
+        }
+        // Snapshot carries the load counters (the bounced frame did not
+        // count or merge).
         let snap = w.snapshot().unwrap();
         assert_eq!(snap.functions_tracked, 1);
+        assert_eq!(snap.placement_epoch, 0);
         assert_eq!(snap.shard_loads.len(), 1);
         assert_eq!(snap.shard_loads[0].syncs, 2);
         assert_eq!(snap.shard_loads[0].merges, 2);
+        assert_eq!(snap.shard_loads[0].slots as usize, crate::placement::SLOTS);
+        // Per-slot counters surface through the wire too.
+        let loads = w.slot_loads().unwrap();
+        assert_eq!(loads.shard, 0);
+        assert_eq!(loads.loads.len(), 1, "one touched slot");
+        assert_eq!(loads.loads[0].1, 2);
         // Mismatched hello expectations fail loudly.
         assert!(ShardWire::connect(&addr, 1, 2).is_err());
     }

@@ -1,0 +1,282 @@
+//! Skew-driven shard rebalancing: watch the per-slot merge counters the
+//! stat shards keep, plan slot moves when one shard runs hot
+//! ([`plan_moves`](crate::placement::plan_moves)), migrate the affected
+//! `RunStats` state shard→shard, and commit the successor
+//! [`Placement`] epoch.
+//!
+//! ## Migration handshake
+//!
+//! ```text
+//! phase 1 (Migrate, every shard):  adopt table E+1, mark gained slots
+//!                                  pending, extract entries no longer
+//!                                  owned, return them
+//! phase 2 (Install, gaining shards): adopt migrated entries, open the
+//!                                  pending slots
+//! commit:                          write table E+1 into the shared
+//!                                  placement (clients now see it)
+//! ```
+//!
+//! Between phase 1 and the commit, clients still sync under epoch E;
+//! shards answer `Rerouted` and the client retries until the commit
+//! lands (milliseconds). Because a shard accepts or rejects each
+//! sub-frame *wholesale* and pending slots block early traffic to the
+//! destination, every delta merges exactly once and a migrated summary
+//! is adopted bit-for-bit — which is how a rebalance fired mid-run stays
+//! bit-identical to the static-placement reference
+//! (`tests/ps_shard.rs`).
+//!
+//! A shard connection that fails mid-migration degrades exactly like a
+//! crashed shard elsewhere in the protocol: its slice of the state is
+//! lost for the slots it owned, the commit still lands, and the warning
+//! log names the shard.
+
+use super::shard::{ShardConn, ShardMsg, ShardSlotLoads, SharedPlacement};
+use super::FuncKey;
+use crate::placement::{load_ratio, plan_moves, Placement, SLOTS};
+use crate::stats::RunStats;
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+/// Default trigger ratio: rebalance when windowed per-shard merge load
+/// has max/mean above this.
+pub const DEFAULT_MAX_RATIO: f64 = 1.5;
+
+/// What one committed rebalance did.
+#[derive(Clone, Copy, Debug)]
+pub struct RebalanceReport {
+    /// The committed epoch.
+    pub epoch: u64,
+    /// Slot moves applied.
+    pub moves: usize,
+    /// Windowed per-shard max/mean before the moves.
+    pub ratio_before: f64,
+    /// The planner's projected max/mean after the moves (over the same
+    /// window; the next window measures the real effect).
+    pub ratio_planned: f64,
+}
+
+/// Gather every shard's cumulative per-slot merge counters.
+pub(crate) fn collect_slot_loads(conns: &[ShardConn]) -> Vec<ShardSlotLoads> {
+    let mut out = Vec::with_capacity(conns.len());
+    for conn in conns {
+        match conn {
+            ShardConn::Local(tx) => {
+                let (rtx, rrx) = channel();
+                if tx.send(ShardMsg::SlotLoads { reply: rtx }).is_ok() {
+                    if let Ok(l) = rrx.recv() {
+                        out.push(l);
+                    }
+                }
+            }
+            ShardConn::Tcp(pool) => {
+                match pool[0].lock().expect("ps shard conn lock").with(|w| w.slot_loads()) {
+                    Ok(l) => out.push(l),
+                    Err(e) => crate::log_warn!("ps", "slot-load fetch failed: {e:#}"),
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The rebalancer: owned by the constellation handle, shared with the
+/// optional background cadence thread. Holds the last-seen counters so
+/// every skew judgement is over a *window* (load since the previous
+/// check), not the whole run's history.
+pub(crate) struct Rebalancer {
+    conns: Arc<Vec<ShardConn>>,
+    placement: SharedPlacement,
+    /// Cumulative counters at the last consumed window, per (shard, slot).
+    last: HashMap<(u32, u32), u64>,
+    max_ratio: f64,
+    min_merges: u64,
+}
+
+impl Rebalancer {
+    pub(crate) fn new(
+        conns: Arc<Vec<ShardConn>>,
+        placement: SharedPlacement,
+        max_ratio: f64,
+        min_merges: u64,
+    ) -> Rebalancer {
+        Rebalancer {
+            conns,
+            placement,
+            last: HashMap::new(),
+            // 1.0 is a legal (most aggressive) trigger; only below-1.0
+            // values — including the unset 0.0 default — fall back.
+            max_ratio: if max_ratio >= 1.0 { max_ratio } else { DEFAULT_MAX_RATIO },
+            min_merges,
+        }
+    }
+
+    /// One skew check: returns `Ok(None)` when the window is balanced,
+    /// too small, or nothing movable would improve it; otherwise
+    /// migrates, commits, and reports.
+    pub(crate) fn run_once(&mut self) -> anyhow::Result<Option<RebalanceReport>> {
+        let now = collect_slot_loads(&self.conns);
+        let cur = self.placement.read().expect("ps placement lock").clone();
+        // Staleness probe: a shard whose table is behind the committed
+        // epoch missed a Migrate (transient failure); clients fast-fail
+        // its sub-frames until it catches up, so re-push the committed
+        // table. State it extracts lands back at the live owners —
+        // commutatively merged, since exact ordering was already
+        // forfeited when the shard went stale.
+        if now.iter().any(|s| s.epoch < cur.epoch()) {
+            crate::log_warn!(
+                "ps",
+                "shard(s) behind committed epoch {}; re-pushing the placement",
+                cur.epoch()
+            );
+            self.run_handshake(&cur);
+        }
+        let mut window = vec![0u64; SLOTS];
+        let mut total = 0u64;
+        for s in &now {
+            for &(slot, m) in &s.loads {
+                let prev = self.last.get(&(s.shard, slot)).copied().unwrap_or(0);
+                let d = m.saturating_sub(prev);
+                window[slot as usize] += d;
+                total += d;
+            }
+        }
+        if total < self.min_merges.max(1) {
+            // Too little traffic to judge; leave `last` untouched so the
+            // window keeps accumulating.
+            return Ok(None);
+        }
+        let mut per_shard = vec![0u64; cur.n_shards()];
+        for (slot, &m) in window.iter().enumerate() {
+            per_shard[cur.shard_of_slot(slot)] += m;
+        }
+        let ratio_before = load_ratio(&per_shard);
+        // Window consumed (judged), whatever the verdict. Merge — don't
+        // replace — so a shard whose fetch failed this round keeps its
+        // baseline instead of having its whole history count as one
+        // window when it comes back.
+        for s in &now {
+            for &(slot, m) in &s.loads {
+                self.last.insert((s.shard, slot), m);
+            }
+        }
+        if ratio_before <= self.max_ratio {
+            return Ok(None);
+        }
+        // Plan past the trigger, toward the midpoint between balanced and
+        // the trigger ratio: stopping exactly at the trigger would leave
+        // the next window hovering at the threshold (and re-triggering on
+        // noise); the planner stops early anyway when no move improves.
+        let target = 1.0 + (self.max_ratio - 1.0) / 2.0;
+        let moves = plan_moves(&cur, &window, target);
+        if moves.is_empty() {
+            return Ok(None);
+        }
+        let new = cur.with_moves(&moves)?;
+        let mut planned = vec![0u64; new.n_shards()];
+        for (slot, &m) in window.iter().enumerate() {
+            planned[new.shard_of_slot(slot)] += m;
+        }
+        let report = RebalanceReport {
+            epoch: new.epoch(),
+            moves: moves.len(),
+            ratio_before,
+            ratio_planned: load_ratio(&planned),
+        };
+        self.migrate_to(&cur, new)?;
+        Ok(Some(report))
+    }
+
+    /// Execute the migration handshake for `old → new` and commit `new`
+    /// as the constellation's table.
+    pub(crate) fn migrate_to(&self, old: &Placement, new: Placement) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            new.epoch() > old.epoch(),
+            "migration target epoch {} is not newer than {}",
+            new.epoch(),
+            old.epoch()
+        );
+        // `old` must be the live table: every committer holds the
+        // rebalancer lock, so this can only trip on a caller bug — and
+        // tripping it beats migrating from a stale base (shards would
+        // ignore the epoch and the commit would desync routing).
+        {
+            let live = self.placement.read().expect("ps placement lock");
+            anyhow::ensure!(
+                live.epoch() == old.epoch(),
+                "placement moved to epoch {} during planning (expected {})",
+                live.epoch(),
+                old.epoch()
+            );
+        }
+        self.run_handshake(&new);
+        // Commit: clients (and the front-end's hello/placement replies)
+        // now see the new table; in-flight stale syncs heal via Rerouted.
+        *self.placement.write().expect("ps placement lock") = Arc::new(new);
+        Ok(())
+    }
+
+    /// The two-phase Migrate/Install fan-out for `table`. Shards already
+    /// at (or past) `table`'s epoch treat the Migrate as a no-op, so the
+    /// same handshake serves both a fresh migration (every shard one
+    /// epoch behind) and the staleness re-push (most shards current, one
+    /// behind). Install goes to *every* shard: it routes each extracted
+    /// entry to its owner under `table` — wherever it came from — and an
+    /// empty install still opens a destination's pending slots.
+    fn run_handshake(&self, table: &Placement) {
+        let mut extracted: Vec<(FuncKey, RunStats)> = Vec::new();
+        for (i, conn) in self.conns.iter().enumerate() {
+            match conn {
+                ShardConn::Local(tx) => {
+                    let (rtx, rrx) = channel();
+                    if tx
+                        .send(ShardMsg::Migrate { placement: table.clone(), reply: rtx })
+                        .is_ok()
+                    {
+                        match rrx.recv() {
+                            Ok(out) => extracted.extend(out),
+                            Err(_) => crate::log_warn!("ps", "shard {i} died during migrate"),
+                        }
+                    }
+                }
+                ShardConn::Tcp(pool) => {
+                    match pool[0].lock().expect("ps shard conn lock").with(|w| w.migrate(table))
+                    {
+                        Ok(out) => extracted.extend(out),
+                        Err(e) => crate::log_warn!(
+                            "ps",
+                            "shard {i} unreachable during migrate (its slice degrades): {e:#}"
+                        ),
+                    }
+                }
+            }
+        }
+        let n = table.n_shards();
+        let mut per: Vec<Vec<(FuncKey, RunStats)>> = vec![Vec::new(); n];
+        for ((app, id), st) in extracted {
+            per[table.shard_of(app, id)].push(((app, id), st));
+        }
+        for (i, entries) in per.into_iter().enumerate() {
+            match &self.conns[i] {
+                ShardConn::Local(tx) => {
+                    let (rtx, rrx) = channel();
+                    if tx.send(ShardMsg::Install { entries, reply: rtx }).is_ok() {
+                        let _ = rrx.recv();
+                    }
+                }
+                ShardConn::Tcp(pool) => {
+                    if let Err(e) = pool[0]
+                        .lock()
+                        .expect("ps shard conn lock")
+                        .with(|w| w.install(&entries))
+                    {
+                        crate::log_warn!(
+                            "ps",
+                            "shard {i} unreachable during install (its slice degrades): {e:#}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

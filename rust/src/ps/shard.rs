@@ -9,6 +9,21 @@
 //! the stat shards live in other processes and every shard connection is
 //! a TCP socket instead of a channel.
 //!
+//! ## Placement
+//!
+//! Routing is no longer a frozen hash: every constellation owns an
+//! epoch-versioned [`Placement`] table (slot → shard, see
+//! [`placement`](crate::placement)). Each shard holds its own copy;
+//! every sync frame carries the sender's epoch, and a shard that sees a
+//! frame from another epoch answers `Rerouted`, making the client
+//! refresh its table and resend only the rejected sub-frames. The
+//! rebalancer ([`rebalance`](super::rebalance)) watches per-slot merge
+//! counters, plans slot moves when one shard runs hot, migrates the
+//! affected `RunStats` state shard→shard (extract at the source, install
+//! at the destination — pending slots block syncs in between, so a
+//! migrated summary is adopted bit-for-bit, never re-merged), and only
+//! then commits the new epoch.
+//!
 //! [`PsClient`] is the one router the on-node AD modules talk to — over
 //! in-process channels, over per-shard TCP endpoints, or through a
 //! single front-end (the degenerate single-endpoint deployment). The
@@ -16,60 +31,124 @@
 //! tears the constellation down and returns the merged final state
 //! ([`PsFinal`]).
 
+use super::rebalance::{RebalanceReport, Rebalancer};
 use super::{
     FuncKey, GlobalEvent, ParameterServer, PsReply, PsRequest, StepStat, VizSnapshot,
 };
+use crate::placement::{Placement, SLOTS};
 use crate::stats::{RunStats, StatsTable};
 use crate::util::net::Reconnector;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Stable shard routing: which of `n_shards` owns `(app, fid)`.
-///
-/// One [`splitmix64`](crate::util::rng::splitmix64) step over the packed
-/// key — cheap, well-mixed, and identical on both sides of the wire
-/// protocol (the TCP client groups deltas with this same function after
-/// the hello handshake). The provDB's
-/// [`prov_shard_of`](crate::provdb::prov_shard_of) shares the mixer.
+/// Epoch-0 shard routing: which of `n_shards` owns `(app, fid)` before
+/// any rebalance — the [`Placement`] default, kept as a free function for
+/// call sites that never see a live table (tests, offline tools). A
+/// constellation routes with its *current* placement, not this.
 pub fn shard_of(app: u32, fid: u32, n_shards: usize) -> usize {
-    let mut key = ((app as u64) << 32) | fid as u64;
-    (crate::util::rng::splitmix64(&mut key) % n_shards.max(1) as u64) as usize
+    Placement::default_shard_of(app, fid, n_shards)
 }
+
+/// A sync that keeps being rerouted is waiting on a migration commit;
+/// this bounds the wait (attempts sleep ~1 ms when the table has not
+/// advanced, so the budget is generous) before degrading like a dead
+/// shard connection.
+const SYNC_RETRY_MAX: usize = 2_000;
+
+/// How long a shard holds gained slots pending before concluding the
+/// migration's Install is never coming (rebalancer crashed or the
+/// connection died between phases) and opening them empty — the
+/// crashed-shard degradation the protocol promises, instead of bouncing
+/// every sync on those slots forever.
+const PENDING_TTL: Duration = Duration::from_secs(2);
+
+/// The routing table, shared by reference: readers take the lock only to
+/// clone the `Arc` (the 256-slot table itself is cloned only when a
+/// migration commits), so the per-sync snapshot is pointer-sized.
+pub(crate) type SharedPlacement = Arc<RwLock<Arc<Placement>>>;
 
 /// Message to one stat shard.
 pub(crate) enum ShardMsg {
-    /// Batched sub-delta for this shard; replies with the merged global
-    /// stats for exactly the functions in the sub-delta, plus the
-    /// shard's view of the aggregator event version.
+    /// Batched sub-delta for this shard, partitioned under the sender's
+    /// placement `epoch`; replies with the merged global stats for
+    /// exactly the functions in the sub-delta (plus the shard's view of
+    /// the aggregator event version) — or `Rerouted` when the epoch does
+    /// not match the shard's table.
     Sync {
         app: u32,
+        epoch: u64,
         delta: Vec<(u32, RunStats)>,
-        reply: Sender<ShardPart>,
+        reply: Sender<ShardReply>,
     },
     /// Partial snapshot (function count + load counters) for the merge
     /// stage.
     Snapshot { reply: Sender<VizSnapshot> },
+    /// Cumulative per-slot merge counters (the rebalancer's skew signal).
+    SlotLoads { reply: Sender<ShardSlotLoads> },
+    /// Migration phase 1: adopt `placement` (strictly newer epoch),
+    /// mark newly gained slots pending, and return the entries this
+    /// shard no longer owns.
+    Migrate {
+        placement: Placement,
+        reply: Sender<Vec<(FuncKey, RunStats)>>,
+    },
+    /// Migration phase 2: adopt the migrated entries and open the
+    /// pending slots for traffic.
+    Install {
+        entries: Vec<(FuncKey, RunStats)>,
+        reply: Sender<()>,
+    },
     /// Stop and return the owned partition.
     Shutdown,
 }
 
-/// A stat shard's sync reply: merged entries plus the piggybacked
-/// aggregator event version (see the gating protocol in the module docs).
+/// A stat shard's reply to a sync sub-frame.
+pub(crate) enum ShardReply {
+    /// Frame accepted and merged.
+    Part(ShardPart),
+    /// Frame refused wholesale: the sender's epoch does not match the
+    /// shard's table (or a just-gained slot is still awaiting its
+    /// migrated state). Nothing was merged; the untouched delta rides
+    /// back so an in-process client can resend it without having cloned
+    /// it up front (a TCP client keeps its own copy instead — the wire
+    /// reply carries only the shard's epoch).
+    Rerouted { epoch: u64, delta: Vec<(u32, RunStats)> },
+    /// Protocol violation: an entry this shard does not own *at the same
+    /// epoch*. The transport drops the connection (trust boundary).
+    Refused,
+}
+
+/// An accepted sync sub-frame's payload: merged entries plus the
+/// piggybacked aggregator event version (see the gating protocol in the
+/// module docs).
 pub(crate) struct ShardPart {
     pub entries: Vec<(u32, RunStats)>,
     pub event_version: u64,
 }
 
+/// One shard's cumulative per-slot merge counters (only touched slots),
+/// plus the epoch its table is at — the rebalancer's skew signal *and*
+/// its staleness probe (a shard behind the committed epoch missed a
+/// Migrate and gets the table re-pushed).
+pub(crate) struct ShardSlotLoads {
+    pub shard: u32,
+    pub epoch: u64,
+    pub loads: Vec<(u32, u64)>,
+}
+
 /// One pluggable shard connection: an in-process channel to a shard
-/// thread, or a reconnecting TCP connection to a `ps-shard-server`
-/// endpoint. The router treats both identically.
+/// thread, or a *pool* of reconnecting TCP connections to a
+/// `ps-shard-server` endpoint (one connection per pool slot; a sync
+/// picks `rank % pool`, so concurrent AD workers no longer serialize
+/// behind a single write→read window per shard). Control traffic
+/// (snapshots, version pushes, migration) uses pool slot 0.
 pub(crate) enum ShardConn {
     Local(Sender<ShardMsg>),
-    Tcp(Mutex<Reconnector<super::net::ShardWire>>),
+    Tcp(Vec<Mutex<Reconnector<super::net::ShardWire>>>),
 }
 
 /// Connection to the aggregator/front-end: the in-process request
@@ -108,18 +187,25 @@ pub(crate) struct Gate {
 /// Cloneable router handle used by on-node AD modules — in-process and
 /// remote clients are the *same type* over different connections.
 ///
-/// `sync` splits the delta by [`shard_of`], batches one message per
-/// touched shard, fans them out (pipelining writes before reads on TCP
-/// connections), reassembles the reply client-side, and fetches
-/// undelivered global events from the aggregator only when the version
-/// gate says there may be any.
+/// `sync` splits the delta under the client's current [`Placement`],
+/// batches one message per touched shard, fans them out (pipelining
+/// writes before reads on TCP connections), reassembles the reply
+/// client-side, resends any `Rerouted` sub-frame under a refreshed
+/// table, and fetches undelivered global events from the aggregator only
+/// when the version gate says there may be any.
 #[derive(Clone)]
 pub struct PsClient {
     pub(crate) route: Route,
     pub(crate) agg: Arc<AggConn>,
+    /// This client's view of the routing table. In-process clients share
+    /// the constellation's table (commits are visible immediately);
+    /// routed TCP clients refresh theirs from the front-end on reroute.
+    pub(crate) placement: SharedPlacement,
     pub(crate) sync_count: Arc<AtomicU64>,
     /// Event-fetch messages sent to the aggregator (the gated leg).
     pub(crate) agg_fetches: Arc<AtomicU64>,
+    /// Sub-frames bounced with `Rerouted` (stale epoch → refresh+retry).
+    pub(crate) reroutes: Arc<AtomicU64>,
     pub(crate) gates: Arc<Mutex<HashMap<(u32, u32), Gate>>>,
 }
 
@@ -166,6 +252,44 @@ impl PsClient {
         self.sync_count.load(Ordering::Relaxed)
     }
 
+    /// Sync sub-frames bounced with `Rerouted` (each one refreshed the
+    /// table and was resent). Climbs only across a live rebalance.
+    pub fn reroute_count(&self) -> u64 {
+        self.reroutes.load(Ordering::Relaxed)
+    }
+
+    /// Epoch of the routing table this client currently syncs under.
+    pub fn placement_epoch(&self) -> u64 {
+        self.placement.read().expect("ps placement lock").epoch()
+    }
+
+    /// Snapshot of the current routing table (the front-end serves hello
+    /// and placement fetches from this). Cheap: clones the `Arc`, not
+    /// the table.
+    pub(crate) fn placement_snapshot(&self) -> Arc<Placement> {
+        self.placement.read().expect("ps placement lock").clone()
+    }
+
+    /// Adopt a placement received from the front-end (reroute healing).
+    /// The wire is a trust boundary: a table for a different shard count
+    /// would send the fan-out out of bounds, so it is refused loudly;
+    /// an older-or-equal epoch is a no-op.
+    fn adopt_placement(&self, p: Placement) {
+        if p.n_shards() != self.shard_count() {
+            crate::log_warn!(
+                "ps",
+                "refusing placement for {} shards (client routes {})",
+                p.n_shards(),
+                self.shard_count()
+            );
+            return;
+        }
+        let mut cur = self.placement.write().expect("ps placement lock");
+        if p.epoch() > cur.epoch() {
+            *cur = Arc::new(p);
+        }
+    }
+
     /// Synchronous stats exchange: send local delta, adopt global reply.
     /// Returns the global snapshot for the touched functions plus any
     /// fresh globally detected events (§V trigger).
@@ -173,33 +297,28 @@ impl PsClient {
         if delta.is_empty() {
             return (StatsTable::new(), Vec::new());
         }
-        let n = self.shard_count();
-        let mut parts: Vec<Vec<(u32, RunStats)>> = vec![Vec::new(); n];
-        for (fid, st) in delta.iter() {
-            parts[shard_of(app, fid, n)].push((fid, *st));
-        }
-        self.sync_parts(app, rank, parts)
+        self.sync_entries(app, rank, delta.iter().map(|(f, s)| (f, *s)).collect())
     }
 
-    /// Routed sync from pre-partitioned sub-deltas (`parts[i]` goes to
-    /// shard `i`). The TCP front-end calls this directly so shard groups
-    /// carried on the wire are forwarded without re-hashing. Entries must
-    /// be grouped by [`shard_of`] or the global view fragments.
-    pub fn sync_parts(
+    /// Routed sync from a flat entry list. The client partitions under
+    /// its current placement, fans out with the table's epoch attached,
+    /// and — when a shard answers `Rerouted` — refreshes the table and
+    /// resends only the bounced entries, so every entry merges exactly
+    /// once. The TCP front-end calls this for validated grouped frames.
+    pub(crate) fn sync_entries(
         &self,
         app: u32,
         rank: u32,
-        parts: Vec<Vec<(u32, RunStats)>>,
+        mut entries: Vec<(u32, RunStats)>,
     ) -> (StatsTable, Vec<GlobalEvent>) {
-        if parts.iter().all(|p| p.is_empty()) {
+        if entries.is_empty() {
             return (StatsTable::new(), Vec::new());
         }
         self.sync_count.fetch_add(1, Ordering::Relaxed);
         let conns = match &self.route {
             Route::Sharded(c) => c.clone(),
-            Route::Frontend { .. } => return self.sync_grouped_frontend(app, rank, &parts),
+            Route::Frontend { .. } => return self.sync_frontend(app, rank, entries),
         };
-        debug_assert_eq!(parts.len(), conns.len());
         let key = (app, rank);
         let (reports_now, acked, seen) = {
             let g = self.gates.lock().expect("ps gate lock");
@@ -224,77 +343,164 @@ impl PsClient {
             }
         }
 
-        // Fan out: local shards get channel sends (their replies arrive
-        // on `rrx`); TCP shards get pipelined writes — every request goes
-        // out before any reply is read, with each connection's lock held
-        // across its write→read window (acquired in shard-index order,
-        // so concurrent clients cannot deadlock).
-        let (rtx, rrx) = channel();
-        let mut expected = 0usize;
-        let mut tcp: Vec<(std::sync::MutexGuard<'_, Reconnector<super::net::ShardWire>>, bool)> =
-            Vec::new();
-        for (i, part) in parts.into_iter().enumerate() {
-            if part.is_empty() || i >= conns.len() {
-                continue;
-            }
-            match &conns[i] {
-                ShardConn::Local(tx) => {
-                    if tx.send(ShardMsg::Sync { app, delta: part, reply: rtx.clone() }).is_ok() {
-                        expected += 1;
-                    }
-                }
-                ShardConn::Tcp(m) => {
-                    let mut g = m.lock().expect("ps shard conn lock");
-                    let ok = match g.get() {
-                        Ok(w) => match w.send_sync(app, &part) {
-                            Ok(()) => true,
-                            Err(e) => {
-                                crate::log_warn!("ps", "shard sync send failed: {e:#}");
-                                g.fail();
-                                false
-                            }
-                        },
-                        Err(e) => {
-                            crate::log_warn!("ps", "shard unreachable: {e:#}");
-                            false
-                        }
-                    };
-                    tcp.push((g, ok));
-                }
-            }
-        }
-        drop(rtx);
-
         let mut table = StatsTable::new();
         let mut vmax = 0u64;
-        for (mut g, ok) in tcp {
-            if !ok {
-                continue;
+        let mut last_epoch = u64::MAX;
+        let mut attempts = 0usize;
+        while !entries.is_empty() {
+            attempts += 1;
+            if attempts > SYNC_RETRY_MAX {
+                crate::log_warn!(
+                    "ps",
+                    "sync rerouted {attempts} times without a committed placement; \
+                     dropping {} entries",
+                    entries.len()
+                );
+                break;
             }
-            if let Ok(w) = g.get() {
-                match w.recv_sync() {
-                    Ok((entries, ver)) => {
-                        for (fid, st) in entries {
+            let placement = self.placement_snapshot();
+            if placement.epoch() == last_epoch {
+                // Same table as the attempt that was just bounced: the
+                // migration has not committed yet — give it a beat.
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            last_epoch = placement.epoch();
+            let epoch = placement.epoch();
+            let n = conns.len();
+            let mut parts: Vec<Vec<(u32, RunStats)>> = vec![Vec::new(); n];
+            for (fid, st) in entries.drain(..) {
+                parts[placement.shard_of(app, fid)].push((fid, st));
+            }
+            // `entries` is drained: it now accumulates bounced sub-frames
+            // for the next attempt. `sent[i]` keeps a TCP sub-frame until
+            // its reply says it merged (the wire Rerouted reply carries no
+            // payload); local shards return the delta inside `Rerouted`,
+            // so the channel path moves the Vec instead of cloning it.
+            let mut sent: Vec<Option<Vec<(u32, RunStats)>>> = (0..n).map(|_| None).collect();
+
+            // Fan out: local shards get channel sends (their replies
+            // arrive on `rrx`); TCP shards get pipelined writes — every
+            // request goes out before any reply is read, with each
+            // connection's lock held across its write→read window
+            // (acquired in shard-index order, so concurrent clients
+            // cannot deadlock).
+            let (rtx, rrx) = channel();
+            let mut expected = 0usize;
+            let mut tcp: Vec<(
+                std::sync::MutexGuard<'_, Reconnector<super::net::ShardWire>>,
+                bool,
+                usize,
+            )> = Vec::new();
+            for (i, part) in parts.into_iter().enumerate() {
+                if part.is_empty() {
+                    continue;
+                }
+                match &conns[i] {
+                    ShardConn::Local(tx) => {
+                        let msg = ShardMsg::Sync { app, epoch, delta: part, reply: rtx.clone() };
+                        if tx.send(msg).is_ok() {
+                            expected += 1;
+                        }
+                    }
+                    ShardConn::Tcp(pool) => {
+                        let mut g = pool[rank as usize % pool.len()]
+                            .lock()
+                            .expect("ps shard conn lock");
+                        let ok = match g.get() {
+                            Ok(w) => match w.send_sync(app, epoch, &part) {
+                                Ok(()) => {
+                                    sent[i] = Some(part);
+                                    true
+                                }
+                                Err(e) => {
+                                    crate::log_warn!("ps", "shard sync send failed: {e:#}");
+                                    g.fail();
+                                    false
+                                }
+                            },
+                            Err(e) => {
+                                crate::log_warn!("ps", "shard unreachable: {e:#}");
+                                false
+                            }
+                        };
+                        tcp.push((g, ok, i));
+                    }
+                }
+            }
+            drop(rtx);
+
+            for (mut g, ok, i) in tcp {
+                if !ok {
+                    continue;
+                }
+                if let Ok(w) = g.get() {
+                    match w.recv_sync() {
+                        Ok(super::net::ShardSyncResp::Ok { entries: got, version }) => {
+                            sent[i] = None;
+                            for (fid, st) in got {
+                                table.replace(fid, st);
+                            }
+                            vmax = vmax.max(version);
+                        }
+                        Ok(super::net::ShardSyncResp::Rerouted { epoch: shard_epoch }) => {
+                            if shard_epoch < epoch {
+                                // The shard is *behind* the table this
+                                // frame was built from: it missed a
+                                // migration and cannot serve until the
+                                // rebalancer re-pushes the table. Degrade
+                                // fast like a dead connection instead of
+                                // spinning the retry budget.
+                                sent[i] = None;
+                                crate::log_warn!(
+                                    "ps",
+                                    "shard {i} is at epoch {shard_epoch}, behind {epoch}; \
+                                     dropping its sub-frame"
+                                );
+                            } else {
+                                self.reroutes.fetch_add(1, Ordering::Relaxed);
+                                entries.extend(sent[i].take().unwrap_or_default());
+                            }
+                        }
+                        Err(e) => {
+                            sent[i] = None;
+                            crate::log_warn!("ps", "shard sync reply failed: {e:#}");
+                            g.fail();
+                        }
+                    }
+                }
+            }
+            for _ in 0..expected {
+                match rrx.recv() {
+                    Ok(ShardReply::Part(part)) => {
+                        for (fid, st) in part.entries {
                             table.replace(fid, st);
                         }
-                        vmax = vmax.max(ver);
+                        vmax = vmax.max(part.event_version);
                     }
-                    Err(e) => {
-                        crate::log_warn!("ps", "shard sync reply failed: {e:#}");
-                        g.fail();
+                    Ok(ShardReply::Rerouted { epoch: shard_epoch, delta }) => {
+                        if shard_epoch < epoch {
+                            // Behind-the-commit shard (see the TCP arm):
+                            // fast-fail its slice rather than retry.
+                            crate::log_warn!(
+                                "ps",
+                                "local shard at epoch {shard_epoch}, behind {epoch}; \
+                                 dropping its sub-frame"
+                            );
+                        } else {
+                            self.reroutes.fetch_add(1, Ordering::Relaxed);
+                            entries.extend(delta);
+                        }
                     }
+                    Ok(ShardReply::Refused) => {
+                        // A client partitioning with its own table at its
+                        // own epoch cannot misgroup; treat as dropped.
+                        crate::log_warn!("ps", "shard refused a locally routed frame");
+                    }
+                    Err(_) => break,
                 }
             }
-        }
-        for _ in 0..expected {
-            match rrx.recv() {
-                Ok(part) => {
-                    for (fid, st) in part.entries {
-                        table.replace(fid, st);
-                    }
-                    vmax = vmax.max(part.event_version);
-                }
-                Err(_) => break,
+            if !entries.is_empty() {
+                self.refresh_placement();
             }
         }
 
@@ -329,30 +535,70 @@ impl PsClient {
         (table, events)
     }
 
+    /// Pull a fresher routing table after a reroute. In-process clients
+    /// share the constellation's table, so there is nothing to fetch —
+    /// the commit itself updates it; routed TCP clients ask the
+    /// front-end.
+    fn refresh_placement(&self) {
+        if let AggConn::Tcp(m) = self.agg.as_ref() {
+            match m.lock().expect("ps agg conn lock").with(|w| w.fetch_placement()) {
+                Ok(p) => self.adopt_placement(p),
+                Err(e) => crate::log_warn!("ps", "placement refresh failed: {e:#}"),
+            }
+        }
+    }
+
     /// Degenerate single-endpoint route: one grouped frame to the
     /// front-end, which routes server-side (and gates the event fetch
     /// with *its* in-process client, so the reply still carries fresh
-    /// events exactly once).
-    fn sync_grouped_frontend(
+    /// events exactly once). A `Rerouted` reply carries the committed
+    /// table — adopt it and resend the whole frame (nothing merged).
+    fn sync_frontend(
         &self,
         app: u32,
         rank: u32,
-        parts: &[Vec<(u32, RunStats)>],
+        entries: Vec<(u32, RunStats)>,
     ) -> (StatsTable, Vec<GlobalEvent>) {
         let AggConn::Tcp(m) = self.agg.as_ref() else {
             return (StatsTable::new(), Vec::new());
         };
-        match m.lock().expect("ps agg conn lock").with(|w| w.sync_grouped(app, rank, parts)) {
-            Ok((entries, events)) => {
-                let mut table = StatsTable::new();
-                for (fid, st) in entries {
-                    table.replace(fid, st);
-                }
-                (table, events)
+        let mut attempts = 0usize;
+        loop {
+            attempts += 1;
+            if attempts > SYNC_RETRY_MAX {
+                crate::log_warn!("ps", "front-end sync rerouted {attempts} times; dropping");
+                return (StatsTable::new(), Vec::new());
             }
-            Err(e) => {
-                crate::log_warn!("ps", "front-end sync failed (will reconnect): {e:#}");
-                (StatsTable::new(), Vec::new())
+            let placement = self.placement_snapshot();
+            let mut parts: Vec<Vec<(u32, RunStats)>> =
+                vec![Vec::new(); placement.n_shards()];
+            for (fid, st) in &entries {
+                parts[placement.shard_of(app, *fid)].push((*fid, *st));
+            }
+            let res = m
+                .lock()
+                .expect("ps agg conn lock")
+                .with(|w| w.sync_grouped(app, rank, placement.epoch(), &parts));
+            match res {
+                Ok(super::net::GroupedResp::Ok { entries: got, events }) => {
+                    let mut table = StatsTable::new();
+                    for (fid, st) in got {
+                        table.replace(fid, st);
+                    }
+                    return (table, events);
+                }
+                Ok(super::net::GroupedResp::Rerouted(p)) => {
+                    self.reroutes.fetch_add(1, Ordering::Relaxed);
+                    let before = self.placement_epoch();
+                    self.adopt_placement(p);
+                    if self.placement_epoch() == before {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+                Err(e) => {
+                    crate::log_warn!("ps", "front-end sync failed (will reconnect): {e:#}");
+                    return (StatsTable::new(), Vec::new());
+                }
             }
         }
     }
@@ -457,6 +703,10 @@ pub struct PsHandle {
     shard_joins: Vec<JoinHandle<HashMap<FuncKey, RunStats>>>,
     sync_count: Arc<AtomicU64>,
     version: Arc<AtomicU64>,
+    placement: SharedPlacement,
+    rebalancer: Arc<Mutex<Rebalancer>>,
+    reb_stop: Arc<AtomicBool>,
+    reb_join: Option<JoinHandle<()>>,
 }
 
 /// Merged final state of a sharded parameter server.
@@ -518,13 +768,98 @@ impl PsHandle {
         )
     }
 
+    /// Epoch of the committed routing table.
+    pub fn placement_epoch(&self) -> u64 {
+        self.placement.read().expect("ps placement lock").epoch()
+    }
+
+    /// Snapshot of the committed routing table.
+    pub fn placement(&self) -> Placement {
+        self.placement.read().expect("ps placement lock").as_ref().clone()
+    }
+
+    /// Run one skew check now (same logic as the background cadence):
+    /// gather per-slot merge loads since the previous check, and if the
+    /// per-shard max/mean exceeds the configured ratio, plan moves,
+    /// migrate the affected state, and commit a new epoch. `Ok(None)`
+    /// when the window is balanced (or too small to judge).
+    pub fn rebalance_once(&self) -> anyhow::Result<Option<RebalanceReport>> {
+        self.rebalancer.lock().expect("rebalancer lock").run_once()
+    }
+
+    /// Explicit slot reassignment: migrate the state of `moves`
+    /// (slot → new shard) and commit the successor epoch. Returns the
+    /// new epoch. This is the API a placement-aware operator (or test)
+    /// uses; the skew-driven path is [`Self::rebalance_once`].
+    pub fn migrate_slots(&self, moves: &[(usize, u32)]) -> anyhow::Result<u64> {
+        // Hold the rebalancer lock across read → plan → migrate: only
+        // migrations commit placements, and they all hold this lock, so
+        // the table cannot change between the read and the handshake
+        // (migrate_to re-checks, belt and braces).
+        let reb = self.rebalancer.lock().expect("rebalancer lock");
+        let cur = self.placement.read().expect("ps placement lock").clone();
+        let new = cur.with_moves(moves)?;
+        let epoch = new.epoch();
+        reb.migrate_to(&cur, new)?;
+        Ok(epoch)
+    }
+
+    /// Current per-shard load counters (one snapshot round-trip per
+    /// shard), sorted by shard id.
+    pub fn shard_loads(&self) -> Vec<super::ShardLoad> {
+        let mut loads = Vec::new();
+        let (ptx, prx) = channel();
+        let mut expected = 0usize;
+        for conn in self.conns.iter() {
+            match conn {
+                ShardConn::Local(tx) => {
+                    if tx.send(ShardMsg::Snapshot { reply: ptx.clone() }).is_ok() {
+                        expected += 1;
+                    }
+                }
+                ShardConn::Tcp(pool) => {
+                    if let Ok(p) =
+                        pool[0].lock().expect("ps shard conn lock").with(|w| w.snapshot())
+                    {
+                        loads.extend(p.shard_loads.iter().copied());
+                    }
+                }
+            }
+        }
+        drop(ptx);
+        for _ in 0..expected {
+            match prx.recv() {
+                Ok(p) => loads.extend(p.shard_loads.iter().copied()),
+                Err(_) => break,
+            }
+        }
+        loads.sort_by_key(|l| l.shard);
+        loads
+    }
+
+    /// Cumulative per-slot merge counters, `(shard, slot, merges)` —
+    /// the raw skew signal (benches diff two readings for a windowed
+    /// view; counters stay with the shard that did the merging, so a
+    /// migrated slot restarts from 0 at its new owner).
+    pub fn slot_merge_counters(&self) -> Vec<(u32, u32, u64)> {
+        super::rebalance::collect_slot_loads(&self.conns)
+            .into_iter()
+            .flat_map(|s| s.loads.into_iter().map(move |(slot, m)| (s.shard, slot, m)))
+            .collect()
+    }
+
     /// Tear down after [`PsClient::shutdown`] and merge the final state.
     ///
-    /// Join order matters: the aggregator first (its final publish is
-    /// queued to the merge stage), then the merge stage (which still
-    /// queries the live shards for partials), then the shards.
-    /// Panics if any server thread panicked.
-    pub fn join(self) -> PsFinal {
+    /// Join order matters: the rebalance cadence first (it must not
+    /// touch shard connections mid-teardown), then the aggregator (its
+    /// final publish is queued to the merge stage), then the merge stage
+    /// (which still queries the live shards for partials), then the
+    /// shards. Panics if any server thread panicked.
+    pub fn join(mut self) -> PsFinal {
+        self.reb_stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.reb_join.take() {
+            let _ = j.join();
+        }
         let mut agg = self.agg_join.join().expect("ps aggregator panicked");
         // Close the merge stage's job channel: the aggregator's viz
         // sender is the only producer.
@@ -535,6 +870,7 @@ impl PsHandle {
         // snapshot carries per-shard loads like every published delta —
         // `/api/ps_stats` serves these after a finished run too.
         let mut shard_loads: Vec<super::ShardLoad> = Vec::new();
+        let mut placement_epoch = 0u64;
         let mut remote_functions = 0u64;
         let (ptx, prx) = channel();
         let mut expected = 0usize;
@@ -545,10 +881,13 @@ impl PsHandle {
                         expected += 1;
                     }
                 }
-                ShardConn::Tcp(m) => {
-                    if let Ok(p) = m.lock().expect("ps shard conn lock").with(|w| w.snapshot()) {
+                ShardConn::Tcp(pool) => {
+                    if let Ok(p) =
+                        pool[0].lock().expect("ps shard conn lock").with(|w| w.snapshot())
+                    {
                         remote_functions += p.functions_tracked;
                         shard_loads.extend(p.shard_loads.iter().copied());
+                        placement_epoch = placement_epoch.max(p.placement_epoch);
                     }
                 }
             }
@@ -556,7 +895,10 @@ impl PsHandle {
         drop(ptx);
         for _ in 0..expected {
             match prx.recv() {
-                Ok(p) => shard_loads.extend(p.shard_loads.iter().copied()),
+                Ok(p) => {
+                    shard_loads.extend(p.shard_loads.iter().copied());
+                    placement_epoch = placement_epoch.max(p.placement_epoch);
+                }
                 Err(_) => break,
             }
         }
@@ -572,6 +914,7 @@ impl PsHandle {
         let mut snapshot = agg.snapshot();
         snapshot.functions_tracked = global.len() as u64 + remote_functions;
         snapshot.shard_loads = shard_loads;
+        snapshot.placement_epoch = placement_epoch;
         let global_events = agg.global_events().to_vec();
         PsFinal {
             snapshot,
@@ -592,6 +935,10 @@ pub struct PsOpts {
     /// shard id. Non-empty switches the constellation to routed TCP
     /// shard connections.
     pub endpoints: Vec<String>,
+    /// TCP connections per remote shard endpoint (0 behaves as 1).
+    /// Syncs pick `rank % pool`, so the driver's AD workers no longer
+    /// serialize behind one write→read window per shard.
+    pub conn_pool: usize,
     /// Viz ingest channel for merged snapshot deltas.
     pub viz_tx: Option<Sender<VizSnapshot>>,
     /// Snapshot cadence in Report messages (0 behaves as 1).
@@ -603,11 +950,22 @@ pub struct PsOpts {
     /// Reports expected per step (the per-step quorum for global-event
     /// detection).
     pub reports_per_step: usize,
+    /// Skew-check cadence of the background rebalancer in milliseconds;
+    /// 0 (default) disables the cadence — [`PsHandle::rebalance_once`]
+    /// still works on demand.
+    pub rebalance_interval_ms: u64,
+    /// Rebalance trigger: act when windowed per-shard merge load has
+    /// max/mean above this. 1.0 is honoured (most aggressive); values
+    /// below 1.0 (including the unset default, 0.0) select 1.5.
+    pub rebalance_max_ratio: f64,
+    /// Minimum windowed merge count before judging skew (tiny windows
+    /// are noise); 0 = judge every window.
+    pub rebalance_min_merges: u64,
 }
 
 /// Spawn a sharded parameter server with in-process shards — see
 /// [`spawn_with`] for the full option set (remote shard endpoints,
-/// wall-clock publish cadence).
+/// wall-clock publish cadence, rebalancing).
 ///
 /// * `n_shards` — stat-shard threads (1 reproduces single-server
 ///   behaviour exactly);
@@ -645,32 +1003,49 @@ pub fn spawn_with(opts: PsOpts) -> anyhow::Result<(PsClient, PsHandle)> {
     let mut conns: Vec<ShardConn> = Vec::new();
     let mut shard_txs: Vec<Sender<ShardMsg>> = Vec::new();
     let mut shard_joins = Vec::new();
+    let n_shards = if opts.endpoints.is_empty() {
+        opts.shards.max(1)
+    } else {
+        opts.endpoints.len()
+    };
+    anyhow::ensure!(
+        n_shards <= SLOTS,
+        "at most {SLOTS} shards supported ({n_shards} requested)"
+    );
     if opts.endpoints.is_empty() {
-        let n = opts.shards.max(1);
-        for i in 0..n {
+        for i in 0..n_shards {
             let (tx, rx): (Sender<ShardMsg>, Receiver<ShardMsg>) = channel();
             let ver = version.clone();
             let join = std::thread::Builder::new()
                 .name(format!("chimbuko-ps-shard-{i}"))
-                .spawn(move || run_shard(rx, i as u32, ver))
+                .spawn(move || run_shard(rx, i as u32, n_shards, ver))
                 .expect("spawning ps shard");
             conns.push(ShardConn::Local(tx.clone()));
             shard_txs.push(tx);
             shard_joins.push(join);
         }
     } else {
-        let n = opts.endpoints.len();
+        let pool_size = opts.conn_pool.max(1);
         for (i, ep) in opts.endpoints.iter().enumerate() {
-            let wire = super::net::ShardWire::connect(ep, i as u32, n as u32)?;
-            let (id, total) = (i as u32, n as u32);
-            conns.push(ShardConn::Tcp(Mutex::new(Reconnector::seeded(
+            let (id, total) = (i as u32, n_shards as u32);
+            // First pool slot dials eagerly (fail fast on a bad
+            // address); the rest dial lazily on first use.
+            let wire = super::net::ShardWire::connect(ep, id, total)?;
+            let mut pool = vec![Mutex::new(Reconnector::seeded(
                 ep,
                 move |a: &str| super::net::ShardWire::connect(a, id, total),
                 wire,
-            ))));
+            ))];
+            for _ in 1..pool_size {
+                pool.push(Mutex::new(Reconnector::new(ep, move |a: &str| {
+                    super::net::ShardWire::connect(a, id, total)
+                })));
+            }
+            conns.push(ShardConn::Tcp(pool));
         }
     }
     let conns = Arc::new(conns);
+    let placement: SharedPlacement = Arc::new(RwLock::new(Arc::new(Placement::new(n_shards))));
 
     // Aggregator: a ParameterServer whose viz sender feeds the merge
     // stage instead of the viz channel directly. It also owns the
@@ -737,8 +1112,8 @@ pub fn spawn_with(opts: PsOpts) -> anyhow::Result<(PsClient, PsHandle)> {
                 if v != last_ver {
                     agg_version.store(v, Ordering::SeqCst);
                     for conn in push_conns.iter() {
-                        if let ShardConn::Tcp(m) = conn {
-                            if let Err(e) = m
+                        if let ShardConn::Tcp(pool) = conn {
+                            if let Err(e) = pool[0]
                                 .lock()
                                 .expect("ps shard conn lock")
                                 .with(|w| w.push_version(v))
@@ -772,8 +1147,12 @@ pub fn spawn_with(opts: PsOpts) -> anyhow::Result<(PsClient, PsHandle)> {
                                 expected += 1;
                             }
                         }
-                        ShardConn::Tcp(m) => {
-                            match m.lock().expect("ps shard conn lock").with(|w| w.snapshot()) {
+                        ShardConn::Tcp(pool) => {
+                            match pool[0]
+                                .lock()
+                                .expect("ps shard conn lock")
+                                .with(|w| w.snapshot())
+                            {
                                 Ok(p) => {
                                     let _ = ptx.send(p);
                                     expected += 1;
@@ -799,12 +1178,63 @@ pub fn spawn_with(opts: PsOpts) -> anyhow::Result<(PsClient, PsHandle)> {
         })
         .expect("spawning ps merge stage");
 
+    // The rebalancer: shared between the on-demand API (PsHandle) and
+    // the optional background cadence thread.
+    let rebalancer = Arc::new(Mutex::new(Rebalancer::new(
+        conns.clone(),
+        placement.clone(),
+        opts.rebalance_max_ratio,
+        opts.rebalance_min_merges,
+    )));
+    let reb_stop = Arc::new(AtomicBool::new(false));
+    let reb_join = if opts.rebalance_interval_ms > 0 {
+        let reb = rebalancer.clone();
+        let stop = reb_stop.clone();
+        let interval = opts.rebalance_interval_ms;
+        Some(
+            std::thread::Builder::new()
+                .name("chimbuko-ps-rebalance".into())
+                .spawn(move || {
+                    let tick = Duration::from_millis(interval.clamp(1, 25));
+                    let mut waited_ms = 0u64;
+                    loop {
+                        std::thread::sleep(tick);
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        waited_ms += tick.as_millis() as u64;
+                        if waited_ms < interval {
+                            continue;
+                        }
+                        waited_ms = 0;
+                        match reb.lock().expect("rebalancer lock").run_once() {
+                            Ok(Some(r)) => crate::log_info!(
+                                "ps",
+                                "rebalanced to epoch {} ({} slot moves, max/mean {:.2} → {:.2} planned)",
+                                r.epoch,
+                                r.moves,
+                                r.ratio_before,
+                                r.ratio_planned
+                            ),
+                            Ok(None) => {}
+                            Err(e) => crate::log_warn!("ps", "rebalance failed: {e:#}"),
+                        }
+                    }
+                })
+                .expect("spawning ps rebalancer"),
+        )
+    } else {
+        None
+    };
+
     let sync_count = Arc::new(AtomicU64::new(0));
     let client = PsClient {
         route: Route::Sharded(conns.clone()),
         agg: Arc::new(AggConn::Local(agg_tx)),
+        placement: placement.clone(),
         sync_count: sync_count.clone(),
         agg_fetches: Arc::new(AtomicU64::new(0)),
+        reroutes: Arc::new(AtomicU64::new(0)),
         gates: Arc::new(Mutex::new(HashMap::new())),
     };
     let handle = PsHandle {
@@ -815,49 +1245,155 @@ pub fn spawn_with(opts: PsOpts) -> anyhow::Result<(PsClient, PsHandle)> {
         shard_joins,
         sync_count,
         version,
+        placement,
+        rebalancer,
+        reb_stop,
+        reb_join,
     };
     Ok((client, handle))
 }
 
-/// One stat shard's loop: own the `shard_of == i` partition of the
-/// global function statistics, count its load, and piggyback the
+/// One stat shard's loop: own the current placement's partition of the
+/// global function statistics, count its load per slot, validate every
+/// frame against its own epoch-versioned table, and piggyback the
 /// aggregator event version (shared atomic locally; updated by version
 /// pushes in a standalone `ps-shard-server`).
 pub(crate) fn run_shard(
     rx: Receiver<ShardMsg>,
     shard_id: u32,
+    n_shards: usize,
     version: Arc<AtomicU64>,
 ) -> HashMap<FuncKey, RunStats> {
     let mut table: HashMap<FuncKey, RunStats> = HashMap::new();
+    let mut placement = Placement::new(n_shards);
+    // Slots gained by an in-flight migration: their state has not been
+    // installed yet, so syncs touching them bounce with `Rerouted` (a
+    // merge now would reorder against the migrated summary and break
+    // bit-equivalence with the reference). If the Install never arrives
+    // ([`PENDING_TTL`] — the rebalancer died between phases), the slots
+    // open empty: the migrated slice is lost like any crashed shard's,
+    // but traffic stops bouncing.
+    let mut pending = vec![false; SLOTS];
+    let mut pending_since: Option<Instant> = None;
     let mut syncs = 0u64;
     let mut merges = 0u64;
+    let mut slot_merges = vec![0u64; SLOTS];
     while let Ok(msg) = rx.recv() {
         match msg {
-            ShardMsg::Sync { app, delta, reply } => {
-                syncs += 1;
-                let mut out = Vec::with_capacity(delta.len());
-                for (fid, st) in delta {
-                    let g = table.entry((app, fid)).or_default();
-                    g.merge(&st);
-                    merges += 1;
-                    out.push((fid, *g));
+            ShardMsg::Sync { app, epoch, delta, reply } => {
+                // Validate the whole frame before merging any of it:
+                // accept/reject must be atomic, or a client retry after
+                // `Rerouted` would double-merge the accepted prefix.
+                enum Verdict {
+                    Accept(Vec<usize>),
+                    Reroute,
+                    Refuse,
                 }
-                let _ = reply.send(ShardPart {
-                    entries: out,
-                    event_version: version.load(Ordering::SeqCst),
-                });
+                let verdict = 'frame: {
+                    if epoch != placement.epoch() {
+                        break 'frame Verdict::Reroute;
+                    }
+                    let mut slots = Vec::with_capacity(delta.len());
+                    for (fid, _) in &delta {
+                        let slot = Placement::slot_of(app, *fid);
+                        if placement.shard_of_slot(slot) != shard_id as usize {
+                            break 'frame Verdict::Refuse;
+                        }
+                        if pending[slot] {
+                            if pending_since.is_some_and(|t| t.elapsed() < PENDING_TTL) {
+                                break 'frame Verdict::Reroute;
+                            }
+                            // Install never arrived: open the slots empty.
+                            pending.fill(false);
+                            pending_since = None;
+                        }
+                        slots.push(slot);
+                    }
+                    Verdict::Accept(slots)
+                };
+                let resp = match verdict {
+                    Verdict::Reroute => ShardReply::Rerouted {
+                        epoch: placement.epoch(),
+                        delta,
+                    },
+                    Verdict::Refuse => ShardReply::Refused,
+                    Verdict::Accept(slots) => {
+                        syncs += 1;
+                        let mut out = Vec::with_capacity(delta.len());
+                        for ((fid, st), slot) in delta.iter().zip(&slots) {
+                            let g = table.entry((app, *fid)).or_default();
+                            g.merge(st);
+                            merges += 1;
+                            slot_merges[*slot] += 1;
+                            out.push((*fid, *g));
+                        }
+                        ShardReply::Part(ShardPart {
+                            entries: out,
+                            event_version: version.load(Ordering::SeqCst),
+                        })
+                    }
+                };
+                let _ = reply.send(resp);
             }
             ShardMsg::Snapshot { reply } => {
                 let _ = reply.send(VizSnapshot {
                     functions_tracked: table.len() as u64,
+                    placement_epoch: placement.epoch(),
                     shard_loads: vec![super::ShardLoad {
                         shard: shard_id,
                         syncs,
                         merges,
                         functions: table.len() as u64,
+                        slots: placement.slots_of_shard(shard_id).len() as u32,
                     }],
                     ..VizSnapshot::default()
                 });
+            }
+            ShardMsg::SlotLoads { reply } => {
+                let loads = slot_merges
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &m)| m > 0)
+                    .map(|(s, &m)| (s as u32, m))
+                    .collect();
+                let _ = reply.send(ShardSlotLoads {
+                    shard: shard_id,
+                    epoch: placement.epoch(),
+                    loads,
+                });
+            }
+            ShardMsg::Migrate { placement: new, reply } => {
+                let mut out: Vec<(FuncKey, RunStats)> = Vec::new();
+                if new.epoch() > placement.epoch() {
+                    let gained = placement.gains(&new, shard_id);
+                    if !gained.is_empty() {
+                        pending_since = Some(Instant::now());
+                    }
+                    for s in gained {
+                        pending[s] = true;
+                    }
+                    table.retain(|&(app, fid), st| {
+                        if new.shard_of(app, fid) != shard_id as usize {
+                            out.push(((app, fid), *st));
+                            false
+                        } else {
+                            true
+                        }
+                    });
+                    placement = new;
+                }
+                let _ = reply.send(out);
+            }
+            ShardMsg::Install { entries, reply } => {
+                for ((app, fid), st) in entries {
+                    // Pending slots blocked syncs, so this is a pure
+                    // move: merging into an absent entry adopts the
+                    // migrated moments bit-for-bit.
+                    table.entry((app, fid)).or_default().merge(&st);
+                }
+                pending.fill(false);
+                pending_since = None;
+                let _ = reply.send(());
             }
             ShardMsg::Shutdown => break,
         }
@@ -877,6 +1413,8 @@ mod tests {
                     let s = shard_of(app, fid, n);
                     assert!(s < n);
                     assert_eq!(s, shard_of(app, fid, n), "must be deterministic");
+                    // The free function is the epoch-0 placement.
+                    assert_eq!(s, Placement::new(n).shard_of(app, fid));
                 }
             }
         }
@@ -951,12 +1489,15 @@ mod tests {
         assert_eq!(total_merges, 24);
         let total_syncs: u64 = snap.shard_loads.iter().map(|l| l.syncs).sum();
         assert_eq!(total_syncs, 3, "the routed sync touched every shard once");
+        let total_slots: u32 = snap.shard_loads.iter().map(|l| l.slots).sum();
+        assert_eq!(total_slots as usize, SLOTS, "shards partition the slot space");
         client.shutdown();
         let fin = handle.join();
         assert_eq!(fin.snapshot.total_anomalies, 2);
         // The final snapshot carries the load counters too (this is what
         // /api/ps_stats serves after a finished run).
         assert_eq!(fin.snapshot.shard_loads.len(), 3);
+        assert_eq!(fin.snapshot.placement_epoch, 0, "no rebalance ran");
         // Final shutdown publish also reached the channel; it is a delta
         // with no new ranks (nothing changed since the explicit publish).
         let last = vrx.recv().unwrap();
@@ -1090,6 +1631,87 @@ mod tests {
         assert_eq!(stats.total_executions, 30);
         assert_eq!(stats.ranks, 1);
         assert_eq!(stats.event_version, 0);
+        client.shutdown();
+        handle.join();
+    }
+
+    #[test]
+    fn migrate_slots_moves_state_and_bumps_epoch() {
+        let (client, handle) = spawn(4, None, usize::MAX >> 1, 1);
+        let mut delta = StatsTable::new();
+        for fid in 0..32u32 {
+            delta.push(fid, fid as f64 + 1.0);
+        }
+        client.sync(0, 0, &delta);
+        assert_eq!(client.placement_epoch(), 0);
+
+        // Move fid 5's slot to a different shard; state must follow.
+        let slot = Placement::slot_of(0, 5);
+        let from = handle.placement().shard_of_slot(slot) as u32;
+        let to = (from + 1) % 4;
+        let epoch = handle.migrate_slots(&[(slot, to)]).unwrap();
+        assert_eq!(epoch, 1);
+        assert_eq!(handle.placement_epoch(), 1);
+        assert_eq!(client.placement_epoch(), 1, "in-proc client shares the table");
+
+        // Post-migration syncs still see the full accumulated history.
+        let (global, _) = client.sync(0, 0, &delta);
+        for fid in 0..32u32 {
+            assert_eq!(global.get(fid).unwrap().count(), 2, "fid {fid} lost history");
+        }
+        client.shutdown();
+        let fin = handle.join();
+        assert_eq!(fin.global_len(), 32);
+        assert_eq!(fin.snapshot.placement_epoch, 1);
+        for fid in 0..32u32 {
+            assert_eq!(fin.global_stats(0, fid).unwrap().count(), 2);
+        }
+    }
+
+    #[test]
+    fn rebalance_once_fixes_hot_slot_skew() {
+        let (client, handle) = spawn(4, None, usize::MAX >> 1, 1);
+        // Hot function in every delta (~1/3 of merges) + a uniform tail.
+        let hot = 3u32;
+        for i in 0..600u32 {
+            let mut delta = StatsTable::new();
+            delta.push(hot, 10.0 + i as f64);
+            delta.push(8 + (i % 200), 1.0);
+            delta.push(8 + ((i * 7 + 3) % 200), 1.0);
+            client.sync(0, 0, &delta);
+        }
+        let before: Vec<u64> = handle.shard_loads().iter().map(|l| l.merges).collect();
+        assert!(
+            crate::placement::load_ratio(&before) > 1.5,
+            "setup must be skewed (loads {before:?})"
+        );
+        let report = handle.rebalance_once().unwrap().expect("skew must trigger");
+        assert!(report.moves > 0);
+        assert_eq!(report.epoch, 1);
+        assert!(report.ratio_planned < report.ratio_before);
+
+        // Windowed load after the rebalance: diff the cumulative per-slot
+        // counters across a second identical traffic phase.
+        let snap1 = handle.slot_merge_counters();
+        for i in 0..600u32 {
+            let mut delta = StatsTable::new();
+            delta.push(hot, 10.0 + i as f64);
+            delta.push(8 + (i % 200), 1.0);
+            delta.push(8 + ((i * 7 + 3) % 200), 1.0);
+            client.sync(0, 0, &delta);
+        }
+        let snap2 = handle.slot_merge_counters();
+        let mut shard_window = vec![0u64; 4];
+        let prev: HashMap<(u32, u32), u64> =
+            snap1.into_iter().map(|(s, slot, m)| ((s, slot), m)).collect();
+        for (shard, slot, m) in snap2 {
+            shard_window[shard as usize] += m - prev.get(&(shard, slot)).copied().unwrap_or(0);
+        }
+        let after = crate::placement::load_ratio(&shard_window);
+        assert!(
+            after < 1.5,
+            "rebalanced max/mean {after:.2} must be < 1.5 (window {shard_window:?})"
+        );
         client.shutdown();
         handle.join();
     }

@@ -131,9 +131,10 @@ pub fn global_events(state: &VizState) -> Json {
 }
 
 /// `/api/ps_stats` — parameter-server shard load counters (merge/sync
-/// counts per stat shard, from the latest published snapshot) plus the
-/// aggregator-side totals. The groundwork the ROADMAP's shard-rebalancing
-/// item needs: skew is visible here before any rebalancer exists.
+/// counts per stat shard, from the latest published snapshot), the
+/// placement view (epoch + slots owned per shard — how the rebalancer
+/// has reshaped routing), and the aggregator-side totals. The skew the
+/// rebalancer acts on is visible here: compare `merges` across shards.
 pub fn ps_stats(state: &VizState) -> Json {
     let loads = state
         .latest
@@ -145,11 +146,13 @@ pub fn ps_stats(state: &VizState) -> Json {
                 ("syncs", Json::num(l.syncs as f64)),
                 ("merges", Json::num(l.merges as f64)),
                 ("functions", Json::num(l.functions as f64)),
+                ("slots", Json::num(l.slots as f64)),
             ])
         })
         .collect();
     Json::obj(vec![
         ("shards", Json::num(state.latest.shard_loads.len() as f64)),
+        ("placement_epoch", Json::num(state.latest.placement_epoch as f64)),
         ("shard_loads", Json::Arr(loads)),
         ("functions_tracked", Json::num(state.latest.functions_tracked as f64)),
         ("total_anomalies", Json::num(state.latest.total_anomalies as f64)),
@@ -191,11 +194,13 @@ mod tests {
             total_anomalies: 2,
             total_executions: 50,
             functions_tracked: 1,
+            placement_epoch: 2,
             shard_loads: vec![crate::ps::ShardLoad {
                 shard: 0,
                 syncs: 4,
                 merges: 9,
                 functions: 1,
+                slots: 256,
             }],
             ..VizSnapshot::default()
         };
@@ -230,6 +235,8 @@ mod tests {
         assert_eq!(loads.len(), 1);
         assert_eq!(loads[0].get("syncs").unwrap().as_u64(), Some(4));
         assert_eq!(loads[0].get("merges").unwrap().as_u64(), Some(9));
+        assert_eq!(loads[0].get("slots").unwrap().as_u64(), Some(256));
+        assert_eq!(j.get("placement_epoch").unwrap().as_u64(), Some(2));
         assert_eq!(j.get("total_anomalies").unwrap().as_u64(), Some(2));
     }
 

@@ -288,6 +288,7 @@ mod tests {
                 syncs: 2,
                 merges: 5,
                 functions: 3,
+                slots: 256,
             }],
             ..VizSnapshot::default()
         };

@@ -13,6 +13,13 @@
 //! global-event delivery order. A killed-and-restarted shard endpoint
 //! must heal through the client's reconnect/backoff path
 //! (`killed_shard_endpoint_reconnects`).
+//!
+//! And across the *placement* axis: a rebalance fired mid-run — slot
+//! migration, epoch bump, `Rerouted` healing — must be invisible in the
+//! results, in-process (`mid_run_rebalance_equivalence`), across TCP
+//! endpoints (`tcp_mid_run_rebalance_equivalence`), and across OS
+//! processes (the smoke runs with a live skew-driven rebalancer and
+//! asserts at least one epoch bump happened mid-run).
 
 use chimbuko::ps::net::PsTcpServer;
 use chimbuko::ps::{self, ParameterServer, PsClient, PsRequest, StepStat};
@@ -205,20 +212,41 @@ fn burst_workload_actually_triggers_global_events() {
     assert_eq!(delivered, reference.global_events().len());
 }
 
+/// Append one hot function to every delta: a single-hot-fid workload is
+/// what skews one shard and exercises the rebalancer. The reference
+/// sees the same mutated deltas, so equivalence still holds bit-for-bit.
+fn add_hot_fid(workload: &mut [StepOps], fid: u32) {
+    for ops in workload.iter_mut() {
+        for (_, delta) in ops.per_rank.iter_mut() {
+            delta.push(fid, 250.0);
+        }
+    }
+}
+
 /// Drive one workload through a routed client and compare every sync
 /// reply, the delivered event sequence, the wire stats, and the final
 /// joined state against the single-threaded reference — bit for bit.
+/// `mid_hook` (when given) fires once at the halfway sync — the
+/// mid-run-rebalance tests migrate slots there.
 fn assert_client_matches_reference(
     client: &PsClient,
     workload: &[StepOps],
     reference: &ParameterServer,
     ref_replies: &[Vec<(u32, chimbuko::stats::RunStats)>],
     label: &str,
+    mid_hook: Option<&dyn Fn()>,
 ) {
+    let total_syncs: usize = workload.iter().map(|o| o.per_rank.len()).sum();
+    let mut hook = mid_hook;
     let mut reply_idx = 0usize;
     let mut delivered = Vec::new();
     for ops in workload {
         for (report, delta) in &ops.per_rank {
+            if reply_idx >= total_syncs / 2 {
+                if let Some(h) = hook.take() {
+                    h();
+                }
+            }
             client.report(report.clone());
             let (global, events) = client.sync(report.app, report.rank, delta);
             delivered.extend(events);
@@ -283,7 +311,7 @@ fn tcp_endpoint_equivalence_matches_reference() {
         let client = PsClient::connect(&front.addr().to_string()).unwrap();
         assert_eq!(client.shard_count(), n_shards);
         let label = format!("{n_shards} endpoints");
-        assert_client_matches_reference(&client, &workload, &reference, &ref_replies, &label);
+        assert_client_matches_reference(&client, &workload, &reference, &ref_replies, &label, None);
         drop(front);
         drop(shard_srvs);
         local_client.shutdown();
@@ -397,6 +425,9 @@ fn multi_process_ps_smoke() {
     );
     let ranks = 3usize;
     let endpoints = format!("{a0},{a1}");
+    // A live skew-driven rebalancer in the front-end process: low
+    // trigger ratio + tiny window floor so the hot-fid workload below
+    // fires at least one rebalance mid-run.
     let (_fe, fa) = spawn_server(
         &[
             "ps-server",
@@ -408,6 +439,12 @@ fn multi_process_ps_smoke() {
             &ranks.to_string(),
             "--publish-every",
             "1000000",
+            "--rebalance-interval-ms",
+            "100",
+            "--rebalance-max-ratio",
+            "1.05",
+            "--rebalance-min-merges",
+            "1",
         ],
         "server on ",
     );
@@ -416,17 +453,154 @@ fn multi_process_ps_smoke() {
     assert_eq!(client.shard_count(), 2);
 
     let mut rng = Rng::new(0xBEEF);
-    let workload = gen_workload(&mut rng, ranks, 8, 6);
+    let mut workload = gen_workload(&mut rng, ranks, 8, 6);
+    // Eight hot functions, all on shard 0 at epoch 0: every delta then
+    // lands ≥ 8 merges on shard 0 while the random tail adds ≤ 6, so the
+    // windowed max/mean is ≥ 8/7 no matter how the tail splits — the
+    // skew-driven trigger (1.05) fires deterministically.
+    let hot: Vec<u32> = (0..64u32).filter(|&f| ps::shard_of(0, f, 2) == 0).take(8).collect();
+    assert_eq!(hot.len(), 8);
+    for &f in &hot {
+        add_hot_fid(&mut workload, f);
+    }
     let (reference, ref_replies) = drive_reference(&workload, ranks);
     assert!(
         !reference.global_events().is_empty(),
         "workload must flag a global event or the delivery check is vacuous"
     );
+    // Halfway through, park long enough for the front-end's rebalance
+    // cadence to judge the skewed first half and migrate (wire
+    // migrate/install between the two shard-server processes).
+    let park = || std::thread::sleep(std::time::Duration::from_millis(500));
     assert_client_matches_reference(
         &client,
         &workload,
         &reference,
         &ref_replies,
         "multi-process",
+        Some(&park),
     );
+    assert!(
+        client.placement_epoch() > 0,
+        "the skewed first half must have triggered a mid-run rebalance"
+    );
+    assert!(
+        client.reroute_count() > 0,
+        "the routed client must have healed through Rerouted after the epoch bump"
+    );
+}
+
+#[test]
+fn mid_run_rebalance_equivalence() {
+    // Rebalance fired mid-run, in-process: migrate a handful of slots
+    // (including the hot function's) halfway through the workload; every
+    // reply, the delivered event order, and the final joined state must
+    // stay bit-identical to the static-placement reference.
+    let mut rng = Rng::new(0x4EBA);
+    let ranks = 3;
+    let mut workload = gen_workload(&mut rng, ranks, 10, 8);
+    add_hot_fid(&mut workload, 7);
+    let (reference, ref_replies) = drive_reference(&workload, ranks);
+    assert!(
+        !reference.global_events().is_empty(),
+        "workload must flag a global event or the delivery check is vacuous"
+    );
+
+    for n_shards in [2usize, 4] {
+        let (client, handle) = ps::spawn(n_shards, None, usize::MAX >> 1, ranks);
+        let migrate = || {
+            let p = handle.placement();
+            let mut moves: Vec<(usize, u32)> = Vec::new();
+            for fid in [7u32, 0, 3] {
+                let slot = chimbuko::placement::Placement::slot_of(0, fid);
+                if moves.iter().any(|&(s, _)| s == slot) {
+                    continue;
+                }
+                let cur = p.shard_of_slot(slot) as u32;
+                moves.push((slot, (cur + 1) % n_shards as u32));
+            }
+            let epoch = handle.migrate_slots(&moves).expect("mid-run migration");
+            assert_eq!(epoch, 1);
+        };
+        let label = format!("{n_shards} shards mid-rebalance");
+        assert_client_matches_reference(
+            &client,
+            &workload,
+            &reference,
+            &ref_replies,
+            &label,
+            Some(&migrate),
+        );
+        assert_eq!(client.placement_epoch(), 1, "{label}: epoch must have bumped");
+        client.shutdown();
+        let fin = handle.join();
+        assert_eq!(fin.global_len(), reference.global_len(), "{label}: global size");
+        for (key, st) in reference.global_iter() {
+            assert_eq!(fin.global.get(&key), Some(st), "{label}: stats diverged for {key:?}");
+        }
+        assert_eq!(fin.global_events, reference.global_events().to_vec(), "{label}: events");
+        assert_eq!(fin.snapshot.placement_epoch, 1, "{label}: snapshot epoch");
+        let want_snap = reference.snapshot();
+        assert_eq!(fin.snapshot.total_anomalies, want_snap.total_anomalies, "{label}");
+        assert_eq!(fin.snapshot.total_executions, want_snap.total_executions, "{label}");
+        assert_eq!(fin.snapshot.functions_tracked, want_snap.functions_tracked, "{label}");
+    }
+}
+
+#[test]
+fn tcp_mid_run_rebalance_equivalence() {
+    // The acceptance shape: a rebalance fired mid-run across TCP
+    // endpoints. The routed client learns about the epoch bump only
+    // through a Rerouted bounce, refreshes its table from the front-end,
+    // resends the bounced sub-frames — and stays bit-identical.
+    let mut rng = Rng::new(0x7EBA);
+    let ranks = 3;
+    let mut workload = gen_workload(&mut rng, ranks, 10, 8);
+    add_hot_fid(&mut workload, 7);
+    let (reference, ref_replies) = drive_reference(&workload, ranks);
+    assert!(
+        !reference.global_events().is_empty(),
+        "workload must flag a global event or the delivery check is vacuous"
+    );
+
+    let n_shards = 4usize;
+    let (local_client, handle) = ps::spawn(n_shards, None, usize::MAX >> 1, ranks);
+    let shard_srvs = handle.serve_shard_endpoints().unwrap();
+    let addrs: Vec<String> = shard_srvs.iter().map(|s| s.addr().to_string()).collect();
+    let front =
+        PsTcpServer::start_with_topology("127.0.0.1:0", local_client.clone(), addrs).unwrap();
+    let client = PsClient::connect(&front.addr().to_string()).unwrap();
+    assert_eq!(client.placement_epoch(), 0);
+
+    let migrate = || {
+        let p = handle.placement();
+        let slot = chimbuko::placement::Placement::slot_of(0, 7);
+        let cur = p.shard_of_slot(slot) as u32;
+        let epoch = handle.migrate_slots(&[(slot, (cur + 1) % n_shards as u32)]).unwrap();
+        assert_eq!(epoch, 1);
+    };
+    assert_client_matches_reference(
+        &client,
+        &workload,
+        &reference,
+        &ref_replies,
+        "tcp mid-rebalance",
+        Some(&migrate),
+    );
+    assert!(
+        client.reroute_count() > 0,
+        "stale-epoch frames must have bounced and healed"
+    );
+    assert_eq!(client.placement_epoch(), 1, "client must have refreshed to epoch 1");
+
+    drop(front);
+    drop(shard_srvs);
+    local_client.shutdown();
+    let fin = handle.join();
+    assert_eq!(fin.global_len(), reference.global_len());
+    for (key, st) in reference.global_iter() {
+        assert_eq!(fin.global.get(&key), Some(st), "stats diverged for {key:?}");
+    }
+    assert_eq!(fin.global_events, reference.global_events().to_vec());
+    assert_eq!(fin.snapshot.placement_epoch, 1);
 }
