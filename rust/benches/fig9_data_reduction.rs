@@ -61,7 +61,38 @@ fn main() {
             chimbuko::util::fmt_bytes(last.log_bytes),
         );
     }
+
+    // --- codec A/B: jsonl vs binary record pipeline at 4 shards ----------
+    let (c_clients, c_records, c_queries) =
+        if fast { (4, 4_000, 48) } else { (8, 20_000, 240) };
+    println!(
+        "\ncodec sweep: 4 shards, {} clients x {} records, jsonl vs binary\n",
+        c_clients, c_records
+    );
+    let codec = chimbuko::exp::run_codec_bench(4, c_clients, c_records, c_queries, 7)
+        .expect("codec sweep");
+    print!("{}", codec.render());
+    println!(
+        "shape check: binary ingest {:.2}x jsonl (target ≥ 2x); \
+         log bytes/record {:.1} vs {:.1}",
+        codec.ingest_speedup(),
+        codec
+            .rows
+            .iter()
+            .find(|r| r.format == "binary")
+            .map(|r| r.log_bytes_per_record)
+            .unwrap_or(0.0),
+        codec
+            .rows
+            .iter()
+            .find(|r| r.format == "jsonl")
+            .map(|r| r.log_bytes_per_record)
+            .unwrap_or(0.0),
+    );
+
+    let mut artifact = pdb.to_json();
+    artifact.set("codec_rows", codec.rows_json());
     let out = "BENCH_provdb.json";
-    std::fs::write(out, pdb.to_json().to_pretty()).expect("writing BENCH_provdb.json");
+    std::fs::write(out, artifact.to_pretty()).expect("writing BENCH_provdb.json");
     println!("wrote {out}");
 }

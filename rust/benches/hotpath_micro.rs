@@ -112,6 +112,60 @@ fn main() {
         labeled.len() as u64
     });
 
+    // --- provenance codec: binary vs JSONL text (the provDB pipeline) ---
+    use chimbuko::provenance::{codec, ProvRecord};
+    let records: Vec<ProvRecord> = labeled
+        .iter()
+        .map(|l| ProvRecord::from_labeled(l, reg.name(l.rec.fid)))
+        .collect();
+    let mut enc_buf: Vec<u8> = Vec::new();
+    b.run_throughput("prov: encode binary batch", || {
+        enc_buf.clear();
+        for r in &records {
+            codec::encode(r, &mut enc_buf);
+        }
+        records.len() as u64
+    });
+    let mut encoded: Vec<u8> = Vec::new();
+    for r in &records {
+        codec::encode(r, &mut encoded);
+    }
+    b.run_throughput("prov: decode binary batch", || {
+        let mut pos = 0usize;
+        let mut n = 0u64;
+        while pos < encoded.len() {
+            let (_, used) = codec::decode(&encoded[pos..]).unwrap();
+            pos += used;
+            n += 1;
+        }
+        n
+    });
+    b.run_throughput("prov: validate binary batch (ingest boundary)", || {
+        let mut pos = 0usize;
+        let mut n = 0u64;
+        while pos < encoded.len() {
+            pos += codec::validate(&encoded[pos..]).unwrap();
+            n += 1;
+        }
+        n
+    });
+    let lines: Vec<String> = records
+        .iter()
+        .map(|r| {
+            let mut s = String::with_capacity(360);
+            r.write_jsonl(&mut s);
+            s
+        })
+        .collect();
+    b.run_throughput("prov: parse JSONL batch", || {
+        let mut n = 0u64;
+        for line in &lines {
+            let _ = ProvRecord::from_jsonl_line(line).unwrap();
+            n += 1;
+        }
+        n
+    });
+
     // --- BP encode ---
     b.run_throughput("bp: encode 50 frames", || {
         let mut w = chimbuko::adios::BpWriter::counting();

@@ -1,0 +1,83 @@
+#!/usr/bin/env python3
+"""Diff the codec_rows of a fresh BENCH_provdb.json against the committed
+baseline so codec regressions are visible in the CI artifact trail.
+
+Usage: codec_diff.py <BENCH_provdb.json> <baseline.json>
+
+Prints a per-(format, shards) comparison table and flags (without
+failing the build — CI runners are noisy) when:
+  * binary ingest falls below 2x jsonl (the PR acceptance floor), or
+  * binary log bytes/record is no longer strictly smaller than jsonl's.
+Exits non-zero only when the files are missing or the schema is broken,
+so a codec change that forgets to emit codec_rows fails loudly.
+"""
+
+import json
+import sys
+
+
+def rows_by_key(rows):
+    return {(r["format"], int(r["shards"])): r for r in rows}
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        fresh = json.load(f)
+    with open(sys.argv[2]) as f:
+        base = json.load(f)
+    fresh_rows = fresh.get("codec_rows")
+    base_rows = base.get("codec_rows")
+    if not fresh_rows:
+        print(f"ERROR: {sys.argv[1]} has no codec_rows — did the fig9 codec sweep run?")
+        return 1
+    if not base_rows:
+        print(f"ERROR: {sys.argv[2]} has no codec_rows — baseline schema broken")
+        return 1
+
+    fresh_by, base_by = rows_by_key(fresh_rows), rows_by_key(base_rows)
+    if base.get("provisional"):
+        print(
+            "NOTE: baseline is PROVISIONAL (pre-CI estimates, not measured artifacts) —\n"
+            "      deltas below are not regression evidence; seed the baseline from this\n"
+            "      run's BENCH_provdb.json codec_rows to arm the diff.\n"
+        )
+    metrics = ["ingest_per_sec", "query_p50_us", "query_p99_us", "log_bytes_per_record"]
+    print(f"{'codec@shards':<16}{'metric':<22}{'baseline':>14}{'fresh':>14}{'delta':>10}")
+    for key in sorted(fresh_by):
+        fr = fresh_by[key]
+        br = base_by.get(key)
+        for m in metrics:
+            fv = float(fr.get(m, 0.0))
+            if br is None:
+                print(f"{key[0]}@{key[1]:<14}{m:<22}{'(new)':>14}{fv:>14.1f}{'':>10}")
+                continue
+            bv = float(br.get(m, 0.0))
+            delta = (fv - bv) / bv * 100.0 if bv else float("inf")
+            print(f"{key[0]}@{key[1]:<14}{m:<22}{bv:>14.1f}{fv:>14.1f}{delta:>+9.1f}%")
+
+    def rate(fmt):
+        return max(
+            (float(r["ingest_per_sec"]) for (f, _), r in fresh_by.items() if f == fmt),
+            default=0.0,
+        )
+
+    def bytes_per_rec(fmt):
+        return min(
+            (float(r["log_bytes_per_record"]) for (f, _), r in fresh_by.items() if f == fmt),
+            default=0.0,
+        )
+
+    speedup = rate("binary") / max(rate("jsonl"), 1e-9)
+    print(f"\nbinary/jsonl ingest speedup: {speedup:.2f}x (target >= 2x)")
+    if speedup < 2.0:
+        print("WARNING: binary ingest below the 2x floor")
+    if bytes_per_rec("binary") >= bytes_per_rec("jsonl"):
+        print("WARNING: binary log bytes/record is not smaller than jsonl")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -133,6 +133,12 @@ pub struct Config {
     pub provdb_batch: usize,
     /// ProvDB retention: retained records per (app, rank); 0 = unbounded.
     pub provdb_max_per_rank: usize,
+    /// ProvDB record format: the binary codec (default) or the JSONL
+    /// escape hatch (`log_format = jsonl`). Controls the append-log
+    /// layout of a `provdb-server` started from this config (classic
+    /// `*.jsonl` files vs `.provseg` segments) and the wire encoding the
+    /// driver's AD workers use when `provdb.addr` is set.
+    pub provdb_log_format: crate::provenance::RecordFormat,
     /// Detector backend.
     pub backend: DetectorBackend,
     /// Labelling algorithm (threshold = the paper's; hbos = extension).
@@ -186,6 +192,7 @@ impl Default for Config {
             provdb_shards: 4,
             provdb_batch: 64,
             provdb_max_per_rank: 0,
+            provdb_log_format: crate::provenance::RecordFormat::Binary,
             backend: DetectorBackend::Rust,
             algorithm: AdAlgorithm::Threshold,
             engine: TraceEngine::Sst,
@@ -260,6 +267,9 @@ impl Config {
             "provdb.shards" => self.provdb_shards = v.parse()?,
             "provdb.batch" => self.provdb_batch = v.parse()?,
             "provdb.max_records_per_rank" => self.provdb_max_per_rank = v.parse()?,
+            "provdb.log_format" => {
+                self.provdb_log_format = crate::provenance::RecordFormat::parse(v)?
+            }
             "sst.queue_depth" => self.sst_queue_depth = v.parse()?,
             "app_work_ms_total" => self.app_work_ms_total = v.parse()?,
             "viz.addr" => self.viz_addr = v.to_string(),
@@ -332,6 +342,7 @@ impl Config {
             ("provdb_addr", Json::str(&self.provdb_addr)),
             ("provdb_shards", Json::num(self.provdb_shards as f64)),
             ("provdb_max_records_per_rank", Json::num(self.provdb_max_per_rank as f64)),
+            ("provdb_log_format", Json::str(self.provdb_log_format.name())),
             ("backend", Json::str(self.backend.name())),
             ("algorithm", Json::str(self.algorithm.name())),
             (
@@ -488,16 +499,23 @@ addr = 127.0.0.1:5560
 shards = 3
 batch = 16
 max_records_per_rank = 500
+log_format = jsonl
 "#;
         let c = Config::from_str(text).unwrap();
         assert_eq!(c.provdb_addr, "127.0.0.1:5560");
         assert_eq!(c.provdb_shards, 3);
         assert_eq!(c.provdb_batch, 16);
         assert_eq!(c.provdb_max_per_rank, 500);
+        assert_eq!(c.provdb_log_format, crate::provenance::RecordFormat::Jsonl);
         assert!(Config::from_str("[provdb]\nshards = 0").is_err());
         assert!(Config::from_str("[provdb]\nbatch = 0").is_err());
-        // Default: disabled.
+        assert!(Config::from_str("[provdb]\nlog_format = xml").is_err());
+        // Defaults: disabled, binary codec.
         assert!(Config::default().provdb_addr.is_empty());
+        assert_eq!(
+            Config::default().provdb_log_format,
+            crate::provenance::RecordFormat::Binary
+        );
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::ad::{DetectorConfig, HbosConfig, HbosDetector, OnNodeAd, RustDetector
 use crate::adios::{sst_channel, BpWriter, SstReader, SstWriter, StepStatus};
 use crate::config::{AdAlgorithm, Config, DetectorBackend};
 use crate::provdb::ProvClient;
-use crate::provenance::{ProvDb, RunMetadata};
+use crate::provenance::{ProvDb, RecordFormat, RunMetadata};
 use crate::ps::{self, PsClient, VizSnapshot};
 use crate::runtime::{RuntimeService, XlaDetector};
 use crate::stats::RunStats;
@@ -153,16 +153,28 @@ struct AdRank {
 /// Where an AD worker's kept records go: the networked provenance
 /// database service (when `provdb.addr` is configured) or a local
 /// [`ProvDb`] — the fallback single-process layout.
+///
+/// The remote sink is the zero-Json ingest path: `append_step` encodes
+/// each kept record straight into the client's reused binary batch
+/// buffer (`provenance::codec`), which ships `provdb.batch` records per
+/// wire round-trip — no JSONL text or `Json` tree exists anywhere
+/// between the detector and the shard store. The local sink keeps the
+/// JSONL layout (it *is* the offline/edge dump).
 enum ProvSink {
     Local(ProvDb),
     Remote(ProvClient),
 }
 
 impl ProvSink {
-    fn for_worker(provdb_addr: &str, provdb_batch: usize, dir: &Option<PathBuf>) -> ProvSink {
+    fn for_worker(
+        provdb_addr: &str,
+        provdb_batch: usize,
+        wire: RecordFormat,
+        dir: &Option<PathBuf>,
+    ) -> ProvSink {
         if !provdb_addr.is_empty() {
             ProvSink::Remote(
-                ProvClient::connect_with_batch(provdb_addr, provdb_batch)
+                ProvClient::connect_with(provdb_addr, provdb_batch, wire)
                     .expect("connecting to provdb service"),
             )
         } else {
@@ -188,7 +200,9 @@ impl ProvSink {
     }
 
     /// Locally written reduced bytes (remote writers report 0 — the
-    /// service's log total is collected once, post-run).
+    /// service's log total is collected once, post-run; under the
+    /// binary segment log that total is the *binary* byte count, i.e.
+    /// the real on-disk reduced size).
     fn local_bytes_written(&self) -> u64 {
         match self {
             ProvSink::Local(db) => db.bytes_written(),
@@ -406,10 +420,12 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
             let ps_period = cfg.ps_period_steps;
             let provdb_addr = cfg.provdb_addr.clone();
             let provdb_batch = cfg.provdb_batch;
+            let provdb_wire = cfg.provdb_log_format;
             let join = std::thread::Builder::new()
                 .name(format!("chimbuko-ad-{wi}"))
                 .spawn(move || {
-                    let mut db = ProvSink::for_worker(&provdb_addr, provdb_batch, &dir);
+                    let mut db =
+                        ProvSink::for_worker(&provdb_addr, provdb_batch, provdb_wire, &dir);
                     let mut out = AdWorkerOut {
                         execs: 0,
                         anomalies: 0,

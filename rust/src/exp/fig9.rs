@@ -15,8 +15,8 @@
 use crate::bench::Table;
 use crate::config::{Config, TraceEngine};
 use crate::coordinator::{run, Mode, RunReport, Workflow};
-use crate::provdb::{spawn_store, ProvClient, ProvDbTcpServer, Retention};
-use crate::provenance::{ProvQuery, ProvRecord};
+use crate::provdb::{spawn_store, spawn_store_fmt, ProvClient, ProvDbTcpServer, Retention};
+use crate::provenance::{ProvQuery, ProvRecord, RecordFormat};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -342,6 +342,187 @@ pub fn run_provdb_bench(
     })
 }
 
+// ---- codec sweep: jsonl vs binary through the whole provDB pipeline ----
+//
+// Same store, same records, same query mix — only the record codec
+// differs: the JSONL text pipeline (format + parse at every hop) vs the
+// binary codec (encode once, validate at the trust boundary, store and
+// reply in encoded form with header-level predicate pushdown). The
+// `codec_rows` of `BENCH_provdb.json` track this A/B across PRs.
+
+/// One codec's measurements at a fixed shard count.
+#[derive(Clone, Debug)]
+pub struct CodecRow {
+    pub format: &'static str,
+    pub shards: usize,
+    /// Records ingested per second over TCP, all writer clients together.
+    pub ingest_per_sec: f64,
+    /// Query round-trip latency percentiles, µs.
+    pub query_p50_us: f64,
+    pub query_p99_us: f64,
+    /// Append-log bytes per ingested record (on-disk format size).
+    pub log_bytes_per_record: f64,
+    pub records: u64,
+}
+
+/// Result of the codec A/B sweep (merged into `BENCH_provdb.json` as
+/// `codec_rows`).
+#[derive(Clone, Debug)]
+pub struct CodecBenchResult {
+    pub rows: Vec<CodecRow>,
+    pub shards: usize,
+    pub clients: usize,
+    pub records_per_client: usize,
+}
+
+impl CodecBenchResult {
+    /// binary ÷ jsonl ingest throughput (the headline speedup).
+    pub fn ingest_speedup(&self) -> f64 {
+        let rate = |fmt: &str| {
+            self.rows
+                .iter()
+                .find(|r| r.format == fmt)
+                .map(|r| r.ingest_per_sec)
+                .unwrap_or(0.0)
+        };
+        rate("binary") / rate("jsonl").max(1e-9)
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "provDB codec — jsonl vs binary record pipeline",
+            &[
+                "codec",
+                "ingest rec/s",
+                "q p50(µs)",
+                "q p99(µs)",
+                "log B/rec",
+                "records",
+            ],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                r.format.to_string(),
+                format!("{:.0}", r.ingest_per_sec),
+                format!("{:.1}", r.query_p50_us),
+                format!("{:.1}", r.query_p99_us),
+                format!("{:.1}", r.log_bytes_per_record),
+                r.records.to_string(),
+            ]);
+        }
+        format!(
+            "{}({} shards, {} writer clients x {} records; binary ingest {:.2}x jsonl)\n",
+            t.render(),
+            self.shards,
+            self.clients,
+            self.records_per_client,
+            self.ingest_speedup()
+        )
+    }
+
+    pub fn rows_json(&self) -> Json {
+        Json::arr(
+            self.rows
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("format", Json::str(r.format)),
+                        ("shards", Json::num(r.shards as f64)),
+                        ("ingest_per_sec", Json::num(r.ingest_per_sec)),
+                        ("query_p50_us", Json::num(r.query_p50_us)),
+                        ("query_p99_us", Json::num(r.query_p99_us)),
+                        ("log_bytes_per_record", Json::num(r.log_bytes_per_record)),
+                        ("records", Json::num(r.records as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// A/B the record codec end to end at a fixed shard count: spawn a store
+/// per format (matching wire + log format), drive the same synthetic
+/// write load through TCP clients, then measure a selective query mix
+/// (rank scans, top anomalies, step windows — the shapes predicate
+/// pushdown accelerates).
+pub fn run_codec_bench(
+    shards: usize,
+    clients: usize,
+    records_per_client: usize,
+    queries: usize,
+    seed: u64,
+) -> Result<CodecBenchResult> {
+    let mut rows = Vec::new();
+    for format in [RecordFormat::Jsonl, RecordFormat::Binary] {
+        let (store, handle) = spawn_store_fmt(None, shards, Retention::default(), format)?;
+        let srv = ProvDbTcpServer::start("127.0.0.1:0", store.clone())?;
+        let addr = srv.addr().to_string();
+
+        let t0 = Instant::now();
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let addr = addr.clone();
+            let client_seed = seed ^ (c as u64).wrapping_mul(0x9E37_79B9);
+            joins.push(std::thread::spawn(move || {
+                let mut cl = ProvClient::connect_with(&addr, crate::provdb::DEFAULT_BATCH, format)
+                    .expect("codec bench connect");
+                let mut rng = Rng::new(client_seed);
+                for i in 0..records_per_client {
+                    let rec = synth_record(&mut rng, c as u32, i as u64);
+                    cl.append(&rec).expect("codec bench append");
+                }
+                cl.flush().expect("codec bench flush");
+            }));
+        }
+        for j in joins {
+            j.join().expect("codec bench writer panicked");
+        }
+        let ingest_wall = t0.elapsed().as_secs_f64();
+
+        let mut cl = ProvClient::connect_with(&addr, crate::provdb::DEFAULT_BATCH, format)?;
+        let mut lat_us = Vec::with_capacity(queries);
+        let mut rng = Rng::new(seed);
+        for qi in 0..queries {
+            let q = match qi % 3 {
+                0 => ProvQuery {
+                    rank: Some((0, rng.usize(clients.max(1)) as u32)),
+                    ..Default::default()
+                },
+                1 => ProvQuery {
+                    anomalies_only: true,
+                    order_by_score: true,
+                    min_score: Some(9.0),
+                    limit: Some(20),
+                    ..Default::default()
+                },
+                _ => ProvQuery {
+                    rank: Some((0, rng.usize(clients.max(1)) as u32)),
+                    step_range: Some((0, 4)),
+                    ..Default::default()
+                },
+            };
+            let t = Instant::now();
+            cl.query(&q)?;
+            lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+        }
+
+        let stats = store.stats();
+        drop(srv);
+        handle.join();
+        let total = (clients * records_per_client) as f64;
+        rows.push(CodecRow {
+            format: format.name(),
+            shards,
+            ingest_per_sec: total / ingest_wall.max(1e-9),
+            query_p50_us: crate::util::percentile(&lat_us, 50.0),
+            query_p99_us: crate::util::percentile(&lat_us, 99.0),
+            log_bytes_per_record: stats.log_bytes as f64 / total.max(1.0),
+            records: stats.records,
+        });
+    }
+    Ok(CodecBenchResult { rows, shards, clients, records_per_client })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -384,5 +565,33 @@ mod tests {
         assert_eq!(json.get("bench").unwrap().as_str(), Some("provdb"));
         assert_eq!(json.get("rows").unwrap().as_arr().unwrap().len(), 2);
         crate::util::json::parse(&json.to_pretty()).unwrap();
+    }
+
+    #[test]
+    fn codec_sweep_measures_both_formats() {
+        let res = run_codec_bench(2, 2, 300, 12, 23).unwrap();
+        assert_eq!(res.rows.len(), 2);
+        let jsonl = res.rows.iter().find(|r| r.format == "jsonl").unwrap();
+        let binary = res.rows.iter().find(|r| r.format == "binary").unwrap();
+        for row in &res.rows {
+            assert!(row.ingest_per_sec > 0.0, "{}", row.format);
+            assert!(row.query_p50_us > 0.0);
+            assert!(row.query_p99_us >= row.query_p50_us);
+            assert_eq!(row.records, 600);
+        }
+        // The on-disk format win is deterministic (the throughput win is
+        // asserted by the bench artifact, not a unit test).
+        assert!(
+            binary.log_bytes_per_record < jsonl.log_bytes_per_record,
+            "binary {} vs jsonl {} bytes/record",
+            binary.log_bytes_per_record,
+            jsonl.log_bytes_per_record
+        );
+        assert!(res.ingest_speedup() > 0.0);
+        let text = res.render();
+        assert!(text.contains("provDB codec"));
+        let rows = res.rows_json();
+        assert_eq!(rows.as_arr().unwrap().len(), 2);
+        crate::util::json::parse(&rows.to_string()).unwrap();
     }
 }

@@ -16,5 +16,7 @@ pub use fig7::{
     EndpointSweepResult, Fig7Result, RebalanceSweepResult, ShardSweepResult,
 };
 pub use fig8_table1::{run_fig8, Fig8Result};
-pub use fig9::{run_fig9, run_provdb_bench, Fig9Result, ProvDbBenchResult};
+pub use fig9::{
+    run_codec_bench, run_fig9, run_provdb_bench, CodecBenchResult, Fig9Result, ProvDbBenchResult,
+};
 pub use figs3_6::{run_figs3_6, VizFiguresResult};

@@ -20,8 +20,12 @@
 //!                   --endpoints lists ps-shard-server addresses)
 //! chimbuko ps-shard-server --shard-id I --shards N [--addr host:port]
 //!                   one stat shard of a multi-process parameter server
-//! chimbuko provdb-server [--addr host:port] [--shards N] [--dir d]
-//!                   [--max-records-per-rank N]  standalone provenance database
+//! chimbuko provdb-server [--config f] [--addr host:port] [--shards N]
+//!                   [--dir d] [--max-records-per-rank N]
+//!                   [--log-format binary|jsonl]
+//!                   standalone provenance database (binary segment log by
+//!                   default; jsonl is the classic-layout escape hatch;
+//!                   --config seeds the [provdb] knobs, flags override)
 //! chimbuko analyze  --bp trace.bp [--out dir] [--algorithm hbos]  offline re-analysis
 //! chimbuko version
 //! ```
@@ -381,16 +385,25 @@ fn cmd_ps_shard_server(args: &Args) -> anyhow::Result<()> {
 /// Standalone provenance database service (`provdb::net` protocol): AD
 /// ranks of a `chimbuko run --provdb <addr>` write to it, `chimbuko
 /// serve --provdb <addr>` queries it — the paper's dedicated provenance
-/// store, decoupled from the analysis ranks.
+/// store, decoupled from the analysis ranks. `--config` seeds the
+/// `[provdb]` knobs (shards, max_records_per_rank, log_format); CLI
+/// flags override.
 fn cmd_provdb_server(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_of(args)?;
     let addr = args.str_opt("addr", "127.0.0.1:5560");
-    let shards = args.usize_opt("shards", 4);
-    let retention = Retention::from_knob(args.usize_opt("max-records-per-rank", 0));
+    let shards = args.usize_opt("shards", cfg.provdb_shards);
+    let retention =
+        Retention::from_knob(args.usize_opt("max-records-per-rank", cfg.provdb_max_per_rank));
     let dir = args.get("dir").map(std::path::PathBuf::from);
-    let (store, _handle) = chimbuko::provdb::spawn_store(dir.as_deref(), shards, retention)?;
+    let format = match args.get("log-format") {
+        Some(v) => chimbuko::provenance::RecordFormat::parse(v)?,
+        None => cfg.provdb_log_format,
+    };
+    let (store, _handle) =
+        chimbuko::provdb::spawn_store_fmt(dir.as_deref(), shards, retention, format)?;
     let server = ProvDbTcpServer::start(&addr, store)?;
     println!(
-        "provenance database on {} ({} shards, {}, {}) — Ctrl-C to stop",
+        "provenance database on {} ({} shards, {}, {}, {} log) — Ctrl-C to stop",
         server.addr(),
         shards,
         match &dir {
@@ -402,6 +415,7 @@ fn cmd_provdb_server(args: &Args) -> anyhow::Result<()> {
         } else {
             format!("≤{} records/rank", retention.max_records_per_rank)
         },
+        format.name(),
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -508,6 +522,14 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
             args.u64_opt("seed", 7),
         )?;
         print!("{}", pdb.render());
+        let codec = chimbuko::exp::run_codec_bench(
+            4,
+            if fast { 4 } else { 8 },
+            if fast { 2_000 } else { 10_000 },
+            if fast { 30 } else { 120 },
+            args.u64_opt("seed", 7),
+        )?;
+        print!("{}", codec.render());
         Ok(())
     };
     let run_viz = || -> anyhow::Result<()> {

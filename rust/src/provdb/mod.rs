@@ -14,24 +14,36 @@
 //! ```
 //!
 //! * [`store`] — the sharded document store: records are partitioned by
-//!   `(app, rank)` across per-shard worker threads; each shard owns its
-//!   partitions' in-memory index, its slice of the JSONL append log
-//!   (byte-compatible with [`ProvDb`](crate::provenance::ProvDb)'s
-//!   layout), and applies the [`Retention`] policy (score-based eviction
-//!   per partition — the paper's "reduction for human-level processing").
+//!   `(app, rank)` across per-shard worker threads; each shard holds its
+//!   partitions in the *encoded* binary record form
+//!   ([`provenance::codec`](crate::provenance::codec)) so query filters
+//!   evaluate against fixed header offsets (predicate pushdown) and the
+//!   append log is a compact `.provseg` segment log (CRC-tagged records;
+//!   `RecordFormat::Jsonl` is the escape hatch keeping the classic
+//!   [`ProvDb`](crate::provenance::ProvDb)-compatible JSONL layout), and
+//!   applies the [`Retention`] policy (score-based eviction per
+//!   partition — the paper's "reduction for human-level processing").
 //! * [`net`] — the TCP protocol: hello handshake reporting the shard
-//!   count, batched record writes (AD ranks never block per record),
-//!   server-side queries covering every
-//!   [`ProvQuery`](crate::provenance::ProvQuery) filter, call-stack
-//!   reconstruction, run-metadata storage/retrieval, stats, and a flush
-//!   barrier.
+//!   count + codec version, batched *binary* record writes with reused
+//!   encode buffers (AD ranks never block per record and no `Json` tree
+//!   is built anywhere on the ingest path), server-side queries covering
+//!   every [`ProvQuery`](crate::provenance::ProvQuery) filter whose
+//!   replies copy stored bytes verbatim, call-stack reconstruction,
+//!   run-metadata storage/retrieval, stats, and a flush barrier. JSONL
+//!   request kinds remain served for legacy/escape-hatch clients.
 //!
 //! With retention disabled, the service answers every query bit-identically
 //! to a local `ProvDb` fed the same record stream, for any shard count —
-//! `tests/provdb_service.rs` pins this down for N ∈ {1, 2, 4}.
+//! `tests/provdb_service.rs` pins this down for N ∈ {1, 2, 4}, and pins
+//! binary-logged vs JSONL-logged stores to identical answers across
+//! flush + restart recovery.
 
 pub mod net;
 pub mod store;
 
+pub use crate::provenance::RecordFormat;
 pub use net::{ProvClient, ProvDbTcpServer, DEFAULT_BATCH};
-pub use store::{prov_shard_of, spawn_store, ProvDbStats, ProvStore, ProvStoreHandle, Retention};
+pub use store::{
+    prov_shard_of, spawn_store, spawn_store_fmt, ProvDbStats, ProvStore, ProvStoreHandle,
+    Retention,
+};

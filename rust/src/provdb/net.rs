@@ -8,39 +8,56 @@
 //!
 //! ```text
 //! request  := u32 len, u8 kind, payload
-//!   kind 1 (hello):     (empty)
-//!   kind 2 (write):     n u32, n × (u32 len, JSONL record bytes)
-//!   kind 3 (query):     u32 len, ProvQuery JSON bytes
-//!   kind 4 (callstack): app u32, rank u32, step u64
-//!   kind 5 (meta set):  u32 len, metadata JSON bytes
-//!   kind 6 (meta get):  (empty)
-//!   kind 7 (stats):     (empty)
-//!   kind 8 (flush):     (empty)
-//! reply (hello)     := u32 n_shards
-//! reply (write)     := u32 n_accepted
-//! reply (query/cs)  := u32 n, n × (u32 len, JSONL record bytes)
-//! reply (meta set)  := u8 1
-//! reply (meta get)  := u8 present, [u32 len, JSON bytes]
-//! reply (stats)     := u64 records, u64 resident, u64 log, u64 anoms,
-//!                      u64 evicted
-//! reply (flush)     := u8 1
+//!   kind 1 (hello):         (empty)
+//!   kind 2 (write jsonl):   n u32, n × (u32 len, JSONL record bytes)
+//!   kind 3 (query jsonl):   u32 len, ProvQuery JSON bytes
+//!   kind 4 (cs jsonl):      app u32, rank u32, step u64
+//!   kind 5 (meta set):      u32 len, metadata JSON bytes
+//!   kind 6 (meta get):      (empty)
+//!   kind 7 (stats):         (empty)
+//!   kind 8 (flush):         (empty)
+//!   kind 9 (write bin):     codec u16, n u32, n × binary record
+//!   kind 10 (query bin):    u32 len, ProvQuery JSON bytes
+//!   kind 11 (cs bin):       app u32, rank u32, step u64
+//! reply (hello)      := u32 n_shards, u16 codec_version
+//! reply (write)      := u32 n_accepted
+//! reply (query/cs 3/4) := u32 n, n × (u32 len, JSONL record bytes)
+//! reply (query/cs 10/11) := codec u16, u32 n, n × binary record
+//! reply (meta set)   := u8 1
+//! reply (meta get)   := u8 present, [u32 len, JSON bytes]
+//! reply (stats)      := u64 records, u64 resident, u64 log, u64 anoms,
+//!                       u64 evicted, u64 log_errors
+//! reply (flush)      := u8 1
 //! ```
 //!
-//! Records travel as their JSONL text — byte-identical to the append-log
-//! format, so the wire shares one serializer (and its round-trip tests)
-//! with the disk layout. A malformed record drops the connection (the
+//! Kinds 9–11 are the default pipeline: records travel in the
+//! [`provenance::codec`](crate::provenance::codec) binary layout —
+//! byte-identical to the shard-resident form and the `.provseg` segment
+//! log — so the ingest path allocates no `Json` tree anywhere and query
+//! replies copy stored bytes straight onto the wire. Kinds 2–4 keep the
+//! JSONL encoding as a migration/escape hatch (`RecordFormat::Jsonl`
+//! clients). Binary batches are tagged with
+//! [`codec::CODEC_VERSION`](crate::provenance::codec::CODEC_VERSION);
+//! a mismatch refuses the frame.
+//!
+//! Every count and length in a frame is untrusted: batch counts cap the
+//! pre-allocation, per-record payload lengths are bounded by
+//! [`codec::MAX_PAYLOAD`](crate::provenance::codec::MAX_PAYLOAD) and
+//! validated against the actual frame bytes *before* any allocation. A
+//! malformed record drops the connection without ingesting anything (the
 //! wire is a trust boundary), mirroring `ps::net`'s misgrouped-frame
 //! policy.
 //!
-//! [`ProvClient::append`] batches client-side: records buffer locally and
-//! ship `batch` at a time, so AD ranks never block per record. One
-//! connection reads its own writes (server-side, a connection's ingests
-//! and queries traverse each shard queue in order); cross-client
-//! visibility needs [`ProvClient::flush`], which is a shard-drain
-//! barrier.
+//! [`ProvClient::append`] batches client-side: records encode into a
+//! reused buffer and ship `batch` at a time, so AD ranks never block per
+//! record. One connection reads its own writes (server-side, a
+//! connection's ingests and queries traverse each shard queue in order);
+//! cross-client visibility needs [`ProvClient::flush`], which is a
+//! shard-drain barrier.
 
 use super::store::{ProvDbStats, ProvStore};
 use crate::ad::Labeled;
+use crate::provenance::codec::{self, RecordFormat};
 use crate::provenance::{ProvQuery, ProvRecord};
 use crate::trace::FuncRegistry;
 use crate::util::json::{parse, Json};
@@ -58,9 +75,22 @@ const KIND_META_SET: u8 = 5;
 const KIND_META_GET: u8 = 6;
 const KIND_STATS: u8 = 7;
 const KIND_FLUSH: u8 = 8;
+const KIND_WRITE_BIN: u8 = 9;
+const KIND_QUERY_BIN: u8 = 10;
+const KIND_CALLSTACK_BIN: u8 = 11;
 
 /// Default client-side write batch (records per wire round-trip).
 pub const DEFAULT_BATCH: usize = 64;
+
+/// Untrusted-count cap: the largest record-count pre-allocation a frame
+/// header can cause (pushes still validate against the payload).
+const MAX_PREALLOC: usize = 4096;
+
+/// Largest capacity the per-connection reused reply buffer keeps after a
+/// request: one `limit=0` full dump must not pin the store's size in
+/// memory for the connection's (long — the viz server reconnects lazily)
+/// lifetime.
+const MAX_REPLY_RETAIN: usize = 4 << 20;
 
 /// TCP front-end for a provenance database; forwards to a [`ProvStore`].
 /// The accept loop is the shared [`serve_tcp`] substrate (one handler
@@ -92,7 +122,8 @@ impl ProvDbTcpServer {
     }
 }
 
-fn put_records(reply: &mut Vec<u8>, recs: &[ProvRecord]) {
+/// JSONL reply form (legacy kinds 3/4).
+fn put_records_jsonl(reply: &mut Vec<u8>, recs: &[ProvRecord]) {
     reply.extend_from_slice(&(recs.len() as u32).to_le_bytes());
     let mut line = String::with_capacity(360);
     for r in recs {
@@ -102,7 +133,19 @@ fn put_records(reply: &mut Vec<u8>, recs: &[ProvRecord]) {
     }
 }
 
+/// Binary reply form (kinds 10/11): stored bytes, copied verbatim.
+fn put_records_bin(reply: &mut Vec<u8>, recs: &[Vec<u8>]) {
+    reply.extend_from_slice(&codec::CODEC_VERSION.to_le_bytes());
+    reply.extend_from_slice(&(recs.len() as u32).to_le_bytes());
+    for r in recs {
+        reply.extend_from_slice(r);
+    }
+}
+
 fn serve_conn(mut stream: TcpStream, store: ProvStore) -> Result<()> {
+    // Reused across requests on this connection: binary query replies
+    // concatenate stored record bytes into this scratch buffer.
+    let mut reply = Vec::new();
     loop {
         let Some(msg) = read_msg(&mut stream)? else {
             return Ok(()); // clean disconnect
@@ -111,15 +154,17 @@ fn serve_conn(mut stream: TcpStream, store: ProvStore) -> Result<()> {
         let kind = c.u8()?;
         match kind {
             KIND_HELLO => {
-                let reply = (store.shard_count() as u32).to_le_bytes();
-                write_msg(&mut stream, &reply)?;
+                let mut hello = Vec::with_capacity(6);
+                hello.extend_from_slice(&(store.shard_count() as u32).to_le_bytes());
+                hello.extend_from_slice(&codec::CODEC_VERSION.to_le_bytes());
+                write_msg(&mut stream, &hello)?;
             }
             KIND_WRITE => {
                 let n = c.u32()? as usize;
                 // The count is wire-supplied (untrusted): cap the
                 // pre-allocation so a lying header cannot abort the
                 // process; pushes still validate against the payload.
-                let mut recs = Vec::with_capacity(n.min(4096));
+                let mut recs = Vec::with_capacity(n.min(MAX_PREALLOC));
                 for _ in 0..n {
                     let line = c.str()?;
                     // Trust boundary: refuse the whole frame on a
@@ -132,12 +177,38 @@ fn serve_conn(mut stream: TcpStream, store: ProvStore) -> Result<()> {
                 let accepted = store.ingest(recs);
                 write_msg(&mut stream, &(accepted as u32).to_le_bytes())?;
             }
+            KIND_WRITE_BIN => {
+                let ver = c.u16()?;
+                if ver != codec::CODEC_VERSION {
+                    bail!("unsupported provenance codec version {ver} on the wire");
+                }
+                let n = c.u32()? as usize;
+                // Untrusted count: cap the pre-allocation. Each record is
+                // structurally validated (incl. the MAX_PAYLOAD cap on
+                // its length field) before its bytes are copied out.
+                let mut recs = Vec::with_capacity(n.min(MAX_PREALLOC));
+                for _ in 0..n {
+                    let len = codec::validate(c.peek())
+                        .context("malformed binary provenance record on the wire")?;
+                    recs.push(c.take_slice(len)?.to_vec());
+                }
+                let accepted = store.ingest_encoded(recs);
+                write_msg(&mut stream, &(accepted as u32).to_le_bytes())?;
+            }
             KIND_QUERY => {
                 let text = c.str()?;
                 let q = ProvQuery::from_json(&parse(&text)?)?;
                 let recs = store.query(&q);
-                let mut reply = Vec::with_capacity(8 + 280 * recs.len());
-                put_records(&mut reply, &recs);
+                reply.clear();
+                put_records_jsonl(&mut reply, &recs);
+                write_msg(&mut stream, &reply)?;
+            }
+            KIND_QUERY_BIN => {
+                let text = c.str()?;
+                let q = ProvQuery::from_json(&parse(&text)?)?;
+                let recs = store.query_encoded(&q);
+                reply.clear();
+                put_records_bin(&mut reply, &recs);
                 write_msg(&mut stream, &reply)?;
             }
             KIND_CALLSTACK => {
@@ -145,8 +216,17 @@ fn serve_conn(mut stream: TcpStream, store: ProvStore) -> Result<()> {
                 let rank = c.u32()?;
                 let step = c.u64()?;
                 let recs = store.call_stack(app, rank, step);
-                let mut reply = Vec::with_capacity(8 + 280 * recs.len());
-                put_records(&mut reply, &recs);
+                reply.clear();
+                put_records_jsonl(&mut reply, &recs);
+                write_msg(&mut stream, &reply)?;
+            }
+            KIND_CALLSTACK_BIN => {
+                let app = c.u32()?;
+                let rank = c.u32()?;
+                let step = c.u64()?;
+                let recs = store.query_encoded(&ProvStore::call_stack_query(app, rank, step));
+                reply.clear();
+                put_records_bin(&mut reply, &recs);
                 write_msg(&mut stream, &reply)?;
             }
             KIND_META_SET => {
@@ -155,25 +235,26 @@ fn serve_conn(mut stream: TcpStream, store: ProvStore) -> Result<()> {
                 write_msg(&mut stream, &[1u8])?;
             }
             KIND_META_GET => {
-                let mut reply = Vec::new();
+                let mut out = Vec::new();
                 match store.metadata() {
                     Some(m) => {
-                        reply.push(1u8);
-                        put_str(&mut reply, &m.to_string());
+                        out.push(1u8);
+                        put_str(&mut out, &m.to_string());
                     }
-                    None => reply.push(0u8),
+                    None => out.push(0u8),
                 }
-                write_msg(&mut stream, &reply)?;
+                write_msg(&mut stream, &out)?;
             }
             KIND_STATS => {
                 let s = store.stats();
-                let mut reply = Vec::with_capacity(40);
-                reply.extend_from_slice(&s.records.to_le_bytes());
-                reply.extend_from_slice(&s.resident_bytes.to_le_bytes());
-                reply.extend_from_slice(&s.log_bytes.to_le_bytes());
-                reply.extend_from_slice(&s.anomalies.to_le_bytes());
-                reply.extend_from_slice(&s.evicted.to_le_bytes());
-                write_msg(&mut stream, &reply)?;
+                let mut out = Vec::with_capacity(48);
+                out.extend_from_slice(&s.records.to_le_bytes());
+                out.extend_from_slice(&s.resident_bytes.to_le_bytes());
+                out.extend_from_slice(&s.log_bytes.to_le_bytes());
+                out.extend_from_slice(&s.anomalies.to_le_bytes());
+                out.extend_from_slice(&s.evicted.to_le_bytes());
+                out.extend_from_slice(&s.log_errors.to_le_bytes());
+                write_msg(&mut stream, &out)?;
             }
             KIND_FLUSH => {
                 store.flush();
@@ -181,39 +262,73 @@ fn serve_conn(mut stream: TcpStream, store: ProvStore) -> Result<()> {
             }
             k => bail!("unknown request kind {k}"),
         }
+        if reply.capacity() > MAX_REPLY_RETAIN {
+            reply = Vec::new();
+        }
     }
 }
 
 /// TCP client for the provenance database; same query surface as the
 /// local [`ProvDb`](crate::provenance::ProvDb), plus batched writes.
+///
+/// Records encode into a reused pending buffer as they are appended (the
+/// binary default — no intermediate `Json` or per-record `String`), and
+/// ship `batch` at a time. [`RecordFormat::Jsonl`] keeps the legacy text
+/// encoding for migration and A/B measurement (the fig9 codec sweep).
 pub struct ProvClient {
     stream: TcpStream,
     /// Server shard count, learned from the hello handshake.
     n_shards: usize,
-    /// Serialized records awaiting the next batch send.
-    pending: Vec<String>,
+    /// Encoded records awaiting the next batch send (reused).
+    pending: Vec<u8>,
+    pending_n: usize,
+    /// Reused frame-assembly buffer.
+    msg: Vec<u8>,
     batch: usize,
+    wire: RecordFormat,
 }
 
 impl ProvClient {
-    /// Connect with the default write batch size.
+    /// Connect with the default write batch size (binary wire).
     pub fn connect(addr: &str) -> Result<ProvClient> {
         Self::connect_with_batch(addr, DEFAULT_BATCH)
     }
 
     /// Connect; `batch` records buffer client-side per write round-trip.
     pub fn connect_with_batch(addr: &str, batch: usize) -> Result<ProvClient> {
+        Self::connect_with(addr, batch, RecordFormat::Binary)
+    }
+
+    /// Connect with an explicit wire record format.
+    pub fn connect_with(addr: &str, batch: usize, wire: RecordFormat) -> Result<ProvClient> {
         let mut stream =
             TcpStream::connect(addr).with_context(|| format!("connecting to provdb {addr}"))?;
         stream.set_nodelay(true).ok();
         write_msg(&mut stream, &[KIND_HELLO])?;
-        let reply = read_msg(&mut stream)?.context("provdb closed during hello")?;
-        let mut c = Cursor::new(&reply);
+        let hello = read_msg(&mut stream)?.context("provdb closed during hello")?;
+        let mut c = Cursor::new(&hello);
         let n_shards = c.u32()? as usize;
         if n_shards == 0 {
             bail!("provdb server reported zero shards");
         }
-        Ok(ProvClient { stream, n_shards, pending: Vec::new(), batch: batch.max(1) })
+        if wire == RecordFormat::Binary {
+            let ver = c.u16().context("provdb server predates the binary codec")?;
+            if ver != codec::CODEC_VERSION {
+                bail!(
+                    "provdb codec version mismatch: server {ver}, client {}",
+                    codec::CODEC_VERSION
+                );
+            }
+        }
+        Ok(ProvClient {
+            stream,
+            n_shards,
+            pending: Vec::new(),
+            pending_n: 0,
+            msg: Vec::new(),
+            batch: batch.max(1),
+            wire,
+        })
     }
 
     /// Server shard count from the handshake.
@@ -224,10 +339,16 @@ impl ProvClient {
     /// Buffer one record; ships a batch once `batch` records accumulate,
     /// so the caller never blocks per record.
     pub fn append(&mut self, rec: &ProvRecord) -> Result<()> {
-        let mut line = String::with_capacity(360);
-        rec.write_jsonl(&mut line);
-        self.pending.push(line);
-        if self.pending.len() >= self.batch {
+        match self.wire {
+            RecordFormat::Binary => codec::encode(rec, &mut self.pending),
+            RecordFormat::Jsonl => {
+                let mut line = String::with_capacity(360);
+                rec.write_jsonl(&mut line);
+                put_str(&mut self.pending, &line);
+            }
+        }
+        self.pending_n += 1;
+        if self.pending_n >= self.batch {
             self.send_batch()?;
         }
         Ok(())
@@ -235,6 +356,7 @@ impl ProvClient {
 
     /// Append kept records from one AD step, resolving names via `reg` —
     /// the remote mirror of [`ProvDb::append_step`](crate::provenance::ProvDb::append_step).
+    /// Each record encodes straight into the pending batch buffer.
     pub fn append_step(&mut self, kept: &[Labeled], reg: &FuncRegistry) -> Result<()> {
         for l in kept {
             let rec = ProvRecord::from_labeled(l, reg.name(l.rec.fid));
@@ -244,24 +366,28 @@ impl ProvClient {
     }
 
     fn send_batch(&mut self) -> Result<()> {
-        if self.pending.is_empty() {
+        if self.pending_n == 0 {
             return Ok(());
         }
-        let bytes: usize = self.pending.iter().map(|l| l.len() + 4).sum();
-        let mut msg = Vec::with_capacity(5 + bytes);
-        msg.push(KIND_WRITE);
-        msg.extend_from_slice(&(self.pending.len() as u32).to_le_bytes());
-        for line in &self.pending {
-            put_str(&mut msg, line);
+        self.msg.clear();
+        match self.wire {
+            RecordFormat::Binary => {
+                self.msg.push(KIND_WRITE_BIN);
+                self.msg.extend_from_slice(&codec::CODEC_VERSION.to_le_bytes());
+            }
+            RecordFormat::Jsonl => self.msg.push(KIND_WRITE),
         }
-        write_msg(&mut self.stream, &msg)?;
+        self.msg.extend_from_slice(&(self.pending_n as u32).to_le_bytes());
+        self.msg.extend_from_slice(&self.pending);
+        write_msg(&mut self.stream, &self.msg)?;
         let reply = read_msg(&mut self.stream)?.context("provdb closed on write")?;
         let mut c = Cursor::new(&reply);
         let acked = c.u32()? as usize;
-        if acked != self.pending.len() {
-            bail!("provdb acked {acked} of {} records", self.pending.len());
+        if acked != self.pending_n {
+            bail!("provdb acked {acked} of {} records", self.pending_n);
         }
         self.pending.clear();
+        self.pending_n = 0;
         Ok(())
     }
 
@@ -278,21 +404,44 @@ impl ProvClient {
     fn read_records(&mut self) -> Result<Vec<ProvRecord>> {
         let reply = read_msg(&mut self.stream)?.context("provdb closed on query")?;
         let mut c = Cursor::new(&reply);
-        let n = c.u32()? as usize;
-        // Count is peer-supplied: cap the pre-allocation (see serve_conn).
-        let mut out = Vec::with_capacity(n.min(4096));
-        for _ in 0..n {
-            let line = c.str()?;
-            out.push(ProvRecord::from_jsonl_line(&line)?);
+        match self.wire {
+            RecordFormat::Binary => {
+                let ver = c.u16()?;
+                if ver != codec::CODEC_VERSION {
+                    bail!("provdb reply codec version {ver} unsupported");
+                }
+                let n = c.u32()? as usize;
+                // Count is peer-supplied: cap the pre-allocation; decode
+                // validates each record against the actual bytes.
+                let mut out = Vec::with_capacity(n.min(MAX_PREALLOC));
+                for _ in 0..n {
+                    let (rec, used) = codec::decode(c.peek())?;
+                    c.take_slice(used)?;
+                    out.push(rec);
+                }
+                Ok(out)
+            }
+            RecordFormat::Jsonl => {
+                let n = c.u32()? as usize;
+                let mut out = Vec::with_capacity(n.min(MAX_PREALLOC));
+                for _ in 0..n {
+                    let line = c.str()?;
+                    out.push(ProvRecord::from_jsonl_line(&line)?);
+                }
+                Ok(out)
+            }
         }
-        Ok(out)
     }
 
     /// Run a query server-side (buffered writes ship first, so a client
     /// always reads its own writes).
     pub fn query(&mut self, q: &ProvQuery) -> Result<Vec<ProvRecord>> {
         self.send_batch()?;
-        let mut msg = vec![KIND_QUERY];
+        let kind = match self.wire {
+            RecordFormat::Binary => KIND_QUERY_BIN,
+            RecordFormat::Jsonl => KIND_QUERY,
+        };
+        let mut msg = vec![kind];
         put_str(&mut msg, &q.to_json().to_string());
         write_msg(&mut self.stream, &msg)?;
         self.read_records()
@@ -301,7 +450,11 @@ impl ProvClient {
     /// Call-stack reconstruction for `(app, rank, step)`, entry-ordered.
     pub fn call_stack(&mut self, app: u32, rank: u32, step: u64) -> Result<Vec<ProvRecord>> {
         self.send_batch()?;
-        let mut msg = vec![KIND_CALLSTACK];
+        let kind = match self.wire {
+            RecordFormat::Binary => KIND_CALLSTACK_BIN,
+            RecordFormat::Jsonl => KIND_CALLSTACK,
+        };
+        let mut msg = vec![kind];
         msg.extend_from_slice(&app.to_le_bytes());
         msg.extend_from_slice(&rank.to_le_bytes());
         msg.extend_from_slice(&step.to_le_bytes());
@@ -341,6 +494,8 @@ impl ProvClient {
             log_bytes: c.u64()?,
             anomalies: c.u64()?,
             evicted: c.u64()?,
+            // Absent on pre-binary servers: default to 0.
+            log_errors: c.u64().unwrap_or(0),
         })
     }
 }
@@ -400,7 +555,34 @@ mod tests {
         let stats = cl2.stats().unwrap();
         assert_eq!(stats.records, 10);
         assert_eq!(stats.anomalies, 4);
+        assert_eq!(stats.log_errors, 0);
         srv.stop();
+        handle.join();
+    }
+
+    #[test]
+    fn jsonl_wire_clients_interoperate_with_binary() {
+        let (store, handle) = spawn_store(None, 2, Retention::default()).unwrap();
+        let srv = ProvDbTcpServer::start("127.0.0.1:0", store.clone()).unwrap();
+        let addr = srv.addr().to_string();
+        // Legacy JSONL wire writer…
+        let mut legacy = ProvClient::connect_with(&addr, 3, RecordFormat::Jsonl).unwrap();
+        for i in 0..7u64 {
+            legacy.append(&rec(0, i, i as f64, i)).unwrap();
+        }
+        legacy.flush().unwrap();
+        // …is fully visible to a binary client, record-for-record…
+        let mut bin = ProvClient::connect(&addr).unwrap();
+        let from_bin = bin.query(&ProvQuery::default()).unwrap();
+        assert_eq!(from_bin.len(), 7);
+        // …and the legacy client reads binary-written records back too.
+        bin.append(&rec(1, 9, 9.0, 100)).unwrap();
+        bin.flush().unwrap();
+        let from_legacy = legacy.query(&ProvQuery::default()).unwrap();
+        assert_eq!(from_legacy.len(), 8);
+        let from_bin = bin.query(&ProvQuery::default()).unwrap();
+        assert_eq!(from_legacy, from_bin, "wire format must not change results");
+        drop(srv);
         handle.join();
     }
 
@@ -423,13 +605,53 @@ mod tests {
         let (store, handle) = spawn_store(None, 2, Retention::default()).unwrap();
         let srv = ProvDbTcpServer::start("127.0.0.1:0", store.clone()).unwrap();
         let addr = srv.addr().to_string();
-        // Hand-roll a write frame with junk instead of a record.
+        // Hand-roll a JSONL write frame with junk instead of a record.
         let mut s = TcpStream::connect(&addr).unwrap();
         let mut msg = vec![KIND_WRITE];
         msg.extend_from_slice(&1u32.to_le_bytes());
         put_str(&mut msg, "not json at all");
         write_msg(&mut s, &msg).unwrap();
         assert!(read_msg(&mut s).unwrap().is_none(), "conn must drop, no reply");
+        drop(s);
+        // Binary frame with garbage record bytes drops too.
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut msg = vec![KIND_WRITE_BIN];
+        msg.extend_from_slice(&codec::CODEC_VERSION.to_le_bytes());
+        msg.extend_from_slice(&1u32.to_le_bytes());
+        msg.extend_from_slice(&[0xAB; 16]); // far short of a header
+        write_msg(&mut s, &msg).unwrap();
+        assert!(read_msg(&mut s).unwrap().is_none());
+        drop(s);
+        // A lying batch count with no bytes behind it: refused without a
+        // giant allocation, connection drops.
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut msg = vec![KIND_WRITE_BIN];
+        msg.extend_from_slice(&codec::CODEC_VERSION.to_le_bytes());
+        msg.extend_from_slice(&u32::MAX.to_le_bytes());
+        write_msg(&mut s, &msg).unwrap();
+        assert!(read_msg(&mut s).unwrap().is_none());
+        drop(s);
+        // A record whose header claims an implausible payload length is
+        // refused before any allocation.
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut msg = vec![KIND_WRITE_BIN];
+        msg.extend_from_slice(&codec::CODEC_VERSION.to_le_bytes());
+        msg.extend_from_slice(&1u32.to_le_bytes());
+        let good = rec(0, 0, 1.0, 1);
+        let start = msg.len();
+        codec::encode(&good, &mut msg);
+        msg[start + 45..start + 49]
+            .copy_from_slice(&(codec::MAX_PAYLOAD as u32 + 7).to_le_bytes());
+        write_msg(&mut s, &msg).unwrap();
+        assert!(read_msg(&mut s).unwrap().is_none());
+        drop(s);
+        // A wrong codec version is refused.
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut msg = vec![KIND_WRITE_BIN];
+        msg.extend_from_slice(&0xEEEEu16.to_le_bytes());
+        msg.extend_from_slice(&0u32.to_le_bytes());
+        write_msg(&mut s, &msg).unwrap();
+        assert!(read_msg(&mut s).unwrap().is_none());
         drop(s);
         // Nothing was ingested; the server still serves good clients.
         let mut cl = ProvClient::connect(&addr).unwrap();

@@ -5,14 +5,20 @@
 //! `(app, rank)` partition ([`prov_shard_of`]) and fans queries out. Each
 //! shard owns:
 //!
-//! * the in-memory, queryable partitions — one per `(app, rank)`, bounded
-//!   by the [`Retention`] policy (score-based eviction keeps the
-//!   highest-score records, implementing the paper's "reduction for
+//! * the in-memory, queryable partitions — one per `(app, rank)`, holding
+//!   records in their *encoded* binary form
+//!   ([`provenance::codec`](crate::provenance::codec)): the fixed header
+//!   answers every [`ProvQuery`] filter, so scans touch 49 bytes per
+//!   record and decode payloads only for matches (predicate pushdown) —
+//!   and bounded by the [`Retention`] policy (score-based eviction keeps
+//!   the highest-score records, implementing the paper's "reduction for
 //!   human-level processing" instead of growing unboundedly);
-//! * the append log — one `prov_app<A>_rank<R>.jsonl` file per partition,
-//!   byte-compatible with [`ProvDb`](crate::provenance::ProvDb)'s layout,
-//!   so `chimbuko replay`/`ProvDb::load` work on a provDB data directory
-//!   unchanged. A flush rewrites any partition that evicted records so
+//! * the append log — one file per partition, by default the binary
+//!   segment format `prov_app<A>_rank<R>.provseg` (encoded record + CRC-32
+//!   each, ~2.5× smaller than JSONL); [`RecordFormat::Jsonl`] is the
+//!   escape hatch that keeps the classic `*.jsonl` layout. Recovery reads
+//!   *both*, so a JSONL store restarted under the binary format migrates
+//!   in place. A flush rewrites any partition that evicted records so
 //!   the on-disk log matches the retained view.
 //!
 //! ## Ordering and equivalence
@@ -24,13 +30,17 @@
 //! when records arrive in the same order, which is what the equivalence
 //! property in `tests/provdb_service.rs` pins down for 1/2/4 shards.
 //!
-//! ## Consistency
+//! ## Consistency and failure policy
 //!
 //! Shard channels are FIFO per sender: a [`ProvStore`] clone (or a TCP
 //! connection, which owns one clone) always reads its own writes.
 //! Cross-client visibility needs a [`ProvStore::flush`] barrier, which
-//! drains every shard queue before returning.
+//! drains every shard queue before returning. Log I/O failures (full
+//! disk, yanked directory) never take a shard thread down: the write is
+//! dropped from the *log* (the record stays queryable in memory), a
+//! warning is logged, and [`ProvDbStats::log_errors`] counts it.
 
+use crate::provenance::codec::{self, RecordFormat};
 use crate::provenance::{ProvQuery, ProvRecord};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
@@ -93,15 +103,21 @@ impl Retention {
 pub struct ProvDbStats {
     /// Retained records across all partitions.
     pub records: u64,
-    /// JSONL bytes of the retained records (the provDB-resident size).
+    /// On-disk-format bytes of the retained records (the provDB-resident
+    /// size; binary segment bytes by default, JSONL under the escape
+    /// hatch).
     pub resident_bytes: u64,
-    /// Total JSONL bytes ever appended to the log (plus metadata) — the
-    /// Fig 9 "reduced output" axis.
+    /// Total log bytes ever appended (plus metadata) — the Fig 9
+    /// "reduced output" axis.
     pub log_bytes: u64,
     /// Retained anomaly records.
     pub anomalies: u64,
     /// Records evicted by retention so far.
     pub evicted: u64,
+    /// Log I/O failures degraded to drops (full disk etc.) — each lost a
+    /// record or a compaction from the *log*; the in-memory view is
+    /// unaffected.
+    pub log_errors: u64,
 }
 
 impl ProvDbStats {
@@ -112,18 +128,24 @@ impl ProvDbStats {
             ("log_bytes", Json::num(self.log_bytes as f64)),
             ("anomalies", Json::num(self.anomalies as f64)),
             ("evicted", Json::num(self.evicted as f64)),
+            ("log_errors", Json::num(self.log_errors as f64)),
         ])
     }
 }
 
-/// Message to one shard worker.
+/// Message to one shard worker. Records travel pre-encoded
+/// (`codec`-validated) so the ingest path never rebuilds them.
 enum ShardReq {
-    /// Sequence-stamped records, all owned by this shard. `log: false`
-    /// for recovery replay (the records are already in the append log).
-    Ingest { batch: Vec<(u64, ProvRecord)>, log: bool },
-    /// Run the query over this shard's partitions; reply with matches
-    /// (unsorted — the front-end merges and orders).
-    Query { q: ProvQuery, reply: Sender<Vec<(u64, ProvRecord)>> },
+    /// Sequence-stamped encoded records, all owned by this shard, each
+    /// with its on-disk byte size when already known (recovery replay
+    /// carries the *scanned* size — a JSONL-resident record must not be
+    /// charged binary bytes — while live ingest passes `None` and the
+    /// shard prices it by its own log format). `log: false` for recovery
+    /// replay (already in the append log).
+    Ingest { batch: Vec<(u64, Option<u64>, Vec<u8>)>, log: bool },
+    /// Run the query over this shard's partitions; reply with encoded
+    /// matches (unsorted — the front-end merges and orders).
+    Query { q: ProvQuery, reply: Sender<Vec<(u64, Vec<u8>)>> },
     /// Flush writers; compact logs of partitions that evicted records.
     Flush { reply: Sender<()> },
     Stats { reply: Sender<ProvDbStats> },
@@ -149,22 +171,41 @@ impl ProvStore {
         self.shards.len()
     }
 
-    /// Ingest a batch: stamp sequence numbers, group by owning shard,
-    /// send one message per touched shard. Returns the number accepted.
+    /// Ingest a batch: encode, stamp sequence numbers, group by owning
+    /// shard, send one message per touched shard. Returns the number
+    /// accepted.
     pub fn ingest(&self, records: Vec<ProvRecord>) -> usize {
-        self.route(records, true)
+        let mut encoded = Vec::with_capacity(records.len());
+        for r in &records {
+            let mut buf = Vec::with_capacity(192);
+            codec::encode(r, &mut buf);
+            encoded.push((buf, None));
+        }
+        self.route(encoded, true)
     }
 
-    fn route(&self, records: Vec<ProvRecord>, log: bool) -> usize {
+    /// Ingest pre-encoded records — the binary wire path hands frames
+    /// straight through. Callers must have run [`codec::validate`] on
+    /// each buffer (the TCP server does, at its trust boundary).
+    pub fn ingest_encoded(&self, records: Vec<Vec<u8>>) -> usize {
+        self.route(records.into_iter().map(|b| (b, None)).collect(), true)
+    }
+
+    fn route(&self, records: Vec<(Vec<u8>, Option<u64>)>, log: bool) -> usize {
         if records.is_empty() {
             return 0;
         }
-        let n = records.len();
-        let mut parts: Vec<Vec<(u64, ProvRecord)>> = vec![Vec::new(); self.shards.len()];
-        for rec in records {
+        let mut n = 0usize;
+        let mut parts: Vec<Vec<(u64, Option<u64>, Vec<u8>)>> =
+            vec![Vec::new(); self.shards.len()];
+        for (buf, disk_bytes) in records {
+            // Routing needs only the fixed header; skip (defensively)
+            // anything that cannot even carry one.
+            let Ok(h) = codec::read_header(&buf) else { continue };
             let seq = self.seq.fetch_add(1, Ordering::Relaxed);
-            let shard = self.placement.shard_of(rec.app, rec.rank);
-            parts[shard].push((seq, rec));
+            let shard = self.placement.shard_of(h.app, h.rank);
+            parts[shard].push((seq, disk_bytes, buf));
+            n += 1;
         }
         for (i, part) in parts.into_iter().enumerate() {
             if !part.is_empty() {
@@ -174,9 +215,19 @@ impl ProvStore {
         n
     }
 
-    /// Run a query: single-shard when filtered by `(app, rank)`, fan-out
-    /// otherwise; merge, order (sequence-stable), truncate.
+    /// Run a query, decoding the matches — the local-caller surface.
     pub fn query(&self, q: &ProvQuery) -> Vec<ProvRecord> {
+        self.query_encoded(q)
+            .iter()
+            .map(|b| codec::decode(b).expect("stored provenance record decodes").0)
+            .collect()
+    }
+
+    /// Run a query returning *encoded* matches, merged, ordered
+    /// (sequence-stable) and truncated — the TCP reply path copies these
+    /// bytes straight onto the wire without re-encoding. Single-shard
+    /// when filtered by `(app, rank)`, fan-out otherwise.
+    pub fn query_encoded(&self, q: &ProvQuery) -> Vec<Vec<u8>> {
         let targets: Vec<usize> = match q.rank {
             Some((app, rank)) => vec![self.placement.shard_of(app, rank)],
             None => (0..self.shards.len()).collect(),
@@ -192,7 +243,7 @@ impl ProvStore {
             }
         }
         drop(tx);
-        let mut out: Vec<(u64, ProvRecord)> = Vec::new();
+        let mut out: Vec<(u64, Vec<u8>)> = Vec::new();
         for _ in 0..expected {
             match rx.recv() {
                 Ok(mut part) => out.append(&mut part),
@@ -203,21 +254,28 @@ impl ProvStore {
         if let Some(n) = q.limit {
             out.truncate(n);
         }
-        out.into_iter().map(|(_, r)| r).collect()
+        out.into_iter().map(|(_, b)| b).collect()
     }
 
     /// All records of `(app, rank)` for `step`, entry-ordered — the
     /// call-stack reconstruction query (Fig 6).
     pub fn call_stack(&self, app: u32, rank: u32, step: u64) -> Vec<ProvRecord> {
-        self.query(&ProvQuery {
+        self.query(&Self::call_stack_query(app, rank, step))
+    }
+
+    /// The call-stack view's query shape (shared with the TCP server's
+    /// binary reply path).
+    pub fn call_stack_query(app: u32, rank: u32, step: u64) -> ProvQuery {
+        ProvQuery {
             rank: Some((app, rank)),
             step: Some(step),
             ..ProvQuery::default()
-        })
+        }
     }
 
     /// Store run metadata (served back via [`Self::metadata`]; persisted
-    /// to `metadata.json` when the store has a data directory).
+    /// to `metadata.json` when the store has a data directory — JSON is
+    /// the edge format for metadata).
     pub fn set_metadata(&self, meta: Json) -> Result<()> {
         let text = meta.to_pretty();
         self.meta_bytes.store(text.len() as u64, Ordering::Relaxed);
@@ -271,6 +329,7 @@ impl ProvStore {
                     out.log_bytes += s.log_bytes;
                     out.anomalies += s.anomalies;
                     out.evicted += s.evicted;
+                    out.log_errors += s.log_errors;
                 }
                 Err(_) => break,
             }
@@ -281,17 +340,22 @@ impl ProvStore {
 }
 
 /// Order merged shard results exactly like the local index: the query's
-/// primary key, sequence (= arrival order) on ties.
-fn sort_results(q: &ProvQuery, out: &mut [(u64, ProvRecord)]) {
+/// primary key, sequence (= arrival order) on ties. Sort keys are read
+/// at fixed offsets from the encoded headers — no decode per comparison.
+fn sort_results(q: &ProvQuery, out: &mut [(u64, Vec<u8>)]) {
     if q.order_by_score {
         out.sort_by(|a, b| {
-            b.1.score
-                .partial_cmp(&a.1.score)
+            codec::score_of(&b.1)
+                .partial_cmp(&codec::score_of(&a.1))
                 .unwrap_or(std::cmp::Ordering::Equal)
                 .then(a.0.cmp(&b.0))
         });
     } else {
-        out.sort_by(|a, b| a.1.entry_us.cmp(&b.1.entry_us).then(a.0.cmp(&b.0)));
+        out.sort_by(|a, b| {
+            codec::entry_us_of(&a.1)
+                .cmp(&codec::entry_us_of(&b.1))
+                .then(a.0.cmp(&b.0))
+        });
     }
 }
 
@@ -314,7 +378,7 @@ impl ProvStoreHandle {
     }
 }
 
-/// Spawn a sharded provenance store.
+/// Spawn a sharded provenance store with the default binary segment log.
 ///
 /// * `dir` — data directory for the append log + metadata (`None` =
 ///   memory only);
@@ -324,6 +388,17 @@ pub fn spawn_store(
     dir: Option<&Path>,
     n_shards: usize,
     retention: Retention,
+) -> Result<(ProvStore, ProvStoreHandle)> {
+    spawn_store_fmt(dir, n_shards, retention, RecordFormat::Binary)
+}
+
+/// [`spawn_store`] with an explicit log format ([`RecordFormat::Jsonl`]
+/// is the `--log-format jsonl` escape hatch).
+pub fn spawn_store_fmt(
+    dir: Option<&Path>,
+    n_shards: usize,
+    retention: Retention,
+    format: RecordFormat,
 ) -> Result<(ProvStore, ProvStoreHandle)> {
     if let Some(d) = dir {
         std::fs::create_dir_all(d)
@@ -343,7 +418,7 @@ pub fn spawn_store(
         let shard_dir = dir.map(|d| d.to_path_buf());
         let join = std::thread::Builder::new()
             .name(format!("chimbuko-provdb-{i}"))
-            .spawn(move || run_shard(shard_dir, retention, rx))
+            .spawn(move || run_shard(shard_dir, retention, format, rx))
             .context("spawning provdb shard")?;
         shard_txs.push(tx);
         joins.push(join);
@@ -366,57 +441,48 @@ pub fn spawn_store(
 }
 
 /// Replay an existing data directory into the shards (without
-/// re-appending to the log) and reload stored run metadata. Replay order
-/// matches [`ProvDb::load`](crate::provenance::ProvDb::load): files in
-/// path order, lines in file order.
+/// re-appending to the log) and reload stored run metadata. The file
+/// scan is the shared [`scan_log_dir`](crate::provenance) used by
+/// [`ProvDb::load`](crate::provenance::ProvDb::load), so the service and
+/// the offline loader read directories identically: both log formats
+/// (the migration path from JSONL stores), files in path order, records
+/// in file order (a partition's `.jsonl` sorts before its `.provseg`, so
+/// pre-migration records replay before post-migration appends), segment
+/// damage degraded to logged warnings.
 fn recover_logs(dir: &Path, store: &ProvStore) -> Result<()> {
-    use std::io::BufRead;
     if let Ok(text) = std::fs::read_to_string(dir.join("metadata.json")) {
         let meta = crate::util::json::parse(&text).context("parsing provdb metadata.json")?;
         store.meta_bytes.store(text.len() as u64, Ordering::Relaxed);
         *store.meta.write().expect("provdb metadata lock") = Some(meta);
     }
-    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
-        .with_context(|| format!("reading provdb dir {}", dir.display()))?
-        .filter_map(|e| e.ok())
-        .map(|e| e.path())
-        .filter(|p| {
-            p.file_name()
-                .and_then(|n| n.to_str())
-                .map(|n| n.starts_with("prov_") && n.ends_with(".jsonl"))
-                .unwrap_or(false)
-        })
-        .collect();
-    paths.sort();
-    let mut records = Vec::new();
-    for path in paths {
-        let f = File::open(&path).with_context(|| format!("opening {}", path.display()))?;
-        for line in std::io::BufReader::new(f).lines() {
-            let line = line?;
-            if line.trim().is_empty() {
-                continue;
-            }
-            records.push(
-                ProvRecord::from_jsonl_line(&line)
-                    .with_context(|| format!("parsing record in {}", path.display()))?,
-            );
+    // Stream in bounded chunks: a large data directory never has to fit
+    // in the front-end's memory (sequence stamping is per-record inside
+    // route(), so chunking preserves replay order exactly).
+    const CHUNK: usize = 4096;
+    let mut chunk: Vec<(Vec<u8>, Option<u64>)> = Vec::with_capacity(CHUNK);
+    crate::provenance::scan_log_dir(dir, true, &mut |buf, disk_bytes| {
+        chunk.push((buf, Some(disk_bytes)));
+        if chunk.len() >= CHUNK {
+            store.route(std::mem::take(&mut chunk), false);
         }
-    }
-    store.route(records, false);
+        Ok(())
+    })?;
+    store.route(chunk, false);
     Ok(())
 }
 
-/// One retained record with its global sequence stamp and serialized size.
+/// One retained record: its global sequence stamp, encoded bytes, and
+/// the on-disk size charged to the byte accounting (format-dependent).
 struct Entry {
     seq: u64,
-    bytes: u64,
-    rec: ProvRecord,
+    disk_bytes: u64,
+    buf: Vec<u8>,
 }
 
 /// One `(app, rank)` partition of a shard.
 #[derive(Default)]
 struct Partition {
-    /// Arrival-ordered retained records.
+    /// Arrival-ordered retained records (encoded).
     entries: Vec<Entry>,
     /// Evicted since the last log compaction.
     dirty: bool,
@@ -426,6 +492,7 @@ struct Partition {
 /// slice of the append log.
 struct ShardState {
     dir: Option<PathBuf>,
+    format: RecordFormat,
     retention: Retention,
     parts: HashMap<(u32, u32), Partition>,
     writers: HashMap<(u32, u32), BufWriter<File>>,
@@ -433,10 +500,27 @@ struct ShardState {
     resident_bytes: u64,
     anomalies: u64,
     evicted: u64,
+    log_errors: u64,
 }
 
-fn log_path(dir: &Path, key: (u32, u32)) -> PathBuf {
-    dir.join(format!("prov_app{}_rank{}.jsonl", key.0, key.1))
+fn log_path(dir: &Path, key: (u32, u32), format: RecordFormat) -> PathBuf {
+    let ext = match format {
+        RecordFormat::Binary => "provseg",
+        RecordFormat::Jsonl => "jsonl",
+    };
+    dir.join(format!("prov_app{}_rank{}.{ext}", key.0, key.1))
+}
+
+/// Open (or create) a partition's append log; a fresh binary segment
+/// gets its file header.
+fn open_log(path: &Path, format: RecordFormat) -> std::io::Result<BufWriter<File>> {
+    let f = File::options().create(true).append(true).open(path)?;
+    let fresh = f.metadata()?.len() == 0;
+    let mut w = BufWriter::new(f);
+    if fresh && format == RecordFormat::Binary {
+        w.write_all(&codec::seg_file_header())?;
+    }
+    Ok(w)
 }
 
 /// Batch-eviction trigger: let a partition overshoot its bound by this
@@ -448,7 +532,8 @@ fn retention_trigger(max: usize) -> usize {
 }
 
 /// Evict down to `max` records: lowest score first, oldest on score ties
-/// — high-score anomalies outlive their context. Returns
+/// — high-score anomalies outlive their context. Scores come from the
+/// fixed header offsets; no decode. Returns
 /// `(evicted, freed_bytes, freed_anomalies)`.
 fn evict_partition(part: &mut Partition, max: usize) -> (u64, u64, u64) {
     if part.entries.len() <= max {
@@ -457,10 +542,8 @@ fn evict_partition(part: &mut Partition, max: usize) -> (u64, u64, u64) {
     let k = part.entries.len() - max;
     let mut order: Vec<usize> = (0..part.entries.len()).collect();
     order.sort_by(|&a, &b| {
-        part.entries[a]
-            .rec
-            .score
-            .partial_cmp(&part.entries[b].rec.score)
+        codec::score_of(&part.entries[a].buf)
+            .partial_cmp(&codec::score_of(&part.entries[b].buf))
             .unwrap_or(std::cmp::Ordering::Equal)
             .then(part.entries[a].seq.cmp(&part.entries[b].seq))
     });
@@ -470,8 +553,8 @@ fn evict_partition(part: &mut Partition, max: usize) -> (u64, u64, u64) {
     let mut freed_anoms = 0u64;
     part.entries.retain(|e| {
         if drop.contains(&e.seq) {
-            freed_bytes += e.bytes;
-            if e.rec.is_anomaly() {
+            freed_bytes += e.disk_bytes;
+            if codec::label_tag_of(&e.buf) != codec::LABEL_NORMAL {
                 freed_anoms += 1;
             }
             false
@@ -484,24 +567,46 @@ fn evict_partition(part: &mut Partition, max: usize) -> (u64, u64, u64) {
 }
 
 impl ShardState {
-    fn ingest(&mut self, batch: Vec<(u64, ProvRecord)>, log: bool) {
+    fn ingest(&mut self, batch: Vec<(u64, Option<u64>, Vec<u8>)>, log: bool) {
         let max_per_rank = self.retention.max_records_per_rank;
         let trigger = retention_trigger(max_per_rank);
-        for (seq, rec) in batch {
-            let mut line = String::with_capacity(360);
-            rec.write_jsonl(&mut line);
-            let nbytes = line.len() as u64 + 1;
-            let key = (rec.app, rec.rank);
-            if log {
-                self.append_log(key, &line);
-            }
-            self.log_bytes += nbytes;
-            self.resident_bytes += nbytes;
-            if rec.is_anomaly() {
+        let mut line = String::new(); // reused across the batch (JSONL mode)
+        for (seq, known_disk_bytes, buf) in batch {
+            // Pre-priced records come only from recovery replay, which
+            // never re-appends (the JSONL-format line below would be
+            // stale otherwise).
+            debug_assert!(known_disk_bytes.is_none() || !log);
+            let Ok(h) = codec::read_header(&buf) else { continue };
+            let key = (h.app, h.rank);
+            // Recovery replay carries the record's actual on-disk size
+            // (it may sit in the *other* format's file — migration);
+            // live ingest prices by this shard's log format.
+            let disk_bytes = match (known_disk_bytes, self.format) {
+                (Some(d), _) => d,
+                (None, RecordFormat::Binary) => buf.len() as u64 + 4, // + CRC trailer
+                (None, RecordFormat::Jsonl) => {
+                    let Ok((rec, _)) = codec::decode(&buf) else { continue };
+                    line.clear();
+                    rec.write_jsonl(&mut line);
+                    line.len() as u64 + 1 // + newline
+                }
+            };
+            let log_ok = if log { self.append_log(key, &buf, &line) } else { true };
+            self.log_bytes += disk_bytes;
+            self.resident_bytes += disk_bytes;
+            if h.is_anomaly() {
                 self.anomalies += 1;
             }
             let part = self.parts.entry(key).or_default();
-            part.entries.push(Entry { seq, bytes: nbytes, rec });
+            part.entries.push(Entry { seq, disk_bytes, buf });
+            if !log_ok {
+                // The on-disk log is now missing this record and may end
+                // in partial bytes; marking the partition dirty makes
+                // the next flush-compaction rewrite the file atomically
+                // from the retained entries — the drop heals itself once
+                // the disk recovers.
+                part.dirty = true;
+            }
             if part.entries.len() > trigger {
                 let (ev, fb, fa) = evict_partition(part, max_per_rank);
                 self.evicted += ev;
@@ -526,29 +631,75 @@ impl ShardState {
         }
     }
 
-    fn append_log(&mut self, key: (u32, u32), line: &str) {
+    /// Append one record to the partition's log. I/O failure is a
+    /// counted, logged drop — never a panic (a full disk must not take
+    /// the shard thread down); the record stays queryable in memory, and
+    /// the caller marks the partition dirty so the next flush-compaction
+    /// rewrites the file (restoring the dropped record and wiping any
+    /// partially-written bytes). Returns whether the append succeeded.
+    fn append_log(&mut self, key: (u32, u32), rec: &[u8], line: &str) -> bool {
         let Some(dir) = &self.dir else {
-            return;
+            return true; // memory-only store: nothing to log
         };
-        let w = self.writers.entry(key).or_insert_with(|| {
-            let path = log_path(dir, key);
-            let f = File::options()
-                .create(true)
-                .append(true)
-                .open(&path)
-                .unwrap_or_else(|e| panic!("opening {}: {e}", path.display()));
-            BufWriter::new(f)
-        });
-        w.write_all(line.as_bytes()).expect("provdb log write");
-        w.write_all(b"\n").expect("provdb log write");
+        if !self.writers.contains_key(&key) {
+            let path = log_path(dir, key, self.format);
+            match open_log(&path, self.format) {
+                Ok(w) => {
+                    self.writers.insert(key, w);
+                }
+                Err(e) => {
+                    self.log_errors += 1;
+                    crate::log_warn!(
+                        "provdb",
+                        "opening {}: {e} — record dropped from log (kept in memory)",
+                        path.display()
+                    );
+                    return false;
+                }
+            }
+        }
+        let w = self.writers.get_mut(&key).expect("writer just ensured");
+        let res = match self.format {
+            RecordFormat::Binary => w
+                .write_all(rec)
+                .and_then(|()| w.write_all(&codec::crc32(rec).to_le_bytes())),
+            RecordFormat::Jsonl => {
+                w.write_all(line.as_bytes()).and_then(|()| w.write_all(b"\n"))
+            }
+        };
+        if let Err(e) = res {
+            self.log_errors += 1;
+            // Drop the writer: part of the record may already be in the
+            // file (or the BufWriter); the dirty-compaction rewrite the
+            // caller schedules is what makes the file whole again.
+            self.writers.remove(&key);
+            crate::log_warn!(
+                "provdb",
+                "appending to log for app{} rank{}: {e} — record dropped from log",
+                key.0,
+                key.1
+            );
+            return false;
+        }
+        true
     }
 
-    fn query(&self, q: &ProvQuery) -> Vec<(u64, ProvRecord)> {
+    fn query(&self, q: &ProvQuery) -> Vec<(u64, Vec<u8>)> {
         let mut out = Vec::new();
         let mut scan = |part: &Partition| {
             for e in &part.entries {
-                if q.matches(&e.rec) {
-                    out.push((e.seq, e.rec.clone()));
+                let Ok(h) = codec::read_header(&e.buf) else { continue };
+                // Predicate pushdown: the fixed header decides every
+                // filter except a custom-label comparison; only matches
+                // (and that rare undecidable case) touch the payload.
+                let keep = match codec::matches_header(q, &h) {
+                    Some(v) => v,
+                    None => codec::decode(&e.buf)
+                        .map(|(rec, _)| q.matches(&rec))
+                        .unwrap_or(false),
+                };
+                if keep {
+                    out.push((e.seq, e.buf.clone()));
                 }
             }
         };
@@ -568,8 +719,10 @@ impl ShardState {
     }
 
     /// Enforce retention exactly, flush writers, and rewrite the log of
-    /// every partition that evicted records so `ProvDb::load(dir)` sees
-    /// exactly the retained view.
+    /// every partition that evicted records so a reload sees exactly the
+    /// retained view. Compaction writes the *current* format and removes
+    /// the other format's file for that partition (the in-place
+    /// migration step for JSONL dirs restarted under the binary format).
     fn flush(&mut self) {
         self.enforce_retention();
         if let Some(dir) = self.dir.clone() {
@@ -582,17 +735,89 @@ impl ShardState {
             for key in dirty {
                 self.writers.remove(&key);
                 let part = self.parts.get_mut(&key).expect("dirty partition exists");
-                let mut text = String::with_capacity(part.entries.len() * 360);
-                for e in &part.entries {
-                    e.rec.write_jsonl(&mut text);
-                    text.push('\n');
+                // Build the compacted file and each entry's size in it —
+                // applied below on success, so migrated partitions stop
+                // carrying the other format's byte prices.
+                let mut sizes: Vec<u64> = Vec::with_capacity(part.entries.len());
+                let bytes = match self.format {
+                    RecordFormat::Binary => {
+                        let mut bytes: Vec<u8> = codec::seg_file_header().to_vec();
+                        for e in &part.entries {
+                            bytes.extend_from_slice(&e.buf);
+                            bytes.extend_from_slice(&codec::crc32(&e.buf).to_le_bytes());
+                            sizes.push(e.buf.len() as u64 + 4);
+                        }
+                        bytes
+                    }
+                    RecordFormat::Jsonl => {
+                        let mut text = String::with_capacity(part.entries.len() * 360);
+                        for e in &part.entries {
+                            let before = text.len();
+                            if let Ok((rec, _)) = codec::decode(&e.buf) {
+                                rec.write_jsonl(&mut text);
+                                text.push('\n');
+                            }
+                            sizes.push((text.len() - before) as u64);
+                        }
+                        text.into_bytes()
+                    }
+                };
+                let other = match self.format {
+                    RecordFormat::Binary => RecordFormat::Jsonl,
+                    RecordFormat::Jsonl => RecordFormat::Binary,
+                };
+                let path = log_path(&dir, key, self.format);
+                // Write-tmp → atomic rename → only then drop the other
+                // format's file: a failed write (ENOSPC — the very case
+                // the log hardening targets) or a crash mid-compaction
+                // must never destroy the partition's only on-disk copy.
+                let tmp = path.with_extension("tmp");
+                let res = std::fs::write(&tmp, &bytes)
+                    .and_then(|()| std::fs::rename(&tmp, &path));
+                match res {
+                    Ok(()) => {
+                        // Dropping the superseded other-format file can
+                        // fail (or a crash can land between the rename
+                        // and here); the partition then reloads with
+                        // duplicates, so surface it and retry via dirty.
+                        let stale = log_path(&dir, key, other);
+                        let removed = match std::fs::remove_file(&stale) {
+                            Ok(()) => true,
+                            Err(e) if e.kind() == std::io::ErrorKind::NotFound => true,
+                            Err(e) => {
+                                self.log_errors += 1;
+                                crate::log_warn!(
+                                    "provdb",
+                                    "removing superseded {}: {e} — records would \
+                                     duplicate on reload; retrying at the next flush",
+                                    stale.display()
+                                );
+                                false
+                            }
+                        };
+                        let part = self.parts.get_mut(&key).expect("dirty partition exists");
+                        part.dirty = !removed;
+                        for (e, nb) in part.entries.iter_mut().zip(&sizes) {
+                            self.resident_bytes = self.resident_bytes - e.disk_bytes + nb;
+                            e.disk_bytes = *nb;
+                        }
+                    }
+                    Err(e) => {
+                        self.log_errors += 1;
+                        std::fs::remove_file(&tmp).ok();
+                        crate::log_warn!(
+                            "provdb",
+                            "compacting {}: {e} — will retry at the next flush",
+                            path.display()
+                        );
+                    }
                 }
-                std::fs::write(log_path(&dir, key), text).expect("provdb log compact");
-                part.dirty = false;
             }
         }
         for w in self.writers.values_mut() {
-            let _ = w.flush();
+            if w.flush().is_err() {
+                self.log_errors += 1;
+            }
         }
     }
 
@@ -603,13 +828,20 @@ impl ShardState {
             log_bytes: self.log_bytes,
             anomalies: self.anomalies,
             evicted: self.evicted,
+            log_errors: self.log_errors,
         }
     }
 }
 
-fn run_shard(dir: Option<PathBuf>, retention: Retention, rx: Receiver<ShardReq>) {
+fn run_shard(
+    dir: Option<PathBuf>,
+    retention: Retention,
+    format: RecordFormat,
+    rx: Receiver<ShardReq>,
+) {
     let mut shard = ShardState {
         dir,
+        format,
         retention,
         parts: HashMap::new(),
         writers: HashMap::new(),
@@ -617,6 +849,7 @@ fn run_shard(dir: Option<PathBuf>, retention: Retention, rx: Receiver<ShardReq>)
         resident_bytes: 0,
         anomalies: 0,
         evicted: 0,
+        log_errors: 0,
     };
     while let Ok(req) = rx.recv() {
         match req {
@@ -718,6 +951,7 @@ mod tests {
         let stats = store.stats();
         assert_eq!(stats.records, 80);
         assert_eq!(stats.evicted, 0);
+        assert_eq!(stats.log_errors, 0);
         assert_eq!(stats.resident_bytes, stats.log_bytes);
         handle.join();
     }
@@ -747,30 +981,58 @@ mod tests {
     #[test]
     fn log_is_provdb_compatible_and_compacts() {
         use crate::provenance::ProvDb;
-        let dir = tmpdir("log");
-        let (store, handle) =
-            spawn_store(Some(dir.as_path()), 2, Retention { max_records_per_rank: 3 }).unwrap();
-        let recs: Vec<ProvRecord> =
-            (0..9u64).map(|i| rec(0, 2, i, i as f64, i)).collect();
-        store.ingest(recs);
-        store
-            .set_metadata(Json::obj(vec![("run_id", Json::str("provdb-test"))]))
+        for format in [RecordFormat::Binary, RecordFormat::Jsonl] {
+            let dir = tmpdir(&format!("log-{}", format.name()));
+            let (store, handle) = spawn_store_fmt(
+                Some(dir.as_path()),
+                2,
+                Retention { max_records_per_rank: 3 },
+                format,
+            )
             .unwrap();
-        store.flush();
-        // The compacted log reloads through the classic loader and holds
-        // exactly the retained view.
-        let db = ProvDb::load(&dir).unwrap();
-        assert_eq!(db.len(), 3);
-        let meta = ProvDb::load_metadata(&dir).unwrap();
-        assert_eq!(meta.get("run_id").unwrap().as_str(), Some("provdb-test"));
-        let retained = store.query(&ProvQuery::default());
-        let reloaded = db.query(&ProvQuery::default());
-        assert_eq!(retained.len(), reloaded.len());
-        for (a, b) in retained.iter().zip(reloaded.iter()) {
-            assert_eq!(&a, b);
+            let recs: Vec<ProvRecord> =
+                (0..9u64).map(|i| rec(0, 2, i, i as f64, i)).collect();
+            store.ingest(recs);
+            store
+                .set_metadata(Json::obj(vec![("run_id", Json::str("provdb-test"))]))
+                .unwrap();
+            store.flush();
+            // The compacted log reloads through the classic loader
+            // (which reads both formats) and holds exactly the retained
+            // view.
+            let db = ProvDb::load(&dir).unwrap();
+            assert_eq!(db.len(), 3, "{}", format.name());
+            let meta = ProvDb::load_metadata(&dir).unwrap();
+            assert_eq!(meta.get("run_id").unwrap().as_str(), Some("provdb-test"));
+            let retained = store.query(&ProvQuery::default());
+            let reloaded = db.query(&ProvQuery::default());
+            assert_eq!(retained.len(), reloaded.len());
+            for (a, b) in retained.iter().zip(reloaded.iter()) {
+                assert_eq!(&a, b);
+            }
+            handle.join();
+            std::fs::remove_dir_all(&dir).ok();
         }
-        handle.join();
-        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn binary_log_is_smaller_per_record_than_jsonl() {
+        let recs: Vec<ProvRecord> = (0..50u64).map(|i| rec(0, 1, i, i as f64, i)).collect();
+        let mut sizes = Vec::new();
+        for format in [RecordFormat::Binary, RecordFormat::Jsonl] {
+            let (store, handle) =
+                spawn_store_fmt(None, 1, Retention::default(), format).unwrap();
+            store.ingest(recs.clone());
+            store.flush();
+            sizes.push(store.stats().log_bytes);
+            handle.join();
+        }
+        assert!(
+            sizes[0] < sizes[1],
+            "binary log ({}) must be strictly smaller than JSONL ({})",
+            sizes[0],
+            sizes[1]
+        );
     }
 
     #[test]
@@ -806,6 +1068,190 @@ mod tests {
         assert_eq!(store.stats().records, 7);
         let db = crate::provenance::ProvDb::load(&dir).unwrap();
         assert_eq!(db.len(), 7);
+        handle.join();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn jsonl_dir_migrates_in_place_under_binary_format() {
+        let dir = tmpdir("migrate");
+        let jsonl_log_bytes;
+        {
+            let (store, handle) = spawn_store_fmt(
+                Some(dir.as_path()),
+                2,
+                Retention::default(),
+                RecordFormat::Jsonl,
+            )
+            .unwrap();
+            store.ingest((0..8u64).map(|i| rec(0, 1, i, i as f64, i)).collect());
+            store.flush();
+            jsonl_log_bytes = store.stats().log_bytes;
+            handle.join();
+        }
+        // Restart under the binary format: JSONL records replay, new
+        // appends go to the segment file, and both survive a reload.
+        let (store, handle) =
+            spawn_store(Some(dir.as_path()), 1, Retention::default()).unwrap();
+        assert_eq!(store.query(&ProvQuery::default()).len(), 8);
+        // Replayed records keep their true (JSONL) on-disk byte prices —
+        // they still live in the .jsonl file, not in binary form.
+        assert_eq!(store.stats().log_bytes, jsonl_log_bytes);
+        store.ingest(vec![rec(0, 1, 9, 99.0, 100)]);
+        store.flush();
+        assert_eq!(store.query(&ProvQuery::default()).len(), 9);
+        handle.join();
+        // The dir now holds both the old .jsonl and the new .provseg for
+        // the partition; the classic loader reads them in path order.
+        assert!(dir.join("prov_app0_rank1.jsonl").exists());
+        assert!(dir.join("prov_app0_rank1.provseg").exists());
+        let db = crate::provenance::ProvDb::load(&dir).unwrap();
+        assert_eq!(db.len(), 9);
+        // A third restart sees all nine too.
+        let (store, handle) =
+            spawn_store(Some(dir.as_path()), 2, Retention::default()).unwrap();
+        assert_eq!(store.query(&ProvQuery::default()).len(), 9);
+        handle.join();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_segment_tail_is_repaired_on_recovery() {
+        let dir = tmpdir("torn");
+        {
+            let (store, handle) =
+                spawn_store(Some(dir.as_path()), 1, Retention::default()).unwrap();
+            store.ingest((0..4u64).map(|i| rec(0, 0, i, i as f64, i)).collect());
+            store.flush();
+            handle.join();
+        }
+        // Crash mid-append: a partial record left at the tail.
+        let path = dir.join("prov_app0_rank0.provseg");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let clean_len = bytes.len() as u64;
+        bytes.extend_from_slice(&[0xAB; 17]);
+        std::fs::write(&path, &bytes).unwrap();
+        // Restart: the 4 good records survive and the tear is truncated
+        // away, so the log reopens at a clean record boundary…
+        {
+            let (store, handle) =
+                spawn_store(Some(dir.as_path()), 1, Retention::default()).unwrap();
+            assert_eq!(store.query(&ProvQuery::default()).len(), 4);
+            assert_eq!(std::fs::metadata(&path).unwrap().len(), clean_len);
+            store.ingest(vec![rec(0, 0, 9, 9.0, 50)]);
+            store.flush();
+            handle.join();
+        }
+        // …and records appended after the crash survive the NEXT restart
+        // (without the repair they would sit behind the tear and vanish).
+        let (store, handle) = spawn_store(Some(dir.as_path()), 2, Retention::default()).unwrap();
+        assert_eq!(store.query(&ProvQuery::default()).len(), 5);
+        handle.join();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_segment_is_sidelined_and_clean_prefix_rewritten() {
+        let dir = tmpdir("corrupt");
+        {
+            let (store, handle) =
+                spawn_store(Some(dir.as_path()), 1, Retention::default()).unwrap();
+            store.ingest((0..4u64).map(|i| rec(0, 0, i, i as f64, i)).collect());
+            store.flush();
+            handle.join();
+        }
+        // Flip a byte inside the third record (all four encode to the
+        // same length here): CRC fails there, records 1-2 stay valid.
+        let path = dir.join("prov_app0_rank0.provseg");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let rec_len = (bytes.len() - 6) / 4;
+        bytes[6 + 2 * rec_len + 10] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        // Restart: the two records before the damage survive; the bad
+        // file is preserved for salvage and the live segment rewritten
+        // clean, so post-recovery appends survive the next restart.
+        {
+            let (store, handle) =
+                spawn_store(Some(dir.as_path()), 1, Retention::default()).unwrap();
+            assert_eq!(store.query(&ProvQuery::default()).len(), 2);
+            assert!(dir.join("prov_app0_rank0.provseg.corrupt").exists());
+            store.ingest(vec![rec(0, 0, 9, 9.0, 50)]);
+            store.flush();
+            handle.join();
+        }
+        let (store, handle) =
+            spawn_store(Some(dir.as_path()), 2, Retention::default()).unwrap();
+        assert_eq!(store.query(&ProvQuery::default()).len(), 3);
+        handle.join();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn damaged_jsonl_line_degrades_instead_of_failing_recovery() {
+        let dir = tmpdir("badline");
+        {
+            let (store, handle) = spawn_store_fmt(
+                Some(dir.as_path()),
+                1,
+                Retention::default(),
+                RecordFormat::Jsonl,
+            )
+            .unwrap();
+            store.ingest((0..5u64).map(|i| rec(0, 0, i, i as f64, i)).collect());
+            store.flush();
+            handle.join();
+        }
+        // Mangle the third line (a partial append merged with its
+        // successor looks exactly like this).
+        let path = dir.join("prov_app0_rank0.jsonl");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines: Vec<&str> = text.lines().collect();
+        lines[2] = "{\"call_id\": 2, \"app\"";
+        std::fs::write(&path, lines.join("\n") + "\n").unwrap();
+        // Recovery keeps the records before the damage and still starts
+        // (the old loader refused the whole directory here); the damaged
+        // file is sidelined and the live log rewritten clean, so records
+        // appended after the recovery survive the NEXT restart too.
+        {
+            let (store, handle) = spawn_store_fmt(
+                Some(dir.as_path()),
+                1,
+                Retention::default(),
+                RecordFormat::Jsonl,
+            )
+            .unwrap();
+            assert_eq!(store.query(&ProvQuery::default()).len(), 2);
+            assert!(dir.join("prov_app0_rank0.jsonl.corrupt").exists());
+            store.ingest(vec![rec(0, 0, 9, 9.0, 50)]);
+            store.flush();
+            handle.join();
+        }
+        let (store, handle) =
+            spawn_store_fmt(Some(dir.as_path()), 1, Retention::default(), RecordFormat::Jsonl)
+                .unwrap();
+        assert_eq!(store.query(&ProvQuery::default()).len(), 3);
+        handle.join();
+        let db = crate::provenance::ProvDb::load(&dir).unwrap();
+        assert_eq!(db.len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn log_io_error_degrades_to_counted_drop() {
+        let dir = tmpdir("ioerr");
+        let (store, handle) = spawn_store(Some(dir.as_path()), 1, Retention::default()).unwrap();
+        // Yank the directory out from under the store: every append's
+        // log write now fails (ENOENT) — the shard must keep running.
+        std::fs::remove_dir_all(&dir).unwrap();
+        let recs: Vec<ProvRecord> = (0..3u64).map(|i| rec(0, 0, i, i as f64, i)).collect();
+        store.ingest(recs);
+        store.flush();
+        // Records are still queryable from memory; the drops are counted.
+        assert_eq!(store.query(&ProvQuery::default()).len(), 3);
+        let stats = store.stats();
+        assert_eq!(stats.records, 3);
+        assert!(stats.log_errors >= 3, "log_errors {}", stats.log_errors);
+        // Shutdown must not panic (the old code `expect()`ed here).
         handle.join();
         std::fs::remove_dir_all(&dir).ok();
     }

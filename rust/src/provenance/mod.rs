@@ -13,11 +13,19 @@
 //! Fig 9. An in-memory index supports the visualization queries (call
 //! stack by (app, rank, step), per-function views, top anomalies) and the
 //! offline `replay` mode reloads the JSONL files into the same index.
+//!
+//! JSON is the *edge* format only: between the AD driver and the provDB
+//! query reply, records travel and persist in the binary [`codec`]
+//! layout (`.provseg` segment logs), which `replay`/[`ProvDb::load`]
+//! also read back.
 
+pub mod codec;
 pub mod compare;
 mod record;
 mod store;
 
+pub use codec::RecordFormat;
 pub use compare::{compare, RunComparison};
 pub use record::ProvRecord;
+pub(crate) use store::scan_log_dir;
 pub use store::{ProvDb, ProvQuery, RunMetadata};

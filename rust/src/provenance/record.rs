@@ -2,6 +2,12 @@
 //! (§V) — rank, thread, entry/exit, runtime, children and message counts,
 //! label — plus the anomaly score and the function name resolved from the
 //! registry.
+//!
+//! Two serializations exist: the JSONL form here (the human/edge format —
+//! `/api/provenance`, offline dumps, the `--log-format jsonl` escape
+//! hatch) and the binary form in [`codec`](super::codec) (the wire,
+//! shard-resident, and `.provseg` segment-log format). The property tests
+//! in `tests/prov_roundtrip.rs` pin the two as mutually lossless.
 
 use crate::ad::{Label, Labeled};
 use crate::util::json::{parse, Json};

@@ -13,7 +13,7 @@ use crate::util::json::{parse, Json};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::fs::File;
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
 
 /// Run-level static provenance (paper: architecture, instrumentation
@@ -178,36 +178,22 @@ impl ProvDb {
         self.n_anomalies
     }
 
-    /// Load a store back from disk (offline replay / `serve`).
+    /// Load a store back from disk (offline replay / `serve`). Reads
+    /// both the classic JSONL layout and the provDB service's binary
+    /// `.provseg` segment logs (see [`codec`](super::codec)), in path
+    /// order, so `chimbuko replay`/`serve --dir` work on either kind of
+    /// data directory. Records stream into the index one at a time; the
+    /// whole log set is never materialized.
     pub fn load(dir: &Path) -> Result<ProvDb> {
         let mut db = ProvDb::in_memory();
         db.dir = None;
-        let entries = std::fs::read_dir(dir)
-            .with_context(|| format!("reading provenance dir {}", dir.display()))?;
-        let mut paths: Vec<PathBuf> = entries
-            .filter_map(|e| e.ok())
-            .map(|e| e.path())
-            .filter(|p| {
-                p.file_name()
-                    .and_then(|n| n.to_str())
-                    .map(|n| n.starts_with("prov_") && n.ends_with(".jsonl"))
-                    .unwrap_or(false)
-            })
-            .collect();
-        paths.sort();
-        for path in paths {
-            let f = File::open(&path).with_context(|| format!("opening {}", path.display()))?;
-            for line in BufReader::new(f).lines() {
-                let line = line?;
-                if line.trim().is_empty() {
-                    continue;
-                }
-                let rec = ProvRecord::from_jsonl_line(&line)
-                    .with_context(|| format!("parsing record in {}", path.display()))?;
-                db.bytes_written += line.len() as u64 + 1;
-                db.index(rec);
-            }
-        }
+        scan_log_dir(dir, false, &mut |buf, disk_bytes| {
+            let (rec, _) = super::codec::decode(&buf)
+                .with_context(|| format!("decoding record from {}", dir.display()))?;
+            db.bytes_written += disk_bytes;
+            db.index(rec);
+            Ok(())
+        })?;
         Ok(db)
     }
 
@@ -252,6 +238,250 @@ impl ProvDb {
             ..ProvQuery::default()
         })
     }
+}
+
+/// Scan a provenance data directory's replayable log contents — shared
+/// by the offline [`ProvDb::load`] and the provDB service's restart
+/// recovery, so the two loaders cannot diverge. Reads both formats
+/// (`prov_*.jsonl`, `prov_*.provseg`), files in path order, records in
+/// file order; damage in either format (torn tails, mid-file corruption,
+/// short files) degrades to logged warnings keeping everything before
+/// it. Each record streams to `sink` as `(encoded record, on-disk
+/// bytes)` — JSONL line + newline, or encoded record + CRC trailer — so
+/// callers never hold the whole log *set* at once. Peak memory is a few
+/// multiples of the largest single file (it is read whole, and segment
+/// records are copied out); a chunked segment reader for multi-GB
+/// unbounded-retention partitions is a noted ROADMAP item.
+///
+/// With `repair` set (the provDB recovery path — the caller owns the
+/// directory), damaged segment files are made safe to append to again:
+/// a torn tail is truncated to the last clean record boundary (0 when
+/// even the 6-byte file header was torn), and a corrupted segment is
+/// sidelined to `*.provseg.corrupt` (preserved for offline salvage)
+/// while its clean prefix is rewritten in place. Without this, records
+/// appended after a crash would sit behind the damage and be dropped at
+/// the *next* restart. The offline loader passes `false` (read-only).
+pub(crate) fn scan_log_dir(
+    dir: &Path,
+    repair: bool,
+    sink: &mut dyn FnMut(Vec<u8>, u64) -> Result<()>,
+) -> Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("reading provenance dir {}", dir.display()))?;
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| {
+                    n.starts_with("prov_") && (n.ends_with(".jsonl") || n.ends_with(".provseg"))
+                })
+                .unwrap_or(false)
+        })
+        .collect();
+    paths.sort();
+    for path in paths {
+        if path.extension().and_then(|e| e.to_str()) == Some("provseg") {
+            scan_segment_file(&path, repair, sink)?;
+        } else {
+            scan_jsonl_file(&path, repair, sink)?;
+        }
+    }
+    Ok(())
+}
+
+fn scan_segment_file(
+    path: &Path,
+    repair: bool,
+    sink: &mut dyn FnMut(Vec<u8>, u64) -> Result<()>,
+) -> Result<()> {
+    let bytes = std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+    let scan = super::codec::read_segment(&bytes)
+        .with_context(|| format!("reading segment {}", path.display()))?;
+    if let Some(why) = &scan.corrupt {
+        crate::log_warn!(
+            "prov",
+            "{}: {} — keeping {} records before the damage",
+            path.display(),
+            why,
+            scan.records.len()
+        );
+    } else if scan.torn_bytes > 0 {
+        crate::log_warn!(
+            "prov",
+            "{}: dropping {} torn trailing bytes (crash mid-append)",
+            path.display(),
+            scan.torn_bytes
+        );
+    }
+    if repair && scan.torn_bytes > 0 {
+        if scan.corrupt.is_some() {
+            // Corruption (CRC/structure failure mid-file) may hide
+            // salvageable records past the damage: preserve the whole
+            // file as *.corrupt, then atomically replace the live
+            // segment with its clean prefix so appends resume at a
+            // valid boundary. fs::copy (not rename) for the sideline —
+            // the live path must never be missing if we crash here.
+            let sidelined = path.with_extension("provseg.corrupt");
+            let tmp = path.with_extension("tmp");
+            let mut clean: Vec<u8> = super::codec::seg_file_header().to_vec();
+            for buf in &scan.records {
+                clean.extend_from_slice(buf);
+                clean.extend_from_slice(&super::codec::crc32(buf).to_le_bytes());
+            }
+            let res = std::fs::copy(path, &sidelined)
+                .and_then(|_| std::fs::write(&tmp, &clean))
+                .and_then(|()| std::fs::rename(&tmp, path));
+            match res {
+                Ok(()) => crate::log_warn!(
+                    "prov",
+                    "{}: damaged segment sidelined to {} and clean prefix \
+                     ({} records) rewritten",
+                    path.display(),
+                    sidelined.display(),
+                    scan.records.len()
+                ),
+                Err(e) => crate::log_warn!(
+                    "prov",
+                    "{}: could not sideline damaged segment: {e}",
+                    path.display()
+                ),
+            }
+        } else {
+            // Pure torn tail: truncate to the last clean record boundary
+            // (0 when even the file header was torn — the next append
+            // then rewrites it), so post-crash appends don't land behind
+            // the tear and vanish at the next restart.
+            let valid = (bytes.len() - scan.torn_bytes) as u64;
+            let res =
+                File::options().write(true).open(path).and_then(|f| f.set_len(valid));
+            match res {
+                Ok(()) => crate::log_warn!(
+                    "prov",
+                    "{}: truncated to {valid} bytes (last clean record boundary)",
+                    path.display()
+                ),
+                Err(e) => crate::log_warn!(
+                    "prov",
+                    "{}: could not truncate damaged segment: {e}",
+                    path.display()
+                ),
+            }
+        }
+    }
+    for buf in scan.records {
+        let disk = buf.len() as u64 + 4; // + CRC trailer
+        sink(buf, disk)?;
+    }
+    Ok(())
+}
+
+fn scan_jsonl_file(
+    path: &Path,
+    repair: bool,
+    sink: &mut dyn FnMut(Vec<u8>, u64) -> Result<()>,
+) -> Result<()> {
+    let bytes = std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut pos = 0usize; // scan position
+    let mut good_end = 0usize; // end of the last cleanly parsed line
+    let mut n_records = 0usize;
+    let mut damage: Option<String> = None;
+    while pos < bytes.len() {
+        let Some(nl) = bytes[pos..].iter().position(|&b| b == b'\n') else {
+            break; // torn tail: trailing fragment without its newline
+        };
+        let line_bytes = &bytes[pos..pos + nl];
+        let next = pos + nl + 1;
+        let line = match std::str::from_utf8(line_bytes) {
+            Ok(l) => l.trim(),
+            Err(e) => {
+                damage = Some(format!("non-UTF-8 line at byte {pos}: {e}"));
+                break;
+            }
+        };
+        if !line.is_empty() {
+            match ProvRecord::from_jsonl_line(line) {
+                Ok(rec) => {
+                    let mut buf = Vec::with_capacity(192);
+                    super::codec::encode(&rec, &mut buf);
+                    sink(buf, (nl + 1) as u64)?;
+                    n_records += 1;
+                }
+                Err(e) => {
+                    damage = Some(format!("bad record at byte {pos}: {e}"));
+                    break;
+                }
+            }
+        }
+        pos = next;
+        good_end = next;
+    }
+    let leftover = bytes.len() - good_end;
+    if let Some(why) = &damage {
+        // Same degrade-to-warning policy as segments: a damaged line
+        // (partial append merged with its successor, bit rot) keeps the
+        // records before it instead of refusing the whole directory.
+        crate::log_warn!(
+            "prov",
+            "{}: {} — keeping {} records before the damage",
+            path.display(),
+            why,
+            n_records
+        );
+    } else if leftover > 0 {
+        crate::log_warn!(
+            "prov",
+            "{}: dropping {leftover} torn trailing bytes (crash mid-append)",
+            path.display()
+        );
+    }
+    // Repair mirrors the segment policy so post-recovery appends never
+    // land behind damage and vanish at the next restart: a pure torn
+    // tail is truncated away; detected corruption sidelines the whole
+    // file for offline salvage and rewrites the clean prefix (verbatim
+    // bytes — JSONL needs no re-encode) atomically in place.
+    if repair && leftover > 0 {
+        if damage.is_some() {
+            let sidelined = path.with_extension("jsonl.corrupt");
+            let tmp = path.with_extension("tmp");
+            let res = std::fs::copy(path, &sidelined)
+                .and_then(|_| std::fs::write(&tmp, &bytes[..good_end]))
+                .and_then(|()| std::fs::rename(&tmp, path));
+            match res {
+                Ok(()) => crate::log_warn!(
+                    "prov",
+                    "{}: damaged log sidelined to {} and clean prefix \
+                     ({n_records} records) rewritten",
+                    path.display(),
+                    sidelined.display()
+                ),
+                Err(e) => crate::log_warn!(
+                    "prov",
+                    "{}: could not sideline damaged log: {e}",
+                    path.display()
+                ),
+            }
+        } else {
+            let res = File::options()
+                .write(true)
+                .open(path)
+                .and_then(|f| f.set_len(good_end as u64));
+            match res {
+                Ok(()) => crate::log_warn!(
+                    "prov",
+                    "{}: truncated to {good_end} bytes (last clean line boundary)",
+                    path.display()
+                ),
+                Err(e) => crate::log_warn!(
+                    "prov",
+                    "{}: could not truncate torn log: {e}",
+                    path.display()
+                ),
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Declarative query over the provenance index.

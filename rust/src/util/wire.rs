@@ -69,6 +69,10 @@ impl<'a> Cursor<'a> {
         Ok(self.take::<1>()?[0])
     }
 
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take()?))
+    }
+
     pub fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take()?))
     }
@@ -81,17 +85,43 @@ impl<'a> Cursor<'a> {
         Ok(f64::from_le_bytes(self.take()?))
     }
 
-    /// Read a length-prefixed UTF-8 string (see [`put_str`]).
-    pub fn str(&mut self) -> Result<String> {
-        let n = self.u32()? as usize;
-        if self.pos + n > self.buf.len() {
-            bail!("truncated string");
+    /// Unread bytes left in the message.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// The unread remainder, without consuming it (callers that parse
+    /// self-delimiting sub-records peek, measure, then [`Cursor::take_slice`]).
+    pub fn peek(&self) -> &'a [u8] {
+        &self.buf[self.pos..]
+    }
+
+    /// Consume `n` bytes, borrowed from the underlying message (no copy).
+    pub fn take_slice(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!("truncated message");
         }
-        let s = std::str::from_utf8(&self.buf[self.pos..self.pos + n])
-            .context("non-UTF-8 string on the wire")?
-            .to_string();
+        let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
+    }
+
+    /// Read a length-prefixed byte string (the raw, zero-copy form of
+    /// [`Cursor::str`]).
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        if n > self.remaining() {
+            bail!("truncated string");
+        }
+        self.take_slice(n)
+    }
+
+    /// Read a length-prefixed UTF-8 string (see [`put_str`]).
+    pub fn str(&mut self) -> Result<String> {
+        let b = self.bytes()?;
+        Ok(std::str::from_utf8(b)
+            .context("non-UTF-8 string on the wire")?
+            .to_string())
     }
 }
 
@@ -124,6 +154,24 @@ mod tests {
         assert_eq!(c.f64().unwrap(), 1.5);
         assert_eq!(c.str().unwrap(), "chimbuko");
         assert!(c.u8().is_err(), "exhausted cursor must refuse");
+    }
+
+    #[test]
+    fn cursor_slice_and_peek_reads() {
+        let mut msg = Vec::new();
+        msg.extend_from_slice(&7u16.to_le_bytes());
+        put_str(&mut msg, "abc");
+        msg.extend_from_slice(b"xyz");
+        let mut c = Cursor::new(&msg);
+        assert_eq!(c.u16().unwrap(), 7);
+        assert_eq!(c.bytes().unwrap(), b"abc");
+        assert_eq!(c.remaining(), 3);
+        assert_eq!(c.peek(), b"xyz");
+        assert_eq!(c.take_slice(2).unwrap(), b"xy");
+        assert!(c.take_slice(2).is_err(), "over-read must refuse");
+        assert_eq!(c.take_slice(1).unwrap(), b"z");
+        assert_eq!(c.remaining(), 0);
+        assert!(c.peek().is_empty());
     }
 
     #[test]

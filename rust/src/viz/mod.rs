@@ -37,6 +37,9 @@ pub enum ProvSource {
     /// [`Reconnector`](crate::util::net::Reconnector): a failed request
     /// drops the connection and the next request redials (with backoff),
     /// so one backend restart never permanently degrades the viz server.
+    /// Records cross the wire in the binary codec and are decoded here —
+    /// the viz layer is the JSON *edge*: `/api/provenance` is where
+    /// provenance first becomes JSON.
     Remote {
         client: Mutex<Reconnector<ProvClient>>,
     },

@@ -1,9 +1,16 @@
-//! Property: `ProvRecord` JSONL serialization and the `ProvDb::load`
-//! index are faithful — write N random records to disk, reload, and the
-//! store answers every query and call-stack request identically to the
-//! original in-memory index.
+//! Properties of the provenance serializations:
+//!
+//! 1. `ProvRecord` JSONL serialization and the `ProvDb::load` index are
+//!    faithful — write N random records to disk, reload, and the store
+//!    answers every query and call-stack request identically to the
+//!    original in-memory index.
+//! 2. The binary codec (`provenance::codec`) round-trips losslessly and
+//!    agrees with the JSON codec record-for-record (including score edge
+//!    values, empty call-stack fields, unicode function names and
+//!    custom labels), and its header-only predicate evaluation never
+//!    disagrees with `ProvQuery::matches`.
 
-use chimbuko::provenance::{ProvDb, ProvQuery, ProvRecord};
+use chimbuko::provenance::{codec, ProvDb, ProvQuery, ProvRecord};
 use chimbuko::util::prop::{check, Config as PropConfig};
 use chimbuko::util::rng::Rng;
 use std::path::PathBuf;
@@ -66,6 +73,160 @@ fn tmpdir(tag: u64) -> PathBuf {
         "chimbuko-prov-rt-{}-{tag}",
         std::process::id()
     ))
+}
+
+/// Edge-case-heavy random record for the codec property: unicode and
+/// escape-needing function names, custom labels, NaN-free score edge
+/// values (exact zeros, subnormals, huge magnitudes, negatives), empty
+/// call-stack shape (no parent, depth 0, no children), and u64 fields
+/// kept within the 2^53 range where the JSON number path is lossless.
+fn codec_record(rng: &mut Rng, i: u64) -> ProvRecord {
+    let funcs = ["MD_NEWTON", "λ_solver \"q\"\n", "汉字::kernel", "", "f\tg\\h"];
+    let labels = ["normal", "anomaly_high", "anomaly_low", "custom_label", "très_étrange"];
+    let scores = [0.0, -0.0, 1.5e-308, 9.25, -3.75, 1.0e15, 6.0, 0.125];
+    let empty_stack = rng.chance(0.3);
+    let entry = rng.range_u64(0, 1 << 50);
+    ProvRecord {
+        call_id: rng.range_u64(0, 1 << 53),
+        app: rng.usize(3) as u32,
+        rank: rng.usize(1 << 16) as u32,
+        thread: rng.usize(4) as u32,
+        fid: rng.usize(1 << 20) as u32,
+        func: funcs[rng.usize(funcs.len())].to_string(),
+        step: rng.range_u64(0, 1 << 40),
+        entry_us: entry,
+        exit_us: entry + rng.range_u64(0, 1 << 30),
+        inclusive_us: rng.range_u64(0, 1 << 40),
+        exclusive_us: rng.range_u64(0, 1 << 40),
+        depth: if empty_stack { 0 } else { rng.usize(64) as u32 },
+        parent: if empty_stack { None } else { Some(rng.range_u64(0, 1 << 53)) },
+        n_children: if empty_stack { 0 } else { rng.usize(32) as u32 },
+        n_messages: rng.usize(32) as u32,
+        msg_bytes: rng.range_u64(0, 1 << 40),
+        label: labels[rng.usize(labels.len())].to_string(),
+        score: scores[(i as usize + rng.usize(scores.len())) % scores.len()],
+    }
+}
+
+fn random_query(rng: &mut Rng) -> ProvQuery {
+    let labels = ["normal", "anomaly_high", "anomaly_low", "custom_label", "nope"];
+    ProvQuery {
+        app: if rng.chance(0.3) { Some(rng.usize(3) as u32) } else { None },
+        rank: if rng.chance(0.3) {
+            Some((rng.usize(3) as u32, rng.usize(1 << 16) as u32))
+        } else {
+            None
+        },
+        fid: if rng.chance(0.3) {
+            Some((rng.usize(3) as u32, rng.usize(1 << 20) as u32))
+        } else {
+            None
+        },
+        step: if rng.chance(0.3) { Some(rng.range_u64(0, 1 << 40)) } else { None },
+        step_range: if rng.chance(0.3) {
+            let lo = rng.range_u64(0, 1 << 40);
+            Some((lo, lo + rng.range_u64(0, 1 << 39)))
+        } else {
+            None
+        },
+        ts_range: if rng.chance(0.3) {
+            let lo = rng.range_u64(0, 1 << 50);
+            Some((lo, lo + rng.range_u64(0, 1 << 30)))
+        } else {
+            None
+        },
+        anomalies_only: rng.chance(0.4),
+        min_score: if rng.chance(0.4) { Some([-1.0, 0.0, 0.2, 6.0][rng.usize(4)]) } else { None },
+        label: if rng.chance(0.4) {
+            Some(labels[rng.usize(labels.len())].to_string())
+        } else {
+            None
+        },
+        order_by_score: rng.chance(0.3),
+        limit: None,
+    }
+}
+
+#[test]
+fn prop_binary_codec_is_lossless_and_agrees_with_json() {
+    check(
+        "prov-binary-codec",
+        PropConfig { cases: 30, seed: 0xB17C, max_size: 80 },
+        |rng, size| {
+            let n = (size as u64).max(8);
+            let mut batch = Vec::new();
+            let mut recs = Vec::new();
+            for i in 0..n {
+                let rec = codec_record(rng, i);
+                // Binary round-trip is bit-lossless.
+                let mut buf = Vec::new();
+                codec::encode(&rec, &mut buf);
+                let len = codec::validate(&buf).map_err(|e| e.to_string())?;
+                if len != buf.len() {
+                    return Err(format!("validate len {len} != {}", buf.len()));
+                }
+                let (back, used) = codec::decode(&buf).map_err(|e| e.to_string())?;
+                if used != buf.len() || back != rec {
+                    return Err(format!("binary round-trip diverged at record {i}"));
+                }
+                // JSON round-trip agrees with the binary one.
+                let line = rec.to_json().to_string();
+                let via_json =
+                    ProvRecord::from_jsonl_line(&line).map_err(|e| e.to_string())?;
+                if via_json != back {
+                    return Err(format!("json vs binary diverged at record {i}"));
+                }
+                // Header carries the routing/filter fields faithfully.
+                let h = codec::read_header(&buf).map_err(|e| e.to_string())?;
+                if h.app != rec.app
+                    || h.rank != rec.rank
+                    || h.fid != rec.fid
+                    || h.step != rec.step
+                    || h.entry_us != rec.entry_us
+                    || h.exit_us != rec.exit_us
+                    || h.score.to_bits() != rec.score.to_bits()
+                    || h.is_anomaly() != rec.is_anomaly()
+                {
+                    return Err(format!("header fields diverged at record {i}"));
+                }
+                codec::encode(&rec, &mut batch);
+                recs.push(rec);
+            }
+            // Concatenated records stay self-delimiting.
+            let mut pos = 0usize;
+            for (i, want) in recs.iter().enumerate() {
+                let (got, used) =
+                    codec::decode(&batch[pos..]).map_err(|e| e.to_string())?;
+                if &got != want {
+                    return Err(format!("batch decode diverged at record {i}"));
+                }
+                pos += used;
+            }
+            if pos != batch.len() {
+                return Err("batch decode left trailing bytes".to_string());
+            }
+            // Header-level predicates never disagree with matches().
+            for _ in 0..64 {
+                let q = random_query(rng);
+                for rec in &recs {
+                    let mut buf = Vec::new();
+                    codec::encode(rec, &mut buf);
+                    let h = codec::read_header(&buf).map_err(|e| e.to_string())?;
+                    match codec::matches_header(&q, &h) {
+                        Some(v) => {
+                            if v != q.matches(rec) {
+                                return Err(format!(
+                                    "header predicate diverged: {q:?} on {rec:?}"
+                                ));
+                            }
+                        }
+                        None => {} // undecidable: caller decodes + matches()
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
