@@ -100,8 +100,38 @@ fn main() {
         on.max_mean_before, on.max_mean_after, off.max_mean_after,
     );
 
+    // --- PS connection sweep: live connections vs latency on the reactor --
+    // The acceptance shape: p99 at the largest point within 2x of the
+    // smallest, process threads independent of the connection count
+    // (thread-per-connection failed both by 10k connections).
+    let conn_counts: Vec<usize> = if fast { vec![50, 200] } else { vec![100, 1_000, 10_000] };
+    let (cn_syncs, cn_funcs) = if fast { (2_000, 16) } else { (40_000, 32) };
+    println!(
+        "\nPS connection sweep: connections {:?}, {} syncs split across them x {} funcs/delta\n",
+        conn_counts, cn_syncs, cn_funcs
+    );
+    let conns = chimbuko::exp::run_ps_conn_sweep(&conn_counts, cn_syncs, cn_funcs, 7)
+        .expect("conn sweep");
+    print!("{}", conns.render());
+    let cn_first = conns.rows.first().unwrap();
+    let cn_last = conns.rows.last().unwrap();
+    println!(
+        "shape check: p99 {} → {} connections: {:.0}µs → {:.0}µs ({:.2}x, acceptance < 2x); \
+         peak threads {} → {} (reactor: {} event-loop threads, independent of connections); \
+         shed {} (well-behaved load: must be 0)",
+        cn_first.clients,
+        cn_last.clients,
+        cn_first.p99_us,
+        cn_last.p99_us,
+        cn_last.p99_us / cn_first.p99_us.max(1e-9),
+        cn_first.peak_threads,
+        cn_last.peak_threads,
+        cn_last.reactor_threads,
+        cn_last.shed,
+    );
+
     let out = "BENCH_ps_shards.json";
-    std::fs::write(out, chimbuko::exp::ps_bench_json(&sweep, &eps, &reb).to_pretty())
+    std::fs::write(out, chimbuko::exp::ps_bench_json(&sweep, &eps, &reb, &conns).to_pretty())
         .expect("writing BENCH_ps_shards.json");
     println!("wrote {out}");
 }

@@ -1,0 +1,51 @@
+#!/usr/bin/env python3
+"""Scoped clippy gate: fail on any warning whose primary span lands in one
+of the given source files.
+
+    cargo clippy --all-targets --message-format=json \
+        | python3 scripts/clippy_gate.py src/util/net.rs src/ps/net.rs ...
+
+The repo-wide `-D warnings` gate can be relaxed during large refactors;
+this gate keeps the transport modules (reactor, framing, protocol
+handlers) warning-clean unconditionally — they are the code most likely
+to hide a real bug behind an "unused" or "needless" lint.
+"""
+
+import json
+import sys
+
+
+def main(argv):
+    scoped = set(argv[1:])
+    if not scoped:
+        print("usage: clippy_gate.py <src/file.rs> [...] < clippy-json", file=sys.stderr)
+        return 2
+    hits = 0
+    for line in sys.stdin:
+        line = line.strip()
+        if not line.startswith("{"):
+            continue
+        try:
+            msg = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if msg.get("reason") != "compiler-message":
+            continue
+        diag = msg.get("message") or {}
+        if diag.get("level") not in ("warning", "error"):
+            continue
+        for span in diag.get("spans") or []:
+            if span.get("is_primary") and span.get("file_name") in scoped:
+                hits += 1
+                where = f"{span['file_name']}:{span.get('line_start', '?')}"
+                print(f"{diag.get('level')}: {where}: {diag.get('message')}")
+                break
+    if hits:
+        print(f"clippy gate: {hits} finding(s) in scoped transport modules", file=sys.stderr)
+        return 1
+    print(f"clippy gate: scoped modules clean ({', '.join(sorted(scoped))})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -169,6 +169,18 @@ pub struct Config {
     pub viz_addr: String,
     /// Emit per-step anomaly statistics to the viz ingest path.
     pub viz_enabled: bool,
+    /// Event-loop threads per TCP server (PS front-end, PS shard
+    /// endpoints, provDB, viz): the poll(2) reactor serves every
+    /// connection on this fixed pool, so server thread count is
+    /// independent of client count.
+    pub net_reactor_threads: usize,
+    /// Per-connection reply-backlog bound, bytes. A connection whose
+    /// unflushed replies exceed this has further requests shed with a
+    /// `Busy` control frame instead of queueing unboundedly.
+    pub net_conn_queue_bytes: usize,
+    /// Server-wide reply-backlog bound, bytes, summed over all of a
+    /// server's connections; above it every new request is shed.
+    pub net_server_queue_bytes: usize,
 }
 
 impl Default for Config {
@@ -206,6 +218,9 @@ impl Default for Config {
             app_work_ms_total: 0,
             viz_addr: "127.0.0.1:0".into(),
             viz_enabled: true,
+            net_reactor_threads: 2,
+            net_conn_queue_bytes: 1 << 20,
+            net_server_queue_bytes: 64 << 20,
         }
     }
 }
@@ -274,6 +289,9 @@ impl Config {
             "app_work_ms_total" => self.app_work_ms_total = v.parse()?,
             "viz.addr" => self.viz_addr = v.to_string(),
             "viz.enabled" => self.viz_enabled = parse_bool(v)?,
+            "net.reactor_threads" => self.net_reactor_threads = v.parse()?,
+            "net.conn_queue_bytes" => self.net_conn_queue_bytes = v.parse()?,
+            "net.server_queue_bytes" => self.net_server_queue_bytes = v.parse()?,
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -319,7 +337,26 @@ impl Config {
         if self.sst_queue_depth == 0 {
             bail!("sst.queue_depth must be > 0");
         }
+        if self.net_reactor_threads == 0 {
+            bail!("net.reactor_threads must be > 0");
+        }
+        if self.net_conn_queue_bytes < 4096 {
+            // Below one reply's worth of headroom every request sheds.
+            bail!("net.conn_queue_bytes must be >= 4096");
+        }
+        if self.net_server_queue_bytes < self.net_conn_queue_bytes {
+            bail!("net.server_queue_bytes must be >= net.conn_queue_bytes");
+        }
         Ok(())
+    }
+
+    /// Reactor sizing for every TCP server this config spawns.
+    pub fn net_opts(&self) -> crate::util::net::ReactorOpts {
+        crate::util::net::ReactorOpts::new(
+            self.net_reactor_threads,
+            self.net_conn_queue_bytes,
+            self.net_server_queue_bytes,
+        )
     }
 
     /// JSON dump (run metadata in provenance, `--print-config`).
@@ -357,6 +394,9 @@ impl Config {
             ("out_dir", Json::str(&self.out_dir)),
             ("batch_capacity", Json::num(self.batch_capacity as f64)),
             ("func_capacity", Json::num(self.func_capacity as f64)),
+            ("net_reactor_threads", Json::num(self.net_reactor_threads as f64)),
+            ("net_conn_queue_bytes", Json::num(self.net_conn_queue_bytes as f64)),
+            ("net_server_queue_bytes", Json::num(self.net_server_queue_bytes as f64)),
         ])
     }
 }
@@ -516,6 +556,33 @@ log_format = jsonl
             Config::default().provdb_log_format,
             crate::provenance::RecordFormat::Binary
         );
+    }
+
+    #[test]
+    fn net_keys_parse_and_validate() {
+        let text = r#"
+[net]
+reactor_threads = 4
+conn_queue_bytes = 65536
+server_queue_bytes = 1048576
+"#;
+        let c = Config::from_str(text).unwrap();
+        assert_eq!(c.net_reactor_threads, 4);
+        let opts = c.net_opts();
+        assert_eq!(opts.threads, 4);
+        assert_eq!(opts.conn_queue_bytes, 65536);
+        assert_eq!(opts.server_queue_bytes, 1048576);
+        assert!(Config::from_str("[net]\nreactor_threads = 0").is_err());
+        assert!(Config::from_str("[net]\nconn_queue_bytes = 16").is_err());
+        assert!(
+            Config::from_str("[net]\nconn_queue_bytes = 65536\nserver_queue_bytes = 8192")
+                .is_err()
+        );
+        // Defaults: 2 loops, 1 MiB per connection, 64 MiB server-wide.
+        let d = Config::default();
+        assert_eq!(d.net_reactor_threads, 2);
+        assert_eq!(d.net_conn_queue_bytes, 1 << 20);
+        assert_eq!(d.net_server_queue_bytes, 64 << 20);
     }
 
     #[test]

@@ -403,13 +403,14 @@ impl EndpointSweepResult {
 }
 
 /// The combined `BENCH_ps_shards.json` payload: the in-process shard
-/// sweep, the per-endpoint TCP sweep, and the skewed-workload rebalance
-/// sweep, so the perf trajectory of all three lives in one artifact
-/// across PRs.
+/// sweep, the per-endpoint TCP sweep, the skewed-workload rebalance
+/// sweep, and the reactor connection sweep, so the perf trajectory of
+/// all four lives in one artifact across PRs.
 pub fn ps_bench_json(
     shards: &ShardSweepResult,
     endpoints: &EndpointSweepResult,
     rebalance: &RebalanceSweepResult,
+    conns: &ConnSweepResult,
 ) -> crate::util::json::Json {
     use crate::util::json::Json;
     Json::obj(vec![
@@ -421,6 +422,9 @@ pub fn ps_bench_json(
         ("endpoint_funcs_per_sync", Json::num(endpoints.funcs_per_sync as f64)),
         ("endpoint_rows", endpoints.rows_json()),
         ("rebalance_rows", rebalance.rows_json()),
+        ("conn_total_syncs", Json::num(conns.total_syncs as f64)),
+        ("conn_funcs_per_sync", Json::num(conns.funcs_per_sync as f64)),
+        ("conn_rows", conns.rows_json()),
     ])
 }
 
@@ -652,6 +656,192 @@ pub fn run_ps_endpoint_sweep(
     Ok(EndpointSweepResult { rows, clients, funcs_per_sync })
 }
 
+/// One point of the reactor connection sweep: `clients` live TCP
+/// connections against one reactor-served shard endpoint.
+#[derive(Clone, Debug)]
+pub struct ConnSweepRow {
+    pub clients: usize,
+    pub syncs_per_sec: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// Requests the endpoint shed with `Busy` (0 expected: these
+    /// clients drain their replies).
+    pub shed: u64,
+    /// Peak OS thread count of this process observed during the point.
+    /// Flat across client counts is the reactor's acceptance criterion —
+    /// the old thread-per-connection transport scaled this with N.
+    pub peak_threads: u64,
+    pub reactor_threads: usize,
+    pub wall_seconds: f64,
+}
+
+/// Result of [`run_ps_conn_sweep`] (`conn_rows` in `BENCH_ps_shards.json`).
+#[derive(Clone, Debug)]
+pub struct ConnSweepResult {
+    pub rows: Vec<ConnSweepRow>,
+    /// Sync volume per point, split across the point's connections.
+    pub total_syncs: usize,
+    pub funcs_per_sync: usize,
+}
+
+impl ConnSweepResult {
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "PS connection sweep — live connections vs latency on the reactor",
+            &["clients", "syncs/s", "p50 µs", "p99 µs", "shed", "peak threads"],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                r.clients.to_string(),
+                format!("{:.0}", r.syncs_per_sec),
+                format!("{:.0}", r.p50_us),
+                format!("{:.0}", r.p99_us),
+                r.shed.to_string(),
+                r.peak_threads.to_string(),
+            ]);
+        }
+        format!(
+            "{}({} syncs total per point, {} functions each; {} event-loop threads serve every point)\n",
+            t.render(),
+            self.total_syncs,
+            self.funcs_per_sync,
+            self.rows.first().map(|r| r.reactor_threads).unwrap_or(0),
+        )
+    }
+
+    pub fn rows_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::arr(
+            self.rows
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("clients", Json::num(r.clients as f64)),
+                        ("syncs_per_sec", Json::num(r.syncs_per_sec)),
+                        ("p50_us", Json::num(r.p50_us)),
+                        ("p99_us", Json::num(r.p99_us)),
+                        ("shed", Json::num(r.shed as f64)),
+                        ("peak_threads", Json::num(r.peak_threads as f64)),
+                        ("reactor_threads", Json::num(r.reactor_threads as f64)),
+                        ("wall_seconds", Json::num(r.wall_seconds)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Current OS thread count of this process (`/proc/self/status`); 0 when
+/// the proc filesystem is unavailable (non-Linux dev machines).
+fn process_threads() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find_map(|l| l.strip_prefix("Threads:").and_then(|v| v.trim().parse().ok()))
+        })
+        .unwrap_or(0)
+}
+
+/// Sweep *live-connection* counts against one reactor-served shard
+/// endpoint. Each point dials `clients` TCP connections but drives them
+/// from a fixed pool of at most 64 worker threads, and the total sync
+/// volume is constant (split across connections) — so the sweep isolates
+/// what the transport does as connections grow. Thread-per-connection
+/// scaled threads (and scheduler pressure) with N; the reactor must hold
+/// both the p99 sync latency and the process thread count flat.
+pub fn run_ps_conn_sweep(
+    client_counts: &[usize],
+    total_syncs: usize,
+    funcs_per_sync: usize,
+    seed: u64,
+) -> anyhow::Result<ConnSweepResult> {
+    // 10k connections ≈ 20k descriptors across both ends of the
+    // loopback; default soft limits (1024 on CI runners) refuse them.
+    crate::util::net::raise_nofile_limit(1 << 16);
+    let mut rows = Vec::new();
+    for &clients in client_counts {
+        let clients = clients.max(1);
+        let opts = crate::util::net::ReactorOpts::default();
+        let reactor_threads = opts.threads;
+        let srv = crate::ps::net::PsShardTcpServer::spawn_standalone_with_opts(
+            "127.0.0.1:0",
+            0,
+            1,
+            opts,
+        )?;
+        let addr = srv.addr().to_string();
+        let per_client = (total_syncs / clients).max(1);
+        let workers = clients.min(64);
+        let t0 = Instant::now();
+        let mut joins = Vec::new();
+        for w in 0..workers {
+            let addr = addr.clone();
+            let mut rng = Rng::new(seed ^ (w as u64).wrapping_mul(0x9E37_79B9));
+            // Worker w owns connections w, w+workers, w+2·workers, …
+            let mine = (clients - w).div_ceil(workers);
+            joins.push(std::thread::spawn(move || {
+                let mut wires: Vec<_> = (0..mine)
+                    .map(|_| {
+                        crate::ps::net::ShardWire::dial(&addr, 0, 1).expect("conn sweep dial")
+                    })
+                    .collect();
+                // Sampled while every worker's connections are live, so
+                // the max over workers sees the full-fan-out state.
+                let threads_seen = process_threads();
+                let mut lat_us = Vec::with_capacity(mine * per_client);
+                for _ in 0..per_client {
+                    for wire in wires.iter_mut() {
+                        let mut st_entries = Vec::with_capacity(funcs_per_sync);
+                        for f in 0..funcs_per_sync {
+                            let mut st = RunStats::new();
+                            st.push(rng.lognormal(6.0, 0.5));
+                            st_entries.push((f as u32, st));
+                        }
+                        let t = Instant::now();
+                        wire.send_sync(0, 0, &st_entries).expect("conn sweep sync");
+                        match wire.recv_sync().expect("conn sweep sync reply") {
+                            crate::ps::net::ShardSyncResp::Ok { entries, .. } => {
+                                assert_eq!(
+                                    entries.len(),
+                                    funcs_per_sync,
+                                    "reply must cover the delta"
+                                );
+                            }
+                            crate::ps::net::ShardSyncResp::Rerouted { .. } => {
+                                panic!("epoch 0 must be accepted")
+                            }
+                        }
+                        lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+                    }
+                }
+                (lat_us, threads_seen)
+            }));
+        }
+        let mut lat_us: Vec<f64> = Vec::with_capacity(clients * per_client);
+        let mut peak_threads = 0u64;
+        for j in joins {
+            let (lat, threads_seen) = j.join().expect("conn sweep worker panicked");
+            lat_us.extend(lat);
+            peak_threads = peak_threads.max(threads_seen);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let shed = srv.net_stats().shed_count();
+        drop(srv);
+        rows.push(ConnSweepRow {
+            clients,
+            syncs_per_sec: lat_us.len() as f64 / wall.max(1e-9),
+            p50_us: crate::util::percentile(&lat_us, 50.0),
+            p99_us: crate::util::percentile(&lat_us, 99.0),
+            shed,
+            peak_threads,
+            reactor_threads,
+            wall_seconds: wall,
+        });
+    }
+    Ok(ConnSweepResult { rows, total_syncs, funcs_per_sync })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -725,12 +915,37 @@ mod tests {
         let text = eps.render();
         assert!(text.contains("PS endpoint sweep"));
         let reb = run_ps_rebalance_sweep(2, 2, 50, 11);
-        let combined = ps_bench_json(&shards, &eps, &reb);
+        let conns = run_ps_conn_sweep(&[2], 8, 4, 11).unwrap();
+        let combined = ps_bench_json(&shards, &eps, &reb, &conns);
         assert_eq!(combined.get("bench").unwrap().as_str(), Some("ps_shards"));
         assert_eq!(combined.get("rows").unwrap().as_arr().unwrap().len(), 1);
         assert_eq!(combined.get("endpoint_rows").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(combined.get("rebalance_rows").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(combined.get("conn_rows").unwrap().as_arr().unwrap().len(), 1);
         crate::util::json::parse(&combined.to_pretty()).unwrap();
+    }
+
+    #[test]
+    fn conn_sweep_keeps_threads_flat_and_sheds_nothing() {
+        let res = run_ps_conn_sweep(&[4, 32], 64, 8, 17).unwrap();
+        assert_eq!(res.rows.len(), 2);
+        for row in &res.rows {
+            assert!(row.syncs_per_sec > 0.0);
+            assert!(row.p99_us >= row.p50_us);
+            assert_eq!(row.shed, 0, "well-behaved clients must never be shed");
+        }
+        // Thread count must be a function of the worker cap and the
+        // reactor, not of the connection count: 8× the connections may
+        // not add more threads than the extra driver workers themselves
+        // (old transport: one server thread per connection).
+        let grew = res.rows[1].peak_threads.saturating_sub(res.rows[0].peak_threads);
+        assert!(
+            grew <= 28 + 4,
+            "threads grew by {grew} for 28 extra driver workers — server is scaling per-connection"
+        );
+        let text = res.render();
+        assert!(text.contains("PS connection sweep"));
+        assert!(res.rows_json().as_arr().unwrap().len() == 2);
     }
 
     #[test]

@@ -13,16 +13,17 @@
 //! chimbuko exp      <fig7|fig8|fig9|viz|case> [--fast]    paper experiments
 //! chimbuko compare  --a <dir> --b <dir>    cross-run provenance mining
 //! chimbuko ps-server [--addr host:port] [--shards N] [--ranks N]
-//!                   [--endpoints a,b,…] [--conn-pool N]
+//!                   [--endpoints a,b,…] [--conn-pool N] [--reactor-threads N]
 //!                   [--publish-interval-ms N] [--rebalance-interval-ms N]
 //!                   [--rebalance-max-ratio X] [--rebalance-min-merges N]
 //!                   standalone TCP parameter server (front-end when
 //!                   --endpoints lists ps-shard-server addresses)
 //! chimbuko ps-shard-server --shard-id I --shards N [--addr host:port]
+//!                   [--reactor-threads N]
 //!                   one stat shard of a multi-process parameter server
 //! chimbuko provdb-server [--config f] [--addr host:port] [--shards N]
 //!                   [--dir d] [--max-records-per-rank N]
-//!                   [--log-format binary|jsonl]
+//!                   [--log-format binary|jsonl] [--reactor-threads N]
 //!                   standalone provenance database (binary segment log by
 //!                   default; jsonl is the classic-layout escape hatch;
 //!                   --config seeds the [provdb] knobs, flags override)
@@ -335,8 +336,16 @@ fn cmd_ps_server(args: &Args) -> anyhow::Result<()> {
         rebalance_max_ratio: args.f64_opt("rebalance-max-ratio", 1.5),
         rebalance_min_merges: args.u64_opt("rebalance-min-merges", 256),
     })?;
-    let server =
-        chimbuko::ps::net::PsTcpServer::start_with_topology(&addr, client, endpoints.clone())?;
+    let net_opts = chimbuko::util::net::ReactorOpts {
+        threads: args.usize_opt("reactor-threads", 2),
+        ..Default::default()
+    };
+    let server = chimbuko::ps::net::PsTcpServer::start_with_opts(
+        &addr,
+        client,
+        endpoints.clone(),
+        net_opts,
+    )?;
     println!(
         "parameter server on {} ({} shards{}) — Ctrl-C to stop",
         server.addr(),
@@ -365,10 +374,15 @@ fn cmd_ps_shard_server(args: &Args) -> anyhow::Result<()> {
     let addr = args.str_opt("addr", "127.0.0.1:5561");
     let shard_id = args.usize_opt("shard-id", 0);
     let shards = args.usize_opt("shards", 1);
-    let server = chimbuko::ps::net::PsShardTcpServer::spawn_standalone(
+    let net_opts = chimbuko::util::net::ReactorOpts {
+        threads: args.usize_opt("reactor-threads", 2),
+        ..Default::default()
+    };
+    let server = chimbuko::ps::net::PsShardTcpServer::spawn_standalone_with_opts(
         &addr,
         shard_id as u32,
         shards as u32,
+        net_opts,
     )?;
     println!(
         "ps-shard-server shard {}/{} listening on {} — Ctrl-C to stop",
@@ -401,7 +415,12 @@ fn cmd_provdb_server(args: &Args) -> anyhow::Result<()> {
     };
     let (store, _handle) =
         chimbuko::provdb::spawn_store_fmt(dir.as_deref(), shards, retention, format)?;
-    let server = ProvDbTcpServer::start(&addr, store)?;
+    // [net] knobs from --config size the reactor; the flag overrides.
+    let mut net_opts = cfg.net_opts();
+    if let Some(v) = args.get("reactor-threads") {
+        net_opts.threads = v.parse::<usize>()?.max(1);
+    }
+    let server = ProvDbTcpServer::start_with_opts(&addr, store, net_opts)?;
     println!(
         "provenance database on {} ({} shards, {}, {}, {} log) — Ctrl-C to stop",
         server.addr(),

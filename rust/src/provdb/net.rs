@@ -3,11 +3,12 @@
 //! deployment shape: a dedicated provenance service decoupled from the
 //! analysis ranks).
 //!
-//! Wire protocol (length-prefixed messages, little-endian; shared framing
-//! in [`util::wire`](crate::util::wire)):
+//! Wire protocol (length-prefixed frames, little-endian; shared framing
+//! in [`util::wire`](crate::util::wire); the server echoes the request's
+//! stream id on its reply):
 //!
 //! ```text
-//! request  := u32 len, u8 kind, payload
+//! request  := u32 len, u32 stream, u8 kind, payload
 //!   kind 1 (hello):         (empty)
 //!   kind 2 (write jsonl):   n u32, n × (u32 len, JSONL record bytes)
 //!   kind 3 (query jsonl):   u32 len, ProvQuery JSON bytes
@@ -26,9 +27,19 @@
 //! reply (meta set)   := u8 1
 //! reply (meta get)   := u8 present, [u32 len, JSON bytes]
 //! reply (stats)      := u64 records, u64 resident, u64 log, u64 anoms,
-//!                       u64 evicted, u64 log_errors
+//!                       u64 evicted, u64 log_errors, u64 shed,
+//!                       u64 net_queue_depth
 //! reply (flush)      := u8 1
 //! ```
+//!
+//! The server runs on the shared poll(2) reactor
+//! ([`serve_frames`](crate::util::net::serve_frames)): a fixed pool of
+//! event-loop threads regardless of connection count, with bounded
+//! per-connection reply backlogs. A connection that stops draining its
+//! replies has further requests shed with a `Busy` control frame instead
+//! of queueing unboundedly; the shed count and the live reply backlog
+//! ride the stats reply (`shed`, `net_queue_depth`) so operators see
+//! overload from the same surface as store health. See `docs/net.md`.
 //!
 //! Kinds 9–11 are the default pipeline: records travel in the
 //! [`provenance::codec`](crate::provenance::codec) binary layout —
@@ -61,11 +72,11 @@ use crate::provenance::codec::{self, RecordFormat};
 use crate::provenance::{ProvQuery, ProvRecord};
 use crate::trace::FuncRegistry;
 use crate::util::json::{parse, Json};
-use crate::util::net::{serve_tcp, TcpServerHandle};
+use crate::util::net::{serve_frames, FrameHandler, FrameSink, NetStats, ReactorOpts, TcpServerHandle};
 use crate::util::wire::{put_str, read_msg, write_msg, Cursor};
 use anyhow::{bail, Context, Result};
 use std::net::TcpStream;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 const KIND_HELLO: u8 = 1;
 const KIND_WRITE: u8 = 2;
@@ -93,28 +104,48 @@ const MAX_PREALLOC: usize = 4096;
 const MAX_REPLY_RETAIN: usize = 4 << 20;
 
 /// TCP front-end for a provenance database; forwards to a [`ProvStore`].
-/// The accept loop is the shared [`serve_tcp`] substrate (one handler
-/// thread per connection, all sharing the store's shard constellation).
+/// Connections are multiplexed over the shared poll(2) reactor
+/// ([`serve_frames`]): a fixed event-loop pool serves every connection,
+/// each with its own [`ProvHandler`] protocol state.
 pub struct ProvDbTcpServer {
     inner: TcpServerHandle,
 }
 
 impl ProvDbTcpServer {
-    /// Bind and serve; each connection is one writer or reader.
+    /// Bind and serve with default reactor sizing.
     pub fn start(addr: &str, store: ProvStore) -> Result<ProvDbTcpServer> {
-        // The handler is shared across connection threads; clone the
-        // store out from under a mutex per connection (ProvStore is
-        // Send, and this keeps no Sync requirement on its internals).
+        Self::start_with_opts(addr, store, ReactorOpts::default())
+    }
+
+    /// Bind and serve with explicit reactor/backpressure bounds.
+    pub fn start_with_opts(
+        addr: &str,
+        store: ProvStore,
+        opts: ReactorOpts,
+    ) -> Result<ProvDbTcpServer> {
+        // The factory is shared across event loops; clone the store out
+        // from under a mutex per connection (ProvStore is Send, and this
+        // keeps no Sync requirement on its internals).
         let store = Mutex::new(store);
-        let inner = serve_tcp("chimbuko-provdb-tcp", addr, move |stream| {
-            let s = store.lock().expect("provdb store lock").clone();
-            let _ = serve_conn(stream, s);
+        let stats = NetStats::new();
+        let hstats = stats.clone();
+        let inner = serve_frames("chimbuko-provdb-tcp", addr, opts, stats, move || {
+            ProvHandler {
+                store: store.lock().expect("provdb store lock").clone(),
+                stats: hstats.clone(),
+                reply: Vec::new(),
+            }
         })?;
         Ok(ProvDbTcpServer { inner })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.inner.addr()
+    }
+
+    /// Transport counters (accepted/shed/backlog...) for this server.
+    pub fn net_stats(&self) -> Arc<NetStats> {
+        self.inner.stats().clone()
     }
 
     pub fn stop(&mut self) {
@@ -142,22 +173,30 @@ fn put_records_bin(reply: &mut Vec<u8>, recs: &[Vec<u8>]) {
     }
 }
 
-fn serve_conn(mut stream: TcpStream, store: ProvStore) -> Result<()> {
-    // Reused across requests on this connection: binary query replies
-    // concatenate stored record bytes into this scratch buffer.
-    let mut reply = Vec::new();
-    loop {
-        let Some(msg) = read_msg(&mut stream)? else {
-            return Ok(()); // clean disconnect
-        };
-        let mut c = Cursor::new(&msg);
+/// Per-connection protocol state for the reactor: one [`ProvStore`]
+/// clone (its shard channels are FIFO per clone, preserving the
+/// read-your-writes ordering the thread-per-connection server had) plus
+/// the reused reply scratch buffer.
+struct ProvHandler {
+    store: ProvStore,
+    /// Server-wide transport counters; the stats reply stamps its shed
+    /// and backlog numbers from here.
+    stats: Arc<NetStats>,
+    /// Reused across requests on this connection: binary query replies
+    /// concatenate stored record bytes into this scratch buffer.
+    reply: Vec<u8>,
+}
+
+impl ProvHandler {
+    fn handle(&mut self, stream: u32, msg: &[u8], out: &mut FrameSink) -> Result<()> {
+        let mut c = Cursor::new(msg);
         let kind = c.u8()?;
         match kind {
             KIND_HELLO => {
                 let mut hello = Vec::with_capacity(6);
-                hello.extend_from_slice(&(store.shard_count() as u32).to_le_bytes());
+                hello.extend_from_slice(&(self.store.shard_count() as u32).to_le_bytes());
                 hello.extend_from_slice(&codec::CODEC_VERSION.to_le_bytes());
-                write_msg(&mut stream, &hello)?;
+                out.send(stream, &hello);
             }
             KIND_WRITE => {
                 let n = c.u32()? as usize;
@@ -174,8 +213,8 @@ fn serve_conn(mut stream: TcpStream, store: ProvStore) -> Result<()> {
                             .context("malformed provenance record on the wire")?,
                     );
                 }
-                let accepted = store.ingest(recs);
-                write_msg(&mut stream, &(accepted as u32).to_le_bytes())?;
+                let accepted = self.store.ingest(recs);
+                out.send(stream, &(accepted as u32).to_le_bytes());
             }
             KIND_WRITE_BIN => {
                 let ver = c.u16()?;
@@ -192,79 +231,93 @@ fn serve_conn(mut stream: TcpStream, store: ProvStore) -> Result<()> {
                         .context("malformed binary provenance record on the wire")?;
                     recs.push(c.take_slice(len)?.to_vec());
                 }
-                let accepted = store.ingest_encoded(recs);
-                write_msg(&mut stream, &(accepted as u32).to_le_bytes())?;
+                let accepted = self.store.ingest_encoded(recs);
+                out.send(stream, &(accepted as u32).to_le_bytes());
             }
             KIND_QUERY => {
                 let text = c.str()?;
                 let q = ProvQuery::from_json(&parse(&text)?)?;
-                let recs = store.query(&q);
-                reply.clear();
-                put_records_jsonl(&mut reply, &recs);
-                write_msg(&mut stream, &reply)?;
+                let recs = self.store.query(&q);
+                self.reply.clear();
+                put_records_jsonl(&mut self.reply, &recs);
+                out.send(stream, &self.reply);
             }
             KIND_QUERY_BIN => {
                 let text = c.str()?;
                 let q = ProvQuery::from_json(&parse(&text)?)?;
-                let recs = store.query_encoded(&q);
-                reply.clear();
-                put_records_bin(&mut reply, &recs);
-                write_msg(&mut stream, &reply)?;
+                let recs = self.store.query_encoded(&q);
+                self.reply.clear();
+                put_records_bin(&mut self.reply, &recs);
+                out.send(stream, &self.reply);
             }
             KIND_CALLSTACK => {
                 let app = c.u32()?;
                 let rank = c.u32()?;
                 let step = c.u64()?;
-                let recs = store.call_stack(app, rank, step);
-                reply.clear();
-                put_records_jsonl(&mut reply, &recs);
-                write_msg(&mut stream, &reply)?;
+                let recs = self.store.call_stack(app, rank, step);
+                self.reply.clear();
+                put_records_jsonl(&mut self.reply, &recs);
+                out.send(stream, &self.reply);
             }
             KIND_CALLSTACK_BIN => {
                 let app = c.u32()?;
                 let rank = c.u32()?;
                 let step = c.u64()?;
-                let recs = store.query_encoded(&ProvStore::call_stack_query(app, rank, step));
-                reply.clear();
-                put_records_bin(&mut reply, &recs);
-                write_msg(&mut stream, &reply)?;
+                let recs = self
+                    .store
+                    .query_encoded(&ProvStore::call_stack_query(app, rank, step));
+                self.reply.clear();
+                put_records_bin(&mut self.reply, &recs);
+                out.send(stream, &self.reply);
             }
             KIND_META_SET => {
                 let text = c.str()?;
-                store.set_metadata(parse(&text)?)?;
-                write_msg(&mut stream, &[1u8])?;
+                self.store.set_metadata(parse(&text)?)?;
+                out.send(stream, &[1u8]);
             }
             KIND_META_GET => {
-                let mut out = Vec::new();
-                match store.metadata() {
+                let mut meta = Vec::new();
+                match self.store.metadata() {
                     Some(m) => {
-                        out.push(1u8);
-                        put_str(&mut out, &m.to_string());
+                        meta.push(1u8);
+                        put_str(&mut meta, &m.to_string());
                     }
-                    None => out.push(0u8),
+                    None => meta.push(0u8),
                 }
-                write_msg(&mut stream, &out)?;
+                out.send(stream, &meta);
             }
             KIND_STATS => {
-                let s = store.stats();
-                let mut out = Vec::with_capacity(48);
-                out.extend_from_slice(&s.records.to_le_bytes());
-                out.extend_from_slice(&s.resident_bytes.to_le_bytes());
-                out.extend_from_slice(&s.log_bytes.to_le_bytes());
-                out.extend_from_slice(&s.anomalies.to_le_bytes());
-                out.extend_from_slice(&s.evicted.to_le_bytes());
-                out.extend_from_slice(&s.log_errors.to_le_bytes());
-                write_msg(&mut stream, &out)?;
+                let s = self.store.stats();
+                let mut buf = Vec::with_capacity(64);
+                buf.extend_from_slice(&s.records.to_le_bytes());
+                buf.extend_from_slice(&s.resident_bytes.to_le_bytes());
+                buf.extend_from_slice(&s.log_bytes.to_le_bytes());
+                buf.extend_from_slice(&s.anomalies.to_le_bytes());
+                buf.extend_from_slice(&s.evicted.to_le_bytes());
+                buf.extend_from_slice(&s.log_errors.to_le_bytes());
+                // Transport counters join the store's own on the wire.
+                buf.extend_from_slice(&self.stats.shed_count().to_le_bytes());
+                buf.extend_from_slice(&self.stats.queue_depth().to_le_bytes());
+                out.send(stream, &buf);
             }
             KIND_FLUSH => {
-                store.flush();
-                write_msg(&mut stream, &[1u8])?;
+                self.store.flush();
+                out.send(stream, &[1u8]);
             }
             k => bail!("unknown request kind {k}"),
         }
-        if reply.capacity() > MAX_REPLY_RETAIN {
-            reply = Vec::new();
+        if self.reply.capacity() > MAX_REPLY_RETAIN {
+            self.reply = Vec::new();
         }
+        Ok(())
+    }
+}
+
+impl FrameHandler for ProvHandler {
+    fn on_frame(&mut self, stream: u32, payload: &[u8], out: &mut FrameSink) -> bool {
+        // A malformed frame drops the connection (the wire is a trust
+        // boundary); the server and its other connections are unaffected.
+        self.handle(stream, payload, out).is_ok()
     }
 }
 
@@ -494,8 +547,10 @@ impl ProvClient {
             log_bytes: c.u64()?,
             anomalies: c.u64()?,
             evicted: c.u64()?,
-            // Absent on pre-binary servers: default to 0.
+            // Trailing fields are absent on older servers: default to 0.
             log_errors: c.u64().unwrap_or(0),
+            shed: c.u64().unwrap_or(0),
+            net_queue_depth: c.u64().unwrap_or(0),
         })
     }
 }
@@ -504,7 +559,6 @@ impl ProvClient {
 mod tests {
     use super::super::store::{spawn_store, Retention};
     use super::*;
-    use std::io::Write;
 
     fn rec(rank: u32, step: u64, score: f64, id: u64) -> ProvRecord {
         ProvRecord {
@@ -556,6 +610,7 @@ mod tests {
         assert_eq!(stats.records, 10);
         assert_eq!(stats.anomalies, 4);
         assert_eq!(stats.log_errors, 0);
+        assert_eq!(stats.shed, 0, "well-behaved clients must never be shed");
         srv.stop();
         handle.join();
     }
@@ -658,12 +713,53 @@ mod tests {
         assert!(cl.query(&ProvQuery::default()).unwrap().is_empty());
         cl.append(&rec(0, 0, 1.0, 1)).unwrap();
         assert_eq!(cl.query(&ProvQuery::default()).unwrap().len(), 1);
-        // Junk frame kind also drops cleanly.
+        // Junk request kind also drops cleanly.
         let mut s2 = TcpStream::connect(&addr).unwrap();
-        s2.write_all(&3u32.to_le_bytes()).unwrap();
-        s2.write_all(&[0xFF, 0xFF, 0xFF]).unwrap();
-        s2.flush().unwrap();
+        write_msg(&mut s2, &[0xFF, 0xFF, 0xFF]).unwrap();
         assert!(read_msg(&mut s2).unwrap().is_none());
+        drop(srv);
+        handle.join();
+    }
+
+    #[test]
+    fn flooded_connection_sheds_but_behaved_clients_are_unaffected() {
+        let (store, handle) = spawn_store(None, 2, Retention::default()).unwrap();
+        // Tiny per-connection reply budget so a non-draining reader trips
+        // the shed path quickly; the huge server-wide bound keeps the
+        // behaved client out of the blast radius.
+        let opts = ReactorOpts::new(1, 32 * 1024, 1 << 30);
+        let srv = ProvDbTcpServer::start_with_opts("127.0.0.1:0", store.clone(), opts).unwrap();
+        let addr = srv.addr().to_string();
+        let mut cl = ProvClient::connect(&addr).unwrap();
+        // Seed ~256 KiB of metadata: one META_GET reply alone overflows
+        // the connection's reply budget.
+        let big = "m".repeat(256 * 1024);
+        cl.set_metadata(&Json::obj(vec![("blob", Json::str(&big))])).unwrap();
+        // The flooder requests metadata 200 times (~50 MiB of replies,
+        // far past any kernel socket-buffer cushion) and never reads.
+        let mut flood = TcpStream::connect(&addr).unwrap();
+        for _ in 0..200 {
+            if write_msg(&mut flood, &[KIND_META_GET]).is_err() {
+                break;
+            }
+        }
+        let net = srv.net_stats();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while net.shed_count() == 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert!(net.shed_count() > 0, "flooded connection never shed");
+        // The behaved client's writes and reads are untouched by the
+        // overload next door.
+        for i in 0..20u64 {
+            cl.append(&rec(0, i, i as f64, i)).unwrap();
+        }
+        cl.flush().unwrap();
+        assert_eq!(cl.query(&ProvQuery::default()).unwrap().len(), 20);
+        let stats = cl.stats().unwrap();
+        assert_eq!(stats.records, 20);
+        assert!(stats.shed > 0, "stats must surface the transport shed count");
+        drop(flood);
         drop(srv);
         handle.join();
     }

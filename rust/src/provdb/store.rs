@@ -118,6 +118,14 @@ pub struct ProvDbStats {
     /// record or a compaction from the *log*; the in-memory view is
     /// unaffected.
     pub log_errors: u64,
+    /// Requests the TCP front-end shed with `Busy` under overload.
+    /// Stamped by [`provdb::net`](crate::provdb::net) when the stats
+    /// travel over the wire; always 0 for an in-process store (no
+    /// transport, nothing to shed).
+    pub shed: u64,
+    /// Unflushed reply bytes queued on the TCP front-end when the stats
+    /// were taken (0 for an in-process store).
+    pub net_queue_depth: u64,
 }
 
 impl ProvDbStats {
@@ -129,6 +137,8 @@ impl ProvDbStats {
             ("anomalies", Json::num(self.anomalies as f64)),
             ("evicted", Json::num(self.evicted as f64)),
             ("log_errors", Json::num(self.log_errors as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("net_queue_depth", Json::num(self.net_queue_depth as f64)),
         ])
     }
 }
@@ -829,6 +839,9 @@ impl ShardState {
             anomalies: self.anomalies,
             evicted: self.evicted,
             log_errors: self.log_errors,
+            // Transport counters live on the TCP front-end, not here.
+            shed: 0,
+            net_queue_depth: 0,
         }
     }
 }

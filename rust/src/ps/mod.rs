@@ -138,6 +138,12 @@ pub struct ShardLoad {
     pub functions: u64,
     /// Placement slots this shard currently owns.
     pub slots: u32,
+    /// Requests the shard's TCP endpoint shed with `Busy` under overload
+    /// (0 for in-process shards — no transport, nothing to shed).
+    pub shed: u64,
+    /// Unflushed reply bytes queued on the endpoint when the snapshot
+    /// was taken (0 for in-process shards).
+    pub queue_depth: u64,
 }
 
 /// Snapshot published to the visualization ingest channel.

@@ -3,10 +3,15 @@
 //! nodes, PS instances spread across the machine; the reference
 //! implementation used ZeroMQ).
 //!
-//! Wire protocol (v4, placement-aware): length-prefixed binary messages,
-//! little-endian (shared framing in [`util::wire`](crate::util::wire),
-//! shared accept loop / reconnecting clients in
-//! [`util::net`](crate::util::net)). Two server roles:
+//! Wire protocol (v5, placement-aware + multiplexed): length-prefixed
+//! binary frames, little-endian (shared framing in
+//! [`util::wire`](crate::util::wire); poll-based reactor servers and
+//! reconnecting/multiplexing clients in [`util::net`](crate::util::net)).
+//! Every frame carries a **stream id** — a driver's conn-pool slots share
+//! one socket and the server answers on the stream that asked — and an
+//! overloaded server sheds requests with a `Busy` control frame instead
+//! of queueing unboundedly (clients treat it as a failed call and back
+//! off through their `Reconnector`). Two server roles:
 //!
 //! * **Front-end** ([`PsTcpServer`]) — owns hello/topology, the
 //!   committed [`Placement`] table, the rank/step timeline (reports),
@@ -25,7 +30,7 @@
 //! ```text
 //! placement := epoch u64, n_shards u32, n_slots u32, n_slots × u32
 //!
-//! front-end request := u32 len, u8 kind, payload
+//! front-end request := u32 len, u32 stream, u8 kind, payload
 //!   kind 1 (sync):    app u32, rank u32, epoch u64, n_groups u32,
 //!                     n_groups × (shard u32, n_entries u32, n_entries ×
 //!                       (fid u32, n u64, mean f64, m2 f64, min f64, max f64))
@@ -45,7 +50,7 @@
 //!                  n_events u32, events
 //! reply (placement) := placement
 //!
-//! shard request := u32 len, u8 kind, payload
+//! shard request := u32 len, u32 stream, u8 kind, payload
 //!   kind 3 (hello):      (empty)
 //!   kind 6 (shard sync): app u32, epoch u64, n_entries u32, entries
 //!   kind 7 (version):    version u64                           (one-way)
@@ -57,11 +62,17 @@
 //! reply (shard sync) := status u8: 0 → n_entries u32, entries, version u64
 //!                       1 → epoch u64             (stale epoch: rerouted)
 //! reply (snapshot)   := functions u64, syncs u64, merges u64, shard u32,
-//!                       epoch u64, slots u32
+//!                       epoch u64, slots u32, shed u64, queue_depth u64
 //! reply (migrate)    := n u32, n × (app u32, entry)
 //! reply (install)    := ack u8 (= 1)
 //! reply (slot loads) := shard u32, epoch u64, n u32, n × (slot u32, merges u64)
 //! ```
+//!
+//! The snapshot's trailing `shed`/`queue_depth` come from the endpoint's
+//! transport counters ([`NetStats`]), so overload is visible wherever
+//! shard loads surface (`/api/ps_stats`). Replies answer on the request
+//! frame's stream id; a shed request answers with a `Busy` control frame
+//! on that stream instead.
 //!
 //! The wire is a trust boundary on both roles: the front-end re-checks
 //! every grouped entry against the placement at the claimed epoch, a
@@ -81,7 +92,10 @@ use super::shard::{run_shard, AggConn, Route, ShardConn, ShardMsg, ShardReply, S
 use super::{FuncKey, GlobalEvent, PsClient, PsStats, StepStat};
 use crate::placement::Placement;
 use crate::stats::{RunStats, StatsTable};
-use crate::util::net::{serve_tcp, Reconnector, TcpServerHandle};
+use crate::util::net::{
+    mux_slot, serve_frames, FrameHandler, FrameSink, MuxCore, MuxSlot, NetStats, ReactorOpts,
+    Reconnector, TcpServerHandle,
+};
 use crate::util::wire::{put_str, read_msg, write_msg, Cursor};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -193,6 +207,18 @@ impl PsTcpServer {
         client: PsClient,
         shard_addrs: Vec<String>,
     ) -> Result<PsTcpServer> {
+        Self::start_with_opts(addr, client, shard_addrs, ReactorOpts::default())
+    }
+
+    /// [`Self::start_with_topology`] with explicit reactor sizing and
+    /// backpressure bounds (`Config::net_opts`, or tests pinning tiny
+    /// queue limits).
+    pub fn start_with_opts(
+        addr: &str,
+        client: PsClient,
+        shard_addrs: Vec<String>,
+        opts: ReactorOpts,
+    ) -> Result<PsTcpServer> {
         let n = client.shard_count();
         let addrs = if shard_addrs.is_empty() {
             vec![String::new(); n]
@@ -206,14 +232,15 @@ impl PsTcpServer {
             shard_addrs
         };
         let addrs = Arc::new(addrs);
-        // The handler is shared across connection threads; PsClient is
+        // The handler factory is shared across event loops; PsClient is
         // Send (not Sync — it holds mpsc senders), so clone it out from
         // under a mutex per connection.
         let client = Mutex::new(client);
-        let inner = serve_tcp("chimbuko-ps-tcp", addr, move |stream| {
-            let c = client.lock().expect("ps tcp client lock").clone();
-            let a = addrs.clone();
-            let _ = serve_conn(stream, c, a);
+        let inner = serve_frames("chimbuko-ps-tcp", addr, opts, NetStats::new(), move || {
+            FrontHandler {
+                client: client.lock().expect("ps tcp client lock").clone(),
+                shard_addrs: addrs.clone(),
+            }
         })?;
         Ok(PsTcpServer { inner })
     }
@@ -222,38 +249,50 @@ impl PsTcpServer {
         self.inner.addr()
     }
 
+    /// Transport counters (accepted/shed/queue depth…) for this server.
+    pub fn net_stats(&self) -> Arc<NetStats> {
+        self.inner.stats().clone()
+    }
+
     pub fn stop(&mut self) {
         self.inner.stop();
     }
 }
 
-fn serve_conn(
-    mut stream: TcpStream,
+/// Per-connection front-end protocol handler (runs on the reactor's
+/// event-loop threads; replies answer on the request frame's stream).
+struct FrontHandler {
     client: PsClient,
     shard_addrs: Arc<Vec<String>>,
-) -> Result<()> {
-    loop {
-        let Some(msg) = read_msg(&mut stream)? else {
-            return Ok(()); // clean disconnect
-        };
-        let mut c = Cursor::new(&msg);
+}
+
+impl FrameHandler for FrontHandler {
+    fn on_frame(&mut self, stream: u32, payload: &[u8], out: &mut FrameSink) -> bool {
+        // A malformed or trust-violating frame drops the connection.
+        self.handle(stream, payload, out).is_ok()
+    }
+}
+
+impl FrontHandler {
+    fn handle(&mut self, stream: u32, msg: &[u8], out: &mut FrameSink) -> Result<()> {
+        let mut c = Cursor::new(msg);
         let kind = c.u8()?;
         match kind {
             KIND_HELLO => {
-                let placement = client.placement_snapshot();
-                let mut reply = Vec::with_capacity(1048 + 24 * shard_addrs.len());
-                reply.extend_from_slice(&(client.shard_count() as u32).to_le_bytes());
-                for a in shard_addrs.iter() {
+                let placement = self.client.placement_snapshot();
+                let mut reply = Vec::with_capacity(1048 + 24 * self.shard_addrs.len());
+                reply.extend_from_slice(&(self.client.shard_count() as u32).to_le_bytes());
+                for a in self.shard_addrs.iter() {
                     put_str(&mut reply, a);
                 }
                 placement.encode(&mut reply);
-                write_msg(&mut stream, &reply)?;
+                out.send(stream, &reply);
             }
             KIND_SYNC => {
                 let app = c.u32()?;
                 let rank = c.u32()?;
                 let epoch = c.u64()?;
-                let placement = client.placement_snapshot();
+                let placement = self.client.placement_snapshot();
                 if epoch != placement.epoch() {
                     // Stale (or ahead-of-commit) client: hand it the
                     // committed table; it re-groups and resends. Nothing
@@ -261,8 +300,8 @@ fn serve_conn(
                     let mut reply = Vec::with_capacity(1040);
                     reply.push(STATUS_REROUTED);
                     placement.encode(&mut reply);
-                    write_msg(&mut stream, &reply)?;
-                    continue;
+                    out.send(stream, &reply);
+                    return Ok(());
                 }
                 let n_groups = c.u32()? as usize;
                 let mut entries: Vec<(u32, RunStats)> = Vec::new();
@@ -291,7 +330,7 @@ fn serve_conn(
                         entries.push(entry);
                     }
                 }
-                let (global, events) = client.sync_entries(app, rank, entries);
+                let (global, events) = self.client.sync_entries(app, rank, entries);
                 let entries: Vec<(u32, &RunStats)> = global.iter().collect();
                 let mut reply = Vec::with_capacity(9 + 44 * entries.len());
                 reply.push(STATUS_OK);
@@ -300,7 +339,7 @@ fn serve_conn(
                     put_stats(&mut reply, fid, st);
                 }
                 put_events(&mut reply, &events);
-                write_msg(&mut stream, &reply)?;
+                out.send(stream, &reply);
             }
             KIND_REPORT => {
                 let app = c.u32()?;
@@ -310,7 +349,7 @@ fn serve_conn(
                 let anoms = c.u64()?;
                 let lo = c.u64()?;
                 let hi = c.u64()?;
-                client.report(StepStat {
+                self.client.report(StepStat {
                     app,
                     rank,
                     step,
@@ -322,29 +361,30 @@ fn serve_conn(
             KIND_EVENT_FETCH => {
                 let app = c.u32()?;
                 let rank = c.u32()?;
-                let (version, events) = client.fetch_events(app, rank);
+                let (version, events) = self.client.fetch_events(app, rank);
                 let mut reply = Vec::with_capacity(16 + 24 * events.len());
                 reply.extend_from_slice(&version.to_le_bytes());
                 put_events(&mut reply, &events);
-                write_msg(&mut stream, &reply)?;
+                out.send(stream, &reply);
             }
             KIND_PS_STATS => {
-                let stats = client.stats().unwrap_or_default();
+                let stats = self.client.stats().unwrap_or_default();
                 let mut reply = Vec::with_capacity(40 + 24 * stats.global_events.len());
                 reply.extend_from_slice(&stats.total_anomalies.to_le_bytes());
                 reply.extend_from_slice(&stats.total_executions.to_le_bytes());
                 reply.extend_from_slice(&stats.ranks.to_le_bytes());
                 reply.extend_from_slice(&stats.event_version.to_le_bytes());
                 put_events(&mut reply, &stats.global_events);
-                write_msg(&mut stream, &reply)?;
+                out.send(stream, &reply);
             }
             KIND_PLACEMENT => {
                 let mut reply = Vec::with_capacity(1040);
-                client.placement_snapshot().encode(&mut reply);
-                write_msg(&mut stream, &reply)?;
+                self.client.placement_snapshot().encode(&mut reply);
+                out.send(stream, &reply);
             }
             k => bail!("unknown request kind {k}"),
         }
+        Ok(())
     }
 }
 
@@ -367,6 +407,17 @@ impl PsShardTcpServer {
     /// Spawn a standalone shard (its own thread + version mirror) and
     /// serve it at `addr`. This is what `chimbuko ps-shard-server` runs.
     pub fn spawn_standalone(addr: &str, shard_id: u32, n_shards: u32) -> Result<PsShardTcpServer> {
+        Self::spawn_standalone_with_opts(addr, shard_id, n_shards, ReactorOpts::default())
+    }
+
+    /// [`Self::spawn_standalone`] with explicit reactor sizing and
+    /// backpressure bounds.
+    pub fn spawn_standalone_with_opts(
+        addr: &str,
+        shard_id: u32,
+        n_shards: u32,
+        opts: ReactorOpts,
+    ) -> Result<PsShardTcpServer> {
         anyhow::ensure!(n_shards > 0, "ps-shard-server needs --shards > 0");
         anyhow::ensure!(shard_id < n_shards, "shard id {shard_id} out of range (0..{n_shards})");
         let (tx, rx) = channel();
@@ -376,7 +427,7 @@ impl PsShardTcpServer {
             .name(format!("chimbuko-ps-shard-{shard_id}"))
             .spawn(move || run_shard(rx, shard_id, n_shards as usize, ver))
             .context("spawning standalone ps shard")?;
-        let mut srv = Self::start_wrapping(addr, tx.clone(), shard_id, n_shards, version)?;
+        let mut srv = Self::start_wrapping(addr, tx.clone(), shard_id, n_shards, version, opts)?;
         srv.own_shard = Some((tx, join));
         Ok(srv)
     }
@@ -389,12 +440,24 @@ impl PsShardTcpServer {
         shard_id: u32,
         n_shards: u32,
         version: Arc<AtomicU64>,
+        opts: ReactorOpts,
     ) -> Result<PsShardTcpServer> {
         let tx = Mutex::new(tx);
-        let inner = serve_tcp(&format!("chimbuko-ps-shard-tcp-{shard_id}"), addr, move |stream| {
-            let t = tx.lock().expect("ps shard tx lock").clone();
-            let _ = serve_shard_conn(stream, t, shard_id, n_shards, version.clone());
-        })?;
+        let stats = NetStats::new();
+        let hstats = stats.clone();
+        let inner = serve_frames(
+            &format!("chimbuko-ps-shard-tcp-{shard_id}"),
+            addr,
+            opts,
+            stats,
+            move || ShardHandler {
+                tx: tx.lock().expect("ps shard tx lock").clone(),
+                shard_id,
+                n_shards,
+                version: version.clone(),
+                stats: hstats.clone(),
+            },
+        )?;
         Ok(PsShardTcpServer { inner, shard_id, own_shard: None })
     }
 
@@ -404,6 +467,11 @@ impl PsShardTcpServer {
 
     pub fn shard_id(&self) -> u32 {
         self.shard_id
+    }
+
+    /// Transport counters (accepted/shed/queue depth…) for this endpoint.
+    pub fn net_stats(&self) -> Arc<NetStats> {
+        self.inner.stats().clone()
     }
 
     /// Stop accepting; in standalone mode also stop the shard thread.
@@ -422,25 +490,32 @@ impl Drop for PsShardTcpServer {
     }
 }
 
-fn serve_shard_conn(
-    mut stream: TcpStream,
+/// Per-connection shard-endpoint protocol handler. Holds the server's
+/// own [`NetStats`] so snapshot replies can report shed/queue depth.
+struct ShardHandler {
     tx: Sender<ShardMsg>,
     shard_id: u32,
     n_shards: u32,
     version: Arc<AtomicU64>,
-) -> Result<()> {
-    loop {
-        let Some(msg) = read_msg(&mut stream)? else {
-            return Ok(());
-        };
-        let mut c = Cursor::new(&msg);
+    stats: Arc<NetStats>,
+}
+
+impl FrameHandler for ShardHandler {
+    fn on_frame(&mut self, stream: u32, payload: &[u8], out: &mut FrameSink) -> bool {
+        self.handle(stream, payload, out).is_ok()
+    }
+}
+
+impl ShardHandler {
+    fn handle(&mut self, stream: u32, msg: &[u8], out: &mut FrameSink) -> Result<()> {
+        let mut c = Cursor::new(msg);
         let kind = c.u8()?;
         match kind {
             KIND_HELLO => {
                 let mut reply = Vec::with_capacity(8);
-                reply.extend_from_slice(&shard_id.to_le_bytes());
-                reply.extend_from_slice(&n_shards.to_le_bytes());
-                write_msg(&mut stream, &reply)?;
+                reply.extend_from_slice(&self.shard_id.to_le_bytes());
+                reply.extend_from_slice(&self.n_shards.to_le_bytes());
+                out.send(stream, &reply);
             }
             KIND_SHARD_SYNC => {
                 let app = c.u32()?;
@@ -456,7 +531,8 @@ fn serve_shard_conn(
                 // drop the connection (trust boundary); a stale epoch
                 // comes back `Rerouted` for the client to heal.
                 let (rtx, rrx) = channel();
-                tx.send(ShardMsg::Sync { app, epoch, delta, reply: rtx })
+                self.tx
+                    .send(ShardMsg::Sync { app, epoch, delta, reply: rtx })
                     .map_err(|_| anyhow::anyhow!("shard thread gone"))?;
                 match rrx.recv().context("shard thread dropped reply")? {
                     ShardReply::Part(part) => {
@@ -467,16 +543,16 @@ fn serve_shard_conn(
                             put_stats(&mut reply, *fid, st);
                         }
                         reply.extend_from_slice(&part.event_version.to_le_bytes());
-                        write_msg(&mut stream, &reply)?;
+                        out.send(stream, &reply);
                     }
                     ShardReply::Rerouted { epoch, .. } => {
                         let mut reply = Vec::with_capacity(9);
                         reply.push(STATUS_REROUTED);
                         reply.extend_from_slice(&epoch.to_le_bytes());
-                        write_msg(&mut stream, &reply)?;
+                        out.send(stream, &reply);
                     }
                     ShardReply::Refused => {
-                        bail!("entry not owned by shard {shard_id} at epoch {epoch}");
+                        bail!("entry not owned by shard {} at epoch {epoch}", self.shard_id);
                     }
                 }
             }
@@ -484,22 +560,26 @@ fn serve_shard_conn(
                 let v = c.u64()?;
                 // Monotonic: a reordered stale push must not roll the
                 // mirror back.
-                version.fetch_max(v, Ordering::SeqCst);
+                self.version.fetch_max(v, Ordering::SeqCst);
             }
             KIND_SHARD_SNAPSHOT => {
                 let (rtx, rrx) = channel();
-                tx.send(ShardMsg::Snapshot { reply: rtx })
+                self.tx
+                    .send(ShardMsg::Snapshot { reply: rtx })
                     .map_err(|_| anyhow::anyhow!("shard thread gone"))?;
                 let snap = rrx.recv().context("shard thread dropped snapshot")?;
                 let load = snap.shard_loads.first().copied().unwrap_or_default();
-                let mut reply = Vec::with_capacity(44);
+                let mut reply = Vec::with_capacity(60);
                 reply.extend_from_slice(&snap.functions_tracked.to_le_bytes());
                 reply.extend_from_slice(&load.syncs.to_le_bytes());
                 reply.extend_from_slice(&load.merges.to_le_bytes());
                 reply.extend_from_slice(&load.shard.to_le_bytes());
                 reply.extend_from_slice(&snap.placement_epoch.to_le_bytes());
                 reply.extend_from_slice(&load.slots.to_le_bytes());
-                write_msg(&mut stream, &reply)?;
+                // Transport health rides along so shard loads carry it.
+                reply.extend_from_slice(&self.stats.shed_count().to_le_bytes());
+                reply.extend_from_slice(&self.stats.queue_depth().to_le_bytes());
+                out.send(stream, &reply);
             }
             KIND_MIGRATE => {
                 let placement = Placement::decode(&mut c)?;
@@ -507,30 +587,35 @@ fn serve_shard_conn(
                 // silently reshape routing and hand this shard's state to
                 // whoever asked — refuse and drop the connection.
                 anyhow::ensure!(
-                    placement.n_shards() == n_shards as usize,
+                    placement.n_shards() == self.n_shards as usize,
                     "migrate placement covers {} shards, this endpoint serves shard \
-                     {shard_id} of {n_shards}",
-                    placement.n_shards()
+                     {} of {}",
+                    placement.n_shards(),
+                    self.shard_id,
+                    self.n_shards
                 );
                 let (rtx, rrx) = channel();
-                tx.send(ShardMsg::Migrate { placement, reply: rtx })
+                self.tx
+                    .send(ShardMsg::Migrate { placement, reply: rtx })
                     .map_err(|_| anyhow::anyhow!("shard thread gone"))?;
-                let out = rrx.recv().context("shard thread dropped migrate reply")?;
-                let mut reply = Vec::with_capacity(4 + 48 * out.len());
-                put_keyed_entries(&mut reply, &out);
-                write_msg(&mut stream, &reply)?;
+                let migrated = rrx.recv().context("shard thread dropped migrate reply")?;
+                let mut reply = Vec::with_capacity(4 + 48 * migrated.len());
+                put_keyed_entries(&mut reply, &migrated);
+                out.send(stream, &reply);
             }
             KIND_INSTALL => {
                 let entries = read_keyed_entries(&mut c)?;
                 let (rtx, rrx) = channel();
-                tx.send(ShardMsg::Install { entries, reply: rtx })
+                self.tx
+                    .send(ShardMsg::Install { entries, reply: rtx })
                     .map_err(|_| anyhow::anyhow!("shard thread gone"))?;
                 rrx.recv().context("shard thread dropped install ack")?;
-                write_msg(&mut stream, &[1u8])?;
+                out.send(stream, &[1u8]);
             }
             KIND_SLOT_LOADS => {
                 let (rtx, rrx) = channel();
-                tx.send(ShardMsg::SlotLoads { reply: rtx })
+                self.tx
+                    .send(ShardMsg::SlotLoads { reply: rtx })
                     .map_err(|_| anyhow::anyhow!("shard thread gone"))?;
                 let loads = rrx.recv().context("shard thread dropped slot loads")?;
                 let mut reply = Vec::with_capacity(16 + 12 * loads.loads.len());
@@ -541,10 +626,11 @@ fn serve_shard_conn(
                     reply.extend_from_slice(&slot.to_le_bytes());
                     reply.extend_from_slice(&m.to_le_bytes());
                 }
-                write_msg(&mut stream, &reply)?;
+                out.send(stream, &reply);
             }
             k => bail!("unknown shard request kind {k}"),
         }
+        Ok(())
     }
 }
 
@@ -559,21 +645,40 @@ pub(crate) enum ShardSyncResp {
     Rerouted { epoch: u64 },
 }
 
-/// Client side of one shard endpoint connection (used inside the
-/// router's `ShardConn::Tcp` pools; verified against the expected shard
-/// id at connect time so a mis-wired topology fails loudly).
+/// Client side of one logical stream to a shard endpoint (used inside
+/// the router's `ShardConn::Tcp` pools; verified against the expected
+/// shard id at connect time so a mis-wired topology fails loudly).
+///
+/// A pool's slots share one socket: each slot is a `ShardWire` view onto
+/// the endpoint's shared [`MuxCore`] with its own stream id, so slot k's
+/// request/reply window never blocks slot j's. A dead socket fails every
+/// slot; each slot's `Reconnector` redials through [`Self::connect`],
+/// which revives the shared core once and reattaches the other slots to
+/// it as they retry.
 pub struct ShardWire {
-    stream: TcpStream,
+    core: Arc<MuxCore>,
+    stream: u32,
     shard_id: u32,
 }
 
 impl ShardWire {
-    pub(crate) fn connect(addr: &str, expect_id: u32, expect_n: u32) -> Result<ShardWire> {
-        let mut stream = TcpStream::connect(addr)
-            .with_context(|| format!("connecting to ps shard {expect_id} at {addr}"))?;
-        stream.set_nodelay(true).ok();
-        write_msg(&mut stream, &[KIND_HELLO])?;
-        let reply = read_msg(&mut stream)?.context("shard endpoint closed during hello")?;
+    /// Attach stream `stream` to the endpoint's shared socket (dialing a
+    /// fresh one if `slot` holds none, or a dead one), then hello on the
+    /// stream to verify the peer's identity.
+    pub(crate) fn connect(
+        addr: &str,
+        expect_id: u32,
+        expect_n: u32,
+        stream: u32,
+        slot: &MuxSlot,
+    ) -> Result<ShardWire> {
+        let core = crate::util::net::mux_connect(slot, || {
+            let s = TcpStream::connect(addr)
+                .with_context(|| format!("connecting to ps shard {expect_id} at {addr}"))?;
+            s.set_nodelay(true).ok();
+            MuxCore::new(s)
+        })?;
+        let reply = core.call(stream, &[KIND_HELLO])?;
         let mut c = Cursor::new(&reply);
         let shard_id = c.u32()?;
         let n_shards = c.u32()?;
@@ -582,7 +687,17 @@ impl ShardWire {
                 "shard endpoint {addr} is shard {shard_id}/{n_shards}, expected {expect_id}/{expect_n}"
             );
         }
-        Ok(ShardWire { stream, shard_id })
+        Ok(ShardWire { core, stream, shard_id })
+    }
+
+    /// Fresh single-stream connection (control paths and tests that talk
+    /// to one endpoint directly, outside a pool).
+    pub(crate) fn dial(addr: &str, expect_id: u32, expect_n: u32) -> Result<ShardWire> {
+        Self::connect(addr, expect_id, expect_n, 0, &mux_slot())
+    }
+
+    fn call(&self, msg: &[u8]) -> Result<Vec<u8>> {
+        self.core.call(self.stream, msg)
     }
 
     /// Write a shard-sync request stamped with the sender's placement
@@ -602,12 +717,12 @@ impl ShardWire {
         for (fid, st) in entries {
             put_stats(&mut msg, *fid, st);
         }
-        write_msg(&mut self.stream, &msg)
+        self.core.send(self.stream, &msg)
     }
 
     /// Read the reply to the last [`send_sync`](Self::send_sync).
     pub(crate) fn recv_sync(&mut self) -> Result<ShardSyncResp> {
-        let reply = read_msg(&mut self.stream)?.context("shard endpoint closed on sync")?;
+        let reply = self.core.recv(self.stream)?;
         let mut c = Cursor::new(&reply);
         match c.u8()? {
             STATUS_OK => {
@@ -624,10 +739,10 @@ impl ShardWire {
         }
     }
 
-    /// Fetch this shard's partial snapshot (function count + load).
+    /// Fetch this shard's partial snapshot (function count + load +
+    /// transport health).
     pub(crate) fn snapshot(&mut self) -> Result<super::VizSnapshot> {
-        write_msg(&mut self.stream, &[KIND_SHARD_SNAPSHOT])?;
-        let reply = read_msg(&mut self.stream)?.context("shard endpoint closed on snapshot")?;
+        let reply = self.call(&[KIND_SHARD_SNAPSHOT])?;
         let mut c = Cursor::new(&reply);
         let functions = c.u64()?;
         let syncs = c.u64()?;
@@ -635,10 +750,21 @@ impl ShardWire {
         let shard = c.u32()?;
         let epoch = c.u64()?;
         let slots = c.u32()?;
+        // Trailing transport counters: absent from pre-reactor peers.
+        let shed = c.u64().unwrap_or(0);
+        let queue_depth = c.u64().unwrap_or(0);
         Ok(super::VizSnapshot {
             functions_tracked: functions,
             placement_epoch: epoch,
-            shard_loads: vec![super::ShardLoad { shard, syncs, merges, functions, slots }],
+            shard_loads: vec![super::ShardLoad {
+                shard,
+                syncs,
+                merges,
+                functions,
+                slots,
+                shed,
+                queue_depth,
+            }],
             ..super::VizSnapshot::default()
         })
     }
@@ -649,8 +775,7 @@ impl ShardWire {
         let mut msg = Vec::with_capacity(1040);
         msg.push(KIND_MIGRATE);
         placement.encode(&mut msg);
-        write_msg(&mut self.stream, &msg)?;
-        let reply = read_msg(&mut self.stream)?.context("shard endpoint closed on migrate")?;
+        let reply = self.call(&msg)?;
         read_keyed_entries(&mut Cursor::new(&reply))
     }
 
@@ -660,8 +785,7 @@ impl ShardWire {
         let mut msg = Vec::with_capacity(5 + 48 * entries.len());
         msg.push(KIND_INSTALL);
         put_keyed_entries(&mut msg, entries);
-        write_msg(&mut self.stream, &msg)?;
-        let reply = read_msg(&mut self.stream)?.context("shard endpoint closed on install")?;
+        let reply = self.call(&msg)?;
         let mut c = Cursor::new(&reply);
         anyhow::ensure!(c.u8()? == 1, "install not acknowledged");
         Ok(())
@@ -669,8 +793,7 @@ impl ShardWire {
 
     /// Cumulative per-slot merge counters (the rebalancer's skew signal).
     pub(crate) fn slot_loads(&mut self) -> Result<ShardSlotLoads> {
-        write_msg(&mut self.stream, &[KIND_SLOT_LOADS])?;
-        let reply = read_msg(&mut self.stream)?.context("shard endpoint closed on slot loads")?;
+        let reply = self.call(&[KIND_SLOT_LOADS])?;
         let mut c = Cursor::new(&reply);
         let shard = c.u32()?;
         let epoch = c.u64()?;
@@ -688,7 +811,7 @@ impl ShardWire {
         let mut msg = Vec::with_capacity(9);
         msg.push(KIND_VERSION_PUSH);
         msg.extend_from_slice(&version.to_le_bytes());
-        write_msg(&mut self.stream, &msg)
+        self.core.send(self.stream, &msg)
     }
 
     pub(crate) fn shard_id(&self) -> u32 {
@@ -705,6 +828,8 @@ pub(crate) enum GroupedResp {
 
 /// Client side of one front-end connection (hello/topology + placement,
 /// reports, gated event fetches, grouped degenerate syncs, stats).
+/// Single logical stream: the front-end window is request/reply, so it
+/// stays on the plain stream-0 [`write_msg`]/[`read_msg`] path.
 pub struct AggWire {
     stream: TcpStream,
     n_shards: usize,
@@ -861,9 +986,10 @@ impl PsClient {
         Self::connect_with_pool(addr, 1)
     }
 
-    /// [`Self::connect`] with `pool` TCP connections per shard endpoint
+    /// [`Self::connect`] with `pool` logical streams per shard endpoint
     /// (syncs pick `rank % pool`, so ranks sharing one client do not
-    /// serialize behind a single write→read window per shard).
+    /// serialize behind a single request/reply window per shard). The
+    /// streams multiplex over **one socket per endpoint**.
     pub fn connect_with_pool(addr: &str, pool: usize) -> Result<PsClient> {
         let wire = AggWire::connect(addr)?;
         let n = wire.n_shards();
@@ -880,13 +1006,18 @@ impl PsClient {
             let mut conns = Vec::with_capacity(n);
             for (i, a) in addrs.iter().enumerate() {
                 let (id, total) = (i as u32, n as u32);
-                let mut slots = vec![Mutex::new(Reconnector::connected(a, move |x: &str| {
-                    ShardWire::connect(x, id, total)
-                })?)];
-                for _ in 1..pool {
-                    slots.push(Mutex::new(Reconnector::new(a, move |x: &str| {
-                        ShardWire::connect(x, id, total)
-                    })));
+                // One shared socket per endpoint; each pool slot is a
+                // stream view, and redials converge on the shared slot.
+                let shared = mux_slot();
+                let mut slots = Vec::with_capacity(pool);
+                for k in 0..pool as u32 {
+                    let slot = shared.clone();
+                    let dial = move |x: &str| ShardWire::connect(x, id, total, k, &slot);
+                    slots.push(Mutex::new(if k == 0 {
+                        Reconnector::connected(a, dial)?
+                    } else {
+                        Reconnector::new(a, dial)
+                    }));
                 }
                 conns.push(ShardConn::Tcp(slots));
             }
@@ -953,7 +1084,6 @@ impl NetPsClient {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::io::Write;
 
     fn stats_of(values: &[f64]) -> StatsTable {
         let mut t = StatsTable::new();
@@ -1108,11 +1238,10 @@ mod tests {
     fn malformed_frame_drops_connection_not_server() {
         let (client, handle) = super::super::spawn(2, None, usize::MAX >> 1, 1);
         let srv = PsTcpServer::start("127.0.0.1:0", client.clone()).unwrap();
-        // Send junk.
+        // A well-framed message with a garbage request kind.
         let mut s = TcpStream::connect(srv.addr()).unwrap();
-        s.write_all(&5u32.to_le_bytes()).unwrap();
-        s.write_all(&[0xFF; 5]).unwrap();
-        s.flush().unwrap();
+        write_msg(&mut s, &[0xFF; 5]).unwrap();
+        assert!(read_msg(&mut s).unwrap().is_none(), "junk drops the connection");
         drop(s);
         // Server still serves a good client afterwards.
         let mut net = NetPsClient::connect(srv.addr()).unwrap();
@@ -1201,8 +1330,8 @@ mod tests {
         // history at the new epoch.
         let s0 = PsShardTcpServer::spawn_standalone("127.0.0.1:0", 0, 2).unwrap();
         let s1 = PsShardTcpServer::spawn_standalone("127.0.0.1:0", 1, 2).unwrap();
-        let mut w0 = ShardWire::connect(&s0.addr().to_string(), 0, 2).unwrap();
-        let mut w1 = ShardWire::connect(&s1.addr().to_string(), 1, 2).unwrap();
+        let mut w0 = ShardWire::dial(&s0.addr().to_string(), 0, 2).unwrap();
+        let mut w1 = ShardWire::dial(&s1.addr().to_string(), 1, 2).unwrap();
         let fid = (0..256u32).find(|&f| super::super::shard_of(0, f, 2) == 0).unwrap();
         let mut st = RunStats::new();
         st.push(5.0);
@@ -1258,7 +1387,7 @@ mod tests {
     fn standalone_shard_server_round_trip() {
         let srv = PsShardTcpServer::spawn_standalone("127.0.0.1:0", 0, 1).unwrap();
         let addr = srv.addr().to_string();
-        let mut w = ShardWire::connect(&addr, 0, 1).unwrap();
+        let mut w = ShardWire::dial(&addr, 0, 1).unwrap();
         assert_eq!(w.shard_id(), 0);
         let mut st = RunStats::new();
         st.push(5.0);
@@ -1291,7 +1420,7 @@ mod tests {
             ShardSyncResp::Ok { .. } => panic!("stale epoch must bounce"),
         }
         // Snapshot carries the load counters (the bounced frame did not
-        // count or merge).
+        // count or merge) plus transport health (nothing shed here).
         let snap = w.snapshot().unwrap();
         assert_eq!(snap.functions_tracked, 1);
         assert_eq!(snap.placement_epoch, 0);
@@ -1299,12 +1428,110 @@ mod tests {
         assert_eq!(snap.shard_loads[0].syncs, 2);
         assert_eq!(snap.shard_loads[0].merges, 2);
         assert_eq!(snap.shard_loads[0].slots as usize, crate::placement::SLOTS);
+        assert_eq!(snap.shard_loads[0].shed, 0);
         // Per-slot counters surface through the wire too.
         let loads = w.slot_loads().unwrap();
         assert_eq!(loads.shard, 0);
         assert_eq!(loads.loads.len(), 1, "one touched slot");
         assert_eq!(loads.loads[0].1, 2);
         // Mismatched hello expectations fail loudly.
-        assert!(ShardWire::connect(&addr, 1, 2).is_err());
+        assert!(ShardWire::dial(&addr, 1, 2).is_err());
+    }
+
+    #[test]
+    fn pool_slots_multiplex_one_socket_per_endpoint() {
+        // A pooled routed client against real shard endpoints: the pool's
+        // slots are streams over one socket per endpoint, and a pooled
+        // sync still reunites the reply.
+        let (client, handle) = super::super::spawn(2, None, usize::MAX >> 1, 4);
+        let shard_srvs = handle.serve_shard_endpoints().unwrap();
+        let addrs: Vec<String> = shard_srvs.iter().map(|s| s.addr().to_string()).collect();
+        let front =
+            PsTcpServer::start_with_topology("127.0.0.1:0", client.clone(), addrs).unwrap();
+        let routed = PsClient::connect_with_pool(&front.addr().to_string(), 4).unwrap();
+        let mut delta = StatsTable::new();
+        for fid in 0..32u32 {
+            delta.push(fid, fid as f64 + 1.0);
+        }
+        // Ranks land on different pool slots (rank % pool) but share the
+        // endpoint sockets.
+        let mut joins = Vec::new();
+        for rank in 0..8u32 {
+            let cl = routed.clone();
+            let d = delta.clone();
+            joins.push(std::thread::spawn(move || {
+                let (global, _) = cl.sync(0, rank, &d);
+                assert_eq!(global.len(), 32);
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        // One socket per endpoint despite 4 pool slots × 8 ranks.
+        for s in &shard_srvs {
+            assert_eq!(
+                s.net_stats().accepted.load(Ordering::Relaxed),
+                1,
+                "pool slots must share the endpoint socket"
+            );
+        }
+        let (global, _) = routed.sync(0, 0, &delta);
+        assert_eq!(global.get(3).unwrap().count(), 9);
+        drop(front);
+        drop(shard_srvs);
+        client.shutdown();
+        let fin = handle.join();
+        assert_eq!(fin.global_len(), 32);
+    }
+
+    #[test]
+    fn flooded_shard_endpoint_sheds_but_still_serves() {
+        // Tiny reply-backlog bound: a client that never drains replies
+        // must trip admission control (Busy + shed counter) without
+        // degrading a well-behaved client on the same endpoint.
+        let opts = ReactorOpts::new(1, 32 * 1024, 1 << 30);
+        let srv =
+            PsShardTcpServer::spawn_standalone_with_opts("127.0.0.1:0", 0, 1, opts).unwrap();
+        let addr = srv.addr().to_string();
+        let mut flood = TcpStream::connect(&addr).unwrap();
+        // Each frame's reply echoes ~2048 stat entries (~90 KiB); 256
+        // frames ≈ 23 MiB of replies — far past what the kernel's socket
+        // buffers can cushion for a reader that never reads.
+        let mut st = RunStats::new();
+        st.push(1.0);
+        let mut msg = vec![KIND_SHARD_SYNC];
+        msg.extend_from_slice(&0u32.to_le_bytes()); // app
+        msg.extend_from_slice(&0u64.to_le_bytes()); // epoch (current)
+        msg.extend_from_slice(&2048u32.to_le_bytes());
+        for fid in 0..2048u32 {
+            put_stats(&mut msg, fid, &st);
+        }
+        for _ in 0..256 {
+            if write_msg(&mut flood, &msg).is_err() {
+                break; // server may sever us under the hard bound — fine
+            }
+        }
+        let stats = srv.net_stats();
+        let t0 = std::time::Instant::now();
+        while stats.shed_count() == 0 && t0.elapsed() < std::time::Duration::from_secs(10) {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert!(stats.shed_count() > 0, "non-draining flood must be shed");
+        // A well-behaved client still gets exact service.
+        let mut w = ShardWire::dial(&addr, 0, 1).unwrap();
+        let mut fresh = RunStats::new();
+        fresh.push(5.0);
+        w.send_sync(0, 0, &[(100_000, fresh)]).unwrap();
+        match w.recv_sync().unwrap() {
+            ShardSyncResp::Ok { entries, .. } => {
+                let e = entries.iter().find(|(fid, _)| *fid == 100_000).expect("merged entry");
+                assert_eq!(e.1.count(), 1);
+            }
+            ShardSyncResp::Rerouted { .. } => panic!("well-behaved sync must be served"),
+        }
+        // And the snapshot surfaces the shed count over the wire.
+        let snap = w.snapshot().unwrap();
+        assert!(snap.shard_loads[0].shed > 0, "snapshot must carry the shed counter");
+        drop(flood);
     }
 }

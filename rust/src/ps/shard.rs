@@ -765,6 +765,7 @@ impl PsHandle {
             shard as u32,
             self.shard_txs.len() as u32,
             self.version.clone(),
+            crate::util::net::ReactorOpts::default(),
         )
     }
 
@@ -1345,6 +1346,10 @@ pub(crate) fn run_shard(
                         merges,
                         functions: table.len() as u64,
                         slots: placement.slots_of_shard(shard_id).len() as u32,
+                        // In-process shard: no transport between client
+                        // and shard, so nothing is ever shed or queued.
+                        shed: 0,
+                        queue_depth: 0,
                     }],
                     ..VizSnapshot::default()
                 });

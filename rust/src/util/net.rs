@@ -1,37 +1,302 @@
 //! Shared TCP transport substrate for the service front-ends
 //! ([`ps::net`](crate::ps::net), [`provdb::net`](crate::provdb::net), the
-//! viz HTTP server) — the accept loop every server used to hand-roll, and
-//! the auto-reconnect/backoff connection wrapper every long-lived client
-//! used to lack.
+//! viz HTTP server): a poll(2)-driven **reactor** on the server side and
+//! the auto-reconnect/backoff + connection-multiplexing wrappers on the
+//! client side.
 //!
-//! * [`serve_tcp`] — bind, accept on a named thread, one handler thread
-//!   per connection, cooperative shutdown via [`TcpServerHandle`].
+//! * [`serve_reactor`] — bind, then drive every connection from a small
+//!   fixed pool of event-loop threads ([`ReactorOpts::threads`], not one
+//!   thread per client): nonblocking sockets, readiness from `poll(2)`
+//!   (idle loops **block** — no sleep-polling), per-connection read/write
+//!   buffer state machines, cooperative shutdown via [`TcpServerHandle`].
+//!   A [`ConnDriver`] consumes raw bytes (the viz HTTP server); framed
+//!   protocols layer a [`FrameHandler`] on top via [`serve_frames`],
+//!   which parses [`wire`](crate::util::wire) frames, multiplexes logical
+//!   streams, and applies **admission control**: a connection whose reply
+//!   backlog exceeds [`ReactorOpts::conn_queue_bytes`] (or a server whose
+//!   total backlog exceeds [`ReactorOpts::server_queue_bytes`]) answers
+//!   further requests with a `Busy` control frame instead of queueing
+//!   unboundedly, and the shed is counted on [`NetStats`].
 //! * [`Reconnector`] — wraps a connection `C` plus the recipe to redial
 //!   it. A failed operation drops the connection; the next use redials
-//!   after a capped exponential cooldown, so one peer restart never
-//!   permanently strands a client (previously `NetPsClient` died on the
-//!   first dropped connection while the viz `ProvSource` hand-rolled the
-//!   same retry loop).
+//!   after a capped, **jittered** exponential cooldown, so one peer
+//!   restart never permanently strands a client and mass-shed clients do
+//!   not reconnect in synchronized waves.
+//! * [`MuxCore`] — the client half of stream multiplexing: several
+//!   logical request/reply streams (a driver's conn-pool slots) share
+//!   one socket, with replies demultiplexed to the stream that asked.
 //!
 //! Framing stays in [`wire`](crate::util::wire); this module is about
-//! connection lifecycle.
+//! connection lifecycle and scheduling.
 
+use crate::util::wire;
 use anyhow::{bail, Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
-/// Handle to a running accept loop; [`stop`](Self::stop) (or drop) shuts
-/// the listener down **and severs every live connection** (so stopping a
-/// server actually looks like a killed process to its peers — the
-/// behaviour the reconnect tests rely on). Handler threads then see EOF
-/// and finish on their own.
+// ---------------------------------------------------------------------------
+// poll(2) / setrlimit(2) via hand-declared FFI (the offline registry carries
+// no libc crate; these are the only two syscall surfaces the reactor needs).
+
+#[repr(C)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+#[repr(C)]
+struct RLimit {
+    cur: u64,
+    max: u64,
+}
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+    fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+    fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+}
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+const RLIMIT_NOFILE: i32 = 7;
+
+/// Best-effort raise of the open-file soft limit to `min(hard, want)`.
+/// The 10k-connection sweep needs ~2 fds per client; default soft limits
+/// (often 1024) would otherwise cap the experiment. Returns the soft
+/// limit in effect afterwards.
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    let mut lim = RLimit { cur: 0, max: 0 };
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
+        return 0;
+    }
+    let target = want.min(lim.max);
+    if target > lim.cur {
+        let new = RLimit { cur: target, max: lim.max };
+        if unsafe { setrlimit(RLIMIT_NOFILE, &new) } == 0 {
+            return target;
+        }
+    }
+    lim.cur
+}
+
+// ---------------------------------------------------------------------------
+// Reactor configuration and counters.
+
+/// Reactor sizing and backpressure bounds. All servers share the same
+/// knobs (`[net]` config section: `net.reactor_threads`,
+/// `net.conn_queue_bytes`, `net.server_queue_bytes`).
+#[derive(Clone, Copy, Debug)]
+pub struct ReactorOpts {
+    /// Event-loop threads per server. Thread 0 owns the listener;
+    /// accepted connections round-robin across loops.
+    pub threads: usize,
+    /// Soft per-connection reply-backlog bound, bytes: above this, new
+    /// requests on the connection are shed with a `Busy` control frame
+    /// instead of being processed.
+    pub conn_queue_bytes: usize,
+    /// Hard per-connection bound, bytes: a backlog above this drops the
+    /// connection outright (counted in [`NetStats::dropped`]). Sized so
+    /// a single maximal reply to a merely-slow reader never trips it.
+    pub conn_hard_bytes: usize,
+    /// Server-wide reply-backlog budget, bytes, summed across
+    /// connections: above this every connection sheds until the backlog
+    /// drains.
+    pub server_queue_bytes: usize,
+}
+
+impl ReactorOpts {
+    /// Build from the config-surfaced knobs; the hard per-connection
+    /// bound is derived (soft bound, plus one maximal message, plus the
+    /// soft bound again as slack for `Busy` frames).
+    pub fn new(threads: usize, conn_queue_bytes: usize, server_queue_bytes: usize) -> ReactorOpts {
+        ReactorOpts {
+            threads: threads.max(1),
+            conn_queue_bytes,
+            conn_hard_bytes: conn_queue_bytes * 2 + wire::MAX_MSG,
+            server_queue_bytes,
+        }
+    }
+}
+
+impl Default for ReactorOpts {
+    fn default() -> ReactorOpts {
+        ReactorOpts::new(2, 1 << 20, 64 << 20)
+    }
+}
+
+/// Monotonic transport counters for one server, shared between the event
+/// loops and whoever surfaces them (`/api/ps_stats`, provDB stats, the
+/// connection sweep). Created by the *caller* of [`serve_reactor`] /
+/// [`serve_frames`] so protocol handlers can stamp them into replies.
+#[derive(Debug, Default)]
+pub struct NetStats {
+    /// Connections accepted / closed over the server's lifetime.
+    pub accepted: AtomicU64,
+    pub closed: AtomicU64,
+    /// Frames parsed in / written out ([`serve_frames`] servers only).
+    pub frames_in: AtomicU64,
+    pub frames_out: AtomicU64,
+    /// Requests answered with `Busy` instead of being processed.
+    pub shed: AtomicU64,
+    /// Connections dropped for exceeding the hard backlog bound.
+    pub dropped: AtomicU64,
+    /// Current unflushed reply bytes summed across connections (gauge).
+    pub queue_bytes: AtomicU64,
+    /// High-water mark of `queue_bytes`.
+    pub queue_peak: AtomicU64,
+    /// poll(2) returns across all loops — a blocked idle server holds
+    /// this flat (the regression guard for the old 5 ms sleep-poll).
+    pub wakeups: AtomicU64,
+    /// Event-loop thread count (fixed at serve time).
+    pub reactor_threads: AtomicU64,
+}
+
+impl NetStats {
+    pub fn new() -> Arc<NetStats> {
+        Arc::new(NetStats::default())
+    }
+
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn dropped_count(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Current server-wide reply backlog, bytes.
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_bytes.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Drivers: per-connection protocol state machines.
+
+/// Per-connection byte-level protocol driver. The reactor calls
+/// [`on_data`](Self::on_data) after appending newly-read bytes to
+/// `inbuf`; the driver consumes what it can parse (draining the
+/// consumed prefix) and appends reply bytes to `out`, which the reactor
+/// flushes as the socket allows. Return `false` to close the connection
+/// once `out` has flushed.
+pub trait ConnDriver: Send {
+    fn on_data(&mut self, inbuf: &mut Vec<u8>, out: &mut Vec<u8>) -> bool;
+}
+
+/// Frame-level protocol handler layered over [`FrameDriver`] by
+/// [`serve_frames`]: one call per complete, admitted wire frame. Replies
+/// go through the [`FrameSink`], tagged with the stream they answer.
+/// Return `false` to drop the connection (malformed input).
+pub trait FrameHandler: Send {
+    fn on_frame(&mut self, stream: u32, payload: &[u8], out: &mut FrameSink) -> bool;
+}
+
+/// Reply sink handed to [`FrameHandler::on_frame`]; frames are queued on
+/// the connection's write buffer and counted.
+pub struct FrameSink<'a> {
+    out: &'a mut Vec<u8>,
+    frames_out: &'a AtomicU64,
+}
+
+impl FrameSink<'_> {
+    /// Queue one reply frame on `stream`.
+    pub fn send(&mut self, stream: u32, payload: &[u8]) {
+        self.frames_out.fetch_add(1, Ordering::Relaxed);
+        push_frame(self.out, stream, payload);
+    }
+}
+
+/// Append one wire frame to a buffer (the buffered-writer twin of
+/// [`wire::write_frame`]).
+fn push_frame(out: &mut Vec<u8>, stream: u32, payload: &[u8]) {
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&stream.to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+/// [`ConnDriver`] adapter that parses wire frames, enforces admission
+/// control (shedding with `Busy` when the connection or server backlog
+/// bound is exceeded), and dispatches admitted frames to a
+/// [`FrameHandler`].
+pub struct FrameDriver<H: FrameHandler> {
+    handler: H,
+    stats: Arc<NetStats>,
+    opts: ReactorOpts,
+}
+
+impl<H: FrameHandler> FrameDriver<H> {
+    pub fn new(handler: H, stats: Arc<NetStats>, opts: ReactorOpts) -> FrameDriver<H> {
+        FrameDriver { handler, stats, opts }
+    }
+}
+
+impl<H: FrameHandler> ConnDriver for FrameDriver<H> {
+    fn on_data(&mut self, inbuf: &mut Vec<u8>, out: &mut Vec<u8>) -> bool {
+        let mut consumed = 0usize;
+        let mut keep = true;
+        while keep && inbuf.len() - consumed >= wire::FRAME_HEADER {
+            let len =
+                u32::from_le_bytes(inbuf[consumed..consumed + 4].try_into().expect("4 bytes"))
+                    as usize;
+            if len > wire::MAX_MSG {
+                keep = false;
+                break;
+            }
+            let stream = u32::from_le_bytes(
+                inbuf[consumed + 4..consumed + 8].try_into().expect("4 bytes"),
+            );
+            if inbuf.len() - consumed - wire::FRAME_HEADER < len {
+                break; // incomplete frame; wait for more bytes
+            }
+            let start = consumed + wire::FRAME_HEADER;
+            consumed = start + len;
+            if stream & wire::CTRL_BIT != 0 {
+                keep = false; // control frames are server-to-client only
+                break;
+            }
+            self.stats.frames_in.fetch_add(1, Ordering::Relaxed);
+            let over_conn = out.len() > self.opts.conn_queue_bytes;
+            let over_server = self.stats.queue_bytes.load(Ordering::Relaxed)
+                > self.opts.server_queue_bytes as u64;
+            if over_conn || over_server {
+                self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                push_frame(out, stream | wire::CTRL_BIT, &[wire::CTRL_BUSY]);
+                continue;
+            }
+            let payload = &inbuf[start..start + len];
+            let mut sink = FrameSink { out, frames_out: &self.stats.frames_out };
+            keep = self.handler.on_frame(stream, payload, &mut sink);
+        }
+        inbuf.drain(..consumed);
+        keep
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The reactor itself.
+
+/// Handle to a running reactor server; [`stop`](Self::stop) (or drop)
+/// shuts the listener down **and severs every live connection** (so
+/// stopping a server actually looks like a killed process to its peers —
+/// the behaviour the reconnect tests rely on), then joins the event-loop
+/// threads. The port is free for rebinding when `stop` returns.
 pub struct TcpServerHandle {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    conns: Arc<std::sync::Mutex<std::collections::HashMap<u64, TcpStream>>>,
-    join: Option<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    stats: Arc<NetStats>,
+    wakers: Vec<UnixStream>,
+    joins: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl TcpServerHandle {
@@ -40,14 +305,22 @@ impl TcpServerHandle {
         self.addr
     }
 
-    /// Stop accepting, sever live connections, and join the accept
-    /// thread. The port is free for rebinding when this returns.
+    /// The server's transport counters.
+    pub fn stats(&self) -> &Arc<NetStats> {
+        &self.stats
+    }
+
+    /// Stop accepting, sever live connections, and join the event-loop
+    /// threads. The port is free for rebinding when this returns.
     pub fn stop(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
+        for w in &mut self.wakers {
+            let _ = w.write(&[1u8]);
+        }
         for (_, s) in self.conns.lock().expect("conn registry lock").iter() {
             let _ = s.shutdown(std::net::Shutdown::Both);
         }
-        if let Some(j) = self.join.take() {
+        for j in self.joins.drain(..) {
             let _ = j.join();
         }
     }
@@ -59,58 +332,497 @@ impl Drop for TcpServerHandle {
     }
 }
 
-/// Bind `addr` and serve connections: the accept loop runs on a thread
-/// named `name`, and each accepted stream is handed to `handler` on its
-/// own thread (thread-per-connection, matching every front-end here).
-pub fn serve_tcp(
+/// Bind `addr` and serve connections on [`ReactorOpts::threads`]
+/// event-loop threads named `name-<i>`. Each accepted connection gets a
+/// fresh driver from `factory` and lives on one loop for its lifetime.
+/// `stats` is caller-created so protocol handlers can surface it.
+pub fn serve_reactor(
     name: &str,
     addr: &str,
-    handler: impl Fn(TcpStream) + Send + Sync + 'static,
+    opts: ReactorOpts,
+    stats: Arc<NetStats>,
+    factory: impl Fn() -> Box<dyn ConnDriver> + Send + Sync + 'static,
 ) -> Result<TcpServerHandle> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     listener.set_nonblocking(true)?;
     let local = listener.local_addr()?;
+    let threads = opts.threads.max(1);
+    stats.reactor_threads.store(threads as u64, Ordering::Relaxed);
     let stop = Arc::new(AtomicBool::new(false));
-    let conns: Arc<std::sync::Mutex<std::collections::HashMap<u64, TcpStream>>> =
-        Arc::new(std::sync::Mutex::new(std::collections::HashMap::new()));
-    let stop2 = stop.clone();
-    let conns2 = conns.clone();
-    let handler = Arc::new(handler);
-    let join = std::thread::Builder::new()
-        .name(name.to_string())
-        .spawn(move || {
-            let mut next_id = 0u64;
-            while !stop2.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let h = handler.clone();
-                        // Register a clone so stop() can sever the
-                        // connection; the handler wrapper deregisters on
-                        // completion, keeping the registry bounded by
-                        // *live* connections.
+    let registry: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
+    let factory: Arc<dyn Fn() -> Box<dyn ConnDriver> + Send + Sync> = Arc::new(factory);
+
+    // One self-wake pipe + injection queue per loop; thread 0 keeps write
+    // ends for all of them to hand off accepted connections.
+    let mut wakers = Vec::with_capacity(threads);
+    let mut mates = Vec::with_capacity(threads);
+    let mut loop_ends = Vec::with_capacity(threads);
+    for _ in 0..threads {
+        let (tx, rx) = UnixStream::pair().context("reactor wake pipe")?;
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        let inject: Arc<Mutex<Vec<(u64, TcpStream)>>> = Arc::new(Mutex::new(Vec::new()));
+        mates.push((inject.clone(), tx.try_clone().context("waker clone")?));
+        wakers.push(tx);
+        loop_ends.push((rx, inject));
+    }
+
+    let mut listener = Some(listener);
+    let mut mates = Some(mates);
+    let mut joins = Vec::with_capacity(threads);
+    for (t, (wake_rx, inject)) in loop_ends.into_iter().enumerate() {
+        let lst = if t == 0 { listener.take() } else { None };
+        let my_mates = if t == 0 { mates.take().expect("mates for loop 0") } else { Vec::new() };
+        let stop = stop.clone();
+        let stats = stats.clone();
+        let registry = registry.clone();
+        let factory = factory.clone();
+        joins.push(
+            std::thread::Builder::new().name(format!("{name}-{t}")).spawn(move || {
+                event_loop(EventLoop {
+                    me: t,
+                    threads,
+                    stop,
+                    stats,
+                    registry,
+                    wake_rx,
+                    inject,
+                    listener: lst,
+                    mates: my_mates,
+                    factory,
+                    opts,
+                })
+            })?,
+        );
+    }
+    Ok(TcpServerHandle { addr: local, stop, conns: registry, stats, wakers, joins })
+}
+
+/// [`serve_reactor`] for framed protocols: each connection gets a fresh
+/// [`FrameHandler`] from `factory`, wrapped in the admission-controlled
+/// [`FrameDriver`].
+pub fn serve_frames<H: FrameHandler + 'static>(
+    name: &str,
+    addr: &str,
+    opts: ReactorOpts,
+    stats: Arc<NetStats>,
+    factory: impl Fn() -> H + Send + Sync + 'static,
+) -> Result<TcpServerHandle> {
+    let fstats = stats.clone();
+    serve_reactor(name, addr, opts, stats, move || {
+        Box::new(FrameDriver::new(factory(), fstats.clone(), opts))
+    })
+}
+
+/// One connection's state on its event loop.
+struct Conn {
+    id: u64,
+    stream: TcpStream,
+    driver: Box<dyn ConnDriver>,
+    inbuf: Vec<u8>,
+    out: Vec<u8>,
+    out_pos: usize,
+    /// No further reads; flush `out`, then close.
+    closing: bool,
+    /// Backlog bytes currently counted in the server-wide gauge.
+    charged: usize,
+}
+
+impl Conn {
+    fn new(id: u64, stream: TcpStream, driver: Box<dyn ConnDriver>) -> Conn {
+        Conn {
+            id,
+            stream,
+            driver,
+            inbuf: Vec::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            closing: false,
+            charged: 0,
+        }
+    }
+
+    fn backlog(&self) -> usize {
+        self.out.len() - self.out_pos
+    }
+}
+
+struct EventLoop {
+    me: usize,
+    threads: usize,
+    stop: Arc<AtomicBool>,
+    stats: Arc<NetStats>,
+    registry: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    wake_rx: UnixStream,
+    inject: Arc<Mutex<Vec<(u64, TcpStream)>>>,
+    listener: Option<TcpListener>,
+    /// Loop 0 only: every loop's (injection queue, waker) for round-robin
+    /// connection hand-off.
+    mates: Vec<(Arc<Mutex<Vec<(u64, TcpStream)>>>, UnixStream)>,
+    factory: Arc<dyn Fn() -> Box<dyn ConnDriver> + Send + Sync>,
+    opts: ReactorOpts,
+}
+
+fn event_loop(mut lp: EventLoop) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut pollfds: Vec<PollFd> = Vec::new();
+    let mut scratch = vec![0u8; 64 * 1024];
+    let mut next_id: u64 = lp.me as u64; // only loop 0 accepts; ids stay unique anyway
+    loop {
+        pollfds.clear();
+        pollfds.push(PollFd { fd: lp.wake_rx.as_raw_fd(), events: POLLIN, revents: 0 });
+        let has_listener = lp.listener.is_some();
+        if let Some(l) = &lp.listener {
+            pollfds.push(PollFd { fd: l.as_raw_fd(), events: POLLIN, revents: 0 });
+        }
+        let base = 1 + usize::from(has_listener);
+        for c in &conns {
+            let mut ev = 0i16;
+            if !c.closing {
+                ev |= POLLIN;
+            }
+            if c.backlog() > 0 {
+                ev |= POLLOUT;
+            }
+            pollfds.push(PollFd { fd: c.stream.as_raw_fd(), events: ev, revents: 0 });
+        }
+        // Block until something is ready — an idle server makes no
+        // syscalls (the accept loop used to sleep-poll every 5 ms).
+        let rc = unsafe { poll(pollfds.as_mut_ptr(), pollfds.len() as u64, -1) };
+        if rc < 0 {
+            if std::io::Error::last_os_error().kind() == std::io::ErrorKind::Interrupted {
+                continue;
+            }
+            break;
+        }
+        lp.stats.wakeups.fetch_add(1, Ordering::Relaxed);
+
+        // 1. Wake pipe: drain it, then honor stop / adopt injected conns.
+        if pollfds[0].revents != 0 {
+            loop {
+                match lp.wake_rx.read(&mut scratch[..64]) {
+                    Ok(n) if n == 64 => {}
+                    _ => break,
+                }
+            }
+        }
+        if lp.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        {
+            let mut q = lp.inject.lock().expect("inject queue");
+            for (id, stream) in q.drain(..) {
+                conns.push(Conn::new(id, stream, (lp.factory)()));
+            }
+        }
+
+        // 2. Listener (loop 0): accept and round-robin across loops.
+        if has_listener && pollfds[1].revents != 0 {
+            loop {
+                let l = lp.listener.as_ref().expect("listener on loop 0");
+                match l.accept() {
+                    Ok((s, _)) => {
+                        let _ = s.set_nonblocking(true);
+                        let _ = s.set_nodelay(true);
                         let id = next_id;
                         next_id += 1;
-                        if let Ok(clone) = stream.try_clone() {
-                            conns2.lock().expect("conn registry lock").insert(id, clone);
+                        lp.stats.accepted.fetch_add(1, Ordering::Relaxed);
+                        if let Ok(clone) = s.try_clone() {
+                            lp.registry.lock().expect("conn registry lock").insert(id, clone);
                         }
-                        let reg = conns2.clone();
-                        std::thread::spawn(move || {
-                            h(stream);
-                            reg.lock().expect("conn registry lock").remove(&id);
-                        });
+                        let target = (id % lp.threads as u64) as usize;
+                        if target == lp.me {
+                            conns.push(Conn::new(id, s, (lp.factory)()));
+                        } else {
+                            let (q, waker) = &mut lp.mates[target];
+                            q.lock().expect("inject queue").push((id, s));
+                            let _ = waker.write(&[1u8]);
+                        }
                     }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_millis(5));
-                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
                     Err(_) => break,
                 }
             }
-        })?;
-    Ok(TcpServerHandle { addr: local, stop, conns, join: Some(join) })
+        }
+
+        // 3. Ready connections: read → drive → flush → account → reap.
+        let mut dead: Vec<usize> = Vec::new();
+        for i in 0..conns.len() {
+            let re = pollfds[base + i].revents;
+            if re == 0 {
+                continue;
+            }
+            let c = &mut conns[i];
+            let mut gone = false;
+            if !c.closing && re & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0 {
+                let mut eof = false;
+                let mut got = false;
+                loop {
+                    match c.stream.read(&mut scratch) {
+                        Ok(0) => {
+                            eof = true;
+                            break;
+                        }
+                        Ok(n) => {
+                            got = true;
+                            c.inbuf.extend_from_slice(&scratch[..n]);
+                            if n < scratch.len() {
+                                break;
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(_) => {
+                            eof = true;
+                            break;
+                        }
+                    }
+                }
+                if got && !c.driver.on_data(&mut c.inbuf, &mut c.out) {
+                    c.closing = true;
+                    c.inbuf.clear();
+                }
+                if eof {
+                    c.closing = true;
+                }
+            }
+            if !flush_out(c) {
+                gone = true;
+            }
+            if c.backlog() > lp.opts.conn_hard_bytes {
+                lp.stats.dropped.fetch_add(1, Ordering::Relaxed);
+                gone = true;
+            }
+            recharge(c, &lp.stats);
+            if c.closing && c.backlog() == 0 {
+                gone = true;
+            }
+            if gone {
+                dead.push(i);
+            }
+        }
+        for &i in dead.iter().rev() {
+            let c = conns.swap_remove(i);
+            close_conn(c, &lp.stats, &lp.registry);
+        }
+    }
+    // Shutdown: sever and account every connection this loop still owns.
+    for c in conns.drain(..) {
+        let _ = c.stream.shutdown(std::net::Shutdown::Both);
+        close_conn(c, &lp.stats, &lp.registry);
+    }
 }
 
+/// Write as much of `out` as the socket accepts; `false` on a fatal
+/// write error. Fully-flushed buffers are reset; large flushed prefixes
+/// are compacted so a long-lived backlog can't pin memory.
+fn flush_out(c: &mut Conn) -> bool {
+    while c.out_pos < c.out.len() {
+        match c.stream.write(&c.out[c.out_pos..]) {
+            Ok(0) => return false,
+            Ok(n) => c.out_pos += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    if c.out_pos >= c.out.len() {
+        c.out.clear();
+        c.out_pos = 0;
+    } else if c.out_pos >= 64 * 1024 {
+        c.out.drain(..c.out_pos);
+        c.out_pos = 0;
+    }
+    true
+}
+
+/// Reconcile the connection's backlog with the server-wide gauge.
+fn recharge(c: &mut Conn, stats: &NetStats) {
+    let backlog = c.backlog();
+    if backlog > c.charged {
+        let grown = (backlog - c.charged) as u64;
+        let now = stats.queue_bytes.fetch_add(grown, Ordering::Relaxed) + grown;
+        stats.queue_peak.fetch_max(now, Ordering::Relaxed);
+    } else if backlog < c.charged {
+        stats.queue_bytes.fetch_sub((c.charged - backlog) as u64, Ordering::Relaxed);
+    }
+    c.charged = backlog;
+}
+
+fn close_conn(mut c: Conn, stats: &NetStats, registry: &Mutex<HashMap<u64, TcpStream>>) {
+    c.out.clear();
+    c.out_pos = 0;
+    recharge(&mut c, stats);
+    stats.closed.fetch_add(1, Ordering::Relaxed);
+    registry.lock().expect("conn registry lock").remove(&c.id);
+}
+
+// ---------------------------------------------------------------------------
+// Client-side stream multiplexing.
+
+/// The shared client half of one multiplexed socket: several logical
+/// streams (a conn-pool's slots) send concurrently under the write lock
+/// and receive via leader/follower demultiplexing — whichever stream's
+/// thread wins the read lock pulls frames, keeping its own and parking
+/// foreign frames for their streams. Protocol layers guarantee at most
+/// one outstanding request per stream (the pool's per-slot mutex), so a
+/// stream's replies can't reorder among themselves.
+pub struct MuxCore {
+    wr: Mutex<TcpStream>,
+    rd: Mutex<TcpStream>,
+    pending: Mutex<HashMap<u32, VecDeque<MuxEvent>>>,
+    cv: Condvar,
+    dead: AtomicBool,
+}
+
+enum MuxEvent {
+    Frame(Vec<u8>),
+    Busy,
+}
+
+impl MuxCore {
+    /// Adopt a freshly-dialed socket.
+    pub fn new(stream: TcpStream) -> Result<Arc<MuxCore>> {
+        let rd = stream.try_clone().context("mux read clone")?;
+        Ok(Arc::new(MuxCore {
+            wr: Mutex::new(stream),
+            rd: Mutex::new(rd),
+            pending: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+            dead: AtomicBool::new(false),
+        }))
+    }
+
+    /// Whether the socket has failed; a dead core is never revived —
+    /// callers redial and replace it.
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Relaxed)
+    }
+
+    fn mark_dead(&self) {
+        self.dead.store(true, Ordering::Relaxed);
+        self.cv.notify_all();
+    }
+
+    /// Send one request frame on `stream`.
+    pub fn send(&self, stream: u32, payload: &[u8]) -> Result<()> {
+        if self.is_dead() {
+            bail!("mux connection is dead");
+        }
+        let mut w = self.wr.lock().expect("mux write lock");
+        match wire::write_frame(&mut *w, stream, payload) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.mark_dead();
+                Err(e)
+            }
+        }
+    }
+
+    /// Receive the next reply for `stream`. A `Busy` control frame for
+    /// this stream becomes an error (the caller's `Reconnector` turns it
+    /// into backoff); EOF or a read error kills the core for all streams.
+    pub fn recv(&self, sid: u32) -> Result<Vec<u8>> {
+        loop {
+            {
+                let mut p = self.pending.lock().expect("mux pending lock");
+                if let Some(ev) = p.get_mut(&sid).and_then(|q| q.pop_front()) {
+                    return deliver(ev, sid);
+                }
+                if self.is_dead() {
+                    bail!("mux connection is dead");
+                }
+            }
+            match self.rd.try_lock() {
+                Ok(mut rd) => {
+                    // Leader: pull exactly one frame, then re-loop (which
+                    // releases the read lock between frames so another
+                    // stream can take over).
+                    let res = wire::read_frame(&mut *rd);
+                    drop(rd);
+                    match res {
+                        Ok(Some((stream, payload))) => {
+                            let (target, ev) = if stream & wire::CTRL_BIT != 0 {
+                                if payload.first() != Some(&wire::CTRL_BUSY) {
+                                    continue; // unknown control frame: ignore
+                                }
+                                (stream & !wire::CTRL_BIT, MuxEvent::Busy)
+                            } else {
+                                (stream, MuxEvent::Frame(payload))
+                            };
+                            if target == sid {
+                                self.cv.notify_all();
+                                return deliver(ev, sid);
+                            }
+                            let mut p = self.pending.lock().expect("mux pending lock");
+                            p.entry(target).or_default().push_back(ev);
+                            drop(p);
+                            self.cv.notify_all();
+                        }
+                        Ok(None) | Err(_) => {
+                            self.mark_dead();
+                            bail!("mux connection closed");
+                        }
+                    }
+                }
+                Err(_) => {
+                    // Follower: wait for the leader to park our frame.
+                    // The timeout is a belt-and-braces retry, not a poll
+                    // cadence — deliveries notify.
+                    let p = self.pending.lock().expect("mux pending lock");
+                    let _ = self
+                        .cv
+                        .wait_timeout(p, Duration::from_millis(20))
+                        .expect("mux pending lock");
+                }
+            }
+        }
+    }
+
+    /// One request/reply round-trip on `stream`.
+    pub fn call(&self, stream: u32, payload: &[u8]) -> Result<Vec<u8>> {
+        self.send(stream, payload)?;
+        self.recv(stream)
+    }
+}
+
+fn deliver(ev: MuxEvent, sid: u32) -> Result<Vec<u8>> {
+    match ev {
+        MuxEvent::Frame(b) => Ok(b),
+        MuxEvent::Busy => bail!("server busy: stream {sid} request shed"),
+    }
+}
+
+/// A registry slot holding the shared socket for one endpoint, so every
+/// pool slot's redial closure can find (or replace) the live [`MuxCore`].
+pub type MuxSlot = Arc<Mutex<Weak<MuxCore>>>;
+
+/// Fresh, empty mux slot.
+pub fn mux_slot() -> MuxSlot {
+    Arc::new(Mutex::new(Weak::new()))
+}
+
+/// Get the endpooint's live shared core, dialing a fresh socket (and
+/// replacing a dead one) if needed. `dial` runs under the slot lock, so
+/// concurrent redials collapse into one socket.
+pub fn mux_connect(slot: &MuxSlot, dial: impl FnOnce() -> Result<Arc<MuxCore>>) -> Result<Arc<MuxCore>> {
+    let mut w = slot.lock().expect("mux slot lock");
+    if let Some(core) = w.upgrade() {
+        if !core.is_dead() {
+            return Ok(core);
+        }
+    }
+    let core = dial()?;
+    *w = Arc::downgrade(&core);
+    Ok(core)
+}
+
+// ---------------------------------------------------------------------------
+// Reconnecting client wrapper.
+
 /// Initial reconnect cooldown after a failure; doubles per consecutive
-/// failure up to [`MAX_BACKOFF`].
+/// failure up to [`MAX_BACKOFF`], then jitters into `[d/2, d]`.
 const INITIAL_BACKOFF: Duration = Duration::from_millis(50);
 const MAX_BACKOFF: Duration = Duration::from_secs(2);
 
@@ -119,7 +831,9 @@ const MAX_BACKOFF: Duration = Duration::from_secs(2);
 /// Operations run through [`with`](Self::with) (or the split
 /// [`get`](Self::get)/[`fail`](Self::fail) pair when a caller pipelines
 /// across several connections): an error drops the connection and starts
-/// a capped exponential cooldown, and the next use redials. Callers
+/// a capped exponential cooldown, and the next use redials. The cooldown
+/// is jittered (uniform in `[d/2, d]`) so thousands of clients shed by
+/// an overloaded server don't redial in synchronized waves. Callers
 /// decide what a failed operation means (the PS router degrades the
 /// affected shard's slice of a reply; the viz layer returns an empty
 /// result) — the wrapper only guarantees the *connection* recovers.
@@ -129,6 +843,7 @@ pub struct Reconnector<C> {
     conn: Option<C>,
     consecutive_failures: u32,
     retry_after: Option<Instant>,
+    jitter: u64,
 }
 
 impl<C> Reconnector<C> {
@@ -140,6 +855,7 @@ impl<C> Reconnector<C> {
             conn: None,
             consecutive_failures: 0,
             retry_after: None,
+            jitter: jitter_seed(addr),
         }
     }
 
@@ -206,9 +922,14 @@ impl<C> Reconnector<C> {
 
     fn note_failure(&mut self) {
         let shift = self.consecutive_failures.min(8);
-        let delay = INITIAL_BACKOFF.saturating_mul(1u32 << shift).min(MAX_BACKOFF);
+        let base = INITIAL_BACKOFF.saturating_mul(1u32 << shift).min(MAX_BACKOFF);
+        // Jitter uniformly into [base/2, base]: the backoff keeps its
+        // lower bound (fast-fail guarantees hold) but a shed herd's
+        // redials decorrelate instead of arriving in waves.
+        let nanos = base.as_nanos() as u64;
+        let delay = nanos / 2 + crate::util::rng::splitmix64(&mut self.jitter) % (nanos / 2 + 1);
         self.consecutive_failures = self.consecutive_failures.saturating_add(1);
-        self.retry_after = Some(Instant::now() + delay);
+        self.retry_after = Some(Instant::now() + Duration::from_nanos(delay));
     }
 
     /// Run one operation against the (re)connected peer; on error the
@@ -225,38 +946,205 @@ impl<C> Reconnector<C> {
     }
 }
 
+/// Deterministic-free jitter seed: per-process counter mixed with the
+/// peer address, so every client (and every slot of one client) walks an
+/// independent backoff sequence without consulting a clock.
+fn jitter_seed(addr: &str) -> u64 {
+    use std::hash::{Hash, Hasher};
+    static COUNTER: AtomicU64 = AtomicU64::new(0x9E37_79B9_7F4A_7C15);
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    addr.hash(&mut h);
+    COUNTER.fetch_add(0x9E37_79B9, Ordering::Relaxed).hash(&mut h);
+    h.finish() | 1
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::io::{Read, Write};
     use std::sync::atomic::AtomicU32;
 
+    struct EchoDriver;
+
+    impl ConnDriver for EchoDriver {
+        fn on_data(&mut self, inbuf: &mut Vec<u8>, out: &mut Vec<u8>) -> bool {
+            out.extend_from_slice(inbuf);
+            inbuf.clear();
+            true
+        }
+    }
+
+    struct EchoFrames;
+
+    impl FrameHandler for EchoFrames {
+        fn on_frame(&mut self, stream: u32, payload: &[u8], out: &mut FrameSink) -> bool {
+            out.send(stream, payload);
+            true
+        }
+    }
+
+    fn echo_server(opts: ReactorOpts) -> (TcpServerHandle, Arc<NetStats>) {
+        let stats = NetStats::new();
+        let srv = serve_frames("test-frames", "127.0.0.1:0", opts, stats.clone(), || EchoFrames)
+            .unwrap();
+        (srv, stats)
+    }
+
     #[test]
-    fn serve_tcp_round_trip_and_stop() {
-        let mut srv = serve_tcp("test-echo", "127.0.0.1:0", |mut s: TcpStream| {
-            let mut b = [0u8; 4];
-            if s.read_exact(&mut b).is_ok() {
-                let _ = s.write_all(&b);
-            }
-        })
+    fn serve_reactor_round_trip_and_stop() {
+        let stats = NetStats::new();
+        let mut srv = serve_reactor(
+            "test-echo",
+            "127.0.0.1:0",
+            ReactorOpts::default(),
+            stats.clone(),
+            || Box::new(EchoDriver),
+        )
         .unwrap();
         let mut c = TcpStream::connect(srv.addr()).unwrap();
         c.write_all(b"ping").unwrap();
         let mut b = [0u8; 4];
         c.read_exact(&mut b).unwrap();
         assert_eq!(&b, b"ping");
+        assert_eq!(stats.accepted.load(Ordering::Relaxed), 1);
         srv.stop();
-        // Stopped listener refuses new connections (eventually: the OS
-        // may accept one queued conn, so just assert stop() returned).
+        // Severed on stop: the client sees EOF (or a reset).
+        let mut rest = Vec::new();
+        let _ = c.read_to_end(&mut rest);
+        assert!(rest.is_empty());
+    }
+
+    #[test]
+    fn idle_reactor_blocks_instead_of_polling() {
+        let stats = NetStats::new();
+        let mut srv = serve_reactor(
+            "test-idle",
+            "127.0.0.1:0",
+            ReactorOpts::default(),
+            stats.clone(),
+            || Box::new(EchoDriver),
+        )
+        .unwrap();
+        let mut c = TcpStream::connect(srv.addr()).unwrap();
+        c.write_all(b"warm").unwrap();
+        let mut b = [0u8; 4];
+        c.read_exact(&mut b).unwrap();
+        let before = stats.wakeups.load(Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis(300));
+        let woke = stats.wakeups.load(Ordering::Relaxed) - before;
+        // The old accept loop slept 5 ms per spin — ~60 wakeups here.
+        assert!(woke <= 2, "idle loops must block in poll(2), saw {woke} wakeups");
+        srv.stop();
+    }
+
+    #[test]
+    fn frame_server_demuxes_streams() {
+        let (mut srv, stats) = echo_server(ReactorOpts::default());
+        let s = TcpStream::connect(srv.addr()).unwrap();
+        let core = MuxCore::new(s).unwrap();
+        assert_eq!(core.call(1, b"one").unwrap(), b"one");
+        assert_eq!(core.call(2, b"two").unwrap(), b"two");
+        // Pipelined across streams: replies land on the stream that asked.
+        core.send(3, b"three").unwrap();
+        core.send(4, b"four").unwrap();
+        assert_eq!(core.recv(4).unwrap(), b"four");
+        assert_eq!(core.recv(3).unwrap(), b"three");
+        assert_eq!(stats.frames_in.load(Ordering::Relaxed), 4);
+        assert_eq!(stats.frames_out.load(Ordering::Relaxed), 4);
+        srv.stop();
+        assert!(core.call(1, b"x").is_err(), "severed socket must fail");
+        assert!(core.is_dead());
+    }
+
+    #[test]
+    fn overloaded_connection_sheds_with_busy() {
+        // Tiny soft bound; replies echo the payload, so a client that
+        // never drains trips it as soon as the kernel buffers fill.
+        let opts = ReactorOpts::new(2, 64 * 1024, 1 << 30);
+        let (mut srv, stats) = echo_server(opts);
+        let mut flood = TcpStream::connect(srv.addr()).unwrap();
+        let chunk = vec![7u8; 256 * 1024];
+        for _ in 0..128 {
+            wire::write_frame(&mut flood, 9, &chunk).unwrap(); // 32 MiB total, never reads
+        }
+        // Wait for the shed counter to move (the server is still healthy).
+        let t0 = Instant::now();
+        while stats.shed_count() == 0 && t0.elapsed() < Duration::from_secs(10) {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(stats.shed_count() > 0, "flood must trip the soft backlog bound");
+        assert!(stats.queue_peak.load(Ordering::Relaxed) > 64 * 1024);
+        // A well-behaved client on the same server is unaffected.
+        let well = TcpStream::connect(srv.addr()).unwrap();
+        let core = MuxCore::new(well).unwrap();
+        assert_eq!(core.call(1, b"fine").unwrap(), b"fine");
+        // The flooding client eventually reads Busy control frames.
+        drop(core);
+        let flood_core = MuxCore::new(flood.try_clone().unwrap()).unwrap();
+        let mut saw_busy = false;
+        for _ in 0..256 {
+            match flood_core.recv(9) {
+                Ok(_) => {}
+                Err(e) => {
+                    saw_busy = e.to_string().contains("busy");
+                    break;
+                }
+            }
+        }
+        assert!(saw_busy, "shed requests must answer Busy on the request stream");
+        srv.stop();
+    }
+
+    #[test]
+    fn hard_backlog_bound_drops_the_connection() {
+        let mut opts = ReactorOpts::new(1, 16 * 1024, 1 << 30);
+        opts.conn_hard_bytes = 128 * 1024;
+        let (mut srv, stats) = echo_server(opts);
+        let mut flood = TcpStream::connect(srv.addr()).unwrap();
+        let chunk = vec![3u8; 128 * 1024];
+        // Keep writing until the server drops us (write fails) or we've
+        // pushed far more than the kernel can cushion.
+        for _ in 0..512 {
+            if wire::write_frame(&mut flood, 1, &chunk).is_err() {
+                break;
+            }
+        }
+        let t0 = Instant::now();
+        while stats.dropped_count() == 0 && t0.elapsed() < Duration::from_secs(10) {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(stats.dropped_count() > 0, "hard bound must drop the connection");
+        srv.stop();
+    }
+
+    #[test]
+    fn malformed_frames_drop_the_connection_not_the_server() {
+        let (mut srv, stats) = echo_server(ReactorOpts::default());
+        // Oversized length prefix: dropped before any allocation.
+        let mut bad = TcpStream::connect(srv.addr()).unwrap();
+        bad.write_all(&(u32::MAX).to_le_bytes()).unwrap();
+        bad.write_all(&0u32.to_le_bytes()).unwrap();
+        let mut rest = Vec::new();
+        let _ = bad.read_to_end(&mut rest);
+        assert!(rest.is_empty(), "malformed conn must be severed without a reply");
+        // A control frame from a client is equally malformed.
+        let mut bad = TcpStream::connect(srv.addr()).unwrap();
+        wire::write_frame(&mut bad, wire::CTRL_BIT | 3, b"nope").unwrap();
+        let mut rest = Vec::new();
+        let _ = bad.read_to_end(&mut rest);
+        assert!(rest.is_empty());
+        // The server is still serving.
+        let core = MuxCore::new(TcpStream::connect(srv.addr()).unwrap()).unwrap();
+        assert_eq!(core.call(0, b"ok").unwrap(), b"ok");
+        assert!(stats.closed.load(Ordering::Relaxed) >= 2);
+        srv.stop();
     }
 
     #[test]
     fn reconnector_redials_after_failure() {
         let dials = Arc::new(AtomicU32::new(0));
         let d2 = dials.clone();
-        let mut r: Reconnector<u32> = Reconnector::new("nowhere", move |_| {
-            Ok(d2.fetch_add(1, Ordering::Relaxed) + 1)
-        });
+        let mut r: Reconnector<u32> =
+            Reconnector::new("nowhere", move |_| Ok(d2.fetch_add(1, Ordering::Relaxed) + 1));
         assert!(!r.is_connected());
         assert_eq!(r.with(|c| Ok(*c)).unwrap(), 1);
         assert!(r.is_connected());
@@ -276,12 +1164,57 @@ mod tests {
 
     #[test]
     fn reconnector_connect_failures_back_off() {
-        let mut r: Reconnector<u32> =
-            Reconnector::new("nowhere", |_| anyhow::bail!("refused"));
+        let mut r: Reconnector<u32> = Reconnector::new("nowhere", |_| anyhow::bail!("refused"));
         assert!(r.get().is_err());
         // Within the cooldown: fast-fail, no dial storm.
         assert!(r.get().unwrap_err().to_string().contains("backing off"));
         // `connected` is eager and fails fast.
         assert!(Reconnector::<u32>::connected("nowhere", |_| anyhow::bail!("no")).is_err());
+    }
+
+    #[test]
+    fn backoff_is_jittered_within_bounds() {
+        for round in 0..4u32 {
+            let mut r: Reconnector<u32> = Reconnector::new("nowhere", |_| anyhow::bail!("no"));
+            let mut delays = Vec::new();
+            for fail in 0..6u32 {
+                let before = Instant::now();
+                r.fail();
+                let until = r.retry_after.expect("cooldown set");
+                let delay = until.duration_since(before);
+                let base = INITIAL_BACKOFF.saturating_mul(1u32 << fail.min(8)).min(MAX_BACKOFF);
+                assert!(delay <= base + Duration::from_millis(1), "delay {delay:?} > base {base:?}");
+                assert!(
+                    delay >= base / 2,
+                    "delay {delay:?} below jitter floor {:?} (round {round})",
+                    base / 2
+                );
+                delays.push(delay);
+            }
+            // Monotone-ish growth: the 6th delay must exceed the 1st cap.
+            assert!(delays[5] > INITIAL_BACKOFF, "backoff must still grow under jitter");
+        }
+        // Two clients of the same address walk different jitter paths.
+        let mut a: Reconnector<u32> = Reconnector::new("same:1", |_| anyhow::bail!("no"));
+        let mut b: Reconnector<u32> = Reconnector::new("same:1", |_| anyhow::bail!("no"));
+        let mut diverged = false;
+        for _ in 0..8 {
+            let t = Instant::now();
+            a.fail();
+            b.fail();
+            let da = a.retry_after.unwrap().duration_since(t);
+            let db = b.retry_after.unwrap().duration_since(t);
+            if da.as_micros().abs_diff(db.as_micros()) > 200 {
+                diverged = true;
+                break;
+            }
+        }
+        assert!(diverged, "independent clients must not share a backoff sequence");
+    }
+
+    #[test]
+    fn nofile_limit_raise_is_best_effort() {
+        let cur = raise_nofile_limit(1024);
+        assert!(cur >= 256, "soft NOFILE limit suspiciously low: {cur}");
     }
 }

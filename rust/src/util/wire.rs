@@ -1,9 +1,19 @@
 //! Length-prefixed binary framing shared by the TCP front-ends
 //! ([`ps::net`](crate::ps::net) and [`provdb::net`](crate::provdb::net)).
 //!
-//! Every message is `u32 len (LE), len bytes of payload`; payloads start
-//! with a one-byte request kind and are decoded with [`Cursor`]. Strings
-//! travel as `u32 len, len UTF-8 bytes` ([`put_str`] / [`Cursor::str`]).
+//! Every frame is `u32 len (LE), u32 stream (LE), len bytes of payload`;
+//! payloads start with a one-byte request kind and are decoded with
+//! [`Cursor`]. Strings travel as `u32 len, len UTF-8 bytes` ([`put_str`] /
+//! [`Cursor::str`]).
+//!
+//! The **stream id** multiplexes independent logical request/reply
+//! streams over one socket (a driver's conn-pool slots share a socket;
+//! the server echoes the request's stream id on its reply). Simple
+//! single-stream peers use [`write_msg`] / [`read_msg`], which pin
+//! stream 0. Stream ids with [`CTRL_BIT`] set are transport control
+//! frames addressed to `stream & !CTRL_BIT`; the only opcode today is
+//! [`CTRL_BUSY`] — the server shed the request under overload and the
+//! client should back off (the `Reconnector` cooldown) and retry.
 
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
@@ -12,17 +22,28 @@ use std::io::{Read, Write};
 /// malformed (the wire is a trust boundary).
 pub const MAX_MSG: usize = 64 << 20;
 
-/// Write one length-prefixed message and flush.
-pub fn write_msg<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+/// Bytes of frame header preceding the payload (`u32 len, u32 stream`).
+pub const FRAME_HEADER: usize = 8;
+
+/// Stream-id bit marking a transport control frame. Control frames are
+/// emitted only by servers; a client sending one is malformed.
+pub const CTRL_BIT: u32 = 0x8000_0000;
+
+/// Control opcode (first payload byte): the server's bounded ingest
+/// queues are full and this request was shed without being processed.
+pub const CTRL_BUSY: u8 = 1;
+
+/// Write one frame on `stream` and flush.
+pub fn write_frame<W: Write>(w: &mut W, stream: u32, payload: &[u8]) -> Result<()> {
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&stream.to_le_bytes())?;
     w.write_all(payload)?;
     w.flush()?;
     Ok(())
 }
 
-/// Read one length-prefixed message; `None` on clean EOF before the
-/// length prefix.
-pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+/// Read one frame; `None` on clean EOF before the header.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<(u32, Vec<u8>)>> {
     let mut len = [0u8; 4];
     match r.read_exact(&mut len) {
         Ok(()) => {}
@@ -33,9 +54,37 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
     if n > MAX_MSG {
         bail!("message too large: {n}");
     }
+    let mut stream = [0u8; 4];
+    r.read_exact(&mut stream).context("frame stream id")?;
     let mut buf = vec![0u8; n];
     r.read_exact(&mut buf).context("message body")?;
-    Ok(Some(buf))
+    Ok(Some((u32::from_le_bytes(stream), buf)))
+}
+
+/// Write one message on stream 0 and flush (single-stream peers).
+pub fn write_msg<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    write_frame(w, 0, payload)
+}
+
+/// Read one message; `None` on clean EOF before the header. Control
+/// frames are handled here: `Busy` becomes an error (the request was
+/// shed — callers route it through their `Reconnector` failure path),
+/// unknown control opcodes are skipped.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    loop {
+        match read_frame(r)? {
+            None => return Ok(None),
+            Some((stream, payload)) => {
+                if stream & CTRL_BIT != 0 {
+                    if payload.first() == Some(&CTRL_BUSY) {
+                        bail!("server busy: request shed");
+                    }
+                    continue;
+                }
+                return Ok(Some(payload));
+            }
+        }
+    }
 }
 
 /// Append a length-prefixed UTF-8 string to a message under construction.
@@ -138,6 +187,32 @@ mod tests {
         assert_eq!(read_msg(&mut r).unwrap().unwrap(), b"hello");
         assert_eq!(read_msg(&mut r).unwrap().unwrap(), b"");
         assert!(read_msg(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn frames_carry_stream_ids() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 3, b"abc").unwrap();
+        write_frame(&mut buf, 0, b"z").unwrap();
+        let mut r = buf.as_slice();
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), (3, b"abc".to_vec()));
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), (0, b"z".to_vec()));
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn busy_control_frame_errors_read_msg() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, CTRL_BIT, &[CTRL_BUSY]).unwrap();
+        let mut r = buf.as_slice();
+        let err = read_msg(&mut r).unwrap_err();
+        assert!(err.to_string().contains("busy"), "got: {err}");
+        // Unknown control opcodes are skipped, not fatal.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, CTRL_BIT | 7, &[0xEE]).unwrap();
+        write_msg(&mut buf, b"after").unwrap();
+        let mut r = buf.as_slice();
+        assert_eq!(read_msg(&mut r).unwrap().unwrap(), b"after");
     }
 
     #[test]

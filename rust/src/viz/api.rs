@@ -147,6 +147,8 @@ pub fn ps_stats(state: &VizState) -> Json {
                 ("merges", Json::num(l.merges as f64)),
                 ("functions", Json::num(l.functions as f64)),
                 ("slots", Json::num(l.slots as f64)),
+                ("shed", Json::num(l.shed as f64)),
+                ("queue_depth", Json::num(l.queue_depth as f64)),
             ])
         })
         .collect();
@@ -201,6 +203,8 @@ mod tests {
                 merges: 9,
                 functions: 1,
                 slots: 256,
+                shed: 3,
+                queue_depth: 0,
             }],
             ..VizSnapshot::default()
         };
@@ -236,6 +240,8 @@ mod tests {
         assert_eq!(loads[0].get("syncs").unwrap().as_u64(), Some(4));
         assert_eq!(loads[0].get("merges").unwrap().as_u64(), Some(9));
         assert_eq!(loads[0].get("slots").unwrap().as_u64(), Some(256));
+        assert_eq!(loads[0].get("shed").unwrap().as_u64(), Some(3));
+        assert_eq!(loads[0].get("queue_depth").unwrap().as_u64(), Some(0));
         assert_eq!(j.get("placement_epoch").unwrap().as_u64(), Some(2));
         assert_eq!(j.get("total_anomalies").unwrap().as_u64(), Some(2));
     }

@@ -1,7 +1,9 @@
-//! Minimal threaded HTTP/1.1 server for the visualization API (no web
-//! framework offline; the paper's uWSGI/celery stack maps to: accept
-//! thread + handler threads = worker pool, shared [`VizState`] = the
-//! database, and the JSON endpoints in [`api`](super::api)).
+//! Minimal HTTP/1.1 server for the visualization API (no web framework
+//! offline; the paper's uWSGI/celery stack maps to: the shared poll(2)
+//! reactor = the worker pool, shared [`VizState`] = the database, and
+//! the JSON endpoints in [`api`](super::api)). Connections are served
+//! one-request-per-connection (`Connection: close`), parsed by a
+//! [`ConnDriver`] state machine on the reactor's event loops.
 //!
 //! Endpoints:
 //!
@@ -25,7 +27,7 @@
 use super::{api, ascii, RankStat, VizState};
 use crate::provenance::ProvQuery;
 use crate::util::json::Json;
-use crate::util::net::{serve_tcp, TcpServerHandle};
+use crate::util::net::{serve_reactor, ConnDriver, NetStats, ReactorOpts, TcpServerHandle};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -33,8 +35,12 @@ use std::net::TcpStream;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
+/// A header block larger than this with no terminator in sight is abuse,
+/// not slow I/O; the connection is dropped.
+const MAX_REQUEST_BYTES: usize = 64 << 10;
+
 /// Running server handle; drop (or call [`VizServer::stop`]) to shut down.
-/// The accept loop is the shared [`serve_tcp`] substrate.
+/// Connections live on the shared [`serve_reactor`] event loops.
 pub struct VizServer {
     inner: TcpServerHandle,
     requests: Arc<AtomicU64>,
@@ -45,9 +51,19 @@ impl VizServer {
     pub fn start(addr: &str, state: Arc<RwLock<VizState>>) -> Result<VizServer> {
         let requests = Arc::new(AtomicU64::new(0));
         let req2 = requests.clone();
-        let inner = serve_tcp("chimbuko-viz", addr, move |stream| {
-            let _ = handle_conn(stream, state.clone(), req2.clone());
-        })?;
+        let inner = serve_reactor(
+            "chimbuko-viz",
+            addr,
+            ReactorOpts::default(),
+            NetStats::new(),
+            move || {
+                Box::new(HttpDriver {
+                    state: state.clone(),
+                    requests: req2.clone(),
+                    done: false,
+                })
+            },
+        )?;
         Ok(VizServer { inner, requests })
     }
 
@@ -64,35 +80,54 @@ impl VizServer {
     }
 }
 
-fn handle_conn(
-    stream: TcpStream,
+/// Per-connection HTTP state machine: accumulate bytes until the header
+/// block terminator, answer the one request, close (`Connection: close`
+/// semantics — GET requests carry no body, so the header block is the
+/// whole request).
+struct HttpDriver {
     state: Arc<RwLock<VizState>>,
     requests: Arc<AtomicU64>,
-) -> Result<()> {
-    stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    // Drain headers.
-    loop {
-        let mut h = String::new();
-        if reader.read_line(&mut h)? == 0 || h == "\r\n" || h == "\n" {
-            break;
-        }
-    }
-    requests.fetch_add(1, Ordering::Relaxed);
-    let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("");
-    let target = parts.next().unwrap_or("/");
-    let (status, ctype, body) = if method != "GET" {
-        (405, "text/plain", "method not allowed\n".to_string())
-    } else {
-        route(target, &state)
-    };
-    respond(stream, status, ctype, &body)
+    done: bool,
 }
 
-fn respond(mut stream: TcpStream, status: u16, ctype: &str, body: &str) -> Result<()> {
+impl ConnDriver for HttpDriver {
+    fn on_data(&mut self, inbuf: &mut Vec<u8>, out: &mut Vec<u8>) -> bool {
+        if self.done {
+            // Already answered; anything else the peer pipelines is
+            // discarded while the reply flushes out.
+            inbuf.clear();
+            return false;
+        }
+        let Some(end) = headers_end(inbuf) else {
+            return inbuf.len() <= MAX_REQUEST_BYTES;
+        };
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let head = String::from_utf8_lossy(&inbuf[..end]);
+        let line = head.lines().next().unwrap_or("");
+        let mut parts = line.split_whitespace();
+        let method = parts.next().unwrap_or("");
+        let target = parts.next().unwrap_or("/").to_string();
+        let (status, ctype, body) = if method != "GET" {
+            (405, "text/plain", "method not allowed\n".to_string())
+        } else {
+            route(&target, &self.state)
+        };
+        respond(out, status, ctype, &body);
+        inbuf.clear();
+        self.done = true;
+        false // single-request connection: close once the reply flushes
+    }
+}
+
+/// Offset one past the end-of-headers terminator, if present.
+fn headers_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .map(|i| i + 4)
+        .or_else(|| buf.windows(2).position(|w| w == b"\n\n").map(|i| i + 2))
+}
+
+fn respond(out: &mut Vec<u8>, status: u16, ctype: &str, body: &str) {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
@@ -104,10 +139,8 @@ fn respond(mut stream: TcpStream, status: u16, ctype: &str, body: &str) -> Resul
         "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
         body.len()
     );
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body.as_bytes())?;
-    stream.flush()?;
-    Ok(())
+    out.extend_from_slice(head.as_bytes());
+    out.extend_from_slice(body.as_bytes());
 }
 
 /// Parse `?k=v&k2=v2`.
@@ -289,6 +322,8 @@ mod tests {
                 merges: 5,
                 functions: 3,
                 slots: 256,
+                shed: 0,
+                queue_depth: 0,
             }],
             ..VizSnapshot::default()
         };

@@ -266,6 +266,93 @@ fn binary_and_jsonl_logged_stores_answer_identically_after_restart() {
 }
 
 #[test]
+fn flooded_provdb_sheds_while_behaved_clients_answer_identically() {
+    // End-to-end backpressure on the provDB service: a connection that
+    // floods requests and never drains replies is shed with `Busy`,
+    // while a well-behaved client on the same server answers the whole
+    // query battery identically to an uncontended server's client.
+    use chimbuko::util::json::Json;
+    use chimbuko::util::net::ReactorOpts;
+    use chimbuko::util::wire::write_msg;
+    use std::net::TcpStream;
+
+    // META_GET kind byte, from the protocol doc in `provdb::net`.
+    const KIND_META_GET: u8 = 6;
+
+    let mut rng = Rng::new(0x0F10);
+    let records: Vec<ProvRecord> = (0..200u64).map(|i| record(&mut rng, i)).collect();
+
+    // Uncontended reference service, default reactor bounds.
+    let (store_q, hq) = spawn_store(None, 2, Retention::default()).unwrap();
+    let srv_q = ProvDbTcpServer::start("127.0.0.1:0", store_q.clone()).unwrap();
+
+    // Flood target: tiny per-connection reply budget so the flood trips
+    // admission control; huge server-wide budget so the flooded
+    // connection sheds without starving the behaved one.
+    let (store_f, hf) = spawn_store(None, 2, Retention::default()).unwrap();
+    let srv_f = ProvDbTcpServer::start_with_opts(
+        "127.0.0.1:0",
+        store_f.clone(),
+        ReactorOpts::new(1, 32 * 1024, 1 << 30),
+    )
+    .unwrap();
+
+    // A ~256 KiB metadata blob makes every META_GET reply far exceed the
+    // per-connection budget the moment the flooder stops draining.
+    let blob = Json::obj(vec![("blob", Json::str("m".repeat(256 * 1024)))]);
+    ProvClient::connect(&srv_f.addr().to_string())
+        .unwrap()
+        .set_metadata(&blob)
+        .unwrap();
+
+    let mut flood = TcpStream::connect(srv_f.addr().to_string()).unwrap();
+    for _ in 0..200 {
+        if write_msg(&mut flood, &[KIND_META_GET]).is_err() {
+            break; // severed under the hard bound — acceptable
+        }
+    }
+    let stats = srv_f.net_stats();
+    let t0 = std::time::Instant::now();
+    while stats.shed_count() == 0 && t0.elapsed() < std::time::Duration::from_secs(10) {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(stats.shed_count() > 0, "non-draining flood must be shed");
+
+    // Behaved clients: same stream into both services, every query
+    // answered identically despite the live flood.
+    let mut cq = ProvClient::connect(&srv_q.addr().to_string()).unwrap();
+    let mut cf = ProvClient::connect(&srv_f.addr().to_string()).unwrap();
+    for r in &records {
+        cq.append(r).unwrap();
+        cf.append(r).unwrap();
+    }
+    cq.flush().unwrap();
+    cf.flush().unwrap();
+    for (qi, q) in query_battery().iter().enumerate() {
+        assert_eq!(
+            cq.query(q).unwrap(),
+            cf.query(q).unwrap(),
+            "query #{qi} {q:?} diverged under flood"
+        );
+    }
+
+    // The stats reply carries the transport counters: shed on the
+    // flooded server, none on the quiet one.
+    let sf = cf.stats().unwrap();
+    assert_eq!(sf.records, records.len() as u64);
+    assert_eq!(sf.log_errors, 0);
+    assert!(sf.shed > 0, "stats must surface the shed counter");
+    let sq = cq.stats().unwrap();
+    assert_eq!(sq.shed, 0, "well-behaved clients must never be shed");
+
+    drop(flood);
+    drop(srv_q);
+    drop(srv_f);
+    hq.join();
+    hf.join();
+}
+
+#[test]
 fn driver_run_with_provdb_serves_provenance_over_http() {
     // Spin up the service the way `chimbuko provdb-server` would…
     let (store, handle) = spawn_store(None, 2, Retention::default()).unwrap();

@@ -491,6 +491,110 @@ fn multi_process_ps_smoke() {
 }
 
 #[test]
+fn flooded_shard_endpoint_sheds_while_behaved_replies_stay_bit_identical() {
+    // End-to-end backpressure through the public surface: a client that
+    // floods sync frames and never drains replies must be shed with
+    // `Busy` (visible in the endpoint's transport counters and shard
+    // snapshot), while a well-behaved client on the same endpoint gets
+    // replies bit-identical to an uncontended endpoint's.
+    use chimbuko::ps::net::PsShardTcpServer;
+    use chimbuko::util::net::ReactorOpts;
+    use chimbuko::util::wire::{read_msg, write_msg, Cursor};
+    use std::net::TcpStream;
+
+    // Shard-endpoint kind bytes, from the protocol doc in `ps::net`.
+    const KIND_HELLO: u8 = 3;
+    const KIND_SHARD_SYNC: u8 = 6;
+    const KIND_SHARD_SNAPSHOT: u8 = 8;
+
+    // Hand-rolled sync frame: kind, app, epoch, entry count, then
+    // (fid u32, count u64, mean/m2/min/max f64) per entry.
+    fn sync_msg(first_fid: u32, n: u32, v: f64) -> Vec<u8> {
+        let mut msg = vec![KIND_SHARD_SYNC];
+        msg.extend_from_slice(&0u32.to_le_bytes());
+        msg.extend_from_slice(&0u64.to_le_bytes());
+        msg.extend_from_slice(&n.to_le_bytes());
+        for fid in first_fid..first_fid + n {
+            msg.extend_from_slice(&fid.to_le_bytes());
+            msg.extend_from_slice(&1u64.to_le_bytes());
+            msg.extend_from_slice(&v.to_le_bytes());
+            msg.extend_from_slice(&0f64.to_le_bytes());
+            msg.extend_from_slice(&v.to_le_bytes());
+            msg.extend_from_slice(&v.to_le_bytes());
+        }
+        msg
+    }
+
+    // Hello + ten sync rounds over fids 0..64, raw reply bytes returned
+    // so the flooded/quiet comparison is bit-for-bit.
+    fn behaved_replies(addr: &str) -> (TcpStream, Vec<Vec<u8>>) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write_msg(&mut s, &[KIND_HELLO]).unwrap();
+        let hello = read_msg(&mut s).unwrap().expect("hello reply");
+        let mut c = Cursor::new(&hello);
+        assert_eq!(c.u32().unwrap(), 0, "shard id");
+        assert_eq!(c.u32().unwrap(), 1, "shard count");
+        let mut replies = Vec::new();
+        for round in 0..10u32 {
+            write_msg(&mut s, &sync_msg(0, 64, 1.0 + f64::from(round))).unwrap();
+            replies.push(read_msg(&mut s).unwrap().expect("sync reply"));
+        }
+        (s, replies)
+    }
+
+    // Tiny per-connection reply budget so the flood trips admission
+    // control without tens of MB; huge server-wide bound keeps the
+    // flooded connection alive (shed, not severed).
+    let quiet = PsShardTcpServer::spawn_standalone_with_opts(
+        "127.0.0.1:0",
+        0,
+        1,
+        ReactorOpts::new(1, 32 * 1024, 1 << 30),
+    )
+    .unwrap();
+    let flooded = PsShardTcpServer::spawn_standalone_with_opts(
+        "127.0.0.1:0",
+        0,
+        1,
+        ReactorOpts::new(1, 32 * 1024, 1 << 30),
+    )
+    .unwrap();
+
+    // Flood: 256 frames whose replies echo 2048 entries (~90 KiB) each,
+    // on fids disjoint from the behaved client's, replies never read.
+    let mut flood = TcpStream::connect(&flooded.addr().to_string()).unwrap();
+    let big = sync_msg(1_000_000, 2048, 1.0);
+    for _ in 0..256 {
+        if write_msg(&mut flood, &big).is_err() {
+            break; // severed under the hard bound — acceptable
+        }
+    }
+    let stats = flooded.net_stats();
+    let t0 = std::time::Instant::now();
+    while stats.shed_count() == 0 && t0.elapsed() < std::time::Duration::from_secs(10) {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(stats.shed_count() > 0, "non-draining flood must be shed");
+
+    let (_q, want) = behaved_replies(&quiet.addr().to_string());
+    let (mut f, got) = behaved_replies(&flooded.addr().to_string());
+    assert_eq!(want, got, "behaved replies must be bit-identical under flood");
+
+    // The shard snapshot carries the shed counter to operators.
+    write_msg(&mut f, &[KIND_SHARD_SNAPSHOT]).unwrap();
+    let snap = read_msg(&mut f).unwrap().expect("snapshot reply");
+    let mut c = Cursor::new(&snap);
+    for _ in 0..3 {
+        c.u64().unwrap(); // functions, syncs, merges
+    }
+    c.u32().unwrap(); // shard id
+    c.u64().unwrap(); // placement epoch
+    c.u32().unwrap(); // slots
+    assert!(c.u64().unwrap() > 0, "snapshot must carry the shed counter");
+    drop(flood);
+}
+
+#[test]
 fn mid_run_rebalance_equivalence() {
     // Rebalance fired mid-run, in-process: migrate a handful of slots
     // (including the hot function's) halfway through the workload; every
