@@ -166,6 +166,45 @@ fn main() {
         n
     });
 
+    // --- probe DSL: compile + per-record predicate eval ---
+    use chimbuko::probe::Probe;
+    const PROBE_SRC: &str =
+        "probe hot: fn:*.*:exit / score >= 6.0 && anomaly / { capture(record); }";
+    b.run("probe: compile one-liner", || {
+        let _ = Probe::compile(PROBE_SRC).unwrap();
+    });
+    let probe = Probe::compile(PROBE_SRC).unwrap();
+    // Identical framing loop for the compiled VM and the hard-coded
+    // header read, so the pair isolates the predicate-eval overhead.
+    b.run_throughput("probe: eval compiled predicate batch", || {
+        let mut pos = 0usize;
+        let mut n = 0u64;
+        let mut hits = 0u64;
+        while pos < encoded.len() {
+            let used = codec::validate(&encoded[pos..]).unwrap();
+            hits += u64::from(probe.matches(&encoded[pos..pos + used]));
+            pos += used;
+            n += 1;
+        }
+        std::hint::black_box(hits);
+        n
+    });
+    b.run_throughput("probe: eval hard-coded header predicate batch", || {
+        let mut pos = 0usize;
+        let mut n = 0u64;
+        let mut hits = 0u64;
+        while pos < encoded.len() {
+            let used = codec::validate(&encoded[pos..]).unwrap();
+            let rec = &encoded[pos..pos + used];
+            let score = f64::from_le_bytes(rec[36..44].try_into().unwrap());
+            hits += u64::from(score >= 6.0 && rec[44] != codec::LABEL_NORMAL);
+            pos += used;
+            n += 1;
+        }
+        std::hint::black_box(hits);
+        n
+    });
+
     // --- BP encode ---
     b.run_throughput("bp: encode 50 frames", || {
         let mut w = chimbuko::adios::BpWriter::counting();

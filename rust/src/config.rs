@@ -169,6 +169,20 @@ pub struct Config {
     pub viz_addr: String,
     /// Emit per-step anomaly statistics to the viz ingest path.
     pub viz_enabled: bool,
+    /// Probe file installed into the provDB service at run start (one or
+    /// more probe definitions, `rust/docs/probe.md` grammar). Empty (the
+    /// default) installs nothing. Requires `provdb.addr`.
+    pub probe_file: String,
+    /// Inline sampling probe gating the AD workers' provenance sink: kept
+    /// records matching the predicate are down-sampled by the probe's
+    /// `sample` clause before they reach the store / wire. Empty disables
+    /// the gate (every kept record is written, the pre-probe behaviour).
+    pub probe_sample: String,
+    /// Inline trigger probe the PS aggregator evaluates against global
+    /// anomaly events; matching events are pushed to the provDB service
+    /// immediately instead of waiting for the next sync period. Empty
+    /// disables triggers. Requires `provdb.addr`.
+    pub probe_trigger: String,
     /// Event-loop threads per TCP server (PS front-end, PS shard
     /// endpoints, provDB, viz): the poll(2) reactor serves every
     /// connection on this fixed pool, so server thread count is
@@ -218,6 +232,9 @@ impl Default for Config {
             app_work_ms_total: 0,
             viz_addr: "127.0.0.1:0".into(),
             viz_enabled: true,
+            probe_file: String::new(),
+            probe_sample: String::new(),
+            probe_trigger: String::new(),
             net_reactor_threads: 2,
             net_conn_queue_bytes: 1 << 20,
             net_server_queue_bytes: 64 << 20,
@@ -289,6 +306,9 @@ impl Config {
             "app_work_ms_total" => self.app_work_ms_total = v.parse()?,
             "viz.addr" => self.viz_addr = v.to_string(),
             "viz.enabled" => self.viz_enabled = parse_bool(v)?,
+            "probe.file" => self.probe_file = v.to_string(),
+            "probe.sample" => self.probe_sample = v.to_string(),
+            "probe.trigger" => self.probe_trigger = v.to_string(),
             "net.reactor_threads" => self.net_reactor_threads = v.parse()?,
             "net.conn_queue_bytes" => self.net_conn_queue_bytes = v.parse()?,
             "net.server_queue_bytes" => self.net_server_queue_bytes = v.parse()?,
@@ -347,6 +367,22 @@ impl Config {
         if self.net_server_queue_bytes < self.net_conn_queue_bytes {
             bail!("net.server_queue_bytes must be >= net.conn_queue_bytes");
         }
+        // Inline probes must compile at config time, not mid-run. The
+        // probe *file* is read (and each definition checked) at install
+        // time, because the path need not exist where the config parses.
+        if !self.probe_sample.is_empty() {
+            crate::probe::Probe::compile(&self.probe_sample)
+                .context("probe.sample does not compile")?;
+        }
+        if !self.probe_trigger.is_empty() {
+            crate::probe::Probe::compile(&self.probe_trigger)
+                .context("probe.trigger does not compile")?;
+        }
+        if (!self.probe_file.is_empty() || !self.probe_trigger.is_empty())
+            && self.provdb_addr.is_empty()
+        {
+            bail!("probe.file / probe.trigger require provdb.addr to be set");
+        }
         Ok(())
     }
 
@@ -389,6 +425,9 @@ impl Config {
                     TraceEngine::Bp => "bp",
                 }),
             ),
+            ("probe_file", Json::str(&self.probe_file)),
+            ("probe_sample", Json::str(&self.probe_sample)),
+            ("probe_trigger", Json::str(&self.probe_trigger)),
             ("filtered", Json::Bool(self.filtered)),
             ("seed", Json::num(self.seed as f64)),
             ("out_dir", Json::str(&self.out_dir)),
@@ -583,6 +622,32 @@ server_queue_bytes = 1048576
         assert_eq!(d.net_reactor_threads, 2);
         assert_eq!(d.net_conn_queue_bytes, 1 << 20);
         assert_eq!(d.net_server_queue_bytes, 64 << 20);
+    }
+
+    #[test]
+    fn probe_keys_parse_and_validate() {
+        let text = r#"
+[provdb]
+addr = 127.0.0.1:5560
+
+[probe]
+file = configs/probes.d/example.probe
+sample = fn:*.*:exit / anomaly / sample 10%
+trigger = fn:*.*:exit / score > 10.0 / { capture(record); }
+"#;
+        let c = Config::from_str(text).unwrap();
+        assert_eq!(c.probe_file, "configs/probes.d/example.probe");
+        assert!(c.probe_sample.contains("sample 10%"));
+        assert!(c.probe_trigger.contains("score > 10.0"));
+        // Inline probes are compiled at validate() time.
+        assert!(Config::from_str("[probe]\nsample = fn:*.*:exit / score @@ /").is_err());
+        assert!(Config::from_str("[probe]\ntrigger = not a probe").is_err());
+        // file / trigger need a provDB to land in.
+        assert!(Config::from_str("[probe]\nfile = x.probe").is_err());
+        // Defaults: everything off.
+        let d = Config::default();
+        assert!(d.probe_file.is_empty() && d.probe_sample.is_empty());
+        assert!(d.probe_trigger.is_empty());
     }
 
     #[test]

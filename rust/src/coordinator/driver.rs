@@ -62,6 +62,12 @@ pub struct RunReport {
     pub total_anomalies: u64,
     /// Records kept for provenance (anomalies + context).
     pub total_kept: u64,
+    /// Kept records the sampling probe shed before the sink
+    /// (0 without a `[probe] sample` gate).
+    pub prov_shed: u64,
+    /// Global-event records the trigger probe pushed into provDB
+    /// (0 without a `[probe] trigger`).
+    pub trigger_pushed: u64,
     /// Bytes the BP engine wrote/would write (Tau mode).
     pub bp_bytes: u64,
     /// Bytes of reduced JSON output (Chimbuko mode).
@@ -102,6 +108,8 @@ impl RunReport {
             ("total_execs", Json::num(self.total_execs as f64)),
             ("total_anomalies", Json::num(self.total_anomalies as f64)),
             ("total_kept", Json::num(self.total_kept as f64)),
+            ("prov_shed", Json::num(self.prov_shed as f64)),
+            ("trigger_pushed", Json::num(self.trigger_pushed as f64)),
             ("bp_bytes", Json::num(self.bp_bytes as f64)),
             ("reduced_bytes", Json::num(self.reduced_bytes as f64)),
             ("ad_seconds", Json::num(self.ad_seconds)),
@@ -150,19 +158,61 @@ struct AdRank {
     ad: OnNodeAd,
 }
 
+/// Probe-gated down-sampling in front of a worker's provenance sink
+/// (`[probe] sample = ...` in the config). Records matching the probe's
+/// predicate pass through its `sample` clause; non-matching records are
+/// written unconditionally — the gate only thins the population the
+/// probe names, it never widens what is kept.
+///
+/// The predicate runs on the encoded record bytes (the probe VM reads
+/// header fields at fixed offsets — [`crate::probe::vm`]), so the gate
+/// costs one codec encode into a reused scratch buffer per record.
+struct SampleGate {
+    probe: crate::probe::Probe,
+    /// Matching records seen so far — the deterministic sample stream.
+    counter: u64,
+    /// Matching records dropped by the sample clause.
+    shed: u64,
+    scratch: Vec<u8>,
+}
+
+impl SampleGate {
+    /// `true` = write the record, `false` = shed it.
+    fn admit(&mut self, rec: &crate::provenance::ProvRecord) -> bool {
+        self.scratch.clear();
+        crate::provenance::codec::encode(rec, &mut self.scratch);
+        if !self.probe.matches(&self.scratch) {
+            return true;
+        }
+        let keep = self.probe.sample_keep(self.counter);
+        self.counter += 1;
+        if !keep {
+            self.shed += 1;
+        }
+        keep
+    }
+}
+
 /// Where an AD worker's kept records go: the networked provenance
 /// database service (when `provdb.addr` is configured) or a local
 /// [`ProvDb`] — the fallback single-process layout.
-///
-/// The remote sink is the zero-Json ingest path: `append_step` encodes
-/// each kept record straight into the client's reused binary batch
-/// buffer (`provenance::codec`), which ships `provdb.batch` records per
-/// wire round-trip — no JSONL text or `Json` tree exists anywhere
-/// between the detector and the shard store. The local sink keeps the
-/// JSONL layout (it *is* the offline/edge dump).
-enum ProvSink {
+enum SinkDest {
     Local(ProvDb),
     Remote(ProvClient),
+}
+
+/// An AD worker's provenance sink: a destination plus an optional
+/// probe-gated [`SampleGate`].
+///
+/// The remote destination is the zero-Json ingest path: `append_step`
+/// encodes each kept record straight into the client's reused binary
+/// batch buffer (`provenance::codec`), which ships `provdb.batch`
+/// records per wire round-trip — no JSONL text or `Json` tree exists
+/// anywhere between the detector and the shard store. The local
+/// destination keeps the JSONL layout (it *is* the offline/edge dump).
+struct ProvSink {
+    dest: SinkDest,
+    gate: Option<SampleGate>,
 }
 
 impl ProvSink {
@@ -171,32 +221,59 @@ impl ProvSink {
         provdb_batch: usize,
         wire: RecordFormat,
         dir: &Option<PathBuf>,
+        sample_probe: Option<crate::probe::Probe>,
     ) -> ProvSink {
-        if !provdb_addr.is_empty() {
-            ProvSink::Remote(
+        let dest = if !provdb_addr.is_empty() {
+            SinkDest::Remote(
                 ProvClient::connect_with(provdb_addr, provdb_batch, wire)
                     .expect("connecting to provdb service"),
             )
         } else {
             match dir {
-                Some(d) => ProvSink::Local(ProvDb::create(d).expect("prov dir")),
-                None => ProvSink::Local(ProvDb::in_memory()),
+                Some(d) => SinkDest::Local(ProvDb::create(d).expect("prov dir")),
+                None => SinkDest::Local(ProvDb::in_memory()),
+            }
+        };
+        let gate = sample_probe.map(|probe| SampleGate {
+            probe,
+            counter: 0,
+            shed: 0,
+            scratch: Vec::with_capacity(256),
+        });
+        ProvSink { dest, gate }
+    }
+
+    fn append_step(&mut self, kept: &[crate::ad::Labeled], reg: &crate::trace::FuncRegistry) {
+        let Some(gate) = &mut self.gate else {
+            // Ungated: the batch paths (no per-record probe eval).
+            match &mut self.dest {
+                SinkDest::Local(db) => db.append_step(kept, reg).expect("prov append"),
+                SinkDest::Remote(c) => c.append_step(kept, reg).expect("provdb append"),
+            }
+            return;
+        };
+        for l in kept {
+            let rec = crate::provenance::ProvRecord::from_labeled(l, reg.name(l.rec.fid));
+            if !gate.admit(&rec) {
+                continue;
+            }
+            match &mut self.dest {
+                SinkDest::Local(db) => db.append_record(rec).expect("prov append"),
+                SinkDest::Remote(c) => c.append(&rec).expect("provdb append"),
             }
         }
     }
 
-    fn append_step(&mut self, kept: &[crate::ad::Labeled], reg: &crate::trace::FuncRegistry) {
-        match self {
-            ProvSink::Local(db) => db.append_step(kept, reg).expect("prov append"),
-            ProvSink::Remote(c) => c.append_step(kept, reg).expect("provdb append"),
+    fn flush(&mut self) {
+        match &mut self.dest {
+            SinkDest::Local(db) => db.flush().expect("prov flush"),
+            SinkDest::Remote(c) => c.flush().expect("provdb flush"),
         }
     }
 
-    fn flush(&mut self) {
-        match self {
-            ProvSink::Local(db) => db.flush().expect("prov flush"),
-            ProvSink::Remote(c) => c.flush().expect("provdb flush"),
-        }
+    /// Records the sample gate dropped (0 when ungated).
+    fn shed(&self) -> u64 {
+        self.gate.as_ref().map_or(0, |g| g.shed)
     }
 
     /// Locally written reduced bytes (remote writers report 0 — the
@@ -204,9 +281,9 @@ impl ProvSink {
     /// binary segment log that total is the *binary* byte count, i.e.
     /// the real on-disk reduced size).
     fn local_bytes_written(&self) -> u64 {
-        match self {
-            ProvSink::Local(db) => db.bytes_written(),
-            ProvSink::Remote(_) => 0,
+        match &self.dest {
+            SinkDest::Local(db) => db.bytes_written(),
+            SinkDest::Remote(_) => 0,
         }
     }
 }
@@ -232,6 +309,54 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
             None
         };
 
+    // Probe surfaces: the per-worker sampling gate and the aggregator
+    // trigger forwarder. Both compile here (validate() already proved
+    // the sources compile) — before the PS spawns, because the trigger
+    // channel is part of its options.
+    let use_provdb = mode == Mode::TauChimbuko && !cfg.provdb_addr.is_empty();
+    let sample_probe: Option<crate::probe::Probe> = if cfg.probe_sample.is_empty() {
+        None
+    } else {
+        Some(crate::probe::Probe::compile(&cfg.probe_sample).context("compiling probe.sample")?)
+    };
+    // Trigger hits flow aggregator → this channel → a forwarder thread
+    // that owns its own provDB connection and flushes per record, so a
+    // matching global event lands in the service immediately — never
+    // behind any worker's batch buffer or the next sync period.
+    let (trigger_probes, trigger_tx, trigger_join) = if use_provdb
+        && !cfg.probe_trigger.is_empty()
+    {
+        let probe = Arc::new(
+            crate::probe::Probe::compile(&cfg.probe_trigger).context("compiling probe.trigger")?,
+        );
+        let (tx, rx) = channel::<crate::provenance::ProvRecord>();
+        let addr = cfg.provdb_addr.clone();
+        let join = std::thread::Builder::new()
+            .name("chimbuko-probe-trigger".into())
+            .spawn(move || {
+                let mut client = match ProvClient::connect(&addr) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        crate::log_warn!("driver", "trigger forwarder connect failed: {e:#}");
+                        while rx.recv().is_ok() {}
+                        return 0u64;
+                    }
+                };
+                let mut pushed = 0u64;
+                while let Ok(rec) = rx.recv() {
+                    match client.append(&rec).and_then(|()| client.flush()) {
+                        Ok(()) => pushed += 1,
+                        Err(e) => crate::log_warn!("driver", "trigger push failed: {e:#}"),
+                    }
+                }
+                pushed
+            })
+            .context("spawning trigger forwarder")?;
+        (vec![probe], Some(tx), Some(join))
+    } else {
+        (Vec::new(), None, None)
+    };
+
     // Parameter server + viz collector (Chimbuko mode only). Publish
     // cadence is one snapshot per step-round (plus the optional
     // wall-clock cadence); the per-step report quorum is the number of
@@ -252,6 +377,8 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
             rebalance_interval_ms: cfg.ps_rebalance_interval_ms,
             rebalance_max_ratio: cfg.ps_rebalance_max_ratio,
             rebalance_min_merges: cfg.ps_rebalance_min_merges,
+            trigger_probes,
+            trigger_tx,
         })
         .context("spawning parameter server")?;
         (Some(c), Some(h))
@@ -271,7 +398,6 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
     // batching connection each to the provDB service). A configured
     // `provdb.addr` takes precedence over `out_dir` — records then live
     // in the service (which has its own data directory).
-    let use_provdb = mode == Mode::TauChimbuko && !cfg.provdb_addr.is_empty();
     let out_dir: Option<PathBuf> =
         if mode == Mode::TauChimbuko && !cfg.out_dir.is_empty() && !use_provdb {
             let d = PathBuf::from(&cfg.out_dir);
@@ -406,6 +532,7 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
         execs: u64,
         anomalies: u64,
         kept: u64,
+        shed: u64,
         ad_seconds: f64,
         latency: RunStats,
         reduced_bytes: u64,
@@ -421,15 +548,17 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
             let provdb_addr = cfg.provdb_addr.clone();
             let provdb_batch = cfg.provdb_batch;
             let provdb_wire = cfg.provdb_log_format;
+            let sample = sample_probe.clone();
             let join = std::thread::Builder::new()
                 .name(format!("chimbuko-ad-{wi}"))
                 .spawn(move || {
                     let mut db =
-                        ProvSink::for_worker(&provdb_addr, provdb_batch, provdb_wire, &dir);
+                        ProvSink::for_worker(&provdb_addr, provdb_batch, provdb_wire, &dir, sample);
                     let mut out = AdWorkerOut {
                         execs: 0,
                         anomalies: 0,
                         kept: 0,
+                        shed: 0,
                         ad_seconds: 0.0,
                         latency: RunStats::new(),
                         reduced_bytes: 0,
@@ -489,6 +618,7 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
                         out.errors.orphan_comm += r.ad.stack_errors().orphan_comm;
                     }
                     db.flush();
+                    out.shed = db.shed();
                     out.reduced_bytes = db.local_bytes_written();
                     out
                 })
@@ -510,6 +640,7 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
     let mut execs = 0u64;
     let mut anomalies = 0u64;
     let mut kept = 0u64;
+    let mut shed = 0u64;
     let mut ad_seconds = 0.0f64;
     let mut latency = RunStats::new();
     let mut reduced_bytes = 0u64;
@@ -519,6 +650,7 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
         execs += o.execs;
         anomalies += o.anomalies;
         kept += o.kept;
+        shed += o.shed;
         ad_seconds += o.ad_seconds;
         latency.merge(&o.latency);
         reduced_bytes += o.reduced_bytes;
@@ -547,6 +679,11 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
         }
         _ => VizSnapshot::default(),
     };
+    // The aggregator owned the trigger channel's sender; with the PS
+    // down the forwarder has drained its queue and exits.
+    let trigger_pushed = trigger_join
+        .map(|j| j.join().expect("trigger forwarder panicked"))
+        .unwrap_or(0);
     let snapshots = viz_collector.join().expect("viz collector panicked");
 
     let wall = t0.elapsed().as_secs_f64();
@@ -559,6 +696,8 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
         total_execs: execs,
         total_anomalies: anomalies,
         total_kept: kept,
+        prov_shed: shed,
+        trigger_pushed,
         bp_bytes,
         reduced_bytes,
         ad_seconds,
@@ -624,6 +763,30 @@ mod tests {
         assert_eq!(r.snapshot.total_executions, r.total_execs);
         assert_eq!(r.snapshot.total_anomalies, r.total_anomalies);
         assert!(!r.snapshots.is_empty());
+    }
+
+    #[test]
+    fn sampling_probe_gates_the_prov_sink() {
+        let cfg = small_cfg();
+        let w = Workflow::nwchem(&cfg);
+        let base = run(&cfg, &w, Mode::TauChimbuko).unwrap();
+        assert!(base.reduced_bytes > 0);
+        assert_eq!(base.prov_shed, 0);
+
+        // A match-everything probe keeping 0/1: the sink writes nothing.
+        let mut cfg_none = small_cfg();
+        cfg_none.probe_sample = "fn:*.*:exit / 0 == 0 / sample 0/1".into();
+        let none = run(&cfg_none, &w, Mode::TauChimbuko).unwrap();
+        assert_eq!(none.reduced_bytes, 0);
+        assert_eq!(none.prov_shed, none.total_kept);
+        assert_eq!(none.total_kept, base.total_kept, "gate must not change detection");
+
+        // A match-nothing probe: the gate passes every record through.
+        let mut cfg_all = small_cfg();
+        cfg_all.probe_sample = "fn:*.*:exit / score < 0.0 && score > 1.0 / sample 0/1".into();
+        let all = run(&cfg_all, &w, Mode::TauChimbuko).unwrap();
+        assert_eq!(all.prov_shed, 0);
+        assert_eq!(all.reduced_bytes, base.reduced_bytes);
     }
 
     #[test]

@@ -25,6 +25,7 @@
 //! | [`stats`] | streaming moments with Pébay pairwise merging |
 //! | [`ad`] | call-stack building + anomaly detection (Rust and XLA paths) |
 //! | [`placement`] | epoch-versioned slot → shard routing tables |
+//! | [`probe`] | probe DSL + predicate VM: compiled record filters |
 //! | [`ps`] | the online AD parameter server |
 //! | [`provenance`] | prescriptive provenance records, store and queries |
 //! | [`provdb`] | the sharded, networked provenance database service |
@@ -42,6 +43,7 @@ pub mod config;
 pub mod coordinator;
 pub mod exp;
 pub mod placement;
+pub mod probe;
 pub mod provdb;
 pub mod provenance;
 pub mod ps;

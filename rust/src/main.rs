@@ -28,8 +28,16 @@
 //!                   default; jsonl is the classic-layout escape hatch;
 //!                   --config seeds the [provdb] knobs, flags override)
 //! chimbuko analyze  --bp trace.bp [--out dir] [--algorithm hbos]  offline re-analysis
+//! chimbuko probe    check <file>           compile a probe file, print a summary
+//!                   install <file> --provdb host:port   install its probes
+//!                   list --provdb host:port             installed probes + counters
+//!                   remove <name> --provdb host:port
 //! chimbuko version
 //! ```
+//!
+//! `chimbuko run` also accepts `--probe <file>` (install the file's probes
+//! into the provDB service at run start; requires `--provdb`) — see
+//! `rust/docs/probe.md` for the probe language.
 
 use chimbuko::cli::Args;
 use chimbuko::config::{Config, DetectorBackend};
@@ -55,13 +63,14 @@ fn main() {
         Some("ps-shard-server") => cmd_ps_shard_server(&args),
         Some("provdb-server") => cmd_provdb_server(&args),
         Some("analyze") => cmd_analyze(&args),
+        Some("probe") => cmd_probe(&args),
         Some("version") => {
             println!("chimbuko {}", chimbuko::VERSION);
             Ok(())
         }
         _ => {
             eprintln!(
-                "usage: chimbuko <run|gen|replay|serve|exp|compare|ps-server|ps-shard-server|provdb-server|analyze|version> [options]\n\
+                "usage: chimbuko <run|gen|replay|serve|exp|compare|ps-server|ps-shard-server|provdb-server|analyze|probe|version> [options]\n\
                  see `rust/src/main.rs` header or README for options"
             );
             std::process::exit(2);
@@ -129,6 +138,9 @@ fn config_of(args: &Args) -> anyhow::Result<Config> {
     if let Some(v) = args.get("provdb-batch") {
         cfg.apply("provdb.batch", v)?;
     }
+    if let Some(v) = args.get("probe") {
+        cfg.apply("probe.file", v)?;
+    }
     if args.flag("unfiltered") {
         cfg.filtered = false;
     }
@@ -150,6 +162,10 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     );
     if cfg.backend == DetectorBackend::Xla {
         println!("  (AOT artifacts from {}/)", cfg.artifacts_dir);
+    }
+    if !cfg.probe_file.is_empty() {
+        let n = install_probe_file(&cfg.probe_file, &cfg.provdb_addr)?;
+        println!("  installed {} probe(s) from {} into {}", n, cfg.probe_file, cfg.provdb_addr);
     }
     let report = run(&cfg, &workflow, Mode::TauChimbuko)?;
     println!("{}", report.to_json().to_pretty());
@@ -305,6 +321,72 @@ fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Install every probe in `path` into the provDB service at `addr`.
+fn install_probe_file(path: &str, addr: &str) -> anyhow::Result<usize> {
+    anyhow::ensure!(!addr.is_empty(), "--probe requires --provdb (or provdb.addr in the config)");
+    let source = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading probe file {path}: {e}"))?;
+    let probes = chimbuko::probe::Probe::compile_all(&source)
+        .map_err(|e| anyhow::anyhow!("compiling probe file {path}: {e:#}"))?;
+    let mut client = chimbuko::provdb::ProvClient::connect(addr)?;
+    for p in &probes {
+        client.install_probe(p)?;
+    }
+    Ok(probes.len())
+}
+
+/// `chimbuko probe <check|install|list|remove>` — compile probe files and
+/// manage the probes installed in a running provDB service.
+fn cmd_probe(args: &Args) -> anyhow::Result<()> {
+    let usage = "usage: chimbuko probe <check <file> | install <file> --provdb host:port | list --provdb host:port | remove <name> --provdb host:port>";
+    let pos = args.positionals();
+    match pos.first().map(|s| s.as_str()) {
+        Some("check") => {
+            let path = pos.get(1).ok_or_else(|| anyhow::anyhow!("probe check needs a file"))?;
+            let source = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading probe file {path}: {e}"))?;
+            let probes = chimbuko::probe::Probe::compile_all(&source)
+                .map_err(|e| anyhow::anyhow!("{path}: {e:#}"))?;
+            println!("{path}: {} probe(s) ok", probes.len());
+            for p in &probes {
+                println!("  {}", p.describe());
+            }
+            Ok(())
+        }
+        Some("install") => {
+            let path = pos.get(1).ok_or_else(|| anyhow::anyhow!("probe install needs a file"))?;
+            let addr = args.str_opt("provdb", "");
+            let n = install_probe_file(path, &addr)?;
+            println!("installed {n} probe(s) from {path} into {addr}");
+            Ok(())
+        }
+        Some("list") => {
+            let addr = args.str_opt("provdb", "");
+            anyhow::ensure!(!addr.is_empty(), "probe list needs --provdb host:port");
+            let mut client = chimbuko::provdb::ProvClient::connect(&addr)?;
+            let infos = client.list_probes()?;
+            println!("{} probe(s) installed at {addr}", infos.len());
+            for i in &infos {
+                println!(
+                    "  {}: matches={} shed={} pushed_records={} pushed_bytes={}\n    {}",
+                    i.name, i.matches, i.shed, i.pushed_records, i.pushed_bytes, i.source
+                );
+            }
+            Ok(())
+        }
+        Some("remove") => {
+            let name = pos.get(1).ok_or_else(|| anyhow::anyhow!("probe remove needs a name"))?;
+            let addr = args.str_opt("provdb", "");
+            anyhow::ensure!(!addr.is_empty(), "probe remove needs --provdb host:port");
+            let mut client = chimbuko::provdb::ProvClient::connect(&addr)?;
+            let existed = client.remove_probe(name)?;
+            println!("{}", if existed { "removed" } else { "no such probe" });
+            Ok(())
+        }
+        _ => anyhow::bail!("{usage}"),
+    }
+}
+
 /// Standalone parameter server reachable over TCP (`ps::net` protocol) —
 /// the cross-process deployment shape of the paper's architecture.
 ///
@@ -335,6 +417,8 @@ fn cmd_ps_server(args: &Args) -> anyhow::Result<()> {
         rebalance_interval_ms: args.u64_opt("rebalance-interval-ms", 0),
         rebalance_max_ratio: args.f64_opt("rebalance-max-ratio", 1.5),
         rebalance_min_merges: args.u64_opt("rebalance-min-merges", 256),
+        trigger_probes: Vec::new(),
+        trigger_tx: None,
     })?;
     let net_opts = chimbuko::util::net::ReactorOpts {
         threads: args.usize_opt("reactor-threads", 2),

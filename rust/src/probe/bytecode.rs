@@ -1,0 +1,360 @@
+//! Probe bytecode: opcodes, typed constant pool, and the verifier that
+//! makes over-the-wire programs safe to run against every scanned record.
+//!
+//! The instruction set is deliberately *branch-free*: a verified program
+//! is a straight-line expression evaluation ending in [`OP_RET`], so the
+//! per-record instruction budget is simply the code length (≤
+//! [`MAX_CODE`]) — no jump targets to validate, no loop bounds to prove.
+//! The verifier statically simulates the operand stack with abstract
+//! types, so the VM ([`super::vm`]) never sees a type confusion, a stack
+//! underflow, an out-of-range constant index, or a string where a number
+//! is expected.
+//!
+//! Untrusted programs (probe installs arriving over the provDB wire) are
+//! run through [`verify`] before they are ever evaluated; rejection is an
+//! `Err`, never a panic (pinned by the fuzz tests in `tests/probe.rs`).
+
+use anyhow::{bail, ensure, Result};
+
+// ---- opcodes -------------------------------------------------------------
+
+/// Return the boolean at the top of the stack. Must be the final byte of
+/// the program (the verifier enforces exactly one `RET`, at the end).
+pub const OP_RET: u8 = 0;
+/// `CONST <u16 idx>` — push constant pool entry `idx` (numeric only;
+/// strings are operands of [`OP_STREQ`], never stack values).
+pub const OP_CONST: u8 = 1;
+/// `LOAD <u8 field>` — push a header field read at its fixed offset.
+pub const OP_LOAD: u8 = 2;
+/// `STREQ <u8 field> <u16 idx>` — push `record.field == consts[idx]` for
+/// the string fields ([`FIELD_LABEL`], [`FIELD_FUNC`]). The comparison
+/// walks the encoded payload at fixed offsets; it never decodes.
+pub const OP_STREQ: u8 = 3;
+pub const OP_EQ: u8 = 4;
+pub const OP_NE: u8 = 5;
+pub const OP_LT: u8 = 6;
+pub const OP_LE: u8 = 7;
+pub const OP_GT: u8 = 8;
+pub const OP_GE: u8 = 9;
+pub const OP_AND: u8 = 10;
+pub const OP_OR: u8 = 11;
+pub const OP_NOT: u8 = 12;
+pub const OP_ADD: u8 = 13;
+pub const OP_SUB: u8 = 14;
+pub const OP_MUL: u8 = 15;
+pub const OP_DIV: u8 = 16;
+
+// ---- record fields (operands of LOAD / STREQ) ----------------------------
+
+pub const FIELD_APP: u8 = 0;
+pub const FIELD_RANK: u8 = 1;
+pub const FIELD_FID: u8 = 2;
+pub const FIELD_STEP: u8 = 3;
+pub const FIELD_ENTRY_US: u8 = 4;
+pub const FIELD_EXIT_US: u8 = 5;
+pub const FIELD_SCORE: u8 = 6;
+/// `label != "normal"` as a single header-byte read (`Bool`).
+pub const FIELD_ANOMALY: u8 = 7;
+/// String field: the record label (header tag, or the payload text for
+/// custom labels). STREQ-only.
+pub const FIELD_LABEL: u8 = 8;
+/// String field: the function name in the payload. STREQ-only.
+pub const FIELD_FUNC: u8 = 9;
+
+/// Source-language name of a field id (diagnostics, docs).
+pub fn field_name(f: u8) -> Option<&'static str> {
+    Some(match f {
+        FIELD_APP => "app",
+        FIELD_RANK => "rank",
+        FIELD_FID => "fid",
+        FIELD_STEP => "step",
+        FIELD_ENTRY_US => "entry_us",
+        FIELD_EXIT_US => "exit_us",
+        FIELD_SCORE => "score",
+        FIELD_ANOMALY => "anomaly",
+        FIELD_LABEL => "label",
+        FIELD_FUNC => "func",
+        _ => return None,
+    })
+}
+
+/// Field id of a source-language name.
+pub fn field_of_name(s: &str) -> Option<u8> {
+    Some(match s {
+        "app" => FIELD_APP,
+        "rank" => FIELD_RANK,
+        "fid" => FIELD_FID,
+        "step" => FIELD_STEP,
+        "entry_us" => FIELD_ENTRY_US,
+        "exit_us" => FIELD_EXIT_US,
+        "score" => FIELD_SCORE,
+        "anomaly" => FIELD_ANOMALY,
+        "label" => FIELD_LABEL,
+        "func" => FIELD_FUNC,
+        _ => return None,
+    })
+}
+
+// ---- verifier limits -----------------------------------------------------
+
+/// Hard per-record instruction budget: code longer than this is rejected
+/// at install time, and the VM re-enforces it as defense in depth.
+pub const MAX_CODE: usize = 1024;
+/// Constant-pool cap.
+pub const MAX_CONSTS: usize = 64;
+/// Pool-string byte cap.
+pub const MAX_STR: usize = 256;
+/// Operand-stack depth cap (abstractly checked here, concretely in the VM).
+pub const MAX_STACK: usize = 32;
+
+/// A typed constant-pool entry. Integers and floats are distinct so u64
+/// comparisons stay exact above 2^53 (`step`, timestamps) — they only
+/// coerce to f64 when mixed with a float operand.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Const {
+    U(u64),
+    F(f64),
+    S(String),
+}
+
+/// A compiled probe predicate: opcode stream + constant pool.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Program {
+    pub consts: Vec<Const>,
+    pub code: Vec<u8>,
+}
+
+impl Program {
+    /// Convenience wrapper over [`verify`].
+    pub fn verify(&self) -> Result<()> {
+        verify(self)
+    }
+}
+
+/// Abstract operand type for static stack simulation.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+enum Ty {
+    U,
+    F,
+    B,
+}
+
+/// Validate an untrusted program: bounded pool and code, in-range
+/// operands, and a full abstract-typed stack simulation — every pop is
+/// type-checked, depth never exceeds [`MAX_STACK`], and the single
+/// [`OP_RET`] (which must be the last byte) returns exactly one `Bool`.
+pub fn verify(p: &Program) -> Result<()> {
+    ensure!(!p.code.is_empty(), "empty program");
+    ensure!(p.code.len() <= MAX_CODE, "code too long ({} > {MAX_CODE})", p.code.len());
+    ensure!(
+        p.consts.len() <= MAX_CONSTS,
+        "constant pool too large ({} > {MAX_CONSTS})",
+        p.consts.len()
+    );
+    for c in &p.consts {
+        if let Const::S(s) = c {
+            ensure!(s.len() <= MAX_STR, "pool string too long ({} > {MAX_STR})", s.len());
+        }
+    }
+    fn take1(code: &[u8], pc: &mut usize, at: usize) -> Result<u8> {
+        let v = *code
+            .get(*pc)
+            .ok_or_else(|| anyhow::anyhow!("truncated operand at pc {at}"))?;
+        *pc += 1;
+        Ok(v)
+    }
+    fn take2(code: &[u8], pc: &mut usize, at: usize) -> Result<u16> {
+        let lo = take1(code, pc, at)?;
+        let hi = take1(code, pc, at)?;
+        Ok(u16::from_le_bytes([lo, hi]))
+    }
+    fn pop(stack: &mut Vec<Ty>, at: usize) -> Result<Ty> {
+        stack.pop().ok_or_else(|| anyhow::anyhow!("stack underflow at pc {at}"))
+    }
+    let code = &p.code;
+    let mut stack: Vec<Ty> = Vec::with_capacity(MAX_STACK);
+    let mut pc = 0usize;
+    while pc < code.len() {
+        let at = pc;
+        let op = code[pc];
+        pc += 1;
+        match op {
+            OP_RET => {
+                ensure!(pc == code.len(), "RET before end of code at pc {at}");
+                ensure!(stack.len() == 1, "RET with stack depth {} at pc {at}", stack.len());
+                ensure!(stack[0] == Ty::B, "RET with non-bool result at pc {at}");
+                return Ok(());
+            }
+            OP_CONST => {
+                let idx = take2(code, &mut pc, at)? as usize;
+                match p.consts.get(idx) {
+                    Some(Const::U(_)) => stack.push(Ty::U),
+                    Some(Const::F(_)) => stack.push(Ty::F),
+                    Some(Const::S(_)) => bail!("CONST of string pool entry {idx} at pc {at} (strings are STREQ operands)"),
+                    None => bail!("CONST index {idx} out of range at pc {at}"),
+                }
+            }
+            OP_LOAD => {
+                let f = take1(code, &mut pc, at)?;
+                match f {
+                    FIELD_APP | FIELD_RANK | FIELD_FID | FIELD_STEP | FIELD_ENTRY_US
+                    | FIELD_EXIT_US => stack.push(Ty::U),
+                    FIELD_SCORE => stack.push(Ty::F),
+                    FIELD_ANOMALY => stack.push(Ty::B),
+                    FIELD_LABEL | FIELD_FUNC => {
+                        bail!("LOAD of string field {} at pc {at} (use STREQ)", field_name(f).unwrap())
+                    }
+                    _ => bail!("LOAD of unknown field {f} at pc {at}"),
+                }
+            }
+            OP_STREQ => {
+                let f = take1(code, &mut pc, at)?;
+                ensure!(
+                    f == FIELD_LABEL || f == FIELD_FUNC,
+                    "STREQ of non-string field {f} at pc {at}"
+                );
+                let idx = take2(code, &mut pc, at)? as usize;
+                match p.consts.get(idx) {
+                    Some(Const::S(_)) => stack.push(Ty::B),
+                    Some(_) => bail!("STREQ against non-string pool entry {idx} at pc {at}"),
+                    None => bail!("STREQ index {idx} out of range at pc {at}"),
+                }
+            }
+            OP_EQ | OP_NE | OP_LT | OP_LE | OP_GT | OP_GE => {
+                let b = pop(&mut stack, at)?;
+                let a = pop(&mut stack, at)?;
+                ensure!(
+                    a != Ty::B && b != Ty::B,
+                    "numeric comparison of bool operand at pc {at}"
+                );
+                stack.push(Ty::B);
+            }
+            OP_AND | OP_OR => {
+                let b = pop(&mut stack, at)?;
+                let a = pop(&mut stack, at)?;
+                ensure!(a == Ty::B && b == Ty::B, "logical op on non-bool at pc {at}");
+                stack.push(Ty::B);
+            }
+            OP_NOT => {
+                let a = pop(&mut stack, at)?;
+                ensure!(a == Ty::B, "NOT on non-bool at pc {at}");
+                stack.push(Ty::B);
+            }
+            OP_ADD | OP_SUB | OP_MUL | OP_DIV => {
+                let b = pop(&mut stack, at)?;
+                let a = pop(&mut stack, at)?;
+                ensure!(
+                    a != Ty::B && b != Ty::B,
+                    "arithmetic on bool operand at pc {at}"
+                );
+                // Arithmetic is evaluated in f64 regardless of input types.
+                stack.push(Ty::F);
+            }
+            other => bail!("unknown opcode {other} at pc {at}"),
+        }
+        ensure!(stack.len() <= MAX_STACK, "stack depth exceeds {MAX_STACK} at pc {at}");
+    }
+    bail!("program does not end in RET")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prog(consts: Vec<Const>, code: Vec<u8>) -> Program {
+        Program { consts, code }
+    }
+
+    #[test]
+    fn verifies_minimal_true_program() {
+        // 0 == 0 → true
+        let p = prog(
+            vec![Const::U(0)],
+            vec![OP_CONST, 0, 0, OP_CONST, 0, 0, OP_EQ, OP_RET],
+        );
+        p.verify().unwrap();
+    }
+
+    #[test]
+    fn rejects_structural_garbage() {
+        // Empty.
+        assert!(verify(&prog(vec![], vec![])).is_err());
+        // No RET.
+        assert!(verify(&prog(vec![Const::U(1)], vec![OP_CONST, 0, 0])).is_err());
+        // RET with non-bool.
+        assert!(verify(&prog(vec![Const::U(1)], vec![OP_CONST, 0, 0, OP_RET])).is_err());
+        // RET with empty stack.
+        assert!(verify(&prog(vec![], vec![OP_RET])).is_err());
+        // RET not last.
+        let p = prog(
+            vec![Const::U(0)],
+            vec![OP_CONST, 0, 0, OP_CONST, 0, 0, OP_EQ, OP_RET, OP_NOT],
+        );
+        assert!(verify(&p).is_err());
+        // Unknown opcode.
+        assert!(verify(&prog(vec![], vec![99, OP_RET])).is_err());
+        // Truncated operand.
+        assert!(verify(&prog(vec![Const::U(0)], vec![OP_CONST, 0])).is_err());
+    }
+
+    #[test]
+    fn rejects_type_confusion() {
+        // Logical AND of numbers.
+        let p = prog(
+            vec![Const::U(1)],
+            vec![OP_CONST, 0, 0, OP_CONST, 0, 0, OP_AND, OP_RET],
+        );
+        assert!(verify(&p).is_err());
+        // Comparison of bools.
+        let p = prog(
+            vec![],
+            vec![OP_LOAD, FIELD_ANOMALY, OP_LOAD, FIELD_ANOMALY, OP_LT, OP_RET],
+        );
+        assert!(verify(&p).is_err());
+        // LOAD of a string field.
+        assert!(verify(&prog(vec![], vec![OP_LOAD, FIELD_LABEL, OP_RET])).is_err());
+        // CONST of a string.
+        let p = prog(vec![Const::S("x".into())], vec![OP_CONST, 0, 0, OP_RET]);
+        assert!(verify(&p).is_err());
+        // STREQ against a number.
+        let p = prog(vec![Const::U(1)], vec![OP_STREQ, FIELD_LABEL, 0, 0, OP_RET]);
+        assert!(verify(&p).is_err());
+        // STREQ of a numeric field.
+        let p = prog(vec![Const::S("x".into())], vec![OP_STREQ, FIELD_SCORE, 0, 0, OP_RET]);
+        assert!(verify(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_over_budget_programs() {
+        // Code over MAX_CODE.
+        let mut code = vec![OP_LOAD, FIELD_ANOMALY];
+        while code.len() <= MAX_CODE {
+            code.push(OP_NOT);
+        }
+        code.push(OP_RET);
+        assert!(verify(&prog(vec![], code)).is_err());
+        // Pool over MAX_CONSTS.
+        let consts = vec![Const::U(1); MAX_CONSTS + 1];
+        assert!(verify(&prog(consts, vec![OP_LOAD, FIELD_ANOMALY, OP_RET])).is_err());
+        // String over MAX_STR.
+        let consts = vec![Const::S("x".repeat(MAX_STR + 1))];
+        let code = vec![OP_STREQ, FIELD_LABEL, 0, 0, OP_RET];
+        assert!(verify(&prog(consts, code)).is_err());
+        // Stack deeper than MAX_STACK.
+        let mut code = Vec::new();
+        for _ in 0..MAX_STACK + 1 {
+            code.extend_from_slice(&[OP_LOAD, FIELD_ANOMALY]);
+        }
+        code.push(OP_RET);
+        assert!(verify(&prog(vec![], code)).is_err());
+    }
+
+    #[test]
+    fn field_names_round_trip() {
+        for f in 0..=FIELD_FUNC {
+            assert_eq!(field_of_name(field_name(f).unwrap()), Some(f));
+        }
+        assert_eq!(field_name(200), None);
+        assert_eq!(field_of_name("bogus"), None);
+    }
+}

@@ -1,0 +1,267 @@
+//! AST → bytecode lowering. The site's `app`/`func` filters are folded
+//! into the program as leading conjuncts, so a compiled probe is a
+//! single predicate evaluation per record — one [`vm::eval`](super::vm)
+//! call decides site *and* predicate with zero decoding.
+//!
+//! Every compiled program is run through the verifier before it is
+//! returned, so the compiler cannot emit anything the wire would reject.
+
+use anyhow::{bail, ensure, Result};
+
+use super::bytecode::*;
+use super::lang::{BinOp, Expr, ProbeDef};
+
+struct Compiler {
+    prog: Program,
+}
+
+impl Compiler {
+    fn konst(&mut self, c: Const) -> Result<u16> {
+        // Pool dedup keeps repeated literals within MAX_CONSTS. NaN floats
+        // never compare equal, so they always append — harmless, a source
+        // can't spell NaN anyway.
+        if let Some(i) = self.prog.consts.iter().position(|x| x == &c) {
+            return Ok(i as u16);
+        }
+        ensure!(
+            self.prog.consts.len() < MAX_CONSTS,
+            "predicate needs more than {MAX_CONSTS} constants"
+        );
+        if let Const::S(s) = &c {
+            ensure!(s.len() <= MAX_STR, "string literal too long ({} > {MAX_STR})", s.len());
+        }
+        self.prog.consts.push(c);
+        Ok((self.prog.consts.len() - 1) as u16)
+    }
+
+    fn emit(&mut self, op: u8) {
+        self.prog.code.push(op);
+    }
+
+    fn emit_const(&mut self, c: Const) -> Result<()> {
+        let i = self.konst(c)?;
+        self.emit(OP_CONST);
+        self.prog.code.extend_from_slice(&i.to_le_bytes());
+        Ok(())
+    }
+
+    fn emit_streq(&mut self, field: u8, s: &str) -> Result<()> {
+        let i = self.konst(Const::S(s.to_string()))?;
+        self.emit(OP_STREQ);
+        self.prog.code.push(field);
+        self.prog.code.extend_from_slice(&i.to_le_bytes());
+        Ok(())
+    }
+
+    fn expr(&mut self, e: &Expr) -> Result<()> {
+        match e {
+            Expr::Int(v) => self.emit_const(Const::U(*v))?,
+            Expr::Float(v) => self.emit_const(Const::F(*v))?,
+            Expr::Str(_) => {
+                bail!("string literal is only valid compared (==/!=) against label or func")
+            }
+            Expr::Field(f) if *f == FIELD_LABEL || *f == FIELD_FUNC => {
+                bail!(
+                    "'{}' is a string field: compare it with ==/!= against a string",
+                    field_name(*f).unwrap()
+                )
+            }
+            Expr::Field(f) => {
+                self.emit(OP_LOAD);
+                self.prog.code.push(*f);
+            }
+            Expr::Not(x) => {
+                self.expr(x)?;
+                self.emit(OP_NOT);
+            }
+            Expr::Neg(x) => {
+                self.emit_const(Const::F(0.0))?;
+                self.expr(x)?;
+                self.emit(OP_SUB);
+            }
+            Expr::Bin(op @ (BinOp::Eq | BinOp::Ne), a, b) => {
+                // String comparisons lower to STREQ (+ NOT for !=); the
+                // string may be on either side.
+                let str_cmp = match (a.as_ref(), b.as_ref()) {
+                    (Expr::Field(f), Expr::Str(s)) | (Expr::Str(s), Expr::Field(f))
+                        if *f == FIELD_LABEL || *f == FIELD_FUNC =>
+                    {
+                        Some((*f, s.clone()))
+                    }
+                    _ => None,
+                };
+                match str_cmp {
+                    Some((f, s)) => self.emit_streq(f, &s)?,
+                    None => {
+                        self.expr(a)?;
+                        self.expr(b)?;
+                        self.emit(OP_EQ);
+                    }
+                }
+                if *op == BinOp::Ne {
+                    // != is NOT of the equality. On the numeric path this
+                    // is IEEE-correct: EQ(NaN,·) is false, so NE is true.
+                    self.emit(OP_NOT);
+                }
+            }
+            Expr::Bin(op, a, b) => {
+                self.expr(a)?;
+                self.expr(b)?;
+                self.emit(match op {
+                    BinOp::Lt => OP_LT,
+                    BinOp::Le => OP_LE,
+                    BinOp::Gt => OP_GT,
+                    BinOp::Ge => OP_GE,
+                    BinOp::And => OP_AND,
+                    BinOp::Or => OP_OR,
+                    BinOp::Add => OP_ADD,
+                    BinOp::Sub => OP_SUB,
+                    BinOp::Mul => OP_MUL,
+                    BinOp::Div => OP_DIV,
+                    BinOp::Eq | BinOp::Ne => unreachable!("handled above"),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Compile one parsed probe to a verified [`Program`].
+pub fn compile(def: &ProbeDef) -> Result<Program> {
+    let mut c = Compiler { prog: Program::default() };
+    let mut terms = 0usize;
+    if let Some(app) = def.site.app {
+        c.emit(OP_LOAD);
+        c.prog.code.push(FIELD_APP);
+        c.emit_const(Const::U(app as u64))?;
+        c.emit(OP_EQ);
+        terms += 1;
+    }
+    if let Some(f) = &def.site.func {
+        c.emit_streq(FIELD_FUNC, f)?;
+        terms += 1;
+    }
+    if let Some(p) = &def.pred {
+        c.expr(p)?;
+        terms += 1;
+    }
+    if terms == 0 {
+        // Vacuously-true probe (pure wildcard site): 0 == 0.
+        c.emit_const(Const::U(0))?;
+        c.emit_const(Const::U(0))?;
+        c.emit(OP_EQ);
+        terms = 1;
+    }
+    for _ in 1..terms {
+        c.emit(OP_AND);
+    }
+    c.emit(OP_RET);
+    c.prog
+        .verify()
+        .map_err(|e| anyhow::anyhow!("probe predicate does not type-check: {e}"))?;
+    Ok(c.prog)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::probe::lang::parse_one;
+    use crate::probe::vm::eval;
+    use crate::provenance::{codec, ProvRecord};
+
+    fn enc(app: u32, func: &str, label: &str, score: f64, step: u64) -> Vec<u8> {
+        let r = ProvRecord {
+            call_id: 0,
+            app,
+            rank: 1,
+            thread: 0,
+            fid: 2,
+            func: func.into(),
+            step,
+            entry_us: 10,
+            exit_us: 20,
+            inclusive_us: 10,
+            exclusive_us: 5,
+            depth: 0,
+            parent: None,
+            n_children: 0,
+            n_messages: 0,
+            msg_bytes: 0,
+            label: label.into(),
+            score,
+        };
+        let mut b = Vec::new();
+        codec::encode(&r, &mut b);
+        b
+    }
+
+    fn compiled(src: &str) -> Program {
+        compile(&parse_one(src).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn site_filters_fold_into_the_program() {
+        let p = compiled("fn:3.md_force:exit / score > 1.0 /");
+        assert!(eval(&p, &enc(3, "md_force", "normal", 2.0, 0)));
+        assert!(!eval(&p, &enc(4, "md_force", "normal", 2.0, 0)), "app filter");
+        assert!(!eval(&p, &enc(3, "md_io", "normal", 2.0, 0)), "func filter");
+        assert!(!eval(&p, &enc(3, "md_force", "normal", 0.5, 0)), "predicate");
+    }
+
+    #[test]
+    fn wildcard_site_is_vacuously_true() {
+        let p = compiled("fn:*.*:exit");
+        assert!(eval(&p, &enc(0, "anything", "normal", 0.0, 0)));
+    }
+
+    #[test]
+    fn label_and_func_string_compares() {
+        let p = compiled("fn:*.*:exit / label == \"weird\" /");
+        assert!(eval(&p, &enc(0, "f", "weird", 0.0, 0)));
+        assert!(!eval(&p, &enc(0, "f", "normal", 0.0, 0)));
+        let p = compiled("fn:*.*:exit / label != \"normal\" && func == \"f\" /");
+        assert!(eval(&p, &enc(0, "f", "anomaly_high", 0.0, 0)));
+        assert!(!eval(&p, &enc(0, "f", "normal", 0.0, 0)));
+        assert!(!eval(&p, &enc(0, "g", "anomaly_high", 0.0, 0)));
+        // Reversed operand order.
+        let p = compiled("fn:*.*:exit / \"weird\" == label /");
+        assert!(eval(&p, &enc(0, "f", "weird", 0.0, 0)));
+    }
+
+    #[test]
+    fn arithmetic_logicals_and_negation() {
+        let p = compiled("fn:*.*:exit / score * 2.0 >= 4.0 || (anomaly && step != 7) /");
+        assert!(eval(&p, &enc(0, "f", "normal", 2.0, 7)));
+        assert!(eval(&p, &enc(0, "f", "anomaly_low", 0.0, 8)));
+        assert!(!eval(&p, &enc(0, "f", "anomaly_low", 0.0, 7)));
+        let p = compiled("fn:*.*:exit / score >= -0.5 /");
+        assert!(eval(&p, &enc(0, "f", "normal", 0.0, 0)));
+        assert!(!eval(&p, &enc(0, "f", "normal", -1.0, 0)));
+    }
+
+    #[test]
+    fn type_errors_surface_at_compile_time() {
+        for bad in [
+            "fn:*.*:exit / label /",
+            "fn:*.*:exit / func > 1 /",
+            "fn:*.*:exit / \"str\" /",
+            "fn:*.*:exit / \"a\" == \"b\" /",
+            "fn:*.*:exit / score == \"x\" /",
+            "fn:*.*:exit / anomaly + 1 > 0 /",
+            "fn:*.*:exit / (score > 1) > (score > 2) /",
+            "fn:*.*:exit / step && anomaly /",
+            "fn:*.*:exit / !score /",
+        ] {
+            let def = parse_one(bad).unwrap();
+            assert!(compile(&def).is_err(), "must reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn pool_dedup_keeps_repeats_compact() {
+        let p = compiled(
+            "fn:*.*:exit / step == 5 || step == 5 || step == 5 || label == \"x\" || label == \"x\" /",
+        );
+        assert_eq!(p.consts.len(), 2);
+    }
+}

@@ -1,0 +1,672 @@
+//! The probe language: hand-written lexer and recursive-descent parser
+//! producing the AST the compiler lowers to bytecode.
+//!
+//! ```text
+//! program  := probe*
+//! probe    := [ "probe" NAME ":" ] site [ "/" expr "/" ]
+//!             [ "sample" rate ] [ "{" action* "}" ]
+//! site     := "fn" ":" appspec "." funcspec ":" ( "entry" | "exit" )
+//! appspec  := "*" | INT
+//! funcspec := "*" | IDENT | STRING
+//! rate     := INT "%" | INT "/" INT
+//! action   := "capture" "(" ( "record" | "stack" ) ")" ";"
+//! expr     := or-expression over comparisons, arithmetic, "!", parens
+//! fields   := app rank fid step entry_us exit_us score anomaly label func
+//! ```
+//!
+//! `#` starts a line comment. Inside a predicate, a `/` at parenthesis
+//! depth zero *closes* the predicate (DTrace-style delimiters); use
+//! parentheses to divide: `/ (exclusive_us / 1000) > 5 /` is a parse
+//! error while `/ score > (step / 2) /` is fine. The parser caps source
+//! size and probe count so untrusted sources cannot over-allocate.
+
+use anyhow::{bail, ensure, Result};
+
+use super::bytecode::field_of_name;
+
+/// Source cap for untrusted probe text (wire installs, files).
+pub const MAX_SOURCE: usize = 64 << 10;
+/// Probes per source cap.
+pub const MAX_PROBES: usize = 64;
+/// Probe-name byte cap.
+pub const MAX_NAME: usize = 128;
+
+/// Probe attachment event. Provenance records describe *completed*
+/// executions, so both events see the same records today; the
+/// distinction is kept for display and forward compatibility.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Event {
+    Entry,
+    Exit,
+}
+
+impl Event {
+    pub fn name(self) -> &'static str {
+        match self {
+            Event::Entry => "entry",
+            Event::Exit => "exit",
+        }
+    }
+}
+
+/// Probe action. `capture(record)` pushes the matching record itself
+/// (the default when no block is given); `capture(stack)` marks the
+/// probe as a call-stack subscription — consumers fetch the surrounding
+/// `(app, rank, step)` stack for each match.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Action {
+    CaptureRecord,
+    CaptureStack,
+}
+
+impl Action {
+    pub fn name(self) -> &'static str {
+        match self {
+            Action::CaptureRecord => "capture(record)",
+            Action::CaptureStack => "capture(stack)",
+        }
+    }
+}
+
+/// The probe site: which records the probe attaches to before the
+/// predicate runs. `None` entries are `*` wildcards.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Site {
+    pub app: Option<u32>,
+    pub func: Option<String>,
+    pub event: Event,
+}
+
+/// Binary operators, source-level.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    And,
+    Or,
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+/// Predicate expression AST.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    Int(u64),
+    Float(f64),
+    Str(String),
+    Field(u8),
+    Not(Box<Expr>),
+    Neg(Box<Expr>),
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+}
+
+/// One parsed probe definition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProbeDef {
+    pub name: Option<String>,
+    pub site: Site,
+    pub pred: Option<Expr>,
+    /// Keep `n` of every `m` matching records.
+    pub sample: Option<(u32, u32)>,
+    pub actions: Vec<Action>,
+    /// Byte span of this probe in the source (for listings).
+    pub span: (usize, usize),
+}
+
+// ---- lexer ---------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+enum Tok {
+    Ident(String),
+    Int(u64),
+    Float(f64),
+    Str(String),
+    Colon,
+    Dot,
+    Slash,
+    Percent,
+    LBrace,
+    RBrace,
+    LParen,
+    RParen,
+    Semi,
+    Star,
+    AndAnd,
+    OrOr,
+    Bang,
+    EqEq,
+    NotEq,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Plus,
+    Minus,
+}
+
+/// (token, byte offset of its first character)
+fn lex(src: &str) -> Result<Vec<(Tok, usize)>> {
+    ensure!(src.len() <= MAX_SOURCE, "probe source too long ({} > {MAX_SOURCE})", src.len());
+    let b = src.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        let at = i;
+        let c = b[i];
+        match c {
+            b' ' | b'\t' | b'\r' | b'\n' => i += 1,
+            b'#' => {
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b':' => {
+                out.push((Tok::Colon, at));
+                i += 1;
+            }
+            b'.' => {
+                out.push((Tok::Dot, at));
+                i += 1;
+            }
+            b'/' => {
+                out.push((Tok::Slash, at));
+                i += 1;
+            }
+            b'%' => {
+                out.push((Tok::Percent, at));
+                i += 1;
+            }
+            b'{' => {
+                out.push((Tok::LBrace, at));
+                i += 1;
+            }
+            b'}' => {
+                out.push((Tok::RBrace, at));
+                i += 1;
+            }
+            b'(' => {
+                out.push((Tok::LParen, at));
+                i += 1;
+            }
+            b')' => {
+                out.push((Tok::RParen, at));
+                i += 1;
+            }
+            b';' => {
+                out.push((Tok::Semi, at));
+                i += 1;
+            }
+            b'*' => {
+                out.push((Tok::Star, at));
+                i += 1;
+            }
+            b'+' => {
+                out.push((Tok::Plus, at));
+                i += 1;
+            }
+            b'-' => {
+                out.push((Tok::Minus, at));
+                i += 1;
+            }
+            b'&' => {
+                ensure!(b.get(i + 1) == Some(&b'&'), "lone '&' at byte {at}");
+                out.push((Tok::AndAnd, at));
+                i += 2;
+            }
+            b'|' => {
+                ensure!(b.get(i + 1) == Some(&b'|'), "lone '|' at byte {at}");
+                out.push((Tok::OrOr, at));
+                i += 2;
+            }
+            b'!' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push((Tok::NotEq, at));
+                    i += 2;
+                } else {
+                    out.push((Tok::Bang, at));
+                    i += 1;
+                }
+            }
+            b'=' => {
+                ensure!(b.get(i + 1) == Some(&b'='), "lone '=' at byte {at} (use ==)");
+                out.push((Tok::EqEq, at));
+                i += 2;
+            }
+            b'<' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push((Tok::Le, at));
+                    i += 2;
+                } else {
+                    out.push((Tok::Lt, at));
+                    i += 1;
+                }
+            }
+            b'>' => {
+                if b.get(i + 1) == Some(&b'=') {
+                    out.push((Tok::Ge, at));
+                    i += 2;
+                } else {
+                    out.push((Tok::Gt, at));
+                    i += 1;
+                }
+            }
+            b'"' => {
+                i += 1;
+                let mut s = String::new();
+                loop {
+                    match b.get(i) {
+                        None => bail!("unterminated string at byte {at}"),
+                        Some(b'"') => {
+                            i += 1;
+                            break;
+                        }
+                        Some(b'\\') => {
+                            let esc = b.get(i + 1).ok_or_else(|| {
+                                anyhow::anyhow!("unterminated escape at byte {i}")
+                            })?;
+                            s.push(match esc {
+                                b'"' => '"',
+                                b'\\' => '\\',
+                                b'n' => '\n',
+                                b't' => '\t',
+                                other => bail!("unknown escape \\{} at byte {i}", *other as char),
+                            });
+                            i += 2;
+                        }
+                        Some(_) => {
+                            // Consume one whole UTF-8 scalar.
+                            let rest = &src[i..];
+                            let ch = rest.chars().next().unwrap();
+                            s.push(ch);
+                            i += ch.len_utf8();
+                        }
+                    }
+                }
+                out.push((Tok::Str(s), at));
+            }
+            b'0'..=b'9' => {
+                let start = i;
+                while i < b.len() && b[i].is_ascii_digit() {
+                    i += 1;
+                }
+                let mut float = false;
+                if i < b.len() && b[i] == b'.' && b.get(i + 1).is_some_and(|d| d.is_ascii_digit()) {
+                    float = true;
+                    i += 1;
+                    while i < b.len() && b[i].is_ascii_digit() {
+                        i += 1;
+                    }
+                }
+                if i < b.len() && (b[i] == b'e' || b[i] == b'E') {
+                    let mut j = i + 1;
+                    if matches!(b.get(j), Some(b'+') | Some(b'-')) {
+                        j += 1;
+                    }
+                    if b.get(j).is_some_and(|d| d.is_ascii_digit()) {
+                        float = true;
+                        i = j;
+                        while i < b.len() && b[i].is_ascii_digit() {
+                            i += 1;
+                        }
+                    }
+                }
+                let text = &src[start..i];
+                if float {
+                    let v: f64 = text
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad float literal '{text}' at byte {at}"))?;
+                    out.push((Tok::Float(v), at));
+                } else {
+                    let v: u64 = text
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("integer literal '{text}' out of range at byte {at}"))?;
+                    out.push((Tok::Int(v), at));
+                }
+            }
+            c if c == b'_' || c.is_ascii_alphabetic() => {
+                let start = i;
+                while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                    i += 1;
+                }
+                out.push((Tok::Ident(src[start..i].to_string()), at));
+            }
+            other => bail!("unexpected character '{}' at byte {at}", other as char),
+        }
+    }
+    Ok(out)
+}
+
+// ---- parser --------------------------------------------------------------
+
+struct Parser<'a> {
+    toks: &'a [(Tok, usize)],
+    pos: usize,
+    src_len: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos).map(|(t, _)| t)
+    }
+
+    fn at(&self) -> usize {
+        self.toks
+            .get(self.pos)
+            .map(|(_, o)| *o)
+            .unwrap_or(self.src_len)
+    }
+
+    fn next(&mut self) -> Result<Tok> {
+        let t = self
+            .toks
+            .get(self.pos)
+            .map(|(t, _)| t.clone())
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of probe source"))?;
+        self.pos += 1;
+        Ok(t)
+    }
+
+    fn expect(&mut self, want: &Tok, what: &str) -> Result<()> {
+        let at = self.at();
+        let t = self.next()?;
+        ensure!(&t == want, "expected {what} at byte {at}, found {t:?}");
+        Ok(())
+    }
+
+    fn ident(&mut self, what: &str) -> Result<String> {
+        let at = self.at();
+        match self.next()? {
+            Tok::Ident(s) => Ok(s),
+            other => bail!("expected {what} at byte {at}, found {other:?}"),
+        }
+    }
+
+    fn probe(&mut self) -> Result<ProbeDef> {
+        let start = self.at();
+        // Optional "probe NAME :" prefix.
+        let mut name = None;
+        if self.peek() == Some(&Tok::Ident("probe".into())) {
+            self.pos += 1;
+            let n = self.ident("probe name")?;
+            ensure!(n.len() <= MAX_NAME, "probe name too long ({} > {MAX_NAME})", n.len());
+            self.expect(&Tok::Colon, "':' after probe name")?;
+            name = Some(n);
+        }
+        // Site: fn : appspec . funcspec : event
+        let kw = self.ident("'fn'")?;
+        ensure!(kw == "fn", "probe site must start with 'fn', found '{kw}'");
+        self.expect(&Tok::Colon, "':' after 'fn'")?;
+        let app = match self.next()? {
+            Tok::Star => None,
+            Tok::Int(v) => {
+                ensure!(v <= u32::MAX as u64, "app id {v} out of u32 range");
+                Some(v as u32)
+            }
+            other => bail!("expected app id or '*', found {other:?}"),
+        };
+        self.expect(&Tok::Dot, "'.' between app and func")?;
+        let func = match self.next()? {
+            Tok::Star => None,
+            Tok::Ident(s) => Some(s),
+            Tok::Str(s) => Some(s),
+            other => bail!("expected function name or '*', found {other:?}"),
+        };
+        self.expect(&Tok::Colon, "':' before event")?;
+        let event = match self.ident("'entry' or 'exit'")?.as_str() {
+            "entry" => Event::Entry,
+            "exit" => Event::Exit,
+            other => bail!("unknown probe event '{other}' (entry|exit)"),
+        };
+        // Optional / predicate /
+        let mut pred = None;
+        if self.peek() == Some(&Tok::Slash) {
+            self.pos += 1;
+            pred = Some(self.expr_bp(0, 0)?);
+            self.expect(&Tok::Slash, "closing '/' of predicate")?;
+        }
+        // Optional sample clause.
+        let mut sample = None;
+        if self.peek() == Some(&Tok::Ident("sample".into())) {
+            self.pos += 1;
+            let at = self.at();
+            let n = match self.next()? {
+                Tok::Int(v) => v,
+                other => bail!("expected sample count at byte {at}, found {other:?}"),
+            };
+            let (n, m) = match self.next()? {
+                Tok::Percent => (n, 100),
+                Tok::Slash => match self.next()? {
+                    Tok::Int(m) => (n, m),
+                    other => bail!("expected sample denominator, found {other:?}"),
+                },
+                other => bail!("expected '%' or '/N' after sample count, found {other:?}"),
+            };
+            ensure!(m > 0 && m <= 1_000_000, "sample denominator {m} out of range (1..=1000000)");
+            ensure!(n <= m, "sample rate {n}/{m} keeps more than everything");
+            sample = Some((n as u32, m as u32));
+        }
+        // Optional action block.
+        let mut actions = Vec::new();
+        if self.peek() == Some(&Tok::LBrace) {
+            self.pos += 1;
+            while self.peek() != Some(&Tok::RBrace) {
+                let kw = self.ident("'capture'")?;
+                ensure!(kw == "capture", "unknown action '{kw}' (capture)");
+                self.expect(&Tok::LParen, "'(' after capture")?;
+                let what = self.ident("'record' or 'stack'")?;
+                let act = match what.as_str() {
+                    "record" => Action::CaptureRecord,
+                    "stack" => Action::CaptureStack,
+                    other => bail!("unknown capture target '{other}' (record|stack)"),
+                };
+                self.expect(&Tok::RParen, "')' after capture target")?;
+                self.expect(&Tok::Semi, "';' after action")?;
+                actions.push(act);
+                ensure!(actions.len() <= 8, "too many actions in one probe");
+            }
+            self.pos += 1; // consume '}'
+        }
+        let end = self.at();
+        Ok(ProbeDef {
+            name,
+            site: Site { app, func, event },
+            pred,
+            sample,
+            actions,
+            span: (start, end),
+        })
+    }
+
+    /// Pratt-style expression parser. `depth` is parenthesis depth: at
+    /// depth 0 a `/` closes the predicate instead of dividing.
+    fn expr_bp(&mut self, min_bp: u8, depth: u32) -> Result<Expr> {
+        let at = self.at();
+        let mut lhs = match self.next()? {
+            Tok::Int(v) => Expr::Int(v),
+            Tok::Float(v) => Expr::Float(v),
+            Tok::Str(s) => Expr::Str(s),
+            Tok::Bang => Expr::Not(Box::new(self.expr_bp(60, depth)?)),
+            Tok::Minus => Expr::Neg(Box::new(self.expr_bp(60, depth)?)),
+            Tok::LParen => {
+                ensure!(depth < 32, "predicate nesting too deep");
+                let e = self.expr_bp(0, depth + 1)?;
+                self.expect(&Tok::RParen, "')'")?;
+                e
+            }
+            Tok::Ident(s) => match field_of_name(&s) {
+                Some(f) => Expr::Field(f),
+                None => bail!("unknown field '{s}' at byte {at}"),
+            },
+            other => bail!("unexpected token {other:?} in predicate at byte {at}"),
+        };
+        loop {
+            let (op, bp) = match self.peek() {
+                Some(Tok::OrOr) => (BinOp::Or, 10),
+                Some(Tok::AndAnd) => (BinOp::And, 20),
+                Some(Tok::EqEq) => (BinOp::Eq, 30),
+                Some(Tok::NotEq) => (BinOp::Ne, 30),
+                Some(Tok::Lt) => (BinOp::Lt, 30),
+                Some(Tok::Le) => (BinOp::Le, 30),
+                Some(Tok::Gt) => (BinOp::Gt, 30),
+                Some(Tok::Ge) => (BinOp::Ge, 30),
+                Some(Tok::Plus) => (BinOp::Add, 40),
+                Some(Tok::Minus) => (BinOp::Sub, 40),
+                Some(Tok::Star) => (BinOp::Mul, 50),
+                // `/` divides only inside parentheses; at depth 0 it
+                // terminates the predicate (the caller consumes it).
+                Some(Tok::Slash) if depth > 0 => (BinOp::Div, 50),
+                _ => break,
+            };
+            if bp < min_bp {
+                break;
+            }
+            self.pos += 1;
+            let rhs = self.expr_bp(bp + 1, depth)?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+}
+
+/// Parse every probe in `src`.
+pub fn parse_program(src: &str) -> Result<Vec<ProbeDef>> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks: &toks, pos: 0, src_len: src.len() };
+    let mut out = Vec::new();
+    while p.peek().is_some() {
+        out.push(p.probe()?);
+        ensure!(out.len() <= MAX_PROBES, "too many probes in one source (> {MAX_PROBES})");
+    }
+    ensure!(!out.is_empty(), "no probes in source");
+    Ok(out)
+}
+
+/// Parse exactly one probe.
+pub fn parse_one(src: &str) -> Result<ProbeDef> {
+    let all = parse_program(src)?;
+    ensure!(all.len() == 1, "expected exactly one probe, found {}", all.len());
+    Ok(all.into_iter().next().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::probe::bytecode::{FIELD_LABEL, FIELD_SCORE};
+
+    #[test]
+    fn parses_the_readme_probe() {
+        let d = parse_one("fn:0.md_force:exit / score > 0.9 / sample 1% { capture(stack); }")
+            .unwrap();
+        assert_eq!(d.site.app, Some(0));
+        assert_eq!(d.site.func.as_deref(), Some("md_force"));
+        assert_eq!(d.site.event, Event::Exit);
+        assert_eq!(d.sample, Some((1, 100)));
+        assert_eq!(d.actions, vec![Action::CaptureStack]);
+        assert!(matches!(
+            d.pred,
+            Some(Expr::Bin(BinOp::Gt, ref l, ref r))
+                if **l == Expr::Field(FIELD_SCORE) && **r == Expr::Float(0.9)
+        ));
+    }
+
+    #[test]
+    fn parses_wildcards_names_and_fractions() {
+        let src = "probe hot: fn:*.*:entry / anomaly && label == \"weird\" / sample 3/7\n\
+                   # comment\n\
+                   fn:1.\"quoted name\":exit";
+        let all = parse_program(src).unwrap();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].name.as_deref(), Some("hot"));
+        assert_eq!(all[0].site.app, None);
+        assert_eq!(all[0].site.func, None);
+        assert_eq!(all[0].sample, Some((3, 7)));
+        assert!(matches!(
+            all[0].pred,
+            Some(Expr::Bin(BinOp::And, _, ref r))
+                if matches!(**r, Expr::Bin(BinOp::Eq, ref f, ref s)
+                    if **f == Expr::Field(FIELD_LABEL) && **s == Expr::Str("weird".into()))
+        ));
+        assert_eq!(all[1].site.app, Some(1));
+        assert_eq!(all[1].site.func.as_deref(), Some("quoted name"));
+        assert!(all[1].pred.is_none());
+        // Spans slice the original text.
+        let s0 = &src[all[0].span.0..all[0].span.1];
+        assert!(s0.starts_with("probe hot:"));
+    }
+
+    #[test]
+    fn slash_closes_predicate_but_divides_in_parens() {
+        let d = parse_one("fn:*.*:exit / (step / 2) >= 10 /").unwrap();
+        assert!(matches!(
+            d.pred,
+            Some(Expr::Bin(BinOp::Ge, ref l, _))
+                if matches!(**l, Expr::Bin(BinOp::Div, _, _))
+        ));
+        // Top-level '/' terminates: "step / 2 >= 10" parses as predicate
+        // `step`, then the '/' closes, then "2 >= 10" is junk.
+        assert!(parse_one("fn:*.*:exit / step / 2 >= 10 /").is_err());
+    }
+
+    #[test]
+    fn precedence_and_unary() {
+        let d = parse_one("fn:*.*:exit / !anomaly || score + 1.0 > 2.0 && step < 5 /").unwrap();
+        // Or at top: (!anomaly) || ((score+1>2) && (step<5))
+        let Some(Expr::Bin(BinOp::Or, l, r)) = d.pred else { panic!("want Or") };
+        assert!(matches!(*l, Expr::Not(_)));
+        assert!(matches!(*r, Expr::Bin(BinOp::And, _, _)));
+        let d = parse_one("fn:*.*:exit / score >= -1.5 /").unwrap();
+        assert!(matches!(
+            d.pred,
+            Some(Expr::Bin(BinOp::Ge, _, ref r)) if matches!(**r, Expr::Neg(_))
+        ));
+    }
+
+    #[test]
+    fn string_escapes_and_unicode() {
+        let d = parse_one("fn:*.*:exit / label == \"a\\\"b\\\\c\\n\\tünï\" /").unwrap();
+        let Some(Expr::Bin(BinOp::Eq, _, r)) = d.pred else { panic!() };
+        assert_eq!(*r, Expr::Str("a\"b\\c\n\tünï".into()));
+    }
+
+    #[test]
+    fn rejects_garbage_sources() {
+        for bad in [
+            "",
+            "fn",
+            "fn:0",
+            "fn:0.f",
+            "fn:0.f:later",
+            "fn:0.f:exit / score > /",
+            "fn:0.f:exit / score ~ 1 /",
+            "fn:0.f:exit / nosuchfield > 1 /",
+            "fn:0.f:exit / score > 1",
+            "fn:0.f:exit sample 5",
+            "fn:0.f:exit sample 7/3", // keeps more than everything
+            "fn:0.f:exit sample 1/0",
+            "fn:0.f:exit { explode(); }",
+            "fn:0.f:exit { capture(record) }", // missing ';'
+            "fn:0.f:exit / label == \"unterminated /",
+            "fn:0.f:exit / 99999999999999999999999 > 1 /",
+            "probe : fn:0.f:exit",
+            "fn:4294967296.f:exit", // app > u32
+        ] {
+            assert!(parse_program(bad).is_err(), "must reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn caps_hold() {
+        let big = "x".repeat(MAX_SOURCE + 1);
+        assert!(parse_program(&big).is_err());
+        let many = "fn:*.*:exit\n".repeat(MAX_PROBES + 1);
+        assert!(parse_program(&many).is_err());
+        let long_name = format!("probe {}: fn:*.*:exit", "n".repeat(MAX_NAME + 1));
+        assert!(parse_program(&long_name).is_err());
+    }
+}

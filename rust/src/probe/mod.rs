@@ -1,0 +1,455 @@
+//! Probe DSL + predicate VM (ROADMAP: compiled filters where the data
+//! lives). A probe is a DTrace-style one-liner —
+//!
+//! ```text
+//! probe hot: fn:0.md_force:exit / score > 0.9 / sample 1% { capture(record); }
+//! ```
+//!
+//! — lexed and parsed by [`lang`], lowered by [`compile`] to a compact
+//! branch-free bytecode ([`bytecode`]: opcode stream + typed constant
+//! pool), and evaluated by a register-free stack VM ([`vm`]) directly
+//! against the 49-byte binary record header at fixed offsets, with zero
+//! decoding on non-matching records. A verifier
+//! ([`bytecode::verify`]) type-checks untrusted programs against hard
+//! caps before they ever run, so probes can be installed over the wire.
+//!
+//! Three surfaces consume compiled probes:
+//!
+//! * **server-side filtered subscriptions** — provDB protocol kinds
+//!   install/remove/list probes on a running `provdb-server`; a probe
+//!   query scans the shards with the probe and pushes only matching
+//!   records to the client (`provdb::net`, `provdb::store`);
+//! * **probe-gated sampling** — the driver's `ProvSink` evaluates a
+//!   sampling probe on each kept record under heavy ingest
+//!   (`coordinator::driver`);
+//! * **aggregator triggers** — the PS aggregator evaluates trigger
+//!   probes on newly detected global events and pushes matching
+//!   synthetic records straight into provDB, without waiting a sync
+//!   period for every rank's dump (`ps::shard`).
+//!
+//! `rust/docs/probe.md` documents the grammar, opcode table, verifier
+//! limits, and wire kinds.
+
+pub mod bytecode;
+mod compile;
+pub mod lang;
+pub mod vm;
+
+pub use bytecode::{Const, Program};
+pub use compile::compile;
+pub use lang::{parse_one, parse_program, Action, Event, ProbeDef, Site, MAX_NAME, MAX_SOURCE};
+
+use crate::util::wire::{put_str, Cursor};
+use anyhow::{bail, ensure, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Probe wire-format version (independent of the record codec version).
+pub const PROBE_WIRE_VERSION: u8 = 1;
+
+/// Installed-probe cap per table (per provDB server).
+pub const MAX_INSTALLED: usize = 64;
+
+/// A named, compiled probe: everything a server needs to evaluate it
+/// plus the original source for listings.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Probe {
+    pub name: String,
+    /// Original source text (display/listing; not re-parsed).
+    pub source: String,
+    pub event: Event,
+    /// Keep `n` of every `m` matching records (`None` keeps all).
+    pub sample: Option<(u32, u32)>,
+    pub action: Action,
+    pub program: Program,
+}
+
+impl Probe {
+    /// Compile exactly one probe from source. Unnamed probes get `p0`.
+    pub fn compile(source: &str) -> Result<Probe> {
+        let mut all = Self::compile_all(source)?;
+        ensure!(all.len() == 1, "expected exactly one probe, found {}", all.len());
+        Ok(all.pop().unwrap())
+    }
+
+    /// Compile every probe in `source`; unnamed probes are auto-named
+    /// `p0`, `p1`, … by position. Duplicate names are rejected.
+    pub fn compile_all(source: &str) -> Result<Vec<Probe>> {
+        let defs = parse_program(source)?;
+        let mut out = Vec::with_capacity(defs.len());
+        let mut seen = std::collections::BTreeSet::new();
+        for (i, def) in defs.iter().enumerate() {
+            let program = compile(def)?;
+            let name = def.name.clone().unwrap_or_else(|| format!("p{i}"));
+            ensure!(seen.insert(name.clone()), "duplicate probe name '{name}'");
+            let action = match def.actions.as_slice() {
+                [] => Action::CaptureRecord,
+                acts => {
+                    ensure!(acts.len() == 1, "probe '{name}': one action per probe for now");
+                    acts[0]
+                }
+            };
+            out.push(Probe {
+                name,
+                source: source[def.span.0..def.span.1].trim().to_string(),
+                event: def.site.event,
+                sample: def.sample,
+                action,
+                program,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Evaluate the compiled predicate against an encoded record.
+    pub fn matches(&self, rec: &[u8]) -> bool {
+        vm::eval(&self.program, rec)
+    }
+
+    /// Sampling decision for the `counter`-th matching record (0-based):
+    /// keep `n` of every `m`. Probes without a sample clause keep all.
+    pub fn sample_keep(&self, counter: u64) -> bool {
+        match self.sample {
+            None => true,
+            Some((n, m)) => counter % (m as u64) < n as u64,
+        }
+    }
+
+    /// One-line summary for listings (`probe check`, `/api/probes`).
+    pub fn describe(&self) -> String {
+        format!(
+            "{}: {} event={} sample={} code={}B consts={}",
+            self.name,
+            self.action.name(),
+            self.event.name(),
+            match self.sample {
+                None => "all".to_string(),
+                Some((n, m)) => format!("{n}/{m}"),
+            },
+            self.program.code.len(),
+            self.program.consts.len(),
+        )
+    }
+
+    /// Append the versioned wire encoding.
+    pub fn to_wire(&self, out: &mut Vec<u8>) {
+        out.push(PROBE_WIRE_VERSION);
+        put_str(out, &self.name);
+        out.push(match self.event {
+            Event::Entry => 0,
+            Event::Exit => 1,
+        });
+        match self.sample {
+            None => out.push(0),
+            Some((n, m)) => {
+                out.push(1);
+                out.extend_from_slice(&n.to_le_bytes());
+                out.extend_from_slice(&m.to_le_bytes());
+            }
+        }
+        out.push(match self.action {
+            Action::CaptureRecord => 0,
+            Action::CaptureStack => 1,
+        });
+        put_str(out, &self.source);
+        out.extend_from_slice(&(self.program.consts.len() as u16).to_le_bytes());
+        for c in &self.program.consts {
+            match c {
+                Const::U(v) => {
+                    out.push(0);
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                Const::F(v) => {
+                    out.push(1);
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                Const::S(s) => {
+                    out.push(2);
+                    put_str(out, s);
+                }
+            }
+        }
+        out.extend_from_slice(&(self.program.code.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.program.code);
+    }
+
+    /// Decode an untrusted wire probe: every cap is validated and the
+    /// program is run through the verifier before it is returned.
+    pub fn from_wire(cur: &mut Cursor) -> Result<Probe> {
+        let ver = cur.u8()?;
+        ensure!(ver == PROBE_WIRE_VERSION, "unsupported probe wire version {ver}");
+        let name = cur.str()?;
+        ensure!(!name.is_empty() && name.len() <= MAX_NAME, "bad probe name length {}", name.len());
+        let event = match cur.u8()? {
+            0 => Event::Entry,
+            1 => Event::Exit,
+            other => bail!("bad probe event tag {other}"),
+        };
+        let sample = match cur.u8()? {
+            0 => None,
+            1 => {
+                let n = cur.u32()?;
+                let m = cur.u32()?;
+                ensure!(m > 0 && m <= 1_000_000 && n <= m, "bad sample rate {n}/{m}");
+                Some((n, m))
+            }
+            other => bail!("bad sample tag {other}"),
+        };
+        let action = match cur.u8()? {
+            0 => Action::CaptureRecord,
+            1 => Action::CaptureStack,
+            other => bail!("bad probe action tag {other}"),
+        };
+        let source = cur.str()?;
+        ensure!(source.len() <= MAX_SOURCE, "probe source too long");
+        let n_consts = cur.u16()? as usize;
+        ensure!(n_consts <= bytecode::MAX_CONSTS, "too many constants ({n_consts})");
+        let mut consts = Vec::with_capacity(n_consts);
+        for _ in 0..n_consts {
+            consts.push(match cur.u8()? {
+                0 => Const::U(cur.u64()?),
+                1 => Const::F(cur.f64()?),
+                2 => {
+                    let s = cur.str()?;
+                    ensure!(s.len() <= bytecode::MAX_STR, "pool string too long");
+                    Const::S(s)
+                }
+                other => bail!("bad constant tag {other}"),
+            });
+        }
+        let code_len = cur.u32()? as usize;
+        ensure!(code_len <= bytecode::MAX_CODE, "code too long ({code_len})");
+        let code = cur.take_slice(code_len)?.to_vec();
+        let program = Program { consts, code };
+        program.verify()?;
+        Ok(Probe { name, source, event, sample, action, program })
+    }
+}
+
+/// A probe installed on a server, with live counters. `matches` counts
+/// predicate hits, `shed` the hits dropped by the sampling gate,
+/// `pushed_records`/`pushed_bytes` what actually crossed the wire to
+/// subscribers — together they prove non-matching records never left
+/// the server.
+pub struct InstalledProbe {
+    pub probe: Probe,
+    pub matches: AtomicU64,
+    pub shed: AtomicU64,
+    pub pushed_records: AtomicU64,
+    pub pushed_bytes: AtomicU64,
+    counter: AtomicU64,
+}
+
+impl InstalledProbe {
+    pub fn new(probe: Probe) -> InstalledProbe {
+        InstalledProbe {
+            probe,
+            matches: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            pushed_records: AtomicU64::new(0),
+            pushed_bytes: AtomicU64::new(0),
+            counter: AtomicU64::new(0),
+        }
+    }
+
+    /// Predicate + sampling gate against one encoded record, bumping the
+    /// match/shed counters. `true` means the record should reach the
+    /// subscriber.
+    pub fn admit(&self, rec: &[u8]) -> bool {
+        if !self.probe.matches(rec) {
+            return false;
+        }
+        self.matches.fetch_add(1, Ordering::Relaxed);
+        let c = self.counter.fetch_add(1, Ordering::Relaxed);
+        if self.probe.sample_keep(c) {
+            true
+        } else {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            false
+        }
+    }
+
+    /// Account records that crossed the wire to a subscriber.
+    pub fn note_pushed(&self, records: u64, bytes: u64) {
+        self.pushed_records.fetch_add(records, Ordering::Relaxed);
+        self.pushed_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+}
+
+/// Server-side registry of installed probes, shared across connections.
+#[derive(Default)]
+pub struct ProbeTable {
+    inner: RwLock<BTreeMap<String, Arc<InstalledProbe>>>,
+}
+
+impl ProbeTable {
+    pub fn new() -> ProbeTable {
+        ProbeTable::default()
+    }
+
+    /// Install (or replace) a probe by name. Fails when the table is
+    /// full and the name is new (re-installs always succeed).
+    pub fn install(&self, probe: Probe) -> Result<()> {
+        let mut map = self.inner.write().expect("probe table poisoned");
+        ensure!(
+            map.len() < MAX_INSTALLED || map.contains_key(&probe.name),
+            "probe table full ({MAX_INSTALLED} installed)"
+        );
+        map.insert(probe.name.clone(), Arc::new(InstalledProbe::new(probe)));
+        Ok(())
+    }
+
+    /// Remove by name; `true` when it existed.
+    pub fn remove(&self, name: &str) -> bool {
+        self.inner.write().expect("probe table poisoned").remove(name).is_some()
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<InstalledProbe>> {
+        self.inner.read().expect("probe table poisoned").get(name).cloned()
+    }
+
+    /// All installed probes, name-ordered.
+    pub fn list(&self) -> Vec<Arc<InstalledProbe>> {
+        self.inner.read().expect("probe table poisoned").values().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().expect("probe table poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe(src: &str) -> Probe {
+        Probe::compile(src).unwrap()
+    }
+
+    #[test]
+    fn wire_round_trip_preserves_everything() {
+        for src in [
+            "fn:*.*:exit",
+            "probe hot: fn:0.md_force:exit / score > 0.9 / sample 1% { capture(stack); }",
+            "fn:2.\"q f\":entry / label == \"ünï\" && step >= 18446744073709551615 / sample 3/7",
+        ] {
+            let p = probe(src);
+            let mut buf = Vec::new();
+            p.to_wire(&mut buf);
+            let q = Probe::from_wire(&mut Cursor::new(&buf)).unwrap();
+            assert_eq!(p, q, "round trip of {src}");
+        }
+    }
+
+    #[test]
+    fn wire_decode_rejects_mutations_without_panicking() {
+        let p = probe("probe hot: fn:0.md_force:exit / score > 0.9 / sample 1%");
+        let mut buf = Vec::new();
+        p.to_wire(&mut buf);
+        // Truncations at every length.
+        for n in 0..buf.len() {
+            let _ = Probe::from_wire(&mut Cursor::new(&buf[..n]));
+        }
+        // Single-byte mutations: must decode identical, reject, or at
+        // worst produce a different-but-verified program — never panic.
+        for i in 0..buf.len() {
+            let mut m = buf.clone();
+            m[i] ^= 0xA5;
+            if let Ok(q) = Probe::from_wire(&mut Cursor::new(&m)) {
+                q.program.verify().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn compile_all_names_and_spans() {
+        let src = "fn:*.*:exit\nprobe named: fn:1.f:entry / anomaly /\nfn:*.*:exit sample 50%";
+        let all = Probe::compile_all(src).unwrap();
+        assert_eq!(all.len(), 3);
+        assert_eq!(all[0].name, "p0");
+        assert_eq!(all[1].name, "named");
+        assert_eq!(all[2].name, "p2");
+        assert!(all[1].source.starts_with("probe named:"));
+        assert_eq!(all[2].sample, Some((50, 100)));
+        // Duplicate names rejected.
+        assert!(Probe::compile_all("probe x: fn:*.*:exit\nprobe x: fn:*.*:exit").is_err());
+    }
+
+    #[test]
+    fn sampling_keeps_n_of_m() {
+        let p = probe("fn:*.*:exit sample 1%");
+        let kept = (0..1000).filter(|&c| p.sample_keep(c)).count();
+        assert_eq!(kept, 10);
+        let p = probe("fn:*.*:exit sample 3/7");
+        let kept = (0..700).filter(|&c| p.sample_keep(c)).count();
+        assert_eq!(kept, 300);
+        let p = probe("fn:*.*:exit");
+        assert!((0..100).all(|c| p.sample_keep(c)));
+        // 0/m sheds everything.
+        let p = probe("fn:*.*:exit sample 0/4");
+        assert!(!(0..100).any(|c| p.sample_keep(c)));
+    }
+
+    #[test]
+    fn installed_probe_counters() {
+        let mut buf = Vec::new();
+        crate::provenance::codec::encode(
+            &crate::provenance::ProvRecord {
+                call_id: 0,
+                app: 0,
+                rank: 0,
+                thread: 0,
+                fid: 0,
+                func: "f".into(),
+                step: 0,
+                entry_us: 0,
+                exit_us: 0,
+                inclusive_us: 0,
+                exclusive_us: 0,
+                depth: 0,
+                parent: None,
+                n_children: 0,
+                n_messages: 0,
+                msg_bytes: 0,
+                label: "anomaly_high".into(),
+                score: 5.0,
+            },
+            &mut buf,
+        );
+        let ip = InstalledProbe::new(probe("fn:*.*:exit / anomaly / sample 1/2"));
+        let admitted = (0..10).filter(|_| ip.admit(&buf)).count();
+        assert_eq!(admitted, 5);
+        assert_eq!(ip.matches.load(Ordering::Relaxed), 10);
+        assert_eq!(ip.shed.load(Ordering::Relaxed), 5);
+        // Non-matching records bump nothing.
+        let ip2 = InstalledProbe::new(probe("fn:9.f:exit"));
+        assert!(!ip2.admit(&buf));
+        assert_eq!(ip2.matches.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn probe_table_install_remove_list_caps() {
+        let t = ProbeTable::new();
+        for i in 0..MAX_INSTALLED {
+            t.install(Probe {
+                name: format!("n{i}"),
+                ..probe("fn:*.*:exit")
+            })
+            .unwrap();
+        }
+        assert_eq!(t.len(), MAX_INSTALLED);
+        // Full: new name rejected, re-install of existing allowed.
+        assert!(t.install(Probe { name: "overflow".into(), ..probe("fn:*.*:exit") }).is_err());
+        t.install(Probe { name: "n0".into(), ..probe("fn:*.*:exit sample 1%") }).unwrap();
+        assert_eq!(t.get("n0").unwrap().probe.sample, Some((1, 100)));
+        assert!(t.remove("n1"));
+        assert!(!t.remove("n1"));
+        assert_eq!(t.len(), MAX_INSTALLED - 1);
+        assert_eq!(t.list().len(), MAX_INSTALLED - 1);
+    }
+}

@@ -1,0 +1,355 @@
+//! Register-free stack VM evaluating compiled probe predicates directly
+//! against *encoded* provenance records — header fields at their fixed
+//! [`codec`](crate::provenance::codec) offsets, and the two payload
+//! strings (`func`, custom `label`) located by a fixed-offset walk. A
+//! record that fails the predicate is never decoded.
+//!
+//! [`eval`] is total: any fault (type confusion, stack underflow, bad
+//! opcode, truncated record) yields `false`, never a panic. Programs are
+//! expected to be [`verify`](super::bytecode::verify)-checked first —
+//! the fault paths here are defense in depth, and the instruction budget
+//! is re-enforced at runtime so even an unverified program terminates
+//! within [`MAX_CODE`] steps.
+
+use super::bytecode::*;
+use crate::provenance::codec::{self, HEADER_LEN, LABEL_NORMAL, LABEL_OTHER};
+
+/// Runtime value. `U`/`F` are kept distinct so u64×u64 comparisons are
+/// exact above 2^53 (step counters, microsecond timestamps) — mixed-type
+/// comparisons and all arithmetic coerce to f64.
+#[derive(Copy, Clone, Debug)]
+enum Val {
+    U(u64),
+    F(f64),
+    B(bool),
+}
+
+impl Val {
+    fn as_f64(self) -> Option<f64> {
+        match self {
+            Val::U(u) => Some(u as f64),
+            Val::F(f) => Some(f),
+            Val::B(_) => None,
+        }
+    }
+}
+
+/// Evaluate `p` against an encoded record; any fault is `false`.
+pub fn eval(p: &Program, rec: &[u8]) -> bool {
+    eval_checked(p, rec).unwrap_or(false)
+}
+
+fn eval_checked(p: &Program, rec: &[u8]) -> Option<bool> {
+    let code = &p.code;
+    if code.len() > MAX_CODE {
+        return None;
+    }
+    let mut stack: Vec<Val> = Vec::with_capacity(8);
+    let mut pc = 0usize;
+    while pc < code.len() {
+        let op = code[pc];
+        pc += 1;
+        match op {
+            OP_RET => {
+                return match (stack.pop()?, stack.is_empty()) {
+                    (Val::B(b), true) => Some(b),
+                    _ => None,
+                };
+            }
+            OP_CONST => {
+                let idx = imm16(code, &mut pc)? as usize;
+                match p.consts.get(idx)? {
+                    Const::U(u) => stack.push(Val::U(*u)),
+                    Const::F(f) => stack.push(Val::F(*f)),
+                    Const::S(_) => return None,
+                }
+            }
+            OP_LOAD => {
+                let f = *code.get(pc)?;
+                pc += 1;
+                stack.push(load_field(rec, f)?);
+            }
+            OP_STREQ => {
+                let f = *code.get(pc)?;
+                pc += 1;
+                let idx = imm16(code, &mut pc)? as usize;
+                let Const::S(want) = p.consts.get(idx)? else { return None };
+                let hit = match f {
+                    FIELD_LABEL => label_eq(rec, want),
+                    FIELD_FUNC => func_eq(rec, want),
+                    _ => return None,
+                };
+                stack.push(Val::B(hit));
+            }
+            OP_EQ | OP_NE | OP_LT | OP_LE | OP_GT | OP_GE => {
+                let b = stack.pop()?;
+                let a = stack.pop()?;
+                stack.push(Val::B(compare(op, a, b)?));
+            }
+            OP_AND | OP_OR => {
+                let (Val::B(b), Val::B(a)) = (stack.pop()?, stack.pop()?) else {
+                    return None;
+                };
+                stack.push(Val::B(if op == OP_AND { a && b } else { a || b }));
+            }
+            OP_NOT => {
+                let Val::B(a) = stack.pop()? else { return None };
+                stack.push(Val::B(!a));
+            }
+            OP_ADD | OP_SUB | OP_MUL | OP_DIV => {
+                let b = stack.pop()?.as_f64()?;
+                let a = stack.pop()?.as_f64()?;
+                stack.push(Val::F(match op {
+                    OP_ADD => a + b,
+                    OP_SUB => a - b,
+                    OP_MUL => a * b,
+                    _ => a / b,
+                }));
+            }
+            _ => return None,
+        }
+        if stack.len() > MAX_STACK {
+            return None;
+        }
+    }
+    None // fell off the end without RET
+}
+
+fn imm16(code: &[u8], pc: &mut usize) -> Option<u16> {
+    let lo = *code.get(*pc)?;
+    let hi = *code.get(*pc + 1)?;
+    *pc += 2;
+    Some(u16::from_le_bytes([lo, hi]))
+}
+
+/// Comparison semantics mirror [`ProvQuery::matches`]
+/// (crate::provenance::ProvQuery): u64×u64 is an exact integer compare;
+/// anything mixed goes through f64 with IEEE ordering, so `NaN` fails
+/// every ordered comparison (and `EQ`), and satisfies `NE`.
+fn compare(op: u8, a: Val, b: Val) -> Option<bool> {
+    use std::cmp::Ordering::*;
+    let ord = match (a, b) {
+        (Val::U(x), Val::U(y)) => Some(x.cmp(&y)),
+        (Val::B(_), _) | (_, Val::B(_)) => return None,
+        (x, y) => x.as_f64()?.partial_cmp(&y.as_f64()?),
+    };
+    Some(match op {
+        OP_EQ => ord == Some(Equal),
+        OP_NE => ord != Some(Equal),
+        OP_LT => ord == Some(Less),
+        OP_LE => matches!(ord, Some(Less | Equal)),
+        OP_GT => ord == Some(Greater),
+        _ => matches!(ord, Some(Greater | Equal)),
+    })
+}
+
+// ---- fixed-offset record access ------------------------------------------
+
+fn u32le(buf: &[u8], off: usize) -> Option<u32> {
+    Some(u32::from_le_bytes(buf.get(off..off + 4)?.try_into().ok()?))
+}
+
+fn u64le(buf: &[u8], off: usize) -> Option<u64> {
+    Some(u64::from_le_bytes(buf.get(off..off + 8)?.try_into().ok()?))
+}
+
+fn load_field(rec: &[u8], f: u8) -> Option<Val> {
+    Some(match f {
+        FIELD_APP => Val::U(u32le(rec, 0)? as u64),
+        FIELD_RANK => Val::U(u32le(rec, 4)? as u64),
+        FIELD_FID => Val::U(u32le(rec, 8)? as u64),
+        FIELD_STEP => Val::U(u64le(rec, 12)?),
+        FIELD_ENTRY_US => Val::U(u64le(rec, 20)?),
+        FIELD_EXIT_US => Val::U(u64le(rec, 28)?),
+        FIELD_SCORE => Val::F(f64::from_bits(u64le(rec, 36)?)),
+        FIELD_ANOMALY => Val::B(*rec.get(44)? != LABEL_NORMAL),
+        _ => return None,
+    })
+}
+
+/// The record's payload slice, bounded by the header's `payload_len`.
+fn payload(rec: &[u8]) -> Option<&[u8]> {
+    let plen = u32le(rec, 45)? as usize;
+    rec.get(HEADER_LEN..HEADER_LEN.checked_add(plen)?)
+}
+
+/// Byte offset of the func length-prefix inside the payload. The prefix
+/// fields are all fixed-width except the optional parent id, selected by
+/// the tag byte at payload offset 32.
+fn func_off(p: &[u8]) -> Option<usize> {
+    // call_id u64 + thread u32 + inclusive u64 + exclusive u64 + depth u32
+    // = 32 bytes, then the parent tag byte, then (maybe) parent u64, then
+    // n_children u32 + n_messages u32 + msg_bytes u64 = 16 bytes.
+    let base = match *p.get(32)? {
+        0 => 33,
+        1 => 41,
+        _ => return None,
+    };
+    Some(base + 16)
+}
+
+/// The function-name bytes of an encoded record, without decoding it.
+pub fn func_bytes(rec: &[u8]) -> Option<&[u8]> {
+    let p = payload(rec)?;
+    let off = func_off(p)?;
+    let len = u32le(p, off)? as usize;
+    let start = off.checked_add(4)?;
+    p.get(start..start.checked_add(len)?)
+}
+
+/// The custom-label bytes of an encoded record whose header tag is
+/// [`LABEL_OTHER`] (`None` for well-known tags or malformed payloads).
+pub fn custom_label_bytes(rec: &[u8]) -> Option<&[u8]> {
+    if *rec.get(44)? != LABEL_OTHER {
+        return None;
+    }
+    let p = payload(rec)?;
+    let foff = func_off(p)?;
+    let flen = u32le(p, foff)? as usize;
+    let loff = foff.checked_add(4)?.checked_add(flen)?;
+    let len = u32le(p, loff)? as usize;
+    let start = loff.checked_add(4)?;
+    p.get(start..start.checked_add(len)?)
+}
+
+/// Compare the record's label against `want` without decoding: header
+/// tag for well-known labels, payload text for custom ones. This is the
+/// comparison that settles the one case
+/// [`codec::matches_header`] cannot — a custom query label against a
+/// custom record label (`None` from `matches_header`; the provDB scan
+/// path routes it here instead of decoding the whole record).
+pub fn label_eq(rec: &[u8], want: &str) -> bool {
+    match rec.get(44) {
+        Some(&tag) if tag != LABEL_OTHER => codec::label_of_tag(tag) == Some(want),
+        Some(_) => custom_label_bytes(rec).is_some_and(|b| b == want.as_bytes()),
+        None => false,
+    }
+}
+
+/// Compare the record's function name against `want` without decoding.
+pub fn func_eq(rec: &[u8], want: &str) -> bool {
+    func_bytes(rec).is_some_and(|b| b == want.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::provenance::ProvRecord;
+
+    pub(crate) fn rec(label: &str, func: &str, parent: Option<u64>) -> Vec<u8> {
+        let r = ProvRecord {
+            call_id: 7,
+            app: 1,
+            rank: 2,
+            thread: 0,
+            fid: 3,
+            func: func.to_string(),
+            step: 11,
+            entry_us: 100,
+            exit_us: 200,
+            inclusive_us: 100,
+            exclusive_us: 60,
+            depth: 1,
+            parent,
+            n_children: 0,
+            n_messages: 0,
+            msg_bytes: 0,
+            label: label.to_string(),
+            score: 4.5,
+        };
+        let mut buf = Vec::new();
+        codec::encode(&r, &mut buf);
+        buf
+    }
+
+    #[test]
+    fn fixed_offset_string_access_matches_decode() {
+        for (label, parent) in [
+            ("normal", None),
+            ("anomaly_high", Some(42)),
+            ("weird_label", None),
+            ("ünïcode-étiquette", Some(1)),
+        ] {
+            let buf = rec(label, "md_force", parent);
+            let (dec, _) = codec::decode(&buf).unwrap();
+            assert_eq!(func_bytes(&buf).unwrap(), dec.func.as_bytes());
+            assert!(func_eq(&buf, "md_force"));
+            assert!(!func_eq(&buf, "md_forc"));
+            assert!(label_eq(&buf, label), "label_eq({label})");
+            assert!(!label_eq(&buf, "something_else"));
+            if codec::label_tag(label) == LABEL_OTHER {
+                assert_eq!(custom_label_bytes(&buf).unwrap(), label.as_bytes());
+            } else {
+                assert!(custom_label_bytes(&buf).is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_records_never_panic() {
+        let buf = rec("weird", "f", Some(9));
+        for n in 0..buf.len() {
+            let t = &buf[..n];
+            // All accessors must degrade, not panic.
+            let _ = func_bytes(t);
+            let _ = custom_label_bytes(t);
+            let _ = label_eq(t, "weird");
+            let _ = func_eq(t, "f");
+            let _ = load_field(t, FIELD_SCORE);
+        }
+    }
+
+    #[test]
+    fn eval_faults_yield_false() {
+        let buf = rec("normal", "f", None);
+        // Unverified garbage: unknown opcode.
+        let p = Program { consts: vec![], code: vec![77, OP_RET] };
+        assert!(!eval(&p, &buf));
+        // Missing RET.
+        let p = Program { consts: vec![], code: vec![OP_LOAD, FIELD_ANOMALY] };
+        assert!(!eval(&p, &buf));
+        // Stack underflow.
+        let p = Program { consts: vec![], code: vec![OP_NOT, OP_RET] };
+        assert!(!eval(&p, &buf));
+        // Over-long code is refused outright.
+        let p = Program { consts: vec![], code: vec![0u8; MAX_CODE + 1] };
+        assert!(!eval(&p, &buf));
+    }
+
+    #[test]
+    fn u64_comparisons_stay_exact_above_2_pow_53() {
+        // step = 2^53 + 1 vs literal 2^53: distinct as u64, equal as f64.
+        let mut buf = rec("normal", "f", None);
+        let step = (1u64 << 53) + 1;
+        buf[12..20].copy_from_slice(&step.to_le_bytes());
+        let p = Program {
+            consts: vec![Const::U(1u64 << 53)],
+            code: vec![OP_LOAD, FIELD_STEP, OP_CONST, 0, 0, OP_EQ, OP_RET],
+        };
+        p.verify().unwrap();
+        assert!(!eval(&p, &buf), "u64 compare must not collapse through f64");
+        let p = Program {
+            consts: vec![Const::U(step)],
+            code: vec![OP_LOAD, FIELD_STEP, OP_CONST, 0, 0, OP_EQ, OP_RET],
+        };
+        assert!(eval(&p, &buf));
+    }
+
+    #[test]
+    fn nan_score_fails_ordered_comparisons() {
+        let mut buf = rec("normal", "f", None);
+        buf[36..44].copy_from_slice(&f64::NAN.to_le_bytes());
+        for op in [OP_LT, OP_LE, OP_GT, OP_GE, OP_EQ] {
+            let p = Program {
+                consts: vec![Const::F(0.0)],
+                code: vec![OP_LOAD, FIELD_SCORE, OP_CONST, 0, 0, op, OP_RET],
+            };
+            assert!(!eval(&p, &buf), "NaN must fail op {op}");
+        }
+        let p = Program {
+            consts: vec![Const::F(0.0)],
+            code: vec![OP_LOAD, FIELD_SCORE, OP_CONST, 0, 0, OP_NE, OP_RET],
+        };
+        assert!(eval(&p, &buf), "NaN != x is true");
+    }
+}

@@ -42,7 +42,7 @@ pub mod net;
 pub mod store;
 
 pub use crate::provenance::RecordFormat;
-pub use net::{ProvClient, ProvDbTcpServer, DEFAULT_BATCH};
+pub use net::{ProbeInfo, ProvClient, ProvDbTcpServer, DEFAULT_BATCH};
 pub use store::{
     prov_shard_of, spawn_store, spawn_store_fmt, ProvDbStats, ProvStore, ProvStoreHandle,
     Retention,

@@ -20,6 +20,10 @@
 //!   kind 9 (write bin):     codec u16, n u32, n × binary record
 //!   kind 10 (query bin):    u32 len, ProvQuery JSON bytes
 //!   kind 11 (cs bin):       app u32, rank u32, step u64
+//!   kind 12 (probe install): probe wire encoding (see probe::Probe)
+//!   kind 13 (probe remove): u32 len, name bytes
+//!   kind 14 (probe list):   (empty)
+//!   kind 15 (probe query):  u32 len, name bytes
 //! reply (hello)      := u32 n_shards, u16 codec_version
 //! reply (write)      := u32 n_accepted
 //! reply (query/cs 3/4) := u32 n, n × (u32 len, JSONL record bytes)
@@ -30,7 +34,22 @@
 //!                       u64 evicted, u64 log_errors, u64 shed,
 //!                       u64 net_queue_depth
 //! reply (flush)      := u8 1
+//! reply (probe install) := u8 1
+//! reply (probe remove)  := u8 existed
+//! reply (probe list)    := u32 n, n × (name str, source str, u64 matches,
+//!                          u64 shed, u64 pushed_records, u64 pushed_bytes)
+//! reply (probe query)   := codec u16, u32 n, n × binary record
 //! ```
+//!
+//! Kinds 12–15 turn installed probes (compiled predicate programs, see
+//! [`probe`](crate::probe)) into **server-side filtered subscriptions**:
+//! a probe query evaluates the named probe's verified bytecode against
+//! every stored record inside the shards and ships only the admitted
+//! records — non-matching records never cross the wire, which the
+//! per-probe `pushed_records`/`pushed_bytes` counters in the list reply
+//! make auditable. Installs are untrusted: the program is re-verified
+//! server-side and a malformed or over-budget probe drops the connection
+//! like any other hostile frame.
 //!
 //! The server runs on the shared poll(2) reactor
 //! ([`serve_frames`](crate::util::net::serve_frames)): a fixed pool of
@@ -68,6 +87,7 @@
 
 use super::store::{ProvDbStats, ProvStore};
 use crate::ad::Labeled;
+use crate::probe::{Probe, ProbeTable};
 use crate::provenance::codec::{self, RecordFormat};
 use crate::provenance::{ProvQuery, ProvRecord};
 use crate::trace::FuncRegistry;
@@ -89,6 +109,10 @@ const KIND_FLUSH: u8 = 8;
 const KIND_WRITE_BIN: u8 = 9;
 const KIND_QUERY_BIN: u8 = 10;
 const KIND_CALLSTACK_BIN: u8 = 11;
+const KIND_PROBE_INSTALL: u8 = 12;
+const KIND_PROBE_REMOVE: u8 = 13;
+const KIND_PROBE_LIST: u8 = 14;
+const KIND_PROBE_QUERY: u8 = 15;
 
 /// Default client-side write batch (records per wire round-trip).
 pub const DEFAULT_BATCH: usize = 64;
@@ -109,6 +133,9 @@ const MAX_REPLY_RETAIN: usize = 4 << 20;
 /// each with its own [`ProvHandler`] protocol state.
 pub struct ProvDbTcpServer {
     inner: TcpServerHandle,
+    /// Probes installed over the wire, shared by every connection (and
+    /// by the aggregator-trigger path when co-hosted in-process).
+    probes: Arc<ProbeTable>,
 }
 
 impl ProvDbTcpServer {
@@ -129,14 +156,22 @@ impl ProvDbTcpServer {
         let store = Mutex::new(store);
         let stats = NetStats::new();
         let hstats = stats.clone();
+        let probes = Arc::new(ProbeTable::new());
+        let hprobes = Arc::clone(&probes);
         let inner = serve_frames("chimbuko-provdb-tcp", addr, opts, stats, move || {
             ProvHandler {
                 store: store.lock().expect("provdb store lock").clone(),
                 stats: hstats.clone(),
+                probes: Arc::clone(&hprobes),
                 reply: Vec::new(),
             }
         })?;
-        Ok(ProvDbTcpServer { inner })
+        Ok(ProvDbTcpServer { inner, probes })
+    }
+
+    /// The server's installed-probe table (shared with every connection).
+    pub fn probes(&self) -> Arc<ProbeTable> {
+        Arc::clone(&self.probes)
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
@@ -182,6 +217,8 @@ struct ProvHandler {
     /// Server-wide transport counters; the stats reply stamps its shed
     /// and backlog numbers from here.
     stats: Arc<NetStats>,
+    /// Installed probes, shared across connections.
+    probes: Arc<ProbeTable>,
     /// Reused across requests on this connection: binary query replies
     /// concatenate stored record bytes into this scratch buffer.
     reply: Vec<u8>,
@@ -303,6 +340,52 @@ impl ProvHandler {
             KIND_FLUSH => {
                 self.store.flush();
                 out.send(stream, &[1u8]);
+            }
+            KIND_PROBE_INSTALL => {
+                // Untrusted program: from_wire enforces every cap and
+                // runs the verifier; a hostile install drops the
+                // connection like any other malformed frame.
+                let probe = Probe::from_wire(&mut c)
+                    .context("malformed probe install on the wire")?;
+                self.probes.install(probe)?;
+                out.send(stream, &[1u8]);
+            }
+            KIND_PROBE_REMOVE => {
+                let name = c.str()?;
+                let existed = self.probes.remove(&name);
+                out.send(stream, &[existed as u8]);
+            }
+            KIND_PROBE_LIST => {
+                let probes = self.probes.list();
+                self.reply.clear();
+                self.reply
+                    .extend_from_slice(&(probes.len() as u32).to_le_bytes());
+                for ip in &probes {
+                    put_str(&mut self.reply, &ip.probe.name);
+                    put_str(&mut self.reply, &ip.probe.source);
+                    for v in [
+                        ip.matches.load(std::sync::atomic::Ordering::Relaxed),
+                        ip.shed.load(std::sync::atomic::Ordering::Relaxed),
+                        ip.pushed_records.load(std::sync::atomic::Ordering::Relaxed),
+                        ip.pushed_bytes.load(std::sync::atomic::Ordering::Relaxed),
+                    ] {
+                        self.reply.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                out.send(stream, &self.reply);
+            }
+            KIND_PROBE_QUERY => {
+                let name = c.str()?;
+                let ip = self
+                    .probes
+                    .get(&name)
+                    .with_context(|| format!("no installed probe named '{name}'"))?;
+                let recs = self.store.probe_scan(&ip);
+                let bytes: u64 = recs.iter().map(|r| r.len() as u64).sum();
+                ip.note_pushed(recs.len() as u64, bytes);
+                self.reply.clear();
+                put_records_bin(&mut self.reply, &recs);
+                out.send(stream, &self.reply);
             }
             k => bail!("unknown request kind {k}"),
         }
@@ -535,6 +618,80 @@ impl ProvClient {
         Ok(Some(parse(&c.str()?)?))
     }
 
+    /// Install (or replace) a compiled probe on the server, turning it
+    /// into a server-side filtered subscription. The server re-verifies
+    /// the program before accepting it.
+    pub fn install_probe(&mut self, probe: &Probe) -> Result<()> {
+        let mut msg = vec![KIND_PROBE_INSTALL];
+        probe.to_wire(&mut msg);
+        write_msg(&mut self.stream, &msg)?;
+        read_msg(&mut self.stream)?.context("provdb closed on probe install")?;
+        Ok(())
+    }
+
+    /// Remove an installed probe; `Ok(true)` when it existed.
+    pub fn remove_probe(&mut self, name: &str) -> Result<bool> {
+        let mut msg = vec![KIND_PROBE_REMOVE];
+        put_str(&mut msg, name);
+        write_msg(&mut self.stream, &msg)?;
+        let reply = read_msg(&mut self.stream)?.context("provdb closed on probe remove")?;
+        Ok(Cursor::new(&reply).u8()? != 0)
+    }
+
+    /// List installed probes with their live match/shed/push counters.
+    pub fn list_probes(&mut self) -> Result<Vec<ProbeInfo>> {
+        write_msg(&mut self.stream, &[KIND_PROBE_LIST])?;
+        let reply = read_msg(&mut self.stream)?.context("provdb closed on probe list")?;
+        let mut c = Cursor::new(&reply);
+        let n = c.u32()? as usize;
+        let mut out = Vec::with_capacity(n.min(MAX_PREALLOC));
+        for _ in 0..n {
+            out.push(ProbeInfo {
+                name: c.str()?,
+                source: c.str()?,
+                matches: c.u64()?,
+                shed: c.u64()?,
+                pushed_records: c.u64()?,
+                pushed_bytes: c.u64()?,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Pull the installed probe `name`'s subscription: the server
+    /// evaluates the compiled predicate inside the shards and ships only
+    /// admitted records (buffered writes ship first). The reply is the
+    /// stored encoding — bit-identical to a `ProvQuery`-equivalent
+    /// [`query`](Self::query) — always binary regardless of the
+    /// client's write wire format.
+    pub fn probe_query_encoded(&mut self, name: &str) -> Result<Vec<Vec<u8>>> {
+        self.send_batch()?;
+        let mut msg = vec![KIND_PROBE_QUERY];
+        put_str(&mut msg, name);
+        write_msg(&mut self.stream, &msg)?;
+        let reply = read_msg(&mut self.stream)?.context("provdb closed on probe query")?;
+        let mut c = Cursor::new(&reply);
+        let ver = c.u16()?;
+        if ver != codec::CODEC_VERSION {
+            bail!("provdb reply codec version {ver} unsupported");
+        }
+        let n = c.u32()? as usize;
+        let mut out = Vec::with_capacity(n.min(MAX_PREALLOC));
+        for _ in 0..n {
+            let used = codec::validate(c.peek())?;
+            out.push(c.take_slice(used)?.to_vec());
+        }
+        Ok(out)
+    }
+
+    /// [`Self::probe_query_encoded`], decoded.
+    pub fn probe_query(&mut self, name: &str) -> Result<Vec<ProvRecord>> {
+        self.probe_query_encoded(name)?
+            .iter()
+            .map(|b| Ok(codec::decode(b)?.0))
+            .collect()
+    }
+
     /// Aggregate store counters.
     pub fn stats(&mut self) -> Result<ProvDbStats> {
         self.send_batch()?;
@@ -552,6 +709,35 @@ impl ProvClient {
             shed: c.u64().unwrap_or(0),
             net_queue_depth: c.u64().unwrap_or(0),
         })
+    }
+}
+
+/// One installed probe as reported by the list reply: identity plus the
+/// live counters that prove what did (and did not) cross the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProbeInfo {
+    pub name: String,
+    pub source: String,
+    /// Records the predicate matched during scans.
+    pub matches: u64,
+    /// Matching records dropped by the probe's sampling gate.
+    pub shed: u64,
+    /// Records actually shipped to subscribers.
+    pub pushed_records: u64,
+    /// Bytes of those records on the wire.
+    pub pushed_bytes: u64,
+}
+
+impl ProbeInfo {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("source", Json::str(&self.source)),
+            ("matches", Json::num(self.matches as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("pushed_records", Json::num(self.pushed_records as f64)),
+            ("pushed_bytes", Json::num(self.pushed_bytes as f64)),
+        ])
     }
 }
 
@@ -760,6 +946,85 @@ mod tests {
         assert_eq!(stats.records, 20);
         assert!(stats.shed > 0, "stats must surface the transport shed count");
         drop(flood);
+        drop(srv);
+        handle.join();
+    }
+
+    #[test]
+    fn probe_install_list_query_remove_over_the_wire() {
+        let (store, handle) = spawn_store(None, 2, Retention::default()).unwrap();
+        let srv = ProvDbTcpServer::start("127.0.0.1:0", store.clone()).unwrap();
+        let addr = srv.addr().to_string();
+        let mut cl = ProvClient::connect(&addr).unwrap();
+        for i in 0..12u64 {
+            cl.append(&rec((i % 3) as u32, i, i as f64, i)).unwrap();
+        }
+        cl.flush().unwrap();
+        let probe = Probe::compile("probe hot: fn:*.*:exit / score >= 6.0 /").unwrap();
+        cl.install_probe(&probe).unwrap();
+        // Visible (with zeroed counters) from another connection.
+        let mut cl2 = ProvClient::connect(&addr).unwrap();
+        let listed = cl2.list_probes().unwrap();
+        assert_eq!(listed.len(), 1);
+        assert_eq!(listed[0].name, "hot");
+        assert!(listed[0].source.contains("score >= 6.0"));
+        assert_eq!((listed[0].matches, listed[0].pushed_records), (0, 0));
+        // Probe query ships exactly the matches, counted.
+        let got = cl2.probe_query("hot").unwrap();
+        assert_eq!(got.len(), 6); // scores 6..=11
+        assert!(got.iter().all(|r| r.score >= 6.0));
+        let listed = cl.list_probes().unwrap();
+        assert_eq!(listed[0].matches, 6);
+        assert_eq!(listed[0].shed, 0);
+        assert_eq!(listed[0].pushed_records, 6);
+        assert!(listed[0].pushed_bytes > 0);
+        // Remove: gone for everyone.
+        assert!(cl.remove_probe("hot").unwrap());
+        assert!(!cl.remove_probe("hot").unwrap());
+        assert!(cl2.list_probes().unwrap().is_empty());
+        drop(srv);
+        handle.join();
+    }
+
+    #[test]
+    fn hostile_probe_frames_drop_connection_not_server() {
+        use crate::probe::bytecode::{Program, MAX_CODE, OP_RET};
+        let (store, handle) = spawn_store(None, 1, Retention::default()).unwrap();
+        let srv = ProvDbTcpServer::start("127.0.0.1:0", store.clone()).unwrap();
+        let addr = srv.addr().to_string();
+        // A structurally valid wire probe whose program fails the
+        // verifier (RET with empty stack): to_wire doesn't verify, the
+        // server must.
+        let mut evil = Probe::compile("fn:*.*:exit").unwrap();
+        evil.program = Program { consts: vec![], code: vec![OP_RET] };
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut msg = vec![KIND_PROBE_INSTALL];
+        evil.to_wire(&mut msg);
+        write_msg(&mut s, &msg).unwrap();
+        assert!(read_msg(&mut s).unwrap().is_none(), "unverified program must drop");
+        // Over-budget code length announced in the frame.
+        let mut big = Probe::compile("fn:*.*:exit").unwrap();
+        big.program.code = vec![0u8; MAX_CODE + 1];
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut msg = vec![KIND_PROBE_INSTALL];
+        big.to_wire(&mut msg);
+        write_msg(&mut s, &msg).unwrap();
+        assert!(read_msg(&mut s).unwrap().is_none());
+        // Truncated install frame.
+        let mut s = TcpStream::connect(&addr).unwrap();
+        write_msg(&mut s, &[KIND_PROBE_INSTALL, 1, 3, 0]).unwrap();
+        assert!(read_msg(&mut s).unwrap().is_none());
+        // Query of a probe that does not exist.
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut msg = vec![KIND_PROBE_QUERY];
+        put_str(&mut msg, "ghost");
+        write_msg(&mut s, &msg).unwrap();
+        assert!(read_msg(&mut s).unwrap().is_none());
+        // The server is unharmed and has installed nothing.
+        let mut cl = ProvClient::connect(&addr).unwrap();
+        assert!(cl.list_probes().unwrap().is_empty());
+        cl.install_probe(&Probe::compile("fn:*.*:exit").unwrap()).unwrap();
+        assert_eq!(cl.list_probes().unwrap().len(), 1);
         drop(srv);
         handle.join();
     }

@@ -40,6 +40,7 @@
 //! dropped from the *log* (the record stays queryable in memory), a
 //! warning is logged, and [`ProvDbStats::log_errors`] counts it.
 
+use crate::probe::InstalledProbe;
 use crate::provenance::codec::{self, RecordFormat};
 use crate::provenance::{ProvQuery, ProvRecord};
 use crate::util::json::Json;
@@ -156,6 +157,10 @@ enum ShardReq {
     /// Run the query over this shard's partitions; reply with encoded
     /// matches (unsorted — the front-end merges and orders).
     Query { q: ProvQuery, reply: Sender<Vec<(u64, Vec<u8>)>> },
+    /// Evaluate an installed probe (predicate + sampling gate, counters
+    /// bumped) over this shard's partitions; reply with the admitted
+    /// encoded records (unsorted — the front-end merges and orders).
+    ProbeScan { probe: Arc<InstalledProbe>, reply: Sender<Vec<(u64, Vec<u8>)>> },
     /// Flush writers; compact logs of partitions that evicted records.
     Flush { reply: Sender<()> },
     Stats { reply: Sender<ProvDbStats> },
@@ -264,6 +269,34 @@ impl ProvStore {
         if let Some(n) = q.limit {
             out.truncate(n);
         }
+        out.into_iter().map(|(_, b)| b).collect()
+    }
+
+    /// Evaluate an installed probe over every shard — the server side of
+    /// a probe subscription. Each shard runs the compiled predicate (and
+    /// the probe's sampling gate, bumping its counters) against its
+    /// encoded records; the front-end merges and orders exactly like an
+    /// unfiltered [`Self::query_encoded`], so a probe equivalent to a
+    /// `ProvQuery` filter returns bit-identical bytes.
+    pub fn probe_scan(&self, probe: &Arc<InstalledProbe>) -> Vec<Vec<u8>> {
+        let (tx, rx) = channel();
+        let mut expected = 0usize;
+        for s in &self.shards {
+            if s.send(ShardReq::ProbeScan { probe: Arc::clone(probe), reply: tx.clone() })
+                .is_ok()
+            {
+                expected += 1;
+            }
+        }
+        drop(tx);
+        let mut out: Vec<(u64, Vec<u8>)> = Vec::new();
+        for _ in 0..expected {
+            match rx.recv() {
+                Ok(mut part) => out.append(&mut part),
+                Err(_) => break,
+            }
+        }
+        sort_results(&ProvQuery::default(), &mut out);
         out.into_iter().map(|(_, b)| b).collect()
     }
 
@@ -700,13 +733,16 @@ impl ShardState {
             for e in &part.entries {
                 let Ok(h) = codec::read_header(&e.buf) else { continue };
                 // Predicate pushdown: the fixed header decides every
-                // filter except a custom-label comparison; only matches
-                // (and that rare undecidable case) touch the payload.
+                // filter except a custom-label × custom-label compare;
+                // that last case reads the label bytes at their fixed
+                // payload offset (probe VM string access) — the record
+                // is never decoded just to settle it.
                 let keep = match codec::matches_header(q, &h) {
                     Some(v) => v,
-                    None => codec::decode(&e.buf)
-                        .map(|(rec, _)| q.matches(&rec))
-                        .unwrap_or(false),
+                    None => q
+                        .label
+                        .as_deref()
+                        .is_some_and(|l| crate::probe::vm::label_eq(&e.buf, l)),
                 };
                 if keep {
                     out.push((e.seq, e.buf.clone()));
@@ -722,6 +758,19 @@ impl ShardState {
             None => {
                 for part in self.parts.values() {
                     scan(part);
+                }
+            }
+        }
+        out
+    }
+
+    /// Evaluate an installed probe over every partition of this shard.
+    fn probe_scan(&self, probe: &InstalledProbe) -> Vec<(u64, Vec<u8>)> {
+        let mut out = Vec::new();
+        for part in self.parts.values() {
+            for e in &part.entries {
+                if probe.admit(&e.buf) {
+                    out.push((e.seq, e.buf.clone()));
                 }
             }
         }
@@ -869,6 +918,9 @@ fn run_shard(
             ShardReq::Ingest { batch, log } => shard.ingest(batch, log),
             ShardReq::Query { q, reply } => {
                 let _ = reply.send(shard.query(&q));
+            }
+            ShardReq::ProbeScan { probe, reply } => {
+                let _ = reply.send(shard.probe_scan(&probe));
             }
             ShardReq::Flush { reply } => {
                 shard.flush();
@@ -1267,6 +1319,68 @@ mod tests {
         // Shutdown must not panic (the old code `expect()`ed here).
         handle.join();
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn custom_label_query_decided_without_decode() {
+        // Satellite regression: the custom-label × custom-label case
+        // (the one filter `codec::matches_header` cannot settle) is
+        // resolved by the probe VM's fixed-offset label compare — the
+        // results must match a full-decode evaluation exactly.
+        let (store, handle) = spawn_store(None, 2, Retention::default()).unwrap();
+        let mut recs = Vec::new();
+        for (i, label) in ["weird", "weird_2", "normal", "ünï-label", "weird"]
+            .iter()
+            .enumerate()
+        {
+            let mut r = rec(0, i as u32 % 2, 0, 1.0, i as u64);
+            r.label = label.to_string();
+            recs.push(r);
+        }
+        store.ingest(recs.clone());
+        store.flush();
+        for want in ["weird", "weird_2", "ünï-label", "nosuch", "normal"] {
+            let q = ProvQuery { label: Some(want.to_string()), ..Default::default() };
+            let got = store.query(&q);
+            let expect: Vec<&ProvRecord> =
+                recs.iter().filter(|r| q.matches(r)).collect();
+            assert_eq!(got.len(), expect.len(), "label {want}");
+            assert!(got.iter().all(|r| r.label == want), "label {want}");
+        }
+        handle.join();
+    }
+
+    #[test]
+    fn probe_scan_matches_equivalent_query_bytes() {
+        use crate::probe::{InstalledProbe, Probe};
+        let (store, handle) = spawn_store(None, 4, Retention::default()).unwrap();
+        let mut recs = Vec::new();
+        for rank in 0..6u32 {
+            for i in 0..10u64 {
+                recs.push(rec(0, rank, i, (i % 8) as f64, rank as u64 * 100 + i));
+            }
+        }
+        store.ingest(recs);
+        store.flush();
+        // Probe predicate ≡ ProvQuery { min_score: 6.0, anomalies_only }.
+        let probe = Arc::new(InstalledProbe::new(
+            Probe::compile("fn:*.*:exit / score >= 6.0 && anomaly /").unwrap(),
+        ));
+        let via_probe = store.probe_scan(&probe);
+        let q = ProvQuery {
+            min_score: Some(6.0),
+            anomalies_only: true,
+            ..Default::default()
+        };
+        let via_query = store.query_encoded(&q);
+        assert!(!via_probe.is_empty());
+        assert_eq!(via_probe, via_query, "bit-identical to the query path");
+        assert_eq!(
+            probe.matches.load(Ordering::Relaxed) as usize,
+            via_probe.len()
+        );
+        assert_eq!(probe.shed.load(Ordering::Relaxed), 0);
+        handle.join();
     }
 
     #[test]

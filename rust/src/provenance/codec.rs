@@ -340,8 +340,11 @@ pub fn decode(buf: &[u8]) -> Result<(ProvRecord, usize)> {
 /// Evaluate every [`ProvQuery`] filter against the fixed header alone.
 /// `Some(v)` is the exact [`ProvQuery::matches`] verdict; `None` means
 /// the header cannot decide (both the query's label filter and the
-/// record's label are outside the well-known set) and the caller must
-/// decode the payload.
+/// record's label are outside the well-known set). Every other filter
+/// has passed by then, so the caller settles it by comparing the label
+/// bytes at their fixed payload offset —
+/// [`probe::vm::label_eq`](crate::probe::vm::label_eq) — without
+/// decoding the record.
 pub fn matches_header(q: &ProvQuery, h: &RecHeader) -> Option<bool> {
     if let Some(a) = q.app {
         if h.app != a {

@@ -64,7 +64,10 @@ pub mod rebalance;
 pub mod shard;
 
 pub use rebalance::RebalanceReport;
-pub use shard::{shard_of, spawn, spawn_with, PsClient, PsFinal, PsHandle, PsOpts, PsStats};
+pub use shard::{
+    global_event_record, shard_of, spawn, spawn_with, PsClient, PsFinal, PsHandle, PsOpts,
+    PsStats,
+};
 
 use crate::ad::Label;
 use crate::stats::RunStats;

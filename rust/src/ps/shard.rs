@@ -962,6 +962,46 @@ pub struct PsOpts {
     /// Minimum windowed merge count before judging skew (tiny windows
     /// are noise); 0 = judge every window.
     pub rebalance_min_merges: u64,
+    /// Trigger probes the aggregator evaluates against every newly
+    /// flagged global event (`[probe] trigger` in the config). An event
+    /// matching any probe's predicate (and passing its sample clause) is
+    /// synthesized into a provenance record ([`global_event_record`])
+    /// and sent on `trigger_tx` at flag time — it reaches the provDB
+    /// service immediately instead of waiting for the next sync-period
+    /// context dump.
+    pub trigger_probes: Vec<Arc<crate::probe::Probe>>,
+    /// Where trigger hits go; `None` disables trigger evaluation.
+    pub trigger_tx: Option<Sender<crate::provenance::ProvRecord>>,
+}
+
+/// Synthesize the provenance record a trigger probe evaluates for one
+/// globally detected event. No single execution is behind a global
+/// event, so the record is workflow-scoped: `app`/`rank`/`fid` are
+/// `u32::MAX`, `func` is `"workflow.global_event"`, the label is the
+/// custom `"global_event"`, `score` is the event's σ-distance from the
+/// per-step mean, and `msg_bytes` carries the workflow-wide anomaly
+/// total (the record layout has no better-fitting numeric field).
+pub fn global_event_record(ev: &GlobalEvent) -> crate::provenance::ProvRecord {
+    crate::provenance::ProvRecord {
+        call_id: ev.step,
+        app: u32::MAX,
+        rank: u32::MAX,
+        thread: 0,
+        fid: u32::MAX,
+        func: "workflow.global_event".to_string(),
+        step: ev.step,
+        entry_us: 0,
+        exit_us: 0,
+        inclusive_us: 0,
+        exclusive_us: 0,
+        depth: 0,
+        parent: None,
+        n_children: 0,
+        n_messages: 0,
+        msg_bytes: ev.total_anomalies,
+        label: "global_event".to_string(),
+        score: ev.score,
+    }
 }
 
 /// Spawn a sharded parameter server with in-process shards — see
@@ -1060,6 +1100,8 @@ pub fn spawn_with(opts: PsOpts) -> anyhow::Result<(PsClient, PsHandle)> {
     let interval_ms = opts.publish_interval_ms;
     let push_conns = conns.clone();
     let agg_version = version.clone();
+    let trigger_probes = opts.trigger_probes;
+    let trigger_tx = opts.trigger_tx;
     let agg_join = std::thread::Builder::new()
         .name("chimbuko-ps-agg".into())
         .spawn(move || {
@@ -1067,6 +1109,11 @@ pub fn spawn_with(opts: PsOpts) -> anyhow::Result<(PsClient, PsHandle)> {
             let mut running = true;
             let mut last_interval_pub = Instant::now();
             let mut last_ver = 0u64;
+            // Per-probe deterministic sample streams + a reused encode
+            // buffer for trigger evaluation (the probe VM reads the
+            // binary record form).
+            let mut trigger_counters = vec![0u64; trigger_probes.len()];
+            let mut trigger_buf: Vec<u8> = Vec::new();
             while running {
                 let req = if interval_ms == 0 {
                     match agg_rx.recv() {
@@ -1111,6 +1158,31 @@ pub fn spawn_with(opts: PsOpts) -> anyhow::Result<(PsClient, PsHandle)> {
                 }
                 let v = ps.event_version();
                 if v != last_ver {
+                    // Trigger probes run at flag time, before the next
+                    // sync period can deliver the event to any rank: a
+                    // matching event's record is on its way to provDB
+                    // while the context dumps are still pending.
+                    if let (false, Some(tx)) = (trigger_probes.is_empty(), &trigger_tx) {
+                        for ev in &ps.global_events()[last_ver as usize..] {
+                            let rec = global_event_record(ev);
+                            trigger_buf.clear();
+                            crate::provenance::codec::encode(&rec, &mut trigger_buf);
+                            let mut pushed = false;
+                            for (pi, probe) in trigger_probes.iter().enumerate() {
+                                if !probe.matches(&trigger_buf) {
+                                    continue;
+                                }
+                                let keep = probe.sample_keep(trigger_counters[pi]);
+                                trigger_counters[pi] += 1;
+                                if keep && !pushed {
+                                    // At most one push per event even
+                                    // when several probes match.
+                                    let _ = tx.send(rec.clone());
+                                    pushed = true;
+                                }
+                            }
+                        }
+                    }
                     agg_version.store(v, Ordering::SeqCst);
                     for conn in push_conns.iter() {
                         if let ShardConn::Tcp(pool) = conn {
@@ -1616,6 +1688,56 @@ mod tests {
         assert!(snap.delta);
         assert_eq!(snap.total_anomalies, 1);
         assert_eq!(snap.ranks.len(), 1);
+        client.shutdown();
+        handle.join();
+    }
+
+    #[test]
+    fn trigger_probe_fires_on_global_event() {
+        // One reporting rank; 10 quiet steps build the per-step history,
+        // then a burst flags a global event — the matching trigger probe
+        // must synthesize a record onto the channel at flag time (no sync
+        // or publish needed).
+        let probe = crate::probe::Probe::compile(
+            "probe trig: fn:*.*:exit / func == \"workflow.global_event\" && score > 3.0 /",
+        )
+        .unwrap();
+        let (ttx, trx) = std::sync::mpsc::channel();
+        let (client, handle) = spawn_with(PsOpts {
+            shards: 1,
+            publish_every: usize::MAX >> 1,
+            reports_per_step: 1,
+            trigger_probes: vec![Arc::new(probe)],
+            trigger_tx: Some(ttx),
+            ..PsOpts::default()
+        })
+        .unwrap();
+        let report = |step: u64, anoms: u64| {
+            client.report(StepStat {
+                app: 0,
+                rank: 0,
+                step,
+                n_executions: 100,
+                n_anomalies: anoms,
+                ts_range: (step, step + 1),
+            });
+        };
+        for step in 0..10 {
+            report(step, u64::from(step % 3 == 0));
+        }
+        report(10, 25);
+        let rec = trx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("trigger probe must push the global-event record");
+        assert_eq!(rec.step, 10);
+        assert_eq!(rec.label, "global_event");
+        assert_eq!(rec.func, "workflow.global_event");
+        assert_eq!(rec.msg_bytes, 25);
+        assert_eq!((rec.app, rec.rank, rec.fid), (u32::MAX, u32::MAX, u32::MAX));
+        assert!(rec.score > 3.0, "score {}", rec.score);
+        assert!(rec.is_anomaly(), "custom label must read as anomalous");
+        // Quiet steps never triggered: exactly one record on the channel.
+        assert!(trx.try_recv().is_err());
         client.shutdown();
         handle.join();
     }

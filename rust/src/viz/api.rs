@@ -130,6 +130,22 @@ pub fn global_events(state: &VizState) -> Json {
     )])
 }
 
+/// `/api/probes` — probes installed in the provDB service with their
+/// per-probe match/shed/push counters. A local provenance source has no
+/// probe table; the reply says so instead of faking an empty one.
+pub fn probes(state: &VizState) -> Json {
+    match state.db.probes() {
+        Some(infos) => Json::obj(vec![
+            ("count", Json::num(infos.len() as f64)),
+            ("probes", Json::Arr(infos.iter().map(|i| i.to_json()).collect())),
+        ]),
+        None => Json::obj(vec![(
+            "error",
+            Json::str("no probe table (provenance source is not a provDB service)"),
+        )]),
+    }
+}
+
 /// `/api/ps_stats` — parameter-server shard load counters (merge/sync
 /// counts per stat shard, from the latest published snapshot), the
 /// placement view (epoch + slots owned per shard — how the rebalancer

@@ -182,6 +182,7 @@ fn route(target: &str, state: &Arc<RwLock<VizState>>) -> (u16, &'static str, Str
                  GET /api/provenance?app=&rank=&fid=&step=&step_lo=&step_hi=&min_score=&label=&anomalies=1&order=score&limit=\n\
                  GET /api/metadata\n\
                  GET /api/globalevents\n\
+                 GET /api/probes\n\
                  GET /view/dashboard  /view/timeline?app=&rank=  /view/callstack?app=&rank=&step=\n\
                  </pre></body></html>\n",
                 crate::VERSION
@@ -245,6 +246,7 @@ fn route(target: &str, state: &Arc<RwLock<VizState>>) -> (u16, &'static str, Str
         }
         "/api/metadata" => json(api::metadata(&st)),
         "/api/globalevents" => json(api::global_events(&st)),
+        "/api/probes" => json(api::probes(&st)),
         "/view/dashboard" => {
             let stat = q
                 .get("stat")
@@ -433,6 +435,42 @@ mod tests {
 
     fn chimbuko_global_event() -> crate::ps::GlobalEvent {
         crate::ps::GlobalEvent { step: 12, total_anomalies: 40, score: 5.5 }
+    }
+
+    #[test]
+    fn probes_endpoint_lists_installed_probes() {
+        // A local source has no probe table: JSON error object.
+        let mut srv = VizServer::start("127.0.0.1:0", served_state()).unwrap();
+        let (code, body) = http_get(srv.addr(), "/api/probes").unwrap();
+        assert_eq!(code, 200);
+        let j = crate::util::json::parse(&body).unwrap();
+        assert!(j.get("error").is_some());
+        srv.stop();
+
+        // Against a provDB service: the installed probe shows with its
+        // counters.
+        let (store, db_handle) =
+            crate::provdb::spawn_store(None, 1, crate::provdb::Retention::default()).unwrap();
+        let mut db_srv = crate::provdb::ProvDbTcpServer::start("127.0.0.1:0", store).unwrap();
+        let db_addr = db_srv.addr().to_string();
+        let mut cl = crate::provdb::ProvClient::connect(&db_addr).unwrap();
+        cl.install_probe(
+            &crate::probe::Probe::compile("probe hot: fn:*.*:exit / score >= 6.0 /").unwrap(),
+        )
+        .unwrap();
+        let state = served_state();
+        state.write().unwrap().db = crate::viz::ProvSource::remote(&db_addr).unwrap();
+        let mut srv = VizServer::start("127.0.0.1:0", state).unwrap();
+        let (code, body) = http_get(srv.addr(), "/api/probes").unwrap();
+        assert_eq!(code, 200);
+        let j = crate::util::json::parse(&body).unwrap();
+        assert_eq!(j.get("count").unwrap().as_u64(), Some(1));
+        let probes = j.get("probes").unwrap().as_arr().unwrap();
+        assert_eq!(probes[0].get("name").unwrap().as_str(), Some("hot"));
+        assert_eq!(probes[0].get("matches").unwrap().as_u64(), Some(0));
+        srv.stop();
+        db_srv.stop();
+        db_handle.join();
     }
 
     #[test]

@@ -140,6 +140,16 @@ impl ProvSource {
         }
     }
 
+    /// Installed probes + per-probe counters (`/api/probes`). Only the
+    /// provDB service holds a probe table — a local index answers `None`
+    /// (distinct from a reachable service with zero probes, `Some([])`).
+    pub fn probes(&self) -> Option<Vec<crate::provdb::ProbeInfo>> {
+        match self {
+            ProvSource::Local { .. } => None,
+            ProvSource::Remote { client } => Self::with_remote(client, |c| c.list_probes()),
+        }
+    }
+
     /// Run metadata, if available.
     pub fn metadata(&self) -> Option<Json> {
         match self {

@@ -1,0 +1,430 @@
+//! Probe subsystem acceptance properties:
+//!
+//! 1. **Query agreement** — compiled probe predicates agree with
+//!    `ProvQuery::matches` on the expressible filter subset (app / rank /
+//!    fid / step / step ranges / time ranges / anomalies / min-score /
+//!    label), over records with unicode custom labels and edge-case
+//!    scores, for hundreds of randomly drawn queries.
+//! 2. **Hostility** — random source strings, mutated wire encodings, and
+//!    random bytecode are rejected or execute within the verifier budget;
+//!    nothing panics.
+//! 3. **Wire subscriptions** — a probe installed over the TCP protocol
+//!    filters server-side: the probe query returns bytes bit-identical
+//!    to the equivalent `ProvQuery` scan, and the per-probe counters
+//!    prove non-matching records never crossed the wire.
+//! 4. **Aggregator triggers** — a trigger probe on the PS aggregator
+//!    lands the matching global-event record in provDB at flag time,
+//!    with no publish/dump cycle ever running; and a full driver run
+//!    with `[probe] trigger` accounts trigger pushes consistently.
+
+use chimbuko::config::Config;
+use chimbuko::coordinator::{run, Mode, Workflow};
+use chimbuko::probe::bytecode::{Const, Program, MAX_CODE, OP_RET};
+use chimbuko::probe::{vm, Probe};
+use chimbuko::provdb::{spawn_store, ProvClient, ProvDbTcpServer, Retention};
+use chimbuko::provenance::{codec, ProvQuery, ProvRecord};
+use chimbuko::ps::{spawn_with, PsOpts, StepStat};
+use chimbuko::util::rng::Rng;
+use chimbuko::util::wire::Cursor;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Labels seen in the stream: the builtin three plus unicode custom
+/// labels (anomalous by definition — `label != "normal"`).
+const LABELS: [&str; 6] =
+    ["normal", "anomaly_high", "anomaly_low", "ünïcode_läbel", "spike-异常", "tail☂"];
+
+/// Scores include negatives, a huge finite value, and +inf — the query
+/// and the VM must order all of them identically.
+const SCORES: [f64; 7] = [0.0, -3.25, 1.5, 6.5, 9.0, 1e300, f64::INFINITY];
+
+fn record(rng: &mut Rng, i: u64) -> ProvRecord {
+    let entry = rng.range_u64(0, 20) * 1_000;
+    let dur = rng.range_u64(10, 3_000);
+    let label = if rng.chance(0.6) { LABELS[0] } else { LABELS[1 + rng.usize(5)] };
+    ProvRecord {
+        call_id: i,
+        app: (i % 2) as u32,
+        rank: rng.usize(5) as u32,
+        thread: rng.usize(2) as u32,
+        fid: rng.usize(6) as u32,
+        func: format!("FN_{}", rng.usize(6)),
+        step: rng.usize(4) as u64,
+        entry_us: entry,
+        exit_us: entry + dur,
+        inclusive_us: dur,
+        exclusive_us: dur / 2,
+        depth: rng.usize(3) as u32,
+        parent: if rng.chance(0.5) { Some(i.saturating_sub(1)) } else { None },
+        n_children: rng.usize(3) as u32,
+        n_messages: rng.usize(4) as u32,
+        msg_bytes: rng.range_u64(0, 4096),
+        label: label.to_string(),
+        score: SCORES[rng.usize(SCORES.len())],
+    }
+}
+
+fn encode(r: &ProvRecord) -> Vec<u8> {
+    let mut buf = Vec::new();
+    codec::encode(r, &mut buf);
+    buf
+}
+
+/// Probe source equivalent to the predicate part of `q` (ordering and
+/// limits are not predicates and have no probe counterpart).
+fn probe_source_of(q: &ProvQuery) -> String {
+    let mut conj: Vec<String> = Vec::new();
+    if let Some(a) = q.app {
+        conj.push(format!("app == {a}"));
+    }
+    if let Some((a, k)) = q.rank {
+        conj.push(format!("app == {a} && rank == {k}"));
+    }
+    if let Some((a, f)) = q.fid {
+        conj.push(format!("app == {a} && fid == {f}"));
+    }
+    if let Some(s) = q.step {
+        conj.push(format!("step == {s}"));
+    }
+    if let Some((lo, hi)) = q.step_range {
+        conj.push(format!("step >= {lo} && step <= {hi}"));
+    }
+    if q.anomalies_only {
+        conj.push("anomaly".to_string());
+    }
+    if let Some(m) = q.min_score {
+        // `{:?}` round-trips f64 exactly; the lexer accepts e-notation
+        // and the parser accepts unary minus.
+        conj.push(format!("score >= {m:?}"));
+    }
+    if let Some(l) = &q.label {
+        conj.push(format!("label == \"{l}\""));
+    }
+    if let Some((lo, hi)) = q.ts_range {
+        // ProvQuery::matches overlap semantics.
+        conj.push(format!("exit_us >= {lo} && entry_us <= {hi}"));
+    }
+    if conj.is_empty() {
+        "fn:*.*:exit".to_string()
+    } else {
+        format!("fn:*.*:exit / {} /", conj.join(" && "))
+    }
+}
+
+fn random_query(rng: &mut Rng) -> ProvQuery {
+    let mut q = ProvQuery::default();
+    if rng.chance(0.3) {
+        q.app = Some(rng.usize(3) as u32);
+    }
+    if rng.chance(0.3) {
+        q.rank = Some((rng.usize(2) as u32, rng.usize(6) as u32));
+    }
+    if rng.chance(0.3) {
+        q.fid = Some((rng.usize(2) as u32, rng.usize(7) as u32));
+    }
+    if rng.chance(0.25) {
+        q.step = Some(rng.usize(5) as u64);
+    }
+    if rng.chance(0.25) {
+        let lo = rng.range_u64(0, 3);
+        q.step_range = Some((lo, lo + rng.range_u64(0, 3)));
+    }
+    if rng.chance(0.25) {
+        let lo = rng.range_u64(0, 15_000);
+        q.ts_range = Some((lo, lo + rng.range_u64(0, 8_000)));
+    }
+    if rng.chance(0.3) {
+        q.anomalies_only = true;
+    }
+    if rng.chance(0.35) {
+        q.min_score = Some([0.0, -2.5, 1.5, 6.0, 9.0, 1e300][rng.usize(6)]);
+    }
+    if rng.chance(0.3) {
+        q.label = Some(LABELS[rng.usize(LABELS.len())].to_string());
+    }
+    q
+}
+
+#[test]
+fn compiled_probes_agree_with_provquery_on_expressible_subset() {
+    let mut rng = Rng::new(0x9E0B);
+    let records: Vec<ProvRecord> = (0..400).map(|i| record(&mut rng, i)).collect();
+    let encoded: Vec<Vec<u8>> = records.iter().map(encode).collect();
+
+    let mut nontrivial = 0usize;
+    for qi in 0..300 {
+        let q = random_query(&mut rng);
+        let src = probe_source_of(&q);
+        let p = Probe::compile(&src)
+            .unwrap_or_else(|e| panic!("query #{qi} source `{src}` failed to compile: {e:#}"));
+        let mut any = false;
+        for (r, buf) in records.iter().zip(&encoded) {
+            let want = q.matches(r);
+            assert_eq!(
+                p.matches(buf),
+                want,
+                "query #{qi} `{src}` diverged on record {} (label {:?}, score {})",
+                r.call_id,
+                r.label,
+                r.score
+            );
+            any |= want;
+        }
+        nontrivial += any as usize;
+    }
+    // The agreement must not be vacuous: a healthy share of the drawn
+    // queries matched at least one record.
+    assert!(nontrivial > 50, "only {nontrivial}/300 queries matched anything");
+}
+
+#[test]
+fn hostile_sources_and_bytecode_never_panic() {
+    let mut rng = Rng::new(0xF422);
+    let sample = encode(&record(&mut rng, 7));
+
+    // (a) Random token-soup sources: compile must return Ok or Err —
+    // never panic — and accepted programs stay within the code budget.
+    let frags = [
+        "probe", "fn", ":", ".", "*", "/", "sample", "%", "{", "}", "(", ")", ";", "score",
+        "label", "func", "anomaly", "step", "&&", "||", "!", "==", "!=", "<=", ">=", "\"",
+        "0.5", "18446744073709551615", "1e308", "x", "ü", "#", "\n", " ", "-", "+", "capture",
+        "record", "stack", "entry", "exit", "\\", "p0",
+    ];
+    for _ in 0..2_000 {
+        let mut s = String::new();
+        for _ in 0..rng.usize(40) {
+            s.push_str(frags[rng.usize(frags.len())]);
+        }
+        if let Ok(probes) = Probe::compile_all(&s) {
+            for p in &probes {
+                p.program.verify().expect("accepted program must verify");
+                assert!(p.program.code.len() <= MAX_CODE);
+                let _ = p.matches(&sample);
+            }
+        }
+    }
+    // Raw bytes forced into a lossy string exercise the lexer's byte
+    // handling on arbitrary junk.
+    for _ in 0..500 {
+        let bytes: Vec<u8> = (0..rng.usize(120)).map(|_| rng.usize(256) as u8).collect();
+        let _ = Probe::compile_all(&String::from_utf8_lossy(&bytes));
+    }
+
+    // (b) Mutated wire encodings: truncations at every length plus
+    // random byte flips. A decode that slips through must still verify
+    // and evaluate without panicking.
+    let base = Probe::compile(
+        "probe hot: fn:0.md_force:exit / score > 0.9 && label == \"weird\" / sample 3/7 { capture(stack); }",
+    )
+    .unwrap();
+    let mut wire = Vec::new();
+    base.to_wire(&mut wire);
+    for n in 0..wire.len() {
+        let _ = Probe::from_wire(&mut Cursor::new(&wire[..n]));
+    }
+    for _ in 0..4_000 {
+        let mut m = wire.clone();
+        for _ in 0..1 + rng.usize(3) {
+            let i = rng.usize(m.len());
+            m[i] = rng.usize(256) as u8;
+        }
+        if let Ok(p) = Probe::from_wire(&mut Cursor::new(&m)) {
+            p.program.verify().expect("from_wire must only return verified programs");
+            let _ = p.matches(&sample);
+        }
+    }
+
+    // (c) Random bytecode straight at the verifier: acceptance implies a
+    // bounded, panic-free evaluation.
+    for _ in 0..4_000 {
+        let consts: Vec<Const> = (0..rng.usize(5))
+            .map(|_| match rng.usize(3) {
+                0 => Const::U(rng.range_u64(0, 1 << 40)),
+                1 => Const::F(rng.f64() * 100.0 - 50.0),
+                _ => Const::S("läbel".repeat(rng.usize(3))),
+            })
+            .collect();
+        let mut code: Vec<u8> = (0..rng.usize(24)).map(|_| rng.usize(20) as u8).collect();
+        if rng.chance(0.8) {
+            code.push(OP_RET);
+        }
+        let prog = Program { consts, code };
+        if prog.verify().is_ok() {
+            let _ = vm::eval(&prog, &sample);
+        }
+    }
+}
+
+#[test]
+fn wire_installed_probe_filters_subscriptions_server_side() {
+    let mut rng = Rng::new(0x50B5);
+    let records: Vec<ProvRecord> = (0..500).map(|i| record(&mut rng, i)).collect();
+
+    let (store, handle) = spawn_store(None, 3, Retention::default()).unwrap();
+    let srv = ProvDbTcpServer::start("127.0.0.1:0", store.clone()).unwrap();
+    let mut client = ProvClient::connect(&srv.addr().to_string()).unwrap();
+    for r in &records {
+        client.append(r).unwrap();
+    }
+    client.flush().unwrap();
+
+    // Install over the wire; probe ≡ ProvQuery { min_score, anomalies_only }.
+    let hot =
+        Probe::compile("probe hot: fn:*.*:exit / score >= 6.0 && anomaly /").unwrap();
+    client.install_probe(&hot).unwrap();
+    let via_probe = client.probe_query_encoded("hot").unwrap();
+    let q = ProvQuery { min_score: Some(6.0), anomalies_only: true, ..Default::default() };
+    let want = store.query_encoded(&q);
+    assert!(!via_probe.is_empty(), "stream must contain hot anomalies");
+    assert!(via_probe.len() < records.len(), "probe must actually filter");
+    assert_eq!(via_probe, want, "wire probe query must be bit-identical to the query scan");
+
+    // The per-probe counters prove non-matching records never crossed
+    // the wire: everything matched was pushed, nothing else.
+    let wire_bytes: u64 = via_probe.iter().map(|b| b.len() as u64).sum();
+    let infos = client.list_probes().unwrap();
+    assert_eq!(infos.len(), 1);
+    assert_eq!(infos[0].name, "hot");
+    assert_eq!(infos[0].matches, via_probe.len() as u64);
+    assert_eq!(infos[0].shed, 0);
+    assert_eq!(infos[0].pushed_records, via_probe.len() as u64);
+    assert_eq!(infos[0].pushed_bytes, wire_bytes);
+
+    // Decoded probe replies equal the decoded query replies, and the
+    // counters accumulate across scans.
+    assert_eq!(client.probe_query("hot").unwrap(), client.query(&q).unwrap());
+    let infos = client.list_probes().unwrap();
+    assert_eq!(infos[0].pushed_records, 2 * via_probe.len() as u64);
+
+    // A 0/2 sampling probe sheds every match server-side: the reply is
+    // empty and the shed counter carries the proof.
+    client
+        .install_probe(&Probe::compile("probe none: fn:*.*:exit / anomaly / sample 0/2").unwrap())
+        .unwrap();
+    assert!(client.probe_query_encoded("none").unwrap().is_empty());
+    let infos = client.list_probes().unwrap();
+    let none = infos.iter().find(|i| i.name == "none").unwrap();
+    assert!(none.matches > 0);
+    assert_eq!(none.shed, none.matches);
+    assert_eq!(none.pushed_records, 0);
+    assert_eq!(none.pushed_bytes, 0);
+
+    assert!(client.remove_probe("none").unwrap());
+    assert!(!client.remove_probe("none").unwrap());
+    assert_eq!(client.list_probes().unwrap().len(), 1);
+
+    drop(srv);
+    handle.join();
+}
+
+#[test]
+fn aggregator_trigger_probe_lands_in_provdb_without_a_dump() {
+    let (store, handle) = spawn_store(None, 1, Retention::default()).unwrap();
+    let srv = ProvDbTcpServer::start("127.0.0.1:0", store.clone()).unwrap();
+    let addr = srv.addr().to_string();
+
+    // The forwarder the driver spawns when `[probe] trigger` is set:
+    // per-record append + flush so triggered records land immediately.
+    let (ttx, trx) = std::sync::mpsc::channel::<ProvRecord>();
+    let fwd = std::thread::spawn(move || {
+        let mut c = ProvClient::connect(&addr).unwrap();
+        let mut pushed = 0u64;
+        while let Ok(rec) = trx.recv() {
+            c.append(&rec).unwrap();
+            c.flush().unwrap();
+            pushed += 1;
+        }
+        pushed
+    });
+
+    let probe = Probe::compile(
+        "probe trig: fn:*.*:exit / func == \"workflow.global_event\" && score > 3.0 /",
+    )
+    .unwrap();
+    let (ps_client, ps_handle) = spawn_with(PsOpts {
+        shards: 1,
+        // No publish/sync period ever elapses — delivery below can only
+        // have come from the flag-time trigger path.
+        publish_every: usize::MAX >> 1,
+        reports_per_step: 1,
+        trigger_probes: vec![Arc::new(probe)],
+        trigger_tx: Some(ttx),
+        ..PsOpts::default()
+    })
+    .unwrap();
+    let report = |step: u64, anoms: u64| {
+        ps_client.report(StepStat {
+            app: 0,
+            rank: 0,
+            step,
+            n_executions: 100,
+            n_anomalies: anoms,
+            ts_range: (step, step + 1),
+        });
+    };
+    for step in 0..10 {
+        report(step, u64::from(step % 3 == 0));
+    }
+    report(10, 25); // burst → global event
+
+    let q = ProvQuery { label: Some("global_event".into()), ..Default::default() };
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let got = loop {
+        let got = store.query(&q);
+        if !got.is_empty() {
+            break got;
+        }
+        assert!(Instant::now() < deadline, "trigger record never reached provDB");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0].step, 10);
+    assert_eq!(got[0].func, "workflow.global_event");
+    assert_eq!(got[0].msg_bytes, 25);
+    assert!(got[0].score > 3.0, "score {}", got[0].score);
+    // Nothing else ever flowed into the service: the triggered record is
+    // the only record it holds.
+    assert_eq!(store.stats().records, 1);
+
+    ps_client.shutdown();
+    ps_handle.join();
+    assert_eq!(fwd.join().unwrap(), 1, "exactly one trigger push");
+    drop(srv);
+    handle.join();
+}
+
+#[test]
+fn driver_trigger_probe_accounts_consistently_end_to_end() {
+    let (store, handle) = spawn_store(None, 2, Retention::default()).unwrap();
+    let srv = ProvDbTcpServer::start("127.0.0.1:0", store.clone()).unwrap();
+    let cfg = Config {
+        ranks: 8,
+        apps: 2,
+        steps: 12,
+        calls_per_step: 130,
+        out_dir: String::new(),
+        provdb_addr: srv.addr().to_string(),
+        probe_trigger: "probe burst: fn:*.*:exit / func == \"workflow.global_event\" /"
+            .to_string(),
+        ..Config::default()
+    };
+    let w = Workflow::nwchem(&cfg);
+    let report = run(&cfg, &w, Mode::TauChimbuko).unwrap();
+    assert!(report.total_kept > 0);
+
+    // Whether or not this workload flags global events, the books must
+    // balance: every trigger push is a `global_event` record in the
+    // store, on top of the per-rank kept records.
+    let triggered =
+        store.query(&ProvQuery { label: Some("global_event".into()), ..Default::default() });
+    assert_eq!(triggered.len() as u64, report.trigger_pushed);
+    for r in &triggered {
+        assert_eq!(r.func, "workflow.global_event");
+        assert_eq!((r.app, r.rank, r.fid), (u32::MAX, u32::MAX, u32::MAX));
+    }
+    let stats = store.stats();
+    assert_eq!(stats.records, report.total_kept + report.trigger_pushed);
+
+    drop(srv);
+    handle.join();
+}
