@@ -62,11 +62,11 @@ fn main() {
         );
     }
 
-    // --- codec A/B: jsonl vs binary record pipeline at 4 shards ----------
+    // --- codec A/B/C: jsonl vs binary vs sealed columnar v2 at 4 shards --
     let (c_clients, c_records, c_queries) =
         if fast { (4, 4_000, 48) } else { (8, 20_000, 240) };
     println!(
-        "\ncodec sweep: 4 shards, {} clients x {} records, jsonl vs binary\n",
+        "\ncodec sweep: 4 shards, {} clients x {} records, jsonl vs binary vs v2\n",
         c_clients, c_records
     );
     let codec = chimbuko::exp::run_codec_bench(4, c_clients, c_records, c_queries, 7)
@@ -74,7 +74,8 @@ fn main() {
     print!("{}", codec.render());
     println!(
         "shape check: binary ingest {:.2}x jsonl (target ≥ 2x); \
-         log bytes/record {:.1} vs {:.1}",
+         stored bytes/record {:.1} (binary) vs {:.1} (jsonl) vs {:.1} (v2, \
+         packing {:.2}x, target ≥ 1.5x)",
         codec.ingest_speedup(),
         codec
             .rows
@@ -88,10 +89,39 @@ fn main() {
             .find(|r| r.format == "jsonl")
             .map(|r| r.log_bytes_per_record)
             .unwrap_or(0.0),
+        codec
+            .rows
+            .iter()
+            .find(|r| r.format == "binary_v2")
+            .map(|r| r.log_bytes_per_record)
+            .unwrap_or(0.0),
+        codec.v2_packing_factor(),
     );
+
+    // --- scan selectivity: zone-map pruning on sealed v2 segments --------
+    let (s_ranks, s_records, s_seg, s_iters) =
+        if fast { (2, 1_024, 128, 8) } else { (4, 4_096, 256, 40) };
+    println!(
+        "\nscan sweep: {} ranks x {} records, {} records/segment\n",
+        s_ranks, s_records, s_seg
+    );
+    let scan = chimbuko::exp::run_scan_bench(s_ranks, s_records, s_seg, s_iters, 7)
+        .expect("scan sweep");
+    print!("{}", scan.render());
+    if let (Some(first), Some(last)) = (scan.rows.first(), scan.rows.last()) {
+        println!(
+            "shape check: 1% window decodes {:.0} of {} records \
+             ({:.1} segments pruned/query); 100% decodes {:.0}",
+            first.records_decoded,
+            scan.total_records,
+            first.segments_skipped,
+            last.records_decoded,
+        );
+    }
 
     let mut artifact = pdb.to_json();
     artifact.set("codec_rows", codec.rows_json());
+    artifact.set("scan_rows", scan.to_json());
     let out = "BENCH_provdb.json";
     std::fs::write(out, artifact.to_pretty()).expect("writing BENCH_provdb.json");
     println!("wrote {out}");

@@ -166,6 +166,34 @@ fn main() {
         n
     });
 
+    // --- columnar v2 segments: seal + scan (the provDB warm tier) ---
+    let row_bufs: Vec<Vec<u8>> = records
+        .iter()
+        .map(|r| {
+            let mut buf = Vec::with_capacity(192);
+            codec::encode(r, &mut buf);
+            buf
+        })
+        .collect();
+    if !row_bufs.is_empty() {
+        let rows: Vec<(u64, &[u8])> = row_bufs
+            .iter()
+            .enumerate()
+            .map(|(i, buf)| (i as u64, buf.as_slice()))
+            .collect();
+        b.run_throughput("prov: seal columnar v2 segment", || {
+            let (bytes, _) = codec::seal_segment_v2(&rows).unwrap();
+            std::hint::black_box(bytes.len());
+            rows.len() as u64
+        });
+        let (sealed, footer) = codec::seal_segment_v2(&rows).unwrap();
+        b.run_throughput("prov: scan columnar v2 segment", || {
+            let scan = codec::read_segment_v2(&sealed).unwrap();
+            std::hint::black_box(scan.records.len());
+            footer.n_records as u64
+        });
+    }
+
     // --- probe DSL: compile + per-record predicate eval ---
     use chimbuko::probe::Probe;
     const PROBE_SRC: &str =

@@ -1,15 +1,29 @@
 #!/usr/bin/env python3
-"""Diff the codec_rows of a fresh BENCH_provdb.json against the committed
-baseline so codec regressions are visible in the CI artifact trail.
+"""Diff the codec_rows + scan_rows of a fresh BENCH_provdb.json against
+the committed baseline and FAIL (exit non-zero) on codec regressions.
 
 Usage: codec_diff.py <BENCH_provdb.json> <baseline.json>
 
-Prints a per-(format, shards) comparison table and flags (without
-failing the build — CI runners are noisy) when:
-  * binary ingest falls below 2x jsonl (the PR acceptance floor), or
-  * binary log bytes/record is no longer strictly smaller than jsonl's.
-Exits non-zero only when the files are missing or the schema is broken,
-so a codec change that forgets to emit codec_rows fails loudly.
+Hard failures (exit 1):
+  * missing/BROKEN schema: no codec_rows or no scan_rows in the fresh
+    artifact (a codec change that forgets to emit them fails loudly);
+  * binary log bytes/record not strictly smaller than jsonl's;
+  * binary_v2 (sealed columnar segments) not >= 1.5x smaller than the
+    binary row format — the v2 packing floor;
+  * zone maps not pruning: a scan row at <= 10% selectivity with zero
+    segments skipped, or decoding more than its proportional share of
+    records (3x slack over max(selectivity, per-rank segment floor));
+  * vs a non-provisional baseline: bytes/record worse by > 10%, or
+    ingest throughput below 50% of baseline (runner noise allowance).
+
+Soft warnings (printed, build passes): binary ingest below the absolute
+2x-over-jsonl target — absolute rates depend on the runner class, the
+baseline regression check above is the enforced one.
+
+While the baseline carries "provisional": true (pre-CI estimates), the
+vs-baseline deltas are informational only; the format-vs-format and
+scan-selectivity invariants are enforced regardless, since they compare
+the fresh run against itself.
 """
 
 import json
@@ -18,6 +32,104 @@ import sys
 
 def rows_by_key(rows):
     return {(r["format"], int(r["shards"])): r for r in rows}
+
+
+def diff_codec_rows(fresh_by, base_by, provisional, failures):
+    metrics = ["ingest_per_sec", "query_p50_us", "query_p99_us", "log_bytes_per_record"]
+    print(f"{'codec@shards':<16}{'metric':<22}{'baseline':>14}{'fresh':>14}{'delta':>10}")
+    for key in sorted(fresh_by):
+        fr = fresh_by[key]
+        br = base_by.get(key)
+        for m in metrics:
+            fv = float(fr.get(m, 0.0))
+            if br is None:
+                print(f"{key[0]}@{key[1]:<14}{m:<22}{'(new)':>14}{fv:>14.1f}{'':>10}")
+                continue
+            bv = float(br.get(m, 0.0))
+            delta = (fv - bv) / bv * 100.0 if bv else float("inf")
+            print(f"{key[0]}@{key[1]:<14}{m:<22}{bv:>14.1f}{fv:>14.1f}{delta:>+9.1f}%")
+            if provisional:
+                continue
+            if m == "log_bytes_per_record" and bv and fv > bv * 1.10:
+                failures.append(
+                    f"{key[0]}@{key[1]}: log bytes/record {fv:.1f} is "
+                    f">10% worse than baseline {bv:.1f}"
+                )
+            if m == "ingest_per_sec" and bv and fv < bv * 0.50:
+                failures.append(
+                    f"{key[0]}@{key[1]}: ingest {fv:.0f} rec/s fell below "
+                    f"50% of baseline {bv:.0f}"
+                )
+
+    def rate(fmt):
+        return max(
+            (float(r["ingest_per_sec"]) for (f, _), r in fresh_by.items() if f == fmt),
+            default=0.0,
+        )
+
+    def bytes_per_rec(fmt):
+        return min(
+            (float(r["log_bytes_per_record"]) for (f, _), r in fresh_by.items() if f == fmt),
+            default=0.0,
+        )
+
+    speedup = rate("binary") / max(rate("jsonl"), 1e-9)
+    print(f"\nbinary/jsonl ingest speedup: {speedup:.2f}x (target >= 2x)")
+    if speedup < 2.0:
+        print("WARNING: binary ingest below the 2x target (not enforced — see baseline check)")
+    b_rec, j_rec = bytes_per_rec("binary"), bytes_per_rec("jsonl")
+    if b_rec >= j_rec:
+        failures.append(
+            f"binary bytes/record {b_rec:.1f} is not smaller than jsonl {j_rec:.1f}"
+        )
+    v2_rec = bytes_per_rec("binary_v2")
+    if v2_rec <= 0.0:
+        failures.append("no binary_v2 row in codec_rows — the v2 sweep did not run")
+    else:
+        packing = b_rec / v2_rec if v2_rec else 0.0
+        print(f"binary_v2 packing: {packing:.2f}x over binary rows (floor 1.5x)")
+        if v2_rec * 1.5 > b_rec:
+            failures.append(
+                f"binary_v2 bytes/record {v2_rec:.1f} does not beat binary "
+                f"{b_rec:.1f} by the 1.5x floor"
+            )
+
+
+def check_scan_rows(scan, base_scan, failures):
+    rows = scan.get("rows") or []
+    total = float(scan.get("total_records", 0.0))
+    ranks = float(scan.get("ranks", 0.0))
+    seg = float(scan.get("segment_records", 0.0))
+    if not rows or total <= 0:
+        failures.append("scan_rows is empty or lacks total_records")
+        return
+    base_rows = {int(r["selectivity_pct"]): r for r in (base_scan or {}).get("rows", [])}
+    # A step window can never decode less than one segment per rank, so
+    # the proportionality bound is against max(selectivity, that floor).
+    seg_floor = (seg * ranks) / total if total else 1.0
+    print(f"\n{'window':<10}{'p50(µs)':>10}{'p99(µs)':>10}{'decoded':>12}{'skipped':>10}{'base p50':>12}")
+    for r in sorted(rows, key=lambda r: int(r["selectivity_pct"])):
+        pct = int(r["selectivity_pct"])
+        decoded = float(r["records_decoded"])
+        skipped = float(r["segments_skipped"])
+        br = base_rows.get(pct)
+        base_p50 = f"{float(br['query_p50_us']):.1f}" if br else "(new)"
+        print(
+            f"{pct}%{'':<7}{float(r['query_p50_us']):>10.1f}"
+            f"{float(r['query_p99_us']):>10.1f}{decoded:>12.0f}{skipped:>10.1f}{base_p50:>12}"
+        )
+        if pct <= 10:
+            if skipped <= 0.0:
+                failures.append(
+                    f"scan {pct}%: zone maps pruned no segments (skipped=0)"
+                )
+            allowed = 3.0 * max(pct / 100.0, seg_floor)
+            if decoded / total > allowed:
+                failures.append(
+                    f"scan {pct}%: decoded {decoded:.0f}/{total:.0f} records "
+                    f"({decoded / total:.1%}) exceeds the proportional bound "
+                    f"({allowed:.1%})"
+                )
 
 
 def main():
@@ -36,46 +148,30 @@ def main():
     if not base_rows:
         print(f"ERROR: {sys.argv[2]} has no codec_rows — baseline schema broken")
         return 1
+    fresh_scan = fresh.get("scan_rows")
+    if not fresh_scan:
+        print(f"ERROR: {sys.argv[1]} has no scan_rows — did the scan sweep run?")
+        return 1
 
-    fresh_by, base_by = rows_by_key(fresh_rows), rows_by_key(base_rows)
-    if base.get("provisional"):
+    provisional = bool(base.get("provisional"))
+    if provisional:
         print(
             "NOTE: baseline is PROVISIONAL (pre-CI estimates, not measured artifacts) —\n"
-            "      deltas below are not regression evidence; seed the baseline from this\n"
-            "      run's BENCH_provdb.json codec_rows to arm the diff.\n"
-        )
-    metrics = ["ingest_per_sec", "query_p50_us", "query_p99_us", "log_bytes_per_record"]
-    print(f"{'codec@shards':<16}{'metric':<22}{'baseline':>14}{'fresh':>14}{'delta':>10}")
-    for key in sorted(fresh_by):
-        fr = fresh_by[key]
-        br = base_by.get(key)
-        for m in metrics:
-            fv = float(fr.get(m, 0.0))
-            if br is None:
-                print(f"{key[0]}@{key[1]:<14}{m:<22}{'(new)':>14}{fv:>14.1f}{'':>10}")
-                continue
-            bv = float(br.get(m, 0.0))
-            delta = (fv - bv) / bv * 100.0 if bv else float("inf")
-            print(f"{key[0]}@{key[1]:<14}{m:<22}{bv:>14.1f}{fv:>14.1f}{delta:>+9.1f}%")
-
-    def rate(fmt):
-        return max(
-            (float(r["ingest_per_sec"]) for (f, _), r in fresh_by.items() if f == fmt),
-            default=0.0,
+            "      vs-baseline deltas are informational; format-vs-format and\n"
+            "      scan-selectivity invariants are still enforced. Seed the baseline\n"
+            "      from this run's BENCH_provdb.json to arm the regression diff.\n"
         )
 
-    def bytes_per_rec(fmt):
-        return min(
-            (float(r["log_bytes_per_record"]) for (f, _), r in fresh_by.items() if f == fmt),
-            default=0.0,
-        )
+    failures = []
+    diff_codec_rows(rows_by_key(fresh_rows), rows_by_key(base_rows), provisional, failures)
+    check_scan_rows(fresh_scan, base.get("scan_rows"), failures)
 
-    speedup = rate("binary") / max(rate("jsonl"), 1e-9)
-    print(f"\nbinary/jsonl ingest speedup: {speedup:.2f}x (target >= 2x)")
-    if speedup < 2.0:
-        print("WARNING: binary ingest below the 2x floor")
-    if bytes_per_rec("binary") >= bytes_per_rec("jsonl"):
-        print("WARNING: binary log bytes/record is not smaller than jsonl")
+    if failures:
+        print("\nFAIL: codec regression checks failed:")
+        for msg in failures:
+            print(f"  * {msg}")
+        return 1
+    print("\nOK: codec + scan checks passed")
     return 0
 
 

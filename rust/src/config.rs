@@ -133,6 +133,14 @@ pub struct Config {
     pub provdb_batch: usize,
     /// ProvDB retention: retained records per (app, rank); 0 = unbounded.
     pub provdb_max_per_rank: usize,
+    /// ProvDB rolling-segment bound: hot records per (app, rank) before
+    /// the partition seals into a columnar v2 `.provseg` segment;
+    /// 0 = never seal (single append file, the pre-v2 layout).
+    pub provdb_segment_records: usize,
+    /// ProvDB expiry window (µs of virtual time); records older than
+    /// `partition max entry − window` are dropped at flush, whole
+    /// sealed segments at a time via their zone maps. 0 = keep forever.
+    pub provdb_retain_window_us: u64,
     /// ProvDB record format: the binary codec (default) or the JSONL
     /// escape hatch (`log_format = jsonl`). Controls the append-log
     /// layout of a `provdb-server` started from this config (classic
@@ -218,6 +226,8 @@ impl Default for Config {
             provdb_shards: 4,
             provdb_batch: 64,
             provdb_max_per_rank: 0,
+            provdb_segment_records: 8192,
+            provdb_retain_window_us: 0,
             provdb_log_format: crate::provenance::RecordFormat::Binary,
             backend: DetectorBackend::Rust,
             algorithm: AdAlgorithm::Threshold,
@@ -299,6 +309,8 @@ impl Config {
             "provdb.shards" => self.provdb_shards = v.parse()?,
             "provdb.batch" => self.provdb_batch = v.parse()?,
             "provdb.max_records_per_rank" => self.provdb_max_per_rank = v.parse()?,
+            "provdb.segment_records" => self.provdb_segment_records = v.parse()?,
+            "provdb.retain_window_us" => self.provdb_retain_window_us = v.parse()?,
             "provdb.log_format" => {
                 self.provdb_log_format = crate::provenance::RecordFormat::parse(v)?
             }
@@ -415,6 +427,8 @@ impl Config {
             ("provdb_addr", Json::str(&self.provdb_addr)),
             ("provdb_shards", Json::num(self.provdb_shards as f64)),
             ("provdb_max_records_per_rank", Json::num(self.provdb_max_per_rank as f64)),
+            ("provdb_segment_records", Json::num(self.provdb_segment_records as f64)),
+            ("provdb_retain_window_us", Json::num(self.provdb_retain_window_us as f64)),
             ("provdb_log_format", Json::str(self.provdb_log_format.name())),
             ("backend", Json::str(self.backend.name())),
             ("algorithm", Json::str(self.algorithm.name())),
@@ -578,6 +592,8 @@ addr = 127.0.0.1:5560
 shards = 3
 batch = 16
 max_records_per_rank = 500
+segment_records = 256
+retain_window_us = 5000000
 log_format = jsonl
 "#;
         let c = Config::from_str(text).unwrap();
@@ -585,6 +601,8 @@ log_format = jsonl
         assert_eq!(c.provdb_shards, 3);
         assert_eq!(c.provdb_batch, 16);
         assert_eq!(c.provdb_max_per_rank, 500);
+        assert_eq!(c.provdb_segment_records, 256);
+        assert_eq!(c.provdb_retain_window_us, 5_000_000);
         assert_eq!(c.provdb_log_format, crate::provenance::RecordFormat::Jsonl);
         assert!(Config::from_str("[provdb]\nshards = 0").is_err());
         assert!(Config::from_str("[provdb]\nbatch = 0").is_err());
@@ -680,6 +698,8 @@ trigger = fn:*.*:exit / score > 10.0 / { capture(record); }
         assert_eq!(c.k_neighbors, 5);
         assert_eq!(c.algorithm, AdAlgorithm::Threshold);
         assert_eq!(c.viz_addr, "127.0.0.1:8787");
+        assert_eq!(c.provdb_segment_records, 8192);
+        assert_eq!(c.provdb_retain_window_us, 0);
     }
 
     #[test]

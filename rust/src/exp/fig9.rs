@@ -347,8 +347,10 @@ pub fn run_provdb_bench(
 // Same store, same records, same query mix — only the record codec
 // differs: the JSONL text pipeline (format + parse at every hop) vs the
 // binary codec (encode once, validate at the trust boundary, store and
-// reply in encoded form with header-level predicate pushdown). The
-// `codec_rows` of `BENCH_provdb.json` track this A/B across PRs.
+// reply in encoded form with header-level predicate pushdown), vs the
+// sealed columnar v2 segment layout (delta+varint packed columns behind
+// the same binary wire). The `codec_rows` of `BENCH_provdb.json` track
+// this A/B/C across PRs.
 
 /// One codec's measurements at a fixed shard count.
 #[derive(Clone, Debug)]
@@ -360,7 +362,9 @@ pub struct CodecRow {
     /// Query round-trip latency percentiles, µs.
     pub query_p50_us: f64,
     pub query_p99_us: f64,
-    /// Append-log bytes per ingested record (on-disk format size).
+    /// Stored bytes per record after flush (the on-disk format size:
+    /// retained rows for jsonl/binary, sealed columnar segments for
+    /// binary_v2).
     pub log_bytes_per_record: f64,
     pub records: u64,
 }
@@ -388,9 +392,22 @@ impl CodecBenchResult {
         rate("binary") / rate("jsonl").max(1e-9)
     }
 
+    /// binary ÷ binary_v2 stored bytes per record (the columnar packing
+    /// win on top of the row codec).
+    pub fn v2_packing_factor(&self) -> f64 {
+        let bytes = |fmt: &str| {
+            self.rows
+                .iter()
+                .find(|r| r.format == fmt)
+                .map(|r| r.log_bytes_per_record)
+                .unwrap_or(0.0)
+        };
+        bytes("binary") / bytes("binary_v2").max(1e-9)
+    }
+
     pub fn render(&self) -> String {
         let mut t = Table::new(
-            "provDB codec — jsonl vs binary record pipeline",
+            "provDB codec — jsonl vs binary vs sealed columnar v2",
             &[
                 "codec",
                 "ingest rec/s",
@@ -411,12 +428,14 @@ impl CodecBenchResult {
             ]);
         }
         format!(
-            "{}({} shards, {} writer clients x {} records; binary ingest {:.2}x jsonl)\n",
+            "{}({} shards, {} writer clients x {} records; binary ingest {:.2}x jsonl; \
+             v2 packs {:.2}x over binary rows)\n",
             t.render(),
             self.shards,
             self.clients,
             self.records_per_client,
-            self.ingest_speedup()
+            self.ingest_speedup(),
+            self.v2_packing_factor()
         )
     }
 
@@ -440,11 +459,14 @@ impl CodecBenchResult {
     }
 }
 
-/// A/B the record codec end to end at a fixed shard count: spawn a store
-/// per format (matching wire + log format), drive the same synthetic
-/// write load through TCP clients, then measure a selective query mix
-/// (rank scans, top anomalies, step windows — the shapes predicate
-/// pushdown accelerates).
+/// A/B/C the record codec end to end at a fixed shard count: spawn a
+/// store per variant (matching wire + log format), drive the same
+/// synthetic write load through TCP clients, then measure a selective
+/// query mix (rank scans, top anomalies, step windows — the shapes
+/// predicate pushdown accelerates). The `binary_v2` variant is
+/// dir-backed with a segment bound of one rank's records, so every
+/// partition seals into a columnar v2 segment and the stored size is
+/// the packed on-disk layout.
 pub fn run_codec_bench(
     shards: usize,
     clients: usize,
@@ -452,9 +474,29 @@ pub fn run_codec_bench(
     queries: usize,
     seed: u64,
 ) -> Result<CodecBenchResult> {
+    let variants: [(&'static str, RecordFormat, bool); 3] = [
+        ("jsonl", RecordFormat::Jsonl, false),
+        ("binary", RecordFormat::Binary, false),
+        ("binary_v2", RecordFormat::Binary, true),
+    ];
     let mut rows = Vec::new();
-    for format in [RecordFormat::Jsonl, RecordFormat::Binary] {
-        let (store, handle) = spawn_store_fmt(None, shards, Retention::default(), format)?;
+    for (name, format, sealed) in variants {
+        let dir = if sealed {
+            let d = std::env::temp_dir().join(format!(
+                "chimbuko-fig9-codec-v2-{}-{shards}",
+                std::process::id()
+            ));
+            std::fs::remove_dir_all(&d).ok();
+            Some(d)
+        } else {
+            None
+        };
+        let retention = if sealed {
+            Retention::default().with_segment_knob(records_per_client)
+        } else {
+            Retention::default()
+        };
+        let (store, handle) = spawn_store_fmt(dir.as_deref(), shards, retention, format)?;
         let srv = ProvDbTcpServer::start("127.0.0.1:0", store.clone())?;
         let addr = srv.addr().to_string();
 
@@ -506,21 +548,200 @@ pub fn run_codec_bench(
             lat_us.push(t.elapsed().as_secs_f64() * 1e6);
         }
 
+        store.flush();
         let stats = store.stats();
         drop(srv);
         handle.join();
+        if let Some(d) = &dir {
+            std::fs::remove_dir_all(d).ok();
+        }
         let total = (clients * records_per_client) as f64;
         rows.push(CodecRow {
-            format: format.name(),
+            format: name,
             shards,
             ingest_per_sec: total / ingest_wall.max(1e-9),
             query_p50_us: crate::util::percentile(&lat_us, 50.0),
             query_p99_us: crate::util::percentile(&lat_us, 99.0),
-            log_bytes_per_record: stats.log_bytes as f64 / total.max(1.0),
+            // Resident == log bytes for the memory-only variants
+            // (nothing is evicted); for binary_v2 it is the sealed
+            // segment files on disk.
+            log_bytes_per_record: stats.resident_bytes as f64 / total.max(1.0),
             records: stats.records,
         });
     }
     Ok(CodecBenchResult { rows, shards, clients, records_per_client })
+}
+
+// ---- scan-selectivity sweep: zone-map pruning on sealed segments ------
+//
+// The point of zone maps is that a selective query decodes only the
+// segments its predicate can touch. This sweep seals a dir-backed store
+// into uniform v2 segments, then measures step-window queries covering
+// 1/10/50/100 % of the step domain: latency percentiles, how many
+// records each query decoded, and how many segments the zone maps
+// pruned (the `scan_rows` of `BENCH_provdb.json`).
+
+/// One selectivity point of the scan sweep.
+#[derive(Clone, Debug)]
+pub struct ScanRow {
+    /// Fraction of the step domain each query window covers, percent.
+    pub selectivity_pct: u32,
+    pub query_p50_us: f64,
+    pub query_p99_us: f64,
+    /// Mean records decoded per query (records in non-pruned segments —
+    /// the hot tier is empty in this bench, so this is exact).
+    pub records_decoded: f64,
+    /// Mean segments pruned by zone map per query.
+    pub segments_skipped: f64,
+    /// Sealed segments in the store (constant across the sweep).
+    pub segments_total: u64,
+}
+
+/// Result of the scan-selectivity sweep (merged into
+/// `BENCH_provdb.json` as `scan_rows`).
+#[derive(Clone, Debug)]
+pub struct ScanBenchResult {
+    pub rows: Vec<ScanRow>,
+    pub ranks: usize,
+    pub records_per_rank: usize,
+    pub segment_records: usize,
+    pub total_records: u64,
+}
+
+impl ScanBenchResult {
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "provDB scan selectivity — zone-map segment skipping",
+            &[
+                "window",
+                "q p50(µs)",
+                "q p99(µs)",
+                "decoded/query",
+                "skipped/query",
+                "segments",
+            ],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                format!("{}%", r.selectivity_pct),
+                format!("{:.1}", r.query_p50_us),
+                format!("{:.1}", r.query_p99_us),
+                format!("{:.0}", r.records_decoded),
+                format!("{:.1}", r.segments_skipped),
+                r.segments_total.to_string(),
+            ]);
+        }
+        format!(
+            "{}({} ranks x {} records, {} records/segment, {} stored)\n",
+            t.render(),
+            self.ranks,
+            self.records_per_rank,
+            self.segment_records,
+            self.total_records
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ranks", Json::num(self.ranks as f64)),
+            ("records_per_rank", Json::num(self.records_per_rank as f64)),
+            ("segment_records", Json::num(self.segment_records as f64)),
+            ("total_records", Json::num(self.total_records as f64)),
+            (
+                "rows",
+                Json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("selectivity_pct", Json::num(r.selectivity_pct as f64)),
+                                ("query_p50_us", Json::num(r.query_p50_us)),
+                                ("query_p99_us", Json::num(r.query_p99_us)),
+                                ("records_decoded", Json::num(r.records_decoded)),
+                                ("segments_skipped", Json::num(r.segments_skipped)),
+                                ("segments_total", Json::num(r.segments_total as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Seal a dir-backed store into uniform v2 segments and sweep step-window
+/// queries at 1/10/50/100 % selectivity. `records_per_rank` should be a
+/// multiple of `segment_records` so the hot tier ends empty and every
+/// stored record sits behind a zone map.
+pub fn run_scan_bench(
+    ranks: usize,
+    records_per_rank: usize,
+    segment_records: usize,
+    iters: usize,
+    seed: u64,
+) -> Result<ScanBenchResult> {
+    let dir = std::env::temp_dir()
+        .join(format!("chimbuko-fig9-scan-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let retention = Retention::default().with_segment_knob(segment_records);
+    let (store, handle) = spawn_store(Some(dir.as_path()), 1, retention)?;
+    let mut rng = Rng::new(seed);
+    // Step-ordered ingest (synth steps advance with i), so segment zone
+    // maps carve the step domain into disjoint ranges per rank.
+    for i in 0..records_per_rank {
+        let batch: Vec<ProvRecord> =
+            (0..ranks).map(|r| synth_record(&mut rng, r as u32, i as u64)).collect();
+        store.ingest(batch);
+    }
+    store.flush();
+    let base = store.stats();
+    anyhow::ensure!(
+        base.segments_total > 0 && base.records == (ranks * records_per_rank) as u64,
+        "scan bench store must seal everything ({} segments, {} records)",
+        base.segments_total,
+        base.records
+    );
+    let max_step = (records_per_rank as u64 - 1) / 16; // synth_record: step = i/16
+    let iters = iters.max(1);
+    let mut rows = Vec::new();
+    for pct in [1u32, 10, 50, 100] {
+        let span = ((max_step + 1) * pct as u64 / 100).max(1);
+        let s0 = store.stats();
+        let mut lat_us = Vec::with_capacity(iters);
+        let mut rng_q = Rng::new(seed ^ ((pct as u64) << 32));
+        for _ in 0..iters {
+            let lo = rng_q.range_u64(0, (max_step + 1).saturating_sub(span));
+            let q = ProvQuery {
+                step_range: Some((lo, lo + span - 1)),
+                ..Default::default()
+            };
+            let t = Instant::now();
+            let _ = store.query_encoded(&q);
+            lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+        }
+        let s1 = store.stats();
+        let skipped = s1.segments_skipped - s0.segments_skipped;
+        // Every record lives in a uniform segment, so decoded records =
+        // non-pruned segments × records per segment.
+        let scanned = s1.segments_total * iters as u64 - skipped;
+        rows.push(ScanRow {
+            selectivity_pct: pct,
+            query_p50_us: crate::util::percentile(&lat_us, 50.0),
+            query_p99_us: crate::util::percentile(&lat_us, 99.0),
+            records_decoded: (scanned * segment_records as u64) as f64 / iters as f64,
+            segments_skipped: skipped as f64 / iters as f64,
+            segments_total: s1.segments_total,
+        });
+    }
+    handle.join();
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(ScanBenchResult {
+        rows,
+        ranks,
+        records_per_rank,
+        segment_records,
+        total_records: (ranks * records_per_rank) as u64,
+    })
 }
 
 #[cfg(test)]
@@ -568,30 +789,69 @@ mod tests {
     }
 
     #[test]
-    fn codec_sweep_measures_both_formats() {
+    fn codec_sweep_measures_all_formats() {
         let res = run_codec_bench(2, 2, 300, 12, 23).unwrap();
-        assert_eq!(res.rows.len(), 2);
+        assert_eq!(res.rows.len(), 3);
         let jsonl = res.rows.iter().find(|r| r.format == "jsonl").unwrap();
         let binary = res.rows.iter().find(|r| r.format == "binary").unwrap();
+        let v2 = res.rows.iter().find(|r| r.format == "binary_v2").unwrap();
         for row in &res.rows {
             assert!(row.ingest_per_sec > 0.0, "{}", row.format);
             assert!(row.query_p50_us > 0.0);
             assert!(row.query_p99_us >= row.query_p50_us);
             assert_eq!(row.records, 600);
         }
-        // The on-disk format win is deterministic (the throughput win is
-        // asserted by the bench artifact, not a unit test).
+        // The on-disk format wins are deterministic (the throughput win
+        // is asserted by the bench artifact, not a unit test).
         assert!(
             binary.log_bytes_per_record < jsonl.log_bytes_per_record,
             "binary {} vs jsonl {} bytes/record",
             binary.log_bytes_per_record,
             jsonl.log_bytes_per_record
         );
+        assert!(
+            v2.log_bytes_per_record * 1.5 <= binary.log_bytes_per_record,
+            "v2 {} vs binary {} bytes/record: packing must win ≥1.5x",
+            v2.log_bytes_per_record,
+            binary.log_bytes_per_record
+        );
         assert!(res.ingest_speedup() > 0.0);
+        assert!(res.v2_packing_factor() >= 1.5);
         let text = res.render();
         assert!(text.contains("provDB codec"));
         let rows = res.rows_json();
-        assert_eq!(rows.as_arr().unwrap().len(), 2);
+        assert_eq!(rows.as_arr().unwrap().len(), 3);
         crate::util::json::parse(&rows.to_string()).unwrap();
+    }
+
+    #[test]
+    fn scan_sweep_prunes_selective_windows() {
+        let res = run_scan_bench(2, 1024, 128, 4, 7).unwrap();
+        assert_eq!(res.rows.len(), 4);
+        assert_eq!(res.total_records, 2048);
+        let r1 = &res.rows[0]; // 1 %
+        let r100 = &res.rows[3]; // 100 %
+        assert!(r1.segments_skipped > 0.0, "1% window must prune segments");
+        assert!(
+            r1.records_decoded < res.total_records as f64 / 2.0,
+            "1% window decoded {} of {}",
+            r1.records_decoded,
+            res.total_records
+        );
+        assert_eq!(r100.segments_skipped, 0.0, "100% window touches everything");
+        assert_eq!(r100.records_decoded, res.total_records as f64);
+        for w in res.rows.windows(2) {
+            assert!(
+                w[0].records_decoded <= w[1].records_decoded,
+                "decode volume must grow with selectivity"
+            );
+        }
+        for r in &res.rows {
+            assert!(r.query_p99_us >= r.query_p50_us);
+            assert_eq!(r.segments_total, 16);
+        }
+        let text = res.render();
+        assert!(text.contains("scan selectivity"));
+        crate::util::json::parse(&res.to_json().to_pretty()).unwrap();
     }
 }

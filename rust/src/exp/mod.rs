@@ -18,6 +18,7 @@ pub use fig7::{
 };
 pub use fig8_table1::{run_fig8, Fig8Result};
 pub use fig9::{
-    run_codec_bench, run_fig9, run_provdb_bench, CodecBenchResult, Fig9Result, ProvDbBenchResult,
+    run_codec_bench, run_fig9, run_provdb_bench, run_scan_bench, CodecBenchResult, Fig9Result,
+    ProvDbBenchResult, ScanBenchResult,
 };
 pub use figs3_6::{run_figs3_6, VizFiguresResult};

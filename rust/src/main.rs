@@ -23,6 +23,7 @@
 //!                   one stat shard of a multi-process parameter server
 //! chimbuko provdb-server [--config f] [--addr host:port] [--shards N]
 //!                   [--dir d] [--max-records-per-rank N]
+//!                   [--segment-records N] [--retain-window-us N]
 //!                   [--log-format binary|jsonl] [--reactor-threads N]
 //!                   standalone provenance database (binary segment log by
 //!                   default; jsonl is the classic-layout escape hatch;
@@ -484,14 +485,16 @@ fn cmd_ps_shard_server(args: &Args) -> anyhow::Result<()> {
 /// ranks of a `chimbuko run --provdb <addr>` write to it, `chimbuko
 /// serve --provdb <addr>` queries it — the paper's dedicated provenance
 /// store, decoupled from the analysis ranks. `--config` seeds the
-/// `[provdb]` knobs (shards, max_records_per_rank, log_format); CLI
-/// flags override.
+/// `[provdb]` knobs (shards, max_records_per_rank, segment_records,
+/// retain_window_us, log_format); CLI flags override.
 fn cmd_provdb_server(args: &Args) -> anyhow::Result<()> {
     let cfg = config_of(args)?;
     let addr = args.str_opt("addr", "127.0.0.1:5560");
     let shards = args.usize_opt("shards", cfg.provdb_shards);
     let retention =
-        Retention::from_knob(args.usize_opt("max-records-per-rank", cfg.provdb_max_per_rank));
+        Retention::from_knob(args.usize_opt("max-records-per-rank", cfg.provdb_max_per_rank))
+            .with_segment_knob(args.usize_opt("segment-records", cfg.provdb_segment_records))
+            .with_window_knob(args.u64_opt("retain-window-us", cfg.provdb_retain_window_us));
     let dir = args.get("dir").map(std::path::PathBuf::from);
     let format = match args.get("log-format") {
         Some(v) => chimbuko::provenance::RecordFormat::parse(v)?,

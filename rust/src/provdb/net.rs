@@ -32,7 +32,8 @@
 //! reply (meta get)   := u8 present, [u32 len, JSON bytes]
 //! reply (stats)      := u64 records, u64 resident, u64 log, u64 anoms,
 //!                       u64 evicted, u64 log_errors, u64 shed,
-//!                       u64 net_queue_depth
+//!                       u64 net_queue_depth, u64 segments_total,
+//!                       u64 segments_skipped, u64 zone_map_bytes
 //! reply (flush)      := u8 1
 //! reply (probe install) := u8 1
 //! reply (probe remove)  := u8 existed
@@ -335,6 +336,11 @@ impl ProvHandler {
                 // Transport counters join the store's own on the wire.
                 buf.extend_from_slice(&self.stats.shed_count().to_le_bytes());
                 buf.extend_from_slice(&self.stats.queue_depth().to_le_bytes());
+                // Warm-tier counters ride at the tail so v1-era clients
+                // (which stop reading after the queue depth) still parse.
+                buf.extend_from_slice(&s.segments_total.to_le_bytes());
+                buf.extend_from_slice(&s.segments_skipped.to_le_bytes());
+                buf.extend_from_slice(&s.zone_map_bytes.to_le_bytes());
                 out.send(stream, &buf);
             }
             KIND_FLUSH => {
@@ -708,6 +714,9 @@ impl ProvClient {
             log_errors: c.u64().unwrap_or(0),
             shed: c.u64().unwrap_or(0),
             net_queue_depth: c.u64().unwrap_or(0),
+            segments_total: c.u64().unwrap_or(0),
+            segments_skipped: c.u64().unwrap_or(0),
+            zone_map_bytes: c.u64().unwrap_or(0),
         })
     }
 }

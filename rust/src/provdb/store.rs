@@ -13,13 +13,20 @@
 //!   and bounded by the [`Retention`] policy (score-based eviction keeps
 //!   the highest-score records, implementing the paper's "reduction for
 //!   human-level processing" instead of growing unboundedly);
-//! * the append log — one file per partition, by default the binary
-//!   segment format `prov_app<A>_rank<R>.provseg` (encoded record + CRC-32
-//!   each, ~2.5× smaller than JSONL); [`RecordFormat::Jsonl`] is the
-//!   escape hatch that keeps the classic `*.jsonl` layout. Recovery reads
-//!   *both*, so a JSONL store restarted under the binary format migrates
-//!   in place. A flush rewrites any partition that evicted records so
-//!   the on-disk log matches the retained view.
+//! * the append log — per partition, by default a rolling set of binary
+//!   segments: an append file of encoded rows (+CRC-32 each, ~2.5×
+//!   smaller than JSONL) that seals into an immutable columnar v2
+//!   segment `prov_app<A>_rank<R>_seg<K>.provseg` every
+//!   [`Retention::segment_records`] records. Sealed (*warm*) segments
+//!   pack delta+varint columns behind a zone-map footer, so queries can
+//!   prove "nothing here matches" and skip whole segments unread;
+//!   [`RecordFormat::Jsonl`] is the escape hatch that keeps the classic
+//!   `*.jsonl` layout. Recovery reads *every* layout generation (JSONL,
+//!   legacy single-file v1, rolling v1/v2), so old stores restarted
+//!   under the binary format migrate in place, and sealed segments are
+//!   re-adopted from their footers alone. A flush rewrites any partition
+//!   that evicted records so the on-disk log matches the retained view,
+//!   and expires records older than [`Retention::retain_window_us`].
 //!
 //! ## Ordering and equivalence
 //!
@@ -67,22 +74,40 @@ pub fn prov_shard_of(app: u32, rank: u32, n_shards: usize) -> usize {
     crate::placement::Placement::default_shard_of(app, rank, n_shards)
 }
 
-/// Retention policy applied per `(app, rank)` partition.
+/// Retention policy applied per `(app, rank)` partition, across the
+/// storage tiers: hot resident rows → warm sealed segments on disk →
+/// expired by the time window.
 #[derive(Clone, Copy, Debug)]
 pub struct Retention {
-    /// Retained records per `(app, rank)`; `usize::MAX` = unbounded.
-    /// Over capacity, the lowest-score records are evicted first (oldest
-    /// on score ties), so anomalies outlive their normal context
-    /// records. Eviction sweeps run when a partition overshoots the
-    /// bound by a slack (¼ of the bound, at least 64 — amortized
-    /// O(log n) per insert) and exactly at every flush, so the bound is
+    /// Retained records per `(app, rank)` — hot *plus* warm;
+    /// `usize::MAX` = unbounded. Over capacity, the lowest-score records
+    /// are evicted first (oldest on score ties), so anomalies outlive
+    /// their normal context records. Eviction sweeps run when the hot
+    /// tier overshoots the bound by a slack (¼ of the bound, at least 64
+    /// — amortized O(log n) per insert) and globally (warm segments
+    /// demoted back to hot to take part) at every flush, so the bound is
     /// precise at flush barriers.
     pub max_records_per_rank: usize,
+    /// Hot records per partition at which the shard seals them into a
+    /// warm columnar v2 segment (`prov_app<A>_rank<R>_seg<K>.provseg`,
+    /// binary log format + data dir only); `usize::MAX` = never seal
+    /// (one ever-growing row file, the pre-v2 layout).
+    pub segment_records: usize,
+    /// Expiry window in µs over each partition's own clock (its max
+    /// `entry_us` seen): at every flush, records older than
+    /// `max_entry - window` are dropped — whole warm segments by zone
+    /// map, without decoding, when their `max_entry` clears the cutoff.
+    /// 0 = no time-based expiry.
+    pub retain_window_us: u64,
 }
 
 impl Default for Retention {
     fn default() -> Self {
-        Retention { max_records_per_rank: usize::MAX }
+        Retention {
+            max_records_per_rank: usize::MAX,
+            segment_records: 8192,
+            retain_window_us: 0,
+        }
     }
 }
 
@@ -95,7 +120,21 @@ impl Retention {
             } else {
                 max_records_per_rank
             },
+            ..Default::default()
         }
+    }
+
+    /// Knob form of [`Self::segment_records`]: 0 means never seal.
+    pub fn with_segment_knob(mut self, segment_records: usize) -> Retention {
+        self.segment_records =
+            if segment_records == 0 { usize::MAX } else { segment_records };
+        self
+    }
+
+    /// Knob form of [`Self::retain_window_us`]: 0 means no expiry.
+    pub fn with_window_knob(mut self, retain_window_us: u64) -> Retention {
+        self.retain_window_us = retain_window_us;
+        self
     }
 }
 
@@ -127,6 +166,14 @@ pub struct ProvDbStats {
     /// Unflushed reply bytes queued on the TCP front-end when the stats
     /// were taken (0 for an in-process store).
     pub net_queue_depth: u64,
+    /// Warm sealed v2 segments currently registered across partitions.
+    pub segments_total: u64,
+    /// Sealed segments whose zone map pruned them from a query scan
+    /// without touching a record (cumulative).
+    pub segments_skipped: u64,
+    /// Bytes of resident zone-map index (one packed footer per warm
+    /// segment) — the whole cost of segment skipping.
+    pub zone_map_bytes: u64,
 }
 
 impl ProvDbStats {
@@ -140,6 +187,9 @@ impl ProvDbStats {
             ("log_errors", Json::num(self.log_errors as f64)),
             ("shed", Json::num(self.shed as f64)),
             ("net_queue_depth", Json::num(self.net_queue_depth as f64)),
+            ("segments_total", Json::num(self.segments_total as f64)),
+            ("segments_skipped", Json::num(self.segments_skipped as f64)),
+            ("zone_map_bytes", Json::num(self.zone_map_bytes as f64)),
         ])
     }
 }
@@ -164,6 +214,12 @@ enum ShardReq {
     /// Flush writers; compact logs of partitions that evicted records.
     Flush { reply: Sender<()> },
     Stats { reply: Sender<ProvDbStats> },
+    /// Recovery: adopt a sealed v2 segment as a warm tier member —
+    /// counters absorb its footer, records stay on disk until queried.
+    RegisterSegment { key: (u32, u32), meta: SegmentMeta },
+    /// Recovery: set where the partition's rolling segment counter
+    /// resumes (the next seal target / append file index).
+    SetActive { key: (u32, u32), active_k: u32 },
     Shutdown,
 }
 
@@ -373,6 +429,9 @@ impl ProvStore {
                     out.anomalies += s.anomalies;
                     out.evicted += s.evicted;
                     out.log_errors += s.log_errors;
+                    out.segments_total += s.segments_total;
+                    out.segments_skipped += s.segments_skipped;
+                    out.zone_map_bytes += s.zone_map_bytes;
                 }
                 Err(_) => break,
             }
@@ -484,32 +543,94 @@ pub fn spawn_store_fmt(
 }
 
 /// Replay an existing data directory into the shards (without
-/// re-appending to the log) and reload stored run metadata. The file
-/// scan is the shared [`scan_log_dir`](crate::provenance) used by
-/// [`ProvDb::load`](crate::provenance::ProvDb::load), so the service and
-/// the offline loader read directories identically: both log formats
-/// (the migration path from JSONL stores), files in path order, records
-/// in file order (a partition's `.jsonl` sorts before its `.provseg`, so
-/// pre-migration records replay before post-migration appends), segment
-/// damage degraded to logged warnings.
+/// re-appending to the log) and reload stored run metadata. Files are
+/// visited in the shared [`list_partition_files`](crate::provenance)
+/// order also used by [`ProvDb::load`](crate::provenance::ProvDb::load)
+/// — partitions numerically, `.jsonl` → legacy `.provseg` → `_seg<K>`
+/// within one — so the service and the offline loader read directories
+/// identically and sequence re-assignment is deterministic.
+///
+/// Tiering on restart: a `_seg<K>` file with a valid v2 footer is
+/// *adopted* as a warm segment — only its 105-byte footer is read (zone
+/// map + counts); the records stay on disk until a query needs them.
+/// Everything else (JSONL, legacy/active row files, damaged v2 segments
+/// repaired by the scan) streams through the chunked reader into the hot
+/// tier. Warm segments reserve a contiguous sequence block in file
+/// order, so the merged (hot ∪ warm) arrival order equals the replay
+/// order of a store that held everything resident.
 fn recover_logs(dir: &Path, store: &ProvStore) -> Result<()> {
     if let Ok(text) = std::fs::read_to_string(dir.join("metadata.json")) {
         let meta = crate::util::json::parse(&text).context("parsing provdb metadata.json")?;
         store.meta_bytes.store(text.len() as u64, Ordering::Relaxed);
         *store.meta.write().expect("provdb metadata lock") = Some(meta);
     }
+    let files = crate::provenance::list_partition_files(dir)?;
+    // Footer pre-pass: which rolling segments are sealed, and where each
+    // partition's segment counter resumes. Runs (and the SetActive sends
+    // below) before any replay so a seal triggered later can never
+    // target an index that is still on disk.
+    let mut footers: HashMap<PathBuf, codec::Seg2Footer> = HashMap::new();
+    let mut active: HashMap<(u32, u32), u32> = HashMap::new();
+    for f in &files {
+        if let (Some(key), Some(k), false) = (f.key, f.seg, f.jsonl) {
+            match codec::read_seg2_footer_file(&f.path)? {
+                Some(footer) => {
+                    footers.insert(f.path.clone(), footer);
+                    active.insert(key, k + 1);
+                }
+                // Unsealed/damaged highest segment stays the append
+                // target once the scan below has repaired it.
+                None => {
+                    active.insert(key, k);
+                }
+            }
+        }
+    }
+    for (&key, &active_k) in &active {
+        let shard = store.placement.shard_of(key.0, key.1);
+        let _ = store.shards[shard].send(ShardReq::SetActive { key, active_k });
+    }
     // Stream in bounded chunks: a large data directory never has to fit
     // in the front-end's memory (sequence stamping is per-record inside
     // route(), so chunking preserves replay order exactly).
     const CHUNK: usize = 4096;
     let mut chunk: Vec<(Vec<u8>, Option<u64>)> = Vec::with_capacity(CHUNK);
-    crate::provenance::scan_log_dir(dir, true, &mut |buf, disk_bytes| {
-        chunk.push((buf, Some(disk_bytes)));
-        if chunk.len() >= CHUNK {
-            store.route(std::mem::take(&mut chunk), false);
+    for f in &files {
+        if let (Some(key), Some(footer)) = (f.key, footers.get(&f.path)) {
+            // Keep sequence assignment aligned with file order: drain
+            // pending hot records before this segment reserves its block.
+            if !chunk.is_empty() {
+                store.route(std::mem::take(&mut chunk), false);
+            }
+            let n = footer.n_records as u64;
+            let seq0 = store.seq.fetch_add(n, Ordering::Relaxed);
+            let disk_bytes = std::fs::metadata(&f.path)
+                .with_context(|| format!("sizing {}", f.path.display()))?
+                .len();
+            let meta = SegmentMeta {
+                path: f.path.clone(),
+                footer: *footer,
+                disk_bytes,
+                seq0,
+                stored_seqs: false,
+            };
+            let shard = store.placement.shard_of(key.0, key.1);
+            let _ = store.shards[shard].send(ShardReq::RegisterSegment { key, meta });
+            continue;
         }
-        Ok(())
-    })?;
+        let sink: &mut dyn FnMut(Vec<u8>, u64) -> Result<()> = &mut |buf, disk_bytes| {
+            chunk.push((buf, Some(disk_bytes)));
+            if chunk.len() >= CHUNK {
+                store.route(std::mem::take(&mut chunk), false);
+            }
+            Ok(())
+        };
+        if f.jsonl {
+            crate::provenance::scan_jsonl_file(&f.path, true, sink)?;
+        } else {
+            crate::provenance::scan_segment_file(&f.path, true, sink)?;
+        }
+    }
     store.route(chunk, false);
     Ok(())
 }
@@ -522,13 +643,38 @@ struct Entry {
     buf: Vec<u8>,
 }
 
+/// One warm tier member: a sealed columnar v2 segment on disk. Only its
+/// footer lives in memory; queries consult the zone map first and decode
+/// the file only when the zones admit a possible match.
+struct SegmentMeta {
+    path: PathBuf,
+    footer: codec::Seg2Footer,
+    /// Whole-file size (what the resident accounting charges).
+    disk_bytes: u64,
+    /// Sequence of the segment's first record when the stored column is
+    /// superseded (see [`Self::stored_seqs`]).
+    seq0: u64,
+    /// Live-sealed segments carry the true (gapped) sequence stamps in
+    /// their seq column; recovery-adopted ones are re-stamped as the
+    /// contiguous block `seq0 + index` reserved in replay order.
+    stored_seqs: bool,
+}
+
 /// One `(app, rank)` partition of a shard.
 #[derive(Default)]
 struct Partition {
-    /// Arrival-ordered retained records (encoded).
+    /// Hot tier: arrival-ordered retained records (encoded rows).
     entries: Vec<Entry>,
-    /// Evicted since the last log compaction.
+    /// Evicted/log-dropped since the last log compaction.
     dirty: bool,
+    /// Warm tier: sealed segments, oldest first.
+    warm: Vec<SegmentMeta>,
+    /// Rolling segment counter: the next seal writes `_seg<active_k>`
+    /// (which is also the append file once the partition has rolled).
+    active_k: u32,
+    /// Largest `entry_us` ever ingested — the partition-local clock the
+    /// expiry window measures against.
+    max_entry: u64,
 }
 
 /// Shard worker state: the `prov_shard_of == i` partitions plus their
@@ -544,14 +690,53 @@ struct ShardState {
     anomalies: u64,
     evicted: u64,
     log_errors: u64,
+    /// Sealed segments pruned by zone map across all queries so far.
+    segments_skipped: u64,
 }
 
-fn log_path(dir: &Path, key: (u32, u32), format: RecordFormat) -> PathBuf {
-    let ext = match format {
-        RecordFormat::Binary => "provseg",
-        RecordFormat::Jsonl => "jsonl",
-    };
-    dir.join(format!("prov_app{}_rank{}.{ext}", key.0, key.1))
+/// Path of a partition's rolling segment `K`.
+fn seg_path(dir: &Path, key: (u32, u32), k: u32) -> PathBuf {
+    dir.join(format!("prov_app{}_rank{}_seg{k:04}.provseg", key.0, key.1))
+}
+
+/// Path of a partition's current append file: the legacy single-file
+/// name until the partition seals its first segment, `_seg<K>` after.
+fn log_path(dir: &Path, key: (u32, u32), format: RecordFormat, active_k: u32) -> PathBuf {
+    match format {
+        RecordFormat::Jsonl => dir.join(format!("prov_app{}_rank{}.jsonl", key.0, key.1)),
+        RecordFormat::Binary if active_k == 0 => {
+            dir.join(format!("prov_app{}_rank{}.provseg", key.0, key.1))
+        }
+        RecordFormat::Binary => seg_path(dir, key, active_k),
+    }
+}
+
+/// Decode a warm sealed segment into `(seq, decoded record, canonical
+/// row bytes)` triples — the one reader behind warm queries, probe
+/// scans, and demotion back to hot. Canonical re-encoding makes warm
+/// query results bit-identical to the hot path. Errors on I/O failure,
+/// an unreadable image, or a file that lost records since it was sealed.
+fn scan_warm(meta: &SegmentMeta) -> Result<Vec<(u64, ProvRecord, Vec<u8>)>> {
+    let bytes =
+        std::fs::read(&meta.path).with_context(|| format!("opening {}", meta.path.display()))?;
+    let scan = codec::read_segment_v2(&bytes)
+        .with_context(|| format!("reading segment {}", meta.path.display()))?;
+    anyhow::ensure!(
+        scan.complete && scan.records.len() == meta.footer.n_records as usize,
+        "sealed segment {} no longer decodes completely ({} of {} records{})",
+        meta.path.display(),
+        scan.records.len(),
+        meta.footer.n_records,
+        scan.corrupt.as_deref().map(|c| format!(": {c}")).unwrap_or_default()
+    );
+    let mut out = Vec::with_capacity(scan.records.len());
+    for (i, (stored_seq, rec)) in scan.records.into_iter().enumerate() {
+        let seq = if meta.stored_seqs { stored_seq } else { meta.seq0 + i as u64 };
+        let mut buf = Vec::with_capacity(192);
+        codec::encode(&rec, &mut buf);
+        out.push((seq, rec, buf));
+    }
+    Ok(out)
 }
 
 /// Open (or create) a partition's append log; a fresh binary segment
@@ -572,6 +757,45 @@ fn open_log(path: &Path, format: RecordFormat) -> std::io::Result<BufWriter<File
 /// Flush always evicts down to the exact bound.
 fn retention_trigger(max: usize) -> usize {
     max.saturating_add((max / 4).max(64))
+}
+
+/// Remove every log file of `key` except the paths in `keep` — the
+/// cleanup step after sealing or compacting, when one file (plus the
+/// warm set) owns all of the partition's records and anything else
+/// would duplicate them on reload. `NotFound` is success (already
+/// gone); returns whether everything superseded is really gone.
+fn remove_superseded(dir: &Path, key: (u32, u32), keep: &[PathBuf]) -> bool {
+    let files = match crate::provenance::list_partition_files(dir) {
+        Ok(files) => files,
+        Err(e) => {
+            crate::log_warn!(
+                "provdb",
+                "listing {} for cleanup: {e} — superseded logs may remain",
+                dir.display()
+            );
+            return false;
+        }
+    };
+    let mut all_removed = true;
+    for f in files {
+        if f.key != Some(key) || keep.contains(&f.path) {
+            continue;
+        }
+        match std::fs::remove_file(&f.path) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                all_removed = false;
+                crate::log_warn!(
+                    "provdb",
+                    "removing superseded {}: {e} — records would duplicate \
+                     on reload; retrying at the next flush",
+                    f.path.display()
+                );
+            }
+        }
+    }
+    all_removed
 }
 
 /// Evict down to `max` records: lowest score first, oldest on score ties
@@ -641,6 +865,7 @@ impl ShardState {
                 self.anomalies += 1;
             }
             let part = self.parts.entry(key).or_default();
+            part.max_entry = part.max_entry.max(h.entry_us);
             part.entries.push(Entry { seq, disk_bytes, buf });
             if !log_ok {
                 // The on-disk log is now missing this record and may end
@@ -656,17 +881,242 @@ impl ShardState {
                 self.resident_bytes -= fb;
                 self.anomalies -= fa;
             }
+            let hot = part.entries.len();
+            // Seal only on live ingest: recovery replay must never write
+            // a segment index that a later file in the replay still owns
+            // (`log` is false exactly there).
+            if log && hot >= self.retention.segment_records {
+                self.seal_partition(key);
+            }
+        }
+    }
+
+    /// Seal a partition's hot tier into a warm columnar v2 segment:
+    /// pack + zone-map the rows, write `_seg<active_k>` (tmp → rename),
+    /// adopt it as warm, clear the hot tier, and remove every superseded
+    /// non-warm file (the legacy logs / old append file whose records the
+    /// new segment now owns). Binary-format, dir-backed stores only. A
+    /// failed seal leaves the partition exactly as it was (retried at the
+    /// next trigger).
+    fn seal_partition(&mut self, key: (u32, u32)) {
+        let Some(dir) = self.dir.clone() else { return };
+        if self.format != RecordFormat::Binary {
+            return;
+        }
+        let Some(part) = self.parts.get_mut(&key) else { return };
+        if part.entries.is_empty() {
+            return;
+        }
+        let rows: Vec<(u64, &[u8])> =
+            part.entries.iter().map(|e| (e.seq, e.buf.as_slice())).collect();
+        let (bytes, footer) = match codec::seal_segment_v2(&rows) {
+            Ok(sealed) => sealed,
+            Err(e) => {
+                self.log_errors += 1;
+                crate::log_warn!(
+                    "provdb",
+                    "sealing app{} rank{}: {e:#} — partition stays hot",
+                    key.0,
+                    key.1
+                );
+                return;
+            }
+        };
+        let path = seg_path(&dir, key, part.active_k);
+        let tmp = path.with_extension("tmp");
+        let res =
+            std::fs::write(&tmp, &bytes).and_then(|()| std::fs::rename(&tmp, &path));
+        if let Err(e) = res {
+            self.log_errors += 1;
+            std::fs::remove_file(&tmp).ok();
+            crate::log_warn!(
+                "provdb",
+                "sealing {}: {e} — partition stays hot",
+                path.display()
+            );
+            return;
+        }
+        self.writers.remove(&key);
+        let freed: u64 = part.entries.iter().map(|e| e.disk_bytes).sum();
+        self.resident_bytes = self.resident_bytes - freed + bytes.len() as u64;
+        let seq0 = part.entries.first().map_or(0, |e| e.seq);
+        part.entries.clear();
+        part.dirty = false;
+        part.warm.push(SegmentMeta {
+            path,
+            footer,
+            disk_bytes: bytes.len() as u64,
+            seq0,
+            stored_seqs: true,
+        });
+        part.active_k += 1;
+        let keep: Vec<PathBuf> = part.warm.iter().map(|m| m.path.clone()).collect();
+        if !remove_superseded(&dir, key, &keep) {
+            self.log_errors += 1;
+            // Leftover files would duplicate records on reload; dirty
+            // compaction retries the removal at the next flush.
+            if let Some(part) = self.parts.get_mut(&key) {
+                part.dirty = true;
+            }
+        }
+    }
+
+    /// Seal every partition whose hot tier reached the bound — recovery
+    /// replay defers sealing to here (the first flush), and a partition
+    /// that hovers just under the trigger between ingest batches still
+    /// rolls at barriers.
+    fn seal_ready(&mut self) {
+        if self.dir.is_none() || self.format != RecordFormat::Binary {
+            return;
+        }
+        let ready: Vec<(u32, u32)> = self
+            .parts
+            .iter()
+            .filter(|(_, p)| p.entries.len() >= self.retention.segment_records)
+            .map(|(k, _)| *k)
+            .collect();
+        for key in ready {
+            self.seal_partition(key);
+        }
+    }
+
+    /// Expire records older than the partition-local time window (flush
+    /// time, before retention): whole warm segments are dropped by zone
+    /// map alone when `max_entry` clears the cutoff; a straddling
+    /// segment is demoted to hot and filtered; hot rows are filtered in
+    /// place. Expired records count into `evicted`.
+    fn enforce_window(&mut self) {
+        let window = self.retention.retain_window_us;
+        if window == 0 {
+            return;
+        }
+        let keys: Vec<(u32, u32)> = self.parts.keys().copied().collect();
+        for key in keys {
+            let part = self.parts.get_mut(&key).expect("listed partition exists");
+            let cutoff = part.max_entry.saturating_sub(window);
+            if cutoff == 0 {
+                continue;
+            }
+            let straddlers: Vec<SegmentMeta> = {
+                let mut kept = Vec::new();
+                let mut straddle = Vec::new();
+                for meta in part.warm.drain(..) {
+                    if meta.footer.zone.max_entry < cutoff {
+                        // Every record in the segment is expired: drop
+                        // the whole file without decoding it.
+                        self.evicted += meta.footer.n_records as u64;
+                        self.anomalies -= meta.footer.n_anomalies as u64;
+                        self.resident_bytes -= meta.disk_bytes;
+                        part.dirty = true;
+                        if let Err(e) = std::fs::remove_file(&meta.path) {
+                            self.log_errors += 1;
+                            crate::log_warn!(
+                                "provdb",
+                                "removing expired {}: {e}",
+                                meta.path.display()
+                            );
+                        }
+                    } else if meta.footer.zone.min_entry < cutoff {
+                        straddle.push(meta);
+                    } else {
+                        kept.push(meta);
+                    }
+                }
+                part.warm = kept;
+                straddle
+            };
+            for meta in straddlers {
+                self.demote_segment(key, meta);
+            }
+            let part = self.parts.get_mut(&key).expect("listed partition exists");
+            let mut expired = 0u64;
+            let mut freed_bytes = 0u64;
+            let mut freed_anoms = 0u64;
+            part.entries.retain(|e| {
+                if codec::entry_us_of(&e.buf) < cutoff {
+                    expired += 1;
+                    freed_bytes += e.disk_bytes;
+                    if codec::label_tag_of(&e.buf) != codec::LABEL_NORMAL {
+                        freed_anoms += 1;
+                    }
+                    false
+                } else {
+                    true
+                }
+            });
+            if expired > 0 {
+                part.dirty = true;
+                self.evicted += expired;
+                self.resident_bytes -= freed_bytes;
+                self.anomalies -= freed_anoms;
+            }
+        }
+    }
+
+    /// Demote one warm segment back into the hot tier (decoded, re-priced
+    /// as rows, merged in sequence order) and delete its file. An
+    /// unreadable segment is sidelined to `*.corrupt` and its records are
+    /// surfaced as a counted loss — never a panic.
+    fn demote_segment(&mut self, key: (u32, u32), meta: SegmentMeta) {
+        let part = self.parts.get_mut(&key).expect("demoting into a live partition");
+        part.dirty = true;
+        self.resident_bytes -= meta.disk_bytes;
+        match scan_warm(&meta) {
+            Ok(rows) => {
+                for (seq, _, buf) in rows {
+                    let disk_bytes = buf.len() as u64 + 4; // + CRC trailer
+                    self.resident_bytes += disk_bytes;
+                    part.entries.push(Entry { seq, disk_bytes, buf });
+                }
+                part.entries.sort_by_key(|e| e.seq);
+                if let Err(e) = std::fs::remove_file(&meta.path) {
+                    self.log_errors += 1;
+                    crate::log_warn!(
+                        "provdb",
+                        "removing demoted {}: {e}",
+                        meta.path.display()
+                    );
+                }
+            }
+            Err(e) => {
+                self.log_errors += 1;
+                self.anomalies -= meta.footer.n_anomalies as u64;
+                let sidelined = meta.path.with_extension("provseg.corrupt");
+                std::fs::rename(&meta.path, &sidelined).ok();
+                crate::log_warn!(
+                    "provdb",
+                    "demoting {}: {e:#} — segment sidelined to {}, {} records lost",
+                    meta.path.display(),
+                    sidelined.display(),
+                    meta.footer.n_records
+                );
+            }
         }
     }
 
     /// Enforce the exact retention bound on every partition (the ingest
-    /// path lets partitions overshoot by a slack between sweeps).
+    /// path lets the hot tier overshoot by a slack between sweeps). The
+    /// bound is global across tiers: a partition whose hot + warm total
+    /// exceeds it demotes all warm segments back to hot first, so
+    /// eviction ranks every retained record by score — exactly the
+    /// single-tier policy.
     fn enforce_retention(&mut self) {
         let max = self.retention.max_records_per_rank;
         if max == usize::MAX {
             return;
         }
-        for part in self.parts.values_mut() {
+        let keys: Vec<(u32, u32)> = self.parts.keys().copied().collect();
+        for key in keys {
+            let part = self.parts.get_mut(&key).expect("listed partition exists");
+            let warm_records: usize =
+                part.warm.iter().map(|m| m.footer.n_records as usize).sum();
+            if part.entries.len() + warm_records <= max {
+                continue;
+            }
+            for meta in std::mem::take(&mut self.parts.get_mut(&key).unwrap().warm) {
+                self.demote_segment(key, meta);
+            }
+            let part = self.parts.get_mut(&key).expect("listed partition exists");
             let (ev, fb, fa) = evict_partition(part, max);
             self.evicted += ev;
             self.resident_bytes -= fb;
@@ -685,7 +1135,8 @@ impl ShardState {
             return true; // memory-only store: nothing to log
         };
         if !self.writers.contains_key(&key) {
-            let path = log_path(dir, key, self.format);
+            let active_k = self.parts.get(&key).map_or(0, |p| p.active_k);
+            let path = log_path(dir, key, self.format, active_k);
             match open_log(&path, self.format) {
                 Ok(w) => {
                     self.writers.insert(key, w);
@@ -727,9 +1178,37 @@ impl ShardState {
         true
     }
 
-    fn query(&self, q: &ProvQuery) -> Vec<(u64, Vec<u8>)> {
+    fn query(&mut self, q: &ProvQuery) -> Vec<(u64, Vec<u8>)> {
         let mut out = Vec::new();
-        let mut scan = |part: &Partition| {
+        let mut skipped = 0u64;
+        let mut errors = 0u64;
+        let parts: Vec<&Partition> = match q.rank {
+            Some(key) => self.parts.get(&key).into_iter().collect(),
+            None => self.parts.values().collect(),
+        };
+        for part in parts {
+            // Warm tier first: the zone map proves "nothing here can
+            // match" from the 105-byte footer alone — a pruned segment
+            // costs zero reads and zero decodes.
+            for meta in &part.warm {
+                if !meta.footer.zone.may_match(q) {
+                    skipped += 1;
+                    continue;
+                }
+                match scan_warm(meta) {
+                    Ok(rows) => {
+                        for (seq, rec, buf) in rows {
+                            if q.matches(&rec) {
+                                out.push((seq, buf));
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        errors += 1;
+                        crate::log_warn!("provdb", "warm scan failed: {e:#}");
+                    }
+                }
+            }
             for e in &part.entries {
                 let Ok(h) = codec::read_header(&e.buf) else { continue };
                 // Predicate pushdown: the fixed header decides every
@@ -748,42 +1227,60 @@ impl ShardState {
                     out.push((e.seq, e.buf.clone()));
                 }
             }
-        };
-        match q.rank {
-            Some(key) => {
-                if let Some(part) = self.parts.get(&key) {
-                    scan(part);
-                }
-            }
-            None => {
-                for part in self.parts.values() {
-                    scan(part);
-                }
-            }
         }
+        self.segments_skipped += skipped;
+        self.log_errors += errors;
         out
     }
 
-    /// Evaluate an installed probe over every partition of this shard.
-    fn probe_scan(&self, probe: &InstalledProbe) -> Vec<(u64, Vec<u8>)> {
+    /// Evaluate an installed probe over every partition of this shard —
+    /// warm segments included. Probe bytecode runs over encoded rows and
+    /// cannot consult zone maps (a predicate VM sees one record at a
+    /// time), so warm segments are always decoded here; canonical
+    /// re-encoding keeps admitted bytes identical to the hot path.
+    fn probe_scan(&mut self, probe: &InstalledProbe) -> Vec<(u64, Vec<u8>)> {
         let mut out = Vec::new();
+        let mut errors = 0u64;
         for part in self.parts.values() {
+            for meta in &part.warm {
+                match scan_warm(meta) {
+                    Ok(rows) => {
+                        for (seq, _, buf) in rows {
+                            if probe.admit(&buf) {
+                                out.push((seq, buf));
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        errors += 1;
+                        crate::log_warn!("provdb", "warm probe scan failed: {e:#}");
+                    }
+                }
+            }
             for e in &part.entries {
                 if probe.admit(&e.buf) {
                     out.push((e.seq, e.buf.clone()));
                 }
             }
         }
+        self.log_errors += errors;
         out
     }
 
-    /// Enforce retention exactly, flush writers, and rewrite the log of
-    /// every partition that evicted records so a reload sees exactly the
-    /// retained view. Compaction writes the *current* format and removes
-    /// the other format's file for that partition (the in-place
-    /// migration step for JSONL dirs restarted under the binary format).
+    /// Flush-time tier maintenance, in dependency order: expire the time
+    /// window, enforce the global retention bound exactly (demoting warm
+    /// segments so eviction ranks every record), seal hot tiers that
+    /// reached the rolling bound, then rewrite the append file of every
+    /// partition still marked dirty so a reload sees exactly the
+    /// retained view. Compaction writes the *current* format to the
+    /// current append path and removes every superseded file for the
+    /// partition (the in-place migration step for JSONL dirs restarted
+    /// under the binary format, and for legacy single-file dirs rolling
+    /// into v2 segments).
     fn flush(&mut self) {
+        self.enforce_window();
         self.enforce_retention();
+        self.seal_ready();
         if let Some(dir) = self.dir.clone() {
             let dirty: Vec<(u32, u32)> = self
                 .parts
@@ -821,39 +1318,27 @@ impl ShardState {
                         text.into_bytes()
                     }
                 };
-                let other = match self.format {
-                    RecordFormat::Binary => RecordFormat::Jsonl,
-                    RecordFormat::Jsonl => RecordFormat::Binary,
-                };
-                let path = log_path(&dir, key, self.format);
-                // Write-tmp → atomic rename → only then drop the other
-                // format's file: a failed write (ENOSPC — the very case
-                // the log hardening targets) or a crash mid-compaction
-                // must never destroy the partition's only on-disk copy.
+                let path = log_path(&dir, key, self.format, part.active_k);
+                let mut keep: Vec<PathBuf> =
+                    part.warm.iter().map(|m| m.path.clone()).collect();
+                keep.push(path.clone());
+                // Write-tmp → atomic rename → only then drop superseded
+                // files: a failed write (ENOSPC — the very case the log
+                // hardening targets) or a crash mid-compaction must
+                // never destroy the partition's only on-disk copy.
                 let tmp = path.with_extension("tmp");
                 let res = std::fs::write(&tmp, &bytes)
                     .and_then(|()| std::fs::rename(&tmp, &path));
                 match res {
                     Ok(()) => {
-                        // Dropping the superseded other-format file can
-                        // fail (or a crash can land between the rename
-                        // and here); the partition then reloads with
-                        // duplicates, so surface it and retry via dirty.
-                        let stale = log_path(&dir, key, other);
-                        let removed = match std::fs::remove_file(&stale) {
-                            Ok(()) => true,
-                            Err(e) if e.kind() == std::io::ErrorKind::NotFound => true,
-                            Err(e) => {
-                                self.log_errors += 1;
-                                crate::log_warn!(
-                                    "provdb",
-                                    "removing superseded {}: {e} — records would \
-                                     duplicate on reload; retrying at the next flush",
-                                    stale.display()
-                                );
-                                false
-                            }
-                        };
+                        // Removal can fail (or a crash can land between
+                        // the rename and here); the partition then
+                        // reloads with duplicates, so surface it and
+                        // retry via dirty.
+                        let removed = remove_superseded(&dir, key, &keep);
+                        if !removed {
+                            self.log_errors += 1;
+                        }
                         let part = self.parts.get_mut(&key).expect("dirty partition exists");
                         part.dirty = !removed;
                         for (e, nb) in part.entries.iter_mut().zip(&sizes) {
@@ -881,8 +1366,17 @@ impl ShardState {
     }
 
     fn stats(&self) -> ProvDbStats {
+        let warm_records: u64 = self
+            .parts
+            .values()
+            .flat_map(|p| p.warm.iter())
+            .map(|m| m.footer.n_records as u64)
+            .sum();
+        let segments_total: u64 =
+            self.parts.values().map(|p| p.warm.len() as u64).sum();
         ProvDbStats {
-            records: self.parts.values().map(|p| p.entries.len() as u64).sum(),
+            records: self.parts.values().map(|p| p.entries.len() as u64).sum::<u64>()
+                + warm_records,
             resident_bytes: self.resident_bytes,
             log_bytes: self.log_bytes,
             anomalies: self.anomalies,
@@ -891,6 +1385,9 @@ impl ShardState {
             // Transport counters live on the TCP front-end, not here.
             shed: 0,
             net_queue_depth: 0,
+            segments_total,
+            segments_skipped: self.segments_skipped,
+            zone_map_bytes: segments_total * codec::SEG2_FOOTER_LEN as u64,
         }
     }
 }
@@ -912,6 +1409,7 @@ fn run_shard(
         anomalies: 0,
         evicted: 0,
         log_errors: 0,
+        segments_skipped: 0,
     };
     while let Ok(req) = rx.recv() {
         match req {
@@ -928,6 +1426,19 @@ fn run_shard(
             }
             ShardReq::Stats { reply } => {
                 let _ = reply.send(shard.stats());
+            }
+            ShardReq::RegisterSegment { key, meta } => {
+                shard.resident_bytes += meta.disk_bytes;
+                shard.log_bytes += meta.disk_bytes;
+                shard.anomalies += meta.footer.n_anomalies as u64;
+                let part = shard.parts.entry(key).or_default();
+                if meta.footer.n_records > 0 {
+                    part.max_entry = part.max_entry.max(meta.footer.zone.max_entry);
+                }
+                part.warm.push(meta);
+            }
+            ShardReq::SetActive { key, active_k } => {
+                shard.parts.entry(key).or_default().active_k = active_k;
             }
             ShardReq::Shutdown => break,
         }
@@ -1024,7 +1535,8 @@ mod tests {
     #[test]
     fn retention_evicts_lowest_scores_first() {
         let (store, handle) =
-            spawn_store(None, 2, Retention { max_records_per_rank: 5 }).unwrap();
+            spawn_store(None, 2, Retention { max_records_per_rank: 5, ..Default::default() })
+                .unwrap();
         // 20 records on one rank with distinct scores 0..19.
         let recs: Vec<ProvRecord> =
             (0..20u64).map(|i| rec(0, 1, i, i as f64, i)).collect();
@@ -1051,7 +1563,7 @@ mod tests {
             let (store, handle) = spawn_store_fmt(
                 Some(dir.as_path()),
                 2,
-                Retention { max_records_per_rank: 3 },
+                Retention { max_records_per_rank: 3, ..Default::default() },
                 format,
             )
             .unwrap();
@@ -1381,6 +1893,133 @@ mod tests {
         );
         assert_eq!(probe.shed.load(Ordering::Relaxed), 0);
         handle.join();
+    }
+
+    #[test]
+    fn sealing_rolls_segments_and_zone_maps_prune_queries() {
+        let dir = tmpdir("seal");
+        let retention = Retention::default().with_segment_knob(10);
+        let (store, handle) = spawn_store(Some(dir.as_path()), 1, retention).unwrap();
+        // 30 records, one step each: seals exactly three 10-record
+        // segments during ingest and leaves the hot tier empty.
+        store.ingest((0..30u64).map(|i| rec(0, 0, i, (i % 7) as f64, i)).collect());
+        store.flush();
+        let stats = store.stats();
+        assert_eq!(stats.records, 30);
+        assert_eq!(stats.segments_total, 3);
+        assert_eq!(stats.segments_skipped, 0);
+        assert_eq!(stats.zone_map_bytes, 3 * codec::SEG2_FOOTER_LEN as u64);
+        for k in 0..3 {
+            assert!(dir.join(format!("prov_app0_rank0_seg000{k}.provseg")).exists());
+        }
+        // The first seal removed the legacy single-file log.
+        assert!(!dir.join("prov_app0_rank0.provseg").exists());
+        // A step-range query over the first segment decodes it alone;
+        // the other two are pruned by zone map without a read.
+        let hits = store
+            .query(&ProvQuery { step_range: Some((0, 4)), ..Default::default() });
+        assert_eq!(hits.len(), 5);
+        assert!(hits.iter().all(|r| r.step <= 4));
+        assert_eq!(store.stats().segments_skipped, 2);
+        handle.join();
+        // Restart re-adopts the sealed segments from their footers.
+        let (store, handle) = spawn_store(Some(dir.as_path()), 2, retention).unwrap();
+        let all = store.query(&ProvQuery::default());
+        assert_eq!(all.len(), 30);
+        for w in all.windows(2) {
+            assert!(w[0].entry_us <= w[1].entry_us);
+        }
+        let stats = store.stats();
+        assert_eq!(stats.records, 30);
+        assert_eq!(stats.segments_total, 3);
+        handle.join();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retention_bound_spans_hot_and_warm_tiers() {
+        let dir = tmpdir("tiered-retention");
+        let retention = Retention { max_records_per_rank: 5, ..Default::default() }
+            .with_segment_knob(8);
+        let (store, handle) = spawn_store(Some(dir.as_path()), 1, retention).unwrap();
+        // 20 records with distinct scores: two segments seal during
+        // ingest; the flush must rank *all* 20 records (demoting the
+        // warm ones), not just the hot leftovers.
+        store.ingest((0..20u64).map(|i| rec(0, 0, i, i as f64, i)).collect());
+        store.flush();
+        let kept = store.query(&ProvQuery { rank: Some((0, 0)), ..Default::default() });
+        assert_eq!(kept.len(), 5);
+        let mut scores: Vec<f64> = kept.iter().map(|r| r.score).collect();
+        scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(scores, vec![15.0, 16.0, 17.0, 18.0, 19.0]);
+        let stats = store.stats();
+        assert_eq!(stats.records, 5);
+        assert_eq!(stats.evicted, 15);
+        assert_eq!(stats.segments_total, 0, "demoted segments are gone");
+        handle.join();
+        let db = crate::provenance::ProvDb::load(&dir).unwrap();
+        assert_eq!(db.len(), 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn time_window_expires_whole_segments_by_zone_map() {
+        let dir = tmpdir("window");
+        let retention =
+            Retention::default().with_segment_knob(10).with_window_knob(1_000);
+        let (store, handle) = spawn_store(Some(dir.as_path()), 1, retention).unwrap();
+        // entry_us = id × 100 → partition clock reaches 2900 and the
+        // cutoff is 1900: segment 0 (entries 0..900) expires whole by
+        // zone map, segment 1 (1000..1900) straddles and is demoted +
+        // filtered to its single surviving record, segment 2 stays warm.
+        store.ingest((0..30u64).map(|i| rec(0, 0, i, (i % 7) as f64, i)).collect());
+        store.flush();
+        let all = store.query(&ProvQuery::default());
+        assert_eq!(all.len(), 11);
+        assert!(all.iter().all(|r| r.entry_us >= 1900));
+        let stats = store.stats();
+        assert_eq!(stats.records, 11);
+        assert_eq!(stats.evicted, 19);
+        assert_eq!(stats.segments_total, 1);
+        assert!(!dir.join("prov_app0_rank0_seg0000.provseg").exists());
+        assert!(dir.join("prov_app0_rank0_seg0002.provseg").exists());
+        handle.join();
+        // The expired records are gone from disk too.
+        let (store, handle) = spawn_store(Some(dir.as_path()), 1, retention).unwrap();
+        assert_eq!(store.query(&ProvQuery::default()).len(), 11);
+        handle.join();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn probe_scan_covers_warm_segments_bit_identically() {
+        use crate::probe::{InstalledProbe, Probe};
+        let dir = tmpdir("warm-probe");
+        let retention = Retention::default().with_segment_knob(8);
+        let (store, handle) = spawn_store(Some(dir.as_path()), 2, retention).unwrap();
+        let mut recs = Vec::new();
+        for rank in 0..6u32 {
+            for i in 0..10u64 {
+                recs.push(rec(0, rank, i, (i % 8) as f64, rank as u64 * 100 + i));
+            }
+        }
+        store.ingest(recs);
+        store.flush();
+        assert!(store.stats().segments_total >= 6, "every partition sealed");
+        let probe = Arc::new(InstalledProbe::new(
+            Probe::compile("fn:*.*:exit / score >= 6.0 && anomaly /").unwrap(),
+        ));
+        let via_probe = store.probe_scan(&probe);
+        let q = ProvQuery {
+            min_score: Some(6.0),
+            anomalies_only: true,
+            ..Default::default()
+        };
+        let via_query = store.query_encoded(&q);
+        assert_eq!(via_probe.len(), 12);
+        assert_eq!(via_probe, via_query, "bit-identical across warm + hot tiers");
+        handle.join();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

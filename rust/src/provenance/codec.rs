@@ -506,6 +506,938 @@ pub fn read_segment(buf: &[u8]) -> Result<SegmentScan> {
     Ok(SegmentScan { records, torn_bytes: buf.len() - pos, corrupt })
 }
 
+// ---------------------------------------------------------------------------
+// Segment format v2 — sealed, columnar, zone-mapped.
+//
+// A *sealed* v2 segment rewrites a bounded run of records column-major
+// with delta+varint packing and a fixed-size footer at the file tail:
+//
+// ```text
+// file   := SEG_MAGIC u32 | version u16 (=2) | body | crc32(body) u32
+//         | footer | crc32(footer) u32 | footer_len u32 | SEG2_FOOTER_MAGIC u32
+// body   := n u32 | seq0 u64
+//         | step    n × uvarint(zigzag(Δ))        (delta from previous, prev=0)
+//         | entry   n × uvarint(zigzag(Δ))        (prev=0)
+//         | dur     n × uvarint(zigzag(exit⊖entry)) (per record)
+//         | fid,rank,app                          (3 × n uvarint)
+//         | seq     n × uvarint(zigzag(Δ))        (prev=seq0; first is 0)
+//         | score   n × f64 | label n × u8
+//         | call_id n × uvarint(zigzag(Δ))        (prev=0)
+//         | thread,inclusive,exclusive,depth      (4 × n uvarint)
+//         | parent_bits ⌈n/8⌉ bytes | parent one uvarint(zigzag(p⊖call_id)) per set bit
+//         | n_children,n_messages,msg_bytes       (3 × n uvarint)
+//         | dict n_strings u32, then (uvarint len + UTF-8) × n_strings
+//         | func_idx n × uvarint | label_idx one uvarint per LABEL_OTHER record
+// footer := zone map (89 bytes) | n_records u32 | n_anomalies u32 | body_len u64
+// ```
+//
+// The footer is readable from the file tail alone ([`read_seg2_footer_file`]),
+// so recovery registers a sealed segment without touching its body, and the
+// query engine consults the zone map ([`ZoneMap::may_match`]) to skip whole
+// segments before decoding a single record. [`read_segment_v2`] recovers the
+// longest decodable record prefix from a torn file (footer lost / body cut);
+// a valid footer whose body CRC fails is reported as corruption with no
+// records salvaged (column packing cannot localize a flip the way v1's
+// per-record CRC can — callers sideline the original bytes instead).
+// ---------------------------------------------------------------------------
+
+/// Version tag of sealed columnar segments.
+pub const CODEC_VERSION_V2: u16 = 2;
+
+/// Trailing magic of a sealed v2 segment ("CPZ2").
+pub const SEG2_FOOTER_MAGIC: u32 = 0x325A_5043;
+
+/// Fixed footer size (zone map + counts + body length).
+pub const SEG2_FOOTER_LEN: usize = 105;
+
+/// Footer + its CRC + footer_len + trailing magic.
+pub const SEG2_TAIL_LEN: usize = SEG2_FOOTER_LEN + 12;
+
+/// The 6-byte file header of a sealed v2 segment.
+pub fn seg2_file_header() -> [u8; SEG_HEADER_LEN] {
+    let mut h = [0u8; SEG_HEADER_LEN];
+    h[..4].copy_from_slice(&SEG_MAGIC.to_le_bytes());
+    h[4..].copy_from_slice(&CODEC_VERSION_V2.to_le_bytes());
+    h
+}
+
+/// Append `v` as a LEB128 unsigned varint.
+pub fn write_uvarint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Read one LEB128 unsigned varint.
+pub fn read_uvarint(c: &mut Cursor) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = c.u8()?;
+        ensure!(shift < 64, "uvarint longer than 10 bytes");
+        ensure!(shift < 63 || b & 0x7F <= 1, "uvarint overflows u64");
+        v |= ((b & 0x7F) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// ZigZag-map a wrapping delta so small signed steps stay small varints.
+pub fn zigzag(delta: u64) -> u64 {
+    let d = delta as i64;
+    ((d << 1) ^ (d >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+pub fn unzigzag(z: u64) -> u64 {
+    ((z >> 1) as i64 ^ -((z & 1) as i64)) as u64
+}
+
+fn label_bit(tag: u8) -> u8 {
+    match tag {
+        LABEL_NORMAL => 1,
+        LABEL_ANOMALY_HIGH => 2,
+        LABEL_ANOMALY_LOW => 4,
+        _ => 8,
+    }
+}
+
+/// Per-segment min/max ranges over every header field a [`ProvQuery`] can
+/// filter on, plus a bitset of label tags present — enough to prove "no
+/// record in this segment can match" without reading the body.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ZoneMap {
+    pub min_step: u64,
+    pub max_step: u64,
+    pub min_entry: u64,
+    pub max_entry: u64,
+    pub min_exit: u64,
+    pub max_exit: u64,
+    pub min_score: f64,
+    pub max_score: f64,
+    pub min_rank: u32,
+    pub max_rank: u32,
+    pub min_app: u32,
+    pub max_app: u32,
+    pub min_fid: u32,
+    pub max_fid: u32,
+    /// Bit 0 normal, 1 anomaly_high, 2 anomaly_low, 3 other/custom.
+    pub label_bits: u8,
+}
+
+impl Default for ZoneMap {
+    fn default() -> ZoneMap {
+        ZoneMap {
+            min_step: u64::MAX,
+            max_step: 0,
+            min_entry: u64::MAX,
+            max_entry: 0,
+            min_exit: u64::MAX,
+            max_exit: 0,
+            min_score: f64::INFINITY,
+            max_score: f64::NEG_INFINITY,
+            min_rank: u32::MAX,
+            max_rank: 0,
+            min_app: u32::MAX,
+            max_app: 0,
+            min_fid: u32::MAX,
+            max_fid: 0,
+            label_bits: 0,
+        }
+    }
+}
+
+impl ZoneMap {
+    /// Widen the zone to cover one record header.
+    pub fn add(&mut self, h: &RecHeader) {
+        self.min_step = self.min_step.min(h.step);
+        self.max_step = self.max_step.max(h.step);
+        self.min_entry = self.min_entry.min(h.entry_us);
+        self.max_entry = self.max_entry.max(h.entry_us);
+        self.min_exit = self.min_exit.min(h.exit_us);
+        self.max_exit = self.max_exit.max(h.exit_us);
+        // NaN scores never satisfy `score >= m`, so ignoring them here
+        // (both comparisons are false for NaN) keeps the zone sound.
+        if h.score < self.min_score {
+            self.min_score = h.score;
+        }
+        if h.score > self.max_score {
+            self.max_score = h.score;
+        }
+        self.min_rank = self.min_rank.min(h.rank);
+        self.max_rank = self.max_rank.max(h.rank);
+        self.min_app = self.min_app.min(h.app);
+        self.max_app = self.max_app.max(h.app);
+        self.min_fid = self.min_fid.min(h.fid);
+        self.max_fid = self.max_fid.max(h.fid);
+        self.label_bits |= label_bit(h.label_tag);
+    }
+
+    /// Conservative pruning check: `false` proves no record in the
+    /// segment can satisfy `q`; `true` means the segment must be
+    /// scanned. Never returns `false` for a segment holding a match.
+    pub fn may_match(&self, q: &ProvQuery) -> bool {
+        let in32 = |v: u32, lo: u32, hi: u32| v >= lo && v <= hi;
+        if let Some(a) = q.app {
+            if !in32(a, self.min_app, self.max_app) {
+                return false;
+            }
+        }
+        if let Some((a, r)) = q.rank {
+            if !in32(a, self.min_app, self.max_app) || !in32(r, self.min_rank, self.max_rank) {
+                return false;
+            }
+        }
+        if let Some((a, f)) = q.fid {
+            if !in32(a, self.min_app, self.max_app) || !in32(f, self.min_fid, self.max_fid) {
+                return false;
+            }
+        }
+        if let Some(s) = q.step {
+            if s < self.min_step || s > self.max_step {
+                return false;
+            }
+        }
+        if let Some((lo, hi)) = q.step_range {
+            if hi < self.min_step || lo > self.max_step {
+                return false;
+            }
+        }
+        if let Some((lo, hi)) = q.ts_range {
+            if self.max_exit < lo || self.min_entry > hi {
+                return false;
+            }
+        }
+        if q.anomalies_only && self.label_bits & !1 == 0 {
+            return false;
+        }
+        if let Some(m) = q.min_score {
+            // NaN bounds (empty zone) and NaN m both compare false —
+            // conservative in exactly the right direction.
+            if self.max_score < m {
+                return false;
+            }
+        }
+        if let Some(l) = &q.label {
+            if self.label_bits & label_bit(label_tag(l)) == 0 {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// The fixed tail of a sealed v2 segment: zone map, record/anomaly
+/// counts, and the body extent (which pins the exact file size).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Seg2Footer {
+    pub zone: ZoneMap,
+    pub n_records: u32,
+    pub n_anomalies: u32,
+    pub body_len: u64,
+}
+
+impl Seg2Footer {
+    /// Total file size a segment with this footer must have.
+    pub fn file_len(&self) -> u64 {
+        (SEG_HEADER_LEN + 4 + SEG2_TAIL_LEN) as u64 + self.body_len
+    }
+
+    fn encode(&self) -> [u8; SEG2_FOOTER_LEN] {
+        let mut out = Vec::with_capacity(SEG2_FOOTER_LEN);
+        let z = &self.zone;
+        for v in [z.min_step, z.max_step, z.min_entry, z.max_entry, z.min_exit, z.max_exit] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&z.min_score.to_le_bytes());
+        out.extend_from_slice(&z.max_score.to_le_bytes());
+        for v in [z.min_rank, z.max_rank, z.min_app, z.max_app, z.min_fid, z.max_fid] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.push(z.label_bits);
+        out.extend_from_slice(&self.n_records.to_le_bytes());
+        out.extend_from_slice(&self.n_anomalies.to_le_bytes());
+        out.extend_from_slice(&self.body_len.to_le_bytes());
+        out.try_into().expect("footer layout is fixed-size")
+    }
+
+    fn parse(buf: &[u8]) -> Result<Seg2Footer> {
+        ensure!(buf.len() == SEG2_FOOTER_LEN, "bad footer length {}", buf.len());
+        let mut c = Cursor::new(buf);
+        let zone = ZoneMap {
+            min_step: c.u64()?,
+            max_step: c.u64()?,
+            min_entry: c.u64()?,
+            max_entry: c.u64()?,
+            min_exit: c.u64()?,
+            max_exit: c.u64()?,
+            min_score: c.f64()?,
+            max_score: c.f64()?,
+            min_rank: c.u32()?,
+            max_rank: c.u32()?,
+            min_app: c.u32()?,
+            max_app: c.u32()?,
+            min_fid: c.u32()?,
+            max_fid: c.u32()?,
+            label_bits: c.u8()?,
+        };
+        Ok(Seg2Footer {
+            zone,
+            n_records: c.u32()?,
+            n_anomalies: c.u32()?,
+            body_len: c.u64()?,
+        })
+    }
+}
+
+fn put_delta_zz(out: &mut Vec<u8>, prev: &mut u64, v: u64) {
+    write_uvarint(out, zigzag(v.wrapping_sub(*prev)));
+    *prev = v;
+}
+
+/// Seal `(seq, validated encoded record)` pairs into a complete v2
+/// segment file image. Returns the bytes and the footer (the caller
+/// keeps the footer as the segment's in-memory zone-map handle).
+pub fn seal_segment_v2(records: &[(u64, &[u8])]) -> Result<(Vec<u8>, Seg2Footer)> {
+    ensure!(!records.is_empty(), "cannot seal an empty segment");
+    let mut parsed = Vec::with_capacity(records.len());
+    for (seq, buf) in records {
+        let h = read_header(buf)?;
+        let p = parse_payload(&h, buf)?;
+        parsed.push((*seq, h, p));
+    }
+    let n = parsed.len();
+    let seq0 = parsed[0].0;
+
+    // String dictionary: function names + custom labels, first-appearance
+    // order so the column indices stay small for skewed registries.
+    let mut dict: Vec<&str> = Vec::new();
+    let mut index: std::collections::HashMap<&str, u64> = std::collections::HashMap::new();
+    let mut intern_str = |s| -> u64 {
+        if let Some(&i) = index.get(s) {
+            return i;
+        }
+        let i = dict.len() as u64;
+        dict.push(s);
+        index.insert(s, i);
+        i
+    };
+    let mut func_idx = Vec::with_capacity(n);
+    let mut label_idx = Vec::new();
+    for (_, h, p) in &parsed {
+        func_idx.push(intern_str(p.func));
+        if h.label_tag == LABEL_OTHER {
+            label_idx.push(intern_str(p.label.expect("tag 255 carries a label")));
+        }
+    }
+
+    let mut body = Vec::with_capacity(n * 32);
+    body.extend_from_slice(&(n as u32).to_le_bytes());
+    body.extend_from_slice(&seq0.to_le_bytes());
+    let mut zone = ZoneMap::default();
+    let mut anomalies = 0u32;
+    for (_, h, _) in &parsed {
+        zone.add(h);
+        if h.is_anomaly() {
+            anomalies += 1;
+        }
+    }
+    let mut prev = 0u64;
+    for (_, h, _) in &parsed {
+        put_delta_zz(&mut body, &mut prev, h.step);
+    }
+    prev = 0;
+    for (_, h, _) in &parsed {
+        put_delta_zz(&mut body, &mut prev, h.entry_us);
+    }
+    for (_, h, _) in &parsed {
+        write_uvarint(&mut body, zigzag(h.exit_us.wrapping_sub(h.entry_us)));
+    }
+    for (_, h, _) in &parsed {
+        write_uvarint(&mut body, h.fid as u64);
+    }
+    for (_, h, _) in &parsed {
+        write_uvarint(&mut body, h.rank as u64);
+    }
+    for (_, h, _) in &parsed {
+        write_uvarint(&mut body, h.app as u64);
+    }
+    prev = seq0;
+    for (seq, _, _) in &parsed {
+        put_delta_zz(&mut body, &mut prev, *seq);
+    }
+    for (_, h, _) in &parsed {
+        body.extend_from_slice(&h.score.to_le_bytes());
+    }
+    for (_, h, _) in &parsed {
+        body.push(h.label_tag);
+    }
+    prev = 0;
+    for (_, _, p) in &parsed {
+        put_delta_zz(&mut body, &mut prev, p.call_id);
+    }
+    for (_, _, p) in &parsed {
+        write_uvarint(&mut body, p.thread as u64);
+    }
+    for (_, _, p) in &parsed {
+        write_uvarint(&mut body, p.inclusive_us);
+    }
+    for (_, _, p) in &parsed {
+        write_uvarint(&mut body, p.exclusive_us);
+    }
+    for (_, _, p) in &parsed {
+        write_uvarint(&mut body, p.depth as u64);
+    }
+    let mut bits = vec![0u8; n.div_ceil(8)];
+    for (i, (_, _, p)) in parsed.iter().enumerate() {
+        if p.parent.is_some() {
+            bits[i / 8] |= 1 << (i % 8);
+        }
+    }
+    body.extend_from_slice(&bits);
+    for (_, _, p) in &parsed {
+        if let Some(par) = p.parent {
+            write_uvarint(&mut body, zigzag(par.wrapping_sub(p.call_id)));
+        }
+    }
+    for (_, _, p) in &parsed {
+        write_uvarint(&mut body, p.n_children as u64);
+    }
+    for (_, _, p) in &parsed {
+        write_uvarint(&mut body, p.n_messages as u64);
+    }
+    for (_, _, p) in &parsed {
+        write_uvarint(&mut body, p.msg_bytes);
+    }
+    body.extend_from_slice(&(dict.len() as u32).to_le_bytes());
+    for s in &dict {
+        write_uvarint(&mut body, s.len() as u64);
+        body.extend_from_slice(s.as_bytes());
+    }
+    for i in &func_idx {
+        write_uvarint(&mut body, *i);
+    }
+    for i in &label_idx {
+        write_uvarint(&mut body, *i);
+    }
+
+    let footer = Seg2Footer {
+        zone,
+        n_records: n as u32,
+        n_anomalies: anomalies,
+        body_len: body.len() as u64,
+    };
+    let mut file = Vec::with_capacity(SEG_HEADER_LEN + body.len() + 4 + SEG2_TAIL_LEN);
+    file.extend_from_slice(&seg2_file_header());
+    file.extend_from_slice(&body);
+    file.extend_from_slice(&crc32(&body).to_le_bytes());
+    let fbytes = footer.encode();
+    file.extend_from_slice(&fbytes);
+    file.extend_from_slice(&crc32(&fbytes).to_le_bytes());
+    file.extend_from_slice(&(SEG2_FOOTER_LEN as u32).to_le_bytes());
+    file.extend_from_slice(&SEG2_FOOTER_MAGIC.to_le_bytes());
+    Ok((file, footer))
+}
+
+/// Validate and parse the footer from a full v2 file image; `None` for
+/// any inconsistency (truncated tail, bad magic/length/CRC, body extent
+/// disagreeing with the file size) — the salvage path takes over then.
+pub fn read_seg2_footer(buf: &[u8]) -> Option<Seg2Footer> {
+    if buf.len() < SEG_HEADER_LEN + 4 + SEG2_TAIL_LEN {
+        return None;
+    }
+    let end = buf.len();
+    let magic = u32::from_le_bytes(buf[end - 4..].try_into().unwrap());
+    let flen = u32::from_le_bytes(buf[end - 8..end - 4].try_into().unwrap());
+    if magic != SEG2_FOOTER_MAGIC || flen as usize != SEG2_FOOTER_LEN {
+        return None;
+    }
+    let fstart = end - SEG2_TAIL_LEN;
+    let fbytes = &buf[fstart..fstart + SEG2_FOOTER_LEN];
+    let want = u32::from_le_bytes(buf[end - 12..end - 8].try_into().unwrap());
+    if crc32(fbytes) != want {
+        return None;
+    }
+    let footer = Seg2Footer::parse(fbytes).ok()?;
+    if footer.file_len() != buf.len() as u64 {
+        return None;
+    }
+    Some(footer)
+}
+
+/// Tail-only footer read: `Ok(Some(..))` iff `path` is a sealed v2
+/// segment with a fully consistent footer (body CRC is *not* checked —
+/// that is deferred to the first scan). `Ok(None)` for v1 segments,
+/// short/torn files, or any footer inconsistency; `Err` only for I/O.
+pub fn read_seg2_footer_file(path: &std::path::Path) -> Result<Option<Seg2Footer>> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut f = std::fs::File::open(path)?;
+    let file_len = f.metadata()?.len();
+    if file_len < (SEG_HEADER_LEN + 4 + SEG2_TAIL_LEN) as u64 {
+        return Ok(None);
+    }
+    let mut head = [0u8; SEG_HEADER_LEN];
+    f.read_exact(&mut head)?;
+    if u32::from_le_bytes(head[..4].try_into().unwrap()) != SEG_MAGIC
+        || u16::from_le_bytes(head[4..6].try_into().unwrap()) != CODEC_VERSION_V2
+    {
+        return Ok(None);
+    }
+    f.seek(SeekFrom::End(-(SEG2_TAIL_LEN as i64)))?;
+    let mut tail = [0u8; SEG2_TAIL_LEN];
+    f.read_exact(&mut tail)?;
+    let magic = u32::from_le_bytes(tail[SEG2_TAIL_LEN - 4..].try_into().unwrap());
+    let flen = u32::from_le_bytes(tail[SEG2_TAIL_LEN - 8..SEG2_TAIL_LEN - 4].try_into().unwrap());
+    if magic != SEG2_FOOTER_MAGIC || flen as usize != SEG2_FOOTER_LEN {
+        return Ok(None);
+    }
+    let fbytes = &tail[..SEG2_FOOTER_LEN];
+    let want =
+        u32::from_le_bytes(tail[SEG2_TAIL_LEN - 12..SEG2_TAIL_LEN - 8].try_into().unwrap());
+    if crc32(fbytes) != want {
+        return Ok(None);
+    }
+    let footer = match Seg2Footer::parse(fbytes) {
+        Ok(fo) => fo,
+        Err(_) => return Ok(None),
+    };
+    if footer.file_len() != file_len {
+        return Ok(None);
+    }
+    Ok(Some(footer))
+}
+
+/// One v2 segment scan: decoded records with their sealed sequence
+/// numbers, the footer when it validated, and whether the body parsed
+/// completely under its CRC.
+pub struct Seg2Scan {
+    pub records: Vec<(u64, ProvRecord)>,
+    pub footer: Option<Seg2Footer>,
+    /// Body fully parsed and its CRC verified.
+    pub complete: bool,
+    /// Diagnosis when `!complete` and the loss wasn't a clean tail cut.
+    pub corrupt: Option<String>,
+}
+
+/// Columns as far as a (possibly torn) body parse got. Each dense
+/// column either reaches `n` values or marks where EOF cut it.
+#[derive(Default)]
+struct Seg2Body {
+    n: usize,
+    seq: Vec<u64>,
+    step: Vec<u64>,
+    entry: Vec<u64>,
+    dur: Vec<u64>,
+    fid: Vec<u64>,
+    rank: Vec<u64>,
+    app: Vec<u64>,
+    score: Vec<f64>,
+    label: Vec<u8>,
+    call_id: Vec<u64>,
+    thread: Vec<u64>,
+    incl: Vec<u64>,
+    excl: Vec<u64>,
+    depth: Vec<u64>,
+    parent_bits: Vec<u8>,
+    parent_delta: Vec<u64>,
+    children: Vec<u64>,
+    nmsg: Vec<u64>,
+    msgb: Vec<u64>,
+    dict: Vec<String>,
+    dict_complete: bool,
+    func_idx: Vec<u64>,
+    label_idx: Vec<u64>,
+    /// Exact body bytes consumed when everything parsed (else 0).
+    consumed: usize,
+}
+
+fn col_uvarint(c: &mut Cursor, n: usize) -> Vec<u64> {
+    let mut v = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        match read_uvarint(c) {
+            Ok(x) => v.push(x),
+            Err(_) => break,
+        }
+    }
+    v
+}
+
+fn col_delta_zz(c: &mut Cursor, n: usize, start: u64) -> Vec<u64> {
+    let mut v = Vec::with_capacity(n.min(1 << 16));
+    let mut prev = start;
+    for _ in 0..n {
+        match read_uvarint(c) {
+            Ok(z) => {
+                prev = prev.wrapping_add(unzigzag(z));
+                v.push(prev);
+            }
+            Err(_) => break,
+        }
+    }
+    v
+}
+
+/// Decode a whole v2 file image. Bad magic is a hard error (not our
+/// file); a wrong *known* version is too (the caller routes v1 files
+/// through [`read_segment`]). Everything else degrades: a valid footer
+/// + body CRC yields the full record set (`complete`), a torn tail
+/// yields the longest decodable prefix, and a CRC-failing body under a
+/// valid footer yields nothing but a diagnosis.
+pub fn read_segment_v2(buf: &[u8]) -> Result<Seg2Scan> {
+    if buf.len() < SEG_HEADER_LEN {
+        return Ok(Seg2Scan { records: Vec::new(), footer: None, complete: false, corrupt: None });
+    }
+    let magic = u32::from_le_bytes(buf[..4].try_into().unwrap());
+    ensure!(magic == SEG_MAGIC, "bad segment magic {magic:#010x}");
+    let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
+    ensure!(version == CODEC_VERSION_V2, "not a v2 segment (codec version {version})");
+    let footer = read_seg2_footer(buf);
+    if let Some(f) = footer {
+        let body = &buf[SEG_HEADER_LEN..SEG_HEADER_LEN + f.body_len as usize];
+        let at = SEG_HEADER_LEN + f.body_len as usize;
+        let want = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap());
+        if crc32(body) != want {
+            return Ok(Seg2Scan {
+                records: Vec::new(),
+                footer: Some(f),
+                complete: false,
+                corrupt: Some("body CRC mismatch under a valid footer".into()),
+            });
+        }
+        let (records, diag, full) = decode_seg2_records(body);
+        let complete = full && records.len() == f.n_records as usize && diag.is_none();
+        let corrupt = if complete {
+            None
+        } else {
+            Some(diag.unwrap_or_else(|| "body/footer record count disagreement".into()))
+        };
+        return Ok(Seg2Scan { records, footer: Some(f), complete, corrupt });
+    }
+    // No trustworthy footer: salvage the longest decodable prefix from
+    // whatever body bytes survive (the tail may include a partial
+    // footer; the column counts bound the parse, so trailing junk is
+    // simply never reached).
+    let (records, diag, full) = decode_seg2_records(&buf[SEG_HEADER_LEN..]);
+    Ok(Seg2Scan { records, footer: None, complete: false, corrupt: diag.filter(|_| !full) })
+}
+
+/// Parse + assemble records from a body region. Returns the decoded
+/// prefix, an optional corruption diagnosis (structural badness, as
+/// opposed to a clean tail cut), and whether every column reached its
+/// full count with all references resolved.
+fn decode_seg2_records(body: &[u8]) -> (Vec<(u64, ProvRecord)>, Option<String>, bool) {
+    let b = match parse_seg2_body_full(body) {
+        Some(b) => b,
+        None => return (Vec::new(), Some("unparsable v2 body preamble".into()), false),
+    };
+    assemble_seg2(&b)
+}
+
+/// Full column parse with soft EOF (torn tails shorten trailing columns).
+fn parse_seg2_body_full(body: &[u8]) -> Option<Seg2Body> {
+    let mut c = Cursor::new(body);
+    let n = c.u32().ok()? as usize;
+    if n > body.len() {
+        return None;
+    }
+    let seq0 = c.u64().ok()?;
+    let mut b = Seg2Body { n, ..Default::default() };
+    macro_rules! dense {
+        ($field:ident, $val:expr) => {{
+            b.$field = $val;
+            if b.$field.len() < n {
+                return Some(b);
+            }
+        }};
+    }
+    dense!(step, col_delta_zz(&mut c, n, 0));
+    dense!(entry, col_delta_zz(&mut c, n, 0));
+    dense!(dur, {
+        let mut v = Vec::new();
+        for _ in 0..n {
+            match read_uvarint(&mut c) {
+                Ok(z) => v.push(unzigzag(z)),
+                Err(_) => break,
+            }
+        }
+        v
+    });
+    dense!(fid, col_uvarint(&mut c, n));
+    dense!(rank, col_uvarint(&mut c, n));
+    dense!(app, col_uvarint(&mut c, n));
+    dense!(seq, col_delta_zz(&mut c, n, seq0));
+    dense!(score, {
+        let mut v = Vec::new();
+        for _ in 0..n {
+            match c.f64() {
+                Ok(x) => v.push(x),
+                Err(_) => break,
+            }
+        }
+        v
+    });
+    dense!(label, {
+        let mut v = Vec::new();
+        for _ in 0..n {
+            match c.u8() {
+                Ok(x) => v.push(x),
+                Err(_) => break,
+            }
+        }
+        v
+    });
+    dense!(call_id, col_delta_zz(&mut c, n, 0));
+    dense!(thread, col_uvarint(&mut c, n));
+    dense!(incl, col_uvarint(&mut c, n));
+    dense!(excl, col_uvarint(&mut c, n));
+    dense!(depth, col_uvarint(&mut c, n));
+    let nbits = n.div_ceil(8);
+    let avail = c.remaining().min(nbits);
+    b.parent_bits = c.take_slice(avail).expect("bounded by remaining").to_vec();
+    if b.parent_bits.len() < nbits {
+        return Some(b);
+    }
+    let n_parents: usize = b.parent_bits.iter().map(|x| x.count_ones() as usize).sum();
+    {
+        // Per-record relative deltas (not cumulative): read raw.
+        let mut v = Vec::new();
+        for _ in 0..n_parents {
+            match read_uvarint(&mut c) {
+                Ok(z) => v.push(unzigzag(z)),
+                Err(_) => break,
+            }
+        }
+        b.parent_delta = v;
+        if b.parent_delta.len() < n_parents {
+            return Some(b);
+        }
+    }
+    dense!(children, col_uvarint(&mut c, n));
+    dense!(nmsg, col_uvarint(&mut c, n));
+    dense!(msgb, col_uvarint(&mut c, n));
+    let n_strings = match c.u32() {
+        Ok(x) => x as usize,
+        Err(_) => return Some(b),
+    };
+    if n_strings > body.len() {
+        return None;
+    }
+    for _ in 0..n_strings {
+        let len = match read_uvarint(&mut c) {
+            Ok(l) => l as usize,
+            Err(_) => return Some(b),
+        };
+        if len > c.remaining() {
+            return Some(b);
+        }
+        let bytes = c.take_slice(len).expect("bounds checked");
+        match std::str::from_utf8(bytes) {
+            Ok(s) => b.dict.push(s.to_string()),
+            Err(_) => return Some(b),
+        }
+    }
+    b.dict_complete = true;
+    dense!(func_idx, col_uvarint(&mut c, n));
+    let n_custom = b.label.iter().filter(|&&t| t == LABEL_OTHER).count();
+    {
+        let mut v = Vec::new();
+        for _ in 0..n_custom {
+            match read_uvarint(&mut c) {
+                Ok(x) => v.push(x),
+                Err(_) => break,
+            }
+        }
+        b.label_idx = v;
+        if b.label_idx.len() < n_custom {
+            return Some(b);
+        }
+    }
+    b.consumed = body.len() - c.remaining();
+    Some(b)
+}
+
+/// Assemble the longest valid record prefix from parsed columns.
+fn assemble_seg2(b: &Seg2Body) -> (Vec<(u64, ProvRecord)>, Option<String>, bool) {
+    let n = b.n;
+    let dense_k = [
+        b.step.len(),
+        b.entry.len(),
+        b.dur.len(),
+        b.fid.len(),
+        b.rank.len(),
+        b.app.len(),
+        b.seq.len(),
+        b.score.len(),
+        b.label.len(),
+        b.call_id.len(),
+        b.thread.len(),
+        b.incl.len(),
+        b.excl.len(),
+        b.depth.len(),
+        b.children.len(),
+        b.nmsg.len(),
+        b.msgb.len(),
+        b.func_idx.len(),
+    ]
+    .into_iter()
+    .min()
+    .unwrap_or(0);
+    let mut out = Vec::with_capacity(dense_k);
+    let mut diag = None;
+    let mut parents_used = 0usize;
+    let mut customs_used = 0usize;
+    let u32_of = |v: u64| -> Option<u32> { u32::try_from(v).ok() };
+    for i in 0..dense_k {
+        if i / 8 >= b.parent_bits.len() {
+            break;
+        }
+        let has_parent = b.parent_bits[i / 8] & (1 << (i % 8)) != 0;
+        if has_parent && parents_used >= b.parent_delta.len() {
+            break;
+        }
+        let tag = b.label[i];
+        let label = match tag {
+            LABEL_NORMAL | LABEL_ANOMALY_HIGH | LABEL_ANOMALY_LOW => {
+                label_of_tag(tag).expect("well-known tag").to_string()
+            }
+            LABEL_OTHER => {
+                if customs_used >= b.label_idx.len() {
+                    break;
+                }
+                let li = b.label_idx[customs_used] as usize;
+                if li >= b.dict.len() {
+                    if b.dict_complete {
+                        diag = Some(format!("record {i}: label dict index {li} out of range"));
+                    }
+                    break;
+                }
+                let text = b.dict[li].clone();
+                if label_tag(&text) != LABEL_OTHER {
+                    diag = Some(format!(
+                        "record {i}: label tag 255 with well-known label text '{text}'"
+                    ));
+                    break;
+                }
+                customs_used += 1;
+                text
+            }
+            t => {
+                diag = Some(format!("record {i}: bad label tag {t}"));
+                break;
+            }
+        };
+        let fi = b.func_idx[i] as usize;
+        if fi >= b.dict.len() {
+            if b.dict_complete {
+                diag = Some(format!("record {i}: func dict index {fi} out of range"));
+            }
+            break;
+        }
+        let (Some(app), Some(rank), Some(fid), Some(thread), Some(depth)) = (
+            u32_of(b.app[i]),
+            u32_of(b.rank[i]),
+            u32_of(b.fid[i]),
+            u32_of(b.thread[i]),
+            u32_of(b.depth[i]),
+        ) else {
+            diag = Some(format!("record {i}: 32-bit column value out of range"));
+            break;
+        };
+        let (Some(n_children), Some(n_messages)) =
+            (u32_of(b.children[i]), u32_of(b.nmsg[i]))
+        else {
+            diag = Some(format!("record {i}: 32-bit column value out of range"));
+            break;
+        };
+        let call_id = b.call_id[i];
+        let parent = if has_parent {
+            let p = call_id.wrapping_add(b.parent_delta[parents_used]);
+            parents_used += 1;
+            Some(p)
+        } else {
+            None
+        };
+        out.push((
+            b.seq[i],
+            ProvRecord {
+                call_id,
+                app,
+                rank,
+                thread,
+                fid,
+                func: b.dict[fi].clone(),
+                step: b.step[i],
+                entry_us: b.entry[i],
+                exit_us: b.entry[i].wrapping_add(b.dur[i]),
+                inclusive_us: b.incl[i],
+                exclusive_us: b.excl[i],
+                depth,
+                parent,
+                n_children,
+                n_messages,
+                msg_bytes: b.msgb[i],
+                label,
+                score: b.score[i],
+            },
+        ));
+    }
+    let full = diag.is_none() && out.len() == n && b.dict_complete && b.consumed > 0;
+    (out, diag, full)
+}
+
+/// Verdict of an incremental parse attempt at the head of a buffered
+/// window over a v1 segment's record stream (see [`parse_segment_record`]).
+pub enum SegRecordParse {
+    /// The window doesn't hold a whole record yet — refill and retry
+    /// (at EOF this means a torn tail).
+    NeedMore,
+    /// One valid record: `total` bytes including the CRC trailer, the
+    /// record itself being the first `total - 4`.
+    Record { total: usize },
+    /// Structural/CRC failure — the stream is bad from here on.
+    Corrupt(String),
+}
+
+/// Incrementally parse one `record + crc32` unit from the start of
+/// `buf` — the chunked-recovery building block that lets segment scans
+/// run in bounded memory instead of `std::fs::read`-ing whole files.
+pub fn parse_segment_record(buf: &[u8]) -> SegRecordParse {
+    if buf.len() < HEADER_LEN {
+        return SegRecordParse::NeedMore;
+    }
+    let h = match read_header(buf) {
+        Ok(h) => h,
+        Err(e) => return SegRecordParse::Corrupt(format!("bad record header: {e}")),
+    };
+    if h.payload_len as usize > MAX_PAYLOAD {
+        return SegRecordParse::Corrupt(format!(
+            "implausible record payload length {}",
+            h.payload_len
+        ));
+    }
+    let total = h.record_len() + 4;
+    if buf.len() < total {
+        return SegRecordParse::NeedMore;
+    }
+    let rec = &buf[..h.record_len()];
+    let want = u32::from_le_bytes(buf[h.record_len()..total].try_into().unwrap());
+    if crc32(rec) != want {
+        return SegRecordParse::Corrupt("CRC mismatch".into());
+    }
+    if let Err(e) = validate(rec) {
+        return SegRecordParse::Corrupt(format!("invalid record: {e}"));
+    }
+    SegRecordParse::Record { total }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -728,5 +1660,237 @@ mod tests {
             matches_header(&ProvQuery { anomalies_only: true, ..Default::default() }, &ch),
             Some(true)
         );
+    }
+
+    #[test]
+    fn uvarint_and_zigzag_edges() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX, u64::MAX - 1] {
+            let mut buf = Vec::new();
+            write_uvarint(&mut buf, v);
+            let mut c = Cursor::new(&buf);
+            assert_eq!(read_uvarint(&mut c).unwrap(), v);
+            assert_eq!(c.remaining(), 0);
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        // Deltas of extreme magnitude survive the wrapping round trip.
+        for (a, b) in [(0u64, u64::MAX), (u64::MAX, 0), (5, 3), (3, 5)] {
+            let d = b.wrapping_sub(a);
+            assert_eq!(a.wrapping_add(unzigzag(zigzag(d))), b);
+        }
+        // An 11-byte continuation run is refused, not a shift panic.
+        let mut c = Cursor::new(&[0xFF; 11]);
+        assert!(read_uvarint(&mut c).is_err());
+    }
+
+    /// A varied record set: custom + well-known labels, parents present
+    /// and absent, shared and unique function names, gapped seqs.
+    fn seg2_fixture() -> Vec<(u64, ProvRecord)> {
+        (0..40u64)
+            .map(|i| {
+                let mut r = rec(
+                    match i % 4 {
+                        0 => "normal",
+                        1 => "anomaly_high",
+                        2 => "anomaly_low",
+                        _ => "weird_label",
+                    },
+                    i as f64 / 3.0,
+                );
+                r.call_id = 1000 + i * 3;
+                r.rank = (i % 3) as u32;
+                r.fid = (i % 5) as u32;
+                r.func = format!("F{}", i % 5);
+                r.step = i / 8;
+                r.entry_us = 10_000 + i * 500;
+                r.exit_us = r.entry_us + 50 + i;
+                r.parent = if i % 3 == 0 { None } else { Some(1000 + i * 3 - 3) };
+                (100 + i * 7, r) // gapped seqs, as live sealing produces
+            })
+            .collect()
+    }
+
+    fn seal_fixture(recs: &[(u64, ProvRecord)]) -> (Vec<u8>, Seg2Footer, Vec<Vec<u8>>) {
+        let encoded: Vec<Vec<u8>> = recs
+            .iter()
+            .map(|(_, r)| {
+                let mut b = Vec::new();
+                encode(r, &mut b);
+                b
+            })
+            .collect();
+        let pairs: Vec<(u64, &[u8])> =
+            recs.iter().zip(&encoded).map(|((s, _), b)| (*s, b.as_slice())).collect();
+        let (file, footer) = seal_segment_v2(&pairs).unwrap();
+        (file, footer, encoded)
+    }
+
+    #[test]
+    fn seg2_seal_read_bit_identical_and_smaller() {
+        let recs = seg2_fixture();
+        let (file, footer, encoded) = seal_fixture(&recs);
+        assert_eq!(footer.n_records as usize, recs.len());
+        assert_eq!(
+            footer.n_anomalies as usize,
+            recs.iter().filter(|(_, r)| r.is_anomaly()).count()
+        );
+        assert_eq!(footer.file_len(), file.len() as u64);
+        let scan = read_segment_v2(&file).unwrap();
+        assert!(scan.complete, "corrupt: {:?}", scan.corrupt);
+        assert_eq!(scan.footer, Some(footer));
+        assert_eq!(scan.records.len(), recs.len());
+        for ((seq, back), ((want_seq, want), enc)) in
+            scan.records.iter().zip(recs.iter().zip(&encoded))
+        {
+            assert_eq!(seq, want_seq);
+            assert_eq!(back, want);
+            // Canonical re-encode: byte-identical to the v1 source.
+            let mut re = Vec::new();
+            encode(back, &mut re);
+            assert_eq!(&re, enc);
+        }
+        // Packing beats the v1 row format (records + CRC trailers).
+        let v1_size: usize =
+            SEG_HEADER_LEN + encoded.iter().map(|b| b.len() + 4).sum::<usize>();
+        assert!(
+            (file.len() as f64) < v1_size as f64 / 1.5,
+            "v2 {} vs v1 {} bytes — packing below the 1.5x bar",
+            file.len(),
+            v1_size
+        );
+    }
+
+    #[test]
+    fn seg2_zone_map_is_sound_and_prunes() {
+        let recs = seg2_fixture();
+        let (file, footer, _) = seal_fixture(&recs);
+        let scan = read_segment_v2(&file).unwrap();
+        let queries = [
+            ProvQuery::default(),
+            ProvQuery { app: Some(1), ..Default::default() },
+            ProvQuery { app: Some(9), ..Default::default() },
+            ProvQuery { rank: Some((1, 2)), ..Default::default() },
+            ProvQuery { rank: Some((1, 7)), ..Default::default() },
+            ProvQuery { fid: Some((1, 4)), ..Default::default() },
+            ProvQuery { fid: Some((1, 11)), ..Default::default() },
+            ProvQuery { step: Some(3), ..Default::default() },
+            ProvQuery { step: Some(99), ..Default::default() },
+            ProvQuery { step_range: Some((2, 3)), ..Default::default() },
+            ProvQuery { step_range: Some((50, 60)), ..Default::default() },
+            ProvQuery { ts_range: Some((0, 9_999)), ..Default::default() },
+            ProvQuery { ts_range: Some((15_000, 16_000)), ..Default::default() },
+            ProvQuery { anomalies_only: true, ..Default::default() },
+            ProvQuery { min_score: Some(5.0), ..Default::default() },
+            ProvQuery { min_score: Some(99.0), ..Default::default() },
+            ProvQuery { label: Some("weird_label".into()), ..Default::default() },
+            ProvQuery { label: Some("normal".into()), ..Default::default() },
+        ];
+        let mut pruned = 0;
+        for q in &queries {
+            let any = scan.records.iter().any(|(_, r)| q.matches(r));
+            if !footer.zone.may_match(q) {
+                pruned += 1;
+                assert!(!any, "zone pruned a segment holding a match for {q:?}");
+            }
+        }
+        assert!(pruned >= 4, "zone map pruned only {pruned} of the impossible queries");
+        // A segment of pure normals is prunable for anomalies_only.
+        let normals: Vec<(u64, ProvRecord)> =
+            (0..4).map(|i| (i, rec("normal", 0.5))).collect();
+        let (_, nf, _) = seal_fixture(&normals);
+        assert!(!nf.zone.may_match(&ProvQuery { anomalies_only: true, ..Default::default() }));
+    }
+
+    #[test]
+    fn seg2_footer_reads_from_file_tail() {
+        let recs = seg2_fixture();
+        let (file, footer, _) = seal_fixture(&recs);
+        let dir = std::env::temp_dir().join(format!("chimbuko_seg2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("prov_app0_rank0_seg0000.provseg");
+        std::fs::write(&path, &file).unwrap();
+        assert_eq!(read_seg2_footer_file(&path).unwrap(), Some(footer));
+        // A v1 segment file is not sealed.
+        let v1 = dir.join("prov_app0_rank0.provseg");
+        std::fs::write(&v1, seg_file_header()).unwrap();
+        assert_eq!(read_seg2_footer_file(&v1).unwrap(), None);
+        // A torn tail (footer cut) is not sealed either.
+        std::fs::write(&path, &file[..file.len() - 5]).unwrap();
+        assert_eq!(read_seg2_footer_file(&path).unwrap(), None);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn seg2_torn_tail_salvages_a_prefix() {
+        let recs = seg2_fixture();
+        let (file, _, _) = seal_fixture(&recs);
+        // Tear inside the trailing magic: the body (and its CRC) are
+        // intact, so every record comes back.
+        let scan = read_segment_v2(&file[..file.len() - 3]).unwrap();
+        assert!(scan.footer.is_none() && !scan.complete && scan.corrupt.is_none());
+        assert_eq!(scan.records.len(), recs.len());
+        for ((seq, back), (want_seq, want)) in scan.records.iter().zip(&recs) {
+            assert_eq!((seq, back), (want_seq, want));
+        }
+        // Progressive tears never yield junk: always a bit-exact prefix.
+        let mut seen_partial = false;
+        for cut in [SEG2_TAIL_LEN + 10, file.len() / 2, file.len() / 4, file.len() - 40] {
+            let scan = read_segment_v2(&file[..file.len() - cut]).unwrap();
+            assert!(scan.records.len() <= recs.len());
+            if !scan.records.is_empty() && scan.records.len() < recs.len() {
+                seen_partial = true;
+            }
+            for ((seq, back), (want_seq, want)) in scan.records.iter().zip(&recs) {
+                assert_eq!((seq, back), (want_seq, want));
+            }
+        }
+        assert!(seen_partial, "no tear produced a partial salvage — widen the cuts");
+        // A flipped body byte under a valid footer is corruption: no
+        // records, a diagnosis, and the footer still readable.
+        let mut flipped = file.clone();
+        flipped[SEG_HEADER_LEN + 30] ^= 0xFF;
+        let scan = read_segment_v2(&flipped).unwrap();
+        assert!(scan.records.is_empty() && !scan.complete);
+        assert!(scan.corrupt.unwrap().contains("CRC"));
+        assert!(scan.footer.is_some());
+        // Wrong magic / non-v2 version are hard errors.
+        let mut bad = file.clone();
+        bad[0] ^= 0xFF;
+        assert!(read_segment_v2(&bad).is_err());
+        let mut v1 = file;
+        v1[4] = 1;
+        v1[5] = 0;
+        assert!(read_segment_v2(&v1).is_err());
+    }
+
+    #[test]
+    fn incremental_record_parse_matches_read_segment() {
+        let recs = seg2_fixture();
+        let mut stream = Vec::new();
+        for (_, r) in &recs {
+            let start = stream.len();
+            encode(r, &mut stream);
+            let crc = crc32(&stream[start..]);
+            stream.extend_from_slice(&crc.to_le_bytes());
+        }
+        let mut pos = 0;
+        let mut n = 0;
+        loop {
+            match parse_segment_record(&stream[pos..]) {
+                SegRecordParse::Record { total } => {
+                    let (r, _) = decode(&stream[pos..pos + total - 4]).unwrap();
+                    assert_eq!(&r, &recs[n].1);
+                    pos += total;
+                    n += 1;
+                }
+                SegRecordParse::NeedMore => break,
+                SegRecordParse::Corrupt(e) => panic!("corrupt: {e}"),
+            }
+        }
+        assert_eq!((n, pos), (recs.len(), stream.len()));
+        // A short window asks for more; a flipped byte is corrupt.
+        assert!(matches!(parse_segment_record(&stream[..10]), SegRecordParse::NeedMore));
+        let mut bad = stream.clone();
+        bad[20] ^= 0xFF;
+        assert!(matches!(parse_segment_record(&bad), SegRecordParse::Corrupt(_)));
     }
 }

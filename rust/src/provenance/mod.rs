@@ -27,5 +27,5 @@ mod store;
 pub use codec::RecordFormat;
 pub use compare::{compare, RunComparison};
 pub use record::ProvRecord;
-pub(crate) use store::scan_log_dir;
+pub(crate) use store::{list_partition_files, scan_jsonl_file, scan_segment_file};
 pub use store::{ProvDb, ProvQuery, RunMetadata};

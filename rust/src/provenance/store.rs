@@ -240,107 +240,269 @@ impl ProvDb {
     }
 }
 
+/// One partition log file, parsed from its name
+/// (`prov_app<A>_rank<R>[_seg<K>].<jsonl|provseg>`).
+pub(crate) struct PartFile {
+    /// `(app, rank)` when the name follows the partition scheme;
+    /// `None` for `prov_*` files outside it (scanned last, by extension).
+    pub key: Option<(u32, u32)>,
+    /// Rolling-segment index (`_seg<K>`); `None` for legacy logs.
+    pub seg: Option<u32>,
+    pub jsonl: bool,
+    pub path: PathBuf,
+}
+
+/// Parse `prov_app<A>_rank<R>[_seg<K>].<ext>` → `(app, rank, seg, jsonl)`.
+pub(crate) fn parse_part_name(name: &str) -> Option<(u32, u32, Option<u32>, bool)> {
+    let (stem, jsonl) = match name.strip_suffix(".jsonl") {
+        Some(s) => (s, true),
+        None => (name.strip_suffix(".provseg")?, false),
+    };
+    let rest = stem.strip_prefix("prov_app")?;
+    let (app, rest) = rest.split_once("_rank")?;
+    let app: u32 = app.parse().ok()?;
+    let (rank, seg) = match rest.split_once("_seg") {
+        Some((r, k)) => (r, Some(k.parse::<u32>().ok()?)),
+        None => (rest, None),
+    };
+    Some((app, rank.parse().ok()?, seg, jsonl))
+}
+
+/// List a directory's partition log files in replay order: partitions
+/// numerically by `(app, rank)`; within one partition JSONL (oldest —
+/// pre-migration) first, then the legacy single `.provseg`, then rolling
+/// `_seg<K>` files by K. `prov_*` files outside the naming scheme sort
+/// last in path order. The offline loader and the provDB restart
+/// recovery share this ordering, so sequence re-assignment is identical
+/// wherever a directory is replayed.
+pub(crate) fn list_partition_files(dir: &Path) -> Result<Vec<PartFile>> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("reading provenance dir {}", dir.display()))?;
+    let mut files: Vec<PartFile> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter_map(|path| {
+            let name = path.file_name().and_then(|n| n.to_str())?;
+            if !name.starts_with("prov_")
+                || !(name.ends_with(".jsonl") || name.ends_with(".provseg"))
+            {
+                return None;
+            }
+            match parse_part_name(name) {
+                Some((app, rank, seg, jsonl)) => {
+                    Some(PartFile { key: Some((app, rank)), seg, jsonl, path })
+                }
+                None => {
+                    let jsonl = name.ends_with(".jsonl");
+                    Some(PartFile { key: None, seg: None, jsonl, path })
+                }
+            }
+        })
+        .collect();
+    files.sort_by(|a, b| {
+        let kind = |f: &PartFile| -> (u8, u32) {
+            match (f.jsonl, f.seg) {
+                (true, _) => (0, 0),
+                (false, None) => (1, 0),
+                (false, Some(k)) => (2, k),
+            }
+        };
+        (a.key.is_none(), a.key.unwrap_or((0, 0)), kind(a))
+            .cmp(&(b.key.is_none(), b.key.unwrap_or((0, 0)), kind(b)))
+            .then_with(|| a.path.cmp(&b.path))
+    });
+    Ok(files)
+}
+
 /// Scan a provenance data directory's replayable log contents — shared
 /// by the offline [`ProvDb::load`] and the provDB service's restart
-/// recovery, so the two loaders cannot diverge. Reads both formats
-/// (`prov_*.jsonl`, `prov_*.provseg`), files in path order, records in
-/// file order; damage in either format (torn tails, mid-file corruption,
-/// short files) degrades to logged warnings keeping everything before
-/// it. Each record streams to `sink` as `(encoded record, on-disk
-/// bytes)` — JSONL line + newline, or encoded record + CRC trailer — so
-/// callers never hold the whole log *set* at once. Peak memory is a few
-/// multiples of the largest single file (it is read whole, and segment
-/// records are copied out); a chunked segment reader for multi-GB
-/// unbounded-retention partitions is a noted ROADMAP item.
+/// recovery, so the two loaders cannot diverge. Reads every format
+/// (`prov_*.jsonl`, legacy v1 `.provseg`, sealed v2 `_seg<K>.provseg`)
+/// in [`list_partition_files`] order, records in file order; damage in
+/// any format (torn tails, mid-file corruption, short files) degrades
+/// to logged warnings keeping everything before it. Each record streams
+/// to `sink` as `(encoded record, on-disk bytes)` — JSONL line +
+/// newline, v1 record + CRC trailer, or an amortized share of a packed
+/// v2 segment — and v1 segment files are read in bounded [`SCAN_CHUNK`]
+/// windows, so recovery memory never scales with partition size.
 ///
 /// With `repair` set (the provDB recovery path — the caller owns the
-/// directory), damaged segment files are made safe to append to again:
-/// a torn tail is truncated to the last clean record boundary (0 when
-/// even the 6-byte file header was torn), and a corrupted segment is
-/// sidelined to `*.provseg.corrupt` (preserved for offline salvage)
-/// while its clean prefix is rewritten in place. Without this, records
-/// appended after a crash would sit behind the damage and be dropped at
-/// the *next* restart. The offline loader passes `false` (read-only).
+/// directory), damaged files are made safe to append to again: a torn
+/// tail is truncated to the last clean record boundary (0 when even the
+/// 6-byte file header was torn), and a corrupted file is sidelined to
+/// `*.corrupt` (preserved for offline salvage) while its clean prefix
+/// is kept in place — damaged *v2* segments are rewritten as v1 row
+/// files so the salvaged records re-home as appendable hot data.
+/// Without this, records appended after a crash would sit behind the
+/// damage and be dropped at the *next* restart. The offline loader
+/// passes `false` (read-only).
 pub(crate) fn scan_log_dir(
     dir: &Path,
     repair: bool,
     sink: &mut dyn FnMut(Vec<u8>, u64) -> Result<()>,
 ) -> Result<()> {
-    let entries = std::fs::read_dir(dir)
-        .with_context(|| format!("reading provenance dir {}", dir.display()))?;
-    let mut paths: Vec<PathBuf> = entries
-        .filter_map(|e| e.ok())
-        .map(|e| e.path())
-        .filter(|p| {
-            p.file_name()
-                .and_then(|n| n.to_str())
-                .map(|n| {
-                    n.starts_with("prov_") && (n.ends_with(".jsonl") || n.ends_with(".provseg"))
-                })
-                .unwrap_or(false)
-        })
-        .collect();
-    paths.sort();
-    for path in paths {
-        if path.extension().and_then(|e| e.to_str()) == Some("provseg") {
-            scan_segment_file(&path, repair, sink)?;
+    for f in list_partition_files(dir)? {
+        if f.jsonl {
+            scan_jsonl_file(&f.path, repair, sink)?;
         } else {
-            scan_jsonl_file(&path, repair, sink)?;
+            scan_segment_file(&f.path, repair, sink)?;
         }
     }
     Ok(())
 }
 
-fn scan_segment_file(
+/// Bytes per refill of the streaming v1 segment scanner — the bound on
+/// recovery's working set per file (plus one record, max ~1 MiB).
+pub(crate) const SCAN_CHUNK: usize = 256 << 10;
+
+/// Scan one `.provseg` file (either codec version), streaming records to
+/// `sink`. v1 row files are read incrementally in [`SCAN_CHUNK`] windows
+/// rather than one `std::fs::read`; sealed v2 files are bounded by the
+/// `segment_records` knob, so a whole-image read is already bounded.
+pub(crate) fn scan_segment_file(
     path: &Path,
     repair: bool,
     sink: &mut dyn FnMut(Vec<u8>, u64) -> Result<()>,
 ) -> Result<()> {
-    let bytes = std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
-    let scan = super::codec::read_segment(&bytes)
-        .with_context(|| format!("reading segment {}", path.display()))?;
-    if let Some(why) = &scan.corrupt {
+    use std::io::Read;
+    let mut f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let file_len = f.metadata()?.len();
+    let mut header = [0u8; super::codec::SEG_HEADER_LEN];
+    let mut got = 0usize;
+    while got < header.len() {
+        match f.read(&mut header[got..])? {
+            0 => break,
+            n => got += n,
+        }
+    }
+    if got < super::codec::SEG_HEADER_LEN {
+        // A crash between file creation and the first header flush
+        // leaves a short/empty file — a torn tail, not foreign data.
+        if got > 0 {
+            crate::log_warn!(
+                "prov",
+                "{}: dropping {got} torn trailing bytes (crash mid-append)",
+                path.display()
+            );
+            if repair {
+                truncate_to(path, 0);
+            }
+        }
+        return Ok(());
+    }
+    let magic = u32::from_le_bytes(header[..4].try_into().unwrap());
+    anyhow::ensure!(
+        magic == super::codec::SEG_MAGIC,
+        "reading segment {}: bad segment magic {magic:#010x}",
+        path.display()
+    );
+    let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    match version {
+        super::codec::CODEC_VERSION => scan_v1_segment(f, path, file_len, repair, sink),
+        super::codec::CODEC_VERSION_V2 => scan_v2_segment(path, repair, sink),
+        v => anyhow::bail!(
+            "reading segment {}: unsupported segment codec version {v}",
+            path.display()
+        ),
+    }
+}
+
+fn truncate_to(path: &Path, valid: u64) {
+    let res = File::options().write(true).open(path).and_then(|f| f.set_len(valid));
+    match res {
+        Ok(()) => crate::log_warn!(
+            "prov",
+            "{}: truncated to {valid} bytes (last clean record boundary)",
+            path.display()
+        ),
+        Err(e) => crate::log_warn!(
+            "prov",
+            "{}: could not truncate damaged segment: {e}",
+            path.display()
+        ),
+    }
+}
+
+/// Incremental scan of a v1 row segment: refill a bounded window, parse
+/// complete `record + crc` units off its head, repeat. Never holds more
+/// than [`SCAN_CHUNK`] + one record of the file in memory.
+fn scan_v1_segment(
+    mut f: File,
+    path: &Path,
+    file_len: u64,
+    repair: bool,
+    sink: &mut dyn FnMut(Vec<u8>, u64) -> Result<()>,
+) -> Result<()> {
+    use std::io::Read;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut start = 0usize; // parse offset into `buf`
+    let mut consumed = super::codec::SEG_HEADER_LEN as u64; // clean boundary in the file
+    let mut n_records = 0usize;
+    let mut eof = false;
+    let mut corrupt: Option<String> = None;
+    loop {
+        match super::codec::parse_segment_record(&buf[start..]) {
+            super::codec::SegRecordParse::Record { total } => {
+                sink(buf[start..start + total - 4].to_vec(), total as u64)?;
+                start += total;
+                consumed += total as u64;
+                n_records += 1;
+            }
+            super::codec::SegRecordParse::NeedMore => {
+                if eof {
+                    break;
+                }
+                if start > 0 {
+                    buf.drain(..start);
+                    start = 0;
+                }
+                let got = f.by_ref().take(SCAN_CHUNK as u64).read_to_end(&mut buf)?;
+                if got == 0 {
+                    eof = true;
+                }
+            }
+            super::codec::SegRecordParse::Corrupt(e) => {
+                corrupt = Some(format!("{e} at byte {consumed}"));
+                break;
+            }
+        }
+    }
+    let torn = file_len.saturating_sub(consumed);
+    if let Some(why) = &corrupt {
         crate::log_warn!(
             "prov",
             "{}: {} — keeping {} records before the damage",
             path.display(),
             why,
-            scan.records.len()
+            n_records
         );
-    } else if scan.torn_bytes > 0 {
+    } else if torn > 0 {
         crate::log_warn!(
             "prov",
-            "{}: dropping {} torn trailing bytes (crash mid-append)",
-            path.display(),
-            scan.torn_bytes
+            "{}: dropping {torn} torn trailing bytes (crash mid-append)",
+            path.display()
         );
     }
-    if repair && scan.torn_bytes > 0 {
-        if scan.corrupt.is_some() {
+    if repair && torn > 0 {
+        if corrupt.is_some() {
             // Corruption (CRC/structure failure mid-file) may hide
             // salvageable records past the damage: preserve the whole
-            // file as *.corrupt, then atomically replace the live
-            // segment with its clean prefix so appends resume at a
-            // valid boundary. fs::copy (not rename) for the sideline —
-            // the live path must never be missing if we crash here.
+            // file as *.corrupt, then cut the live segment back to its
+            // clean prefix so appends resume at a valid boundary.
+            // fs::copy (not rename) for the sideline — the live path
+            // must never be missing if we crash here.
             let sidelined = path.with_extension("provseg.corrupt");
-            let tmp = path.with_extension("tmp");
-            let mut clean: Vec<u8> = super::codec::seg_file_header().to_vec();
-            for buf in &scan.records {
-                clean.extend_from_slice(buf);
-                clean.extend_from_slice(&super::codec::crc32(buf).to_le_bytes());
-            }
-            let res = std::fs::copy(path, &sidelined)
-                .and_then(|_| std::fs::write(&tmp, &clean))
-                .and_then(|()| std::fs::rename(&tmp, path));
+            let res = std::fs::copy(path, &sidelined).and_then(|_| {
+                File::options().write(true).open(path).and_then(|g| g.set_len(consumed))
+            });
             match res {
                 Ok(()) => crate::log_warn!(
                     "prov",
                     "{}: damaged segment sidelined to {} and clean prefix \
-                     ({} records) rewritten",
+                     ({} records) kept",
                     path.display(),
                     sidelined.display(),
-                    scan.records.len()
+                    n_records
                 ),
                 Err(e) => crate::log_warn!(
                     "prov",
@@ -350,34 +512,85 @@ fn scan_segment_file(
             }
         } else {
             // Pure torn tail: truncate to the last clean record boundary
-            // (0 when even the file header was torn — the next append
-            // then rewrites it), so post-crash appends don't land behind
-            // the tear and vanish at the next restart.
-            let valid = (bytes.len() - scan.torn_bytes) as u64;
-            let res =
-                File::options().write(true).open(path).and_then(|f| f.set_len(valid));
+            // so post-crash appends don't land behind the tear and
+            // vanish at the next restart.
+            truncate_to(path, consumed);
+        }
+    }
+    Ok(())
+}
+
+/// Scan a sealed v2 segment: decode the columns, re-encode each record
+/// into the row codec for the sink. A damaged file (torn tail, body CRC
+/// failure) degrades to its salvageable prefix; with `repair` the
+/// original is sidelined and the prefix rewritten as a v1 row file, so
+/// the records re-home as appendable hot data and reseal at the next
+/// flush.
+fn scan_v2_segment(
+    path: &Path,
+    repair: bool,
+    sink: &mut dyn FnMut(Vec<u8>, u64) -> Result<()>,
+) -> Result<()> {
+    let bytes = std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+    let scan = super::codec::read_segment_v2(&bytes)
+        .with_context(|| format!("reading segment {}", path.display()))?;
+    let n = scan.records.len();
+    let mut encoded: Vec<Vec<u8>> = Vec::with_capacity(n);
+    for (_, rec) in &scan.records {
+        let mut b = Vec::with_capacity(192);
+        super::codec::encode(rec, &mut b);
+        encoded.push(b);
+    }
+    if !scan.complete {
+        let why = scan.corrupt.as_deref().unwrap_or("torn tail");
+        crate::log_warn!(
+            "prov",
+            "{}: damaged v2 segment ({why}) — keeping {n} records before the damage",
+            path.display()
+        );
+        if repair {
+            let sidelined = path.with_extension("provseg.corrupt");
+            let tmp = path.with_extension("tmp");
+            let mut clean: Vec<u8> = super::codec::seg_file_header().to_vec();
+            for b in &encoded {
+                clean.extend_from_slice(b);
+                clean.extend_from_slice(&super::codec::crc32(b).to_le_bytes());
+            }
+            let res = std::fs::copy(path, &sidelined)
+                .and_then(|_| std::fs::write(&tmp, &clean))
+                .and_then(|()| std::fs::rename(&tmp, path));
             match res {
                 Ok(()) => crate::log_warn!(
                     "prov",
-                    "{}: truncated to {valid} bytes (last clean record boundary)",
-                    path.display()
+                    "{}: damaged v2 segment sidelined to {} and salvaged prefix \
+                     ({n} records) rewritten as a v1 row file",
+                    path.display(),
+                    sidelined.display()
                 ),
                 Err(e) => crate::log_warn!(
                     "prov",
-                    "{}: could not truncate damaged segment: {e}",
+                    "{}: could not sideline damaged v2 segment: {e}",
                     path.display()
                 ),
             }
         }
     }
-    for buf in scan.records {
-        let disk = buf.len() as u64 + 4; // + CRC trailer
-        sink(buf, disk)?;
+    let flen = bytes.len() as u64;
+    for (i, b) in encoded.into_iter().enumerate() {
+        // Price records at what the disk actually holds: an amortized
+        // share of the packed file (shares sum exactly to the file
+        // size), or the v1 row cost once a damaged file was rewritten.
+        let disk = if scan.complete {
+            flen * (i as u64 + 1) / n as u64 - flen * i as u64 / n as u64
+        } else {
+            b.len() as u64 + 4
+        };
+        sink(b, disk)?;
     }
     Ok(())
 }
 
-fn scan_jsonl_file(
+pub(crate) fn scan_jsonl_file(
     path: &Path,
     repair: bool,
     sink: &mut dyn FnMut(Vec<u8>, u64) -> Result<()>,
@@ -805,5 +1018,54 @@ mod tests {
         assert_eq!(d.to_json().to_string(), "{}");
         let back = ProvQuery::from_json(&parse("{}").unwrap()).unwrap();
         assert!(back.rank.is_none() && !back.anomalies_only && back.limit.is_none());
+    }
+
+    #[test]
+    fn partition_file_names_parse_and_order_numerically() {
+        assert_eq!(parse_part_name("prov_app0_rank12.jsonl"), Some((0, 12, None, true)));
+        assert_eq!(parse_part_name("prov_app3_rank2.provseg"), Some((3, 2, None, false)));
+        assert_eq!(
+            parse_part_name("prov_app1_rank10_seg0042.provseg"),
+            Some((1, 10, Some(42), false))
+        );
+        assert_eq!(parse_part_name("prov_weird.provseg"), None);
+        assert_eq!(parse_part_name("prov_app1_rankx.provseg"), None);
+        assert_eq!(parse_part_name("metadata.json"), None);
+
+        let dir = tmpdir("order");
+        std::fs::create_dir_all(&dir).unwrap();
+        // Created shuffled; replay order must be numeric by (app, rank),
+        // jsonl → legacy → seg<K> within a partition, misfits last.
+        let names = [
+            "prov_app0_rank10.provseg",
+            "prov_app0_rank2_seg0001.provseg",
+            "prov_app0_rank2_seg0000.provseg",
+            "prov_misc.jsonl",
+            "prov_app0_rank2.jsonl",
+            "prov_app1_rank0.provseg",
+            "prov_app0_rank2.provseg",
+            "metadata.json",
+        ];
+        for n in names {
+            std::fs::write(dir.join(n), b"").unwrap();
+        }
+        let got: Vec<String> = list_partition_files(&dir)
+            .unwrap()
+            .iter()
+            .map(|f| f.path.file_name().unwrap().to_str().unwrap().to_string())
+            .collect();
+        assert_eq!(
+            got,
+            [
+                "prov_app0_rank2.jsonl",
+                "prov_app0_rank2.provseg",
+                "prov_app0_rank2_seg0000.provseg",
+                "prov_app0_rank2_seg0001.provseg",
+                "prov_app0_rank10.provseg",
+                "prov_app1_rank0.provseg",
+                "prov_misc.jsonl",
+            ]
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

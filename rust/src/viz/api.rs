@@ -181,9 +181,9 @@ pub fn ps_stats(state: &VizState) -> Json {
 
 /// `/api/stats` — run-level counters.
 pub fn stats(state: &VizState) -> Json {
-    // One backend round-trip for both provenance counters (a remote
-    // source would otherwise pay two shard fan-outs per request).
-    let (prov_records, prov_bytes) = state.db.counters();
+    // One backend round-trip for every provenance counter (a remote
+    // source would otherwise pay one shard fan-out per counter).
+    let prov = state.db.counters();
     Json::obj(vec![
         ("version", Json::str(crate::VERSION)),
         ("total_anomalies", Json::num(state.latest.total_anomalies as f64)),
@@ -191,8 +191,11 @@ pub fn stats(state: &VizState) -> Json {
         ("functions_tracked", Json::num(state.latest.functions_tracked as f64)),
         ("ranks", Json::num(state.latest.ranks.len() as f64)),
         ("timeline_points", Json::num(state.timeline.len() as f64)),
-        ("prov_records", Json::num(prov_records as f64)),
-        ("prov_bytes", Json::num(prov_bytes as f64)),
+        ("prov_records", Json::num(prov.records as f64)),
+        ("prov_bytes", Json::num(prov.bytes as f64)),
+        ("prov_segments", Json::num(prov.segments_total as f64)),
+        ("prov_segments_skipped", Json::num(prov.segments_skipped as f64)),
+        ("prov_zone_map_bytes", Json::num(prov.zone_map_bytes as f64)),
     ])
 }
 

@@ -119,14 +119,25 @@ impl ProvSource {
         self.len() == 0
     }
 
-    /// `(record count, reduced-output bytes)` in a single backend
-    /// round-trip — `/api/stats` needs both on every request.
-    pub fn counters(&self) -> (usize, u64) {
+    /// Everything `/api/stats` reads, in a single backend round-trip (a
+    /// remote source would otherwise pay one shard fan-out per counter).
+    /// A local index has no warm tier — its segment counters are zero.
+    pub fn counters(&self) -> ProvCounters {
         match self {
-            ProvSource::Local { db, .. } => (db.len(), db.bytes_written()),
+            ProvSource::Local { db, .. } => ProvCounters {
+                records: db.len(),
+                bytes: db.bytes_written(),
+                ..ProvCounters::default()
+            },
             ProvSource::Remote { client } => Self::with_remote(client, |c| c.stats())
-                .map(|s| (s.records as usize, s.log_bytes))
-                .unwrap_or((0, 0)),
+                .map(|s| ProvCounters {
+                    records: s.records as usize,
+                    bytes: s.log_bytes,
+                    segments_total: s.segments_total,
+                    segments_skipped: s.segments_skipped,
+                    zone_map_bytes: s.zone_map_bytes,
+                })
+                .unwrap_or_default(),
         }
     }
 
@@ -159,6 +170,23 @@ impl ProvSource {
             }
         }
     }
+}
+
+/// Provenance-store counters for `/api/stats`, whatever the source.
+/// The segment fields describe the provDB warm tier (sealed columnar
+/// segments + zone-map pruning); they stay zero for a local index.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProvCounters {
+    /// Retained records.
+    pub records: usize,
+    /// Reduced-output bytes (remote: total log bytes).
+    pub bytes: u64,
+    /// Sealed warm segments currently adopted.
+    pub segments_total: u64,
+    /// Segments pruned by zone map across all queries so far.
+    pub segments_skipped: u64,
+    /// Bytes of resident zone-map footers.
+    pub zone_map_bytes: u64,
 }
 
 /// Statistic selector for the ranking dashboard (paper Fig 3 offers

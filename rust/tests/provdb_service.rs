@@ -427,7 +427,8 @@ fn retention_bounds_a_driver_run() {
     // Tight retention: the service stays bounded while the run's full
     // kept count keeps flowing through the log accounting.
     let (store, handle) =
-        spawn_store(None, 2, Retention { max_records_per_rank: 10 }).unwrap();
+        spawn_store(None, 2, Retention { max_records_per_rank: 10, ..Default::default() })
+            .unwrap();
     let srv = ProvDbTcpServer::start("127.0.0.1:0", store.clone()).unwrap();
     let cfg = Config {
         ranks: 6,
