@@ -130,8 +130,46 @@ fn main() {
         cn_last.shed,
     );
 
+    // --- PS aggregation-tree sweep: step-report fold, flat vs tree --------
+    // The acceptance shape: flat fold throughput bends as one thread
+    // drains every rank's reports; the tree stays ~flat, and both
+    // shapes flag the same global events (bit-equivalence).
+    let at_ranks: Vec<usize> =
+        if fast { vec![256, 1_024, 4_096] } else { vec![1_024, 4_096, 16_384, 65_536] };
+    let (at_steps, at_fanout, at_producers) = if fast { (12, 4, 4) } else { (32, 8, 8) };
+    println!(
+        "\nPS aggregation-tree sweep: ranks {:?}, {} steps, fanout {} tree vs flat, {} producers\n",
+        at_ranks, at_steps, at_fanout, at_producers
+    );
+    let aggtree = chimbuko::exp::run_aggtree_sweep(&at_ranks, at_steps, at_fanout, at_producers, 7)
+        .expect("aggtree sweep");
+    print!("{}", aggtree.render());
+    let at_pairs: Vec<_> = aggtree.rows.chunks(2).collect();
+    let (f_first, t_first) = (&at_pairs[0][0], &at_pairs[0][1]);
+    let last = at_pairs.last().unwrap();
+    let (f_last, t_last) = (&last[0], &last[1]);
+    println!(
+        "shape check: flat reports/s {} → {} ranks: {:.0} → {:.0}; \
+         tree (fanout {}, depth {}): {:.0} → {:.0}; \
+         events flat/tree at {} ranks: {}/{} (must match)",
+        f_first.ranks,
+        f_last.ranks,
+        f_first.reports_per_sec,
+        f_last.reports_per_sec,
+        t_last.fanout,
+        t_last.depth,
+        t_first.reports_per_sec,
+        t_last.reports_per_sec,
+        f_last.ranks,
+        f_last.events,
+        t_last.events,
+    );
+
     let out = "BENCH_ps_shards.json";
-    std::fs::write(out, chimbuko::exp::ps_bench_json(&sweep, &eps, &reb, &conns).to_pretty())
-        .expect("writing BENCH_ps_shards.json");
+    std::fs::write(
+        out,
+        chimbuko::exp::ps_bench_json(&sweep, &eps, &reb, &conns, &aggtree).to_pretty(),
+    )
+    .expect("writing BENCH_ps_shards.json");
     println!("wrote {out}");
 }

@@ -1,0 +1,1345 @@
+//! **Hierarchical aggregation tree** — the aggregator, spread out.
+//!
+//! After the stat plane was sharded (PR 1/3/4) and the transport became
+//! a reactor (PR 6), the aggregator remained one thread in one process:
+//! every `Report` from every rank funnelled through it, so at O(100k)
+//! ranks it is the last single point in the PS constellation. This
+//! module replaces it with a **tree of aggregator nodes** of fanout `F`:
+//!
+//! * **Leaves** own contiguous rank-ranges of the step timeline. Each
+//!   folds its ranks' [`StepStat`] reports into per-rank summaries and a
+//!   range-local step quorum; when every rank in the range has reported
+//!   a step, the leaf pushes one [`PartialStep`] — `(step, count,
+//!   anoms)` — to its parent. O(ranks) report traffic becomes
+//!   O(ranks / F) partial traffic at the first fold.
+//! * **Interior nodes** fold child partials (the commutative
+//!   [`VizSnapshot::merge`] is the snapshot fold; [`StepFold`] is the
+//!   quorum fold) and push range partials upward the same way.
+//! * **The root** embeds the classic [`ParameterServer`] fed through
+//!   [`ParameterServer::fold_partial_step`]: it alone runs the §V
+//!   global-event trigger, owns the monotonic event version, and owns
+//!   the per-rank delivery cursors — so the exactly-once, *next-sync*
+//!   event-delivery invariant of the event-fetch gating protocol is
+//!   preserved verbatim (fetches ride the same FIFO edges as reports,
+//!   so a rank's fetch can never overtake its own report).
+//!
+//! The flat aggregator is the degenerate `F = ∞, depth = 1` case and
+//! remains the code path when `ps.agg_fanout` is 0 (default) or the
+//! rank count fits one node; `tests/aggtree.rs` pins the tree
+//! **bit-equivalent** to it — published snapshots, global events, and
+//! delivery order — for fanouts {2, 4} and depths {2, 3}.
+//!
+//! ## Deterministic publishes: the flush barrier
+//!
+//! The flat aggregator publishes inline with the report that completes
+//! the cadence, so its deltas partition the input stream exactly. The
+//! tree reproduces that boundary with **generation-stamped flush
+//! barriers**: the ingress router broadcasts `Flush{gen}` down every
+//! node's FIFO edge at the cadence point; a node completes generation
+//! `g` once it has its own marker and a `FlushUp{g}` from every
+//! in-process child, then folds the child deltas in child order and
+//! forwards one combined delta up. Two rules make the boundary exact
+//! while the subtrees drain at different speeds:
+//!
+//! 1. a node holding an incomplete generation *defers* any
+//!    ingress-originated message that arrived after its own marker;
+//! 2. it *stashes* messages from any child that has already flushed the
+//!    oldest incomplete generation (per-child FIFO preserved, replayed
+//!    on completion).
+//!
+//! Both queues drain the moment the generation completes, so the only
+//! cost is latency bounded by the slowest subtree.
+//!
+//! ## Remote nodes
+//!
+//! A leaf may run as a separate `chimbuko agg-node` process behind the
+//! reactor (`serve_frames`) substrate; its parent owns the connection
+//! and *escorts* each report and fetch through a request/reply
+//! round-trip (kinds 13–16 in [`net`]), which keeps the report→fetch
+//! serialization without server push. See `docs/aggtree.md`.
+
+pub mod net;
+
+use crate::ps::{
+    AggNodeLoad, GlobalEvent, ParameterServer, PsRequest, RankSummary, StepStat, VizSnapshot,
+    STEP_ACC_MAX_LAG,
+};
+use crate::stats::RunStats;
+use anyhow::Result;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+/// A range quorum contribution travelling up the tree: `count` rank
+/// reports for `step` totalling `anoms` anomalies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct PartialStep {
+    pub step: u64,
+    pub count: u64,
+    pub anoms: u64,
+}
+
+/// Tree topology derived from `(fanout, ranks)`: contiguous rank-ranges
+/// at the leaves, `fanout`-ary reduction above them, one root.
+#[derive(Clone, Debug)]
+pub struct TreeSpec {
+    pub fanout: usize,
+    pub ranks: usize,
+    /// Node count per level, leaves first; the last level is the root.
+    pub levels: Vec<usize>,
+}
+
+impl TreeSpec {
+    /// Plan a tree: `ceil(ranks / fanout)` leaves, then `fanout`-ary
+    /// reduction until one node remains. `fanout` is clamped to ≥ 2 and
+    /// `ranks` to ≥ 1.
+    pub fn plan(fanout: usize, ranks: usize) -> TreeSpec {
+        let fanout = fanout.max(2);
+        let ranks = ranks.max(1);
+        let mut levels = vec![ranks.div_ceil(fanout).max(1)];
+        while *levels.last().expect("non-empty levels") > 1 {
+            levels.push(levels.last().expect("non-empty levels").div_ceil(fanout));
+        }
+        TreeSpec { fanout, ranks, levels }
+    }
+
+    /// Levels in the tree (1 = a lone root that is also the only leaf —
+    /// the degenerate case callers route to the flat aggregator).
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn leaves(&self) -> usize {
+        self.levels[0]
+    }
+
+    /// Total node count, root included.
+    pub fn nodes(&self) -> usize {
+        self.levels.iter().sum()
+    }
+
+    fn rank_span(&self) -> usize {
+        self.ranks.div_ceil(self.leaves())
+    }
+
+    /// The leaf owning `rank` (out-of-range ranks clamp to the last
+    /// leaf, mirroring the flat aggregator's accept-anything behaviour).
+    pub fn leaf_of_rank(&self, rank: u32) -> usize {
+        ((rank as usize) / self.rank_span()).min(self.leaves() - 1)
+    }
+
+    /// Contiguous `[lo, hi)` rank-range of leaf `i`.
+    pub fn leaf_range(&self, i: usize) -> (u32, u32) {
+        let span = self.rank_span();
+        let lo = i * span;
+        let hi = ((i + 1) * span).min(self.ranks);
+        (lo as u32, hi as u32)
+    }
+
+    /// Tree-wide node id for the node at `(level, index)`: the root is
+    /// 0, then nodes are numbered level by level toward the leaves.
+    pub fn node_id(&self, level: usize, index: usize) -> u32 {
+        let above: usize = self.levels[level + 1..].iter().sum();
+        (above + index) as u32
+    }
+
+    /// Distance from the root (root = 0).
+    pub fn node_depth(&self, level: usize) -> u32 {
+        (self.levels.len() - 1 - level) as u32
+    }
+
+    /// Leaf-index range `[lo, hi)` covered by node `(level, index)`.
+    fn leaf_span(&self, level: usize, index: usize) -> (usize, usize) {
+        let mut lo = index;
+        let mut hi = index + 1;
+        for _ in 0..level {
+            lo = lo.saturating_mul(self.fanout);
+            hi = hi.saturating_mul(self.fanout);
+        }
+        (lo.min(self.leaves()), hi.min(self.leaves()))
+    }
+
+    /// Contiguous rank-range `[lo, hi)` owned by node `(level, index)`.
+    pub fn node_range(&self, level: usize, index: usize) -> (u32, u32) {
+        let (llo, lhi) = self.leaf_span(level, index);
+        (self.leaf_range(llo).0, self.leaf_range(lhi - 1).1)
+    }
+
+    /// Child count of node `(level, index)` (level ≥ 1).
+    fn child_count(&self, level: usize, index: usize) -> usize {
+        let below = self.levels[level - 1];
+        (below - index * self.fanout).min(self.fanout)
+    }
+}
+
+/// What a flush generation does once the barrier completes.
+pub(crate) enum FlushKind {
+    /// Fold and forward a delta; the root sends it to the merge stage.
+    Publish,
+    /// Fold absolute snapshots; the root answers the sender.
+    Query(Sender<VizSnapshot>),
+    /// Final publish + absolute fold; every node exits after acting.
+    Shutdown,
+    /// Like `Shutdown` but without the final publish — the ingress
+    /// channel disconnected without a `Shutdown` request, and the flat
+    /// aggregator does not publish on that path either.
+    Halt,
+}
+
+impl FlushKind {
+    fn clone_for_broadcast(&self) -> FlushKind {
+        match self {
+            FlushKind::Publish => FlushKind::Publish,
+            FlushKind::Query(tx) => FlushKind::Query(tx.clone()),
+            FlushKind::Shutdown => FlushKind::Shutdown,
+            FlushKind::Halt => FlushKind::Halt,
+        }
+    }
+
+    fn exits(&self) -> bool {
+        matches!(self, FlushKind::Shutdown | FlushKind::Halt)
+    }
+}
+
+/// Messages on the tree's channel edges.
+pub(crate) enum TreeMsg {
+    /// Ingress → leaf: one rank's report.
+    Report(StepStat),
+    /// Ingress → leaf: the event-fetch leg of a sync. Forwarded up the
+    /// leaf's path so it serializes behind the rank's earlier reports.
+    Fetch {
+        app: u32,
+        rank: u32,
+        delta: Vec<(u32, RunStats)>,
+        reply: Sender<crate::ps::PsReply>,
+    },
+    /// Ingress → parent of a *remote* leaf: escort the report through
+    /// the child's wire (request/reply keeps the FIFO invariant).
+    RemoteReport { child: usize, stat: StepStat },
+    /// Ingress → parent of a remote leaf: escort the fetch through the
+    /// child's wire, then forward it up toward the root's cursors.
+    RemoteFetch {
+        child: usize,
+        app: u32,
+        rank: u32,
+        delta: Vec<(u32, RunStats)>,
+        reply: Sender<crate::ps::PsReply>,
+    },
+    /// Child → parent: a completed (or expired) range quorum.
+    Partial { from: usize, p: PartialStep },
+    /// Child → parent: a fetch climbing toward the root.
+    UpFetch {
+        from: usize,
+        app: u32,
+        rank: u32,
+        delta: Vec<(u32, RunStats)>,
+        reply: Sender<crate::ps::PsReply>,
+    },
+    /// Ingress → every node: flush-barrier marker for generation `gen`.
+    Flush { gen: u64, kind: FlushKind },
+    /// Child → parent: the child's folded contribution to generation
+    /// `gen` (`fin` = absolute final snapshot, Shutdown/Halt only).
+    FlushUp { from: usize, gen: u64, delta: VizSnapshot, fin: Option<VizSnapshot> },
+}
+
+/// Range-local step-quorum fold shared by leaves and interior nodes:
+/// the counterpart of the flat aggregator's `step_acc` map, completing
+/// at `width` (the ranks in this node's range) instead of the global
+/// quorum, with the same step-distance expiry.
+pub(crate) struct StepFold {
+    width: u64,
+    acc: HashMap<u64, (u64, u64)>,
+    max_step_seen: u64,
+    /// Completed quorums pushed to the parent.
+    pushed: u64,
+    /// Expired accumulators + straggler contributions short-circuited.
+    shed: u64,
+}
+
+impl StepFold {
+    pub(crate) fn new(width: u64) -> StepFold {
+        StepFold {
+            width: width.max(1),
+            acc: HashMap::new(),
+            max_step_seen: 0,
+            pushed: 0,
+            shed: 0,
+        }
+    }
+
+    /// Fold one contribution; completed and expired quorums are appended
+    /// to `out` (expired ones carry their partial count, so the root's
+    /// accounting still sees them).
+    pub(crate) fn fold(&mut self, p: PartialStep, out: &mut Vec<PartialStep>) {
+        if p.step > self.max_step_seen {
+            self.max_step_seen = p.step;
+            self.expire(out);
+        }
+        if p.step < self.max_step_seen.saturating_sub(STEP_ACC_MAX_LAG) {
+            // Straggler past the expiry horizon: forward it as its own
+            // partial (the root short-circuits it the same way the flat
+            // aggregator short-circuits straggler reports).
+            self.shed += 1;
+            out.push(p);
+            return;
+        }
+        let e = self.acc.entry(p.step).or_insert((0, 0));
+        e.0 += p.count;
+        e.1 += p.anoms;
+        if e.0 >= self.width {
+            let (count, anoms) = self.acc.remove(&p.step).expect("entry just updated");
+            self.pushed += 1;
+            out.push(PartialStep { step: p.step, count, anoms });
+        }
+    }
+
+    fn expire(&mut self, out: &mut Vec<PartialStep>) {
+        let horizon = self.max_step_seen.saturating_sub(STEP_ACC_MAX_LAG);
+        if horizon == 0 {
+            return;
+        }
+        let mut stale: Vec<u64> = self.acc.keys().filter(|&&s| s < horizon).copied().collect();
+        stale.sort_unstable();
+        for s in stale {
+            if let Some((count, anoms)) = self.acc.remove(&s) {
+                self.shed += 1;
+                out.push(PartialStep { step: s, count, anoms });
+            }
+        }
+    }
+}
+
+/// A leaf's rank-plane state: per-rank summaries, fresh step list, and
+/// the range quorum — everything the flat aggregator keys by rank,
+/// minus events and cursors (the root owns those). Also the state
+/// behind a remote `agg-node` process ([`net::AggNodeServer`]).
+pub(crate) struct LeafState {
+    node: u32,
+    depth: u32,
+    lo: u32,
+    hi: u32,
+    per_rank: HashMap<(u32, u32), (RunStats, u64)>,
+    dirty: HashSet<(u32, u32)>,
+    fresh: Vec<StepStat>,
+    total_anomalies: u64,
+    total_executions: u64,
+    fold: StepFold,
+    folds: u64,
+}
+
+impl LeafState {
+    pub(crate) fn new(node: u32, depth: u32, lo: u32, hi: u32) -> LeafState {
+        LeafState {
+            node,
+            depth,
+            lo,
+            hi,
+            per_rank: HashMap::new(),
+            dirty: HashSet::new(),
+            fresh: Vec::new(),
+            total_anomalies: 0,
+            total_executions: 0,
+            fold: StepFold::new((hi.saturating_sub(lo)) as u64),
+            folds: 0,
+        }
+    }
+
+    /// Fold one rank report; completed range quorums land in `out`.
+    /// Mirrors the flat `Report` path field for field (minus the global
+    /// trigger, which runs at the root).
+    pub(crate) fn report(&mut self, stat: StepStat, out: &mut Vec<PartialStep>) {
+        self.folds += 1;
+        self.dirty.insert((stat.app, stat.rank));
+        let acc = self
+            .per_rank
+            .entry((stat.app, stat.rank))
+            .or_insert_with(|| (RunStats::new(), 0));
+        acc.0.push(stat.n_anomalies as f64);
+        acc.1 += stat.n_anomalies;
+        self.total_anomalies += stat.n_anomalies;
+        self.total_executions += stat.n_executions;
+        self.fold.fold(
+            PartialStep { step: stat.step, count: 1, anoms: stat.n_anomalies },
+            out,
+        );
+        self.fresh.push(stat);
+    }
+
+    pub(crate) fn load(&self) -> AggNodeLoad {
+        AggNodeLoad {
+            node: self.node,
+            depth: self.depth,
+            rank_lo: self.lo,
+            rank_hi: self.hi,
+            folds: self.folds,
+            pushed: self.fold.pushed,
+            shed: self.fold.shed,
+        }
+    }
+
+    fn ranks_sorted(&self, keys: impl Iterator<Item = (u32, u32)>) -> Vec<RankSummary> {
+        let mut ranks: Vec<RankSummary> = keys
+            .filter_map(|(app, rank)| {
+                self.per_rank.get(&(app, rank)).map(|(step_counts, total)| RankSummary {
+                    app,
+                    rank,
+                    step_counts: *step_counts,
+                    total_anomalies: *total,
+                })
+            })
+            .collect();
+        ranks.sort_by_key(|r| (r.app, r.rank));
+        ranks
+    }
+
+    /// Drain this leaf's delta contribution (the counterpart of
+    /// [`ParameterServer::take_delta`]).
+    pub(crate) fn delta(&mut self) -> VizSnapshot {
+        let ranks = self.ranks_sorted(self.dirty.iter().copied());
+        self.dirty.clear();
+        VizSnapshot {
+            ranks,
+            fresh_steps: std::mem::take(&mut self.fresh),
+            total_anomalies: self.total_anomalies,
+            total_executions: self.total_executions,
+            functions_tracked: 0,
+            global_events: Vec::new(),
+            shard_loads: Vec::new(),
+            agg_nodes: vec![self.load()],
+            placement_epoch: 0,
+            delta: true,
+        }
+    }
+
+    /// Absolute (non-draining) snapshot contribution.
+    pub(crate) fn absolute(&self) -> VizSnapshot {
+        VizSnapshot {
+            ranks: self.ranks_sorted(self.per_rank.keys().copied()),
+            fresh_steps: self.fresh.clone(),
+            total_anomalies: self.total_anomalies,
+            total_executions: self.total_executions,
+            functions_tracked: 0,
+            global_events: Vec::new(),
+            shard_loads: Vec::new(),
+            agg_nodes: vec![self.load()],
+            placement_epoch: 0,
+            delta: false,
+        }
+    }
+}
+
+/// An edge to one child, as the parent sees it.
+enum ChildEdge {
+    /// In-process child; it pushes to us, we never push to it.
+    Local,
+    /// Remote `agg-node` leaf; we own the wire and escort everything.
+    Remote(crate::util::net::Reconnector<net::TreeWire>),
+}
+
+/// Barrier bookkeeping for one flush generation.
+struct PendingGen {
+    gen: u64,
+    kind: Option<FlushKind>,
+    deltas: Vec<Option<VizSnapshot>>,
+    fins: Vec<Option<VizSnapshot>>,
+    done: usize,
+}
+
+impl PendingGen {
+    fn new(gen: u64, n_children: usize) -> PendingGen {
+        PendingGen {
+            gen,
+            kind: None,
+            deltas: (0..n_children).map(|_| None).collect(),
+            fins: (0..n_children).map(|_| None).collect(),
+            done: 0,
+        }
+    }
+}
+
+/// Per-node event hook at the root: `(new_version, newly_flagged)` —
+/// the seam `ps::shard` uses for trigger probes and version pushes.
+pub type EventHook = Box<dyn FnMut(u64, &[GlobalEvent]) + Send>;
+
+enum Role {
+    Leaf(LeafState),
+    Fold {
+        fold: StepFold,
+        folds: u64,
+        meta: AggNodeLoad,
+    },
+    Root {
+        ps: ParameterServer,
+        job_tx: Sender<VizSnapshot>,
+        on_version: EventHook,
+        last_ver: u64,
+        folds: u64,
+        pushed: u64,
+        shed: u64,
+        meta: AggNodeLoad,
+    },
+}
+
+/// The final state a shut-down tree hands back to `PsHandle::join`.
+pub struct TreeFinal {
+    /// The root's embedded reference server (events, cursors, synced
+    /// global stats, sync counters).
+    pub root: ParameterServer,
+    /// Absolute fold of everything the root does not own: leaf rank
+    /// summaries, totals, leftover fresh steps, per-node load counters.
+    pub rest: VizSnapshot,
+}
+
+struct Node {
+    rx: Receiver<TreeMsg>,
+    parent: Option<Sender<TreeMsg>>,
+    index_in_parent: usize,
+    children: Vec<ChildEdge>,
+    role: Role,
+    pending: VecDeque<PendingGen>,
+    child_done: Vec<u64>,
+    stash: VecDeque<TreeMsg>,
+    scratch: Vec<PartialStep>,
+    fin: Option<TreeFinal>,
+    exiting: bool,
+}
+
+impl Node {
+    fn n_local_children(&self) -> usize {
+        self.children.iter().filter(|c| matches!(c, ChildEdge::Local)).count()
+    }
+
+    fn run(mut self) -> Option<TreeFinal> {
+        while !self.exiting {
+            let msg = match self.rx.recv() {
+                Ok(m) => m,
+                Err(_) => break,
+            };
+            self.on_msg(msg);
+        }
+        self.fin.take()
+    }
+
+    fn on_msg(&mut self, msg: TreeMsg) {
+        match msg {
+            TreeMsg::Flush { gen, kind } => {
+                self.pending_entry(gen).kind = Some(kind);
+                self.try_complete();
+            }
+            TreeMsg::FlushUp { from, gen, delta, fin } => {
+                let e = self.pending_entry(gen);
+                e.deltas[from] = Some(delta);
+                e.fins[from] = fin;
+                e.done += 1;
+                self.child_done[from] = gen;
+                self.try_complete();
+            }
+            other => self.dispatch(other),
+        }
+    }
+
+    /// Route a data message: stash it if the flush barrier says it
+    /// belongs to a later generation than the oldest incomplete one,
+    /// process it otherwise.
+    fn dispatch(&mut self, msg: TreeMsg) {
+        let stash_it = match &msg {
+            TreeMsg::Partial { from, .. } | TreeMsg::UpFetch { from, .. } => {
+                self.blocked_child(*from)
+            }
+            TreeMsg::Report(_)
+            | TreeMsg::Fetch { .. }
+            | TreeMsg::RemoteReport { .. }
+            | TreeMsg::RemoteFetch { .. } => self.blocked_ingress(),
+            TreeMsg::Flush { .. } | TreeMsg::FlushUp { .. } => false,
+        };
+        if stash_it {
+            self.stash.push_back(msg);
+        } else {
+            self.dispatch_data(msg);
+        }
+    }
+
+    /// Deferral rule 2: a child that has flushed the oldest incomplete
+    /// generation already — its further messages belong after it.
+    fn blocked_child(&self, from: usize) -> bool {
+        self.pending.front().is_some_and(|p| self.child_done[from] >= p.gen)
+    }
+
+    /// Deferral rule 1: our own marker for the oldest incomplete
+    /// generation has arrived — later ingress traffic belongs after it.
+    fn blocked_ingress(&self) -> bool {
+        self.pending.front().is_some_and(|p| p.kind.is_some())
+    }
+
+    fn pending_entry(&mut self, gen: u64) -> &mut PendingGen {
+        let pos = match self.pending.iter().position(|p| p.gen >= gen) {
+            Some(i) if self.pending[i].gen == gen => i,
+            Some(i) => {
+                let n = self.children.len();
+                self.pending.insert(i, PendingGen::new(gen, n));
+                i
+            }
+            None => {
+                let n = self.children.len();
+                self.pending.push_back(PendingGen::new(gen, n));
+                self.pending.len() - 1
+            }
+        };
+        &mut self.pending[pos]
+    }
+
+    fn try_complete(&mut self) {
+        loop {
+            let complete = match self.pending.front() {
+                Some(p) => p.kind.is_some() && p.done == self.n_local_children(),
+                None => return,
+            };
+            if !complete {
+                return;
+            }
+            let pg = self.pending.pop_front().expect("front just checked");
+            self.act(pg);
+            if self.exiting {
+                return;
+            }
+            // Replay deferred traffic against the new oldest generation
+            // (messages may re-stash; relative order is preserved).
+            let stashed: Vec<TreeMsg> = self.stash.drain(..).collect();
+            for m in stashed {
+                self.dispatch(m);
+            }
+        }
+    }
+
+    fn dispatch_data(&mut self, msg: TreeMsg) {
+        match msg {
+            TreeMsg::Report(stat) => {
+                if let Role::Leaf(state) = &mut self.role {
+                    self.scratch.clear();
+                    state.report(stat, &mut self.scratch);
+                    let out = std::mem::take(&mut self.scratch);
+                    for p in &out {
+                        self.send_partial_up(*p);
+                    }
+                    self.scratch = out;
+                } else {
+                    debug_assert!(false, "Report routed to a non-leaf node");
+                }
+            }
+            TreeMsg::Fetch { app, rank, delta, reply }
+            | TreeMsg::UpFetch { app, rank, delta, reply, .. } => {
+                self.up_fetch(app, rank, delta, reply);
+            }
+            TreeMsg::RemoteReport { child, stat } => {
+                let partials = self.escort(child, |w| w.report(&stat));
+                for p in partials {
+                    self.fold_partial(p);
+                }
+            }
+            TreeMsg::RemoteFetch { child, app, rank, delta, reply } => {
+                let partials = self.escort(child, |w| w.fetch(app, rank));
+                for p in partials {
+                    self.fold_partial(p);
+                }
+                self.up_fetch(app, rank, delta, reply);
+            }
+            TreeMsg::Partial { p, .. } => self.fold_partial(p),
+            TreeMsg::Flush { .. } | TreeMsg::FlushUp { .. } => unreachable!("barrier msg"),
+        }
+        self.check_version();
+    }
+
+    /// Run one escorted round-trip against remote child `child`; wire
+    /// failures degrade to a warning (that report/fetch window's
+    /// contribution is lost; the reconnector redials on the next use).
+    fn escort(
+        &mut self,
+        child: usize,
+        op: impl FnMut(&mut net::TreeWire) -> Result<Vec<PartialStep>>,
+    ) -> Vec<PartialStep> {
+        match &mut self.children[child] {
+            ChildEdge::Remote(rc) => match rc.with(op) {
+                Ok(ps) => ps,
+                Err(e) => {
+                    crate::log_warn!("aggtree", "remote agg-node escort failed: {e:#}");
+                    Vec::new()
+                }
+            },
+            ChildEdge::Local => {
+                debug_assert!(false, "escort to a local child");
+                Vec::new()
+            }
+        }
+    }
+
+    fn send_partial_up(&mut self, p: PartialStep) {
+        if let Some(parent) = &self.parent {
+            let _ = parent.send(TreeMsg::Partial { from: self.index_in_parent, p });
+        }
+    }
+
+    /// Fold a child partial: interiors accumulate toward their own range
+    /// quorum, the root feeds the reference server's global quorum.
+    fn fold_partial(&mut self, p: PartialStep) {
+        match &mut self.role {
+            Role::Fold { fold, folds, .. } => {
+                *folds += 1;
+                self.scratch.clear();
+                fold.fold(p, &mut self.scratch);
+                let out = std::mem::take(&mut self.scratch);
+                for c in &out {
+                    self.send_partial_up(*c);
+                }
+                self.scratch = out;
+            }
+            Role::Root { ps, folds, pushed, shed, .. } => {
+                *folds += 1;
+                match ps.fold_partial_step(p.step, p.count, p.anoms) {
+                    None => *shed += 1,
+                    Some(true) => *pushed += 1,
+                    Some(false) => {}
+                }
+            }
+            Role::Leaf(_) => debug_assert!(false, "Partial routed to a leaf"),
+        }
+    }
+
+    /// A fetch reaching the root resolves against the delivery cursors;
+    /// anywhere else it keeps climbing.
+    fn up_fetch(
+        &mut self,
+        app: u32,
+        rank: u32,
+        delta: Vec<(u32, RunStats)>,
+        reply: Sender<crate::ps::PsReply>,
+    ) {
+        match (&mut self.role, &self.parent) {
+            (Role::Root { ps, .. }, _) => {
+                ps.handle(PsRequest::Sync { app, rank, delta, reply });
+            }
+            (_, Some(parent)) => {
+                let _ = parent.send(TreeMsg::UpFetch {
+                    from: self.index_in_parent,
+                    app,
+                    rank,
+                    delta,
+                    reply,
+                });
+            }
+            (_, None) => debug_assert!(false, "non-root node without a parent"),
+        }
+    }
+
+    /// Root-only: fire the event hook when the version moved (the flat
+    /// aggregator loop's post-handle version block).
+    fn check_version(&mut self) {
+        if let Role::Root { ps, on_version, last_ver, .. } = &mut self.role {
+            let v = ps.event_version();
+            if v != *last_ver {
+                on_version(v, &ps.global_events()[*last_ver as usize..]);
+                *last_ver = v;
+            }
+        }
+    }
+
+    /// Barrier completion: flush remote children synchronously, fold
+    /// everything in child order, then forward up (or, at the root,
+    /// publish / answer / finalize).
+    fn act(&mut self, mut pg: PendingGen) {
+        let kind = pg.kind.take().expect("completed gen has a kind");
+        let mode = match kind {
+            FlushKind::Publish => net::FLUSH_DELTA,
+            FlushKind::Query(_) => net::FLUSH_ABSOLUTE,
+            FlushKind::Shutdown | FlushKind::Halt => net::FLUSH_FINAL,
+        };
+        for i in 0..self.children.len() {
+            if matches!(self.children[i], ChildEdge::Local) {
+                continue;
+            }
+            let flushed = match &mut self.children[i] {
+                ChildEdge::Remote(rc) => rc.with(|w| w.flush(mode)),
+                ChildEdge::Local => unreachable!("filtered above"),
+            };
+            match flushed {
+                Ok((partials, delta, fin)) => {
+                    for p in partials {
+                        self.fold_partial(p);
+                    }
+                    pg.deltas[i] = Some(delta);
+                    pg.fins[i] = fin;
+                }
+                Err(e) => {
+                    // Degrade like the merge stage does on a dead shard:
+                    // this flush proceeds without the subtree's
+                    // contribution; the next one redials.
+                    crate::log_warn!("aggtree", "remote agg-node flush failed: {e:#}");
+                }
+            }
+        }
+        self.check_version();
+        let fold_children = |pg: &mut PendingGen, into: &mut VizSnapshot, fins: bool| {
+            let slots = if fins { &mut pg.fins } else { &mut pg.deltas };
+            for slot in slots.iter_mut() {
+                if let Some(d) = slot.take() {
+                    into.merge(&d);
+                }
+            }
+        };
+        // Set in the Root arm; the shutdown epilogue runs after the
+        // role borrow ends (it moves the server out of `self.role`).
+        let mut root_load = None;
+        match &mut self.role {
+            Role::Leaf(state) => {
+                let (delta, fin) = match kind {
+                    FlushKind::Query(_) => (state.absolute(), None),
+                    FlushKind::Shutdown | FlushKind::Halt => {
+                        (state.delta(), Some(state.absolute()))
+                    }
+                    FlushKind::Publish => (state.delta(), None),
+                };
+                if let Some(parent) = &self.parent {
+                    let _ = parent.send(TreeMsg::FlushUp {
+                        from: self.index_in_parent,
+                        gen: pg.gen,
+                        delta,
+                        fin,
+                    });
+                }
+            }
+            Role::Fold { fold, folds, meta } => {
+                let mut combined = VizSnapshot::default();
+                fold_children(&mut pg, &mut combined, false);
+                let mut load = *meta;
+                load.folds = *folds;
+                load.pushed = fold.pushed;
+                load.shed = fold.shed;
+                combined.agg_nodes.push(load);
+                combined.agg_nodes.sort_by_key(|n| n.node);
+                combined.delta = !matches!(kind, FlushKind::Query(_));
+                let fin = if kind.exits() {
+                    let mut f = VizSnapshot::default();
+                    fold_children(&mut pg, &mut f, true);
+                    f.agg_nodes.push(load);
+                    f.agg_nodes.sort_by_key(|n| n.node);
+                    Some(f)
+                } else {
+                    None
+                };
+                if let Some(parent) = &self.parent {
+                    let _ = parent.send(TreeMsg::FlushUp {
+                        from: self.index_in_parent,
+                        gen: pg.gen,
+                        delta: combined,
+                        fin,
+                    });
+                }
+            }
+            Role::Root { ps, job_tx, folds, pushed, shed, meta, .. } => {
+                let mut load = *meta;
+                load.folds = *folds;
+                load.pushed = *pushed;
+                load.shed = *shed;
+                match &kind {
+                    FlushKind::Publish => {
+                        let mut d = ps.take_delta();
+                        fold_children(&mut pg, &mut d, false);
+                        d.agg_nodes.push(load);
+                        d.agg_nodes.sort_by_key(|n| n.node);
+                        d.delta = true;
+                        let _ = job_tx.send(d);
+                    }
+                    FlushKind::Query(reply) => {
+                        let mut s = ps.snapshot();
+                        fold_children(&mut pg, &mut s, false);
+                        s.agg_nodes.push(load);
+                        s.agg_nodes.sort_by_key(|n| n.node);
+                        s.delta = false;
+                        let _ = reply.send(s);
+                    }
+                    FlushKind::Shutdown => {
+                        // The final count-cadence publish, exactly like
+                        // the flat aggregator's Shutdown handling.
+                        let mut d = ps.take_delta();
+                        fold_children(&mut pg, &mut d, false);
+                        d.agg_nodes.push(load);
+                        d.agg_nodes.sort_by_key(|n| n.node);
+                        d.delta = true;
+                        let _ = job_tx.send(d);
+                    }
+                    // Halt (ingress disconnect) exits without a final
+                    // publish — the flat aggregator's Disconnected arm
+                    // doesn't publish either.
+                    FlushKind::Halt => {}
+                }
+                root_load = Some(load);
+            }
+        }
+        if kind.exits() {
+            if let Some(load) = root_load {
+                self.finalize(pg, load);
+            }
+            self.exiting = true;
+        }
+    }
+
+    /// Root shutdown epilogue: package the reference server + the
+    /// absolute fold of the leaves' state for `PsHandle::join`.
+    fn finalize(&mut self, mut pg: PendingGen, load: AggNodeLoad) {
+        let mut rest = VizSnapshot::default();
+        for slot in pg.fins.iter_mut() {
+            if let Some(f) = slot.take() {
+                rest.merge(&f);
+            }
+        }
+        rest.agg_nodes.push(load);
+        rest.agg_nodes.sort_by_key(|n| n.node);
+        rest.delta = false;
+        let role = std::mem::replace(
+            &mut self.role,
+            Role::Fold {
+                fold: StepFold::new(1),
+                folds: 0,
+                meta: AggNodeLoad::default(),
+            },
+        );
+        if let Role::Root { ps, .. } = role {
+            self.fin = Some(TreeFinal { root: ps, rest });
+        }
+    }
+}
+
+/// Configuration for [`spawn_tree`].
+pub struct TreeOpts {
+    /// Aggregation fanout (≥ 2; the caller routes smaller values to the
+    /// flat aggregator).
+    pub fanout: usize,
+    /// Reporting ranks — the global step quorum *and* the rank-range
+    /// domain split across the leaves.
+    pub ranks: usize,
+    /// Publish cadence in reports (the flat aggregator's knob).
+    pub publish_every: usize,
+    /// Wall-clock publish cadence, ms (0 = count-only).
+    pub publish_interval_ms: u64,
+    /// Remote `agg-node` endpoints by leaf index ("" = in-process).
+    pub endpoints: Vec<String>,
+}
+
+/// Handle to a running aggregation tree: the ingress sender speaks the
+/// same [`PsRequest`] protocol as the flat aggregator's channel, so
+/// `PsClient` routes to either without knowing which is behind it.
+pub struct TreeHandle {
+    ingress: Sender<PsRequest>,
+    ingress_join: std::thread::JoinHandle<()>,
+    node_joins: Vec<std::thread::JoinHandle<Option<TreeFinal>>>,
+    pub spec: TreeSpec,
+}
+
+impl TreeHandle {
+    pub fn request_sender(&self) -> Sender<PsRequest> {
+        self.ingress.clone()
+    }
+
+    /// Join every thread; the root's final state comes back to the
+    /// caller (`PsHandle::join` merges it with the shard partials).
+    pub fn join(self) -> TreeFinal {
+        drop(self.ingress);
+        let _ = self.ingress_join.join();
+        let mut fin = None;
+        for j in self.node_joins {
+            if let Ok(Some(f)) = j.join() {
+                fin = Some(f);
+            }
+        }
+        fin.expect("aggtree root exited without final state")
+    }
+}
+
+/// Build and start the tree: one thread per in-process node plus the
+/// ingress router. Remote leaf endpoints are dialled eagerly so a
+/// mis-wired topology fails at spawn, not mid-run.
+pub fn spawn_tree(
+    opts: TreeOpts,
+    job_tx: Sender<VizSnapshot>,
+    on_version: EventHook,
+) -> Result<TreeHandle> {
+    let spec = TreeSpec::plan(opts.fanout, opts.ranks);
+    anyhow::ensure!(
+        spec.depth() >= 2,
+        "aggtree needs at least 2 levels (got {} ranks at fanout {}); use the flat aggregator",
+        opts.ranks,
+        opts.fanout
+    );
+    let top = spec.levels.len() - 1;
+
+    // Channels for every in-process node. Remote leaves have no channel:
+    // their parent escorts traffic through the wire.
+    let mut txs: HashMap<(usize, usize), Sender<TreeMsg>> = HashMap::new();
+    let mut rxs: HashMap<(usize, usize), Receiver<TreeMsg>> = HashMap::new();
+    let remote_leaf = |i: usize| -> Option<&str> {
+        opts.endpoints.get(i).map(|s| s.as_str()).filter(|s| !s.is_empty())
+    };
+    for (level, &n) in spec.levels.iter().enumerate() {
+        for index in 0..n {
+            if level == 0 && remote_leaf(index).is_some() {
+                continue;
+            }
+            let (tx, rx) = channel::<TreeMsg>();
+            txs.insert((level, index), tx);
+            rxs.insert((level, index), rx);
+        }
+    }
+
+    let mut node_joins = Vec::with_capacity(spec.nodes());
+    let mut role_for_root = Some(Role::Root {
+        ps: ParameterServer::new(None, usize::MAX >> 1, opts.ranks),
+        job_tx,
+        on_version,
+        last_ver: 0,
+        folds: 0,
+        pushed: 0,
+        shed: 0,
+        meta: AggNodeLoad {
+            node: spec.node_id(top, 0),
+            depth: 0,
+            rank_lo: spec.node_range(top, 0).0,
+            rank_hi: spec.node_range(top, 0).1,
+            ..AggNodeLoad::default()
+        },
+    });
+    for (level, &n) in spec.levels.iter().enumerate() {
+        for index in 0..n {
+            if level == 0 && remote_leaf(index).is_some() {
+                continue;
+            }
+            let rx = rxs.remove(&(level, index)).expect("channel planned above");
+            let (parent, index_in_parent) = if level == top {
+                (None, 0)
+            } else {
+                let ptx = txs
+                    .get(&(level + 1, index / spec.fanout))
+                    .expect("parent channel planned above")
+                    .clone();
+                (Some(ptx), index % spec.fanout)
+            };
+            let children: Vec<ChildEdge> = if level == 0 {
+                Vec::new()
+            } else {
+                let mut edges = Vec::new();
+                for c in 0..spec.child_count(level, index) {
+                    let ci = index * spec.fanout + c;
+                    if level == 1 {
+                        if let Some(ep) = remote_leaf(ci) {
+                            let (clo, chi) = spec.leaf_range(ci);
+                            let cid = spec.node_id(0, ci);
+                            let wire = crate::util::net::Reconnector::connected(
+                                ep,
+                                move |a| net::TreeWire::connect(a, cid, clo, chi),
+                            )?;
+                            edges.push(ChildEdge::Remote(wire));
+                            continue;
+                        }
+                    }
+                    edges.push(ChildEdge::Local);
+                }
+                edges
+            };
+            let n_children = children.len();
+            let id = spec.node_id(level, index);
+            let (lo, hi) = spec.node_range(level, index);
+            let role = if level == top {
+                role_for_root.take().expect("single root")
+            } else if level == 0 {
+                Role::Leaf(LeafState::new(id, spec.node_depth(0), lo, hi))
+            } else {
+                Role::Fold {
+                    fold: StepFold::new((hi - lo) as u64),
+                    folds: 0,
+                    meta: AggNodeLoad {
+                        node: id,
+                        depth: spec.node_depth(level),
+                        rank_lo: lo,
+                        rank_hi: hi,
+                        ..AggNodeLoad::default()
+                    },
+                }
+            };
+            let node = Node {
+                rx,
+                parent,
+                index_in_parent,
+                children,
+                role,
+                pending: VecDeque::new(),
+                child_done: vec![0; n_children],
+                stash: VecDeque::new(),
+                scratch: Vec::new(),
+                fin: None,
+                exiting: false,
+            };
+            let join = std::thread::Builder::new()
+                .name(format!("chimbuko-aggtree-{id}"))
+                .spawn(move || node.run())
+                .expect("spawning aggtree node");
+            node_joins.push(join);
+        }
+    }
+
+    // Ingress routing table: rank → leaf channel, or (for remote leaves)
+    // the parent channel plus the child slot to escort through.
+    enum RouteEntry {
+        Local(Sender<TreeMsg>),
+        Remote { parent: Sender<TreeMsg>, child: usize },
+    }
+    let mut routes: Vec<RouteEntry> = Vec::with_capacity(spec.leaves());
+    for i in 0..spec.leaves() {
+        if remote_leaf(i).is_some() {
+            let ptx = txs.get(&(1, i / spec.fanout)).expect("parent of leaf").clone();
+            routes.push(RouteEntry::Remote { parent: ptx, child: i % spec.fanout });
+        } else {
+            routes.push(RouteEntry::Local(txs[&(0, i)].clone()));
+        }
+    }
+    let broadcast: Vec<Sender<TreeMsg>> = {
+        // Deterministic order (leaves first, then up); any order works —
+        // each edge is its own FIFO.
+        let mut keys: Vec<(usize, usize)> = txs.keys().copied().collect();
+        keys.sort_unstable();
+        keys.into_iter().map(|k| txs[&k].clone()).collect()
+    };
+    drop(txs);
+
+    let (ingress_tx, ingress_rx) = channel::<PsRequest>();
+    let publish_every = opts.publish_every.max(1);
+    let interval_ms = opts.publish_interval_ms;
+    let ingress_spec = spec.clone();
+    let ingress_join = std::thread::Builder::new()
+        .name("chimbuko-aggtree-ingress".into())
+        .spawn(move || {
+            let spec = ingress_spec;
+            let mut gen = 0u64;
+            let mut reports_since = 0usize;
+            let mut last_interval_pub = Instant::now();
+            let mut flush = |kind: FlushKind, gen: &mut u64, reports_since: &mut usize| {
+                // A Query barrier collects absolutes without draining
+                // deltas, so it leaves the publish cadence alone — the
+                // flat aggregator's Query doesn't publish either.
+                if !matches!(kind, FlushKind::Query(_)) {
+                    *reports_since = 0;
+                }
+                *gen += 1;
+                for tx in &broadcast {
+                    let _ = tx.send(TreeMsg::Flush {
+                        gen: *gen,
+                        kind: kind.clone_for_broadcast(),
+                    });
+                }
+            };
+            loop {
+                let req = if interval_ms == 0 {
+                    match ingress_rx.recv() {
+                        Ok(r) => Some(r),
+                        Err(_) => {
+                            flush(FlushKind::Halt, &mut gen, &mut reports_since);
+                            break;
+                        }
+                    }
+                } else {
+                    let budget = Duration::from_millis(interval_ms)
+                        .saturating_sub(last_interval_pub.elapsed());
+                    match ingress_rx.recv_timeout(budget.max(Duration::from_millis(1))) {
+                        Ok(r) => Some(r),
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                            flush(FlushKind::Halt, &mut gen, &mut reports_since);
+                            break;
+                        }
+                    }
+                };
+                match req {
+                    Some(PsRequest::Report(stat)) => {
+                        let leaf = spec.leaf_of_rank(stat.rank);
+                        match &routes[leaf] {
+                            RouteEntry::Local(tx) => {
+                                let _ = tx.send(TreeMsg::Report(stat));
+                            }
+                            RouteEntry::Remote { parent, child } => {
+                                let _ = parent
+                                    .send(TreeMsg::RemoteReport { child: *child, stat });
+                            }
+                        }
+                        reports_since += 1;
+                        if reports_since >= publish_every {
+                            flush(FlushKind::Publish, &mut gen, &mut reports_since);
+                        }
+                        if interval_ms > 0
+                            && last_interval_pub.elapsed()
+                                >= Duration::from_millis(interval_ms)
+                        {
+                            if reports_since > 0 {
+                                flush(FlushKind::Publish, &mut gen, &mut reports_since);
+                            }
+                            last_interval_pub = Instant::now();
+                        }
+                    }
+                    Some(PsRequest::Sync { app, rank, delta, reply }) => {
+                        let leaf = spec.leaf_of_rank(rank);
+                        match &routes[leaf] {
+                            RouteEntry::Local(tx) => {
+                                let _ = tx.send(TreeMsg::Fetch { app, rank, delta, reply });
+                            }
+                            RouteEntry::Remote { parent, child } => {
+                                let _ = parent.send(TreeMsg::RemoteFetch {
+                                    child: *child,
+                                    app,
+                                    rank,
+                                    delta,
+                                    reply,
+                                });
+                            }
+                        }
+                    }
+                    Some(PsRequest::Query { reply }) => {
+                        flush(FlushKind::Query(reply), &mut gen, &mut reports_since);
+                    }
+                    Some(PsRequest::Publish) => {
+                        flush(FlushKind::Publish, &mut gen, &mut reports_since);
+                    }
+                    Some(PsRequest::Shutdown) => {
+                        flush(FlushKind::Shutdown, &mut gen, &mut reports_since);
+                        break;
+                    }
+                    None => {
+                        if reports_since > 0 {
+                            flush(FlushKind::Publish, &mut gen, &mut reports_since);
+                        }
+                        last_interval_pub = Instant::now();
+                    }
+                }
+            }
+        })
+        .expect("spawning aggtree ingress");
+
+    Ok(TreeHandle { ingress: ingress_tx, ingress_join, node_joins, spec })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_shapes() {
+        // (fanout, ranks) → (depth, leaves, nodes)
+        let cases = [
+            (2, 4, 2, 2, 3),
+            (2, 8, 3, 4, 7),
+            (4, 8, 2, 2, 3),
+            (4, 64, 3, 16, 21),
+            (8, 100_000, 6, 12500, 14289),
+        ];
+        for (f, r, depth, leaves, nodes) in cases {
+            let s = TreeSpec::plan(f, r);
+            assert_eq!(s.leaves(), leaves, "leaves for F={f} R={r}");
+            assert_eq!(s.depth(), depth, "depth for F={f} R={r}");
+            assert_eq!(s.nodes(), nodes, "nodes for F={f} R={r}");
+        }
+    }
+
+    #[test]
+    fn leaf_ranges_partition_ranks() {
+        for (f, r) in [(2, 4), (2, 8), (4, 8), (4, 64), (3, 10), (7, 23), (2, 5)] {
+            let s = TreeSpec::plan(f, r);
+            let mut next = 0u32;
+            for i in 0..s.leaves() {
+                let (lo, hi) = s.leaf_range(i);
+                assert_eq!(lo, next, "contiguous at leaf {i} (F={f} R={r})");
+                assert!(hi > lo, "non-empty leaf {i} (F={f} R={r})");
+                next = hi;
+            }
+            assert_eq!(next as usize, r, "ranges cover all ranks (F={f} R={r})");
+            for rank in 0..r as u32 {
+                let leaf = s.leaf_of_rank(rank);
+                let (lo, hi) = s.leaf_range(leaf);
+                assert!(lo <= rank && rank < hi, "rank {rank} in its leaf's range");
+            }
+        }
+    }
+
+    #[test]
+    fn node_ranges_nest() {
+        let s = TreeSpec::plan(2, 8); // 4 leaves, 2 interiors, 1 root
+        assert_eq!(s.node_range(2, 0), (0, 8));
+        assert_eq!(s.node_range(1, 0), (0, 4));
+        assert_eq!(s.node_range(1, 1), (4, 8));
+        assert_eq!(s.node_id(2, 0), 0);
+        assert_eq!(s.node_id(1, 0), 1);
+        assert_eq!(s.node_id(0, 3), 6);
+        assert_eq!(s.node_depth(2), 0);
+        assert_eq!(s.node_depth(0), 2);
+    }
+
+    #[test]
+    fn step_fold_quorum_and_expiry() {
+        let mut f = StepFold::new(3);
+        let mut out = Vec::new();
+        f.fold(PartialStep { step: 1, count: 1, anoms: 2 }, &mut out);
+        f.fold(PartialStep { step: 1, count: 1, anoms: 0 }, &mut out);
+        assert!(out.is_empty());
+        f.fold(PartialStep { step: 1, count: 1, anoms: 5 }, &mut out);
+        assert_eq!(out, vec![PartialStep { step: 1, count: 3, anoms: 7 }]);
+        assert_eq!(f.pushed, 1);
+
+        // A partial quorum expires once the fold moves far enough ahead,
+        // and is forwarded with its partial count.
+        out.clear();
+        f.fold(PartialStep { step: 2, count: 1, anoms: 1 }, &mut out);
+        f.fold(
+            PartialStep { step: 2 + STEP_ACC_MAX_LAG + 1, count: 3, anoms: 0 },
+            &mut out,
+        );
+        assert_eq!(out[0], PartialStep { step: 2, count: 1, anoms: 1 });
+        assert_eq!(f.shed, 1);
+
+        // Stragglers past the horizon forward without re-opening.
+        out.clear();
+        f.fold(PartialStep { step: 1, count: 1, anoms: 9 }, &mut out);
+        assert_eq!(out, vec![PartialStep { step: 1, count: 1, anoms: 9 }]);
+        assert_eq!(f.shed, 2);
+    }
+
+    #[test]
+    fn leaf_state_delta_and_absolute() {
+        let mut leaf = LeafState::new(3, 2, 0, 2);
+        let mut out = Vec::new();
+        for rank in 0..2u32 {
+            leaf.report(
+                StepStat {
+                    app: 0,
+                    rank,
+                    step: 1,
+                    n_executions: 10,
+                    n_anomalies: rank as u64,
+                    ts_range: (0, 100),
+                },
+                &mut out,
+            );
+        }
+        assert_eq!(out, vec![PartialStep { step: 1, count: 2, anoms: 1 }]);
+        let d = leaf.delta();
+        assert!(d.delta);
+        assert_eq!(d.ranks.len(), 2);
+        assert_eq!(d.fresh_steps.len(), 2);
+        assert_eq!(d.total_anomalies, 1);
+        assert_eq!(d.total_executions, 20);
+        assert_eq!(d.agg_nodes.len(), 1);
+        assert_eq!(d.agg_nodes[0].node, 3);
+        assert_eq!(d.agg_nodes[0].folds, 2);
+        assert_eq!(d.agg_nodes[0].pushed, 1);
+        // Delta drained; absolute still has everything.
+        let d2 = leaf.delta();
+        assert!(d2.ranks.is_empty() && d2.fresh_steps.is_empty());
+        let a = leaf.absolute();
+        assert!(!a.delta);
+        assert_eq!(a.ranks.len(), 2);
+        assert_eq!(a.total_anomalies, 1);
+    }
+}

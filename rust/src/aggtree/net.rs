@@ -1,0 +1,413 @@
+//! TCP transport for remote aggregation-tree leaves — the `agg-node`
+//! subcommand's wire (protocol kinds 13–16, continuing the PS kind
+//! space; see the table in [`ps::net`](crate::ps::net)).
+//!
+//! A remote leaf serves exactly one rank-range behind the reactor
+//! (`serve_frames`) substrate. Its **parent owns the connection** and
+//! *escorts* each report and fetch through a request/reply round-trip,
+//! so the report→fetch FIFO serialization — the exactly-once delivery
+//! invariant's transport leg — holds across the process boundary
+//! without server push:
+//!
+//! ```text
+//! request := u32 len, u32 stream, u8 kind, payload
+//!   kind 13 (agg hello):  (empty)
+//!   kind 14 (agg report): app u32, rank u32, step u64, execs u64,
+//!                         anoms u64, ts_lo u64, ts_hi u64
+//!   kind 15 (agg fetch):  app u32, rank u32
+//!   kind 16 (agg flush):  mode u8 (0 delta / 1 absolute / 2 final)
+//! reply (hello)  := node u32, depth u32, rank_lo u32, rank_hi u32
+//! reply (report) := partials
+//! reply (fetch)  := partials                         (empty today)
+//! reply (flush)  := partials, snapshot, fin u8 (0/1), [snapshot]
+//!
+//! partials := n u32, n × (step u64, count u64, anoms u64)
+//! snapshot := n_ranks u32, n_ranks × (app u32, rank u32, n u64,
+//!               mean f64, m2 f64, min f64, max f64, total u64),
+//!             n_fresh u32, n_fresh × (app u32, rank u32, step u64,
+//!               execs u64, anoms u64, ts_lo u64, ts_hi u64),
+//!             anoms u64, execs u64,
+//!             n_nodes u32, n_nodes × (node u32, depth u32, lo u32,
+//!               hi u32, folds u64, pushed u64, shed u64),
+//!             delta u8
+//! ```
+//!
+//! The report reply carries the range quorums the report completed, so
+//! partials flow upward as escort replies — the parent folds them the
+//! moment the round-trip returns, on the same edge order an in-process
+//! child would use. The fetch reply's partials list is empty today (a
+//! fetch can't complete a quorum) but stays in the frame for a batched
+//! report push later. Flush mode 2 (`final`) additionally returns the
+//! absolute snapshot (`fin`) that `PsHandle::join` folds into the final
+//! state. An overloaded node sheds with `CTRL_BUSY` like every reactor
+//! server; the parent's `Reconnector` retries the shed call in-place
+//! under its bounded busy budget and only then degrades — the flush
+//! proceeds without the subtree (degraded fold, logged).
+
+use super::{LeafState, PartialStep};
+use crate::ps::net::{put_stats, read_stats};
+use crate::ps::{AggNodeLoad, RankSummary, StepStat, VizSnapshot};
+use crate::util::net::{
+    serve_frames, FrameHandler, FrameSink, NetStats, ReactorOpts, TcpServerHandle,
+};
+use crate::util::wire::{read_msg, write_msg, Cursor};
+use anyhow::{bail, Context, Result};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+
+pub(crate) const KIND_AGG_HELLO: u8 = 13;
+pub(crate) const KIND_AGG_REPORT: u8 = 14;
+pub(crate) const KIND_AGG_FETCH: u8 = 15;
+pub(crate) const KIND_AGG_FLUSH: u8 = 16;
+
+/// Flush modes (the wire byte and the in-process `FlushKind` mapping).
+pub(crate) const FLUSH_DELTA: u8 = 0;
+pub(crate) const FLUSH_ABSOLUTE: u8 = 1;
+pub(crate) const FLUSH_FINAL: u8 = 2;
+
+fn put_partials(buf: &mut Vec<u8>, ps: &[PartialStep]) {
+    buf.extend_from_slice(&(ps.len() as u32).to_le_bytes());
+    for p in ps {
+        buf.extend_from_slice(&p.step.to_le_bytes());
+        buf.extend_from_slice(&p.count.to_le_bytes());
+        buf.extend_from_slice(&p.anoms.to_le_bytes());
+    }
+}
+
+fn read_partials(c: &mut Cursor) -> Result<Vec<PartialStep>> {
+    let n = c.u32()? as usize;
+    // Count is peer-supplied: cap the pre-allocation.
+    let mut out = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        out.push(PartialStep { step: c.u64()?, count: c.u64()?, anoms: c.u64()? });
+    }
+    Ok(out)
+}
+
+/// Serialize the leaf-plane subset of a [`VizSnapshot`]: rank summaries,
+/// fresh steps, totals, node loads, and the delta flag. A leaf never
+/// carries functions/events/shard-loads/placement, so those fields stay
+/// off the wire.
+fn put_snapshot(buf: &mut Vec<u8>, s: &VizSnapshot) {
+    buf.extend_from_slice(&(s.ranks.len() as u32).to_le_bytes());
+    for r in &s.ranks {
+        buf.extend_from_slice(&r.app.to_le_bytes());
+        put_stats(buf, r.rank, &r.step_counts);
+        buf.extend_from_slice(&r.total_anomalies.to_le_bytes());
+    }
+    buf.extend_from_slice(&(s.fresh_steps.len() as u32).to_le_bytes());
+    for st in &s.fresh_steps {
+        put_step_stat(buf, st);
+    }
+    buf.extend_from_slice(&s.total_anomalies.to_le_bytes());
+    buf.extend_from_slice(&s.total_executions.to_le_bytes());
+    buf.extend_from_slice(&(s.agg_nodes.len() as u32).to_le_bytes());
+    for n in &s.agg_nodes {
+        buf.extend_from_slice(&n.node.to_le_bytes());
+        buf.extend_from_slice(&n.depth.to_le_bytes());
+        buf.extend_from_slice(&n.rank_lo.to_le_bytes());
+        buf.extend_from_slice(&n.rank_hi.to_le_bytes());
+        buf.extend_from_slice(&n.folds.to_le_bytes());
+        buf.extend_from_slice(&n.pushed.to_le_bytes());
+        buf.extend_from_slice(&n.shed.to_le_bytes());
+    }
+    buf.push(if s.delta { 1 } else { 0 });
+}
+
+fn read_snapshot(c: &mut Cursor) -> Result<VizSnapshot> {
+    let n_ranks = c.u32()? as usize;
+    let mut ranks = Vec::with_capacity(n_ranks.min(4096));
+    for _ in 0..n_ranks {
+        let app = c.u32()?;
+        let (rank, step_counts) = read_stats(c)?;
+        let total_anomalies = c.u64()?;
+        ranks.push(RankSummary { app, rank, step_counts, total_anomalies });
+    }
+    let n_fresh = c.u32()? as usize;
+    let mut fresh_steps = Vec::with_capacity(n_fresh.min(4096));
+    for _ in 0..n_fresh {
+        fresh_steps.push(read_step_stat(c)?);
+    }
+    let total_anomalies = c.u64()?;
+    let total_executions = c.u64()?;
+    let n_nodes = c.u32()? as usize;
+    let mut agg_nodes = Vec::with_capacity(n_nodes.min(4096));
+    for _ in 0..n_nodes {
+        agg_nodes.push(AggNodeLoad {
+            node: c.u32()?,
+            depth: c.u32()?,
+            rank_lo: c.u32()?,
+            rank_hi: c.u32()?,
+            folds: c.u64()?,
+            pushed: c.u64()?,
+            shed: c.u64()?,
+        });
+    }
+    let delta = c.u8()? != 0;
+    Ok(VizSnapshot {
+        ranks,
+        fresh_steps,
+        total_anomalies,
+        total_executions,
+        agg_nodes,
+        delta,
+        ..VizSnapshot::default()
+    })
+}
+
+fn put_step_stat(buf: &mut Vec<u8>, st: &StepStat) {
+    buf.extend_from_slice(&st.app.to_le_bytes());
+    buf.extend_from_slice(&st.rank.to_le_bytes());
+    buf.extend_from_slice(&st.step.to_le_bytes());
+    buf.extend_from_slice(&st.n_executions.to_le_bytes());
+    buf.extend_from_slice(&st.n_anomalies.to_le_bytes());
+    buf.extend_from_slice(&st.ts_range.0.to_le_bytes());
+    buf.extend_from_slice(&st.ts_range.1.to_le_bytes());
+}
+
+fn read_step_stat(c: &mut Cursor) -> Result<StepStat> {
+    Ok(StepStat {
+        app: c.u32()?,
+        rank: c.u32()?,
+        step: c.u64()?,
+        n_executions: c.u64()?,
+        n_anomalies: c.u64()?,
+        ts_range: (c.u64()?, c.u64()?),
+    })
+}
+
+/// A remote `agg-node` process: one [`LeafState`] behind the reactor.
+pub struct AggNodeServer {
+    inner: TcpServerHandle,
+}
+
+impl AggNodeServer {
+    /// Bind and serve leaf `node` (depth `depth`) owning ranks
+    /// `[rank_lo, rank_hi)`.
+    pub fn start(
+        addr: &str,
+        node: u32,
+        depth: u32,
+        rank_lo: u32,
+        rank_hi: u32,
+        opts: ReactorOpts,
+    ) -> Result<AggNodeServer> {
+        let state = Arc::new(Mutex::new(LeafState::new(node, depth, rank_lo, rank_hi)));
+        let inner = serve_frames("chimbuko-agg-node", addr, opts, NetStats::new(), move || {
+            AggNodeHandler { state: state.clone() }
+        })?;
+        Ok(AggNodeServer { inner })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.inner.addr()
+    }
+
+    /// Transport counters (accepted/shed/queue depth…) for this node.
+    pub fn net_stats(&self) -> Arc<NetStats> {
+        self.inner.stats().clone()
+    }
+
+    pub fn stop(&mut self) {
+        self.inner.stop();
+    }
+}
+
+struct AggNodeHandler {
+    state: Arc<Mutex<LeafState>>,
+}
+
+impl FrameHandler for AggNodeHandler {
+    fn on_frame(&mut self, stream: u32, payload: &[u8], out: &mut FrameSink) -> bool {
+        let mut c = Cursor::new(payload);
+        let kind = match c.u8() {
+            Ok(k) => k,
+            Err(_) => return false,
+        };
+        let mut reply = Vec::new();
+        let mut state = self.state.lock().expect("agg-node state lock");
+        match kind {
+            KIND_AGG_HELLO => {
+                let load = state.load();
+                reply.extend_from_slice(&load.node.to_le_bytes());
+                reply.extend_from_slice(&load.depth.to_le_bytes());
+                reply.extend_from_slice(&load.rank_lo.to_le_bytes());
+                reply.extend_from_slice(&load.rank_hi.to_le_bytes());
+            }
+            KIND_AGG_REPORT => {
+                let stat = match read_step_stat(&mut c) {
+                    Ok(s) => s,
+                    Err(_) => return false,
+                };
+                let mut partials = Vec::new();
+                state.report(stat, &mut partials);
+                put_partials(&mut reply, &partials);
+            }
+            KIND_AGG_FETCH => {
+                // The fetch is an ordering escort: it completes nothing,
+                // but replying *after* every earlier report's reply is
+                // what serializes it behind them.
+                if c.u32().is_err() || c.u32().is_err() {
+                    return false;
+                }
+                put_partials(&mut reply, &[]);
+            }
+            KIND_AGG_FLUSH => {
+                let mode = match c.u8() {
+                    Ok(m) => m,
+                    Err(_) => return false,
+                };
+                put_partials(&mut reply, &[]);
+                match mode {
+                    FLUSH_DELTA => {
+                        put_snapshot(&mut reply, &state.delta());
+                        reply.push(0);
+                    }
+                    FLUSH_ABSOLUTE => {
+                        put_snapshot(&mut reply, &state.absolute());
+                        reply.push(0);
+                    }
+                    FLUSH_FINAL => {
+                        put_snapshot(&mut reply, &state.delta());
+                        reply.push(1);
+                        put_snapshot(&mut reply, &state.absolute());
+                    }
+                    _ => return false,
+                }
+            }
+            _ => return false,
+        }
+        out.send(stream, &reply);
+        true
+    }
+}
+
+/// Parent-side connection to one remote leaf. Single-stream (the parent
+/// thread is the only caller), so plain `write_msg`/`read_msg` framing.
+pub struct TreeWire {
+    stream: TcpStream,
+}
+
+impl TreeWire {
+    /// Dial and verify the topology hello: the node at `addr` must be
+    /// leaf `node` owning `[rank_lo, rank_hi)` — a mis-wired endpoint
+    /// list fails here, at spawn, not as silently mis-folded stats.
+    pub fn connect(addr: &str, node: u32, rank_lo: u32, rank_hi: u32) -> Result<TreeWire> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("agg-node at {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let mut wire = TreeWire { stream };
+        let reply = wire.call(&[KIND_AGG_HELLO])?;
+        let mut c = Cursor::new(&reply);
+        let (n, _depth, lo, hi) = (c.u32()?, c.u32()?, c.u32()?, c.u32()?);
+        if n != node || lo != rank_lo || hi != rank_hi {
+            bail!(
+                "agg-node at {addr} is node {n} [{lo},{hi}), expected node {node} \
+                 [{rank_lo},{rank_hi})"
+            );
+        }
+        Ok(wire)
+    }
+
+    fn call(&mut self, req: &[u8]) -> Result<Vec<u8>> {
+        write_msg(&mut self.stream, req)?;
+        read_msg(&mut self.stream)?.context("agg-node closed the connection")
+    }
+
+    /// Escort one rank report; returns the range quorums it completed.
+    pub(crate) fn report(&mut self, stat: &StepStat) -> Result<Vec<PartialStep>> {
+        let mut req = vec![KIND_AGG_REPORT];
+        put_step_stat(&mut req, stat);
+        let reply = self.call(&req)?;
+        read_partials(&mut Cursor::new(&reply))
+    }
+
+    /// Escort one event fetch (ordering barrier; completes nothing).
+    pub(crate) fn fetch(&mut self, app: u32, rank: u32) -> Result<Vec<PartialStep>> {
+        let mut req = vec![KIND_AGG_FETCH];
+        req.extend_from_slice(&app.to_le_bytes());
+        req.extend_from_slice(&rank.to_le_bytes());
+        let reply = self.call(&req)?;
+        read_partials(&mut Cursor::new(&reply))
+    }
+
+    /// Run one flush round-trip; returns `(partials, snapshot, fin)`.
+    pub(crate) fn flush(
+        &mut self,
+        mode: u8,
+    ) -> Result<(Vec<PartialStep>, VizSnapshot, Option<VizSnapshot>)> {
+        let reply = self.call(&[KIND_AGG_FLUSH, mode])?;
+        let mut c = Cursor::new(&reply);
+        let partials = read_partials(&mut c)?;
+        let snap = read_snapshot(&mut c)?;
+        let fin = if c.u8()? != 0 { Some(read_snapshot(&mut c)?) } else { None };
+        Ok((partials, snap, fin))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stat(rank: u32, step: u64, anoms: u64) -> StepStat {
+        StepStat {
+            app: 0,
+            rank,
+            step,
+            n_executions: 10,
+            n_anomalies: anoms,
+            ts_range: (step * 100, step * 100 + 99),
+        }
+    }
+
+    #[test]
+    fn snapshot_codec_roundtrip() {
+        let mut leaf = LeafState::new(5, 2, 0, 2);
+        let mut out = Vec::new();
+        leaf.report(stat(0, 1, 3), &mut out);
+        leaf.report(stat(1, 1, 0), &mut out);
+        let snap = leaf.absolute();
+        let mut buf = Vec::new();
+        put_snapshot(&mut buf, &snap);
+        let got = read_snapshot(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(got.ranks, snap.ranks);
+        assert_eq!(got.fresh_steps, snap.fresh_steps);
+        assert_eq!(got.total_anomalies, snap.total_anomalies);
+        assert_eq!(got.total_executions, snap.total_executions);
+        assert_eq!(got.agg_nodes, snap.agg_nodes);
+        assert_eq!(got.delta, snap.delta);
+        // Truncated wire refused, not mis-read.
+        assert!(read_snapshot(&mut Cursor::new(&buf[..buf.len() - 1])).is_err());
+    }
+
+    #[test]
+    fn agg_node_serves_reports_fetches_and_flushes() {
+        let srv =
+            AggNodeServer::start("127.0.0.1:0", 3, 1, 0, 2, ReactorOpts::default()).unwrap();
+        let addr = srv.addr().to_string();
+        // Hello verification: wrong expectations must refuse.
+        assert!(TreeWire::connect(&addr, 4, 0, 2).is_err());
+        assert!(TreeWire::connect(&addr, 3, 0, 3).is_err());
+        let mut w = TreeWire::connect(&addr, 3, 0, 2).unwrap();
+        assert!(w.report(&stat(0, 1, 2)).unwrap().is_empty());
+        assert_eq!(
+            w.report(&stat(1, 1, 1)).unwrap(),
+            vec![PartialStep { step: 1, count: 2, anoms: 3 }],
+            "second rank completes the range quorum"
+        );
+        assert!(w.fetch(0, 1).unwrap().is_empty());
+        let (ps, delta, fin) = w.flush(FLUSH_DELTA).unwrap();
+        assert!(ps.is_empty() && fin.is_none());
+        assert!(delta.delta);
+        assert_eq!(delta.ranks.len(), 2);
+        assert_eq!(delta.total_anomalies, 3);
+        // Delta drained; a final flush still carries the absolute state.
+        let (_, delta2, fin2) = w.flush(FLUSH_FINAL).unwrap();
+        assert!(delta2.ranks.is_empty(), "second delta is empty");
+        let fin2 = fin2.expect("final flush carries the absolute snapshot");
+        assert_eq!(fin2.ranks.len(), 2);
+        assert_eq!(fin2.agg_nodes.len(), 1);
+        assert_eq!(fin2.agg_nodes[0].node, 3);
+        assert_eq!(fin2.agg_nodes[0].folds, 2);
+        drop(srv);
+    }
+}

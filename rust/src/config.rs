@@ -118,6 +118,16 @@ pub struct Config {
     /// Minimum windowed merge count before the rebalancer judges skew
     /// (tiny windows are noise); 0 = judge every window.
     pub ps_rebalance_min_merges: u64,
+    /// Aggregation-tree fanout. 0 or 1 (default) keeps the flat
+    /// single-thread aggregator; ≥ 2 spreads step folding across a
+    /// hierarchical tree of aggregator nodes when the rank count spans
+    /// at least two leaves. Bit-equivalent output — purely a fan-in
+    /// scaling knob. See `rust/docs/aggtree.md`.
+    pub ps_agg_fanout: usize,
+    /// Remote aggregation-tree leaf endpoints (`agg-node` addresses,
+    /// comma-separated in config; index == leaf index, "" = in-process).
+    /// Only meaningful with `ps.agg_fanout` ≥ 2.
+    pub ps_agg_endpoints: Vec<String>,
     /// Wall-clock viz publish cadence in milliseconds (the paper's 1 s);
     /// 0 disables. Runs alongside the report-count cadence so viz
     /// freshness is decoupled from rank count.
@@ -221,6 +231,8 @@ impl Default for Config {
             ps_rebalance_interval_ms: 0,
             ps_rebalance_max_ratio: 1.5,
             ps_rebalance_min_merges: 256,
+            ps_agg_fanout: 0,
+            ps_agg_endpoints: Vec::new(),
             publish_interval_ms: 0,
             provdb_addr: String::new(),
             provdb_shards: 4,
@@ -300,6 +312,16 @@ impl Config {
                     .filter(|s| !s.is_empty())
                     .collect();
             }
+            "ps.agg_fanout" => self.ps_agg_fanout = v.parse()?,
+            "ps.agg_endpoints" => {
+                // Unlike ps.endpoints, empty slots are kept: "" in slot i
+                // means leaf i stays in-process.
+                self.ps_agg_endpoints = if v.trim().is_empty() {
+                    Vec::new()
+                } else {
+                    v.split(',').map(|s| s.trim().trim_matches('"').to_string()).collect()
+                };
+            }
             "ps.conn_pool" => self.ps_conn_pool = v.parse()?,
             "ps.rebalance_interval_ms" => self.ps_rebalance_interval_ms = v.parse()?,
             "ps.rebalance_max_ratio" => self.ps_rebalance_max_ratio = v.parse()?,
@@ -357,6 +379,12 @@ impl Config {
         }
         if self.ps_rebalance_max_ratio < 1.0 {
             bail!("ps.rebalance_max_ratio must be >= 1.0");
+        }
+        if self.ps_agg_fanout == 1 {
+            bail!("ps.agg_fanout must be 0 (flat) or >= 2 (tree)");
+        }
+        if !self.ps_agg_endpoints.is_empty() && self.ps_agg_fanout < 2 {
+            bail!("ps.agg_endpoints requires ps.agg_fanout >= 2");
         }
         if self.provdb_shards == 0 || self.provdb_shards > crate::placement::SLOTS {
             // Placement routes through SLOTS fixed slots; more shards
@@ -423,6 +451,8 @@ impl Config {
             ("ps_rebalance_interval_ms", Json::num(self.ps_rebalance_interval_ms as f64)),
             ("ps_rebalance_max_ratio", Json::num(self.ps_rebalance_max_ratio)),
             ("ps_rebalance_min_merges", Json::num(self.ps_rebalance_min_merges as f64)),
+            ("ps_agg_fanout", Json::num(self.ps_agg_fanout as f64)),
+            ("ps_agg_endpoints", Json::str(&self.ps_agg_endpoints.join(","))),
             ("ps_publish_interval_ms", Json::num(self.publish_interval_ms as f64)),
             ("provdb_addr", Json::str(&self.provdb_addr)),
             ("provdb_shards", Json::num(self.provdb_shards as f64)),
@@ -582,6 +612,26 @@ rebalance_min_merges = 64
         assert_eq!(Config::default().ps_rebalance_interval_ms, 0);
         assert!(Config::from_str("[ps]\nconn_pool = 0").is_err());
         assert!(Config::from_str("[ps]\nrebalance_max_ratio = 0.5").is_err());
+    }
+
+    #[test]
+    fn aggtree_keys_parse_and_validate() {
+        let text = r#"
+[ps]
+agg_fanout = 4
+agg_endpoints = 127.0.0.1:5571, , 127.0.0.1:5573
+"#;
+        let c = Config::from_str(text).unwrap();
+        assert_eq!(c.ps_agg_fanout, 4);
+        // Slot 1 is kept empty: that leaf stays in-process.
+        assert_eq!(c.ps_agg_endpoints, vec!["127.0.0.1:5571", "", "127.0.0.1:5573"]);
+        let j = c.to_json();
+        assert_eq!(j.get("ps_agg_fanout").unwrap().as_f64(), Some(4.0));
+        // Defaults: flat aggregator.
+        assert_eq!(Config::default().ps_agg_fanout, 0);
+        assert!(Config::default().ps_agg_endpoints.is_empty());
+        assert!(Config::from_str("[ps]\nagg_fanout = 1").is_err());
+        assert!(Config::from_str("[ps]\nagg_endpoints = 127.0.0.1:5571").is_err());
     }
 
     #[test]

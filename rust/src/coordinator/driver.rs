@@ -377,6 +377,8 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
             rebalance_interval_ms: cfg.ps_rebalance_interval_ms,
             rebalance_max_ratio: cfg.ps_rebalance_max_ratio,
             rebalance_min_merges: cfg.ps_rebalance_min_merges,
+            agg_fanout: cfg.ps_agg_fanout,
+            agg_endpoints: cfg.ps_agg_endpoints.clone(),
             trigger_probes,
             trigger_tx,
         })

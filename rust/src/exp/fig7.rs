@@ -404,13 +404,15 @@ impl EndpointSweepResult {
 
 /// The combined `BENCH_ps_shards.json` payload: the in-process shard
 /// sweep, the per-endpoint TCP sweep, the skewed-workload rebalance
-/// sweep, and the reactor connection sweep, so the perf trajectory of
-/// all four lives in one artifact across PRs.
+/// sweep, the reactor connection sweep, and the aggregation-tree
+/// sweep, so the perf trajectory of all five lives in one artifact
+/// across PRs.
 pub fn ps_bench_json(
     shards: &ShardSweepResult,
     endpoints: &EndpointSweepResult,
     rebalance: &RebalanceSweepResult,
     conns: &ConnSweepResult,
+    aggtree: &AggTreeSweepResult,
 ) -> crate::util::json::Json {
     use crate::util::json::Json;
     Json::obj(vec![
@@ -425,6 +427,9 @@ pub fn ps_bench_json(
         ("conn_total_syncs", Json::num(conns.total_syncs as f64)),
         ("conn_funcs_per_sync", Json::num(conns.funcs_per_sync as f64)),
         ("conn_rows", conns.rows_json()),
+        ("aggtree_steps", Json::num(aggtree.steps as f64)),
+        ("aggtree_producers", Json::num(aggtree.producers as f64)),
+        ("aggtree_rows", aggtree.rows_json()),
     ])
 }
 
@@ -842,6 +847,173 @@ pub fn run_ps_conn_sweep(
     Ok(ConnSweepResult { rows, total_syncs, funcs_per_sync })
 }
 
+/// One point of the aggregation-tree sweep: the same per-step report
+/// fan-in drained by the flat single-thread aggregator vs the
+/// hierarchical fold tree ([`crate::aggtree`]). Rows come in
+/// flat/tree pairs sharing every workload parameter, so the
+/// reports-per-second ratio at each rank count *is* the fan-in scaling
+/// argument: flat bends once one thread folds every report, the tree
+/// spreads the fold across `nodes - 1` workers.
+#[derive(Clone, Debug)]
+pub struct AggTreeSweepRow {
+    pub ranks: usize,
+    /// "flat" or "tree".
+    pub mode: &'static str,
+    /// Tree fanout (0 for flat rows).
+    pub fanout: usize,
+    /// Tree depth (1 for flat rows — the degenerate single-node tree).
+    pub depth: usize,
+    /// Aggregator node count (1 for flat rows).
+    pub nodes: usize,
+    pub reports_per_sec: f64,
+    /// Globally flagged events — must match within a flat/tree pair
+    /// (the tree is pinned bit-equivalent to flat).
+    pub events: u64,
+    pub wall_seconds: f64,
+}
+
+/// Result of the aggregation-tree sweep (appended to
+/// `BENCH_ps_shards.json` as `aggtree_rows`).
+#[derive(Clone, Debug)]
+pub struct AggTreeSweepResult {
+    pub rows: Vec<AggTreeSweepRow>,
+    pub steps: usize,
+    pub producers: usize,
+}
+
+impl AggTreeSweepResult {
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "PS aggregation-tree sweep — step-report fold throughput, flat vs tree",
+            &["ranks", "mode", "fanout", "depth", "nodes", "reports/s", "events", "wall(s)"],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                r.ranks.to_string(),
+                r.mode.to_string(),
+                r.fanout.to_string(),
+                r.depth.to_string(),
+                r.nodes.to_string(),
+                format!("{:.0}", r.reports_per_sec),
+                r.events.to_string(),
+                format!("{:.3}", r.wall_seconds),
+            ]);
+        }
+        format!(
+            "{}({} steps per rank, {} producer threads)\n",
+            t.render(),
+            self.steps,
+            self.producers
+        )
+    }
+
+    pub fn rows_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::arr(
+            self.rows
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("ranks", Json::num(r.ranks as f64)),
+                        ("mode", Json::str(r.mode)),
+                        ("fanout", Json::num(r.fanout as f64)),
+                        ("depth", Json::num(r.depth as f64)),
+                        ("nodes", Json::num(r.nodes as f64)),
+                        ("reports_per_sec", Json::num(r.reports_per_sec)),
+                        ("events", Json::num(r.events as f64)),
+                        ("wall_seconds", Json::num(r.wall_seconds)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Deterministic per-rank anomaly schedule for the aggtree sweep:
+/// alternating 0/1 background (non-zero step-total variance) with a
+/// 5-anomaly spike every 10th step — the spike total `5·ranks` clears
+/// μ + 3σ of the alternating baseline with history to spare, so every
+/// spike flags a global event in both aggregator shapes.
+fn aggtree_anomalies(step: u64) -> u64 {
+    if step % 10 == 9 {
+        5
+    } else {
+        step % 2
+    }
+}
+
+/// Sweep rank counts under the step-report fan-in load, flat aggregator
+/// vs hierarchical tree: `producers` threads partition the rank space
+/// and fire `steps` fire-and-forget reports per rank in step order,
+/// and the wall clock runs through shutdown + join so each shape pays
+/// for draining its own fold backlog.
+pub fn run_aggtree_sweep(
+    rank_counts: &[usize],
+    steps: usize,
+    fanout: usize,
+    producers: usize,
+    seed: u64,
+) -> anyhow::Result<AggTreeSweepResult> {
+    let producers = producers.max(1);
+    let mut rows = Vec::new();
+    for &ranks in rank_counts {
+        for agg_fanout in [0usize, fanout] {
+            let (client, handle) = ps::spawn_with(ps::PsOpts {
+                shards: 1,
+                publish_every: usize::MAX >> 1,
+                reports_per_step: ranks,
+                agg_fanout,
+                ..ps::PsOpts::default()
+            })?;
+            let t0 = Instant::now();
+            let chunk = ranks.div_ceil(producers);
+            let mut joins = Vec::new();
+            for p in 0..producers {
+                let lo = (p * chunk).min(ranks);
+                let hi = ((p + 1) * chunk).min(ranks);
+                if lo == hi {
+                    continue;
+                }
+                let cl = client.clone();
+                let mut rng = Rng::new(seed ^ (p as u64).wrapping_mul(0x9E37_79B9));
+                joins.push(std::thread::spawn(move || {
+                    for step in 0..steps as u64 {
+                        for rank in lo..hi {
+                            cl.report(ps::StepStat {
+                                app: 0,
+                                rank: rank as u32,
+                                step,
+                                n_executions: 100 + rng.lognormal(3.0, 0.3) as u64,
+                                n_anomalies: aggtree_anomalies(step),
+                                ts_range: (step * 1_000, step * 1_000 + 999),
+                            });
+                        }
+                    }
+                }));
+            }
+            for j in joins {
+                j.join().expect("aggtree producer panicked");
+            }
+            client.shutdown();
+            let fin = handle.join();
+            let wall = t0.elapsed().as_secs_f64();
+            let spec = crate::aggtree::TreeSpec::plan(agg_fanout.max(2), ranks);
+            let tree = agg_fanout >= 2 && spec.depth() >= 2;
+            rows.push(AggTreeSweepRow {
+                ranks,
+                mode: if tree { "tree" } else { "flat" },
+                fanout: if tree { agg_fanout } else { 0 },
+                depth: if tree { spec.depth() } else { 1 },
+                nodes: if tree { spec.nodes() } else { 1 },
+                reports_per_sec: (ranks * steps) as f64 / wall.max(1e-9),
+                events: fin.global_events.len() as u64,
+                wall_seconds: wall,
+            });
+        }
+    }
+    Ok(AggTreeSweepResult { rows, steps, producers })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -916,13 +1088,40 @@ mod tests {
         assert!(text.contains("PS endpoint sweep"));
         let reb = run_ps_rebalance_sweep(2, 2, 50, 11);
         let conns = run_ps_conn_sweep(&[2], 8, 4, 11).unwrap();
-        let combined = ps_bench_json(&shards, &eps, &reb, &conns);
+        let aggtree = run_aggtree_sweep(&[8], 12, 2, 2, 11).unwrap();
+        let combined = ps_bench_json(&shards, &eps, &reb, &conns, &aggtree);
         assert_eq!(combined.get("bench").unwrap().as_str(), Some("ps_shards"));
         assert_eq!(combined.get("rows").unwrap().as_arr().unwrap().len(), 1);
         assert_eq!(combined.get("endpoint_rows").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(combined.get("rebalance_rows").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(combined.get("conn_rows").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(combined.get("aggtree_rows").unwrap().as_arr().unwrap().len(), 2);
         crate::util::json::parse(&combined.to_pretty()).unwrap();
+    }
+
+    #[test]
+    fn aggtree_sweep_pairs_flat_and_tree_rows() {
+        let res = run_aggtree_sweep(&[8, 32], 24, 4, 2, 7).unwrap();
+        assert_eq!(res.rows.len(), 4);
+        for pair in res.rows.chunks(2) {
+            let (flat, tree) = (&pair[0], &pair[1]);
+            assert_eq!(flat.mode, "flat");
+            assert_eq!(tree.mode, "tree");
+            assert_eq!(flat.ranks, tree.ranks);
+            assert!(flat.reports_per_sec > 0.0 && tree.reports_per_sec > 0.0);
+            assert!(flat.events > 0, "spike schedule must flag global events");
+            assert_eq!(
+                flat.events, tree.events,
+                "tree must flag exactly the events flat flags at {} ranks",
+                flat.ranks
+            );
+            assert_eq!(flat.depth, 1);
+            assert_eq!(flat.nodes, 1);
+            assert!(tree.depth >= 2 && tree.nodes > 1);
+        }
+        let text = res.render();
+        assert!(text.contains("aggregation-tree sweep"));
+        assert_eq!(res.rows_json().as_arr().unwrap().len(), 4);
     }
 
     #[test]

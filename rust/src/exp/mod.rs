@@ -12,9 +12,9 @@ pub mod figs3_6;
 
 pub use case_study::{run_case_study, CaseStudyResult};
 pub use fig7::{
-    ps_bench_json, run_fig7, run_ps_conn_sweep, run_ps_endpoint_sweep, run_ps_rebalance_sweep,
-    run_ps_shard_sweep, ConnSweepResult, EndpointSweepResult, Fig7Result, RebalanceSweepResult,
-    ShardSweepResult,
+    ps_bench_json, run_aggtree_sweep, run_fig7, run_ps_conn_sweep, run_ps_endpoint_sweep,
+    run_ps_rebalance_sweep, run_ps_shard_sweep, AggTreeSweepResult, ConnSweepResult,
+    EndpointSweepResult, Fig7Result, RebalanceSweepResult, ShardSweepResult,
 };
 pub use fig8_table1::{run_fig8, Fig8Result};
 pub use fig9::{

@@ -27,6 +27,7 @@
 //! | [`placement`] | epoch-versioned slot → shard routing tables |
 //! | [`probe`] | probe DSL + predicate VM: compiled record filters |
 //! | [`ps`] | the online AD parameter server |
+//! | [`aggtree`] | hierarchical aggregation tree for O(100k)-rank fan-in |
 //! | [`provenance`] | prescriptive provenance records, store and queries |
 //! | [`provdb`] | the sharded, networked provenance database service |
 //! | [`viz`] | visualization backend (HTTP API + terminal renderings) |
@@ -37,6 +38,7 @@
 
 pub mod adios;
 pub mod ad;
+pub mod aggtree;
 pub mod bench;
 pub mod cli;
 pub mod config;

@@ -21,6 +21,10 @@
 //! chimbuko ps-shard-server --shard-id I --shards N [--addr host:port]
 //!                   [--reactor-threads N]
 //!                   one stat shard of a multi-process parameter server
+//! chimbuko agg-node --node I --rank-lo L --rank-hi H [--depth D]
+//!                   [--addr host:port] [--reactor-threads N]
+//!                   one leaf of the hierarchical aggregation tree (a
+//!                   parent configured with `ps.agg_endpoints` folds it)
 //! chimbuko provdb-server [--config f] [--addr host:port] [--shards N]
 //!                   [--dir d] [--max-records-per-rank N]
 //!                   [--segment-records N] [--retain-window-us N]
@@ -62,6 +66,7 @@ fn main() {
         Some("compare") => cmd_compare(&args),
         Some("ps-server") => cmd_ps_server(&args),
         Some("ps-shard-server") => cmd_ps_shard_server(&args),
+        Some("agg-node") => cmd_agg_node(&args),
         Some("provdb-server") => cmd_provdb_server(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("probe") => cmd_probe(&args),
@@ -71,7 +76,7 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: chimbuko <run|gen|replay|serve|exp|compare|ps-server|ps-shard-server|provdb-server|analyze|probe|version> [options]\n\
+                "usage: chimbuko <run|gen|replay|serve|exp|compare|ps-server|ps-shard-server|agg-node|provdb-server|analyze|probe|version> [options]\n\
                  see `rust/src/main.rs` header or README for options"
             );
             std::process::exit(2);
@@ -418,6 +423,8 @@ fn cmd_ps_server(args: &Args) -> anyhow::Result<()> {
         rebalance_interval_ms: args.u64_opt("rebalance-interval-ms", 0),
         rebalance_max_ratio: args.f64_opt("rebalance-max-ratio", 1.5),
         rebalance_min_merges: args.u64_opt("rebalance-min-merges", 256),
+        agg_fanout: args.usize_opt("agg-fanout", 0),
+        agg_endpoints: Vec::new(),
         trigger_probes: Vec::new(),
         trigger_tx: None,
     })?;
@@ -473,6 +480,37 @@ fn cmd_ps_shard_server(args: &Args) -> anyhow::Result<()> {
         "ps-shard-server shard {}/{} listening on {} — Ctrl-C to stop",
         shard_id,
         shards,
+        server.addr()
+    );
+    std::io::stdout().flush().ok();
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// One leaf node of the hierarchical aggregation tree (`aggtree::net`
+/// protocol, kinds 13–16): owns the `[rank_lo, rank_hi)` slice of the
+/// step timeline and answers report / fetch / flush frames from its
+/// in-process parent. Point a `ps.agg_endpoints` slot at its address.
+fn cmd_agg_node(args: &Args) -> anyhow::Result<()> {
+    use std::io::Write;
+    let addr = args.str_opt("addr", "127.0.0.1:5571");
+    let node = args.usize_opt("node", 1) as u32;
+    let depth = args.usize_opt("depth", 1) as u32;
+    let rank_lo = args.usize_opt("rank-lo", 0) as u32;
+    let rank_hi = args.usize_opt("rank-hi", 1) as u32;
+    anyhow::ensure!(rank_lo < rank_hi, "--rank-lo must be < --rank-hi");
+    let net_opts = chimbuko::util::net::ReactorOpts {
+        threads: args.usize_opt("reactor-threads", 2),
+        ..Default::default()
+    };
+    let server =
+        chimbuko::aggtree::net::AggNodeServer::start(&addr, node, depth, rank_lo, rank_hi, net_opts)?;
+    println!(
+        "agg-node {} ranks [{},{}) listening on {} — Ctrl-C to stop",
+        node,
+        rank_lo,
+        rank_hi,
         server.addr()
     );
     std::io::stdout().flush().ok();

@@ -149,6 +149,29 @@ pub struct ShardLoad {
     pub queue_depth: u64,
 }
 
+/// Per-aggregator-node fold counters, published by each node of the
+/// hierarchical aggregation tree ([`crate::aggtree`]) inside its partial
+/// snapshot and surfaced through `/api/ps_stats`. The flat aggregator
+/// publishes none (its degenerate tree has no fold nodes to report).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AggNodeLoad {
+    /// Tree-wide node id (root = 0, then level by level).
+    pub node: u32,
+    /// Distance from the root (root = 0).
+    pub depth: u32,
+    /// Contiguous rank-range this node owns: `[rank_lo, rank_hi)`.
+    pub rank_lo: u32,
+    pub rank_hi: u32,
+    /// Messages folded (reports at leaves, child partials at interiors).
+    pub folds: u64,
+    /// Completed step partials pushed to the parent (or, at the root,
+    /// step quorums completed).
+    pub pushed: u64,
+    /// Partials shed by step-distance expiry (quorum never met) plus
+    /// straggler reports short-circuited past the fold.
+    pub shed: u64,
+}
+
 /// Snapshot published to the visualization ingest channel.
 ///
 /// In the sharded server each thread publishes a *partial* snapshot (the
@@ -180,6 +203,9 @@ pub struct VizSnapshot {
     pub global_events: Vec<GlobalEvent>,
     /// Per-shard load counters (absolute), from the stat shards' partials.
     pub shard_loads: Vec<ShardLoad>,
+    /// Per-node fold counters (absolute) from the hierarchical
+    /// aggregation tree; empty under the flat aggregator.
+    pub agg_nodes: Vec<AggNodeLoad>,
     /// Epoch of the placement table the stat shards were serving when
     /// this snapshot's partials were taken (0 until a rebalance commits).
     pub placement_epoch: u64,
@@ -198,6 +224,12 @@ impl VizSnapshot {
         self.ranks.extend(other.ranks.iter().cloned());
         self.ranks.sort_by_key(|r| (r.app, r.rank));
         self.fresh_steps.extend(other.fresh_steps.iter().cloned());
+        // Deterministic order regardless of which partial carried a step:
+        // the aggregation tree folds leaf partials child-by-child, the
+        // flat aggregator appends in arrival order — the sort makes both
+        // publish the identical sequence (sort_by_key is stable, so
+        // same-key stragglers keep their arrival order too).
+        self.fresh_steps.sort_by_key(|s| (s.step, s.app, s.rank));
         self.total_anomalies += other.total_anomalies;
         self.total_executions += other.total_executions;
         self.functions_tracked += other.functions_tracked;
@@ -209,6 +241,8 @@ impl VizSnapshot {
         self.global_events.sort_by_key(|e| e.step);
         self.shard_loads.extend(other.shard_loads.iter().copied());
         self.shard_loads.sort_by_key(|l| l.shard);
+        self.agg_nodes.extend(other.agg_nodes.iter().copied());
+        self.agg_nodes.sort_by_key(|n| n.node);
         self.placement_epoch = self.placement_epoch.max(other.placement_epoch);
     }
 
@@ -237,6 +271,9 @@ impl VizSnapshot {
         self.global_events.sort_by_key(|e| e.step);
         if !d.shard_loads.is_empty() {
             self.shard_loads = d.shard_loads.clone();
+        }
+        if !d.agg_nodes.is_empty() {
+            self.agg_nodes = d.agg_nodes.clone();
         }
         self.placement_epoch = self.placement_epoch.max(d.placement_epoch);
         self.delta = false;
@@ -319,7 +356,7 @@ const GLOBAL_MIN_ANOMS: u64 = 3;
 /// lockstep); expire it with whatever partial total arrived. Quorum-met
 /// steps still complete exactly — expiry only catches the leak when
 /// `reports_per_step` overstates the reporting ranks.
-const STEP_ACC_MAX_LAG: u64 = 64;
+pub(crate) const STEP_ACC_MAX_LAG: u64 = 64;
 
 struct RankAccum {
     step_counts: RunStats,
@@ -409,27 +446,7 @@ impl ParameterServer {
                     }
                     return true;
                 }
-                let entry = self.step_acc.entry(stat.step).or_insert((0, 0));
-                entry.0 += 1;
-                entry.1 += stat.n_anomalies;
-                if entry.0 >= self.reports_per_step {
-                    let (_, total) = self.step_acc.remove(&stat.step).unwrap();
-                    if self.step_totals.count() >= GLOBAL_MIN_HISTORY
-                        && total >= GLOBAL_MIN_ANOMS
-                    {
-                        let sd = self.step_totals.stddev();
-                        let mean = self.step_totals.mean();
-                        let score = if sd > 0.0 { (total as f64 - mean) / sd } else { 0.0 };
-                        if sd > 0.0 && total as f64 > mean + GLOBAL_BETA * sd {
-                            self.global_events.push(GlobalEvent {
-                                step: stat.step,
-                                total_anomalies: total,
-                                score,
-                            });
-                        }
-                    }
-                    self.step_totals.push(total as f64);
-                }
+                self.accumulate_step(stat.step, 1, stat.n_anomalies);
                 self.fresh.push(stat);
                 self.reports_since_publish += 1;
                 if self.reports_since_publish >= self.publish_every {
@@ -445,6 +462,53 @@ impl ParameterServer {
                 return false;
             }
         }
+        true
+    }
+
+    /// Fold a per-step quorum contribution coming from a child node of
+    /// the aggregation tree ([`crate::aggtree`]): `count` rank reports
+    /// totalling `anoms` anomalies for `step`. Mirrors the `Report`
+    /// step-accumulation path (step-distance expiry, straggler
+    /// short-circuit, quorum completion, §V global-event trigger)
+    /// without touching per-rank state — the tree's leaves own that.
+    /// Returns `None` when the contribution was shed as a straggler,
+    /// `Some(completed)` otherwise — the root's shed/pushed counters.
+    pub fn fold_partial_step(&mut self, step: u64, count: u64, anoms: u64) -> Option<bool> {
+        if step > self.max_step_seen {
+            self.max_step_seen = step;
+            self.expire_stale_steps();
+        }
+        if step < self.max_step_seen.saturating_sub(STEP_ACC_MAX_LAG) {
+            return None;
+        }
+        Some(self.accumulate_step(step, count as usize, anoms))
+    }
+
+    /// Step-quorum accumulation and the §V global-event trigger, shared
+    /// by the flat `Report` path (`count` = 1) and the tree's partial
+    /// folds (`count` = reports behind the child's partial). Returns
+    /// whether the contribution completed the step's global quorum.
+    fn accumulate_step(&mut self, step: u64, count: usize, anoms: u64) -> bool {
+        let entry = self.step_acc.entry(step).or_insert((0, 0));
+        entry.0 += count;
+        entry.1 += anoms;
+        if entry.0 < self.reports_per_step {
+            return false;
+        }
+        let (_, total) = self.step_acc.remove(&step).expect("entry just updated");
+        if self.step_totals.count() >= GLOBAL_MIN_HISTORY && total >= GLOBAL_MIN_ANOMS {
+            let sd = self.step_totals.stddev();
+            let mean = self.step_totals.mean();
+            let score = if sd > 0.0 { (total as f64 - mean) / sd } else { 0.0 };
+            if sd > 0.0 && total as f64 > mean + GLOBAL_BETA * sd {
+                self.global_events.push(GlobalEvent {
+                    step,
+                    total_anomalies: total,
+                    score,
+                });
+            }
+        }
+        self.step_totals.push(total as f64);
         true
     }
 
@@ -476,14 +540,22 @@ impl ParameterServer {
     /// events flagged since the last publish, absolute totals); drains
     /// `fresh` and the dirty-rank set.
     pub fn publish(&mut self) {
+        let snap = self.take_delta();
+        if let Some(tx) = &self.viz_tx {
+            let _ = tx.send(snap);
+        }
+    }
+
+    /// [`Self::publish`] without the send: drain and return the delta
+    /// snapshot. The aggregation-tree root uses this to fold the leaves'
+    /// partial deltas in before forwarding one combined delta to viz.
+    pub fn take_delta(&mut self) -> VizSnapshot {
         self.reports_since_publish = 0;
         let snap = self.snapshot_delta();
         self.fresh.clear();
         self.dirty_ranks.clear();
         self.events_published = self.global_events.len();
-        if let Some(tx) = &self.viz_tx {
-            let _ = tx.send(snap);
-        }
+        snap
     }
 
     /// True when reports arrived since the last publish (the wall-clock
@@ -511,15 +583,20 @@ impl ParameterServer {
             })
             .collect();
         ranks.sort_by_key(|r| (r.app, r.rank));
+        // Deterministic fresh order: flat and tree aggregators must emit
+        // bit-identical snapshots regardless of arrival interleaving.
+        let mut fresh_steps = self.fresh.clone();
+        fresh_steps.sort_by_key(|s| (s.step, s.app, s.rank));
         let published = self.events_published.min(self.global_events.len());
         VizSnapshot {
             ranks,
-            fresh_steps: self.fresh.clone(),
+            fresh_steps,
             total_anomalies: self.total_anomalies,
             total_executions: self.total_executions,
             functions_tracked: self.global.len() as u64,
             global_events: self.global_events[published..].to_vec(),
             shard_loads: Vec::new(),
+            agg_nodes: Vec::new(),
             // The aggregator has no placement view; the stat shards'
             // partials carry the epoch and the merge takes the max.
             placement_epoch: 0,
@@ -541,14 +618,17 @@ impl ParameterServer {
             })
             .collect();
         ranks.sort_by_key(|r| (r.app, r.rank));
+        let mut fresh_steps = self.fresh.clone();
+        fresh_steps.sort_by_key(|s| (s.step, s.app, s.rank));
         VizSnapshot {
             ranks,
-            fresh_steps: self.fresh.clone(),
+            fresh_steps,
             total_anomalies: self.total_anomalies,
             total_executions: self.total_executions,
             functions_tracked: self.global.len() as u64,
             global_events: self.global_events.clone(),
             shard_loads: Vec::new(),
+            agg_nodes: Vec::new(),
             placement_epoch: 0,
             delta: false,
         }

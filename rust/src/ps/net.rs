@@ -116,12 +116,14 @@ const KIND_PLACEMENT: u8 = 9;
 const KIND_MIGRATE: u8 = 10;
 const KIND_INSTALL: u8 = 11;
 const KIND_SLOT_LOADS: u8 = 12;
+// Kinds 13–16 (agg-node hello / report / fetch / flush) belong to the
+// hierarchical aggregation tree — see [`crate::aggtree::net`].
 
 /// Sync reply status bytes (both roles).
 const STATUS_OK: u8 = 0;
 const STATUS_REROUTED: u8 = 1;
 
-fn put_stats(buf: &mut Vec<u8>, fid: u32, st: &RunStats) {
+pub(crate) fn put_stats(buf: &mut Vec<u8>, fid: u32, st: &RunStats) {
     buf.extend_from_slice(&fid.to_le_bytes());
     buf.extend_from_slice(&st.count().to_le_bytes());
     buf.extend_from_slice(&st.mean().to_le_bytes());
@@ -130,7 +132,7 @@ fn put_stats(buf: &mut Vec<u8>, fid: u32, st: &RunStats) {
     buf.extend_from_slice(&st.max().to_le_bytes());
 }
 
-fn read_stats(c: &mut Cursor) -> Result<(u32, RunStats)> {
+pub(crate) fn read_stats(c: &mut Cursor) -> Result<(u32, RunStats)> {
     let fid = c.u32()?;
     let n = c.u64()?;
     let mean = c.f64()?;

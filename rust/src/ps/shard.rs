@@ -694,11 +694,19 @@ impl PsClient {
     }
 }
 
+/// The aggregator's joinable form: the classic flat single-thread
+/// aggregator, or a hierarchical aggregation tree ([`crate::aggtree`])
+/// whose root owns the same state.
+enum AggJoin {
+    Flat(JoinHandle<ParameterServer>),
+    Tree(crate::aggtree::TreeHandle),
+}
+
 /// Joinable handle to a spawned constellation.
 pub struct PsHandle {
     shard_txs: Vec<Sender<ShardMsg>>,
     conns: Arc<Vec<ShardConn>>,
-    agg_join: JoinHandle<ParameterServer>,
+    agg_join: AggJoin,
     merge_join: JoinHandle<()>,
     shard_joins: Vec<JoinHandle<HashMap<FuncKey, RunStats>>>,
     sync_count: Arc<AtomicU64>,
@@ -861,10 +869,22 @@ impl PsHandle {
         if let Some(j) = self.reb_join.take() {
             let _ = j.join();
         }
-        let mut agg = self.agg_join.join().expect("ps aggregator panicked");
-        // Close the merge stage's job channel: the aggregator's viz
-        // sender is the only producer.
-        agg.detach_viz();
+        // Join the aggregator in either shape; both end with the merge
+        // stage's job channel closed (the flat aggregator by detaching
+        // its viz sender, the tree because the root thread owning the
+        // sender has exited by the time `TreeHandle::join` returns).
+        enum AggFin {
+            Flat(ParameterServer),
+            Tree(crate::aggtree::TreeFinal),
+        }
+        let agg_fin = match self.agg_join {
+            AggJoin::Flat(j) => {
+                let mut agg = j.join().expect("ps aggregator panicked");
+                agg.detach_viz();
+                AggFin::Flat(agg)
+            }
+            AggJoin::Tree(tree) => AggFin::Tree(tree.join()),
+        };
         self.merge_join.join().expect("ps merge stage panicked");
         // Gather each shard's final partial (function counts + load
         // counters) while the shards are still alive, so the final
@@ -912,11 +932,23 @@ impl PsHandle {
             let part = j.join().expect("ps shard panicked");
             global.extend(part);
         }
-        let mut snapshot = agg.snapshot();
+        let (mut snapshot, global_events) = match agg_fin {
+            AggFin::Flat(agg) => (agg.snapshot(), agg.global_events().to_vec()),
+            AggFin::Tree(fin) => {
+                // The root owns events/cursors/global step stats; the
+                // leaves' absolute fold (`rest`) carries the rank plane
+                // and per-node load counters. Merged, they are the flat
+                // aggregator's final snapshot.
+                let events = fin.root.global_events().to_vec();
+                let mut s = fin.root.snapshot();
+                s.merge(&fin.rest);
+                s.delta = false;
+                (s, events)
+            }
+        };
         snapshot.functions_tracked = global.len() as u64 + remote_functions;
         snapshot.shard_loads = shard_loads;
         snapshot.placement_epoch = placement_epoch;
-        let global_events = agg.global_events().to_vec();
         PsFinal {
             snapshot,
             global,
@@ -972,6 +1004,70 @@ pub struct PsOpts {
     pub trigger_probes: Vec<Arc<crate::probe::Probe>>,
     /// Where trigger hits go; `None` disables trigger evaluation.
     pub trigger_tx: Option<Sender<crate::provenance::ProvRecord>>,
+    /// Aggregation-tree fanout: ≥ 2 spreads the aggregator into a
+    /// hierarchical fold tree ([`crate::aggtree`]) when
+    /// `reports_per_step` spans at least two leaves; 0/1 (default)
+    /// keeps the flat single-thread aggregator. The tree is pinned
+    /// bit-equivalent to flat, so this is purely a scaling knob.
+    pub agg_fanout: usize,
+    /// Remote `agg-node` process endpoints by leaf index ("" =
+    /// in-process leaf); only read when the tree is engaged.
+    pub agg_endpoints: Vec<String>,
+}
+
+/// Build the event-version fan-out hook shared by the flat aggregator
+/// loop and the tree root: evaluate trigger probes over newly flagged
+/// global events, mirror the version into the shared atomic, and push
+/// it to remote shard endpoints so piggybacked event-fetch gating works
+/// across processes.
+fn event_fanout(
+    trigger_probes: Vec<Arc<crate::probe::Probe>>,
+    trigger_tx: Option<Sender<crate::provenance::ProvRecord>>,
+    agg_version: Arc<AtomicU64>,
+    push_conns: Arc<Vec<ShardConn>>,
+) -> impl FnMut(u64, &[GlobalEvent]) + Send + 'static {
+    // Per-probe deterministic sample streams + a reused encode buffer
+    // for trigger evaluation (the probe VM reads the binary record
+    // form).
+    let mut trigger_counters = vec![0u64; trigger_probes.len()];
+    let mut trigger_buf: Vec<u8> = Vec::new();
+    move |v: u64, fresh: &[GlobalEvent]| {
+        // Trigger probes run at flag time, before the next sync period
+        // can deliver the event to any rank: a matching event's record
+        // is on its way to provDB while the context dumps are still
+        // pending.
+        if let (false, Some(tx)) = (trigger_probes.is_empty(), &trigger_tx) {
+            for ev in fresh {
+                let rec = global_event_record(ev);
+                trigger_buf.clear();
+                crate::provenance::codec::encode(&rec, &mut trigger_buf);
+                let mut pushed = false;
+                for (pi, probe) in trigger_probes.iter().enumerate() {
+                    if !probe.matches(&trigger_buf) {
+                        continue;
+                    }
+                    let keep = probe.sample_keep(trigger_counters[pi]);
+                    trigger_counters[pi] += 1;
+                    if keep && !pushed {
+                        // At most one push per event even when several
+                        // probes match.
+                        let _ = tx.send(rec.clone());
+                        pushed = true;
+                    }
+                }
+            }
+        }
+        agg_version.store(v, Ordering::SeqCst);
+        for conn in push_conns.iter() {
+            if let ShardConn::Tcp(pool) = conn {
+                if let Err(e) =
+                    pool[0].lock().expect("ps shard conn lock").with(|w| w.push_version(v))
+                {
+                    crate::log_warn!("ps", "version push failed: {e:#}");
+                }
+            }
+        }
+    }
 }
 
 /// Synthesize the provenance record a trigger probe evaluates for one
@@ -1092,115 +1188,96 @@ pub fn spawn_with(opts: PsOpts) -> anyhow::Result<(PsClient, PsHandle)> {
     // stage instead of the viz channel directly. It also owns the
     // event-version mirror: after every handled request the version is
     // stored for local shards (shared atomic) and pushed to remote shard
-    // endpoints when it changed.
+    // endpoints when it changed. With `agg_fanout` ≥ 2 (and enough ranks
+    // for two levels) the single thread is replaced by a hierarchical
+    // aggregation tree speaking the same request channel; the root runs
+    // the same fan-out hook, so gating and triggers are shape-blind.
     let (job_tx, job_rx) = channel::<VizSnapshot>();
-    let (agg_tx, agg_rx): (Sender<PsRequest>, Receiver<PsRequest>) = channel();
     let publish_every = opts.publish_every;
     let reports_per_step = opts.reports_per_step;
     let interval_ms = opts.publish_interval_ms;
-    let push_conns = conns.clone();
-    let agg_version = version.clone();
-    let trigger_probes = opts.trigger_probes;
-    let trigger_tx = opts.trigger_tx;
-    let agg_join = std::thread::Builder::new()
-        .name("chimbuko-ps-agg".into())
-        .spawn(move || {
-            let mut ps = ParameterServer::new(Some(job_tx), publish_every, reports_per_step);
-            let mut running = true;
-            let mut last_interval_pub = Instant::now();
-            let mut last_ver = 0u64;
-            // Per-probe deterministic sample streams + a reused encode
-            // buffer for trigger evaluation (the probe VM reads the
-            // binary record form).
-            let mut trigger_counters = vec![0u64; trigger_probes.len()];
-            let mut trigger_buf: Vec<u8> = Vec::new();
-            while running {
-                let req = if interval_ms == 0 {
-                    match agg_rx.recv() {
-                        Ok(r) => Some(r),
-                        Err(_) => break,
-                    }
-                } else {
-                    let budget = Duration::from_millis(interval_ms)
-                        .saturating_sub(last_interval_pub.elapsed());
-                    match agg_rx.recv_timeout(budget.max(Duration::from_millis(1))) {
-                        Ok(r) => Some(r),
-                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
-                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
-                    }
-                };
-                match req {
-                    Some(r) => {
-                        if !ps.handle(r) {
-                            running = false;
+    let fanout_hook =
+        event_fanout(opts.trigger_probes, opts.trigger_tx, version.clone(), conns.clone());
+    let use_tree = opts.agg_fanout >= 2
+        && crate::aggtree::TreeSpec::plan(opts.agg_fanout, reports_per_step.max(1)).depth() >= 2;
+    let (agg_tx, agg_join) = if use_tree {
+        let tree = crate::aggtree::spawn_tree(
+            crate::aggtree::TreeOpts {
+                fanout: opts.agg_fanout,
+                ranks: reports_per_step.max(1),
+                publish_every,
+                publish_interval_ms: interval_ms,
+                endpoints: opts.agg_endpoints.clone(),
+            },
+            job_tx,
+            Box::new(fanout_hook),
+        )?;
+        let tx = tree.request_sender();
+        (tx, AggJoin::Tree(tree))
+    } else {
+        let (agg_tx, agg_rx): (Sender<PsRequest>, Receiver<PsRequest>) = channel();
+        let mut fanout_hook = fanout_hook;
+        let join = std::thread::Builder::new()
+            .name("chimbuko-ps-agg".into())
+            .spawn(move || {
+                let mut ps = ParameterServer::new(Some(job_tx), publish_every, reports_per_step);
+                let mut running = true;
+                let mut last_interval_pub = Instant::now();
+                let mut last_ver = 0u64;
+                while running {
+                    let req = if interval_ms == 0 {
+                        match agg_rx.recv() {
+                            Ok(r) => Some(r),
+                            Err(_) => break,
                         }
-                        // Wall-clock cadence must also fire under
-                        // sustained traffic (recv_timeout never times
-                        // out while messages keep arriving), so check
-                        // the interval after every handled message too.
-                        if interval_ms > 0
-                            && last_interval_pub.elapsed() >= Duration::from_millis(interval_ms)
-                        {
+                    } else {
+                        let budget = Duration::from_millis(interval_ms)
+                            .saturating_sub(last_interval_pub.elapsed());
+                        match agg_rx.recv_timeout(budget.max(Duration::from_millis(1))) {
+                            Ok(r) => Some(r),
+                            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+                            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                        }
+                    };
+                    match req {
+                        Some(r) => {
+                            if !ps.handle(r) {
+                                running = false;
+                            }
+                            // Wall-clock cadence must also fire under
+                            // sustained traffic (recv_timeout never times
+                            // out while messages keep arriving), so check
+                            // the interval after every handled message too.
+                            if interval_ms > 0
+                                && last_interval_pub.elapsed()
+                                    >= Duration::from_millis(interval_ms)
+                            {
+                                if ps.pending_publish() {
+                                    ps.publish();
+                                }
+                                last_interval_pub = Instant::now();
+                            }
+                        }
+                        None => {
+                            // Idle tick: publish only when something new
+                            // arrived since the last snapshot.
                             if ps.pending_publish() {
                                 ps.publish();
                             }
                             last_interval_pub = Instant::now();
                         }
                     }
-                    None => {
-                        // Idle tick: publish only when something new
-                        // arrived since the last snapshot.
-                        if ps.pending_publish() {
-                            ps.publish();
-                        }
-                        last_interval_pub = Instant::now();
+                    let v = ps.event_version();
+                    if v != last_ver {
+                        fanout_hook(v, &ps.global_events()[last_ver as usize..]);
+                        last_ver = v;
                     }
                 }
-                let v = ps.event_version();
-                if v != last_ver {
-                    // Trigger probes run at flag time, before the next
-                    // sync period can deliver the event to any rank: a
-                    // matching event's record is on its way to provDB
-                    // while the context dumps are still pending.
-                    if let (false, Some(tx)) = (trigger_probes.is_empty(), &trigger_tx) {
-                        for ev in &ps.global_events()[last_ver as usize..] {
-                            let rec = global_event_record(ev);
-                            trigger_buf.clear();
-                            crate::provenance::codec::encode(&rec, &mut trigger_buf);
-                            let mut pushed = false;
-                            for (pi, probe) in trigger_probes.iter().enumerate() {
-                                if !probe.matches(&trigger_buf) {
-                                    continue;
-                                }
-                                let keep = probe.sample_keep(trigger_counters[pi]);
-                                trigger_counters[pi] += 1;
-                                if keep && !pushed {
-                                    // At most one push per event even
-                                    // when several probes match.
-                                    let _ = tx.send(rec.clone());
-                                    pushed = true;
-                                }
-                            }
-                        }
-                    }
-                    agg_version.store(v, Ordering::SeqCst);
-                    for conn in push_conns.iter() {
-                        if let ShardConn::Tcp(pool) = conn {
-                            if let Err(e) = pool[0]
-                                .lock()
-                                .expect("ps shard conn lock")
-                                .with(|w| w.push_version(v))
-                            {
-                                crate::log_warn!("ps", "version push failed: {e:#}");
-                            }
-                        }
-                    }
-                    last_ver = v;
-                }
-            }
-            ps
-        })
-        .expect("spawning ps aggregator");
+                ps
+            })
+            .expect("spawning ps aggregator");
+        (agg_tx, AggJoin::Flat(join))
+    };
 
     // Merge stage: fold one partial per stat shard onto each aggregator
     // snapshot delta, then forward downstream. Commutative merges make

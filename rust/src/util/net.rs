@@ -21,7 +21,11 @@
 //!   it. A failed operation drops the connection; the next use redials
 //!   after a capped, **jittered** exponential cooldown, so one peer
 //!   restart never permanently strands a client and mass-shed clients do
-//!   not reconnect in synchronized waves.
+//!   not reconnect in synchronized waves. `Busy`-shed requests are the
+//!   exception: the server is alive, so [`Reconnector::with`] keeps the
+//!   connection and retries in-call under a bounded budget
+//!   ([`BUSY_RETRY_BUDGET`]) with jittered pauses, counting retries and
+//!   budget exhaustion on an attached [`NetStats`].
 //! * [`MuxCore`] — the client half of stream multiplexing: several
 //!   logical request/reply streams (a driver's conn-pool slots) share
 //!   one socket, with replies demultiplexed to the stream that asked.
@@ -148,6 +152,11 @@ pub struct NetStats {
     pub frames_out: AtomicU64,
     /// Requests answered with `Busy` instead of being processed.
     pub shed: AtomicU64,
+    /// Client side of shedding: `Busy` replies a [`Reconnector`] retried
+    /// in-call under its budget, and calls that ran the budget dry and
+    /// surfaced the busy error to the caller.
+    pub busy_retries: AtomicU64,
+    pub busy_exhausted: AtomicU64,
     /// Connections dropped for exceeding the hard backlog bound.
     pub dropped: AtomicU64,
     /// Current unflushed reply bytes summed across connections (gauge).
@@ -172,6 +181,14 @@ impl NetStats {
 
     pub fn dropped_count(&self) -> u64 {
         self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn busy_retry_count(&self) -> u64 {
+        self.busy_retries.load(Ordering::Relaxed)
+    }
+
+    pub fn busy_exhausted_count(&self) -> u64 {
+        self.busy_exhausted.load(Ordering::Relaxed)
     }
 
     /// Current server-wide reply backlog, bytes.
@@ -826,6 +843,24 @@ pub fn mux_connect(slot: &MuxSlot, dial: impl FnOnce() -> Result<Arc<MuxCore>>) 
 const INITIAL_BACKOFF: Duration = Duration::from_millis(50);
 const MAX_BACKOFF: Duration = Duration::from_secs(2);
 
+/// In-call retries [`Reconnector::with`] grants a request the server
+/// answered with `Busy` before surfacing the error. Bounded so a
+/// persistently-overloaded server turns into caller-visible degradation
+/// (the PS router's partial replies) instead of an unbounded stall.
+pub const BUSY_RETRY_BUDGET: u32 = 3;
+
+/// Pause before re-sending a shed request; doubles per retry within one
+/// call and is jittered into `[d/2, d]` like the reconnect cooldown, so
+/// a herd of shed clients doesn't re-offer its load in one wave.
+const BUSY_RETRY_PAUSE: Duration = Duration::from_millis(20);
+
+/// A `Busy` control frame surfaces as an error whose chain carries the
+/// wire layer's "server busy" text (see [`wire::read_msg`] and
+/// [`MuxCore::recv`]); everything else is a transport failure.
+fn is_busy_shed(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| c.to_string().contains("server busy"))
+}
+
 /// A connection that knows how to re-establish itself.
 ///
 /// Operations run through [`with`](Self::with) (or the split
@@ -844,6 +879,7 @@ pub struct Reconnector<C> {
     consecutive_failures: u32,
     retry_after: Option<Instant>,
     jitter: u64,
+    stats: Option<Arc<NetStats>>,
 }
 
 impl<C> Reconnector<C> {
@@ -856,7 +892,15 @@ impl<C> Reconnector<C> {
             consecutive_failures: 0,
             retry_after: None,
             jitter: jitter_seed(addr),
+            stats: None,
         }
+    }
+
+    /// Attach a counter sheet: busy retries and budget exhaustions in
+    /// [`with`](Self::with) are tallied on it.
+    pub fn with_stats(mut self, stats: Arc<NetStats>) -> Self {
+        self.stats = Some(stats);
+        self
     }
 
     /// Eager: dial now, fail fast on a bad address.
@@ -932,17 +976,52 @@ impl<C> Reconnector<C> {
         self.retry_after = Some(Instant::now() + Duration::from_nanos(delay));
     }
 
-    /// Run one operation against the (re)connected peer; on error the
-    /// connection is dropped so the next call redials.
-    pub fn with<T>(&mut self, op: impl FnOnce(&mut C) -> Result<T>) -> Result<T> {
-        let c = self.get()?;
-        match op(c) {
-            Ok(v) => Ok(v),
-            Err(e) => {
+    /// Run one operation against the (re)connected peer. A transport
+    /// error drops the connection so the next call redials; a `Busy`
+    /// shed keeps it (the server is alive, it declined the request) and
+    /// retries in-call up to [`BUSY_RETRY_BUDGET`] times after a
+    /// jittered, doubling pause, surfacing the busy error — and counting
+    /// the exhaustion on any attached [`NetStats`] — once the budget
+    /// runs dry.
+    pub fn with<T>(&mut self, mut op: impl FnMut(&mut C) -> Result<T>) -> Result<T> {
+        let mut busy_spent = 0u32;
+        loop {
+            let c = self.get()?;
+            let err = match op(c) {
+                Ok(v) => return Ok(v),
+                Err(e) => e,
+            };
+            if !is_busy_shed(&err) {
                 self.fail();
-                Err(e)
+                return Err(err);
             }
+            if busy_spent >= BUSY_RETRY_BUDGET {
+                if let Some(s) = &self.stats {
+                    s.busy_exhausted.fetch_add(1, Ordering::Relaxed);
+                }
+                return Err(err.context(format!(
+                    "{} still shedding after {BUSY_RETRY_BUDGET} busy retries",
+                    self.addr
+                )));
+            }
+            if let Some(s) = &self.stats {
+                s.busy_retries.fetch_add(1, Ordering::Relaxed);
+            }
+            std::thread::sleep(self.busy_pause(busy_spent));
+            busy_spent += 1;
         }
+    }
+
+    /// Jittered pause before retrying a shed request: doubles per
+    /// attempt from [`BUSY_RETRY_PAUSE`], uniform in `[d/2, d]` off the
+    /// same per-client jitter stream as the reconnect cooldown.
+    fn busy_pause(&mut self, attempt: u32) -> Duration {
+        let base = BUSY_RETRY_PAUSE
+            .saturating_mul(1u32 << attempt.min(8))
+            .min(MAX_BACKOFF);
+        let nanos = base.as_nanos() as u64;
+        let delay = nanos / 2 + crate::util::rng::splitmix64(&mut self.jitter) % (nanos / 2 + 1);
+        Duration::from_nanos(delay)
     }
 }
 
@@ -1210,6 +1289,59 @@ mod tests {
             }
         }
         assert!(diverged, "independent clients must not share a backoff sequence");
+    }
+
+    #[test]
+    fn busy_sheds_retry_in_call_without_redialing() {
+        let stats = NetStats::new();
+        let dials = Arc::new(AtomicU32::new(0));
+        let d2 = dials.clone();
+        let mut r: Reconnector<u32> =
+            Reconnector::new("nowhere", move |_| Ok(d2.fetch_add(1, Ordering::Relaxed) + 1))
+                .with_stats(stats.clone());
+        // Shed twice, then admitted: the call succeeds on the same
+        // connection — retries must not burn the dial path.
+        let mut attempts = 0u32;
+        let got = r
+            .with(|c| {
+                attempts += 1;
+                if attempts <= 2 {
+                    anyhow::bail!("server busy: request shed");
+                }
+                Ok(*c)
+            })
+            .expect("busy retries within budget must succeed");
+        assert_eq!(got, 1);
+        assert_eq!(attempts, 3);
+        assert_eq!(dials.load(Ordering::Relaxed), 1, "busy must not redial");
+        assert!(r.is_connected(), "busy must not drop the connection");
+        assert_eq!(stats.busy_retry_count(), 2);
+        assert_eq!(stats.busy_exhausted_count(), 0);
+    }
+
+    #[test]
+    fn busy_budget_exhaustion_surfaces_and_counts() {
+        let stats = NetStats::new();
+        let dials = Arc::new(AtomicU32::new(0));
+        let d2 = dials.clone();
+        let mut r: Reconnector<u32> =
+            Reconnector::new("nowhere", move |_| Ok(d2.fetch_add(1, Ordering::Relaxed) + 1))
+                .with_stats(stats.clone());
+        let err = r
+            .with(|_| -> Result<u32> { anyhow::bail!("server busy: request shed") })
+            .expect_err("a persistently-shedding server must exhaust the budget");
+        assert!(err.to_string().contains("still shedding"), "got: {err}");
+        assert_eq!(stats.busy_retry_count(), u64::from(BUSY_RETRY_BUDGET));
+        assert_eq!(stats.busy_exhausted_count(), 1);
+        // The server is alive: the connection survives exhaustion and the
+        // next call reuses it with a fresh budget.
+        assert!(r.is_connected());
+        assert_eq!(r.with(|c| Ok(*c)).unwrap(), 1);
+        assert_eq!(dials.load(Ordering::Relaxed), 1);
+        // A transport error still takes the drop-and-cooldown path.
+        assert!(r.with(|_| -> Result<()> { anyhow::bail!("broken pipe") }).is_err());
+        assert!(!r.is_connected());
+        assert_eq!(stats.busy_exhausted_count(), 1, "transport errors are not busy");
     }
 
     #[test]

@@ -151,7 +151,26 @@ pub fn probes(state: &VizState) -> Json {
 /// placement view (epoch + slots owned per shard — how the rebalancer
 /// has reshaped routing), and the aggregator-side totals. The skew the
 /// rebalancer acts on is visible here: compare `merges` across shards.
+/// With the hierarchical aggregation tree engaged (`ps.agg_fanout` ≥ 2)
+/// `agg_nodes` lists each tree node's fold/push/shed counters; flat
+/// aggregation leaves it empty.
 pub fn ps_stats(state: &VizState) -> Json {
+    let agg_nodes: Vec<Json> = state
+        .latest
+        .agg_nodes
+        .iter()
+        .map(|n| {
+            Json::obj(vec![
+                ("node", Json::num(n.node as f64)),
+                ("depth", Json::num(n.depth as f64)),
+                ("rank_lo", Json::num(n.rank_lo as f64)),
+                ("rank_hi", Json::num(n.rank_hi as f64)),
+                ("folds", Json::num(n.folds as f64)),
+                ("pushed", Json::num(n.pushed as f64)),
+                ("shed", Json::num(n.shed as f64)),
+            ])
+        })
+        .collect();
     let loads = state
         .latest
         .shard_loads
@@ -172,6 +191,7 @@ pub fn ps_stats(state: &VizState) -> Json {
         ("shards", Json::num(state.latest.shard_loads.len() as f64)),
         ("placement_epoch", Json::num(state.latest.placement_epoch as f64)),
         ("shard_loads", Json::Arr(loads)),
+        ("agg_nodes", Json::Arr(agg_nodes)),
         ("functions_tracked", Json::num(state.latest.functions_tracked as f64)),
         ("total_anomalies", Json::num(state.latest.total_anomalies as f64)),
         ("total_executions", Json::num(state.latest.total_executions as f64)),
@@ -225,6 +245,15 @@ mod tests {
                 shed: 3,
                 queue_depth: 0,
             }],
+            agg_nodes: vec![crate::ps::AggNodeLoad {
+                node: 1,
+                depth: 1,
+                rank_lo: 0,
+                rank_hi: 4,
+                folds: 8,
+                pushed: 2,
+                shed: 1,
+            }],
             ..VizSnapshot::default()
         };
         st.timeline = vec![(0, 1, 0, 2)];
@@ -263,6 +292,13 @@ mod tests {
         assert_eq!(loads[0].get("queue_depth").unwrap().as_u64(), Some(0));
         assert_eq!(j.get("placement_epoch").unwrap().as_u64(), Some(2));
         assert_eq!(j.get("total_anomalies").unwrap().as_u64(), Some(2));
+        let nodes = j.get("agg_nodes").unwrap().as_arr().unwrap();
+        assert_eq!(nodes.len(), 1);
+        assert_eq!(nodes[0].get("node").unwrap().as_u64(), Some(1));
+        assert_eq!(nodes[0].get("rank_hi").unwrap().as_u64(), Some(4));
+        assert_eq!(nodes[0].get("folds").unwrap().as_u64(), Some(8));
+        assert_eq!(nodes[0].get("pushed").unwrap().as_u64(), Some(2));
+        assert_eq!(nodes[0].get("shed").unwrap().as_u64(), Some(1));
     }
 
     #[test]

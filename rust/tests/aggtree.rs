@@ -1,0 +1,334 @@
+//! Tree-vs-flat aggregator bit-equivalence: a constellation with
+//! `PsOpts::agg_fanout ≥ 2` spreads the aggregator into the hierarchical
+//! fold tree (`chimbuko::aggtree`), and the tree must be *invisible* in
+//! results — per-sync replies, delivered global events and their order,
+//! query snapshots, every published viz delta, and the final joined
+//! state must be bit-identical to the flat single-thread aggregator,
+//! across fanouts {2, 4} and depths {2, 3}
+//! (`tree_is_bit_equivalent_to_flat_in_process`) and with a leaf hosted
+//! by a real `chimbuko agg-node` OS process
+//! (`tree_with_remote_agg_node_process_stays_bit_equivalent`).
+//!
+//! Two planes are excluded from the snapshot fingerprints, by design:
+//! `agg_nodes` (tree-only fold counters — the flat aggregator publishes
+//! none) and the shard plane (`shard_loads`, per-publish
+//! `functions_tracked`), whose counters are gathered by the merge stage
+//! concurrently with in-flight syncs in *both* shapes. The shard plane
+//! is still pinned at join time, where it is race-free.
+//!
+//! The driver quiesces with a `Query` barrier between each round's
+//! reports and its syncs: the flat aggregator's single channel orders
+//! one rank's fetch behind *every* rank's reports for free, while the
+//! tree only orders it behind the reports of the leaves it traverses —
+//! the barrier removes that (benign) timing freedom so delivery can be
+//! compared sync-by-sync instead of merely end-to-end.
+
+use chimbuko::ps::{self, GlobalEvent, PsOpts, StepStat, VizSnapshot};
+use chimbuko::stats::{RunStats, StatsTable};
+use chimbuko::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
+
+/// One step round of the generated workload: every rank reports, then
+/// (after the barrier) syncs.
+struct StepOps {
+    /// Per-rank (report, delta) pairs, rank-ordered.
+    per_rank: Vec<(StepStat, StatsTable)>,
+}
+
+/// Deterministic workload, same shape as the sharded-equivalence suite:
+/// `quiet` steps of mostly-zero anomaly counts followed by one bursty
+/// step (global-event detection needs history to trigger against), with
+/// random per-rank deltas covering the dense and spill stat-table paths.
+fn gen_workload(rng: &mut Rng, ranks: usize, quiet_steps: usize, delta_len: usize) -> Vec<StepOps> {
+    let mut steps = Vec::new();
+    for step in 0..=(quiet_steps as u64) {
+        let burst = step == quiet_steps as u64;
+        let mut per_rank = Vec::new();
+        for rank in 0..ranks as u32 {
+            let anoms = if burst {
+                4 + rng.usize(4) as u64
+            } else {
+                u64::from(rank == 0 && step % 3 == 0)
+            };
+            let report = StepStat {
+                app: 0,
+                rank,
+                step,
+                n_executions: 50 + rng.usize(50) as u64,
+                n_anomalies: anoms,
+                ts_range: (step * 1000, step * 1000 + 999),
+            };
+            let mut delta = StatsTable::new();
+            for _ in 0..delta_len.max(1) {
+                let fid = if rng.chance(0.1) {
+                    300 + rng.usize(8) as u32 // spill path
+                } else {
+                    rng.usize(24) as u32 // dense path
+                };
+                delta.push(fid, rng.lognormal(5.0, 1.0));
+            }
+            per_rank.push((report, delta));
+        }
+        steps.push(StepOps { per_rank });
+    }
+    steps
+}
+
+fn stats_fp(s: &RunStats) -> String {
+    format!(
+        "{}:{:x}:{:x}:{:x}:{:x}",
+        s.count(),
+        s.mean().to_bits(),
+        s.m2().to_bits(),
+        s.min().to_bits(),
+        s.max().to_bits()
+    )
+}
+
+fn event_fp(e: &GlobalEvent) -> String {
+    format!("{}:{}:{:x}", e.step, e.total_anomalies, e.score.to_bits())
+}
+
+fn step_fp(s: &StepStat) -> String {
+    format!(
+        "{}/{}/{}/{}/{}/{}..{}",
+        s.app, s.rank, s.step, s.n_executions, s.n_anomalies, s.ts_range.0, s.ts_range.1
+    )
+}
+
+/// Canonical aggregator-plane fingerprint of a snapshot (see the module
+/// doc for what is excluded and why).
+fn snap_fp(s: &VizSnapshot) -> String {
+    let ranks: Vec<String> = s
+        .ranks
+        .iter()
+        .map(|r| format!("{}:{}:{}:{}", r.app, r.rank, stats_fp(&r.step_counts), r.total_anomalies))
+        .collect();
+    let fresh: Vec<String> = s.fresh_steps.iter().map(step_fp).collect();
+    let events: Vec<String> = s.global_events.iter().map(event_fp).collect();
+    format!(
+        "delta={} ranks=[{}] fresh=[{}] anoms={} execs={} events=[{}] epoch={}",
+        s.delta,
+        ranks.join(","),
+        fresh.join(","),
+        s.total_anomalies,
+        s.total_executions,
+        events.join(","),
+        s.placement_epoch
+    )
+}
+
+/// Everything one run produces that the equivalence contract covers.
+struct RunOut {
+    /// Per-sync stat replies, in issue order.
+    sync_replies: Vec<Vec<(u32, RunStats)>>,
+    /// Per-sync delivered events, in issue order (exactly-once delivery
+    /// means most entries are empty; position matters).
+    sync_events: Vec<Vec<GlobalEvent>>,
+    /// Query-barrier observations, one per step round.
+    barriers: Vec<String>,
+    /// Published viz deltas (canonicalized), in publish order.
+    published: Vec<String>,
+    final_fp: String,
+    final_global: HashMap<(u32, u32), RunStats>,
+    final_events: Vec<GlobalEvent>,
+    final_functions: u64,
+    final_sync_count: u64,
+    /// Largest `agg_nodes` count seen in a published snapshot (0 under
+    /// the flat aggregator) and the deepest node depth reported.
+    agg_nodes_seen: usize,
+    agg_depth_seen: u32,
+}
+
+fn drive(
+    workload: &[StepOps],
+    ranks: usize,
+    agg_fanout: usize,
+    agg_endpoints: Vec<String>,
+) -> RunOut {
+    let (viz_tx, viz_rx) = channel();
+    let (client, handle) = ps::spawn_with(PsOpts {
+        shards: 2,
+        viz_tx: Some(viz_tx),
+        publish_every: ranks,
+        reports_per_step: ranks,
+        agg_fanout,
+        agg_endpoints,
+        ..PsOpts::default()
+    })
+    .expect("spawning ps constellation");
+
+    let mut sync_replies = Vec::new();
+    let mut sync_events = Vec::new();
+    let mut barriers = Vec::new();
+    for ops in workload {
+        for (report, _) in &ops.per_rank {
+            client.report(report.clone());
+        }
+        let st = client.stats().expect("query barrier");
+        barriers.push(format!(
+            "anoms={} execs={} ranks={} ver={} events=[{}]",
+            st.total_anomalies,
+            st.total_executions,
+            st.ranks,
+            st.event_version,
+            st.global_events.iter().map(event_fp).collect::<Vec<_>>().join(",")
+        ));
+        for (report, delta) in &ops.per_rank {
+            let (global, events) = client.sync(report.app, report.rank, delta);
+            sync_replies.push(global.iter().map(|(f, s)| (f, *s)).collect());
+            sync_events.push(events);
+        }
+    }
+    client.shutdown();
+    let fin = handle.join();
+    let mut published = Vec::new();
+    let mut agg_nodes_seen = 0usize;
+    let mut agg_depth_seen = 0u32;
+    for snap in viz_rx.iter() {
+        agg_nodes_seen = agg_nodes_seen.max(snap.agg_nodes.len());
+        agg_depth_seen =
+            agg_depth_seen.max(snap.agg_nodes.iter().map(|n| n.depth).max().unwrap_or(0));
+        published.push(snap_fp(&snap));
+    }
+    RunOut {
+        sync_replies,
+        sync_events,
+        barriers,
+        published,
+        final_fp: snap_fp(&fin.snapshot),
+        final_functions: fin.snapshot.functions_tracked,
+        final_global: fin.global,
+        final_events: fin.global_events,
+        final_sync_count: fin.sync_count,
+        agg_nodes_seen,
+        agg_depth_seen,
+    }
+}
+
+fn assert_equivalent(flat: &RunOut, tree: &RunOut, label: &str) {
+    assert_eq!(flat.sync_replies, tree.sync_replies, "{label}: per-sync stat replies diverged");
+    assert_eq!(
+        flat.sync_events, tree.sync_events,
+        "{label}: per-sync event delivery (set or order) diverged"
+    );
+    assert_eq!(flat.barriers, tree.barriers, "{label}: query snapshots diverged");
+    assert_eq!(flat.published, tree.published, "{label}: published viz deltas diverged");
+    assert_eq!(flat.final_fp, tree.final_fp, "{label}: final snapshot diverged");
+    assert_eq!(flat.final_global, tree.final_global, "{label}: final global stats diverged");
+    assert_eq!(flat.final_events, tree.final_events, "{label}: final event set diverged");
+    assert_eq!(flat.final_functions, tree.final_functions, "{label}: functions_tracked diverged");
+    assert_eq!(flat.final_sync_count, tree.final_sync_count, "{label}: sync counts diverged");
+}
+
+#[test]
+fn tree_is_bit_equivalent_to_flat_in_process() {
+    let mut rng = Rng::new(0xA66);
+    // Fanout × rank-count pairs covering depths 2 and 3 at both fanouts.
+    for (fanout, ranks) in [(2usize, 4usize), (2, 8), (4, 8), (4, 32)] {
+        let spec = chimbuko::aggtree::TreeSpec::plan(fanout, ranks);
+        let workload = gen_workload(&mut rng, ranks, 10, 6);
+        let label = format!("fanout {fanout} x {ranks} ranks (depth {})", spec.depth());
+
+        let flat = drive(&workload, ranks, 0, Vec::new());
+        assert!(
+            !flat.final_events.is_empty(),
+            "{label}: workload must flag a global event or the equivalence is vacuous"
+        );
+        // Every rank syncs after the burst round's barrier, so each
+        // flagged event is delivered exactly once *per rank* (per-rank
+        // delivery cursors).
+        assert_eq!(
+            flat.sync_events.iter().flatten().count(),
+            flat.final_events.len() * ranks,
+            "{label}: every flagged event must reach every rank exactly once"
+        );
+        assert_eq!(flat.agg_nodes_seen, 0, "{label}: flat publishes no agg-node loads");
+
+        let tree = drive(&workload, ranks, fanout, Vec::new());
+        assert_eq!(
+            tree.agg_nodes_seen,
+            spec.nodes(),
+            "{label}: every tree node must publish its fold counters"
+        );
+        assert_eq!(
+            tree.agg_depth_seen as usize,
+            spec.depth() - 1,
+            "{label}: the deepest published node must be a leaf"
+        );
+        assert_equivalent(&flat, &tree, &label);
+    }
+}
+
+#[test]
+fn tree_with_remote_agg_node_process_stays_bit_equivalent() {
+    // The real thing: one leaf of a fanout-2, 4-rank tree hosted by a
+    // `chimbuko agg-node` OS process (protocol kinds 13–16), the rest of
+    // the tree in-process — still bit-identical to flat.
+    use std::io::{BufRead, BufReader};
+    use std::process::{Child, Command, Stdio};
+
+    struct ChildGuard(Child);
+    impl Drop for ChildGuard {
+        fn drop(&mut self) {
+            let _ = self.0.kill();
+            let _ = self.0.wait();
+        }
+    }
+
+    let (fanout, ranks) = (2usize, 4usize);
+    let spec = chimbuko::aggtree::TreeSpec::plan(fanout, ranks);
+    assert_eq!(spec.leaves(), 2);
+    let leaf = 1usize; // ranks [2, 4) live in the child process
+    let (lo, hi) = spec.leaf_range(leaf);
+    let node = spec.node_id(0, leaf);
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_chimbuko"))
+        .args([
+            "agg-node",
+            "--addr",
+            "127.0.0.1:0",
+            "--node",
+            &node.to_string(),
+            "--depth",
+            &spec.node_depth(0).to_string(),
+            "--rank-lo",
+            &lo.to_string(),
+            "--rank-hi",
+            &hi.to_string(),
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning chimbuko agg-node process");
+    let stdout = child.stdout.take().expect("child stdout");
+    let guard = ChildGuard(child);
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).expect("reading agg-node banner");
+    let addr = line
+        .rsplit("listening on ")
+        .next()
+        .and_then(|s| s.split_whitespace().next())
+        .unwrap_or_default()
+        .to_string();
+    assert!(addr.contains(':'), "could not parse address from banner: {line:?}");
+
+    let mut rng = Rng::new(0xA66E);
+    let workload = gen_workload(&mut rng, ranks, 10, 6);
+    let flat = drive(&workload, ranks, 0, Vec::new());
+    assert!(
+        !flat.final_events.is_empty(),
+        "workload must flag a global event or the equivalence is vacuous"
+    );
+
+    // Leaf 0 stays in-process (empty endpoint slot), leaf 1 is the child.
+    let tree = drive(&workload, ranks, fanout, vec![String::new(), addr]);
+    assert_eq!(
+        tree.agg_nodes_seen,
+        spec.nodes(),
+        "remote leaf's fold counters must reach the published snapshots too"
+    );
+    assert_equivalent(&flat, &tree, "remote agg-node leaf");
+    drop(guard);
+}

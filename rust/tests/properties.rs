@@ -2,6 +2,7 @@
 //! must hold for *any* generated workload, not just the curated cases.
 
 use chimbuko::ad::{DetectEngine, DetectorConfig, OnNodeAd, RustDetector, StackBuilder};
+use chimbuko::ps::{AggNodeLoad, GlobalEvent, RankSummary, ShardLoad, StepStat, VizSnapshot};
 use chimbuko::stats::{RunStats, StatsTable};
 use chimbuko::trace::binfmt;
 use chimbuko::trace::event::{Event, FuncKind};
@@ -266,6 +267,181 @@ fn prop_ps_merge_order_independent() {
                 if (sa.m2() - sb.m2()).abs() > 1e-6 * (1.0 + sa.m2().abs()) {
                     return Err("m2 order-dependent".into());
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// VizSnapshot::merge algebra — the contract the aggregation tree leans on.
+
+/// Exact fingerprint of a snapshot (integers verbatim, floats by bit
+/// pattern). `merge` moves rank summaries, fresh steps and events between
+/// snapshots without any float arithmetic, so order-independence must
+/// hold *bitwise*, not just within tolerance. The `delta` flag is not
+/// folded by `merge` (every partial in a publish round carries the same
+/// value), so it stays out of the fingerprint.
+fn viz_fingerprint(s: &VizSnapshot) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    write!(
+        out,
+        "ta:{} te:{} ft:{} pe:{};",
+        s.total_anomalies, s.total_executions, s.functions_tracked, s.placement_epoch
+    )
+    .unwrap();
+    for r in &s.ranks {
+        let c = &r.step_counts;
+        write!(
+            out,
+            "R{}:{}:{}:{}:{:x}:{:x}:{:x}:{:x};",
+            r.app,
+            r.rank,
+            r.total_anomalies,
+            c.count(),
+            c.mean().to_bits(),
+            c.m2().to_bits(),
+            c.min().to_bits(),
+            c.max().to_bits()
+        )
+        .unwrap();
+    }
+    for f in &s.fresh_steps {
+        write!(
+            out,
+            "F{}:{}:{}:{}:{}:{}:{};",
+            f.step, f.app, f.rank, f.n_executions, f.n_anomalies, f.ts_range.0, f.ts_range.1
+        )
+        .unwrap();
+    }
+    for e in &s.global_events {
+        write!(out, "E{}:{}:{:x};", e.step, e.total_anomalies, e.score.to_bits()).unwrap();
+    }
+    for l in &s.shard_loads {
+        write!(out, "S{l:?};").unwrap();
+    }
+    for n in &s.agg_nodes {
+        write!(out, "N{n:?};").unwrap();
+    }
+    out
+}
+
+fn rand_run_stats(rng: &mut Rng) -> RunStats {
+    let mut s = RunStats::new();
+    for _ in 0..1 + rng.usize(6) {
+        s.push(rng.lognormal(3.0, 1.0));
+    }
+    s
+}
+
+/// Generate `parts` key-disjoint partial snapshots — the shape `merge`
+/// is defined over: in a publish round each rank summary comes from
+/// exactly one aggregator partial, each shard load from one stat shard,
+/// each tree-node counter from one node, and the aggregator plane flags
+/// each global event's step exactly once. (With colliding keys `merge`
+/// is first-writer-wins on events and stable-sort-ordered on ranks, so
+/// order-independence only holds under this disjointness — which is why
+/// the generator enforces it instead of sampling keys independently.)
+fn rand_partials(rng: &mut Rng, parts: usize, size: usize) -> Vec<VizSnapshot> {
+    let mut out: Vec<VizSnapshot> = (0..parts)
+        .map(|_| VizSnapshot { delta: true, ..VizSnapshot::default() })
+        .collect();
+    for rank in 0..rng.usize(size) {
+        let p = &mut out[rng.usize(parts)];
+        p.ranks.push(RankSummary {
+            app: rng.usize(3) as u32,
+            rank: rank as u32,
+            step_counts: rand_run_stats(rng),
+            total_anomalies: rng.usize(50) as u64,
+        });
+    }
+    for step in 0..rng.usize(size) {
+        let p = &mut out[rng.usize(parts)];
+        p.fresh_steps.push(StepStat {
+            app: rng.usize(3) as u32,
+            rank: rng.usize(64) as u32,
+            step: step as u64,
+            n_executions: 1 + rng.usize(1000) as u64,
+            n_anomalies: rng.usize(10) as u64,
+            ts_range: (step as u64 * 1_000, step as u64 * 1_000 + 999),
+        });
+    }
+    for j in 0..rng.usize(4) {
+        let p = &mut out[rng.usize(parts)];
+        p.global_events.push(GlobalEvent {
+            step: 1_000 + j as u64,
+            total_anomalies: 10 + rng.usize(100) as u64,
+            score: rng.range_f64(3.0, 9.0),
+        });
+    }
+    for shard in 0..rng.usize(5) {
+        let p = &mut out[rng.usize(parts)];
+        p.shard_loads.push(ShardLoad {
+            shard: shard as u32,
+            syncs: rng.usize(1_000) as u64,
+            merges: rng.usize(10_000) as u64,
+            functions: rng.usize(200) as u64,
+            slots: rng.usize(16) as u32,
+            shed: rng.usize(5) as u64,
+            queue_depth: rng.usize(1 << 16) as u64,
+        });
+    }
+    for node in 0..rng.usize(8) {
+        let p = &mut out[rng.usize(parts)];
+        p.agg_nodes.push(AggNodeLoad {
+            node: node as u32,
+            depth: rng.usize(4) as u32,
+            rank_lo: node as u32 * 8,
+            rank_hi: node as u32 * 8 + 8,
+            folds: rng.usize(10_000) as u64,
+            pushed: rng.usize(1_000) as u64,
+            shed: rng.usize(10) as u64,
+        });
+    }
+    for p in &mut out {
+        p.total_anomalies = rng.usize(1_000) as u64;
+        p.total_executions = rng.usize(100_000) as u64;
+        p.functions_tracked = rng.usize(100) as u64;
+        p.placement_epoch = rng.usize(5) as u64;
+    }
+    out
+}
+
+fn merged(a: &VizSnapshot, b: &VizSnapshot) -> VizSnapshot {
+    let mut m = a.clone();
+    m.merge(b);
+    m
+}
+
+#[test]
+fn prop_viz_merge_is_commutative_and_associative() {
+    check(
+        "viz-merge-algebra",
+        PropConfig { cases: 80, seed: 0xA661, max_size: 48 },
+        |rng, size| {
+            let parts = rand_partials(rng, 3, size.max(1));
+            let (a, b, c) = (&parts[0], &parts[1], &parts[2]);
+            // Commutativity: fold order of two partials is irrelevant.
+            let ab = viz_fingerprint(&merged(a, b));
+            let ba = viz_fingerprint(&merged(b, a));
+            if ab != ba {
+                return Err(format!("merge not commutative:\n  a∪b={ab}\n  b∪a={ba}"));
+            }
+            // Associativity: tree shape of the fold is irrelevant — the
+            // aggregation tree folds (leaf∪leaf)∪leaf, the flat
+            // aggregator folds left-to-right; both must agree.
+            let ab_c = viz_fingerprint(&merged(&merged(a, b), c));
+            let a_bc = viz_fingerprint(&merged(a, &merged(b, c)));
+            if ab_c != a_bc {
+                return Err(format!("merge not associative:\n  (a∪b)∪c={ab_c}\n  a∪(b∪c)={a_bc}"));
+            }
+            // Identity: an empty partial only canonicalizes ordering.
+            let empty = VizSnapshot { delta: true, ..VizSnapshot::default() };
+            let ae = viz_fingerprint(&merged(a, &empty));
+            let ea = viz_fingerprint(&merged(&empty, a));
+            if ae != ea {
+                return Err(format!("empty partial not an identity:\n  a∪∅={ae}\n  ∅∪a={ea}"));
             }
             Ok(())
         },
