@@ -165,11 +165,29 @@ fn main() {
         t_last.events,
     );
 
+    // --- chaos scenario: kill/restart a PS shard + the provDB shard -------
+    // Needs the built `chimbuko` binary to spawn server children; skip
+    // loudly (never silently) when it is not around.
+    let mut artifact = chimbuko::exp::ps_bench_json(&sweep, &eps, &reb, &conns, &aggtree);
+    match chimbuko::exp::find_chimbuko_bin() {
+        Some(bin) => {
+            let (ch_shards, ch_ranks, ch_steps) = if fast { (2, 4, 12) } else { (4, 8, 24) };
+            println!(
+                "\nchaos scenario: {} shards, {} ranks x {} steps, kill ps:0 and provdb:0\n",
+                ch_shards, ch_ranks, ch_steps
+            );
+            let chaos = chimbuko::exp::run_chaos(&bin, ch_shards, ch_ranks, ch_steps, 7)
+                .expect("chaos scenario");
+            print!("{}", chaos.render());
+            artifact.set("chaos_rows", chaos.rows_json());
+        }
+        None => println!(
+            "\nchaos scenario SKIPPED: chimbuko binary not found \
+             (build it or set CHIMBUKO_BIN); chaos_rows omitted"
+        ),
+    }
+
     let out = "BENCH_ps_shards.json";
-    std::fs::write(
-        out,
-        chimbuko::exp::ps_bench_json(&sweep, &eps, &reb, &conns, &aggtree).to_pretty(),
-    )
-    .expect("writing BENCH_ps_shards.json");
+    std::fs::write(out, artifact.to_pretty()).expect("writing BENCH_ps_shards.json");
     println!("wrote {out}");
 }

@@ -119,7 +119,27 @@ fn main() {
         );
     }
 
+    // --- chaos scenario: provDB kill/restart with a bounded-loss ledger ---
+    // Needs the built `chimbuko` binary to spawn server children; skip
+    // loudly (never silently) when it is not around.
     let mut artifact = pdb.to_json();
+    match chimbuko::exp::find_chimbuko_bin() {
+        Some(bin) => {
+            let (ch_shards, ch_ranks, ch_steps) = if fast { (2, 4, 12) } else { (2, 8, 24) };
+            println!(
+                "\nchaos scenario: {} shards, {} ranks x {} steps, kill ps:0 and provdb:0\n",
+                ch_shards, ch_ranks, ch_steps
+            );
+            let chaos = chimbuko::exp::run_chaos(&bin, ch_shards, ch_ranks, ch_steps, 11)
+                .expect("chaos scenario");
+            print!("{}", chaos.render());
+            artifact.set("chaos_rows", chaos.rows_json());
+        }
+        None => println!(
+            "\nchaos scenario SKIPPED: chimbuko binary not found \
+             (build it or set CHIMBUKO_BIN); chaos_rows omitted"
+        ),
+    }
     artifact.set("codec_rows", codec.rows_json());
     artifact.set("scan_rows", scan.to_json());
     let out = "BENCH_provdb.json";

@@ -50,6 +50,18 @@
 //! Both queues drain the moment the generation completes, so the only
 //! cost is latency bounded by the slowest subtree.
 //!
+//! The barrier also carries the **global expiry horizon** (the newest
+//! step the ingress has seen in any report). Each range fold reconciles
+//! against it when it acts on the barrier: accumulators a silent range
+//! stranded behind the horizon drain up to the root tagged `expired`,
+//! where they fold into the step statistics exactly when — and combined
+//! exactly as — the flat aggregator's per-report expiry would have
+//! folded them. Without this a whole-range outage would freeze the
+//! leaf's fold (its own `max_step_seen` never advances) and the root
+//! would later shed the stranded counts as stragglers;
+//! `tests/aggtree.rs::whole_range_outage_expires_on_the_flat_schedule`
+//! pins the schedule bit for bit.
+//!
 //! ## Remote nodes
 //!
 //! A leaf may run as a separate `chimbuko agg-node` process behind the
@@ -225,8 +237,11 @@ pub(crate) enum TreeMsg {
         delta: Vec<(u32, RunStats)>,
         reply: Sender<crate::ps::PsReply>,
     },
-    /// Child → parent: a completed (or expired) range quorum.
-    Partial { from: usize, p: PartialStep },
+    /// Child → parent: a completed (or straggler) range quorum.
+    /// `expired` marks a partial a child's fold expired against the
+    /// flush horizon — relayed untouched to the root, which folds it
+    /// into the step statistics instead of shedding it as a straggler.
+    Partial { from: usize, p: PartialStep, expired: bool },
     /// Child → parent: a fetch climbing toward the root.
     UpFetch {
         from: usize,
@@ -236,7 +251,10 @@ pub(crate) enum TreeMsg {
         reply: Sender<crate::ps::PsReply>,
     },
     /// Ingress → every node: flush-barrier marker for generation `gen`.
-    Flush { gen: u64, kind: FlushKind },
+    /// `horizon` is the newest step the ingress has seen in any report —
+    /// the global expiry horizon every range fold reconciles against
+    /// when it acts on the barrier.
+    Flush { gen: u64, kind: FlushKind, horizon: u64 },
     /// Child → parent: the child's folded contribution to generation
     /// `gen` (`fin` = absolute final snapshot, Shutdown/Halt only).
     FlushUp { from: usize, gen: u64, delta: VizSnapshot, fin: Option<VizSnapshot> },
@@ -254,6 +272,10 @@ pub(crate) struct StepFold {
     pushed: u64,
     /// Expired accumulators + straggler contributions short-circuited.
     shed: u64,
+    /// Expired partial quorums awaiting the next flush drain
+    /// ([`take_expired`](Self::take_expired)); they keep their partial
+    /// counts so the root's accounting still sees them.
+    expired: Vec<PartialStep>,
 }
 
 impl StepFold {
@@ -264,16 +286,19 @@ impl StepFold {
             max_step_seen: 0,
             pushed: 0,
             shed: 0,
+            expired: Vec::new(),
         }
     }
 
-    /// Fold one contribution; completed and expired quorums are appended
-    /// to `out` (expired ones carry their partial count, so the root's
-    /// accounting still sees them).
+    /// Fold one contribution; completed quorums are appended to `out`
+    /// (as are stragglers past the horizon — the root sheds those the
+    /// same way the flat aggregator sheds straggler reports). Expired
+    /// partial quorums go to the flush buffer instead, to ride the next
+    /// barrier up to the root's step statistics.
     pub(crate) fn fold(&mut self, p: PartialStep, out: &mut Vec<PartialStep>) {
         if p.step > self.max_step_seen {
             self.max_step_seen = p.step;
-            self.expire(out);
+            self.expire();
         }
         if p.step < self.max_step_seen.saturating_sub(STEP_ACC_MAX_LAG) {
             // Straggler past the expiry horizon: forward it as its own
@@ -293,19 +318,48 @@ impl StepFold {
         }
     }
 
-    fn expire(&mut self, out: &mut Vec<PartialStep>) {
+    fn expire(&mut self) {
         let horizon = self.max_step_seen.saturating_sub(STEP_ACC_MAX_LAG);
         if horizon == 0 {
             return;
         }
+        self.drain_below(horizon);
+    }
+
+    fn drain_below(&mut self, horizon: u64) {
         let mut stale: Vec<u64> = self.acc.keys().filter(|&&s| s < horizon).copied().collect();
         stale.sort_unstable();
         for s in stale {
             if let Some((count, anoms)) = self.acc.remove(&s) {
                 self.shed += 1;
-                out.push(PartialStep { step: s, count, anoms });
+                self.expired.push(PartialStep { step: s, count, anoms });
             }
         }
+    }
+
+    /// Reconcile with the tree-wide horizon `h` (the newest step the
+    /// ingress has seen in any report): a range whose ranks all went
+    /// silent never advances its own `max_step_seen`, so without this
+    /// its stalled accumulators would outlive the expiry schedule the
+    /// flat aggregator follows. The drain runs one lag-slot *ahead* of
+    /// the root's own strictly-below-horizon sweep — the drained
+    /// contributions must already sit in the root's accumulator when its
+    /// horizon passes them, so each stalled step folds into the step
+    /// statistics as one combined push on the flat schedule.
+    pub(crate) fn advance_global(&mut self, h: u64) {
+        if h > self.max_step_seen {
+            self.max_step_seen = h;
+        }
+        if self.max_step_seen >= STEP_ACC_MAX_LAG {
+            self.drain_below(self.max_step_seen - STEP_ACC_MAX_LAG + 1);
+        }
+    }
+
+    /// Drain the partials expired since the last flush; they travel up
+    /// tagged `expired` so the root folds them into the step statistics
+    /// (the flat aggregator's expiry) instead of shedding them.
+    pub(crate) fn take_expired(&mut self) -> Vec<PartialStep> {
+        std::mem::take(&mut self.expired)
     }
 }
 
@@ -363,6 +417,14 @@ impl LeafState {
             out,
         );
         self.fresh.push(stat);
+    }
+
+    /// Flush-leg horizon reconciliation: raise the range fold's expiry
+    /// horizon to the tree-wide newest step and drain what that expired
+    /// (see [`StepFold::advance_global`]).
+    pub(crate) fn reconcile_horizon(&mut self, horizon: u64) -> Vec<PartialStep> {
+        self.fold.advance_global(horizon);
+        self.fold.take_expired()
     }
 
     pub(crate) fn load(&self) -> AggNodeLoad {
@@ -440,6 +502,8 @@ enum ChildEdge {
 struct PendingGen {
     gen: u64,
     kind: Option<FlushKind>,
+    /// Tree-wide newest step, from the generation's `Flush` marker.
+    horizon: u64,
     deltas: Vec<Option<VizSnapshot>>,
     fins: Vec<Option<VizSnapshot>>,
     done: usize,
@@ -450,6 +514,7 @@ impl PendingGen {
         PendingGen {
             gen,
             kind: None,
+            horizon: 0,
             deltas: (0..n_children).map(|_| None).collect(),
             fins: (0..n_children).map(|_| None).collect(),
             done: 0,
@@ -522,8 +587,10 @@ impl Node {
 
     fn on_msg(&mut self, msg: TreeMsg) {
         match msg {
-            TreeMsg::Flush { gen, kind } => {
-                self.pending_entry(gen).kind = Some(kind);
+            TreeMsg::Flush { gen, kind, horizon } => {
+                let e = self.pending_entry(gen);
+                e.kind = Some(kind);
+                e.horizon = horizon;
                 self.try_complete();
             }
             TreeMsg::FlushUp { from, gen, delta, fin } => {
@@ -643,7 +710,13 @@ impl Node {
                 }
                 self.up_fetch(app, rank, delta, reply);
             }
-            TreeMsg::Partial { p, .. } => self.fold_partial(p),
+            TreeMsg::Partial { p, expired, .. } => {
+                if expired {
+                    self.relay_expired(p);
+                } else {
+                    self.fold_partial(p);
+                }
+            }
             TreeMsg::Flush { .. } | TreeMsg::FlushUp { .. } => unreachable!("barrier msg"),
         }
         self.check_version();
@@ -674,7 +747,30 @@ impl Node {
 
     fn send_partial_up(&mut self, p: PartialStep) {
         if let Some(parent) = &self.parent {
-            let _ = parent.send(TreeMsg::Partial { from: self.index_in_parent, p });
+            let _ = parent.send(TreeMsg::Partial {
+                from: self.index_in_parent,
+                p,
+                expired: false,
+            });
+        }
+    }
+
+    /// An expired partial climbing to the root: interiors relay it
+    /// untouched (it already left a fold's accumulator — folding it
+    /// again would re-open an entry its horizon closed); the root feeds
+    /// it straight into the reference server's step accumulator, where
+    /// the next horizon sweep folds the step's combined total.
+    fn relay_expired(&mut self, p: PartialStep) {
+        if let Role::Root { ps, pushed, .. } = &mut self.role {
+            if ps.fold_expired_step(p.step, p.count, p.anoms) {
+                *pushed += 1;
+            }
+        } else if let Some(parent) = &self.parent {
+            let _ = parent.send(TreeMsg::Partial {
+                from: self.index_in_parent,
+                p,
+                expired: true,
+            });
         }
     }
 
@@ -747,6 +843,7 @@ impl Node {
     /// publish / answer / finalize).
     fn act(&mut self, mut pg: PendingGen) {
         let kind = pg.kind.take().expect("completed gen has a kind");
+        let horizon = pg.horizon;
         let mode = match kind {
             FlushKind::Publish => net::FLUSH_DELTA,
             FlushKind::Query(_) => net::FLUSH_ABSOLUTE,
@@ -757,13 +854,15 @@ impl Node {
                 continue;
             }
             let flushed = match &mut self.children[i] {
-                ChildEdge::Remote(rc) => rc.with(|w| w.flush(mode)),
+                ChildEdge::Remote(rc) => rc.with(|w| w.flush(mode, horizon)),
                 ChildEdge::Local => unreachable!("filtered above"),
             };
             match flushed {
-                Ok((partials, delta, fin)) => {
-                    for p in partials {
-                        self.fold_partial(p);
+                Ok((expired, delta, fin)) => {
+                    // The flush reply carries what the remote leaf's
+                    // fold expired against the barrier's horizon.
+                    for p in expired {
+                        self.relay_expired(p);
                     }
                     pg.deltas[i] = Some(delta);
                     pg.fins[i] = fin;
@@ -775,6 +874,21 @@ impl Node {
                     crate::log_warn!("aggtree", "remote agg-node flush failed: {e:#}");
                 }
             }
+        }
+        // Reconcile this node's own range fold with the tree-wide
+        // horizon before the FlushUp goes out, so every expired partial
+        // reaches the root ahead of the root's own act for this
+        // generation (FIFO per edge guarantees the ordering).
+        let expired = match &mut self.role {
+            Role::Leaf(state) => state.reconcile_horizon(horizon),
+            Role::Fold { fold, .. } => {
+                fold.advance_global(horizon);
+                fold.take_expired()
+            }
+            Role::Root { .. } => Vec::new(),
+        };
+        for p in expired {
+            self.relay_expired(p);
         }
         self.check_version();
         let fold_children = |pg: &mut PendingGen, into: &mut VizSnapshot, fins: bool| {
@@ -835,6 +949,13 @@ impl Node {
                 }
             }
             Role::Root { ps, job_tx, folds, pushed, shed, meta, .. } => {
+                // Sweep the reference server's horizon up to the
+                // tree-wide newest step: with every child's expired
+                // partials already folded in (they arrive before the
+                // FlushUps that completed this barrier), each stalled
+                // step folds into the step statistics as one combined
+                // push — the flat aggregator's expiry schedule.
+                ps.expire_to(horizon);
                 let mut load = *meta;
                 load.folds = *folds;
                 load.pushed = *pushed;
@@ -1118,8 +1239,11 @@ pub fn spawn_tree(
             let spec = ingress_spec;
             let mut gen = 0u64;
             let mut reports_since = 0usize;
+            // Newest step seen in any report — the global expiry horizon
+            // every flush barrier carries down to the range folds.
+            let mut max_step = 0u64;
             let mut last_interval_pub = Instant::now();
-            let mut flush = |kind: FlushKind, gen: &mut u64, reports_since: &mut usize| {
+            let mut flush = |kind: FlushKind, gen: &mut u64, reports_since: &mut usize, horizon: u64| {
                 // A Query barrier collects absolutes without draining
                 // deltas, so it leaves the publish cadence alone — the
                 // flat aggregator's Query doesn't publish either.
@@ -1131,6 +1255,7 @@ pub fn spawn_tree(
                     let _ = tx.send(TreeMsg::Flush {
                         gen: *gen,
                         kind: kind.clone_for_broadcast(),
+                        horizon,
                     });
                 }
             };
@@ -1139,7 +1264,7 @@ pub fn spawn_tree(
                     match ingress_rx.recv() {
                         Ok(r) => Some(r),
                         Err(_) => {
-                            flush(FlushKind::Halt, &mut gen, &mut reports_since);
+                            flush(FlushKind::Halt, &mut gen, &mut reports_since, max_step);
                             break;
                         }
                     }
@@ -1150,13 +1275,14 @@ pub fn spawn_tree(
                         Ok(r) => Some(r),
                         Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
                         Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                            flush(FlushKind::Halt, &mut gen, &mut reports_since);
+                            flush(FlushKind::Halt, &mut gen, &mut reports_since, max_step);
                             break;
                         }
                     }
                 };
                 match req {
                     Some(PsRequest::Report(stat)) => {
+                        max_step = max_step.max(stat.step);
                         let leaf = spec.leaf_of_rank(stat.rank);
                         match &routes[leaf] {
                             RouteEntry::Local(tx) => {
@@ -1169,14 +1295,14 @@ pub fn spawn_tree(
                         }
                         reports_since += 1;
                         if reports_since >= publish_every {
-                            flush(FlushKind::Publish, &mut gen, &mut reports_since);
+                            flush(FlushKind::Publish, &mut gen, &mut reports_since, max_step);
                         }
                         if interval_ms > 0
                             && last_interval_pub.elapsed()
                                 >= Duration::from_millis(interval_ms)
                         {
                             if reports_since > 0 {
-                                flush(FlushKind::Publish, &mut gen, &mut reports_since);
+                                flush(FlushKind::Publish, &mut gen, &mut reports_since, max_step);
                             }
                             last_interval_pub = Instant::now();
                         }
@@ -1199,18 +1325,18 @@ pub fn spawn_tree(
                         }
                     }
                     Some(PsRequest::Query { reply }) => {
-                        flush(FlushKind::Query(reply), &mut gen, &mut reports_since);
+                        flush(FlushKind::Query(reply), &mut gen, &mut reports_since, max_step);
                     }
                     Some(PsRequest::Publish) => {
-                        flush(FlushKind::Publish, &mut gen, &mut reports_since);
+                        flush(FlushKind::Publish, &mut gen, &mut reports_since, max_step);
                     }
                     Some(PsRequest::Shutdown) => {
-                        flush(FlushKind::Shutdown, &mut gen, &mut reports_since);
+                        flush(FlushKind::Shutdown, &mut gen, &mut reports_since, max_step);
                         break;
                     }
                     None => {
                         if reports_since > 0 {
-                            flush(FlushKind::Publish, &mut gen, &mut reports_since);
+                            flush(FlushKind::Publish, &mut gen, &mut reports_since, max_step);
                         }
                         last_interval_pub = Instant::now();
                     }
@@ -1288,22 +1414,56 @@ mod tests {
         assert_eq!(out, vec![PartialStep { step: 1, count: 3, anoms: 7 }]);
         assert_eq!(f.pushed, 1);
 
-        // A partial quorum expires once the fold moves far enough ahead,
-        // and is forwarded with its partial count.
+        // A partial quorum expires once the fold moves far enough
+        // ahead: it leaves the accumulator with its partial count, but
+        // waits in the flush buffer instead of travelling up live.
         out.clear();
         f.fold(PartialStep { step: 2, count: 1, anoms: 1 }, &mut out);
         f.fold(
             PartialStep { step: 2 + STEP_ACC_MAX_LAG + 1, count: 3, anoms: 0 },
             &mut out,
         );
-        assert_eq!(out[0], PartialStep { step: 2, count: 1, anoms: 1 });
+        assert_eq!(
+            out,
+            vec![PartialStep { step: 2 + STEP_ACC_MAX_LAG + 1, count: 3, anoms: 0 }],
+            "live output carries only the completed quorum"
+        );
+        assert_eq!(f.take_expired(), vec![PartialStep { step: 2, count: 1, anoms: 1 }]);
         assert_eq!(f.shed, 1);
 
-        // Stragglers past the horizon forward without re-opening.
+        // Stragglers past the horizon forward live without re-opening.
         out.clear();
         f.fold(PartialStep { step: 1, count: 1, anoms: 9 }, &mut out);
         assert_eq!(out, vec![PartialStep { step: 1, count: 1, anoms: 9 }]);
         assert_eq!(f.shed, 2);
+        assert!(f.take_expired().is_empty());
+    }
+
+    #[test]
+    fn advance_global_expires_a_silent_range_one_slot_early() {
+        let mut f = StepFold::new(3);
+        let mut out = Vec::new();
+        f.fold(PartialStep { step: 5, count: 2, anoms: 4 }, &mut out);
+        assert!(out.is_empty() && f.take_expired().is_empty());
+        // Below the lag edge the stalled quorum survives…
+        f.advance_global(5 + STEP_ACC_MAX_LAG - 1);
+        assert!(f.take_expired().is_empty());
+        // …and at it, the drain runs one slot ahead of the root's
+        // strictly-below sweep, so the partial is already merged when
+        // the root's horizon passes step 5.
+        f.advance_global(5 + STEP_ACC_MAX_LAG);
+        assert_eq!(f.take_expired(), vec![PartialStep { step: 5, count: 2, anoms: 4 }]);
+        assert_eq!(f.shed, 1);
+        // A lower horizon never rolls the fold backwards.
+        f.advance_global(3);
+        assert!(f.take_expired().is_empty());
+        // Near the run start (max below the lag) nothing drains.
+        let mut g = StepFold::new(3);
+        g.fold(PartialStep { step: 0, count: 1, anoms: 1 }, &mut out);
+        g.advance_global(STEP_ACC_MAX_LAG - 1);
+        assert!(g.take_expired().is_empty(), "step 0 must survive an early flush");
+        g.advance_global(STEP_ACC_MAX_LAG);
+        assert_eq!(g.take_expired(), vec![PartialStep { step: 0, count: 1, anoms: 1 }]);
     }
 
     #[test]

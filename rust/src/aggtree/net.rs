@@ -15,11 +15,13 @@
 //!   kind 14 (agg report): app u32, rank u32, step u64, execs u64,
 //!                         anoms u64, ts_lo u64, ts_hi u64
 //!   kind 15 (agg fetch):  app u32, rank u32
-//!   kind 16 (agg flush):  mode u8 (0 delta / 1 absolute / 2 final)
+//!   kind 16 (agg flush):  mode u8 (0 delta / 1 absolute / 2 final),
+//!                         horizon u64 (tree-wide newest step)
 //! reply (hello)  := node u32, depth u32, rank_lo u32, rank_hi u32
 //! reply (report) := partials
 //! reply (fetch)  := partials                         (empty today)
-//! reply (flush)  := partials, snapshot, fin u8 (0/1), [snapshot]
+//! reply (flush)  := partials (expired by the horizon), snapshot,
+//!                   fin u8 (0/1), [snapshot]
 //!
 //! partials := n u32, n × (step u64, count u64, anoms u64)
 //! snapshot := n_ranks u32, n_ranks × (app u32, rank u32, n u64,
@@ -37,9 +39,12 @@
 //! moment the round-trip returns, on the same edge order an in-process
 //! child would use. The fetch reply's partials list is empty today (a
 //! fetch can't complete a quorum) but stays in the frame for a batched
-//! report push later. Flush mode 2 (`final`) additionally returns the
-//! absolute snapshot (`fin`) that `PsHandle::join` folds into the final
-//! state. An overloaded node sheds with `CTRL_BUSY` like every reactor
+//! report push later. A flush carries the tree-wide step `horizon`; its
+//! reply's partials are the quorums that horizon expired from the
+//! leaf's range fold, which the parent relays to the root so a stalled
+//! range expires on the flat aggregator's schedule. Flush mode 2
+//! (`final`) additionally returns the absolute snapshot (`fin`) that
+//! `PsHandle::join` folds into the final state. An overloaded node sheds with `CTRL_BUSY` like every reactor
 //! server; the parent's `Reconnector` retries the shed call in-place
 //! under its bounded busy budget and only then degrades — the flush
 //! proceeds without the subtree (degraded fold, logged).
@@ -257,7 +262,10 @@ impl FrameHandler for AggNodeHandler {
                     Ok(m) => m,
                     Err(_) => return false,
                 };
-                put_partials(&mut reply, &[]);
+                // Parents predating the horizon field don't send one;
+                // treat that as "no reconciliation", not a bad frame.
+                let horizon = c.u64().unwrap_or(0);
+                put_partials(&mut reply, &state.reconcile_horizon(horizon));
                 match mode {
                     FLUSH_DELTA => {
                         put_snapshot(&mut reply, &state.delta());
@@ -330,12 +338,16 @@ impl TreeWire {
         read_partials(&mut Cursor::new(&reply))
     }
 
-    /// Run one flush round-trip; returns `(partials, snapshot, fin)`.
+    /// Run one flush round-trip at the tree-wide step `horizon`;
+    /// returns `(expired partials, snapshot, fin)`.
     pub(crate) fn flush(
         &mut self,
         mode: u8,
+        horizon: u64,
     ) -> Result<(Vec<PartialStep>, VizSnapshot, Option<VizSnapshot>)> {
-        let reply = self.call(&[KIND_AGG_FLUSH, mode])?;
+        let mut req = vec![KIND_AGG_FLUSH, mode];
+        req.extend_from_slice(&horizon.to_le_bytes());
+        let reply = self.call(&req)?;
         let mut c = Cursor::new(&reply);
         let partials = read_partials(&mut c)?;
         let snap = read_snapshot(&mut c)?;
@@ -395,19 +407,25 @@ mod tests {
             "second rank completes the range quorum"
         );
         assert!(w.fetch(0, 1).unwrap().is_empty());
-        let (ps, delta, fin) = w.flush(FLUSH_DELTA).unwrap();
+        let (ps, delta, fin) = w.flush(FLUSH_DELTA, 0).unwrap();
         assert!(ps.is_empty() && fin.is_none());
         assert!(delta.delta);
         assert_eq!(delta.ranks.len(), 2);
         assert_eq!(delta.total_anomalies, 3);
+        // A pending half-quorum expires when the flush's horizon says
+        // the rest of the tree has moved past it, and rides the reply.
+        use crate::ps::STEP_ACC_MAX_LAG;
+        assert!(w.report(&stat(0, 2, 4)).unwrap().is_empty(), "half a range quorum pends");
+        let (expired, _, _) = w.flush(FLUSH_DELTA, 2 + STEP_ACC_MAX_LAG).unwrap();
+        assert_eq!(expired, vec![PartialStep { step: 2, count: 1, anoms: 4 }]);
         // Delta drained; a final flush still carries the absolute state.
-        let (_, delta2, fin2) = w.flush(FLUSH_FINAL).unwrap();
+        let (_, delta2, fin2) = w.flush(FLUSH_FINAL, 0).unwrap();
         assert!(delta2.ranks.is_empty(), "second delta is empty");
         let fin2 = fin2.expect("final flush carries the absolute snapshot");
         assert_eq!(fin2.ranks.len(), 2);
         assert_eq!(fin2.agg_nodes.len(), 1);
         assert_eq!(fin2.agg_nodes[0].node, 3);
-        assert_eq!(fin2.agg_nodes[0].folds, 2);
+        assert_eq!(fin2.agg_nodes[0].folds, 3);
         drop(srv);
     }
 }

@@ -22,12 +22,17 @@ impl Args {
         let mut out = Args::default();
         let mut it = argv.into_iter().peekable();
         while let Some(tok) = it.next() {
-            if let Some(rest) = tok.strip_prefix("--") {
+            if tok == "-v" || tok == "-vv" {
+                // Short verbosity flags (the only single-dash tokens the
+                // CLI accepts) — everything else single-dash stays a
+                // positional so negative numbers etc. keep working.
+                out.flags.push(tok[1..].to_string());
+            } else if let Some(rest) = tok.strip_prefix("--") {
                 if let Some(eq) = rest.find('=') {
                     out.options.insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
                 } else if it
                     .peek()
-                    .map(|n| !n.starts_with("--"))
+                    .map(|n| !n.starts_with("--") && n != "-v" && n != "-vv")
                     .unwrap_or(false)
                 {
                     let val = it.next().unwrap();
@@ -117,6 +122,19 @@ impl Args {
     pub fn positionals(&self) -> &[String] {
         &self.positionals
     }
+
+    /// Debug-log verbosity: `-vv` → 2 (trace), `-v` → 1 (debug), else 0.
+    /// Every subcommand accepts these; `main` maps the level onto
+    /// [`crate::util::log::set_level`] before dispatch.
+    pub fn verbosity(&self) -> u8 {
+        if self.flag("vv") {
+            2
+        } else if self.flag("v") {
+            1
+        } else {
+            0
+        }
+    }
 }
 
 fn die(msg: &str) -> ! {
@@ -160,6 +178,23 @@ mod tests {
         let a = parse(&["--fast", "--ranks", "4"], false);
         assert!(a.flag("fast"));
         assert_eq!(a.u64_opt("ranks", 0), 4);
+    }
+
+    #[test]
+    fn short_verbosity_flags() {
+        // `-v`/`-vv` are flags everywhere they appear: they must not be
+        // eaten as a subcommand, a positional, or an option value.
+        let a = parse(&["exp", "-v", "chaos"], true);
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.verbosity(), 1);
+        assert_eq!(a.positionals(), &["chaos".to_string()]);
+
+        let b = parse(&["--out", "-vv", "run"], true);
+        assert_eq!(b.verbosity(), 2);
+        assert!(b.get("out").is_none(), "-vv must not become --out's value");
+        assert_eq!(b.subcommand.as_deref(), Some("run"));
+
+        assert_eq!(parse(&[], false).verbosity(), 0);
     }
 
     #[test]

@@ -213,6 +213,26 @@ pub struct Config {
     /// Server-wide reply-backlog bound, bytes, summed over all of a
     /// server's connections; above it every new request is shed.
     pub net_server_queue_bytes: usize,
+    /// Chaos plane (`rust/docs/chaos.md`): seed for the deterministic
+    /// [`FaultPlan`](crate::util::fault::FaultPlan); 0 reuses the run
+    /// seed. The plan only activates when at least one fault knob below
+    /// is non-zero (or `chaos.kills` is non-empty).
+    pub chaos_seed: u64,
+    /// Sever an incoming connection's read burst every ~N bursts; 0 off.
+    pub chaos_sever_every: u64,
+    /// Stall the server read path every ~N bursts, by `chaos.stall_ms`.
+    pub chaos_stall_every: u64,
+    pub chaos_stall_ms: u64,
+    /// Delay a reply every ~N admitted frames, by `chaos.delay_ms`.
+    pub chaos_delay_every: u64,
+    pub chaos_delay_ms: u64,
+    /// Tear the tail off every ~Nth sealed `.provseg` segment, leaving
+    /// it `chaos.torn_tail_bytes` short of complete.
+    pub chaos_torn_every: u64,
+    pub chaos_torn_tail_bytes: u64,
+    /// Scheduled child-process kills, comma-separated `target:index@step`
+    /// specs (`ps:0@6,provdb:0@10`); executed by the chaos supervisor.
+    pub chaos_kills: String,
 }
 
 impl Default for Config {
@@ -260,6 +280,15 @@ impl Default for Config {
             net_reactor_threads: 2,
             net_conn_queue_bytes: 1 << 20,
             net_server_queue_bytes: 64 << 20,
+            chaos_seed: 0,
+            chaos_sever_every: 0,
+            chaos_stall_every: 0,
+            chaos_stall_ms: 20,
+            chaos_delay_every: 0,
+            chaos_delay_ms: 5,
+            chaos_torn_every: 0,
+            chaos_torn_tail_bytes: 5,
+            chaos_kills: String::new(),
         }
     }
 }
@@ -346,6 +375,15 @@ impl Config {
             "net.reactor_threads" => self.net_reactor_threads = v.parse()?,
             "net.conn_queue_bytes" => self.net_conn_queue_bytes = v.parse()?,
             "net.server_queue_bytes" => self.net_server_queue_bytes = v.parse()?,
+            "chaos.seed" => self.chaos_seed = v.parse()?,
+            "chaos.sever_every" => self.chaos_sever_every = v.parse()?,
+            "chaos.stall_every" => self.chaos_stall_every = v.parse()?,
+            "chaos.stall_ms" => self.chaos_stall_ms = v.parse()?,
+            "chaos.delay_every" => self.chaos_delay_every = v.parse()?,
+            "chaos.delay_ms" => self.chaos_delay_ms = v.parse()?,
+            "chaos.torn_every" => self.chaos_torn_every = v.parse()?,
+            "chaos.torn_tail_bytes" => self.chaos_torn_tail_bytes = v.parse()?,
+            "chaos.kills" => self.chaos_kills = v.to_string(),
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -423,7 +461,35 @@ impl Config {
         {
             bail!("probe.file / probe.trigger require provdb.addr to be set");
         }
+        // The kill schedule must parse at config time, not mid-run.
+        crate::util::fault::parse_kills(&self.chaos_kills).context("chaos.kills")?;
+        if self.chaos_stall_every > 0 && self.chaos_stall_ms == 0 {
+            bail!("chaos.stall_every requires chaos.stall_ms > 0");
+        }
+        if self.chaos_torn_every > 0 && self.chaos_torn_tail_bytes == 0 {
+            bail!("chaos.torn_every requires chaos.torn_tail_bytes > 0");
+        }
         Ok(())
+    }
+
+    /// Build the chaos [`FaultPlan`](crate::util::fault::FaultPlan) this
+    /// config describes; `None` when every fault knob is off (the
+    /// production default). `chaos.seed = 0` reuses the run seed so a
+    /// single seed reproduces workload *and* fault schedule.
+    pub fn fault_plan(&self) -> anyhow::Result<Option<crate::util::fault::FaultPlan>> {
+        let plan = crate::util::fault::FaultPlan {
+            seed: if self.chaos_seed != 0 { self.chaos_seed } else { self.seed },
+            sever_every: self.chaos_sever_every,
+            stall_every: self.chaos_stall_every,
+            stall_ms: self.chaos_stall_ms,
+            delay_every: self.chaos_delay_every,
+            delay_ms: self.chaos_delay_ms,
+            torn_every: self.chaos_torn_every,
+            torn_tail_bytes: self.chaos_torn_tail_bytes,
+            kills: crate::util::fault::parse_kills(&self.chaos_kills)?,
+            ..Default::default()
+        };
+        Ok(if plan.any_faults() { Some(plan) } else { None })
     }
 
     /// Reactor sizing for every TCP server this config spawns.
@@ -480,6 +546,12 @@ impl Config {
             ("net_reactor_threads", Json::num(self.net_reactor_threads as f64)),
             ("net_conn_queue_bytes", Json::num(self.net_conn_queue_bytes as f64)),
             ("net_server_queue_bytes", Json::num(self.net_server_queue_bytes as f64)),
+            ("chaos_seed", Json::num(self.chaos_seed as f64)),
+            ("chaos_sever_every", Json::num(self.chaos_sever_every as f64)),
+            ("chaos_stall_every", Json::num(self.chaos_stall_every as f64)),
+            ("chaos_delay_every", Json::num(self.chaos_delay_every as f64)),
+            ("chaos_torn_every", Json::num(self.chaos_torn_every as f64)),
+            ("chaos_kills", Json::str(&self.chaos_kills)),
         ])
     }
 }
@@ -716,6 +788,36 @@ trigger = fn:*.*:exit / score > 10.0 / { capture(record); }
         let d = Config::default();
         assert!(d.probe_file.is_empty() && d.probe_sample.is_empty());
         assert!(d.probe_trigger.is_empty());
+    }
+
+    #[test]
+    fn chaos_keys_parse_and_validate() {
+        let text = r#"
+seed = 77
+
+[chaos]
+sever_every = 40
+stall_every = 16
+stall_ms = 10
+torn_every = 2
+torn_tail_bytes = 5
+kills = ps:0@6, provdb:0@10
+"#;
+        let c = Config::from_str(text).unwrap();
+        assert_eq!(c.chaos_sever_every, 40);
+        assert_eq!(c.chaos_stall_ms, 10);
+        assert_eq!(c.chaos_kills, "ps:0@6, provdb:0@10");
+        let plan = c.fault_plan().unwrap().expect("live knobs must yield a plan");
+        // chaos.seed = 0 reuses the run seed.
+        assert_eq!(plan.seed, 77);
+        assert_eq!(plan.kills.len(), 2);
+        assert_eq!(plan.kills[0].at_step, 6);
+        // Defaults: chaos entirely off.
+        assert!(Config::default().fault_plan().unwrap().is_none());
+        // A malformed kill schedule is rejected at config time.
+        assert!(Config::from_str("[chaos]\nkills = disk:0@4").is_err());
+        assert!(Config::from_str("[chaos]\nstall_every = 4\nstall_ms = 0").is_err());
+        assert!(Config::from_str("[chaos]\ntorn_every = 2\ntorn_tail_bytes = 0").is_err());
     }
 
     #[test]

@@ -65,6 +65,10 @@ pub struct RunReport {
     /// Kept records the sampling probe shed before the sink
     /// (0 without a `[probe] sample` gate).
     pub prov_shed: u64,
+    /// In-flight provenance records abandoned after a send-side failure
+    /// survived its one resend (remote sink only; the chaos plane's
+    /// bounded-loss ledger — always 0 in a healthy run).
+    pub prov_inflight_lost: u64,
     /// Global-event records the trigger probe pushed into provDB
     /// (0 without a `[probe] trigger`).
     pub trigger_pushed: u64,
@@ -109,6 +113,7 @@ impl RunReport {
             ("total_anomalies", Json::num(self.total_anomalies as f64)),
             ("total_kept", Json::num(self.total_kept as f64)),
             ("prov_shed", Json::num(self.prov_shed as f64)),
+            ("prov_inflight_lost", Json::num(self.prov_inflight_lost as f64)),
             ("trigger_pushed", Json::num(self.trigger_pushed as f64)),
             ("bp_bytes", Json::num(self.bp_bytes as f64)),
             ("reduced_bytes", Json::num(self.reduced_bytes as f64)),
@@ -248,7 +253,15 @@ impl ProvSink {
             // Ungated: the batch paths (no per-record probe eval).
             match &mut self.dest {
                 SinkDest::Local(db) => db.append_step(kept, reg).expect("prov append"),
-                SinkDest::Remote(c) => c.append_step(kept, reg).expect("provdb append"),
+                // A dead service must not kill the AD worker mid-run: the
+                // client already counted the abandoned batch in its
+                // `inflight_lost` ledger and will reconnect on the next
+                // batch, so degrade to a warning and keep analysing.
+                SinkDest::Remote(c) => {
+                    if let Err(e) = c.append_step(kept, reg) {
+                        crate::log_warn!("driver", "provdb append failed (counted): {e:#}");
+                    }
+                }
             }
             return;
         };
@@ -259,7 +272,11 @@ impl ProvSink {
             }
             match &mut self.dest {
                 SinkDest::Local(db) => db.append_record(rec).expect("prov append"),
-                SinkDest::Remote(c) => c.append(&rec).expect("provdb append"),
+                SinkDest::Remote(c) => {
+                    if let Err(e) = c.append(&rec) {
+                        crate::log_warn!("driver", "provdb append failed (counted): {e:#}");
+                    }
+                }
             }
         }
     }
@@ -267,13 +284,26 @@ impl ProvSink {
     fn flush(&mut self) {
         match &mut self.dest {
             SinkDest::Local(db) => db.flush().expect("prov flush"),
-            SinkDest::Remote(c) => c.flush().expect("provdb flush"),
+            SinkDest::Remote(c) => {
+                if let Err(e) = c.flush() {
+                    crate::log_warn!("driver", "provdb flush failed (counted): {e:#}");
+                }
+            }
         }
     }
 
     /// Records the sample gate dropped (0 when ungated).
     fn shed(&self) -> u64 {
         self.gate.as_ref().map_or(0, |g| g.shed)
+    }
+
+    /// Records this worker's client abandoned mid-flight (remote only) —
+    /// the per-worker slice of the chaos plane's bounded-loss ledger.
+    fn inflight_lost(&self) -> u64 {
+        match &self.dest {
+            SinkDest::Local(_) => 0,
+            SinkDest::Remote(c) => c.inflight_lost(),
+        }
     }
 
     /// Locally written reduced bytes (remote writers report 0 — the
@@ -535,6 +565,7 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
         anomalies: u64,
         kept: u64,
         shed: u64,
+        prov_inflight_lost: u64,
         ad_seconds: f64,
         latency: RunStats,
         reduced_bytes: u64,
@@ -561,6 +592,7 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
                         anomalies: 0,
                         kept: 0,
                         shed: 0,
+                        prov_inflight_lost: 0,
                         ad_seconds: 0.0,
                         latency: RunStats::new(),
                         reduced_bytes: 0,
@@ -621,6 +653,7 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
                     }
                     db.flush();
                     out.shed = db.shed();
+                    out.prov_inflight_lost = db.inflight_lost();
                     out.reduced_bytes = db.local_bytes_written();
                     out
                 })
@@ -643,6 +676,7 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
     let mut anomalies = 0u64;
     let mut kept = 0u64;
     let mut shed = 0u64;
+    let mut prov_inflight_lost = 0u64;
     let mut ad_seconds = 0.0f64;
     let mut latency = RunStats::new();
     let mut reduced_bytes = 0u64;
@@ -653,6 +687,7 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
         anomalies += o.anomalies;
         kept += o.kept;
         shed += o.shed;
+        prov_inflight_lost += o.prov_inflight_lost;
         ad_seconds += o.ad_seconds;
         latency.merge(&o.latency);
         reduced_bytes += o.reduced_bytes;
@@ -699,6 +734,7 @@ pub fn run(cfg: &Config, workflow: &Workflow, mode: Mode) -> Result<RunReport> {
         total_anomalies: anomalies,
         total_kept: kept,
         prov_shed: shed,
+        prov_inflight_lost,
         trigger_pushed,
         bp_bytes,
         reduced_bytes,

@@ -4,9 +4,11 @@
 pub mod driver;
 pub mod offline;
 pub mod overhead;
+pub mod supervise;
 pub mod workflow;
 
 pub use driver::{run, Mode, RunReport};
 pub use offline::{analyze_bp, OfflineReport};
 pub use overhead::{measure_scale, overhead_pct, sweep, OverheadRow};
+pub use supervise::{pick_addr, ChildSpec, Supervisor};
 pub use workflow::{RankAssignment, Workflow};

@@ -1,0 +1,387 @@
+//! Chaos-plane supervisor: spawns the workflow's server children
+//! (`ps-shard-server`, `provdb-server`, `agg-node`), watches them, and
+//! restarts a dead one *into the same endpoint slot* so every client
+//! heals through its existing `Reconnector`/`Rerouted` path instead of
+//! being reconfigured (`rust/docs/chaos.md`).
+//!
+//! The supervisor is also the executor of a [`FaultPlan`]'s kill
+//! schedule: the chaos harness calls [`Supervisor::kill`] /
+//! [`Supervisor::respawn`] at the sync steps the plan names, and the
+//! plan itself rides to every child through the `CHIMBUKO_CHAOS`
+//! environment variable (each server calls
+//! [`fault::init_from_env`](crate::util::fault::init_from_env) at
+//! startup), so one seed reproduces the same schedule in every process.
+//!
+//! Restart-with-state: a PS stat shard's keyed table can be
+//! checkpointed through [`Supervisor::ps_extract`] (non-destructive
+//! `KIND_EXTRACT` dump) and re-seeded into the respawned process with
+//! [`Supervisor::ps_install`]; a provDB shard recovers from its own
+//! `.provseg` log (footer-first streaming recovery) and needs no seed.
+
+use crate::util::fault::{FaultPlan, KillTarget};
+use crate::util::log::trace_step;
+use anyhow::{Context, Result};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child as ChildProc, Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// How long [`Supervisor::await_ready`] polls a child's endpoint before
+/// giving up (cold target directories + debug builds are slow).
+const READY_TIMEOUT: Duration = Duration::from_secs(30);
+const READY_POLL: Duration = Duration::from_millis(20);
+
+/// Pick a free loopback port by binding `127.0.0.1:0` and immediately
+/// dropping the listener. The port is chosen *before* the child spawns
+/// so its endpoint address is stable across restarts — the whole point
+/// of slot-preserving supervision. (The tiny window in which another
+/// process could grab the port is acceptable for tests/harnesses; a
+/// production deployment assigns ports explicitly.)
+pub fn pick_addr() -> Result<String> {
+    let l = TcpListener::bind("127.0.0.1:0").context("picking a free port")?;
+    Ok(l.local_addr().context("reading picked port")?.to_string())
+}
+
+/// Everything needed to (re)spawn one child into its slot: the argv is
+/// replayed verbatim on every respawn, so the child always comes back at
+/// the same address with the same identity flags.
+#[derive(Clone, Debug)]
+pub struct ChildSpec {
+    /// Which server class this is (also the kill-spec namespace).
+    pub target: KillTarget,
+    /// Slot index within the class (kill specs say `ps:0@6`).
+    pub index: usize,
+    /// The endpoint the child serves (stable across restarts).
+    pub addr: String,
+    /// Full argv after the binary name, `--addr` included.
+    pub args: Vec<String>,
+}
+
+impl ChildSpec {
+    /// A `ps-shard-server` slot.
+    pub fn ps_shard(index: usize, shards: usize, addr: &str) -> ChildSpec {
+        ChildSpec {
+            target: KillTarget::PsShard,
+            index,
+            addr: addr.to_string(),
+            args: vec![
+                "ps-shard-server".into(),
+                "--addr".into(),
+                addr.to_string(),
+                "--shard-id".into(),
+                index.to_string(),
+                "--shards".into(),
+                shards.to_string(),
+            ],
+        }
+    }
+
+    /// A `provdb-server` slot. `dir` is the shard's durable log
+    /// directory — restart recovery replays it, so it must survive the
+    /// process (pass the same directory on every respawn).
+    pub fn provdb(index: usize, shards: usize, addr: &str, dir: &std::path::Path) -> ChildSpec {
+        ChildSpec {
+            target: KillTarget::ProvDb,
+            index,
+            addr: addr.to_string(),
+            args: vec![
+                "provdb-server".into(),
+                "--addr".into(),
+                addr.to_string(),
+                "--shards".into(),
+                shards.to_string(),
+                "--dir".into(),
+                dir.display().to_string(),
+            ],
+        }
+    }
+
+    /// An `agg-node` leaf slot covering ranks `[rank_lo, rank_hi)`.
+    pub fn agg_node(index: usize, addr: &str, rank_lo: u32, rank_hi: u32) -> ChildSpec {
+        ChildSpec {
+            target: KillTarget::AggNode,
+            index,
+            addr: addr.to_string(),
+            args: vec![
+                "agg-node".into(),
+                "--addr".into(),
+                addr.to_string(),
+                "--node".into(),
+                (index + 1).to_string(),
+                "--rank-lo".into(),
+                rank_lo.to_string(),
+                "--rank-hi".into(),
+                rank_hi.to_string(),
+            ],
+        }
+    }
+}
+
+/// One supervised slot: its spec plus the live process (if any).
+struct Slot {
+    spec: ChildSpec,
+    proc: Option<ChildProc>,
+    /// Restarts this slot has been through (respawns + reaps).
+    restarts: u64,
+}
+
+/// Spawns and supervises server children of one `chimbuko` binary.
+///
+/// Dropping the supervisor kills every remaining child — a panicking
+/// harness must not leak server processes.
+pub struct Supervisor {
+    bin: PathBuf,
+    /// `CHIMBUKO_CHAOS` spec handed to every child (empty = no chaos).
+    chaos_spec: String,
+    slots: Vec<Slot>,
+}
+
+impl Supervisor {
+    /// Supervise children of the `chimbuko` binary at `bin`, with no
+    /// fault plan in their environment.
+    pub fn new(bin: PathBuf) -> Supervisor {
+        Supervisor { bin, chaos_spec: String::new(), slots: Vec::new() }
+    }
+
+    /// Hand `plan` to every subsequently spawned child via the
+    /// `CHIMBUKO_CHAOS` environment variable (the deterministic-replay
+    /// hand-off: same seed, same schedule, every process).
+    pub fn with_plan(mut self, plan: &FaultPlan) -> Supervisor {
+        self.chaos_spec = plan.spec();
+        self
+    }
+
+    /// Spawn `spec` and register its slot. Does *not* wait for
+    /// readiness — call [`await_ready`](Self::await_ready) after
+    /// spawning a batch so the children boot in parallel.
+    pub fn spawn(&mut self, spec: ChildSpec) -> Result<()> {
+        let proc = self.launch(&spec)?;
+        trace_step("supervise", 0, &actor_of(&spec), "spawned", &spec.addr);
+        self.slots.push(Slot { spec, proc: Some(proc), restarts: 0 });
+        Ok(())
+    }
+
+    fn launch(&self, spec: &ChildSpec) -> Result<ChildProc> {
+        let mut cmd = Command::new(&self.bin);
+        cmd.args(&spec.args).stdin(Stdio::null()).stdout(Stdio::null());
+        if !self.chaos_spec.is_empty() {
+            cmd.env("CHIMBUKO_CHAOS", &self.chaos_spec);
+        } else {
+            // Never let a plan leak from the harness's own environment
+            // into an unfaulted child — the control run must stay clean.
+            cmd.env_remove("CHIMBUKO_CHAOS");
+        }
+        cmd.spawn().with_context(|| {
+            format!("spawning {} {} via {}", actor_of(spec), spec.addr, self.bin.display())
+        })
+    }
+
+    /// Block until every supervised endpoint accepts a TCP connection
+    /// (the readiness probe — banner scraping would race buffering).
+    pub fn await_ready(&self) -> Result<()> {
+        for s in &self.slots {
+            await_endpoint(&s.spec.addr)
+                .with_context(|| format!("{} never became ready", actor_of(&s.spec)))?;
+        }
+        Ok(())
+    }
+
+    /// Kill the `(target, index)` child (SIGKILL — a crash, not a
+    /// shutdown). The slot stays registered; [`respawn`](Self::respawn)
+    /// brings it back at the same address. Returns the child's endpoint.
+    pub fn kill(&mut self, target: KillTarget, index: usize) -> Result<String> {
+        let slot = self
+            .slot_mut(target, index)
+            .with_context(|| format!("no supervised {}:{index}", target.name()))?;
+        if let Some(mut p) = slot.proc.take() {
+            p.kill().ok();
+            p.wait().ok();
+        }
+        let addr = slot.spec.addr.clone();
+        trace_step("supervise", 0, &actor_of(&slot.spec), "killed", &addr);
+        Ok(addr)
+    }
+
+    /// Respawn a killed/dead `(target, index)` child into its original
+    /// endpoint slot and wait for it to accept connections. Returns the
+    /// recovery time (kill-to-first-accepted-connection is the chaos
+    /// rows' `recovery_ms` when the caller respawns immediately).
+    pub fn respawn(&mut self, target: KillTarget, index: usize) -> Result<Duration> {
+        let t0 = Instant::now();
+        let bin_slot = self
+            .slot_mut(target, index)
+            .with_context(|| format!("no supervised {}:{index}", target.name()))?;
+        if let Some(mut p) = bin_slot.proc.take() {
+            // Defensive: never two children in one slot.
+            p.kill().ok();
+            p.wait().ok();
+        }
+        let spec = bin_slot.spec.clone();
+        let proc = self.launch(&spec)?;
+        let slot = self.slot_mut(target, index).expect("slot vanished");
+        slot.proc = Some(proc);
+        slot.restarts += 1;
+        await_endpoint(&spec.addr)
+            .with_context(|| format!("respawned {} never became ready", actor_of(&spec)))?;
+        let dt = t0.elapsed();
+        trace_step(
+            "supervise",
+            0,
+            &actor_of(&spec),
+            "respawned",
+            &format!("{} in {:.1}ms", spec.addr, dt.as_secs_f64() * 1e3),
+        );
+        Ok(dt)
+    }
+
+    /// Sweep every slot with `try_wait`; any child that exited on its
+    /// own is respawned into its slot. Returns the `(target, index)`
+    /// pairs that were restarted — the caller decides whether state
+    /// re-seeding is needed (PS shards) or the child self-recovers from
+    /// its log (provDB shards).
+    pub fn reap_and_restart(&mut self) -> Result<Vec<(KillTarget, usize)>> {
+        let mut dead = Vec::new();
+        for s in &mut self.slots {
+            if let Some(p) = &mut s.proc {
+                if p.try_wait().context("polling child")?.is_some() {
+                    s.proc = None;
+                    dead.push((s.spec.target, s.spec.index));
+                    trace_step("supervise", 0, &actor_of(&s.spec), "exited", &s.spec.addr);
+                }
+            }
+        }
+        for &(t, i) in &dead {
+            self.respawn(t, i)?;
+        }
+        Ok(dead)
+    }
+
+    /// Whether the `(target, index)` child is currently running.
+    pub fn is_alive(&mut self, target: KillTarget, index: usize) -> bool {
+        match self.slot_mut(target, index) {
+            Some(Slot { proc: Some(p), .. }) => matches!(p.try_wait(), Ok(None)),
+            _ => false,
+        }
+    }
+
+    /// Restart count of the `(target, index)` slot.
+    pub fn restarts(&self, target: KillTarget, index: usize) -> u64 {
+        self.slots
+            .iter()
+            .find(|s| s.spec.target == target && s.spec.index == index)
+            .map_or(0, |s| s.restarts)
+    }
+
+    /// Endpoint address of the `(target, index)` slot.
+    pub fn addr_of(&self, target: KillTarget, index: usize) -> Option<&str> {
+        self.slots
+            .iter()
+            .find(|s| s.spec.target == target && s.spec.index == index)
+            .map(|s| s.spec.addr.as_str())
+    }
+
+    /// Chaos-plane checkpoint of one PS stat shard: the non-destructive
+    /// keyed dump (`KIND_EXTRACT`) the restart path re-seeds from.
+    pub fn ps_extract(
+        &self,
+        index: usize,
+        shards: usize,
+    ) -> Result<Vec<(crate::ps::FuncKey, crate::stats::RunStats)>> {
+        let addr = self
+            .addr_of(KillTarget::PsShard, index)
+            .with_context(|| format!("no supervised ps:{index}"))?;
+        let mut w = crate::ps::net::ShardWire::dial(addr, index as u32, shards as u32)?;
+        w.extract()
+    }
+
+    /// Re-seed a (freshly respawned) PS stat shard with a checkpoint
+    /// taken by [`ps_extract`](Self::ps_extract).
+    pub fn ps_install(
+        &self,
+        index: usize,
+        shards: usize,
+        entries: &[(crate::ps::FuncKey, crate::stats::RunStats)],
+    ) -> Result<()> {
+        let addr = self
+            .addr_of(KillTarget::PsShard, index)
+            .with_context(|| format!("no supervised ps:{index}"))?;
+        let mut w = crate::ps::net::ShardWire::dial(addr, index as u32, shards as u32)?;
+        w.install(entries)
+    }
+
+    /// Kill every remaining child (idempotent; also runs on drop).
+    pub fn stop_all(&mut self) {
+        for s in &mut self.slots {
+            if let Some(mut p) = s.proc.take() {
+                p.kill().ok();
+                p.wait().ok();
+            }
+        }
+    }
+
+    fn slot_mut(&mut self, target: KillTarget, index: usize) -> Option<&mut Slot> {
+        self.slots.iter_mut().find(|s| s.spec.target == target && s.spec.index == index)
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        self.stop_all();
+    }
+}
+
+fn actor_of(spec: &ChildSpec) -> String {
+    format!("{}:{}", spec.target.name(), spec.index)
+}
+
+/// Poll `addr` with TCP connects until it accepts or the timeout lapses.
+fn await_endpoint(addr: &str) -> Result<()> {
+    let deadline = Instant::now() + READY_TIMEOUT;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(_) => return Ok(()),
+            Err(e) if Instant::now() >= deadline => {
+                return Err(anyhow::anyhow!("endpoint {addr} not ready: {e}"));
+            }
+            Err(_) => std::thread::sleep(READY_POLL),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn child_specs_replay_their_slots() {
+        let ps = ChildSpec::ps_shard(2, 4, "127.0.0.1:7001");
+        assert_eq!(ps.target, KillTarget::PsShard);
+        assert_eq!(ps.args[0], "ps-shard-server");
+        assert!(ps.args.contains(&"--shard-id".to_string()));
+        assert!(ps.args.contains(&"2".to_string()));
+        let pd = ChildSpec::provdb(0, 2, "127.0.0.1:7002", std::path::Path::new("/tmp/x"));
+        assert_eq!(pd.target, KillTarget::ProvDb);
+        assert!(pd.args.contains(&"/tmp/x".to_string()));
+        let ag = ChildSpec::agg_node(1, "127.0.0.1:7003", 0, 8);
+        assert_eq!(ag.target, KillTarget::AggNode);
+        assert!(ag.args.contains(&"--rank-hi".to_string()));
+    }
+
+    #[test]
+    fn pick_addr_yields_loopback_ports() {
+        let a = pick_addr().unwrap();
+        let b = pick_addr().unwrap();
+        assert!(a.starts_with("127.0.0.1:"));
+        assert_ne!(a, b, "two picks must not collide while both unbound");
+    }
+
+    #[test]
+    fn await_endpoint_accepts_a_live_listener() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        await_endpoint(&addr).unwrap();
+    }
+
+    // Live spawn/kill/respawn of real server children is covered by
+    // `tests/chaos.rs` (needs the built `chimbuko` binary).
+}

@@ -1,0 +1,556 @@
+//! Chaos scenario: deterministic kill/restart of real server children
+//! mid-run, with bounded-loss assertions (the robustness tentpole's
+//! experiment axis — `rust/docs/chaos.md`).
+//!
+//! The scenario spawns the workflow's server children (`ps-shard-server`
+//! × N plus one `provdb-server`) from the built `chimbuko` binary,
+//! drives a *deterministic* workload against them from a single thread,
+//! and executes a seeded [`FaultPlan`] kill schedule against one PS
+//! shard and the provDB shard. It then proves the three bounded-loss
+//! guarantees the chaos plane promises:
+//!
+//! 1. **Same seed, same schedule** — the kill steps come from the plan,
+//!    and the plan's spec rides to every child via `CHIMBUKO_CHAOS`.
+//! 2. **PS state converges bit-identically** — the killed shard is
+//!    checkpointed (`KIND_EXTRACT`), respawned into the same endpoint
+//!    slot, re-seeded (`KIND_INSTALL` merge), and the one sub-frame the
+//!    router drops while its cached connection is dead is *counted* in
+//!    `PsClient::sync_lost_count` and compensated by re-syncing exactly
+//!    the killed shard's slice of the delta. The final keyed dumps of
+//!    every shard must equal an unfaulted control run's, bit for bit.
+//! 3. **provDB loss is exactly the in-flight window** — records written
+//!    while the server is down fail the client's one resend and land in
+//!    its `inflight_lost` ledger; everything flushed before the kill
+//!    survives restart recovery from the `.provseg` log. Final retained
+//!    records must equal `written − inflight_lost`, no silent gap.
+//!
+//! Every kill emits a [`ChaosRow`] (kill step, records lost, recovery
+//! time) that the fig7/fig9 bench binaries merge into
+//! `BENCH_ps_shards.json` / `BENCH_provdb.json` as `chaos_rows`.
+
+use crate::bench::Table;
+use crate::coordinator::{pick_addr, ChildSpec, Supervisor};
+use crate::provdb::ProvClient;
+use crate::provenance::{ProvRecord, RecordFormat};
+use crate::ps::{self, shard_of, FuncKey};
+use crate::stats::{RunStats, StatsTable};
+use crate::util::fault::{FaultPlan, KillSpec, KillTarget};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// Small client batch so the during-down window spans several shipped
+/// batches (each one exercising the resend-once-then-count path).
+const PROV_BATCH: usize = 4;
+
+/// One kill/restart event's outcome.
+#[derive(Clone, Debug)]
+pub struct ChaosRow {
+    /// Kill-spec namespace: `"ps"` or `"provdb"`.
+    pub target: &'static str,
+    /// Slot index within the class.
+    pub index: usize,
+    /// Sync step the kill fired at (from the plan — seed-deterministic).
+    pub at_step: u64,
+    /// Records/entries counted lost across the kill. For PS this is
+    /// transient loss the harness compensated (counted, then re-synced);
+    /// for provDB it is permanent in-flight-window loss.
+    pub records_lost: u64,
+    /// Kill instant → first healed operation (respawn ready + state
+    /// re-seeded for PS; respawn ready + first acked flush for provDB).
+    pub recovery_ms: f64,
+}
+
+impl ChaosRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("target", Json::str(self.target)),
+            ("index", Json::num(self.index as f64)),
+            ("at_step", Json::num(self.at_step as f64)),
+            ("records_lost", Json::num(self.records_lost as f64)),
+            ("recovery_ms", Json::num(self.recovery_ms)),
+        ])
+    }
+}
+
+/// Outcome of [`run_chaos`]: per-kill rows plus the ledger totals the
+/// bounded-loss assertions were checked against.
+pub struct ChaosResult {
+    pub shards: usize,
+    pub ranks: usize,
+    pub steps: usize,
+    pub seed: u64,
+    pub rows: Vec<ChaosRow>,
+    /// Total router entries counted lost (and compensated) across the
+    /// PS kill — `> 0` proves the loss was *counted*, not silent.
+    pub ps_sync_lost: u64,
+    /// Final keyed dumps of every shard matched the unfaulted control
+    /// run bit for bit (always true when `run_chaos` returns `Ok`).
+    pub ps_state_identical: bool,
+    /// provDB records the workload attempted to write.
+    pub prov_written: u64,
+    /// Records the client's resend-once path abandoned and counted.
+    pub prov_lost: u64,
+    /// Records the healed server retained at the end (post-recovery).
+    pub prov_records: u64,
+}
+
+impl ChaosResult {
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "Chaos plane — seeded kill/restart with bounded loss",
+            &["target", "kill step", "records lost", "recovery (ms)"],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                format!("{}:{}", r.target, r.index),
+                r.at_step.to_string(),
+                r.records_lost.to_string(),
+                format!("{:.1}", r.recovery_ms),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "ps: final state identical to unfaulted control \
+             ({} entries counted lost, all compensated)\n",
+            self.ps_sync_lost
+        ));
+        out.push_str(&format!(
+            "provdb: {} written − {} counted lost = {} retained (ledger exact)\n",
+            self.prov_written, self.prov_lost, self.prov_records
+        ));
+        out
+    }
+
+    /// The `chaos_rows` array the bench binaries embed in their
+    /// `BENCH_*.json` artifacts.
+    pub fn rows_json(&self) -> Json {
+        Json::arr(self.rows.iter().map(ChaosRow::to_json).collect())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str("chaos")),
+            ("shards", Json::num(self.shards as f64)),
+            ("ranks", Json::num(self.ranks as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("ps_sync_lost", Json::num(self.ps_sync_lost as f64)),
+            ("ps_state_identical", Json::Bool(self.ps_state_identical)),
+            ("prov_written", Json::num(self.prov_written as f64)),
+            ("prov_lost", Json::num(self.prov_lost as f64)),
+            ("prov_records", Json::num(self.prov_records as f64)),
+            ("chaos_rows", self.rows_json()),
+        ])
+    }
+}
+
+/// Locate the built `chimbuko` binary for spawning server children:
+/// `CHIMBUKO_BIN` wins, then the running executable itself (when `exp
+/// chaos` runs inside the binary), then siblings of the current
+/// executable's directory and its parents (bench/test executables live
+/// in `target/<profile>/deps/`, the binary one level up).
+pub fn find_chimbuko_bin() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("CHIMBUKO_BIN") {
+        let p = PathBuf::from(p);
+        if p.is_file() {
+            return Some(p);
+        }
+    }
+    let exe = std::env::current_exe().ok()?;
+    if exe.file_stem().and_then(|s| s.to_str()) == Some("chimbuko") {
+        return Some(exe);
+    }
+    let mut dir = exe.parent()?.to_path_buf();
+    for _ in 0..3 {
+        let cand = dir.join("chimbuko");
+        if cand.is_file() {
+            return Some(cand);
+        }
+        dir = match dir.parent() {
+            Some(p) => p.to_path_buf(),
+            None => break,
+        };
+    }
+    None
+}
+
+/// Run the chaos scenario: an unfaulted control pass, then a faulted
+/// pass killing PS shard 0 at `steps/3` and the provDB shard at
+/// `2·steps/3`, asserting the bounded-loss guarantees along the way.
+pub fn run_chaos(
+    bin: &Path,
+    shards: usize,
+    ranks: usize,
+    steps: usize,
+    seed: u64,
+) -> Result<ChaosResult> {
+    let shards = shards.max(1);
+    let ranks = ranks.max(1);
+    ensure!(steps >= 6, "chaos scenario needs at least 6 steps (kills at ⅓ and ⅔)");
+    let kills = vec![
+        KillSpec { target: KillTarget::PsShard, index: 0, at_step: steps as u64 / 3 },
+        KillSpec { target: KillTarget::ProvDb, index: 0, at_step: 2 * steps as u64 / 3 },
+    ];
+    // Unfaulted twin first: same seed, same deltas, no kills, no provDB.
+    let control = drive(bin, shards, ranks, steps, seed, &[], false)
+        .context("chaos control run failed")?;
+    let faulted = drive(bin, shards, ranks, steps, seed, &kills, true)
+        .context("chaos faulted run failed")?;
+
+    let ps_state_identical = control.dumps == faulted.dumps;
+    ensure!(
+        ps_state_identical,
+        "faulted PS state diverged from the unfaulted control run after healing"
+    );
+    ensure!(
+        faulted.sync_lost > 0,
+        "the PS kill produced no counted loss — the sub-frame vanished silently"
+    );
+    ensure!(
+        faulted.prov_lost > 0,
+        "the provDB kill produced no counted loss — the in-flight window vanished silently"
+    );
+    ensure!(
+        faulted.prov_records == faulted.prov_written - faulted.prov_lost,
+        "provDB ledger gap: {} retained != {} written − {} counted lost",
+        faulted.prov_records,
+        faulted.prov_written,
+        faulted.prov_lost
+    );
+
+    Ok(ChaosResult {
+        shards,
+        ranks,
+        steps,
+        seed,
+        rows: faulted.rows,
+        ps_sync_lost: faulted.sync_lost,
+        ps_state_identical,
+        prov_written: faulted.prov_written,
+        prov_lost: faulted.prov_lost,
+        prov_records: faulted.prov_records,
+    })
+}
+
+/// One pass's observable outcome (shared by control and faulted runs).
+struct DriveOutcome {
+    /// Final keyed dump of every shard, in shard order.
+    dumps: Vec<Vec<(FuncKey, RunStats)>>,
+    sync_lost: u64,
+    rows: Vec<ChaosRow>,
+    prov_written: u64,
+    prov_lost: u64,
+    prov_records: u64,
+}
+
+/// Deterministic per-(rank, step) stat delta: every fid present in every
+/// delta, so a killed shard's slice of any delta is exactly its owned
+/// fids — the compensation set is computable from [`shard_of`] alone.
+fn synth_delta(seed: u64, rank: u32, step: u64, fids: u32) -> StatsTable {
+    let mut rng =
+        Rng::new(seed ^ ((rank as u64) << 32) ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut t = StatsTable::new();
+    for fid in 0..fids {
+        for _ in 0..4 {
+            t.push(fid, rng.range_f64(1.0, 100.0));
+        }
+    }
+    t
+}
+
+/// Synthetic provenance record (fig 9 shape; `i` must be unique per
+/// rank across the run so `call_id` never collides).
+fn chaos_record(seed: u64, rank: u32, i: u64) -> ProvRecord {
+    let mut rng = Rng::new(seed ^ ((rank as u64) << 40) ^ i);
+    let dur = rng.range_u64(50, 5_000);
+    let entry = i * 10_000 + rng.range_u64(0, 5_000);
+    let score = rng.range_f64(0.0, 12.0);
+    ProvRecord {
+        call_id: ((rank as u64) << 32) | i,
+        app: 0,
+        rank,
+        thread: 0,
+        fid: (i % 12) as u32,
+        func: format!("F{}", i % 12),
+        step: i / 4,
+        entry_us: entry,
+        exit_us: entry + dur,
+        inclusive_us: dur,
+        exclusive_us: dur / 2,
+        depth: (i % 4) as u32,
+        parent: None,
+        n_children: 0,
+        n_messages: 0,
+        msg_bytes: 0,
+        label: if score > 6.0 { "anomaly_high".to_string() } else { "normal".to_string() },
+        score,
+    }
+}
+
+fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+/// Spawn the server constellation, drive the deterministic workload,
+/// execute the kill schedule, and return the final observable state.
+fn drive(
+    bin: &Path,
+    shards: usize,
+    ranks: usize,
+    steps: usize,
+    seed: u64,
+    kills: &[KillSpec],
+    with_prov: bool,
+) -> Result<DriveOutcome> {
+    let plan = FaultPlan::kills_only(seed, kills.to_vec());
+    let mut sup = Supervisor::new(bin.to_path_buf());
+    if !kills.is_empty() {
+        // Deterministic-replay hand-off: children see the same plan.
+        sup = sup.with_plan(&plan);
+    }
+    let mut endpoints = Vec::with_capacity(shards);
+    for i in 0..shards {
+        let addr = pick_addr()?;
+        sup.spawn(ChildSpec::ps_shard(i, shards, &addr))?;
+        endpoints.push(addr);
+    }
+    let prov_dir = std::env::temp_dir().join(format!(
+        "chimbuko-chaos-{}-{}-{}",
+        std::process::id(),
+        seed,
+        kills.len()
+    ));
+    let mut prov_addr = String::new();
+    if with_prov {
+        let _ = std::fs::remove_dir_all(&prov_dir);
+        std::fs::create_dir_all(&prov_dir).context("creating provdb chaos dir")?;
+        prov_addr = pick_addr()?;
+        sup.spawn(ChildSpec::provdb(0, 1, &prov_addr, &prov_dir))?;
+    }
+    sup.await_ready()?;
+
+    let (client, handle) = ps::spawn_with(ps::PsOpts {
+        shards,
+        endpoints,
+        conn_pool: 1,
+        publish_every: usize::MAX >> 1,
+        reports_per_step: ranks,
+        ..ps::PsOpts::default()
+    })?;
+    let mut prov = if with_prov {
+        Some(ProvClient::connect_with(&prov_addr, PROV_BATCH, RecordFormat::Binary)?)
+    } else {
+        None
+    };
+
+    // Every shard owns several fids, so each sync fans a sub-frame to
+    // every endpoint and a killed shard always has a non-empty slice.
+    let fids = (shards as u32) * 6;
+    let mut rows: Vec<ChaosRow> = Vec::new();
+    // Set once a PS shard was killed: (row index, shard index). Sync
+    // loss with no kill on record is an assertion failure — the ledger
+    // must never tick outside the scheduled fault.
+    let mut ps_healing: Option<(usize, usize)> = None;
+    let mut prov_written = 0u64;
+    let mut rec_seq = 0u64;
+
+    for step in 0..steps as u64 {
+        for k in kills.iter().filter(|k| k.at_step == step) {
+            match k.target {
+                KillTarget::PsShard => {
+                    let t0 = Instant::now();
+                    // Checkpoint → crash → same-slot respawn → re-seed.
+                    let ckpt = sup.ps_extract(k.index, shards)?;
+                    sup.kill(KillTarget::PsShard, k.index)?;
+                    sup.respawn(KillTarget::PsShard, k.index)?;
+                    sup.ps_install(k.index, shards, &ckpt)?;
+                    rows.push(ChaosRow {
+                        target: "ps",
+                        index: k.index,
+                        at_step: step,
+                        records_lost: 0,
+                        recovery_ms: ms(t0.elapsed()),
+                    });
+                    ps_healing = Some((rows.len() - 1, k.index));
+                }
+                KillTarget::ProvDb => {
+                    let db = prov
+                        .as_mut()
+                        .context("provdb kill scheduled but run has no provdb")?;
+                    // Durability barrier: everything acked so far must
+                    // survive the crash via log recovery.
+                    db.flush().context("pre-kill durability barrier")?;
+                    let t0 = Instant::now();
+                    sup.kill(KillTarget::ProvDb, k.index)?;
+                    let lost0 = db.inflight_lost();
+                    // Writes against the dead endpoint: each shipped
+                    // batch fails its one resend and is counted.
+                    let window = (PROV_BATCH as u64) * 2;
+                    for _ in 0..window {
+                        let rec = chaos_record(seed, 0, rec_seq);
+                        rec_seq += 1;
+                        let _ = db.append(&rec);
+                        prov_written += 1;
+                    }
+                    let _ = db.flush(); // ship the remainder while down
+                    sup.respawn(KillTarget::ProvDb, k.index)?;
+                    // First healed barrier: one real record through the
+                    // redial path, acked end to end.
+                    let rec = chaos_record(seed, 0, rec_seq);
+                    rec_seq += 1;
+                    db.append(&rec).context("post-respawn append")?;
+                    prov_written += 1;
+                    db.flush().context("first healed flush")?;
+                    let lost = db.inflight_lost() - lost0;
+                    ensure!(
+                        lost == window,
+                        "during-down loss {lost} != in-flight window {window}"
+                    );
+                    rows.push(ChaosRow {
+                        target: "provdb",
+                        index: k.index,
+                        at_step: step,
+                        records_lost: lost,
+                        recovery_ms: ms(t0.elapsed()),
+                    });
+                }
+                KillTarget::AggNode => {} // not scheduled by this scenario
+            }
+        }
+
+        // Drive the step: single thread, rank order — deterministic
+        // merge order on every shard.
+        for rank in 0..ranks as u32 {
+            let delta = synth_delta(seed, rank, step, fids);
+            let lost0 = client.sync_lost_count();
+            client.sync(0, rank, &delta);
+            let lost = client.sync_lost_count() - lost0;
+            if lost == 0 {
+                continue;
+            }
+            let (row_i, shard) = ps_healing
+                .context("router counted sync loss with no PS kill on record")?;
+            // The dropped sub-frame is exactly the killed shard's slice
+            // of this delta (static placement, rebalancer off).
+            let mut need = StatsTable::new();
+            let mut n = 0u64;
+            for (fid, st) in delta.iter() {
+                if shard_of(0, fid, shards) == shard {
+                    need.replace(fid, *st);
+                    n += 1;
+                }
+            }
+            ensure!(
+                lost == n,
+                "lost sub-frame {lost} entries != killed shard's slice {n}"
+            );
+            // Re-sync until the healed shard absorbs it. Retries landing
+            // inside the reconnector's backoff window are counted too —
+            // transient, compensated loss, visible in the row.
+            let mut merged = false;
+            for _ in 0..200 {
+                std::thread::sleep(Duration::from_millis(20));
+                let before = client.sync_lost_count();
+                client.sync(0, rank, &need);
+                if client.sync_lost_count() == before {
+                    merged = true;
+                    break;
+                }
+            }
+            ensure!(merged, "killed PS shard never healed within the retry budget");
+            rows[row_i].records_lost += client.sync_lost_count() - lost0;
+        }
+
+        // Steady provDB load: one record per rank per step.
+        if let Some(db) = prov.as_mut() {
+            for rank in 0..ranks as u32 {
+                let rec = chaos_record(seed, rank, rec_seq);
+                rec_seq += 1;
+                db.append(&rec)
+                    .with_context(|| format!("provdb append at step {step}"))?;
+                prov_written += 1;
+            }
+        }
+    }
+
+    // Final observable state: keyed dump of every shard (shard order),
+    // then the provDB ledger after a closing barrier.
+    let mut dumps = Vec::with_capacity(shards);
+    for i in 0..shards {
+        dumps.push(sup.ps_extract(i, shards)?);
+    }
+    let sync_lost = client.sync_lost_count();
+    client.shutdown();
+    handle.join();
+    let (prov_records, prov_lost) = match prov.as_mut() {
+        Some(db) => {
+            db.flush().context("closing provdb flush")?;
+            let s = db.stats()?;
+            (s.records, db.inflight_lost())
+        }
+        None => (0, 0),
+    };
+    sup.stop_all();
+    if with_prov {
+        let _ = std::fs::remove_dir_all(&prov_dir);
+    }
+    Ok(DriveOutcome { dumps, sync_lost, rows, prov_written, prov_lost, prov_records })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_delta_is_pure() {
+        let a = synth_delta(7, 3, 11, 12);
+        let b = synth_delta(7, 3, 11, 12);
+        let ea: Vec<(u32, RunStats)> = a.iter().map(|(f, s)| (f, *s)).collect();
+        let eb: Vec<(u32, RunStats)> = b.iter().map(|(f, s)| (f, *s)).collect();
+        assert_eq!(ea, eb, "same (seed, rank, step) must give bit-identical deltas");
+        let c = synth_delta(8, 3, 11, 12);
+        let ec: Vec<(u32, RunStats)> = c.iter().map(|(f, s)| (f, *s)).collect();
+        assert_ne!(ea, ec, "different seeds must differ");
+        assert_eq!(a.len(), 12, "every fid present in every delta");
+    }
+
+    #[test]
+    fn chaos_record_ids_are_unique_per_rank() {
+        let a = chaos_record(1, 2, 10);
+        let b = chaos_record(1, 2, 11);
+        assert_ne!(a.call_id, b.call_id);
+        assert_eq!(a.rank, 2);
+    }
+
+    #[test]
+    fn rows_render_and_serialize() {
+        let res = ChaosResult {
+            shards: 2,
+            ranks: 4,
+            steps: 12,
+            seed: 42,
+            rows: vec![ChaosRow {
+                target: "ps",
+                index: 0,
+                at_step: 4,
+                records_lost: 12,
+                recovery_ms: 31.5,
+            }],
+            ps_sync_lost: 12,
+            ps_state_identical: true,
+            prov_written: 100,
+            prov_lost: 8,
+            prov_records: 92,
+        };
+        let out = res.render();
+        assert!(out.contains("ps:0"));
+        assert!(out.contains("ledger exact"));
+        let j = res.to_json().to_string();
+        assert!(j.contains("\"chaos_rows\""));
+        assert!(j.contains("\"ps_state_identical\":true"));
+        assert_eq!(res.rows_json().to_string().matches("\"target\"").count(), 1);
+    }
+}

@@ -5,12 +5,14 @@
 //! CLI and tests exercise identical code.
 
 pub mod case_study;
+pub mod chaos;
 pub mod fig7;
 pub mod fig8_table1;
 pub mod fig9;
 pub mod figs3_6;
 
 pub use case_study::{run_case_study, CaseStudyResult};
+pub use chaos::{find_chimbuko_bin, run_chaos, ChaosResult, ChaosRow};
 pub use fig7::{
     ps_bench_json, run_aggtree_sweep, run_fig7, run_ps_conn_sweep, run_ps_endpoint_sweep,
     run_ps_rebalance_sweep, run_ps_shard_sweep, AggTreeSweepResult, ConnSweepResult,

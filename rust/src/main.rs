@@ -10,7 +10,7 @@
 //! chimbuko replay   --dir <out_dir>        re-index a stored run, print stats
 //! chimbuko serve    --dir <out_dir> | --provdb host:port  [--addr host:port]
 //!                   viz server over a stored run or a live provDB service
-//! chimbuko exp      <fig7|fig8|fig9|viz|case> [--fast]    paper experiments
+//! chimbuko exp      <fig7|fig8|fig9|viz|case|chaos> [--fast]  paper experiments
 //! chimbuko compare  --a <dir> --b <dir>    cross-run provenance mining
 //! chimbuko ps-server [--addr host:port] [--shards N] [--ranks N]
 //!                   [--endpoints a,b,…] [--conn-pool N] [--reactor-threads N]
@@ -43,6 +43,11 @@
 //! `chimbuko run` also accepts `--probe <file>` (install the file's probes
 //! into the provDB service at run start; requires `--provdb`) — see
 //! `rust/docs/probe.md` for the probe language.
+//!
+//! `-v` / `-vv` on any command raise the execution-trace log level to
+//! debug / trace (`CHIMBUKO_LOG` sets the baseline, `CHIMBUKO_LOG_FILE`
+//! tees the stream to a file). `CHIMBUKO_CHAOS` installs a deterministic
+//! fault plan in any server process — see `rust/docs/chaos.md`.
 
 use chimbuko::cli::Args;
 use chimbuko::config::{Config, DetectorBackend};
@@ -57,6 +62,13 @@ use std::sync::{Arc, RwLock};
 
 fn main() {
     let args = Args::from_env(true);
+    // `-v` / `-vv` raise the log level before anything else runs (the
+    // `CHIMBUKO_LOG` env still sets the baseline when neither is given).
+    match args.verbosity() {
+        2 => chimbuko::util::log::set_level(chimbuko::util::log::Level::Trace),
+        1 => chimbuko::util::log::set_level(chimbuko::util::log::Level::Debug),
+        _ => {}
+    }
     let code = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("gen") => cmd_gen(&args),
@@ -404,6 +416,7 @@ fn cmd_probe(args: &Args) -> anyhow::Result<()> {
 /// low and steps complete early on partial totals.
 fn cmd_ps_server(args: &Args) -> anyhow::Result<()> {
     use std::io::Write;
+    chimbuko::util::fault::init_from_env()?;
     let addr = args.str_opt("addr", "127.0.0.1:5559");
     let endpoints: Vec<String> = args
         .str_opt("endpoints", "")
@@ -463,6 +476,7 @@ fn cmd_ps_server(args: &Args) -> anyhow::Result<()> {
 /// `ps-server --endpoints` listing every shard's address.
 fn cmd_ps_shard_server(args: &Args) -> anyhow::Result<()> {
     use std::io::Write;
+    chimbuko::util::fault::init_from_env()?;
     let addr = args.str_opt("addr", "127.0.0.1:5561");
     let shard_id = args.usize_opt("shard-id", 0);
     let shards = args.usize_opt("shards", 1);
@@ -494,6 +508,7 @@ fn cmd_ps_shard_server(args: &Args) -> anyhow::Result<()> {
 /// in-process parent. Point a `ps.agg_endpoints` slot at its address.
 fn cmd_agg_node(args: &Args) -> anyhow::Result<()> {
     use std::io::Write;
+    chimbuko::util::fault::init_from_env()?;
     let addr = args.str_opt("addr", "127.0.0.1:5571");
     let node = args.usize_opt("node", 1) as u32;
     let depth = args.usize_opt("depth", 1) as u32;
@@ -526,6 +541,7 @@ fn cmd_agg_node(args: &Args) -> anyhow::Result<()> {
 /// `[provdb]` knobs (shards, max_records_per_rank, segment_records,
 /// retain_window_us, log_format); CLI flags override.
 fn cmd_provdb_server(args: &Args) -> anyhow::Result<()> {
+    chimbuko::util::fault::init_from_env()?;
     let cfg = config_of(args)?;
     let addr = args.str_opt("addr", "127.0.0.1:5560");
     let shards = args.usize_opt("shards", cfg.provdb_shards);
@@ -694,20 +710,37 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
         print!("{}", res.render());
         Ok(())
     };
+    let run_chaos = || -> anyhow::Result<()> {
+        let bin = chimbuko::exp::find_chimbuko_bin()
+            .ok_or_else(|| anyhow::anyhow!("chimbuko binary not found (set CHIMBUKO_BIN)"))?;
+        let res = chimbuko::exp::run_chaos(
+            &bin,
+            args.usize_opt("shards", 2),
+            args.usize_opt("ranks", if fast { 4 } else { 8 }),
+            args.usize_opt("steps", if fast { 12 } else { 24 }),
+            args.u64_opt("seed", 7),
+        )?;
+        print!("{}", res.render());
+        Ok(())
+    };
     match which {
         "fig7" => run_fig7()?,
         "fig8" | "table1" => run_fig8()?,
         "fig9" => run_fig9()?,
         "viz" | "figs3-6" => run_viz()?,
         "case" | "figs10-13" => run_case()?,
+        "chaos" => run_chaos()?,
         "all" => {
             run_fig7()?;
             run_fig8()?;
             run_fig9()?;
             run_viz()?;
             run_case()?;
+            // chaos spawns server children of this very binary, so it
+            // runs in "all" too — current_exe() is the binary here.
+            run_chaos()?;
         }
-        other => anyhow::bail!("unknown experiment '{other}' (fig7|fig8|fig9|viz|case|all)"),
+        other => anyhow::bail!("unknown experiment '{other}' (fig7|fig8|fig9|viz|case|chaos|all)"),
     }
     Ok(())
 }

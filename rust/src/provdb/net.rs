@@ -419,6 +419,8 @@ impl FrameHandler for ProvHandler {
 /// encoding for migration and A/B measurement (the fig9 codec sweep).
 pub struct ProvClient {
     stream: TcpStream,
+    /// Peer address, kept for the write path's one-shot reconnect.
+    addr: String,
     /// Server shard count, learned from the hello handshake.
     n_shards: usize,
     /// Encoded records awaiting the next batch send (reused).
@@ -428,6 +430,9 @@ pub struct ProvClient {
     msg: Vec<u8>,
     batch: usize,
     wire: RecordFormat,
+    /// Records abandoned after a send-side failure survived the one
+    /// resend (bounded-loss accounting; see `rust/docs/chaos.md`).
+    inflight_lost: u64,
 }
 
 impl ProvClient {
@@ -443,6 +448,23 @@ impl ProvClient {
 
     /// Connect with an explicit wire record format.
     pub fn connect_with(addr: &str, batch: usize, wire: RecordFormat) -> Result<ProvClient> {
+        let (stream, n_shards) = Self::dial(addr, wire)?;
+        Ok(ProvClient {
+            stream,
+            addr: addr.to_string(),
+            n_shards,
+            pending: Vec::new(),
+            pending_n: 0,
+            msg: Vec::new(),
+            batch: batch.max(1),
+            wire,
+            inflight_lost: 0,
+        })
+    }
+
+    /// Dial + hello handshake (shared by connect and the write path's
+    /// reconnect, so a healed connection is fully re-verified).
+    fn dial(addr: &str, wire: RecordFormat) -> Result<(TcpStream, usize)> {
         let mut stream =
             TcpStream::connect(addr).with_context(|| format!("connecting to provdb {addr}"))?;
         stream.set_nodelay(true).ok();
@@ -462,15 +484,7 @@ impl ProvClient {
                 );
             }
         }
-        Ok(ProvClient {
-            stream,
-            n_shards,
-            pending: Vec::new(),
-            pending_n: 0,
-            msg: Vec::new(),
-            batch: batch.max(1),
-            wire,
-        })
+        Ok((stream, n_shards))
     }
 
     /// Server shard count from the handshake.
@@ -507,6 +521,14 @@ impl ProvClient {
         Ok(())
     }
 
+    /// Write one assembled batch frame and read its ack count. A
+    /// transport failure here means the batch's fate is unknown.
+    fn ship(stream: &mut TcpStream, msg: &[u8]) -> Result<usize> {
+        write_msg(stream, msg)?;
+        let reply = read_msg(stream)?.context("provdb closed on write")?;
+        Ok(Cursor::new(&reply).u32()? as usize)
+    }
+
     fn send_batch(&mut self) -> Result<()> {
         if self.pending_n == 0 {
             return Ok(());
@@ -521,16 +543,67 @@ impl ProvClient {
         }
         self.msg.extend_from_slice(&(self.pending_n as u32).to_le_bytes());
         self.msg.extend_from_slice(&self.pending);
-        write_msg(&mut self.stream, &self.msg)?;
-        let reply = read_msg(&mut self.stream)?.context("provdb closed on write")?;
-        let mut c = Cursor::new(&reply);
-        let acked = c.u32()? as usize;
+        let acked = match Self::ship(&mut self.stream, &self.msg) {
+            Ok(a) => a,
+            Err(first) => {
+                // Send-side failure (a crashed or restarted server):
+                // redial — re-running the full hello handshake — and
+                // resend the already-encoded batch exactly once. Ingest
+                // is append-with-seq, so a healed server absorbing the
+                // resend is idempotent from the run's point of view. If
+                // the resend fails too, the batch is *counted* as lost
+                // (never silently dropped) and abandoned, so the client
+                // keeps making progress against the healed endpoint.
+                let resent = Self::dial(&self.addr, self.wire).and_then(|(mut s, n)| {
+                    let acked = Self::ship(&mut s, &self.msg)?;
+                    Ok((s, n, acked))
+                });
+                match resent {
+                    Ok((stream, n_shards, acked)) => {
+                        crate::log_warn!(
+                            "prov",
+                            "provdb {} write severed mid-batch; reconnected and resent {} records",
+                            self.addr,
+                            self.pending_n
+                        );
+                        self.stream = stream;
+                        self.n_shards = n_shards;
+                        acked
+                    }
+                    Err(e) => {
+                        self.inflight_lost += self.pending_n as u64;
+                        crate::log_warn!(
+                            "prov",
+                            "provdb {} unreachable after resend: {} in-flight records lost \
+                             (counted; total {})",
+                            self.addr,
+                            self.pending_n,
+                            self.inflight_lost
+                        );
+                        self.pending.clear();
+                        self.pending_n = 0;
+                        return Err(e.context(first).context(format!(
+                            "provdb {} write failed and the one resend failed too",
+                            self.addr
+                        )));
+                    }
+                }
+            }
+        };
         if acked != self.pending_n {
             bail!("provdb acked {acked} of {} records", self.pending_n);
         }
         self.pending.clear();
         self.pending_n = 0;
         Ok(())
+    }
+
+    /// Records abandoned after a mid-batch failure survived the one
+    /// resend — the client-side half of the chaos plane's bounded-loss
+    /// ledger (the transport's [`NetStats::inflight_lost`] is the
+    /// server-facing half).
+    pub fn inflight_lost(&self) -> u64 {
+        self.inflight_lost
     }
 
     /// Ship any buffered records, then barrier server-side: every shard
@@ -1036,6 +1109,41 @@ mod tests {
         assert_eq!(cl.list_probes().unwrap().len(), 1);
         drop(srv);
         handle.join();
+    }
+
+    #[test]
+    fn mid_batch_sever_resends_once_then_counts_loss() {
+        let (store, handle) = spawn_store(None, 1, Retention::default()).unwrap();
+        let mut srv = ProvDbTcpServer::start("127.0.0.1:0", store.clone()).unwrap();
+        let addr = srv.addr().to_string();
+        let mut cl = ProvClient::connect_with_batch(&addr, 4).unwrap();
+        for i in 0..4u64 {
+            cl.append(&rec(0, i, 1.0, i)).unwrap(); // batch 1 ships cleanly
+        }
+        // Sever mid-run: kill the server, then heal the endpoint (a
+        // restarted provdb-server child on the same port).
+        srv.stop();
+        let (store2, handle2) = spawn_store(None, 1, Retention::default()).unwrap();
+        let mut srv2 = ProvDbTcpServer::start(&addr, store2.clone()).unwrap();
+        // Batch 2 hits the dead socket, reconnects, and is resent once:
+        // no counted loss, and the healed store holds exactly batch 2.
+        for i in 4..8u64 {
+            cl.append(&rec(0, i, 1.0, i)).unwrap();
+        }
+        assert_eq!(cl.inflight_lost(), 0, "a successful resend is not loss");
+        cl.flush().unwrap();
+        assert_eq!(cl.query(&ProvQuery::default()).unwrap().len(), 4);
+        // Sever with no healing: the resend fails too, so the batch is
+        // counted as lost — exactly once — and the client moves on.
+        srv2.stop();
+        let mut failed = false;
+        for i in 8..12u64 {
+            failed |= cl.append(&rec(0, i, 1.0, i)).is_err();
+        }
+        assert!(failed, "unreachable server must surface the write error");
+        assert_eq!(cl.inflight_lost(), 4, "abandoned batch must be counted");
+        handle.join();
+        handle2.join();
     }
 
     #[test]

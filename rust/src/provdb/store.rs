@@ -936,6 +936,29 @@ impl ShardState {
             );
             return;
         }
+        // Chaos hook: tear the tail off the freshly sealed file, as a
+        // crash between the data write and the footer landing would. The
+        // in-memory adoption below proceeds normally (the footer is
+        // already in hand) — the damage only surfaces at the *next*
+        // recovery, which must fall back to the streaming scan and
+        // sideline/truncate the segment (rust/docs/chaos.md).
+        let tear = crate::util::fault::torn_tail();
+        if tear > 0 {
+            let keep = (bytes.len() as u64).saturating_sub(tear).max(1);
+            let res = std::fs::File::options()
+                .write(true)
+                .open(&path)
+                .and_then(|f| f.set_len(keep));
+            if let Err(e) = res {
+                crate::log_warn!("provdb", "chaos tear {}: {e}", path.display());
+            } else {
+                crate::log_debug!(
+                    "provdb",
+                    "chaos: tore {tear} tail bytes off {}",
+                    path.display()
+                );
+            }
+        }
         self.writers.remove(&key);
         let freed: u64 = part.entries.iter().map(|e| e.disk_bytes).sum();
         self.resident_bytes = self.resident_bytes - freed + bytes.len() as u64;

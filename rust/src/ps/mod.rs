@@ -356,7 +356,7 @@ const GLOBAL_MIN_ANOMS: u64 = 3;
 /// lockstep); expire it with whatever partial total arrived. Quorum-met
 /// steps still complete exactly — expiry only catches the leak when
 /// `reports_per_step` overstates the reporting ranks.
-pub(crate) const STEP_ACC_MAX_LAG: u64 = 64;
+pub const STEP_ACC_MAX_LAG: u64 = 64;
 
 struct RankAccum {
     step_counts: RunStats,
@@ -482,6 +482,33 @@ impl ParameterServer {
             return None;
         }
         Some(self.accumulate_step(step, count as usize, anoms))
+    }
+
+    /// Fold a range partial the aggregation tree *expired* at one of its
+    /// nodes (it sat more than [`STEP_ACC_MAX_LAG`] behind the tree-wide
+    /// step horizon): the contribution enters the step accumulator
+    /// exactly like a live one — in the flat shape these reports were
+    /// already sitting in the accumulator when their range stalled — so
+    /// neither the straggler short-circuit nor the horizon advance of
+    /// [`fold_partial_step`](Self::fold_partial_step) applies. The next
+    /// expiry sweep then folds the step's *combined* total into the step
+    /// statistics as one push, on the flat aggregator's schedule.
+    /// Returns whether the contribution completed the global quorum.
+    pub fn fold_expired_step(&mut self, step: u64, count: u64, anoms: u64) -> bool {
+        self.accumulate_step(step, count as usize, anoms)
+    }
+
+    /// Advance the step-expiry horizon to `max_step` — the newest step
+    /// the tree's ingress has seen in *any* report, carried by the flush
+    /// barrier — and expire the accumulators behind it. The root only
+    /// hears about steps through completed range quorums, so a stalled
+    /// range would otherwise freeze part of the horizon that the flat
+    /// aggregator (which advances on every report) keeps moving.
+    pub fn expire_to(&mut self, max_step: u64) {
+        if max_step > self.max_step_seen {
+            self.max_step_seen = max_step;
+        }
+        self.expire_stale_steps();
     }
 
     /// Step-quorum accumulation and the §V global-event trigger, shared

@@ -116,6 +116,10 @@ const KIND_PLACEMENT: u8 = 9;
 const KIND_MIGRATE: u8 = 10;
 const KIND_INSTALL: u8 = 11;
 const KIND_SLOT_LOADS: u8 = 12;
+// 13–16 belong to the aggregation-tree wire (`crate::aggtree::net`).
+/// Chaos-plane checkpoint: non-destructive full-state dump (the
+/// restart-with-state supervisor snapshots shards through this).
+const KIND_EXTRACT: u8 = 17;
 // Kinds 13–16 (agg-node hello / report / fetch / flush) belong to the
 // hierarchical aggregation tree — see [`crate::aggtree::net`].
 
@@ -614,6 +618,16 @@ impl ShardHandler {
                 rrx.recv().context("shard thread dropped install ack")?;
                 out.send(stream, &[1u8]);
             }
+            KIND_EXTRACT => {
+                let (rtx, rrx) = channel();
+                self.tx
+                    .send(ShardMsg::Extract { reply: rtx })
+                    .map_err(|_| anyhow::anyhow!("shard thread gone"))?;
+                let entries = rrx.recv().context("shard thread dropped extract reply")?;
+                let mut reply = Vec::with_capacity(4 + 48 * entries.len());
+                put_keyed_entries(&mut reply, &entries);
+                out.send(stream, &reply);
+            }
             KIND_SLOT_LOADS => {
                 let (rtx, rrx) = channel();
                 self.tx
@@ -778,6 +792,15 @@ impl ShardWire {
         msg.push(KIND_MIGRATE);
         placement.encode(&mut msg);
         let reply = self.call(&msg)?;
+        read_keyed_entries(&mut Cursor::new(&reply))
+    }
+
+    /// Chaos-plane checkpoint: dump the shard's full keyed state without
+    /// disturbing it (unlike [`Self::migrate`], which moves entries out).
+    /// The restart supervisor snapshots through this at each sync step
+    /// and re-seeds a respawned shard with [`Self::install`].
+    pub(crate) fn extract(&mut self) -> Result<Vec<(FuncKey, RunStats)>> {
+        let reply = self.call(&[KIND_EXTRACT])?;
         read_keyed_entries(&mut Cursor::new(&reply))
     }
 
@@ -1033,6 +1056,7 @@ impl PsClient {
             sync_count: Arc::new(AtomicU64::new(0)),
             agg_fetches: Arc::new(AtomicU64::new(0)),
             reroutes: Arc::new(AtomicU64::new(0)),
+            sync_lost: Arc::new(AtomicU64::new(0)),
             gates: Arc::new(Mutex::new(HashMap::new())),
         })
     }
@@ -1383,6 +1407,38 @@ mod tests {
         foreign.push(2.0);
         w0.send_sync(0, new.epoch(), &[(fid, foreign)]).unwrap();
         assert!(w0.recv_sync().is_err(), "foreign entry at same epoch must drop the conn");
+    }
+
+    #[test]
+    fn extract_checkpoints_without_disturbing_the_shard() {
+        let src = PsShardTcpServer::spawn_standalone("127.0.0.1:0", 0, 1).unwrap();
+        let mut w = ShardWire::dial(&src.addr().to_string(), 0, 1).unwrap();
+        let mut st = RunStats::new();
+        st.push(5.0);
+        st.push(9.0);
+        w.send_sync(0, 0, &[(1, st), (2, st)]).unwrap();
+        assert!(matches!(w.recv_sync().unwrap(), ShardSyncResp::Ok { .. }));
+        // The dump is key-sorted and non-destructive: a second extract
+        // sees the same state, and the shard keeps serving.
+        let dump = w.extract().unwrap();
+        assert_eq!(dump.len(), 2);
+        assert_eq!((dump[0].0, dump[1].0), ((0, 1), (0, 2)));
+        assert_eq!(dump[0].1.count(), 2);
+        assert_eq!(w.extract().unwrap(), dump, "extract must not drain the table");
+        // Restart-with-state: install the checkpoint into a fresh shard
+        // and keep merging on top of the restored history.
+        let fresh = PsShardTcpServer::spawn_standalone("127.0.0.1:0", 0, 1).unwrap();
+        let mut wf = ShardWire::dial(&fresh.addr().to_string(), 0, 1).unwrap();
+        wf.install(&dump).unwrap();
+        let mut more = RunStats::new();
+        more.push(1.0);
+        wf.send_sync(0, 0, &[(1, more)]).unwrap();
+        match wf.recv_sync().unwrap() {
+            ShardSyncResp::Ok { entries, .. } => {
+                assert_eq!(entries[0].1.count(), 3, "restored history + new merge")
+            }
+            ShardSyncResp::Rerouted { .. } => panic!("restored shard must serve"),
+        }
     }
 
     #[test]

@@ -102,6 +102,13 @@ pub(crate) enum ShardMsg {
         entries: Vec<(FuncKey, RunStats)>,
         reply: Sender<()>,
     },
+    /// Chaos-plane checkpoint: dump every owned entry, key-sorted,
+    /// without disturbing the table (unlike `Migrate`, which moves
+    /// entries out). The supervisor snapshots a shard through this each
+    /// sync step so a killed replacement can be re-seeded via `Install`.
+    Extract {
+        reply: Sender<Vec<(FuncKey, RunStats)>>,
+    },
     /// Stop and return the owned partition.
     Shutdown,
 }
@@ -206,6 +213,11 @@ pub struct PsClient {
     pub(crate) agg_fetches: Arc<AtomicU64>,
     /// Sub-frames bounced with `Rerouted` (stale epoch → refresh+retry).
     pub(crate) reroutes: Arc<AtomicU64>,
+    /// Entries dropped by the router after its retry budget / degraded
+    /// paths gave up (dead shard, behind-epoch shard, exhausted reroute
+    /// loop). The chaos harness (`rust/docs/chaos.md`) sums this into its
+    /// bounded-loss ledger — loss is *counted*, never silent.
+    pub(crate) sync_lost: Arc<AtomicU64>,
     pub(crate) gates: Arc<Mutex<HashMap<(u32, u32), Gate>>>,
 }
 
@@ -256,6 +268,14 @@ impl PsClient {
     /// table and was resent). Climbs only across a live rebalance.
     pub fn reroute_count(&self) -> u64 {
         self.reroutes.load(Ordering::Relaxed)
+    }
+
+    /// Stat entries this router dropped on degraded paths (unreachable
+    /// shard, behind-epoch shard, exhausted retry budget). Zero in a
+    /// healthy run; the chaos harness asserts observed loss equals the
+    /// counter sum.
+    pub fn sync_lost_count(&self) -> u64 {
+        self.sync_lost.load(Ordering::Relaxed)
     }
 
     /// Epoch of the routing table this client currently syncs under.
@@ -356,6 +376,7 @@ impl PsClient {
                      dropping {} entries",
                     entries.len()
                 );
+                self.sync_lost.fetch_add(entries.len() as u64, Ordering::Relaxed);
                 break;
             }
             let placement = self.placement_snapshot();
@@ -398,8 +419,15 @@ impl PsClient {
                 match &conns[i] {
                     ShardConn::Local(tx) => {
                         let msg = ShardMsg::Sync { app, epoch, delta: part, reply: rtx.clone() };
-                        if tx.send(msg).is_ok() {
-                            expected += 1;
+                        match tx.send(msg) {
+                            Ok(()) => expected += 1,
+                            Err(e) => {
+                                if let ShardMsg::Sync { delta, .. } = e.0 {
+                                    self.sync_lost
+                                        .fetch_add(delta.len() as u64, Ordering::Relaxed);
+                                }
+                                crate::log_warn!("ps", "local shard {i} channel closed");
+                            }
                         }
                     }
                     ShardConn::Tcp(pool) => {
@@ -414,12 +442,15 @@ impl PsClient {
                                 }
                                 Err(e) => {
                                     crate::log_warn!("ps", "shard sync send failed: {e:#}");
+                                    self.sync_lost
+                                        .fetch_add(part.len() as u64, Ordering::Relaxed);
                                     g.fail();
                                     false
                                 }
                             },
                             Err(e) => {
                                 crate::log_warn!("ps", "shard unreachable: {e:#}");
+                                self.sync_lost.fetch_add(part.len() as u64, Ordering::Relaxed);
                                 false
                             }
                         };
@@ -431,6 +462,13 @@ impl PsClient {
 
             for (mut g, ok, i) in tcp {
                 if !ok {
+                    continue;
+                }
+                if g.get().is_err() {
+                    // Connection died between the pipelined write and the
+                    // read leg: the sub-frame is gone — count it.
+                    let n = sent[i].take().map_or(0, |p| p.len());
+                    self.sync_lost.fetch_add(n as u64, Ordering::Relaxed);
                     continue;
                 }
                 if let Ok(w) = g.get() {
@@ -450,7 +488,8 @@ impl PsClient {
                                 // rebalancer re-pushes the table. Degrade
                                 // fast like a dead connection instead of
                                 // spinning the retry budget.
-                                sent[i] = None;
+                                let n = sent[i].take().map_or(0, |p| p.len());
+                                self.sync_lost.fetch_add(n as u64, Ordering::Relaxed);
                                 crate::log_warn!(
                                     "ps",
                                     "shard {i} is at epoch {shard_epoch}, behind {epoch}; \
@@ -462,7 +501,8 @@ impl PsClient {
                             }
                         }
                         Err(e) => {
-                            sent[i] = None;
+                            let n = sent[i].take().map_or(0, |p| p.len());
+                            self.sync_lost.fetch_add(n as u64, Ordering::Relaxed);
                             crate::log_warn!("ps", "shard sync reply failed: {e:#}");
                             g.fail();
                         }
@@ -481,6 +521,7 @@ impl PsClient {
                         if shard_epoch < epoch {
                             // Behind-the-commit shard (see the TCP arm):
                             // fast-fail its slice rather than retry.
+                            self.sync_lost.fetch_add(delta.len() as u64, Ordering::Relaxed);
                             crate::log_warn!(
                                 "ps",
                                 "local shard at epoch {shard_epoch}, behind {epoch}; \
@@ -567,6 +608,7 @@ impl PsClient {
             attempts += 1;
             if attempts > SYNC_RETRY_MAX {
                 crate::log_warn!("ps", "front-end sync rerouted {attempts} times; dropping");
+                self.sync_lost.fetch_add(entries.len() as u64, Ordering::Relaxed);
                 return (StatsTable::new(), Vec::new());
             }
             let placement = self.placement_snapshot();
@@ -597,6 +639,7 @@ impl PsClient {
                 }
                 Err(e) => {
                     crate::log_warn!("ps", "front-end sync failed (will reconnect): {e:#}");
+                    self.sync_lost.fetch_add(entries.len() as u64, Ordering::Relaxed);
                     return (StatsTable::new(), Vec::new());
                 }
             }
@@ -1385,6 +1428,7 @@ pub fn spawn_with(opts: PsOpts) -> anyhow::Result<(PsClient, PsHandle)> {
         sync_count: sync_count.clone(),
         agg_fetches: Arc::new(AtomicU64::new(0)),
         reroutes: Arc::new(AtomicU64::new(0)),
+        sync_lost: Arc::new(AtomicU64::new(0)),
         gates: Arc::new(Mutex::new(HashMap::new())),
     };
     let handle = PsHandle {
@@ -1548,6 +1592,14 @@ pub(crate) fn run_shard(
                 pending.fill(false);
                 pending_since = None;
                 let _ = reply.send(());
+            }
+            ShardMsg::Extract { reply } => {
+                // Key-sorted so two checkpoints of identical state are
+                // byte-identical regardless of hash iteration order.
+                let mut out: Vec<(FuncKey, RunStats)> =
+                    table.iter().map(|(&k, &v)| (k, v)).collect();
+                out.sort_unstable_by_key(|&(k, _)| k);
+                let _ = reply.send(out);
             }
             ShardMsg::Shutdown => break,
         }

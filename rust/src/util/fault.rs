@@ -1,0 +1,448 @@
+//! Deterministic chaos/fault-injection plane (`[chaos]` config section,
+//! `rust/docs/chaos.md`).
+//!
+//! A seeded [`FaultPlan`] decides — reproducibly, as a pure function of
+//! `(seed, site, event counter)` — when the transport and storage seams
+//! misbehave: server-side read stalls, delayed replies, severed
+//! connections (the reactor's `FrameDriver` consults [`read_fault`] /
+//! [`reply_delay`]), torn `.provseg` tails at seal time
+//! ([`torn_tail`]), and process-level kills of `ps-shard-server` /
+//! `provdb-server` / `agg-node` children at chosen sync steps (the
+//! supervisor in `exp/chaos.rs` executes [`FaultPlan::kills`]).
+//!
+//! The plan installs process-globally ([`install`]) so the hook sites
+//! stay one-liners, and a relaxed-atomic fast path keeps every hook at
+//! one branch when chaos is off (the production default). Child server
+//! processes inherit the plan through the `CHIMBUKO_CHAOS` environment
+//! variable ([`FaultPlan::spec`] / [`init_from_env`]), so one seed
+//! reproduces the same fault schedule across every process of a run.
+
+use crate::util::rng::splitmix64;
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Which child-process class a scheduled kill targets.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum KillTarget {
+    /// A `ps-shard-server` child (stat shard endpoint).
+    PsShard,
+    /// A `provdb-server` child.
+    ProvDb,
+    /// An `agg-node` child (remote aggregation-tree leaf).
+    AggNode,
+}
+
+impl KillTarget {
+    pub fn parse(s: &str) -> Result<KillTarget> {
+        match s {
+            "ps" => Ok(KillTarget::PsShard),
+            "provdb" => Ok(KillTarget::ProvDb),
+            "agg" => Ok(KillTarget::AggNode),
+            other => bail!("unknown kill target '{other}' (ps|provdb|agg)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KillTarget::PsShard => "ps",
+            KillTarget::ProvDb => "provdb",
+            KillTarget::AggNode => "agg",
+        }
+    }
+}
+
+/// One scheduled process kill: child `index` of `target`'s class dies at
+/// sync step `at_step`. Written `ps:0@6` in config / env specs.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct KillSpec {
+    pub target: KillTarget,
+    pub index: usize,
+    pub at_step: u64,
+}
+
+impl KillSpec {
+    /// Parse `target:index@step`.
+    pub fn parse(s: &str) -> Result<KillSpec> {
+        let (head, step) =
+            s.split_once('@').with_context(|| format!("kill spec '{s}' missing '@step'"))?;
+        let (target, index) = head
+            .split_once(':')
+            .with_context(|| format!("kill spec '{s}' missing 'target:index'"))?;
+        Ok(KillSpec {
+            target: KillTarget::parse(target.trim())?,
+            index: index.trim().parse().with_context(|| format!("kill index in '{s}'"))?,
+            at_step: step.trim().parse().with_context(|| format!("kill step in '{s}'"))?,
+        })
+    }
+
+    pub fn spec(&self) -> String {
+        format!("{}:{}@{}", self.target.name(), self.index, self.at_step)
+    }
+}
+
+/// Parse a comma-separated kill list (`ps:0@6,provdb:0@10`); empty
+/// string → no kills.
+pub fn parse_kills(s: &str) -> Result<Vec<KillSpec>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(KillSpec::parse)
+        .collect()
+}
+
+/// What the reactor's read path should do with the current data burst.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum ReadFault {
+    /// Proceed normally.
+    None,
+    /// Sleep this long before parsing (a stalled server).
+    Stall(Duration),
+    /// Drop the connection (a mid-conversation sever).
+    Sever,
+}
+
+// Per-site salts so each fault class walks an independent decision
+// stream off the same seed.
+const SALT_SEVER: u64 = 0x5e7e;
+const SALT_STALL: u64 = 0x57a1;
+const SALT_DELAY: u64 = 0xde1a;
+const SALT_TORN: u64 = 0x70f2;
+
+/// A seeded, deterministic fault schedule plus its injection counters.
+///
+/// Every `*_every` knob is a reciprocal rate: event `n` at a site
+/// triggers when `splitmix64(seed ⊕ site ⊕ n) % every == 0`, so the
+/// decision depends only on the seed and the site's event ordinal —
+/// re-running with the same seed replays the same schedule. `0`
+/// disables that fault class.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Sever an incoming connection's read burst every ~N bursts.
+    pub sever_every: u64,
+    /// Stall the read path every ~N bursts, for `stall_ms`.
+    pub stall_every: u64,
+    pub stall_ms: u64,
+    /// Delay a reply every ~N admitted frames, by `delay_ms`.
+    pub delay_every: u64,
+    pub delay_ms: u64,
+    /// Tear the tail off every ~Nth sealed `.provseg` segment, leaving
+    /// it `torn_tail_bytes` short (recovery must salvage + sideline).
+    pub torn_every: u64,
+    pub torn_tail_bytes: u64,
+    /// Scheduled child-process kills (the supervisor executes these).
+    pub kills: Vec<KillSpec>,
+    // Injection counters: how often each hook fired (relaxed; read by
+    // the chaos harness for its bounded-loss accounting).
+    bursts: AtomicU64,
+    frames: AtomicU64,
+    seals: AtomicU64,
+    severed: AtomicU64,
+    stalled: AtomicU64,
+    delayed: AtomicU64,
+    torn: AtomicU64,
+}
+
+impl FaultPlan {
+    /// A plan that schedules kills but injects no transport faults.
+    pub fn kills_only(seed: u64, kills: Vec<KillSpec>) -> FaultPlan {
+        FaultPlan { seed, kills, ..FaultPlan::default() }
+    }
+
+    /// Whether any fault class is live (a default plan is inert).
+    pub fn any_faults(&self) -> bool {
+        self.sever_every > 0
+            || self.stall_every > 0
+            || self.delay_every > 0
+            || self.torn_every > 0
+            || !self.kills.is_empty()
+    }
+
+    /// Deterministic trigger decision for event `n` at `salt`'s site.
+    fn hit(&self, salt: u64, n: u64, every: u64) -> bool {
+        if every == 0 {
+            return false;
+        }
+        let mut s = self.seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ n;
+        splitmix64(&mut s) % every == 0
+    }
+
+    /// Consult the plan for one server-side read burst.
+    pub fn read_fault(&self) -> ReadFault {
+        let n = self.bursts.fetch_add(1, Ordering::Relaxed);
+        if self.hit(SALT_SEVER, n, self.sever_every) {
+            self.severed.fetch_add(1, Ordering::Relaxed);
+            return ReadFault::Sever;
+        }
+        if self.hit(SALT_STALL, n, self.stall_every) {
+            self.stalled.fetch_add(1, Ordering::Relaxed);
+            return ReadFault::Stall(Duration::from_millis(self.stall_ms));
+        }
+        ReadFault::None
+    }
+
+    /// Consult the plan before one reply dispatch.
+    pub fn reply_delay(&self) -> Option<Duration> {
+        let n = self.frames.fetch_add(1, Ordering::Relaxed);
+        if self.hit(SALT_DELAY, n, self.delay_every) {
+            self.delayed.fetch_add(1, Ordering::Relaxed);
+            return Some(Duration::from_millis(self.delay_ms));
+        }
+        None
+    }
+
+    /// Bytes to tear off the segment being sealed (0 = seal cleanly).
+    pub fn torn_tail(&self) -> u64 {
+        let n = self.seals.fetch_add(1, Ordering::Relaxed);
+        if self.hit(SALT_TORN, n, self.torn_every) {
+            self.torn.fetch_add(1, Ordering::Relaxed);
+            return self.torn_tail_bytes;
+        }
+        0
+    }
+
+    pub fn severed_count(&self) -> u64 {
+        self.severed.load(Ordering::Relaxed)
+    }
+
+    pub fn stalled_count(&self) -> u64 {
+        self.stalled.load(Ordering::Relaxed)
+    }
+
+    pub fn delayed_count(&self) -> u64 {
+        self.delayed.load(Ordering::Relaxed)
+    }
+
+    pub fn torn_count(&self) -> u64 {
+        self.torn.load(Ordering::Relaxed)
+    }
+
+    /// Serialize to the `CHIMBUKO_CHAOS` hand-off spec (`k=v;k=v;…`),
+    /// so child server processes replay the same schedule.
+    pub fn spec(&self) -> String {
+        let mut s = format!(
+            "seed={};sever_every={};stall_every={};stall_ms={};delay_every={};\
+             delay_ms={};torn_every={};torn_tail_bytes={}",
+            self.seed,
+            self.sever_every,
+            self.stall_every,
+            self.stall_ms,
+            self.delay_every,
+            self.delay_ms,
+            self.torn_every,
+            self.torn_tail_bytes,
+        );
+        if !self.kills.is_empty() {
+            let kills: Vec<String> = self.kills.iter().map(KillSpec::spec).collect();
+            s.push_str(";kills=");
+            s.push_str(&kills.join(","));
+        }
+        s
+    }
+
+    /// Parse a [`spec`](Self::spec) string back into a plan.
+    pub fn from_spec(text: &str) -> Result<FaultPlan> {
+        let mut p = FaultPlan::default();
+        for pair in text.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) =
+                pair.split_once('=').with_context(|| format!("chaos spec pair '{pair}'"))?;
+            let v = v.trim();
+            match k.trim() {
+                "seed" => p.seed = v.parse()?,
+                "sever_every" => p.sever_every = v.parse()?,
+                "stall_every" => p.stall_every = v.parse()?,
+                "stall_ms" => p.stall_ms = v.parse()?,
+                "delay_every" => p.delay_every = v.parse()?,
+                "delay_ms" => p.delay_ms = v.parse()?,
+                "torn_every" => p.torn_every = v.parse()?,
+                "torn_tail_bytes" => p.torn_tail_bytes = v.parse()?,
+                "kills" => p.kills = parse_kills(v)?,
+                other => bail!("unknown chaos spec key '{other}'"),
+            }
+        }
+        Ok(p)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-global installation: the hook sites in `util/net.rs` and
+// `provdb/store.rs` cannot thread a plan handle through every
+// constructor, so the active plan lives here. `ENABLED` is the fast
+// path — when false (the default), every hook is one relaxed load.
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+
+/// Install `plan` as the process's active fault plan.
+pub fn install(plan: Arc<FaultPlan>) {
+    *PLAN.lock().expect("fault plan lock") = Some(plan);
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Deactivate fault injection (hooks return to their no-op fast path).
+pub fn clear() {
+    ENABLED.store(false, Ordering::Release);
+    *PLAN.lock().expect("fault plan lock") = None;
+}
+
+/// Whether a plan is installed.
+pub fn active() -> bool {
+    ENABLED.load(Ordering::Acquire)
+}
+
+/// The installed plan, if any.
+pub fn current() -> Option<Arc<FaultPlan>> {
+    if !active() {
+        return None;
+    }
+    PLAN.lock().expect("fault plan lock").clone()
+}
+
+/// Hook: one server-side read burst ([`FrameDriver`] read path).
+pub fn read_fault() -> ReadFault {
+    match current() {
+        Some(p) => p.read_fault(),
+        None => ReadFault::None,
+    }
+}
+
+/// Hook: delay before dispatching one admitted frame to its handler.
+pub fn reply_delay() -> Option<Duration> {
+    current().and_then(|p| p.reply_delay())
+}
+
+/// Hook: bytes to tear off the `.provseg` segment being sealed.
+pub fn torn_tail() -> u64 {
+    current().map(|p| p.torn_tail()).unwrap_or(0)
+}
+
+/// Adopt a plan from the `CHIMBUKO_CHAOS` environment variable (how the
+/// chaos harness's child server processes inherit the schedule). A
+/// malformed spec is a hard error: a chaos run with a silently-ignored
+/// plan would assert against faults that never fired.
+pub fn init_from_env() -> Result<()> {
+    let Ok(spec) = std::env::var("CHIMBUKO_CHAOS") else {
+        return Ok(());
+    };
+    if spec.trim().is_empty() {
+        return Ok(());
+    }
+    let plan = FaultPlan::from_spec(&spec).context("parsing CHIMBUKO_CHAOS")?;
+    crate::log_info!("fault", "chaos plan from env: {}", plan.spec());
+    install(Arc::new(plan));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            sever_every: 16,
+            stall_every: 8,
+            stall_ms: 5,
+            delay_every: 4,
+            delay_ms: 2,
+            torn_every: 2,
+            torn_tail_bytes: 5,
+            ..FaultPlan::default()
+        }
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_schedule() {
+        let a = plan(7);
+        let b = plan(7);
+        for _ in 0..512 {
+            assert_eq!(a.read_fault(), b.read_fault());
+            assert_eq!(a.reply_delay(), b.reply_delay());
+            assert_eq!(a.torn_tail(), b.torn_tail());
+        }
+        assert!(a.severed_count() > 0, "sever rate 1/16 over 512 bursts must fire");
+        assert_eq!(a.severed_count(), b.severed_count());
+        assert_eq!(a.stalled_count(), b.stalled_count());
+        assert_eq!(a.delayed_count(), b.delayed_count());
+        assert_eq!(a.torn_count(), b.torn_count());
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let a = plan(1);
+        let b = plan(2);
+        let same = (0..256).filter(|_| a.read_fault() == b.read_fault()).count();
+        assert!(same < 256, "seeds must alter the schedule");
+    }
+
+    #[test]
+    fn rates_are_roughly_reciprocal() {
+        let p = plan(42);
+        let torn = (0..1000).filter(|_| p.torn_tail() > 0).count();
+        // 1/2 rate over 1000 seals: binomial bounds, generous.
+        assert!((350..=650).contains(&torn), "torn {torn}/1000 at rate 1/2");
+    }
+
+    #[test]
+    fn zero_knobs_are_inert() {
+        let p = FaultPlan { seed: 9, ..FaultPlan::default() };
+        assert!(!p.any_faults());
+        for _ in 0..64 {
+            assert_eq!(p.read_fault(), ReadFault::None);
+            assert_eq!(p.reply_delay(), None);
+            assert_eq!(p.torn_tail(), 0);
+        }
+    }
+
+    #[test]
+    fn kill_specs_parse_and_roundtrip() {
+        let kills = parse_kills("ps:0@6, provdb:1@10, agg:2@3").unwrap();
+        assert_eq!(
+            kills,
+            vec![
+                KillSpec { target: KillTarget::PsShard, index: 0, at_step: 6 },
+                KillSpec { target: KillTarget::ProvDb, index: 1, at_step: 10 },
+                KillSpec { target: KillTarget::AggNode, index: 2, at_step: 3 },
+            ]
+        );
+        assert_eq!(kills[0].spec(), "ps:0@6");
+        assert!(parse_kills("").unwrap().is_empty());
+        assert!(parse_kills("ps:0").is_err());
+        assert!(parse_kills("disk:0@4").is_err());
+        assert!(parse_kills("ps@4").is_err());
+    }
+
+    #[test]
+    fn spec_roundtrips_through_text() {
+        let mut p = plan(99);
+        p.kills = parse_kills("ps:0@6,provdb:0@10").unwrap();
+        let q = FaultPlan::from_spec(&p.spec()).unwrap();
+        assert_eq!(q.seed, 99);
+        assert_eq!(q.sever_every, 16);
+        assert_eq!(q.torn_tail_bytes, 5);
+        assert_eq!(q.kills, p.kills);
+        // And the schedules match, since decisions are (seed, n)-pure.
+        for _ in 0..128 {
+            assert_eq!(p.read_fault(), q.read_fault());
+        }
+        assert!(FaultPlan::from_spec("bogus=1").is_err());
+        assert!(FaultPlan::from_spec("seed").is_err());
+    }
+
+    #[test]
+    fn global_install_gates_the_hooks() {
+        // Keep the installed plan inert (all rates 0) so concurrently
+        // running transport tests in this binary are unaffected.
+        assert!(!active());
+        assert_eq!(read_fault(), ReadFault::None);
+        assert_eq!(torn_tail(), 0);
+        install(Arc::new(FaultPlan { seed: 3, ..FaultPlan::default() }));
+        assert!(active());
+        assert_eq!(read_fault(), ReadFault::None, "inert plan: hooks still no-op");
+        clear();
+        assert!(!active());
+        assert!(current().is_none());
+    }
+}

@@ -1,9 +1,18 @@
 //! Tiny leveled logger (stderr), controlled by `CHIMBUKO_LOG`
-//! (`error|warn|info|debug|trace`, default `info`). Thread-safe; used by
-//! the long-running components (PS, viz server, coordinator).
+//! (`error|warn|info|debug|trace`, default `info`) or the `-v` / `-vv`
+//! CLI flags (debug / trace). Thread-safe; used by the long-running
+//! components (PS, viz server, coordinator).
+//!
+//! Two chaos-plane additions (`rust/docs/chaos.md`):
+//! * `CHIMBUKO_LOG_FILE` tees every emitted record to a file, so CI can
+//!   upload the full `-vv` execution trace even when stderr is truncated.
+//! * [`trace_step`] emits fixed-column execution-trace records
+//!   (`step│actor│event│detail`, strict column budget) at `Trace` level —
+//!   the format chaos failures are diagnosed from.
 
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
 use std::time::{SystemTime, UNIX_EPOCH};
 
 /// Log severity, ordered.
@@ -39,9 +48,34 @@ pub fn enabled(level: Level) -> bool {
     (level as u8) <= max
 }
 
-/// Override the level programmatically (tests, `--quiet`).
+/// Override the level programmatically (tests, `--quiet`, `-v`/`-vv`).
 pub fn set_level(level: Level) {
     MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+// Tee sink for `CHIMBUKO_LOG_FILE`: 0 = unprobed, 1 = off, 2 = on.
+static TEE_STATE: AtomicU8 = AtomicU8::new(0);
+static TEE: Mutex<Option<std::fs::File>> = Mutex::new(None);
+
+fn tee_line(line: &str) {
+    let state = TEE_STATE.load(Ordering::Relaxed);
+    if state == 1 {
+        return;
+    }
+    if state == 0 {
+        let opened = std::env::var("CHIMBUKO_LOG_FILE").ok().filter(|p| !p.is_empty()).and_then(
+            |p| std::fs::File::options().create(true).append(true).open(p).ok(),
+        );
+        let on = opened.is_some();
+        *TEE.lock().expect("log tee lock") = opened;
+        TEE_STATE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+        if !on {
+            return;
+        }
+    }
+    if let Some(f) = TEE.lock().expect("log tee lock").as_mut() {
+        let _ = f.write_all(line.as_bytes());
+    }
 }
 
 /// Emit a record; prefer the `log_*` macros.
@@ -63,6 +97,48 @@ pub fn emit(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
         now.subsec_millis()
     );
     let _ = std::io::stderr().write_all(line.as_bytes());
+    tee_line(&line);
+}
+
+// Execution-trace column budget: the four fields of a [`trace_step`]
+// record are clipped to these widths so a `-vv` log stays one aligned,
+// greppable table (≈100 columns with the timestamp prefix) no matter
+// what a detail string contains.
+const TRACE_ACTOR_W: usize = 12;
+const TRACE_EVENT_W: usize = 16;
+const TRACE_DETAIL_W: usize = 48;
+
+fn clip(s: &str, w: usize) -> String {
+    if s.len() <= w {
+        return s.to_string();
+    }
+    let mut cut = w.saturating_sub(1);
+    while cut > 0 && !s.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    format!("{}…", &s[..cut])
+}
+
+/// Emit one fixed-column execution-trace record at `Trace` level:
+/// `step│actor        │event           │detail`. The chaos harness and
+/// the supervisor stamp every state transition through here, so a `-vv`
+/// run reads as a single chronological table.
+pub fn trace_step(target: &str, step: u64, actor: &str, event: &str, detail: &str) {
+    if !enabled(Level::Trace) {
+        return;
+    }
+    emit(
+        Level::Trace,
+        target,
+        format_args!(
+            "{step:>6}│{:<aw$}│{:<ew$}│{}",
+            clip(actor, TRACE_ACTOR_W),
+            clip(event, TRACE_EVENT_W),
+            clip(detail, TRACE_DETAIL_W),
+            aw = TRACE_ACTOR_W,
+            ew = TRACE_EVENT_W,
+        ),
+    );
 }
 
 #[macro_export]
@@ -93,6 +169,13 @@ macro_rules! log_debug {
     };
 }
 
+#[macro_export]
+macro_rules! log_trace {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Trace, $target, format_args!($($arg)*))
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,5 +189,22 @@ mod tests {
         set_level(Level::Info);
         assert!(enabled(Level::Info));
         assert!(!enabled(Level::Debug));
+        assert!(!enabled(Level::Trace));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Trace));
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn trace_columns_are_clipped() {
+        assert_eq!(clip("short", 12), "short");
+        let long = "a-very-long-actor-name-over-budget";
+        let c = clip(long, 12);
+        assert!(c.chars().count() <= 12);
+        assert!(c.ends_with('…'));
+        // Multi-byte boundaries are respected (no panic, no torn char).
+        let uni = "αβγδεζηθικλμν";
+        let cu = clip(uni, 6);
+        assert!(cu.chars().count() <= 6);
     }
 }

@@ -4,6 +4,7 @@
 //! shared by the TCP front-ends ([`wire`]), and the shared accept-loop /
 //! reconnecting-client transport layer ([`net`]).
 
+pub mod fault;
 pub mod json;
 pub mod log;
 pub mod net;

@@ -159,6 +159,12 @@ pub struct NetStats {
     pub busy_exhausted: AtomicU64,
     /// Connections dropped for exceeding the hard backlog bound.
     pub dropped: AtomicU64,
+    /// Operations that failed over an *established* connection, whose
+    /// in-flight request/reply state was abandoned by the reconnect path
+    /// (counted in [`Reconnector::with`]). The chaos suite's
+    /// bounded-loss accounting sums this with the server-side shed/drop
+    /// counters — a crash may lose in-flight work, but never silently.
+    pub inflight_lost: AtomicU64,
     /// Current unflushed reply bytes summed across connections (gauge).
     pub queue_bytes: AtomicU64,
     /// High-water mark of `queue_bytes`.
@@ -189,6 +195,10 @@ impl NetStats {
 
     pub fn busy_exhausted_count(&self) -> u64 {
         self.busy_exhausted.load(Ordering::Relaxed)
+    }
+
+    pub fn inflight_lost_count(&self) -> u64 {
+        self.inflight_lost.load(Ordering::Relaxed)
     }
 
     /// Current server-wide reply backlog, bytes.
@@ -259,6 +269,17 @@ impl<H: FrameHandler> FrameDriver<H> {
 
 impl<H: FrameHandler> ConnDriver for FrameDriver<H> {
     fn on_data(&mut self, inbuf: &mut Vec<u8>, out: &mut Vec<u8>) -> bool {
+        // Chaos seam: an installed FaultPlan can sever this connection or
+        // stall the read path before any parsing (one relaxed load when
+        // chaos is off, the production default).
+        match crate::util::fault::read_fault() {
+            crate::util::fault::ReadFault::Sever => {
+                inbuf.clear();
+                return false;
+            }
+            crate::util::fault::ReadFault::Stall(d) => std::thread::sleep(d),
+            crate::util::fault::ReadFault::None => {}
+        }
         let mut consumed = 0usize;
         let mut keep = true;
         while keep && inbuf.len() - consumed >= wire::FRAME_HEADER {
@@ -289,6 +310,11 @@ impl<H: FrameHandler> ConnDriver for FrameDriver<H> {
                 self.stats.shed.fetch_add(1, Ordering::Relaxed);
                 push_frame(out, stream | wire::CTRL_BIT, &[wire::CTRL_BUSY]);
                 continue;
+            }
+            // Chaos seam: delay this reply (the handler runs after the
+            // pause, so its reply reaches the wire late).
+            if let Some(d) = crate::util::fault::reply_delay() {
+                std::thread::sleep(d);
             }
             let payload = &inbuf[start..start + len];
             let mut sink = FrameSink { out, frames_out: &self.stats.frames_out };
@@ -992,6 +1018,14 @@ impl<C> Reconnector<C> {
                 Err(e) => e,
             };
             if !is_busy_shed(&err) {
+                // The operation failed over an *established* connection:
+                // whatever it had in flight is gone with the socket.
+                // Count it so crash-window loss is bounded and auditable
+                // (redial failures in `get` don't reach here — nothing
+                // was in flight).
+                if let Some(s) = &self.stats {
+                    s.inflight_lost.fetch_add(1, Ordering::Relaxed);
+                }
                 self.fail();
                 return Err(err);
             }
@@ -1343,6 +1377,36 @@ mod tests {
         assert!(!r.is_connected());
         assert_eq!(stats.busy_exhausted_count(), 1, "transport errors are not busy");
     }
+
+    #[test]
+    fn transport_failures_count_inflight_loss() {
+        let stats = NetStats::new();
+        let dials = Arc::new(AtomicU32::new(0));
+        let d2 = dials.clone();
+        let mut r: Reconnector<u32> =
+            Reconnector::new("nowhere", move |_| Ok(d2.fetch_add(1, Ordering::Relaxed) + 1))
+                .with_stats(stats.clone());
+        assert_eq!(r.with(|c| Ok(*c)).unwrap(), 1);
+        assert_eq!(stats.inflight_lost_count(), 0, "success is not loss");
+        // A transport error over the live connection abandons in-flight
+        // state: counted.
+        assert!(r.with(|_| -> Result<()> { anyhow::bail!("broken pipe") }).is_err());
+        assert_eq!(stats.inflight_lost_count(), 1);
+        // A refused redial has nothing in flight: not counted.
+        assert!(r.get().is_err());
+        assert_eq!(stats.inflight_lost_count(), 1);
+        // Busy sheds keep the connection: not in-flight loss either.
+        std::thread::sleep(INITIAL_BACKOFF * 3);
+        assert!(r
+            .with(|_| -> Result<u32> { anyhow::bail!("server busy: request shed") })
+            .is_err());
+        assert_eq!(stats.inflight_lost_count(), 1);
+    }
+
+    // Fault-plan sever/stall injection through the reactor is covered in
+    // `tests/chaos.rs` (its own process): installing a live plan here
+    // would race the other transport tests in this binary, which share
+    // the process-global plan.
 
     #[test]
     fn nofile_limit_raise_is_best_effort() {

@@ -216,6 +216,7 @@ pub fn stats(state: &VizState) -> Json {
         ("prov_segments", Json::num(prov.segments_total as f64)),
         ("prov_segments_skipped", Json::num(prov.segments_skipped as f64)),
         ("prov_zone_map_bytes", Json::num(prov.zone_map_bytes as f64)),
+        ("prov_inflight_lost", Json::num(prov.inflight_lost as f64)),
     ])
 }
 
@@ -276,6 +277,15 @@ mod tests {
         ] {
             parse(&j.to_string()).unwrap();
         }
+    }
+
+    #[test]
+    fn stats_carries_the_loss_ledger() {
+        // A local source has no remote connection: the ledger exists and
+        // is zero (the chaos harness reads this key unconditionally).
+        let st = state();
+        let j = stats(&st);
+        assert_eq!(j.get("prov_inflight_lost").unwrap().as_u64(), Some(0));
     }
 
     #[test]

@@ -20,8 +20,8 @@ use crate::provenance::{ProvDb, ProvQuery, ProvRecord};
 use crate::ps::{RankSummary, VizSnapshot};
 use crate::trace::FuncRegistry;
 use crate::util::json::Json;
-use crate::util::net::Reconnector;
-use std::sync::Mutex;
+use crate::util::net::{NetStats, Reconnector};
+use std::sync::{Arc, Mutex};
 
 /// Where the viz layer's provenance detail queries go: a local in-process
 /// [`ProvDb`] index (post-mortem `serve`, finished runs) or the networked
@@ -42,6 +42,11 @@ pub enum ProvSource {
     /// provenance first becomes JSON.
     Remote {
         client: Mutex<Reconnector<ProvClient>>,
+        /// Transport counter sheet the reconnector tallies on. It outlives
+        /// any one `ProvClient` (a redial drops the client and its
+        /// internal ledgers), so in-flight losses across backend restarts
+        /// stay visible in `/api/stats`.
+        stats: Arc<NetStats>,
     },
 }
 
@@ -61,8 +66,10 @@ impl ProvSource {
     /// failures (the shared [`Reconnector`] — the same recovery loop the
     /// PS router uses).
     pub fn remote(addr: &str) -> anyhow::Result<ProvSource> {
-        let client = Reconnector::connected(addr, |a: &str| ProvClient::connect(a))?;
-        Ok(ProvSource::Remote { client: Mutex::new(client) })
+        let stats = NetStats::new();
+        let client = Reconnector::connected(addr, |a: &str| ProvClient::connect(a))?
+            .with_stats(stats.clone());
+        Ok(ProvSource::Remote { client: Mutex::new(client), stats })
     }
 
     /// Run `op` against the remote connection, (re)connecting as needed.
@@ -86,7 +93,7 @@ impl ProvSource {
     pub fn query(&self, q: &ProvQuery) -> Vec<ProvRecord> {
         match self {
             ProvSource::Local { db, .. } => db.query(q).into_iter().cloned().collect(),
-            ProvSource::Remote { client } => {
+            ProvSource::Remote { client, .. } => {
                 Self::with_remote(client, |c| c.query(q)).unwrap_or_default()
             }
         }
@@ -98,7 +105,7 @@ impl ProvSource {
             ProvSource::Local { db, .. } => {
                 db.call_stack(app, rank, step).into_iter().cloned().collect()
             }
-            ProvSource::Remote { client } => {
+            ProvSource::Remote { client, .. } => {
                 Self::with_remote(client, |c| c.call_stack(app, rank, step))
                     .unwrap_or_default()
             }
@@ -109,7 +116,7 @@ impl ProvSource {
     pub fn len(&self) -> usize {
         match self {
             ProvSource::Local { db, .. } => db.len(),
-            ProvSource::Remote { client } => Self::with_remote(client, |c| c.stats())
+            ProvSource::Remote { client, .. } => Self::with_remote(client, |c| c.stats())
                 .map(|s| s.records as usize)
                 .unwrap_or(0),
         }
@@ -129,15 +136,19 @@ impl ProvSource {
                 bytes: db.bytes_written(),
                 ..ProvCounters::default()
             },
-            ProvSource::Remote { client } => Self::with_remote(client, |c| c.stats())
-                .map(|s| ProvCounters {
-                    records: s.records as usize,
-                    bytes: s.log_bytes,
-                    segments_total: s.segments_total,
-                    segments_skipped: s.segments_skipped,
-                    zone_map_bytes: s.zone_map_bytes,
-                })
-                .unwrap_or_default(),
+            ProvSource::Remote { client, stats } => {
+                let lost = stats.inflight_lost_count();
+                Self::with_remote(client, |c| c.stats())
+                    .map(|s| ProvCounters {
+                        records: s.records as usize,
+                        bytes: s.log_bytes,
+                        segments_total: s.segments_total,
+                        segments_skipped: s.segments_skipped,
+                        zone_map_bytes: s.zone_map_bytes,
+                        inflight_lost: lost,
+                    })
+                    .unwrap_or(ProvCounters { inflight_lost: lost, ..ProvCounters::default() })
+            }
         }
     }
 
@@ -145,7 +156,7 @@ impl ProvSource {
     pub fn bytes_written(&self) -> u64 {
         match self {
             ProvSource::Local { db, .. } => db.bytes_written(),
-            ProvSource::Remote { client } => Self::with_remote(client, |c| c.stats())
+            ProvSource::Remote { client, .. } => Self::with_remote(client, |c| c.stats())
                 .map(|s| s.log_bytes)
                 .unwrap_or(0),
         }
@@ -157,7 +168,7 @@ impl ProvSource {
     pub fn probes(&self) -> Option<Vec<crate::provdb::ProbeInfo>> {
         match self {
             ProvSource::Local { .. } => None,
-            ProvSource::Remote { client } => Self::with_remote(client, |c| c.list_probes()),
+            ProvSource::Remote { client, .. } => Self::with_remote(client, |c| c.list_probes()),
         }
     }
 
@@ -165,7 +176,7 @@ impl ProvSource {
     pub fn metadata(&self) -> Option<Json> {
         match self {
             ProvSource::Local { meta, .. } => meta.clone(),
-            ProvSource::Remote { client } => {
+            ProvSource::Remote { client, .. } => {
                 Self::with_remote(client, |c| c.metadata()).flatten()
             }
         }
@@ -187,6 +198,9 @@ pub struct ProvCounters {
     pub segments_skipped: u64,
     /// Bytes of resident zone-map footers.
     pub zone_map_bytes: u64,
+    /// Requests this viz server's provDB connection abandoned mid-flight
+    /// (transport ledger; survives backend restarts). 0 for a local index.
+    pub inflight_lost: u64,
 }
 
 /// Statistic selector for the ranking dashboard (paper Fig 3 offers

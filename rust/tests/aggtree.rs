@@ -144,6 +144,7 @@ struct RunOut {
 fn drive(
     workload: &[StepOps],
     ranks: usize,
+    publish_every: usize,
     agg_fanout: usize,
     agg_endpoints: Vec<String>,
 ) -> RunOut {
@@ -151,7 +152,7 @@ fn drive(
     let (client, handle) = ps::spawn_with(PsOpts {
         shards: 2,
         viz_tx: Some(viz_tx),
-        publish_every: ranks,
+        publish_every,
         reports_per_step: ranks,
         agg_fanout,
         agg_endpoints,
@@ -231,7 +232,7 @@ fn tree_is_bit_equivalent_to_flat_in_process() {
         let workload = gen_workload(&mut rng, ranks, 10, 6);
         let label = format!("fanout {fanout} x {ranks} ranks (depth {})", spec.depth());
 
-        let flat = drive(&workload, ranks, 0, Vec::new());
+        let flat = drive(&workload, ranks, ranks, 0, Vec::new());
         assert!(
             !flat.final_events.is_empty(),
             "{label}: workload must flag a global event or the equivalence is vacuous"
@@ -246,7 +247,7 @@ fn tree_is_bit_equivalent_to_flat_in_process() {
         );
         assert_eq!(flat.agg_nodes_seen, 0, "{label}: flat publishes no agg-node loads");
 
-        let tree = drive(&workload, ranks, fanout, Vec::new());
+        let tree = drive(&workload, ranks, ranks, fanout, Vec::new());
         assert_eq!(
             tree.agg_nodes_seen,
             spec.nodes(),
@@ -316,14 +317,14 @@ fn tree_with_remote_agg_node_process_stays_bit_equivalent() {
 
     let mut rng = Rng::new(0xA66E);
     let workload = gen_workload(&mut rng, ranks, 10, 6);
-    let flat = drive(&workload, ranks, 0, Vec::new());
+    let flat = drive(&workload, ranks, ranks, 0, Vec::new());
     assert!(
         !flat.final_events.is_empty(),
         "workload must flag a global event or the equivalence is vacuous"
     );
 
     // Leaf 0 stays in-process (empty endpoint slot), leaf 1 is the child.
-    let tree = drive(&workload, ranks, fanout, vec![String::new(), addr]);
+    let tree = drive(&workload, ranks, ranks, fanout, vec![String::new(), addr]);
     assert_eq!(
         tree.agg_nodes_seen,
         spec.nodes(),
@@ -331,4 +332,81 @@ fn tree_with_remote_agg_node_process_stays_bit_equivalent() {
     );
     assert_equivalent(&flat, &tree, "remote agg-node leaf");
     drop(guard);
+}
+
+/// Whole-range outage: every rank of one leaf goes silent mid-run, long
+/// enough that the stalled step accumulators cross the expiry horizon,
+/// then resumes in time for a burst step to flag a global event.
+///
+/// The flat aggregator advances its horizon on *every* report, so the
+/// stalled steps' partial totals fold into the step statistics on a
+/// fixed schedule — and the burst event's score is computed over that
+/// history. A tree leaf's range fold only advances on its *own* ranks'
+/// reports, so without the flush-horizon reconciliation the silent
+/// leaf's accumulator freezes: its stranded contribution never reaches
+/// the step statistics (and, once the ranks resume, is shed at the root
+/// as a straggler), skewing the event score. This pins both shapes to
+/// the same expiry schedule, bit for bit.
+#[test]
+fn whole_range_outage_expires_on_the_flat_schedule() {
+    use chimbuko::ps::STEP_ACC_MAX_LAG;
+    let ranks = 8usize;
+    let fanout = 2usize;
+    let spec = chimbuko::aggtree::TreeSpec::plan(fanout, ranks);
+    assert_eq!(spec.leaf_range(3), (6, 8), "leaf 3 must own the stalled ranks");
+
+    let cut = 6u64; // rank 7 misses this step entirely; rank 6 half-reports it
+    let resume = cut + STEP_ACC_MAX_LAG + 4; // long past the expiry horizon
+    let last = resume + 12; // quorum history rebuilt, then the burst
+    let mut workload = Vec::new();
+    for step in 0..=last {
+        let mut per_rank = Vec::new();
+        for rank in 0..ranks as u32 {
+            let silent = match rank {
+                6 => step > cut && step < resume,
+                7 => step >= cut && step < resume,
+                _ => false,
+            };
+            if silent {
+                continue;
+            }
+            let anoms = if step == last {
+                5 + u64::from(rank % 3) // the burst the §V trigger flags
+            } else if rank == 6 && step == cut {
+                3 // the contribution stranded in the silent leaf's fold
+            } else {
+                u64::from(rank == 0 && step % 3 == 0)
+            };
+            let report = StepStat {
+                app: 0,
+                rank,
+                step,
+                n_executions: 40 + rank as u64,
+                n_anomalies: anoms,
+                ts_range: (step * 1000, step * 1000 + 999),
+            };
+            // Small exact-arithmetic deltas: the outage plane is the
+            // aggregator, not the shards.
+            let mut delta = StatsTable::new();
+            delta.push(rank % 4, (step % 7 + 1) as f64);
+            per_rank.push((report, delta));
+        }
+        workload.push(StepOps { per_rank });
+    }
+
+    // Per-report publishing keeps flat and tree publish windows aligned
+    // even though outage rounds carry fewer reports than the cadence.
+    let flat = drive(&workload, ranks, 1, 0, Vec::new());
+    assert!(
+        !flat.final_events.is_empty(),
+        "the burst after the outage must flag a global event, or the \
+         expiry-schedule comparison is vacuous"
+    );
+    assert_eq!(
+        flat.sync_events.iter().flatten().count(),
+        flat.final_events.len() * ranks,
+        "resumed ranks must receive the event exactly once too"
+    );
+    let tree = drive(&workload, ranks, 1, fanout, Vec::new());
+    assert_equivalent(&flat, &tree, "whole-range outage");
 }
